@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable so
+`pytest python/tests/` works from the workspace root (the Makefile runs
+from python/, CI-style invocations run from here)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,92 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once via `make artifacts` (no-op when inputs are unchanged — make
+tracks the stamp file). The rust runtime loads these with
+``HloModuleProto::from_text_file`` and compiles them on the PJRT CPU
+client at startup.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT the serialized
+HloModuleProto — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate binds) rejects with ``proto.id() <= INT_MAX``.
+The HLO *text* parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, quick: bool = False) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    if quick:
+        specs = model.default_specs(
+            gf_sizes=(4,), gf_blocks=((4096, 1024),), uf_containers=(64,)
+        )
+    else:
+        specs = model.default_specs()
+
+    manifest = {"artifacts": [], "perf": model.perf_report()}
+    written = []
+    for spec in specs:
+        lowered = spec.fn.lower(*spec.args)
+        text = to_hlo_text(lowered)
+        if "custom-call" in text:
+            # A custom-call means a Mosaic lowering leaked through —
+            # the CPU PJRT client cannot execute that artifact.
+            raise RuntimeError(f"{spec.name}: unexpected custom-call in HLO")
+        path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(model.manifest_entry(spec))
+        written.append(path)
+        print(f"  wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: stamp file path")
+    ap.add_argument(
+        "--quick", action="store_true", help="only the smallest variants"
+    )
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    written = build(out_dir, quick=args.quick)
+    if args.out is not None:
+        # Makefile stamp so `make artifacts` is a no-op when fresh.
+        with open(args.out, "w") as f:
+            f.write("\n".join(written) + "\n")
+    print(f"AOT: {len(written)} artifacts in {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

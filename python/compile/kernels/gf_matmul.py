@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: GF(2^8) matrix multiply — the erasure-coding hot spot.
+
+DynoStore's resilience policy (paper §IV-D, Algorithms 1-2) is an
+information dispersal algorithm: encoding an object is ``C = G · D`` and
+decoding is ``D = G_sub^{-1} · C_sub``, both matrix products over the
+Galois field GF(2^8) with the Reed-Solomon reduction polynomial 0x11D.
+
+The kernel computes ``O[m, B] = A[m, m] · D[m, B]`` over GF(2^8) where the
+logical (n, k) matrices are zero-padded into the fixed m×m tile (GF
+multiply by zero is zero and the accumulator is XOR, so padding rows/cols
+are inert). One artifact per (m, block) variant serves every erasure
+configuration with n, k ≤ m.
+
+GF multiplication is branch-free Russian-peasant: 8 unrolled shift/XOR
+steps with the 0x11D reduction, all uint8/uint16 element-wise ops. On a
+real TPU these map onto VPU lanes (no gathers, no VMEM table lookups);
+under the CPU PJRT plugin we lower with interpret=True per the image
+constraints. The BlockSpec grid streams the stripe dimension B through
+VMEM in `tile`-wide slabs while the m×m coefficient tile stays resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Reed-Solomon reduction polynomial x^8 + x^4 + x^3 + x^2 + 1 (0x11D),
+# i.e. the low byte 0x1D once the x^8 carry is folded.
+GF_POLY = 0x1D
+
+
+def gf_mul_bitwise(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Element-wise GF(2^8) product via 8 unrolled carry-less steps.
+
+    Works on uint8 inputs of any (broadcastable) shape. Arithmetic is done
+    in uint16 so the x^8 carry bit is observable before reduction.
+    """
+    a16 = a.astype(jnp.uint16)
+    b16 = b.astype(jnp.uint16)
+    res = jnp.zeros(jnp.broadcast_shapes(a16.shape, b16.shape), jnp.uint16)
+    for _ in range(8):
+        res = res ^ jnp.where((b16 & 1) != 0, a16, jnp.uint16(0))
+        carry = (a16 & 0x80) != 0
+        a16 = (a16 << 1) & 0xFF
+        a16 = a16 ^ jnp.where(carry, jnp.uint16(GF_POLY), jnp.uint16(0))
+        b16 = b16 >> 1
+    return res.astype(jnp.uint8)
+
+
+def _gf_matmul_kernel(a_ref, d_ref, o_ref, *, m: int):
+    """One grid step: O_tile[m, T] = A[m, m] · D_tile[m, T] over GF(2^8).
+
+    The contraction loop over the m coefficient columns is unrolled at
+    trace time (m ≤ 16), each step an element-wise GF multiply of one
+    coefficient column broadcast against one data row, XOR-accumulated.
+    """
+    a = a_ref[...]
+    d = d_ref[...]
+    acc = jnp.zeros((m, d.shape[1]), jnp.uint8)
+    for j in range(m):
+        coeff = a[:, j][:, None]  # (m, 1) broadcast over the stripe tile
+        row = d[j, :][None, :]  # (1, T)
+        acc = acc ^ gf_mul_bitwise(coeff, row)
+    o_ref[...] = acc
+
+
+def gf_matmul(a: jax.Array, d: jax.Array, *, tile: int = 8192) -> jax.Array:
+    """GF(2^8) matrix product ``A[m, m] · D[m, B]`` as a Pallas call.
+
+    ``B`` must be a multiple of ``tile``; the grid streams B through VMEM
+    tile-by-tile while A stays resident (index_map pins it to block 0).
+    """
+    m, m2 = a.shape
+    assert m == m2, f"coefficient matrix must be square, got {a.shape}"
+    md, b = d.shape
+    assert md == m, f"data rows {md} != coefficient size {m}"
+    tile = min(tile, b)
+    assert b % tile == 0, f"stripe width {b} not a multiple of tile {tile}"
+
+    kernel = functools.partial(_gf_matmul_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),  # A resident in VMEM
+            pl.BlockSpec((m, tile), lambda i: (0, i)),  # stream D
+        ],
+        out_specs=pl.BlockSpec((m, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, b), jnp.uint8),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a, d)
+
+
+def vmem_footprint_bytes(m: int, tile: int) -> int:
+    """Estimated VMEM bytes live per grid step: A + D tile + O tile.
+
+    Used by DESIGN.md §Perf to pick the block size (target ≤ 4 MiB so two
+    grid steps double-buffer inside a 16 MiB VMEM budget).
+    """
+    return m * m + 2 * m * tile

@@ -1,0 +1,137 @@
+"""Pure-numpy correctness oracles for the L1 kernels.
+
+Deliberately a *different algorithm* from the kernels: GF(2^8) arithmetic
+here goes through log/exp discrete-logarithm tables (the classical
+Reed-Solomon software implementation), while the Pallas kernel uses
+branch-free carry-less shift/XOR steps. Agreement between the two is the
+core correctness signal checked by pytest/hypothesis.
+
+Also hosts the field utilities the model-level tests need: Cauchy /
+systematic-IDA generator construction and Gauss-Jordan matrix inversion
+over GF(2^8), mirroring the rust implementation in rust/src/gf256/.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GF_POLY = 0x11D  # x^8 + x^4 + x^3 + x^2 + 1, generator alpha = 2
+
+
+def _build_tables() -> tuple[np.ndarray, np.ndarray]:
+    exp = np.zeros(512, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= GF_POLY
+    exp[255:510] = exp[0:255]  # wraparound so exp[log a + log b] never mods
+    return exp, log
+
+
+GF_EXP, GF_LOG = _build_tables()
+
+
+def gf_mul_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Element-wise GF(2^8) product via log/exp tables (vectorized)."""
+    a = np.asarray(a, dtype=np.uint8)
+    b = np.asarray(b, dtype=np.uint8)
+    a, b = np.broadcast_arrays(a, b)
+    out = np.zeros(a.shape, dtype=np.uint8)
+    nz = (a != 0) & (b != 0)
+    out[nz] = GF_EXP[GF_LOG[a[nz]] + GF_LOG[b[nz]]]
+    return out
+
+
+def gf_inv_scalar(a: int) -> int:
+    if a == 0:
+        raise ZeroDivisionError("gf256 inverse of zero")
+    return int(GF_EXP[255 - GF_LOG[a]])
+
+
+def gf_matmul_ref(a: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """GF(2^8) matrix product A[m,p] · D[p,B] with XOR accumulation."""
+    a = np.asarray(a, dtype=np.uint8)
+    d = np.asarray(d, dtype=np.uint8)
+    m, p = a.shape
+    p2, b = d.shape
+    assert p == p2
+    out = np.zeros((m, b), dtype=np.uint8)
+    for j in range(p):
+        out ^= gf_mul_ref(a[:, j : j + 1], d[j : j + 1, :])
+    return out
+
+
+def cauchy_matrix(n: int, k: int) -> np.ndarray:
+    """Cauchy matrix C[n,k] with C[i,j] = 1/(x_i ^ y_j), all distinct.
+
+    Every square submatrix of a Cauchy matrix is nonsingular, which gives
+    the IDA its any-k-of-n reconstruction guarantee.
+    """
+    assert n + k <= 256, "GF(2^8) Cauchy needs n + k <= 256"
+    out = np.zeros((n, k), dtype=np.uint8)
+    for i in range(n):
+        for j in range(k):
+            out[i, j] = gf_inv_scalar(i ^ (n + j))
+    return out
+
+
+def ida_generator(n: int, k: int) -> np.ndarray:
+    """Systematic IDA generator: [I_k ; Cauchy(n-k, k)] — first k chunks
+    are the data itself, the remaining n-k are parity (paper §IV-D)."""
+    g = np.zeros((n, k), dtype=np.uint8)
+    g[:k, :k] = np.eye(k, dtype=np.uint8)
+    if n > k:
+        g[k:, :] = cauchy_matrix(n - k, k)
+    return g
+
+
+def gf_mat_inv_ref(a: np.ndarray) -> np.ndarray:
+    """Gauss-Jordan inversion over GF(2^8); raises on singular input."""
+    a = np.array(a, dtype=np.uint8)
+    k = a.shape[0]
+    assert a.shape == (k, k)
+    aug = np.concatenate([a, np.eye(k, dtype=np.uint8)], axis=1)
+    for col in range(k):
+        pivot = None
+        for row in range(col, k):
+            if aug[row, col] != 0:
+                pivot = row
+                break
+        if pivot is None:
+            raise np.linalg.LinAlgError("singular GF(2^8) matrix")
+        if pivot != col:
+            aug[[col, pivot]] = aug[[pivot, col]]
+        inv_p = gf_inv_scalar(int(aug[col, col]))
+        aug[col] = gf_mul_ref(aug[col], np.uint8(inv_p))
+        for row in range(k):
+            if row != col and aug[row, col] != 0:
+                aug[row] ^= gf_mul_ref(aug[col], aug[row, col])
+    return aug[:, k:]
+
+
+def uf_score_ref(
+    params: np.ndarray,
+    mem_total: np.ndarray,
+    mem_avail: np.ndarray,
+    fs_total: np.ndarray,
+    fs_avail: np.ndarray,
+    alive: np.ndarray,
+) -> np.ndarray:
+    """Numpy oracle for the uf_score kernel (paper Eq. 1-2, occupancy)."""
+    size, w1, w2 = (float(params[0]), float(params[1]), float(params[2]))
+    mt = np.asarray(mem_total, np.float32)
+    ma = np.asarray(mem_avail, np.float32)
+    st = np.asarray(fs_total, np.float32)
+    sa = np.asarray(fs_avail, np.float32)
+    alive = np.asarray(alive, np.float32)
+    mt_safe = np.maximum(mt, 1.0)
+    st_safe = np.maximum(st, 1.0)
+    u_mem = 1.0 - (mt - (ma - size)) / mt_safe
+    u_fs = 1.0 - (st - (sa - size)) / st_safe
+    occ = 1.0 - (w1 * u_mem + w2 * u_fs)
+    feasible = (alive > 0.0) & (sa >= size) & (st > 0.0)
+    return np.where(feasible, occ, np.float32(3.4e38)).astype(np.float32)

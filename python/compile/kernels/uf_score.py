@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: utilization-factor placement scoring (paper Eq. 1-2).
+
+DynoStore's load balancer ranks every registered data container by a
+weighted combination of memory and filesystem utilization after the
+candidate object is (hypothetically) placed:
+
+    U(x)_mem = 1 - (M_total - (M_avail - |o|)) / M_total      (Eq. 1)
+    U(x)_fs  = 1 - (S_total - (S_avail - |o|)) / S_total
+    score(x) = w1 * U(x)_mem + w2 * U(x)_fs                    (Eq. 2)
+
+Eq. 1 as printed yields the *free* fraction after placement (1.0 = empty),
+so the fair-distribution selection the paper intends ("avoid overloading
+individual containers") is the container with the *most* head-room. We
+keep Eq. 1 verbatim and emit occupancy = 1 - score so the rust coordinator
+can take the paper's literal argmin; DESIGN.md §3 records the sign note.
+
+Containers that are dead or cannot fit the object get +inf so they sort
+last under argmin. The argmin itself happens on the host (deterministic
+tie-breaking by container id lives in rust).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INFEASIBLE = 3.4e38  # sorts last under argmin
+
+
+def _uf_score_kernel(params_ref, mt_ref, ma_ref, st_ref, sa_ref, alive_ref, o_ref):
+    """params = [obj_size, w1, w2]; vectors are f32[C]."""
+    size = params_ref[0]
+    w1 = params_ref[1]
+    w2 = params_ref[2]
+    mt = mt_ref[...]
+    ma = ma_ref[...]
+    st = st_ref[...]
+    sa = sa_ref[...]
+    alive = alive_ref[...]
+
+    # Eq. 1 — free fraction after hypothetical placement. Guard the
+    # divisions so zero-capacity slots (padding) stay finite.
+    mt_safe = jnp.maximum(mt, 1.0)
+    st_safe = jnp.maximum(st, 1.0)
+    u_mem = 1.0 - (mt - (ma - size)) / mt_safe
+    u_fs = 1.0 - (st - (sa - size)) / st_safe
+
+    # Eq. 2 weighted score, flipped to occupancy so argmin = most free.
+    free = w1 * u_mem + w2 * u_fs
+    occupancy = 1.0 - free
+
+    feasible = (alive > 0.0) & (sa >= size) & (st > 0.0)
+    o_ref[...] = jnp.where(feasible, occupancy, jnp.full_like(occupancy, INFEASIBLE))
+
+
+def uf_score(
+    params: jax.Array,
+    mem_total: jax.Array,
+    mem_avail: jax.Array,
+    fs_total: jax.Array,
+    fs_avail: jax.Array,
+    alive: jax.Array,
+) -> jax.Array:
+    """Score C containers; returns f32[C] (lower = better, +inf = cannot)."""
+    (c,) = mem_total.shape
+    kernel = functools.partial(_uf_score_kernel)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(params, mem_total, mem_avail, fs_total, fs_avail, alive)

@@ -1,0 +1,138 @@
+"""L2 JAX model: DynoStore's compute-plane graphs, built on the L1 kernels.
+
+Two graphs are AOT-lowered for the rust coordinator:
+
+* ``gf_matmul_m{M}_t{TILE}_b{BLOCK}`` — the erasure-coding product
+  ``O = A · D`` over GF(2^8). The same artifact serves encode (A = padded
+  systematic IDA generator) and decode (A = padded inverse of the
+  surviving generator rows); n, k ≤ M. See kernels/gf_matmul.py.
+* ``uf_score_c{C}`` — the utilization-factor placement scorer (Eq. 1-2)
+  over a padded registry of C containers.
+
+Everything here is build-time only: jax.jit(...).lower() → HLO text via
+aot.py. Python never runs on the rust request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gf_matmul import gf_matmul, vmem_footprint_bytes
+from compile.kernels.uf_score import uf_score
+
+# Padded coefficient-matrix sizes. Every erasure config in the paper's
+# experiment grid fits: (3,2) (6,3) (6,4) -> m=8 ... wait (3,2)->4;
+# (10,4) (10,7) (10,8) (12,8) (14,10) -> m=16.
+GF_SIZES = (4, 8, 16)
+# Stripe widths (bytes of each chunk processed per execute call) and the
+# VMEM tile the Pallas grid streams. 4 KiB / 1 KiB keeps tests fast;
+# 64 KiB / 8 KiB is the mid variant; 256 KiB / 16 KiB is the §Perf
+# iteration-2 variant (4x fewer PJRT executes per chunk, VMEM per grid
+# step still ~0.5 MiB for m=16).
+GF_BLOCKS = ((4096, 1024), (65536, 8192), (262144, 16384))
+UF_CONTAINERS = (64, 256)
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT artifact: a name, the jitted fn, and example input specs."""
+
+    name: str
+    fn: object
+    args: tuple
+
+
+def make_gf_matmul_fn(m: int, block: int, tile: int):
+    """Jitted wrapper: (A[m,m] u8, D[m,block] u8) -> (O[m,block] u8,)."""
+
+    @functools.partial(jax.jit)
+    def fn(a, d):
+        return (gf_matmul(a, d, tile=tile),)
+
+    return fn
+
+
+def make_uf_score_fn(c: int):
+    """Jitted wrapper over the placement scorer for a C-wide registry."""
+
+    @functools.partial(jax.jit)
+    def fn(params, mem_total, mem_avail, fs_total, fs_avail, alive):
+        return (uf_score(params, mem_total, mem_avail, fs_total, fs_avail, alive),)
+
+    return fn
+
+
+def gf_artifact_name(m: int, block: int, tile: int) -> str:
+    return f"gf_matmul_m{m}_t{tile}_b{block}"
+
+
+def uf_artifact_name(c: int) -> str:
+    return f"uf_score_c{c}"
+
+
+def default_specs(
+    gf_sizes=GF_SIZES,
+    gf_blocks=GF_BLOCKS,
+    uf_containers=UF_CONTAINERS,
+) -> list[ArtifactSpec]:
+    """The artifact grid `make artifacts` builds (plus manifest entries)."""
+    u8 = jnp.uint8
+    f32 = jnp.float32
+    specs: list[ArtifactSpec] = []
+    for m in gf_sizes:
+        for block, tile in gf_blocks:
+            specs.append(
+                ArtifactSpec(
+                    name=gf_artifact_name(m, block, tile),
+                    fn=make_gf_matmul_fn(m, block, tile),
+                    args=(
+                        jax.ShapeDtypeStruct((m, m), u8),
+                        jax.ShapeDtypeStruct((m, block), u8),
+                    ),
+                )
+            )
+    for c in uf_containers:
+        specs.append(
+            ArtifactSpec(
+                name=uf_artifact_name(c),
+                fn=make_uf_score_fn(c),
+                args=(
+                    jax.ShapeDtypeStruct((3,), f32),
+                    jax.ShapeDtypeStruct((c,), f32),
+                    jax.ShapeDtypeStruct((c,), f32),
+                    jax.ShapeDtypeStruct((c,), f32),
+                    jax.ShapeDtypeStruct((c,), f32),
+                    jax.ShapeDtypeStruct((c,), f32),
+                ),
+            )
+        )
+    return specs
+
+
+def manifest_entry(spec: ArtifactSpec) -> dict:
+    """Manifest record the rust runtime uses to validate shapes at load."""
+    return {
+        "name": spec.name,
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in spec.args
+        ],
+    }
+
+
+def perf_report(gf_sizes=GF_SIZES, gf_blocks=GF_BLOCKS) -> list[dict]:
+    """VMEM footprint estimates per gf_matmul variant (DESIGN.md §Perf)."""
+    out = []
+    for m in gf_sizes:
+        for block, tile in gf_blocks:
+            out.append(
+                {
+                    "name": gf_artifact_name(m, block, tile),
+                    "vmem_bytes_per_step": vmem_footprint_bytes(m, tile),
+                    "grid_steps": block // tile,
+                }
+            )
+    return out

@@ -1,0 +1,86 @@
+"""L2 model + AOT pipeline tests: jitted graphs, HLO text, manifest."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_gf_model_fn_executes_and_matches_ref():
+    fn = model.make_gf_matmul_fn(4, 4096, 1024)
+    r = np.random.default_rng(0)
+    a = r.integers(0, 256, (4, 4), dtype=np.uint8)
+    d = r.integers(0, 256, (4, 4096), dtype=np.uint8)
+    (out,) = fn(jnp.asarray(a), jnp.asarray(d))
+    np.testing.assert_array_equal(np.asarray(out), ref.gf_matmul_ref(a, d))
+
+
+def test_uf_model_fn_executes(tmp_path):
+    fn = model.make_uf_score_fn(64)
+    params = jnp.asarray([10.0, 0.5, 0.5], jnp.float32)
+    v = jnp.full((64,), 1000.0, jnp.float32)
+    alive = jnp.ones((64,), jnp.float32)
+    (scores,) = fn(params, v, v, v, v, alive)
+    assert scores.shape == (64,)
+    assert bool(jnp.all(scores < 1e37))
+
+
+def test_default_specs_cover_paper_grid():
+    names = {s.name for s in model.default_specs()}
+    # Every (n,k) the paper's experiments use must fit one of the m sizes.
+    for n, k in [(3, 2), (6, 3), (6, 4), (10, 4), (10, 7), (10, 8), (12, 8)]:
+        m = min(size for size in model.GF_SIZES if size >= n)
+        assert model.gf_artifact_name(m, 65536, 8192) in names
+    assert model.uf_artifact_name(64) in names
+
+
+def test_aot_emits_parseable_hlo_text(tmp_path):
+    out = str(tmp_path)
+    written = aot.build(out, quick=True)
+    assert written, "no artifacts written"
+    for path in written:
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{path} is not HLO text"
+        assert "custom-call" not in text, f"{path} contains a custom-call"
+    manifest = json.load(open(os.path.join(out, "manifest.json")))
+    assert len(manifest["artifacts"]) == len(written)
+    for entry in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(out, entry["name"] + ".hlo.txt"))
+
+
+def test_manifest_records_shapes():
+    spec = model.default_specs(
+        gf_sizes=(4,), gf_blocks=((4096, 1024),), uf_containers=()
+    )[0]
+    entry = model.manifest_entry(spec)
+    assert entry["name"] == "gf_matmul_m4_t1024_b4096"
+    assert entry["inputs"][0]["shape"] == [4, 4]
+    assert entry["inputs"][1]["shape"] == [4, 4096]
+    assert entry["inputs"][0]["dtype"] == "uint8"
+
+
+def test_perf_report_vmem_budget():
+    """Every production variant must fit the 4 MiB per-step VMEM budget
+    stated in DESIGN.md §Perf."""
+    for row in model.perf_report():
+        assert row["vmem_bytes_per_step"] <= 4 * 1024 * 1024, row
+
+
+def test_checked_in_artifacts_match_current_specs():
+    """If artifacts/ exists (built by `make artifacts`), its manifest must
+    cover the default spec grid — guards stale-artifact drift."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built yet")
+    manifest = json.load(open(manifest_path))
+    have = {e["name"] for e in manifest["artifacts"]}
+    want = {s.name for s in model.default_specs()}
+    assert want <= have, f"missing artifacts: {want - have}"

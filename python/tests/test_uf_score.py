@@ -1,0 +1,101 @@
+"""uf_score kernel vs numpy oracle — placement scoring (paper Eq. 1-2)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.uf_score import uf_score
+
+
+def run_kernel(params, mt, ma, st_, sa, alive):
+    return np.asarray(
+        uf_score(
+            jnp.asarray(params, jnp.float32),
+            jnp.asarray(mt, jnp.float32),
+            jnp.asarray(ma, jnp.float32),
+            jnp.asarray(st_, jnp.float32),
+            jnp.asarray(sa, jnp.float32),
+            jnp.asarray(alive, jnp.float32),
+        )
+    )
+
+
+def test_matches_reference_basic():
+    params = np.array([100.0, 0.5, 0.5], np.float32)
+    mt = np.array([1000.0, 2000.0, 500.0, 0.0], np.float32)
+    ma = np.array([800.0, 500.0, 400.0, 0.0], np.float32)
+    st_ = np.array([10000.0, 10000.0, 10000.0, 0.0], np.float32)
+    sa = np.array([9000.0, 2000.0, 5000.0, 0.0], np.float32)
+    alive = np.array([1.0, 1.0, 1.0, 0.0], np.float32)
+    got = run_kernel(params, mt, ma, st_, sa, alive)
+    want = ref.uf_score_ref(params, mt, ma, st_, sa, alive)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_emptier_container_scores_lower():
+    """More free space → lower occupancy → preferred under argmin."""
+    params = np.array([10.0, 0.5, 0.5], np.float32)
+    mt = np.full(2, 1000.0, np.float32)
+    st_ = np.full(2, 1000.0, np.float32)
+    ma = np.array([900.0, 100.0], np.float32)
+    sa = np.array([900.0, 100.0], np.float32)
+    alive = np.ones(2, np.float32)
+    got = run_kernel(params, mt, ma, st_, sa, alive)
+    assert got[0] < got[1]
+
+
+def test_dead_container_infeasible():
+    params = np.array([10.0, 0.5, 0.5], np.float32)
+    v = np.full(3, 1000.0, np.float32)
+    alive = np.array([1.0, 0.0, 1.0], np.float32)
+    got = run_kernel(params, v, v, v, v, alive)
+    assert got[1] > 1e37
+    assert got[0] < 1e37 and got[2] < 1e37
+
+
+def test_full_container_infeasible():
+    """Container whose filesystem cannot fit the object sorts last."""
+    params = np.array([500.0, 0.5, 0.5], np.float32)
+    mt = np.full(2, 1000.0, np.float32)
+    ma = np.full(2, 1000.0, np.float32)
+    st_ = np.full(2, 1000.0, np.float32)
+    sa = np.array([400.0, 600.0], np.float32)
+    alive = np.ones(2, np.float32)
+    got = run_kernel(params, mt, ma, st_, sa, alive)
+    assert got[0] > 1e37 and got[1] < 1e37
+
+
+def test_weights_shift_preference():
+    """w2 >> w1 favors the container with more filesystem head-room even
+    when its memory is tighter (the paper's medical-archive example)."""
+    params_fs = np.array([10.0, 0.0, 1.0], np.float32)
+    mt = np.full(2, 1000.0, np.float32)
+    st_ = np.full(2, 10000.0, np.float32)
+    ma = np.array([900.0, 100.0], np.float32)  # c0 has more memory
+    sa = np.array([1000.0, 9000.0], np.float32)  # c1 has more storage
+    alive = np.ones(2, np.float32)
+    got = run_kernel(params_fs, mt, ma, st_, sa, alive)
+    assert got[1] < got[0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    c=st.sampled_from([1, 3, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    w1=st.floats(0.0, 1.0),
+)
+def test_hypothesis_matches_reference(c, seed, w1):
+    r = np.random.default_rng(seed)
+    params = np.array([float(r.integers(1, 1000)), w1, 1.0 - w1], np.float32)
+    mt = r.uniform(1.0, 1e6, c).astype(np.float32)
+    ma = (mt * r.uniform(0, 1, c)).astype(np.float32)
+    st_ = r.uniform(1.0, 1e7, c).astype(np.float32)
+    sa = (st_ * r.uniform(0, 1, c)).astype(np.float32)
+    alive = (r.uniform(0, 1, c) > 0.2).astype(np.float32)
+    got = run_kernel(params, mt, ma, st_, sa, alive)
+    want = ref.uf_score_ref(params, mt, ma, st_, sa, alive)
+    feas = want < 1e37
+    np.testing.assert_allclose(got[feas], want[feas], rtol=1e-5, atol=1e-6)
+    assert (got[~feas] > 1e37).all()

@@ -1,0 +1,65 @@
+//! Fig. 3: time to deploy a varying number of data containers on ten
+//! bare-metal instances, and the average time per request to upload
+//! 100-MB objects at each scale (paper §VI-C1).
+//!
+//! Paper shape: deployment time grows ~linearly with container count;
+//! upload time per request stays ~constant because the UF load balancer
+//! spreads requests over however many containers exist.
+
+use dynostore::bench::testbed::{paper_resilience, synthetic_object};
+use dynostore::bench::{fmt_s, Table};
+use dynostore::container::{deploy_containers, AgentSpec};
+use dynostore::coordinator::{DynoStore, OpContext, PushOpts};
+use dynostore::sim::{DeviceKind, Site};
+
+fn main() {
+    println!("# Fig. 3 — container deployment time + upload time per request");
+    println!("(10 Chameleon hosts; upload: 20 objects x 10 MB per point — paper used 100 x 100 MB)");
+
+    let mut table = Table::new(
+        "Fig. 3: deployment time and mean upload request time vs container count",
+        &["containers", "deploy time (sim)", "mean upload/request (sim)"],
+    );
+
+    let object = synthetic_object(10 << 20, 3);
+    for &count in &[10usize, 25, 50, 75, 100] {
+        let specs: Vec<AgentSpec> = (0..count)
+            .map(|i| {
+                let site = if i % 2 == 0 { Site::ChameleonTacc } else { Site::ChameleonUc };
+                AgentSpec::new(format!("dc{i}"), site, DeviceKind::ChameleonLocal)
+            })
+            .collect();
+        let report = deploy_containers(&specs, 10, 0);
+        let deploy_s = report.deploy_s;
+
+        let ds = DynoStore::builder()
+            .gateway_site(Site::ChameleonUc)
+            .policy(paper_resilience())
+            .build();
+        for c in report.containers {
+            ds.add_container(c).unwrap();
+        }
+        let token = ds.register_user("bench").unwrap();
+        let mut total = 0.0;
+        let reqs = 20;
+        for i in 0..reqs {
+            let r = ds
+                .push(
+                    &token,
+                    "/bench",
+                    &format!("o{i}"),
+                    &object,
+                    PushOpts { ctx: OpContext::at(Site::ChameleonTacc), policy: None },
+                )
+                .unwrap();
+            total += r.sim_s;
+        }
+        table.row(vec![
+            count.to_string(),
+            fmt_s(deploy_s),
+            fmt_s(total / reqs as f64),
+        ]);
+    }
+    table.print();
+    println!("expected shape: deployment grows linearly; upload/request ~constant");
+}

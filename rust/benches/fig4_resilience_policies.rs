@@ -1,0 +1,105 @@
+//! Fig. 4: response time for different data sizes under DynoStore's IDA
+//! configurations vs HDFS replication / Reed-Solomon (paper §VI-C2).
+//!
+//! Policies (same failure budgets paired as in the paper):
+//!   HDFS-R3 (2 failures)      ↔ DynoStore IDA(3,2)  — wait: (3,2)
+//!   HDFS-RS(3,2) (2 failures) ↔ DynoStore IDA(10,4)/(6,3)/(3,2)
+//! The paper matches: RS(3,2), RS(6,3), RS(10,4) and DynoStore
+//! n={10,6,3}, k={4,3,2} (2, 3, 4 failures respectively).
+//!
+//! Paper shape: R3 fastest (no coding); RS ≈ DynoStore (same op
+//! structure: chunk + parity + n block writes).
+
+use dynostore::baselines::{HdfsLike, HdfsPolicy};
+use dynostore::bench::testbed::{chameleon_deployment, synthetic_object};
+use dynostore::bench::{fmt_s, Table};
+use dynostore::coordinator::{GfEngine, OpContext, PullOpts, PushOpts};
+use dynostore::erasure::ErasureConfig;
+use dynostore::policy::ResiliencePolicy;
+use dynostore::sim::{Site, Wan};
+
+fn main() {
+    println!("# Fig. 4 — resilience policies: DynoStore IDA vs HDFS R3/RS");
+    println!("(sizes scaled: paper runs 1 MB - 10 GB; here 1 MB - 256 MB)");
+
+    let sizes: &[(usize, &str)] = &[
+        (1 << 20, "1 MB"),
+        (16 << 20, "16 MB"),
+        (64 << 20, "64 MB"),
+        (256 << 20, "256 MB"),
+    ];
+
+    let hdfs_policies = [
+        HdfsPolicy::Replicate3,
+        HdfsPolicy::ReedSolomon { data: 3, parity: 2 },
+        HdfsPolicy::ReedSolomon { data: 6, parity: 3 },
+        HdfsPolicy::ReedSolomon { data: 10, parity: 4 },
+    ];
+    let ds_configs = [
+        ErasureConfig::new(3, 2),
+        ErasureConfig::new(6, 3),
+        ErasureConfig::new(10, 4),
+    ];
+
+    let mut up = Table::new(
+        "Fig. 4a: upload response time",
+        &["policy", "1 MB", "16 MB", "64 MB", "256 MB"],
+    );
+    let mut down = Table::new(
+        "Fig. 4b: download response time",
+        &["policy", "1 MB", "16 MB", "64 MB", "256 MB"],
+    );
+
+    // HDFS baselines (cluster at TACC, client at TACC — the paper's
+    // local-cluster scope for HDFS).
+    for policy in hdfs_policies {
+        let h = HdfsLike::new(Wan::paper_testbed(), Site::ChameleonTacc, Site::ChameleonTacc, 16, policy);
+        let mut up_row = vec![policy.label()];
+        let mut down_row = vec![policy.label()];
+        for &(size, _) in sizes {
+            let data = synthetic_object(size, size as u64);
+            let key = format!("o{size}");
+            up_row.push(fmt_s(h.put_object(&key, &data).unwrap()));
+            down_row.push(fmt_s(h.get_object(&key).unwrap().1));
+        }
+        up.row(up_row);
+        down.row(down_row);
+    }
+
+    // DynoStore configurations (wide-area deployment, client at TACC).
+    for cfg in ds_configs {
+        let ds = chameleon_deployment(12, ResiliencePolicy::Fixed(cfg), GfEngine::PureRust);
+        let token = ds.register_user("bench").unwrap();
+        let mut up_row = vec![format!("DynoStore {cfg}")];
+        let mut down_row = vec![format!("DynoStore {cfg}")];
+        for &(size, _) in sizes {
+            let data = synthetic_object(size, size as u64 + 1);
+            let name = format!("o{size}");
+            let r = ds
+                .push(
+                    &token,
+                    "/bench",
+                    &name,
+                    &data,
+                    PushOpts { ctx: OpContext::at(Site::ChameleonTacc), policy: None },
+                )
+                .unwrap();
+            up_row.push(fmt_s(r.sim_s));
+            let p = ds
+                .pull(
+                    &token,
+                    "/bench",
+                    &name,
+                    PullOpts { ctx: OpContext::at(Site::ChameleonTacc), version: None },
+                )
+                .unwrap();
+            down_row.push(fmt_s(p.sim_s));
+        }
+        up.row(up_row);
+        down.row(down_row);
+    }
+
+    up.print();
+    down.print();
+    println!("expected shape: HDFS-R3 fastest; HDFS-RS and DynoStore IDA comparable");
+}

@@ -1,0 +1,76 @@
+//! Fig. 5: upload throughput for different workload sizes, with and
+//! without the resilience policy, in two environments (paper §VI-C3):
+//! Chameleon→Chameleon (near) and Madrid→Chameleon (wide-area), against
+//! the iperf-measured path maximum.
+//!
+//! Paper anchors: Madrid→Chameleon 1000 MB Regular ≈ 8.9 s; the
+//! Resilience(10,7) configuration costs ~11-17% extra.
+
+use dynostore::bench::testbed::{chameleon_deployment, synthetic_object};
+use dynostore::bench::{fmt_mb_s, Table};
+use dynostore::coordinator::{GfEngine, OpContext, PushOpts};
+use dynostore::erasure::ErasureConfig;
+use dynostore::policy::ResiliencePolicy;
+use dynostore::sim::{Site, Wan};
+
+fn main() {
+    println!("# Fig. 5 — upload throughput, Regular vs Resilience(10,7)");
+    println!("(workloads scaled: paper 1 MB - 100 GB; here 1 MB - 1 GB)");
+
+    let wan = Wan::paper_testbed();
+    let workloads: &[(usize, usize, &str)] = &[
+        // (object size, object count, label)
+        (1 << 20, 3, "1 MB"),
+        (16 << 20, 3, "16 MB"),
+        (128 << 20, 2, "128 MB"),
+        (1 << 30, 1, "1 GB"),
+    ];
+
+    for (client, env) in [
+        (Site::ChameleonTacc, "Chameleon -> Chameleon"),
+        (Site::Madrid, "Madrid -> Chameleon"),
+    ] {
+        let iperf = wan.iperf_mb_s(client, Site::ChameleonUc);
+        let mut table = Table::new(
+            &format!("Fig. 5 ({env}) upload throughput — iperf max {iperf:.0} MB/s"),
+            &["workload", "Regular", "Resilience(10,7)", "overhead"],
+        );
+        for &(size, reps, label) in workloads {
+            let mut tput = [0.0f64; 2];
+            for (idx, policy) in [
+                ResiliencePolicy::Regular,
+                ResiliencePolicy::Fixed(ErasureConfig::new(10, 7)),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                let ds = chameleon_deployment(12, policy, GfEngine::PureRust);
+                let token = ds.register_user("bench").unwrap();
+                let mut total_s = 0.0;
+                for rep in 0..reps {
+                    let data = synthetic_object(size, (size + rep) as u64);
+                    let r = ds
+                        .push(
+                            &token,
+                            "/bench",
+                            &format!("o{rep}"),
+                            &data,
+                            PushOpts { ctx: OpContext::at(client), policy: None },
+                        )
+                        .unwrap();
+                    total_s += r.sim_s;
+                }
+                tput[idx] = (size * reps) as f64 / total_s;
+            }
+            let overhead = 100.0 * (tput[0] / tput[1] - 1.0);
+            table.row(vec![
+                label.to_string(),
+                fmt_mb_s(tput[0]),
+                fmt_mb_s(tput[1]),
+                format!("{overhead:.0}%"),
+            ]);
+        }
+        table.print();
+    }
+    println!("expected shape: Resilience ~11-17% below Regular; both under the iperf line");
+}

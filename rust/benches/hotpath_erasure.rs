@@ -1,0 +1,107 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): REAL wallclock for
+//! the erasure-coding data plane — the compute contribution the L1
+//! Pallas kernel accelerates.
+//!
+//! * pure-rust table codec: encode/decode throughput per (n, k) & size
+//! * PJRT Pallas-kernel backend: the same, through the AOT artifacts
+//! * `mul_slice_acc` primitive: the inner-loop byte rate
+//! * SHA3-256: the integrity-hash rate (it brackets the coding path)
+
+use dynostore::bench::{fmt_mb_s, measure, Table};
+use dynostore::crypto::sha3_256;
+use dynostore::erasure::{Codec, ErasureConfig, GfBackend, PureRustBackend};
+use dynostore::gf256::{ida_generator, mul_slice_acc};
+use dynostore::runtime::PjrtGfBackend;
+use dynostore::util::Rng;
+
+fn main() {
+    println!("# Hot path — erasure coding wallclock (REAL time, this host)");
+
+    // --- inner loop primitive ---------------------------------------
+    let mut rng = Rng::new(1);
+    let src = rng.bytes(1 << 20);
+    let mut acc = rng.bytes(1 << 20);
+    let stats = measure(3, 30, || {
+        mul_slice_acc(0xA7, &src, &mut acc);
+        std::hint::black_box(&acc);
+    });
+    println!(
+        "\nmul_slice_acc (1 MiB): {} -> {}",
+        stats,
+        fmt_mb_s(stats.throughput(1 << 20))
+    );
+
+    // --- SHA3-256 ----------------------------------------------------
+    let data = rng.bytes(4 << 20);
+    let stats = measure(2, 10, || {
+        std::hint::black_box(sha3_256(&data));
+    });
+    println!("sha3-256 (4 MiB): {} -> {}", stats, fmt_mb_s(stats.throughput(4 << 20)));
+
+    // --- codec throughput ---------------------------------------------
+    let mut table = Table::new(
+        "Erasure codec wallclock throughput (object bytes / elapsed)",
+        &["config", "size", "encode (pure-rust)", "decode (pure-rust)", "encode (pjrt)", "decode (pjrt)"],
+    );
+    let have_artifacts =
+        dynostore::runtime::artifacts_dir().join("manifest.json").exists();
+    for &(n, k) in &[(3usize, 2usize), (6, 3), (10, 7), (12, 8)] {
+        for &size in &[1usize << 20, 16 << 20] {
+            let object = Rng::new((n * size) as u64).bytes(size);
+            let cfg = ErasureConfig::new(n, k);
+
+            let pure = Codec::new(cfg).unwrap();
+            let iters = if size > (4 << 20) { 5 } else { 12 };
+            let enc = measure(1, iters, || {
+                std::hint::black_box(pure.encode(&object).unwrap());
+            });
+            let chunks = pure.encode(&object).unwrap();
+            let subset: Vec<_> = chunks[n - k..].to_vec();
+            let dec = measure(1, iters, || {
+                std::hint::black_box(pure.decode(&subset).unwrap());
+            });
+
+            let (enc_pjrt, dec_pjrt) = if have_artifacts {
+                let pjrt = Codec::with_backend(cfg, PjrtGfBackend::global()).unwrap();
+                let e = measure(1, 3, || {
+                    std::hint::black_box(pjrt.encode(&object).unwrap());
+                });
+                let d = measure(1, 3, || {
+                    std::hint::black_box(pjrt.decode(&subset).unwrap());
+                });
+                (fmt_mb_s(e.throughput(size as u64)), fmt_mb_s(d.throughput(size as u64)))
+            } else {
+                ("n/a".into(), "n/a".into())
+            };
+
+            table.row(vec![
+                format!("IDA({n},{k})"),
+                format!("{} MiB", size >> 20),
+                fmt_mb_s(enc.throughput(size as u64)),
+                fmt_mb_s(dec.throughput(size as u64)),
+                enc_pjrt,
+                dec_pjrt,
+            ]);
+        }
+    }
+    table.print();
+
+    // --- GF matmul structural numbers for the L1 kernel ---------------
+    println!("\nL1 kernel structural profile (VMEM per grid step, from BlockSpec):");
+    for (m, tile) in [(4usize, 1024usize), (4, 8192), (8, 8192), (16, 8192)] {
+        let vmem = m * m + 2 * m * tile;
+        println!("  m={m:<2} tile={tile:<5} -> {vmem} bytes/step");
+    }
+    let g = ida_generator(10, 7).unwrap();
+    let rows: Vec<Vec<u8>> = (0..7).map(|i| Rng::new(i).bytes(1 << 20)).collect();
+    let refs: Vec<&[u8]> = rows.iter().map(|r| r.as_slice()).collect();
+    let mut out: Vec<Vec<u8>> = (0..10).map(|_| vec![0u8; 1 << 20]).collect();
+    let stats = measure(1, 8, || {
+        PureRustBackend.matmul(&g, &refs, &mut out).unwrap();
+    });
+    println!(
+        "gf_matmul 10x7 over 7 MiB stripe: {} -> {} (input-byte rate)",
+        stats,
+        fmt_mb_s(stats.throughput(7 << 20))
+    );
+}

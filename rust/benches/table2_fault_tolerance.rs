@@ -1,0 +1,167 @@
+//! Table II: percentage of data retained as containers fail
+//! (paper §VI-D). Ten heterogeneous containers with annual failure
+//! rates 1–25%; DynoStore's dynamic algorithm picks per-object (n, k)
+//! and placement against a 0.1%/year loss target; baselines use their
+//! default Reed-Solomon configs on random placements:
+//! HDFS RS(6,3), GlusterFS RS(4,2), DAOS RS(8,2).
+//!
+//! Paper shape: DynoStore retains 100% through 5 failures (40% at 6);
+//! HDFS holds to 4 (60% at 5); GlusterFS to 3; DAOS degrades early.
+
+use dynostore::bench::Table;
+use dynostore::container::ContainerInfo;
+use dynostore::policy::{select_dynamic, PAPER_TARGET_LOSS};
+use dynostore::sim::{FailureModel, Site};
+use dynostore::util::Rng;
+
+const CONTAINERS: usize = 10;
+const OBJECTS: usize = 400;
+const TRIALS: usize = 300;
+
+/// One object's placement: (container ids, min chunks to survive).
+struct Placement {
+    containers: Vec<usize>,
+    need: usize,
+}
+
+fn infos(model: &FailureModel) -> Vec<ContainerInfo> {
+    model
+        .afr
+        .iter()
+        .enumerate()
+        .map(|(i, &afr)| ContainerInfo {
+            id: i as u32,
+            name: format!("dc{i}"),
+            site: Site::ChameleonTacc,
+            alive: true,
+            mem_total: 1 << 30,
+            mem_avail: 1 << 29,
+            fs_total: 1 << 40,
+            fs_avail: 1 << 39,
+            annual_failure_rate: afr,
+        })
+        .collect()
+}
+
+/// DynoStore: dynamic per-object (n,k) via the §VI-D algorithm.
+fn dynostore_placements(model: &FailureModel) -> Vec<Placement> {
+    let infos = infos(model);
+    (0..OBJECTS)
+        .map(|_| {
+            let choice = select_dynamic(&infos, 1 << 20, 4, PAPER_TARGET_LOSS).unwrap();
+            Placement {
+                containers: choice.containers.iter().map(|&c| c as usize).collect(),
+                need: choice.config.k,
+            }
+        })
+        .collect()
+}
+
+/// Baselines: fixed RS(d, p) on a random placement per object.
+fn fixed_rs_placements(d: usize, p: usize, rng: &mut Rng) -> Vec<Placement> {
+    (0..OBJECTS)
+        .map(|_| Placement {
+            containers: rng.sample_indices(CONTAINERS, (d + p).min(CONTAINERS)),
+            need: d,
+        })
+        .collect()
+}
+
+/// Sample exactly `failures` failed containers, weighted by AFR
+/// (failure-prone containers fail first, as in any real year).
+fn sample_failures(model: &FailureModel, failures: usize, rng: &mut Rng) -> Vec<bool> {
+    let mut failed = vec![false; CONTAINERS];
+    let mut weights: Vec<f64> = model.afr.clone();
+    for _ in 0..failures {
+        let total: f64 = weights.iter().sum();
+        let mut pick = rng.f64() * total;
+        let mut chosen = 0;
+        for (i, &w) in weights.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
+            pick -= w;
+            chosen = i;
+            if pick <= 0.0 {
+                break;
+            }
+        }
+        failed[chosen] = true;
+        weights[chosen] = 0.0;
+    }
+    failed
+}
+
+/// Percentage of objects whose surviving chunk count ≥ need.
+fn retention(placements: &[Placement], model: &FailureModel, failures: usize, rng: &mut Rng) -> f64 {
+    let mut retained_total = 0usize;
+    for _ in 0..TRIALS {
+        let failed = sample_failures(model, failures, rng);
+        retained_total += placements
+            .iter()
+            .filter(|p| {
+                let live = p.containers.iter().filter(|&&c| !failed[c]).count();
+                live >= p.need
+            })
+            .count();
+    }
+    100.0 * retained_total as f64 / (TRIALS * placements.len()) as f64
+}
+
+fn main() {
+    println!("# Table II — % data retained vs number of container failures");
+    println!(
+        "({CONTAINERS} containers, AFR 1-25%, {OBJECTS} objects, {TRIALS} failure trials, \
+         loss target {PAPER_TARGET_LOSS})"
+    );
+
+    let model = FailureModel::paper_scenario(CONTAINERS, 42);
+    let mut rng = Rng::new(7);
+
+    let systems: Vec<(&str, Vec<Placement>)> = vec![
+        ("DynoStore", dynostore_placements(&model)),
+        ("HDFS RS(6,3)", fixed_rs_placements(6, 3, &mut rng)),
+        ("GlusterFS RS(4,2)", fixed_rs_placements(4, 2, &mut rng)),
+        ("DAOS RS(8,2)", fixed_rs_placements(8, 2, &mut rng)),
+    ];
+
+    let mut table = Table::new(
+        "Table II: % of data retained",
+        &["system", "0", "1", "2", "3", "4", "5", "6"],
+    );
+    let mut results: Vec<Vec<f64>> = Vec::new();
+    for (name, placements) in &systems {
+        let mut row = vec![name.to_string()];
+        let mut vals = Vec::new();
+        for failures in 0..=6 {
+            let pct = retention(placements, &model, failures, &mut rng);
+            vals.push(pct);
+            row.push(format!("{pct:.0}%"));
+        }
+        results.push(vals);
+        table.row(row);
+    }
+    table.print();
+
+    // Shape assertions (who-wins ordering, not absolute numbers).
+    // Note: the relative HDFS/GlusterFS order at mid failure counts
+    // depends on how wide each system spreads blocks (9 vs 6 of the 10
+    // nodes); the paper's table and this simulation agree on the robust
+    // claims below.
+    let dyno = &results[0];
+    let hdfs = &results[1];
+    let daos = &results[3];
+    for f in 3..=6 {
+        for other in &results[1..] {
+            assert!(
+                dyno[f] >= other[f],
+                "DynoStore dominates every baseline at {f} failures"
+            );
+        }
+    }
+    assert!(dyno[5] > 95.0, "DynoStore ~100% at 5 failures (got {})", dyno[5]);
+    assert!(dyno[6] < 100.0, "DynoStore degrades at 6 failures (paper: 40%)");
+    assert!(hdfs[4] >= daos[4], "HDFS RS(6,3) >= DAOS RS(8,2): more parity");
+    assert!(daos[3] < 100.0, "DAOS degrades early (2 parity, 10 blocks)");
+    println!("shape checks passed: DynoStore survives the most failures");
+}

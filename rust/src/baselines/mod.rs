@@ -1,0 +1,16 @@
+//! Baseline systems the paper compares against, re-implemented over the
+//! same simulation substrate so the comparisons isolate *policy*
+//! differences (DESIGN.md §3): Amazon-S3-like centralized object store,
+//! Redis-like in-memory cluster store, IPFS-like P2P content network,
+//! and HDFS-like cluster filesystem with replication + Reed-Solomon
+//! policies.
+
+mod hdfs;
+mod ipfs_like;
+mod redis_like;
+mod s3_like;
+
+pub use hdfs::{HdfsLike, HdfsPolicy};
+pub use ipfs_like::IpfsLike;
+pub use redis_like::RedisLike;
+pub use s3_like::S3Like;

@@ -1,0 +1,126 @@
+//! Redis-like baseline (paper §VI-E, Fig. 10): an in-memory cluster
+//! store deployed in a single region ("Redis nodes are deployed in the
+//! same region of Chameleon, creating a cluster of virtual machines
+//! under the same network"). Persistence is modeled per the paper's
+//! fair-comparison setup: periodic disk backup + per-op append-only-file
+//! logging. Replication factor 1 primary + 1 replica inside the LAN.
+//!
+//! Redis's documented limitation (§VII): all nodes must share a stable
+//! low-latency network — the model charges the full WAN path for remote
+//! clients and has no cross-site placement at all.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::faas::DataFabric;
+use crate::sim::{Device, DeviceKind, Site, Wan};
+use crate::{Error, Result};
+
+pub struct RedisLike {
+    wan: Wan,
+    client_site: Site,
+    cluster_site: Site,
+    mem: Device,
+    disk: Device,
+    data: Mutex<HashMap<String, Vec<u8>>>,
+    alive: std::sync::atomic::AtomicBool,
+}
+
+impl RedisLike {
+    pub fn new(wan: Wan, client_site: Site, cluster_site: Site) -> Self {
+        RedisLike {
+            wan,
+            client_site,
+            cluster_site,
+            mem: Device::new(DeviceKind::Memory),
+            disk: Device::new(DeviceKind::ChameleonLocal),
+            data: Mutex::new(HashMap::new()),
+            alive: std::sync::atomic::AtomicBool::new(true),
+        }
+    }
+
+    /// Simulate cluster outage (Fig. 10 fault-tolerance discussion).
+    pub fn set_alive(&self, alive: bool) {
+        self.alive.store(alive, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.alive.load(std::sync::atomic::Ordering::SeqCst) {
+            Ok(())
+        } else {
+            Err(Error::Unavailable("redis cluster down".into()))
+        }
+    }
+
+    pub fn put_cost(&self, bytes: u64) -> f64 {
+        let wan = self.wan.transfer_s(self.client_site, self.cluster_site, bytes, 1);
+        // Memory write + LAN replica hop + AOF append (disk, amortized).
+        let lan = self.wan.transfer_s(self.cluster_site, self.cluster_site, bytes, 1);
+        wan + self.mem.write_s(bytes) + lan + self.disk.write_s(bytes) * 0.2
+    }
+
+    pub fn get_cost(&self, bytes: u64) -> f64 {
+        self.wan.transfer_s(self.cluster_site, self.client_site, bytes, 1)
+            + self.mem.read_s(bytes)
+    }
+}
+
+impl DataFabric for RedisLike {
+    fn put(&self, key: &str, data: &[u8]) -> Result<f64> {
+        self.check()?;
+        let cost = self.put_cost(data.len() as u64);
+        self.data.lock().unwrap().insert(key.to_string(), data.to_vec());
+        Ok(cost)
+    }
+
+    fn get(&self, key: &str) -> Result<(Vec<u8>, f64)> {
+        self.check()?;
+        let map = self.data.lock().unwrap();
+        let d = map.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        Ok((d.clone(), self.get_cost(d.len() as u64)))
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.check().is_ok() && self.data.lock().unwrap().contains_key(key)
+    }
+
+    fn fabric_name(&self) -> &'static str {
+        "redis-like"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn redis(client: Site) -> RedisLike {
+        RedisLike::new(Wan::paper_testbed(), client, Site::ChameleonUc)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let r = redis(Site::ChameleonUc);
+        r.put("k", b"v").unwrap();
+        assert_eq!(r.get("k").unwrap().0, b"v");
+        assert!(r.exists("k"));
+    }
+
+    #[test]
+    fn local_clients_are_fast_remote_slow() {
+        // §VII: Redis is built for same-network deployments.
+        let local = redis(Site::ChameleonUc).put_cost(100_000_000);
+        let remote = redis(Site::Madrid).put_cost(100_000_000);
+        assert!(remote > local * 3.0, "remote {remote} vs local {local}");
+    }
+
+    #[test]
+    fn cluster_outage_loses_everything() {
+        // Single-site deployment: one outage takes out all data
+        // (contrast with DynoStore's chunk dispersal).
+        let r = redis(Site::ChameleonUc);
+        r.put("k", b"v").unwrap();
+        r.set_alive(false);
+        assert!(matches!(r.get("k"), Err(Error::Unavailable(_))));
+        assert!(!r.exists("k"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Benchmark harness (criterion is absent from the vendored crate set —
+//! DESIGN.md §3): wallclock measurement with warmup + stats, and
+//! markdown/JSON table output. Every `rust/benches/*.rs` binary uses
+//! this to print the rows/series of one paper table or figure.
+
+pub mod testbed;
+
+use crate::util::{human_ns, now_ns};
+
+/// Summary statistics over repeated measurements (nanoseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Stats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Throughput in bytes/second for a payload processed per iteration.
+    pub fn throughput(&self, bytes_per_iter: u64) -> f64 {
+        if self.mean_ns == 0.0 {
+            return 0.0;
+        }
+        bytes_per_iter as f64 / (self.mean_ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {} p50 {} p95 {} (n={})",
+            human_ns(self.mean_ns as u64),
+            human_ns(self.p50_ns),
+            human_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+/// Measure `f` with `warmup` discarded runs then `iters` timed runs.
+pub fn measure(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = now_ns();
+        f();
+        samples.push(now_ns() - t0);
+    }
+    samples.sort_unstable();
+    let sum: u128 = samples.iter().map(|&s| s as u128).sum();
+    Stats {
+        iters: samples.len(),
+        mean_ns: sum as f64 / samples.len() as f64,
+        p50_ns: samples[samples.len() / 2],
+        p95_ns: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        min_ns: samples[0],
+        max_ns: samples[samples.len() - 1],
+    }
+}
+
+/// A results table printed as GitHub markdown (and parseable rows for
+/// EXPERIMENTS.md).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+/// Format seconds compactly for table cells.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} ms", s * 1e3)
+    }
+}
+
+/// Format a throughput in MB/s.
+pub fn fmt_mb_s(bytes_per_s: f64) -> String {
+    format!("{:.1} MB/s", bytes_per_s / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_ordered_stats() {
+        let stats = measure(2, 20, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert_eq!(stats.iters, 20);
+        assert!(stats.min_ns <= stats.p50_ns);
+        assert!(stats.p50_ns <= stats.p95_ns);
+        assert!(stats.p95_ns <= stats.max_ns);
+        assert!(stats.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let stats = Stats {
+            iters: 1,
+            mean_ns: 1e9, // 1 second
+            p50_ns: 1,
+            p95_ns: 1,
+            min_ns: 1,
+            max_ns: 1,
+        };
+        assert_eq!(stats.throughput(100_000_000), 100_000_000.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Fig X", &["size", "time"]);
+        t.row(vec!["1 MB".into(), "0.5 s".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Fig X"));
+        assert!(md.contains("| size | time |"));
+        assert!(md.contains("| 1 MB | 0.5 s |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_s(0.0123), "12.3 ms");
+        assert_eq!(fmt_s(2.5), "2.50 s");
+        assert_eq!(fmt_s(250.0), "250 s");
+        assert_eq!(fmt_mb_s(112_000_000.0), "112.0 MB/s");
+    }
+}

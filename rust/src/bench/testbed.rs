@@ -1,0 +1,138 @@
+//! Shared experiment testbed builders: the Table I deployment shapes
+//! used by `rust/benches/*` and `examples/*`, plus synthetic dataset
+//! generators matching the paper's three datasets (§VI-A).
+
+use std::sync::Arc;
+
+use crate::container::{deploy_containers, AgentSpec};
+use crate::coordinator::{DynoStore, GfEngine};
+use crate::erasure::ErasureConfig;
+use crate::policy::ResiliencePolicy;
+use crate::sim::{DeviceKind, Site};
+use crate::util::Rng;
+
+/// The paper's default wide-area deployment: `n` containers spread over
+/// Chameleon TACC/UC (bare-metal local disks), gateway + metadata at
+/// CHI@UC — DSEndpoints1-10 of Table I.
+pub fn chameleon_deployment(
+    n: usize,
+    policy: ResiliencePolicy,
+    engine: GfEngine,
+) -> Arc<DynoStore> {
+    let ds = Arc::new(
+        DynoStore::builder()
+            .gateway_site(Site::ChameleonUc)
+            .policy(policy)
+            .engine(engine)
+            .build(),
+    );
+    let specs: Vec<AgentSpec> = (0..n)
+        .map(|i| {
+            let site = if i % 2 == 0 { Site::ChameleonTacc } else { Site::ChameleonUc };
+            AgentSpec::new(format!("dc{i}"), site, DeviceKind::ChameleonLocal)
+                .mem(2 << 30) // Table I: 251 GB nodes; 2 GiB cache per container
+                .fs(1 << 40)
+                .afr(0.01 + 0.24 * i as f64 / (n.max(2) - 1) as f64)
+        })
+        .collect();
+    for c in deploy_containers(&specs, n.min(10).max(1), 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    ds
+}
+
+/// The AWS deployment of Fig. 8: 10 containers on one device class
+/// (or the "combined" mix), gateway in-region (N. Virginia).
+pub fn aws_deployment(device_mix: &[DeviceKind], policy: ResiliencePolicy) -> Arc<DynoStore> {
+    let ds = Arc::new(
+        DynoStore::builder()
+            .gateway_site(Site::AwsVirginia)
+            .policy(policy)
+            .build(),
+    );
+    let specs: Vec<AgentSpec> = (0..10)
+        .map(|i| {
+            AgentSpec::new(
+                format!("aws{i}"),
+                Site::AwsVirginia,
+                device_mix[i % device_mix.len()],
+            )
+            .mem(512 << 20)
+            .fs(80 << 30) // Table I: 80 GB EBS volumes
+        })
+        .collect();
+    for c in deploy_containers(&specs, 10, 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    ds
+}
+
+/// Default fixed-resilience policy of the evaluation: IDA(10, 7).
+pub fn paper_resilience() -> ResiliencePolicy {
+    ResiliencePolicy::Fixed(ErasureConfig::new(10, 7))
+}
+
+/// Synthetic object of `len` bytes (the §VI-A microbenchmark dataset:
+/// "synthetic objects with random content").
+pub fn synthetic_object(len: usize, seed: u64) -> Vec<u8> {
+    Rng::new(seed).bytes(len)
+}
+
+/// Tomography-like image set (§VI-A dataset 2: 119,288 images, ~0.1 MB
+/// each). `count` scaled images of ~100 KB with mild size jitter.
+pub fn medical_images(count: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let len = 80_000 + rng.below(40_000) as usize; // ~0.1 MB
+            rng.bytes(len)
+        })
+        .collect()
+}
+
+/// Satellite-scene-like image set (§VI-A dataset 3: MODIS/LandSat,
+/// ~250 MB mean — scaled here to `scale` bytes mean).
+pub fn satellite_images(count: usize, mean_len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let jitter = rng.below((mean_len / 2) as u64 + 1) as usize;
+            rng.bytes(mean_len / 2 + jitter + 1)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chameleon_deployment_shape() {
+        let ds = chameleon_deployment(10, paper_resilience(), GfEngine::PureRust);
+        assert_eq!(ds.registry.len(), 10);
+        let infos = ds.registry.infos();
+        let tacc = infos.iter().filter(|i| i.site == Site::ChameleonTacc).count();
+        assert_eq!(tacc, 5, "half at TACC, half at UC");
+    }
+
+    #[test]
+    fn aws_deployment_mixes_devices() {
+        let ds = aws_deployment(
+            &[DeviceKind::EbsHdd, DeviceKind::EbsSsd, DeviceKind::FsxLustre],
+            paper_resilience(),
+        );
+        assert_eq!(ds.registry.len(), 10);
+    }
+
+    #[test]
+    fn datasets_have_expected_shapes() {
+        let med = medical_images(10, 1);
+        assert_eq!(med.len(), 10);
+        assert!(med.iter().all(|i| (80_000..120_000).contains(&i.len())));
+        let sat = satellite_images(5, 1_000_000, 2);
+        assert!(sat.iter().all(|i| i.len() >= 500_000));
+        assert_eq!(synthetic_object(100, 3).len(), 100);
+        // Determinism.
+        assert_eq!(synthetic_object(100, 3), synthetic_object(100, 3));
+    }
+}

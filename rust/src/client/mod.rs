@@ -1,0 +1,286 @@
+//! The DynoStore client (paper §V): push / pull / exists / evict against
+//! a deployment, usable as a library (this module) or through the CLI in
+//! `main.rs`. Adds the two client-side features of the paper:
+//!
+//! * **Parallel channels** (§VI-C4, Fig. 7): workloads of many objects
+//!   are spread over T concurrent channels; each channel is a thread
+//!   sharing the client's WAN link (the flow-sharing term in
+//!   [`crate::sim::Wan`] models the contention).
+//! * **Point-to-point confidentiality** (§IV-E2): optional AES-256-CTR
+//!   encryption before upload; the nonce is derived from the object name
+//!   so pulls are self-contained.
+
+use std::sync::Arc;
+
+use crate::coordinator::{DynoStore, OpContext, PullOpts, PushOpts};
+use crate::crypto::{sha3_256, AesCtr};
+use crate::policy::ResiliencePolicy;
+use crate::sim::Site;
+use crate::{Error, Result};
+
+/// Client-side encryption configuration.
+#[derive(Clone)]
+pub struct Encryption {
+    key: [u8; 32],
+}
+
+impl Encryption {
+    pub fn new(key: [u8; 32]) -> Self {
+        Encryption { key }
+    }
+
+    /// Derive a per-object nonce from the logical path (deterministic,
+    /// distinct per object; versions of the same name share a nonce only
+    /// if contents differ — acceptable for CTR because the key is per
+    /// deployment and uploads are immutable versions).
+    fn nonce_for(&self, collection: &str, name: &str, version_salt: u64) -> [u8; 16] {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(collection.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(name.as_bytes());
+        buf.extend_from_slice(&version_salt.to_le_bytes());
+        let h = sha3_256(&buf);
+        h[..16].try_into().unwrap()
+    }
+}
+
+/// Aggregate result of a multi-object client workload.
+#[derive(Debug, Clone, Default)]
+pub struct BatchReport {
+    pub objects: usize,
+    pub bytes: u64,
+    /// Simulated wall time for the whole batch (parallel channels).
+    pub sim_s: f64,
+    /// Mean simulated seconds per request.
+    pub mean_request_s: f64,
+}
+
+/// A client bound to a deployment, a site, and (optionally) a cipher.
+pub struct Client {
+    store: Arc<DynoStore>,
+    token: String,
+    pub site: Site,
+    encryption: Option<Encryption>,
+    pub policy: Option<ResiliencePolicy>,
+}
+
+impl Client {
+    pub fn new(store: Arc<DynoStore>, token: String, site: Site) -> Self {
+        Client { store, token, site, encryption: None, policy: None }
+    }
+
+    pub fn with_encryption(mut self, key: [u8; 32]) -> Self {
+        self.encryption = Some(Encryption::new(key));
+        self
+    }
+
+    pub fn with_policy(mut self, policy: ResiliencePolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    fn ctx(&self, flows: u32) -> OpContext {
+        OpContext::at(self.site).with_flows(flows)
+    }
+
+    /// Upload one object. Returns the simulated request seconds.
+    pub fn push(&self, collection: &str, name: &str, data: &[u8]) -> Result<f64> {
+        self.push_flows(collection, name, data, 1)
+    }
+
+    fn push_flows(&self, collection: &str, name: &str, data: &[u8], flows: u32) -> Result<f64> {
+        let payload = match &self.encryption {
+            Some(enc) => {
+                let mut buf = data.to_vec();
+                AesCtr::new(&enc.key, &enc.nonce_for(collection, name, 0)).apply(&mut buf);
+                buf
+            }
+            None => data.to_vec(),
+        };
+        let report = self.store.push(
+            &self.token,
+            collection,
+            name,
+            &payload,
+            PushOpts { ctx: self.ctx(flows), policy: self.policy },
+        )?;
+        Ok(report.sim_s)
+    }
+
+    /// Download one object (decrypting if the client has a key).
+    pub fn pull(&self, collection: &str, name: &str) -> Result<(Vec<u8>, f64)> {
+        self.pull_flows(collection, name, 1)
+    }
+
+    fn pull_flows(&self, collection: &str, name: &str, flows: u32) -> Result<(Vec<u8>, f64)> {
+        let report = self.store.pull(
+            &self.token,
+            collection,
+            name,
+            PullOpts { ctx: self.ctx(flows), version: None },
+        )?;
+        let mut data = report.data;
+        if let Some(enc) = &self.encryption {
+            AesCtr::new(&enc.key, &enc.nonce_for(collection, name, 0)).apply(&mut data);
+        }
+        Ok((data, report.sim_s))
+    }
+
+    pub fn exists(&self, collection: &str, name: &str) -> Result<bool> {
+        self.store.exists(&self.token, collection, name)
+    }
+
+    pub fn evict(&self, collection: &str, name: &str) -> Result<usize> {
+        self.store.evict(&self.token, collection, name)
+    }
+
+    /// Upload a batch of objects over `threads` parallel channels
+    /// (Fig. 7). Items are processed in rounds of `threads`; every
+    /// channel active in a round shares the WAN link with exactly the
+    /// other channels of that round (the final partial round uses fewer
+    /// flows, so tail items go faster).
+    pub fn push_batch(
+        &self,
+        items: &[(String, String, Vec<u8>)],
+        threads: usize,
+    ) -> Result<BatchReport> {
+        self.batch(items.len(), threads, |i, flows| {
+            let (col, name, data) = &items[i];
+            self.push_flows(col, name, data, flows).map(|s| (s, data.len() as u64))
+        })
+    }
+
+    /// Download a batch over parallel channels.
+    pub fn pull_batch(
+        &self,
+        items: &[(String, String)],
+        threads: usize,
+    ) -> Result<BatchReport> {
+        self.batch(items.len(), threads, |i, flows| {
+            let (col, name) = &items[i];
+            self.pull_flows(col, name, flows).map(|(data, s)| (s, data.len() as u64))
+        })
+    }
+
+    /// Shared batch engine: round r runs items r*T..(r+1)*T concurrently
+    /// with flows = that round's active channel count; batch time = sum
+    /// over rounds of the round's slowest request.
+    fn batch(
+        &self,
+        count: usize,
+        threads: usize,
+        op: impl Fn(usize, u32) -> Result<(f64, u64)>,
+    ) -> Result<BatchReport> {
+        if threads == 0 {
+            return Err(Error::Invalid("threads must be >= 1".into()));
+        }
+        let mut sim_s = 0.0f64;
+        let mut total_bytes = 0u64;
+        let mut total_req = 0.0f64;
+        let mut i = 0usize;
+        while i < count {
+            let active = threads.min(count - i) as u32;
+            let mut round_max = 0.0f64;
+            for j in 0..active as usize {
+                let (req_s, bytes) = op(i + j, active)?;
+                round_max = round_max.max(req_s);
+                total_bytes += bytes;
+                total_req += req_s;
+            }
+            sim_s += round_max;
+            i += active as usize;
+        }
+        Ok(BatchReport {
+            objects: count,
+            bytes: total_bytes,
+            sim_s,
+            mean_request_s: if count > 0 { total_req / count as f64 } else { 0.0 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{deploy_containers, AgentSpec};
+    use crate::sim::DeviceKind;
+
+    fn deployment() -> (Arc<DynoStore>, String) {
+        let ds = Arc::new(DynoStore::builder().build());
+        let specs: Vec<AgentSpec> = (0..12)
+            .map(|i| {
+                AgentSpec::new(
+                    format!("dc{i}"),
+                    Site::ChameleonTacc,
+                    DeviceKind::ChameleonLocal,
+                )
+            })
+            .collect();
+        for c in deploy_containers(&specs, 12, 0).containers {
+            ds.add_container(c).unwrap();
+        }
+        let token = ds.register_user("UserA").unwrap();
+        (ds, token)
+    }
+
+    #[test]
+    fn client_roundtrip() {
+        let (ds, token) = deployment();
+        let client = Client::new(ds, token, Site::Madrid);
+        let data = crate::util::Rng::new(1).bytes(10_000);
+        client.push("/UserA", "obj", &data).unwrap();
+        assert!(client.exists("/UserA", "obj").unwrap());
+        let (got, _) = client.pull("/UserA", "obj").unwrap();
+        assert_eq!(got, data);
+        client.evict("/UserA", "obj").unwrap();
+        assert!(!client.exists("/UserA", "obj").unwrap());
+    }
+
+    #[test]
+    fn encryption_roundtrip_and_ciphertext_at_rest() {
+        let (ds, token) = deployment();
+        let key = [9u8; 32];
+        let client = Client::new(ds.clone(), token, Site::Madrid).with_encryption(key);
+        let secret = b"extremely sensitive medical scan".to_vec();
+        client.push("/UserA", "scan", &secret).unwrap();
+        // Plaintext client sees ciphertext, encrypted client sees plaintext.
+        let (got, _) = client.pull("/UserA", "scan").unwrap();
+        assert_eq!(got, secret);
+        let plain_client =
+            Client::new(ds, client.store_token_for_tests(), Site::Madrid);
+        let (raw, _) = plain_client.pull("/UserA", "scan").unwrap();
+        assert_ne!(raw, secret, "data at rest is encrypted");
+    }
+
+    #[test]
+    fn parallel_channels_reduce_batch_time() {
+        // Fig. 7 shape: more channels → lower total time for a fixed
+        // workload, with diminishing returns.
+        let (ds, token) = deployment();
+        let client = Client::new(ds, token, Site::Madrid);
+        let items: Vec<(String, String, Vec<u8>)> = (0..32)
+            .map(|i| ("/UserA".to_string(), format!("o{i}"), vec![7u8; 200_000]))
+            .collect();
+        let t1 = client.push_batch(&items, 1).unwrap().sim_s;
+        let t8 = client.push_batch(&items, 8).unwrap().sim_s;
+        let t32 = client.push_batch(&items, 32).unwrap().sim_s;
+        assert!(t8 < t1, "8 threads {t8} < 1 thread {t1}");
+        assert!(t32 <= t8);
+        let reduction = (t1 - t32) / t1;
+        assert!(reduction > 0.2, "expected sizeable reduction, got {reduction}");
+    }
+
+    #[test]
+    fn batch_zero_threads_rejected() {
+        let (ds, token) = deployment();
+        let client = Client::new(ds, token, Site::Madrid);
+        assert!(client.push_batch(&[], 0).is_err());
+    }
+
+    impl Client {
+        /// Test helper: reissue a token for the same subject.
+        fn store_token_for_tests(&self) -> String {
+            self.store.login("UserA")
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Configuration system: a JSON cluster specification (the paper's
+//! §III-A "configuration file that specifies the container's name,
+//! storage path, and access parameters", plus the management-service
+//! knobs) parsed into a [`Config`] and instantiable as a running
+//! [`DynoStore`] deployment.
+//!
+//! ```json
+//! {
+//!   "gateway_site": "chameleon-uc",
+//!   "metadata_replicas": 3,
+//!   "policy": {"type": "erasure", "n": 10, "k": 7},
+//!   "weights": {"w1_mem": 0.5, "w2_fs": 0.5},
+//!   "engine": "pure-rust",
+//!   "containers": [
+//!     {"name": "dc0", "site": "chameleon-tacc", "device": "chameleon-local",
+//!      "mem_mb": 256, "fs_gb": 1024, "afr": 0.05}
+//!   ]
+//! }
+//! ```
+
+use std::sync::Arc;
+
+use crate::container::{deploy_containers, AgentSpec};
+use crate::coordinator::{DynoStore, GfEngine};
+use crate::erasure::ErasureConfig;
+use crate::json::{parse, Value};
+use crate::placement::Weights;
+use crate::policy::ResiliencePolicy;
+use crate::sim::{Device, Site};
+use crate::{Error, Result};
+
+/// Parsed deployment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub gateway_site: Site,
+    pub metadata_replicas: usize,
+    pub policy: ResiliencePolicy,
+    pub weights: Weights,
+    pub engine: GfEngine,
+    pub containers: Vec<AgentSpec>,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            gateway_site: Site::ChameleonUc,
+            metadata_replicas: 3,
+            policy: ResiliencePolicy::Fixed(ErasureConfig::new(10, 7)),
+            weights: Weights::default(),
+            engine: GfEngine::PureRust,
+            containers: Vec::new(),
+            seed: 0xD1_5705,
+        }
+    }
+}
+
+impl Config {
+    /// Parse a JSON configuration document.
+    pub fn from_json(text: &str) -> Result<Config> {
+        let v = parse(text)?;
+        let mut cfg = Config::default();
+        if let Some(site) = v.get("gateway_site").as_str() {
+            cfg.gateway_site = Site::parse(site)
+                .ok_or_else(|| Error::Config(format!("unknown site '{site}'")))?;
+        }
+        cfg.metadata_replicas = v.opt_u64("metadata_replicas", 3) as usize;
+        if cfg.metadata_replicas % 2 == 0 {
+            return Err(Error::Config("metadata_replicas must be odd".into()));
+        }
+        cfg.seed = v.opt_u64("seed", cfg.seed);
+        cfg.policy = parse_policy(v.get("policy"))?;
+        let w = v.get("weights");
+        cfg.weights = Weights {
+            w1_mem: w.opt_f64("w1_mem", 0.5),
+            w2_fs: w.opt_f64("w2_fs", 0.5),
+        };
+        cfg.engine = match v.opt_str("engine", "pure-rust") {
+            "pure-rust" => GfEngine::PureRust,
+            "pjrt" => GfEngine::Pjrt,
+            other => return Err(Error::Config(format!("unknown engine '{other}'"))),
+        };
+        if let Some(arr) = v.get("containers").as_arr() {
+            for c in arr {
+                cfg.containers.push(parse_container(c)?);
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Config::from_json(&text)
+    }
+
+    /// Instantiate the deployment: build the coordinator, deploy and
+    /// register every configured container.
+    pub fn build(&self) -> Result<Arc<DynoStore>> {
+        let ds = Arc::new(
+            DynoStore::builder()
+                .gateway_site(self.gateway_site)
+                .replicas(self.metadata_replicas)
+                .policy(self.policy)
+                .weights(self.weights)
+                .engine(self.engine)
+                .seed(self.seed)
+                .build(),
+        );
+        let hosts = self.containers.len().max(1);
+        for c in deploy_containers(&self.containers, hosts, 0).containers {
+            ds.add_container(c)?;
+        }
+        Ok(ds)
+    }
+}
+
+fn parse_policy(v: &Value) -> Result<ResiliencePolicy> {
+    match v.opt_str("type", "erasure") {
+        "regular" => Ok(ResiliencePolicy::Regular),
+        "erasure" => {
+            let n = v.opt_u64("n", 10) as usize;
+            let k = v.opt_u64("k", 7) as usize;
+            let cfg = ErasureConfig::new(n, k);
+            cfg.validate()?;
+            Ok(ResiliencePolicy::Fixed(cfg))
+        }
+        "dynamic" => Ok(ResiliencePolicy::Dynamic {
+            k: v.opt_u64("k", 4) as usize,
+            target_loss: v.opt_f64("target_loss", crate::policy::PAPER_TARGET_LOSS),
+        }),
+        other => Err(Error::Config(format!("unknown policy '{other}'"))),
+    }
+}
+
+fn parse_container(v: &Value) -> Result<AgentSpec> {
+    let name = v.req_str("name")?;
+    let site_name = v.opt_str("site", "chameleon-tacc");
+    let site = Site::parse(site_name)
+        .ok_or_else(|| Error::Config(format!("unknown site '{site_name}'")))?;
+    let dev_name = v.opt_str("device", "chameleon-local");
+    let device = Device::parse(dev_name)
+        .ok_or_else(|| Error::Config(format!("unknown device '{dev_name}'")))?;
+    Ok(AgentSpec::new(name, site, device)
+        .mem(v.opt_u64("mem_mb", 256) << 20)
+        .fs(v.opt_u64("fs_gb", 1024) << 30)
+        .afr(v.get("afr").as_f64().unwrap_or(0.05)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "gateway_site": "chameleon-uc",
+        "metadata_replicas": 5,
+        "policy": {"type": "erasure", "n": 6, "k": 3},
+        "weights": {"w1_mem": 0.2, "w2_fs": 0.8},
+        "containers": [
+            {"name": "dc0", "site": "chameleon-tacc", "device": "ebs-ssd",
+             "mem_mb": 64, "fs_gb": 10, "afr": 0.02},
+            {"name": "dc1", "site": "aws-virginia", "device": "ebs-hdd"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = Config::from_json(SAMPLE).unwrap();
+        assert_eq!(cfg.gateway_site, Site::ChameleonUc);
+        assert_eq!(cfg.metadata_replicas, 5);
+        assert_eq!(cfg.policy, ResiliencePolicy::Fixed(ErasureConfig::new(6, 3)));
+        assert_eq!(cfg.weights.w2_fs, 0.8);
+        assert_eq!(cfg.containers.len(), 2);
+        assert_eq!(cfg.containers[0].fs_capacity, 10 << 30);
+        assert_eq!(cfg.containers[1].site, Site::AwsVirginia);
+    }
+
+    #[test]
+    fn builds_running_deployment() {
+        let cfg = Config::from_json(SAMPLE).unwrap();
+        let ds = cfg.build().unwrap();
+        assert_eq!(ds.registry.len(), 2);
+        assert_eq!(ds.meta.replica_count(), 5);
+        let token = ds.register_user("u").unwrap();
+        assert!(ds.tokens.validate(&token).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(Config::from_json("{\"metadata_replicas\": 2}").is_err());
+        assert!(Config::from_json("{\"gateway_site\": \"mars\"}").is_err());
+        assert!(Config::from_json("{\"policy\": {\"type\": \"erasure\", \"n\": 2, \"k\": 5}}")
+            .is_err());
+        assert!(Config::from_json("{\"engine\": \"cuda\"}").is_err());
+        assert!(Config::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn dynamic_policy_config() {
+        let cfg = Config::from_json(
+            r#"{"policy": {"type": "dynamic", "k": 5, "target_loss": 0.01}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.policy, ResiliencePolicy::Dynamic { k: 5, target_loss: 0.01 });
+    }
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let cfg = Config::from_json("{}").unwrap();
+        assert_eq!(cfg.policy, ResiliencePolicy::Fixed(ErasureConfig::new(10, 7)));
+        assert_eq!(cfg.metadata_replicas, 3);
+    }
+}

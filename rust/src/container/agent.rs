@@ -1,0 +1,166 @@
+//! Container deployment agent (paper §III-A: "administrators deploy data
+//! containers by installing the DynoStore agent and providing a
+//! configuration file"). Models the Fig. 3 experiment: deployment time
+//! of a varying number of containers across bare-metal instances.
+
+use std::sync::Arc;
+
+use crate::container::{DataContainer, SimBackend};
+use crate::sim::{DeviceKind, Site};
+
+/// What an administrator's configuration file specifies per container.
+#[derive(Debug, Clone)]
+pub struct AgentSpec {
+    pub name: String,
+    pub site: Site,
+    pub device: DeviceKind,
+    pub mem_capacity: u64,
+    pub fs_capacity: u64,
+    pub annual_failure_rate: f64,
+}
+
+impl AgentSpec {
+    pub fn new(name: impl Into<String>, site: Site, device: DeviceKind) -> Self {
+        AgentSpec {
+            name: name.into(),
+            site,
+            device,
+            mem_capacity: 256 << 20,  // 256 MiB cache
+            fs_capacity: 1 << 40,     // 1 TiB (Table I Chameleon nodes)
+            annual_failure_rate: 0.05,
+        }
+    }
+
+    pub fn mem(mut self, bytes: u64) -> Self {
+        self.mem_capacity = bytes;
+        self
+    }
+
+    pub fn fs(mut self, bytes: u64) -> Self {
+        self.fs_capacity = bytes;
+        self
+    }
+
+    pub fn afr(mut self, rate: f64) -> Self {
+        self.annual_failure_rate = rate;
+        self
+    }
+}
+
+/// Deployment cost model, calibrated to Fig. 3: ~6 s to deploy 10
+/// containers over 10 hosts, growing roughly linearly to ~40 s at 100
+/// (agent install amortized per host, per-container registration serial
+/// per host).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployReport {
+    pub containers: Vec<Arc<DataContainer>>,
+    /// Total simulated deployment seconds (all hosts in parallel).
+    pub deploy_s: f64,
+}
+
+/// Per-host one-time agent install (image pull + service start);
+/// hosts install in parallel.
+const AGENT_INSTALL_S: f64 = 3.2;
+/// Per-container configuration + registration round. Registration is
+/// serialized through the central registry (a Paxos write per
+/// container), so it scales with the TOTAL container count — the
+/// linear growth of Fig. 3.
+const PER_CONTAINER_S: f64 = 0.38;
+
+/// Deploy `specs` across `hosts` instances (containers assigned round
+/// robin, mirroring the Fig. 3 setup of equal containers per instance).
+pub fn deploy_containers(specs: &[AgentSpec], hosts: usize, first_id: u32) -> DeployReport {
+    let hosts = hosts.max(1);
+    let containers: Vec<Arc<DataContainer>> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            DataContainer::with_afr(
+                first_id + i as u32,
+                spec.name.clone(),
+                spec.site,
+                spec.mem_capacity,
+                Box::new(SimBackend::new(spec.device, spec.fs_capacity)),
+                spec.annual_failure_rate,
+            )
+        })
+        .collect();
+    let _ = hosts; // agent installs run in parallel across hosts
+    let deploy_s = if specs.is_empty() {
+        0.0
+    } else {
+        AGENT_INSTALL_S + specs.len() as f64 * PER_CONTAINER_S
+    };
+    DeployReport { containers, deploy_s }
+}
+
+impl std::fmt::Debug for DataContainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DataContainer")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("site", &self.site)
+            .field("alive", &self.is_alive())
+            .finish()
+    }
+}
+
+impl PartialEq for DataContainer {
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(n: usize) -> Vec<AgentSpec> {
+        (0..n)
+            .map(|i| {
+                AgentSpec::new(format!("dc{i}"), Site::ChameleonTacc, DeviceKind::ChameleonLocal)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn deployment_time_grows_with_container_count() {
+        // Fig. 3 shape: more containers → longer deployment.
+        let t10 = deploy_containers(&specs(10), 10, 0).deploy_s;
+        let t50 = deploy_containers(&specs(50), 10, 0).deploy_s;
+        let t100 = deploy_containers(&specs(100), 10, 0).deploy_s;
+        assert!(t10 < t50 && t50 < t100, "{t10} {t50} {t100}");
+        // Rough calibration: 10 containers in single-digit seconds,
+        // 100 containers well under a minute.
+        assert!((3.0..10.0).contains(&t10), "t10={t10}");
+        assert!((20.0..60.0).contains(&t100), "t100={t100}");
+    }
+
+    #[test]
+    fn containers_are_usable_after_deploy() {
+        let report = deploy_containers(&specs(4), 2, 100);
+        assert_eq!(report.containers.len(), 4);
+        for (i, c) in report.containers.iter().enumerate() {
+            assert_eq!(c.id, 100 + i as u32);
+            c.put("probe", b"ok").unwrap();
+            assert_eq!(c.get("probe").unwrap().data.unwrap(), b"ok");
+        }
+    }
+
+    #[test]
+    fn empty_deploy_is_free() {
+        let r = deploy_containers(&[], 10, 0);
+        assert_eq!(r.deploy_s, 0.0);
+        assert!(r.containers.is_empty());
+    }
+
+    #[test]
+    fn registration_is_serialized_through_registry() {
+        // Host count does not change deployment time: the per-container
+        // registry write is the serial bottleneck (Fig. 3's x-axis).
+        let s = specs(40);
+        let few = deploy_containers(&s, 2, 0).deploy_s;
+        let many = deploy_containers(&s, 10, 0).deploy_s;
+        assert_eq!(many, few);
+    }
+}

@@ -1,0 +1,333 @@
+//! Storage backend trait + implementations.
+//!
+//! The backend is what a data container *wraps* — the Ceph/HDFS/NFS/S3
+//! system of paper §III-A. The container layer above adds caching,
+//! monitoring, and the standardized interface.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::sim::{Device, DeviceKind};
+use crate::{Error, Result};
+
+/// Capacity statistics feeding the utilization-factor placement metric
+/// (paper Eq. 1): totals and availables for memory and filesystem.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendStats {
+    pub fs_total: u64,
+    pub fs_avail: u64,
+}
+
+/// Object storage backend: key → bytes. Implementations must be
+/// thread-safe; costs are returned as simulated seconds.
+pub trait Backend: Send + Sync {
+    /// Store an object; returns simulated device seconds.
+    fn put(&self, key: &str, data: &[u8]) -> Result<f64>;
+    /// Fetch an object; returns (bytes, simulated seconds).
+    fn get(&self, key: &str) -> Result<(Vec<u8>, f64)>;
+    fn delete(&self, key: &str) -> Result<f64>;
+    fn exists(&self, key: &str) -> bool;
+    fn list(&self) -> Vec<String>;
+    fn stats(&self) -> BackendStats;
+    fn device(&self) -> Device;
+}
+
+/// Pure in-memory backend (Redis-like node storage, unit tests).
+pub struct MemBackend {
+    device: Device,
+    capacity: u64,
+    data: Mutex<BTreeMap<String, Vec<u8>>>,
+}
+
+impl MemBackend {
+    pub fn new(capacity: u64) -> Self {
+        MemBackend {
+            device: Device::new(DeviceKind::Memory),
+            capacity,
+            data: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn used(map: &BTreeMap<String, Vec<u8>>) -> u64 {
+        map.values().map(|v| v.len() as u64).sum()
+    }
+}
+
+impl Backend for MemBackend {
+    fn put(&self, key: &str, data: &[u8]) -> Result<f64> {
+        let mut map = self.data.lock().unwrap();
+        let replaced = map.get(key).map_or(0, |v| v.len() as u64);
+        let used = Self::used(&map) - replaced;
+        if used + data.len() as u64 > self.capacity {
+            return Err(Error::Container(format!(
+                "capacity exceeded: {} + {} > {}",
+                used,
+                data.len(),
+                self.capacity
+            )));
+        }
+        map.insert(key.to_string(), data.to_vec());
+        Ok(self.device.write_s(data.len() as u64))
+    }
+
+    fn get(&self, key: &str) -> Result<(Vec<u8>, f64)> {
+        let map = self.data.lock().unwrap();
+        let v = map.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        Ok((v.clone(), self.device.read_s(v.len() as u64)))
+    }
+
+    fn delete(&self, key: &str) -> Result<f64> {
+        let mut map = self.data.lock().unwrap();
+        map.remove(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        Ok(self.device.lat_s)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.data.lock().unwrap().contains_key(key)
+    }
+
+    fn list(&self) -> Vec<String> {
+        self.data.lock().unwrap().keys().cloned().collect()
+    }
+
+    fn stats(&self) -> BackendStats {
+        let map = self.data.lock().unwrap();
+        let used = Self::used(&map);
+        BackendStats { fs_total: self.capacity, fs_avail: self.capacity.saturating_sub(used) }
+    }
+
+    fn device(&self) -> Device {
+        self.device
+    }
+}
+
+/// Real-directory backend: what an administrator deploys over NFS or any
+/// POSIX mount (paper §III-A: "one on NFS only needs a directory path").
+/// Keys are percent-encoded into file names.
+pub struct FsBackend {
+    root: PathBuf,
+    device: Device,
+    capacity: u64,
+}
+
+impl FsBackend {
+    pub fn new(root: impl Into<PathBuf>, capacity: u64) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(FsBackend { root, device: Device::new(DeviceKind::ChameleonLocal), capacity })
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        // Encode anything non-alphanumeric so nested keys stay flat.
+        let mut name = String::with_capacity(key.len());
+        for c in key.chars() {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '.' {
+                name.push(c);
+            } else {
+                name.push_str(&format!("_{:02x}", c as u32));
+            }
+        }
+        self.root.join(name)
+    }
+
+    fn used(&self) -> u64 {
+        std::fs::read_dir(&self.root)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.metadata().ok())
+                    .map(|m| m.len())
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+}
+
+impl Backend for FsBackend {
+    fn put(&self, key: &str, data: &[u8]) -> Result<f64> {
+        if self.used() + data.len() as u64 > self.capacity {
+            return Err(Error::Container("fs capacity exceeded".into()));
+        }
+        std::fs::write(self.path_for(key), data)?;
+        Ok(self.device.write_s(data.len() as u64))
+    }
+
+    fn get(&self, key: &str) -> Result<(Vec<u8>, f64)> {
+        let data = std::fs::read(self.path_for(key))
+            .map_err(|_| Error::NotFound(key.to_string()))?;
+        let cost = self.device.read_s(data.len() as u64);
+        Ok((data, cost))
+    }
+
+    fn delete(&self, key: &str) -> Result<f64> {
+        std::fs::remove_file(self.path_for(key))
+            .map_err(|_| Error::NotFound(key.to_string()))?;
+        Ok(self.device.lat_s)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.path_for(key).exists()
+    }
+
+    fn list(&self) -> Vec<String> {
+        // Listing returns encoded names; adequate for GC sweeps.
+        std::fs::read_dir(&self.root)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().into_string().ok())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            fs_total: self.capacity,
+            fs_avail: self.capacity.saturating_sub(self.used()),
+        }
+    }
+
+    fn device(&self) -> Device {
+        self.device
+    }
+}
+
+/// Simulated heterogeneous backend: real in-memory data plane with the
+/// capacity limits and service-time model of a specific device class
+/// (EBS-HDD / EBS-SSD / FSx-Lustre / S3 / Chameleon node). Stands in for
+/// the storage systems of the paper's testbed.
+pub struct SimBackend {
+    device: Device,
+    capacity: u64,
+    data: Mutex<BTreeMap<String, Vec<u8>>>,
+}
+
+impl SimBackend {
+    pub fn new(kind: DeviceKind, capacity: u64) -> Self {
+        SimBackend { device: Device::new(kind), capacity, data: Mutex::new(BTreeMap::new()) }
+    }
+}
+
+impl Backend for SimBackend {
+    fn put(&self, key: &str, data: &[u8]) -> Result<f64> {
+        let mut map = self.data.lock().unwrap();
+        let replaced = map.get(key).map_or(0, |v| v.len() as u64);
+        let used: u64 = map.values().map(|v| v.len() as u64).sum::<u64>() - replaced;
+        if used + data.len() as u64 > self.capacity {
+            return Err(Error::Container("sim capacity exceeded".into()));
+        }
+        map.insert(key.to_string(), data.to_vec());
+        Ok(self.device.write_s(data.len() as u64))
+    }
+
+    fn get(&self, key: &str) -> Result<(Vec<u8>, f64)> {
+        let map = self.data.lock().unwrap();
+        let v = map.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        Ok((v.clone(), self.device.read_s(v.len() as u64)))
+    }
+
+    fn delete(&self, key: &str) -> Result<f64> {
+        self.data
+            .lock()
+            .unwrap()
+            .remove(key)
+            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        Ok(self.device.lat_s)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.data.lock().unwrap().contains_key(key)
+    }
+
+    fn list(&self) -> Vec<String> {
+        self.data.lock().unwrap().keys().cloned().collect()
+    }
+
+    fn stats(&self) -> BackendStats {
+        let map = self.data.lock().unwrap();
+        let used: u64 = map.values().map(|v| v.len() as u64).sum();
+        BackendStats { fs_total: self.capacity, fs_avail: self.capacity.saturating_sub(used) }
+    }
+
+    fn device(&self) -> Device {
+        self.device
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(b: &dyn Backend) {
+        assert!(!b.exists("k"));
+        let cost = b.put("k", b"hello").unwrap();
+        assert!(cost > 0.0);
+        assert!(b.exists("k"));
+        let (data, rcost) = b.get("k").unwrap();
+        assert_eq!(data, b"hello");
+        assert!(rcost > 0.0);
+        assert_eq!(b.list().len(), 1);
+        b.delete("k").unwrap();
+        assert!(!b.exists("k"));
+        assert!(matches!(b.get("k"), Err(Error::NotFound(_))));
+        assert!(matches!(b.delete("k"), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn mem_backend_basic_ops() {
+        exercise(&MemBackend::new(1 << 20));
+    }
+
+    #[test]
+    fn sim_backend_basic_ops() {
+        exercise(&SimBackend::new(DeviceKind::EbsSsd, 1 << 20));
+    }
+
+    #[test]
+    fn fs_backend_basic_ops() {
+        let dir = std::env::temp_dir().join(format!("dynostore-test-{}", std::process::id()));
+        let b = FsBackend::new(&dir, 1 << 20).unwrap();
+        exercise(&b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fs_backend_encodes_nested_keys() {
+        let dir =
+            std::env::temp_dir().join(format!("dynostore-test-nest-{}", std::process::id()));
+        let b = FsBackend::new(&dir, 1 << 20).unwrap();
+        b.put("a/b/c:1", b"x").unwrap();
+        assert!(b.exists("a/b/c:1"));
+        assert_eq!(b.get("a/b/c:1").unwrap().0, b"x");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let b = MemBackend::new(10);
+        assert!(b.put("a", &[0u8; 8]).is_ok());
+        assert!(matches!(b.put("b", &[0u8; 8]), Err(Error::Container(_))));
+        // Replacing the same key does not double-count.
+        assert!(b.put("a", &[0u8; 10]).is_ok());
+    }
+
+    #[test]
+    fn stats_track_usage() {
+        let b = SimBackend::new(DeviceKind::EbsHdd, 100);
+        assert_eq!(b.stats().fs_avail, 100);
+        b.put("a", &[0u8; 30]).unwrap();
+        assert_eq!(b.stats().fs_avail, 70);
+        b.delete("a").unwrap();
+        assert_eq!(b.stats().fs_avail, 100);
+    }
+
+    #[test]
+    fn device_kind_affects_cost() {
+        let ssd = SimBackend::new(DeviceKind::EbsSsd, 1 << 30);
+        let hdd = SimBackend::new(DeviceKind::EbsHdd, 1 << 30);
+        let payload = vec![0u8; 10 << 20];
+        let c_ssd = ssd.put("k", &payload).unwrap();
+        let c_hdd = hdd.put("k", &payload).unwrap();
+        assert!(c_hdd > c_ssd, "hdd {c_hdd} vs ssd {c_ssd}");
+    }
+}

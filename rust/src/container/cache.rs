@@ -1,0 +1,186 @@
+//! The data container's LRU caching layer (paper §III-A): new objects
+//! are written to memory AND the local storage system (write-through, so
+//! nothing is lost if the container fails); objects exceeding the
+//! available memory go straight to the filesystem; reads hit memory
+//! first, reducing interactions with the underlying storage system.
+
+use std::collections::HashMap;
+
+/// Doubly-linked-list-free LRU: a HashMap plus a monotonically increasing
+/// use-stamp; eviction scans for the minimum stamp. Entry counts here are
+//  modest (object chunks), so O(n) eviction is fine and keeps it simple.
+pub struct LruCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    tick: u64,
+    entries: HashMap<String, (Vec<u8>, u64)>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl LruCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        LruCache {
+            capacity_bytes,
+            used_bytes: 0,
+            tick: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn available(&self) -> u64 {
+        self.capacity_bytes - self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert (write-through companion). Objects larger than total
+    /// capacity are not cached at all (paper: "objects exceeding the
+    /// available memory size are written directly to the filesystem").
+    /// Returns true if cached.
+    pub fn put(&mut self, key: &str, data: &[u8]) -> bool {
+        let size = data.len() as u64;
+        if size > self.capacity_bytes {
+            return false;
+        }
+        self.remove(key);
+        while self.used_bytes + size > self.capacity_bytes {
+            if !self.evict_one() {
+                return false;
+            }
+        }
+        self.tick += 1;
+        self.entries.insert(key.to_string(), (data.to_vec(), self.tick));
+        self.used_bytes += size;
+        true
+    }
+
+    /// Look up; refreshes recency on hit.
+    pub fn get(&mut self, key: &str) -> Option<Vec<u8>> {
+        self.tick += 1;
+        match self.entries.get_mut(key) {
+            Some((data, stamp)) => {
+                *stamp = self.tick;
+                self.hits += 1;
+                Some(data.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn remove(&mut self, key: &str) -> bool {
+        if let Some((data, _)) = self.entries.remove(key) {
+            self.used_bytes -= data.len() as u64;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn evict_one(&mut self) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .min_by_key(|(_, (_, stamp))| *stamp)
+            .map(|(k, _)| k.clone());
+        match victim {
+            Some(k) => {
+                self.remove(&k);
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_put_get() {
+        let mut c = LruCache::new(100);
+        assert!(c.put("a", &[1u8; 10]));
+        assert_eq!(c.get("a").unwrap(), vec![1u8; 10]);
+        assert_eq!(c.hits, 1);
+        assert!(c.get("b").is_none());
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(30);
+        c.put("a", &[0u8; 10]);
+        c.put("b", &[0u8; 10]);
+        c.put("c", &[0u8; 10]);
+        // Touch "a" so "b" is now LRU.
+        c.get("a");
+        c.put("d", &[0u8; 10]);
+        assert!(c.contains("a"));
+        assert!(!c.contains("b"), "b was LRU and must be evicted");
+        assert!(c.contains("c") && c.contains("d"));
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_objects_bypass_cache() {
+        let mut c = LruCache::new(10);
+        assert!(!c.put("big", &[0u8; 11]));
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn replacement_updates_size() {
+        let mut c = LruCache::new(100);
+        c.put("a", &[0u8; 60]);
+        c.put("a", &[0u8; 10]);
+        assert_eq!(c.used(), 10);
+        assert!(c.put("b", &[0u8; 80]));
+    }
+
+    #[test]
+    fn eviction_makes_room_for_large_entry() {
+        let mut c = LruCache::new(100);
+        c.put("a", &[0u8; 40]);
+        c.put("b", &[0u8; 40]);
+        assert!(c.put("big", &[0u8; 90]));
+        assert_eq!(c.len(), 1);
+        assert!(c.contains("big"));
+        assert_eq!(c.evictions, 2);
+    }
+
+    #[test]
+    fn remove_frees_space() {
+        let mut c = LruCache::new(50);
+        c.put("a", &[0u8; 50]);
+        assert!(c.remove("a"));
+        assert!(!c.remove("a"));
+        assert_eq!(c.available(), 50);
+    }
+}

@@ -1,0 +1,278 @@
+//! The data container proper: backend + LRU cache + monitor + identity.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::container::{Backend, BackendStats, LruCache};
+use crate::sim::Site;
+use crate::{Error, Result};
+
+/// Stable identifier of a container in the registry.
+pub type ContainerId = u32;
+
+/// Registry-facing snapshot used by placement (Eq. 1 inputs) and the
+/// health service.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerInfo {
+    pub id: ContainerId,
+    pub name: String,
+    pub site: Site,
+    pub alive: bool,
+    pub mem_total: u64,
+    pub mem_avail: u64,
+    pub fs_total: u64,
+    pub fs_avail: u64,
+    /// Annual failure rate (for the §VI-D dynamic resilience policy).
+    pub annual_failure_rate: f64,
+}
+
+/// Result of a container data operation: payload (for gets) plus the
+/// simulated seconds the operation took on the container side.
+#[derive(Debug, Clone)]
+pub struct OpOutcome {
+    pub data: Option<Vec<u8>>,
+    pub sim_s: f64,
+    pub cache_hit: bool,
+}
+
+/// A deployed data container (paper §III-A): standardized interface,
+/// monitor, caching layer, over an arbitrary [`Backend`].
+pub struct DataContainer {
+    pub id: ContainerId,
+    pub name: String,
+    pub site: Site,
+    backend: Box<dyn Backend>,
+    cache: Mutex<LruCache>,
+    alive: AtomicBool,
+    /// Annual failure rate used by the dynamic resilience policy.
+    pub annual_failure_rate: f64,
+    ops: Mutex<OpCounters>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct OpCounters {
+    puts: u64,
+    gets: u64,
+    deletes: u64,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+impl DataContainer {
+    pub fn new(
+        id: ContainerId,
+        name: impl Into<String>,
+        site: Site,
+        mem_capacity: u64,
+        backend: Box<dyn Backend>,
+    ) -> Arc<Self> {
+        Arc::new(DataContainer {
+            id,
+            name: name.into(),
+            site,
+            backend,
+            cache: Mutex::new(LruCache::new(mem_capacity)),
+            alive: AtomicBool::new(true),
+            annual_failure_rate: 0.0,
+            ops: Mutex::new(OpCounters::default()),
+        })
+    }
+
+    /// Builder-style AFR assignment (used by the failure experiments).
+    pub fn with_afr(
+        id: ContainerId,
+        name: impl Into<String>,
+        site: Site,
+        mem_capacity: u64,
+        backend: Box<dyn Backend>,
+        afr: f64,
+    ) -> Arc<Self> {
+        Arc::new(DataContainer {
+            id,
+            name: name.into(),
+            site,
+            backend,
+            cache: Mutex::new(LruCache::new(mem_capacity)),
+            alive: AtomicBool::new(true),
+            annual_failure_rate: afr,
+            ops: Mutex::new(OpCounters::default()),
+        })
+    }
+
+    /// Health monitor state (§III-B health-check service flips this).
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Simulate failure / recovery of this container.
+    pub fn set_alive(&self, alive: bool) {
+        self.alive.store(alive, Ordering::SeqCst);
+    }
+
+    fn check_alive(&self) -> Result<()> {
+        if self.is_alive() {
+            Ok(())
+        } else {
+            Err(Error::Unavailable(format!("container {} is down", self.name)))
+        }
+    }
+
+    /// Store an object (write-through: memory cache + backend, §III-A).
+    ///
+    /// Simulated service time: when the object fits the caching layer,
+    /// the container acknowledges after the MEMORY write (the paper's
+    /// "written into memory and the local storage system" — the fs copy
+    /// is the durability backstop, flushed off the ack path). Objects
+    /// exceeding the memory size pay the device directly.
+    pub fn put(&self, key: &str, data: &[u8]) -> Result<OpOutcome> {
+        self.check_alive()?;
+        let backend_s = self.backend.put(key, data)?;
+        let cached = self.cache.lock().unwrap().put(key, data);
+        let sim_s = if cached {
+            crate::sim::Device::new(crate::sim::DeviceKind::Memory).write_s(data.len() as u64)
+        } else {
+            backend_s
+        };
+        let mut ops = self.ops.lock().unwrap();
+        ops.puts += 1;
+        ops.bytes_in += data.len() as u64;
+        Ok(OpOutcome { data: None, sim_s, cache_hit: cached })
+    }
+
+    /// Fetch an object; memory first, then the backend (re-populating
+    /// the cache on miss).
+    pub fn get(&self, key: &str) -> Result<OpOutcome> {
+        self.check_alive()?;
+        if let Some(data) = self.cache.lock().unwrap().get(key) {
+            let mut ops = self.ops.lock().unwrap();
+            ops.gets += 1;
+            ops.bytes_out += data.len() as u64;
+            // Memory service time.
+            let sim_s = crate::sim::Device::new(crate::sim::DeviceKind::Memory)
+                .read_s(data.len() as u64);
+            return Ok(OpOutcome { data: Some(data), sim_s, cache_hit: true });
+        }
+        let (data, backend_s) = self.backend.get(key)?;
+        self.cache.lock().unwrap().put(key, &data);
+        let mut ops = self.ops.lock().unwrap();
+        ops.gets += 1;
+        ops.bytes_out += data.len() as u64;
+        Ok(OpOutcome { data: Some(data), sim_s: backend_s, cache_hit: false })
+    }
+
+    pub fn delete(&self, key: &str) -> Result<OpOutcome> {
+        self.check_alive()?;
+        self.cache.lock().unwrap().remove(key);
+        let sim_s = self.backend.delete(key)?;
+        self.ops.lock().unwrap().deletes += 1;
+        Ok(OpOutcome { data: None, sim_s, cache_hit: false })
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        self.is_alive() && (self.cache.lock().unwrap().contains(key) || self.backend.exists(key))
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        self.backend.list()
+    }
+
+    pub fn backend_stats(&self) -> BackendStats {
+        self.backend.stats()
+    }
+
+    /// Monitor snapshot for the registry / placement service.
+    pub fn info(&self) -> ContainerInfo {
+        let stats = self.backend.stats();
+        let cache = self.cache.lock().unwrap();
+        ContainerInfo {
+            id: self.id,
+            name: self.name.clone(),
+            site: self.site,
+            alive: self.is_alive(),
+            mem_total: cache.capacity(),
+            mem_avail: cache.available(),
+            fs_total: stats.fs_total,
+            fs_avail: stats.fs_avail,
+            annual_failure_rate: self.annual_failure_rate,
+        }
+    }
+
+    /// (hits, misses) of the caching layer — §VI cache effectiveness.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.hits, c.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::MemBackend;
+    use crate::sim::Site;
+
+    fn container() -> Arc<DataContainer> {
+        DataContainer::new(
+            1,
+            "dc-test",
+            Site::ChameleonTacc,
+            1024,
+            Box::new(MemBackend::new(1 << 20)),
+        )
+    }
+
+    #[test]
+    fn put_get_roundtrip_with_cache_hit() {
+        let c = container();
+        c.put("obj", b"payload").unwrap();
+        let out = c.get("obj").unwrap();
+        assert_eq!(out.data.unwrap(), b"payload");
+        assert!(out.cache_hit, "write-through means first read hits memory");
+    }
+
+    #[test]
+    fn cache_miss_falls_through_to_backend() {
+        let c = DataContainer::new(
+            2,
+            "dc-small-cache",
+            Site::ChameleonUc,
+            4, // cache too small for the object
+            Box::new(MemBackend::new(1 << 20)),
+        );
+        c.put("obj", b"0123456789").unwrap();
+        let out = c.get("obj").unwrap();
+        assert_eq!(out.data.unwrap(), b"0123456789");
+        assert!(!out.cache_hit);
+    }
+
+    #[test]
+    fn dead_container_rejects_operations() {
+        let c = container();
+        c.put("obj", b"x").unwrap();
+        c.set_alive(false);
+        assert!(matches!(c.put("o2", b"y"), Err(Error::Unavailable(_))));
+        assert!(matches!(c.get("obj"), Err(Error::Unavailable(_))));
+        assert!(!c.exists("obj"));
+        c.set_alive(true);
+        assert!(c.exists("obj"));
+    }
+
+    #[test]
+    fn info_reflects_usage() {
+        let c = container();
+        let before = c.info();
+        c.put("obj", &[0u8; 100]).unwrap();
+        let after = c.info();
+        assert_eq!(before.fs_avail - after.fs_avail, 100);
+        assert!(after.mem_avail < before.mem_avail);
+        assert!(after.alive);
+    }
+
+    #[test]
+    fn delete_removes_everywhere() {
+        let c = container();
+        c.put("obj", b"x").unwrap();
+        c.delete("obj").unwrap();
+        assert!(!c.exists("obj"));
+        assert!(matches!(c.get("obj"), Err(Error::NotFound(_))));
+    }
+}

@@ -1,0 +1,22 @@
+//! Data containers — the paper's foundational abstraction (§III-A).
+//!
+//! A data container is a middleware agent deployed next to an arbitrary
+//! storage backend. It exposes a standardized object interface (put/get/
+//! delete/exists/list), an LRU caching layer in front of the backend, a
+//! health monitor, and capacity statistics that feed the utilization-
+//! factor load balancer.
+//!
+//! Backends: [`MemBackend`] (RAM), [`FsBackend`] (a real directory —
+//! what an NFS/POSIX deployment uses), and [`SimBackend`] (capacity +
+//! device-model simulation of the HDFS/Ceph/EBS/Lustre/S3 systems in the
+//! paper's testbed; see DESIGN.md §3 on substitutions).
+
+mod agent;
+mod backend;
+mod cache;
+mod datacontainer;
+
+pub use agent::{deploy_containers, AgentSpec, DeployReport};
+pub use backend::{Backend, BackendStats, FsBackend, MemBackend, SimBackend};
+pub use cache::LruCache;
+pub use datacontainer::{ContainerId, ContainerInfo, DataContainer, OpOutcome};

@@ -1,0 +1,266 @@
+//! The DynoStore coordinator: wires gateway-side services (auth,
+//! metadata/Paxos, registry, health, placement, policies) over the data
+//! containers into the system of paper Fig. 1.
+//!
+//! Operations return *reports* carrying both the result and the
+//! simulated wide-area time of the operation (see `crate::sim` on why
+//! time is simulated while the data plane is real).
+
+mod ops;
+mod reports;
+
+pub use ops::{OpContext, PullOpts, PushOpts};
+pub use reports::{PullReport, PushReport, RepairReport};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::container::DataContainer;
+use crate::crypto::TokenService;
+use crate::erasure::{Codec, ErasureConfig, GfBackend, PureRustBackend};
+use crate::paxos::{MetaCommand, ReplicatedMeta};
+use crate::placement::{Placer, Weights};
+use crate::policy::ResiliencePolicy;
+use crate::registry::Registry;
+use crate::runtime::PjrtGfBackend;
+use crate::sim::{Site, Wan};
+use crate::{Error, Result};
+
+/// Which GF(2^8) engine drives the erasure hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GfEngine {
+    /// Table-driven pure rust (always available).
+    PureRust,
+    /// The AOT-compiled Pallas kernel via PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+/// Runtime counters (the §III-B "metrics" the gateway exposes).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub pushes: AtomicU64,
+    pub pulls: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub repairs: AtomicU64,
+    pub auth_failures: AtomicU64,
+    pub gc_collected: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> HashMap<&'static str, u64> {
+        let mut m = HashMap::new();
+        m.insert("pushes", self.pushes.load(Ordering::Relaxed));
+        m.insert("pulls", self.pulls.load(Ordering::Relaxed));
+        m.insert("bytes_in", self.bytes_in.load(Ordering::Relaxed));
+        m.insert("bytes_out", self.bytes_out.load(Ordering::Relaxed));
+        m.insert("repairs", self.repairs.load(Ordering::Relaxed));
+        m.insert("auth_failures", self.auth_failures.load(Ordering::Relaxed));
+        m.insert("gc_collected", self.gc_collected.load(Ordering::Relaxed));
+        m
+    }
+}
+
+/// The assembled DynoStore deployment.
+pub struct DynoStore {
+    pub registry: Registry,
+    pub meta: Arc<ReplicatedMeta>,
+    pub tokens: TokenService,
+    pub placer: Placer,
+    pub wan: Wan,
+    /// Where the management services run (Table I "Metadata" node).
+    pub gateway_site: Site,
+    pub default_policy: ResiliencePolicy,
+    pub metrics: Metrics,
+    engine: GfEngine,
+    codecs: Mutex<HashMap<ErasureConfig, Arc<Codec<Arc<dyn GfBackend>>>>>,
+    backend: Arc<dyn GfBackend>,
+}
+
+/// Builder for a DynoStore deployment.
+pub struct Builder {
+    replicas: usize,
+    seed: u64,
+    gateway_site: Site,
+    weights: Weights,
+    policy: ResiliencePolicy,
+    engine: GfEngine,
+    wan: Wan,
+    secret: Vec<u8>,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Builder {
+            replicas: 3,
+            seed: 0xD1_5705,
+            gateway_site: Site::ChameleonUc,
+            weights: Weights::default(),
+            policy: ResiliencePolicy::Fixed(ErasureConfig::new(10, 7)),
+            engine: GfEngine::PureRust,
+            wan: Wan::paper_testbed(),
+            secret: b"dynostore-dev-secret".to_vec(),
+        }
+    }
+}
+
+impl Builder {
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn gateway_site(mut self, site: Site) -> Self {
+        self.gateway_site = site;
+        self
+    }
+
+    pub fn weights(mut self, w: Weights) -> Self {
+        self.weights = w;
+        self
+    }
+
+    pub fn policy(mut self, p: ResiliencePolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn engine(mut self, e: GfEngine) -> Self {
+        self.engine = e;
+        self
+    }
+
+    pub fn wan(mut self, wan: Wan) -> Self {
+        self.wan = wan;
+        self
+    }
+
+    pub fn secret(mut self, s: &[u8]) -> Self {
+        self.secret = s.to_vec();
+        self
+    }
+
+    pub fn build(self) -> DynoStore {
+        let backend: Arc<dyn GfBackend> = match self.engine {
+            GfEngine::PureRust => Arc::new(PureRustBackend),
+            GfEngine::Pjrt => Arc::new(PjrtGfBackend::global()),
+        };
+        DynoStore {
+            registry: Registry::new(),
+            meta: ReplicatedMeta::new(self.replicas, self.seed),
+            tokens: TokenService::new(&self.secret),
+            placer: Placer::new(self.weights),
+            wan: self.wan,
+            gateway_site: self.gateway_site,
+            default_policy: self.policy,
+            metrics: Metrics::default(),
+            engine: self.engine,
+            codecs: Mutex::new(HashMap::new()),
+            backend,
+        }
+    }
+}
+
+impl DynoStore {
+    pub fn builder() -> Builder {
+        Builder::default()
+    }
+
+    /// Engine selected at build time.
+    pub fn engine(&self) -> GfEngine {
+        self.engine
+    }
+
+    /// Register a container (administrator add, §III-B registry).
+    pub fn add_container(&self, c: Arc<DataContainer>) -> Result<()> {
+        self.registry.add(c)
+    }
+
+    /// Deregister a container.
+    pub fn remove_container(&self, id: u32) -> Result<Arc<DataContainer>> {
+        self.registry.remove(id)
+    }
+
+    /// Create a user namespace and issue the user's OAuth-style token.
+    pub fn register_user(&self, user: &str) -> Result<String> {
+        match self.meta.submit(MetaCommand::CreateNamespace { user: user.into() })? {
+            crate::paxos::CommandOutcome::Failed(e) => Err(Error::Invalid(e)),
+            _ => Ok(self.tokens.issue(user, &["read", "write"], 24 * 3600)),
+        }
+    }
+
+    /// Issue a fresh token for an existing user (login).
+    pub fn login(&self, user: &str) -> String {
+        self.tokens.issue(user, &["read", "write"], 24 * 3600)
+    }
+
+    /// Codec cache: one per (n, k), sharing the selected GF engine.
+    pub(crate) fn codec(&self, cfg: ErasureConfig) -> Result<Arc<Codec<Arc<dyn GfBackend>>>> {
+        let mut cache = self.codecs.lock().unwrap();
+        if let Some(c) = cache.get(&cfg) {
+            return Ok(c.clone());
+        }
+        let codec = Arc::new(Codec::with_backend(cfg, self.backend.clone())?);
+        cache.insert(cfg, codec.clone());
+        Ok(codec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{AgentSpec, deploy_containers};
+    use crate::sim::DeviceKind;
+
+    #[test]
+    fn builder_defaults_match_paper_eval() {
+        let ds = DynoStore::builder().build();
+        assert_eq!(ds.meta.replica_count(), 3);
+        assert_eq!(
+            ds.default_policy,
+            ResiliencePolicy::Fixed(ErasureConfig::new(10, 7))
+        );
+        assert_eq!(ds.engine(), GfEngine::PureRust);
+    }
+
+    #[test]
+    fn register_user_issues_valid_token() {
+        let ds = DynoStore::builder().build();
+        let token = ds.register_user("UserA").unwrap();
+        let claims = ds.tokens.validate(&token).unwrap();
+        assert_eq!(claims.subject, "UserA");
+        assert!(claims.has_scope("write"));
+        // Duplicate registration fails.
+        assert!(ds.register_user("UserA").is_err());
+    }
+
+    #[test]
+    fn container_admin_lifecycle() {
+        let ds = DynoStore::builder().build();
+        let report = deploy_containers(
+            &[AgentSpec::new("dc0", Site::ChameleonTacc, DeviceKind::ChameleonLocal)],
+            1,
+            0,
+        );
+        ds.add_container(report.containers[0].clone()).unwrap();
+        assert_eq!(ds.registry.len(), 1);
+        ds.remove_container(0).unwrap();
+        assert!(ds.registry.is_empty());
+    }
+
+    #[test]
+    fn codec_cache_reuses_instances() {
+        let ds = DynoStore::builder().build();
+        let a = ds.codec(ErasureConfig::new(6, 3)).unwrap();
+        let b = ds.codec(ErasureConfig::new(6, 3)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = ds.codec(ErasureConfig::new(10, 7)).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+}

@@ -1,0 +1,803 @@
+//! Coordinator data operations: push / pull / exists / evict / gc /
+//! repair — the request paths of paper Fig. 1, with Algorithm 1-2
+//! erasure handling and §IV-C placement.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::container::DataContainer;
+use crate::crypto::sha3_256;
+use crate::erasure::{Chunk, ErasureConfig};
+use crate::metadata::{ObjectMeta, ObjectPlacement};
+use crate::paxos::{CommandOutcome, MetaCommand};
+use crate::policy::{select_dynamic, ResiliencePolicy};
+use crate::sim::{cost, Site};
+use crate::util::{now_ns, to_hex, unix_secs};
+use crate::{Error, Result};
+
+use super::reports::{PullReport, PushReport, RepairReport};
+use super::DynoStore;
+
+/// Simulated metadata-commit base cost: two LAN round trips among the
+/// replica group at the gateway site (prepare + accept), plus the real
+/// consensus wallclock measured around `submit`.
+const META_COMMIT_BASE_S: f64 = 0.004;
+
+/// Calibrated gateway coding bandwidth (bytes/s) for *simulated* encode
+/// and decode costs. The paper's Chameleon gateway nodes (96 cores)
+/// stream the GF(2^8) tables at memory-ish speed; 1.2 GB/s is the
+/// single-stream figure our §Perf pass measures for the table codec on
+/// a comparable core. Real wallclock on this host is reported
+/// separately (encode_wall_s / decode_wall_s) and never mixed into
+/// simulated time — simulation results must not depend on the machine
+/// running them.
+const GATEWAY_CODING_BW: f64 = 1.2e9;
+
+/// Request context: where the client is and how many parallel channels
+/// its transfer uses (Fig. 7's thread knob — channels share the client's
+/// WAN link and are modeled by the flow-sharing term in `Wan`).
+#[derive(Debug, Clone, Copy)]
+pub struct OpContext {
+    pub client_site: Site,
+    pub flows: u32,
+}
+
+impl Default for OpContext {
+    fn default() -> Self {
+        OpContext { client_site: Site::Madrid, flows: 1 }
+    }
+}
+
+impl OpContext {
+    pub fn at(site: Site) -> Self {
+        OpContext { client_site: site, flows: 1 }
+    }
+
+    pub fn with_flows(mut self, flows: u32) -> Self {
+        self.flows = flows.max(1);
+        self
+    }
+}
+
+/// Push options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PushOpts {
+    pub ctx: OpContext,
+    /// Override the deployment's default resilience policy.
+    pub policy: Option<ResiliencePolicy>,
+}
+
+/// Pull options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PullOpts {
+    pub ctx: OpContext,
+    /// Pin a specific version (default: latest).
+    pub version: Option<u64>,
+}
+
+/// Container-side key for a whole object.
+fn object_key(sha3: &[u8; 32], len: u64) -> String {
+    format!("obj-{}-{len}", &to_hex(sha3)[..16])
+}
+
+/// Container-side key for one erasure chunk.
+fn chunk_key(sha3: &[u8; 32], len: u64, index: u8) -> String {
+    format!("chk-{}-{len}-{index}", &to_hex(sha3)[..16])
+}
+
+impl DynoStore {
+    /// Upload an object (client `push`). Algorithm 1 under an erasure
+    /// policy; single-container placement under Regular.
+    pub fn push(
+        &self,
+        token: &str,
+        collection: &str,
+        name: &str,
+        data: &[u8],
+        opts: PushOpts,
+    ) -> Result<PushReport> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        if !claims.has_scope("write") {
+            return Err(Error::PermissionDenied("token lacks write scope".into()));
+        }
+        let policy = opts.policy.unwrap_or(self.default_policy);
+        let ctx = opts.ctx;
+        let hash = sha3_256(data);
+        let len = data.len() as u64;
+
+        // Client → gateway ingress over the WAN.
+        let ingress_s =
+            self.wan.transfer_s(ctx.client_site, self.gateway_site, len, ctx.flows);
+
+        let (placement, encode_s, encode_wall_s, disperse_s, stored_bytes) = match policy {
+            ResiliencePolicy::Regular => {
+                let target = self.placer.select_one(&self.registry.infos(), len)?;
+                let container = self.registry.get(target.id)?;
+                let key = object_key(&hash, len);
+                let dev_s = container.put(&key, data)?.sim_s;
+                let net_s =
+                    self.wan.transfer_s(self.gateway_site, container.site, len, 1);
+                (
+                    ObjectPlacement::Single { container: target.id },
+                    0.0,
+                    0.0,
+                    net_s + dev_s,
+                    len,
+                )
+            }
+            ResiliencePolicy::Fixed(cfg) => {
+                self.disperse(data, &hash, cfg, None)?
+            }
+            ResiliencePolicy::Dynamic { k, target_loss } => {
+                let chunk_size = (len / k as u64).max(1);
+                let choice =
+                    select_dynamic(&self.registry.infos(), chunk_size, k, target_loss)?;
+                self.disperse(data, &hash, choice.config, Some(choice.containers))?
+            }
+        };
+
+        // Metadata commit through Paxos (strong consistency, §IV-B).
+        let t0 = now_ns();
+        let outcome = self.meta.submit(MetaCommand::PutObject {
+            caller: claims.subject.clone(),
+            collection: collection.into(),
+            name: name.into(),
+            size: len,
+            sha3: hash,
+            placement,
+            now: unix_secs(),
+        })?;
+        let meta = match outcome {
+            CommandOutcome::Meta(meta) => *meta,
+            CommandOutcome::Failed(e) => return Err(Error::Invalid(e)),
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        let meta_s = META_COMMIT_BASE_S + (now_ns() - t0) as f64 / 1e9;
+
+        self.metrics.pushes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.bytes_in.fetch_add(len, std::sync::atomic::Ordering::Relaxed);
+
+        Ok(PushReport {
+            meta,
+            sim_s: cost::seq(&[ingress_s, encode_s, disperse_s, meta_s]),
+            ingress_s,
+            encode_s,
+            encode_wall_s,
+            disperse_s,
+            meta_s,
+            stored_bytes,
+        })
+    }
+
+    /// Erasure-encode and upload chunks (Algorithm 1 lines 2-10).
+    /// `pinned` fixes the container list (dynamic policy); otherwise the
+    /// UF load balancer picks n containers (line 2).
+    #[allow(clippy::type_complexity)]
+    fn disperse(
+        &self,
+        data: &[u8],
+        hash: &[u8; 32],
+        cfg: ErasureConfig,
+        pinned: Option<Vec<u32>>,
+    ) -> Result<(ObjectPlacement, f64, f64, f64, u64)> {
+        let len = data.len() as u64;
+        let codec = self.codec(cfg)?;
+        let chunk_size = codec.chunk_len(data.len()) as u64;
+
+        let targets: Vec<u32> = match pinned {
+            Some(ids) => ids,
+            None => self
+                .placer
+                .select(&self.registry.infos(), chunk_size, cfg.n)? // line 2
+                .iter()
+                .map(|c| c.id)
+                .collect(),
+        };
+        if targets.len() != cfg.n {
+            return Err(Error::Placement(format!(
+                "need {} containers, got {}", // line 4
+                cfg.n,
+                targets.len()
+            )));
+        }
+
+        // Encode (lines 6-9) — measured for perf telemetry, modeled
+        // (calibrated bandwidth) for simulated time.
+        let t0 = now_ns();
+        let chunks = codec.encode(data)?;
+        let encode_wall_s = (now_ns() - t0) as f64 / 1e9;
+        let encode_s = data.len() as f64 / GATEWAY_CODING_BW;
+
+        // Upload chunk i to container D[i] (line 10). The n transfers
+        // leave the gateway concurrently and share its uplink.
+        let mut times = Vec::with_capacity(cfg.n);
+        let mut stored = 0u64;
+        let mut placed = Vec::with_capacity(cfg.n);
+        for (chunk, &cid) in chunks.iter().zip(&targets) {
+            let container = self.registry.get(cid)?;
+            let key = chunk_key(hash, len, chunk.header.index);
+            let dev_s = container.put(&key, &chunk.packed)?.sim_s;
+            let net_s = self.wan.transfer_s(
+                self.gateway_site,
+                container.site,
+                chunk.wire_len() as u64,
+                cfg.n as u32,
+            );
+            times.push(net_s + dev_s);
+            stored += chunk.wire_len() as u64;
+            placed.push((chunk.header.index, cid));
+        }
+        Ok((
+            ObjectPlacement::Erasure { n: cfg.n, k: cfg.k, chunks: placed },
+            encode_s,
+            encode_wall_s,
+            cost::par(&times),
+            stored,
+        ))
+    }
+
+    /// Download an object (client `pull`). Algorithm 2 under erasure:
+    /// fetch any k chunks, decode, verify the SHA3-256.
+    pub fn pull(
+        &self,
+        token: &str,
+        collection: &str,
+        name: &str,
+        opts: PullOpts,
+    ) -> Result<PullReport> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        let ctx = opts.ctx;
+        let meta = match opts.version {
+            None => self
+                .meta
+                .read(|s| s.get_latest(&claims.subject, collection, name))?,
+            Some(v) => self
+                .meta
+                .read(|s| s.get_version(&claims.subject, collection, name, v))?,
+        };
+
+        let (data, collect_s, decode_s, decode_wall_s, fetched, degraded) = match &meta.placement {
+            ObjectPlacement::Single { container } => {
+                let c = self.registry.get(*container)?;
+                let key = object_key(&meta.sha3, meta.size);
+                let out = c.get(&key)?;
+                let data = out.data.unwrap_or_default();
+                let net_s =
+                    self.wan.transfer_s(c.site, self.gateway_site, meta.size, 1);
+                // Integrity check on the regular path too (§IV-E2).
+                if sha3_256(&data) != meta.sha3 {
+                    return Err(Error::Integrity("object hash mismatch".into()));
+                }
+                (data, net_s + out.sim_s, 0.0, 0.0, 1usize, false)
+            }
+            ObjectPlacement::Erasure { n, k, chunks } => {
+                let cfg = ErasureConfig::new(*n, *k);
+                let codec = self.codec(cfg)?;
+                // Prefer the systematic data chunks (lowest indices);
+                // fall back to parity when a container is down
+                // (Algorithm 2: any k distinct chunks).
+                let mut ordered: Vec<(u8, u32)> = chunks.clone();
+                ordered.sort_by_key(|&(idx, _)| idx);
+                let mut collected: Vec<Chunk> = Vec::with_capacity(*k);
+                let mut times = Vec::with_capacity(*k);
+                let mut degraded = false;
+                for &(idx, cid) in &ordered {
+                    if collected.len() >= *k {
+                        break;
+                    }
+                    let container = match self.registry.get(cid) {
+                        Ok(c) if c.is_alive() => c,
+                        _ => {
+                            degraded = degraded || (idx as usize) < *k;
+                            continue;
+                        }
+                    };
+                    let key = chunk_key(&meta.sha3, meta.size, idx);
+                    match container.get(&key) {
+                        Ok(out) => {
+                            let bytes = out.data.unwrap_or_default();
+                            let net_s = self.wan.transfer_s(
+                                container.site,
+                                self.gateway_site,
+                                bytes.len() as u64,
+                                *k as u32,
+                            );
+                            times.push(net_s + out.sim_s);
+                            collected.push(Chunk::unpack(&bytes)?);
+                        }
+                        Err(_) => {
+                            degraded = degraded || (idx as usize) < *k;
+                            continue;
+                        }
+                    }
+                }
+                if collected.len() < *k {
+                    return Err(Error::Unavailable(format!(
+                        "object {}: only {} of {k} required chunks reachable",
+                        meta.uuid,
+                        collected.len()
+                    )));
+                }
+                let t0 = now_ns();
+                let data = codec.decode(&collected)?; // verifies SHA3
+                let decode_wall_s = (now_ns() - t0) as f64 / 1e9;
+                let decode_s = data.len() as f64 / GATEWAY_CODING_BW;
+                (data, cost::par(&times), decode_s, decode_wall_s, collected.len(), degraded)
+            }
+        };
+
+        let egress_s =
+            self.wan.transfer_s(self.gateway_site, ctx.client_site, meta.size, ctx.flows);
+        self.metrics.pulls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics
+            .bytes_out
+            .fetch_add(meta.size, std::sync::atomic::Ordering::Relaxed);
+
+        Ok(PullReport {
+            sim_s: cost::seq(&[collect_s, decode_s, egress_s]),
+            data,
+            meta,
+            collect_s,
+            decode_s,
+            decode_wall_s,
+            egress_s,
+            chunks_fetched: fetched,
+            degraded,
+        })
+    }
+
+    /// Does the latest version of `(collection, name)` exist (and is it
+    /// visible to the caller)?
+    pub fn exists(&self, token: &str, collection: &str, name: &str) -> Result<bool> {
+        let claims = self.tokens.validate(token)?;
+        match self.meta.read(|s| s.get_latest(&claims.subject, collection, name)) {
+            Ok(_) => Ok(true),
+            Err(Error::NotFound(_)) => Ok(false),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Remove an object and all its versions; deletes chunks from live
+    /// containers (dead ones are swept when GC next sees them).
+    pub fn evict(&self, token: &str, collection: &str, name: &str) -> Result<usize> {
+        let claims = self.tokens.validate(token)?;
+        let outcome = self.meta.submit(MetaCommand::Evict {
+            caller: claims.subject,
+            collection: collection.into(),
+            name: name.into(),
+        })?;
+        let metas = match outcome {
+            CommandOutcome::Evicted(m) => m,
+            CommandOutcome::Failed(e) => return Err(Error::Invalid(e)),
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        let mut deleted = 0;
+        for meta in &metas {
+            deleted += self.delete_stored(meta);
+        }
+        Ok(deleted)
+    }
+
+    /// Garbage-collect superseded versions older than `retention_secs`
+    /// (paper §IV-B, default 30 days). Returns collected version count.
+    pub fn gc(&self, now: u64, retention_secs: u64) -> Result<usize> {
+        let outcome =
+            self.meta.submit(MetaCommand::Gc { now, retention_secs })?;
+        let metas = match outcome {
+            CommandOutcome::Collected(m) => m,
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        for meta in &metas {
+            self.delete_stored(meta);
+        }
+        self.metrics
+            .gc_collected
+            .fetch_add(metas.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(metas.len())
+    }
+
+    fn delete_stored(&self, meta: &ObjectMeta) -> usize {
+        let mut deleted = 0;
+        match &meta.placement {
+            ObjectPlacement::Single { container } => {
+                if let Ok(c) = self.registry.get(*container) {
+                    if c.delete(&object_key(&meta.sha3, meta.size)).is_ok() {
+                        deleted += 1;
+                    }
+                }
+            }
+            ObjectPlacement::Erasure { chunks, .. } => {
+                for &(idx, cid) in chunks {
+                    if let Ok(c) = self.registry.get(cid) {
+                        if c.delete(&chunk_key(&meta.sha3, meta.size, idx)).is_ok() {
+                            deleted += 1;
+                        }
+                    }
+                }
+            }
+        }
+        deleted
+    }
+
+    /// Health-service repair pass (§III-B): for every object version,
+    /// re-disperse chunks lost to dead containers onto healthy ones and
+    /// commit the updated placement. Objects with fewer than k live
+    /// chunks are reported lost.
+    pub fn repair(&self) -> Result<RepairReport> {
+        let mut report = RepairReport::default();
+        let objects = self.meta.read(|s| Ok(s.all_objects()))?;
+        for meta in objects {
+            report.scanned += 1;
+            let (n, k, chunks) = match &meta.placement {
+                ObjectPlacement::Erasure { n, k, chunks } => (*n, *k, chunks.clone()),
+                ObjectPlacement::Single { container } => {
+                    // Regular objects on a dead container are simply lost
+                    // (the paper's motivation for the resilience policy).
+                    if self.registry.get(*container).map(|c| c.is_alive()).unwrap_or(false) {
+                        continue;
+                    }
+                    report.lost += 1;
+                    continue;
+                }
+            };
+            let live: Vec<(u8, u32)> = chunks
+                .iter()
+                .filter(|&&(_, cid)| {
+                    self.registry.get(cid).map(|c| c.is_alive()).unwrap_or(false)
+                })
+                .copied()
+                .collect();
+            if live.len() == chunks.len() {
+                continue; // fully healthy
+            }
+            if live.len() < k {
+                report.lost += 1;
+                continue;
+            }
+            // Reconstruct and re-place the missing chunk indices.
+            let cfg = ErasureConfig::new(n, k);
+            let codec = self.codec(cfg)?;
+            let mut collected = Vec::with_capacity(k);
+            for &(idx, cid) in live.iter().take(k) {
+                let container = self.registry.get(cid)?;
+                let out = container.get(&chunk_key(&meta.sha3, meta.size, idx))?;
+                collected.push(Chunk::unpack(&out.data.unwrap_or_default())?);
+            }
+            let data = codec.decode(&collected)?;
+            let all_chunks = codec.encode(&data)?;
+
+            let live_ids: HashSet<u32> = live.iter().map(|&(_, c)| c).collect();
+            let missing: Vec<u8> = chunks
+                .iter()
+                .filter(|&&(_, cid)| !live_ids.contains(&cid) || false)
+                .filter(|&&(_, cid)| {
+                    !self.registry.get(cid).map(|c| c.is_alive()).unwrap_or(false)
+                })
+                .map(|&(idx, _)| idx)
+                .collect();
+
+            // Healthy containers not already holding a chunk of this
+            // object, ranked by the load balancer.
+            let infos: Vec<_> = self
+                .registry
+                .infos()
+                .into_iter()
+                .filter(|i| i.alive && !live_ids.contains(&i.id))
+                .collect();
+            let chunk_size = codec.chunk_len(data.len()) as u64;
+            let replacements = self.placer.select(&infos, chunk_size, missing.len())?;
+
+            let mut new_placement = live.clone();
+            for (idx, target) in missing.iter().zip(&replacements) {
+                let container = self.registry.get(target.id)?;
+                let chunk = &all_chunks[*idx as usize];
+                container.put(&chunk_key(&meta.sha3, meta.size, *idx), &chunk.packed)?;
+                new_placement.push((*idx, target.id));
+                report.chunks_moved += 1;
+            }
+            new_placement.sort_by_key(|&(idx, _)| idx);
+            let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+                uuid: meta.uuid.clone(),
+                placement: ObjectPlacement::Erasure { n, k, chunks: new_placement },
+            })?;
+            if let CommandOutcome::Failed(e) = outcome {
+                return Err(Error::Consensus(e));
+            }
+            report.repaired += 1;
+            self.metrics.repairs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        Ok(report)
+    }
+
+    /// Direct container access for a chunk (tests, FaaS workers reading
+    /// near data).
+    pub fn container_of(&self, id: u32) -> Result<Arc<DataContainer>> {
+        self.registry.get(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{deploy_containers, AgentSpec};
+    use crate::sim::DeviceKind;
+
+    fn deployment(n_containers: usize) -> (DynoStore, String) {
+        let ds = DynoStore::builder().build();
+        let sites = [Site::ChameleonTacc, Site::ChameleonUc, Site::AwsVirginia];
+        let specs: Vec<AgentSpec> = (0..n_containers)
+            .map(|i| {
+                AgentSpec::new(
+                    format!("dc{i}"),
+                    sites[i % sites.len()],
+                    DeviceKind::ChameleonLocal,
+                )
+                .mem(64 << 20)
+                .fs(1 << 32)
+                .afr(0.01 + 0.02 * i as f64)
+            })
+            .collect();
+        for c in deploy_containers(&specs, n_containers, 0).containers {
+            ds.add_container(c).unwrap();
+        }
+        let token = ds.register_user("UserA").unwrap();
+        (ds, token)
+    }
+
+    fn data(len: usize, seed: u64) -> Vec<u8> {
+        crate::util::Rng::new(seed).bytes(len)
+    }
+
+    #[test]
+    fn push_pull_roundtrip_resilient() {
+        let (ds, token) = deployment(12);
+        let object = data(200_000, 1);
+        let push = ds
+            .push(&token, "/UserA", "obj1", &object, PushOpts::default())
+            .unwrap();
+        assert!(push.sim_s > 0.0);
+        assert!(push.stored_bytes > object.len() as u64, "parity adds bytes");
+        let pull = ds.pull(&token, "/UserA", "obj1", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+        assert_eq!(pull.chunks_fetched, 7);
+        assert!(!pull.degraded);
+    }
+
+    #[test]
+    fn push_pull_regular_policy() {
+        let (ds, token) = deployment(4);
+        let object = data(50_000, 2);
+        let opts = PushOpts {
+            policy: Some(ResiliencePolicy::Regular),
+            ..Default::default()
+        };
+        let push = ds.push(&token, "/UserA", "obj", &object, opts).unwrap();
+        assert_eq!(push.stored_bytes, object.len() as u64);
+        assert_eq!(push.encode_s, 0.0);
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+    }
+
+    #[test]
+    fn resilience_survives_max_failures() {
+        let (ds, token) = deployment(12);
+        let object = data(100_000, 3);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        // Kill 3 of the containers holding chunks (max tolerated for (10,7)).
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        let holders = meta.placement.containers();
+        for &cid in holders.iter().take(3) {
+            ds.container_of(cid).unwrap().set_alive(false);
+        }
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+        // One more failure exceeds the budget.
+        ds.container_of(holders[3]).unwrap().set_alive(false);
+        assert!(matches!(
+            ds.pull(&token, "/UserA", "obj", PullOpts::default()),
+            Err(Error::Unavailable(_))
+        ));
+    }
+
+    #[test]
+    fn degraded_read_flagged() {
+        let (ds, token) = deployment(12);
+        let object = data(60_000, 4);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        // Kill the container holding data chunk 0 → parity fallback.
+        let chunk0_holder = match &meta.placement {
+            ObjectPlacement::Erasure { chunks, .. } => {
+                chunks.iter().find(|&&(i, _)| i == 0).unwrap().1
+            }
+            _ => unreachable!(),
+        };
+        ds.container_of(chunk0_holder).unwrap().set_alive(false);
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+        assert!(pull.degraded);
+    }
+
+    #[test]
+    fn dynamic_policy_places_by_reliability() {
+        let (ds, token) = deployment(12);
+        let opts = PushOpts {
+            policy: Some(ResiliencePolicy::Dynamic { k: 4, target_loss: 0.001 }),
+            ..Default::default()
+        };
+        let push = ds.push(&token, "/UserA", "obj", &data(40_000, 5), opts).unwrap();
+        match &push.meta.placement {
+            ObjectPlacement::Erasure { n, k, chunks } => {
+                assert_eq!(*k, 4);
+                assert!(*n > 5, "dynamic policy adds parity: n={n}");
+                // Most reliable containers (lowest AFR = lowest ids here)
+                // must be chosen first.
+                assert!(chunks.iter().any(|&(_, c)| c == 0));
+            }
+            _ => panic!("expected erasure placement"),
+        }
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data.len(), 40_000);
+    }
+
+    #[test]
+    fn versioning_and_rollback() {
+        let (ds, token) = deployment(12);
+        let v0 = data(10_000, 6);
+        let v1 = data(12_000, 7);
+        ds.push(&token, "/UserA", "obj", &v0, PushOpts::default()).unwrap();
+        ds.push(&token, "/UserA", "obj", &v1, PushOpts::default()).unwrap();
+        let latest = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(latest.data, v1);
+        let old = ds
+            .pull(&token, "/UserA", "obj", PullOpts { version: Some(0), ..Default::default() })
+            .unwrap();
+        assert_eq!(old.data, v0);
+    }
+
+    #[test]
+    fn evict_removes_data_and_metadata() {
+        let (ds, token) = deployment(12);
+        ds.push(&token, "/UserA", "obj", &data(5_000, 8), PushOpts::default()).unwrap();
+        assert!(ds.exists(&token, "/UserA", "obj").unwrap());
+        let deleted = ds.evict(&token, "/UserA", "obj").unwrap();
+        assert_eq!(deleted, 10, "all 10 chunks deleted");
+        assert!(!ds.exists(&token, "/UserA", "obj").unwrap());
+        assert!(ds.pull(&token, "/UserA", "obj", PullOpts::default()).is_err());
+    }
+
+    #[test]
+    fn gc_frees_superseded_chunks() {
+        let (ds, token) = deployment(12);
+        ds.push(&token, "/UserA", "obj", &data(5_000, 9), PushOpts::default()).unwrap();
+        ds.push(&token, "/UserA", "obj", &data(6_000, 10), PushOpts::default()).unwrap();
+        let now = unix_secs() + crate::metadata::DEFAULT_RETENTION_SECS + 10;
+        let collected = ds.gc(now, crate::metadata::DEFAULT_RETENTION_SECS).unwrap();
+        assert_eq!(collected, 1);
+        // Latest still readable.
+        assert_eq!(
+            ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap().data.len(),
+            6_000
+        );
+    }
+
+    #[test]
+    fn repair_restores_failure_budget() {
+        let (ds, token) = deployment(14);
+        let object = data(80_000, 11);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        let holders = meta.placement.containers();
+        // Kill two chunk holders, repair, then kill three MORE of the
+        // original holders: without repair that is 5 failures > 3
+        // tolerated; after repair the budget is restored.
+        for &cid in holders.iter().take(2) {
+            ds.container_of(cid).unwrap().set_alive(false);
+        }
+        let report = ds.repair().unwrap();
+        assert_eq!(report.repaired, 1);
+        assert_eq!(report.chunks_moved, 2);
+        assert_eq!(report.lost, 0);
+        for &cid in holders.iter().skip(2).take(3) {
+            ds.container_of(cid).unwrap().set_alive(false);
+        }
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+    }
+
+    #[test]
+    fn repair_reports_lost_objects() {
+        let (ds, token) = deployment(12);
+        ds.push(&token, "/UserA", "obj", &data(5_000, 12), PushOpts::default()).unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        // Kill 4 holders of a (10,7) object: only 6 < k=7 chunks remain.
+        for &cid in meta.placement.containers().iter().take(4) {
+            ds.container_of(cid).unwrap().set_alive(false);
+        }
+        let report = ds.repair().unwrap();
+        assert_eq!(report.lost, 1);
+        assert_eq!(report.repaired, 0);
+    }
+
+    #[test]
+    fn auth_enforced_on_data_path() {
+        let (ds, _token) = deployment(12);
+        let err = ds.push("garbage-token", "/UserA", "o", b"x", PushOpts::default());
+        assert!(matches!(err, Err(Error::Auth(_))));
+        assert_eq!(ds.metrics.snapshot()["auth_failures"], 1);
+        // Token from another deployment (different secret) also fails.
+        let other = DynoStore::builder().secret(b"other").build();
+        let foreign = other.tokens.issue("UserA", &["read", "write"], 3600);
+        assert!(matches!(
+            ds.push(&foreign, "/UserA", "o", b"x", PushOpts::default()),
+            Err(Error::Auth(_))
+        ));
+    }
+
+    #[test]
+    fn permission_isolation_between_users() {
+        let (ds, token_a) = deployment(12);
+        let token_b = ds.register_user("UserB").unwrap();
+        ds.push(&token_a, "/UserA", "secret", &data(1_000, 13), PushOpts::default())
+            .unwrap();
+        // UserB cannot read UserA's object...
+        assert!(matches!(
+            ds.pull(&token_b, "/UserA", "secret", PullOpts::default()),
+            Err(Error::PermissionDenied(_))
+        ));
+        // ...until UserA grants read on the collection.
+        let grant = MetaCommand::Grant {
+            caller: "UserA".into(),
+            path: "/UserA".into(),
+            user: "UserB".into(),
+            perm: crate::metadata::Permission::Read,
+        };
+        ds.meta.submit(grant).unwrap();
+        assert!(ds.pull(&token_b, "/UserA", "secret", PullOpts::default()).is_ok());
+    }
+
+    #[test]
+    fn wide_area_times_are_sensible() {
+        let (ds, token) = deployment(12);
+        let object = data(1_000_000, 14);
+        // Madrid client is slower than a Chameleon-local client.
+        let far = ds
+            .push(
+                &token,
+                "/UserA",
+                "far",
+                &object,
+                PushOpts { ctx: OpContext::at(Site::Madrid), ..Default::default() },
+            )
+            .unwrap();
+        let near = ds
+            .push(
+                &token,
+                "/UserA",
+                "near",
+                &object,
+                PushOpts { ctx: OpContext::at(Site::ChameleonUc), ..Default::default() },
+            )
+            .unwrap();
+        assert!(far.sim_s > near.sim_s, "far {} vs near {}", far.sim_s, near.sim_s);
+        assert!(far.ingress_s > near.ingress_s);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let (ds, token) = deployment(12);
+        ds.push(&token, "/UserA", "m", &data(1_000, 15), PushOpts::default()).unwrap();
+        ds.pull(&token, "/UserA", "m", PullOpts::default()).unwrap();
+        let snap = ds.metrics.snapshot();
+        assert_eq!(snap["pushes"], 1);
+        assert_eq!(snap["pulls"], 1);
+        assert_eq!(snap["bytes_in"], 1_000);
+        assert_eq!(snap["bytes_out"], 1_000);
+    }
+}

@@ -1,0 +1,60 @@
+//! Operation reports: results + simulated wide-area timing breakdowns.
+
+use crate::metadata::ObjectMeta;
+
+/// Result of a push (upload) through the coordinator.
+#[derive(Debug, Clone)]
+pub struct PushReport {
+    pub meta: ObjectMeta,
+    /// Total simulated seconds for the operation (client-observed).
+    pub sim_s: f64,
+    /// Breakdown: client → gateway transfer.
+    pub ingress_s: f64,
+    /// Breakdown: erasure encode (simulated at the calibrated gateway
+    /// coding bandwidth — see `ops::GATEWAY_CODING_BW`).
+    pub encode_s: f64,
+    /// Real measured encode wallclock on this host (perf telemetry,
+    /// never mixed into sim_s).
+    pub encode_wall_s: f64,
+    /// Breakdown: gateway → containers dispersal (parallel max).
+    pub disperse_s: f64,
+    /// Breakdown: metadata consensus commit.
+    pub meta_s: f64,
+    /// Bytes placed on the wire to containers (chunks + headers).
+    pub stored_bytes: u64,
+}
+
+/// Result of a pull (download) through the coordinator.
+#[derive(Debug, Clone)]
+pub struct PullReport {
+    pub data: Vec<u8>,
+    pub meta: ObjectMeta,
+    pub sim_s: f64,
+    /// Breakdown: container → gateway chunk collection (parallel max).
+    pub collect_s: f64,
+    /// Breakdown: erasure decode + hash verify (simulated at the
+    /// calibrated gateway coding bandwidth).
+    pub decode_s: f64,
+    /// Real measured decode wallclock on this host (perf telemetry).
+    pub decode_wall_s: f64,
+    /// Breakdown: gateway → client transfer.
+    pub egress_s: f64,
+    /// Chunks fetched (k for a healthy read; may differ under failures).
+    pub chunks_fetched: usize,
+    /// True when some preferred (data) chunk was unavailable and parity
+    /// reconstruction kicked in.
+    pub degraded: bool,
+}
+
+/// Result of a health-repair pass (§III-B failover re-allocation).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RepairReport {
+    /// Objects examined.
+    pub scanned: usize,
+    /// Objects whose chunks were re-dispersed to healthy containers.
+    pub repaired: usize,
+    /// Objects currently unrecoverable (fewer than k chunks live).
+    pub lost: usize,
+    /// Chunks rewritten.
+    pub chunks_moved: usize,
+}

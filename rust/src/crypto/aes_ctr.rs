@@ -1,0 +1,148 @@
+//! AES-256 in CTR mode — the paper's client-side point-to-point
+//! confidentiality (§IV-E2: "DynoStore's client implements an AES-256
+//! encryption to safeguard sensitive objects during transport").
+//!
+//! The vendored `aes` crate supplies the block cipher; CTR mode (the
+//! `ctr` crate is absent) is implemented here: big-endian 128-bit counter
+//! starting from the nonce, encrypt-counter-and-XOR. CTR is symmetric, so
+//! `apply` both encrypts and decrypts.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes256;
+
+/// AES-256-CTR stream cipher.
+pub struct AesCtr {
+    cipher: Aes256,
+    nonce: [u8; 16],
+}
+
+impl AesCtr {
+    /// `key` is the 32-byte AES-256 key, `nonce` the 16-byte initial
+    /// counter block (callers derive it per object; never reuse a
+    /// (key, nonce) pair across distinct plaintexts).
+    pub fn new(key: &[u8; 32], nonce: &[u8; 16]) -> Self {
+        AesCtr { cipher: Aes256::new(key.into()), nonce: *nonce }
+    }
+
+    /// Encrypt or decrypt `data` in place starting at stream offset 0.
+    pub fn apply(&self, data: &mut [u8]) {
+        self.apply_at(data, 0);
+    }
+
+    /// Encrypt or decrypt starting at byte offset `offset` in the stream
+    /// (supports chunked/parallel processing of one logical object).
+    pub fn apply_at(&self, data: &mut [u8], offset: u64) {
+        let mut block_index = offset / 16;
+        let mut skip = (offset % 16) as usize;
+        let mut pos = 0usize;
+        while pos < data.len() {
+            let mut ctr_block = counter_block(&self.nonce, block_index);
+            self.cipher.encrypt_block((&mut ctr_block).into());
+            let take = (16 - skip).min(data.len() - pos);
+            for i in 0..take {
+                data[pos + i] ^= ctr_block[skip + i];
+            }
+            pos += take;
+            skip = 0;
+            block_index += 1;
+        }
+    }
+}
+
+/// nonce + big-endian 128-bit block counter (standard CTR increment).
+fn counter_block(nonce: &[u8; 16], index: u64) -> [u8; 16] {
+    let mut block = *nonce;
+    let mut carry = index;
+    for byte in block.iter_mut().rev() {
+        if carry == 0 {
+            break;
+        }
+        let sum = *byte as u64 + (carry & 0xff);
+        *byte = sum as u8;
+        carry = (carry >> 8) + (sum >> 8);
+    }
+    block
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{from_hex, to_hex};
+
+    /// NIST SP 800-38A F.5.5 CTR-AES256.Encrypt test vector.
+    #[test]
+    fn nist_sp800_38a_ctr_aes256() {
+        let key: [u8; 32] = from_hex(
+            "603deb1015ca71be2b73aef0857d77811f352c073b6108d72d9810a30914dff4",
+        )
+        .unwrap()
+        .try_into()
+        .unwrap();
+        let nonce: [u8; 16] =
+            from_hex("f0f1f2f3f4f5f6f7f8f9fafbfcfdfeff").unwrap().try_into().unwrap();
+        let mut data = from_hex(
+            "6bc1bee22e409f96e93d7e117393172a\
+             ae2d8a571e03ac9c9eb76fac45af8e51\
+             30c81c46a35ce411e5fbc1191a0a52ef\
+             f69f2445df4f9b17ad2b417be66c3710",
+        )
+        .unwrap();
+        AesCtr::new(&key, &nonce).apply(&mut data);
+        assert_eq!(
+            to_hex(&data),
+            "601ec313775789a5b7a7f504bbf3d228\
+             f443e3ca4d62b59aca84e990cacaf5c5\
+             2b0930daa23de94ce87017ba2d84988d\
+             dfc9c58db67aada613c2dd08457941a6"
+                .replace(' ', "")
+        );
+    }
+
+    #[test]
+    fn roundtrip() {
+        let key = [7u8; 32];
+        let nonce = [3u8; 16];
+        let mut data: Vec<u8> = (0..10_000u32).map(|i| (i % 256) as u8).collect();
+        let orig = data.clone();
+        let c = AesCtr::new(&key, &nonce);
+        c.apply(&mut data);
+        assert_ne!(data, orig, "ciphertext differs from plaintext");
+        c.apply(&mut data);
+        assert_eq!(data, orig, "decrypt restores plaintext");
+    }
+
+    #[test]
+    fn offset_apply_matches_full_stream() {
+        let key = [1u8; 32];
+        let nonce = [9u8; 16];
+        let c = AesCtr::new(&key, &nonce);
+        let mut whole: Vec<u8> = (0..1000u32).map(|i| (i * 7 % 256) as u8).collect();
+        let orig = whole.clone();
+        c.apply(&mut whole);
+        // Re-encrypt the same plaintext in misaligned pieces.
+        for split in [1usize, 15, 16, 17, 333] {
+            let mut pieces = orig.clone();
+            let (a, b) = pieces.split_at_mut(split);
+            c.apply_at(a, 0);
+            c.apply_at(b, split as u64);
+            assert_eq!(pieces, whole, "split at {split}");
+        }
+    }
+
+    #[test]
+    fn counter_block_carry_propagates() {
+        let nonce = [0xffu8; 16];
+        let b = counter_block(&nonce, 1);
+        assert_eq!(b, [0u8; 16], "all-ones nonce + 1 wraps to zero");
+    }
+
+    #[test]
+    fn different_nonce_different_keystream() {
+        let key = [5u8; 32];
+        let mut a = vec![0u8; 64];
+        let mut b = vec![0u8; 64];
+        AesCtr::new(&key, &[0u8; 16]).apply(&mut a);
+        AesCtr::new(&key, &[1u8; 16]).apply(&mut b);
+        assert_ne!(a, b);
+    }
+}

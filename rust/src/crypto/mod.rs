@@ -1,0 +1,12 @@
+//! Security substrate (paper §IV-E): SHA3-256 integrity hashing
+//! (Algorithms 1-2 pack the object hash with every chunk), AES-256-CTR
+//! point-to-point confidentiality for the client, and HMAC-SHA256 OAuth
+//! style bearer tokens validated at the gateway.
+
+pub mod aes_ctr;
+pub mod sha3;
+pub mod token;
+
+pub use aes_ctr::AesCtr;
+pub use sha3::{sha3_256, Sha3_256};
+pub use token::{Claims, TokenService};

@@ -1,0 +1,196 @@
+//! SHA3-256 from scratch (FIPS 202 Keccak-f[1600], rate 1088, capacity
+//! 512, domain suffix 0x06).
+//!
+//! The paper's integrity scheme (§IV-D Algorithms 1-2, §IV-E) names
+//! SHA3-256 specifically; the vendored crate set only ships SHA-2, so we
+//! implement Keccak here and validate against the NIST/known-answer
+//! vectors in the unit tests.
+
+const ROUNDS: usize = 24;
+
+const RC: [u64; ROUNDS] = [
+    0x0000000000000001, 0x0000000000008082, 0x800000000000808a, 0x8000000080008000,
+    0x000000000000808b, 0x0000000080000001, 0x8000000080008081, 0x8000000000008009,
+    0x000000000000008a, 0x0000000000000088, 0x0000000080008009, 0x000000008000000a,
+    0x000000008000808b, 0x800000000000008b, 0x8000000000008089, 0x8000000000008003,
+    0x8000000000008002, 0x8000000000000080, 0x000000000000800a, 0x800000008000000a,
+    0x8000000080008081, 0x8000000000008080, 0x0000000080000001, 0x8000000080008008,
+];
+
+// Rotation offsets r[x][y] laid out as state index 5*y + x.
+const RHO: [u32; 25] = [
+    0, 1, 62, 28, 27, 36, 44, 6, 55, 20, 3, 10, 43, 25, 39, 41, 45, 15, 21, 8, 18, 2, 61, 56, 14,
+];
+
+fn keccak_f(state: &mut [u64; 25]) {
+    for rc in RC.iter().take(ROUNDS) {
+        // θ
+        let mut c = [0u64; 5];
+        for x in 0..5 {
+            c[x] = state[x] ^ state[x + 5] ^ state[x + 10] ^ state[x + 15] ^ state[x + 20];
+        }
+        for x in 0..5 {
+            let d = c[(x + 4) % 5] ^ c[(x + 1) % 5].rotate_left(1);
+            for y in 0..5 {
+                state[5 * y + x] ^= d;
+            }
+        }
+        // ρ and π
+        let mut b = [0u64; 25];
+        for x in 0..5 {
+            for y in 0..5 {
+                let idx = 5 * y + x;
+                // π: B[y, 2x+3y] = rot(A[x, y])
+                let nx = y;
+                let ny = (2 * x + 3 * y) % 5;
+                b[5 * ny + nx] = state[idx].rotate_left(RHO[idx]);
+            }
+        }
+        // χ
+        for y in 0..5 {
+            for x in 0..5 {
+                state[5 * y + x] = b[5 * y + x] ^ ((!b[5 * y + (x + 1) % 5]) & b[5 * y + (x + 2) % 5]);
+            }
+        }
+        // ι
+        state[0] ^= rc;
+    }
+}
+
+const RATE: usize = 136; // 1088 bits for SHA3-256
+
+/// Streaming SHA3-256.
+#[derive(Clone)]
+pub struct Sha3_256 {
+    state: [u64; 25],
+    buf: [u8; RATE],
+    buf_len: usize,
+}
+
+impl Default for Sha3_256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha3_256 {
+    pub fn new() -> Self {
+        Sha3_256 { state: [0u64; 25], buf: [0u8; RATE], buf_len: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        // Fill the partial block first.
+        if self.buf_len > 0 {
+            let take = (RATE - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == RATE {
+                let block = self.buf;
+                self.absorb(&block);
+                self.buf_len = 0;
+            }
+        }
+        // Whole blocks straight from the input.
+        while data.len() >= RATE {
+            let (block, rest) = data.split_at(RATE);
+            let mut tmp = [0u8; RATE];
+            tmp.copy_from_slice(block);
+            self.absorb(&tmp);
+            data = rest;
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    fn absorb(&mut self, block: &[u8; RATE]) {
+        for (i, lane) in block.chunks_exact(8).enumerate() {
+            self.state[i] ^= u64::from_le_bytes(lane.try_into().unwrap());
+        }
+        keccak_f(&mut self.state);
+    }
+
+    pub fn finalize(mut self) -> [u8; 32] {
+        // Pad: SHA-3 domain suffix 0b01 then pad10*1 → 0x06 ... 0x80.
+        let mut block = [0u8; RATE];
+        block[..self.buf_len].copy_from_slice(&self.buf[..self.buf_len]);
+        block[self.buf_len] = 0x06;
+        block[RATE - 1] |= 0x80;
+        self.absorb(&block);
+        let mut out = [0u8; 32];
+        for (i, chunk) in out.chunks_exact_mut(8).enumerate() {
+            chunk.copy_from_slice(&self.state[i].to_le_bytes());
+        }
+        out
+    }
+}
+
+/// One-shot SHA3-256.
+pub fn sha3_256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha3_256::new();
+    h.update(data);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::to_hex;
+
+    #[test]
+    fn nist_empty_vector() {
+        // FIPS 202 known-answer: SHA3-256("")
+        assert_eq!(
+            to_hex(&sha3_256(b"")),
+            "a7ffc6f8bf1ed76651c14756a061d662f580ff4de43b49fa82d80a4b80f8434a"
+        );
+    }
+
+    #[test]
+    fn known_answer_abc() {
+        assert_eq!(
+            to_hex(&sha3_256(b"abc")),
+            "3a985da74fe225b2045c172d6bd390bd855f086e3e9d525b46bfe24511431532"
+        );
+    }
+
+    #[test]
+    fn known_answer_448_bits() {
+        let msg = b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq";
+        assert_eq!(
+            to_hex(&sha3_256(msg)),
+            "41c0dba2a9d6240849100376a8235e2c82e1b9998a999e21db32dd97496d3376"
+        );
+    }
+
+    #[test]
+    fn known_answer_million_a() {
+        let msg = vec![b'a'; 1_000_000];
+        assert_eq!(
+            to_hex(&sha3_256(&msg)),
+            "5c8875ae474a3634ba4fd55ec85bffd661f32aca75c6d699d0cdcb6c115891c1"
+        );
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let oneshot = sha3_256(&data);
+        // Feed in awkward chunk sizes crossing block boundaries.
+        for chunk in [1usize, 7, 135, 136, 137, 1000] {
+            let mut h = Sha3_256::new();
+            for c in data.chunks(chunk) {
+                h.update(c);
+            }
+            assert_eq!(h.finalize(), oneshot, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_digests() {
+        assert_ne!(sha3_256(b"a"), sha3_256(b"b"));
+        assert_ne!(sha3_256(b""), sha3_256(b"\x00"));
+    }
+}

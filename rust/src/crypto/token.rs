@@ -1,0 +1,172 @@
+//! OAuth-style bearer tokens (paper §IV-E1): the authentication service
+//! issues a token encapsulating user identity and scopes; the gateway
+//! validates it on every request.
+//!
+//! Wire format: `base64url-ish(payload_json) . hex(hmac_sha256(payload))`
+//! — self-contained claims + signature, the usual bearer-token shape,
+//! signed with the service's secret (HMAC-SHA256 from the vendored
+//! `hmac`/`sha2` crates).
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+use crate::json::{obj, parse, to_string, Value};
+use crate::util::{from_hex, to_hex, unix_secs};
+use crate::{Error, Result};
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Token claims: subject (user), scopes, expiry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Claims {
+    pub subject: String,
+    pub scopes: Vec<String>,
+    /// Unix seconds after which the token is invalid.
+    pub expires_at: u64,
+}
+
+impl Claims {
+    pub fn has_scope(&self, scope: &str) -> bool {
+        self.scopes.iter().any(|s| s == scope || s == "*")
+    }
+}
+
+/// Issues and validates bearer tokens.
+pub struct TokenService {
+    secret: Vec<u8>,
+}
+
+impl TokenService {
+    pub fn new(secret: &[u8]) -> Self {
+        TokenService { secret: secret.to_vec() }
+    }
+
+    /// Issue a token for `subject` with `scopes`, valid `ttl_secs`.
+    pub fn issue(&self, subject: &str, scopes: &[&str], ttl_secs: u64) -> String {
+        self.issue_at(subject, scopes, unix_secs() + ttl_secs)
+    }
+
+    /// Issue with an explicit expiry timestamp (tests, clock injection).
+    pub fn issue_at(&self, subject: &str, scopes: &[&str], expires_at: u64) -> String {
+        let payload = to_string(&obj(vec![
+            ("sub", subject.into()),
+            (
+                "scopes",
+                Value::Arr(scopes.iter().map(|s| Value::from(*s)).collect()),
+            ),
+            ("exp", expires_at.into()),
+        ]));
+        let sig = self.sign(payload.as_bytes());
+        format!("{}.{}", to_hex(payload.as_bytes()), to_hex(&sig))
+    }
+
+    /// Validate signature + expiry; returns the claims.
+    pub fn validate(&self, token: &str) -> Result<Claims> {
+        self.validate_at(token, unix_secs())
+    }
+
+    /// Validate against an explicit "now" (tests, simulated clock).
+    pub fn validate_at(&self, token: &str, now: u64) -> Result<Claims> {
+        let (payload_hex, sig_hex) = token
+            .split_once('.')
+            .ok_or_else(|| Error::Auth("malformed token".into()))?;
+        let payload =
+            from_hex(payload_hex).ok_or_else(|| Error::Auth("bad payload encoding".into()))?;
+        let sig = from_hex(sig_hex).ok_or_else(|| Error::Auth("bad signature encoding".into()))?;
+        let expect = self.sign(&payload);
+        // Constant-time comparison via HMAC verify.
+        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
+        mac.update(&payload);
+        mac.verify_slice(&sig)
+            .map_err(|_| Error::Auth("signature mismatch".into()))?;
+        let _ = expect;
+        let text =
+            String::from_utf8(payload).map_err(|_| Error::Auth("payload not utf-8".into()))?;
+        let v = parse(&text).map_err(|_| Error::Auth("payload not json".into()))?;
+        let claims = Claims {
+            subject: v.req_str("sub").map_err(|_| Error::Auth("no sub".into()))?.to_string(),
+            scopes: v
+                .get("scopes")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str().map(str::to_string))
+                .collect(),
+            expires_at: v.req_u64("exp").map_err(|_| Error::Auth("no exp".into()))?,
+        };
+        if now >= claims.expires_at {
+            return Err(Error::Auth("token expired".into()));
+        }
+        Ok(claims)
+    }
+
+    fn sign(&self, data: &[u8]) -> Vec<u8> {
+        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
+        mac.update(data);
+        mac.finalize().into_bytes().to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> TokenService {
+        TokenService::new(b"test-secret-please-rotate")
+    }
+
+    #[test]
+    fn issue_validate_roundtrip() {
+        let s = svc();
+        let tok = s.issue_at("userA", &["read", "write"], 1_000);
+        let claims = s.validate_at(&tok, 500).unwrap();
+        assert_eq!(claims.subject, "userA");
+        assert!(claims.has_scope("read"));
+        assert!(claims.has_scope("write"));
+        assert!(!claims.has_scope("admin"));
+    }
+
+    #[test]
+    fn wildcard_scope() {
+        let s = svc();
+        let tok = s.issue_at("admin", &["*"], 1_000);
+        let claims = s.validate_at(&tok, 1).unwrap();
+        assert!(claims.has_scope("anything"));
+    }
+
+    #[test]
+    fn expired_token_rejected() {
+        let s = svc();
+        let tok = s.issue_at("userA", &["read"], 100);
+        assert!(matches!(s.validate_at(&tok, 100), Err(Error::Auth(_))));
+        assert!(matches!(s.validate_at(&tok, 101), Err(Error::Auth(_))));
+        assert!(s.validate_at(&tok, 99).is_ok());
+    }
+
+    #[test]
+    fn tampered_payload_rejected() {
+        let s = svc();
+        let tok = s.issue_at("userA", &["read"], 1_000);
+        // Flip a nibble in the payload hex.
+        let mut chars: Vec<char> = tok.chars().collect();
+        chars[4] = if chars[4] == '0' { '1' } else { '0' };
+        let forged: String = chars.into_iter().collect();
+        assert!(matches!(s.validate_at(&forged, 1), Err(Error::Auth(_))));
+    }
+
+    #[test]
+    fn wrong_secret_rejected() {
+        let s = svc();
+        let other = TokenService::new(b"different-secret");
+        let tok = s.issue_at("userA", &["read"], 1_000);
+        assert!(matches!(other.validate_at(&tok, 1), Err(Error::Auth(_))));
+    }
+
+    #[test]
+    fn garbage_tokens_rejected() {
+        let s = svc();
+        for bad in ["", "no-dot", "zz.zz", "abcd.", ".abcd"] {
+            assert!(s.validate_at(bad, 1).is_err(), "{bad:?}");
+        }
+    }
+}

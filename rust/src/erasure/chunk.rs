@@ -1,0 +1,161 @@
+//! Chunk packaging: Algorithm 1 line 9, `p = PACK(h_o, C[i])` — every
+//! chunk carries the SHA3-256 hash of the *original object* so decode can
+//! verify integrity end to end (Algorithm 2 lines 6-9).
+
+use crate::{Error, Result};
+
+/// Fixed binary header prepended to every chunk payload.
+///
+/// Layout (little-endian, 56 bytes):
+/// `magic[4] "DYNC" | version u8 | n u8 | k u8 | index u8 |
+///  object_len u64 | chunk_len u64 | object_hash [32]`
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkHeader {
+    pub n: u8,
+    pub k: u8,
+    /// Row index in the generator matrix (0..n).
+    pub index: u8,
+    /// Original object length in bytes (strips stripe padding on decode).
+    pub object_len: u64,
+    /// Payload bytes following the header.
+    pub chunk_len: u64,
+    /// SHA3-256 of the original object.
+    pub object_hash: [u8; 32],
+}
+
+pub const CHUNK_HEADER_LEN: usize = 56;
+const MAGIC: &[u8; 4] = b"DYNC";
+const VERSION: u8 = 1;
+
+impl ChunkHeader {
+    pub fn encode(&self) -> [u8; CHUNK_HEADER_LEN] {
+        let mut out = [0u8; CHUNK_HEADER_LEN];
+        out[0..4].copy_from_slice(MAGIC);
+        out[4] = VERSION;
+        out[5] = self.n;
+        out[6] = self.k;
+        out[7] = self.index;
+        out[8..16].copy_from_slice(&self.object_len.to_le_bytes());
+        out[16..24].copy_from_slice(&self.chunk_len.to_le_bytes());
+        out[24..56].copy_from_slice(&self.object_hash);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ChunkHeader> {
+        if buf.len() < CHUNK_HEADER_LEN {
+            return Err(Error::Erasure("chunk too short for header".into()));
+        }
+        if &buf[0..4] != MAGIC {
+            return Err(Error::Erasure("bad chunk magic".into()));
+        }
+        if buf[4] != VERSION {
+            return Err(Error::Erasure(format!("unsupported chunk version {}", buf[4])));
+        }
+        let mut hash = [0u8; 32];
+        hash.copy_from_slice(&buf[24..56]);
+        Ok(ChunkHeader {
+            n: buf[5],
+            k: buf[6],
+            index: buf[7],
+            object_len: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            chunk_len: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            object_hash: hash,
+        })
+    }
+}
+
+/// A packed chunk: header + coded payload, ready for upload (the `p` of
+/// Algorithm 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chunk {
+    pub header: ChunkHeader,
+    /// Full wire bytes (header || payload).
+    pub packed: Vec<u8>,
+}
+
+impl Chunk {
+    pub fn pack(header: ChunkHeader, payload: &[u8]) -> Chunk {
+        debug_assert_eq!(header.chunk_len as usize, payload.len());
+        let mut packed = Vec::with_capacity(CHUNK_HEADER_LEN + payload.len());
+        packed.extend_from_slice(&header.encode());
+        packed.extend_from_slice(payload);
+        Chunk { header, packed }
+    }
+
+    /// Parse wire bytes back into a chunk; validates header/payload
+    /// length consistency.
+    pub fn unpack(bytes: &[u8]) -> Result<Chunk> {
+        let header = ChunkHeader::decode(bytes)?;
+        let expect = CHUNK_HEADER_LEN + header.chunk_len as usize;
+        if bytes.len() != expect {
+            return Err(Error::Erasure(format!(
+                "chunk length mismatch: wire {} expect {}",
+                bytes.len(),
+                expect
+            )));
+        }
+        Ok(Chunk { header, packed: bytes.to_vec() })
+    }
+
+    pub fn payload(&self) -> &[u8] {
+        &self.packed[CHUNK_HEADER_LEN..]
+    }
+
+    /// Total wire size (what the containers store and the WAN carries).
+    pub fn wire_len(&self) -> usize {
+        self.packed.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> ChunkHeader {
+        ChunkHeader {
+            n: 10,
+            k: 7,
+            index: 3,
+            object_len: 123456,
+            chunk_len: 4,
+            object_hash: [0xAB; 32],
+        }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = header();
+        let enc = h.encode();
+        assert_eq!(ChunkHeader::decode(&enc).unwrap(), h);
+    }
+
+    #[test]
+    fn chunk_roundtrip() {
+        let c = Chunk::pack(header(), &[1, 2, 3, 4]);
+        let c2 = Chunk::unpack(&c.packed).unwrap();
+        assert_eq!(c2, c);
+        assert_eq!(c2.payload(), &[1, 2, 3, 4]);
+        assert_eq!(c2.wire_len(), CHUNK_HEADER_LEN + 4);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut enc = header().encode().to_vec();
+        enc[0] = b'X';
+        assert!(ChunkHeader::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut enc = header().encode().to_vec();
+        enc[4] = 99;
+        assert!(ChunkHeader::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let c = Chunk::pack(header(), &[1, 2, 3, 4]);
+        assert!(Chunk::unpack(&c.packed[..c.packed.len() - 1]).is_err());
+        assert!(ChunkHeader::decode(&[0u8; 10]).is_err());
+    }
+}

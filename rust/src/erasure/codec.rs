@@ -1,0 +1,329 @@
+//! The IDA codec: Algorithms 1 (ENCODE) and 2 (DECODE) of paper §IV-D.
+//!
+//! Stripe layout: the object is zero-padded to `k * chunk_len` and viewed
+//! as a k-row matrix D (row j = bytes `j*chunk_len..(j+1)*chunk_len`).
+//! Encode computes `C = G · D` with the systematic generator
+//! `[I_k ; Cauchy]`, so chunks 0..k are the data rows verbatim and chunks
+//! k..n are parity. Decode selects the surviving generator rows, inverts,
+//! and multiplies — then recomputes SHA3-256 and compares with the hash
+//! carried in every chunk header.
+
+use crate::crypto::sha3_256;
+use crate::gf256::{ida_generator, mul_slice_acc, Matrix};
+use crate::{Error, Result};
+
+use super::chunk::{Chunk, ChunkHeader};
+use super::ErasureConfig;
+
+/// Pluggable GF(2^8) matmul engine. `a` is the (rows × cols) coefficient
+/// matrix, `data` the cols input rows (equal length), `out` the rows
+/// output rows (pre-sized to the input row length).
+pub trait GfBackend: Send + Sync {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [Vec<u8>]) -> Result<()>;
+    fn name(&self) -> &'static str;
+}
+
+/// Table-driven pure-rust backend: one `mul_slice_acc` per (i, j)
+/// coefficient. Always available; also the cross-check oracle for the
+/// PJRT backend in `runtime::tests`.
+///
+/// §Perf iteration 3: the coefficient passes are BLOCKED over 64 KiB
+/// column ranges so the src/acc working set of all n x k passes stays
+/// L2-resident instead of streaming whole multi-MiB rows n x k times
+/// from DRAM (see EXPERIMENTS.md §Perf for measurements).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PureRustBackend;
+
+/// Column-block width for the locality blocking (two rows of this size
+/// fit comfortably in a 256 KiB-1 MiB L2 alongside the 64 KiB table row).
+const L2_BLOCK: usize = 64 * 1024;
+
+impl GfBackend for PureRustBackend {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [Vec<u8>]) -> Result<()> {
+        if data.len() != a.cols() || out.len() != a.rows() {
+            return Err(Error::Erasure("backend shape mismatch".into()));
+        }
+        let len = data.first().map_or(0, |d| d.len());
+        for out_row in out.iter_mut() {
+            out_row.iter_mut().for_each(|b| *b = 0);
+        }
+        let mut start = 0usize;
+        while start < len {
+            let end = (start + L2_BLOCK).min(len);
+            for (i, out_row) in out.iter_mut().enumerate() {
+                for (j, src) in data.iter().enumerate() {
+                    mul_slice_acc(a[(i, j)], &src[start..end], &mut out_row[start..end]);
+                }
+            }
+            start = end;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pure-rust"
+    }
+}
+
+/// Trait-object passthrough so the coordinator can pick the backend at
+/// runtime (pure-rust vs PJRT kernel) behind one codec type.
+impl GfBackend for std::sync::Arc<dyn GfBackend> {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [Vec<u8>]) -> Result<()> {
+        (**self).matmul(a, data, out)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Stripe alignment: chunk lengths are rounded up so the PJRT kernel's
+/// tiled artifacts see aligned rows; 64 keeps padding negligible.
+const CHUNK_ALIGN: usize = 64;
+
+/// The erasure codec, parameterized by configuration and GF backend.
+pub struct Codec<B: GfBackend = PureRustBackend> {
+    config: ErasureConfig,
+    generator: Matrix,
+    backend: B,
+}
+
+impl Codec<PureRustBackend> {
+    pub fn new(config: ErasureConfig) -> Result<Self> {
+        Codec::with_backend(config, PureRustBackend)
+    }
+}
+
+impl<B: GfBackend> Codec<B> {
+    pub fn with_backend(config: ErasureConfig, backend: B) -> Result<Self> {
+        config.validate()?;
+        Ok(Codec { config, generator: ida_generator(config.n, config.k)?, backend })
+    }
+
+    pub fn config(&self) -> ErasureConfig {
+        self.config
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Chunk payload length for an object of `len` bytes.
+    pub fn chunk_len(&self, len: usize) -> usize {
+        let per = len.div_ceil(self.config.k).max(1);
+        per.div_ceil(CHUNK_ALIGN) * CHUNK_ALIGN
+    }
+
+    /// Algorithm 1: ENCODE(o, n, k) → n packed chunks.
+    pub fn encode(&self, object: &[u8]) -> Result<Vec<Chunk>> {
+        let (n, k) = (self.config.n, self.config.k);
+        let chunk_len = self.chunk_len(object.len());
+        let hash = sha3_256(object); // line 7: h_o = SHA256(o)
+
+        // line 6: SPLIT(o, n, k) — stripe the object into k padded rows.
+        let mut padded = vec![0u8; k * chunk_len];
+        padded[..object.len()].copy_from_slice(object);
+        let rows: Vec<&[u8]> = padded.chunks_exact(chunk_len).collect();
+
+        // C = G · D through the pluggable backend.
+        let mut coded: Vec<Vec<u8>> = (0..n).map(|_| vec![0u8; chunk_len]).collect();
+        self.backend.matmul(&self.generator, &rows, &mut coded)?;
+
+        // lines 8-10: PACK(h_o, C[i]) for every chunk.
+        Ok(coded
+            .into_iter()
+            .enumerate()
+            .map(|(i, payload)| {
+                Chunk::pack(
+                    ChunkHeader {
+                        n: n as u8,
+                        k: k as u8,
+                        index: i as u8,
+                        object_len: object.len() as u64,
+                        chunk_len: chunk_len as u64,
+                        object_hash: hash,
+                    },
+                    &payload,
+                )
+            })
+            .collect())
+    }
+
+    /// Algorithm 2: DECODE(chunks) → original object.
+    ///
+    /// Accepts any subset of chunks; needs ≥ k distinct indices. Verifies
+    /// the SHA3-256 carried in the headers against the reconstruction and
+    /// fails on mismatch (lines 6-9).
+    pub fn decode(&self, chunks: &[Chunk]) -> Result<Vec<u8>> {
+        let k = self.config.k;
+        // Deduplicate by index, validate headers agree.
+        let mut seen: Vec<&Chunk> = Vec::new();
+        for c in chunks {
+            if c.header.n as usize != self.config.n || c.header.k as usize != k {
+                return Err(Error::Erasure(format!(
+                    "chunk {} config ({},{}) != codec ({},{})",
+                    c.header.index, c.header.n, c.header.k, self.config.n, k
+                )));
+            }
+            if !seen.iter().any(|s| s.header.index == c.header.index) {
+                seen.push(c);
+            }
+        }
+        if seen.len() < k {
+            // Algorithm 2 line 11: not enough chunks.
+            return Err(Error::Erasure(format!(
+                "not enough chunks: have {} need {}",
+                seen.len(),
+                k
+            )));
+        }
+        seen.truncate(k);
+        seen.sort_by_key(|c| c.header.index);
+
+        let first = seen[0].header.clone();
+        let chunk_len = first.chunk_len as usize;
+        for c in &seen {
+            if c.header.chunk_len as usize != chunk_len
+                || c.header.object_len != first.object_len
+                || c.header.object_hash != first.object_hash
+            {
+                return Err(Error::Erasure("inconsistent chunk headers".into()));
+            }
+            if c.payload().len() != chunk_len {
+                return Err(Error::Erasure("payload length mismatch".into()));
+            }
+        }
+
+        // Invert the surviving generator rows; multiply.
+        let indices: Vec<usize> = seen.iter().map(|c| c.header.index as usize).collect();
+        let sub = self.generator.select_rows(&indices);
+        let inv = sub.inverse()?;
+        let rows: Vec<&[u8]> = seen.iter().map(|c| c.payload()).collect();
+        let mut data: Vec<Vec<u8>> = (0..k).map(|_| vec![0u8; chunk_len]).collect();
+        self.backend.matmul(&inv, &rows, &mut data)?;
+
+        // MERGE + truncate padding.
+        let mut object = Vec::with_capacity(first.object_len as usize);
+        for row in &data {
+            object.extend_from_slice(row);
+        }
+        object.truncate(first.object_len as usize);
+
+        // lines 6-9: integrity check against the packed hash.
+        let recomputed = sha3_256(&object);
+        if recomputed != first.object_hash {
+            return Err(Error::Integrity(
+                "reconstructed object hash mismatch".into(),
+            ));
+        }
+        Ok(object)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip(n: usize, k: usize, len: usize, drop: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let object = rng.bytes(len);
+        let codec = Codec::new(ErasureConfig::new(n, k)).unwrap();
+        let chunks = codec.encode(&object).unwrap();
+        assert_eq!(chunks.len(), n);
+        let keep = rng.sample_indices(n, n - drop);
+        let subset: Vec<Chunk> = keep.iter().map(|&i| chunks[i].clone()).collect();
+        let rec = codec.decode(&subset).unwrap();
+        assert_eq!(rec, object, "(n,k)=({n},{k}) len={len} drop={drop}");
+    }
+
+    #[test]
+    fn paper_configs_roundtrip_with_max_failures() {
+        for (n, k) in [(3, 2), (6, 3), (10, 4), (10, 7), (12, 8)] {
+            roundtrip(n, k, 10_000, n - k, (n * 31 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn roundtrip_no_failures() {
+        roundtrip(10, 7, 4096, 0, 1);
+    }
+
+    #[test]
+    fn tiny_and_empty_objects() {
+        for len in [0usize, 1, 63, 64, 65] {
+            let codec = Codec::new(ErasureConfig::new(6, 3)).unwrap();
+            let object = vec![0xA5u8; len];
+            let chunks = codec.encode(&object).unwrap();
+            let rec = codec.decode(&chunks[3..]).unwrap(); // drop 3 of 6
+            assert_eq!(rec, object, "len={len}");
+        }
+    }
+
+    #[test]
+    fn systematic_prefix_is_raw_data() {
+        let codec = Codec::new(ErasureConfig::new(6, 3)).unwrap();
+        let object: Vec<u8> = (0..192u32).map(|i| i as u8).collect();
+        let chunks = codec.encode(&object).unwrap();
+        let cl = codec.chunk_len(object.len());
+        for (j, c) in chunks.iter().take(3).enumerate() {
+            assert_eq!(&c.payload()[..], &{
+                let mut row = vec![0u8; cl];
+                let start = j * cl;
+                let end = ((j + 1) * cl).min(object.len());
+                if start < object.len() {
+                    row[..end - start].copy_from_slice(&object[start..end]);
+                }
+                row
+            });
+        }
+    }
+
+    #[test]
+    fn too_few_chunks_fails() {
+        let codec = Codec::new(ErasureConfig::new(10, 7)).unwrap();
+        let object = vec![1u8; 1000];
+        let chunks = codec.encode(&object).unwrap();
+        let err = codec.decode(&chunks[..6]).unwrap_err();
+        assert!(matches!(err, Error::Erasure(_)), "{err}");
+    }
+
+    #[test]
+    fn duplicate_indices_do_not_count() {
+        let codec = Codec::new(ErasureConfig::new(6, 3)).unwrap();
+        let chunks = codec.encode(&[7u8; 500]).unwrap();
+        let dup = vec![chunks[0].clone(), chunks[0].clone(), chunks[0].clone()];
+        assert!(codec.decode(&dup).is_err());
+    }
+
+    #[test]
+    fn corrupted_payload_detected_by_hash() {
+        let codec = Codec::new(ErasureConfig::new(6, 3)).unwrap();
+        let object = vec![9u8; 2000];
+        let mut chunks = codec.encode(&object).unwrap();
+        // Corrupt one byte in a chunk that WILL be used for decode.
+        let off = chunks[1].packed.len() - 1;
+        chunks[1].packed[off] ^= 0xFF;
+        let err = codec.decode(&chunks[..3]).unwrap_err();
+        assert!(matches!(err, Error::Integrity(_)), "{err}");
+    }
+
+    #[test]
+    fn mismatched_config_rejected() {
+        let c63 = Codec::new(ErasureConfig::new(6, 3)).unwrap();
+        let c104 = Codec::new(ErasureConfig::new(10, 4)).unwrap();
+        let chunks = c63.encode(&[1u8; 100]).unwrap();
+        assert!(c104.decode(&chunks).is_err());
+    }
+
+    #[test]
+    fn random_sweep_any_k_of_n() {
+        let mut rng = Rng::new(99);
+        for trial in 0..30 {
+            let k = 2 + (trial % 9);
+            let n = k + 1 + (trial % (16usize - k).max(1)).min(16 - k - 1);
+            let len = 1 + rng.below(20_000) as usize;
+            roundtrip(n.min(16), k, len, (n.min(16)) - k, trial as u64);
+        }
+    }
+}

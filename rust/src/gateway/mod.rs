@@ -1,0 +1,302 @@
+//! REST gateway (paper §III-B): the entry point for client requests.
+//! Validates OAuth-style bearer tokens and routes to the coordinator.
+//!
+//! Routes:
+//! * `POST /auth/register`  body `{"user": ...}` → `{"token": ...}`
+//! * `POST /auth/login`     body `{"user": ...}` → `{"token": ...}`
+//! * `PUT  /objects/<collection...>/<name>` body = object bytes
+//! * `GET  /objects/<collection...>/<name>` → object bytes
+//! * `HEAD /objects/<collection...>/<name>` → 200/404
+//! * `DELETE /objects/<collection...>/<name>` → evict
+//! * `GET  /metrics` → counters JSON
+//! * `POST /admin/repair`, `POST /admin/gc`
+//! * `GET  /health` → liveness + container census
+
+use std::sync::Arc;
+
+use crate::coordinator::{DynoStore, PullOpts, PushOpts};
+use crate::json::{obj, parse, Value};
+use crate::net::{HttpRequest, HttpResponse, HttpServer};
+use crate::util::unix_secs;
+use crate::{Error, Result};
+
+/// Start the gateway HTTP service on `addr` with `workers` threads.
+pub fn serve(store: Arc<DynoStore>, addr: &str, workers: usize) -> Result<HttpServer> {
+    let handler = move |req: HttpRequest| route(&store, req);
+    HttpServer::serve(addr, workers, Arc::new(handler))
+}
+
+fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
+    let result = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/auth/register") => auth_register(store, &req),
+        ("POST", "/auth/login") => auth_login(store, &req),
+        ("GET", "/metrics") => Ok(metrics(store)),
+        ("GET", "/health") => Ok(health(store)),
+        ("POST", "/admin/repair") => admin_repair(store),
+        ("POST", "/admin/gc") => admin_gc(store, &req),
+        (method, path) if path.starts_with("/objects/") => object_route(store, method, &req),
+        _ => Err(Error::NotFound(format!("{} {}", req.method, req.path))),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err(e) => error_response(e),
+    }
+}
+
+fn error_response(e: Error) -> HttpResponse {
+    let status = match &e {
+        Error::Auth(_) => 401,
+        Error::PermissionDenied(_) => 403,
+        Error::NotFound(_) => 404,
+        Error::Invalid(_) | Error::Json(_) | Error::Config(_) => 400,
+        Error::Unavailable(_) | Error::Consensus(_) => 503,
+        _ => 500,
+    };
+    HttpResponse::json(status, &obj(vec![("error", e.to_string().as_str().into())]))
+}
+
+fn parse_user(req: &HttpRequest) -> Result<String> {
+    let body = std::str::from_utf8(&req.body)
+        .map_err(|_| Error::Invalid("body not utf-8".into()))?;
+    Ok(parse(body)?.req_str("user")?.to_string())
+}
+
+fn auth_register(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    let user = parse_user(req)?;
+    let token = store.register_user(&user)?;
+    Ok(HttpResponse::json(201, &obj(vec![("token", token.as_str().into())])))
+}
+
+fn auth_login(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    let user = parse_user(req)?;
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![("token", store.login(&user).as_str().into())]),
+    ))
+}
+
+fn metrics(store: &Arc<DynoStore>) -> HttpResponse {
+    let snap = store.metrics.snapshot();
+    let fields: Vec<(&str, Value)> =
+        snap.iter().map(|(k, v)| (*k, Value::from(*v))).collect();
+    HttpResponse::json(200, &obj(fields))
+}
+
+fn health(store: &Arc<DynoStore>) -> HttpResponse {
+    let infos = store.registry.infos();
+    let live = infos.iter().filter(|i| i.alive).count();
+    HttpResponse::json(
+        200,
+        &obj(vec![
+            ("status", if live > 0 { "ok" } else { "degraded" }.into()),
+            ("containers", infos.len().into()),
+            ("live", live.into()),
+        ]),
+    )
+}
+
+fn admin_repair(store: &Arc<DynoStore>) -> Result<HttpResponse> {
+    let r = store.repair()?;
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![
+            ("scanned", r.scanned.into()),
+            ("repaired", r.repaired.into()),
+            ("lost", r.lost.into()),
+            ("chunks_moved", r.chunks_moved.into()),
+        ]),
+    ))
+}
+
+fn admin_gc(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    let retention = if req.body.is_empty() {
+        crate::metadata::DEFAULT_RETENTION_SECS
+    } else {
+        let body = std::str::from_utf8(&req.body)
+            .map_err(|_| Error::Invalid("body not utf-8".into()))?;
+        parse(body)?.opt_u64("retention_secs", crate::metadata::DEFAULT_RETENTION_SECS)
+    };
+    let collected = store.gc(unix_secs(), retention)?;
+    Ok(HttpResponse::json(200, &obj(vec![("collected", collected.into())])))
+}
+
+/// Split `/objects/<collection...>/<name>` into (collection, name).
+fn split_object_path(path: &str) -> Result<(String, String)> {
+    let rest = path.strip_prefix("/objects").ok_or_else(|| Error::Invalid("path".into()))?;
+    let idx = rest.rfind('/').ok_or_else(|| Error::Invalid("missing object name".into()))?;
+    let (collection, name) = rest.split_at(idx);
+    let name = &name[1..];
+    if collection.is_empty() || name.is_empty() {
+        return Err(Error::Invalid(format!("bad object path '{path}'")));
+    }
+    Ok((collection.to_string(), name.to_string()))
+}
+
+fn object_route(store: &Arc<DynoStore>, method: &str, req: &HttpRequest) -> Result<HttpResponse> {
+    let token = req
+        .bearer_token()
+        .ok_or_else(|| Error::Auth("missing bearer token".into()))?
+        .to_string();
+    let (collection, name) = split_object_path(&req.path)?;
+    match method {
+        "PUT" => {
+            let report =
+                store.push(&token, &collection, &name, &req.body, PushOpts::default())?;
+            Ok(HttpResponse::json(
+                201,
+                &obj(vec![
+                    ("uuid", report.meta.uuid.as_str().into()),
+                    ("version", report.meta.version.into()),
+                    ("size", report.meta.size.into()),
+                    ("sim_s", report.sim_s.into()),
+                ]),
+            ))
+        }
+        "GET" => {
+            let report = store.pull(&token, &collection, &name, PullOpts::default())?;
+            Ok(HttpResponse::bytes(200, report.data))
+        }
+        "HEAD" => {
+            if store.exists(&token, &collection, &name)? {
+                Ok(HttpResponse::new(200))
+            } else {
+                Ok(HttpResponse::new(404))
+            }
+        }
+        "DELETE" => {
+            let deleted = store.evict(&token, &collection, &name)?;
+            Ok(HttpResponse::json(200, &obj(vec![("deleted_chunks", deleted.into())])))
+        }
+        other => Err(Error::Invalid(format!("method {other} not supported on objects"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{deploy_containers, AgentSpec};
+    use crate::net::HttpClient;
+    use crate::sim::{DeviceKind, Site};
+
+    fn gateway() -> (HttpServer, HttpClient) {
+        let ds = Arc::new(DynoStore::builder().build());
+        let specs: Vec<AgentSpec> = (0..12)
+            .map(|i| {
+                AgentSpec::new(format!("dc{i}"), Site::ChameleonUc, DeviceKind::ChameleonLocal)
+            })
+            .collect();
+        for c in deploy_containers(&specs, 12, 0).containers {
+            ds.add_container(c).unwrap();
+        }
+        let server = serve(ds, "127.0.0.1:0", 4).unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        (server, client)
+    }
+
+    fn register(client: &HttpClient, user: &str) -> String {
+        let resp = client
+            .post("/auth/register", &[], format!("{{\"user\": \"{user}\"}}").as_bytes())
+            .unwrap();
+        assert_eq!(resp.status, 201, "{:?}", String::from_utf8_lossy(&resp.body));
+        parse(std::str::from_utf8(&resp.body).unwrap())
+            .unwrap()
+            .req_str("token")
+            .unwrap()
+            .to_string()
+    }
+
+    #[test]
+    fn rest_object_lifecycle() {
+        let (_server, client) = gateway();
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        let payload: Vec<u8> = (0..50_000u32).map(|i| (i % 256) as u8).collect();
+
+        // PUT
+        let resp = client
+            .put("/objects/UserA/scan1", &[("authorization", &auth)], &payload)
+            .unwrap();
+        assert_eq!(resp.status, 201);
+
+        // HEAD
+        let head =
+            client.request("HEAD", "/objects/UserA/scan1", &[("authorization", &auth)], &[]);
+        assert_eq!(head.unwrap().status, 200);
+
+        // GET returns the exact bytes.
+        let got = client.get("/objects/UserA/scan1", &[("authorization", &auth)]).unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, payload);
+
+        // DELETE then 404.
+        let del =
+            client.delete("/objects/UserA/scan1", &[("authorization", &auth)]).unwrap();
+        assert_eq!(del.status, 200);
+        let gone = client.get("/objects/UserA/scan1", &[("authorization", &auth)]).unwrap();
+        assert_eq!(gone.status, 404);
+    }
+
+    #[test]
+    fn auth_rejected_without_token() {
+        let (_server, client) = gateway();
+        let resp = client.get("/objects/UserA/x", &[]).unwrap();
+        assert_eq!(resp.status, 401);
+        let resp =
+            client.get("/objects/UserA/x", &[("authorization", "Bearer junk")]).unwrap();
+        assert_eq!(resp.status, 401);
+    }
+
+    #[test]
+    fn permission_denied_is_403() {
+        let (_server, client) = gateway();
+        let token_a = register(&client, "UserA");
+        let token_b = register(&client, "UserB");
+        let auth_a = format!("Bearer {token_a}");
+        let auth_b = format!("Bearer {token_b}");
+        client.put("/objects/UserA/secret", &[("authorization", &auth_a)], b"x").unwrap();
+        let resp =
+            client.get("/objects/UserA/secret", &[("authorization", &auth_b)]).unwrap();
+        assert_eq!(resp.status, 403);
+    }
+
+    #[test]
+    fn metrics_health_admin_endpoints() {
+        let (_server, client) = gateway();
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        client.put("/objects/UserA/o", &[("authorization", &auth)], b"data").unwrap();
+
+        let m = client.get("/metrics", &[]).unwrap();
+        assert_eq!(m.status, 200);
+        let v = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(v.req_u64("pushes").unwrap(), 1);
+
+        let h = client.get("/health", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+        assert_eq!(v.req_str("status").unwrap(), "ok");
+        assert_eq!(v.req_u64("containers").unwrap(), 12);
+
+        let r = client.post("/admin/repair", &[], &[]).unwrap();
+        assert_eq!(r.status, 200);
+        let g = client.post("/admin/gc", &[], b"{\"retention_secs\": 0}").unwrap();
+        assert_eq!(g.status, 200);
+    }
+
+    #[test]
+    fn duplicate_registration_conflicts() {
+        let (_server, client) = gateway();
+        register(&client, "UserA");
+        let resp = client.post("/auth/register", &[], b"{\"user\": \"UserA\"}").unwrap();
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn split_object_path_cases() {
+        assert_eq!(
+            split_object_path("/objects/UserA/Col/Sub/name.bin").unwrap(),
+            ("/UserA/Col/Sub".to_string(), "name.bin".to_string())
+        );
+        assert!(split_object_path("/objects/onlyname").is_err());
+        assert!(split_object_path("/objects/UserA/").is_err());
+    }
+}

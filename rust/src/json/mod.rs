@@ -1,0 +1,185 @@
+//! Minimal JSON: a `Value` tree, a recursive-descent parser, and a
+//! writer. Stands in for serde/serde_json (absent from the vendored
+//! crate set); used by the config system, the artifact manifest loader,
+//! the REST gateway, and the bench harness's machine-readable output.
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A JSON value. Objects are ordered maps (BTreeMap) so output is
+/// deterministic — important for golden tests and manifest diffs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `Null` for missing keys or non-objects.
+    pub fn get(&self, key: &str) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Obj(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Typed field accessors that produce crate errors for config code.
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .as_str()
+            .ok_or_else(|| Error::Json(format!("missing string field '{key}'")))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .as_u64()
+            .ok_or_else(|| Error::Json(format!("missing integer field '{key}'")))
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).as_u64().unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).as_f64().unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).as_str().unwrap_or(default)
+    }
+
+    pub fn opt_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).as_bool().unwrap_or(default)
+    }
+}
+
+/// Convenience constructor for object values.
+pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+
+impl From<Vec<Value>> for Value {
+    fn from(a: Vec<Value>) -> Self {
+        Value::Arr(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = obj(vec![
+            ("name", "dyno".into()),
+            ("n", 10u64.into()),
+            ("ratio", 0.5.into()),
+            ("on", true.into()),
+            ("tags", Value::Arr(vec!["a".into(), "b".into()])),
+        ]);
+        assert_eq!(v.req_str("name").unwrap(), "dyno");
+        assert_eq!(v.req_u64("n").unwrap(), 10);
+        assert_eq!(v.opt_f64("ratio", 0.0), 0.5);
+        assert!(v.opt_bool("on", false));
+        assert_eq!(v.get("tags").as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("missing"), &Value::Null);
+        assert!(v.req_str("missing").is_err());
+    }
+
+    #[test]
+    fn u64_rejects_fractions_and_negatives() {
+        assert_eq!(Value::Num(1.5).as_u64(), None);
+        assert_eq!(Value::Num(-2.0).as_u64(), None);
+        assert_eq!(Value::Num(7.0).as_u64(), Some(7));
+    }
+}

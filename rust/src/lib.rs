@@ -1,0 +1,105 @@
+//! # DynoStore
+//!
+//! A wide-area distribution system for the management of data over
+//! heterogeneous storage — a full reproduction of Sanchez-Gallegos et al.
+//! (CS.DC 2025) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * **Substrates** — [`util`], [`json`], [`crypto`] (SHA3-256 from
+//!   scratch, AES-256-CTR, HMAC tokens), [`gf256`] (field arithmetic),
+//!   [`testkit`] (property-testing mini-framework), [`sim`] (WAN +
+//!   storage-device + failure models standing in for the paper's
+//!   Chameleon/AWS/Madrid testbed).
+//! * **Data plane** — [`erasure`] (the IDA of paper §IV-D, Algorithms
+//!   1-2), [`container`] (data containers: backend trait, LRU cache,
+//!   monitor), [`runtime`] (PJRT-compiled GF(2^8) kernels on the hot
+//!   path).
+//! * **Control plane** — [`metadata`] (namespaces, versioning, GC,
+//!   permissions), [`paxos`] (replicated metadata consistency, §IV-B),
+//!   [`registry`], [`health`], [`placement`] (utilization-factor load
+//!   balancing, Eq. 1-2), [`gateway`], [`policy`].
+//! * **System assembly** — [`coordinator`] (the DynoStore server),
+//!   [`client`] (push/pull/exists/evict with parallel channels and
+//!   client-side encryption), [`faas`] (Globus-Compute/ProxyStore-style
+//!   case-study substrate).
+//! * **Evaluation** — [`baselines`] (HDFS / Redis-like / IPFS-like /
+//!   S3-like comparators), [`bench`] (criterion-less harness used by
+//!   `rust/benches/`).
+//!
+//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
+//! reproduction results.
+
+pub mod baselines;
+pub mod bench;
+pub mod client;
+pub mod config;
+pub mod container;
+pub mod coordinator;
+pub mod crypto;
+pub mod erasure;
+pub mod faas;
+pub mod gateway;
+pub mod gf256;
+pub mod health;
+pub mod json;
+pub mod metadata;
+pub mod net;
+pub mod paxos;
+pub mod placement;
+pub mod policy;
+pub mod registry;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+pub use client::Client;
+pub use config::Config;
+pub use coordinator::DynoStore;
+pub use erasure::ErasureConfig;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config: {0}")]
+    Config(String),
+    #[error("auth: {0}")]
+    Auth(String),
+    #[error("not found: {0}")]
+    NotFound(String),
+    #[error("permission denied: {0}")]
+    PermissionDenied(String),
+    #[error("integrity: {0}")]
+    Integrity(String),
+    #[error("erasure: {0}")]
+    Erasure(String),
+    #[error("placement: {0}")]
+    Placement(String),
+    #[error("consensus: {0}")]
+    Consensus(String),
+    #[error("container: {0}")]
+    Container(String),
+    #[error("runtime: {0}")]
+    Runtime(String),
+    #[error("net: {0}")]
+    Net(String),
+    #[error("json: {0}")]
+    Json(String),
+    #[error("unavailable: {0}")]
+    Unavailable(String),
+    #[error("invalid: {0}")]
+    Invalid(String),
+}
+
+impl Error {
+    /// True when retrying against a different replica/container may help.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Unavailable(_) | Error::Net(_) | Error::Io(_))
+    }
+}

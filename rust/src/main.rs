@@ -1,0 +1,230 @@
+//! DynoStore CLI: deploy/serve a gateway, and push / pull / exists /
+//! evict objects against a running gateway (paper §V's command-line
+//! client), plus admin operations.
+//!
+//! ```text
+//! dynostore serve  --config cluster.json --addr 127.0.0.1:8080
+//! dynostore register --addr HOST:PORT --user UserA
+//! dynostore push   --addr HOST:PORT --token T /UserA/col/name ./file
+//! dynostore pull   --addr HOST:PORT --token T /UserA/col/name ./out
+//! dynostore exists --addr HOST:PORT --token T /UserA/col/name
+//! dynostore evict  --addr HOST:PORT --token T /UserA/col/name
+//! dynostore admin  --addr HOST:PORT repair|gc|metrics|health
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dynostore::json::parse;
+use dynostore::net::HttpClient;
+use dynostore::{gateway, Config};
+
+fn main() {
+    dynostore::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny flag parser: `--key value` pairs + positional arguments.
+fn parse_args(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), String::new());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, positional)
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let (flags, pos) = parse_args(&args[1..]);
+    match cmd.as_str() {
+        "serve" => serve(&flags),
+        "register" => register(&flags),
+        "push" | "pull" | "exists" | "evict" => object_op(cmd, &flags, &pos),
+        "admin" => admin(&flags, &pos),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try: dynostore help)")),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "dynostore — wide-area data distribution over heterogeneous storage\n\
+         \n\
+         commands:\n\
+         \x20 serve    --config FILE [--addr 127.0.0.1:8080] [--workers 8]\n\
+         \x20 register --addr HOST:PORT --user NAME\n\
+         \x20 push     --addr HOST:PORT --token T PATH FILE\n\
+         \x20 pull     --addr HOST:PORT --token T PATH [OUT]\n\
+         \x20 exists   --addr HOST:PORT --token T PATH\n\
+         \x20 evict    --addr HOST:PORT --token T PATH\n\
+         \x20 admin    --addr HOST:PORT repair|gc|metrics|health\n\
+         \n\
+         PATH is /User/Collection.../name. See README.md for the config\n\
+         file format and examples/ for library usage."
+    );
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
+    let config = match flags.get("config") {
+        Some(path) => Config::from_file(path).map_err(|e| e.to_string())?,
+        None => {
+            log::warn!("no --config given; starting an empty default deployment");
+            Config::default()
+        }
+    };
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".into());
+    let workers: usize =
+        flags.get("workers").and_then(|w| w.parse().ok()).unwrap_or(8);
+    let store = config.build().map_err(|e| e.to_string())?;
+    let server =
+        gateway::serve(Arc::clone(&store), &addr, workers).map_err(|e| e.to_string())?;
+    log::info!(
+        "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?})",
+        server.addr(),
+        store.registry.len(),
+        store.meta.replica_count(),
+        store.default_policy
+    );
+    println!("listening on {}", server.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn need<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str, String> {
+    flags.get(key).map(|s| s.as_str()).ok_or_else(|| format!("missing --{key}"))
+}
+
+fn register(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = need(flags, "addr")?;
+    let user = need(flags, "user")?;
+    let client = HttpClient::new(addr);
+    let resp = client
+        .post("/auth/register", &[], format!("{{\"user\": \"{user}\"}}").as_bytes())
+        .map_err(|e| e.to_string())?;
+    let body = String::from_utf8_lossy(&resp.body).to_string();
+    if resp.status != 201 {
+        return Err(format!("register failed ({}): {body}", resp.status));
+    }
+    let token = parse(&body)
+        .map_err(|e| e.to_string())?
+        .req_str("token")
+        .map_err(|e| e.to_string())?
+        .to_string();
+    println!("{token}");
+    Ok(())
+}
+
+fn object_op(
+    cmd: &str,
+    flags: &HashMap<String, String>,
+    pos: &[String],
+) -> Result<(), String> {
+    let addr = need(flags, "addr")?;
+    let token = need(flags, "token")?;
+    let path = pos.first().ok_or("missing object PATH")?;
+    let auth = format!("Bearer {token}");
+    let client = HttpClient::new(addr);
+    let url = format!("/objects{path}");
+    match cmd {
+        "push" => {
+            let file = pos.get(1).ok_or("missing FILE to push")?;
+            let data = std::fs::read(file).map_err(|e| e.to_string())?;
+            let resp = client
+                .put(&url, &[("authorization", &auth)], &data)
+                .map_err(|e| e.to_string())?;
+            println!("{}", String::from_utf8_lossy(&resp.body));
+            if resp.status == 201 {
+                Ok(())
+            } else {
+                Err(format!("push failed: {}", resp.status))
+            }
+        }
+        "pull" => {
+            let resp = client
+                .get(&url, &[("authorization", &auth)])
+                .map_err(|e| e.to_string())?;
+            if resp.status != 200 {
+                return Err(format!(
+                    "pull failed ({}): {}",
+                    resp.status,
+                    String::from_utf8_lossy(&resp.body)
+                ));
+            }
+            match pos.get(1) {
+                Some(out) => {
+                    std::fs::write(out, &resp.body).map_err(|e| e.to_string())?;
+                    println!("wrote {} bytes to {out}", resp.body.len());
+                }
+                None => {
+                    use std::io::Write;
+                    std::io::stdout().write_all(&resp.body).map_err(|e| e.to_string())?;
+                }
+            }
+            Ok(())
+        }
+        "exists" => {
+            let resp = client
+                .request("HEAD", &url, &[("authorization", &auth)], &[])
+                .map_err(|e| e.to_string())?;
+            println!("{}", if resp.status == 200 { "true" } else { "false" });
+            Ok(())
+        }
+        "evict" => {
+            let resp = client
+                .delete(&url, &[("authorization", &auth)])
+                .map_err(|e| e.to_string())?;
+            println!("{}", String::from_utf8_lossy(&resp.body));
+            if resp.status == 200 {
+                Ok(())
+            } else {
+                Err(format!("evict failed: {}", resp.status))
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn admin(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
+    let addr = need(flags, "addr")?;
+    let action = pos.first().map(|s| s.as_str()).unwrap_or("metrics");
+    let client = HttpClient::new(addr);
+    let resp = match action {
+        "repair" => client.post("/admin/repair", &[], &[]),
+        "gc" => client.post("/admin/gc", &[], &[]),
+        "metrics" => client.get("/metrics", &[]),
+        "health" => client.get("/health", &[]),
+        other => return Err(format!("unknown admin action '{other}'")),
+    }
+    .map_err(|e| e.to_string())?;
+    println!("{}", String::from_utf8_lossy(&resp.body));
+    Ok(())
+}

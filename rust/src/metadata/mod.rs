@@ -1,0 +1,17 @@
+//! Metadata service (paper §III-B, §IV-A, §IV-B): object records with
+//! UUIDs, locations, sizes and ownership; per-user virtual namespaces
+//! with nested collections; inherited permissions; immutable objects
+//! with versioning; and garbage collection of outdated versions.
+//!
+//! The in-process store here is the single-replica service; replicated
+//! deployments wrap it in [`crate::paxos::ReplicatedMeta`], which runs
+//! the paper's Paxos update protocol across replicas and provides the
+//! strong read-after-write guarantee of §IV-B.
+
+mod namespace;
+mod store;
+
+pub use namespace::{normalize_path, parent_path, validate_name};
+pub use store::{
+    MetadataStore, ObjectMeta, ObjectPlacement, Permission, DEFAULT_RETENTION_SECS,
+};

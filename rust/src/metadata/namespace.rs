@@ -1,0 +1,96 @@
+//! Namespace path handling (paper §IV-A): Unix-like absolute collection
+//! paths rooted at the user's namespace, e.g.
+//! `/UserA/Satellite/Region1/Scene2`.
+
+use crate::{Error, Result};
+
+/// Validate a single path segment / object name.
+pub fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        return Err(Error::Invalid("empty name".into()));
+    }
+    if name.len() > 255 {
+        return Err(Error::Invalid("name longer than 255 bytes".into()));
+    }
+    if name.contains('/') || name == "." || name == ".." {
+        return Err(Error::Invalid(format!("invalid name '{name}'")));
+    }
+    Ok(())
+}
+
+/// Normalize an absolute collection path: must start with `/`, no empty
+/// or dot segments, no trailing slash (except the root itself is not a
+/// valid collection — every path lives inside a user namespace).
+pub fn normalize_path(path: &str) -> Result<String> {
+    if !path.starts_with('/') {
+        return Err(Error::Invalid(format!("path '{path}' is not absolute")));
+    }
+    let segments: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    if segments.is_empty() {
+        return Err(Error::Invalid("path has no user namespace".into()));
+    }
+    for s in &segments {
+        validate_name(s)?;
+    }
+    Ok(format!("/{}", segments.join("/")))
+}
+
+/// Parent collection of a normalized path; `None` for a namespace root.
+pub fn parent_path(path: &str) -> Option<String> {
+    let idx = path.rfind('/')?;
+    if idx == 0 {
+        None
+    } else {
+        Some(path[..idx].to_string())
+    }
+}
+
+/// The namespace owner of a normalized path (first segment).
+pub fn namespace_owner(path: &str) -> &str {
+    path.trim_start_matches('/').split('/').next().unwrap_or("")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_paths() {
+        assert_eq!(normalize_path("/UserA/Col1").unwrap(), "/UserA/Col1");
+        assert_eq!(normalize_path("/UserA//Col1/").unwrap(), "/UserA/Col1");
+        assert_eq!(normalize_path("/UserA").unwrap(), "/UserA");
+    }
+
+    #[test]
+    fn rejects_bad_paths() {
+        assert!(normalize_path("relative/path").is_err());
+        assert!(normalize_path("/").is_err());
+        assert!(normalize_path("/UserA/../UserB").is_err());
+        assert!(normalize_path("/UserA/.").is_err());
+    }
+
+    #[test]
+    fn parent_chain() {
+        assert_eq!(
+            parent_path("/UserA/Satellite/Region1"),
+            Some("/UserA/Satellite".into())
+        );
+        assert_eq!(parent_path("/UserA/Satellite"), Some("/UserA".into()));
+        assert_eq!(parent_path("/UserA"), None);
+    }
+
+    #[test]
+    fn namespace_owner_is_first_segment() {
+        assert_eq!(namespace_owner("/UserA/Col/Sub"), "UserA");
+        assert_eq!(namespace_owner("/UserA"), "UserA");
+    }
+
+    #[test]
+    fn validate_name_rules() {
+        assert!(validate_name("scene-2.tif").is_ok());
+        assert!(validate_name("").is_err());
+        assert!(validate_name("a/b").is_err());
+        assert!(validate_name("..").is_err());
+        assert!(validate_name(&"x".repeat(256)).is_err());
+    }
+}

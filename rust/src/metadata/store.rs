@@ -1,0 +1,585 @@
+//! The metadata store: object records, version chains, ACLs, GC.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::metadata::namespace::{namespace_owner, normalize_path, parent_path, validate_name};
+use crate::util::{to_hex, Rng};
+use crate::{Error, Result};
+
+/// Default retention for superseded versions: 30 days (paper §IV-B).
+pub const DEFAULT_RETENTION_SECS: u64 = 30 * 24 * 3600;
+
+/// Access permissions at object/collection granularity (paper §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Permission {
+    Read,
+    Write,
+}
+
+/// Where the bytes of one object version live.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObjectPlacement {
+    /// Regular policy: whole object on a single container.
+    Single { container: u32 },
+    /// Resilience policy: chunk index → container id (paper §IV-D).
+    Erasure { n: usize, k: usize, chunks: Vec<(u8, u32)> },
+}
+
+impl ObjectPlacement {
+    /// All containers referenced by this placement.
+    pub fn containers(&self) -> Vec<u32> {
+        match self {
+            ObjectPlacement::Single { container } => vec![*container],
+            ObjectPlacement::Erasure { chunks, .. } => {
+                chunks.iter().map(|&(_, c)| c).collect()
+            }
+        }
+    }
+}
+
+/// One immutable object version (paper §IV-B: updates create a new UUID).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectMeta {
+    pub uuid: String,
+    pub name: String,
+    pub collection: String,
+    pub owner: String,
+    pub size: u64,
+    pub sha3: [u8; 32],
+    pub version: u64,
+    pub created_at: u64,
+    /// Set when a newer version replaced this one (GC clock starts).
+    pub superseded_at: Option<u64>,
+    pub placement: ObjectPlacement,
+}
+
+#[derive(Debug, Default)]
+struct Collection {
+    owner: String,
+    /// user → permissions granted directly on this collection.
+    acl: HashMap<String, Vec<Permission>>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Normalized collection path → collection record.
+    collections: BTreeMap<String, Collection>,
+    /// uuid → object version record.
+    objects: HashMap<String, ObjectMeta>,
+    /// (collection, name) → version chain, oldest → newest uuid.
+    chains: HashMap<(String, String), Vec<String>>,
+    /// Monotonic version counter per (collection, name).
+    rng: Option<Rng>,
+    uuid_counter: u64,
+}
+
+/// Single-replica metadata service. All operations take `now` (unix
+/// seconds) explicitly so replicated mode and the simulators control
+/// time; the gateway passes wall-clock.
+pub struct MetadataStore {
+    inner: Mutex<Inner>,
+}
+
+impl Default for MetadataStore {
+    fn default() -> Self {
+        Self::new(0xD1_5705)
+    }
+}
+
+impl MetadataStore {
+    pub fn new(seed: u64) -> Self {
+        MetadataStore {
+            inner: Mutex::new(Inner {
+                rng: Some(Rng::new(seed)),
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// Create a user namespace: the root collection `/{user}` (paper
+    /// §IV-A: "all objects in a namespace are stored in a root collection
+    /// named after the user").
+    pub fn create_namespace(&self, user: &str) -> Result<String> {
+        validate_name(user)?;
+        let path = format!("/{user}");
+        let mut inner = self.inner.lock().unwrap();
+        if inner.collections.contains_key(&path) {
+            return Err(Error::Invalid(format!("namespace {path} exists")));
+        }
+        inner.collections.insert(
+            path.clone(),
+            Collection { owner: user.to_string(), acl: HashMap::new() },
+        );
+        Ok(path)
+    }
+
+    /// Create a (possibly nested) collection. The parent must exist and
+    /// the caller needs Write on it.
+    pub fn create_collection(&self, caller: &str, path: &str) -> Result<String> {
+        let path = normalize_path(path)?;
+        let parent = parent_path(&path)
+            .ok_or_else(|| Error::Invalid("cannot create a namespace root here".into()))?;
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.collections.contains_key(&parent) {
+            return Err(Error::NotFound(format!("parent collection {parent}")));
+        }
+        if inner.collections.contains_key(&path) {
+            return Err(Error::Invalid(format!("collection {path} exists")));
+        }
+        check_perm(&inner, caller, &parent, Permission::Write)?;
+        inner.collections.insert(
+            path.clone(),
+            Collection { owner: namespace_owner(&path).to_string(), acl: HashMap::new() },
+        );
+        Ok(path)
+    }
+
+    pub fn collection_exists(&self, path: &str) -> bool {
+        match normalize_path(path) {
+            Ok(p) => self.inner.lock().unwrap().collections.contains_key(&p),
+            Err(_) => false,
+        }
+    }
+
+    /// Grant `perm` on a collection to `user` (inherited by everything
+    /// below, paper §IV-A). Only the namespace owner may grant.
+    pub fn grant(&self, caller: &str, path: &str, user: &str, perm: Permission) -> Result<()> {
+        let path = normalize_path(path)?;
+        let mut inner = self.inner.lock().unwrap();
+        let col = inner
+            .collections
+            .get_mut(&path)
+            .ok_or_else(|| Error::NotFound(format!("collection {path}")))?;
+        if col.owner != caller {
+            return Err(Error::PermissionDenied(format!(
+                "{caller} does not own {path}"
+            )));
+        }
+        let perms = col.acl.entry(user.to_string()).or_default();
+        if !perms.contains(&perm) {
+            perms.push(perm);
+        }
+        Ok(())
+    }
+
+    /// Revoke a direct grant (does not sever ownership).
+    pub fn revoke(&self, caller: &str, path: &str, user: &str, perm: Permission) -> Result<()> {
+        let path = normalize_path(path)?;
+        let mut inner = self.inner.lock().unwrap();
+        let col = inner
+            .collections
+            .get_mut(&path)
+            .ok_or_else(|| Error::NotFound(format!("collection {path}")))?;
+        if col.owner != caller {
+            return Err(Error::PermissionDenied(format!(
+                "{caller} does not own {path}"
+            )));
+        }
+        if let Some(perms) = col.acl.get_mut(user) {
+            perms.retain(|&p| p != perm);
+        }
+        Ok(())
+    }
+
+    /// Check effective permission with inheritance along the path chain.
+    pub fn check_access(&self, user: &str, path: &str, perm: Permission) -> Result<()> {
+        let path = normalize_path(path)?;
+        let inner = self.inner.lock().unwrap();
+        check_perm(&inner, user, &path, perm)
+    }
+
+    /// Record a new object version (paper §IV-B: a new UUID each time);
+    /// returns the metadata. Caller needs Write on the collection.
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_object(
+        &self,
+        caller: &str,
+        collection: &str,
+        name: &str,
+        size: u64,
+        sha3: [u8; 32],
+        placement: ObjectPlacement,
+        now: u64,
+    ) -> Result<ObjectMeta> {
+        validate_name(name)?;
+        let collection = normalize_path(collection)?;
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.collections.contains_key(&collection) {
+            return Err(Error::NotFound(format!("collection {collection}")));
+        }
+        check_perm(&inner, caller, &collection, Permission::Write)?;
+
+        let uuid = next_uuid(&mut inner);
+        let chain_key = (collection.clone(), name.to_string());
+        let version = inner.chains.get(&chain_key).map_or(0, |c| c.len() as u64);
+        // Supersede the previous latest version (starts its GC clock).
+        if let Some(chain) = inner.chains.get(&chain_key) {
+            if let Some(prev) = chain.last().cloned() {
+                if let Some(meta) = inner.objects.get_mut(&prev) {
+                    meta.superseded_at = Some(now);
+                }
+            }
+        }
+        let meta = ObjectMeta {
+            uuid: uuid.clone(),
+            name: name.to_string(),
+            collection: collection.clone(),
+            owner: namespace_owner(&collection).to_string(),
+            size,
+            sha3,
+            version,
+            created_at: now,
+            superseded_at: None,
+            placement,
+        };
+        inner.objects.insert(uuid.clone(), meta.clone());
+        inner.chains.entry(chain_key).or_default().push(uuid);
+        Ok(meta)
+    }
+
+    /// Latest version of `(collection, name)`; caller needs Read.
+    pub fn get_latest(&self, caller: &str, collection: &str, name: &str) -> Result<ObjectMeta> {
+        let collection = normalize_path(collection)?;
+        let inner = self.inner.lock().unwrap();
+        check_perm(&inner, caller, &collection, Permission::Read)?;
+        let chain = inner
+            .chains
+            .get(&(collection.clone(), name.to_string()))
+            .ok_or_else(|| Error::NotFound(format!("{collection}/{name}")))?;
+        let uuid = chain.last().ok_or_else(|| Error::NotFound(name.to_string()))?;
+        Ok(inner.objects[uuid].clone())
+    }
+
+    /// A specific historical version (paper §IV-B: roll back support).
+    pub fn get_version(
+        &self,
+        caller: &str,
+        collection: &str,
+        name: &str,
+        version: u64,
+    ) -> Result<ObjectMeta> {
+        let collection = normalize_path(collection)?;
+        let inner = self.inner.lock().unwrap();
+        check_perm(&inner, caller, &collection, Permission::Read)?;
+        let chain = inner
+            .chains
+            .get(&(collection.clone(), name.to_string()))
+            .ok_or_else(|| Error::NotFound(format!("{collection}/{name}")))?;
+        // Versions are stable identifiers even after GC removes earlier
+        // entries from the chain, so search by the recorded version.
+        let uuid = chain
+            .iter()
+            .find(|u| inner.objects.get(*u).map(|m| m.version) == Some(version))
+            .ok_or_else(|| Error::NotFound(format!("{name} v{version}")))?;
+        Ok(inner.objects[uuid].clone())
+    }
+
+    /// Lookup by UUID without path resolution (container-side checks,
+    /// health re-replication).
+    pub fn get_by_uuid(&self, uuid: &str) -> Result<ObjectMeta> {
+        self.inner
+            .lock()
+            .unwrap()
+            .objects
+            .get(uuid)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("uuid {uuid}")))
+    }
+
+    /// Names (latest versions) in a collection; caller needs Read.
+    pub fn list(&self, caller: &str, collection: &str) -> Result<Vec<ObjectMeta>> {
+        let collection = normalize_path(collection)?;
+        let inner = self.inner.lock().unwrap();
+        check_perm(&inner, caller, &collection, Permission::Read)?;
+        let mut out: Vec<ObjectMeta> = inner
+            .chains
+            .iter()
+            .filter(|((col, _), chain)| col == &collection && !chain.is_empty())
+            .map(|(_, chain)| inner.objects[chain.last().unwrap()].clone())
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(out)
+    }
+
+    /// Remove an object and ALL its versions (client `evict`); returns
+    /// the removed records so the coordinator can delete chunks.
+    pub fn evict(&self, caller: &str, collection: &str, name: &str) -> Result<Vec<ObjectMeta>> {
+        let collection = normalize_path(collection)?;
+        let mut inner = self.inner.lock().unwrap();
+        check_perm(&inner, caller, &collection, Permission::Write)?;
+        let chain = inner
+            .chains
+            .remove(&(collection.clone(), name.to_string()))
+            .ok_or_else(|| Error::NotFound(format!("{collection}/{name}")))?;
+        Ok(chain.iter().filter_map(|u| inner.objects.remove(u)).collect())
+    }
+
+    /// Garbage-collect superseded versions older than `retention_secs`
+    /// (paper §IV-B: default 30 days, user-customizable). Returns the
+    /// collected records for chunk deletion.
+    pub fn gc(&self, now: u64, retention_secs: u64) -> Vec<ObjectMeta> {
+        let mut inner = self.inner.lock().unwrap();
+        let expired: Vec<String> = inner
+            .objects
+            .values()
+            .filter(|m| {
+                m.superseded_at
+                    .map(|t| now.saturating_sub(t) >= retention_secs)
+                    .unwrap_or(false)
+            })
+            .map(|m| m.uuid.clone())
+            .collect();
+        let mut out = Vec::with_capacity(expired.len());
+        for uuid in expired {
+            if let Some(meta) = inner.objects.remove(&uuid) {
+                let key = (meta.collection.clone(), meta.name.clone());
+                if let Some(chain) = inner.chains.get_mut(&key) {
+                    chain.retain(|u| u != &uuid);
+                }
+                out.push(meta);
+            }
+        }
+        out
+    }
+
+    /// Total live object-version count (tests, metrics).
+    pub fn object_count(&self) -> usize {
+        self.inner.lock().unwrap().objects.len()
+    }
+
+    /// Every live object version (health repair sweeps, Table II census).
+    pub fn all_objects(&self) -> Vec<ObjectMeta> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<ObjectMeta> = inner.objects.values().cloned().collect();
+        out.sort_by(|a, b| a.uuid.cmp(&b.uuid));
+        out
+    }
+
+    /// Repoint an object version's placement (health-service repair,
+    /// §III-B: "dynamically reallocates operations to healthy
+    /// containers").
+    pub fn update_placement(&self, uuid: &str, placement: ObjectPlacement) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let meta = inner
+            .objects
+            .get_mut(uuid)
+            .ok_or_else(|| Error::NotFound(format!("uuid {uuid}")))?;
+        meta.placement = placement;
+        Ok(())
+    }
+}
+
+/// UUID v4-style identifier from the store's deterministic RNG.
+fn next_uuid(inner: &mut Inner) -> String {
+    inner.uuid_counter += 1;
+    let rng = inner.rng.as_mut().expect("rng present");
+    let mut bytes = [0u8; 16];
+    rng.fill_bytes(&mut bytes);
+    bytes[6] = (bytes[6] & 0x0f) | 0x40;
+    bytes[8] = (bytes[8] & 0x3f) | 0x80;
+    let h = to_hex(&bytes);
+    format!("{}-{}-{}-{}-{}", &h[0..8], &h[8..12], &h[12..16], &h[16..20], &h[20..32])
+}
+
+/// Permission check with inheritance: walk from `path` up to the
+/// namespace root; the namespace owner always passes; a direct grant on
+/// any ancestor passes (paper §IV-A: "permissions are inherited by
+/// default").
+fn check_perm(inner: &Inner, user: &str, path: &str, perm: Permission) -> Result<()> {
+    if namespace_owner(path) == user {
+        return Ok(());
+    }
+    let mut cur = Some(path.to_string());
+    while let Some(p) = cur {
+        if let Some(col) = inner.collections.get(&p) {
+            if col.owner == user {
+                return Ok(());
+            }
+            if let Some(perms) = col.acl.get(user) {
+                if perms.contains(&perm) {
+                    return Ok(());
+                }
+                // Write implies Read.
+                if perm == Permission::Read && perms.contains(&Permission::Write) {
+                    return Ok(());
+                }
+            }
+        }
+        cur = parent_path(&p);
+    }
+    Err(Error::PermissionDenied(format!("{user} lacks {perm:?} on {path}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> MetadataStore {
+        let s = MetadataStore::new(1);
+        s.create_namespace("UserA").unwrap();
+        s.create_namespace("UserB").unwrap();
+        s
+    }
+
+    fn place(c: u32) -> ObjectPlacement {
+        ObjectPlacement::Single { container: c }
+    }
+
+    #[test]
+    fn namespace_and_nested_collections() {
+        let s = store();
+        s.create_collection("UserA", "/UserA/Satellite").unwrap();
+        s.create_collection("UserA", "/UserA/Satellite/Region1").unwrap();
+        assert!(s.collection_exists("/UserA/Satellite/Region1"));
+        // Parent must exist.
+        assert!(s.create_collection("UserA", "/UserA/X/Y").is_err());
+        // Duplicate rejected.
+        assert!(s.create_collection("UserA", "/UserA/Satellite").is_err());
+    }
+
+    #[test]
+    fn cross_namespace_creation_denied() {
+        let s = store();
+        assert!(matches!(
+            s.create_collection("UserB", "/UserA/Stolen"),
+            Err(Error::PermissionDenied(_))
+        ));
+    }
+
+    #[test]
+    fn versioning_assigns_new_uuids() {
+        let s = store();
+        let v0 = s
+            .put_object("UserA", "/UserA", "obj", 10, [0; 32], place(1), 100)
+            .unwrap();
+        let v1 = s
+            .put_object("UserA", "/UserA", "obj", 20, [1; 32], place(2), 200)
+            .unwrap();
+        assert_ne!(v0.uuid, v1.uuid);
+        assert_eq!(v0.version, 0);
+        assert_eq!(v1.version, 1);
+        let latest = s.get_latest("UserA", "/UserA", "obj").unwrap();
+        assert_eq!(latest.uuid, v1.uuid);
+        // Roll back to v0 (paper: versioning enables rollback).
+        let old = s.get_version("UserA", "/UserA", "obj", 0).unwrap();
+        assert_eq!(old.uuid, v0.uuid);
+        assert_eq!(old.superseded_at, Some(200));
+    }
+
+    #[test]
+    fn permissions_inherit_down_the_tree() {
+        let s = store();
+        s.create_collection("UserA", "/UserA/Col1").unwrap();
+        s.create_collection("UserA", "/UserA/Col1/Sub2").unwrap();
+        s.put_object("UserA", "/UserA/Col1/Sub2", "o", 1, [0; 32], place(1), 1)
+            .unwrap();
+        // UserB cannot read before the grant.
+        assert!(s.get_latest("UserB", "/UserA/Col1/Sub2", "o").is_err());
+        // Grant on the PARENT collection extends to the subcollection
+        // (paper's /UserA/Collection1 → Subcollection2 example).
+        s.grant("UserA", "/UserA/Col1", "UserB", Permission::Read).unwrap();
+        assert!(s.get_latest("UserB", "/UserA/Col1/Sub2", "o").is_ok());
+        // But not to unrelated collections.
+        s.create_collection("UserA", "/UserA/Other").unwrap();
+        s.put_object("UserA", "/UserA/Other", "o2", 1, [0; 32], place(1), 1).unwrap();
+        assert!(s.get_latest("UserB", "/UserA/Other", "o2").is_err());
+    }
+
+    #[test]
+    fn revoke_removes_access() {
+        let s = store();
+        s.create_collection("UserA", "/UserA/Col").unwrap();
+        s.grant("UserA", "/UserA/Col", "UserB", Permission::Read).unwrap();
+        s.put_object("UserA", "/UserA/Col", "o", 1, [0; 32], place(1), 1).unwrap();
+        assert!(s.get_latest("UserB", "/UserA/Col", "o").is_ok());
+        s.revoke("UserA", "/UserA/Col", "UserB", Permission::Read).unwrap();
+        assert!(s.get_latest("UserB", "/UserA/Col", "o").is_err());
+    }
+
+    #[test]
+    fn only_owner_grants() {
+        let s = store();
+        s.create_collection("UserA", "/UserA/Col").unwrap();
+        assert!(matches!(
+            s.grant("UserB", "/UserA/Col", "UserB", Permission::Read),
+            Err(Error::PermissionDenied(_))
+        ));
+    }
+
+    #[test]
+    fn write_implies_read() {
+        let s = store();
+        s.create_collection("UserA", "/UserA/Col").unwrap();
+        s.grant("UserA", "/UserA/Col", "UserB", Permission::Write).unwrap();
+        s.put_object("UserB", "/UserA/Col", "o", 1, [0; 32], place(1), 1).unwrap();
+        assert!(s.get_latest("UserB", "/UserA/Col", "o").is_ok());
+    }
+
+    #[test]
+    fn gc_respects_retention() {
+        let s = store();
+        s.put_object("UserA", "/UserA", "obj", 1, [0; 32], place(1), 1000).unwrap();
+        s.put_object("UserA", "/UserA", "obj", 2, [1; 32], place(2), 2000).unwrap();
+        // Superseded at t=2000; retention 30 days.
+        let none = s.gc(2000 + DEFAULT_RETENTION_SECS - 1, DEFAULT_RETENTION_SECS);
+        assert!(none.is_empty());
+        let collected = s.gc(2000 + DEFAULT_RETENTION_SECS, DEFAULT_RETENTION_SECS);
+        assert_eq!(collected.len(), 1);
+        assert_eq!(collected[0].version, 0);
+        // v1 still present and reachable.
+        assert_eq!(s.get_latest("UserA", "/UserA", "obj").unwrap().version, 1);
+        // Rollback to v0 now fails (collected).
+        assert!(s.get_version("UserA", "/UserA", "obj", 0).is_err());
+    }
+
+    #[test]
+    fn evict_removes_all_versions() {
+        let s = store();
+        for t in 0..3 {
+            s.put_object("UserA", "/UserA", "obj", t, [t as u8; 32], place(1), t).unwrap();
+        }
+        let removed = s.evict("UserA", "/UserA", "obj").unwrap();
+        assert_eq!(removed.len(), 3);
+        assert!(s.get_latest("UserA", "/UserA", "obj").is_err());
+        assert_eq!(s.object_count(), 0);
+    }
+
+    #[test]
+    fn uuids_are_v4_format_and_unique() {
+        let s = store();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..100 {
+            let m = s
+                .put_object("UserA", "/UserA", &format!("o{i}"), 1, [0; 32], place(1), 1)
+                .unwrap();
+            assert_eq!(m.uuid.len(), 36);
+            assert_eq!(&m.uuid[14..15], "4", "uuid v4 version nibble");
+            assert!(seen.insert(m.uuid));
+        }
+    }
+
+    #[test]
+    fn placement_containers_listed() {
+        let p = ObjectPlacement::Erasure {
+            n: 3,
+            k: 2,
+            chunks: vec![(0, 5), (1, 9), (2, 7)],
+        };
+        assert_eq!(p.containers(), vec![5, 9, 7]);
+        assert_eq!(place(3).containers(), vec![3]);
+    }
+
+    #[test]
+    fn list_returns_latest_versions_sorted() {
+        let s = store();
+        s.put_object("UserA", "/UserA", "b", 1, [0; 32], place(1), 1).unwrap();
+        s.put_object("UserA", "/UserA", "a", 1, [0; 32], place(1), 1).unwrap();
+        s.put_object("UserA", "/UserA", "a", 2, [1; 32], place(1), 2).unwrap();
+        let listed = s.list("UserA", "/UserA").unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(listed[0].name, "a");
+        assert_eq!(listed[0].version, 1);
+        assert_eq!(listed[1].name, "b");
+    }
+}

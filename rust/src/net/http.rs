@@ -1,0 +1,360 @@
+//! HTTP/1.1 subset: server (request routing via a handler fn) + client.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::net::ThreadPool;
+use crate::{Error, Result};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// `Authorization: Bearer <token>` extraction.
+    pub fn bearer_token(&self) -> Option<&str> {
+        self.header("authorization")?.strip_prefix("Bearer ")
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn new(status: u16) -> Self {
+        HttpResponse { status, headers: BTreeMap::new(), body: Vec::new() }
+    }
+
+    pub fn json(status: u16, body: &crate::json::Value) -> Self {
+        let mut r = HttpResponse::new(status);
+        r.headers.insert("content-type".into(), "application/json".into());
+        r.body = crate::json::to_string(body).into_bytes();
+        r
+    }
+
+    pub fn bytes(status: u16, body: Vec<u8>) -> Self {
+        let mut r = HttpResponse::new(status);
+        r.headers.insert("content-type".into(), "application/octet-stream".into());
+        r.body = body;
+        r
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        let mut r = HttpResponse::new(status);
+        r.headers.insert("content-type".into(), "text/plain".into());
+        r.body = body.as_bytes().to_vec();
+        r
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            204 => "No Content",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            403 => "Forbidden",
+            404 => "Not Found",
+            409 => "Conflict",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Status",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, self.reason());
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", self.body.len()));
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+type Handler = dyn Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static;
+
+/// Threaded HTTP server.
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` ("127.0.0.1:0" for an ephemeral port) and serve with
+    /// `workers` handler threads.
+    pub fn serve(
+        addr: &str,
+        workers: usize,
+        handler: Arc<Handler>,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                loop {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let handler = Arc::clone(&handler);
+                            pool.execute(move || handle_conn(stream, handler));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>) {
+    let peer = stream.try_clone();
+    let request = match peer {
+        Ok(read_half) => parse_request(read_half),
+        Err(e) => Err(Error::Io(e)),
+    };
+    let response = match request {
+        Ok(req) => handler(req),
+        Err(e) => HttpResponse::text(400, &format!("bad request: {e}")),
+    };
+    let _ = response.write_to(&mut stream);
+}
+
+fn parse_request(stream: TcpStream) -> Result<HttpRequest> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.trim_end().split_whitespace();
+    let method = parts.next().ok_or_else(|| Error::Net("missing method".into()))?.to_string();
+    let path = parts.next().ok_or_else(|| Error::Net("missing path".into()))?.to_string();
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+/// Blocking HTTP client for the CLI and tests.
+pub struct HttpClient {
+    base: String,
+}
+
+impl HttpClient {
+    /// `base` like `127.0.0.1:8080`.
+    pub fn new(base: &str) -> Self {
+        HttpClient { base: base.to_string() }
+    }
+
+    pub fn request(
+        &self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<HttpResponse> {
+        let mut stream = TcpStream::connect(&self.base)?;
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.base);
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", body.len()));
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Net(format!("bad status line '{status_line}'")))?;
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let len: usize = headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            reader.read_exact(&mut body)?;
+        }
+        Ok(HttpResponse { status, headers, body })
+    }
+
+    pub fn get(&self, path: &str, headers: &[(&str, &str)]) -> Result<HttpResponse> {
+        self.request("GET", path, headers, &[])
+    }
+
+    pub fn put(&self, path: &str, headers: &[(&str, &str)], body: &[u8]) -> Result<HttpResponse> {
+        self.request("PUT", path, headers, body)
+    }
+
+    pub fn post(&self, path: &str, headers: &[(&str, &str)], body: &[u8]) -> Result<HttpResponse> {
+        self.request("POST", path, headers, body)
+    }
+
+    pub fn delete(&self, path: &str, headers: &[(&str, &str)]) -> Result<HttpResponse> {
+        self.request("DELETE", path, headers, &[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        HttpServer::serve(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: HttpRequest| {
+                if req.path == "/hello" {
+                    HttpResponse::text(200, "world")
+                } else if req.method == "PUT" {
+                    HttpResponse::bytes(201, req.body)
+                } else {
+                    HttpResponse::text(404, "nope")
+                }
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let server = echo_server();
+        let client = HttpClient::new(&server.addr().to_string());
+        let resp = client.get("/hello", &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"world");
+    }
+
+    #[test]
+    fn put_echoes_binary_body() {
+        let server = echo_server();
+        let client = HttpClient::new(&server.addr().to_string());
+        let payload: Vec<u8> = (0..=255u8).cycle().take(70_000).collect();
+        let resp = client.put("/obj", &[("x-test", "1")], &payload).unwrap();
+        assert_eq!(resp.status, 201);
+        assert_eq!(resp.body, payload, "binary body intact");
+    }
+
+    #[test]
+    fn not_found_and_headers() {
+        let server = echo_server();
+        let client = HttpClient::new(&server.addr().to_string());
+        let resp = client.get("/missing", &[]).unwrap();
+        assert_eq!(resp.status, 404);
+        assert_eq!(resp.headers.get("content-type").unwrap(), "text/plain");
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let server = echo_server();
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let client = HttpClient::new(&addr);
+                    let body = vec![i as u8; 1000];
+                    let resp = client.put("/o", &[], &body).unwrap();
+                    assert_eq!(resp.body, body);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn bearer_token_parsing() {
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/".into(),
+            headers: [("authorization".to_string(), "Bearer abc.def".to_string())]
+                .into_iter()
+                .collect(),
+            body: vec![],
+        };
+        assert_eq!(req.bearer_token(), Some("abc.def"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Minimal HTTP/1.1 substrate (server + client) over `std::net`.
+//!
+//! The paper's DynoStore exposes REST APIs over HTTP "as it is widely
+//! allowed across firewalls and NATs" (§V). The vendored crate set has
+//! no tokio/hyper, so this module implements the needed HTTP/1.1 subset
+//! from scratch: request line + headers + Content-Length bodies, keep-
+//! alive off, a fixed worker pool on the server side. It backs the
+//! [`crate::gateway`] REST service and the CLI client.
+
+mod http;
+mod pool;
+
+pub use http::{HttpClient, HttpRequest, HttpResponse, HttpServer};
+pub use pool::ThreadPool;

@@ -1,0 +1,119 @@
+//! Fixed-size worker pool (the "scale-in via multi-threading" of paper
+//! §III-C) used by the HTTP server and the FaaS executor.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A classic shared-queue thread pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx: Arc<Mutex<Receiver<Job>>> = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Enqueue a job; never blocks.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool is live")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Map `f` over `0..n` with the pool's parallelism; returns results
+    /// in index order (panics in jobs are surfaced as poisoned results).
+    pub fn scatter_gather<T: Send + 'static>(
+        &self,
+        n: usize,
+        f: impl Fn(usize) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(usize, T)>();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let out = f(i);
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            results[i] = Some(v);
+        }
+        results.into_iter().map(|v| v.expect("job completed")).collect()
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scatter_gather_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.scatter_gather(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_size_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.scatter_gather(3, |i| i), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,314 @@
+//! Single-decree Paxos per log slot, over in-process acceptors.
+//!
+//! Message passing is direct method invocation; failure injection drops
+//! "messages" to dead acceptors (the paper's partial-failure scenario).
+//! Ballot numbers encode (round, proposer id) so concurrent proposers
+//! never tie.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::{Error, Result};
+
+/// Chosen-value log entry (opaque payload; `ReplicatedMeta` stores JSON).
+type Value = String;
+
+#[derive(Debug, Default, Clone)]
+struct SlotState {
+    /// Highest ballot promised (phase 1).
+    promised: u64,
+    /// Highest-ballot accepted proposal (phase 2): (ballot, value).
+    accepted: Option<(u64, Value)>,
+    /// Learned chosen value.
+    chosen: Option<Value>,
+}
+
+/// One Paxos acceptor (a metadata replica's consensus half).
+pub struct Acceptor {
+    pub id: usize,
+    alive: AtomicBool,
+    slots: Mutex<HashMap<u64, SlotState>>,
+}
+
+impl Acceptor {
+    fn new(id: usize) -> Arc<Self> {
+        Arc::new(Acceptor { id, alive: AtomicBool::new(true), slots: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Simulate crash / recovery. State survives (crash-recovery model
+    /// with persistent acceptor state, as Paxos requires).
+    pub fn set_alive(&self, alive: bool) {
+        self.alive.store(alive, Ordering::SeqCst);
+    }
+
+    /// Phase 1: prepare(ballot). Returns promise + previously accepted
+    /// proposal, or None if the "message is dropped" (dead) or rejected.
+    fn prepare(&self, slot: u64, ballot: u64) -> Option<Option<(u64, Value)>> {
+        if !self.is_alive() {
+            return None;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let st = slots.entry(slot).or_default();
+        if ballot > st.promised {
+            st.promised = ballot;
+            Some(st.accepted.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Phase 2: accept(ballot, value). True iff accepted.
+    fn accept(&self, slot: u64, ballot: u64, value: &Value) -> bool {
+        if !self.is_alive() {
+            return false;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let st = slots.entry(slot).or_default();
+        if ballot >= st.promised {
+            st.promised = ballot;
+            st.accepted = Some((ballot, value.clone()));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Learn broadcast.
+    fn learn(&self, slot: u64, value: &Value) {
+        if !self.is_alive() {
+            return;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        slots.entry(slot).or_default().chosen = Some(value.clone());
+    }
+
+    /// Chosen value for a slot, if this acceptor has learned it.
+    pub fn chosen(&self, slot: u64) -> Option<Value> {
+        self.slots.lock().unwrap().get(&slot).and_then(|s| s.chosen.clone())
+    }
+}
+
+/// A replica group running Paxos per log slot.
+pub struct PaxosGroup {
+    acceptors: Vec<Arc<Acceptor>>,
+    /// Committed log cache: slot → value (learned by a majority path).
+    log: Mutex<Vec<Option<Value>>>,
+}
+
+impl PaxosGroup {
+    pub fn new(replicas: usize) -> Self {
+        assert!(replicas >= 1 && replicas % 2 == 1, "odd replica count required");
+        PaxosGroup {
+            acceptors: (0..replicas).map(Acceptor::new).collect(),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn acceptor(&self, id: usize) -> &Arc<Acceptor> {
+        &self.acceptors[id]
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.acceptors.len()
+    }
+
+    pub fn majority(&self) -> usize {
+        self.acceptors.len() / 2 + 1
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.acceptors.iter().filter(|a| a.is_alive()).count()
+    }
+
+    /// Propose `value`; returns the slot where a value was CHOSEN and
+    /// the value actually chosen there (Paxos may choose an earlier
+    /// competing proposal — the caller must check and retry for its own
+    /// value, which [`propose_owned`](Self::propose_owned) does).
+    pub fn propose_once(&self, proposer: usize, slot: u64, value: &Value) -> Result<Value> {
+        let n = self.acceptors.len() as u64;
+        let mut round: u64 = 1;
+        loop {
+            if round > 64 {
+                return Err(Error::Consensus("paxos livelock guard tripped".into()));
+            }
+            let ballot = round * n + proposer as u64;
+            // Phase 1: prepare.
+            let mut promises = 0usize;
+            let mut best_accepted: Option<(u64, Value)> = None;
+            for a in &self.acceptors {
+                if let Some(prev) = a.prepare(slot, ballot) {
+                    promises += 1;
+                    if let Some((b, v)) = prev {
+                        if best_accepted.as_ref().map_or(true, |(bb, _)| b > *bb) {
+                            best_accepted = Some((b, v));
+                        }
+                    }
+                }
+            }
+            if promises < self.majority() {
+                if self.live_count() < self.majority() {
+                    return Err(Error::Consensus(format!(
+                        "no quorum: {} live of {}",
+                        self.live_count(),
+                        self.acceptors.len()
+                    )));
+                }
+                round += 1;
+                continue;
+            }
+            // Phase 2: accept — must propose any already-accepted value.
+            let candidate = best_accepted.map(|(_, v)| v).unwrap_or_else(|| value.clone());
+            let mut accepts = 0usize;
+            for a in &self.acceptors {
+                if a.accept(slot, ballot, &candidate) {
+                    accepts += 1;
+                }
+            }
+            if accepts >= self.majority() {
+                // Chosen. Learn everywhere + record in the log cache.
+                for a in &self.acceptors {
+                    a.learn(slot, &candidate);
+                }
+                let mut log = self.log.lock().unwrap();
+                if log.len() as u64 <= slot {
+                    log.resize(slot as usize + 1, None);
+                }
+                log[slot as usize] = Some(candidate.clone());
+                return Ok(candidate);
+            }
+            round += 1;
+        }
+    }
+
+    /// Propose until OUR value is chosen in some slot; returns that slot.
+    /// This is the multi-Paxos append: competing proposals that win a
+    /// slot push ours to the next one. The slot is always the first
+    /// unchosen position of the committed log, so a failed proposal
+    /// (no quorum) never burns a slot and the log never has holes —
+    /// replica state machines rely on that to apply in order.
+    pub fn propose_owned(&self, proposer: usize, value: Value) -> Result<u64> {
+        loop {
+            let slot = self.log.lock().unwrap().len() as u64;
+            let chosen = self.propose_once(proposer, slot, &value)?;
+            if chosen == value {
+                return Ok(slot);
+            }
+            // Someone else's value took this slot; try the next.
+        }
+    }
+
+    /// The committed log prefix (None = hole not yet chosen/learned).
+    pub fn log_snapshot(&self) -> Vec<Option<Value>> {
+        self.log.lock().unwrap().clone()
+    }
+
+    /// Chosen value at `slot` from the group's perspective.
+    pub fn chosen(&self, slot: u64) -> Option<Value> {
+        self.log.lock().unwrap().get(slot as usize).cloned().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_proposer_chooses_value() {
+        let g = PaxosGroup::new(3);
+        let slot = g.propose_owned(0, "v1".into()).unwrap();
+        assert_eq!(g.chosen(slot).unwrap(), "v1");
+        // All live acceptors learned it.
+        for i in 0..3 {
+            assert_eq!(g.acceptor(i).chosen(slot).unwrap(), "v1");
+        }
+    }
+
+    #[test]
+    fn survives_minority_failure() {
+        let g = PaxosGroup::new(5);
+        g.acceptor(0).set_alive(false);
+        g.acceptor(1).set_alive(false);
+        let slot = g.propose_owned(0, "update".into()).unwrap();
+        assert_eq!(g.chosen(slot).unwrap(), "update");
+    }
+
+    #[test]
+    fn majority_failure_blocks_consensus() {
+        let g = PaxosGroup::new(3);
+        g.acceptor(0).set_alive(false);
+        g.acceptor(1).set_alive(false);
+        let err = g.propose_owned(0, "nope".into()).unwrap_err();
+        assert!(matches!(err, Error::Consensus(_)), "{err}");
+    }
+
+    #[test]
+    fn recovery_restores_quorum() {
+        let g = PaxosGroup::new(3);
+        g.acceptor(0).set_alive(false);
+        g.acceptor(1).set_alive(false);
+        assert!(g.propose_owned(0, "x".into()).is_err());
+        g.acceptor(0).set_alive(true);
+        let slot = g.propose_owned(0, "x".into()).unwrap();
+        assert_eq!(g.chosen(slot).unwrap(), "x");
+    }
+
+    #[test]
+    fn competing_proposals_all_get_slots() {
+        // Sequential competing proposers: every value must land in some
+        // distinct slot, none lost.
+        let g = PaxosGroup::new(3);
+        let mut slots = Vec::new();
+        for p in 0..5 {
+            let v = format!("value-{p}");
+            let slot = g.propose_owned(p, v.clone()).unwrap();
+            assert_eq!(g.chosen(slot).unwrap(), v);
+            slots.push(slot);
+        }
+        slots.sort_unstable();
+        slots.dedup();
+        assert_eq!(slots.len(), 5, "each value in its own slot");
+    }
+
+    #[test]
+    fn concurrent_proposers_converge() {
+        let g = Arc::new(PaxosGroup::new(5));
+        let mut handles = Vec::new();
+        for p in 0..8usize {
+            let g = Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                g.propose_owned(p, format!("t{p}")).unwrap()
+            }));
+        }
+        let slots: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // All 8 values chosen in 8 distinct slots.
+        let mut uniq = slots.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 8);
+        for (p, slot) in slots.iter().enumerate() {
+            assert_eq!(g.chosen(*slot).unwrap(), format!("t{p}"));
+        }
+    }
+
+    #[test]
+    fn chosen_value_is_stable_across_ballots() {
+        // Once chosen, later proposals for the same slot must re-choose
+        // the same value (safety core of Paxos).
+        let g = PaxosGroup::new(3);
+        let chosen = g.propose_once(0, 0, &"first".into()).unwrap();
+        assert_eq!(chosen, "first");
+        let rechosen = g.propose_once(1, 0, &"second".into()).unwrap();
+        assert_eq!(rechosen, "first", "slot 0 value must not change");
+    }
+
+    #[test]
+    #[should_panic(expected = "odd replica count")]
+    fn even_replica_count_rejected() {
+        PaxosGroup::new(4);
+    }
+}

@@ -1,0 +1,22 @@
+//! Paxos-based metadata replication (paper §III-C, §IV-B).
+//!
+//! The paper replicates the metadata service and coordinates updates
+//! with Paxos: a proposer sends the object's UUID + a timestamp to the
+//! replicas, each replica accepts if the timestamp is newer than its
+//! last recorded update, and on a majority of acceptances the proposer
+//! commits and broadcasts. Reads are locked while an update is in
+//! flight, giving strong read-after-write consistency.
+//!
+//! [`PaxosGroup`] implements single-decree Paxos per log slot (prepare /
+//! promise with ballot, accept / accepted, choose on majority) over
+//! in-process acceptors with failure injection. [`ReplicatedMeta`]
+//! layers the metadata state machine on top: commands are serialized to
+//! JSON, sequenced through the Paxos log, and applied to every replica
+//! in slot order. Replica state machines are deterministic (seeded UUID
+//! generation), so all replicas converge to identical stores.
+
+mod group;
+mod replicated;
+
+pub use group::{Acceptor, PaxosGroup};
+pub use replicated::{CommandOutcome, MetaCommand, ReplicatedMeta};

@@ -1,0 +1,553 @@
+//! Replicated metadata: the paper's §IV-B update protocol end to end.
+//!
+//! Commands are serialized to JSON, sequenced through [`PaxosGroup`],
+//! and applied to N deterministic [`MetadataStore`] replicas in slot
+//! order. A writer holds the exclusive side of an RwLock through
+//! propose + apply — the paper's "read operations are temporarily locked
+//! until the metadata is fully updated" — so reads (shared side) always
+//! observe fully committed state: strong read-after-write.
+//!
+//! Replica crash/recovery: a dead replica misses applies; on revival,
+//! [`ReplicatedMeta::sync`] replays the chosen log from its applied
+//! cursor. Determinism (same seed, same command order) guarantees
+//! convergence to byte-identical stores — asserted by tests.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::json::{obj, parse, to_string, Value};
+use crate::metadata::{MetadataStore, ObjectMeta, ObjectPlacement, Permission};
+use crate::paxos::PaxosGroup;
+use crate::util::{from_hex, to_hex};
+use crate::{Error, Result};
+
+/// A metadata mutation, serializable for the Paxos log.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaCommand {
+    CreateNamespace { user: String },
+    CreateCollection { caller: String, path: String },
+    Grant { caller: String, path: String, user: String, perm: Permission },
+    Revoke { caller: String, path: String, user: String, perm: Permission },
+    PutObject {
+        caller: String,
+        collection: String,
+        name: String,
+        size: u64,
+        sha3: [u8; 32],
+        placement: ObjectPlacement,
+        now: u64,
+    },
+    Evict { caller: String, collection: String, name: String },
+    Gc { now: u64, retention_secs: u64 },
+    /// Health-repair placement update (not a user-facing op).
+    UpdatePlacement { uuid: String, placement: ObjectPlacement },
+}
+
+impl MetaCommand {
+    pub fn to_json(&self) -> String {
+        let v = match self {
+            MetaCommand::CreateNamespace { user } => {
+                obj(vec![("op", "create_ns".into()), ("user", user.as_str().into())])
+            }
+            MetaCommand::CreateCollection { caller, path } => obj(vec![
+                ("op", "create_col".into()),
+                ("caller", caller.as_str().into()),
+                ("path", path.as_str().into()),
+            ]),
+            MetaCommand::Grant { caller, path, user, perm } => obj(vec![
+                ("op", "grant".into()),
+                ("caller", caller.as_str().into()),
+                ("path", path.as_str().into()),
+                ("user", user.as_str().into()),
+                ("perm", perm_str(*perm).into()),
+            ]),
+            MetaCommand::Revoke { caller, path, user, perm } => obj(vec![
+                ("op", "revoke".into()),
+                ("caller", caller.as_str().into()),
+                ("path", path.as_str().into()),
+                ("user", user.as_str().into()),
+                ("perm", perm_str(*perm).into()),
+            ]),
+            MetaCommand::PutObject { caller, collection, name, size, sha3, placement, now } => {
+                obj(vec![
+                    ("op", "put".into()),
+                    ("caller", caller.as_str().into()),
+                    ("collection", collection.as_str().into()),
+                    ("name", name.as_str().into()),
+                    ("size", (*size).into()),
+                    ("sha3", to_hex(sha3).into()),
+                    ("placement", placement_json(placement)),
+                    ("now", (*now).into()),
+                ])
+            }
+            MetaCommand::Evict { caller, collection, name } => obj(vec![
+                ("op", "evict".into()),
+                ("caller", caller.as_str().into()),
+                ("collection", collection.as_str().into()),
+                ("name", name.as_str().into()),
+            ]),
+            MetaCommand::Gc { now, retention_secs } => obj(vec![
+                ("op", "gc".into()),
+                ("now", (*now).into()),
+                ("retention", (*retention_secs).into()),
+            ]),
+            MetaCommand::UpdatePlacement { uuid, placement } => obj(vec![
+                ("op", "update_placement".into()),
+                ("uuid", uuid.as_str().into()),
+                ("placement", placement_json(placement)),
+            ]),
+        };
+        to_string(&v)
+    }
+
+    pub fn from_json(text: &str) -> Result<MetaCommand> {
+        let v = parse(text)?;
+        let op = v.req_str("op")?;
+        Ok(match op {
+            "create_ns" => MetaCommand::CreateNamespace { user: v.req_str("user")?.into() },
+            "create_col" => MetaCommand::CreateCollection {
+                caller: v.req_str("caller")?.into(),
+                path: v.req_str("path")?.into(),
+            },
+            "grant" | "revoke" => {
+                let perm = parse_perm(v.req_str("perm")?)?;
+                let (caller, path, user) = (
+                    v.req_str("caller")?.to_string(),
+                    v.req_str("path")?.to_string(),
+                    v.req_str("user")?.to_string(),
+                );
+                if op == "grant" {
+                    MetaCommand::Grant { caller, path, user, perm }
+                } else {
+                    MetaCommand::Revoke { caller, path, user, perm }
+                }
+            }
+            "put" => {
+                let sha3_vec = from_hex(v.req_str("sha3")?)
+                    .ok_or_else(|| Error::Json("bad sha3 hex".into()))?;
+                let sha3: [u8; 32] =
+                    sha3_vec.try_into().map_err(|_| Error::Json("sha3 length".into()))?;
+                MetaCommand::PutObject {
+                    caller: v.req_str("caller")?.into(),
+                    collection: v.req_str("collection")?.into(),
+                    name: v.req_str("name")?.into(),
+                    size: v.req_u64("size")?,
+                    sha3,
+                    placement: placement_from_json(v.get("placement"))?,
+                    now: v.req_u64("now")?,
+                }
+            }
+            "evict" => MetaCommand::Evict {
+                caller: v.req_str("caller")?.into(),
+                collection: v.req_str("collection")?.into(),
+                name: v.req_str("name")?.into(),
+            },
+            "gc" => MetaCommand::Gc {
+                now: v.req_u64("now")?,
+                retention_secs: v.req_u64("retention")?,
+            },
+            "update_placement" => MetaCommand::UpdatePlacement {
+                uuid: v.req_str("uuid")?.into(),
+                placement: placement_from_json(v.get("placement"))?,
+            },
+            other => return Err(Error::Json(format!("unknown op '{other}'"))),
+        })
+    }
+}
+
+fn perm_str(p: Permission) -> &'static str {
+    match p {
+        Permission::Read => "read",
+        Permission::Write => "write",
+    }
+}
+
+fn parse_perm(s: &str) -> Result<Permission> {
+    match s {
+        "read" => Ok(Permission::Read),
+        "write" => Ok(Permission::Write),
+        _ => Err(Error::Json(format!("bad perm '{s}'"))),
+    }
+}
+
+fn placement_json(p: &ObjectPlacement) -> Value {
+    match p {
+        ObjectPlacement::Single { container } => obj(vec![
+            ("type", "single".into()),
+            ("container", (*container as u64).into()),
+        ]),
+        ObjectPlacement::Erasure { n, k, chunks } => obj(vec![
+            ("type", "erasure".into()),
+            ("n", (*n).into()),
+            ("k", (*k).into()),
+            (
+                "chunks",
+                Value::Arr(
+                    chunks
+                        .iter()
+                        .map(|&(i, c)| {
+                            Value::Arr(vec![(i as u64).into(), (c as u64).into()])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    }
+}
+
+fn placement_from_json(v: &Value) -> Result<ObjectPlacement> {
+    match v.req_str("type")? {
+        "single" => Ok(ObjectPlacement::Single { container: v.req_u64("container")? as u32 }),
+        "erasure" => {
+            let chunks = v
+                .get("chunks")
+                .as_arr()
+                .ok_or_else(|| Error::Json("chunks".into()))?
+                .iter()
+                .map(|pair| {
+                    let a = pair.as_arr().ok_or_else(|| Error::Json("chunk pair".into()))?;
+                    Ok((
+                        a[0].as_u64().ok_or_else(|| Error::Json("idx".into()))? as u8,
+                        a[1].as_u64().ok_or_else(|| Error::Json("cid".into()))? as u32,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ObjectPlacement::Erasure {
+                n: v.req_u64("n")? as usize,
+                k: v.req_u64("k")? as usize,
+                chunks,
+            })
+        }
+        other => Err(Error::Json(format!("bad placement type '{other}'"))),
+    }
+}
+
+/// One metadata replica: deterministic store + applied-log cursor.
+struct Replica {
+    store: MetadataStore,
+    applied: AtomicU64,
+    alive: AtomicBool,
+}
+
+/// The replicated metadata service.
+pub struct ReplicatedMeta {
+    group: PaxosGroup,
+    replicas: Vec<Replica>,
+    /// Writers exclusive through propose+apply; readers shared — the
+    /// §IV-B read lock during updates.
+    rw: RwLock<()>,
+}
+
+impl ReplicatedMeta {
+    /// `replica_count` must be odd (Paxos quorums).
+    pub fn new(replica_count: usize, seed: u64) -> Arc<Self> {
+        Arc::new(ReplicatedMeta {
+            group: PaxosGroup::new(replica_count),
+            replicas: (0..replica_count)
+                .map(|_| Replica {
+                    store: MetadataStore::new(seed),
+                    applied: AtomicU64::new(0),
+                    alive: AtomicBool::new(true),
+                })
+                .collect(),
+            rw: RwLock::new(()),
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Crash/revive a replica (both its acceptor and state machine).
+    pub fn set_replica_alive(&self, id: usize, alive: bool) {
+        self.group.acceptor(id).set_alive(alive);
+        self.replicas[id].alive.store(alive, Ordering::SeqCst);
+        if alive {
+            // Catch up a revived replica under the write lock.
+            let _w = self.rw.write().unwrap();
+            self.sync(id);
+        }
+    }
+
+    /// Replay the chosen log onto replica `id` from its cursor.
+    fn sync(&self, id: usize) {
+        let log = self.group.log_snapshot();
+        let r = &self.replicas[id];
+        let mut cursor = r.applied.load(Ordering::SeqCst);
+        while (cursor as usize) < log.len() {
+            match &log[cursor as usize] {
+                Some(entry) => {
+                    if let Ok(cmd) = MetaCommand::from_json(entry) {
+                        let _ = apply(&r.store, &cmd); // deterministic
+                    }
+                    cursor += 1;
+                }
+                None => break, // hole: stop (never happens with serialized writers)
+            }
+        }
+        r.applied.store(cursor, Ordering::SeqCst);
+    }
+
+    /// Propose a command through Paxos and apply it on every live
+    /// replica. Returns the command's own result (from the first live
+    /// replica). Fails with `Consensus` if no quorum.
+    pub fn submit(&self, cmd: MetaCommand) -> Result<CommandOutcome> {
+        let _w = self.rw.write().unwrap();
+        let payload = cmd.to_json();
+        let _slot = self.group.propose_owned(0, payload)?;
+        let mut outcome: Option<CommandOutcome> = None;
+        for r in &self.replicas {
+            if !r.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            // Apply any backlog first (revived replicas), then this.
+            let log = self.group.log_snapshot();
+            let mut cursor = r.applied.load(Ordering::SeqCst);
+            while (cursor as usize) < log.len() {
+                if let Some(entry) = &log[cursor as usize] {
+                    let parsed = MetaCommand::from_json(entry)?;
+                    let res = apply(&r.store, &parsed);
+                    if outcome.is_none() {
+                        outcome = Some(res);
+                    }
+                    cursor += 1;
+                } else {
+                    break;
+                }
+            }
+            r.applied.store(cursor, Ordering::SeqCst);
+        }
+        outcome.ok_or_else(|| Error::Consensus("no live replica applied the command".into()))
+    }
+
+    /// Read from the first live, fully-applied replica (shared lock —
+    /// blocks while a writer is mid-update, per §IV-B).
+    pub fn read<T>(&self, f: impl Fn(&MetadataStore) -> Result<T>) -> Result<T> {
+        let _r = self.rw.read().unwrap();
+        let target = self.group.log_snapshot().len() as u64;
+        for r in &self.replicas {
+            if r.alive.load(Ordering::SeqCst) && r.applied.load(Ordering::SeqCst) >= target {
+                return f(&r.store);
+            }
+        }
+        Err(Error::Unavailable("no up-to-date metadata replica".into()))
+    }
+
+    /// Direct store access for invariant checks in tests.
+    pub fn replica_store(&self, id: usize) -> &MetadataStore {
+        &self.replicas[id].store
+    }
+
+    pub fn applied_cursor(&self, id: usize) -> u64 {
+        self.replicas[id].applied.load(Ordering::SeqCst)
+    }
+}
+
+/// Result of applying a command to a store (deterministic per replica).
+#[derive(Debug, Clone)]
+pub enum CommandOutcome {
+    Ok,
+    Meta(Box<ObjectMeta>),
+    Evicted(Vec<ObjectMeta>),
+    Collected(Vec<ObjectMeta>),
+    Failed(String),
+}
+
+fn apply(store: &MetadataStore, cmd: &MetaCommand) -> CommandOutcome {
+    let as_outcome = |r: Result<()>| match r {
+        Ok(()) => CommandOutcome::Ok,
+        Err(e) => CommandOutcome::Failed(e.to_string()),
+    };
+    match cmd {
+        MetaCommand::CreateNamespace { user } => {
+            as_outcome(store.create_namespace(user).map(|_| ()))
+        }
+        MetaCommand::CreateCollection { caller, path } => {
+            as_outcome(store.create_collection(caller, path).map(|_| ()))
+        }
+        MetaCommand::Grant { caller, path, user, perm } => {
+            as_outcome(store.grant(caller, path, user, *perm))
+        }
+        MetaCommand::Revoke { caller, path, user, perm } => {
+            as_outcome(store.revoke(caller, path, user, *perm))
+        }
+        MetaCommand::PutObject { caller, collection, name, size, sha3, placement, now } => {
+            match store.put_object(caller, collection, name, *size, *sha3, placement.clone(), *now)
+            {
+                Ok(meta) => CommandOutcome::Meta(Box::new(meta)),
+                Err(e) => CommandOutcome::Failed(e.to_string()),
+            }
+        }
+        MetaCommand::Evict { caller, collection, name } => {
+            match store.evict(caller, collection, name) {
+                Ok(metas) => CommandOutcome::Evicted(metas),
+                Err(e) => CommandOutcome::Failed(e.to_string()),
+            }
+        }
+        MetaCommand::Gc { now, retention_secs } => {
+            CommandOutcome::Collected(store.gc(*now, *retention_secs))
+        }
+        MetaCommand::UpdatePlacement { uuid, placement } => {
+            as_outcome(store.update_placement(uuid, placement.clone()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn put_cmd(name: &str, t: u64) -> MetaCommand {
+        MetaCommand::PutObject {
+            caller: "UserA".into(),
+            collection: "/UserA".into(),
+            name: name.into(),
+            size: 42,
+            sha3: [7; 32],
+            placement: ObjectPlacement::Erasure {
+                n: 3,
+                k: 2,
+                chunks: vec![(0, 1), (1, 2), (2, 3)],
+            },
+            now: t,
+        }
+    }
+
+    fn setup(replicas: usize) -> Arc<ReplicatedMeta> {
+        let m = ReplicatedMeta::new(replicas, 99);
+        m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+        m
+    }
+
+    #[test]
+    fn command_json_roundtrip() {
+        let cmds = vec![
+            MetaCommand::CreateNamespace { user: "u".into() },
+            MetaCommand::CreateCollection { caller: "u".into(), path: "/u/c".into() },
+            MetaCommand::Grant {
+                caller: "u".into(),
+                path: "/u/c".into(),
+                user: "v".into(),
+                perm: Permission::Read,
+            },
+            MetaCommand::Revoke {
+                caller: "u".into(),
+                path: "/u/c".into(),
+                user: "v".into(),
+                perm: Permission::Write,
+            },
+            put_cmd("obj", 5),
+            MetaCommand::Evict { caller: "u".into(), collection: "/u".into(), name: "o".into() },
+            MetaCommand::Gc { now: 100, retention_secs: 60 },
+        ];
+        for cmd in cmds {
+            let json = cmd.to_json();
+            assert_eq!(MetaCommand::from_json(&json).unwrap(), cmd, "{json}");
+        }
+    }
+
+    #[test]
+    fn replicas_converge_to_identical_state() {
+        let m = setup(3);
+        for i in 0..10 {
+            m.submit(put_cmd(&format!("obj{i}"), i)).unwrap();
+        }
+        // Every replica applied every slot; stores agree on uuids.
+        for name in ["obj0", "obj5", "obj9"] {
+            let metas: Vec<ObjectMeta> = (0..3)
+                .map(|r| m.replica_store(r).get_latest("UserA", "/UserA", name).unwrap())
+                .collect();
+            assert_eq!(metas[0], metas[1]);
+            assert_eq!(metas[1], metas[2]);
+        }
+    }
+
+    #[test]
+    fn read_after_write_sees_latest() {
+        let m = setup(3);
+        let out = m.submit(put_cmd("obj", 1)).unwrap();
+        let uuid = match out {
+            CommandOutcome::Meta(meta) => meta.uuid,
+            other => panic!("unexpected outcome {other:?}"),
+        };
+        let read =
+            m.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        assert_eq!(read.uuid, uuid);
+    }
+
+    #[test]
+    fn survives_minority_replica_failure() {
+        let m = setup(5);
+        m.set_replica_alive(4, false);
+        m.set_replica_alive(3, false);
+        m.submit(put_cmd("obj", 1)).unwrap();
+        let meta = m.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        assert_eq!(meta.size, 42);
+    }
+
+    #[test]
+    fn majority_failure_rejects_writes() {
+        let m = setup(3);
+        m.set_replica_alive(1, false);
+        m.set_replica_alive(2, false);
+        let err = m.submit(put_cmd("obj", 1)).unwrap_err();
+        assert!(matches!(err, Error::Consensus(_)));
+    }
+
+    #[test]
+    fn revived_replica_catches_up() {
+        let m = setup(5);
+        m.set_replica_alive(2, false);
+        for i in 0..5 {
+            m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+        }
+        assert!(m.applied_cursor(2) < m.applied_cursor(0));
+        m.set_replica_alive(2, true);
+        assert_eq!(m.applied_cursor(2), m.applied_cursor(0));
+        // And its state matches replica 0 exactly.
+        let a = m.replica_store(0).get_latest("UserA", "/UserA", "o4").unwrap();
+        let b = m.replica_store(2).get_latest("UserA", "/UserA", "o4").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn failed_commands_replicate_deterministically() {
+        let m = setup(3);
+        // Permission failure must not desync replicas.
+        let out = m
+            .submit(MetaCommand::CreateCollection {
+                caller: "Mallory".into(),
+                path: "/UserA/Steal".into(),
+            })
+            .unwrap();
+        assert!(matches!(out, CommandOutcome::Failed(_)));
+        for r in 0..3 {
+            assert!(!m.replica_store(r).collection_exists("/UserA/Steal"));
+        }
+        // System still writable.
+        m.submit(put_cmd("obj", 1)).unwrap();
+    }
+
+    #[test]
+    fn concurrent_writers_serialize() {
+        let m = setup(3);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5 {
+                    m.submit(put_cmd(&format!("t{t}-o{i}"), i)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let count = m.read(|s| Ok(s.object_count())).unwrap();
+        assert_eq!(count, 20);
+        // All replicas converged.
+        for r in 0..3 {
+            assert_eq!(m.replica_store(r).object_count(), 20);
+        }
+    }
+}

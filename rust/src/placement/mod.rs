@@ -1,0 +1,279 @@
+//! Data placement / load balancing (paper §IV-C): the utilization-factor
+//! metric of Eq. 1 and the weighted selection of Eq. 2, extensible with
+//! additional metrics (bandwidth / latency / cost — §IV-C closing note).
+//!
+//! Two engines compute the same scores: [`score_host`] (pure rust, always
+//! available) and the AOT-compiled Pallas kernel dispatched through
+//! [`crate::runtime`] (`uf_score_c{C}` artifact). The coordinator takes
+//! the argmin over either; tie-breaking is by container id for
+//! determinism.
+
+use crate::container::ContainerInfo;
+use crate::sim::{Site, Wan};
+use crate::{Error, Result};
+
+/// Sorts-last sentinel for infeasible containers (matches the kernel's
+/// INFEASIBLE constant in python/compile/kernels/uf_score.py).
+pub const INFEASIBLE: f64 = 3.4e38;
+
+/// Placement weights (Eq. 2): w1 memory vs w2 filesystem priority.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weights {
+    pub w1_mem: f64,
+    pub w2_fs: f64,
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        Weights { w1_mem: 0.5, w2_fs: 0.5 }
+    }
+}
+
+impl Weights {
+    /// The paper's medical-archive example: prioritize storage headroom.
+    pub fn archive() -> Self {
+        Weights { w1_mem: 0.1, w2_fs: 0.9 }
+    }
+
+    /// Prioritize memory for short-term caching workloads.
+    pub fn caching() -> Self {
+        Weights { w1_mem: 0.9, w2_fs: 0.1 }
+    }
+}
+
+/// Extensible extra metrics hook (§IV-C: "additional metrics like
+/// bandwidth, latency, or cost"). Returns an additive score penalty for
+/// placing on `info` (0.0 = neutral); implementors see the client site.
+pub trait PlacementMetric: Send + Sync {
+    fn penalty(&self, info: &ContainerInfo) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// Bandwidth/latency-aware metric: penalize containers far from the
+/// client (normalized transfer time for a reference object).
+pub struct NetworkMetric {
+    pub wan: Wan,
+    pub client_site: Site,
+    pub weight: f64,
+}
+
+impl PlacementMetric for NetworkMetric {
+    fn penalty(&self, info: &ContainerInfo) -> f64 {
+        // Normalized to the worst link in the testbed (~60 MB/s): a
+        // same-site container adds ~0, the farthest adds ~weight.
+        let t = self.wan.transfer_s(self.client_site, info.site, 10_000_000, 1);
+        let worst = 10_000_000.0 / 60.0e6 + 0.2;
+        self.weight * (t / worst).min(1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "network"
+    }
+}
+
+/// Eq. 1 + Eq. 2 for one container: weighted occupancy after a
+/// hypothetical placement of `size` bytes; INFEASIBLE if dead/undersized.
+pub fn score_host(info: &ContainerInfo, size: u64, w: Weights) -> f64 {
+    if !info.alive || info.fs_total == 0 || info.fs_avail < size {
+        return INFEASIBLE;
+    }
+    let mt = (info.mem_total as f64).max(1.0);
+    let st = (info.fs_total as f64).max(1.0);
+    // Eq. 1 (free fraction after placement) — kept verbatim; see the
+    // sign note in python/compile/kernels/uf_score.py.
+    let u_mem = 1.0 - (info.mem_total as f64 - (info.mem_avail as f64 - size as f64)) / mt;
+    let u_fs = 1.0 - (info.fs_total as f64 - (info.fs_avail as f64 - size as f64)) / st;
+    // Eq. 2, flipped to occupancy so the coordinator's argmin selects
+    // the container with the most weighted headroom.
+    1.0 - (w.w1_mem * u_mem + w.w2_fs * u_fs)
+}
+
+/// The load balancer: scores every container and picks the best `count`
+/// (Algorithm 1 line 2, GETAVAILABLEDC(n)).
+pub struct Placer {
+    pub weights: Weights,
+    pub metrics: Vec<Box<dyn PlacementMetric>>,
+}
+
+impl Default for Placer {
+    fn default() -> Self {
+        Placer { weights: Weights::default(), metrics: Vec::new() }
+    }
+}
+
+impl Placer {
+    pub fn new(weights: Weights) -> Self {
+        Placer { weights, metrics: Vec::new() }
+    }
+
+    pub fn with_metric(mut self, m: Box<dyn PlacementMetric>) -> Self {
+        self.metrics.push(m);
+        self
+    }
+
+    /// Score all containers for an object/chunk of `size` bytes.
+    pub fn scores(&self, infos: &[ContainerInfo], size: u64) -> Vec<f64> {
+        infos
+            .iter()
+            .map(|info| {
+                let base = score_host(info, size, self.weights);
+                if base >= INFEASIBLE {
+                    return base;
+                }
+                base + self.metrics.iter().map(|m| m.penalty(info)).sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// Select the single best container (Eq. 2 argmin; ties by id).
+    pub fn select_one(&self, infos: &[ContainerInfo], size: u64) -> Result<ContainerInfo> {
+        Ok(self.select(infos, size, 1)?.remove(0))
+    }
+
+    /// Select `count` distinct containers, best-first (erasure placement
+    /// spreads chunks over n containers — Algorithm 1 line 2; fewer
+    /// available is the Algorithm 1 line 4 error).
+    pub fn select(
+        &self,
+        infos: &[ContainerInfo],
+        size: u64,
+        count: usize,
+    ) -> Result<Vec<ContainerInfo>> {
+        let scores = self.scores(infos, size);
+        let mut ranked: Vec<(usize, f64)> = scores
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(_, s)| s < INFEASIBLE)
+            .collect();
+        ranked.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(infos[a.0].id.cmp(&infos[b.0].id))
+        });
+        if ranked.len() < count {
+            return Err(Error::Placement(format!(
+                "not enough containers available: need {count}, have {}",
+                ranked.len()
+            )));
+        }
+        Ok(ranked.into_iter().take(count).map(|(i, _)| infos[i].clone()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Site;
+
+    fn info(id: u32, fs_avail: u64, mem_avail: u64) -> ContainerInfo {
+        ContainerInfo {
+            id,
+            name: format!("dc{id}"),
+            site: Site::ChameleonTacc,
+            alive: true,
+            mem_total: 1000,
+            mem_avail,
+            fs_total: 100_000,
+            fs_avail,
+            annual_failure_rate: 0.05,
+        }
+    }
+
+    #[test]
+    fn emptier_container_wins() {
+        let placer = Placer::default();
+        let infos = vec![info(1, 10_000, 500), info(2, 90_000, 500)];
+        let sel = placer.select_one(&infos, 100).unwrap();
+        assert_eq!(sel.id, 2, "most filesystem headroom wins with equal memory");
+    }
+
+    #[test]
+    fn dead_and_undersized_excluded() {
+        let placer = Placer::default();
+        let mut dead = info(1, 90_000, 900);
+        dead.alive = false;
+        let small = info(2, 50, 900); // cannot fit 100 bytes
+        let ok = info(3, 10_000, 900);
+        let sel = placer.select(&[dead, small, ok], 100, 1).unwrap();
+        assert_eq!(sel[0].id, 3);
+    }
+
+    #[test]
+    fn insufficient_containers_error() {
+        // Algorithm 1 line 4: |D| < n → error.
+        let placer = Placer::default();
+        let infos = vec![info(1, 10_000, 500), info(2, 10_000, 500)];
+        let err = placer.select(&infos, 100, 3).unwrap_err();
+        assert!(matches!(err, Error::Placement(_)));
+    }
+
+    #[test]
+    fn weights_flip_preference() {
+        // Container 1: lots of memory, tight storage. Container 2: the
+        // reverse. Archive weights must pick 2, caching weights pick 1
+        // (the paper's §IV-C weighting example).
+        let c1 = info(1, 20_000, 990);
+        let c2 = info(2, 95_000, 10);
+        let archive = Placer::new(Weights::archive());
+        assert_eq!(archive.select_one(&[c1.clone(), c2.clone()], 10).unwrap().id, 2);
+        let caching = Placer::new(Weights::caching());
+        assert_eq!(caching.select_one(&[c1, c2], 10).unwrap().id, 1);
+    }
+
+    #[test]
+    fn select_returns_distinct_best_first() {
+        let placer = Placer::default();
+        let infos =
+            vec![info(1, 30_000, 100), info(2, 90_000, 100), info(3, 60_000, 100)];
+        let sel = placer.select(&infos, 100, 3).unwrap();
+        assert_eq!(sel.iter().map(|c| c.id).collect::<Vec<_>>(), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn deterministic_tie_break_by_id() {
+        let placer = Placer::default();
+        let infos = vec![info(5, 50_000, 500), info(3, 50_000, 500)];
+        assert_eq!(placer.select_one(&infos, 100).unwrap().id, 3);
+    }
+
+    #[test]
+    fn network_metric_prefers_near_containers() {
+        let mut far = info(1, 50_000, 500);
+        far.site = Site::Madrid;
+        let near = info(2, 50_000, 500); // ChameleonTacc
+        let placer = Placer::default().with_metric(Box::new(NetworkMetric {
+            wan: Wan::paper_testbed(),
+            client_site: Site::ChameleonTacc,
+            weight: 0.5,
+        }));
+        assert_eq!(placer.select_one(&[far, near], 100).unwrap().id, 2);
+    }
+
+    #[test]
+    fn placement_fairness_property() {
+        // Repeatedly placing equal-size objects (and debiting the chosen
+        // container) must spread load: final fs_avail spread below 20%.
+        use crate::testkit::{forall, prop_assert};
+        forall(20, |g| {
+            let n = g.usize(3, 8);
+            let mut infos: Vec<ContainerInfo> =
+                (0..n).map(|i| info(i as u32, 100_000, 1000)).collect();
+            let placer = Placer::default();
+            let size = 1000u64;
+            for _ in 0..200 {
+                let chosen = placer.select_one(&infos, size).map_err(|e| e.to_string())?;
+                let c = infos.iter_mut().find(|c| c.id == chosen.id).unwrap();
+                c.fs_avail -= size;
+                c.mem_avail = c.mem_avail.saturating_sub(10);
+            }
+            let avails: Vec<u64> = infos.iter().map(|c| c.fs_avail).collect();
+            let max = *avails.iter().max().unwrap() as f64;
+            let min = *avails.iter().min().unwrap() as f64;
+            prop_assert(
+                (max - min) / 100_000.0 <= 0.2,
+                &format!("unfair distribution: {avails:?}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Control policies (paper §III-B closing + §VI-D): the resilience
+//! policy applied per upload, including the *dynamic* algorithm that
+//! selects, in real time, how many data and parity chunks to create and
+//! where to place them so each data item meets a reliability target
+//! (max 0.1 % loss probability per year in the paper's experiment)
+//! against heterogeneous per-container failure rates.
+
+use crate::container::ContainerInfo;
+use crate::erasure::ErasureConfig;
+use crate::sim::FailureModel;
+use crate::{Error, Result};
+
+/// Upload-time resilience policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ResiliencePolicy {
+    /// "Regular" (paper §VI-C3 baseline): whole object on one container.
+    Regular,
+    /// Fixed (n, k) IDA for every object (paper Figs. 4-8).
+    Fixed(ErasureConfig),
+    /// Dynamic per-object (n, k) + placement (paper §VI-D / Table II):
+    /// grow parity until the loss probability meets `target_loss`.
+    Dynamic { k: usize, target_loss: f64 },
+}
+
+/// The paper's §VI-D reliability target: 0.1 % per item-year.
+pub const PAPER_TARGET_LOSS: f64 = 0.001;
+
+/// Result of the dynamic selection: the chosen configuration and the
+/// container ids (one per chunk, reliability-sorted best first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicChoice {
+    pub config: ErasureConfig,
+    pub containers: Vec<u32>,
+    /// Predicted one-year loss probability of this placement.
+    pub loss_probability: f64,
+}
+
+/// Dynamic (n, k) selection (§VI-D): starting from n = k + 1, place
+/// chunks on the n most reliable feasible containers and grow n (more
+/// parity, more spread) until `loss_probability ≤ target` or the
+/// container pool / tile limit is exhausted — then return the best
+/// effort with a warning flag via the loss field.
+pub fn select_dynamic(
+    infos: &[ContainerInfo],
+    chunk_size: u64,
+    k: usize,
+    target_loss: f64,
+) -> Result<DynamicChoice> {
+    if k == 0 {
+        return Err(Error::Erasure("dynamic selection needs k >= 1".into()));
+    }
+    // Feasible containers, most reliable first (ties by id).
+    let mut pool: Vec<&ContainerInfo> = infos
+        .iter()
+        .filter(|c| c.alive && c.fs_avail >= chunk_size)
+        .collect();
+    pool.sort_by(|a, b| {
+        a.annual_failure_rate
+            .partial_cmp(&b.annual_failure_rate)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    if pool.len() < k + 1 {
+        return Err(Error::Placement(format!(
+            "dynamic selection: need at least {} containers, have {}",
+            k + 1,
+            pool.len()
+        )));
+    }
+    let max_n = pool.len().min(16);
+    let model = FailureModel { afr: pool.iter().map(|c| c.annual_failure_rate).collect() };
+
+    let mut best: Option<DynamicChoice> = None;
+    for n in (k + 1)..=max_n {
+        let placement: Vec<usize> = (0..n).collect();
+        let loss = model.loss_probability(&placement, n - k);
+        let choice = DynamicChoice {
+            config: ErasureConfig::new(n, k),
+            containers: pool[..n].iter().map(|c| c.id).collect(),
+            loss_probability: loss,
+        };
+        let better = best.as_ref().map_or(true, |b| loss < b.loss_probability);
+        if better {
+            best = Some(choice);
+        }
+        if loss <= target_loss {
+            break;
+        }
+    }
+    best.ok_or_else(|| Error::Placement("dynamic selection found no placement".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Site;
+
+    fn info(id: u32, afr: f64) -> ContainerInfo {
+        ContainerInfo {
+            id,
+            name: format!("dc{id}"),
+            site: Site::ChameleonTacc,
+            alive: true,
+            mem_total: 1 << 30,
+            mem_avail: 1 << 29,
+            fs_total: 1 << 40,
+            fs_avail: 1 << 39,
+            annual_failure_rate: afr,
+        }
+    }
+
+    fn paper_pool() -> Vec<ContainerInfo> {
+        // Ten heterogeneous containers, AFR 1%..25% (§VI-D).
+        (0..10)
+            .map(|i| info(i, 0.01 + 0.24 * i as f64 / 9.0))
+            .collect()
+    }
+
+    #[test]
+    fn meets_paper_reliability_target() {
+        let choice = select_dynamic(&paper_pool(), 1 << 20, 4, PAPER_TARGET_LOSS).unwrap();
+        assert!(
+            choice.loss_probability <= PAPER_TARGET_LOSS,
+            "loss {} > target",
+            choice.loss_probability
+        );
+        assert_eq!(choice.containers.len(), choice.config.n);
+        // With 1-25% AFRs the target needs several parity chunks.
+        assert!(choice.config.failures_tolerated() >= 3, "{:?}", choice.config);
+    }
+
+    #[test]
+    fn prefers_reliable_containers() {
+        let choice = select_dynamic(&paper_pool(), 1 << 20, 3, PAPER_TARGET_LOSS).unwrap();
+        // Pool is sorted by AFR, ids 0.. are the most reliable.
+        assert!(choice.containers.starts_with(&[0, 1, 2]));
+    }
+
+    #[test]
+    fn flakier_pool_needs_more_parity() {
+        let reliable: Vec<ContainerInfo> = (0..10).map(|i| info(i, 0.01)).collect();
+        let flaky: Vec<ContainerInfo> = (0..10).map(|i| info(i, 0.25)).collect();
+        let a = select_dynamic(&reliable, 1024, 4, PAPER_TARGET_LOSS).unwrap();
+        let b = select_dynamic(&flaky, 1024, 4, PAPER_TARGET_LOSS).unwrap();
+        assert!(
+            b.config.failures_tolerated() > a.config.failures_tolerated(),
+            "reliable {:?} vs flaky {:?}",
+            a.config,
+            b.config
+        );
+    }
+
+    #[test]
+    fn dead_containers_excluded() {
+        let mut pool = paper_pool();
+        for c in pool.iter_mut().take(7) {
+            c.alive = false;
+        }
+        // Only 3 containers left; k=3 needs at least 4.
+        assert!(select_dynamic(&pool, 1024, 3, PAPER_TARGET_LOSS).is_err());
+    }
+
+    #[test]
+    fn best_effort_when_target_unreachable() {
+        // Two flaky containers, k=1: target unreachable, still returns
+        // the best available (n=2).
+        let pool = vec![info(0, 0.25), info(1, 0.25)];
+        let choice = select_dynamic(&pool, 1024, 1, 1e-9).unwrap();
+        assert_eq!(choice.config, ErasureConfig::new(2, 1));
+        assert!(choice.loss_probability > 1e-9);
+    }
+
+    #[test]
+    fn policy_constants_match_paper() {
+        assert_eq!(PAPER_TARGET_LOSS, 0.001);
+        let p = ResiliencePolicy::Fixed(ErasureConfig::new(10, 7));
+        assert!(matches!(p, ResiliencePolicy::Fixed(c) if c.failures_tolerated() == 3));
+    }
+}

@@ -1,0 +1,129 @@
+//! Container registry (paper §III-B): tracks all active data containers;
+//! administrators add/remove containers dynamically and the registry
+//! reflects the change in real time.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::container::{ContainerId, ContainerInfo, DataContainer};
+use crate::{Error, Result};
+
+/// Thread-safe registry of deployed data containers.
+#[derive(Default)]
+pub struct Registry {
+    containers: RwLock<BTreeMap<ContainerId, Arc<DataContainer>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Register a container; errors on duplicate id.
+    pub fn add(&self, c: Arc<DataContainer>) -> Result<()> {
+        let mut map = self.containers.write().unwrap();
+        if map.contains_key(&c.id) {
+            return Err(Error::Invalid(format!("container id {} already registered", c.id)));
+        }
+        map.insert(c.id, c);
+        Ok(())
+    }
+
+    /// Deregister (dynamic removal, §III-B). Returns the container.
+    pub fn remove(&self, id: ContainerId) -> Result<Arc<DataContainer>> {
+        self.containers
+            .write()
+            .unwrap()
+            .remove(&id)
+            .ok_or_else(|| Error::NotFound(format!("container {id}")))
+    }
+
+    pub fn get(&self, id: ContainerId) -> Result<Arc<DataContainer>> {
+        self.containers
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("container {id}")))
+    }
+
+    pub fn len(&self) -> usize {
+        self.containers.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All registered containers (stable id order).
+    pub fn all(&self) -> Vec<Arc<DataContainer>> {
+        self.containers.read().unwrap().values().cloned().collect()
+    }
+
+    /// Monitor snapshots of every container (placement input).
+    pub fn infos(&self) -> Vec<ContainerInfo> {
+        self.all().iter().map(|c| c.info()).collect()
+    }
+
+    /// Live containers only.
+    pub fn live(&self) -> Vec<Arc<DataContainer>> {
+        self.all().into_iter().filter(|c| c.is_alive()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::MemBackend;
+    use crate::sim::Site;
+
+    fn dc(id: u32) -> Arc<DataContainer> {
+        DataContainer::new(
+            id,
+            format!("dc{id}"),
+            Site::ChameleonTacc,
+            1024,
+            Box::new(MemBackend::new(1 << 20)),
+        )
+    }
+
+    #[test]
+    fn add_get_remove() {
+        let r = Registry::new();
+        r.add(dc(1)).unwrap();
+        r.add(dc(2)).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(1).unwrap().name, "dc1");
+        r.remove(1).unwrap();
+        assert!(r.get(1).is_err());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_id_rejected() {
+        let r = Registry::new();
+        r.add(dc(1)).unwrap();
+        assert!(matches!(r.add(dc(1)), Err(Error::Invalid(_))));
+    }
+
+    #[test]
+    fn live_filters_dead_containers() {
+        let r = Registry::new();
+        r.add(dc(1)).unwrap();
+        r.add(dc(2)).unwrap();
+        r.get(2).unwrap().set_alive(false);
+        let live = r.live();
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].id, 1);
+        // infos still report everything, flagged.
+        let infos = r.infos();
+        assert_eq!(infos.len(), 2);
+        assert!(!infos.iter().find(|i| i.id == 2).unwrap().alive);
+    }
+
+    #[test]
+    fn remove_missing_errors() {
+        let r = Registry::new();
+        assert!(matches!(r.remove(9), Err(Error::NotFound(_))));
+    }
+}

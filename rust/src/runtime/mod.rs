@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (built once by
+//! `make artifacts` from the L2 JAX graphs + L1 Pallas kernels) and runs
+//! them on the request path. Python is never involved at runtime.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the
+//! runtime owns a dedicated **kernel-server thread**: the client and the
+//! compiled-executable cache live on that thread, and [`PjrtRuntime`] is
+//! a cheap `Send + Sync` handle dispatching requests over a channel.
+//! One compiled executable per artifact variant, compiled lazily on
+//! first use and cached for the process lifetime.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — see
+//! python/compile/aot.py for why serialized protos don't work here.
+
+mod kernels;
+mod server;
+
+pub use kernels::PjrtGfBackend;
+pub use server::{artifacts_dir, PjrtRuntime};

@@ -1,0 +1,389 @@
+//! The kernel-server thread owning the PJRT client + executable cache.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::{Error, Result};
+
+/// Resolve the artifacts directory: `DYNOSTORE_ARTIFACTS` env var, else
+/// `artifacts/` relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DYNOSTORE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let candidate = cur.join("artifacts");
+        if candidate.join("manifest.json").exists() {
+            return candidate;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+enum Request {
+    /// O[rows, b] = A[rows, cols] · D[cols, b] over GF(2^8), logically;
+    /// physically padded to the artifact's m×m tile.
+    GfMatmul {
+        a: Vec<u8>,
+        rows: usize,
+        cols: usize,
+        data: Vec<Vec<u8>>,
+        reply: Sender<Result<Vec<Vec<u8>>>>,
+    },
+    /// Utilization-factor scores over C container slots.
+    UfScore {
+        params: [f32; 3],
+        mem_total: Vec<f32>,
+        mem_avail: Vec<f32>,
+        fs_total: Vec<f32>,
+        fs_avail: Vec<f32>,
+        alive: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+}
+
+/// Entry point to the kernel-server thread (see [`PjrtRuntime::global`]).
+pub struct PjrtRuntime;
+
+/// `Send + Sync` handle to the kernel-server thread. The mpsc `Sender`
+/// is `Send` but not `Sync`, so it sits behind a Mutex; requests are
+/// tiny (pointers + vecs), contention is negligible next to kernel time.
+pub struct SyncRuntime {
+    tx: Mutex<Sender<Request>>,
+}
+
+impl PjrtRuntime {
+    /// Global runtime handle (spawns the kernel server on first use).
+    /// Errors are deferred to the first kernel call so hosts without
+    /// artifacts can still use every non-PJRT code path.
+    pub fn global() -> Arc<SyncRuntime> {
+        static RT: OnceLock<Arc<SyncRuntime>> = OnceLock::new();
+        RT.get_or_init(|| {
+            let (tx, rx) = channel::<Request>();
+            std::thread::Builder::new()
+                .name("pjrt-kernel-server".into())
+                .spawn(move || server_loop(rx))
+                .expect("spawn kernel server");
+            Arc::new(SyncRuntime { tx: Mutex::new(tx) })
+        })
+        .clone()
+    }
+}
+
+impl SyncRuntime {
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| Error::Runtime("kernel server is gone".into()))
+    }
+
+    /// GF(2^8) matmul through the AOT gf_matmul artifact.
+    pub fn gf_matmul(
+        &self,
+        a: &crate::gf256::Matrix,
+        data: &[&[u8]],
+    ) -> Result<Vec<Vec<u8>>> {
+        let (reply, rx) = channel();
+        let mut flat = Vec::with_capacity(a.rows() * a.cols());
+        for i in 0..a.rows() {
+            flat.extend_from_slice(a.row(i));
+        }
+        self.send(Request::GfMatmul {
+            a: flat,
+            rows: a.rows(),
+            cols: a.cols(),
+            data: data.iter().map(|d| d.to_vec()).collect(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| Error::Runtime("kernel server dropped reply".into()))?
+    }
+
+    /// Placement scores through the AOT uf_score artifact.
+    #[allow(clippy::too_many_arguments)]
+    pub fn uf_scores(
+        &self,
+        obj_size: f32,
+        w1: f32,
+        w2: f32,
+        mem_total: Vec<f32>,
+        mem_avail: Vec<f32>,
+        fs_total: Vec<f32>,
+        fs_avail: Vec<f32>,
+        alive: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.send(Request::UfScore {
+            params: [obj_size, w1, w2],
+            mem_total,
+            mem_avail,
+            fs_total,
+            fs_avail,
+            alive,
+            reply,
+        })?;
+        rx.recv().map_err(|_| Error::Runtime("kernel server dropped reply".into()))?
+    }
+}
+
+/// Artifact tile sizes compiled by python/compile/aot.py.
+const GF_SIZES: [usize; 3] = [4, 8, 16];
+const GF_BLOCKS: [(usize, usize); 3] = [(4096, 1024), (65536, 8192), (262144, 16384)];
+const UF_SIZES: [usize; 2] = [64, 256];
+
+struct ServerState {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ServerState {
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("load {name}: {e:?}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e:?}")))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+}
+
+fn server_loop(rx: std::sync::mpsc::Receiver<Request>) {
+    let mut state: Option<ServerState> = None;
+    let mut init_error: Option<String> = None;
+    while let Ok(req) = rx.recv() {
+        if state.is_none() && init_error.is_none() {
+            match xla::PjRtClient::cpu() {
+                Ok(client) => {
+                    state = Some(ServerState {
+                        client,
+                        dir: artifacts_dir(),
+                        executables: HashMap::new(),
+                    })
+                }
+                Err(e) => init_error = Some(format!("PjRtClient::cpu failed: {e:?}")),
+            }
+        }
+        match req {
+            Request::GfMatmul { a, rows, cols, data, reply } => {
+                let res = match (&mut state, &init_error) {
+                    (Some(st), _) => gf_matmul_exec(st, &a, rows, cols, &data),
+                    (None, Some(e)) => Err(Error::Runtime(e.clone())),
+                    (None, None) => unreachable!(),
+                };
+                let _ = reply.send(res);
+            }
+            Request::UfScore {
+                params,
+                mem_total,
+                mem_avail,
+                fs_total,
+                fs_avail,
+                alive,
+                reply,
+            } => {
+                let res = match (&mut state, &init_error) {
+                    (Some(st), _) => uf_score_exec(
+                        st, params, &mem_total, &mem_avail, &fs_total, &fs_avail, &alive,
+                    ),
+                    (None, Some(e)) => Err(Error::Runtime(e.clone())),
+                    (None, None) => unreachable!(),
+                };
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+/// Pick the smallest artifact tile that fits the logical (rows, cols).
+fn pick_m(rows: usize, cols: usize) -> Result<usize> {
+    let need = rows.max(cols);
+    GF_SIZES
+        .iter()
+        .copied()
+        .find(|&m| m >= need)
+        .ok_or_else(|| Error::Runtime(format!("no gf artifact tile >= {need}")))
+}
+
+/// Pick the stripe width. §Perf iteration 2 tried preferring the
+/// 256 KiB block (fewer executes); measured a 2x REGRESSION on this
+/// host — the interpret-lowered elementwise graph materializes ~m x
+/// block u16 intermediates per step and the 256 KiB variant thrashes
+/// L2/L3. Reverted: 64 KiB is the sweet spot; the 256 KiB artifacts
+/// remain available for real-TPU estimates.
+fn pick_block(len: usize) -> (usize, usize) {
+    if len >= GF_BLOCKS[1].0 {
+        GF_BLOCKS[1]
+    } else {
+        GF_BLOCKS[0]
+    }
+}
+
+fn gf_matmul_exec(
+    st: &mut ServerState,
+    a: &[u8],
+    rows: usize,
+    cols: usize,
+    data: &[Vec<u8>],
+) -> Result<Vec<Vec<u8>>> {
+    if data.len() != cols {
+        return Err(Error::Runtime("data row count != cols".into()));
+    }
+    let len = data.first().map_or(0, |d| d.len());
+    if data.iter().any(|d| d.len() != len) {
+        return Err(Error::Runtime("ragged data rows".into()));
+    }
+    let m = pick_m(rows, cols)?;
+    let (block, tile) = pick_block(len);
+    let name = format!("gf_matmul_m{m}_t{tile}_b{block}");
+
+    // Pad A into the m×m tile (zero rows/cols are inert under GF).
+    let mut a_pad = vec![0u8; m * m];
+    for i in 0..rows {
+        a_pad[i * m..i * m + cols].copy_from_slice(&a[i * cols..(i + 1) * cols]);
+    }
+    let a_lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        &[m, m],
+        &a_pad,
+    )
+    .map_err(|e| Error::Runtime(format!("A literal: {e:?}")))?;
+
+    let mut out: Vec<Vec<u8>> = (0..rows).map(|_| vec![0u8; len]).collect();
+    let mut d_pad = vec![0u8; m * block];
+    let mut offset = 0usize;
+    while offset < len || (len == 0 && offset == 0) {
+        let take = (len - offset).min(block);
+        // Pack this stripe: m rows × block cols, zero-padded.
+        d_pad.iter_mut().for_each(|b| *b = 0);
+        for (j, row) in data.iter().enumerate() {
+            d_pad[j * block..j * block + take].copy_from_slice(&row[offset..offset + take]);
+        }
+        let d_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[m, block],
+            &d_pad,
+        )
+        .map_err(|e| Error::Runtime(format!("D literal: {e:?}")))?;
+
+        let exe = st.executable(&name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit.clone(), d_lit])
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e:?}")))?;
+        let tuple = result
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple: {e:?}")))?;
+        let flat: Vec<u8> =
+            tuple.to_vec::<u8>().map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))?;
+        if flat.len() != m * block {
+            return Err(Error::Runtime(format!(
+                "unexpected result size {} != {}",
+                flat.len(),
+                m * block
+            )));
+        }
+        for (i, out_row) in out.iter_mut().enumerate() {
+            out_row[offset..offset + take]
+                .copy_from_slice(&flat[i * block..i * block + take]);
+        }
+        offset += take;
+        if len == 0 {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn uf_score_exec(
+    st: &mut ServerState,
+    params: [f32; 3],
+    mem_total: &[f32],
+    mem_avail: &[f32],
+    fs_total: &[f32],
+    fs_avail: &[f32],
+    alive: &[f32],
+) -> Result<Vec<f32>> {
+    let count = mem_total.len();
+    let c = UF_SIZES
+        .iter()
+        .copied()
+        .find(|&c| c >= count)
+        .ok_or_else(|| Error::Runtime(format!("no uf artifact >= {count} containers")))?;
+    let name = format!("uf_score_c{c}");
+
+    let lit_f32 = |vals: &[f32], pad_to: usize, dims: &[usize]| -> Result<xla::Literal> {
+        let mut v = vals.to_vec();
+        v.resize(pad_to, 0.0);
+        let bytes: Vec<u8> = v.iter().flat_map(|f| f.to_le_bytes()).collect();
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &bytes)
+            .map_err(|e| Error::Runtime(format!("f32 literal: {e:?}")))
+    };
+    let args = vec![
+        lit_f32(&params, 3, &[3])?,
+        lit_f32(mem_total, c, &[c])?,
+        lit_f32(mem_avail, c, &[c])?,
+        lit_f32(fs_total, c, &[c])?,
+        lit_f32(fs_avail, c, &[c])?,
+        lit_f32(alive, c, &[c])?,
+    ];
+    let exe = st.executable(&name)?;
+    let result = exe
+        .execute::<xla::Literal>(&args)
+        .map_err(|e| Error::Runtime(format!("execute {name}: {e:?}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("fetch: {e:?}")))?;
+    let scores: Vec<f32> = result
+        .to_tuple1()
+        .map_err(|e| Error::Runtime(format!("untuple: {e:?}")))?
+        .to_vec::<f32>()
+        .map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))?;
+    Ok(scores[..count].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_m_covers_paper_configs() {
+        assert_eq!(pick_m(3, 2).unwrap(), 4);
+        assert_eq!(pick_m(6, 3).unwrap(), 8);
+        assert_eq!(pick_m(10, 7).unwrap(), 16);
+        assert_eq!(pick_m(16, 16).unwrap(), 16);
+        assert!(pick_m(17, 2).is_err());
+    }
+
+    #[test]
+    fn pick_block_by_payload() {
+        assert_eq!(pick_block(100).0, 4096);
+        assert_eq!(pick_block(65536).0, 65536);
+        assert_eq!(pick_block(1 << 20).0, 65536);
+    }
+
+    #[test]
+    fn artifacts_dir_finds_manifest() {
+        // In-repo test run: the workspace artifacts dir must resolve.
+        let dir = artifacts_dir();
+        assert!(
+            dir.join("manifest.json").exists() || std::env::var("DYNOSTORE_ARTIFACTS").is_err(),
+            "artifacts dir {dir:?}"
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! Container failure model for the §VI-D dynamic-resilience experiment
+//! (Table II): heterogeneous containers with annual failure rates between
+//! 1 % and 25 %, and a reliability target of at most 0.1 % loss
+//! probability per data item per year.
+
+use crate::util::Rng;
+
+/// Per-container annual failure probabilities.
+#[derive(Debug, Clone)]
+pub struct FailureModel {
+    /// `afr[i]` = probability container i fails within one year.
+    pub afr: Vec<f64>,
+}
+
+impl FailureModel {
+    /// The paper's scenario: `count` heterogeneous containers with AFRs
+    /// evenly spread across [1 %, 25 %] then shuffled deterministically.
+    pub fn paper_scenario(count: usize, seed: u64) -> FailureModel {
+        let mut afr: Vec<f64> = (0..count)
+            .map(|i| {
+                if count == 1 {
+                    0.13
+                } else {
+                    0.01 + 0.24 * i as f64 / (count - 1) as f64
+                }
+            })
+            .collect();
+        let mut rng = Rng::new(seed);
+        // Shuffle so container index does not encode reliability.
+        for i in (1..afr.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            afr.swap(i, j);
+        }
+        FailureModel { afr }
+    }
+
+    pub fn len(&self) -> usize {
+        self.afr.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.afr.is_empty()
+    }
+
+    /// Probability that a specific set of `placement` containers suffers
+    /// MORE than `tolerated` failures in a year — i.e. the data-loss
+    /// probability of an (n, k) placement with n-k parity chunks.
+    ///
+    /// Exact dynamic-programming convolution over independent Bernoulli
+    /// failures (n ≤ 16, so this is tiny).
+    pub fn loss_probability(&self, placement: &[usize], tolerated: usize) -> f64 {
+        // dp[j] = P(exactly j failures among processed containers)
+        let mut dp = vec![0.0f64; placement.len() + 1];
+        dp[0] = 1.0;
+        for (done, &c) in placement.iter().enumerate() {
+            let p = self.afr[c];
+            for j in (0..=done).rev() {
+                dp[j + 1] += dp[j] * p;
+                dp[j] *= 1.0 - p;
+            }
+        }
+        dp.iter().skip(tolerated + 1).sum()
+    }
+
+    /// Sample which containers fail in one simulated year.
+    pub fn sample_failures(&self, rng: &mut Rng) -> Vec<bool> {
+        self.afr.iter().map(|&p| rng.chance(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scenario_afr_bounds() {
+        let m = FailureModel::paper_scenario(10, 42);
+        assert_eq!(m.len(), 10);
+        for &p in &m.afr {
+            assert!((0.01..=0.25).contains(&p), "afr {p}");
+        }
+        let min = m.afr.iter().cloned().fold(1.0, f64::min);
+        let max = m.afr.iter().cloned().fold(0.0, f64::max);
+        assert!((min - 0.01).abs() < 1e-9 && (max - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_probability_zero_tolerance() {
+        // One container with AFR p, tolerate 0 failures → loss = p.
+        let m = FailureModel { afr: vec![0.1] };
+        assert!((m.loss_probability(&[0], 0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_probability_matches_closed_form_pair() {
+        // Two containers p=q=0.1, tolerate 1 → loss = p*q = 0.01.
+        let m = FailureModel { afr: vec![0.1, 0.1] };
+        assert!((m.loss_probability(&[0, 1], 1) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_parity_lowers_loss() {
+        let m = FailureModel::paper_scenario(10, 7);
+        let placement: Vec<usize> = (0..10).collect();
+        let mut prev = 1.0;
+        for tol in 0..5 {
+            let p = m.loss_probability(&placement, tol);
+            assert!(p < prev, "tolerated={tol}: {p} !< {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn reliable_containers_beat_flaky_ones() {
+        let m = FailureModel { afr: vec![0.01, 0.01, 0.01, 0.25, 0.25, 0.25] };
+        let good = m.loss_probability(&[0, 1, 2], 1);
+        let bad = m.loss_probability(&[3, 4, 5], 1);
+        assert!(good < bad / 10.0);
+    }
+
+    #[test]
+    fn sample_failures_rate_roughly_matches() {
+        let m = FailureModel { afr: vec![0.25; 1000] };
+        let mut rng = Rng::new(1);
+        let fails = m.sample_failures(&mut rng).iter().filter(|&&f| f).count();
+        assert!((180..=320).contains(&fails), "got {fails} / 1000");
+    }
+}

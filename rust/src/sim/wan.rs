@@ -1,0 +1,183 @@
+//! Wide-area network model: the sites of paper Table I and the links
+//! between them.
+//!
+//! Calibration anchors (from the paper's own measurements):
+//! * Fig. 5, Madrid → Chameleon, Regular upload of 1000 MB ≈ 8.9 s —
+//!   transatlantic effective bandwidth ≈ 112 MB/s (≈ 1 Gbps path, the
+//!   iperf "max" line in Figs. 5-6).
+//! * Chameleon ↔ Chameleon (TACC/UC intra-testbed): 10 Gbps research
+//!   network, sub-ms on-site RTT, ~32 ms TACC↔UC.
+//! * AWS FSx Lustre throughput 300 MB/s (§VI-B) caps the device, not the
+//!   VPC network (10 Gbps).
+
+use std::collections::BTreeMap;
+
+/// A geographic location hosting clients, containers, or services.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Site {
+    /// University Carlos III of Madrid (Client1 in Table I).
+    Madrid,
+    /// Chameleon CHI@TACC (half of DSEndpoints1-10).
+    ChameleonTacc,
+    /// Chameleon CHI@UC (other half of DSEndpoints1-10; Metadata node).
+    ChameleonUc,
+    /// AWS North Virginia (DSEndpoints11-20).
+    AwsVirginia,
+    /// Cinvestav private cluster, Victoria, Mexico (GCEndpoint2).
+    Victoria,
+}
+
+impl Site {
+    pub const ALL: [Site; 5] = [
+        Site::Madrid,
+        Site::ChameleonTacc,
+        Site::ChameleonUc,
+        Site::AwsVirginia,
+        Site::Victoria,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Site::Madrid => "madrid",
+            Site::ChameleonTacc => "chameleon-tacc",
+            Site::ChameleonUc => "chameleon-uc",
+            Site::AwsVirginia => "aws-virginia",
+            Site::Victoria => "victoria",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Site> {
+        Site::ALL.iter().copied().find(|site| site.name() == s)
+    }
+}
+
+/// Directed link properties (we model links symmetric).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Round-trip time in seconds.
+    pub rtt_s: f64,
+    /// Bandwidth in bytes/second.
+    pub bw_bytes_s: f64,
+}
+
+/// The WAN: pairwise links + per-request protocol overhead.
+#[derive(Debug, Clone)]
+pub struct Wan {
+    links: BTreeMap<(Site, Site), Link>,
+    /// Fixed per-HTTP-request overhead (connection setup, headers,
+    /// gateway processing) in seconds.
+    pub request_overhead_s: f64,
+}
+
+const MB: f64 = 1e6;
+
+impl Default for Wan {
+    fn default() -> Self {
+        Self::paper_testbed()
+    }
+}
+
+impl Wan {
+    /// The Table I testbed.
+    pub fn paper_testbed() -> Wan {
+        let mut wan = Wan { links: BTreeMap::new(), request_overhead_s: 0.030 };
+        let mut set = |a: Site, b: Site, rtt_ms: f64, bw_mb_s: f64| {
+            wan.links
+                .insert(key(a, b), Link { rtt_s: rtt_ms / 1e3, bw_bytes_s: bw_mb_s * MB });
+        };
+        // Local loops (same site): effectively LAN.
+        for s in Site::ALL {
+            set(s, s, 0.2, 1250.0); // 10 Gbps, 0.2 ms
+        }
+        // Chameleon TACC <-> UC: 10 Gbps research backbone, ~32 ms.
+        set(Site::ChameleonTacc, Site::ChameleonUc, 32.0, 1150.0);
+        // Madrid <-> Chameleon: transatlantic ~1 Gbps path (Fig. 5 anchor).
+        set(Site::Madrid, Site::ChameleonTacc, 110.0, 112.0);
+        set(Site::Madrid, Site::ChameleonUc, 105.0, 112.0);
+        // Madrid <-> AWS Virginia: ~0.9 Gbps commodity transit.
+        set(Site::Madrid, Site::AwsVirginia, 90.0, 105.0);
+        // Chameleon <-> AWS: good peering.
+        set(Site::ChameleonTacc, Site::AwsVirginia, 38.0, 500.0);
+        set(Site::ChameleonUc, Site::AwsVirginia, 22.0, 500.0);
+        // Victoria private cluster: modest uplink.
+        set(Site::Victoria, Site::Madrid, 130.0, 60.0);
+        set(Site::Victoria, Site::ChameleonTacc, 45.0, 80.0);
+        set(Site::Victoria, Site::ChameleonUc, 55.0, 80.0);
+        set(Site::Victoria, Site::AwsVirginia, 50.0, 80.0);
+        wan
+    }
+
+    pub fn link(&self, a: Site, b: Site) -> Link {
+        *self.links.get(&key(a, b)).expect("all site pairs populated")
+    }
+
+    /// Simulated seconds to move `bytes` from `a` to `b` as ONE flow when
+    /// `flows` flows share the path concurrently (processor sharing).
+    /// Includes half-RTT data latency + per-request overhead.
+    pub fn transfer_s(&self, a: Site, b: Site, bytes: u64, flows: u32) -> f64 {
+        let l = self.link(a, b);
+        let share = l.bw_bytes_s / flows.max(1) as f64;
+        self.request_overhead_s + l.rtt_s / 2.0 + bytes as f64 / share
+    }
+
+    /// The iperf-style raw path capacity in MB/s (the "Max" line of
+    /// Figs. 5-6).
+    pub fn iperf_mb_s(&self, a: Site, b: Site) -> f64 {
+        self.link(a, b).bw_bytes_s / MB
+    }
+}
+
+fn key(a: Site, b: Site) -> (Site, Site) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn links_are_symmetric() {
+        let wan = Wan::paper_testbed();
+        for a in Site::ALL {
+            for b in Site::ALL {
+                assert_eq!(wan.link(a, b), wan.link(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn fig5_anchor_madrid_to_chameleon_1000mb() {
+        // Paper: 1000 MB regular upload Madrid→Chameleon ≈ 8.9 s.
+        let wan = Wan::paper_testbed();
+        let t = wan.transfer_s(Site::Madrid, Site::ChameleonTacc, 1000_000_000, 1);
+        assert!((8.0..10.0).contains(&t), "got {t} s");
+    }
+
+    #[test]
+    fn local_transfers_much_faster_than_wan() {
+        let wan = Wan::paper_testbed();
+        let local = wan.transfer_s(Site::ChameleonTacc, Site::ChameleonTacc, 100_000_000, 1);
+        let wide = wan.transfer_s(Site::Madrid, Site::ChameleonTacc, 100_000_000, 1);
+        assert!(local < wide / 5.0, "local {local} vs wan {wide}");
+    }
+
+    #[test]
+    fn flow_sharing_divides_bandwidth() {
+        let wan = Wan::paper_testbed();
+        let one = wan.transfer_s(Site::Madrid, Site::ChameleonUc, 50_000_000, 1);
+        let four = wan.transfer_s(Site::Madrid, Site::ChameleonUc, 50_000_000, 4);
+        assert!(four > one * 3.0, "4-way sharing ~4x slower per flow");
+    }
+
+    #[test]
+    fn site_name_roundtrip() {
+        for s in Site::ALL {
+            assert_eq!(Site::parse(s.name()), Some(s));
+        }
+        assert_eq!(Site::parse("nowhere"), None);
+    }
+}

