@@ -1,23 +1,80 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): REAL wallclock for
-//! the erasure-coding data plane — the compute contribution the L1
-//! Pallas kernel accelerates.
+//! the erasure-coding data plane, comparing the GF(2^8) engines side by
+//! side:
 //!
-//! * pure-rust table codec: encode/decode throughput per (n, k) & size
-//! * PJRT Pallas-kernel backend: the same, through the AOT artifacts
-//! * `mul_slice_acc` primitive: the inner-loop byte rate
-//! * SHA3-256: the integrity-hash rate (it brackets the coding path)
+//! * `pure-rust` — scalar table codec (baseline + oracle)
+//! * `swar` — fused split-nibble SWAR kernel, single thread
+//! * `swar-parallel` — SWAR kernel column-sharded across cores
+//! * `pjrt` — AOT Pallas artifacts, when built (`make artifacts`)
+//!
+//! Every backend's chunks are asserted bit-identical to the scalar
+//! oracle before timing, so the speedup numbers can't come from wrong
+//! answers. Alongside the markdown tables the run writes
+//! `BENCH_hotpath.json` (machine-readable rows for the perf trajectory
+//! in EXPERIMENTS.md §Perf).
+//!
+//! `--smoke` shrinks sizes/iterations for CI; full runs measure up to
+//! 16 MiB objects.
 
 use dynostore::bench::{fmt_mb_s, measure, Table};
 use dynostore::crypto::sha3_256;
-use dynostore::erasure::{Codec, ErasureConfig, GfBackend, PureRustBackend};
-use dynostore::gf256::{ida_generator, mul_slice_acc};
-use dynostore::runtime::PjrtGfBackend;
+use dynostore::erasure::{
+    Chunk, Codec, ErasureConfig, GfBackend, ParallelBackend, SwarBackend,
+};
+use dynostore::gf256::mul_slice_acc;
+use dynostore::json::{obj, to_string_pretty, Value};
 use dynostore::util::Rng;
 
-fn main() {
-    println!("# Hot path — erasure coding wallclock (REAL time, this host)");
+struct BenchRow {
+    config: String,
+    size: usize,
+    backend: &'static str,
+    encode_mb_s: f64,
+    decode_mb_s: f64,
+}
 
-    // --- inner loop primitive ---------------------------------------
+/// Encode+decode throughput of one codec over one object; decode uses a
+/// genuinely gapped survivor set (every other index, wrapping to fill k,
+/// always mixing data + parity) so the general inverse path is timed.
+fn bench_codec<B: GfBackend>(
+    codec: &Codec<B>,
+    object: &[u8],
+    oracle_chunks: &[Chunk],
+    iters: usize,
+) -> (f64, f64) {
+    let chunks = codec.encode(object).unwrap();
+    assert_eq!(
+        chunks, oracle_chunks,
+        "{} chunks differ from scalar oracle",
+        codec.backend_name()
+    );
+    let n = chunks.len();
+    let k = oracle_chunks[0].header.k as usize;
+    let mut picks: Vec<usize> = (0..n).step_by(2).collect();
+    picks.extend((1..n).step_by(2));
+    picks.truncate(k);
+    let subset: Vec<Chunk> = picks.iter().map(|&i| chunks[i].clone()).collect();
+    assert_eq!(codec.decode(&subset).unwrap(), object, "decode roundtrip");
+
+    let enc = measure(1, iters, || {
+        std::hint::black_box(codec.encode(object).unwrap());
+    });
+    let dec = measure(1, iters, || {
+        std::hint::black_box(codec.decode(&subset).unwrap());
+    });
+    (
+        enc.throughput(object.len() as u64) / 1e6,
+        dec.throughput(object.len() as u64) / 1e6,
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# Hot path — erasure coding wallclock (REAL time, this host)");
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    println!("host cores: {cores}  mode: {}", if smoke { "smoke" } else { "full" });
+
+    // --- inner loop primitives ---------------------------------------
     let mut rng = Rng::new(1);
     let src = rng.bytes(1 << 20);
     let mut acc = rng.bytes(1 << 20);
@@ -26,7 +83,17 @@ fn main() {
         std::hint::black_box(&acc);
     });
     println!(
-        "\nmul_slice_acc (1 MiB): {} -> {}",
+        "\nmul_slice_acc scalar (1 MiB): {} -> {}",
+        stats,
+        fmt_mb_s(stats.throughput(1 << 20))
+    );
+    let nib = dynostore::gf256::NibbleTable::new(0xA7);
+    let stats = measure(3, 30, || {
+        nib.mul_xor(&src, &mut acc);
+        std::hint::black_box(&acc);
+    });
+    println!(
+        "nibble mul_xor SWAR (1 MiB): {} -> {}",
         stats,
         fmt_mb_s(stats.throughput(1 << 20))
     );
@@ -38,70 +105,124 @@ fn main() {
     });
     println!("sha3-256 (4 MiB): {} -> {}", stats, fmt_mb_s(stats.throughput(4 << 20)));
 
-    // --- codec throughput ---------------------------------------------
+    // --- codec throughput: scalar vs swar vs swar-parallel -----------
     let mut table = Table::new(
         "Erasure codec wallclock throughput (object bytes / elapsed)",
-        &["config", "size", "encode (pure-rust)", "decode (pure-rust)", "encode (pjrt)", "decode (pjrt)"],
+        &[
+            "config",
+            "size",
+            "backend",
+            "encode",
+            "decode",
+            "encode speedup vs scalar",
+        ],
     );
-    let have_artifacts =
-        dynostore::runtime::artifacts_dir().join("manifest.json").exists();
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let sizes: &[usize] = if smoke { &[1 << 20] } else { &[1 << 20, 16 << 20] };
+    let mut headline: Option<f64> = None; // IDA(10,7) @ 16 MiB parallel/scalar
+
     for &(n, k) in &[(3usize, 2usize), (6, 3), (10, 7), (12, 8)] {
-        for &size in &[1usize << 20, 16 << 20] {
+        for &size in sizes {
             let object = Rng::new((n * size) as u64).bytes(size);
             let cfg = ErasureConfig::new(n, k);
-
-            let pure = Codec::new(cfg).unwrap();
-            let iters = if size > (4 << 20) { 5 } else { 12 };
-            let enc = measure(1, iters, || {
-                std::hint::black_box(pure.encode(&object).unwrap());
-            });
-            let chunks = pure.encode(&object).unwrap();
-            let subset: Vec<_> = chunks[n - k..].to_vec();
-            let dec = measure(1, iters, || {
-                std::hint::black_box(pure.decode(&subset).unwrap());
-            });
-
-            let (enc_pjrt, dec_pjrt) = if have_artifacts {
-                let pjrt = Codec::with_backend(cfg, PjrtGfBackend::global()).unwrap();
-                let e = measure(1, 3, || {
-                    std::hint::black_box(pjrt.encode(&object).unwrap());
-                });
-                let d = measure(1, 3, || {
-                    std::hint::black_box(pjrt.decode(&subset).unwrap());
-                });
-                (fmt_mb_s(e.throughput(size as u64)), fmt_mb_s(d.throughput(size as u64)))
-            } else {
-                ("n/a".into(), "n/a".into())
+            let iters = match (smoke, size > (4 << 20)) {
+                (true, _) => 3,
+                (false, true) => 5,
+                (false, false) => 12,
             };
 
-            table.row(vec![
-                format!("IDA({n},{k})"),
-                format!("{} MiB", size >> 20),
-                fmt_mb_s(enc.throughput(size as u64)),
-                fmt_mb_s(dec.throughput(size as u64)),
-                enc_pjrt,
-                dec_pjrt,
-            ]);
+            let scalar = Codec::new(cfg).unwrap();
+            let oracle_chunks = scalar.encode(&object).unwrap();
+            let (scalar_enc, scalar_dec) =
+                bench_codec(&scalar, &object, &oracle_chunks, iters);
+
+            let swar = Codec::with_backend(cfg, SwarBackend::new()).unwrap();
+            let (swar_enc, swar_dec) = bench_codec(&swar, &object, &oracle_chunks, iters);
+
+            let par = Codec::with_backend(cfg, ParallelBackend::auto()).unwrap();
+            let (par_enc, par_dec) = bench_codec(&par, &object, &oracle_chunks, iters);
+
+            for (backend, enc, dec) in [
+                ("pure-rust", scalar_enc, scalar_dec),
+                ("swar", swar_enc, swar_dec),
+                ("swar-parallel", par_enc, par_dec),
+            ] {
+                table.row(vec![
+                    format!("IDA({n},{k})"),
+                    format!("{} MiB", size >> 20),
+                    backend.to_string(),
+                    format!("{enc:.1} MB/s"),
+                    format!("{dec:.1} MB/s"),
+                    format!("{:.2}x", enc / scalar_enc),
+                ]);
+                rows.push(BenchRow {
+                    config: format!("IDA({n},{k})"),
+                    size,
+                    backend,
+                    encode_mb_s: enc,
+                    decode_mb_s: dec,
+                });
+            }
+            if (n, k) == (10, 7) && size == (16 << 20) {
+                headline = Some(par_enc / scalar_enc);
+            }
         }
     }
     table.print();
 
-    // --- GF matmul structural numbers for the L1 kernel ---------------
-    println!("\nL1 kernel structural profile (VMEM per grid step, from BlockSpec):");
-    for (m, tile) in [(4usize, 1024usize), (4, 8192), (8, 8192), (16, 8192)] {
-        let vmem = m * m + 2 * m * tile;
-        println!("  m={m:<2} tile={tile:<5} -> {vmem} bytes/step");
+    if let Some(speedup) = headline {
+        println!(
+            "HEADLINE IDA(10,7) 16 MiB encode: swar-parallel is {speedup:.2}x scalar \
+             (acceptance floor: 2.00x)"
+        );
     }
-    let g = ida_generator(10, 7).unwrap();
-    let rows: Vec<Vec<u8>> = (0..7).map(|i| Rng::new(i).bytes(1 << 20)).collect();
-    let refs: Vec<&[u8]> = rows.iter().map(|r| r.as_slice()).collect();
-    let mut out: Vec<Vec<u8>> = (0..10).map(|_| vec![0u8; 1 << 20]).collect();
-    let stats = measure(1, 8, || {
-        PureRustBackend.matmul(&g, &refs, &mut out).unwrap();
-    });
-    println!(
-        "gf_matmul 10x7 over 7 MiB stripe: {} -> {} (input-byte rate)",
-        stats,
-        fmt_mb_s(stats.throughput(7 << 20))
-    );
+
+    // --- PJRT backend, when compiled in AND artifacts exist ----------
+    if dynostore::runtime::pjrt_available() {
+        let cfg = ErasureConfig::new(10, 7);
+        let size = if smoke { 1 << 20 } else { 16 << 20 };
+        let object = Rng::new(77).bytes(size);
+        let scalar = Codec::new(cfg).unwrap();
+        let oracle_chunks = scalar.encode(&object).unwrap();
+        let pjrt =
+            Codec::with_backend(cfg, dynostore::runtime::PjrtGfBackend::global()).unwrap();
+        let (enc, dec) = bench_codec(&pjrt, &object, &oracle_chunks, 3);
+        println!("\npjrt IDA(10,7) {} MiB: encode {enc:.1} MB/s decode {dec:.1} MB/s", size >> 20);
+        rows.push(BenchRow {
+            config: "IDA(10,7)".into(),
+            size,
+            backend: "pjrt-pallas",
+            encode_mb_s: enc,
+            decode_mb_s: dec,
+        });
+    } else {
+        println!(
+            "\npjrt backend: skipped (needs --features xla-runtime + artifacts/manifest.json)"
+        );
+    }
+
+    // --- machine-readable output for the perf trajectory -------------
+    let json_rows: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("config", r.config.as_str().into()),
+                ("size_bytes", r.size.into()),
+                ("backend", r.backend.into()),
+                ("encode_mb_s", r.encode_mb_s.into()),
+                ("decode_mb_s", r.decode_mb_s.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "hotpath_erasure".into()),
+        ("host_cores", cores.into()),
+        ("smoke", smoke.into()),
+        ("rows", Value::Arr(json_rows)),
+    ]);
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {path} ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

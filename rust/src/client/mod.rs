@@ -130,6 +130,14 @@ impl Client {
         self.store.exists(&self.token, collection, name)
     }
 
+    /// Name of the GF(2^8) backend serving this client's deployment
+    /// (`pure-rust | swar | swar-parallel | pjrt-pallas`) — the knob is
+    /// set deployment-side via `Config`'s `engine` field; clients
+    /// observe it here and in every push/pull report.
+    pub fn engine_name(&self) -> &'static str {
+        self.store.backend_name()
+    }
+
     pub fn evict(&self, collection: &str, name: &str) -> Result<usize> {
         self.store.evict(&self.token, collection, name)
     }
@@ -227,6 +235,7 @@ mod tests {
     fn client_roundtrip() {
         let (ds, token) = deployment();
         let client = Client::new(ds, token, Site::Madrid);
+        assert_eq!(client.engine_name(), "pure-rust");
         let data = crate::util::Rng::new(1).bytes(10_000);
         client.push("/UserA", "obj", &data).unwrap();
         assert!(client.exists("/UserA", "obj").unwrap());

@@ -10,7 +10,7 @@
 //!   "metadata_replicas": 3,
 //!   "policy": {"type": "erasure", "n": 10, "k": 7},
 //!   "weights": {"w1_mem": 0.5, "w2_fs": 0.5},
-//!   "engine": "pure-rust",
+//!   "engine": "swar-parallel",
 //!   "containers": [
 //!     {"name": "dc0", "site": "chameleon-tacc", "device": "chameleon-local",
 //!      "mem_mb": 256, "fs_gb": 1024, "afr": 0.05}
@@ -75,11 +75,12 @@ impl Config {
             w1_mem: w.opt_f64("w1_mem", 0.5),
             w2_fs: w.opt_f64("w2_fs", 0.5),
         };
-        cfg.engine = match v.opt_str("engine", "pure-rust") {
-            "pure-rust" => GfEngine::PureRust,
-            "pjrt" => GfEngine::Pjrt,
-            other => return Err(Error::Config(format!("unknown engine '{other}'"))),
-        };
+        let engine = v.opt_str("engine", "pure-rust");
+        cfg.engine = GfEngine::parse(engine).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown engine '{engine}' (expected pure-rust | swar | swar-parallel | pjrt)"
+            ))
+        })?;
         if let Some(arr) = v.get("containers").as_arr() {
             for c in arr {
                 cfg.containers.push(parse_container(c)?);
@@ -193,6 +194,39 @@ mod tests {
             .is_err());
         assert!(Config::from_json("{\"engine\": \"cuda\"}").is_err());
         assert!(Config::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn engine_knob_selects_backend() {
+        for (spelling, engine) in [
+            ("pure-rust", GfEngine::PureRust),
+            ("pure", GfEngine::PureRust),
+            ("swar", GfEngine::Swar),
+            ("swar-parallel", GfEngine::SwarParallel),
+            ("pjrt", GfEngine::Pjrt),
+        ] {
+            let cfg =
+                Config::from_json(&format!("{{\"engine\": \"{spelling}\"}}")).unwrap();
+            assert_eq!(cfg.engine, engine, "{spelling}");
+        }
+        // A swar-parallel deployment builds and serves the data path.
+        let cfg = Config::from_json(
+            r#"{"engine": "swar-parallel",
+                "containers": [
+                    {"name": "dc0"}, {"name": "dc1"}, {"name": "dc2"},
+                    {"name": "dc3"}, {"name": "dc4"}, {"name": "dc5"},
+                    {"name": "dc6"}, {"name": "dc7"}, {"name": "dc8"},
+                    {"name": "dc9"}, {"name": "dc10"}, {"name": "dc11"}
+                ]}"#,
+        )
+        .unwrap();
+        let ds = cfg.build().unwrap();
+        assert_eq!(ds.backend_name(), "swar-parallel");
+        let token = ds.register_user("u").unwrap();
+        let report = ds
+            .push(&token, "/u", "obj", &[7u8; 40_000], Default::default())
+            .unwrap();
+        assert_eq!(report.backend, "swar-parallel");
     }
 
     #[test]

@@ -18,7 +18,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::container::DataContainer;
 use crate::crypto::TokenService;
-use crate::erasure::{Codec, ErasureConfig, GfBackend, PureRustBackend};
+use crate::erasure::{
+    Codec, ErasureConfig, GfBackend, ParallelBackend, PureRustBackend, SwarBackend,
+};
 use crate::paxos::{MetaCommand, ReplicatedMeta};
 use crate::placement::{Placer, Weights};
 use crate::policy::ResiliencePolicy;
@@ -30,10 +32,43 @@ use crate::{Error, Result};
 /// Which GF(2^8) engine drives the erasure hot path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GfEngine {
-    /// Table-driven pure rust (always available).
+    /// Table-driven pure rust (always available; the oracle baseline).
     PureRust,
+    /// Fused split-nibble SWAR kernel, single-threaded.
+    Swar,
+    /// SWAR kernel column-sharded across a worker pool sized to the
+    /// host's cores (small objects stay single-threaded).
+    SwarParallel,
     /// The AOT-compiled Pallas kernel via PJRT (requires `make artifacts`).
     Pjrt,
+}
+
+impl GfEngine {
+    /// Parse the config/CLI spelling of an engine.
+    pub fn parse(s: &str) -> Option<GfEngine> {
+        match s {
+            "pure" | "pure-rust" => Some(GfEngine::PureRust),
+            "swar" => Some(GfEngine::Swar),
+            "swar-parallel" => Some(GfEngine::SwarParallel),
+            "pjrt" => Some(GfEngine::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GfEngine::PureRust => "pure-rust",
+            GfEngine::Swar => "swar",
+            GfEngine::SwarParallel => "swar-parallel",
+            GfEngine::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for GfEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
 }
 
 /// Runtime counters (the §III-B "metrics" the gateway exposes).
@@ -149,6 +184,8 @@ impl Builder {
     pub fn build(self) -> DynoStore {
         let backend: Arc<dyn GfBackend> = match self.engine {
             GfEngine::PureRust => Arc::new(PureRustBackend),
+            GfEngine::Swar => Arc::new(SwarBackend::new()),
+            GfEngine::SwarParallel => Arc::new(ParallelBackend::auto()),
             GfEngine::Pjrt => Arc::new(PjrtGfBackend::global()),
         };
         DynoStore {
@@ -175,6 +212,13 @@ impl DynoStore {
     /// Engine selected at build time.
     pub fn engine(&self) -> GfEngine {
         self.engine
+    }
+
+    /// Name of the live GF(2^8) backend driving this deployment's
+    /// erasure hot path (surfaced by the gateway's `/health` endpoint
+    /// and the per-operation reports).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Register a container (administrator add, §III-B registry).
@@ -252,6 +296,28 @@ mod tests {
         assert_eq!(ds.registry.len(), 1);
         ds.remove_container(0).unwrap();
         assert!(ds.registry.is_empty());
+    }
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for e in [GfEngine::PureRust, GfEngine::Swar, GfEngine::SwarParallel, GfEngine::Pjrt] {
+            assert_eq!(GfEngine::parse(e.as_str()), Some(e));
+        }
+        assert_eq!(GfEngine::parse("pure"), Some(GfEngine::PureRust));
+        assert_eq!(GfEngine::parse("cuda"), None);
+    }
+
+    #[test]
+    fn builder_wires_selected_backend() {
+        for (engine, name) in [
+            (GfEngine::PureRust, "pure-rust"),
+            (GfEngine::Swar, "swar"),
+            (GfEngine::SwarParallel, "swar-parallel"),
+        ] {
+            let ds = DynoStore::builder().engine(engine).build();
+            assert_eq!(ds.engine(), engine);
+            assert_eq!(ds.backend_name(), name);
+        }
     }
 
     #[test]

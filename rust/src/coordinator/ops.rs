@@ -169,6 +169,7 @@ impl DynoStore {
             disperse_s,
             meta_s,
             stored_bytes,
+            backend: self.backend_name(),
         })
     }
 
@@ -349,6 +350,7 @@ impl DynoStore {
             egress_s,
             chunks_fetched: fetched,
             degraded,
+            backend: self.backend_name(),
         })
     }
 
@@ -529,7 +531,14 @@ mod tests {
     use crate::sim::DeviceKind;
 
     fn deployment(n_containers: usize) -> (DynoStore, String) {
-        let ds = DynoStore::builder().build();
+        deployment_with_engine(n_containers, crate::coordinator::GfEngine::PureRust)
+    }
+
+    fn deployment_with_engine(
+        n_containers: usize,
+        engine: crate::coordinator::GfEngine,
+    ) -> (DynoStore, String) {
+        let ds = DynoStore::builder().engine(engine).build();
         let sites = [Site::ChameleonTacc, Site::ChameleonUc, Site::AwsVirginia];
         let specs: Vec<AgentSpec> = (0..n_containers)
             .map(|i| {
@@ -567,6 +576,24 @@ mod tests {
         assert_eq!(pull.data, object);
         assert_eq!(pull.chunks_fetched, 7);
         assert!(!pull.degraded);
+    }
+
+    #[test]
+    fn push_pull_roundtrip_on_swar_engines() {
+        for (engine, name) in [
+            (crate::coordinator::GfEngine::Swar, "swar"),
+            (crate::coordinator::GfEngine::SwarParallel, "swar-parallel"),
+        ] {
+            let (ds, token) = deployment_with_engine(12, engine);
+            let object = data(150_000, 42);
+            let push = ds
+                .push(&token, "/UserA", "obj", &object, PushOpts::default())
+                .unwrap();
+            assert_eq!(push.backend, name);
+            let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+            assert_eq!(pull.data, object, "engine {name}");
+            assert_eq!(pull.backend, name);
+        }
     }
 
     #[test]

@@ -22,6 +22,9 @@ pub struct PushReport {
     pub meta_s: f64,
     /// Bytes placed on the wire to containers (chunks + headers).
     pub stored_bytes: u64,
+    /// GF(2^8) backend that served the encode (`pure-rust`, `swar`,
+    /// `swar-parallel`, `pjrt-pallas`).
+    pub backend: &'static str,
 }
 
 /// Result of a pull (download) through the coordinator.
@@ -44,6 +47,8 @@ pub struct PullReport {
     /// True when some preferred (data) chunk was unavailable and parity
     /// reconstruction kicked in.
     pub degraded: bool,
+    /// GF(2^8) backend that served the decode.
+    pub backend: &'static str,
 }
 
 /// Result of a health-repair pass (§III-B failover re-allocation).

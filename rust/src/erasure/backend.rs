@@ -1,0 +1,262 @@
+//! SWAR and multi-core GF(2^8) backends for the erasure hot path.
+//!
+//! [`SwarBackend`] runs the fused split-nibble kernel of
+//! [`crate::gf256::MatmulPlan`] on the calling thread; it replaces the
+//! n×k independent `mul_slice_acc` passes of
+//! [`super::PureRustBackend`] with one blocked sweep that keeps each
+//! source block L1-hot while accumulating into every output row.
+//!
+//! [`ParallelBackend`] shards the stripe's columns across a
+//! [`ThreadPool`] (the same pool type that backs the HTTP server —
+//! generalized with [`ThreadPool::run_scoped`] so jobs may borrow the
+//! stripe). Sharding is by column range: every worker owns a disjoint
+//! vertical slice of all output rows, so workers never synchronize
+//! inside the kernel. Stripes narrower than the small-object threshold
+//! stay on the calling thread — thread handoff costs more than the
+//! matmul for small objects, which dominate metadata-heavy workloads.
+
+use std::sync::{Arc, Mutex};
+
+use crate::gf256::{MatmulPlan, Matrix, SWAR_BLOCK};
+use crate::net::ThreadPool;
+use crate::{Error, Result};
+
+use super::codec::GfBackend;
+
+/// Memoizes the most recently compiled [`MatmulPlan`] keyed by the
+/// coefficient matrix bytes. Encode reuses one fixed parity matrix per
+/// codec, so the common case is a (dims + ≤256-byte memcmp) hit;
+/// decode's survivor-dependent inverses simply rebuild on miss.
+/// Without this, plan construction ((n-k)·k nibble tables) rivals the
+/// matmul itself on minimum-size (64-byte) stripes.
+#[derive(Debug, Default)]
+struct PlanCache {
+    slot: Mutex<Option<(Vec<u8>, Arc<MatmulPlan>)>>,
+}
+
+impl PlanCache {
+    fn plan_for(&self, a: &Matrix) -> Arc<MatmulPlan> {
+        let mut slot = self.slot.lock().unwrap();
+        if let Some((key, plan)) = slot.as_ref() {
+            if plan.rows() == a.rows()
+                && plan.cols() == a.cols()
+                && key.as_slice() == a.data()
+            {
+                return plan.clone();
+            }
+        }
+        let plan = Arc::new(MatmulPlan::new(a));
+        *slot = Some((a.data().to_vec(), plan.clone()));
+        plan
+    }
+}
+
+/// Single-threaded fused SWAR backend.
+#[derive(Debug, Default)]
+pub struct SwarBackend {
+    cache: PlanCache,
+}
+
+impl SwarBackend {
+    pub fn new() -> Self {
+        SwarBackend::default()
+    }
+}
+
+impl GfBackend for SwarBackend {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [&mut [u8]]) -> Result<()> {
+        if data.len() != a.cols() || out.len() != a.rows() {
+            return Err(Error::Erasure("swar backend shape mismatch".into()));
+        }
+        self.cache.plan_for(a).run(data, out, 0);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "swar"
+    }
+}
+
+/// Row lengths below this stay single-threaded: dispatching to the pool
+/// costs ~10 µs of handoff + wakeup, which only pays off once per-shard
+/// work is comfortably larger (≥ tens of µs of coding per worker).
+pub const PARALLEL_THRESHOLD: usize = 256 * 1024;
+
+/// Multi-core SWAR backend: column-sharded fan-out over a worker pool.
+///
+/// The backend owns a dedicated pool on purpose: `run_scoped` blocks
+/// the submitting thread until its shards finish, so sharing a pool
+/// with the code that *calls* matmul (e.g. the gateway's HTTP workers)
+/// could deadlock once every worker is blocked inside a request
+/// handler waiting for shard jobs queued behind those same handlers.
+pub struct ParallelBackend {
+    pool: Arc<ThreadPool>,
+    threshold: usize,
+    cache: PlanCache,
+}
+
+impl ParallelBackend {
+    /// Pool sized to the host's available parallelism.
+    pub fn auto() -> Self {
+        let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+        ParallelBackend::new(threads)
+    }
+
+    pub fn new(threads: usize) -> Self {
+        ParallelBackend {
+            pool: Arc::new(ThreadPool::new(threads)),
+            threshold: PARALLEL_THRESHOLD,
+            cache: PlanCache::default(),
+        }
+    }
+
+    /// Override the small-object threshold (tests set 0 to force
+    /// sharding on tiny stripes).
+    pub fn with_threshold(mut self, threshold: usize) -> Self {
+        self.threshold = threshold;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+}
+
+impl GfBackend for ParallelBackend {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [&mut [u8]]) -> Result<()> {
+        if data.len() != a.cols() || out.len() != a.rows() {
+            return Err(Error::Erasure("parallel backend shape mismatch".into()));
+        }
+        let len = data.first().map_or(0, |d| d.len());
+        let plan = self.cache.plan_for(a);
+        let workers = self.pool.size();
+        if len < self.threshold.max(1) || workers == 1 || a.rows() == 0 {
+            plan.run(data, out, 0);
+            return Ok(());
+        }
+
+        // Column shards: one per worker, widths rounded up to the SWAR
+        // block so block boundaries never straddle a shard seam.
+        let per = len.div_ceil(workers).div_ceil(SWAR_BLOCK) * SWAR_BLOCK;
+        let mut rest: Vec<&mut [u8]> = out.iter_mut().map(|r| &mut **r).collect();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+        let mut start = 0usize;
+        while start < len {
+            let width = per.min(len - start);
+            let mut shard: Vec<&mut [u8]> = Vec::with_capacity(rest.len());
+            let mut next: Vec<&mut [u8]> = Vec::with_capacity(rest.len());
+            for row in rest {
+                let (head, tail) = row.split_at_mut(width);
+                shard.push(head);
+                next.push(tail);
+            }
+            rest = next;
+            let plan_ref = &plan;
+            jobs.push(Box::new(move || {
+                let mut shard = shard;
+                plan_ref.run(data, &mut shard, start);
+            }));
+            start += width;
+        }
+        self.pool.run_scoped(jobs)
+    }
+
+    fn name(&self) -> &'static str {
+        "swar-parallel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::erasure::{Chunk, Codec, ErasureConfig, PureRustBackend};
+    use crate::gf256::ida_generator;
+    use crate::util::Rng;
+
+    /// Run one backend over (generator, data) and return the output rows.
+    fn run(b: &dyn GfBackend, a: &Matrix, refs: &[&[u8]], len: usize) -> Vec<Vec<u8>> {
+        let mut out: Vec<Vec<u8>> = (0..a.rows()).map(|_| vec![0x5Au8; len]).collect();
+        let mut out_refs: Vec<&mut [u8]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
+        b.matmul(a, refs, &mut out_refs).unwrap();
+        out
+    }
+
+    #[test]
+    fn property_swar_and_parallel_match_scalar_oracle() {
+        // The satellite property test: on random stripes (random (n,k),
+        // random lengths incl. non-multiples of 8/64/SWAR_BLOCK, random
+        // bytes), SWAR and parallel outputs are bit-identical to the
+        // scalar PureRustBackend oracle.
+        let mut rng = Rng::new(31);
+        let parallel = ParallelBackend::new(4).with_threshold(0); // force sharding
+        for trial in 0..25u64 {
+            let k = 1 + rng.below(8) as usize;
+            let n = k + rng.below((16 - k + 1) as u64) as usize;
+            let len = 1 + rng.below(40_000) as usize;
+            let g = ida_generator(n, k).unwrap();
+            let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(len)).collect();
+            let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+
+            let oracle = run(&PureRustBackend, &g, &refs, len);
+            let swar = run(&SwarBackend::new(), &g, &refs, len);
+            let par = run(&parallel, &g, &refs, len);
+            assert_eq!(swar, oracle, "swar trial={trial} (n,k)=({n},{k}) len={len}");
+            assert_eq!(par, oracle, "parallel trial={trial} (n,k)=({n},{k}) len={len}");
+        }
+    }
+
+    #[test]
+    fn parallel_above_threshold_uses_sharding_and_stays_exact() {
+        // Big enough to actually cross PARALLEL_THRESHOLD.
+        let mut rng = Rng::new(32);
+        let len = PARALLEL_THRESHOLD + 12_345; // deliberately unaligned
+        let g = ida_generator(10, 7).unwrap();
+        let data: Vec<Vec<u8>> = (0..7).map(|_| rng.bytes(len)).collect();
+        let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+        let oracle = run(&PureRustBackend, &g, &refs, len);
+        let par = run(&ParallelBackend::new(3), &g, &refs, len);
+        assert_eq!(par, oracle);
+    }
+
+    #[test]
+    fn codec_roundtrips_bit_identical_across_backends() {
+        let mut rng = Rng::new(33);
+        let object = rng.bytes(200_000);
+        let cfg = ErasureConfig::new(10, 7);
+        let scalar = Codec::new(cfg).unwrap();
+        let swar = Codec::with_backend(cfg, SwarBackend::new()).unwrap();
+        let par =
+            Codec::with_backend(cfg, ParallelBackend::new(2).with_threshold(0)).unwrap();
+
+        let c_scalar = scalar.encode(&object).unwrap();
+        let c_swar = swar.encode(&object).unwrap();
+        let c_par = par.encode(&object).unwrap();
+        assert_eq!(c_swar, c_scalar, "swar chunks differ from scalar");
+        assert_eq!(c_par, c_scalar, "parallel chunks differ from scalar");
+
+        // Cross-backend decode: encode on one engine, decode on another,
+        // from a non-contiguous survivor set.
+        let survivors: Vec<Chunk> = c_swar[3..].to_vec();
+        assert_eq!(scalar.decode(&survivors).unwrap(), object);
+        assert_eq!(par.decode(&survivors).unwrap(), object);
+        assert_eq!(swar.decode(&c_scalar[..7]).unwrap(), object);
+    }
+
+    #[test]
+    fn backend_shape_mismatch_rejected() {
+        let g = ida_generator(6, 3).unwrap();
+        let row = vec![0u8; 64];
+        let refs: Vec<&[u8]> = vec![&row; 2]; // wrong: needs 3
+        let mut out: Vec<Vec<u8>> = (0..6).map(|_| vec![0u8; 64]).collect();
+        let mut out_refs: Vec<&mut [u8]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
+        assert!(SwarBackend::new().matmul(&g, &refs, &mut out_refs).is_err());
+        assert!(ParallelBackend::new(2).matmul(&g, &refs, &mut out_refs).is_err());
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(SwarBackend::new().name(), "swar");
+        assert_eq!(ParallelBackend::new(1).name(), "swar-parallel");
+        assert!(ParallelBackend::auto().threads() >= 1);
+    }
+}

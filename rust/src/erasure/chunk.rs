@@ -76,9 +76,19 @@ pub struct Chunk {
 impl Chunk {
     pub fn pack(header: ChunkHeader, payload: &[u8]) -> Chunk {
         debug_assert_eq!(header.chunk_len as usize, payload.len());
-        let mut packed = Vec::with_capacity(CHUNK_HEADER_LEN + payload.len());
-        packed.extend_from_slice(&header.encode());
-        packed.extend_from_slice(payload);
+        let mut chunk = Chunk::new_zeroed(header);
+        chunk.payload_mut().copy_from_slice(payload);
+        chunk
+    }
+
+    /// Allocate the chunk's wire buffer in one pre-sized allocation:
+    /// header written, payload zeroed. The encoder fills the payload in
+    /// place (systematic copy or parity matmul) so coded bytes are
+    /// produced directly into the buffer that goes on the wire — no
+    /// intermediate payload vector, no second copy.
+    pub fn new_zeroed(header: ChunkHeader) -> Chunk {
+        let mut packed = vec![0u8; CHUNK_HEADER_LEN + header.chunk_len as usize];
+        packed[..CHUNK_HEADER_LEN].copy_from_slice(&header.encode());
         Chunk { header, packed }
     }
 
@@ -99,6 +109,12 @@ impl Chunk {
 
     pub fn payload(&self) -> &[u8] {
         &self.packed[CHUNK_HEADER_LEN..]
+    }
+
+    /// Mutable view of the payload region (the encoder writes coded
+    /// bytes straight into the wire buffer).
+    pub fn payload_mut(&mut self) -> &mut [u8] {
+        &mut self.packed[CHUNK_HEADER_LEN..]
     }
 
     /// Total wire size (what the containers store and the WAN carries).
@@ -127,6 +143,16 @@ mod tests {
         let h = header();
         let enc = h.encode();
         assert_eq!(ChunkHeader::decode(&enc).unwrap(), h);
+    }
+
+    #[test]
+    fn new_zeroed_then_fill_equals_pack() {
+        let mut h = header();
+        h.chunk_len = 4;
+        let mut z = Chunk::new_zeroed(h.clone());
+        assert_eq!(z.payload(), &[0, 0, 0, 0]);
+        z.payload_mut().copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(z, Chunk::pack(h, &[1, 2, 3, 4]));
     }
 
     #[test]

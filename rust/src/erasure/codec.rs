@@ -17,20 +17,29 @@ use super::ErasureConfig;
 
 /// Pluggable GF(2^8) matmul engine. `a` is the (rows × cols) coefficient
 /// matrix, `data` the cols input rows (equal length), `out` the rows
-/// output rows (pre-sized to the input row length).
+/// output slices (pre-sized to the input row length, overwritten).
+///
+/// `out` takes borrowed slices rather than owned vectors so callers can
+/// point the engine straight at its final destination — chunk wire
+/// buffers on encode, the reassembled object buffer on decode — instead
+/// of staging rows in temporaries.
 pub trait GfBackend: Send + Sync {
-    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [Vec<u8>]) -> Result<()>;
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [&mut [u8]]) -> Result<()>;
     fn name(&self) -> &'static str;
 }
 
 /// Table-driven pure-rust backend: one `mul_slice_acc` per (i, j)
-/// coefficient. Always available; also the cross-check oracle for the
-/// PJRT backend in `runtime::tests`.
+/// coefficient. Always available; the correctness ORACLE the SWAR and
+/// PJRT backends are cross-checked against (see `erasure::backend` and
+/// `runtime::kernels` tests).
 ///
 /// §Perf iteration 3: the coefficient passes are BLOCKED over 64 KiB
 /// column ranges so the src/acc working set of all n x k passes stays
 /// L2-resident instead of streaming whole multi-MiB rows n x k times
-/// from DRAM (see EXPERIMENTS.md §Perf for measurements).
+/// from DRAM (see EXPERIMENTS.md §Perf for measurements). §Perf
+/// iteration 4 superseded this path with the fused SWAR kernel
+/// ([`crate::erasure::SwarBackend`]); the scalar path is kept as the
+/// baseline and oracle.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct PureRustBackend;
 
@@ -39,13 +48,13 @@ pub struct PureRustBackend;
 const L2_BLOCK: usize = 64 * 1024;
 
 impl GfBackend for PureRustBackend {
-    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [Vec<u8>]) -> Result<()> {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [&mut [u8]]) -> Result<()> {
         if data.len() != a.cols() || out.len() != a.rows() {
             return Err(Error::Erasure("backend shape mismatch".into()));
         }
         let len = data.first().map_or(0, |d| d.len());
         for out_row in out.iter_mut() {
-            out_row.iter_mut().for_each(|b| *b = 0);
+            out_row.fill(0);
         }
         let mut start = 0usize;
         while start < len {
@@ -66,9 +75,9 @@ impl GfBackend for PureRustBackend {
 }
 
 /// Trait-object passthrough so the coordinator can pick the backend at
-/// runtime (pure-rust vs PJRT kernel) behind one codec type.
+/// runtime (scalar, SWAR, parallel, PJRT) behind one codec type.
 impl GfBackend for std::sync::Arc<dyn GfBackend> {
-    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [Vec<u8>]) -> Result<()> {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [&mut [u8]]) -> Result<()> {
         (**self).matmul(a, data, out)
     }
 
@@ -85,6 +94,10 @@ const CHUNK_ALIGN: usize = 64;
 pub struct Codec<B: GfBackend = PureRustBackend> {
     config: ErasureConfig,
     generator: Matrix,
+    /// Rows k..n of the generator (the Cauchy block). Encode only runs
+    /// the backend over these — the first k output chunks are the object
+    /// bytes themselves and are emitted by copy, not by matmul.
+    parity: Matrix,
     backend: B,
 }
 
@@ -97,7 +110,10 @@ impl Codec<PureRustBackend> {
 impl<B: GfBackend> Codec<B> {
     pub fn with_backend(config: ErasureConfig, backend: B) -> Result<Self> {
         config.validate()?;
-        Ok(Codec { config, generator: ida_generator(config.n, config.k)?, backend })
+        let generator = ida_generator(config.n, config.k)?;
+        let parity_rows: Vec<usize> = (config.k..config.n).collect();
+        let parity = generator.select_rows(&parity_rows);
+        Ok(Codec { config, generator, parity, backend })
     }
 
     pub fn config(&self) -> ErasureConfig {
@@ -115,38 +131,51 @@ impl<B: GfBackend> Codec<B> {
     }
 
     /// Algorithm 1: ENCODE(o, n, k) → n packed chunks.
+    ///
+    /// Zero-copy systematic path: the k data chunks are emitted directly
+    /// from the object slice into their pre-sized wire buffers (header +
+    /// payload in one allocation, no `padded` staging copy), and the
+    /// backend computes only the n-k parity rows — (n-k)·k coefficient
+    /// passes instead of the n·k a full `G · D` would cost (for the
+    /// paper's IDA(10,7): 21 passes instead of 70).
     pub fn encode(&self, object: &[u8]) -> Result<Vec<Chunk>> {
         let (n, k) = (self.config.n, self.config.k);
         let chunk_len = self.chunk_len(object.len());
         let hash = sha3_256(object); // line 7: h_o = SHA256(o)
 
-        // line 6: SPLIT(o, n, k) — stripe the object into k padded rows.
-        let mut padded = vec![0u8; k * chunk_len];
-        padded[..object.len()].copy_from_slice(object);
-        let rows: Vec<&[u8]> = padded.chunks_exact(chunk_len).collect();
-
-        // C = G · D through the pluggable backend.
-        let mut coded: Vec<Vec<u8>> = (0..n).map(|_| vec![0u8; chunk_len]).collect();
-        self.backend.matmul(&self.generator, &rows, &mut coded)?;
-
-        // lines 8-10: PACK(h_o, C[i]) for every chunk.
-        Ok(coded
-            .into_iter()
-            .enumerate()
-            .map(|(i, payload)| {
-                Chunk::pack(
-                    ChunkHeader {
-                        n: n as u8,
-                        k: k as u8,
-                        index: i as u8,
-                        object_len: object.len() as u64,
-                        chunk_len: chunk_len as u64,
-                        object_hash: hash,
-                    },
-                    &payload,
-                )
+        let mut chunks: Vec<Chunk> = (0..n)
+            .map(|i| {
+                Chunk::new_zeroed(ChunkHeader {
+                    n: n as u8,
+                    k: k as u8,
+                    index: i as u8,
+                    object_len: object.len() as u64,
+                    chunk_len: chunk_len as u64,
+                    object_hash: hash,
+                })
             })
-            .collect())
+            .collect();
+
+        // line 6: SPLIT(o, n, k) — data rows straight from the object
+        // slice into the systematic chunks (tails stay zero-padded).
+        for (j, chunk) in chunks.iter_mut().take(k).enumerate() {
+            let start = (j * chunk_len).min(object.len());
+            let end = ((j + 1) * chunk_len).min(object.len());
+            chunk.payload_mut()[..end - start].copy_from_slice(&object[start..end]);
+        }
+
+        // Parity rows: P = Cauchy · D through the pluggable backend,
+        // written directly into the parity chunks' wire buffers. The
+        // systematic payloads ARE the padded data rows, so they double
+        // as the matmul input.
+        if n > k {
+            let (sys, par) = chunks.split_at_mut(k);
+            let rows: Vec<&[u8]> = sys.iter().map(|c| c.payload()).collect();
+            let mut outs: Vec<&mut [u8]> =
+                par.iter_mut().map(|c| c.payload_mut()).collect();
+            self.backend.matmul(&self.parity, &rows, &mut outs)?;
+        }
+        Ok(chunks)
     }
 
     /// Algorithm 2: DECODE(chunks) → original object.
@@ -182,6 +211,9 @@ impl<B: GfBackend> Codec<B> {
 
         let first = seen[0].header.clone();
         let chunk_len = first.chunk_len as usize;
+        if chunk_len == 0 {
+            return Err(Error::Erasure("zero chunk_len in header".into()));
+        }
         for c in &seen {
             if c.header.chunk_len as usize != chunk_len
                 || c.header.object_len != first.object_len
@@ -194,19 +226,26 @@ impl<B: GfBackend> Codec<B> {
             }
         }
 
-        // Invert the surviving generator rows; multiply.
         let indices: Vec<usize> = seen.iter().map(|c| c.header.index as usize).collect();
-        let sub = self.generator.select_rows(&indices);
-        let inv = sub.inverse()?;
-        let rows: Vec<&[u8]> = seen.iter().map(|c| c.payload()).collect();
-        let mut data: Vec<Vec<u8>> = (0..k).map(|_| vec![0u8; chunk_len]).collect();
-        self.backend.matmul(&inv, &rows, &mut data)?;
-
-        // MERGE + truncate padding.
-        let mut object = Vec::with_capacity(first.object_len as usize);
-        for row in &data {
-            object.extend_from_slice(row);
+        let mut object = vec![0u8; k * chunk_len];
+        if indices.last().is_some_and(|&last| last < k) {
+            // Systematic fast path: k distinct sorted indices all below k
+            // means the survivors are exactly the data chunks 0..k — the
+            // sub-generator is the identity, so skip inversion and matmul
+            // entirely and reassemble by copy.
+            for (c, dst) in seen.iter().zip(object.chunks_mut(chunk_len)) {
+                dst.copy_from_slice(c.payload());
+            }
+        } else {
+            // Invert the surviving generator rows; multiply straight into
+            // the reassembled object buffer (rows are contiguous in it).
+            let sub = self.generator.select_rows(&indices);
+            let inv = sub.inverse()?;
+            let rows: Vec<&[u8]> = seen.iter().map(|c| c.payload()).collect();
+            let mut outs: Vec<&mut [u8]> = object.chunks_mut(chunk_len).collect();
+            self.backend.matmul(&inv, &rows, &mut outs)?;
         }
+        // MERGE is implicit (rows decoded in place); truncate padding.
         object.truncate(first.object_len as usize);
 
         // lines 6-9: integrity check against the packed hash.
@@ -314,6 +353,60 @@ mod tests {
         let c104 = Codec::new(ErasureConfig::new(10, 4)).unwrap();
         let chunks = c63.encode(&[1u8; 100]).unwrap();
         assert!(c104.decode(&chunks).is_err());
+    }
+
+    #[test]
+    fn decode_from_parity_only_survivors() {
+        // Drop ALL k systematic chunks; reconstruct purely from parity.
+        // Only configurations with n-k >= k parity chunks can do this.
+        for (n, k) in [(4usize, 2usize), (6, 3), (8, 4), (10, 4), (10, 5), (12, 6), (16, 8)] {
+            assert!(n - k >= k, "grid entry ({n},{k}) lacks enough parity");
+            let mut rng = Rng::new((n * 131 + k) as u64);
+            let object = rng.bytes(3_000 + n * 17);
+            let codec = Codec::new(ErasureConfig::new(n, k)).unwrap();
+            let chunks = codec.encode(&object).unwrap();
+            let parity_only: Vec<Chunk> = chunks[k..k + k].to_vec();
+            assert!(parity_only.iter().all(|c| (c.header.index as usize) >= k));
+            let rec = codec.decode(&parity_only).unwrap();
+            assert_eq!(rec, object, "(n,k)=({n},{k}) parity-only");
+        }
+    }
+
+    #[test]
+    fn decode_from_non_contiguous_survivors() {
+        // Stride-2 and reversed survivor sets mixing data + parity across
+        // the (n,k) grid; exercises the general inverse path with gaps.
+        for (n, k) in [(3usize, 2usize), (6, 3), (10, 4), (10, 7), (12, 8), (16, 11)] {
+            let mut rng = Rng::new((n * 977 + k) as u64);
+            let object = rng.bytes(10_000);
+            let codec = Codec::new(ErasureConfig::new(n, k)).unwrap();
+            let chunks = codec.encode(&object).unwrap();
+
+            // Every other index (wrapping to fill up to k survivors).
+            let mut picks: Vec<usize> = (0..n).step_by(2).collect();
+            let mut odd: Vec<usize> = (1..n).step_by(2).collect();
+            picks.append(&mut odd);
+            picks.truncate(k);
+            let subset: Vec<Chunk> = picks.iter().map(|&i| chunks[i].clone()).collect();
+            assert_eq!(codec.decode(&subset).unwrap(), object, "stride (n,k)=({n},{k})");
+
+            // Highest k indices in reverse order (order must not matter).
+            let rev: Vec<Chunk> = (n - k..n).rev().map(|i| chunks[i].clone()).collect();
+            assert_eq!(codec.decode(&rev).unwrap(), object, "reversed (n,k)=({n},{k})");
+        }
+    }
+
+    #[test]
+    fn systematic_fast_path_matches_general_path() {
+        // All-data survivors (fast path) and a mixed set must agree.
+        let mut rng = Rng::new(404);
+        let object = rng.bytes(50_000);
+        let codec = Codec::new(ErasureConfig::new(10, 7)).unwrap();
+        let chunks = codec.encode(&object).unwrap();
+        let fast = codec.decode(&chunks[..7]).unwrap(); // indices 0..7
+        let mixed = codec.decode(&chunks[3..]).unwrap(); // indices 3..10
+        assert_eq!(fast, object);
+        assert_eq!(mixed, object);
     }
 
     #[test]

@@ -7,13 +7,26 @@
 //! Algorithm 2 — any k chunks reconstruct the object; the hash is
 //! recomputed and compared before the object is released.
 //!
-//! The GF(2^8) byte work is pluggable through [`GfBackend`]: the
-//! pure-rust table codec here, or the PJRT-compiled Pallas kernel in
-//! [`crate::runtime`].
+//! The GF(2^8) byte work is pluggable through [`GfBackend`]:
+//!
+//! * [`PureRustBackend`] — scalar table codec; always available, and the
+//!   correctness oracle every other backend is checked against.
+//! * [`SwarBackend`] — fused split-nibble SWAR kernel
+//!   ([`crate::gf256::MatmulPlan`]); one blocked sweep instead of n×k
+//!   independent passes.
+//! * [`ParallelBackend`] — the SWAR kernel column-sharded across a
+//!   worker pool, with a small-object threshold.
+//! * [`crate::runtime::PjrtGfBackend`] — the PJRT-compiled Pallas
+//!   kernel.
+//!
+//! Deployments pick one via `Config`'s `engine` knob / the coordinator
+//! builder (`pure-rust | swar | swar-parallel | pjrt`).
 
+mod backend;
 mod chunk;
 mod codec;
 
+pub use backend::{ParallelBackend, SwarBackend, PARALLEL_THRESHOLD};
 pub use chunk::{Chunk, ChunkHeader, CHUNK_HEADER_LEN};
 pub use codec::{Codec, GfBackend, PureRustBackend};
 

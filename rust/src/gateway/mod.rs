@@ -91,6 +91,8 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
             ("status", if live > 0 { "ok" } else { "degraded" }.into()),
             ("containers", infos.len().into()),
             ("live", live.into()),
+            ("engine", store.engine().as_str().into()),
+            ("backend", store.backend_name().into()),
         ]),
     )
 }
@@ -149,6 +151,7 @@ fn object_route(store: &Arc<DynoStore>, method: &str, req: &HttpRequest) -> Resu
                     ("version", report.meta.version.into()),
                     ("size", report.meta.size.into()),
                     ("sim_s", report.sim_s.into()),
+                    ("backend", report.backend.into()),
                 ]),
             ))
         }
@@ -179,7 +182,13 @@ mod tests {
     use crate::sim::{DeviceKind, Site};
 
     fn gateway() -> (HttpServer, HttpClient) {
-        let ds = Arc::new(DynoStore::builder().build());
+        gateway_with_engine(crate::coordinator::GfEngine::PureRust)
+    }
+
+    fn gateway_with_engine(
+        engine: crate::coordinator::GfEngine,
+    ) -> (HttpServer, HttpClient) {
+        let ds = Arc::new(DynoStore::builder().engine(engine).build());
         let specs: Vec<AgentSpec> = (0..12)
             .map(|i| {
                 AgentSpec::new(format!("dc{i}"), Site::ChameleonUc, DeviceKind::ChameleonLocal)
@@ -275,11 +284,37 @@ mod tests {
         let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
         assert_eq!(v.req_str("status").unwrap(), "ok");
         assert_eq!(v.req_u64("containers").unwrap(), 12);
+        assert_eq!(v.req_str("engine").unwrap(), "pure-rust");
+        assert_eq!(v.req_str("backend").unwrap(), "pure-rust");
 
         let r = client.post("/admin/repair", &[], &[]).unwrap();
         assert_eq!(r.status, 200);
         let g = client.post("/admin/gc", &[], b"{\"retention_secs\": 0}").unwrap();
         assert_eq!(g.status, 200);
+    }
+
+    #[test]
+    fn swar_parallel_gateway_serves_objects_end_to_end() {
+        let (_server, client) =
+            gateway_with_engine(crate::coordinator::GfEngine::SwarParallel);
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        let payload: Vec<u8> = (0..300_000u32).map(|i| (i * 31 % 251) as u8).collect();
+
+        let put = client
+            .put("/objects/UserA/big", &[("authorization", &auth)], &payload)
+            .unwrap();
+        assert_eq!(put.status, 201);
+        let v = parse(std::str::from_utf8(&put.body).unwrap()).unwrap();
+        assert_eq!(v.req_str("backend").unwrap(), "swar-parallel");
+
+        let got = client.get("/objects/UserA/big", &[("authorization", &auth)]).unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, payload);
+
+        let h = client.get("/health", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+        assert_eq!(v.req_str("engine").unwrap(), "swar-parallel");
     }
 
     #[test]

@@ -52,6 +52,11 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Flat row-major entries (cache keys, bulk comparisons).
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
     /// New matrix from the given row indices (chunk-survivor selection).
     pub fn select_rows(&self, indices: &[usize]) -> Matrix {
         let mut m = Matrix::zero(indices.len(), self.cols);

@@ -5,13 +5,17 @@
 //! interchangeable.
 //!
 //! Exposes scalar ops, table-driven vector ops (the hot-loop building
-//! blocks for the fallback codec), matrix multiply, Gauss-Jordan
-//! inversion, and Cauchy/systematic-IDA generator construction.
+//! blocks for the fallback codec), the SWAR split-nibble kernels behind
+//! the `swar`/`swar-parallel` erasure backends, matrix multiply,
+//! Gauss-Jordan inversion, and Cauchy/systematic-IDA generator
+//! construction.
 
 mod matrix;
+mod swar;
 mod tables;
 
 pub use matrix::Matrix;
+pub use swar::{gf_matmul_block, xor_slice, MatmulPlan, NibbleTable, SWAR_BLOCK};
 pub use tables::{gf_add, gf_div, gf_exp, gf_inv, gf_log, gf_mul, mul_slice_acc, MUL_TABLE};
 
 use crate::{Error, Result};

@@ -12,7 +12,9 @@
 //!   storage-device + failure models standing in for the paper's
 //!   Chameleon/AWS/Madrid testbed).
 //! * **Data plane** — [`erasure`] (the IDA of paper §IV-D, Algorithms
-//!   1-2), [`container`] (data containers: backend trait, LRU cache,
+//!   1-2, with pluggable GF(2^8) engines: scalar table oracle, fused
+//!   SWAR split-nibble kernel, multi-core column-sharded SWAR),
+//!   [`container`] (data containers: backend trait, LRU cache,
 //!   monitor), [`runtime`] (PJRT-compiled GF(2^8) kernels on the hot
 //!   path).
 //! * **Control plane** — [`metadata`] (namespaces, versioning, GC,
@@ -27,8 +29,22 @@
 //!   S3-like comparators), [`bench`] (criterion-less harness used by
 //!   `rust/benches/`).
 //!
-//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
-//! reproduction results.
+//! ## Choosing a GF(2^8) engine
+//!
+//! The erasure hot path is selected per deployment via the `engine`
+//! field of the JSON config ([`Config`]) or
+//! [`coordinator::Builder::engine`]:
+//!
+//! | engine          | wins when                                        |
+//! |-----------------|--------------------------------------------------|
+//! | `pure-rust`     | debugging/oracle runs; tiny objects on 1 core    |
+//! | `swar`          | single-core hosts; chunks below the 256 KiB fan-out threshold |
+//! | `swar-parallel` | multi-core gateways; per-chunk (object/k) size ≥ 256 KiB, i.e. roughly k × 256 KiB objects; wide (n,k) |
+//! | `pjrt`          | hosts with AOT Pallas artifacts (`make artifacts`) |
+//!
+//! See README.md §Backends for the size × (n,k) × core-count guidance,
+//! `DESIGN.md` for the paper → module map, and `EXPERIMENTS.md` §Perf
+//! for measured numbers (`cargo bench` → `BENCH_hotpath.json`).
 
 pub mod baselines;
 pub mod bench;
@@ -62,39 +78,65 @@ pub use erasure::ErasureConfig;
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. `Display`/`Error`/`From` are hand-rolled — the
+/// crate builds with zero external dependencies (no thiserror).
+#[derive(Debug)]
 pub enum Error {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("config: {0}")]
+    Io(std::io::Error),
     Config(String),
-    #[error("auth: {0}")]
     Auth(String),
-    #[error("not found: {0}")]
     NotFound(String),
-    #[error("permission denied: {0}")]
     PermissionDenied(String),
-    #[error("integrity: {0}")]
     Integrity(String),
-    #[error("erasure: {0}")]
     Erasure(String),
-    #[error("placement: {0}")]
     Placement(String),
-    #[error("consensus: {0}")]
     Consensus(String),
-    #[error("container: {0}")]
     Container(String),
-    #[error("runtime: {0}")]
     Runtime(String),
-    #[error("net: {0}")]
     Net(String),
-    #[error("json: {0}")]
     Json(String),
-    #[error("unavailable: {0}")]
     Unavailable(String),
-    #[error("invalid: {0}")]
     Invalid(String),
+    /// A worker-pool job panicked or was lost before completing.
+    Pool(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Auth(m) => write!(f, "auth: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
+            Error::PermissionDenied(m) => write!(f, "permission denied: {m}"),
+            Error::Integrity(m) => write!(f, "integrity: {m}"),
+            Error::Erasure(m) => write!(f, "erasure: {m}"),
+            Error::Placement(m) => write!(f, "placement: {m}"),
+            Error::Consensus(m) => write!(f, "consensus: {m}"),
+            Error::Container(m) => write!(f, "container: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Net(m) => write!(f, "net: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Unavailable(m) => write!(f, "unavailable: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::Pool(m) => write!(f, "pool: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

@@ -79,6 +79,7 @@ fn print_usage() {
          \n\
          commands:\n\
          \x20 serve    --config FILE [--addr 127.0.0.1:8080] [--workers 8]\n\
+         \x20          [--engine pure-rust|swar|swar-parallel|pjrt]\n\
          \x20 register --addr HOST:PORT --user NAME\n\
          \x20 push     --addr HOST:PORT --token T PATH FILE\n\
          \x20 pull     --addr HOST:PORT --token T PATH [OUT]\n\
@@ -92,25 +93,32 @@ fn print_usage() {
 }
 
 fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
-    let config = match flags.get("config") {
+    let mut config = match flags.get("config") {
         Some(path) => Config::from_file(path).map_err(|e| e.to_string())?,
         None => {
-            log::warn!("no --config given; starting an empty default deployment");
+            dynostore::log_warn!("no --config given; starting an empty default deployment");
             Config::default()
         }
     };
+    // CLI override of the config file's GF(2^8) engine knob.
+    if let Some(engine) = flags.get("engine") {
+        config.engine = dynostore::coordinator::GfEngine::parse(engine).ok_or_else(|| {
+            format!("unknown --engine '{engine}' (pure-rust | swar | swar-parallel | pjrt)")
+        })?;
+    }
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".into());
     let workers: usize =
         flags.get("workers").and_then(|w| w.parse().ok()).unwrap_or(8);
     let store = config.build().map_err(|e| e.to_string())?;
     let server =
         gateway::serve(Arc::clone(&store), &addr, workers).map_err(|e| e.to_string())?;
-    log::info!(
-        "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?})",
+    dynostore::log_info!(
+        "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?}, engine {})",
         server.addr(),
         store.registry.len(),
         store.meta.replica_count(),
-        store.default_policy
+        store.default_policy,
+        store.backend_name()
     );
     println!("listening on {}", server.addr());
     // Serve until killed.

@@ -1,15 +1,29 @@
 //! Fixed-size worker pool (the "scale-in via multi-threading" of paper
-//! §III-C) used by the HTTP server and the FaaS executor.
+//! §III-C) used by the HTTP server, the FaaS executor, and the
+//! column-sharded erasure backend
+//! ([`crate::erasure::ParallelBackend`]).
+//!
+//! Workers survive panicking jobs (each job runs under `catch_unwind`),
+//! and both gather APIs report panicked jobs as [`Error::Pool`] instead
+//! of poisoning the caller with a misleading unwrap.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::{Error, Result};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A classic shared-queue thread pool.
+///
+/// The submission side sits behind a `Mutex` so the pool is `Sync`
+/// regardless of whether this toolchain's `mpsc::Sender` is (it only
+/// became `Sync` in newer std); submission cost is a lock + channel
+/// push, negligible next to any job worth pooling.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    tx: Option<Mutex<Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -26,14 +40,20 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // A panicking job must not kill the worker:
+                            // swallow the unwind, keep serving. Gather
+                            // APIs detect the missing result and surface
+                            // Error::Pool to the submitter.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(move || job()));
+                            }
                             Err(_) => break,
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers }
     }
 
     /// Enqueue a job; never blocks.
@@ -41,17 +61,21 @@ impl ThreadPool {
         self.tx
             .as_ref()
             .expect("pool is live")
+            .lock()
+            .unwrap()
             .send(Box::new(job))
             .expect("workers alive");
     }
 
     /// Map `f` over `0..n` with the pool's parallelism; returns results
-    /// in index order (panics in jobs are surfaced as poisoned results).
+    /// in index order. A panicking job no longer poisons the gather with
+    /// an unrelated unwrap — it yields `Error::Pool` naming how many
+    /// jobs died, and the pool remains usable.
     pub fn scatter_gather<T: Send + 'static>(
         &self,
         n: usize,
         f: impl Fn(usize) -> T + Send + Sync + 'static,
-    ) -> Vec<T> {
+    ) -> Result<Vec<T>> {
         let f = Arc::new(f);
         let (tx, rx) = channel::<(usize, T)>();
         for i in 0..n {
@@ -64,10 +88,53 @@ impl ThreadPool {
         }
         drop(tx);
         let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        // The channel closes once every job's sender clone is gone —
+        // i.e. after every job finished or unwound.
         for (i, v) in rx {
             results[i] = Some(v);
         }
-        results.into_iter().map(|v| v.expect("job completed")).collect()
+        let missing = results.iter().filter(|r| r.is_none()).count();
+        if missing > 0 {
+            return Err(Error::Pool(format!("{missing} of {n} jobs panicked")));
+        }
+        Ok(results.into_iter().map(|v| v.expect("checked above")).collect())
+    }
+
+    /// Run borrowing jobs on the pool, blocking until all complete.
+    /// This is the generalization that lets the erasure data plane shard
+    /// a borrowed stripe across workers without `'static` gymnastics.
+    ///
+    /// Returns `Error::Pool` if any job panicked.
+    pub fn run_scoped<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) -> Result<()> {
+        let n = jobs.len();
+        let (tx, rx) = channel::<()>();
+        for job in jobs {
+            let tx = tx.clone();
+            // SAFETY: the transmute only erases the borrow lifetime 'a.
+            // We block below until the completion channel closes, which
+            // happens only after every job's `tx` clone is dropped —
+            // i.e. after every job has returned or finished unwinding.
+            // No job (or anything it borrows) outlives this call.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'a>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            self.execute(move || {
+                job();
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        let completed = rx.iter().count();
+        if completed != n {
+            return Err(Error::Pool(format!(
+                "{} of {n} scoped jobs panicked",
+                n - completed
+            )));
+        }
+        Ok(())
     }
 
     pub fn size(&self) -> usize {
@@ -106,7 +173,7 @@ mod tests {
     #[test]
     fn scatter_gather_preserves_order() {
         let pool = ThreadPool::new(8);
-        let out = pool.scatter_gather(50, |i| i * i);
+        let out = pool.scatter_gather(50, |i| i * i).unwrap();
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
     }
 
@@ -114,6 +181,59 @@ mod tests {
     fn zero_size_clamps_to_one() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.size(), 1);
-        assert_eq!(pool.scatter_gather(3, |i| i), vec![0, 1, 2]);
+        assert_eq!(pool.scatter_gather(3, |i| i).unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn panicking_job_surfaces_pool_error_not_poison() {
+        let pool = ThreadPool::new(2);
+        let res = pool.scatter_gather(5, |i| {
+            if i == 2 {
+                panic!("job 2 exploded");
+            }
+            i * 10
+        });
+        match res {
+            Err(Error::Pool(msg)) => assert!(msg.contains("1 of 5"), "{msg}"),
+            other => panic!("expected Error::Pool, got {other:?}"),
+        }
+        // Workers survived the unwind: the pool still does useful work.
+        assert_eq!(pool.scatter_gather(4, |i| i + 1).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn run_scoped_borrows_and_joins() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0u8; 64];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest = buf.as_mut_slice();
+            for chunk_id in 0..4u8 {
+                // mem::take detaches the slice so head keeps the full
+                // borrow lifetime while rest is reassigned.
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(16);
+                rest = tail;
+                jobs.push(Box::new(move || {
+                    for b in head {
+                        *b = chunk_id + 1;
+                    }
+                }));
+            }
+            pool.run_scoped(jobs).unwrap();
+            assert!(rest.is_empty());
+        }
+        for (i, &b) in buf.iter().enumerate() {
+            assert_eq!(b as usize, i / 16 + 1);
+        }
+    }
+
+    #[test]
+    fn run_scoped_reports_panics() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| {}), Box::new(|| panic!("scoped boom"))];
+        assert!(matches!(pool.run_scoped(jobs), Err(Error::Pool(_))));
+        // And the pool is still alive.
+        assert_eq!(pool.scatter_gather(2, |i| i).unwrap(), vec![0, 1]);
     }
 }

@@ -28,7 +28,7 @@ impl PjrtGfBackend {
 }
 
 impl GfBackend for PjrtGfBackend {
-    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [Vec<u8>]) -> Result<()> {
+    fn matmul(&self, a: &Matrix, data: &[&[u8]], out: &mut [&mut [u8]]) -> Result<()> {
         if data.len() != a.cols() || out.len() != a.rows() {
             return Err(Error::Erasure("pjrt backend shape mismatch".into()));
         }
@@ -41,7 +41,14 @@ impl GfBackend for PjrtGfBackend {
             )));
         }
         for (dst, src) in out.iter_mut().zip(rows) {
-            *dst = src;
+            if src.len() != dst.len() {
+                return Err(Error::Runtime(format!(
+                    "kernel row length {} != destination {}",
+                    src.len(),
+                    dst.len()
+                )));
+            }
+            dst.copy_from_slice(&src);
         }
         Ok(())
     }
@@ -63,7 +70,9 @@ mod tests {
     use crate::util::Rng;
 
     fn have_artifacts() -> bool {
-        crate::runtime::artifacts_dir().join("manifest.json").exists()
+        // Feature AND artifacts: a stub build must skip even when a
+        // sibling checkout has run `make artifacts`.
+        crate::runtime::pjrt_available()
     }
 
     #[test]
@@ -79,10 +88,14 @@ mod tests {
             let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
 
             let mut out_pjrt: Vec<Vec<u8>> = (0..n).map(|_| vec![0u8; len]).collect();
-            PjrtGfBackend::global().matmul(&g, &refs, &mut out_pjrt).unwrap();
+            let mut pjrt_refs: Vec<&mut [u8]> =
+                out_pjrt.iter_mut().map(|v| v.as_mut_slice()).collect();
+            PjrtGfBackend::global().matmul(&g, &refs, &mut pjrt_refs).unwrap();
 
             let mut out_rust: Vec<Vec<u8>> = (0..n).map(|_| vec![0u8; len]).collect();
-            PureRustBackend.matmul(&g, &refs, &mut out_rust).unwrap();
+            let mut rust_refs: Vec<&mut [u8]> =
+                out_rust.iter_mut().map(|v| v.as_mut_slice()).collect();
+            PureRustBackend.matmul(&g, &refs, &mut rust_refs).unwrap();
 
             assert_eq!(out_pjrt, out_rust, "(n,k)=({n},{k}) len={len}");
         }

@@ -16,4 +16,4 @@ mod kernels;
 mod server;
 
 pub use kernels::PjrtGfBackend;
-pub use server::{artifacts_dir, PjrtRuntime};
+pub use server::{artifacts_dir, pjrt_available, PjrtRuntime};

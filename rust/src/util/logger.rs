@@ -1,63 +1,145 @@
-//! Minimal stderr logger backing the `log` crate facade.
-//!
-//! The vendored crate set has no `env_logger`; this is the small
-//! equivalent: level from `DYNOSTORE_LOG` (error|warn|info|debug|trace),
-//! defaulting to `info`, with a wall-clock-offset prefix.
+//! Minimal self-contained stderr logger (the vendored crate set has no
+//! `log`/`env_logger`, and the crate builds with zero external
+//! dependencies): level from `DYNOSTORE_LOG`
+//! (off|error|warn|info|debug|trace), defaulting to `info`, with a
+//! wall-clock-offset prefix. Use via the [`crate::log_info!`] /
+//! [`crate::log_warn!`] / [`crate::log_error!`] / [`crate::log_debug!`]
+//! macros.
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
-struct StderrLogger {
-    level: LevelFilter,
+/// Log severity, ordered: a message is emitted when its level is at or
+/// below the configured maximum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = crate::util::now_ns() as f64 / 1e9;
-        let lvl = match record.level() {
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Off => "OFF  ",
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:10.3}] {lvl} {}: {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
 /// Install the logger once; later calls are no-ops. Returns the level.
-pub fn init() -> LevelFilter {
-    let level = match std::env::var("DYNOSTORE_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
-    };
-    let logger = Box::new(StderrLogger { level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(level);
+pub fn init() -> Level {
+    static INIT: OnceLock<Level> = OnceLock::new();
+    *INIT.get_or_init(|| {
+        let level = match std::env::var("DYNOSTORE_LOG").as_deref() {
+            Ok("off") => Level::Off,
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+        level
+    })
+}
+
+/// Is `level` currently emitted?
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed) && level != Level::Off
+}
+
+/// Emit one record (used by the `log_*!` macros; callable directly).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
     }
-    level
+    let t = crate::util::now_ns() as f64 / 1e9;
+    eprintln!("[{t:10.3}] {} {target}: {args}", level.label());
+}
+
+/// Log at INFO against the calling module's path.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at WARN against the calling module's path.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at ERROR against the calling module's path.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at DEBUG against the calling module's path.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        let a = super::init();
-        let b = super::init();
+        let a = init();
+        let b = init();
         // Second init is a no-op but must not panic; levels agree.
         assert_eq!(a, b);
-        log::info!("logger smoke line");
+        crate::log_info!("logger smoke line");
+    }
+
+    #[test]
+    fn levels_order_and_gate() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        init();
+        // Off never prints regardless of the configured max.
+        assert!(!enabled(Level::Off));
+        // Trace is above the default info level.
+        if init() == Level::Info {
+            assert!(enabled(Level::Warn));
+            assert!(!enabled(Level::Trace));
+        }
     }
 }

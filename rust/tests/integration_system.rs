@@ -299,8 +299,8 @@ fn property_storage_accounting_balances() {
 
 #[test]
 fn pjrt_engine_full_path_if_artifacts_present() {
-    if !dynostore::runtime::artifacts_dir().join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
+    if !dynostore::runtime::pjrt_available() {
+        eprintln!("skipping: pjrt unavailable (xla-runtime feature off or artifacts not built)");
         return;
     }
     let ds = chameleon_deployment(12, paper_resilience(), GfEngine::Pjrt);
