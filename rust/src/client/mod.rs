@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{DynoStore, OpContext, PullOpts, PushOpts};
+use crate::coordinator::{DynoStore, OpContext, PullOpts, PullReport, PushOpts, PushReport};
 use crate::crypto::{sha3_256, AesCtr};
 use crate::policy::ResiliencePolicy;
 use crate::sim::Site;
@@ -88,7 +88,23 @@ impl Client {
         self.push_flows(collection, name, data, 1)
     }
 
+    /// Upload one object and return the coordinator's full report —
+    /// per-chunk transport labels and timings included.
+    pub fn push_report(&self, collection: &str, name: &str, data: &[u8]) -> Result<PushReport> {
+        self.push_report_flows(collection, name, data, 1)
+    }
+
     fn push_flows(&self, collection: &str, name: &str, data: &[u8], flows: u32) -> Result<f64> {
+        Ok(self.push_report_flows(collection, name, data, flows)?.sim_s)
+    }
+
+    fn push_report_flows(
+        &self,
+        collection: &str,
+        name: &str,
+        data: &[u8],
+        flows: u32,
+    ) -> Result<PushReport> {
         let payload = match &self.encryption {
             Some(enc) => {
                 let mut buf = data.to_vec();
@@ -97,14 +113,13 @@ impl Client {
             }
             None => data.to_vec(),
         };
-        let report = self.store.push(
+        self.store.push(
             &self.token,
             collection,
             name,
             &payload,
             PushOpts { ctx: self.ctx(flows), policy: self.policy },
-        )?;
-        Ok(report.sim_s)
+        )
     }
 
     /// Download one object (decrypting if the client has a key).
@@ -112,18 +127,33 @@ impl Client {
         self.pull_flows(collection, name, 1)
     }
 
+    /// Download one object and return the coordinator's full report
+    /// (data decrypted in place when the client has a key).
+    pub fn pull_report(&self, collection: &str, name: &str) -> Result<PullReport> {
+        self.pull_report_flows(collection, name, 1)
+    }
+
     fn pull_flows(&self, collection: &str, name: &str, flows: u32) -> Result<(Vec<u8>, f64)> {
-        let report = self.store.pull(
+        let report = self.pull_report_flows(collection, name, flows)?;
+        Ok((report.data, report.sim_s))
+    }
+
+    fn pull_report_flows(
+        &self,
+        collection: &str,
+        name: &str,
+        flows: u32,
+    ) -> Result<PullReport> {
+        let mut report = self.store.pull(
             &self.token,
             collection,
             name,
             PullOpts { ctx: self.ctx(flows), version: None },
         )?;
-        let mut data = report.data;
         if let Some(enc) = &self.encryption {
-            AesCtr::new(&enc.key, &enc.nonce_for(collection, name, 0)).apply(&mut data);
+            AesCtr::new(&enc.key, &enc.nonce_for(collection, name, 0)).apply(&mut report.data);
         }
-        Ok((data, report.sim_s))
+        Ok(report)
     }
 
     pub fn exists(&self, collection: &str, name: &str) -> Result<bool> {
@@ -259,6 +289,19 @@ mod tests {
             Client::new(ds, client.store_token_for_tests(), Site::Madrid);
         let (raw, _) = plain_client.pull("/UserA", "scan").unwrap();
         assert_ne!(raw, secret, "data at rest is encrypted");
+    }
+
+    #[test]
+    fn detailed_reports_expose_dispatch_plane() {
+        let (ds, token) = deployment();
+        let client = Client::new(ds, token, Site::Madrid);
+        let data = crate::util::Rng::new(5).bytes(50_000);
+        let push = client.push_report("/UserA", "obj", &data).unwrap();
+        assert_eq!(push.chunk_io.len(), 10);
+        assert!(push.chunk_io.iter().all(|c| c.transport == "local" && c.ok));
+        let pull = client.pull_report("/UserA", "obj").unwrap();
+        assert_eq!(pull.data, data);
+        assert_eq!(pull.chunk_io.len(), 7);
     }
 
     #[test]

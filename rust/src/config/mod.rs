@@ -20,7 +20,9 @@
 
 use std::sync::Arc;
 
-use crate::container::{deploy_containers, AgentSpec};
+use crate::container::{
+    deploy_containers, AgentSpec, Backend, DataContainer, FsBackend, RemoteChannel, SimBackend,
+};
 use crate::coordinator::{DynoStore, GfEngine};
 use crate::erasure::ErasureConfig;
 use crate::json::{parse, Value};
@@ -38,6 +40,9 @@ pub struct Config {
     pub weights: Weights,
     pub engine: GfEngine,
     pub containers: Vec<AgentSpec>,
+    /// Remote container agents (`host:port` endpoints) to register over
+    /// HTTP — entries of the `containers` array carrying an `endpoint`.
+    pub remotes: Vec<String>,
     pub seed: u64,
 }
 
@@ -50,6 +55,7 @@ impl Default for Config {
             weights: Weights::default(),
             engine: GfEngine::PureRust,
             containers: Vec::new(),
+            remotes: Vec::new(),
             seed: 0xD1_5705,
         }
     }
@@ -83,7 +89,12 @@ impl Config {
         })?;
         if let Some(arr) = v.get("containers").as_arr() {
             for c in arr {
-                cfg.containers.push(parse_container(c)?);
+                // An entry with an `endpoint` is a remote agent; local
+                // entries are deployed in-process at build time.
+                match c.get("endpoint").as_str() {
+                    Some(ep) => cfg.remotes.push(ep.to_string()),
+                    None => cfg.containers.push(parse_container(c)?),
+                }
             }
         }
         Ok(cfg)
@@ -112,6 +123,11 @@ impl Config {
         for c in deploy_containers(&self.containers, hosts, 0).containers {
             ds.add_container(c)?;
         }
+        // Remote agents must be reachable at build time: the channel
+        // adopts the agent's self-reported identity (id, site, capacity).
+        for endpoint in &self.remotes {
+            ds.add_channel(RemoteChannel::connect(endpoint)?)?;
+        }
         Ok(ds)
     }
 }
@@ -131,6 +147,75 @@ fn parse_policy(v: &Value) -> Result<ResiliencePolicy> {
             target_loss: v.opt_f64("target_loss", crate::policy::PAPER_TARGET_LOSS),
         }),
         other => Err(Error::Config(format!("unknown policy '{other}'"))),
+    }
+}
+
+/// What backs a standalone container agent's storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AgentBackend {
+    /// Device-modeled in-memory store (the spec's `device` field).
+    Device,
+    /// A real directory — any POSIX/NFS mount.
+    Fs { path: String },
+}
+
+/// Configuration of one standalone container agent (`dynostore agent
+/// --config agent.json`): the §III-A "configuration file that specifies
+/// the container's name, storage path, and access parameters".
+///
+/// ```json
+/// {"id": 20, "name": "dc-nfs", "site": "aws-virginia",
+///  "device": "ebs-ssd", "mem_mb": 256, "fs_gb": 512, "afr": 0.04,
+///  "backend": "fs", "path": "/mnt/nfs/dynostore"}
+/// ```
+#[derive(Debug, Clone)]
+pub struct AgentConfig {
+    /// Registry id this container announces (must be unique across the
+    /// deployment the gateway assembles).
+    pub id: u32,
+    pub spec: AgentSpec,
+    pub backend: AgentBackend,
+}
+
+impl AgentConfig {
+    pub fn from_json(text: &str) -> Result<AgentConfig> {
+        let v = parse(text)?;
+        let spec = parse_container(&v)?;
+        let backend = match v.opt_str("backend", "device") {
+            "device" => AgentBackend::Device,
+            "fs" => AgentBackend::Fs { path: v.req_str("path")?.to_string() },
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown agent backend '{other}' (expected device | fs)"
+                )))
+            }
+        };
+        Ok(AgentConfig { id: v.opt_u64("id", 0) as u32, spec, backend })
+    }
+
+    pub fn from_file(path: &str) -> Result<AgentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        AgentConfig::from_json(&text)
+    }
+
+    /// Instantiate the container this agent fronts.
+    pub fn build(&self) -> Result<Arc<DataContainer>> {
+        let backend: Box<dyn Backend> = match &self.backend {
+            AgentBackend::Device => {
+                Box::new(SimBackend::new(self.spec.device, self.spec.fs_capacity))
+            }
+            AgentBackend::Fs { path } => {
+                Box::new(FsBackend::new(path.as_str(), self.spec.fs_capacity)?)
+            }
+        };
+        Ok(DataContainer::with_afr(
+            self.id,
+            self.spec.name.clone(),
+            self.spec.site,
+            self.spec.mem_capacity,
+            backend,
+            self.spec.annual_failure_rate,
+        ))
     }
 }
 
@@ -227,6 +312,54 @@ mod tests {
             .push(&token, "/u", "obj", &[7u8; 40_000], Default::default())
             .unwrap();
         assert_eq!(report.backend, "swar-parallel");
+    }
+
+    #[test]
+    fn remote_container_entries_are_split_out() {
+        let cfg = Config::from_json(
+            r#"{"containers": [
+                {"name": "dc0"},
+                {"endpoint": "127.0.0.1:9100"},
+                {"name": "dc1"},
+                {"endpoint": "10.0.0.7:9100"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.containers.len(), 2);
+        assert_eq!(cfg.remotes, vec!["127.0.0.1:9100", "10.0.0.7:9100"]);
+        // Building fails fast when a remote agent is unreachable.
+        let bad = Config::from_json(r#"{"containers": [{"endpoint": "127.0.0.1:1"}]}"#)
+            .unwrap();
+        assert!(bad.build().is_err());
+    }
+
+    #[test]
+    fn agent_config_parses_and_builds() {
+        let cfg = AgentConfig::from_json(
+            r#"{"id": 20, "name": "dc-agent", "site": "aws-virginia",
+                "device": "ebs-ssd", "mem_mb": 64, "fs_gb": 1, "afr": 0.04}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.id, 20);
+        assert_eq!(cfg.backend, AgentBackend::Device);
+        let c = cfg.build().unwrap();
+        assert_eq!(c.id, 20);
+        assert_eq!(c.site, Site::AwsVirginia);
+        c.put("probe", b"ok").unwrap();
+        assert_eq!(c.get("probe").unwrap().data.unwrap(), b"ok");
+        // fs backend needs a path; unknown backends rejected.
+        assert!(AgentConfig::from_json(r#"{"name": "x", "backend": "fs"}"#).is_err());
+        assert!(AgentConfig::from_json(r#"{"name": "x", "backend": "tape"}"#).is_err());
+        let dir = std::env::temp_dir().join(format!("dynostore-agent-{}", std::process::id()));
+        let fs_cfg = AgentConfig::from_json(&format!(
+            r#"{{"id": 1, "name": "dc-fs", "backend": "fs", "path": "{}"}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        let c = fs_cfg.build().unwrap();
+        c.put("k", b"v").unwrap();
+        assert_eq!(c.get("k").unwrap().data.unwrap(), b"v");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

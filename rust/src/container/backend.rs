@@ -33,11 +33,45 @@ pub trait Backend: Send + Sync {
     fn device(&self) -> Device;
 }
 
+/// Shared key→bytes map with a running byte total, so capacity checks
+/// and `stats()` are O(1) instead of rescanning every value on each put.
+#[derive(Default)]
+struct KvStore {
+    map: BTreeMap<String, Vec<u8>>,
+    used: u64,
+}
+
+impl KvStore {
+    /// Insert under a capacity limit; replacing a key frees its old
+    /// bytes before the check so overwrites never double-count.
+    fn put_within(&mut self, key: &str, data: &[u8], capacity: u64, what: &str) -> Result<()> {
+        let replaced = self.map.get(key).map_or(0, |v| v.len() as u64);
+        let used = self.used - replaced;
+        if used + data.len() as u64 > capacity {
+            return Err(Error::Container(format!(
+                "{what} capacity exceeded: {} + {} > {}",
+                used,
+                data.len(),
+                capacity
+            )));
+        }
+        self.map.insert(key.to_string(), data.to_vec());
+        self.used = used + data.len() as u64;
+        Ok(())
+    }
+
+    fn remove(&mut self, key: &str) -> Result<Vec<u8>> {
+        let v = self.map.remove(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        self.used -= v.len() as u64;
+        Ok(v)
+    }
+}
+
 /// Pure in-memory backend (Redis-like node storage, unit tests).
 pub struct MemBackend {
     device: Device,
     capacity: u64,
-    data: Mutex<BTreeMap<String, Vec<u8>>>,
+    store: Mutex<KvStore>,
 }
 
 impl MemBackend {
@@ -45,55 +79,38 @@ impl MemBackend {
         MemBackend {
             device: Device::new(DeviceKind::Memory),
             capacity,
-            data: Mutex::new(BTreeMap::new()),
+            store: Mutex::new(KvStore::default()),
         }
-    }
-
-    fn used(map: &BTreeMap<String, Vec<u8>>) -> u64 {
-        map.values().map(|v| v.len() as u64).sum()
     }
 }
 
 impl Backend for MemBackend {
     fn put(&self, key: &str, data: &[u8]) -> Result<f64> {
-        let mut map = self.data.lock().unwrap();
-        let replaced = map.get(key).map_or(0, |v| v.len() as u64);
-        let used = Self::used(&map) - replaced;
-        if used + data.len() as u64 > self.capacity {
-            return Err(Error::Container(format!(
-                "capacity exceeded: {} + {} > {}",
-                used,
-                data.len(),
-                self.capacity
-            )));
-        }
-        map.insert(key.to_string(), data.to_vec());
+        self.store.lock().unwrap().put_within(key, data, self.capacity, "mem")?;
         Ok(self.device.write_s(data.len() as u64))
     }
 
     fn get(&self, key: &str) -> Result<(Vec<u8>, f64)> {
-        let map = self.data.lock().unwrap();
-        let v = map.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        let store = self.store.lock().unwrap();
+        let v = store.map.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
         Ok((v.clone(), self.device.read_s(v.len() as u64)))
     }
 
     fn delete(&self, key: &str) -> Result<f64> {
-        let mut map = self.data.lock().unwrap();
-        map.remove(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        self.store.lock().unwrap().remove(key)?;
         Ok(self.device.lat_s)
     }
 
     fn exists(&self, key: &str) -> bool {
-        self.data.lock().unwrap().contains_key(key)
+        self.store.lock().unwrap().map.contains_key(key)
     }
 
     fn list(&self) -> Vec<String> {
-        self.data.lock().unwrap().keys().cloned().collect()
+        self.store.lock().unwrap().map.keys().cloned().collect()
     }
 
     fn stats(&self) -> BackendStats {
-        let map = self.data.lock().unwrap();
-        let used = Self::used(&map);
+        let used = self.store.lock().unwrap().used;
         BackendStats { fs_total: self.capacity, fs_avail: self.capacity.saturating_sub(used) }
     }
 
@@ -199,53 +216,42 @@ impl Backend for FsBackend {
 pub struct SimBackend {
     device: Device,
     capacity: u64,
-    data: Mutex<BTreeMap<String, Vec<u8>>>,
+    store: Mutex<KvStore>,
 }
 
 impl SimBackend {
     pub fn new(kind: DeviceKind, capacity: u64) -> Self {
-        SimBackend { device: Device::new(kind), capacity, data: Mutex::new(BTreeMap::new()) }
+        SimBackend { device: Device::new(kind), capacity, store: Mutex::new(KvStore::default()) }
     }
 }
 
 impl Backend for SimBackend {
     fn put(&self, key: &str, data: &[u8]) -> Result<f64> {
-        let mut map = self.data.lock().unwrap();
-        let replaced = map.get(key).map_or(0, |v| v.len() as u64);
-        let used: u64 = map.values().map(|v| v.len() as u64).sum::<u64>() - replaced;
-        if used + data.len() as u64 > self.capacity {
-            return Err(Error::Container("sim capacity exceeded".into()));
-        }
-        map.insert(key.to_string(), data.to_vec());
+        self.store.lock().unwrap().put_within(key, data, self.capacity, "sim")?;
         Ok(self.device.write_s(data.len() as u64))
     }
 
     fn get(&self, key: &str) -> Result<(Vec<u8>, f64)> {
-        let map = self.data.lock().unwrap();
-        let v = map.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        let store = self.store.lock().unwrap();
+        let v = store.map.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
         Ok((v.clone(), self.device.read_s(v.len() as u64)))
     }
 
     fn delete(&self, key: &str) -> Result<f64> {
-        self.data
-            .lock()
-            .unwrap()
-            .remove(key)
-            .ok_or_else(|| Error::NotFound(key.to_string()))?;
+        self.store.lock().unwrap().remove(key)?;
         Ok(self.device.lat_s)
     }
 
     fn exists(&self, key: &str) -> bool {
-        self.data.lock().unwrap().contains_key(key)
+        self.store.lock().unwrap().map.contains_key(key)
     }
 
     fn list(&self) -> Vec<String> {
-        self.data.lock().unwrap().keys().cloned().collect()
+        self.store.lock().unwrap().map.keys().cloned().collect()
     }
 
     fn stats(&self) -> BackendStats {
-        let map = self.data.lock().unwrap();
-        let used: u64 = map.values().map(|v| v.len() as u64).sum();
+        let used = self.store.lock().unwrap().used;
         BackendStats { fs_total: self.capacity, fs_avail: self.capacity.saturating_sub(used) }
     }
 
@@ -319,6 +325,25 @@ mod tests {
         assert_eq!(b.stats().fs_avail, 70);
         b.delete("a").unwrap();
         assert_eq!(b.stats().fs_avail, 100);
+    }
+
+    #[test]
+    fn used_counter_stays_consistent_with_contents() {
+        // The running `used` total must match a recount after any mix of
+        // inserts, overwrites (smaller AND larger), and deletes.
+        let b = MemBackend::new(1 << 20);
+        b.put("a", &[0u8; 100]).unwrap();
+        b.put("b", &[0u8; 200]).unwrap();
+        b.put("a", &[0u8; 50]).unwrap(); // shrink in place
+        b.put("b", &[0u8; 400]).unwrap(); // grow in place
+        b.delete("a").unwrap();
+        let recount: u64 = b
+            .list()
+            .iter()
+            .map(|k| b.get(k).unwrap().0.len() as u64)
+            .sum();
+        assert_eq!(recount, 400);
+        assert_eq!(b.stats().fs_avail, (1 << 20) - recount);
     }
 
     #[test]

@@ -1,0 +1,505 @@
+//! Transport-abstracted container dispatch (paper §III-A): every data
+//! container is reached through a [`ContainerChannel`] — the
+//! standardized put/get/delete/exists/info interface — regardless of
+//! where the container actually runs.
+//!
+//! Two transports exist today:
+//!
+//! * [`LocalChannel`] wraps an in-process [`DataContainer`] (the
+//!   single-host deployments every test and bench uses).
+//! * [`RemoteChannel`] speaks the same interface over HTTP to a
+//!   container **agent server** ([`crate::container::ContainerServer`])
+//!   running anywhere a TCP connection reaches — the wide-area storage
+//!   network of the paper, where containers sit next to heterogeneous
+//!   backends on other hosts.
+//!
+//! The coordinator's chunk loops dispatch on `Arc<dyn ContainerChannel>`
+//! and never know (or care) which transport serves a chunk; reports
+//! carry the [`ContainerChannel::transport`] label so operators do.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::container::server::encode_key;
+use crate::container::{ContainerId, ContainerInfo, DataContainer, OpOutcome};
+use crate::json::{obj, parse, Value};
+use crate::net::{HttpClient, HttpResponse};
+use crate::sim::Site;
+use crate::{Error, Result};
+
+/// How long a remote agent gets to answer before the channel declares it
+/// unreachable. Dead endpoints must fail fast: the erasure pull path
+/// hedges to parity chunks instead of waiting out a stuck transfer.
+const REMOTE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long a fetched monitor snapshot stays fresh. `info()` serves the
+/// cache inside this window so hot paths (placement reads every
+/// container's info per push, `/health` per request) don't pay one HTTP
+/// round trip per remote container per call — and so an unreachable
+/// agent is re-tried at most once per window instead of stalling every
+/// caller for the full transport timeout.
+const INFO_TTL: Duration = Duration::from_millis(500);
+
+/// The standardized container interface, transport-abstracted.
+///
+/// Implementations must be thread-safe: the coordinator dispatches chunk
+/// I/O for one request concurrently across many channels, and many
+/// requests concurrently across the same channel.
+pub trait ContainerChannel: Send + Sync {
+    fn id(&self) -> ContainerId;
+    fn name(&self) -> String;
+    fn site(&self) -> Site;
+    /// Transport label surfaced in reports and metrics (`"local"`,
+    /// `"http"`).
+    fn transport(&self) -> &'static str;
+
+    /// Store an object under `key`.
+    fn put(&self, key: &str, data: &[u8]) -> Result<OpOutcome>;
+    /// Fetch the object at `key` (payload in `OpOutcome::data`).
+    fn get(&self, key: &str) -> Result<OpOutcome>;
+    /// Remove the object at `key`.
+    fn delete(&self, key: &str) -> Result<OpOutcome>;
+    /// Does `key` exist? Dead/unreachable containers answer `false`.
+    fn exists(&self, key: &str) -> Result<bool>;
+
+    /// Monitor snapshot feeding placement and the health service. Never
+    /// fails: a remote channel falls back to its last observed snapshot
+    /// flagged `alive = false` when the agent is unreachable.
+    fn info(&self) -> ContainerInfo;
+    /// Last observed liveness — cheap, no network round trip.
+    fn is_alive(&self) -> bool;
+    /// Active liveness probe; remote channels re-contact the agent.
+    fn probe(&self) -> bool {
+        self.is_alive()
+    }
+    /// Flip the container's liveness (failure injection, maintenance).
+    fn set_alive(&self, alive: bool) -> Result<()>;
+
+    /// The wrapped in-process container when this channel is local
+    /// (tests and FaaS workers reading near data); `None` for remote.
+    fn as_local(&self) -> Option<Arc<DataContainer>> {
+        None
+    }
+}
+
+/// In-process transport: the channel trait over an `Arc<DataContainer>`.
+pub struct LocalChannel {
+    inner: Arc<DataContainer>,
+}
+
+impl LocalChannel {
+    pub fn new(inner: Arc<DataContainer>) -> Self {
+        LocalChannel { inner }
+    }
+}
+
+impl ContainerChannel for LocalChannel {
+    fn id(&self) -> ContainerId {
+        self.inner.id
+    }
+
+    fn name(&self) -> String {
+        self.inner.name.clone()
+    }
+
+    fn site(&self) -> Site {
+        self.inner.site
+    }
+
+    fn transport(&self) -> &'static str {
+        "local"
+    }
+
+    fn put(&self, key: &str, data: &[u8]) -> Result<OpOutcome> {
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Result<OpOutcome> {
+        self.inner.get(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<OpOutcome> {
+        self.inner.delete(key)
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        Ok(self.inner.exists(key))
+    }
+
+    fn info(&self) -> ContainerInfo {
+        self.inner.info()
+    }
+
+    fn is_alive(&self) -> bool {
+        self.inner.is_alive()
+    }
+
+    fn set_alive(&self, alive: bool) -> Result<()> {
+        self.inner.set_alive(alive);
+        Ok(())
+    }
+
+    fn as_local(&self) -> Option<Arc<DataContainer>> {
+        Some(Arc::clone(&self.inner))
+    }
+}
+
+/// HTTP transport: the channel trait over the container agent REST API
+/// (`/container/objects/<key>`, `/container/info`, …) served by
+/// [`crate::container::ContainerServer`].
+/// Cached monitor snapshot + when it was last (re)stamped.
+struct CachedInfo {
+    info: ContainerInfo,
+    at: Instant,
+}
+
+pub struct RemoteChannel {
+    id: ContainerId,
+    endpoint: String,
+    client: HttpClient,
+    /// Last snapshot observed from the agent. `info.alive` doubles as
+    /// the transport-health flag: flipped false whenever the agent stops
+    /// answering, refreshed on every successful exchange.
+    cached: Mutex<CachedInfo>,
+}
+
+impl RemoteChannel {
+    /// Connect to a container agent at `endpoint` (`host:port`) and
+    /// adopt its self-reported identity (id, name, site, capacities).
+    pub fn connect(endpoint: &str) -> Result<Arc<RemoteChannel>> {
+        let client = HttpClient::with_timeout(endpoint, REMOTE_TIMEOUT);
+        let resp = client
+            .get("/container/info", &[])
+            .map_err(|e| Error::Unavailable(format!("container agent {endpoint}: {e}")))?;
+        if resp.status != 200 {
+            return Err(Error::Net(format!(
+                "container agent {endpoint} answered {} to /container/info",
+                resp.status
+            )));
+        }
+        let text = std::str::from_utf8(&resp.body)
+            .map_err(|_| Error::Json("agent info response not utf-8".into()))?;
+        let info = info_from_json(&parse(text)?)?;
+        Ok(Arc::new(RemoteChannel {
+            id: info.id,
+            endpoint: endpoint.to_string(),
+            client,
+            cached: Mutex::new(CachedInfo { info, at: Instant::now() }),
+        }))
+    }
+
+    pub fn endpoint(&self) -> &str {
+        &self.endpoint
+    }
+
+    fn object_path(key: &str) -> String {
+        format!("/container/objects/{}", encode_key(key))
+    }
+
+    fn mark(&self, alive: bool) {
+        let mut cached = self.cached.lock().unwrap();
+        cached.info.alive = alive;
+        // A completed exchange is a fresh liveness observation: restamp
+        // so a just-marked-dead agent isn't immediately re-probed.
+        cached.at = Instant::now();
+    }
+
+    /// Fetch a fresh snapshot, or mark the cache dead when the agent is
+    /// unreachable/garbled. Always restamps the cache, so a dead agent
+    /// is re-contacted at most once per [`INFO_TTL`] window.
+    fn refresh_info(&self) -> ContainerInfo {
+        let fetched = self.client.get("/container/info", &[]).ok().and_then(|resp| {
+            if resp.status != 200 {
+                return None;
+            }
+            std::str::from_utf8(&resp.body)
+                .ok()
+                .and_then(|t| parse(t).ok())
+                .and_then(|v| info_from_json(&v).ok())
+        });
+        let mut cached = self.cached.lock().unwrap();
+        cached.at = Instant::now();
+        match fetched {
+            Some(info) => {
+                cached.info = info.clone();
+                info
+            }
+            None => {
+                cached.info.alive = false;
+                cached.info.clone()
+            }
+        }
+    }
+
+    /// A transport-level failure (refused/timed-out connection): the
+    /// coordinator treats this exactly like a dead container.
+    fn transport_err(&self, e: Error) -> Error {
+        self.mark(false);
+        Error::Unavailable(format!("container agent {}: {e}", self.endpoint))
+    }
+
+    /// Map an agent response to the channel result space.
+    fn check(&self, resp: HttpResponse, what: &str) -> Result<HttpResponse> {
+        if resp.status == 503 {
+            // The agent is reachable but its container is down.
+            self.mark(false);
+            return Err(Error::Unavailable(format!(
+                "container behind agent {} is down",
+                self.endpoint
+            )));
+        }
+        self.mark(true);
+        match resp.status {
+            200 | 201 | 204 => Ok(resp),
+            404 => Err(Error::NotFound(format!("{what} (agent {})", self.endpoint))),
+            // Transport parity: the agent maps Error::Container to 507,
+            // so capacity exhaustion surfaces as the same variant a
+            // LocalChannel caller would see.
+            507 => Err(Error::Container(format!(
+                "{} (agent {})",
+                String::from_utf8_lossy(&resp.body),
+                self.endpoint
+            ))),
+            s => Err(Error::Net(format!(
+                "agent {} answered {s} for {what}: {}",
+                self.endpoint,
+                String::from_utf8_lossy(&resp.body)
+            ))),
+        }
+    }
+}
+
+impl ContainerChannel for RemoteChannel {
+    fn id(&self) -> ContainerId {
+        self.id
+    }
+
+    fn name(&self) -> String {
+        self.cached.lock().unwrap().info.name.clone()
+    }
+
+    fn site(&self) -> Site {
+        self.cached.lock().unwrap().info.site
+    }
+
+    fn transport(&self) -> &'static str {
+        "http"
+    }
+
+    fn put(&self, key: &str, data: &[u8]) -> Result<OpOutcome> {
+        let resp = self
+            .client
+            .put(&Self::object_path(key), &[], data)
+            .map_err(|e| self.transport_err(e))?;
+        let resp = self.check(resp, key)?;
+        let v = std::str::from_utf8(&resp.body)
+            .ok()
+            .and_then(|t| parse(t).ok())
+            .unwrap_or(Value::Null);
+        Ok(OpOutcome {
+            data: None,
+            sim_s: v.opt_f64("sim_s", 0.0),
+            cache_hit: v.opt_bool("cache_hit", false),
+        })
+    }
+
+    fn get(&self, key: &str) -> Result<OpOutcome> {
+        let resp = self
+            .client
+            .get(&Self::object_path(key), &[])
+            .map_err(|e| self.transport_err(e))?;
+        let resp = self.check(resp, key)?;
+        let sim_s = resp
+            .headers
+            .get("x-dyno-sim-s")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.0);
+        let cache_hit = resp.headers.get("x-dyno-cache-hit").map(|s| s == "1").unwrap_or(false);
+        Ok(OpOutcome { data: Some(resp.body), sim_s, cache_hit })
+    }
+
+    fn delete(&self, key: &str) -> Result<OpOutcome> {
+        let resp = self
+            .client
+            .delete(&Self::object_path(key), &[])
+            .map_err(|e| self.transport_err(e))?;
+        let resp = self.check(resp, key)?;
+        let v = std::str::from_utf8(&resp.body)
+            .ok()
+            .and_then(|t| parse(t).ok())
+            .unwrap_or(Value::Null);
+        Ok(OpOutcome { data: None, sim_s: v.opt_f64("sim_s", 0.0), cache_hit: false })
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        match self.client.request("HEAD", &Self::object_path(key), &[], &[]) {
+            Ok(resp) if resp.status == 200 => {
+                self.mark(true);
+                Ok(true)
+            }
+            Ok(resp) if resp.status == 404 => {
+                self.mark(true);
+                Ok(false)
+            }
+            Ok(resp) if resp.status == 503 => {
+                self.mark(false);
+                Ok(false)
+            }
+            Ok(resp) => Err(Error::Net(format!(
+                "agent {} answered {} to HEAD {key}",
+                self.endpoint, resp.status
+            ))),
+            Err(_) => {
+                // Unreachable agent == dead container == nothing there.
+                self.mark(false);
+                Ok(false)
+            }
+        }
+    }
+
+    fn info(&self) -> ContainerInfo {
+        {
+            let cached = self.cached.lock().unwrap();
+            if cached.at.elapsed() < INFO_TTL {
+                return cached.info.clone();
+            }
+        }
+        self.refresh_info()
+    }
+
+    fn is_alive(&self) -> bool {
+        {
+            let cached = self.cached.lock().unwrap();
+            if cached.info.alive || cached.at.elapsed() < INFO_TTL {
+                return cached.info.alive;
+            }
+        }
+        // Cached dead but the observation is stale: give the agent a
+        // chance to have recovered, at most once per TTL window (the
+        // refresh restamps the cache whichever way it goes), so a
+        // transient outage doesn't leave pulls degraded forever.
+        self.refresh_info().alive
+    }
+
+    fn probe(&self) -> bool {
+        // An active probe bypasses the TTL: health sweeps are the
+        // designated way to refresh a remote container's liveness.
+        self.refresh_info().alive
+    }
+
+    fn set_alive(&self, alive: bool) -> Result<()> {
+        let body = crate::json::to_string(&obj(vec![("alive", Value::Bool(alive))]));
+        let resp = self
+            .client
+            .post("/container/admin/alive", &[], body.as_bytes())
+            .map_err(|e| self.transport_err(e))?;
+        if resp.status != 200 {
+            return Err(Error::Net(format!(
+                "agent {} answered {} to admin/alive",
+                self.endpoint, resp.status
+            )));
+        }
+        self.mark(alive);
+        Ok(())
+    }
+}
+
+/// Serialize a monitor snapshot for the agent wire format.
+pub(crate) fn info_to_json(i: &ContainerInfo) -> Value {
+    obj(vec![
+        ("id", u64::from(i.id).into()),
+        ("name", i.name.as_str().into()),
+        ("site", i.site.name().into()),
+        ("alive", Value::Bool(i.alive)),
+        ("mem_total", i.mem_total.into()),
+        ("mem_avail", i.mem_avail.into()),
+        ("fs_total", i.fs_total.into()),
+        ("fs_avail", i.fs_avail.into()),
+        ("afr", i.annual_failure_rate.into()),
+    ])
+}
+
+/// Parse the agent wire format back into a monitor snapshot.
+pub(crate) fn info_from_json(v: &Value) -> Result<ContainerInfo> {
+    let site_name = v.req_str("site")?;
+    let site = Site::parse(site_name)
+        .ok_or_else(|| Error::Json(format!("unknown site '{site_name}' in agent info")))?;
+    Ok(ContainerInfo {
+        id: v.req_u64("id")? as u32,
+        name: v.req_str("name")?.to_string(),
+        site,
+        alive: v.opt_bool("alive", true),
+        mem_total: v.opt_u64("mem_total", 0),
+        mem_avail: v.opt_u64("mem_avail", 0),
+        fs_total: v.opt_u64("fs_total", 0),
+        fs_avail: v.opt_u64("fs_avail", 0),
+        annual_failure_rate: v.get("afr").as_f64().unwrap_or(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::MemBackend;
+
+    fn local() -> LocalChannel {
+        LocalChannel::new(DataContainer::new(
+            7,
+            "dc-chan",
+            Site::ChameleonTacc,
+            1 << 16,
+            Box::new(MemBackend::new(1 << 20)),
+        ))
+    }
+
+    #[test]
+    fn local_channel_passes_through() {
+        let ch = local();
+        assert_eq!(ch.id(), 7);
+        assert_eq!(ch.name(), "dc-chan");
+        assert_eq!(ch.site(), Site::ChameleonTacc);
+        assert_eq!(ch.transport(), "local");
+        assert!(ch.is_alive());
+        ch.put("k", b"v").unwrap();
+        assert!(ch.exists("k").unwrap());
+        assert_eq!(ch.get("k").unwrap().data.unwrap(), b"v");
+        assert_eq!(ch.info().id, 7);
+        ch.delete("k").unwrap();
+        assert!(!ch.exists("k").unwrap());
+        assert!(ch.as_local().is_some());
+    }
+
+    #[test]
+    fn local_channel_liveness_flip() {
+        let ch = local();
+        ch.set_alive(false).unwrap();
+        assert!(!ch.is_alive());
+        assert!(!ch.probe());
+        assert!(matches!(ch.get("k"), Err(Error::Unavailable(_))));
+        ch.set_alive(true).unwrap();
+        assert!(ch.probe());
+    }
+
+    #[test]
+    fn info_json_roundtrip() {
+        let info = ContainerInfo {
+            id: 42,
+            name: "dc42".into(),
+            site: Site::AwsVirginia,
+            alive: true,
+            mem_total: 256 << 20,
+            mem_avail: 100 << 20,
+            fs_total: 1 << 40,
+            fs_avail: 1 << 39,
+            annual_failure_rate: 0.07,
+        };
+        let back = info_from_json(&info_to_json(&info)).unwrap();
+        assert_eq!(back, info);
+    }
+
+    #[test]
+    fn connect_to_nothing_fails_fast() {
+        // Port 1 is essentially never listening.
+        assert!(RemoteChannel::connect("127.0.0.1:1").is_err());
+    }
+}

@@ -10,13 +10,22 @@
 //! what an NFS/POSIX deployment uses), and [`SimBackend`] (capacity +
 //! device-model simulation of the HDFS/Ceph/EBS/Lustre/S3 systems in the
 //! paper's testbed; see DESIGN.md §3 on substitutions).
+//!
+//! Transports: the coordinator reaches every container through a
+//! [`ContainerChannel`] — [`LocalChannel`] in-process, or
+//! [`RemoteChannel`] over HTTP to a [`ContainerServer`] agent started
+//! with `dynostore agent` on any reachable host.
 
 mod agent;
 mod backend;
 mod cache;
+mod channel;
 mod datacontainer;
+mod server;
 
 pub use agent::{deploy_containers, AgentSpec, DeployReport};
 pub use backend::{Backend, BackendStats, FsBackend, MemBackend, SimBackend};
 pub use cache::LruCache;
+pub use channel::{ContainerChannel, LocalChannel, RemoteChannel};
 pub use datacontainer::{ContainerId, ContainerInfo, DataContainer, OpOutcome};
+pub use server::{decode_key, encode_key, ContainerServer};

@@ -1,0 +1,255 @@
+//! Container agent server (paper §III-A: "administrators deploy data
+//! containers by installing the DynoStore agent and providing a
+//! configuration file") — the real network-facing half of that story.
+//! One [`DataContainer`]'s standardized interface mounted on
+//! [`crate::net::HttpServer`], spoken to by [`super::RemoteChannel`].
+//!
+//! Routes:
+//! * `GET    /container/info` → monitor snapshot JSON
+//! * `GET    /container/list` → stored keys JSON array
+//! * `PUT    /container/objects/<key>` body = bytes → `{sim_s, cache_hit}`
+//! * `GET    /container/objects/<key>` → bytes (+ `x-dyno-sim-s` header)
+//! * `HEAD   /container/objects/<key>` → 200/404
+//! * `DELETE /container/objects/<key>` → `{sim_s}`
+//! * `POST   /container/admin/alive` body `{"alive": bool}` — failure
+//!   injection / maintenance hook used by the health service and tests
+//!
+//! Keys are percent-encoded into the path so arbitrary key strings
+//! (slashes, spaces) survive the HTTP request line.
+
+use std::sync::Arc;
+
+use crate::container::channel::info_to_json;
+use crate::container::DataContainer;
+use crate::json::{obj, parse, Value};
+use crate::net::{HttpRequest, HttpResponse, HttpServer};
+use crate::{Error, Result};
+
+/// Path prefix of the object routes.
+pub const OBJECTS_PREFIX: &str = "/container/objects/";
+
+/// Percent-encode a container key for use as a path segment. Unreserved
+/// URI characters pass through; everything else (slashes included — a
+/// key is one segment) becomes `%XX`.
+pub fn encode_key(key: &str) -> String {
+    let mut out = String::with_capacity(key.len());
+    for &b in key.as_bytes() {
+        match b {
+            b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'-' | b'.' | b'_' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// Invert [`encode_key`].
+pub fn decode_key(enc: &str) -> Result<String> {
+    let bytes = enc.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            if i + 3 > bytes.len() {
+                return Err(Error::Invalid(format!("truncated percent escape in '{enc}'")));
+            }
+            let hex = std::str::from_utf8(&bytes[i + 1..i + 3])
+                .map_err(|_| Error::Invalid(format!("bad percent escape in '{enc}'")))?;
+            let b = u8::from_str_radix(hex, 16)
+                .map_err(|_| Error::Invalid(format!("bad percent escape in '{enc}'")))?;
+            out.push(b);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).map_err(|_| Error::Invalid(format!("key '{enc}' is not utf-8")))
+}
+
+/// A running container agent: HTTP server + the container it fronts.
+pub struct ContainerServer {
+    server: HttpServer,
+    container: Arc<DataContainer>,
+}
+
+impl ContainerServer {
+    /// Mount `container` on `addr` ("127.0.0.1:0" for an ephemeral port)
+    /// with `workers` handler threads.
+    pub fn serve(
+        container: Arc<DataContainer>,
+        addr: &str,
+        workers: usize,
+    ) -> Result<ContainerServer> {
+        let c = Arc::clone(&container);
+        let server = HttpServer::serve(addr, workers, Arc::new(move |req| route(&c, req)))?;
+        Ok(ContainerServer { server, container })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+
+    /// The fronted container (tests inject failures directly).
+    pub fn container(&self) -> Arc<DataContainer> {
+        Arc::clone(&self.container)
+    }
+
+    /// Stop accepting connections (simulates an agent crash: remote
+    /// channels see refused connections, i.e. a dead container).
+    pub fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+fn route(c: &Arc<DataContainer>, req: HttpRequest) -> HttpResponse {
+    let result = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/container/info") => Ok(HttpResponse::json(200, &info_to_json(&c.info()))),
+        ("GET", "/container/list") => Ok(HttpResponse::json(
+            200,
+            &Value::Arr(c.list().into_iter().map(Value::Str).collect()),
+        )),
+        ("POST", "/container/admin/alive") => admin_alive(c, &req),
+        (_, path) if path.starts_with(OBJECTS_PREFIX) => object(c, &req),
+        _ => Err(Error::NotFound(format!("{} {}", req.method, req.path))),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err(e) => {
+            let status = match &e {
+                Error::NotFound(_) => 404,
+                Error::Unavailable(_) => 503,
+                Error::Invalid(_) | Error::Json(_) => 400,
+                Error::Container(_) => 507,
+                _ => 500,
+            };
+            HttpResponse::json(status, &obj(vec![("error", e.to_string().as_str().into())]))
+        }
+    }
+}
+
+fn object(c: &Arc<DataContainer>, req: &HttpRequest) -> Result<HttpResponse> {
+    let key = decode_key(&req.path[OBJECTS_PREFIX.len()..])?;
+    match req.method.as_str() {
+        "PUT" => {
+            let out = c.put(&key, &req.body)?;
+            Ok(HttpResponse::json(
+                201,
+                &obj(vec![
+                    ("sim_s", out.sim_s.into()),
+                    ("cache_hit", Value::Bool(out.cache_hit)),
+                ]),
+            ))
+        }
+        "GET" => {
+            let out = c.get(&key)?;
+            let mut resp = HttpResponse::bytes(200, out.data.unwrap_or_default());
+            resp.headers.insert("x-dyno-sim-s".into(), format!("{}", out.sim_s));
+            resp.headers
+                .insert("x-dyno-cache-hit".into(), if out.cache_hit { "1" } else { "0" }.into());
+            Ok(resp)
+        }
+        "HEAD" => {
+            if !c.is_alive() {
+                return Err(Error::Unavailable(format!("container {} is down", c.name)));
+            }
+            Ok(HttpResponse::new(if c.exists(&key) { 200 } else { 404 }))
+        }
+        "DELETE" => {
+            let out = c.delete(&key)?;
+            Ok(HttpResponse::json(200, &obj(vec![("sim_s", out.sim_s.into())])))
+        }
+        other => Err(Error::Invalid(format!("method {other} not supported on container objects"))),
+    }
+}
+
+fn admin_alive(c: &Arc<DataContainer>, req: &HttpRequest) -> Result<HttpResponse> {
+    let body =
+        std::str::from_utf8(&req.body).map_err(|_| Error::Invalid("body not utf-8".into()))?;
+    let alive = parse(body)?.opt_bool("alive", true);
+    c.set_alive(alive);
+    Ok(HttpResponse::json(200, &obj(vec![("alive", Value::Bool(alive))])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::MemBackend;
+    use crate::net::HttpClient;
+    use crate::sim::Site;
+
+    fn agent() -> (ContainerServer, HttpClient) {
+        let c = DataContainer::new(
+            3,
+            "dc-agent",
+            Site::AwsVirginia,
+            1 << 16,
+            Box::new(MemBackend::new(1 << 20)),
+        );
+        let server = ContainerServer::serve(c, "127.0.0.1:0", 2).unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        (server, client)
+    }
+
+    #[test]
+    fn key_encoding_roundtrips() {
+        for key in ["plain-key.bin", "a/b c:d", "chk-ab12-100-3", "üñï", "%already%"] {
+            let enc = encode_key(key);
+            assert!(
+                enc.bytes().all(|b| b.is_ascii_alphanumeric() || b"-._~%".contains(&b)),
+                "{enc}"
+            );
+            assert_eq!(decode_key(&enc).unwrap(), key);
+        }
+        assert!(decode_key("%2").is_err());
+        assert!(decode_key("%zz").is_err());
+    }
+
+    #[test]
+    fn object_lifecycle_over_http() {
+        let (_server, client) = agent();
+        let path = format!("{}{}", OBJECTS_PREFIX, encode_key("chk-1"));
+        let put = client.put(&path, &[], b"payload").unwrap();
+        assert_eq!(put.status, 201);
+        let head = client.request("HEAD", &path, &[], &[]).unwrap();
+        assert_eq!(head.status, 200);
+        let got = client.get(&path, &[]).unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, b"payload");
+        assert!(got.headers.contains_key("x-dyno-sim-s"));
+        let del = client.delete(&path, &[]).unwrap();
+        assert_eq!(del.status, 200);
+        assert_eq!(client.get(&path, &[]).unwrap().status, 404);
+    }
+
+    #[test]
+    fn info_and_list_endpoints() {
+        let (server, client) = agent();
+        server.container().put("k1", b"x").unwrap();
+        let info = client.get("/container/info", &[]).unwrap();
+        assert_eq!(info.status, 200);
+        let v = parse(std::str::from_utf8(&info.body).unwrap()).unwrap();
+        assert_eq!(v.req_u64("id").unwrap(), 3);
+        assert_eq!(v.req_str("site").unwrap(), "aws-virginia");
+        let list = client.get("/container/list", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&list.body).unwrap()).unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn dead_container_answers_503() {
+        let (server, client) = agent();
+        let path = format!("{}{}", OBJECTS_PREFIX, encode_key("k"));
+        client.put(&path, &[], b"x").unwrap();
+        // Kill via the admin hook, over HTTP.
+        let resp =
+            client.post("/container/admin/alive", &[], b"{\"alive\": false}").unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(!server.container().is_alive());
+        assert_eq!(client.get(&path, &[]).unwrap().status, 503);
+        assert_eq!(client.request("HEAD", &path, &[], &[]).unwrap().status, 503);
+        client.post("/container/admin/alive", &[], b"{\"alive\": true}").unwrap();
+        assert_eq!(client.get(&path, &[]).unwrap().status, 200);
+    }
+}

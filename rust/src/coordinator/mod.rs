@@ -10,14 +10,15 @@ mod ops;
 mod reports;
 
 pub use ops::{OpContext, PullOpts, PushOpts};
-pub use reports::{PullReport, PushReport, RepairReport};
+pub use reports::{ChunkIoReport, PullReport, PushReport, RepairReport};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::container::DataContainer;
+use crate::container::{ContainerChannel, DataContainer};
 use crate::crypto::TokenService;
+use crate::net::ThreadPool;
 use crate::erasure::{
     Codec, ErasureConfig, GfBackend, ParallelBackend, PureRustBackend, SwarBackend,
 };
@@ -111,6 +112,9 @@ pub struct DynoStore {
     engine: GfEngine,
     codecs: Mutex<HashMap<ErasureConfig, Arc<Codec<Arc<dyn GfBackend>>>>>,
     backend: Arc<dyn GfBackend>,
+    /// Worker pool dispatching per-chunk container I/O concurrently
+    /// (disperse / erasure pull / repair fan out over the channels).
+    pub(crate) io_pool: ThreadPool,
 }
 
 /// Builder for a DynoStore deployment.
@@ -123,6 +127,7 @@ pub struct Builder {
     engine: GfEngine,
     wan: Wan,
     secret: Vec<u8>,
+    io_workers: usize,
 }
 
 impl Default for Builder {
@@ -136,6 +141,7 @@ impl Default for Builder {
             engine: GfEngine::PureRust,
             wan: Wan::paper_testbed(),
             secret: b"dynostore-dev-secret".to_vec(),
+            io_workers: 0, // auto-size to the host
         }
     }
 }
@@ -181,12 +187,24 @@ impl Builder {
         self
     }
 
+    /// Size of the chunk-I/O dispatch pool (0 = auto: host parallelism
+    /// clamped to [2, 16]).
+    pub fn io_workers(mut self, n: usize) -> Self {
+        self.io_workers = n;
+        self
+    }
+
     pub fn build(self) -> DynoStore {
         let backend: Arc<dyn GfBackend> = match self.engine {
             GfEngine::PureRust => Arc::new(PureRustBackend),
             GfEngine::Swar => Arc::new(SwarBackend::new()),
             GfEngine::SwarParallel => Arc::new(ParallelBackend::auto()),
             GfEngine::Pjrt => Arc::new(PjrtGfBackend::global()),
+        };
+        let io_workers = if self.io_workers > 0 {
+            self.io_workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16)
         };
         DynoStore {
             registry: Registry::new(),
@@ -200,6 +218,7 @@ impl Builder {
             engine: self.engine,
             codecs: Mutex::new(HashMap::new()),
             backend,
+            io_pool: ThreadPool::new(io_workers),
         }
     }
 }
@@ -221,14 +240,26 @@ impl DynoStore {
         self.backend.name()
     }
 
-    /// Register a container (administrator add, §III-B registry).
+    /// Register an in-process container (administrator add, §III-B).
     pub fn add_container(&self, c: Arc<DataContainer>) -> Result<()> {
         self.registry.add(c)
     }
 
+    /// Register a container behind any transport (a remote agent's
+    /// [`crate::container::RemoteChannel`], or anything else speaking
+    /// [`ContainerChannel`]).
+    pub fn add_channel(&self, ch: Arc<dyn ContainerChannel>) -> Result<()> {
+        self.registry.add_channel(ch)
+    }
+
     /// Deregister a container.
-    pub fn remove_container(&self, id: u32) -> Result<Arc<DataContainer>> {
+    pub fn remove_container(&self, id: u32) -> Result<Arc<dyn ContainerChannel>> {
         self.registry.remove(id)
+    }
+
+    /// Parallelism of the chunk-I/O dispatch pool.
+    pub fn io_parallelism(&self) -> usize {
+        self.io_pool.size()
     }
 
     /// Create a user namespace and issue the user's OAuth-style token.

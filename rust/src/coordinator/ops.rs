@@ -1,11 +1,19 @@
 //! Coordinator data operations: push / pull / exists / evict / gc /
 //! repair — the request paths of paper Fig. 1, with Algorithm 1-2
 //! erasure handling and §IV-C placement.
+//!
+//! Chunk I/O is transport-abstracted: every container is reached through
+//! a [`ContainerChannel`] (in-process or remote HTTP agent) and the
+//! erasure hot paths dispatch their per-chunk transfers **concurrently**
+//! on the coordinator's I/O pool — disperse uploads all n chunks at
+//! once, pull issues the k preferred (systematic) fetches and hedges to
+//! parity in follow-up waves on failure or corruption, repair fans out
+//! both its reconstruction reads and its re-placement writes.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
-use crate::container::DataContainer;
+use crate::container::{ContainerChannel, DataContainer};
 use crate::crypto::sha3_256;
 use crate::erasure::{Chunk, ErasureConfig};
 use crate::metadata::{ObjectMeta, ObjectPlacement};
@@ -15,7 +23,7 @@ use crate::sim::{cost, Site};
 use crate::util::{now_ns, to_hex, unix_secs};
 use crate::{Error, Result};
 
-use super::reports::{PullReport, PushReport, RepairReport};
+use super::reports::{ChunkIoReport, PullReport, PushReport, RepairReport};
 use super::DynoStore;
 
 /// Simulated metadata-commit base cost: two LAN round trips among the
@@ -85,7 +93,76 @@ fn chunk_key(sha3: &[u8; 32], len: u64, index: u8) -> String {
     format!("chk-{}-{len}-{index}", &to_hex(sha3)[..16])
 }
 
+/// One unit of chunk I/O for the concurrent dispatcher: an upload when
+/// `data` is present, a download otherwise.
+struct ChunkJob {
+    index: u8,
+    channel: Arc<dyn ContainerChannel>,
+    key: String,
+    data: Option<Vec<u8>>,
+}
+
+/// Outcome of one dispatched transfer. Identity labels are captured
+/// before dispatch so failed transfers still report which container and
+/// transport were involved.
+struct ChunkXfer {
+    index: u8,
+    cid: u32,
+    transport: &'static str,
+    site: Site,
+    /// Bytes placed on the wire for uploads (downloads read the fetched
+    /// payload length instead).
+    wire_len: usize,
+    /// Measured wallclock of the channel operation.
+    wall_s: f64,
+    /// (payload for downloads, simulated device seconds).
+    res: Result<(Option<Vec<u8>>, f64)>,
+}
+
 impl DynoStore {
+    /// Fan a batch of chunk transfers out over the I/O pool, one job per
+    /// channel op, and gather the outcomes in dispatch order. Individual
+    /// transfer failures come back inside each [`ChunkXfer`]; only a
+    /// pool-level fault (a panicked worker job) fails the whole batch.
+    fn dispatch_chunk_io(&self, jobs: Vec<ChunkJob>) -> Result<Vec<ChunkXfer>> {
+        let labels: Vec<(u8, u32, &'static str, Site, usize)> = jobs
+            .iter()
+            .map(|j| {
+                (
+                    j.index,
+                    j.channel.id(),
+                    j.channel.transport(),
+                    j.channel.site(),
+                    j.data.as_ref().map_or(0, |d| d.len()),
+                )
+            })
+            .collect();
+        let n = jobs.len();
+        let jobs = Arc::new(jobs);
+        let outs = self.io_pool.scatter_gather(n, move |i| {
+            let job = &jobs[i];
+            let t0 = now_ns();
+            let res = match &job.data {
+                Some(bytes) => job.channel.put(&job.key, bytes).map(|o| (None, o.sim_s)),
+                None => job.channel.get(&job.key).map(|o| (o.data, o.sim_s)),
+            };
+            ((now_ns() - t0) as f64 / 1e9, res)
+        })?;
+        Ok(outs
+            .into_iter()
+            .zip(labels)
+            .map(|((wall_s, res), (index, cid, transport, site, wire_len))| ChunkXfer {
+                index,
+                cid,
+                transport,
+                site,
+                wire_len,
+                wall_s,
+                res,
+            })
+            .collect())
+    }
+
     /// Upload an object (client `push`). Algorithm 1 under an erasure
     /// policy; single-container placement under Regular.
     pub fn push(
@@ -112,32 +189,42 @@ impl DynoStore {
         let ingress_s =
             self.wan.transfer_s(ctx.client_site, self.gateway_site, len, ctx.flows);
 
-        let (placement, encode_s, encode_wall_s, disperse_s, stored_bytes) = match policy {
-            ResiliencePolicy::Regular => {
-                let target = self.placer.select_one(&self.registry.infos(), len)?;
-                let container = self.registry.get(target.id)?;
-                let key = object_key(&hash, len);
-                let dev_s = container.put(&key, data)?.sim_s;
-                let net_s =
-                    self.wan.transfer_s(self.gateway_site, container.site, len, 1);
-                (
-                    ObjectPlacement::Single { container: target.id },
-                    0.0,
-                    0.0,
-                    net_s + dev_s,
-                    len,
-                )
-            }
-            ResiliencePolicy::Fixed(cfg) => {
-                self.disperse(data, &hash, cfg, None)?
-            }
-            ResiliencePolicy::Dynamic { k, target_loss } => {
-                let chunk_size = (len / k as u64).max(1);
-                let choice =
-                    select_dynamic(&self.registry.infos(), chunk_size, k, target_loss)?;
-                self.disperse(data, &hash, choice.config, Some(choice.containers))?
-            }
-        };
+        let (placement, encode_s, encode_wall_s, disperse_s, stored_bytes, chunk_io) =
+            match policy {
+                ResiliencePolicy::Regular => {
+                    let target = self.placer.select_one(&self.registry.infos(), len)?;
+                    let channel = self.registry.get(target.id)?;
+                    let key = object_key(&hash, len);
+                    let t0 = now_ns();
+                    let dev_s = channel.put(&key, data)?.sim_s;
+                    let wall_s = (now_ns() - t0) as f64 / 1e9;
+                    let net_s =
+                        self.wan.transfer_s(self.gateway_site, channel.site(), len, 1);
+                    let chunk_io = vec![ChunkIoReport {
+                        index: 0,
+                        container: target.id,
+                        transport: channel.transport(),
+                        ok: true,
+                        sim_s: net_s + dev_s,
+                        wall_s,
+                    }];
+                    (
+                        ObjectPlacement::Single { container: target.id },
+                        0.0,
+                        0.0,
+                        net_s + dev_s,
+                        len,
+                        chunk_io,
+                    )
+                }
+                ResiliencePolicy::Fixed(cfg) => self.disperse(data, &hash, cfg, None)?,
+                ResiliencePolicy::Dynamic { k, target_loss } => {
+                    let chunk_size = (len / k as u64).max(1);
+                    let choice =
+                        select_dynamic(&self.registry.infos(), chunk_size, k, target_loss)?;
+                    self.disperse(data, &hash, choice.config, Some(choice.containers))?
+                }
+            };
 
         // Metadata commit through Paxos (strong consistency, §IV-B).
         let t0 = now_ns();
@@ -170,6 +257,7 @@ impl DynoStore {
             meta_s,
             stored_bytes,
             backend: self.backend_name(),
+            chunk_io,
         })
     }
 
@@ -183,7 +271,7 @@ impl DynoStore {
         hash: &[u8; 32],
         cfg: ErasureConfig,
         pinned: Option<Vec<u32>>,
-    ) -> Result<(ObjectPlacement, f64, f64, f64, u64)> {
+    ) -> Result<(ObjectPlacement, f64, f64, f64, u64, Vec<ChunkIoReport>)> {
         let len = data.len() as u64;
         let codec = self.codec(cfg)?;
         let chunk_size = codec.chunk_len(data.len()) as u64;
@@ -212,24 +300,38 @@ impl DynoStore {
         let encode_wall_s = (now_ns() - t0) as f64 / 1e9;
         let encode_s = data.len() as f64 / GATEWAY_CODING_BW;
 
-        // Upload chunk i to container D[i] (line 10). The n transfers
-        // leave the gateway concurrently and share its uplink.
+        // Upload chunk i to container D[i] (line 10), all n transfers
+        // dispatched concurrently through the container channels; they
+        // leave the gateway together and share its uplink.
+        let mut jobs = Vec::with_capacity(cfg.n);
+        for (chunk, &cid) in chunks.into_iter().zip(&targets) {
+            let channel = self.registry.get(cid)?;
+            let key = chunk_key(hash, len, chunk.header.index);
+            jobs.push(ChunkJob { index: chunk.header.index, channel, key, data: Some(chunk.packed) });
+        }
         let mut times = Vec::with_capacity(cfg.n);
         let mut stored = 0u64;
         let mut placed = Vec::with_capacity(cfg.n);
-        for (chunk, &cid) in chunks.iter().zip(&targets) {
-            let container = self.registry.get(cid)?;
-            let key = chunk_key(hash, len, chunk.header.index);
-            let dev_s = container.put(&key, &chunk.packed)?.sim_s;
+        let mut chunk_io = Vec::with_capacity(cfg.n);
+        for xfer in self.dispatch_chunk_io(jobs)? {
+            let (_, dev_s) = xfer.res?;
             let net_s = self.wan.transfer_s(
                 self.gateway_site,
-                container.site,
-                chunk.wire_len() as u64,
+                xfer.site,
+                xfer.wire_len as u64,
                 cfg.n as u32,
             );
             times.push(net_s + dev_s);
-            stored += chunk.wire_len() as u64;
-            placed.push((chunk.header.index, cid));
+            stored += xfer.wire_len as u64;
+            placed.push((xfer.index, xfer.cid));
+            chunk_io.push(ChunkIoReport {
+                index: xfer.index,
+                container: xfer.cid,
+                transport: xfer.transport,
+                ok: true,
+                sim_s: net_s + dev_s,
+                wall_s: xfer.wall_s,
+            });
         }
         Ok((
             ObjectPlacement::Erasure { n: cfg.n, k: cfg.k, chunks: placed },
@@ -237,6 +339,7 @@ impl DynoStore {
             encode_wall_s,
             cost::par(&times),
             stored,
+            chunk_io,
         ))
     }
 
@@ -263,75 +366,141 @@ impl DynoStore {
                 .read(|s| s.get_version(&claims.subject, collection, name, v))?,
         };
 
-        let (data, collect_s, decode_s, decode_wall_s, fetched, degraded) = match &meta.placement {
-            ObjectPlacement::Single { container } => {
-                let c = self.registry.get(*container)?;
-                let key = object_key(&meta.sha3, meta.size);
-                let out = c.get(&key)?;
-                let data = out.data.unwrap_or_default();
-                let net_s =
-                    self.wan.transfer_s(c.site, self.gateway_site, meta.size, 1);
-                // Integrity check on the regular path too (§IV-E2).
-                if sha3_256(&data) != meta.sha3 {
-                    return Err(Error::Integrity("object hash mismatch".into()));
-                }
-                (data, net_s + out.sim_s, 0.0, 0.0, 1usize, false)
-            }
-            ObjectPlacement::Erasure { n, k, chunks } => {
-                let cfg = ErasureConfig::new(*n, *k);
-                let codec = self.codec(cfg)?;
-                // Prefer the systematic data chunks (lowest indices);
-                // fall back to parity when a container is down
-                // (Algorithm 2: any k distinct chunks).
-                let mut ordered: Vec<(u8, u32)> = chunks.clone();
-                ordered.sort_by_key(|&(idx, _)| idx);
-                let mut collected: Vec<Chunk> = Vec::with_capacity(*k);
-                let mut times = Vec::with_capacity(*k);
-                let mut degraded = false;
-                for &(idx, cid) in &ordered {
-                    if collected.len() >= *k {
-                        break;
+        let (data, collect_s, decode_s, decode_wall_s, fetched, degraded, chunk_io) =
+            match &meta.placement {
+                ObjectPlacement::Single { container } => {
+                    let channel = self.registry.get(*container)?;
+                    let key = object_key(&meta.sha3, meta.size);
+                    let t0 = now_ns();
+                    let out = channel.get(&key)?;
+                    let wall_s = (now_ns() - t0) as f64 / 1e9;
+                    let data = out.data.unwrap_or_default();
+                    let net_s =
+                        self.wan.transfer_s(channel.site(), self.gateway_site, meta.size, 1);
+                    // Integrity check on the regular path too (§IV-E2).
+                    if sha3_256(&data) != meta.sha3 {
+                        return Err(Error::Integrity("object hash mismatch".into()));
                     }
-                    let container = match self.registry.get(cid) {
-                        Ok(c) if c.is_alive() => c,
-                        _ => {
-                            degraded = degraded || (idx as usize) < *k;
-                            continue;
+                    let chunk_io = vec![ChunkIoReport {
+                        index: 0,
+                        container: *container,
+                        transport: channel.transport(),
+                        ok: true,
+                        sim_s: net_s + out.sim_s,
+                        wall_s,
+                    }];
+                    (data, net_s + out.sim_s, 0.0, 0.0, 1usize, false, chunk_io)
+                }
+                ObjectPlacement::Erasure { n, k, chunks } => {
+                    let cfg = ErasureConfig::new(*n, *k);
+                    let codec = self.codec(cfg)?;
+                    // Prefer the k systematic data chunks (lowest
+                    // indices), fetched concurrently; hedge to parity in
+                    // follow-up waves when a container is dead, a
+                    // transfer fails, or a chunk comes back corrupt
+                    // (Algorithm 2: any k distinct chunks reconstruct).
+                    let mut ordered: Vec<(u8, u32)> = chunks.clone();
+                    ordered.sort_by_key(|&(idx, _)| idx);
+                    let mut collected: Vec<Chunk> = Vec::with_capacity(*k);
+                    let mut chunk_io: Vec<ChunkIoReport> = Vec::with_capacity(*k);
+                    let mut collect_s = 0.0;
+                    let mut degraded = false;
+                    let mut cursor = 0usize;
+                    while collected.len() < *k {
+                        // Next wave: as many untried chunks as still needed.
+                        let mut jobs = Vec::new();
+                        while jobs.len() < *k - collected.len() && cursor < ordered.len() {
+                            let (idx, cid) = ordered[cursor];
+                            cursor += 1;
+                            match self.registry.get(cid) {
+                                // Dispatch only to containers believed
+                                // alive (cached liveness for remote
+                                // channels): a known-dead endpoint would
+                                // stall the whole wave for its transport
+                                // timeout instead of hedging straight to
+                                // parity.
+                                Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
+                                    index: idx,
+                                    channel,
+                                    key: chunk_key(&meta.sha3, meta.size, idx),
+                                    data: None,
+                                }),
+                                skipped => {
+                                    degraded = degraded || (idx as usize) < *k;
+                                    // Skips count as failed attempts in
+                                    // the report, so the operator sees
+                                    // which container degraded the read.
+                                    chunk_io.push(ChunkIoReport {
+                                        index: idx,
+                                        container: cid,
+                                        transport: skipped
+                                            .map(|c| c.transport())
+                                            .unwrap_or("unregistered"),
+                                        ok: false,
+                                        sim_s: 0.0,
+                                        wall_s: 0.0,
+                                    });
+                                }
+                            }
                         }
-                    };
-                    let key = chunk_key(&meta.sha3, meta.size, idx);
-                    match container.get(&key) {
-                        Ok(out) => {
-                            let bytes = out.data.unwrap_or_default();
-                            let net_s = self.wan.transfer_s(
-                                container.site,
-                                self.gateway_site,
-                                bytes.len() as u64,
-                                *k as u32,
-                            );
-                            times.push(net_s + out.sim_s);
-                            collected.push(Chunk::unpack(&bytes)?);
+                        if jobs.is_empty() {
+                            return Err(Error::Unavailable(format!(
+                                "object {}: only {} of {k} required chunks reachable",
+                                meta.uuid,
+                                collected.len()
+                            )));
                         }
-                        Err(_) => {
-                            degraded = degraded || (idx as usize) < *k;
-                            continue;
+                        let mut wave_times = Vec::with_capacity(jobs.len());
+                        for xfer in self.dispatch_chunk_io(jobs)? {
+                            let fetched_s = match xfer.res {
+                                Ok((bytes, dev_s)) => {
+                                    let bytes = bytes.unwrap_or_default();
+                                    // A corrupt or foreign chunk is
+                                    // treated exactly like a dead
+                                    // container: skip it and keep
+                                    // collecting toward k.
+                                    match Chunk::unpack(&bytes) {
+                                        Ok(chunk)
+                                            if chunk.header.index == xfer.index
+                                                && chunk.header.object_hash == meta.sha3 =>
+                                        {
+                                            let net_s = self.wan.transfer_s(
+                                                xfer.site,
+                                                self.gateway_site,
+                                                bytes.len() as u64,
+                                                *k as u32,
+                                            );
+                                            wave_times.push(net_s + dev_s);
+                                            collected.push(chunk);
+                                            Some(net_s + dev_s)
+                                        }
+                                        _ => None,
+                                    }
+                                }
+                                Err(_) => None,
+                            };
+                            if fetched_s.is_none() {
+                                degraded = degraded || (xfer.index as usize) < *k;
+                            }
+                            chunk_io.push(ChunkIoReport {
+                                index: xfer.index,
+                                container: xfer.cid,
+                                transport: xfer.transport,
+                                ok: fetched_s.is_some(),
+                                sim_s: fetched_s.unwrap_or(0.0),
+                                wall_s: xfer.wall_s,
+                            });
                         }
+                        // Every hedge wave costs one more parallel round.
+                        collect_s += cost::par(&wave_times);
                     }
+                    let t0 = now_ns();
+                    let data = codec.decode(&collected)?; // verifies SHA3
+                    let decode_wall_s = (now_ns() - t0) as f64 / 1e9;
+                    let decode_s = data.len() as f64 / GATEWAY_CODING_BW;
+                    (data, collect_s, decode_s, decode_wall_s, collected.len(), degraded, chunk_io)
                 }
-                if collected.len() < *k {
-                    return Err(Error::Unavailable(format!(
-                        "object {}: only {} of {k} required chunks reachable",
-                        meta.uuid,
-                        collected.len()
-                    )));
-                }
-                let t0 = now_ns();
-                let data = codec.decode(&collected)?; // verifies SHA3
-                let decode_wall_s = (now_ns() - t0) as f64 / 1e9;
-                let decode_s = data.len() as f64 / GATEWAY_CODING_BW;
-                (data, cost::par(&times), decode_s, decode_wall_s, collected.len(), degraded)
-            }
-        };
+            };
 
         let egress_s =
             self.wan.transfer_s(self.gateway_site, ctx.client_site, meta.size, ctx.flows);
@@ -351,6 +520,7 @@ impl DynoStore {
             chunks_fetched: fetched,
             degraded,
             backend: self.backend_name(),
+            chunk_io,
         })
     }
 
@@ -430,10 +600,16 @@ impl DynoStore {
     /// Health-service repair pass (§III-B): for every object version,
     /// re-disperse chunks lost to dead containers onto healthy ones and
     /// commit the updated placement. Objects with fewer than k live
-    /// chunks are reported lost.
+    /// chunks are reported lost. Reconstruction reads and re-placement
+    /// writes both fan out concurrently over the container channels.
     pub fn repair(&self) -> Result<RepairReport> {
         let mut report = RepairReport::default();
         let objects = self.meta.read(|s| Ok(s.all_objects()))?;
+        // One active probe per container per pass (a remote probe is an
+        // HTTP round trip — never pay it per object, let alone per chunk).
+        let alive_by_id: HashMap<u32, bool> =
+            self.registry.all().iter().map(|c| (c.id(), c.probe())).collect();
+        let is_live = |cid: u32| alive_by_id.get(&cid).copied().unwrap_or(false);
         for meta in objects {
             report.scanned += 1;
             let (n, k, chunks) = match &meta.placement {
@@ -441,48 +617,111 @@ impl DynoStore {
                 ObjectPlacement::Single { container } => {
                     // Regular objects on a dead container are simply lost
                     // (the paper's motivation for the resilience policy).
-                    if self.registry.get(*container).map(|c| c.is_alive()).unwrap_or(false) {
+                    if is_live(*container) {
                         continue;
                     }
                     report.lost += 1;
                     continue;
                 }
             };
-            let live: Vec<(u8, u32)> = chunks
-                .iter()
-                .filter(|&&(_, cid)| {
-                    self.registry.get(cid).map(|c| c.is_alive()).unwrap_or(false)
-                })
-                .copied()
-                .collect();
-            if live.len() == chunks.len() {
-                continue; // fully healthy
+            let live: Vec<(u8, u32)> =
+                chunks.iter().filter(|&&(_, cid)| is_live(cid)).copied().collect();
+            // Fully healthy means all n chunk slots are placed AND live —
+            // a previously committed partial placement (a re-placement
+            // write failed mid-repair) must be topped back up to n.
+            if live.len() == chunks.len() && chunks.len() == n {
+                continue;
             }
             if live.len() < k {
                 report.lost += 1;
                 continue;
             }
-            // Reconstruct and re-place the missing chunk indices.
+            // Reconstruct from any k live chunks, fetched concurrently;
+            // hedge past sources that fail or return corrupt bytes —
+            // and remember those, so the corruption gets healed below
+            // instead of lingering in the committed placement.
             let cfg = ErasureConfig::new(n, k);
             let codec = self.codec(cfg)?;
             let mut collected = Vec::with_capacity(k);
-            for &(idx, cid) in live.iter().take(k) {
-                let container = self.registry.get(cid)?;
-                let out = container.get(&chunk_key(&meta.sha3, meta.size, idx))?;
-                collected.push(Chunk::unpack(&out.data.unwrap_or_default())?);
+            let mut bad_live: Vec<(u8, u32)> = Vec::new();
+            let mut cursor = 0usize;
+            while collected.len() < k {
+                let mut jobs = Vec::new();
+                while jobs.len() < k - collected.len() && cursor < live.len() {
+                    let (idx, cid) = live[cursor];
+                    cursor += 1;
+                    if let Ok(channel) = self.registry.get(cid) {
+                        jobs.push(ChunkJob {
+                            index: idx,
+                            channel,
+                            key: chunk_key(&meta.sha3, meta.size, idx),
+                            data: None,
+                        });
+                    }
+                }
+                if jobs.is_empty() {
+                    break;
+                }
+                for xfer in self.dispatch_chunk_io(jobs)? {
+                    let mut valid = false;
+                    if let Ok((Some(bytes), _)) = &xfer.res {
+                        if let Ok(chunk) = Chunk::unpack(bytes) {
+                            if chunk.header.index == xfer.index
+                                && chunk.header.object_hash == meta.sha3
+                            {
+                                collected.push(chunk);
+                                valid = true;
+                            }
+                        }
+                    }
+                    if !valid {
+                        bad_live.push((xfer.index, xfer.cid));
+                    }
+                }
+            }
+            if collected.len() < k {
+                report.lost += 1;
+                continue;
             }
             let data = codec.decode(&collected)?;
-            let all_chunks = codec.encode(&data)?;
+            let mut all_chunks = codec.encode(&data)?;
+            let mut new_placement = live.clone();
+
+            // Heal corrupt-but-live chunks in place: rewrite the correct
+            // bytes onto the container that served garbage. (An object
+            // whose containers are ALL live is skipped by the early-exit
+            // above — corruption is healed when a repair pass touches
+            // the object, not by a full scrub.)
+            if !bad_live.is_empty() {
+                let mut jobs = Vec::with_capacity(bad_live.len());
+                for &(idx, cid) in &bad_live {
+                    if let Ok(channel) = self.registry.get(cid) {
+                        jobs.push(ChunkJob {
+                            index: idx,
+                            channel,
+                            key: chunk_key(&meta.sha3, meta.size, idx),
+                            data: Some(std::mem::take(&mut all_chunks[idx as usize].packed)),
+                        });
+                    }
+                }
+                for xfer in self.dispatch_chunk_io(jobs)? {
+                    match xfer.res {
+                        Ok(_) => report.chunks_moved += 1,
+                        // Rewrite failed: drop the stale entry so the
+                        // next pass treats the chunk as missing.
+                        Err(_) => new_placement
+                            .retain(|&(i, c)| !(i == xfer.index && c == xfer.cid)),
+                    }
+                }
+            }
 
             let live_ids: HashSet<u32> = live.iter().map(|&(_, c)| c).collect();
-            let missing: Vec<u8> = chunks
-                .iter()
-                .filter(|&&(_, cid)| !live_ids.contains(&cid) || false)
-                .filter(|&&(_, cid)| {
-                    !self.registry.get(cid).map(|c| c.is_alive()).unwrap_or(false)
-                })
-                .map(|&(idx, _)| idx)
-                .collect();
+            // Every chunk index not live right now needs (re-)placement:
+            // chunks whose container died AND slots missing from the
+            // committed placement entirely.
+            let placed_idx: HashSet<u8> = live.iter().map(|&(i, _)| i).collect();
+            let missing: Vec<u8> =
+                (0..n as u8).filter(|i| !placed_idx.contains(i)).collect();
 
             // Healthy containers not already holding a chunk of this
             // object, ranked by the load balancer.
@@ -495,13 +734,26 @@ impl DynoStore {
             let chunk_size = codec.chunk_len(data.len()) as u64;
             let replacements = self.placer.select(&infos, chunk_size, missing.len())?;
 
-            let mut new_placement = live.clone();
+            let mut jobs = Vec::with_capacity(missing.len());
             for (idx, target) in missing.iter().zip(&replacements) {
-                let container = self.registry.get(target.id)?;
-                let chunk = &all_chunks[*idx as usize];
-                container.put(&chunk_key(&meta.sha3, meta.size, *idx), &chunk.packed)?;
-                new_placement.push((*idx, target.id));
-                report.chunks_moved += 1;
+                let channel = self.registry.get(target.id)?;
+                let packed = std::mem::take(&mut all_chunks[*idx as usize].packed);
+                jobs.push(ChunkJob {
+                    index: *idx,
+                    channel,
+                    key: chunk_key(&meta.sha3, meta.size, *idx),
+                    data: Some(packed),
+                });
+            }
+            for xfer in self.dispatch_chunk_io(jobs)? {
+                // A failed re-placement write must not abort the whole
+                // pass (transport failure is an expected event on this
+                // plane): commit only the chunks that landed; the next
+                // pass retries the rest as still-missing.
+                if xfer.res.is_ok() {
+                    new_placement.push((xfer.index, xfer.cid));
+                    report.chunks_moved += 1;
+                }
             }
             new_placement.sort_by_key(|&(idx, _)| idx);
             let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
@@ -517,9 +769,15 @@ impl DynoStore {
         Ok(report)
     }
 
-    /// Direct container access for a chunk (tests, FaaS workers reading
-    /// near data).
+    /// Direct in-process container access for a chunk (tests, FaaS
+    /// workers reading near data). Errors for remote containers — use
+    /// [`DynoStore::channel_of`] to reach those.
     pub fn container_of(&self, id: u32) -> Result<Arc<DataContainer>> {
+        self.registry.get_local(id)
+    }
+
+    /// The dispatch channel for a container, whatever its transport.
+    pub fn channel_of(&self, id: u32) -> Result<Arc<dyn ContainerChannel>> {
         self.registry.get(id)
     }
 }
@@ -652,6 +910,69 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_chunk_skipped_like_dead_container() {
+        let (ds, token) = deployment(12);
+        let object = data(90_000, 21);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        // Overwrite data chunk 0's stored bytes with garbage.
+        let (idx, cid) = match &meta.placement {
+            ObjectPlacement::Erasure { chunks, .. } => {
+                *chunks.iter().find(|&&(i, _)| i == 0).unwrap()
+            }
+            _ => unreachable!(),
+        };
+        let key = chunk_key(&meta.sha3, meta.size, idx);
+        ds.container_of(cid).unwrap().put(&key, b"garbage, not a chunk").unwrap();
+        // The pull must hedge to parity instead of aborting on unpack.
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+        assert!(pull.degraded, "corruption is a degraded read");
+        assert!(pull.chunk_io.iter().any(|c| !c.ok), "failed attempt recorded");
+        assert_eq!(pull.chunks_fetched, 7);
+    }
+
+    #[test]
+    fn corruption_beyond_parity_budget_is_unavailable() {
+        let (ds, token) = deployment(12);
+        let object = data(60_000, 22);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        let chunks = match &meta.placement {
+            ObjectPlacement::Erasure { chunks, .. } => chunks.clone(),
+            _ => unreachable!(),
+        };
+        // Corrupt 4 chunks of a (10,7) object: only 6 clean ones remain.
+        for &(idx, cid) in chunks.iter().take(4) {
+            let key = chunk_key(&meta.sha3, meta.size, idx);
+            ds.container_of(cid).unwrap().put(&key, b"junk").unwrap();
+        }
+        assert!(matches!(
+            ds.pull(&token, "/UserA", "obj", PullOpts::default()),
+            Err(Error::Unavailable(_))
+        ));
+    }
+
+    #[test]
+    fn reports_carry_per_chunk_transport_labels() {
+        let (ds, token) = deployment(12);
+        let object = data(50_000, 23);
+        let push = ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        assert_eq!(push.chunk_io.len(), 10, "one entry per uploaded chunk");
+        assert!(push
+            .chunk_io
+            .iter()
+            .all(|c| c.ok && c.transport == "local" && c.sim_s > 0.0));
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.chunk_io.len(), 7);
+        assert!(pull.chunk_io.iter().all(|c| c.ok && c.transport == "local"));
+        // Regular-policy objects report a single whole-object transfer.
+        let opts = PushOpts { policy: Some(ResiliencePolicy::Regular), ..Default::default() };
+        let push = ds.push(&token, "/UserA", "reg", &object, opts).unwrap();
+        assert_eq!(push.chunk_io.len(), 1);
+    }
+
+    #[test]
     fn dynamic_policy_places_by_reliability() {
         let (ds, token) = deployment(12);
         let opts = PushOpts {
@@ -736,6 +1057,35 @@ mod tests {
         }
         let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
         assert_eq!(pull.data, object);
+    }
+
+    #[test]
+    fn repair_heals_corrupt_chunk_it_encounters() {
+        let (ds, token) = deployment(12);
+        let object = data(70_000, 24);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+        let chunks = match &meta.placement {
+            ObjectPlacement::Erasure { chunks, .. } => chunks.clone(),
+            _ => unreachable!(),
+        };
+        // Corrupt data chunk 0 in place and kill the holder of chunk 9,
+        // so the repair pass touches the object and trips over the rot.
+        let (idx0, cid0) = chunks[0];
+        ds.container_of(cid0)
+            .unwrap()
+            .put(&chunk_key(&meta.sha3, meta.size, idx0), b"rot")
+            .unwrap();
+        let (_, cid9) = *chunks.iter().find(|&&(i, _)| i == 9).unwrap();
+        ds.container_of(cid9).unwrap().set_alive(false);
+
+        let report = ds.repair().unwrap();
+        assert_eq!(report.repaired, 1);
+        assert_eq!(report.chunks_moved, 2, "dead chunk re-placed + corrupt chunk healed");
+        // The healed object now pulls clean: chunk 0 is valid again.
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+        assert!(!pull.degraded, "corruption was healed in place");
     }
 
     #[test]

@@ -2,6 +2,25 @@
 
 use crate::metadata::ObjectMeta;
 
+/// One chunk transfer on the dispatch plane: which container served it,
+/// over which transport, and how long it took (simulated wide-area time
+/// and measured channel wallclock, kept separate as everywhere else).
+#[derive(Debug, Clone)]
+pub struct ChunkIoReport {
+    /// Erasure chunk index (0 for whole-object transfers).
+    pub index: u8,
+    /// Container id that served (or failed to serve) the transfer.
+    pub container: u32,
+    /// Channel transport label (`"local"`, `"http"`).
+    pub transport: &'static str,
+    /// False when the transfer failed and the pull hedged elsewhere.
+    pub ok: bool,
+    /// Simulated seconds (WAN + device) for this transfer.
+    pub sim_s: f64,
+    /// Measured wallclock of the channel operation on this host.
+    pub wall_s: f64,
+}
+
 /// Result of a push (upload) through the coordinator.
 #[derive(Debug, Clone)]
 pub struct PushReport {
@@ -25,6 +44,9 @@ pub struct PushReport {
     /// GF(2^8) backend that served the encode (`pure-rust`, `swar`,
     /// `swar-parallel`, `pjrt-pallas`).
     pub backend: &'static str,
+    /// Per-chunk dispatch detail (one entry per uploaded chunk, in
+    /// chunk-index order; a single entry for Regular-policy objects).
+    pub chunk_io: Vec<ChunkIoReport>,
 }
 
 /// Result of a pull (download) through the coordinator.
@@ -49,6 +71,9 @@ pub struct PullReport {
     pub degraded: bool,
     /// GF(2^8) backend that served the decode.
     pub backend: &'static str,
+    /// Per-chunk dispatch detail, including failed attempts the pull
+    /// hedged past (`ok = false`).
+    pub chunk_io: Vec<ChunkIoReport>,
 }
 
 /// Result of a health-repair pass (§III-B failover re-allocation).

@@ -85,6 +85,12 @@ fn metrics(store: &Arc<DynoStore>) -> HttpResponse {
 fn health(store: &Arc<DynoStore>) -> HttpResponse {
     let infos = store.registry.infos();
     let live = infos.iter().filter(|i| i.alive).count();
+    let census: Vec<(&str, Value)> = store
+        .registry
+        .transport_census()
+        .into_iter()
+        .map(|(t, n)| (t, Value::from(n)))
+        .collect();
     HttpResponse::json(
         200,
         &obj(vec![
@@ -93,6 +99,7 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
             ("live", live.into()),
             ("engine", store.engine().as_str().into()),
             ("backend", store.backend_name().into()),
+            ("transports", obj(census)),
         ]),
     )
 }
@@ -286,6 +293,7 @@ mod tests {
         assert_eq!(v.req_u64("containers").unwrap(), 12);
         assert_eq!(v.req_str("engine").unwrap(), "pure-rust");
         assert_eq!(v.req_str("backend").unwrap(), "pure-rust");
+        assert_eq!(v.get("transports").req_u64("local").unwrap(), 12);
 
         let r = client.post("/admin/repair", &[], &[]).unwrap();
         assert_eq!(r.status, 200);

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use crate::container::{ContainerId, DataContainer};
+use crate::container::{ContainerChannel, ContainerId};
 use crate::registry::Registry;
 
 /// One health sweep result.
@@ -32,31 +32,32 @@ impl<'a> HealthChecker<'a> {
         let mut report = HealthReport::default();
         for c in self.registry.all() {
             report.checked += 1;
-            if probe(&c) {
-                report.healthy.push(c.id);
+            if probe(c.as_ref()) {
+                report.healthy.push(c.id());
             } else {
-                report.unhealthy.push(c.id);
+                report.unhealthy.push(c.id());
             }
         }
         report
     }
 
     /// Containers that can serve traffic right now.
-    pub fn healthy_containers(&self) -> Vec<Arc<DataContainer>> {
+    pub fn healthy_containers(&self) -> Vec<Arc<dyn ContainerChannel>> {
         self.registry.live()
     }
 }
 
-/// Probe one container. Separated so failure-injection tests can reason
-/// about it; returns false for crashed containers.
-pub fn probe(c: &DataContainer) -> bool {
-    c.is_alive()
+/// Probe one container through its channel. Local channels check the
+/// liveness flag; remote channels re-contact their agent server, so a
+/// sweep actively refreshes the registry's view of far-away containers.
+pub fn probe(c: &dyn ContainerChannel) -> bool {
+    c.probe()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::container::MemBackend;
+    use crate::container::{DataContainer, MemBackend};
     use crate::sim::Site;
 
     fn registry_with(n: u32) -> Registry {
@@ -87,8 +88,8 @@ mod tests {
     #[test]
     fn sweep_detects_failures() {
         let r = registry_with(4);
-        r.get(1).unwrap().set_alive(false);
-        r.get(3).unwrap().set_alive(false);
+        r.get(1).unwrap().set_alive(false).unwrap();
+        r.get(3).unwrap().set_alive(false).unwrap();
         let report = HealthChecker::new(&r).sweep();
         assert_eq!(report.healthy, vec![0, 2]);
         assert_eq!(report.unhealthy, vec![1, 3]);
@@ -97,7 +98,7 @@ mod tests {
     #[test]
     fn healthy_containers_usable() {
         let r = registry_with(2);
-        r.get(0).unwrap().set_alive(false);
+        r.get(0).unwrap().set_alive(false).unwrap();
         let healthy = HealthChecker::new(&r).healthy_containers();
         assert_eq!(healthy.len(), 1);
         healthy[0].put("k", b"v").unwrap();

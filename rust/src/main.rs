@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! dynostore serve  --config cluster.json --addr 127.0.0.1:8080
+//! dynostore agent  --config agent.json   --addr 127.0.0.1:9100
 //! dynostore register --addr HOST:PORT --user UserA
 //! dynostore push   --addr HOST:PORT --token T /UserA/col/name ./file
 //! dynostore pull   --addr HOST:PORT --token T /UserA/col/name ./out
@@ -62,6 +63,7 @@ fn run(args: &[String]) -> Result<(), String> {
     let (flags, pos) = parse_args(&args[1..]);
     match cmd.as_str() {
         "serve" => serve(&flags),
+        "agent" => agent(&flags),
         "register" => register(&flags),
         "push" | "pull" | "exists" | "evict" => object_op(cmd, &flags, &pos),
         "admin" => admin(&flags, &pos),
@@ -80,6 +82,9 @@ fn print_usage() {
          commands:\n\
          \x20 serve    --config FILE [--addr 127.0.0.1:8080] [--workers 8]\n\
          \x20          [--engine pure-rust|swar|swar-parallel|pjrt]\n\
+         \x20 agent    --config FILE [--addr 127.0.0.1:9100] [--workers 4]\n\
+         \x20          (container agent: serves one data container over HTTP;\n\
+         \x20           gateways attach it via an \"endpoint\" container entry)\n\
          \x20 register --addr HOST:PORT --user NAME\n\
          \x20 push     --addr HOST:PORT --token T PATH FILE\n\
          \x20 pull     --addr HOST:PORT --token T PATH [OUT]\n\
@@ -121,6 +126,32 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
         store.backend_name()
     );
     println!("listening on {}", server.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Run a standalone container agent: one data container, served over
+/// HTTP for remote gateways (paper §III-A's "install the DynoStore
+/// agent and provide a configuration file").
+fn agent(flags: &HashMap<String, String>) -> Result<(), String> {
+    let path = need(flags, "config")?;
+    let config = dynostore::config::AgentConfig::from_file(path).map_err(|e| e.to_string())?;
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:9100".into());
+    let workers: usize = flags.get("workers").and_then(|w| w.parse().ok()).unwrap_or(4);
+    let container = config.build().map_err(|e| e.to_string())?;
+    let name = container.name.clone();
+    let server = dynostore::container::ContainerServer::serve(container, &addr, workers)
+        .map_err(|e| e.to_string())?;
+    dynostore::log_info!(
+        "dynostore container agent '{}' (id {}) on {} ({:?} backend)",
+        name,
+        config.id,
+        server.addr(),
+        config.backend
+    );
+    println!("agent '{name}' listening on {}", server.addr());
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

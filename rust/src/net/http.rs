@@ -200,15 +200,43 @@ fn parse_request(stream: TcpStream) -> Result<HttpRequest> {
     Ok(HttpRequest { method, path, headers, body })
 }
 
-/// Blocking HTTP client for the CLI and tests.
+/// Blocking HTTP client for the CLI, tests, and remote container
+/// channels.
 pub struct HttpClient {
     base: String,
+    /// Connect/read/write timeout; `None` blocks indefinitely (CLI use).
+    timeout: Option<std::time::Duration>,
 }
 
 impl HttpClient {
     /// `base` like `127.0.0.1:8080`.
     pub fn new(base: &str) -> Self {
-        HttpClient { base: base.to_string() }
+        HttpClient { base: base.to_string(), timeout: None }
+    }
+
+    /// A client whose connects, reads, and writes all fail after
+    /// `timeout` — so a dead endpoint surfaces as an error instead of a
+    /// hung dispatch thread.
+    pub fn with_timeout(base: &str, timeout: std::time::Duration) -> Self {
+        HttpClient { base: base.to_string(), timeout: Some(timeout) }
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        match self.timeout {
+            None => Ok(TcpStream::connect(&self.base)?),
+            Some(t) => {
+                use std::net::ToSocketAddrs;
+                let addr = self
+                    .base
+                    .to_socket_addrs()?
+                    .next()
+                    .ok_or_else(|| Error::Net(format!("cannot resolve '{}'", self.base)))?;
+                let stream = TcpStream::connect_timeout(&addr, t)?;
+                stream.set_read_timeout(Some(t))?;
+                stream.set_write_timeout(Some(t))?;
+                Ok(stream)
+            }
+        }
     }
 
     pub fn request(
@@ -218,7 +246,7 @@ impl HttpClient {
         headers: &[(&str, &str)],
         body: &[u8],
     ) -> Result<HttpResponse> {
-        let mut stream = TcpStream::connect(&self.base)?;
+        let mut stream = self.connect()?;
         let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.base);
         for (k, v) in headers {
             head.push_str(&format!("{k}: {v}\r\n"));
@@ -343,6 +371,27 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn timeout_client_still_roundtrips() {
+        let server = echo_server();
+        let client = HttpClient::with_timeout(
+            &server.addr().to_string(),
+            std::time::Duration::from_secs(5),
+        );
+        let resp = client.get("/hello", &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"world");
+    }
+
+    #[test]
+    fn timeout_client_fails_fast_on_dead_endpoint() {
+        let client =
+            HttpClient::with_timeout("127.0.0.1:1", std::time::Duration::from_millis(500));
+        let t0 = std::time::Instant::now();
+        assert!(client.get("/x", &[]).is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
     }
 
     #[test]

@@ -1,17 +1,23 @@
 //! Container registry (paper §III-B): tracks all active data containers;
 //! administrators add/remove containers dynamically and the registry
 //! reflects the change in real time.
+//!
+//! Since the transport refactor the registry is the system's *dispatch
+//! plane*: it holds [`ContainerChannel`]s — in-process containers behind
+//! [`LocalChannel`], remote agent servers behind
+//! [`crate::container::RemoteChannel`] — and the coordinator's chunk
+//! I/O fans out over whatever mix is registered.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 
-use crate::container::{ContainerId, ContainerInfo, DataContainer};
+use crate::container::{ContainerChannel, ContainerId, ContainerInfo, DataContainer, LocalChannel};
 use crate::{Error, Result};
 
-/// Thread-safe registry of deployed data containers.
+/// Thread-safe registry of deployed data containers, keyed by id.
 #[derive(Default)]
 pub struct Registry {
-    containers: RwLock<BTreeMap<ContainerId, Arc<DataContainer>>>,
+    channels: RwLock<BTreeMap<ContainerId, Arc<dyn ContainerChannel>>>,
 }
 
 impl Registry {
@@ -19,27 +25,35 @@ impl Registry {
         Registry::default()
     }
 
-    /// Register a container; errors on duplicate id.
+    /// Register an in-process container (wrapped in a [`LocalChannel`]);
+    /// errors on duplicate id.
     pub fn add(&self, c: Arc<DataContainer>) -> Result<()> {
-        let mut map = self.containers.write().unwrap();
-        if map.contains_key(&c.id) {
-            return Err(Error::Invalid(format!("container id {} already registered", c.id)));
+        self.add_channel(Arc::new(LocalChannel::new(c)))
+    }
+
+    /// Register a container behind any transport; errors on duplicate id.
+    pub fn add_channel(&self, ch: Arc<dyn ContainerChannel>) -> Result<()> {
+        let mut map = self.channels.write().unwrap();
+        let id = ch.id();
+        if map.contains_key(&id) {
+            return Err(Error::Invalid(format!("container id {id} already registered")));
         }
-        map.insert(c.id, c);
+        map.insert(id, ch);
         Ok(())
     }
 
-    /// Deregister (dynamic removal, §III-B). Returns the container.
-    pub fn remove(&self, id: ContainerId) -> Result<Arc<DataContainer>> {
-        self.containers
+    /// Deregister (dynamic removal, §III-B). Returns the channel.
+    pub fn remove(&self, id: ContainerId) -> Result<Arc<dyn ContainerChannel>> {
+        self.channels
             .write()
             .unwrap()
             .remove(&id)
             .ok_or_else(|| Error::NotFound(format!("container {id}")))
     }
 
-    pub fn get(&self, id: ContainerId) -> Result<Arc<DataContainer>> {
-        self.containers
+    /// The channel for container `id`.
+    pub fn get(&self, id: ContainerId) -> Result<Arc<dyn ContainerChannel>> {
+        self.channels
             .read()
             .unwrap()
             .get(&id)
@@ -47,17 +61,25 @@ impl Registry {
             .ok_or_else(|| Error::NotFound(format!("container {id}")))
     }
 
+    /// The in-process container for `id`; errors when `id` is served by
+    /// a remote transport (tests and FaaS workers need local access).
+    pub fn get_local(&self, id: ContainerId) -> Result<Arc<DataContainer>> {
+        self.get(id)?.as_local().ok_or_else(|| {
+            Error::Invalid(format!("container {id} is remote (no in-process handle)"))
+        })
+    }
+
     pub fn len(&self) -> usize {
-        self.containers.read().unwrap().len()
+        self.channels.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// All registered containers (stable id order).
-    pub fn all(&self) -> Vec<Arc<DataContainer>> {
-        self.containers.read().unwrap().values().cloned().collect()
+    /// All registered channels (stable id order).
+    pub fn all(&self) -> Vec<Arc<dyn ContainerChannel>> {
+        self.channels.read().unwrap().values().cloned().collect()
     }
 
     /// Monitor snapshots of every container (placement input).
@@ -65,9 +87,19 @@ impl Registry {
         self.all().iter().map(|c| c.info()).collect()
     }
 
-    /// Live containers only.
-    pub fn live(&self) -> Vec<Arc<DataContainer>> {
+    /// Live containers only (last observed liveness).
+    pub fn live(&self) -> Vec<Arc<dyn ContainerChannel>> {
         self.all().into_iter().filter(|c| c.is_alive()).collect()
+    }
+
+    /// How many containers each transport serves (`local` → n, …) —
+    /// surfaced by the gateway's `/health`.
+    pub fn transport_census(&self) -> BTreeMap<&'static str, usize> {
+        let mut census = BTreeMap::new();
+        for c in self.all() {
+            *census.entry(c.transport()).or_insert(0) += 1;
+        }
+        census
     }
 }
 
@@ -93,7 +125,7 @@ mod tests {
         r.add(dc(1)).unwrap();
         r.add(dc(2)).unwrap();
         assert_eq!(r.len(), 2);
-        assert_eq!(r.get(1).unwrap().name, "dc1");
+        assert_eq!(r.get(1).unwrap().name(), "dc1");
         r.remove(1).unwrap();
         assert!(r.get(1).is_err());
         assert_eq!(r.len(), 1);
@@ -111,10 +143,10 @@ mod tests {
         let r = Registry::new();
         r.add(dc(1)).unwrap();
         r.add(dc(2)).unwrap();
-        r.get(2).unwrap().set_alive(false);
+        r.get(2).unwrap().set_alive(false).unwrap();
         let live = r.live();
         assert_eq!(live.len(), 1);
-        assert_eq!(live[0].id, 1);
+        assert_eq!(live[0].id(), 1);
         // infos still report everything, flagged.
         let infos = r.infos();
         assert_eq!(infos.len(), 2);
@@ -125,5 +157,14 @@ mod tests {
     fn remove_missing_errors() {
         let r = Registry::new();
         assert!(matches!(r.remove(9), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn local_channels_expose_the_container() {
+        let r = Registry::new();
+        r.add(dc(1)).unwrap();
+        let local = r.get_local(1).unwrap();
+        assert_eq!(local.id, 1);
+        assert_eq!(r.transport_census().get("local"), Some(&1));
     }
 }

@@ -1,0 +1,82 @@
+//! Test harness for the remote transport: spin up real container agent
+//! servers on localhost ephemeral ports and hand back the connected
+//! [`RemoteChannel`], so integration tests exercise the exact HTTP path
+//! a wide-area deployment uses.
+
+use std::sync::Arc;
+
+use crate::container::{
+    deploy_containers, AgentSpec, ContainerServer, DataContainer, RemoteChannel,
+};
+use crate::Result;
+
+/// A running localhost agent: the HTTP server, the container it fronts,
+/// and a channel already connected to it.
+pub struct SpawnedAgent {
+    pub server: ContainerServer,
+    pub container: Arc<DataContainer>,
+    pub channel: Arc<RemoteChannel>,
+}
+
+impl SpawnedAgent {
+    /// `host:port` the agent listens on.
+    pub fn endpoint(&self) -> String {
+        self.server.addr().to_string()
+    }
+
+    /// Simulate an agent crash: stop the HTTP server so channels see
+    /// refused connections (the harshest failure mode — no 503, no
+    /// answer at all).
+    pub fn crash(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+/// Deploy `spec` as container `id`, serve it on an ephemeral localhost
+/// port, and connect a [`RemoteChannel`] to it.
+pub fn spawn_agent(spec: AgentSpec, id: u32) -> Result<SpawnedAgent> {
+    let container = deploy_containers(&[spec], 1, id)
+        .containers
+        .into_iter()
+        .next()
+        .expect("one spec yields one container");
+    let server = ContainerServer::serve(Arc::clone(&container), "127.0.0.1:0", 2)?;
+    let channel = RemoteChannel::connect(&server.addr().to_string())?;
+    Ok(SpawnedAgent { server, container, channel })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::ContainerChannel;
+    use crate::sim::{DeviceKind, Site};
+
+    #[test]
+    fn spawned_agent_roundtrips_through_http() {
+        let agent = spawn_agent(
+            AgentSpec::new("dc-test", Site::ChameleonUc, DeviceKind::ChameleonLocal),
+            7,
+        )
+        .unwrap();
+        assert_eq!(agent.channel.id(), 7);
+        assert_eq!(agent.channel.transport(), "http");
+        agent.channel.put("k", b"v").unwrap();
+        // The bytes really live in the container behind the server.
+        assert_eq!(agent.container.get("k").unwrap().data.unwrap(), b"v");
+        assert_eq!(agent.channel.get("k").unwrap().data.unwrap(), b"v");
+    }
+
+    #[test]
+    fn crashed_agent_reads_as_dead() {
+        let mut agent = spawn_agent(
+            AgentSpec::new("dc-crash", Site::ChameleonUc, DeviceKind::ChameleonLocal),
+            8,
+        )
+        .unwrap();
+        assert!(agent.channel.probe());
+        agent.crash();
+        assert!(!agent.channel.probe());
+        assert!(!agent.channel.is_alive());
+        assert!(agent.channel.get("k").is_err());
+    }
+}

@@ -5,6 +5,9 @@
 //! the coordinator invariants (routing, placement fairness, erasure
 //! roundtrips, metadata consistency) in unit and integration tests.
 //!
+//! The [`agents`] submodule spins up real container agent servers on
+//! localhost for transport-plane integration tests.
+//!
 //! ```no_run
 //! // (no_run: rustdoc test binaries miss the xla_extension rpath)
 //! use dynostore::testkit::{forall, prop_assert, Gen};
@@ -16,6 +19,10 @@
 //!     prop_assert(ys == xs, "double reverse is identity")
 //! });
 //! ```
+
+pub mod agents;
+
+pub use agents::{spawn_agent, SpawnedAgent};
 
 use crate::util::Rng;
 

@@ -288,10 +288,10 @@ fn property_storage_accounting_balances() {
         ds.evict(&token, "/UserA", &name).unwrap();
     }
     for c in ds.registry.all() {
-        let stats = c.backend_stats();
+        let info = c.info();
         prop_assert(
-            stats.fs_total == stats.fs_avail,
-            &format!("container {} leaked bytes", c.name),
+            info.fs_total == info.fs_avail,
+            &format!("container {} leaked bytes", info.name),
         )
         .unwrap();
     }

@@ -1,0 +1,197 @@
+//! Transport-plane integration: remote HTTP container agents serving
+//! real chunk traffic inside a deployment, channel parity between the
+//! local and remote transports, and concurrent clients hammering the
+//! dispatch plane.
+
+use std::sync::Arc;
+
+use dynostore::container::{
+    deploy_containers, AgentSpec, ContainerChannel, LocalChannel,
+};
+use dynostore::coordinator::{DynoStore, PullOpts, PushOpts};
+use dynostore::crypto::sha3_256;
+use dynostore::metadata::ObjectPlacement;
+use dynostore::sim::{DeviceKind, Site};
+use dynostore::testkit::spawn_agent;
+use dynostore::Error;
+
+fn one_container(name: &str, id: u32) -> std::sync::Arc<dynostore::container::DataContainer> {
+    deploy_containers(
+        &[AgentSpec::new(name, Site::ChameleonTacc, DeviceKind::ChameleonLocal)],
+        1,
+        id,
+    )
+    .containers
+    .into_iter()
+    .next()
+    .unwrap()
+}
+
+/// Satellite requirement: a `RemoteChannel` agent round-trips
+/// put/get/exists/delete identically to a `LocalChannel`.
+#[test]
+fn remote_channel_matches_local_channel() {
+    let local = LocalChannel::new(one_container("dc-local", 1));
+    let agent = spawn_agent(
+        AgentSpec::new("dc-remote", Site::ChameleonTacc, DeviceKind::ChameleonLocal),
+        2,
+    )
+    .unwrap();
+    let remote = agent.channel.clone();
+    let payload: Vec<u8> = (0..60_000u32).map(|i| (i * 13 % 251) as u8).collect();
+
+    let channels: [&dyn ContainerChannel; 2] = [&local, remote.as_ref()];
+    for ch in channels {
+        // Keys with separators and spaces must survive both transports.
+        for key in ["chk-ab12cd34-60000-3", "nested/key with spaces:1"] {
+            assert!(!ch.exists(key).unwrap(), "{}", ch.transport());
+            let put = ch.put(key, &payload).unwrap();
+            assert!(put.sim_s > 0.0);
+            assert!(ch.exists(key).unwrap());
+            let got = ch.get(key).unwrap();
+            assert_eq!(got.data.unwrap(), payload, "{}", ch.transport());
+            ch.delete(key).unwrap();
+            assert!(!ch.exists(key).unwrap());
+            assert!(matches!(ch.get(key), Err(Error::NotFound(_))));
+            assert!(matches!(ch.delete(key), Err(Error::NotFound(_))));
+        }
+        assert!(ch.is_alive() && ch.probe());
+    }
+    // Identity travels the wire too.
+    assert_eq!(remote.id(), 2);
+    assert_eq!(remote.name(), "dc-remote");
+    assert_eq!(remote.site(), Site::ChameleonTacc);
+    assert_eq!(remote.transport(), "http");
+    let info = remote.info();
+    assert!(info.alive && info.fs_total > 0);
+}
+
+/// Acceptance criterion: a testkit-spawned HTTP agent serves a container
+/// in an end-to-end push → kill-container → degraded-pull flow that
+/// still returns the object with `degraded = true`.
+#[test]
+fn remote_agent_end_to_end_degraded_pull() {
+    let ds = Arc::new(DynoStore::builder().build());
+    // 9 local containers + 1 remote agent = exactly n = 10 under the
+    // default (10,7) policy, so every container holds one chunk. The
+    // remote gets the most headroom → the placer ranks it first → it
+    // holds systematic data chunk 0.
+    let specs: Vec<AgentSpec> = (0..9)
+        .map(|i| {
+            AgentSpec::new(format!("dc{i}"), Site::ChameleonUc, DeviceKind::ChameleonLocal)
+                .mem(64 << 20)
+                .fs(1 << 32)
+        })
+        .collect();
+    for c in deploy_containers(&specs, 9, 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    let mut agent = spawn_agent(
+        AgentSpec::new("dc-remote", Site::AwsVirginia, DeviceKind::ChameleonLocal)
+            .mem(1 << 30)
+            .fs(1 << 40),
+        99,
+    )
+    .unwrap();
+    ds.add_channel(agent.channel.clone()).unwrap();
+    assert_eq!(ds.registry.len(), 10);
+    assert_eq!(ds.registry.transport_census().get("http"), Some(&1));
+
+    let token = ds.register_user("UserA").unwrap();
+    let object: Vec<u8> = (0..120_000u32).map(|i| (i * 31 % 253) as u8).collect();
+    let push = ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+    assert!(
+        push.chunk_io.iter().any(|c| c.transport == "http" && c.ok),
+        "the remote agent served a chunk upload: {:?}",
+        push.chunk_io
+    );
+    let holder0 = match &push.meta.placement {
+        ObjectPlacement::Erasure { chunks, .. } => {
+            chunks.iter().find(|&&(i, _)| i == 0).unwrap().1
+        }
+        other => panic!("expected erasure placement, got {other:?}"),
+    };
+    assert_eq!(holder0, 99, "remote agent holds data chunk 0");
+
+    // Healthy pull crosses HTTP for chunk 0.
+    let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, object);
+    assert!(!pull.degraded);
+    assert!(pull.chunk_io.iter().any(|c| c.transport == "http" && c.ok));
+
+    // Kill the agent outright (server gone, connections refused): the
+    // pull must hedge to parity and still return the object, degraded.
+    agent.crash();
+    let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, object);
+    assert!(pull.degraded, "data chunk 0 was unreachable");
+    assert!(
+        pull.chunk_io.iter().any(|c| c.transport == "http" && !c.ok),
+        "failed remote attempt recorded: {:?}",
+        pull.chunk_io
+    );
+    assert_eq!(pull.chunks_fetched, 7);
+}
+
+/// Satellite requirement: many threads through one `DynoStore` against
+/// ≥ 8 containers — no deadlock, hash-verified round-trips.
+#[test]
+fn concurrent_push_pull_stress() {
+    let ds = Arc::new(DynoStore::builder().io_workers(6).build());
+    let specs: Vec<AgentSpec> = (0..12)
+        .map(|i| {
+            AgentSpec::new(format!("dc{i}"), Site::ChameleonTacc, DeviceKind::ChameleonLocal)
+        })
+        .collect();
+    for c in deploy_containers(&specs, 12, 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    let token = ds.register_user("UserA").unwrap();
+
+    let threads = 8;
+    let per_thread = 4;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let ds = Arc::clone(&ds);
+            let token = token.clone();
+            std::thread::spawn(move || {
+                for j in 0..per_thread {
+                    let len = 20_000 + 1_000 * (t * per_thread + j);
+                    let data = dynostore::util::Rng::new((t * 100 + j + 1) as u64).bytes(len);
+                    let hash = sha3_256(&data);
+                    let name = format!("obj-{t}-{j}");
+                    ds.push(&token, "/UserA", &name, &data, PushOpts::default()).unwrap();
+                    let pull =
+                        ds.pull(&token, "/UserA", &name, PullOpts::default()).unwrap();
+                    assert_eq!(sha3_256(&pull.data), hash, "round-trip hash for {name}");
+                    assert!(!pull.degraded);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = ds.metrics.snapshot();
+    assert_eq!(snap["pushes"], (threads * per_thread) as u64);
+    assert_eq!(snap["pulls"], (threads * per_thread) as u64);
+}
+
+/// The remote admin hook: flipping liveness over HTTP is honored by the
+/// dispatch plane (a 503-answering agent is skipped like a dead one).
+#[test]
+fn remote_admin_liveness_flip() {
+    let agent = spawn_agent(
+        AgentSpec::new("dc-flip", Site::ChameleonUc, DeviceKind::ChameleonLocal),
+        5,
+    )
+    .unwrap();
+    let ch = agent.channel.clone();
+    ch.put("k", b"v").unwrap();
+    ch.set_alive(false).unwrap();
+    assert!(!ch.is_alive());
+    assert!(!agent.container.is_alive(), "flip reached the container");
+    assert!(matches!(ch.get("k"), Err(Error::Unavailable(_))));
+    ch.set_alive(true).unwrap();
+    assert_eq!(ch.get("k").unwrap().data.unwrap(), b"v");
+}
