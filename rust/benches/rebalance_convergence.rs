@@ -1,0 +1,153 @@
+//! Rebalance convergence bench (EXPERIMENTS.md §Rebalance): seed a
+//! deliberately skewed cluster — 5 tight containers absorb every
+//! upload, then 3 roomy containers join — and drive the utilization
+//! rebalancer one batch at a time, recording how the weighted-occupancy
+//! spread (max − min, Eq. 1 recast as occupancy) falls per batch and
+//! what each batch costs in real wallclock.
+//!
+//! Alongside the markdown table the run writes `BENCH_rebalance.json`
+//! (one row per batch) so CI can archive the convergence trajectory
+//! next to `BENCH_hotpath.json`.
+//!
+//! `--smoke` shrinks the workload for CI.
+
+use dynostore::bench::Table;
+use dynostore::container::deploy_containers;
+use dynostore::coordinator::{DynoStore, PullOpts, PushOpts, RebalanceOpts};
+use dynostore::json::{obj, to_string_pretty, Value};
+use dynostore::policy::ResiliencePolicy;
+use dynostore::testkit::uniform_specs as specs;
+use dynostore::util::{now_ns, Rng};
+use dynostore::ErasureConfig;
+
+const THRESHOLD: f64 = 0.15;
+const BATCH_MOVES: usize = 16;
+
+struct BatchRow {
+    batch: usize,
+    spread: f64,
+    moved: usize,
+    failed: usize,
+    wall_ms: f64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let objects = if smoke { 24 } else { 80 };
+    let object_bytes = if smoke { 20_000 } else { 60_000 };
+
+    // Seeded skewed cluster: the tight five take every chunk, then the
+    // roomy three join empty.
+    let ds = DynoStore::builder()
+        .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+        .build();
+    // Size the tight containers so they start ~20-25% occupied.
+    let chunk = object_bytes / 3 + 56;
+    let tight = (objects * chunk * 4) as u64;
+    for c in deploy_containers(&specs("tight", 5, tight, tight), 5, 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    let token = ds.register_user("bench").unwrap();
+    let mut payloads = Vec::with_capacity(objects);
+    for i in 0..objects {
+        let bytes = Rng::new(4_000 + i as u64).bytes(object_bytes);
+        ds.push(&token, "/bench", &format!("o{i}"), &bytes, PushOpts::default()).unwrap();
+        payloads.push(bytes);
+    }
+    let roomy = tight * 64;
+    for c in deploy_containers(&specs("roomy", 3, roomy, roomy), 3, 5).containers {
+        ds.add_container(c).unwrap();
+    }
+
+    let initial = ds.utilization_spread();
+    println!(
+        "rebalance_convergence: {objects} objects x {object_bytes} B over 5 tight + 3 roomy \
+         containers, initial spread {initial:.3}, threshold {THRESHOLD}"
+    );
+
+    // One batch per rebalance call (max_moves == batch_moves), so the
+    // trajectory is observable from outside.
+    let mut rows: Vec<BatchRow> = Vec::new();
+    let mut converged = initial <= THRESHOLD;
+    let mut batch = 0usize;
+    while !converged && batch < 256 {
+        batch += 1;
+        let t0 = now_ns();
+        let report = ds
+            .rebalance(RebalanceOpts {
+                threshold: THRESHOLD,
+                max_moves: BATCH_MOVES,
+                batch_moves: BATCH_MOVES,
+            })
+            .unwrap();
+        let wall_ms = (now_ns() - t0) as f64 / 1e6;
+        converged = report.converged;
+        rows.push(BatchRow {
+            batch,
+            spread: report.spread_after,
+            moved: report.chunks_moved,
+            failed: report.failed_moves,
+            wall_ms,
+        });
+        if report.chunks_moved == 0 && !report.converged {
+            println!("stalled at spread {:.3} after batch {batch}", report.spread_after);
+            break;
+        }
+    }
+
+    let mut table = Table::new(
+        "Rebalance convergence (spread per batch)",
+        &["batch", "spread", "chunks moved", "failed", "wall"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.batch.to_string(),
+            format!("{:.3}", r.spread),
+            r.moved.to_string(),
+            r.failed.to_string(),
+            format!("{:.1} ms", r.wall_ms),
+        ]);
+    }
+    table.print();
+    println!(
+        "HEADLINE spread {initial:.3} -> {:.3} in {} batches ({} moves), converged: {converged}",
+        rows.last().map(|r| r.spread).unwrap_or(initial),
+        rows.len(),
+        rows.iter().map(|r| r.moved).sum::<usize>(),
+    );
+
+    // Bit-identity spot check: the rebalanced cluster still serves the
+    // exact bytes that were pushed.
+    for (i, bytes) in payloads.iter().enumerate().step_by(7) {
+        let pull = ds.pull(&token, "/bench", &format!("o{i}"), PullOpts::default()).unwrap();
+        assert_eq!(&pull.data, bytes, "object o{i} corrupted by rebalance");
+    }
+
+    let json_rows: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("batch", r.batch.into()),
+                ("spread", r.spread.into()),
+                ("chunks_moved", r.moved.into()),
+                ("failed_moves", r.failed.into()),
+                ("wall_ms", r.wall_ms.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "rebalance_convergence".into()),
+        ("smoke", smoke.into()),
+        ("objects", objects.into()),
+        ("object_bytes", object_bytes.into()),
+        ("threshold", THRESHOLD.into()),
+        ("initial_spread", initial.into()),
+        ("converged", converged.into()),
+        ("rows", Value::Arr(json_rows)),
+    ]);
+    let path = "BENCH_rebalance.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {path} ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

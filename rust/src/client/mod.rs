@@ -12,7 +12,10 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{DynoStore, OpContext, PullOpts, PullReport, PushOpts, PushReport};
+use crate::coordinator::{
+    DecommissionReport, DynoStore, OpContext, PullOpts, PullReport, PushOpts, PushReport,
+    RebalanceOpts, RebalanceReport,
+};
 use crate::crypto::{sha3_256, AesCtr};
 use crate::policy::ResiliencePolicy;
 use crate::sim::Site;
@@ -172,6 +175,31 @@ impl Client {
         self.store.evict(&self.token, collection, name)
     }
 
+    /// Drain container `id` out of the deployment (admin operation —
+    /// the elastic-lifecycle counterpart of `add_container`): every
+    /// chunk it holds migrates to live targets before it is removed.
+    pub fn decommission(&self, id: u32) -> Result<DecommissionReport> {
+        self.store.decommission(id)
+    }
+
+    /// Equalize utilization across the deployment's containers (admin
+    /// operation): hot→cold chunk moves until the weighted-occupancy
+    /// spread is at or under `opts.threshold`.
+    pub fn rebalance(&self, opts: RebalanceOpts) -> Result<RebalanceReport> {
+        self.store.rebalance(opts)
+    }
+
+    /// Cancel a drain that stopped short: the container rejoins the
+    /// placement pool.
+    pub fn cancel_decommission(&self, id: u32) -> Result<()> {
+        self.store.cancel_decommission(id)
+    }
+
+    /// Current imbalance (max − min weighted occupancy) of the fleet.
+    pub fn utilization_spread(&self) -> f64 {
+        self.store.utilization_spread()
+    }
+
     /// Upload a batch of objects over `threads` parallel channels
     /// (Fig. 7). Items are processed in rounds of `threads`; every
     /// channel active in a round shares the WAN link with exactly the
@@ -320,6 +348,30 @@ mod tests {
         assert!(t32 <= t8);
         let reduction = (t1 - t32) / t1;
         assert!(reduction > 0.2, "expected sizeable reduction, got {reduction}");
+    }
+
+    #[test]
+    fn lifecycle_ops_via_client() {
+        let (ds, token) = deployment();
+        let client = Client::new(ds.clone(), token, Site::Madrid);
+        let data = crate::util::Rng::new(9).bytes(30_000);
+        client.push("/UserA", "obj", &data).unwrap();
+        assert!(client.utilization_spread() >= 0.0);
+        // 12 containers under (10,7): draining one always has a spare.
+        let victim = ds
+            .meta
+            .read(|s| s.get_latest("UserA", "/UserA", "obj"))
+            .unwrap()
+            .placement
+            .containers()[0];
+        let report = client.decommission(victim).unwrap();
+        assert!(report.removed);
+        let rebalance = client
+            .rebalance(RebalanceOpts { threshold: 0.9, ..Default::default() })
+            .unwrap();
+        assert!(rebalance.converged);
+        let (got, _) = client.pull("/UserA", "obj").unwrap();
+        assert_eq!(got, data);
     }
 
     #[test]

@@ -1,0 +1,907 @@
+//! Elastic storage-network lifecycle (paper §III-B: "administrators add
+//! and remove data containers dynamically" + §IV-C: "a load-balancing
+//! algorithm ensures equitable and efficient utilization"):
+//!
+//! * [`DynoStore::decommission`] — mark a container draining (the placer
+//!   stops selecting it), migrate every chunk it holds onto the
+//!   best-scored live targets, commit each move through the Paxos
+//!   [`MetaCommand::UpdatePlacement`], verify, delete the source copy,
+//!   then deregister the container.
+//! * [`DynoStore::rebalance`] — bounded batches of hot→cold chunk moves
+//!   (planned by [`crate::placement::rebalance`]) until the weighted-
+//!   occupancy spread drops under a threshold.
+//!
+//! Both ride the same chunk-migration plane: concurrent channel reads
+//! and writes on the coordinator's io_pool, per-chunk `chunk_io`
+//! telemetry, and repair-style failure semantics — a move that fails
+//! mid-flight leaves the old placement intact and is retried by the
+//! next pass/batch. Placement updates are sequenced so a pull racing a
+//! migration always observes a fully servable placement: the target
+//! copy is written and verified *before* the Paxos commit, and the
+//! source copy is deleted only *after* it, so whichever placement a
+//! reader snapshots, the chunks it names exist. Batches additionally
+//! cap per-object moves at n − k, so even a reader holding a stale
+//! placement across a whole batch stays within the parity budget.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::erasure::{Chunk, ErasureConfig, CHUNK_HEADER_LEN};
+use crate::metadata::{ObjectMeta, ObjectPlacement};
+use crate::paxos::{CommandOutcome, MetaCommand};
+use crate::placement::rebalance::{plan_moves, spread, ObjectChunks, PlannedMove};
+use crate::util::now_ns;
+use crate::Result;
+
+use super::ops::{chunk_key, object_key, ChunkJob, ChunkXfer};
+use super::reports::{ChunkIoReport, DecommissionReport, RebalanceReport};
+use super::DynoStore;
+
+/// Knobs for a rebalance run.
+#[derive(Debug, Clone, Copy)]
+pub struct RebalanceOpts {
+    /// Stop once max − min weighted occupancy is at or under this.
+    pub threshold: f64,
+    /// Hard cap on chunk moves across the whole run.
+    pub max_moves: usize,
+    /// Moves planned/executed per batch; the fleet is re-snapshotted
+    /// between batches so later plans see real post-move utilization.
+    pub batch_moves: usize,
+}
+
+impl Default for RebalanceOpts {
+    fn default() -> Self {
+        RebalanceOpts { threshold: 0.1, max_moves: 256, batch_moves: 32 }
+    }
+}
+
+/// One chunk migration the engine should attempt.
+struct ChunkMove {
+    index: u8,
+    from: u32,
+    to: u32,
+}
+
+/// What one `migrate_erasure_chunks` / `migrate_single` call achieved.
+#[derive(Default)]
+struct MigrateOutcome {
+    moved: usize,
+    reconstructed: usize,
+    failed: usize,
+    chunk_io: Vec<ChunkIoReport>,
+}
+
+impl DynoStore {
+    /// Current imbalance of the placement-eligible fleet: max − min
+    /// weighted occupancy (the gauge `/health` surfaces).
+    pub fn utilization_spread(&self) -> f64 {
+        spread(&self.registry.placement_infos(), self.placer.weights)
+    }
+
+    /// Drain container `id` out of the storage network and remove it.
+    ///
+    /// The container is first marked draining so no new placement
+    /// selects it (reads keep being served). Every object version
+    /// holding data on it is then migrated chunk by chunk to the
+    /// best-scored live targets; each move is committed through Paxos
+    /// before the source copy is deleted. Only a fully clean drain
+    /// deregisters the container — any failed move leaves it registered
+    /// (and draining), and a later `decommission(id)` retries.
+    pub fn decommission(&self, id: u32) -> Result<DecommissionReport> {
+        self.registry.get(id)?;
+        let mut report = DecommissionReport { container: id, ..Default::default() };
+        // Distinct objects touched, across all passes (an object retried
+        // in a later pass is still one object).
+        let mut seen: HashSet<String> = HashSet::new();
+        // Outer loop: drain to empty, then attempt the removal with a
+        // late-commit re-check. An in-flight push that selected its
+        // targets before the draining flag landed can commit a
+        // placement onto `id` after a clean scan; such a latecomer
+        // re-registers the container and drains again. Latecomers are
+        // finite (every push after the flag excludes `id`, and disperse
+        // re-checks the flag at dispatch time), so this terminates.
+        'drain: loop {
+            self.registry.set_draining(id, true)?;
+            self.drain_passes(id, &mut seen, &mut report)?;
+            // Stranded chunks (no feasible target / failed moves): keep
+            // the container registered + draining for a later retry.
+            let stranded: usize = self
+                .meta
+                .read(|s| Ok(s.all_objects()))?
+                .iter()
+                .map(|m| m.placement.containers().iter().filter(|&&c| c == id).count())
+                .sum();
+            if stranded > 0 {
+                report.failed_moves = stranded;
+                break 'drain;
+            }
+            let channel = self.registry.remove(id)?;
+            let late = self
+                .meta
+                .read(|s| Ok(s.all_objects()))?
+                .iter()
+                .any(|m| m.placement.containers().contains(&id));
+            if !late {
+                report.removed = true;
+                self.metrics
+                    .decommissions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                break 'drain;
+            }
+            // A push committed onto the container between the scan and
+            // the removal: put it back and drain the latecomer too.
+            self.registry.add_channel(channel)?;
+        }
+        Ok(report)
+    }
+
+    /// Cancel a drain that stopped short (`removed: false`): clears the
+    /// draining flag so the container rejoins the placement pool. A
+    /// fleet-shrink that turns out infeasible must not silently leave a
+    /// placement target excluded forever.
+    pub fn cancel_decommission(&self, id: u32) -> Result<()> {
+        self.registry.set_draining(id, false)
+    }
+
+    /// Inner drain passes: migrate everything `id` holds until a pass
+    /// finds nothing (clean) or makes no progress (stranded chunks).
+    fn drain_passes(
+        &self,
+        id: u32,
+        seen: &mut HashSet<String>,
+        report: &mut DecommissionReport,
+    ) -> Result<()> {
+        loop {
+            let holding: Vec<ObjectMeta> = self
+                .meta
+                .read(|s| Ok(s.all_objects()))?
+                .into_iter()
+                .filter(|m| m.placement.containers().contains(&id))
+                .collect();
+            if holding.is_empty() {
+                break;
+            }
+            let mut progressed = false;
+            for meta in holding {
+                if seen.insert(meta.uuid.clone()) {
+                    report.objects_scanned += 1;
+                }
+                let outcome = match &meta.placement {
+                    ObjectPlacement::Single { .. } => self.migrate_single(&meta, id)?,
+                    ObjectPlacement::Erasure { n, k, chunks } => {
+                        let holders: HashSet<u32> =
+                            chunks.iter().map(|&(_, c)| c).collect();
+                        let idxs: Vec<u8> = chunks
+                            .iter()
+                            .filter(|&&(_, c)| c == id)
+                            .map(|&(i, _)| i)
+                            .collect();
+                        let chunk_bytes = self.packed_chunk_len(*n, *k, meta.size)?;
+                        // Best-scored live targets that keep the object's
+                        // chunks on distinct containers.
+                        let infos: Vec<_> = self
+                            .registry
+                            .placement_infos()
+                            .into_iter()
+                            .filter(|i| i.alive && !holders.contains(&i.id))
+                            .collect();
+                        match self.placer.select(&infos, chunk_bytes, idxs.len()) {
+                            Ok(targets) => {
+                                let moves: Vec<ChunkMove> = idxs
+                                    .iter()
+                                    .zip(&targets)
+                                    .map(|(&index, t)| ChunkMove {
+                                        index,
+                                        from: id,
+                                        to: t.id,
+                                    })
+                                    .collect();
+                                self.migrate_erasure_chunks(&meta, *n, *k, chunks, &moves)?
+                            }
+                            // No feasible target: the chunks stay put and
+                            // the drain reports the failure.
+                            Err(_) => {
+                                MigrateOutcome { failed: idxs.len(), ..Default::default() }
+                            }
+                        }
+                    }
+                };
+                progressed |= outcome.moved > 0;
+                report.chunks_moved += outcome.moved;
+                report.reconstructed += outcome.reconstructed;
+                report.chunk_io.extend(outcome.chunk_io);
+            }
+            if !progressed {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Equalize utilization across the fleet: plan and execute bounded
+    /// batches of hot→cold chunk moves until the weighted-occupancy
+    /// spread is at or under `opts.threshold` (or the run stops making
+    /// progress / hits its move budget).
+    pub fn rebalance(&self, opts: RebalanceOpts) -> Result<RebalanceReport> {
+        let w = self.placer.weights;
+        let mut report = RebalanceReport { threshold: opts.threshold, ..Default::default() };
+        report.spread_before = self.utilization_spread();
+        report.spread_after = report.spread_before;
+        let mut last_spread = f64::INFINITY;
+        loop {
+            let infos = self.registry.placement_infos();
+            let cur = spread(&infos, w);
+            report.spread_after = cur;
+            if cur <= opts.threshold {
+                report.converged = true;
+                break;
+            }
+            if report.chunks_moved >= opts.max_moves || cur >= last_spread {
+                break;
+            }
+            last_spread = cur;
+            // Snapshot the committed erasure placements for the planner.
+            let mut objects: Vec<ObjectChunks> = Vec::new();
+            for m in self.meta.read(|s| Ok(s.all_objects()))? {
+                if let ObjectPlacement::Erasure { n, k, chunks } = &m.placement {
+                    objects.push(ObjectChunks {
+                        uuid: m.uuid.clone(),
+                        chunk_bytes: self.packed_chunk_len(*n, *k, m.size)?,
+                        holders: chunks.clone(),
+                        // Parity budget: a pull racing this batch can
+                        // lose at most n − k chunks and still decode.
+                        max_moves: n.saturating_sub(*k),
+                    });
+                }
+            }
+            let batch_cap = opts.batch_moves.min(opts.max_moves - report.chunks_moved);
+            let batch = plan_moves(&infos, &objects, w, opts.threshold, batch_cap);
+            if batch.is_empty() {
+                break;
+            }
+            report.batches += 1;
+            let mut by_uuid: BTreeMap<String, Vec<PlannedMove>> = BTreeMap::new();
+            for m in batch {
+                by_uuid.entry(m.uuid.clone()).or_default().push(m);
+            }
+            for (uuid, group) in by_uuid {
+                // Re-read the object: the plan was made on a snapshot.
+                let meta = match self.meta.read(|s| s.get_by_uuid(&uuid)) {
+                    Ok(m) => m,
+                    Err(_) => continue, // evicted since planning
+                };
+                let (n, k, chunks) = match &meta.placement {
+                    ObjectPlacement::Erasure { n, k, chunks } => (*n, *k, chunks.clone()),
+                    _ => continue,
+                };
+                // Keep only moves the committed placement still supports
+                // (source still holds the chunk, target holds nothing of
+                // this object) — anything else re-plans next batch.
+                let moves: Vec<ChunkMove> = group
+                    .into_iter()
+                    .filter(|m| {
+                        chunks.contains(&(m.index, m.from))
+                            && !chunks.iter().any(|&(_, c)| c == m.to)
+                    })
+                    .map(|m| ChunkMove { index: m.index, from: m.from, to: m.to })
+                    .collect();
+                let out = self.migrate_erasure_chunks(&meta, n, k, &chunks, &moves)?;
+                report.chunks_moved += out.moved;
+                report.failed_moves += out.failed;
+                report.chunk_io.extend(out.chunk_io);
+            }
+        }
+        self.metrics
+            .rebalances
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(report)
+    }
+
+    /// Wire/disk bytes of one packed chunk of a `size`-byte object under
+    /// an (n, k) config — what migration planning debits per move.
+    fn packed_chunk_len(&self, n: usize, k: usize, size: u64) -> Result<u64> {
+        let codec = self.codec(ErasureConfig::new(n, k))?;
+        Ok((codec.chunk_len(size as usize) + CHUNK_HEADER_LEN) as u64)
+    }
+
+    /// The migration engine: move the given chunks of one object to new
+    /// containers. Sequencing per the module docs — read (or rebuild) →
+    /// write → verify → Paxos commit → delete source. Failed moves are
+    /// dropped from the commit and leave the old placement entries
+    /// intact; the object keeps decoding throughout.
+    fn migrate_erasure_chunks(
+        &self,
+        meta: &ObjectMeta,
+        n: usize,
+        k: usize,
+        current: &[(u8, u32)],
+        moves: &[ChunkMove],
+    ) -> Result<MigrateOutcome> {
+        let mut out = MigrateOutcome::default();
+        if moves.is_empty() {
+            return Ok(out);
+        }
+
+        // Phase 1: concurrent source reads over the io_pool. Known-dead
+        // channels are skipped up front — a dead source would stall the
+        // wave for its transport timeout; the parity rebuild below
+        // covers its chunks directly.
+        let mut jobs = Vec::new();
+        for m in moves {
+            match self.registry.get(m.from) {
+                Ok(ch) if ch.is_alive() => jobs.push(ChunkJob {
+                    index: m.index,
+                    channel: ch,
+                    key: chunk_key(&meta.sha3, meta.size, m.index),
+                    data: None,
+                }),
+                _ => {}
+            }
+        }
+        let mut payload: HashMap<u8, Vec<u8>> = HashMap::new();
+        for xfer in self.dispatch_chunk_io(jobs)? {
+            let ChunkXfer { index, cid, transport, site, wall_s, res, .. } = xfer;
+            let (ok, sim_s) = match res {
+                Ok((Some(bytes), dev_s)) => match Chunk::unpack(&bytes) {
+                    Ok(c)
+                        if c.header.index == index && c.header.object_hash == meta.sha3 =>
+                    {
+                        let net_s = self
+                            .wan
+                            .transfer_s(site, self.gateway_site, bytes.len() as u64, 1);
+                        payload.insert(index, bytes);
+                        (true, net_s + dev_s)
+                    }
+                    _ => (false, 0.0),
+                },
+                _ => (false, 0.0),
+            };
+            out.chunk_io.push(ChunkIoReport {
+                index,
+                container: cid,
+                transport,
+                ok,
+                sim_s,
+                wall_s,
+            });
+        }
+
+        // Phase 2: rebuild unreadable/corrupt sources from the object's
+        // surviving chunks (repair-style), so a drain heals rot instead
+        // of stranding it.
+        let missing: Vec<u8> =
+            moves.iter().map(|m| m.index).filter(|i| !payload.contains_key(i)).collect();
+        if !missing.is_empty() {
+            if let Some(rebuilt) = self.rebuild_chunks(meta, n, k, current, &missing)? {
+                out.reconstructed += rebuilt.len();
+                payload.extend(rebuilt);
+            }
+        }
+
+        // Phase 3: concurrent target writes, each verified before commit.
+        let mut jobs = Vec::new();
+        for m in moves {
+            match payload.remove(&m.index) {
+                Some(bytes) => match self.registry.get(m.to) {
+                    Ok(ch) => jobs.push(ChunkJob {
+                        index: m.index,
+                        channel: ch,
+                        key: chunk_key(&meta.sha3, meta.size, m.index),
+                        data: Some(bytes),
+                    }),
+                    Err(_) => out.failed += 1,
+                },
+                None => out.failed += 1, // unreadable and unrecoverable
+            }
+        }
+        let mut landed: Vec<u8> = Vec::new();
+        for xfer in self.dispatch_chunk_io(jobs)? {
+            let ChunkXfer { index, cid, transport, site, wire_len, wall_s, res } = xfer;
+            let verified = res.is_ok()
+                && self
+                    .registry
+                    .get(cid)
+                    .ok()
+                    .map(|ch| {
+                        ch.exists(&chunk_key(&meta.sha3, meta.size, index)).unwrap_or(false)
+                    })
+                    .unwrap_or(false);
+            let sim_s = match (&res, verified) {
+                (Ok((_, dev_s)), true) => {
+                    self.wan.transfer_s(self.gateway_site, site, wire_len as u64, 1) + dev_s
+                }
+                _ => 0.0,
+            };
+            if verified {
+                landed.push(index);
+            } else {
+                out.failed += 1;
+            }
+            out.chunk_io.push(ChunkIoReport {
+                index,
+                container: cid,
+                transport,
+                ok: verified,
+                sim_s,
+                wall_s,
+            });
+        }
+        if landed.is_empty() {
+            return Ok(out);
+        }
+
+        // Phase 4: commit through Paxos against a *fresh* placement —
+        // the object may have been repaired or evicted while we copied.
+        // A rollback never deletes a copy the *committed* placement
+        // references: a concurrent migration may have landed this very
+        // (index → target) mapping, and chunk keys carry no container
+        // component, so an unconditional delete would destroy its copy.
+        let rollback = |idx: u8, to: u32| {
+            let referenced = self
+                .meta
+                .read(|s| s.get_by_uuid(&meta.uuid))
+                .map(|m| match m.placement {
+                    ObjectPlacement::Erasure { chunks, .. } => {
+                        chunks.iter().any(|&(i, c)| i == idx && c == to)
+                    }
+                    ObjectPlacement::Single { container } => container == to,
+                })
+                .unwrap_or(false);
+            if referenced {
+                return;
+            }
+            if let Ok(ch) = self.registry.get(to) {
+                let _ = ch.delete(&chunk_key(&meta.sha3, meta.size, idx));
+            }
+        };
+        let fresh = match self.meta.read(|s| s.get_by_uuid(&meta.uuid)) {
+            Ok(m) => m,
+            Err(_) => {
+                for m in moves.iter().filter(|m| landed.contains(&m.index)) {
+                    rollback(m.index, m.to);
+                    out.failed += 1;
+                }
+                return Ok(out);
+            }
+        };
+        let (fresh_n, fresh_k, mut chunks) = match fresh.placement {
+            ObjectPlacement::Erasure { n, k, chunks } => (n, k, chunks),
+            _ => {
+                for m in moves.iter().filter(|m| landed.contains(&m.index)) {
+                    rollback(m.index, m.to);
+                    out.failed += 1;
+                }
+                return Ok(out);
+            }
+        };
+        // The commit is a CAS against exactly this snapshot: if repair
+        // or another migration changes the placement between here and
+        // the submit, the submit fails instead of overwriting it.
+        let expect = ObjectPlacement::Erasure {
+            n: fresh_n,
+            k: fresh_k,
+            chunks: chunks.clone(),
+        };
+        let mut committed: Vec<(u8, u32, u32)> = Vec::new();
+        for m in moves.iter().filter(|m| landed.contains(&m.index)) {
+            // The move only commits if the fresh placement still has the
+            // chunk on the source AND nothing of this object landed on
+            // the target meanwhile (distinctness invariant).
+            let target_free = !chunks.iter().any(|&(_, c)| c == m.to);
+            match chunks.iter_mut().find(|c| c.0 == m.index && c.1 == m.from) {
+                Some(slot) if target_free => {
+                    slot.1 = m.to;
+                    committed.push((m.index, m.from, m.to));
+                }
+                _ => {
+                    rollback(m.index, m.to);
+                    out.failed += 1;
+                }
+            }
+        }
+        if committed.is_empty() {
+            return Ok(out);
+        }
+        chunks.sort_by_key(|&(i, _)| i);
+        let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+            uuid: meta.uuid.clone(),
+            placement: ObjectPlacement::Erasure { n: fresh_n, k: fresh_k, chunks },
+            expect: Some(expect),
+        })?;
+        if let CommandOutcome::Failed(_) = outcome {
+            for &(idx, _, to) in &committed {
+                rollback(idx, to);
+            }
+            out.failed += committed.len();
+            return Ok(out);
+        }
+
+        // Phase 5: the commit is visible — drop the drained source
+        // copies (best effort; a failed delete leaves an unreferenced
+        // copy on the source, harmless to correctness).
+        for &(idx, from, _) in &committed {
+            if let Ok(ch) = self.registry.get(from) {
+                let _ = ch.delete(&chunk_key(&meta.sha3, meta.size, idx));
+            }
+        }
+        out.moved = committed.len();
+        self.metrics
+            .chunks_migrated
+            .fetch_add(committed.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Rebuild the wanted chunk indices from any k of the object's other
+    /// chunks (shared wave collector, as repair uses). `None` when fewer
+    /// than k clean chunks are reachable.
+    #[allow(clippy::type_complexity)]
+    fn rebuild_chunks(
+        &self,
+        meta: &ObjectMeta,
+        n: usize,
+        k: usize,
+        current: &[(u8, u32)],
+        want: &[u8],
+    ) -> Result<Option<HashMap<u8, Vec<u8>>>> {
+        let codec = self.codec(ErasureConfig::new(n, k))?;
+        let sources: Vec<(u8, u32)> =
+            current.iter().filter(|&&(i, _)| !want.contains(&i)).copied().collect();
+        let (collected, _) = self.collect_chunks(meta, k, &sources)?;
+        if collected.len() < k {
+            return Ok(None);
+        }
+        let data = codec.decode(&collected)?;
+        let mut all = codec.encode(&data)?;
+        Ok(Some(
+            want.iter().map(|&i| (i, std::mem::take(&mut all[i as usize].packed))).collect(),
+        ))
+    }
+
+    /// Migrate a Regular-policy (whole-object) placement off `from`:
+    /// read, integrity-check, write to the best-scored live target,
+    /// verify, commit, delete the source copy.
+    fn migrate_single(&self, meta: &ObjectMeta, from: u32) -> Result<MigrateOutcome> {
+        let mut out = MigrateOutcome::default();
+        let key = object_key(&meta.sha3, meta.size);
+        let source = match self.registry.get(from) {
+            Ok(ch) => ch,
+            Err(_) => {
+                out.failed += 1;
+                return Ok(out);
+            }
+        };
+        let t0 = now_ns();
+        let read = source.get(&key);
+        let read_wall_s = (now_ns() - t0) as f64 / 1e9;
+        let (data, read_sim_s) = match read {
+            Ok(o) => {
+                let sim = self.wan.transfer_s(source.site(), self.gateway_site, meta.size, 1)
+                    + o.sim_s;
+                (o.data.unwrap_or_default(), sim)
+            }
+            Err(_) => (Vec::new(), 0.0),
+        };
+        let read_ok = crate::crypto::sha3_256(&data) == meta.sha3;
+        out.chunk_io.push(ChunkIoReport {
+            index: 0,
+            container: from,
+            transport: source.transport(),
+            ok: read_ok,
+            sim_s: if read_ok { read_sim_s } else { 0.0 },
+            wall_s: read_wall_s,
+        });
+        if !read_ok {
+            // A Regular object has no parity to rebuild from: the copy
+            // stays where it is and the drain reports the failure.
+            out.failed += 1;
+            return Ok(out);
+        }
+        let infos: Vec<_> = self
+            .registry
+            .placement_infos()
+            .into_iter()
+            .filter(|i| i.alive && i.id != from)
+            .collect();
+        let target = match self.placer.select_one(&infos, meta.size) {
+            Ok(t) => t,
+            Err(_) => {
+                out.failed += 1;
+                return Ok(out);
+            }
+        };
+        let tch = match self.registry.get(target.id) {
+            Ok(ch) => ch,
+            Err(_) => {
+                out.failed += 1;
+                return Ok(out);
+            }
+        };
+        let t0 = now_ns();
+        let wrote = tch.put(&key, &data);
+        let write_wall_s = (now_ns() - t0) as f64 / 1e9;
+        let verified = wrote.is_ok() && tch.exists(&key).unwrap_or(false);
+        let write_sim_s = match (&wrote, verified) {
+            (Ok(o), true) => {
+                self.wan.transfer_s(self.gateway_site, tch.site(), meta.size, 1) + o.sim_s
+            }
+            _ => 0.0,
+        };
+        out.chunk_io.push(ChunkIoReport {
+            index: 0,
+            container: target.id,
+            transport: tch.transport(),
+            ok: verified,
+            sim_s: write_sim_s,
+            wall_s: write_wall_s,
+        });
+        if !verified {
+            out.failed += 1;
+            return Ok(out);
+        }
+        // CAS commit: only applies while the object still points at the
+        // source; a concurrent repair/migration makes it fail instead of
+        // being overwritten.
+        let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+            uuid: meta.uuid.clone(),
+            placement: ObjectPlacement::Single { container: target.id },
+            expect: Some(ObjectPlacement::Single { container: from }),
+        })?;
+        if let CommandOutcome::Failed(_) = outcome {
+            // Drop our copy unless the committed placement now
+            // references the target (a concurrent actor landed there).
+            let referenced = matches!(
+                self.meta.read(|s| s.get_by_uuid(&meta.uuid)),
+                Ok(ObjectMeta { placement: ObjectPlacement::Single { container }, .. })
+                    if container == target.id
+            );
+            if !referenced {
+                let _ = tch.delete(&key);
+            }
+            out.failed += 1;
+            return Ok(out);
+        }
+        let _ = source.delete(&key);
+        out.moved = 1;
+        self.metrics
+            .chunks_migrated
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::deploy_containers;
+    use crate::coordinator::{PullOpts, PushOpts};
+    use crate::policy::ResiliencePolicy;
+    use crate::testkit::uniform_specs as specs;
+
+    /// (5,3)-policy deployment over `count` containers.
+    fn deployment(count: usize) -> (DynoStore, String) {
+        let ds = DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+            .build();
+        for c in deploy_containers(&specs("dc", count, 64 << 20, 1 << 32), count, 0).containers
+        {
+            ds.add_container(c).unwrap();
+        }
+        let token = ds.register_user("UserA").unwrap();
+        (ds, token)
+    }
+
+    fn data(len: usize, seed: u64) -> Vec<u8> {
+        crate::util::Rng::new(seed).bytes(len)
+    }
+
+    fn assert_distinct_placements(ds: &DynoStore) {
+        for m in ds.meta.read(|s| Ok(s.all_objects())).unwrap() {
+            if let ObjectPlacement::Erasure { chunks, .. } = &m.placement {
+                let ids: HashSet<u32> = chunks.iter().map(|&(_, c)| c).collect();
+                assert_eq!(ids.len(), chunks.len(), "duplicate holder in {chunks:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decommission_drains_and_removes_container() {
+        let (ds, token) = deployment(8);
+        let objects: Vec<Vec<u8>> =
+            (0..6).map(|i| data(30_000 + i * 1_000, i as u64)).collect();
+        for (i, obj) in objects.iter().enumerate() {
+            ds.push(&token, "/UserA", &format!("o{i}"), obj, PushOpts::default()).unwrap();
+        }
+        // Pick a container that holds at least one chunk.
+        let victim = ds
+            .meta
+            .read(|s| Ok(s.all_objects()))
+            .unwrap()
+            .iter()
+            .flat_map(|m| m.placement.containers())
+            .next()
+            .unwrap();
+        let drained = ds.container_of(victim).unwrap();
+        let held_before = drained.list().len();
+        assert!(held_before > 0);
+
+        let report = ds.decommission(victim).unwrap();
+        assert!(report.removed, "{report:?}");
+        assert_eq!(report.failed_moves, 0);
+        assert_eq!(report.chunks_moved, held_before);
+        assert!(report.chunk_io.iter().all(|c| c.ok));
+        // The drained container holds zero chunks and left the registry.
+        assert!(drained.list().is_empty(), "{:?}", drained.list());
+        assert!(ds.registry.get(victim).is_err());
+        assert!(!ds.registry.is_draining(victim));
+        // No placement references it and every object still decodes.
+        for m in ds.meta.read(|s| Ok(s.all_objects())).unwrap() {
+            assert!(!m.placement.containers().contains(&victim));
+        }
+        assert_distinct_placements(&ds);
+        for (i, obj) in objects.iter().enumerate() {
+            let pull =
+                ds.pull(&token, "/UserA", &format!("o{i}"), PullOpts::default()).unwrap();
+            assert_eq!(&pull.data, obj, "object o{i} intact after drain");
+            assert!(!pull.degraded);
+        }
+    }
+
+    #[test]
+    fn decommission_without_spare_capacity_keeps_old_placement() {
+        // Exactly n containers: every object spans all of them, so no
+        // feasible target exists and every move must fail — leaving the
+        // placement intact, the container registered, and reads working.
+        let (ds, token) = deployment(5);
+        let obj = data(20_000, 7);
+        ds.push(&token, "/UserA", "o", &obj, PushOpts::default()).unwrap();
+        let report = ds.decommission(0).unwrap();
+        assert!(!report.removed);
+        assert!(report.failed_moves > 0);
+        assert_eq!(report.chunks_moved, 0);
+        assert!(ds.registry.get(0).is_ok(), "still registered");
+        assert!(ds.registry.is_draining(0), "left draining for a retry");
+        let pull = ds.pull(&token, "/UserA", "o", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, obj);
+        // The operator can cancel: the container rejoins placement.
+        ds.cancel_decommission(0).unwrap();
+        assert!(!ds.registry.is_draining(0));
+        assert_eq!(ds.registry.placement_infos().len(), 5);
+        // Adding a fresh container unblocks the retry.
+        for c in deploy_containers(&specs("extra", 1, 64 << 20, 1 << 32), 1, 10).containers {
+            ds.add_container(c).unwrap();
+        }
+        let retry = ds.decommission(0).unwrap();
+        assert!(retry.removed, "{retry:?}");
+        assert_eq!(ds.pull(&token, "/UserA", "o", PullOpts::default()).unwrap().data, obj);
+    }
+
+    #[test]
+    fn decommission_rebuilds_corrupt_source_chunks() {
+        let (ds, token) = deployment(8);
+        let obj = data(40_000, 9);
+        ds.push(&token, "/UserA", "o", &obj, PushOpts::default()).unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "o")).unwrap();
+        let (idx, cid) = match &meta.placement {
+            ObjectPlacement::Erasure { chunks, .. } => chunks[0],
+            _ => unreachable!(),
+        };
+        // Rot the chunk on the container being drained.
+        ds.container_of(cid)
+            .unwrap()
+            .put(&chunk_key(&meta.sha3, meta.size, idx), b"rot")
+            .unwrap();
+        let report = ds.decommission(cid).unwrap();
+        assert!(report.removed, "{report:?}");
+        assert_eq!(report.reconstructed, 1, "rot healed via parity rebuild");
+        let pull = ds.pull(&token, "/UserA", "o", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, obj);
+        assert!(!pull.degraded, "migrated chunk is clean");
+    }
+
+    #[test]
+    fn decommission_migrates_regular_objects() {
+        let (ds, token) = deployment(4);
+        let obj = data(25_000, 11);
+        let opts = PushOpts { policy: Some(ResiliencePolicy::Regular), ..Default::default() };
+        ds.push(&token, "/UserA", "reg", &obj, opts).unwrap();
+        let holder = match ds
+            .meta
+            .read(|s| s.get_latest("UserA", "/UserA", "reg"))
+            .unwrap()
+            .placement
+        {
+            ObjectPlacement::Single { container } => container,
+            _ => unreachable!(),
+        };
+        let report = ds.decommission(holder).unwrap();
+        assert!(report.removed);
+        assert_eq!(report.chunks_moved, 1);
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "reg")).unwrap();
+        match meta.placement {
+            ObjectPlacement::Single { container } => assert_ne!(container, holder),
+            other => panic!("unexpected placement {other:?}"),
+        }
+        assert_eq!(ds.pull(&token, "/UserA", "reg", PullOpts::default()).unwrap().data, obj);
+    }
+
+    #[test]
+    fn decommission_unknown_container_errors() {
+        let (ds, _) = deployment(5);
+        assert!(matches!(ds.decommission(99), Err(crate::Error::NotFound(_))));
+    }
+
+    #[test]
+    fn rebalance_converges_on_skewed_cluster() {
+        // 5 tight containers absorb all uploads, then 3 empty roomy ones
+        // join: the spread is large until the rebalancer ships chunks
+        // onto the newcomers.
+        let ds = DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+            .build();
+        for c in
+            deploy_containers(&specs("old", 5, 1 << 20, 1 << 20), 5, 0).containers
+        {
+            ds.add_container(c).unwrap();
+        }
+        let token = ds.register_user("UserA").unwrap();
+        let objects: Vec<Vec<u8>> = (0..40).map(|i| data(20_000, 100 + i)).collect();
+        for (i, obj) in objects.iter().enumerate() {
+            ds.push(&token, "/UserA", &format!("o{i}"), obj, PushOpts::default()).unwrap();
+        }
+        for c in
+            deploy_containers(&specs("new", 3, 64 << 20, 64 << 20), 3, 5).containers
+        {
+            ds.add_container(c).unwrap();
+        }
+        let before = ds.utilization_spread();
+        assert!(before > 0.15, "cluster must start skewed, spread {before}");
+
+        let report = ds
+            .rebalance(RebalanceOpts { threshold: 0.15, max_moves: 512, batch_moves: 16 })
+            .unwrap();
+        assert!(report.converged, "{report:?}");
+        assert!(report.spread_after <= 0.15);
+        assert!(report.spread_after < report.spread_before);
+        assert!(report.chunks_moved > 0);
+        assert!(report.batches > 0);
+        assert_distinct_placements(&ds);
+        for (i, obj) in objects.iter().enumerate() {
+            let pull =
+                ds.pull(&token, "/UserA", &format!("o{i}"), PullOpts::default()).unwrap();
+            assert_eq!(&pull.data, obj, "object o{i} intact after rebalance");
+        }
+    }
+
+    #[test]
+    fn rebalance_is_noop_on_balanced_fleet() {
+        let (ds, token) = deployment(8);
+        ds.push(&token, "/UserA", "o", &data(10_000, 3), PushOpts::default()).unwrap();
+        let report = ds.rebalance(RebalanceOpts::default()).unwrap();
+        assert!(report.converged);
+        assert_eq!(report.batches, 0);
+        assert_eq!(report.chunks_moved, 0);
+        assert_eq!(ds.metrics.snapshot()["rebalances"], 1);
+    }
+
+    #[test]
+    fn rebalance_respects_move_budget() {
+        let ds = DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+            .build();
+        for c in deploy_containers(&specs("old", 5, 8 << 20, 4 << 20), 5, 0).containers {
+            ds.add_container(c).unwrap();
+        }
+        let token = ds.register_user("UserA").unwrap();
+        for i in 0..30 {
+            ds.push(&token, "/UserA", &format!("o{i}"), &data(20_000, 200 + i), PushOpts::default())
+                .unwrap();
+        }
+        for c in deploy_containers(&specs("new", 3, 64 << 20, 64 << 20), 3, 5).containers {
+            ds.add_container(c).unwrap();
+        }
+        let report = ds
+            .rebalance(RebalanceOpts { threshold: 0.0, max_moves: 4, batch_moves: 2 })
+            .unwrap();
+        assert!(report.chunks_moved <= 4, "{report:?}");
+        assert!(!report.converged);
+    }
+}

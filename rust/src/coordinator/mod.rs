@@ -6,11 +6,15 @@
 //! simulated wide-area time of the operation (see `crate::sim` on why
 //! time is simulated while the data plane is real).
 
+mod lifecycle;
 mod ops;
 mod reports;
 
+pub use lifecycle::RebalanceOpts;
 pub use ops::{OpContext, PullOpts, PushOpts};
-pub use reports::{ChunkIoReport, PullReport, PushReport, RepairReport};
+pub use reports::{
+    ChunkIoReport, DecommissionReport, PullReport, PushReport, RebalanceReport, RepairReport,
+};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -82,6 +86,13 @@ pub struct Metrics {
     pub repairs: AtomicU64,
     pub auth_failures: AtomicU64,
     pub gc_collected: AtomicU64,
+    /// Chunk (or whole-object) migrations committed by the lifecycle
+    /// plane (decommission drains + rebalance moves).
+    pub chunks_migrated: AtomicU64,
+    /// Containers drained and removed via `decommission`.
+    pub decommissions: AtomicU64,
+    /// Rebalance runs completed.
+    pub rebalances: AtomicU64,
 }
 
 impl Metrics {
@@ -94,6 +105,9 @@ impl Metrics {
         m.insert("repairs", self.repairs.load(Ordering::Relaxed));
         m.insert("auth_failures", self.auth_failures.load(Ordering::Relaxed));
         m.insert("gc_collected", self.gc_collected.load(Ordering::Relaxed));
+        m.insert("chunks_migrated", self.chunks_migrated.load(Ordering::Relaxed));
+        m.insert("decommissions", self.decommissions.load(Ordering::Relaxed));
+        m.insert("rebalances", self.rebalances.load(Ordering::Relaxed));
         m
     }
 }
@@ -252,7 +266,10 @@ impl DynoStore {
         self.registry.add_channel(ch)
     }
 
-    /// Deregister a container.
+    /// Deregister a container immediately. Chunks it holds are NOT
+    /// migrated — committed placements keep referencing the departed id
+    /// until repair re-disperses them. Prefer [`DynoStore::decommission`]
+    /// for a graceful drain that moves every chunk first.
     pub fn remove_container(&self, id: u32) -> Result<Arc<dyn ContainerChannel>> {
         self.registry.remove(id)
     }
@@ -273,6 +290,15 @@ impl DynoStore {
     /// Issue a fresh token for an existing user (login).
     pub fn login(&self, user: &str) -> String {
         self.tokens.issue(user, &["read", "write"], 24 * 3600)
+    }
+
+    /// Issue an operator token carrying the `admin` scope the gateway's
+    /// `/admin/*` routes require. Only deployment-side code (whoever
+    /// holds the deployment secret) can mint one — ordinary
+    /// `register`/`login` tokens never carry it; `dynostore serve`
+    /// prints one at startup for the operator.
+    pub fn issue_admin_token(&self, ttl_secs: u64) -> String {
+        self.tokens.issue("operator", &["read", "write", "admin"], ttl_secs)
     }
 
     /// Codec cache: one per (n, k), sharing the selected GF engine.

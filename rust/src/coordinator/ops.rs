@@ -84,39 +84,39 @@ pub struct PullOpts {
 }
 
 /// Container-side key for a whole object.
-fn object_key(sha3: &[u8; 32], len: u64) -> String {
+pub(super) fn object_key(sha3: &[u8; 32], len: u64) -> String {
     format!("obj-{}-{len}", &to_hex(sha3)[..16])
 }
 
 /// Container-side key for one erasure chunk.
-fn chunk_key(sha3: &[u8; 32], len: u64, index: u8) -> String {
+pub(super) fn chunk_key(sha3: &[u8; 32], len: u64, index: u8) -> String {
     format!("chk-{}-{len}-{index}", &to_hex(sha3)[..16])
 }
 
 /// One unit of chunk I/O for the concurrent dispatcher: an upload when
 /// `data` is present, a download otherwise.
-struct ChunkJob {
-    index: u8,
-    channel: Arc<dyn ContainerChannel>,
-    key: String,
-    data: Option<Vec<u8>>,
+pub(super) struct ChunkJob {
+    pub(super) index: u8,
+    pub(super) channel: Arc<dyn ContainerChannel>,
+    pub(super) key: String,
+    pub(super) data: Option<Vec<u8>>,
 }
 
 /// Outcome of one dispatched transfer. Identity labels are captured
 /// before dispatch so failed transfers still report which container and
 /// transport were involved.
-struct ChunkXfer {
-    index: u8,
-    cid: u32,
-    transport: &'static str,
-    site: Site,
+pub(super) struct ChunkXfer {
+    pub(super) index: u8,
+    pub(super) cid: u32,
+    pub(super) transport: &'static str,
+    pub(super) site: Site,
     /// Bytes placed on the wire for uploads (downloads read the fetched
     /// payload length instead).
-    wire_len: usize,
+    pub(super) wire_len: usize,
     /// Measured wallclock of the channel operation.
-    wall_s: f64,
+    pub(super) wall_s: f64,
     /// (payload for downloads, simulated device seconds).
-    res: Result<(Option<Vec<u8>>, f64)>,
+    pub(super) res: Result<(Option<Vec<u8>>, f64)>,
 }
 
 impl DynoStore {
@@ -124,7 +124,7 @@ impl DynoStore {
     /// channel op, and gather the outcomes in dispatch order. Individual
     /// transfer failures come back inside each [`ChunkXfer`]; only a
     /// pool-level fault (a panicked worker job) fails the whole batch.
-    fn dispatch_chunk_io(&self, jobs: Vec<ChunkJob>) -> Result<Vec<ChunkXfer>> {
+    pub(super) fn dispatch_chunk_io(&self, jobs: Vec<ChunkJob>) -> Result<Vec<ChunkXfer>> {
         let labels: Vec<(u8, u32, &'static str, Site, usize)> = jobs
             .iter()
             .map(|j| {
@@ -163,6 +163,59 @@ impl DynoStore {
             .collect())
     }
 
+    /// Collect up to `k` valid chunks of `meta` from `sources` —
+    /// `(index, container)` pairs tried in order, fetched in concurrent
+    /// waves, skipping known-dead channels so a dead endpoint never
+    /// stalls a wave for its transport timeout. Returns the collected
+    /// chunks plus the sources that were skipped, failed, or served
+    /// invalid bytes (repair heals those; reconstruction ignores them).
+    pub(super) fn collect_chunks(
+        &self,
+        meta: &ObjectMeta,
+        k: usize,
+        sources: &[(u8, u32)],
+    ) -> Result<(Vec<Chunk>, Vec<(u8, u32)>)> {
+        let mut collected: Vec<Chunk> = Vec::with_capacity(k);
+        let mut bad: Vec<(u8, u32)> = Vec::new();
+        let mut cursor = 0usize;
+        while collected.len() < k {
+            let mut jobs = Vec::new();
+            while jobs.len() < k - collected.len() && cursor < sources.len() {
+                let (idx, cid) = sources[cursor];
+                cursor += 1;
+                match self.registry.get(cid) {
+                    Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
+                        index: idx,
+                        channel,
+                        key: chunk_key(&meta.sha3, meta.size, idx),
+                        data: None,
+                    }),
+                    _ => bad.push((idx, cid)),
+                }
+            }
+            if jobs.is_empty() {
+                break;
+            }
+            for xfer in self.dispatch_chunk_io(jobs)? {
+                let mut valid = false;
+                if let Ok((Some(bytes), _)) = &xfer.res {
+                    if let Ok(chunk) = Chunk::unpack(bytes) {
+                        if chunk.header.index == xfer.index
+                            && chunk.header.object_hash == meta.sha3
+                        {
+                            collected.push(chunk);
+                            valid = true;
+                        }
+                    }
+                }
+                if !valid {
+                    bad.push((xfer.index, xfer.cid));
+                }
+            }
+        }
+        Ok((collected, bad))
+    }
+
     /// Upload an object (client `push`). Algorithm 1 under an erasure
     /// policy; single-container placement under Regular.
     pub fn push(
@@ -192,7 +245,16 @@ impl DynoStore {
         let (placement, encode_s, encode_wall_s, disperse_s, stored_bytes, chunk_io) =
             match policy {
                 ResiliencePolicy::Regular => {
-                    let target = self.placer.select_one(&self.registry.infos(), len)?;
+                    // Drain-aware: a decommissioning container never
+                    // receives new placements (same for the paths below).
+                    let target = self.placer.select_one(&self.registry.placement_infos(), len)?;
+                    // Dispatch-time re-check: the draining flag may have
+                    // landed between selection and this write.
+                    if self.registry.is_draining(target.id) {
+                        return Err(Error::Unavailable(
+                            "selected container began draining; retry the push".into(),
+                        ));
+                    }
                     let channel = self.registry.get(target.id)?;
                     let key = object_key(&hash, len);
                     let t0 = now_ns();
@@ -220,23 +282,53 @@ impl DynoStore {
                 ResiliencePolicy::Fixed(cfg) => self.disperse(data, &hash, cfg, None)?,
                 ResiliencePolicy::Dynamic { k, target_loss } => {
                     let chunk_size = (len / k as u64).max(1);
-                    let choice =
-                        select_dynamic(&self.registry.infos(), chunk_size, k, target_loss)?;
+                    let infos = self.registry.placement_infos();
+                    let choice = select_dynamic(&infos, chunk_size, k, target_loss)?;
                     self.disperse(data, &hash, choice.config, Some(choice.containers))?
                 }
             };
 
-        // Metadata commit through Paxos (strong consistency, §IV-B).
+        // Metadata commit through Paxos (strong consistency, §IV-B),
+        // guarded by commit-time target validation: every container the
+        // placement names must still be registered and not draining — a
+        // decommission may have flagged one while the uploads above
+        // were in flight, and its verified-empty scan cannot see a
+        // not-yet-committed placement. The precheck runs under the same
+        // exclusive lock as the commit (and as decommission's scans),
+        // so there is no window between validation and commit. On any
+        // commit failure the written chunks are dropped; Unavailable is
+        // retryable client-side.
+        let placed_ids = placement.containers();
         let t0 = now_ns();
-        let outcome = self.meta.submit(MetaCommand::PutObject {
-            caller: claims.subject.clone(),
-            collection: collection.into(),
-            name: name.into(),
-            size: len,
-            sha3: hash,
-            placement,
-            now: unix_secs(),
-        })?;
+        let submitted = self.meta.submit_guarded(
+            MetaCommand::PutObject {
+                caller: claims.subject.clone(),
+                collection: collection.into(),
+                name: name.into(),
+                size: len,
+                sha3: hash,
+                placement,
+                now: unix_secs(),
+            },
+            || {
+                if placed_ids.iter().any(|&cid| {
+                    self.registry.is_draining(cid) || self.registry.get(cid).is_err()
+                }) {
+                    return Err(Error::Unavailable(
+                        "a placement target began draining during upload; retry the push"
+                            .into(),
+                    ));
+                }
+                Ok(())
+            },
+        );
+        // On an aborted commit the written chunks are left in place
+        // (not deleted): chunk keys are content-derived, so an
+        // identical-content object committed by another push may share
+        // them — deleting here could destroy its data. Leaked copies on
+        // a draining container disappear with the container; elsewhere
+        // they are harmless unreferenced bytes.
+        let outcome = submitted?;
         let meta = match outcome {
             CommandOutcome::Meta(meta) => *meta,
             CommandOutcome::Failed(e) => return Err(Error::Invalid(e)),
@@ -280,7 +372,7 @@ impl DynoStore {
             Some(ids) => ids,
             None => self
                 .placer
-                .select(&self.registry.infos(), chunk_size, cfg.n)? // line 2
+                .select(&self.registry.placement_infos(), chunk_size, cfg.n)? // line 2
                 .iter()
                 .map(|c| c.id)
                 .collect(),
@@ -291,6 +383,15 @@ impl DynoStore {
                 cfg.n,
                 targets.len()
             )));
+        }
+        // Dispatch-time drain check: selection (or the dynamic policy's
+        // pinning) may predate a concurrent decommission's draining
+        // flag — never start chunk writes onto a departing container.
+        // Unavailable is retryable: the client's retry re-selects.
+        if targets.iter().any(|&cid| self.registry.is_draining(cid)) {
+            return Err(Error::Unavailable(
+                "a selected container began draining; retry the push".into(),
+            ));
         }
 
         // Encode (lines 6-9) — measured for perf telemetry, modeled
@@ -369,27 +470,79 @@ impl DynoStore {
         let (data, collect_s, decode_s, decode_wall_s, fetched, degraded, chunk_io) =
             match &meta.placement {
                 ObjectPlacement::Single { container } => {
-                    let channel = self.registry.get(*container)?;
+                    // A Regular object has exactly one live copy, and a
+                    // lifecycle migration may move it between our
+                    // metadata read and this fetch (erasure readers are
+                    // covered by the parity budget; Single readers
+                    // follow the move instead): on a failed or
+                    // hash-mismatched fetch, re-read the placement once
+                    // and retry from wherever the copy went.
                     let key = object_key(&meta.sha3, meta.size);
-                    let t0 = now_ns();
-                    let out = channel.get(&key)?;
-                    let wall_s = (now_ns() - t0) as f64 / 1e9;
-                    let data = out.data.unwrap_or_default();
-                    let net_s =
-                        self.wan.transfer_s(channel.site(), self.gateway_site, meta.size, 1);
-                    // Integrity check on the regular path too (§IV-E2).
-                    if sha3_256(&data) != meta.sha3 {
-                        return Err(Error::Integrity("object hash mismatch".into()));
+                    let mut cid = *container;
+                    let mut chunk_io: Vec<ChunkIoReport> = Vec::with_capacity(2);
+                    let mut retried = false;
+                    loop {
+                        let mut last_err: Option<Error> = None;
+                        let fetched = match self.registry.get(cid) {
+                            Ok(channel) => {
+                                let t0 = now_ns();
+                                let res = channel.get(&key);
+                                let wall_s = (now_ns() - t0) as f64 / 1e9;
+                                let got = match res {
+                                    Ok(out) => {
+                                        let data = out.data.unwrap_or_default();
+                                        // Integrity check on the regular
+                                        // path too (§IV-E2).
+                                        if sha3_256(&data) == meta.sha3 {
+                                            let net_s = self.wan.transfer_s(
+                                                channel.site(),
+                                                self.gateway_site,
+                                                meta.size,
+                                                1,
+                                            );
+                                            Some((data, net_s + out.sim_s))
+                                        } else {
+                                            last_err = Some(Error::Integrity(
+                                                "object hash mismatch".into(),
+                                            ));
+                                            None
+                                        }
+                                    }
+                                    Err(e) => {
+                                        last_err = Some(e);
+                                        None
+                                    }
+                                };
+                                chunk_io.push(ChunkIoReport {
+                                    index: 0,
+                                    container: cid,
+                                    transport: channel.transport(),
+                                    ok: got.is_some(),
+                                    sim_s: got.as_ref().map_or(0.0, |&(_, s)| s),
+                                    wall_s,
+                                });
+                                got
+                            }
+                            Err(e) => {
+                                last_err = Some(e);
+                                None
+                            }
+                        };
+                        if let Some((data, sim)) = fetched {
+                            break (data, sim, 0.0, 0.0, 1usize, retried, chunk_io);
+                        }
+                        let err = last_err.expect("failed fetch recorded an error");
+                        if retried {
+                            return Err(err);
+                        }
+                        retried = true;
+                        match self.meta.read(|s| s.get_by_uuid(&meta.uuid))?.placement {
+                            ObjectPlacement::Single { container } if container != cid => {
+                                cid = container;
+                            }
+                            _ => return Err(err),
+                        }
                     }
-                    let chunk_io = vec![ChunkIoReport {
-                        index: 0,
-                        container: *container,
-                        transport: channel.transport(),
-                        ok: true,
-                        sim_s: net_s + out.sim_s,
-                        wall_s,
-                    }];
-                    (data, net_s + out.sim_s, 0.0, 0.0, 1usize, false, chunk_io)
                 }
                 ObjectPlacement::Erasure { n, k, chunks } => {
                     let cfg = ErasureConfig::new(*n, *k);
@@ -575,11 +728,22 @@ impl DynoStore {
     }
 
     fn delete_stored(&self, meta: &ObjectMeta) -> usize {
+        self.delete_placement(&meta.sha3, meta.size, &meta.placement)
+    }
+
+    /// Best-effort deletion of every stored copy a placement names
+    /// (evict/gc sweeps; push's commit-abort cleanup).
+    pub(super) fn delete_placement(
+        &self,
+        sha3: &[u8; 32],
+        size: u64,
+        placement: &ObjectPlacement,
+    ) -> usize {
         let mut deleted = 0;
-        match &meta.placement {
+        match placement {
             ObjectPlacement::Single { container } => {
                 if let Ok(c) = self.registry.get(*container) {
-                    if c.delete(&object_key(&meta.sha3, meta.size)).is_ok() {
+                    if c.delete(&object_key(sha3, size)).is_ok() {
                         deleted += 1;
                     }
                 }
@@ -587,7 +751,7 @@ impl DynoStore {
             ObjectPlacement::Erasure { chunks, .. } => {
                 for &(idx, cid) in chunks {
                     if let Ok(c) = self.registry.get(cid) {
-                        if c.delete(&chunk_key(&meta.sha3, meta.size, idx)).is_ok() {
+                        if c.delete(&chunk_key(sha3, size, idx)).is_ok() {
                             deleted += 1;
                         }
                     }
@@ -642,43 +806,7 @@ impl DynoStore {
             // instead of lingering in the committed placement.
             let cfg = ErasureConfig::new(n, k);
             let codec = self.codec(cfg)?;
-            let mut collected = Vec::with_capacity(k);
-            let mut bad_live: Vec<(u8, u32)> = Vec::new();
-            let mut cursor = 0usize;
-            while collected.len() < k {
-                let mut jobs = Vec::new();
-                while jobs.len() < k - collected.len() && cursor < live.len() {
-                    let (idx, cid) = live[cursor];
-                    cursor += 1;
-                    if let Ok(channel) = self.registry.get(cid) {
-                        jobs.push(ChunkJob {
-                            index: idx,
-                            channel,
-                            key: chunk_key(&meta.sha3, meta.size, idx),
-                            data: None,
-                        });
-                    }
-                }
-                if jobs.is_empty() {
-                    break;
-                }
-                for xfer in self.dispatch_chunk_io(jobs)? {
-                    let mut valid = false;
-                    if let Ok((Some(bytes), _)) = &xfer.res {
-                        if let Ok(chunk) = Chunk::unpack(bytes) {
-                            if chunk.header.index == xfer.index
-                                && chunk.header.object_hash == meta.sha3
-                            {
-                                collected.push(chunk);
-                                valid = true;
-                            }
-                        }
-                    }
-                    if !valid {
-                        bad_live.push((xfer.index, xfer.cid));
-                    }
-                }
-            }
+            let (collected, bad_live) = self.collect_chunks(&meta, k, &live)?;
             if collected.len() < k {
                 report.lost += 1;
                 continue;
@@ -723,11 +851,11 @@ impl DynoStore {
             let missing: Vec<u8> =
                 (0..n as u8).filter(|i| !placed_idx.contains(i)).collect();
 
-            // Healthy containers not already holding a chunk of this
-            // object, ranked by the load balancer.
+            // Healthy, non-draining containers not already holding a
+            // chunk of this object, ranked by the load balancer.
             let infos: Vec<_> = self
                 .registry
-                .infos()
+                .placement_infos()
                 .into_iter()
                 .filter(|i| i.alive && !live_ids.contains(&i.id))
                 .collect();
@@ -745,6 +873,7 @@ impl DynoStore {
                     data: Some(packed),
                 });
             }
+            let mut newly_placed: Vec<(u8, u32)> = Vec::new();
             for xfer in self.dispatch_chunk_io(jobs)? {
                 // A failed re-placement write must not abort the whole
                 // pass (transport failure is an expected event on this
@@ -752,16 +881,41 @@ impl DynoStore {
                 // pass retries the rest as still-missing.
                 if xfer.res.is_ok() {
                     new_placement.push((xfer.index, xfer.cid));
+                    newly_placed.push((xfer.index, xfer.cid));
                     report.chunks_moved += 1;
                 }
             }
             new_placement.sort_by_key(|&(idx, _)| idx);
+            // CAS against the placement this pass read: a concurrent
+            // lifecycle migration must not be silently overwritten (its
+            // committed placement names chunks repair's stale snapshot
+            // doesn't know about).
             let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
                 uuid: meta.uuid.clone(),
                 placement: ObjectPlacement::Erasure { n, k, chunks: new_placement },
+                expect: Some(meta.placement.clone()),
             })?;
-            if let CommandOutcome::Failed(e) = outcome {
-                return Err(Error::Consensus(e));
+            if let CommandOutcome::Failed(_) = outcome {
+                // Placement changed (migration committed) or the object
+                // vanished: drop the copies we just wrote — unless the
+                // committed placement references them — and let the
+                // next pass re-assess from fresh state.
+                let committed =
+                    self.meta.read(|s| s.get_by_uuid(&meta.uuid)).map(|m| m.placement).ok();
+                for &(idx, cid) in &newly_placed {
+                    let referenced = matches!(
+                        &committed,
+                        Some(ObjectPlacement::Erasure { chunks, .. })
+                            if chunks.contains(&(idx, cid))
+                    );
+                    if !referenced {
+                        if let Ok(c) = self.registry.get(cid) {
+                            let _ = c.delete(&chunk_key(&meta.sha3, meta.size, idx));
+                        }
+                    }
+                }
+                report.chunks_moved -= newly_placed.len();
+                continue;
             }
             report.repaired += 1;
             self.metrics.repairs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);

@@ -88,3 +88,54 @@ pub struct RepairReport {
     /// Chunks rewritten.
     pub chunks_moved: usize,
 }
+
+/// Result of draining a container out of the storage network
+/// (`decommission`): every chunk it held migrated to live targets, each
+/// move committed through Paxos, the source copy deleted, and — when the
+/// drain completed cleanly — the container deregistered.
+#[derive(Debug, Clone, Default)]
+pub struct DecommissionReport {
+    /// Container that was drained.
+    pub container: u32,
+    /// Object versions that held data on the draining container.
+    pub objects_scanned: usize,
+    /// Chunks (or whole Regular-policy objects) migrated off.
+    pub chunks_moved: usize,
+    /// Chunks whose source copy was unreadable/corrupt and had to be
+    /// rebuilt from the object's surviving chunks before migrating.
+    pub reconstructed: usize,
+    /// Chunks still stranded on the container when the drain stopped
+    /// (no feasible target or moves kept failing) — each is still on
+    /// its old placement; a later `decommission` call retries them.
+    pub failed_moves: usize,
+    /// True when the drain completed and the container was removed from
+    /// the registry; false leaves it registered and draining.
+    pub removed: bool,
+    /// Per-chunk migration dispatch detail (reads and writes).
+    pub chunk_io: Vec<ChunkIoReport>,
+}
+
+/// Result of a utilization-rebalance run (`rebalance`): bounded batches
+/// of hot→cold chunk moves until the weighted-occupancy spread drops
+/// under the threshold.
+#[derive(Debug, Clone, Default)]
+pub struct RebalanceReport {
+    /// Spread (max − min weighted occupancy) before the first batch.
+    pub spread_before: f64,
+    /// Spread when the run stopped.
+    pub spread_after: f64,
+    /// Convergence target the run was asked to reach.
+    pub threshold: f64,
+    /// Move batches executed.
+    pub batches: usize,
+    /// Chunk migrations committed through Paxos.
+    pub chunks_moved: usize,
+    /// Moves that failed mid-flight (old placement kept; the next batch
+    /// re-plans them).
+    pub failed_moves: usize,
+    /// True when the run stopped because spread ≤ threshold (as opposed
+    /// to running out of moves, budget, or progress).
+    pub converged: bool,
+    /// Per-chunk migration dispatch detail (reads and writes).
+    pub chunk_io: Vec<ChunkIoReport>,
+}

@@ -10,11 +10,18 @@
 //! * `DELETE /objects/<collection...>/<name>` → evict
 //! * `GET  /metrics` → counters JSON
 //! * `POST /admin/repair`, `POST /admin/gc`
-//! * `GET  /health` → liveness + container census
+//! * `POST /admin/rebalance` body `{"threshold": .., "max_moves": ..}`
+//! * `POST /admin/decommission/<id>` → drain + remove a container
+//! * `POST /admin/undrain/<id>` → cancel a stopped drain
+//! * `GET  /health` → liveness + container census + imbalance gauge
+//!
+//! Every `/admin/*` route requires a valid bearer token with the
+//! `admin` scope (401 without/with a bad token, 403 without the scope;
+//! operator tokens come from [`DynoStore::issue_admin_token`]).
 
 use std::sync::Arc;
 
-use crate::coordinator::{DynoStore, PullOpts, PushOpts};
+use crate::coordinator::{DynoStore, PullOpts, PushOpts, RebalanceOpts};
 use crate::json::{obj, parse, Value};
 use crate::net::{HttpRequest, HttpResponse, HttpServer};
 use crate::util::unix_secs;
@@ -32,8 +39,13 @@ fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
         ("POST", "/auth/login") => auth_login(store, &req),
         ("GET", "/metrics") => Ok(metrics(store)),
         ("GET", "/health") => Ok(health(store)),
-        ("POST", "/admin/repair") => admin_repair(store),
+        ("POST", "/admin/repair") => admin_repair(store, &req),
         ("POST", "/admin/gc") => admin_gc(store, &req),
+        ("POST", "/admin/rebalance") => admin_rebalance(store, &req),
+        ("POST", path) if path.starts_with("/admin/decommission/") => {
+            admin_decommission(store, &req)
+        }
+        ("POST", path) if path.starts_with("/admin/undrain/") => admin_undrain(store, &req),
         (method, path) if path.starts_with("/objects/") => object_route(store, method, &req),
         _ => Err(Error::NotFound(format!("{} {}", req.method, req.path))),
     };
@@ -97,6 +109,8 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
             ("status", if live > 0 { "ok" } else { "degraded" }.into()),
             ("containers", infos.len().into()),
             ("live", live.into()),
+            ("draining", store.registry.draining_ids().len().into()),
+            ("imbalance", store.utilization_spread().into()),
             ("engine", store.engine().as_str().into()),
             ("backend", store.backend_name().into()),
             ("transports", obj(census)),
@@ -104,7 +118,33 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
     )
 }
 
-fn admin_repair(store: &Arc<DynoStore>) -> Result<HttpResponse> {
+/// Admin gate (satellite bugfix: these endpoints used to accept
+/// unauthenticated requests): a valid bearer token with the `admin`
+/// scope is required on every `/admin/*` route. Ordinary
+/// `register`/`login` tokens carry only `read`/`write` and get 403;
+/// operator tokens come from [`DynoStore::issue_admin_token`] (printed
+/// by `dynostore serve` at startup).
+fn admin_auth(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<()> {
+    let token = req
+        .bearer_token()
+        .ok_or_else(|| Error::Auth("admin endpoints require a bearer token".into()))?;
+    let claims = store.tokens.validate(token).map_err(|e| {
+        store
+            .metrics
+            .auth_failures
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        e
+    })?;
+    if !claims.has_scope("admin") {
+        return Err(Error::PermissionDenied(
+            "admin operations require the admin scope".into(),
+        ));
+    }
+    Ok(())
+}
+
+fn admin_repair(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    admin_auth(store, req)?;
     let r = store.repair()?;
     Ok(HttpResponse::json(
         200,
@@ -117,7 +157,73 @@ fn admin_repair(store: &Arc<DynoStore>) -> Result<HttpResponse> {
     ))
 }
 
+fn admin_rebalance(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    admin_auth(store, req)?;
+    let defaults = RebalanceOpts::default();
+    let opts = if req.body.is_empty() {
+        defaults
+    } else {
+        let body = std::str::from_utf8(&req.body)
+            .map_err(|_| Error::Invalid("body not utf-8".into()))?;
+        let v = parse(body)?;
+        RebalanceOpts {
+            threshold: v.opt_f64("threshold", defaults.threshold),
+            max_moves: v.opt_u64("max_moves", defaults.max_moves as u64) as usize,
+            batch_moves: v.opt_u64("batch_moves", defaults.batch_moves as u64) as usize,
+        }
+    };
+    let r = store.rebalance(opts)?;
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![
+            ("spread_before", r.spread_before.into()),
+            ("spread_after", r.spread_after.into()),
+            ("threshold", r.threshold.into()),
+            ("batches", r.batches.into()),
+            ("chunks_moved", r.chunks_moved.into()),
+            ("failed_moves", r.failed_moves.into()),
+            ("converged", Value::Bool(r.converged)),
+        ]),
+    ))
+}
+
+fn admin_decommission(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    admin_auth(store, req)?;
+    let id: u32 = req
+        .path
+        .strip_prefix("/admin/decommission/")
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Invalid(format!("bad decommission path '{}'", req.path)))?;
+    let r = store.decommission(id)?;
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![
+            ("container", u64::from(r.container).into()),
+            ("objects_scanned", r.objects_scanned.into()),
+            ("chunks_moved", r.chunks_moved.into()),
+            ("reconstructed", r.reconstructed.into()),
+            ("failed_moves", r.failed_moves.into()),
+            ("removed", Value::Bool(r.removed)),
+        ]),
+    ))
+}
+
+fn admin_undrain(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    admin_auth(store, req)?;
+    let id: u32 = req
+        .path
+        .strip_prefix("/admin/undrain/")
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Invalid(format!("bad undrain path '{}'", req.path)))?;
+    store.cancel_decommission(id)?;
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![("container", u64::from(id).into()), ("draining", Value::Bool(false))]),
+    ))
+}
+
 fn admin_gc(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    admin_auth(store, req)?;
     let retention = if req.body.is_empty() {
         crate::metadata::DEFAULT_RETENTION_SECS
     } else {
@@ -184,29 +290,28 @@ fn object_route(store: &Arc<DynoStore>, method: &str, req: &HttpRequest) -> Resu
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::container::{deploy_containers, AgentSpec};
+    use crate::container::deploy_containers;
     use crate::net::HttpClient;
-    use crate::sim::{DeviceKind, Site};
+    use crate::testkit::uniform_specs;
 
-    fn gateway() -> (HttpServer, HttpClient) {
+    /// (server, client, operator `Authorization` header for /admin/*).
+    fn gateway() -> (HttpServer, HttpClient, String) {
         gateway_with_engine(crate::coordinator::GfEngine::PureRust)
     }
 
     fn gateway_with_engine(
         engine: crate::coordinator::GfEngine,
-    ) -> (HttpServer, HttpClient) {
+    ) -> (HttpServer, HttpClient, String) {
         let ds = Arc::new(DynoStore::builder().engine(engine).build());
-        let specs: Vec<AgentSpec> = (0..12)
-            .map(|i| {
-                AgentSpec::new(format!("dc{i}"), Site::ChameleonUc, DeviceKind::ChameleonLocal)
-            })
-            .collect();
-        for c in deploy_containers(&specs, 12, 0).containers {
+        for c in deploy_containers(&uniform_specs("dc", 12, 256 << 20, 1 << 40), 12, 0)
+            .containers
+        {
             ds.add_container(c).unwrap();
         }
+        let admin = format!("Bearer {}", ds.issue_admin_token(3600));
         let server = serve(ds, "127.0.0.1:0", 4).unwrap();
         let client = HttpClient::new(&server.addr().to_string());
-        (server, client)
+        (server, client, admin)
     }
 
     fn register(client: &HttpClient, user: &str) -> String {
@@ -223,7 +328,7 @@ mod tests {
 
     #[test]
     fn rest_object_lifecycle() {
-        let (_server, client) = gateway();
+        let (_server, client, _admin) = gateway();
         let token = register(&client, "UserA");
         let auth = format!("Bearer {token}");
         let payload: Vec<u8> = (0..50_000u32).map(|i| (i % 256) as u8).collect();
@@ -254,7 +359,7 @@ mod tests {
 
     #[test]
     fn auth_rejected_without_token() {
-        let (_server, client) = gateway();
+        let (_server, client, _admin) = gateway();
         let resp = client.get("/objects/UserA/x", &[]).unwrap();
         assert_eq!(resp.status, 401);
         let resp =
@@ -264,7 +369,7 @@ mod tests {
 
     #[test]
     fn permission_denied_is_403() {
-        let (_server, client) = gateway();
+        let (_server, client, _admin) = gateway();
         let token_a = register(&client, "UserA");
         let token_b = register(&client, "UserB");
         let auth_a = format!("Bearer {token_a}");
@@ -277,7 +382,7 @@ mod tests {
 
     #[test]
     fn metrics_health_admin_endpoints() {
-        let (_server, client) = gateway();
+        let (_server, client, admin) = gateway();
         let token = register(&client, "UserA");
         let auth = format!("Bearer {token}");
         client.put("/objects/UserA/o", &[("authorization", &auth)], b"data").unwrap();
@@ -291,19 +396,117 @@ mod tests {
         let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
         assert_eq!(v.req_str("status").unwrap(), "ok");
         assert_eq!(v.req_u64("containers").unwrap(), 12);
+        assert_eq!(v.req_u64("draining").unwrap(), 0);
+        assert!(v.get("imbalance").as_f64().is_some(), "imbalance gauge present");
         assert_eq!(v.req_str("engine").unwrap(), "pure-rust");
         assert_eq!(v.req_str("backend").unwrap(), "pure-rust");
         assert_eq!(v.get("transports").req_u64("local").unwrap(), 12);
 
-        let r = client.post("/admin/repair", &[], &[]).unwrap();
+        let r = client.post("/admin/repair", &[("authorization", &admin)], &[]).unwrap();
         assert_eq!(r.status, 200);
-        let g = client.post("/admin/gc", &[], b"{\"retention_secs\": 0}").unwrap();
+        let g = client
+            .post("/admin/gc", &[("authorization", &admin)], b"{\"retention_secs\": 0}")
+            .unwrap();
         assert_eq!(g.status, 200);
     }
 
     #[test]
+    fn admin_endpoints_require_authentication() {
+        let (_server, client, _admin) = gateway();
+        // Every /admin/* route rejects missing and invalid tokens.
+        for (path, body) in [
+            ("/admin/repair", &b""[..]),
+            ("/admin/gc", &b""[..]),
+            ("/admin/rebalance", &b""[..]),
+            ("/admin/decommission/0", &b""[..]),
+            ("/admin/undrain/0", &b""[..]),
+        ] {
+            let resp = client.post(path, &[], body).unwrap();
+            assert_eq!(resp.status, 401, "unauthenticated {path}");
+            let resp =
+                client.post(path, &[("authorization", "Bearer junk")], body).unwrap();
+            assert_eq!(resp.status, 401, "garbage token {path}");
+        }
+    }
+
+    #[test]
+    fn admin_endpoints_reject_tokens_without_admin_scope() {
+        // An ordinary self-registered user's token carries read+write
+        // but NOT admin: it must not authorize admin operations.
+        let (_server, client, _admin) = gateway();
+        let user_token = register(&client, "Ordinary");
+        let auth = format!("Bearer {user_token}");
+        for path in
+            ["/admin/repair", "/admin/gc", "/admin/rebalance", "/admin/decommission/0"]
+        {
+            let resp = client.post(path, &[("authorization", &auth)], &[]).unwrap();
+            assert_eq!(resp.status, 403, "user token must not admin {path}");
+        }
+    }
+
+    #[test]
+    fn rest_decommission_and_rebalance() {
+        let (_server, client, admin) = gateway();
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        let payload: Vec<u8> = (0..40_000u32).map(|i| (i % 251) as u8).collect();
+        let put = client
+            .put("/objects/UserA/obj", &[("authorization", &auth)], &payload)
+            .unwrap();
+        assert_eq!(put.status, 201);
+
+        // Drain container 0 (12 containers, n = 10: spares exist).
+        let resp = client
+            .post("/admin/decommission/0", &[("authorization", &admin)], &[])
+            .unwrap();
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let v = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(v.get("removed").as_bool().unwrap_or(false), "drain completed");
+
+        let h = client.get("/health", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+        assert_eq!(v.req_u64("containers").unwrap(), 11);
+
+        // Rebalance with a generous threshold converges immediately.
+        let resp = client
+            .post(
+                "/admin/rebalance",
+                &[("authorization", &admin)],
+                b"{\"threshold\": 0.9}",
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let v = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(v.get("converged").as_bool().unwrap_or(false));
+
+        // The object survived the drain bit-identically.
+        let got = client.get("/objects/UserA/obj", &[("authorization", &auth)]).unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, payload);
+
+        // Undrain roundtrip: flag a container draining, cancel it.
+        let resp =
+            client.post("/admin/undrain/1", &[("authorization", &admin)], &[]).unwrap();
+        assert_eq!(resp.status, 200);
+
+        // Unknown container id → 404; garbage id → 400.
+        let resp = client
+            .post("/admin/decommission/77", &[("authorization", &admin)], &[])
+            .unwrap();
+        assert_eq!(resp.status, 404);
+        let resp = client
+            .post("/admin/undrain/77", &[("authorization", &admin)], &[])
+            .unwrap();
+        assert_eq!(resp.status, 404);
+        let resp = client
+            .post("/admin/decommission/notanid", &[("authorization", &admin)], &[])
+            .unwrap();
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
     fn swar_parallel_gateway_serves_objects_end_to_end() {
-        let (_server, client) =
+        let (_server, client, _admin) =
             gateway_with_engine(crate::coordinator::GfEngine::SwarParallel);
         let token = register(&client, "UserA");
         let auth = format!("Bearer {token}");
@@ -327,7 +530,7 @@ mod tests {
 
     #[test]
     fn duplicate_registration_conflicts() {
-        let (_server, client) = gateway();
+        let (_server, client, _admin) = gateway();
         register(&client, "UserA");
         let resp = client.post("/auth/register", &[], b"{\"user\": \"UserA\"}").unwrap();
         assert_eq!(resp.status, 400);

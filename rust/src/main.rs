@@ -10,7 +10,9 @@
 //! dynostore pull   --addr HOST:PORT --token T /UserA/col/name ./out
 //! dynostore exists --addr HOST:PORT --token T /UserA/col/name
 //! dynostore evict  --addr HOST:PORT --token T /UserA/col/name
-//! dynostore admin  --addr HOST:PORT repair|gc|metrics|health
+//! dynostore admin  --addr HOST:PORT [--token T] repair|gc|metrics|health
+//! dynostore decommission --addr HOST:PORT --token T ID
+//! dynostore rebalance    --addr HOST:PORT --token T [--threshold F] [--max-moves N]
 //! ```
 
 use std::collections::HashMap;
@@ -67,6 +69,9 @@ fn run(args: &[String]) -> Result<(), String> {
         "register" => register(&flags),
         "push" | "pull" | "exists" | "evict" => object_op(cmd, &flags, &pos),
         "admin" => admin(&flags, &pos),
+        "decommission" => decommission(&flags, &pos),
+        "undrain" => undrain(&flags, &pos),
+        "rebalance" => rebalance(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -90,7 +95,14 @@ fn print_usage() {
          \x20 pull     --addr HOST:PORT --token T PATH [OUT]\n\
          \x20 exists   --addr HOST:PORT --token T PATH\n\
          \x20 evict    --addr HOST:PORT --token T PATH\n\
-         \x20 admin    --addr HOST:PORT repair|gc|metrics|health\n\
+         \x20 admin    --addr HOST:PORT [--token T] repair|gc|metrics|health\n\
+         \x20          (repair/gc need the admin token `serve` prints at startup)\n\
+         \x20 decommission --addr HOST:PORT --token T ID\n\
+         \x20          (drain container ID: migrate every chunk off, then remove it)\n\
+         \x20 undrain  --addr HOST:PORT --token T ID\n\
+         \x20          (cancel a stopped drain: container rejoins placement)\n\
+         \x20 rebalance    --addr HOST:PORT --token T [--threshold F] [--max-moves N]\n\
+         \x20          (move chunks hot\u{2192}cold until utilization spread \u{2264} threshold)\n\
          \n\
          PATH is /User/Collection.../name. See README.md for the config\n\
          file format and examples/ for library usage."
@@ -115,6 +127,9 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
     let workers: usize =
         flags.get("workers").and_then(|w| w.parse().ok()).unwrap_or(8);
     let store = config.build().map_err(|e| e.to_string())?;
+    // The /admin/* routes require the admin scope; hand the operator a
+    // token at startup (mintable only deployment-side).
+    let admin_token = store.issue_admin_token(30 * 24 * 3600);
     let server =
         gateway::serve(Arc::clone(&store), &addr, workers).map_err(|e| e.to_string())?;
     dynostore::log_info!(
@@ -126,6 +141,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
         store.backend_name()
     );
     println!("listening on {}", server.addr());
+    println!("admin token (30d, for admin/decommission/undrain/rebalance): {admin_token}");
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -252,13 +268,24 @@ fn object_op(
     }
 }
 
+/// `Authorization` header for admin-gated endpoints (`--token`).
+fn admin_headers(flags: &HashMap<String, String>) -> Result<Vec<(String, String)>, String> {
+    let token = need(flags, "token")?;
+    Ok(vec![("authorization".to_string(), format!("Bearer {token}"))])
+}
+
 fn admin(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
     let addr = need(flags, "addr")?;
     let action = pos.first().map(|s| s.as_str()).unwrap_or("metrics");
     let client = HttpClient::new(addr);
     let resp = match action {
-        "repair" => client.post("/admin/repair", &[], &[]),
-        "gc" => client.post("/admin/gc", &[], &[]),
+        // repair/gc mutate the deployment: the gateway requires a token.
+        "repair" | "gc" => {
+            let headers = admin_headers(flags)?;
+            let hdrs: Vec<(&str, &str)> =
+                headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            client.post(&format!("/admin/{action}"), &hdrs, &[])
+        }
         "metrics" => client.get("/metrics", &[]),
         "health" => client.get("/health", &[]),
         other => return Err(format!("unknown admin action '{other}'")),
@@ -266,4 +293,78 @@ fn admin(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> 
     .map_err(|e| e.to_string())?;
     println!("{}", String::from_utf8_lossy(&resp.body));
     Ok(())
+}
+
+/// Drain a container out of the storage network and remove it.
+fn decommission(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
+    let addr = need(flags, "addr")?;
+    let id: u32 = pos
+        .first()
+        .ok_or("missing container ID to decommission")?
+        .parse()
+        .map_err(|_| "container ID must be a number".to_string())?;
+    let headers = admin_headers(flags)?;
+    let hdrs: Vec<(&str, &str)> =
+        headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let client = HttpClient::new(addr);
+    let resp = client
+        .post(&format!("/admin/decommission/{id}"), &hdrs, &[])
+        .map_err(|e| e.to_string())?;
+    println!("{}", String::from_utf8_lossy(&resp.body));
+    if resp.status == 200 {
+        Ok(())
+    } else {
+        Err(format!("decommission failed: {}", resp.status))
+    }
+}
+
+/// Cancel a stopped drain: the container rejoins the placement pool.
+fn undrain(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
+    let addr = need(flags, "addr")?;
+    let id: u32 = pos
+        .first()
+        .ok_or("missing container ID to undrain")?
+        .parse()
+        .map_err(|_| "container ID must be a number".to_string())?;
+    let headers = admin_headers(flags)?;
+    let hdrs: Vec<(&str, &str)> =
+        headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let client = HttpClient::new(addr);
+    let resp = client
+        .post(&format!("/admin/undrain/{id}"), &hdrs, &[])
+        .map_err(|e| e.to_string())?;
+    println!("{}", String::from_utf8_lossy(&resp.body));
+    if resp.status == 200 {
+        Ok(())
+    } else {
+        Err(format!("undrain failed: {}", resp.status))
+    }
+}
+
+/// Rebalance utilization across the storage network.
+fn rebalance(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = need(flags, "addr")?;
+    let headers = admin_headers(flags)?;
+    let hdrs: Vec<(&str, &str)> =
+        headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let mut body_fields = Vec::new();
+    if let Some(t) = flags.get("threshold") {
+        let t: f64 = t.parse().map_err(|_| "--threshold must be a number".to_string())?;
+        body_fields.push(format!("\"threshold\": {t}"));
+    }
+    if let Some(m) = flags.get("max-moves") {
+        let m: u64 = m.parse().map_err(|_| "--max-moves must be a number".to_string())?;
+        body_fields.push(format!("\"max_moves\": {m}"));
+    }
+    let body = format!("{{{}}}", body_fields.join(", "));
+    let client = HttpClient::new(addr);
+    let resp = client
+        .post("/admin/rebalance", &hdrs, body.as_bytes())
+        .map_err(|e| e.to_string())?;
+    println!("{}", String::from_utf8_lossy(&resp.body));
+    if resp.status == 200 {
+        Ok(())
+    } else {
+        Err(format!("rebalance failed: {}", resp.status))
+    }
 }

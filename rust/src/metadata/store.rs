@@ -358,13 +358,31 @@ impl MetadataStore {
 
     /// Repoint an object version's placement (health-service repair,
     /// §III-B: "dynamically reallocates operations to healthy
-    /// containers").
-    pub fn update_placement(&self, uuid: &str, placement: ObjectPlacement) -> Result<()> {
+    /// containers"; the lifecycle plane's migration commits).
+    ///
+    /// When `expect` is given the update is a compare-and-swap: it only
+    /// applies if the current placement is exactly `expect`, so two
+    /// concurrent migrations (or a migration racing repair) can't
+    /// silently overwrite each other's committed placement — the loser
+    /// fails and re-plans against fresh state.
+    pub fn update_placement(
+        &self,
+        uuid: &str,
+        placement: ObjectPlacement,
+        expect: Option<&ObjectPlacement>,
+    ) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
         let meta = inner
             .objects
             .get_mut(uuid)
             .ok_or_else(|| Error::NotFound(format!("uuid {uuid}")))?;
+        if let Some(exp) = expect {
+            if &meta.placement != exp {
+                return Err(Error::Invalid(format!(
+                    "placement of {uuid} changed since it was read"
+                )));
+            }
+        }
         meta.placement = placement;
         Ok(())
     }

@@ -39,8 +39,16 @@ pub enum MetaCommand {
     },
     Evict { caller: String, collection: String, name: String },
     Gc { now: u64, retention_secs: u64 },
-    /// Health-repair placement update (not a user-facing op).
-    UpdatePlacement { uuid: String, placement: ObjectPlacement },
+    /// Health-repair / migration placement update (not a user-facing
+    /// op). `expect` makes the commit a compare-and-swap: it fails if
+    /// the stored placement no longer matches, so concurrent
+    /// repair/migration writers can't overwrite each other (`None` =
+    /// unconditional).
+    UpdatePlacement {
+        uuid: String,
+        placement: ObjectPlacement,
+        expect: Option<ObjectPlacement>,
+    },
 }
 
 impl MetaCommand {
@@ -91,11 +99,17 @@ impl MetaCommand {
                 ("now", (*now).into()),
                 ("retention", (*retention_secs).into()),
             ]),
-            MetaCommand::UpdatePlacement { uuid, placement } => obj(vec![
-                ("op", "update_placement".into()),
-                ("uuid", uuid.as_str().into()),
-                ("placement", placement_json(placement)),
-            ]),
+            MetaCommand::UpdatePlacement { uuid, placement, expect } => {
+                let mut fields = vec![
+                    ("op", "update_placement".into()),
+                    ("uuid", uuid.as_str().into()),
+                    ("placement", placement_json(placement)),
+                ];
+                if let Some(exp) = expect {
+                    fields.push(("expect", placement_json(exp)));
+                }
+                obj(fields)
+            }
         };
         to_string(&v)
     }
@@ -149,6 +163,10 @@ impl MetaCommand {
             "update_placement" => MetaCommand::UpdatePlacement {
                 uuid: v.req_str("uuid")?.into(),
                 placement: placement_from_json(v.get("placement"))?,
+                expect: match v.get("expect") {
+                    Value::Null => None,
+                    other => Some(placement_from_json(other)?),
+                },
             },
             other => return Err(Error::Json(format!("unknown op '{other}'"))),
         })
@@ -292,7 +310,22 @@ impl ReplicatedMeta {
     /// replica. Returns the command's own result (from the first live
     /// replica). Fails with `Consensus` if no quorum.
     pub fn submit(&self, cmd: MetaCommand) -> Result<CommandOutcome> {
+        self.submit_guarded(cmd, || Ok(()))
+    }
+
+    /// Like [`ReplicatedMeta::submit`], but run `precheck` under the
+    /// exclusive metadata lock first, aborting the proposal (no slot
+    /// consumed) if it fails. Readers and writers serialize against the
+    /// same lock, so the precheck is atomic with the commit — push uses
+    /// this to validate placement targets against the registry's
+    /// draining state at the last possible instant.
+    pub fn submit_guarded(
+        &self,
+        cmd: MetaCommand,
+        precheck: impl FnOnce() -> Result<()>,
+    ) -> Result<CommandOutcome> {
         let _w = self.rw.write().unwrap();
+        precheck()?;
         let payload = cmd.to_json();
         let _slot = self.group.propose_owned(0, payload)?;
         let mut outcome: Option<CommandOutcome> = None;
@@ -387,8 +420,8 @@ fn apply(store: &MetadataStore, cmd: &MetaCommand) -> CommandOutcome {
         MetaCommand::Gc { now, retention_secs } => {
             CommandOutcome::Collected(store.gc(*now, *retention_secs))
         }
-        MetaCommand::UpdatePlacement { uuid, placement } => {
-            as_outcome(store.update_placement(uuid, placement.clone()))
+        MetaCommand::UpdatePlacement { uuid, placement, expect } => {
+            as_outcome(store.update_placement(uuid, placement.clone(), expect.as_ref()))
         }
     }
 }
@@ -439,6 +472,24 @@ mod tests {
             put_cmd("obj", 5),
             MetaCommand::Evict { caller: "u".into(), collection: "/u".into(), name: "o".into() },
             MetaCommand::Gc { now: 100, retention_secs: 60 },
+            MetaCommand::UpdatePlacement {
+                uuid: "u-1".into(),
+                placement: ObjectPlacement::Single { container: 4 },
+                expect: None,
+            },
+            MetaCommand::UpdatePlacement {
+                uuid: "u-2".into(),
+                placement: ObjectPlacement::Erasure {
+                    n: 3,
+                    k: 2,
+                    chunks: vec![(0, 1), (1, 2), (2, 3)],
+                },
+                expect: Some(ObjectPlacement::Erasure {
+                    n: 3,
+                    k: 2,
+                    chunks: vec![(0, 1), (1, 2), (2, 9)],
+                }),
+            },
         ];
         for cmd in cmds {
             let json = cmd.to_json();

@@ -8,6 +8,8 @@
 //! the argmin over either; tie-breaking is by container id for
 //! determinism.
 
+pub mod rebalance;
+
 use crate::container::ContainerInfo;
 use crate::sim::{Site, Wan};
 use crate::{Error, Result};
@@ -133,31 +135,48 @@ impl Placer {
     /// Select `count` distinct containers, best-first (erasure placement
     /// spreads chunks over n containers — Algorithm 1 line 2; fewer
     /// available is the Algorithm 1 line 4 error).
+    ///
+    /// Each selection is made sequentially against a *working* snapshot:
+    /// the chosen container's `fs_avail`/`mem_avail` are debited by the
+    /// chunk size before the next selection is scored, so a near-full
+    /// container is never over-committed within a single placement. The
+    /// returned infos carry the debited (post-commitment) headroom.
     pub fn select(
         &self,
         infos: &[ContainerInfo],
         size: u64,
         count: usize,
     ) -> Result<Vec<ContainerInfo>> {
-        let scores = self.scores(infos, size);
-        let mut ranked: Vec<(usize, f64)> = scores
-            .iter()
-            .copied()
-            .enumerate()
-            .filter(|&(_, s)| s < INFEASIBLE)
-            .collect();
-        ranked.sort_by(|a, b| {
-            a.1.partial_cmp(&b.1)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(infos[a.0].id.cmp(&infos[b.0].id))
-        });
-        if ranked.len() < count {
-            return Err(Error::Placement(format!(
-                "not enough containers available: need {count}, have {}",
-                ranked.len()
-            )));
+        let mut pool: Vec<ContainerInfo> = infos.to_vec();
+        let mut picked: Vec<ContainerInfo> = Vec::with_capacity(count);
+        for _ in 0..count {
+            let scores = self.scores(&pool, size);
+            let mut best: Option<(usize, f64)> = None;
+            for (i, &s) in scores.iter().enumerate() {
+                if s >= INFEASIBLE {
+                    continue;
+                }
+                best = match best {
+                    Some((bi, bs)) if bs < s || (bs == s && pool[bi].id < pool[i].id) => {
+                        Some((bi, bs))
+                    }
+                    _ => Some((i, s)),
+                };
+            }
+            let Some((bi, _)) = best else {
+                return Err(Error::Placement(format!(
+                    "not enough containers available: need {count}, have {}",
+                    picked.len() + scores.iter().filter(|&&s| s < INFEASIBLE).count()
+                )));
+            };
+            let mut chosen = pool.swap_remove(bi);
+            // Debit the committed bytes (one chunk lands here) so the
+            // remaining selections score against real residual headroom.
+            chosen.fs_avail = chosen.fs_avail.saturating_sub(size);
+            chosen.mem_avail = chosen.mem_avail.saturating_sub(size);
+            picked.push(chosen);
         }
-        Ok(ranked.into_iter().take(count).map(|(i, _)| infos[i].clone()).collect())
+        Ok(picked)
     }
 }
 
@@ -228,6 +247,29 @@ mod tests {
             vec![info(1, 30_000, 100), info(2, 90_000, 100), info(3, 60_000, 100)];
         let sel = placer.select(&infos, 100, 3).unwrap();
         assert_eq!(sel.iter().map(|c| c.id).collect::<Vec<_>>(), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn select_debits_each_choice_within_one_placement() {
+        // The returned snapshots reflect the committed chunk: fs/mem
+        // headroom is debited selection by selection, so a caller (and
+        // the next selection's scores) see post-placement reality
+        // instead of the static pre-placement snapshot.
+        let placer = Placer::default();
+        let infos = vec![info(1, 50_000, 800), info(2, 80_000, 800), info(3, 20_000, 800)];
+        let sel = placer.select(&infos, 500, 3).unwrap();
+        assert_eq!(sel.iter().map(|c| c.id).collect::<Vec<_>>(), vec![2, 1, 3]);
+        for c in &sel {
+            let orig = infos.iter().find(|i| i.id == c.id).unwrap();
+            assert_eq!(c.fs_avail, orig.fs_avail - 500, "fs debited for {}", c.id);
+            assert_eq!(c.mem_avail, orig.mem_avail - 500, "mem debited for {}", c.id);
+        }
+        // A container whose headroom covers one chunk but not two is
+        // still selected exactly once and never over-committed.
+        let tight = vec![info(1, 1_500, 800), info(2, 90_000, 800)];
+        let sel = placer.select(&tight, 1_000, 2).unwrap();
+        let t = sel.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(t.fs_avail, 500, "committed exactly one chunk");
     }
 
     #[test]

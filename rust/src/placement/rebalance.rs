@@ -1,0 +1,317 @@
+//! Utilization rebalancing planner (paper §III-B: "a load-balancing
+//! algorithm ensures equitable and efficient utilization of storage
+//! resources" — extended here beyond upload time, per the elastic
+//! lifecycle of Dynamo-style cross-site storage): given the fleet's
+//! monitor snapshots and the committed chunk placements, plan a bounded
+//! batch of chunk moves from the hottest container to the coldest
+//! feasible one until the weighted-occupancy spread falls under a
+//! threshold.
+//!
+//! The planner is **pure** — it never touches channels or metadata; the
+//! coordinator's migration plane ([`crate::coordinator::RebalanceOpts`])
+//! executes the returned moves and re-snapshots the fleet between
+//! batches, so planning inaccuracies (cache effects, concurrent pushes)
+//! self-correct at the next batch boundary.
+
+use std::collections::HashMap;
+
+use crate::container::ContainerInfo;
+use crate::placement::Weights;
+
+/// Eq. 1 recast as *occupancy* in `[0, 1]`: the weighted fraction of
+/// memory + filesystem already used. The rebalancer equalizes this
+/// across the fleet (spread = max − min).
+pub fn occupancy(info: &ContainerInfo, w: Weights) -> f64 {
+    let used_frac = |avail: u64, total: u64| {
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - avail as f64 / total as f64
+        }
+    };
+    w.w1_mem * used_frac(info.mem_avail, info.mem_total)
+        + w.w2_fs * used_frac(info.fs_avail, info.fs_total)
+}
+
+/// Imbalance metric: max − min weighted occupancy over the live fleet.
+/// Fewer than two live containers is trivially balanced (0.0).
+pub fn spread(infos: &[ContainerInfo], w: Weights) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut n = 0usize;
+    for i in infos.iter().filter(|i| i.alive) {
+        let o = occupancy(i, w);
+        lo = lo.min(o);
+        hi = hi.max(o);
+        n += 1;
+    }
+    if n < 2 {
+        0.0
+    } else {
+        hi - lo
+    }
+}
+
+/// One object's committed chunk placement, as the planner sees it.
+pub struct ObjectChunks {
+    pub uuid: String,
+    /// Wire/disk bytes of one chunk of this object (header + payload).
+    pub chunk_bytes: u64,
+    /// `(chunk index, container id)` pairs of the committed placement.
+    pub holders: Vec<(u8, u32)>,
+    /// How many of this object's chunks may move in one batch. The
+    /// coordinator passes `n − k`: a pull racing the batch can lose at
+    /// most the parity budget and still reconstruct from the rest.
+    pub max_moves: usize,
+}
+
+/// One planned chunk migration (hot source → cold target).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedMove {
+    pub uuid: String,
+    pub index: u8,
+    pub from: u32,
+    pub to: u32,
+    pub bytes: u64,
+}
+
+/// Model a migration's effect on the target: the chunk lands on disk
+/// AND in the write-through cache (occupancy counts both terms, so the
+/// working snapshot must move both or the planner chases spread its
+/// moves can't change).
+fn absorb(info: &mut ContainerInfo, bytes: u64) {
+    info.fs_avail -= bytes;
+    info.mem_avail = info.mem_avail.saturating_sub(bytes);
+}
+
+/// Model a migration's effect on the source: the delete frees the disk
+/// bytes and evicts the cached copy.
+fn release(info: &mut ContainerInfo, bytes: u64) {
+    info.fs_avail = info.fs_avail.saturating_add(bytes);
+    info.mem_avail = info.mem_avail.saturating_add(bytes).min(info.mem_total);
+}
+
+/// Plan up to `max_moves` chunk moves that shrink the occupancy spread
+/// below `threshold`. Greedy: repeatedly take the hottest container
+/// holding a movable chunk and ship that chunk to the coldest feasible
+/// target — feasible meaning alive, enough filesystem headroom, not
+/// already holding a chunk of the same object, and strictly colder than
+/// the source even *after* absorbing the chunk (no overshoot, so a move
+/// never recreates the imbalance it fixes).
+///
+/// Draining and dead containers must be excluded from `infos` by the
+/// caller (they are not rebalance targets); chunks they hold are the
+/// business of decommission/repair, not this planner.
+pub fn plan_moves(
+    infos: &[ContainerInfo],
+    objects: &[ObjectChunks],
+    w: Weights,
+    threshold: f64,
+    max_moves: usize,
+) -> Vec<PlannedMove> {
+    let mut work: Vec<ContainerInfo> = infos.iter().filter(|i| i.alive).cloned().collect();
+    let mut moves: Vec<PlannedMove> = Vec::new();
+    if work.len() < 2 {
+        return moves;
+    }
+    // Working state, updated as moves are planned.
+    let mut holders: Vec<Vec<u32>> =
+        objects.iter().map(|o| o.holders.iter().map(|&(_, c)| c).collect()).collect();
+    let mut budget: Vec<usize> = objects.iter().map(|o| o.max_moves).collect();
+    // container id → (object ordinal, chunk index) chunks it holds.
+    let mut on: HashMap<u32, Vec<(usize, u8)>> = HashMap::new();
+    for (oi, o) in objects.iter().enumerate() {
+        for &(idx, cid) in &o.holders {
+            on.entry(cid).or_default().push((oi, idx));
+        }
+    }
+
+    while moves.len() < max_moves {
+        // Rank the fleet hot → cold under current working occupancy.
+        let mut ranked: Vec<usize> = (0..work.len()).collect();
+        ranked.sort_by(|&a, &b| {
+            occupancy(&work[b], w)
+                .partial_cmp(&occupancy(&work[a], w))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(work[a].id.cmp(&work[b].id))
+        });
+        let hottest = occupancy(&work[ranked[0]], w);
+        let coldest = occupancy(&work[*ranked.last().unwrap()], w);
+        if hottest - coldest <= threshold {
+            break;
+        }
+        // Hot → cold over sources, cold → hot over targets: the first
+        // feasible (source chunk, target) pair is the planned move.
+        let mut planned: Option<(usize, usize, usize, u8)> = None;
+        'src: for &si in &ranked {
+            let src_occ = occupancy(&work[si], w);
+            let Some(held) = on.get(&work[si].id) else { continue };
+            if held.is_empty() {
+                continue;
+            }
+            for &ti in ranked.iter().rev() {
+                if ti == si {
+                    continue 'src; // only strictly colder targets remain
+                }
+                for &(oi, idx) in held {
+                    if budget[oi] == 0 {
+                        continue;
+                    }
+                    let bytes = objects[oi].chunk_bytes;
+                    let tgt = &work[ti];
+                    if tgt.fs_avail < bytes || holders[oi].contains(&tgt.id) {
+                        continue;
+                    }
+                    // No overshoot: the target must stay below the
+                    // source's pre-move occupancy after absorbing the
+                    // chunk, or the move only relocates the hot spot.
+                    let mut after = tgt.clone();
+                    absorb(&mut after, bytes);
+                    if occupancy(&after, w) >= src_occ {
+                        continue;
+                    }
+                    // No undershoot either: shedding the chunk must not
+                    // drop the source below the current fleet minimum —
+                    // that would *raise* the spread (possible when the
+                    // hottest containers hold nothing movable and a
+                    // lukewarm source is tried).
+                    let mut shed = work[si].clone();
+                    release(&mut shed, bytes);
+                    if occupancy(&shed, w) < coldest {
+                        continue;
+                    }
+                    planned = Some((si, ti, oi, idx));
+                    break 'src;
+                }
+            }
+        }
+        let Some((si, ti, oi, idx)) = planned else { break };
+        let bytes = objects[oi].chunk_bytes;
+        let (src_id, tgt_id) = (work[si].id, work[ti].id);
+        release(&mut work[si], bytes);
+        absorb(&mut work[ti], bytes);
+        if let Some(held) = on.get_mut(&src_id) {
+            held.retain(|&(o, i)| !(o == oi && i == idx));
+        }
+        on.entry(tgt_id).or_default().push((oi, idx));
+        holders[oi].retain(|&c| c != src_id);
+        holders[oi].push(tgt_id);
+        budget[oi] -= 1;
+        moves.push(PlannedMove {
+            uuid: objects[oi].uuid.clone(),
+            index: idx,
+            from: src_id,
+            to: tgt_id,
+            bytes,
+        });
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Site;
+
+    fn info(id: u32, fs_avail: u64, fs_total: u64) -> ContainerInfo {
+        ContainerInfo {
+            id,
+            name: format!("dc{id}"),
+            site: Site::ChameleonTacc,
+            alive: true,
+            mem_total: 0, // isolate the fs term in these tests
+            mem_avail: 0,
+            fs_total,
+            fs_avail,
+            annual_failure_rate: 0.05,
+        }
+    }
+
+    fn objects(holders: &[(u8, u32)], count: usize, bytes: u64) -> Vec<ObjectChunks> {
+        (0..count)
+            .map(|i| ObjectChunks {
+                uuid: format!("obj-{i}"),
+                chunk_bytes: bytes,
+                holders: holders.to_vec(),
+                max_moves: 1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn occupancy_and_spread_basics() {
+        let w = Weights::default();
+        let empty = info(1, 1_000, 1_000);
+        let half = info(2, 500, 1_000);
+        assert!(occupancy(&empty, w).abs() < 1e-12);
+        assert!((occupancy(&half, w) - 0.25).abs() < 1e-12); // fs term halved by w2
+        assert!((spread(&[empty.clone(), half.clone()], w) - 0.25).abs() < 1e-12);
+        // Dead containers don't count; singletons are balanced.
+        let mut dead = info(3, 0, 1_000);
+        dead.alive = false;
+        assert_eq!(spread(&[half.clone(), dead], w), 0.0);
+        assert_eq!(spread(&[half], w), 0.0);
+    }
+
+    #[test]
+    fn plans_hot_to_cold_until_under_threshold() {
+        let w = Weights { w1_mem: 0.0, w2_fs: 1.0 };
+        // dc1 holds 8 chunks of 100 bytes (occ 0.8); dc2/dc3 empty.
+        let infos = vec![info(1, 200, 1_000), info(2, 1_000, 1_000), info(3, 1_000, 1_000)];
+        let objs = objects(&[(0, 1)], 8, 100);
+        let moves = plan_moves(&infos, &objs, w, 0.15, 64);
+        assert!(!moves.is_empty());
+        // Every move leaves dc1 and lands on a cold target.
+        assert!(moves.iter().all(|m| m.from == 1 && (m.to == 2 || m.to == 3)));
+        // Apply the plan and verify the spread is under threshold.
+        let mut work = infos.clone();
+        for m in &moves {
+            work.iter_mut().find(|i| i.id == m.from).unwrap().fs_avail += m.bytes;
+            work.iter_mut().find(|i| i.id == m.to).unwrap().fs_avail -= m.bytes;
+        }
+        assert!(spread(&work, w) <= 0.15, "spread {}", spread(&work, w));
+    }
+
+    #[test]
+    fn distinctness_constraint_blocks_colocated_chunks() {
+        let w = Weights { w1_mem: 0.0, w2_fs: 1.0 };
+        // One object with chunks on dc1 and dc2; dc2 is cold but already
+        // holds a chunk, so dc1's chunk may only go to dc3.
+        let infos = vec![info(1, 100, 1_000), info(2, 900, 1_000), info(3, 950, 1_000)];
+        let objs = vec![ObjectChunks {
+            uuid: "o".into(),
+            chunk_bytes: 100,
+            holders: vec![(0, 1), (1, 2)],
+            max_moves: 2,
+        }];
+        let moves = plan_moves(&infos, &objs, w, 0.05, 16);
+        assert!(moves.iter().all(|m| m.to != 2), "{moves:?}");
+    }
+
+    #[test]
+    fn respects_budget_feasibility_and_bounds() {
+        let w = Weights { w1_mem: 0.0, w2_fs: 1.0 };
+        let infos = vec![info(1, 0, 1_000), info(2, 50, 1_000)];
+        // Target lacks headroom for a 100-byte chunk → nothing to plan.
+        let objs = objects(&[(0, 1)], 4, 100);
+        assert!(plan_moves(&infos, &objs, w, 0.1, 16).is_empty());
+        // max_moves caps the batch.
+        let infos = vec![info(1, 200, 1_000), info(2, 1_000, 1_000)];
+        let objs = objects(&[(0, 1)], 8, 100);
+        assert_eq!(plan_moves(&infos, &objs, w, 0.0, 3).len(), 3);
+        // Zero per-object budget freezes that object's chunks.
+        let mut frozen = objects(&[(0, 1)], 8, 100);
+        for o in &mut frozen {
+            o.max_moves = 0;
+        }
+        assert!(plan_moves(&infos, &frozen, w, 0.0, 16).is_empty());
+    }
+
+    #[test]
+    fn planner_terminates_on_balanced_fleet() {
+        let w = Weights::default();
+        let infos = vec![info(1, 500, 1_000), info(2, 500, 1_000)];
+        let objs = objects(&[(0, 1)], 5, 100);
+        assert!(plan_moves(&infos, &objs, w, 0.1, 100).is_empty());
+    }
+}

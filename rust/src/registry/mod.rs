@@ -8,7 +8,7 @@
 //! [`crate::container::RemoteChannel`] — and the coordinator's chunk
 //! I/O fans out over whatever mix is registered.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, RwLock};
 
 use crate::container::{ContainerChannel, ContainerId, ContainerInfo, DataContainer, LocalChannel};
@@ -18,6 +18,10 @@ use crate::{Error, Result};
 #[derive(Default)]
 pub struct Registry {
     channels: RwLock<BTreeMap<ContainerId, Arc<dyn ContainerChannel>>>,
+    /// Containers mid-decommission: still registered (they keep serving
+    /// reads and their chunks are being migrated off) but excluded from
+    /// every placement decision, so no new bytes land on them.
+    draining: RwLock<BTreeSet<ContainerId>>,
 }
 
 impl Registry {
@@ -44,11 +48,40 @@ impl Registry {
 
     /// Deregister (dynamic removal, §III-B). Returns the channel.
     pub fn remove(&self, id: ContainerId) -> Result<Arc<dyn ContainerChannel>> {
-        self.channels
+        let removed = self
+            .channels
             .write()
             .unwrap()
             .remove(&id)
-            .ok_or_else(|| Error::NotFound(format!("container {id}")))
+            .ok_or_else(|| Error::NotFound(format!("container {id}")))?;
+        self.draining.write().unwrap().remove(&id);
+        Ok(removed)
+    }
+
+    /// Flip a container's draining flag. Draining containers stay
+    /// registered and readable but are invisible to
+    /// [`Registry::placement_infos`], so the load balancer stops
+    /// selecting them while their chunks migrate off.
+    pub fn set_draining(&self, id: ContainerId, draining: bool) -> Result<()> {
+        if !self.channels.read().unwrap().contains_key(&id) {
+            return Err(Error::NotFound(format!("container {id}")));
+        }
+        let mut set = self.draining.write().unwrap();
+        if draining {
+            set.insert(id);
+        } else {
+            set.remove(&id);
+        }
+        Ok(())
+    }
+
+    pub fn is_draining(&self, id: ContainerId) -> bool {
+        self.draining.read().unwrap().contains(&id)
+    }
+
+    /// Ids currently marked draining (stable order).
+    pub fn draining_ids(&self) -> Vec<ContainerId> {
+        self.draining.read().unwrap().iter().copied().collect()
     }
 
     /// The channel for container `id`.
@@ -82,9 +115,23 @@ impl Registry {
         self.channels.read().unwrap().values().cloned().collect()
     }
 
-    /// Monitor snapshots of every container (placement input).
+    /// Monitor snapshots of every container (health/admin views —
+    /// includes draining containers).
     pub fn infos(&self) -> Vec<ContainerInfo> {
         self.all().iter().map(|c| c.info()).collect()
+    }
+
+    /// Monitor snapshots eligible for *placement*: every registered
+    /// container except those marked draining. This is what the load
+    /// balancer, the dynamic resilience policy, and repair re-placement
+    /// must consume so a departing container never receives new chunks.
+    pub fn placement_infos(&self) -> Vec<ContainerInfo> {
+        let draining = self.draining.read().unwrap().clone();
+        self.all()
+            .iter()
+            .filter(|c| !draining.contains(&c.id()))
+            .map(|c| c.info())
+            .collect()
     }
 
     /// Live containers only (last observed liveness).
@@ -157,6 +204,37 @@ mod tests {
     fn remove_missing_errors() {
         let r = Registry::new();
         assert!(matches!(r.remove(9), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn draining_excluded_from_placement_but_still_registered() {
+        let r = Registry::new();
+        r.add(dc(1)).unwrap();
+        r.add(dc(2)).unwrap();
+        assert!(!r.is_draining(1));
+        r.set_draining(1, true).unwrap();
+        assert!(r.is_draining(1));
+        assert_eq!(r.draining_ids(), vec![1]);
+        // Placement no longer sees it; admin views and reads still do.
+        let p: Vec<u32> = r.placement_infos().iter().map(|i| i.id).collect();
+        assert_eq!(p, vec![2]);
+        assert_eq!(r.infos().len(), 2);
+        assert!(r.get(1).is_ok());
+        // Un-draining restores eligibility.
+        r.set_draining(1, false).unwrap();
+        assert_eq!(r.placement_infos().len(), 2);
+        // Unknown ids rejected.
+        assert!(matches!(r.set_draining(9, true), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn remove_clears_draining_flag() {
+        let r = Registry::new();
+        r.add(dc(1)).unwrap();
+        r.set_draining(1, true).unwrap();
+        r.remove(1).unwrap();
+        assert!(!r.is_draining(1));
+        assert!(r.draining_ids().is_empty());
     }
 
     #[test]

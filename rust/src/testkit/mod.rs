@@ -24,7 +24,26 @@ pub mod agents;
 
 pub use agents::{spawn_agent, SpawnedAgent};
 
+use crate::container::AgentSpec;
+use crate::sim::{DeviceKind, Site};
 use crate::util::Rng;
+
+/// Uniform container fleet for tests and benches: `count` containers
+/// named `{prefix}{i}`, all at the same site/device, with the given
+/// memory (cache) and filesystem capacities in bytes.
+pub fn uniform_specs(prefix: &str, count: usize, mem: u64, fs: u64) -> Vec<AgentSpec> {
+    (0..count)
+        .map(|i| {
+            AgentSpec::new(
+                format!("{prefix}{i}"),
+                Site::ChameleonTacc,
+                DeviceKind::ChameleonLocal,
+            )
+            .mem(mem)
+            .fs(fs)
+        })
+        .collect()
+}
 
 /// Outcome of a single property case.
 pub type PropResult = Result<(), String>;

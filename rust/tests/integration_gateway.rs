@@ -8,11 +8,13 @@ use dynostore::coordinator::GfEngine;
 use dynostore::json::parse;
 use dynostore::net::{HttpClient, HttpServer};
 
-fn gateway() -> (HttpServer, String) {
+/// (server, addr, operator `Authorization` header for /admin/*).
+fn gateway() -> (HttpServer, String, String) {
     let ds = chameleon_deployment(12, paper_resilience(), GfEngine::PureRust);
+    let admin = format!("Bearer {}", ds.issue_admin_token(3600));
     let server = dynostore::gateway::serve(ds, "127.0.0.1:0", 6).unwrap();
     let addr = server.addr().to_string();
-    (server, addr)
+    (server, addr, admin)
 }
 
 fn register(addr: &str, user: &str) -> String {
@@ -30,7 +32,7 @@ fn register(addr: &str, user: &str) -> String {
 
 #[test]
 fn concurrent_clients_share_one_gateway() {
-    let (_server, addr) = gateway();
+    let (_server, addr, _admin) = gateway();
     let token = register(&addr, "UserA");
     let addr = Arc::new(addr);
     let token = Arc::new(token);
@@ -66,7 +68,7 @@ fn concurrent_clients_share_one_gateway() {
 
 #[test]
 fn multi_megabyte_bodies_roundtrip() {
-    let (_server, addr) = gateway();
+    let (_server, addr, _admin) = gateway();
     let token = register(&addr, "UserA");
     let auth = format!("Bearer {token}");
     let client = HttpClient::new(&addr);
@@ -82,7 +84,7 @@ fn multi_megabyte_bodies_roundtrip() {
 
 #[test]
 fn token_lifecycle_and_login() {
-    let (_server, addr) = gateway();
+    let (_server, addr, _admin) = gateway();
     let _t1 = register(&addr, "UserA");
     let client = HttpClient::new(&addr);
     // login issues a second valid token for the same subject
@@ -100,7 +102,7 @@ fn token_lifecycle_and_login() {
 
 #[test]
 fn error_statuses_are_mapped() {
-    let (_server, addr) = gateway();
+    let (_server, addr, _admin) = gateway();
     let token = register(&addr, "UserA");
     let auth = format!("Bearer {token}");
     let client = HttpClient::new(&addr);
@@ -125,20 +127,31 @@ fn error_statuses_are_mapped() {
 
 #[test]
 fn admin_surface_end_to_end() {
-    let (_server, addr) = gateway();
+    let (_server, addr, admin) = gateway();
     let token = register(&addr, "UserA");
     let auth = format!("Bearer {token}");
     let client = HttpClient::new(&addr);
     client.put("/objects/UserA/a", &[("authorization", &auth)], &vec![1u8; 10_000]).unwrap();
     client.put("/objects/UserA/a", &[("authorization", &auth)], &vec![2u8; 10_000]).unwrap();
 
+    // admin requires the admin scope (satellite bugfix): bare requests
+    // bounce with 401, ordinary user tokens with 403, before any work.
+    assert_eq!(client.post("/admin/gc", &[], &[]).unwrap().status, 401);
+    assert_eq!(client.post("/admin/repair", &[], &[]).unwrap().status, 401);
+    assert_eq!(
+        client.post("/admin/gc", &[("authorization", &auth)], &[]).unwrap().status,
+        403
+    );
+
     // gc with zero retention collects the superseded version
-    let gc = client.post("/admin/gc", &[], b"{\"retention_secs\": 0}").unwrap();
+    let gc = client
+        .post("/admin/gc", &[("authorization", &admin)], b"{\"retention_secs\": 0}")
+        .unwrap();
     let v = parse(std::str::from_utf8(&gc.body).unwrap()).unwrap();
     assert_eq!(v.req_u64("collected").unwrap(), 1);
 
     // repair reports a clean fleet
-    let rep = client.post("/admin/repair", &[], &[]).unwrap();
+    let rep = client.post("/admin/repair", &[("authorization", &admin)], &[]).unwrap();
     let v = parse(std::str::from_utf8(&rep.body).unwrap()).unwrap();
     assert_eq!(v.req_u64("lost").unwrap(), 0);
 

@@ -1,0 +1,260 @@
+//! Elastic-lifecycle integration: the acceptance flow of the
+//! decommission + rebalance PR end to end.
+//!
+//! * Push 50 erasure-coded objects onto a skewed 8-container cluster
+//!   (5 tight containers absorb the uploads, 3 roomy ones join later).
+//! * `decommission` the most-loaded container while reader threads
+//!   hammer pulls: every object stays bit-identical during and after
+//!   the drain, and the drained container holds zero chunks before it
+//!   is removed.
+//! * `rebalance` until the weighted-occupancy spread drops under 0.15,
+//!   with every move committed through the Paxos `UpdatePlacement`
+//!   (replica stores converge to identical contents) and no object ever
+//!   placing two chunks on one container.
+//! * Paxos replica crash/recovery interleaved with placement updates:
+//!   a replica that was down for the whole drain + rebalance catches up
+//!   on revival to byte-identical state.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dynostore::container::deploy_containers;
+use dynostore::coordinator::{DynoStore, PullOpts, PushOpts, RebalanceOpts};
+use dynostore::metadata::{ObjectMeta, ObjectPlacement};
+use dynostore::policy::ResiliencePolicy;
+use dynostore::testkit::uniform_specs as specs;
+use dynostore::ErasureConfig;
+
+fn data(len: usize, seed: u64) -> Vec<u8> {
+    dynostore::util::Rng::new(seed).bytes(len)
+}
+
+/// Every erasure placement keeps its chunks on distinct containers.
+fn assert_distinct_placements(objects: &[ObjectMeta]) {
+    for m in objects {
+        if let ObjectPlacement::Erasure { chunks, .. } = &m.placement {
+            let ids: HashSet<u32> = chunks.iter().map(|&(_, c)| c).collect();
+            assert_eq!(ids.len(), chunks.len(), "duplicate holder in {chunks:?}");
+        }
+    }
+}
+
+/// All metadata replicas hold byte-identical state: same object count,
+/// same records, same applied cursor.
+fn assert_replicas_identical(ds: &DynoStore) {
+    let reference = ds.meta.replica_store(0).all_objects();
+    let cursor = ds.meta.applied_cursor(0);
+    for r in 1..ds.meta.replica_count() {
+        assert_eq!(ds.meta.applied_cursor(r), cursor, "replica {r} cursor");
+        assert_eq!(
+            ds.meta.replica_store(r).all_objects(),
+            reference,
+            "replica {r} diverged from replica 0"
+        );
+    }
+}
+
+/// The acceptance scenario: skewed cluster → drain the hottest → verify
+/// → rebalance to spread ≤ 0.15 → verify.
+#[test]
+fn decommission_then_rebalance_end_to_end() {
+    let ds = Arc::new(
+        DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+            .build(),
+    );
+    // Phase 1: 5 tight containers take all 50 uploads.
+    for c in deploy_containers(&specs("old", 5, 3 << 19, 3 << 19), 5, 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    let token = ds.register_user("UserA").unwrap();
+    let objects: Vec<(String, Vec<u8>)> = (0..50)
+        .map(|i| (format!("obj{i}"), data(20_000, 1_000 + i)))
+        .collect();
+    for (name, bytes) in &objects {
+        ds.push(&token, "/UserA", name, bytes, PushOpts::default()).unwrap();
+    }
+    // Phase 2: 3 roomy containers join → the 8-container cluster is
+    // heavily skewed toward the original five.
+    for c in deploy_containers(&specs("new", 3, 64 << 20, 64 << 20), 3, 5).containers {
+        ds.add_container(c).unwrap();
+    }
+    assert_eq!(ds.registry.len(), 8);
+    let initial_spread = ds.utilization_spread();
+    assert!(initial_spread > 0.15, "cluster must start skewed: {initial_spread}");
+
+    // Most-loaded container = fewest free bytes among the old five.
+    let victim = ds
+        .registry
+        .infos()
+        .iter()
+        .min_by_key(|i| i.fs_avail)
+        .unwrap()
+        .id;
+    let drained = ds.container_of(victim).unwrap();
+    assert!(!drained.list().is_empty(), "victim holds chunks");
+
+    // Reader threads pull every object in a loop while the drain runs —
+    // bit-identity must hold *during* the migration, not just after.
+    let stop = Arc::new(AtomicBool::new(false));
+    let objects_shared = Arc::new(objects);
+    let mut readers = Vec::new();
+    for t in 0..2usize {
+        let ds = Arc::clone(&ds);
+        let stop = Arc::clone(&stop);
+        let objects = Arc::clone(&objects_shared);
+        let token = token.clone();
+        readers.push(std::thread::spawn(move || {
+            // Keep pulling until the drain finished AND every object was
+            // verified at least once by this reader.
+            let mut pulls = 0usize;
+            while !stop.load(Ordering::Relaxed) || pulls < objects.len() {
+                let (name, bytes) = &objects[(pulls * 7 + t * 13) % objects.len()];
+                let pull = ds
+                    .pull(&token, "/UserA", name, PullOpts::default())
+                    .unwrap_or_else(|e| panic!("pull {name} during drain: {e}"));
+                assert_eq!(&pull.data, bytes, "{name} corrupted during drain");
+                pulls += 1;
+            }
+            pulls
+        }));
+    }
+
+    let report = ds.decommission(victim).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        let pulls = r.join().expect("reader thread panicked");
+        assert!(pulls >= objects_shared.len(), "reader verified every object");
+    }
+    assert!(report.removed, "{report:?}");
+    assert_eq!(report.failed_moves, 0);
+    assert!(report.chunks_moved >= 50, "one chunk per object drained");
+    // Zero chunks on the drained container, which left the registry.
+    assert!(drained.list().is_empty(), "leftovers: {:?}", drained.list());
+    assert!(ds.registry.get(victim).is_err());
+    let all = ds.meta.read(|s| Ok(s.all_objects())).unwrap();
+    assert!(all.iter().all(|m| !m.placement.containers().contains(&victim)));
+    assert_distinct_placements(&all);
+    assert_replicas_identical(&ds);
+
+    // Phase 3: rebalance the remaining 7 containers under 0.15 spread.
+    let report = ds
+        .rebalance(RebalanceOpts { threshold: 0.15, max_moves: 1024, batch_moves: 16 })
+        .unwrap();
+    assert!(report.converged, "{report:?}");
+    assert!(report.spread_after <= 0.15, "spread {}", report.spread_after);
+    assert!(report.spread_before > report.spread_after);
+    assert!(report.chunks_moved > 0);
+    // Every move went through the replicated metadata path: replicas
+    // agree, placements stay distinct, bytes stay identical.
+    let all = ds.meta.read(|s| Ok(s.all_objects())).unwrap();
+    assert_distinct_placements(&all);
+    assert_replicas_identical(&ds);
+    for (name, bytes) in objects_shared.iter() {
+        let pull = ds.pull(&token, "/UserA", name, PullOpts::default()).unwrap();
+        assert_eq!(&pull.data, bytes, "{name} intact after rebalance");
+        assert!(!pull.degraded, "{name} fully healthy after rebalance");
+    }
+    assert_eq!(ds.metrics.snapshot()["decommissions"], 1);
+    assert!(ds.metrics.snapshot()["chunks_migrated"] >= report.chunks_moved as u64);
+}
+
+/// Satellite: a metadata replica crashes, the whole drain + rebalance
+/// runs without it, and on revival it syncs to byte-identical state.
+#[test]
+fn replica_crash_recovery_interleaved_with_migration() {
+    let ds = Arc::new(
+        DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+            .build(),
+    );
+    for c in deploy_containers(&specs("old", 5, 1 << 20, 1 << 20), 5, 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    let token = ds.register_user("UserA").unwrap();
+    let objects: Vec<(String, Vec<u8>)> =
+        (0..12).map(|i| (format!("o{i}"), data(15_000, 7_000 + i))).collect();
+    for (name, bytes) in &objects {
+        ds.push(&token, "/UserA", name, bytes, PushOpts::default()).unwrap();
+    }
+    for c in deploy_containers(&specs("new", 3, 64 << 20, 64 << 20), 3, 5).containers {
+        ds.add_container(c).unwrap();
+    }
+
+    // Kill a minority replica: writes keep committing on the quorum.
+    ds.meta.set_replica_alive(2, false);
+
+    let victim = ds.registry.infos().iter().min_by_key(|i| i.fs_avail).unwrap().id;
+    let drain = ds.decommission(victim).unwrap();
+    assert!(drain.removed, "{drain:?}");
+    let rebalance = ds
+        .rebalance(RebalanceOpts { threshold: 0.04, max_moves: 512, batch_moves: 8 })
+        .unwrap();
+    assert!(rebalance.converged, "{rebalance:?}");
+
+    // Interleave one more placement-changing write while it is down.
+    ds.push(&token, "/UserA", "late", &data(9_000, 9_999), PushOpts::default()).unwrap();
+
+    // The dead replica missed everything.
+    assert!(ds.meta.applied_cursor(2) < ds.meta.applied_cursor(0));
+
+    // Revive → sync replays the chosen log → byte-identical stores.
+    ds.meta.set_replica_alive(2, true);
+    assert_eq!(ds.meta.applied_cursor(2), ds.meta.applied_cursor(0));
+    assert_replicas_identical(&ds);
+
+    // And the data plane agrees with the recovered metadata: every
+    // object (including the interleaved one) pulls correct bytes.
+    for (name, bytes) in &objects {
+        let pull = ds.pull(&token, "/UserA", name, PullOpts::default()).unwrap();
+        assert_eq!(&pull.data, bytes, "{name} after recovery");
+    }
+    assert_eq!(
+        ds.pull(&token, "/UserA", "late", PullOpts::default()).unwrap().data,
+        data(9_000, 9_999)
+    );
+    let all = ds.meta.read(|s| Ok(s.all_objects())).unwrap();
+    assert_distinct_placements(&all);
+    assert!(all.iter().all(|m| !m.placement.containers().contains(&victim)));
+}
+
+/// Draining containers stop receiving new placements immediately, while
+/// still serving reads for the chunks they hold.
+#[test]
+fn draining_container_receives_no_new_chunks_but_serves_reads() {
+    let ds = Arc::new(
+        DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+            .build(),
+    );
+    for c in deploy_containers(&specs("dc", 8, 64 << 20, 1 << 30), 8, 0).containers {
+        ds.add_container(c).unwrap();
+    }
+    let token = ds.register_user("UserA").unwrap();
+    let before = data(10_000, 1);
+    ds.push(&token, "/UserA", "before", &before, PushOpts::default()).unwrap();
+    let holder = ds
+        .meta
+        .read(|s| s.get_latest("UserA", "/UserA", "before"))
+        .unwrap()
+        .placement
+        .containers()[0];
+    ds.registry.set_draining(holder, true).unwrap();
+    // New pushes avoid the draining container entirely.
+    for i in 0..5 {
+        let name = format!("after{i}");
+        let push = ds
+            .push(&token, "/UserA", &name, &data(10_000, 10 + i), PushOpts::default())
+            .unwrap();
+        assert!(
+            !push.meta.placement.containers().contains(&holder),
+            "draining container took a new chunk: {:?}",
+            push.meta.placement
+        );
+    }
+    // Reads of existing data still flow through it.
+    let pull = ds.pull(&token, "/UserA", "before", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, before);
+    assert!(!pull.degraded);
+}
