@@ -1,0 +1,175 @@
+//! Recovery-time bench (EXPERIMENTS.md §Recovery): how fast does the
+//! durable metadata plane commit, and how fast does it come back?
+//!
+//! For each log length N the bench drives N `PutObject` commits through
+//! a durable [`ReplicatedMeta`] (measuring commit throughput with the
+//! per-commit WAL fsync on the path), hard-drops it, and measures:
+//!
+//! * **WAL replay** — recovery when the whole history sits in the WAL
+//!   (no snapshot): time to replay N commands through Paxos onto 3
+//!   replicas.
+//! * **Snapshot load** — recovery when a compacting snapshot covers the
+//!   whole history (empty WAL): time to parse + restore the store onto
+//!   3 replicas.
+//!
+//! The gap between those two columns is what the snapshot cadence
+//! (`snapshot_every`) buys. Emits `BENCH_recovery.json` for CI.
+//!
+//! `--smoke` shrinks the workload for CI.
+
+use std::path::PathBuf;
+
+use dynostore::bench::{fmt_s, Table};
+use dynostore::durability::DurabilityOpts;
+use dynostore::json::{obj, to_string_pretty, Value};
+use dynostore::metadata::ObjectPlacement;
+use dynostore::paxos::{MetaCommand, ReplicatedMeta};
+use dynostore::util::now_ns;
+
+const REPLICAS: usize = 3;
+const SEED: u64 = 0xD1_5705;
+
+fn bench_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dynostore-bench-recovery-{}-{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn put_cmd(i: u64) -> MetaCommand {
+    MetaCommand::PutObject {
+        caller: "Bench".into(),
+        collection: "/Bench".into(),
+        name: format!("object-{i}"),
+        size: 1 << 20,
+        sha3: [(i % 251) as u8; 32],
+        placement: ObjectPlacement::Erasure {
+            n: 10,
+            k: 7,
+            chunks: (0..10u8).map(|c| (c, (i as u32 + c as u32) % 12)).collect(),
+        },
+        now: i,
+    }
+}
+
+struct Row {
+    log_len: usize,
+    commit_s: f64,
+    replay_s: f64,
+    snap_load_s: f64,
+    wal_bytes: u64,
+}
+
+fn run_case(log_len: usize) -> Row {
+    // Phase 1: commit N commands, WAL only (no snapshot cadence).
+    let dir = bench_dir(&format!("wal-{log_len}"));
+    let opts = || DurabilityOpts::new(&dir).snapshot_every(u64::MAX);
+    {
+        let (meta, _) = ReplicatedMeta::durable(REPLICAS, SEED, opts()).unwrap();
+        meta.submit(MetaCommand::CreateNamespace { user: "Bench".into() }).unwrap();
+        let t0 = now_ns();
+        for i in 0..log_len as u64 {
+            meta.submit(put_cmd(i)).unwrap();
+        }
+        let commit_s = (now_ns() - t0) as f64 / 1e9;
+        let wal_bytes = std::fs::metadata(dir.join("wal.log")).map(|m| m.len()).unwrap_or(0);
+
+        // Phase 2: WAL-replay recovery (hard drop, rebuild).
+        drop(meta);
+        let t0 = now_ns();
+        let (meta, rec) = ReplicatedMeta::durable(REPLICAS, SEED, opts()).unwrap();
+        let replay_s = (now_ns() - t0) as f64 / 1e9;
+        assert_eq!(rec.wal_replayed, log_len as u64 + 1);
+        assert_eq!(
+            meta.read(|s| Ok(s.object_count())).unwrap(),
+            log_len,
+            "replay restored every commit"
+        );
+
+        // Phase 3: force a covering snapshot, then measure
+        // snapshot-load recovery over the same history.
+        drop(meta);
+        let (meta, _) = ReplicatedMeta::durable(
+            REPLICAS,
+            SEED,
+            DurabilityOpts::new(&dir).snapshot_every(1),
+        )
+        .unwrap();
+        // One more commit at snapshot_every=1 → snapshot + WAL reset.
+        meta.submit(put_cmd(log_len as u64)).unwrap();
+        assert_eq!(meta.wal_len(), 0, "snapshot compacted the wal");
+        drop(meta);
+        let t0 = now_ns();
+        let (meta, rec) = ReplicatedMeta::durable(REPLICAS, SEED, opts()).unwrap();
+        let snap_load_s = (now_ns() - t0) as f64 / 1e9;
+        assert!(rec.snapshot_loaded);
+        assert_eq!(rec.wal_replayed, 0);
+        assert_eq!(meta.read(|s| Ok(s.object_count())).unwrap(), log_len + 1);
+
+        std::fs::remove_dir_all(&dir).ok();
+        Row { log_len, commit_s, replay_s, snap_load_s, wal_bytes }
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cases: &[usize] = if smoke { &[50, 200] } else { &[100, 500, 2000, 5000] };
+
+    println!(
+        "recovery_replay: {REPLICAS} metadata replicas, PutObject commands, \
+         per-commit WAL fsync on the commit path"
+    );
+
+    let rows: Vec<Row> = cases.iter().map(|&n| run_case(n)).collect();
+
+    let mut table = Table::new(
+        "Recovery: commit cost and restart time vs log length",
+        &["log len", "commit (total)", "commits/s", "WAL replay", "replay/s", "snapshot load"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.log_len.to_string(),
+            fmt_s(r.commit_s),
+            format!("{:.0}", r.log_len as f64 / r.commit_s.max(1e-9)),
+            fmt_s(r.replay_s),
+            format!("{:.0}", r.log_len as f64 / r.replay_s.max(1e-9)),
+            fmt_s(r.snap_load_s),
+        ]);
+    }
+    table.print();
+    if let Some(last) = rows.last() {
+        println!(
+            "HEADLINE log_len {}: replay {} vs snapshot load {} ({}x)",
+            last.log_len,
+            fmt_s(last.replay_s),
+            fmt_s(last.snap_load_s),
+            (last.replay_s / last.snap_load_s.max(1e-9)).round()
+        );
+    }
+
+    let json_rows: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("log_len", r.log_len.into()),
+                ("commit_s", r.commit_s.into()),
+                ("commits_per_s", (r.log_len as f64 / r.commit_s.max(1e-9)).into()),
+                ("wal_bytes", r.wal_bytes.into()),
+                ("wal_replay_s", r.replay_s.into()),
+                ("replay_per_s", (r.log_len as f64 / r.replay_s.max(1e-9)).into()),
+                ("snapshot_load_s", r.snap_load_s.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "recovery_replay".into()),
+        ("smoke", smoke.into()),
+        ("replicas", REPLICAS.into()),
+        ("rows", Value::Arr(json_rows)),
+    ]);
+    let path = "BENCH_recovery.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {path} ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -44,6 +44,15 @@ pub struct Config {
     /// HTTP — entries of the `containers` array carrying an `endpoint`.
     pub remotes: Vec<String>,
     pub seed: u64,
+    /// Metadata durability root (`wal.log` + `meta.snapshot`). `None`
+    /// (the default) keeps the metadata plane in memory — tests and
+    /// simulators; `dynostore serve --data-dir` sets it in production.
+    pub data_dir: Option<String>,
+    /// Compact the WAL into a snapshot every N commits.
+    pub snapshot_every: u64,
+    /// Gateway request-body cap in MiB (bounds object size; a bogus
+    /// `content-length` beyond it gets 413 instead of an allocation).
+    pub max_body_mb: u64,
 }
 
 impl Default for Config {
@@ -57,6 +66,9 @@ impl Default for Config {
             containers: Vec::new(),
             remotes: Vec::new(),
             seed: 0xD1_5705,
+            data_dir: None,
+            snapshot_every: crate::durability::DEFAULT_SNAPSHOT_EVERY,
+            max_body_mb: (crate::gateway::DEFAULT_GATEWAY_MAX_BODY >> 20) as u64,
         }
     }
 }
@@ -87,6 +99,11 @@ impl Config {
                 "unknown engine '{engine}' (expected pure-rust | swar | swar-parallel | pjrt)"
             ))
         })?;
+        if let Some(dir) = v.get("data_dir").as_str() {
+            cfg.data_dir = Some(dir.to_string());
+        }
+        cfg.snapshot_every = v.opt_u64("snapshot_every", cfg.snapshot_every).max(1);
+        cfg.max_body_mb = v.opt_u64("max_body_mb", cfg.max_body_mb).max(1);
         if let Some(arr) = v.get("containers").as_arr() {
             for c in arr {
                 // An entry with an `endpoint` is a remote agent; local
@@ -106,19 +123,25 @@ impl Config {
         Config::from_json(&text)
     }
 
-    /// Instantiate the deployment: build the coordinator, deploy and
-    /// register every configured container.
+    /// Instantiate the deployment: build the coordinator (recovering
+    /// the metadata plane from `data_dir` when configured), deploy and
+    /// register every configured container, then — if any state was
+    /// recovered — re-verify the recovered placements against what the
+    /// containers actually hold and schedule repair for the gaps.
     pub fn build(&self) -> Result<Arc<DynoStore>> {
-        let ds = Arc::new(
-            DynoStore::builder()
-                .gateway_site(self.gateway_site)
-                .replicas(self.metadata_replicas)
-                .policy(self.policy)
-                .weights(self.weights)
-                .engine(self.engine)
-                .seed(self.seed)
-                .build(),
-        );
+        let mut builder = DynoStore::builder()
+            .gateway_site(self.gateway_site)
+            .replicas(self.metadata_replicas)
+            .policy(self.policy)
+            .weights(self.weights)
+            .engine(self.engine)
+            .seed(self.seed)
+            .snapshot_every(self.snapshot_every);
+        if let Some(dir) = &self.data_dir {
+            builder = builder.data_dir(dir);
+        }
+        let (ds, recovery) = builder.build_durable()?;
+        let ds = Arc::new(ds);
         let hosts = self.containers.len().max(1);
         for c in deploy_containers(&self.containers, hosts, 0).containers {
             ds.add_container(c)?;
@@ -127,6 +150,34 @@ impl Config {
         // adopts the agent's self-reported identity (id, site, capacity).
         for endpoint in &self.remotes {
             ds.add_channel(RemoteChannel::connect(endpoint)?)?;
+        }
+        if recovery.recovered() {
+            crate::log_info!(
+                "metadata recovered from {}: snapshot {} (covering {} commits), \
+                 {} WAL records replayed{}",
+                self.data_dir.as_deref().unwrap_or("?"),
+                if recovery.snapshot_loaded { "loaded" } else { "absent" },
+                recovery.snapshot_commits,
+                recovery.wal_replayed,
+                if recovery.wal_truncated { ", torn tail truncated" } else { "" }
+            );
+            let verify = ds.verify_recovered_placements()?;
+            crate::log_info!(
+                "recovered placements verified: {} objects, {} chunks missing, \
+                 {} rewritten in place, {} lost{}",
+                verify.objects,
+                verify.chunks_missing,
+                verify.chunks_rewritten,
+                verify.objects_lost,
+                if verify.repair_scheduled {
+                    format!(
+                        " (repair pass: {} repaired, {} chunks moved)",
+                        verify.repair.repaired, verify.repair.chunks_moved
+                    )
+                } else {
+                    String::new()
+                }
+            );
         }
         Ok(ds)
     }
@@ -359,6 +410,39 @@ mod tests {
         let c = fs_cfg.build().unwrap();
         c.put("k", b"v").unwrap();
         assert_eq!(c.get("k").unwrap().data.unwrap(), b"v");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn data_dir_and_snapshot_cadence_parse_and_build() {
+        let cfg = Config::from_json("{}").unwrap();
+        assert_eq!(cfg.data_dir, None);
+        assert_eq!(cfg.snapshot_every, crate::durability::DEFAULT_SNAPSHOT_EVERY);
+        assert_eq!(cfg.max_body_mb, 1024, "default gateway body cap is 1 GiB");
+        assert_eq!(Config::from_json("{\"max_body_mb\": 8}").unwrap().max_body_mb, 8);
+
+        let dir = std::env::temp_dir()
+            .join(format!("dynostore-cfg-durable-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = Config::from_json(&format!(
+            r#"{{"data_dir": "{}", "snapshot_every": 8,
+                "containers": [{{"name": "dc0"}}, {{"name": "dc1"}}]}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        assert_eq!(cfg.data_dir.as_deref(), Some(dir.to_str().unwrap()));
+        assert_eq!(cfg.snapshot_every, 8);
+        // Fresh dir: builds, nothing recovered, metadata is durable.
+        let ds = cfg.build().unwrap();
+        assert!(ds.meta.is_durable());
+        assert!(!ds.recovery_report().unwrap().recovered());
+        ds.register_user("u").unwrap();
+        assert_eq!(ds.meta.wal_len(), 1);
+        drop(ds);
+        // Same dir again: the namespace is recovered.
+        let ds = cfg.build().unwrap();
+        assert!(ds.recovery_report().unwrap().recovered());
+        assert!(ds.meta.read(|s| Ok(s.collection_exists("/u"))).unwrap());
         std::fs::remove_dir_all(&dir).ok();
     }
 

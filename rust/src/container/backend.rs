@@ -122,41 +122,98 @@ impl Backend for MemBackend {
 /// Real-directory backend: what an administrator deploys over NFS or any
 /// POSIX mount (paper §III-A: "one on NFS only needs a directory path").
 /// Keys are percent-encoded into file names.
+///
+/// Writes are crash-atomic: bytes land in a same-directory `*.tmp`
+/// file, are fsync'd, then renamed over the final name — so a crash
+/// mid-write can never leave a torn object that later reads as corrupt
+/// (the old bytes, if any, survive intact). Encoded object names never
+/// contain `.`, so in-flight/stale temp files are unambiguous and
+/// excluded from `stats`/`list`.
 pub struct FsBackend {
     root: PathBuf,
     device: Device,
     capacity: u64,
+    /// Disambiguates temp files when concurrent puts target one key.
+    tmp_counter: std::sync::atomic::AtomicU64,
 }
 
 impl FsBackend {
     pub fn new(root: impl Into<PathBuf>, capacity: u64) -> Result<Self> {
         let root = root.into();
         std::fs::create_dir_all(&root)?;
-        Ok(FsBackend { root, device: Device::new(DeviceKind::ChameleonLocal), capacity })
+        // Sweep temp files stranded by crashed puts: they hold real
+        // bytes that the capacity accounting (deliberately) ignores, so
+        // left in place they'd leak disk forever. A backend owns its
+        // directory exclusively, so anything matching our temp pattern
+        // is ours and dead.
+        if let Ok(rd) = std::fs::read_dir(&root) {
+            for entry in rd.filter_map(|e| e.ok()) {
+                if entry
+                    .file_name()
+                    .to_str()
+                    .is_some_and(|n| n.ends_with(".tmp"))
+                {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(FsBackend {
+            root,
+            device: Device::new(DeviceKind::ChameleonLocal),
+            capacity,
+            tmp_counter: std::sync::atomic::AtomicU64::new(0),
+        })
     }
 
-    fn path_for(&self, key: &str) -> PathBuf {
-        // Encode anything non-alphanumeric so nested keys stay flat.
+    /// Flatten a key into a file name: alphanumerics and `-` pass
+    /// through, everything else (including `.` — reserved so temp
+    /// files can't collide with encoded keys) becomes `_hh`.
+    fn encode_name(key: &str) -> String {
         let mut name = String::with_capacity(key.len());
         for c in key.chars() {
-            if c.is_ascii_alphanumeric() || c == '-' || c == '.' {
+            if c.is_ascii_alphanumeric() || c == '-' {
                 name.push(c);
             } else {
                 name.push_str(&format!("_{:02x}", c as u32));
             }
         }
-        self.root.join(name)
+        name
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        self.root.join(Self::encode_name(key))
+    }
+
+    /// Is this directory entry a committed object (vs an in-flight or
+    /// stale `*.tmp` file a crash left behind)?
+    fn is_object_name(name: &str) -> bool {
+        !name.contains('.')
     }
 
     fn used(&self) -> u64 {
         std::fs::read_dir(&self.root)
             .map(|rd| {
                 rd.filter_map(|e| e.ok())
+                    .filter(|e| {
+                        e.file_name().to_str().is_some_and(Self::is_object_name)
+                    })
                     .filter_map(|e| e.metadata().ok())
                     .map(|m| m.len())
                     .sum()
             })
             .unwrap_or(0)
+    }
+
+    /// Write `data` to `tmp`, fsync, then atomically rename to `dest`.
+    fn write_via_temp(tmp: &std::path::Path, dest: &std::path::Path, data: &[u8]) -> Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(tmp)?;
+        f.write_all(data)?;
+        // fsync BEFORE the rename: once the new name is visible it must
+        // refer to fully persisted bytes.
+        f.sync_all()?;
+        std::fs::rename(tmp, dest)?;
+        Ok(())
     }
 }
 
@@ -165,7 +222,23 @@ impl Backend for FsBackend {
         if self.used() + data.len() as u64 > self.capacity {
             return Err(Error::Container("fs capacity exceeded".into()));
         }
-        std::fs::write(self.path_for(key), data)?;
+        let name = Self::encode_name(key);
+        let final_path = self.root.join(&name);
+        // Same-dir temp so the rename never crosses a filesystem.
+        let tmp_path = self.root.join(format!(
+            "{name}.{}-{}.tmp",
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let write = Self::write_via_temp(&tmp_path, &final_path, data);
+        if write.is_err() {
+            let _ = std::fs::remove_file(&tmp_path);
+        }
+        write?;
+        // Best-effort directory fsync so the rename itself is durable.
+        if let Ok(d) = std::fs::File::open(&self.root) {
+            let _ = d.sync_all();
+        }
         Ok(self.device.write_s(data.len() as u64))
     }
 
@@ -187,11 +260,14 @@ impl Backend for FsBackend {
     }
 
     fn list(&self) -> Vec<String> {
-        // Listing returns encoded names; adequate for GC sweeps.
+        // Listing returns encoded names; adequate for GC sweeps and the
+        // decommission verified-empty gate. Stale temp files are not
+        // objects and must not appear (they'd wedge the empty gate).
         std::fs::read_dir(&self.root)
             .map(|rd| {
                 rd.filter_map(|e| e.ok())
                     .filter_map(|e| e.file_name().into_string().ok())
+                    .filter(|n| Self::is_object_name(n))
                     .collect()
             })
             .unwrap_or_default()
@@ -305,6 +381,52 @@ mod tests {
         b.put("a/b/c:1", b"x").unwrap();
         assert!(b.exists("a/b/c:1"));
         assert_eq!(b.get("a/b/c:1").unwrap().0, b"x");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fs_backend_put_leaves_no_temp_files_and_encodes_dots() {
+        let dir =
+            std::env::temp_dir().join(format!("dynostore-test-atomic-{}", std::process::id()));
+        let b = FsBackend::new(&dir, 1 << 20).unwrap();
+        // Keys containing '.' still roundtrip ('.' is reserved for temp
+        // files and hex-encoded in object names).
+        b.put("name.bin", b"dotted").unwrap();
+        assert!(b.exists("name.bin"));
+        assert_eq!(b.get("name.bin").unwrap().0, b"dotted");
+        b.put("plain", b"xy").unwrap();
+        // No *.tmp residue after successful puts; listed names are the
+        // committed objects only.
+        let on_disk: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .collect();
+        assert_eq!(on_disk.len(), 2, "{on_disk:?}");
+        assert!(on_disk.iter().all(|n| !n.contains('.')), "{on_disk:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fs_backend_ignores_stale_temp_files() {
+        let dir =
+            std::env::temp_dir().join(format!("dynostore-test-stale-{}", std::process::id()));
+        let b = FsBackend::new(&dir, 100).unwrap();
+        b.put("real", &[1u8; 40]).unwrap();
+        // A crash mid-put leaves a temp file behind: it must not count
+        // toward usage, show up in listings, or read as an object.
+        std::fs::write(dir.join("real.999-7.tmp"), [0u8; 90]).unwrap();
+        assert_eq!(b.list(), vec!["real".to_string()]);
+        assert_eq!(b.stats().fs_avail, 60, "stale tmp bytes not counted");
+        // Capacity still has room because the stale file is ignored.
+        b.put("more", &[2u8; 40]).unwrap();
+        // Re-opening the directory sweeps the stale temp file away.
+        drop(b);
+        let _b = FsBackend::new(&dir, 100).unwrap();
+        assert!(
+            !dir.join("real.999-7.tmp").exists(),
+            "open-time sweep reclaims stranded temp bytes"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

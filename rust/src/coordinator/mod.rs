@@ -8,10 +8,12 @@
 
 mod lifecycle;
 mod ops;
+mod recovery;
 mod reports;
 
 pub use lifecycle::RebalanceOpts;
 pub use ops::{OpContext, PullOpts, PushOpts};
+pub use recovery::RecoveryVerifyReport;
 pub use reports::{
     ChunkIoReport, DecommissionReport, PullReport, PushReport, RebalanceReport, RepairReport,
 };
@@ -22,6 +24,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::container::{ContainerChannel, DataContainer};
 use crate::crypto::TokenService;
+use crate::durability::{DurabilityOpts, RecoveryReport, DEFAULT_SNAPSHOT_EVERY};
 use crate::net::ThreadPool;
 use crate::erasure::{
     Codec, ErasureConfig, GfBackend, ParallelBackend, PureRustBackend, SwarBackend,
@@ -129,6 +132,8 @@ pub struct DynoStore {
     /// Worker pool dispatching per-chunk container I/O concurrently
     /// (disperse / erasure pull / repair fan out over the channels).
     pub(crate) io_pool: ThreadPool,
+    /// What recovery found at build time (None = in-memory deployment).
+    recovery: Option<RecoveryReport>,
 }
 
 /// Builder for a DynoStore deployment.
@@ -142,6 +147,8 @@ pub struct Builder {
     wan: Wan,
     secret: Vec<u8>,
     io_workers: usize,
+    data_dir: Option<std::path::PathBuf>,
+    snapshot_every: u64,
 }
 
 impl Default for Builder {
@@ -156,6 +163,8 @@ impl Default for Builder {
             wan: Wan::paper_testbed(),
             secret: b"dynostore-dev-secret".to_vec(),
             io_workers: 0, // auto-size to the host
+            data_dir: None,
+            snapshot_every: DEFAULT_SNAPSHOT_EVERY,
         }
     }
 }
@@ -208,7 +217,42 @@ impl Builder {
         self
     }
 
+    /// Persist the metadata plane (WAL + snapshots) under `dir` and
+    /// recover from it at build time. Deployments built without a data
+    /// dir are in-memory (the default — tests and simulators).
+    pub fn data_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.data_dir = Some(dir.into());
+        self
+    }
+
+    /// Compact the WAL into a snapshot every `n` commits (durable
+    /// deployments only; default [`DEFAULT_SNAPSHOT_EVERY`]).
+    pub fn snapshot_every(mut self, n: u64) -> Self {
+        self.snapshot_every = n.max(1);
+        self
+    }
+
+    /// Build an in-memory deployment. Panics if [`Builder::data_dir`]
+    /// was set — durable builds can fail on I/O and must go through
+    /// [`Builder::build_durable`].
     pub fn build(self) -> DynoStore {
+        assert!(
+            self.data_dir.is_none(),
+            "data_dir configured: use Builder::build_durable()"
+        );
+        let (ds, _) = self.build_durable().expect("in-memory build cannot fail");
+        ds
+    }
+
+    /// Build the deployment, recovering the metadata plane from
+    /// `data_dir` when one is configured (snapshot load → WAL tail
+    /// replay → torn-tail truncation). Without a data dir this is
+    /// [`Builder::build`] plus an empty report.
+    ///
+    /// After registering the deployment's containers, callers should
+    /// run [`DynoStore::verify_recovered_placements`] so recovered
+    /// placements are checked against registry reality.
+    pub fn build_durable(self) -> Result<(DynoStore, RecoveryReport)> {
         let backend: Arc<dyn GfBackend> = match self.engine {
             GfEngine::PureRust => Arc::new(PureRustBackend),
             GfEngine::Swar => Arc::new(SwarBackend::new()),
@@ -220,20 +264,34 @@ impl Builder {
         } else {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16)
         };
-        DynoStore {
-            registry: Registry::new(),
-            meta: ReplicatedMeta::new(self.replicas, self.seed),
-            tokens: TokenService::new(&self.secret),
-            placer: Placer::new(self.weights),
-            wan: self.wan,
-            gateway_site: self.gateway_site,
-            default_policy: self.policy,
-            metrics: Metrics::default(),
-            engine: self.engine,
-            codecs: Mutex::new(HashMap::new()),
-            backend,
-            io_pool: ThreadPool::new(io_workers),
-        }
+        let (meta, recovery) = match &self.data_dir {
+            Some(dir) => {
+                let opts =
+                    DurabilityOpts::new(dir.clone()).snapshot_every(self.snapshot_every);
+                let (meta, report) = ReplicatedMeta::durable(self.replicas, self.seed, opts)?;
+                (meta, Some(report))
+            }
+            None => (ReplicatedMeta::new(self.replicas, self.seed), None),
+        };
+        let report = recovery.clone().unwrap_or_default();
+        Ok((
+            DynoStore {
+                registry: Registry::new(),
+                meta,
+                tokens: TokenService::new(&self.secret),
+                placer: Placer::new(self.weights),
+                wan: self.wan,
+                gateway_site: self.gateway_site,
+                default_policy: self.policy,
+                metrics: Metrics::default(),
+                engine: self.engine,
+                codecs: Mutex::new(HashMap::new()),
+                backend,
+                io_pool: ThreadPool::new(io_workers),
+                recovery,
+            },
+            report,
+        ))
     }
 }
 
@@ -245,6 +303,12 @@ impl DynoStore {
     /// Engine selected at build time.
     pub fn engine(&self) -> GfEngine {
         self.engine
+    }
+
+    /// What recovery found at build time (None for in-memory
+    /// deployments). `/health` surfaces this as the `recovered` flag.
+    pub fn recovery_report(&self) -> Option<&RecoveryReport> {
+        self.recovery.as_ref()
     }
 
     /// Name of the live GF(2^8) backend driving this deployment's

@@ -1,0 +1,91 @@
+//! The crash-consistency plane for the metadata services.
+//!
+//! The paper sells DynoStore on resilience, and PRs 1-3 made the *data*
+//! plane durable (chunks survive on [`crate::container::FsBackend`]) —
+//! but the metadata plane (Paxos log, object catalog, namespaces) lived
+//! purely in memory: one coordinator restart orphaned every persisted
+//! chunk. This module closes that gap with the classic WAL + snapshot
+//! pair:
+//!
+//! * [`wal::Wal`] — an append-only write-ahead log of Paxos-committed
+//!   [`crate::paxos::MetaCommand`] JSON payloads, length+CRC32-framed
+//!   and fsync'd per commit. [`crate::paxos::ReplicatedMeta`] appends
+//!   *after* the command is chosen and *before* it is applied or
+//!   acknowledged (log-before-ack), so no acknowledged mutation can be
+//!   lost to a crash.
+//! * [`snapshot`] — periodic compacted snapshots of the full
+//!   [`crate::metadata::MetadataStore`] state (written atomically:
+//!   temp file → fsync → rename), after which the WAL is reset.
+//!
+//! Recovery (`ReplicatedMeta::durable`) is snapshot load → WAL tail
+//! replay → torn-tail truncation at the first bad CRC. Each WAL record
+//! carries the global commit sequence number so a crash *between*
+//! snapshot write and WAL reset never double-applies the records the
+//! snapshot already covers (commands are not idempotent — a replayed
+//! `PutObject` would mint a new version).
+//!
+//! Data-dir layout:
+//!
+//! ```text
+//! <data_dir>/
+//!   wal.log        length+CRC-framed command log since the last snapshot
+//!   meta.snapshot  JSON: {version, commits, taken_at, store: {...}}
+//! ```
+
+pub mod snapshot;
+pub mod wal;
+
+pub use snapshot::{SnapshotInfo, SNAPSHOT_FILE};
+pub use wal::{Wal, WalRecord, WalRecovery, WAL_FILE};
+
+use std::path::PathBuf;
+
+/// Snapshot cadence when the deployment doesn't configure one: compact
+/// the WAL every 64 committed commands.
+pub const DEFAULT_SNAPSHOT_EVERY: u64 = 64;
+
+/// Where and how often the metadata plane persists.
+#[derive(Debug, Clone)]
+pub struct DurabilityOpts {
+    /// Directory holding `wal.log` and `meta.snapshot` (created if
+    /// missing).
+    pub dir: PathBuf,
+    /// Take a compacted snapshot (and reset the WAL) every N commits.
+    pub snapshot_every: u64,
+}
+
+impl DurabilityOpts {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        DurabilityOpts { dir: dir.into(), snapshot_every: DEFAULT_SNAPSHOT_EVERY }
+    }
+
+    pub fn snapshot_every(mut self, n: u64) -> Self {
+        self.snapshot_every = n.max(1);
+        self
+    }
+}
+
+/// What recovery found on disk — surfaced through the coordinator and
+/// the gateway's `/health`.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// A snapshot file was loaded.
+    pub snapshot_loaded: bool,
+    /// Commits covered by the loaded snapshot (0 without one).
+    pub snapshot_commits: u64,
+    /// WAL records found intact on disk.
+    pub wal_records: u64,
+    /// WAL records actually replayed (records the snapshot already
+    /// covered are skipped).
+    pub wal_replayed: u64,
+    /// A torn/corrupt WAL tail was truncated during open.
+    pub wal_truncated: bool,
+}
+
+impl RecoveryReport {
+    /// True when any prior state was recovered (the `/health`
+    /// `recovered` flag).
+    pub fn recovered(&self) -> bool {
+        self.snapshot_loaded || self.wal_records > 0
+    }
+}

@@ -1,0 +1,125 @@
+//! Compacted metadata snapshots, written atomically.
+//!
+//! A snapshot is one JSON document holding the full
+//! [`crate::metadata::MetadataStore`] state
+//! ([`MetadataStore::snapshot_value`](crate::metadata::MetadataStore::snapshot_value))
+//! plus the global commit count it covers. Writes go to a same-dir temp
+//! file, fsync, then `rename` over the previous snapshot — so a crash
+//! mid-write leaves the old snapshot intact and readable; there is
+//! never a moment with zero valid snapshots on disk once one exists.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use crate::json::{obj, parse, to_string, Value};
+use crate::{Error, Result};
+
+/// File name inside the data dir.
+pub const SNAPSHOT_FILE: &str = "meta.snapshot";
+
+/// Header fields of a loaded snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnapshotInfo {
+    /// Total commits (global sequence) the snapshot covers: WAL records
+    /// with `seq < commits` are already folded in.
+    pub commits: u64,
+    /// Unix seconds when the snapshot was written.
+    pub taken_at: u64,
+}
+
+/// Persist `store` (a [`MetadataStore::snapshot_value`] tree) covering
+/// the first `commits` commands. Atomic: temp + fsync + rename (+ a
+/// best-effort directory fsync so the rename itself is durable).
+pub fn save(dir: &Path, commits: u64, taken_at: u64, store: Value) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let doc = obj(vec![
+        ("version", 1u64.into()),
+        ("commits", commits.into()),
+        ("taken_at", taken_at.into()),
+        ("store", store),
+    ]);
+    let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(to_string(&doc).as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, dir.join(SNAPSHOT_FILE))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Load the snapshot, if one exists. `Ok(None)` when the deployment has
+/// never snapshotted; an unreadable/garbled file is an error (the
+/// atomic write discipline means that only happens on real disk
+/// damage — recovery should stop and say so rather than silently start
+/// empty and orphan every chunk).
+pub fn load(dir: &Path) -> Result<Option<(SnapshotInfo, Value)>> {
+    let path = dir.join(SNAPSHOT_FILE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let v = parse(&text)
+        .map_err(|e| Error::Json(format!("snapshot {} unreadable: {e}", path.display())))?;
+    let info =
+        SnapshotInfo { commits: v.req_u64("commits")?, taken_at: v.opt_u64("taken_at", 0) };
+    Ok(Some((info, v.get("store").clone())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::MetadataStore;
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dynostore-snap-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        assert_eq!(load(&dir).unwrap(), None);
+        let s = MetadataStore::new(7);
+        s.create_namespace("UserA").unwrap();
+        save(&dir, 3, 1234, s.snapshot_value()).unwrap();
+        let (info, store_v) = load(&dir).unwrap().unwrap();
+        assert_eq!(info, SnapshotInfo { commits: 3, taken_at: 1234 });
+        let restored = MetadataStore::restore(&store_v).unwrap();
+        assert!(restored.collection_exists("/UserA"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overwrite_replaces_previous_snapshot() {
+        let dir = tmpdir("overwrite");
+        let s = MetadataStore::new(7);
+        s.create_namespace("UserA").unwrap();
+        save(&dir, 1, 10, s.snapshot_value()).unwrap();
+        s.create_namespace("UserB").unwrap();
+        save(&dir, 2, 20, s.snapshot_value()).unwrap();
+        let (info, store_v) = load(&dir).unwrap().unwrap();
+        assert_eq!(info.commits, 2);
+        assert!(MetadataStore::restore(&store_v).unwrap().collection_exists("/UserB"));
+        // No temp file left behind.
+        assert!(!dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn garbled_snapshot_is_a_hard_error() {
+        let dir = tmpdir("garbled");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(SNAPSHOT_FILE), b"not json at all").unwrap();
+        assert!(load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,370 @@
+//! Append-only write-ahead log with length+CRC32 framing.
+//!
+//! One record per Paxos-committed [`crate::paxos::MetaCommand`]:
+//!
+//! ```text
+//! [len: u32 LE] [crc: u32 LE] [seq: u64 LE] [payload: len bytes]
+//! ```
+//!
+//! `len` counts the payload only; `crc` is CRC-32 over `seq || payload`
+//! so neither a torn payload nor a torn sequence header can slip
+//! through. `seq` is the global commit index of the record — recovery
+//! uses it to skip records an existing snapshot already covers (a
+//! crash between snapshot write and WAL reset must not double-apply).
+//!
+//! [`Wal::open`] replays the file sequentially and truncates at the
+//! first malformed record (short header, short payload, CRC mismatch,
+//! non-UTF-8 payload, or an absurd length): a crash mid-append leaves
+//! exactly such a torn tail, and the bytes after it are unacknowledged
+//! by construction (append fsyncs before the commit is acknowledged).
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::{crc32, crc32_update};
+use crate::{Error, Result};
+
+/// File name inside the data dir.
+pub const WAL_FILE: &str = "wal.log";
+
+/// Per-record header bytes: len (4) + crc (4) + seq (8).
+const HEADER: usize = 16;
+
+/// Sanity cap on a single record's payload — anything larger is treated
+/// as corruption, not a record (a `MetaCommand` is a few KiB at most).
+const MAX_RECORD: u32 = 1 << 28;
+
+/// One intact record recovered from disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub payload: String,
+}
+
+/// Everything [`Wal::open`] found.
+#[derive(Debug, Default)]
+pub struct WalRecovery {
+    pub records: Vec<WalRecord>,
+    /// Trailing garbage (torn append) was dropped and the file
+    /// truncated back to the last intact record.
+    pub truncated: bool,
+}
+
+/// The open log, positioned for appending.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+    records: u64,
+    /// Byte offset just past the last fully-persisted record: the
+    /// rollback point when an append fails partway.
+    end: u64,
+    /// Set on ANY append failure. Two reasons to stop cold: (a) a tear
+    /// that couldn't be rolled back would sit in front of later
+    /// appends, and recovery's truncate-at-first-bad-frame would drop
+    /// those later acknowledged records; (b) even after a clean
+    /// rollback, the failed command was already *chosen* by Paxos — if
+    /// later commits were accepted, their acknowledged metadata
+    /// (versions, UUIDs) would be computed with the unlogged command
+    /// applied, and a restart (which cannot see it) would re-derive
+    /// different metadata for them. After a failed fsync the only
+    /// honest state is read-only-until-restart, so every further
+    /// append is refused (cf. the fsyncgate postmortems).
+    poisoned: bool,
+}
+
+impl Wal {
+    /// Open (creating if absent) and scan the log, truncating any torn
+    /// tail in place. Returns the writer positioned after the last
+    /// intact record plus everything readable.
+    pub fn open(path: impl Into<PathBuf>) -> Result<(Wal, WalRecovery)> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).open(&path)?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf)?;
+
+        let mut records = Vec::new();
+        let mut good = 0usize; // offset just past the last intact record
+        while good + HEADER <= buf.len() {
+            let len = u32::from_le_bytes(buf[good..good + 4].try_into().unwrap());
+            let crc = u32::from_le_bytes(buf[good + 4..good + 8].try_into().unwrap());
+            let seq_bytes: [u8; 8] = buf[good + 8..good + HEADER].try_into().unwrap();
+            if len > MAX_RECORD {
+                break;
+            }
+            let start = good + HEADER;
+            let Some(end) = start.checked_add(len as usize) else { break };
+            if end > buf.len() {
+                break;
+            }
+            if crc32_update(crc32(&seq_bytes), &buf[start..end]) != crc {
+                break;
+            }
+            let Ok(payload) = std::str::from_utf8(&buf[start..end]) else { break };
+            records.push(WalRecord {
+                seq: u64::from_le_bytes(seq_bytes),
+                payload: payload.to_string(),
+            });
+            good = end;
+        }
+
+        let truncated = good < buf.len();
+        if truncated {
+            file.set_len(good as u64)?;
+            file.sync_all()?;
+        }
+        file.seek(SeekFrom::Start(good as u64))?;
+        let wal = Wal {
+            file,
+            path,
+            records: records.len() as u64,
+            end: good as u64,
+            poisoned: false,
+        };
+        Ok((wal, WalRecovery { records, truncated }))
+    }
+
+    /// Append one record and fsync it (log-before-ack: the caller only
+    /// acknowledges the command after this returns).
+    ///
+    /// On an I/O failure the file is rolled back to the pre-append
+    /// offset (so torn bytes can never sit *in front of* a later
+    /// successful append — recovery truncates at the first bad frame,
+    /// and an un-rolled-back tear would take every acknowledged record
+    /// behind it down too) and the log is poisoned: every further
+    /// append is refused until the process restarts (see the
+    /// `poisoned` field docs for why rollback alone isn't enough).
+    pub fn append(&mut self, seq: u64, payload: &str) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::Unavailable(
+                "wal poisoned by an earlier append failure; refusing to \
+                 acknowledge further commits until restart"
+                    .into(),
+            ));
+        }
+        let bytes = payload.as_bytes();
+        if bytes.len() > MAX_RECORD as usize {
+            return Err(Error::Invalid(format!(
+                "wal record of {} bytes exceeds the {MAX_RECORD}-byte cap",
+                bytes.len()
+            )));
+        }
+        let seq_bytes = seq.to_le_bytes();
+        let crc = crc32_update(crc32(&seq_bytes), bytes);
+        let mut frame = Vec::with_capacity(HEADER + bytes.len());
+        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc.to_le_bytes());
+        frame.extend_from_slice(&seq_bytes);
+        frame.extend_from_slice(bytes);
+        let wrote = self
+            .file
+            .write_all(&frame)
+            .and_then(|()| self.file.sync_data());
+        match wrote {
+            Ok(()) => {
+                self.end += frame.len() as u64;
+                self.records += 1;
+                Ok(())
+            }
+            Err(e) => {
+                // Best-effort rollback so a clean restart reopens a
+                // clean file; poison regardless (see field docs).
+                let _ = self
+                    .file
+                    .set_len(self.end)
+                    .and_then(|()| self.file.seek(SeekFrom::Start(self.end)).map(|_| ()));
+                self.poisoned = true;
+                Err(e.into())
+            }
+        }
+    }
+
+    /// True after an append failure: the log refuses further appends
+    /// until the process restarts and reopens it.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Records currently in the log (since open/last reset).
+    pub fn len(&self) -> u64 {
+        self.records
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records == 0
+    }
+
+    /// Empty the log — called right after a snapshot makes its contents
+    /// redundant. Callers must persist the snapshot *first*; the seq
+    /// numbers protect the crash window in between.
+    pub fn reset(&mut self) -> Result<()> {
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.sync_all()?;
+        self.records = 0;
+        self.end = 0;
+        // `poisoned` stays sticky: truncation clears the tear, but a
+        // chosen-yet-unlogged command may exist in this process — only
+        // a restart (which discards it) makes the log trustworthy.
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dynostore-wal-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir.join(WAL_FILE)
+    }
+
+    fn cleanup(path: &Path) {
+        if let Some(dir) = path.parent() {
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+
+    #[test]
+    fn append_reopen_roundtrip() {
+        let path = tmp("roundtrip");
+        {
+            let (mut wal, rec) = Wal::open(&path).unwrap();
+            assert!(rec.records.is_empty());
+            assert!(!rec.truncated);
+            for i in 0..10u64 {
+                wal.append(i, &format!("{{\"op\":\"cmd{i}\"}}")).unwrap();
+            }
+            assert_eq!(wal.len(), 10);
+        }
+        let (wal, rec) = Wal::open(&path).unwrap();
+        assert_eq!(wal.len(), 10);
+        assert!(!rec.truncated);
+        assert_eq!(rec.records.len(), 10);
+        for (i, r) in rec.records.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert_eq!(r.payload, format!("{{\"op\":\"cmd{i}\"}}"));
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let path = tmp("torn");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            for i in 0..5u64 {
+                wal.append(i, "{\"op\":\"x\"}").unwrap();
+            }
+        }
+        // Chop the file mid-way through the last record's payload.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        let (wal, rec) = Wal::open(&path).unwrap();
+        assert!(rec.truncated);
+        assert_eq!(rec.records.len(), 4, "intact prefix survives");
+        assert_eq!(wal.len(), 4);
+        // The file was physically truncated: a re-open is clean.
+        let (_, rec2) = Wal::open(&path).unwrap();
+        assert!(!rec2.truncated);
+        assert_eq!(rec2.records.len(), 4);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn corrupt_crc_truncates_from_that_record() {
+        let path = tmp("crc");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            for i in 0..5u64 {
+                wal.append(i, "{\"op\":\"payload\"}").unwrap();
+            }
+        }
+        // Flip one byte in the MIDDLE record's payload: that record and
+        // everything after it must be dropped (replay cannot resync).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let record = 16 + "{\"op\":\"payload\"}".len();
+        let off = 2 * record + 16 + 3; // third record, payload byte 3
+        bytes[off] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let (wal, rec) = Wal::open(&path).unwrap();
+        assert!(rec.truncated);
+        assert_eq!(rec.records.len(), 2);
+        assert_eq!(wal.len(), 2);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn append_after_truncated_open_continues_cleanly() {
+        let path = tmp("continue");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            for i in 0..3u64 {
+                wal.append(i, "{\"a\":1}").unwrap();
+            }
+        }
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 1).unwrap();
+        drop(f);
+        {
+            let (mut wal, rec) = Wal::open(&path).unwrap();
+            assert_eq!(rec.records.len(), 2);
+            wal.append(2, "{\"b\":2}").unwrap();
+        }
+        let (_, rec) = Wal::open(&path).unwrap();
+        assert!(!rec.truncated);
+        assert_eq!(rec.records.len(), 3);
+        assert_eq!(rec.records[2].payload, "{\"b\":2}");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn reset_empties_the_log() {
+        let path = tmp("reset");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append(0, "{\"x\":1}").unwrap();
+        wal.reset().unwrap();
+        assert!(wal.is_empty());
+        wal.append(1, "{\"y\":2}").unwrap();
+        drop(wal);
+        let (_, rec) = Wal::open(&path).unwrap();
+        assert_eq!(rec.records.len(), 1);
+        assert_eq!(rec.records[0].seq, 1);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn absurd_length_header_is_corruption() {
+        let path = tmp("absurd");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            wal.append(0, "{\"ok\":true}").unwrap();
+        }
+        // Append a frame claiming a 1 GiB payload.
+        let mut garbage = Vec::new();
+        garbage.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        garbage.extend_from_slice(&[0u8; 12]);
+        garbage.extend_from_slice(b"short");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&garbage).unwrap();
+        drop(f);
+        let (wal, rec) = Wal::open(&path).unwrap();
+        assert!(rec.truncated);
+        assert_eq!(rec.records.len(), 1);
+        assert_eq!(wal.len(), 1);
+        cleanup(&path);
+    }
+}

@@ -13,7 +13,8 @@
 //! * `POST /admin/rebalance` body `{"threshold": .., "max_moves": ..}`
 //! * `POST /admin/decommission/<id>` → drain + remove a container
 //! * `POST /admin/undrain/<id>` → cancel a stopped drain
-//! * `GET  /health` → liveness + container census + imbalance gauge
+//! * `GET  /health` → liveness + container census + imbalance gauge +
+//!   durability state (`wal_len`, `last_snapshot`, `recovered`)
 //!
 //! Every `/admin/*` route requires a valid bearer token with the
 //! `admin` scope (401 without/with a bad token, 403 without the scope;
@@ -27,10 +28,29 @@ use crate::net::{HttpRequest, HttpResponse, HttpServer};
 use crate::util::unix_secs;
 use crate::{Error, Result};
 
-/// Start the gateway HTTP service on `addr` with `workers` threads.
+/// Largest request body the gateway accepts by default: 1 GiB. Object
+/// pushes arrive as one body, so this bounds object size; deployments
+/// storing bigger objects raise it via [`serve_with_limit`] /
+/// `Config::max_body_mb` / `dynostore serve --max-body-mb`.
+pub const DEFAULT_GATEWAY_MAX_BODY: usize = 1 << 30;
+
+/// Start the gateway HTTP service on `addr` with `workers` threads and
+/// the [`DEFAULT_GATEWAY_MAX_BODY`] request-body cap.
 pub fn serve(store: Arc<DynoStore>, addr: &str, workers: usize) -> Result<HttpServer> {
+    serve_with_limit(store, addr, workers, DEFAULT_GATEWAY_MAX_BODY)
+}
+
+/// [`serve`] with an explicit request-body cap: requests declaring a
+/// larger `content-length` get `413 Payload Too Large` without the
+/// gateway allocating for them.
+pub fn serve_with_limit(
+    store: Arc<DynoStore>,
+    addr: &str,
+    workers: usize,
+    max_body: usize,
+) -> Result<HttpServer> {
     let handler = move |req: HttpRequest| route(&store, req);
-    HttpServer::serve(addr, workers, Arc::new(handler))
+    HttpServer::serve_with_limit(addr, workers, Arc::new(handler), max_body)
 }
 
 fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
@@ -103,6 +123,23 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
         .into_iter()
         .map(|(t, n)| (t, Value::from(n)))
         .collect();
+    let durability = if store.meta.is_durable() {
+        obj(vec![
+            ("enabled", true.into()),
+            ("wal_len", store.meta.wal_len().into()),
+            ("last_snapshot", store.meta.last_snapshot_unix().into()),
+            (
+                "recovered",
+                store
+                    .recovery_report()
+                    .map(|r| r.recovered())
+                    .unwrap_or(false)
+                    .into(),
+            ),
+        ])
+    } else {
+        obj(vec![("enabled", false.into())])
+    };
     HttpResponse::json(
         200,
         &obj(vec![
@@ -114,6 +151,7 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
             ("engine", store.engine().as_str().into()),
             ("backend", store.backend_name().into()),
             ("transports", obj(census)),
+            ("durability", durability),
         ]),
     )
 }
@@ -401,6 +439,9 @@ mod tests {
         assert_eq!(v.req_str("engine").unwrap(), "pure-rust");
         assert_eq!(v.req_str("backend").unwrap(), "pure-rust");
         assert_eq!(v.get("transports").req_u64("local").unwrap(), 12);
+        // In-memory gateway: durability reports disabled, nothing else.
+        assert_eq!(v.get("durability").get("enabled").as_bool(), Some(false));
+        assert_eq!(v.get("durability").get("wal_len"), &Value::Null);
 
         let r = client.post("/admin/repair", &[("authorization", &admin)], &[]).unwrap();
         assert_eq!(r.status, 200);

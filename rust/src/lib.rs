@@ -19,6 +19,8 @@
 //!   path).
 //! * **Control plane** — [`metadata`] (namespaces, versioning, GC,
 //!   permissions), [`paxos`] (replicated metadata consistency, §IV-B),
+//!   [`durability`] (WAL + snapshot crash consistency for the metadata
+//!   plane: no acknowledged mutation is lost across a restart),
 //!   [`registry`], [`health`], [`placement`] (utilization-factor load
 //!   balancing, Eq. 1-2), [`gateway`], [`policy`].
 //! * **System assembly** — [`coordinator`] (the DynoStore server),
@@ -53,6 +55,7 @@ pub mod config;
 pub mod container;
 pub mod coordinator;
 pub mod crypto;
+pub mod durability;
 pub mod erasure;
 pub mod faas;
 pub mod gateway;

@@ -3,7 +3,7 @@
 //! client), plus admin operations.
 //!
 //! ```text
-//! dynostore serve  --config cluster.json --addr 127.0.0.1:8080
+//! dynostore serve  --config cluster.json --addr 127.0.0.1:8080 --data-dir /var/lib/dynostore
 //! dynostore agent  --config agent.json   --addr 127.0.0.1:9100
 //! dynostore register --addr HOST:PORT --user UserA
 //! dynostore push   --addr HOST:PORT --token T /UserA/col/name ./file
@@ -87,6 +87,9 @@ fn print_usage() {
          commands:\n\
          \x20 serve    --config FILE [--addr 127.0.0.1:8080] [--workers 8]\n\
          \x20          [--engine pure-rust|swar|swar-parallel|pjrt]\n\
+         \x20          [--data-dir DIR] [--snapshot-every N] [--max-body-mb MB]\n\
+         \x20          (--data-dir persists the metadata plane: WAL + snapshots;\n\
+         \x20           a restarted serve recovers every acknowledged object)\n\
          \x20 agent    --config FILE [--addr 127.0.0.1:9100] [--workers 4]\n\
          \x20          (container agent: serves one data container over HTTP;\n\
          \x20           gateways attach it via an \"endpoint\" container entry)\n\
@@ -123,15 +126,52 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
             format!("unknown --engine '{engine}' (pure-rust | swar | swar-parallel | pjrt)")
         })?;
     }
+    // CLI override of the metadata durability root. Without one (in the
+    // config or here) the metadata plane is in-memory and a restart
+    // loses it — warn loudly when containers are configured.
+    if let Some(dir) = flags.get("data-dir") {
+        config.data_dir = Some(dir.clone());
+    }
+    if let Some(every) = flags.get("snapshot-every") {
+        config.snapshot_every = every
+            .parse::<u64>()
+            .map_err(|_| "--snapshot-every must be a number".to_string())?
+            .max(1);
+    }
+    if let Some(cap) = flags.get("max-body-mb") {
+        config.max_body_mb = cap
+            .parse::<u64>()
+            .map_err(|_| "--max-body-mb must be a number".to_string())?
+            .max(1);
+    }
+    if config.data_dir.is_none() {
+        dynostore::log_warn!(
+            "no data_dir configured: metadata is in-memory and will NOT survive a restart \
+             (pass --data-dir DIR or set \"data_dir\" in the config)"
+        );
+    }
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".into());
     let workers: usize =
         flags.get("workers").and_then(|w| w.parse().ok()).unwrap_or(8);
     let store = config.build().map_err(|e| e.to_string())?;
+    if let Some(rec) = store.recovery_report() {
+        if rec.recovered() {
+            println!(
+                "recovered metadata: snapshot {} ({} commits), {} WAL records replayed{}",
+                if rec.snapshot_loaded { "loaded" } else { "absent" },
+                rec.snapshot_commits,
+                rec.wal_replayed,
+                if rec.wal_truncated { ", torn tail truncated" } else { "" }
+            );
+        }
+    }
     // The /admin/* routes require the admin scope; hand the operator a
     // token at startup (mintable only deployment-side).
     let admin_token = store.issue_admin_token(30 * 24 * 3600);
-    let server =
-        gateway::serve(Arc::clone(&store), &addr, workers).map_err(|e| e.to_string())?;
+    let max_body = usize::try_from(config.max_body_mb.saturating_mul(1 << 20))
+        .unwrap_or(usize::MAX);
+    let server = gateway::serve_with_limit(Arc::clone(&store), &addr, workers, max_body)
+        .map_err(|e| e.to_string())?;
     dynostore::log_info!(
         "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?}, engine {})",
         server.addr(),

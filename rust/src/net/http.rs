@@ -23,9 +23,22 @@ impl HttpRequest {
         self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
     }
 
-    /// `Authorization: Bearer <token>` extraction.
+    /// `Authorization: Bearer <token>` extraction. The scheme is
+    /// case-insensitive per RFC 7235 §2.1 (`bearer`, `BEARER`, … all
+    /// match).
     pub fn bearer_token(&self) -> Option<&str> {
-        self.header("authorization")?.strip_prefix("Bearer ")
+        let header = self.header("authorization")?;
+        let (scheme, rest) = header.split_once(|c: char| c.is_ascii_whitespace())?;
+        if scheme.eq_ignore_ascii_case("bearer") {
+            let token = rest.trim();
+            if token.is_empty() {
+                None
+            } else {
+                Some(token)
+            }
+        } else {
+            None
+        }
     }
 }
 
@@ -73,8 +86,10 @@ impl HttpResponse {
             403 => "Forbidden",
             404 => "Not Found",
             409 => "Conflict",
+            413 => "Payload Too Large",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
+            507 => "Insufficient Storage",
             _ => "Status",
         }
     }
@@ -93,6 +108,12 @@ impl HttpResponse {
 
 type Handler = dyn Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static;
 
+/// Largest request body [`HttpServer::serve`] accepts: 64 MiB. A
+/// client-supplied `content-length` drives a buffer allocation, so an
+/// unchecked header would let one bogus request OOM the process; bigger
+/// deployments pick their own cap via [`HttpServer::serve_with_limit`].
+pub const DEFAULT_MAX_BODY: usize = 64 << 20;
+
 /// Threaded HTTP server.
 pub struct HttpServer {
     addr: std::net::SocketAddr,
@@ -102,11 +123,23 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind `addr` ("127.0.0.1:0" for an ephemeral port) and serve with
-    /// `workers` handler threads.
+    /// `workers` handler threads and the [`DEFAULT_MAX_BODY`] cap.
     pub fn serve(
         addr: &str,
         workers: usize,
         handler: Arc<Handler>,
+    ) -> Result<HttpServer> {
+        Self::serve_with_limit(addr, workers, handler, DEFAULT_MAX_BODY)
+    }
+
+    /// [`HttpServer::serve`] with an explicit request-body cap: any
+    /// request declaring a larger `content-length` is answered `413
+    /// Payload Too Large` without allocating for (or reading) its body.
+    pub fn serve_with_limit(
+        addr: &str,
+        workers: usize,
+        handler: Arc<Handler>,
+        max_body: usize,
     ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -124,7 +157,7 @@ impl HttpServer {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let handler = Arc::clone(&handler);
-                            pool.execute(move || handle_conn(stream, handler));
+                            pool.execute(move || handle_conn(stream, handler, max_body));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(2));
@@ -155,20 +188,66 @@ impl Drop for HttpServer {
     }
 }
 
-fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>) {
-    let peer = stream.try_clone();
-    let request = match peer {
-        Ok(read_half) => parse_request(read_half),
-        Err(e) => Err(Error::Io(e)),
-    };
-    let response = match request {
-        Ok(req) => handler(req),
-        Err(e) => HttpResponse::text(400, &format!("bad request: {e}")),
-    };
-    let _ = response.write_to(&mut stream);
+/// Why a request could not be parsed into an [`HttpRequest`].
+enum ParseFailure {
+    /// Declared `content-length` exceeds the server's cap — answered
+    /// 413 without allocating for the body.
+    TooLarge { declared: u64, cap: usize },
+    Malformed(Error),
 }
 
-fn parse_request(stream: TcpStream) -> Result<HttpRequest> {
+impl From<Error> for ParseFailure {
+    fn from(e: Error) -> Self {
+        ParseFailure::Malformed(e)
+    }
+}
+
+impl From<std::io::Error> for ParseFailure {
+    fn from(e: std::io::Error) -> Self {
+        ParseFailure::Malformed(Error::Io(e))
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>, max_body: usize) {
+    let peer = stream.try_clone();
+    let request = match peer {
+        Ok(read_half) => parse_request(read_half, max_body),
+        Err(e) => Err(ParseFailure::Malformed(Error::Io(e))),
+    };
+    let (response, unread_body) = match request {
+        Ok(req) => (handler(req), 0u64),
+        Err(ParseFailure::TooLarge { declared, cap }) => (
+            HttpResponse::text(
+                413,
+                &format!("declared body of {declared} bytes exceeds the {cap}-byte limit"),
+            ),
+            declared,
+        ),
+        Err(ParseFailure::Malformed(e)) => {
+            (HttpResponse::text(400, &format!("bad request: {e}")), 0)
+        }
+    };
+    let _ = response.write_to(&mut stream);
+    if unread_body > 0 {
+        // Drain (bounded) what the client already sent before closing:
+        // closing with unread data can RST the connection and discard
+        // the 413 sitting in the client's receive buffer.
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+        let mut sink = [0u8; 8192];
+        let mut remaining = unread_body.min(1 << 20);
+        while remaining > 0 {
+            match stream.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => remaining = remaining.saturating_sub(n as u64),
+            }
+        }
+    }
+}
+
+fn parse_request(
+    stream: TcpStream,
+    max_body: usize,
+) -> std::result::Result<HttpRequest, ParseFailure> {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -189,11 +268,21 @@ fn parse_request(stream: TcpStream) -> Result<HttpRequest> {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
-    let len: usize = headers
-        .get("content-length")
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
-    let mut body = vec![0u8; len];
+    // Never trust the client's content-length with an allocation: cap
+    // it BEFORE `vec![0u8; len]` — one bogus header must not OOM the
+    // gateway. Parse as u64 so a length beyond usize (32-bit hosts)
+    // can't wrap; a malformed value is a malformed request.
+    let len: u64 = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .trim()
+            .parse()
+            .map_err(|_| Error::Net(format!("bad content-length '{v}'")))?,
+    };
+    if len > max_body as u64 {
+        return Err(ParseFailure::TooLarge { declared: len, cap: max_body });
+    }
+    let mut body = vec![0u8; len as usize];
     if len > 0 {
         reader.read_exact(&mut body)?;
     }
@@ -396,14 +485,72 @@ mod tests {
 
     #[test]
     fn bearer_token_parsing() {
-        let req = HttpRequest {
+        let with_auth = |value: &str| HttpRequest {
             method: "GET".into(),
             path: "/".into(),
-            headers: [("authorization".to_string(), "Bearer abc.def".to_string())]
+            headers: [("authorization".to_string(), value.to_string())]
                 .into_iter()
                 .collect(),
             body: vec![],
         };
-        assert_eq!(req.bearer_token(), Some("abc.def"));
+        assert_eq!(with_auth("Bearer abc.def").bearer_token(), Some("abc.def"));
+        // RFC 7235: the scheme is case-insensitive.
+        assert_eq!(with_auth("bearer abc.def").bearer_token(), Some("abc.def"));
+        assert_eq!(with_auth("BEARER abc.def").bearer_token(), Some("abc.def"));
+        assert_eq!(with_auth("BeArEr  spaced ").bearer_token(), Some("spaced"));
+        // Other schemes and empty credentials are not bearer tokens.
+        assert_eq!(with_auth("Basic dXNlcg==").bearer_token(), None);
+        assert_eq!(with_auth("Bearer ").bearer_token(), None);
+        assert_eq!(with_auth("Bearer").bearer_token(), None);
+    }
+
+    #[test]
+    fn oversized_declared_body_gets_413() {
+        let server = HttpServer::serve_with_limit(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: HttpRequest| HttpResponse::bytes(201, req.body)),
+            1_000,
+        )
+        .unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        // Under the cap: normal echo.
+        let resp = client.put("/o", &[], &[7u8; 900]).unwrap();
+        assert_eq!(resp.status, 201);
+        // Over the cap: 413 with the right reason phrase, body unread.
+        let resp = client.put("/o", &[], &[7u8; 5_000]).unwrap();
+        assert_eq!(resp.status, 413);
+    }
+
+    #[test]
+    fn absurd_content_length_header_rejected_without_allocation() {
+        // A bogus header claiming an 8 EiB body must be answered with
+        // 413, not a vec![0u8; 2^63] allocation.
+        let server = HttpServer::serve(
+            "127.0.0.1:0",
+            1,
+            Arc::new(|_req: HttpRequest| HttpResponse::new(200)),
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .write_all(
+                b"PUT /objects/x HTTP/1.1\r\nhost: t\r\ncontent-length: 9223372036854775807\r\n\r\n",
+            )
+            .unwrap();
+        let mut reply = String::new();
+        let mut reader = BufReader::new(&mut stream);
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("413"), "{reply}");
+        assert!(reply.contains("Payload Too Large"), "{reply}");
+        // Garbage content-length is a 400, not a silent zero.
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .write_all(b"PUT /x HTTP/1.1\r\nhost: t\r\ncontent-length: banana\r\n\r\n")
+            .unwrap();
+        let mut reply = String::new();
+        let mut reader = BufReader::new(&mut stream);
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("400"), "{reply}");
     }
 }

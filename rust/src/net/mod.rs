@@ -10,5 +10,5 @@
 mod http;
 mod pool;
 
-pub use http::{HttpClient, HttpRequest, HttpResponse, HttpServer};
+pub use http::{HttpClient, HttpRequest, HttpResponse, HttpServer, DEFAULT_MAX_BODY};
 pub use pool::ThreadPool;

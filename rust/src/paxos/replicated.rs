@@ -11,14 +11,23 @@
 //! [`ReplicatedMeta::sync`] replays the chosen log from its applied
 //! cursor. Determinism (same seed, same command order) guarantees
 //! convergence to byte-identical stores — asserted by tests.
+//!
+//! *Process* crash/recovery (the whole coordinator dying) is covered by
+//! the durability hook: built via [`ReplicatedMeta::durable`], every
+//! Paxos-committed command is appended to a CRC-framed, fsync'd
+//! write-ahead log **before** it is applied or acknowledged, and the
+//! store state is periodically compacted into an atomic snapshot (see
+//! [`crate::durability`]). A restart replays snapshot + WAL tail and
+//! resumes with byte-identical metadata.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
+use crate::durability::{snapshot, DurabilityOpts, RecoveryReport, Wal, WAL_FILE};
 use crate::json::{obj, parse, to_string, Value};
 use crate::metadata::{MetadataStore, ObjectMeta, ObjectPlacement, Permission};
 use crate::paxos::PaxosGroup;
-use crate::util::{from_hex, to_hex};
+use crate::util::{from_hex, to_hex, unix_secs};
 use crate::{Error, Result};
 
 /// A metadata mutation, serializable for the Paxos log.
@@ -67,14 +76,14 @@ impl MetaCommand {
                 ("caller", caller.as_str().into()),
                 ("path", path.as_str().into()),
                 ("user", user.as_str().into()),
-                ("perm", perm_str(*perm).into()),
+                ("perm", perm.as_str().into()),
             ]),
             MetaCommand::Revoke { caller, path, user, perm } => obj(vec![
                 ("op", "revoke".into()),
                 ("caller", caller.as_str().into()),
                 ("path", path.as_str().into()),
                 ("user", user.as_str().into()),
-                ("perm", perm_str(*perm).into()),
+                ("perm", perm.as_str().into()),
             ]),
             MetaCommand::PutObject { caller, collection, name, size, sha3, placement, now } => {
                 obj(vec![
@@ -84,7 +93,7 @@ impl MetaCommand {
                     ("name", name.as_str().into()),
                     ("size", (*size).into()),
                     ("sha3", to_hex(sha3).into()),
-                    ("placement", placement_json(placement)),
+                    ("placement", placement.to_json()),
                     ("now", (*now).into()),
                 ])
             }
@@ -103,10 +112,10 @@ impl MetaCommand {
                 let mut fields = vec![
                     ("op", "update_placement".into()),
                     ("uuid", uuid.as_str().into()),
-                    ("placement", placement_json(placement)),
+                    ("placement", placement.to_json()),
                 ];
                 if let Some(exp) = expect {
-                    fields.push(("expect", placement_json(exp)));
+                    fields.push(("expect", exp.to_json()));
                 }
                 obj(fields)
             }
@@ -124,7 +133,7 @@ impl MetaCommand {
                 path: v.req_str("path")?.into(),
             },
             "grant" | "revoke" => {
-                let perm = parse_perm(v.req_str("perm")?)?;
+                let perm = Permission::parse(v.req_str("perm")?)?;
                 let (caller, path, user) = (
                     v.req_str("caller")?.to_string(),
                     v.req_str("path")?.to_string(),
@@ -147,7 +156,7 @@ impl MetaCommand {
                     name: v.req_str("name")?.into(),
                     size: v.req_u64("size")?,
                     sha3,
-                    placement: placement_from_json(v.get("placement"))?,
+                    placement: ObjectPlacement::from_json(v.get("placement"))?,
                     now: v.req_u64("now")?,
                 }
             }
@@ -162,81 +171,14 @@ impl MetaCommand {
             },
             "update_placement" => MetaCommand::UpdatePlacement {
                 uuid: v.req_str("uuid")?.into(),
-                placement: placement_from_json(v.get("placement"))?,
+                placement: ObjectPlacement::from_json(v.get("placement"))?,
                 expect: match v.get("expect") {
                     Value::Null => None,
-                    other => Some(placement_from_json(other)?),
+                    other => Some(ObjectPlacement::from_json(other)?),
                 },
             },
             other => return Err(Error::Json(format!("unknown op '{other}'"))),
         })
-    }
-}
-
-fn perm_str(p: Permission) -> &'static str {
-    match p {
-        Permission::Read => "read",
-        Permission::Write => "write",
-    }
-}
-
-fn parse_perm(s: &str) -> Result<Permission> {
-    match s {
-        "read" => Ok(Permission::Read),
-        "write" => Ok(Permission::Write),
-        _ => Err(Error::Json(format!("bad perm '{s}'"))),
-    }
-}
-
-fn placement_json(p: &ObjectPlacement) -> Value {
-    match p {
-        ObjectPlacement::Single { container } => obj(vec![
-            ("type", "single".into()),
-            ("container", (*container as u64).into()),
-        ]),
-        ObjectPlacement::Erasure { n, k, chunks } => obj(vec![
-            ("type", "erasure".into()),
-            ("n", (*n).into()),
-            ("k", (*k).into()),
-            (
-                "chunks",
-                Value::Arr(
-                    chunks
-                        .iter()
-                        .map(|&(i, c)| {
-                            Value::Arr(vec![(i as u64).into(), (c as u64).into()])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]),
-    }
-}
-
-fn placement_from_json(v: &Value) -> Result<ObjectPlacement> {
-    match v.req_str("type")? {
-        "single" => Ok(ObjectPlacement::Single { container: v.req_u64("container")? as u32 }),
-        "erasure" => {
-            let chunks = v
-                .get("chunks")
-                .as_arr()
-                .ok_or_else(|| Error::Json("chunks".into()))?
-                .iter()
-                .map(|pair| {
-                    let a = pair.as_arr().ok_or_else(|| Error::Json("chunk pair".into()))?;
-                    Ok((
-                        a[0].as_u64().ok_or_else(|| Error::Json("idx".into()))? as u8,
-                        a[1].as_u64().ok_or_else(|| Error::Json("cid".into()))? as u32,
-                    ))
-                })
-                .collect::<Result<Vec<_>>>()?;
-            Ok(ObjectPlacement::Erasure {
-                n: v.req_u64("n")? as usize,
-                k: v.req_u64("k")? as usize,
-                chunks,
-            })
-        }
-        other => Err(Error::Json(format!("bad placement type '{other}'"))),
     }
 }
 
@@ -247,6 +189,21 @@ struct Replica {
     alive: AtomicBool,
 }
 
+/// Persistence half of a durable deployment: the open WAL plus the
+/// snapshot cadence bookkeeping. Mutated only under the exclusive
+/// metadata write lock (its own mutex exists so read-only accessors
+/// like [`ReplicatedMeta::wal_len`] don't need the write lock).
+struct DurabilityState {
+    wal: Wal,
+    dir: std::path::PathBuf,
+    snapshot_every: u64,
+    /// Global commit sequence of the next command (== total commands
+    /// ever committed by this deployment, across restarts).
+    next_seq: u64,
+    commits_since_snapshot: u64,
+    last_snapshot_unix: u64,
+}
+
 /// The replicated metadata service.
 pub struct ReplicatedMeta {
     group: PaxosGroup,
@@ -254,10 +211,14 @@ pub struct ReplicatedMeta {
     /// Writers exclusive through propose+apply; readers shared — the
     /// §IV-B read lock during updates.
     rw: RwLock<()>,
+    /// Present on durable deployments ([`ReplicatedMeta::durable`]).
+    durability: Option<Mutex<DurabilityState>>,
 }
 
 impl ReplicatedMeta {
-    /// `replica_count` must be odd (Paxos quorums).
+    /// `replica_count` must be odd (Paxos quorums). In-memory only —
+    /// tests, benches, simulators; see [`ReplicatedMeta::durable`] for
+    /// the persistent form.
     pub fn new(replica_count: usize, seed: u64) -> Arc<Self> {
         Arc::new(ReplicatedMeta {
             group: PaxosGroup::new(replica_count),
@@ -269,7 +230,88 @@ impl ReplicatedMeta {
                 })
                 .collect(),
             rw: RwLock::new(()),
+            durability: None,
         })
+    }
+
+    /// Open (or create) a durable deployment rooted at `opts.dir`:
+    /// load the snapshot if one exists, open the WAL (truncating any
+    /// torn tail at the first bad CRC), replay the WAL records the
+    /// snapshot doesn't already cover through Paxos onto every replica,
+    /// and return the service positioned to log every further commit.
+    ///
+    /// All replicas restore from the same snapshot bytes and replay the
+    /// same command order, so they converge to byte-identical stores —
+    /// including the UUID RNG state, so post-recovery commands mint the
+    /// same UUIDs they would have without the crash.
+    pub fn durable(
+        replica_count: usize,
+        seed: u64,
+        opts: DurabilityOpts,
+    ) -> Result<(Arc<Self>, RecoveryReport)> {
+        let snap = snapshot::load(&opts.dir)?;
+        let (wal, walrec) = Wal::open(opts.dir.join(WAL_FILE))?;
+        let (base_commits, last_snapshot_unix, snapshot_loaded, stores) = match &snap {
+            Some((info, store_v)) => {
+                let stores = (0..replica_count)
+                    .map(|_| MetadataStore::restore(store_v))
+                    .collect::<Result<Vec<_>>>()?;
+                (info.commits, info.taken_at, true, stores)
+            }
+            None => (
+                0,
+                0,
+                false,
+                (0..replica_count).map(|_| MetadataStore::new(seed)).collect(),
+            ),
+        };
+        let meta = Arc::new(ReplicatedMeta {
+            group: PaxosGroup::new(replica_count),
+            replicas: stores
+                .into_iter()
+                .map(|store| Replica {
+                    store,
+                    applied: AtomicU64::new(0),
+                    alive: AtomicBool::new(true),
+                })
+                .collect(),
+            rw: RwLock::new(()),
+            durability: Some(Mutex::new(DurabilityState {
+                wal,
+                dir: opts.dir.clone(),
+                snapshot_every: opts.snapshot_every.max(1),
+                next_seq: base_commits,
+                commits_since_snapshot: 0,
+                last_snapshot_unix,
+            })),
+        });
+        // Replay the WAL tail: records with seq < base_commits are
+        // already folded into the snapshot (a crash between snapshot
+        // write and WAL reset leaves them behind) and must be skipped —
+        // commands are not idempotent.
+        let mut replayed = 0u64;
+        {
+            let _w = meta.rw.write().unwrap();
+            for rec in &walrec.records {
+                if rec.seq < base_commits {
+                    continue;
+                }
+                meta.group.propose_owned(0, rec.payload.clone())?;
+                replayed += 1;
+            }
+            meta.apply_backlog()?;
+            let mut d = meta.durability.as_ref().unwrap().lock().unwrap();
+            d.next_seq = base_commits + replayed;
+            d.commits_since_snapshot = replayed;
+        }
+        let report = RecoveryReport {
+            snapshot_loaded,
+            snapshot_commits: base_commits,
+            wal_records: walrec.records.len() as u64,
+            wal_replayed: replayed,
+            wal_truncated: walrec.truncated,
+        };
+        Ok((meta, report))
     }
 
     pub fn replica_count(&self) -> usize {
@@ -326,21 +368,58 @@ impl ReplicatedMeta {
     ) -> Result<CommandOutcome> {
         let _w = self.rw.write().unwrap();
         precheck()?;
+        // A poisoned WAL (earlier fsync failure) makes the deployment
+        // read-only until restart: fail BEFORE proposing, so the Paxos
+        // log doesn't grow unapplied slots that would wedge reads away
+        // from the last consistent state.
+        if let Some(d) = &self.durability {
+            if d.lock().unwrap().wal.is_poisoned() {
+                return Err(Error::Unavailable(
+                    "metadata WAL failed an earlier fsync; deployment is read-only \
+                     until restarted"
+                        .into(),
+                ));
+            }
+        }
         let payload = cmd.to_json();
-        let _slot = self.group.propose_owned(0, payload)?;
+        let _slot = self.group.propose_owned(0, payload.clone())?;
+        // Log-before-ack: the chosen command hits the fsync'd WAL
+        // before any replica applies it and before the caller sees an
+        // outcome. If the append fails the command is NOT acknowledged
+        // (error out here; the WAL poisons itself so no later commit
+        // can be acknowledged either — see `Wal::append`).
+        if let Some(d) = &self.durability {
+            let mut d = d.lock().unwrap();
+            let seq = d.next_seq;
+            d.wal.append(seq, &payload)?;
+            d.next_seq += 1;
+        }
+        let outcome = self.apply_backlog()?;
+        if outcome.is_some() {
+            self.maybe_snapshot();
+        }
+        outcome.ok_or_else(|| Error::Consensus("no live replica applied the command".into()))
+    }
+
+    /// Apply every unapplied chosen log entry to every live replica.
+    /// Returns the outcome of the **last** entry applied on the first
+    /// live replica (in `submit` that is exactly the just-committed
+    /// command: live replicas are always fully applied beforehand).
+    /// Caller must hold the exclusive write lock.
+    fn apply_backlog(&self) -> Result<Option<CommandOutcome>> {
         let mut outcome: Option<CommandOutcome> = None;
+        let mut first_live = true;
         for r in &self.replicas {
             if !r.alive.load(Ordering::SeqCst) {
                 continue;
             }
-            // Apply any backlog first (revived replicas), then this.
             let log = self.group.log_snapshot();
             let mut cursor = r.applied.load(Ordering::SeqCst);
             while (cursor as usize) < log.len() {
                 if let Some(entry) = &log[cursor as usize] {
                     let parsed = MetaCommand::from_json(entry)?;
                     let res = apply(&r.store, &parsed);
-                    if outcome.is_none() {
+                    if first_live {
                         outcome = Some(res);
                     }
                     cursor += 1;
@@ -349,8 +428,47 @@ impl ReplicatedMeta {
                 }
             }
             r.applied.store(cursor, Ordering::SeqCst);
+            first_live = false;
         }
-        outcome.ok_or_else(|| Error::Consensus("no live replica applied the command".into()))
+        Ok(outcome)
+    }
+
+    /// Snapshot cadence: after `snapshot_every` commits, persist the
+    /// full store state atomically and reset the WAL. Failures are
+    /// logged and non-fatal — the WAL still covers everything, so the
+    /// commit being acknowledged stays durable either way. Caller must
+    /// hold the exclusive write lock (the store must be quiescent while
+    /// it serializes).
+    fn maybe_snapshot(&self) {
+        let Some(d) = &self.durability else { return };
+        let mut d = d.lock().unwrap();
+        d.commits_since_snapshot += 1;
+        if d.commits_since_snapshot < d.snapshot_every {
+            return;
+        }
+        let target = self.group.log_snapshot().len() as u64;
+        let Some(r) = self.replicas.iter().find(|r| {
+            r.alive.load(Ordering::SeqCst) && r.applied.load(Ordering::SeqCst) >= target
+        }) else {
+            return; // no fully-applied live replica to serialize
+        };
+        let now = unix_secs();
+        match snapshot::save(&d.dir, d.next_seq, now, r.store.snapshot_value()) {
+            Ok(()) => {
+                if let Err(e) = d.wal.reset() {
+                    // Stale records are harmless: their seq numbers are
+                    // below the snapshot's commit watermark.
+                    crate::log_warn!("wal reset after snapshot failed: {e}");
+                }
+                d.commits_since_snapshot = 0;
+                d.last_snapshot_unix = now;
+            }
+            Err(e) => {
+                crate::log_warn!("metadata snapshot failed (wal retained): {e}");
+                // Retry after another snapshot_every commits.
+                d.commits_since_snapshot = 0;
+            }
+        }
     }
 
     /// Read from the first live, fully-applied replica (shared lock —
@@ -373,6 +491,28 @@ impl ReplicatedMeta {
 
     pub fn applied_cursor(&self, id: usize) -> u64 {
         self.replicas[id].applied.load(Ordering::SeqCst)
+    }
+
+    /// Whether commits are persisted to a WAL + snapshot pair.
+    pub fn is_durable(&self) -> bool {
+        self.durability.is_some()
+    }
+
+    /// Records currently in the WAL (0 when not durable). Grows per
+    /// commit, drops to 0 at each compacting snapshot.
+    pub fn wal_len(&self) -> u64 {
+        self.durability.as_ref().map_or(0, |d| d.lock().unwrap().wal.len())
+    }
+
+    /// Unix seconds of the last compacting snapshot (0 = never).
+    pub fn last_snapshot_unix(&self) -> u64 {
+        self.durability.as_ref().map_or(0, |d| d.lock().unwrap().last_snapshot_unix)
+    }
+
+    /// Total commands ever committed by this deployment, across
+    /// restarts (0 when not durable).
+    pub fn committed_seq(&self) -> u64 {
+        self.durability.as_ref().map_or(0, |d| d.lock().unwrap().next_seq)
     }
 }
 
@@ -577,6 +717,146 @@ mod tests {
         }
         // System still writable.
         m.submit(put_cmd("obj", 1)).unwrap();
+    }
+
+    fn durable_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dynostore-repl-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn durable_opts(dir: &std::path::Path, every: u64) -> DurabilityOpts {
+        DurabilityOpts::new(dir).snapshot_every(every)
+    }
+
+    #[test]
+    fn durable_restart_replays_every_acknowledged_command() {
+        let dir = durable_dir("replay");
+        {
+            let (m, rec) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+            assert!(!rec.recovered());
+            m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+            for i in 0..5 {
+                m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+            }
+            assert_eq!(m.wal_len(), 6);
+            // Hard drop: no shutdown hook, nothing flushed beyond the
+            // per-commit fsyncs.
+        }
+        let (m, rec) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+        assert!(rec.recovered());
+        assert!(!rec.snapshot_loaded);
+        assert_eq!(rec.wal_replayed, 6);
+        assert!(!rec.wal_truncated);
+        for i in 0..5 {
+            let meta =
+                m.read(|s| s.get_latest("UserA", "/UserA", &format!("o{i}"))).unwrap();
+            assert_eq!(meta.size, 42);
+        }
+        // All replicas converged after replay.
+        for r in 0..3 {
+            assert_eq!(m.replica_store(r).object_count(), 5);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_compacts_wal_and_restart_uses_it() {
+        let dir = durable_dir("compact");
+        let uuid_before;
+        {
+            let (m, _) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 4)).unwrap();
+            m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+            for i in 0..9 {
+                m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+            }
+            // 10 commits, snapshot_every=4 → snapshots at 4 and 8; WAL
+            // holds the 2 commits after the last snapshot.
+            assert_eq!(m.wal_len(), 2);
+            assert!(m.last_snapshot_unix() > 0);
+            assert_eq!(m.committed_seq(), 10);
+            uuid_before = m.read(|s| s.get_latest("UserA", "/UserA", "o8")).unwrap().uuid;
+        }
+        let (m, rec) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 4)).unwrap();
+        assert!(rec.snapshot_loaded);
+        assert_eq!(rec.snapshot_commits, 8);
+        assert_eq!(rec.wal_replayed, 2);
+        assert_eq!(m.committed_seq(), 10);
+        let after = m.read(|s| s.get_latest("UserA", "/UserA", "o8")).unwrap();
+        assert_eq!(after.uuid, uuid_before, "uuid sequence survives recovery");
+        // The recovered deployment keeps committing and snapshotting.
+        for i in 9..15 {
+            m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+        }
+        assert_eq!(m.read(|s| Ok(s.object_count())).unwrap(), 15);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_wal_records_below_snapshot_watermark_are_skipped() {
+        // Simulate a crash BETWEEN snapshot write and WAL reset: the
+        // WAL still holds records the snapshot covers. Replaying them
+        // would double-apply (PutObject mints a fresh version).
+        let dir = durable_dir("watermark");
+        {
+            let (m, _) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+            m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+            for i in 0..4 {
+                m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+            }
+            // Hand-write the snapshot covering all 5 commits but leave
+            // the WAL un-reset — exactly the crash window.
+            crate::durability::snapshot::save(
+                &dir,
+                5,
+                111,
+                m.replica_store(0).snapshot_value(),
+            )
+            .unwrap();
+        }
+        let (m, rec) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+        assert!(rec.snapshot_loaded);
+        assert_eq!(rec.wal_records, 5);
+        assert_eq!(rec.wal_replayed, 0, "covered records skipped");
+        assert_eq!(m.read(|s| Ok(s.object_count())).unwrap(), 4);
+        // No duplicate versions: each object has exactly version 0.
+        let meta = m.read(|s| s.get_latest("UserA", "/UserA", "o0")).unwrap();
+        assert_eq!(meta.version, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_wal_tail_recovers_the_intact_prefix() {
+        let dir = durable_dir("torn");
+        {
+            let (m, _) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+            m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+            for i in 0..3 {
+                m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+            }
+        }
+        // Tear the last record (crash mid-append).
+        let wal_path = dir.join(WAL_FILE);
+        let len = std::fs::metadata(&wal_path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&wal_path).unwrap();
+        f.set_len(len - 2).unwrap();
+        drop(f);
+        let (m, rec) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+        assert!(rec.wal_truncated);
+        assert_eq!(rec.wal_replayed, 3, "namespace + first two puts survive");
+        assert_eq!(m.read(|s| Ok(s.object_count())).unwrap(), 2);
+        assert!(m.read(|s| s.get_latest("UserA", "/UserA", "o2")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_durable_meta_reports_inert_durability() {
+        let m = setup(3);
+        assert!(!m.is_durable());
+        assert_eq!(m.wal_len(), 0);
+        assert_eq!(m.last_snapshot_unix(), 0);
+        assert_eq!(m.committed_seq(), 0);
     }
 
     #[test]

@@ -1,0 +1,68 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the checksum
+//! framing the durability WAL's records. Table-driven, built at compile
+//! time; no external crates (the vendored set has no crc32fast).
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// Continue a CRC-32 over `data` from a previous [`crc32`] result —
+/// lets the WAL checksum a record's sequence header and payload without
+/// concatenating them.
+pub fn crc32_update(crc: u32, data: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// CRC-32 of `data` (equivalent to `crc32_update(0, data)`).
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_update(0, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical check value of CRC-32/ISO-HDLC.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn update_composes_like_concatenation() {
+        let whole = crc32(b"hello world");
+        let split = crc32_update(crc32(b"hello "), b"world");
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_crc() {
+        let base = b"record payload".to_vec();
+        let good = crc32(&base);
+        for i in 0..base.len() {
+            let mut bad = base.clone();
+            bad[i] ^= 1;
+            assert_ne!(crc32(&bad), good, "flip at byte {i}");
+        }
+    }
+}

@@ -1,10 +1,12 @@
 //! Small shared utilities: deterministic PRNG, hex, byte-size formatting,
 //! monotonic wall time, and a minimal stderr logger.
 
+pub mod crc32;
 pub mod hexfmt;
 pub mod logger;
 pub mod rng;
 
+pub use crc32::{crc32, crc32_update};
 pub use hexfmt::{from_hex, to_hex};
 pub use rng::Rng;
 

@@ -105,6 +105,17 @@ impl Rng {
         idx.sort_unstable();
         idx
     }
+
+    /// The generator's full 256-bit state (metadata snapshots persist it
+    /// so a recovered store keeps drawing the same UUID sequence).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a previously captured [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +175,18 @@ mod tests {
         assert_eq!(s.len(), 7);
         for w in s.windows(2) {
             assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_sequence() {
+        let mut a = Rng::new(77);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
         }
     }
 
