@@ -1,0 +1,262 @@
+//! API-overhead bench (EXPERIMENTS.md §API): what does the wire cost
+//! over the in-process path, and what do range reads save?
+//!
+//! Two measurements against one deployment:
+//!
+//! * **Transport overhead** — the same `ObjectStore` push/pull workload
+//!   through `LocalStore` (in-process) and `RemoteStore` (HTTP `/v1`
+//!   against a live localhost gateway). The gap is the REST surface's
+//!   real cost: HTTP framing, TCP, JSON metadata, percent-encoding.
+//! * **Range reads** — bytes the storage fleet moves for a small slice
+//!   of a large object via `pull_range` (covering systematic chunks
+//!   only) vs a full pull (k chunks + decode), the wide-area win of the
+//!   satellite/medical case studies.
+//!
+//! Emits `BENCH_api.json` for CI. `--smoke` shrinks the workload.
+
+use std::sync::Arc;
+
+use dynostore::api::{LocalStore, ObjectStore, PullOptions, PushOptions, RemoteStore};
+use dynostore::bench::{fmt_mb_s, fmt_s, measure, Table};
+use dynostore::coordinator::{GfEngine, PullOpts};
+use dynostore::erasure::{Codec, ErasureConfig};
+use dynostore::json::{obj, to_string_pretty, Value};
+use dynostore::policy::ResiliencePolicy;
+use dynostore::sim::Site;
+use dynostore::testkit::uniform_specs;
+use dynostore::util::Rng;
+use dynostore::DynoStore;
+
+const N: usize = 10;
+const K: usize = 7;
+
+fn deployment() -> Arc<DynoStore> {
+    let ds = Arc::new(
+        DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(N, K)))
+            .engine(GfEngine::Swar)
+            .build(),
+    );
+    for c in
+        dynostore::container::deploy_containers(&uniform_specs("dc", 12, 256 << 20, 1 << 40), 12, 0)
+            .containers
+    {
+        ds.add_container(c).unwrap();
+    }
+    ds
+}
+
+struct TransportRow {
+    size: usize,
+    local_push_s: f64,
+    local_pull_s: f64,
+    remote_push_s: f64,
+    remote_pull_s: f64,
+}
+
+fn transport_case(
+    local: &LocalStore,
+    remote: &RemoteStore,
+    size: usize,
+    iters: usize,
+) -> TransportRow {
+    let data = Rng::new(size as u64).bytes(size);
+    let mut row = TransportRow {
+        size,
+        local_push_s: 0.0,
+        local_pull_s: 0.0,
+        remote_push_s: 0.0,
+        remote_pull_s: 0.0,
+    };
+    for (store, push_s, pull_s) in [
+        (local as &dyn ObjectStore, &mut row.local_push_s, &mut row.local_pull_s),
+        (remote as &dyn ObjectStore, &mut row.remote_push_s, &mut row.remote_pull_s),
+    ] {
+        let label = store.transport();
+        let mut i = 0u64;
+        let push = measure(1, iters, || {
+            let name = format!("bench-{label}-{size}-{i}");
+            store.push("/Bench", &name, &data, &PushOptions::default()).unwrap();
+            i += 1;
+        });
+        *push_s = push.mean_s();
+        let name = format!("bench-{label}-{size}-0");
+        let pull = measure(1, iters, || {
+            let out = store.pull("/Bench", &name, &PullOptions::default()).unwrap();
+            assert_eq!(out.data.len(), size);
+        });
+        *pull_s = pull.mean_s();
+    }
+    row
+}
+
+struct RangeRow {
+    object_bytes: usize,
+    range_bytes: u64,
+    full_chunks: usize,
+    range_chunks: usize,
+    full_wire_bytes: u64,
+    range_wire_bytes: u64,
+    full_s: f64,
+    range_s: f64,
+}
+
+fn range_case(ds: &Arc<DynoStore>, token: &str, object_bytes: usize, range_bytes: u64, iters: usize) -> RangeRow {
+    let data = Rng::new(object_bytes as u64).bytes(object_bytes);
+    let name = format!("range-{object_bytes}");
+    ds.push(token, "/Bench", &name, &data, Default::default()).unwrap();
+    // Wire bytes per chunk (header + aligned payload), for the
+    // bytes-moved accounting.
+    let chunk_wire =
+        Codec::new(ErasureConfig::new(N, K)).unwrap().chunk_len(object_bytes) as u64 + 56;
+
+    let full = measure(1, iters, || {
+        let report = ds.pull(token, "/Bench", &name, PullOpts::default()).unwrap();
+        assert_eq!(report.data.len(), object_bytes);
+    });
+    let full_report = ds.pull(token, "/Bench", &name, PullOpts::default()).unwrap();
+
+    let start = (object_bytes as u64 / 2).min(object_bytes as u64 - range_bytes);
+    let end = start + range_bytes - 1;
+    let range = measure(1, iters, || {
+        let report =
+            ds.pull_range(token, "/Bench", &name, start, end, PullOpts::default()).unwrap();
+        assert_eq!(report.data.len(), range_bytes as usize);
+        assert!(report.partial, "healthy fleet must serve the fast path");
+    });
+    let range_report =
+        ds.pull_range(token, "/Bench", &name, start, end, PullOpts::default()).unwrap();
+
+    RangeRow {
+        object_bytes,
+        range_bytes,
+        full_chunks: full_report.chunks_fetched,
+        range_chunks: range_report.chunks_fetched,
+        full_wire_bytes: full_report.chunks_fetched as u64 * chunk_wire,
+        range_wire_bytes: range_report.chunks_fetched as u64 * chunk_wire,
+        full_s: full.mean_s(),
+        range_s: range.mean_s(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (sizes, iters): (&[usize], usize) = if smoke {
+        (&[64 << 10, 512 << 10], 3)
+    } else {
+        (&[64 << 10, 1 << 20, 8 << 20], 10)
+    };
+
+    let ds = deployment();
+    let token = ds.register_user("Bench").unwrap();
+    let server = dynostore::gateway::serve(Arc::clone(&ds), "127.0.0.1:0", 4).unwrap();
+    let local = LocalStore::new(Arc::clone(&ds), token.clone(), Site::ChameleonUc);
+    let remote = RemoteStore::connect(&server.addr().to_string(), &token);
+
+    println!(
+        "api_overhead: ObjectStore parity workload, local vs /v1 HTTP gateway \
+         (localhost, {} iters/case{})",
+        iters,
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let rows: Vec<TransportRow> =
+        sizes.iter().map(|&s| transport_case(&local, &remote, s, iters)).collect();
+    let mut table = Table::new(
+        "ObjectStore transport overhead (localhost gateway)",
+        &["object", "local push", "remote push", "remote put tput", "local pull", "remote pull", "overhead (pull)"],
+    );
+    for r in &rows {
+        table.row(vec![
+            format!("{} KiB", r.size >> 10),
+            fmt_s(r.local_push_s),
+            fmt_s(r.remote_push_s),
+            fmt_mb_s(r.size as f64 / r.remote_push_s.max(1e-12)),
+            fmt_s(r.local_pull_s),
+            fmt_s(r.remote_pull_s),
+            format!("{:.2}x", r.remote_pull_s / r.local_pull_s.max(1e-12)),
+        ]);
+    }
+    table.print();
+
+    let (range_objects, range_len): (&[usize], u64) = if smoke {
+        (&[1 << 20], 4 << 10)
+    } else {
+        (&[1 << 20, 16 << 20, 64 << 20], 4 << 10)
+    };
+    let range_rows: Vec<RangeRow> = range_objects
+        .iter()
+        .map(|&o| range_case(&ds, &token, o, range_len, iters))
+        .collect();
+    let mut table = Table::new(
+        "Range read vs full pull (4 KiB slice)",
+        &["object", "full chunks", "range chunks", "full wire", "range wire", "bytes saved", "full", "range"],
+    );
+    for r in &range_rows {
+        table.row(vec![
+            format!("{} MiB", r.object_bytes >> 20),
+            r.full_chunks.to_string(),
+            r.range_chunks.to_string(),
+            format!("{:.1} MiB", r.full_wire_bytes as f64 / (1 << 20) as f64),
+            format!("{:.2} MiB", r.range_wire_bytes as f64 / (1 << 20) as f64),
+            format!("{:.0}x", r.full_wire_bytes as f64 / r.range_wire_bytes.max(1) as f64),
+            fmt_s(r.full_s),
+            fmt_s(r.range_s),
+        ]);
+    }
+    table.print();
+    if let Some(last) = range_rows.last() {
+        println!(
+            "HEADLINE {} MiB object, {} KiB slice: {}x fewer wire bytes, {:.1}x faster",
+            last.object_bytes >> 20,
+            last.range_bytes >> 10,
+            (last.full_wire_bytes as f64 / last.range_wire_bytes.max(1) as f64).round(),
+            last.full_s / last.range_s.max(1e-12)
+        );
+    }
+
+    let transport_json: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("size", r.size.into()),
+                ("local_push_s", r.local_push_s.into()),
+                ("remote_push_s", r.remote_push_s.into()),
+                ("local_pull_s", r.local_pull_s.into()),
+                ("remote_pull_s", r.remote_pull_s.into()),
+                (
+                    "pull_overhead_x",
+                    (r.remote_pull_s / r.local_pull_s.max(1e-12)).into(),
+                ),
+            ])
+        })
+        .collect();
+    let range_json: Vec<Value> = range_rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("object_bytes", r.object_bytes.into()),
+                ("range_bytes", r.range_bytes.into()),
+                ("full_chunks", r.full_chunks.into()),
+                ("range_chunks", r.range_chunks.into()),
+                ("full_wire_bytes", r.full_wire_bytes.into()),
+                ("range_wire_bytes", r.range_wire_bytes.into()),
+                ("full_s", r.full_s.into()),
+                ("range_s", r.range_s.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "api_overhead".into()),
+        ("smoke", smoke.into()),
+        ("policy", format!("{K},{N}").into()),
+        ("transport_rows", Value::Arr(transport_json)),
+        ("range_rows", Value::Arr(range_json)),
+    ]);
+    let path = "BENCH_api.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    drop(server);
+}

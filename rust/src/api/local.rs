@@ -1,0 +1,148 @@
+//! [`LocalStore`]: the in-process [`ObjectStore`] backend — a token
+//! bound to an `Arc<DynoStore>` plus the client's (simulated) site.
+//! This is exactly what `Client` did before the API redesign; the
+//! simulated wide-area timing of every operation is preserved in
+//! [`PushOutcome::seconds`] / [`PullOutcome::seconds`].
+
+use std::sync::Arc;
+
+use crate::coordinator::{DynoStore, OpContext, PullOpts, PushOpts};
+use crate::metadata::Permission;
+use crate::sim::Site;
+use crate::Result;
+
+use super::{
+    ListOptions, ObjectInfo, ObjectListing, ObjectStore, PullOptions, PullOutcome, PushOptions,
+    PushOutcome, RangeOutcome, DEFAULT_LIST_LIMIT, MAX_LIST_LIMIT,
+};
+
+/// In-process `ObjectStore` over a [`DynoStore`] deployment.
+pub struct LocalStore {
+    store: Arc<DynoStore>,
+    token: String,
+    site: Site,
+}
+
+impl LocalStore {
+    pub fn new(store: Arc<DynoStore>, token: impl Into<String>, site: Site) -> Self {
+        LocalStore { store, token: token.into(), site }
+    }
+
+    /// The wrapped deployment (report-level telemetry, admin ops).
+    pub fn deployment(&self) -> &Arc<DynoStore> {
+        &self.store
+    }
+
+    /// The bearer token this backend authenticates with (crate-internal:
+    /// `Client`'s report-level operations reuse the same credentials).
+    pub(crate) fn token(&self) -> &str {
+        &self.token
+    }
+
+    fn ctx(&self, flows: u32) -> OpContext {
+        OpContext::at(self.site).with_flows(flows.max(1))
+    }
+}
+
+impl ObjectStore for LocalStore {
+    fn transport(&self) -> &'static str {
+        "local"
+    }
+
+    fn push(
+        &self,
+        collection: &str,
+        name: &str,
+        data: &[u8],
+        opts: &PushOptions,
+    ) -> Result<PushOutcome> {
+        let report = self.store.push(
+            &self.token,
+            collection,
+            name,
+            data,
+            PushOpts { ctx: self.ctx(opts.flows), policy: opts.policy },
+        )?;
+        Ok(PushOutcome { info: ObjectInfo::from_meta(&report.meta), seconds: report.sim_s })
+    }
+
+    fn pull(&self, collection: &str, name: &str, opts: &PullOptions) -> Result<PullOutcome> {
+        let report = self.store.pull(
+            &self.token,
+            collection,
+            name,
+            PullOpts { ctx: self.ctx(opts.flows), version: opts.version },
+        )?;
+        Ok(PullOutcome {
+            info: ObjectInfo::from_meta(&report.meta),
+            data: report.data,
+            seconds: report.sim_s,
+        })
+    }
+
+    fn pull_range(
+        &self,
+        collection: &str,
+        name: &str,
+        start: u64,
+        end: u64,
+        opts: &PullOptions,
+    ) -> Result<RangeOutcome> {
+        let report = self.store.pull_range(
+            &self.token,
+            collection,
+            name,
+            start,
+            end,
+            PullOpts { ctx: self.ctx(opts.flows), version: opts.version },
+        )?;
+        Ok(RangeOutcome {
+            info: ObjectInfo::from_meta(&report.meta),
+            data: report.data,
+            seconds: report.sim_s,
+            chunks_fetched: report.chunks_fetched,
+            partial: report.partial,
+        })
+    }
+
+    fn stat(&self, collection: &str, name: &str, version: Option<u64>) -> Result<ObjectInfo> {
+        let meta = self.store.stat(&self.token, collection, name, version)?;
+        Ok(ObjectInfo::from_meta(&meta))
+    }
+
+    fn delete(&self, collection: &str, name: &str) -> Result<usize> {
+        self.store.evict(&self.token, collection, name)
+    }
+
+    fn list(&self, collection: &str, opts: &ListOptions) -> Result<ObjectListing> {
+        // Same clamp as the gateway, so both backends paginate
+        // identically (the parity contract).
+        let limit =
+            if opts.limit == 0 { DEFAULT_LIST_LIMIT } else { opts.limit.min(MAX_LIST_LIMIT) };
+        let page = self.store.list_page(
+            &self.token,
+            collection,
+            &opts.prefix,
+            opts.after.as_deref(),
+            limit,
+        )?;
+        let next_after = if page.truncated {
+            page.objects.last().map(|m| m.name.clone())
+        } else {
+            None
+        };
+        Ok(ObjectListing {
+            objects: page.objects.iter().map(ObjectInfo::from_meta).collect(),
+            truncated: page.truncated,
+            next_after,
+        })
+    }
+
+    fn grant(&self, collection: &str, user: &str, perm: Permission) -> Result<()> {
+        self.store.grant(&self.token, collection, user, perm)
+    }
+
+    fn revoke(&self, collection: &str, user: &str, perm: Permission) -> Result<()> {
+        self.store.revoke(&self.token, collection, user, perm)
+    }
+}

@@ -1,0 +1,251 @@
+//! The transport-agnostic object API (the PR-5 client/gateway
+//! redesign): one [`ObjectStore`] trait with two interchangeable
+//! implementations —
+//!
+//! * [`LocalStore`] — in-process, wrapping [`crate::DynoStore`]
+//!   directly (the historical `Client` behavior; simulated wide-area
+//!   timing preserved).
+//! * [`RemoteStore`] — HTTP against a gateway's versioned `/v1` REST
+//!   surface, so a wide-area client, the CLI, and tests drive the exact
+//!   bytes a real deployment serves.
+//!
+//! This mirrors what the container layer's `ContainerChannel` did for
+//! chunk I/O, one level up: [`crate::Client`] composes either backend
+//! with encryption, resilience-policy overrides, and parallel-channel
+//! batching, and behaves byte-identically over both (asserted by
+//! `tests/integration_api.rs`).
+
+mod local;
+mod remote;
+
+pub use local::LocalStore;
+pub use remote::RemoteStore;
+
+use crate::metadata::{ObjectMeta, Permission};
+use crate::policy::ResiliencePolicy;
+use crate::{Error, Result};
+
+/// Default page size for [`ObjectStore::list`] when the caller doesn't
+/// set one (also the gateway-side default for `/v1/collections`).
+pub const DEFAULT_LIST_LIMIT: usize = 1000;
+
+/// Hard ceiling on a single listing page (gateway-enforced).
+pub const MAX_LIST_LIMIT: usize = 10_000;
+
+/// Client-visible metadata of one object version — the fields the `/v1`
+/// surface exposes as headers (`ETag`, `x-dyno-version`, `x-dyno-size`,
+/// `x-dyno-uuid`, `x-dyno-created`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectInfo {
+    pub uuid: String,
+    pub name: String,
+    pub collection: String,
+    pub version: u64,
+    pub size: u64,
+    /// Content identity: hex SHA3-256 of the object bytes (the HTTP
+    /// `ETag`, unquoted).
+    pub etag: String,
+    pub created_at: u64,
+}
+
+impl ObjectInfo {
+    pub fn from_meta(meta: &ObjectMeta) -> Self {
+        ObjectInfo {
+            uuid: meta.uuid.clone(),
+            name: meta.name.clone(),
+            collection: meta.collection.clone(),
+            version: meta.version,
+            size: meta.size,
+            etag: crate::util::to_hex(&meta.sha3),
+            created_at: meta.created_at,
+        }
+    }
+}
+
+/// Upload options (transport-agnostic subset of the coordinator's
+/// `PushOpts`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PushOptions {
+    /// Override the deployment's default resilience policy (the `/v1`
+    /// `x-dyno-policy` header).
+    pub policy: Option<ResiliencePolicy>,
+    /// Parallel channels sharing the client link (simulated-time knob;
+    /// meaningful for [`LocalStore`], ignored over HTTP where real
+    /// sockets contend).
+    pub flows: u32,
+}
+
+/// Download options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PullOptions {
+    /// Pin a specific version (`/v1` `?version=`; default latest).
+    pub version: Option<u64>,
+    /// See [`PushOptions::flows`].
+    pub flows: u32,
+}
+
+/// Listing options (`/v1/collections` query string).
+#[derive(Debug, Clone, Default)]
+pub struct ListOptions {
+    /// Only names starting with this prefix.
+    pub prefix: String,
+    /// Keyset cursor: names strictly after this one (from the previous
+    /// page's `next_after`).
+    pub after: Option<String>,
+    /// Page size; 0 means [`DEFAULT_LIST_LIMIT`].
+    pub limit: usize,
+}
+
+/// Result of an upload.
+#[derive(Debug, Clone)]
+pub struct PushOutcome {
+    pub info: ObjectInfo,
+    /// Simulated wide-area seconds for [`LocalStore`]; measured request
+    /// wallclock for [`RemoteStore`].
+    pub seconds: f64,
+}
+
+/// Result of a download.
+#[derive(Debug, Clone)]
+pub struct PullOutcome {
+    pub data: Vec<u8>,
+    pub info: ObjectInfo,
+    /// See [`PushOutcome::seconds`].
+    pub seconds: f64,
+}
+
+/// Result of a range read.
+#[derive(Debug, Clone)]
+pub struct RangeOutcome {
+    /// Exactly `object[start..=end]` (end clamped to the object size).
+    pub data: Vec<u8>,
+    pub info: ObjectInfo,
+    pub seconds: f64,
+    /// Chunks the coordinator fetched to serve the range.
+    pub chunks_fetched: usize,
+    /// True when only the covering systematic chunks were read (the
+    /// partial-read fast path; false = full-pull fallback).
+    pub partial: bool,
+}
+
+/// One page of a listing.
+#[derive(Debug, Clone)]
+pub struct ObjectListing {
+    pub objects: Vec<ObjectInfo>,
+    /// More names matched beyond this page.
+    pub truncated: bool,
+    /// Pass as [`ListOptions::after`] to fetch the next page (set iff
+    /// `truncated`).
+    pub next_after: Option<String>,
+}
+
+/// A DynoStore deployment as seen by a client, independent of how the
+/// requests travel. Every operation is defined to produce identical
+/// results through every implementation against the same deployment —
+/// the parity contract `tests/integration_api.rs` enforces.
+pub trait ObjectStore: Send + Sync {
+    /// Transport label (`"local"`, `"http"`) for telemetry.
+    fn transport(&self) -> &'static str;
+
+    /// Upload one immutable object version.
+    fn push(&self, collection: &str, name: &str, data: &[u8], opts: &PushOptions)
+        -> Result<PushOutcome>;
+
+    /// Download one object (latest, or `opts.version`).
+    fn pull(&self, collection: &str, name: &str, opts: &PullOptions) -> Result<PullOutcome>;
+
+    /// Download `object[start..=end]` without transferring the rest.
+    fn pull_range(
+        &self,
+        collection: &str,
+        name: &str,
+        start: u64,
+        end: u64,
+        opts: &PullOptions,
+    ) -> Result<RangeOutcome>;
+
+    /// Metadata only (no data-plane traffic).
+    fn stat(&self, collection: &str, name: &str, version: Option<u64>) -> Result<ObjectInfo>;
+
+    /// Does the latest version exist (and is it visible to the caller)?
+    fn exists(&self, collection: &str, name: &str) -> Result<bool> {
+        match self.stat(collection, name, None) {
+            Ok(_) => Ok(true),
+            Err(Error::NotFound(_)) => Ok(false),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Remove an object and all its versions; returns deleted chunk
+    /// count.
+    fn delete(&self, collection: &str, name: &str) -> Result<usize>;
+
+    /// Paginated listing of a collection.
+    fn list(&self, collection: &str, opts: &ListOptions) -> Result<ObjectListing>;
+
+    /// Grant `perm` on a collection to `user` (owner-only).
+    fn grant(&self, collection: &str, user: &str, perm: Permission) -> Result<()>;
+
+    /// Revoke a direct grant.
+    fn revoke(&self, collection: &str, user: &str, perm: Permission) -> Result<()>;
+}
+
+/// Parse the `x-dyno-policy` spelling of a resilience policy:
+/// `"k,n"` (erasure IDA(n,k), e.g. `7,10`) or `"regular"` (single
+/// whole-object copy). Shared by the gateway (header → `PushOpts`), the
+/// remote client (policy → header), and the CLI (`--policy`).
+pub fn parse_policy(s: &str) -> Result<ResiliencePolicy> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("regular") {
+        return Ok(ResiliencePolicy::Regular);
+    }
+    let (k, n) = s
+        .split_once(',')
+        .ok_or_else(|| Error::Invalid(format!("bad policy '{s}' (want 'k,n' or 'regular')")))?;
+    let k: usize = k
+        .trim()
+        .parse()
+        .map_err(|_| Error::Invalid(format!("bad policy k in '{s}'")))?;
+    let n: usize = n
+        .trim()
+        .parse()
+        .map_err(|_| Error::Invalid(format!("bad policy n in '{s}'")))?;
+    let cfg = crate::erasure::ErasureConfig::new(n, k);
+    cfg.validate()?;
+    Ok(ResiliencePolicy::Fixed(cfg))
+}
+
+/// Inverse of [`parse_policy`] for the policies it can express
+/// (`None` for `Dynamic`, which has no header spelling yet).
+pub fn policy_header(policy: &ResiliencePolicy) -> Option<String> {
+    match policy {
+        ResiliencePolicy::Regular => Some("regular".into()),
+        ResiliencePolicy::Fixed(cfg) => Some(format!("{},{}", cfg.k, cfg.n)),
+        ResiliencePolicy::Dynamic { .. } => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_spelling_roundtrip() {
+        for spelling in ["7,10", "2,3", "regular"] {
+            let p = parse_policy(spelling).unwrap();
+            assert_eq!(policy_header(&p).unwrap(), spelling);
+        }
+        assert_eq!(
+            policy_header(&parse_policy(" 7 , 10 ").unwrap()).unwrap(),
+            "7,10",
+            "whitespace tolerated"
+        );
+        assert!(parse_policy("10,7").is_err(), "k > n rejected");
+        assert!(parse_policy("banana").is_err());
+        assert!(parse_policy("7").is_err());
+        assert!(parse_policy("0,5").is_err());
+        assert!(
+            policy_header(&ResiliencePolicy::Dynamic { k: 4, target_loss: 0.01 }).is_none()
+        );
+    }
+}

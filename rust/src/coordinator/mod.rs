@@ -15,7 +15,8 @@ pub use lifecycle::RebalanceOpts;
 pub use ops::{OpContext, PullOpts, PushOpts};
 pub use recovery::RecoveryVerifyReport;
 pub use reports::{
-    ChunkIoReport, DecommissionReport, PullReport, PushReport, RebalanceReport, RepairReport,
+    ChunkIoReport, DecommissionReport, PullReport, PushReport, RangeReport, RebalanceReport,
+    RepairReport,
 };
 
 use std::collections::HashMap;
@@ -84,6 +85,8 @@ impl std::fmt::Display for GfEngine {
 pub struct Metrics {
     pub pushes: AtomicU64,
     pub pulls: AtomicU64,
+    /// Range reads served (fast-path and fallback both count).
+    pub range_pulls: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
     pub repairs: AtomicU64,
@@ -103,6 +106,7 @@ impl Metrics {
         let mut m = HashMap::new();
         m.insert("pushes", self.pushes.load(Ordering::Relaxed));
         m.insert("pulls", self.pulls.load(Ordering::Relaxed));
+        m.insert("range_pulls", self.range_pulls.load(Ordering::Relaxed));
         m.insert("bytes_in", self.bytes_in.load(Ordering::Relaxed));
         m.insert("bytes_out", self.bytes_out.load(Ordering::Relaxed));
         m.insert("repairs", self.repairs.load(Ordering::Relaxed));
@@ -344,9 +348,11 @@ impl DynoStore {
     }
 
     /// Create a user namespace and issue the user's OAuth-style token.
+    /// Registering a name that already exists is an [`Error::Conflict`]
+    /// (HTTP `409` at the gateway).
     pub fn register_user(&self, user: &str) -> Result<String> {
         match self.meta.submit(MetaCommand::CreateNamespace { user: user.into() })? {
-            crate::paxos::CommandOutcome::Failed(e) => Err(Error::Invalid(e)),
+            crate::paxos::CommandOutcome::Failed(e) => Err(Error::from_failed(e)),
             _ => Ok(self.tokens.issue(user, &["read", "write"], 24 * 3600)),
         }
     }

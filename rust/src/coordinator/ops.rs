@@ -16,14 +16,14 @@ use std::sync::Arc;
 use crate::container::{ContainerChannel, DataContainer};
 use crate::crypto::sha3_256;
 use crate::erasure::{Chunk, ErasureConfig};
-use crate::metadata::{ObjectMeta, ObjectPlacement};
+use crate::metadata::{ObjectMeta, ObjectPage, ObjectPlacement, Permission};
 use crate::paxos::{CommandOutcome, MetaCommand};
 use crate::policy::{select_dynamic, ResiliencePolicy};
 use crate::sim::{cost, Site};
 use crate::util::{now_ns, to_hex, unix_secs};
 use crate::{Error, Result};
 
-use super::reports::{ChunkIoReport, PullReport, PushReport, RepairReport};
+use super::reports::{ChunkIoReport, PullReport, PushReport, RangeReport, RepairReport};
 use super::DynoStore;
 
 /// Simulated metadata-commit base cost: two LAN round trips among the
@@ -331,7 +331,7 @@ impl DynoStore {
         let outcome = submitted?;
         let meta = match outcome {
             CommandOutcome::Meta(meta) => *meta,
-            CommandOutcome::Failed(e) => return Err(Error::Invalid(e)),
+            CommandOutcome::Failed(e) => return Err(Error::from_failed(e)),
             other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
         };
         let meta_s = META_COMMIT_BASE_S + (now_ns() - t0) as f64 / 1e9;
@@ -677,6 +677,283 @@ impl DynoStore {
         })
     }
 
+    /// Metadata of `(collection, name)` at `version` (`None` = latest)
+    /// without touching the data plane — the `/v1` stat / `HEAD`
+    /// surface: size, version, content hash (ETag), placement.
+    pub fn stat(
+        &self,
+        token: &str,
+        collection: &str,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<ObjectMeta> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        match version {
+            None => self.meta.read(|s| s.get_latest(&claims.subject, collection, name)),
+            Some(v) => {
+                self.meta.read(|s| s.get_version(&claims.subject, collection, name, v))
+            }
+        }
+    }
+
+    /// Paginated object listing of a collection (the `/v1/collections`
+    /// surface): names starting with `prefix`, strictly after `after`,
+    /// at most `limit` entries, name-ordered.
+    pub fn list_page(
+        &self,
+        token: &str,
+        collection: &str,
+        prefix: &str,
+        after: Option<&str>,
+        limit: usize,
+    ) -> Result<ObjectPage> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        self.meta
+            .read(|s| s.list_page(&claims.subject, collection, prefix, after, limit))
+    }
+
+    /// Grant `perm` on collection `path` to `user` (the `/v1/grants`
+    /// surface). Ownership is enforced by the metadata store — only the
+    /// namespace owner may grant.
+    pub fn grant(&self, token: &str, path: &str, user: &str, perm: Permission) -> Result<()> {
+        self.acl_command(token, |caller| MetaCommand::Grant {
+            caller,
+            path: path.into(),
+            user: user.into(),
+            perm,
+        })
+    }
+
+    /// Revoke a direct grant (inverse of [`DynoStore::grant`]).
+    pub fn revoke(&self, token: &str, path: &str, user: &str, perm: Permission) -> Result<()> {
+        self.acl_command(token, |caller| MetaCommand::Revoke {
+            caller,
+            path: path.into(),
+            user: user.into(),
+            perm,
+        })
+    }
+
+    fn acl_command(
+        &self,
+        token: &str,
+        cmd: impl FnOnce(String) -> MetaCommand,
+    ) -> Result<()> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        if !claims.has_scope("write") {
+            return Err(Error::PermissionDenied("token lacks write scope".into()));
+        }
+        match self.meta.submit(cmd(claims.subject))? {
+            CommandOutcome::Failed(e) => Err(Error::from_failed(e)),
+            _ => Ok(()),
+        }
+    }
+
+    /// Range pull: return exactly `object[start..=end]` (end clamped to
+    /// the object size), fetching **only the systematic chunks covering
+    /// the range** when they are all reachable and intact — no erasure
+    /// decode, no full-object transfer. This is the wide-area partial
+    /// read of the satellite / medical case studies: a header-sized
+    /// probe of a multi-GiB scene moves one chunk, not the scene.
+    ///
+    /// Fallback: when any covering chunk is missing, dead, or corrupt,
+    /// the read degrades to a normal [`DynoStore::pull`] (parity
+    /// reconstruction and the full integrity check included) and the
+    /// slice is cut from the reconstruction. The fast path cannot verify
+    /// the whole-object SHA3 (it doesn't have the whole object); it
+    /// verifies each chunk's header binds to the object's recorded hash
+    /// and rejects length mismatches, and readers needing end-to-end
+    /// proof use a full pull.
+    pub fn pull_range(
+        &self,
+        token: &str,
+        collection: &str,
+        name: &str,
+        start: u64,
+        end: u64,
+        opts: PullOpts,
+    ) -> Result<RangeReport> {
+        let meta = self.stat(token, collection, name, opts.version)?;
+        if start > end {
+            return Err(Error::Invalid(format!("bad range {start}-{end}")));
+        }
+        if start >= meta.size {
+            return Err(Error::Invalid(format!(
+                "range start {start} beyond object size {}",
+                meta.size
+            )));
+        }
+        let end = end.min(meta.size - 1);
+
+        let mut attempted: Vec<ChunkIoReport> = Vec::new();
+        if let ObjectPlacement::Erasure { n, k, chunks } = &meta.placement {
+            let cfg = ErasureConfig::new(*n, *k);
+            let codec = self.codec(cfg)?;
+            let chunk_len = codec.chunk_len(meta.size as usize) as u64;
+            // Data byte b lives in systematic chunk b / chunk_len; since
+            // end < size <= k * chunk_len, every needed index is < k.
+            let j0 = (start / chunk_len) as u8;
+            let j1 = (end / chunk_len) as u8;
+            let (fast, attempts) =
+                self.range_fast_path(&meta, chunk_len, j0, j1, start, end, chunks, &opts)?;
+            if let Some(report) = fast {
+                return Ok(report);
+            }
+            // The failed attempts stay in the final report, so the
+            // operator sees which chunk degraded the range read.
+            attempted = attempts;
+        }
+
+        // Fallback: full pull (parity reconstruction + SHA3 verify) and
+        // slice. Pin the version this range was planned against — a
+        // concurrent re-push must not swap a different (possibly
+        // shorter) object under the already-clamped range.
+        let report = self.pull(
+            token,
+            collection,
+            name,
+            PullOpts { version: Some(meta.version), ..opts },
+        )?;
+        if report.data.len() as u64 != meta.size {
+            // Defensive: a version pin guarantees this, but never index
+            // past what actually came back.
+            return Err(Error::Unavailable(format!(
+                "object {} changed size mid-range-read; retry",
+                meta.uuid
+            )));
+        }
+        let data = report.data[start as usize..=end as usize].to_vec();
+        self.metrics.range_pulls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        attempted.extend(report.chunk_io);
+        Ok(RangeReport {
+            data,
+            meta: report.meta,
+            start,
+            end,
+            chunks_fetched: report.chunks_fetched,
+            partial: false,
+            sim_s: report.sim_s,
+            chunk_io: attempted,
+        })
+    }
+
+    /// Attempt the partial read: fetch exactly the systematic chunks
+    /// `j0..=j1`. A `None` report means "use the full-pull fallback"
+    /// (some covering chunk is unplaced, dead, failed, or invalid); the
+    /// accompanying vec carries whatever transfers were attempted, so
+    /// failed attempts survive into the fallback's telemetry.
+    #[allow(clippy::too_many_arguments)]
+    fn range_fast_path(
+        &self,
+        meta: &ObjectMeta,
+        chunk_len: u64,
+        j0: u8,
+        j1: u8,
+        start: u64,
+        end: u64,
+        placed: &[(u8, u32)],
+        opts: &PullOpts,
+    ) -> Result<(Option<RangeReport>, Vec<ChunkIoReport>)> {
+        let mut jobs = Vec::with_capacity((j1 - j0 + 1) as usize);
+        for j in j0..=j1 {
+            let Some(&(idx, cid)) = placed.iter().find(|&&(idx, _)| idx == j) else {
+                return Ok((None, Vec::new())); // slot missing from the placement
+            };
+            match self.registry.get(cid) {
+                Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
+                    index: idx,
+                    channel,
+                    key: chunk_key(&meta.sha3, meta.size, idx),
+                    data: None,
+                }),
+                _ => return Ok((None, Vec::new())), // dead or unregistered holder
+            }
+        }
+        let fetchers = jobs.len();
+        let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(fetchers);
+        let mut chunk_io = Vec::with_capacity(fetchers);
+        let mut times = Vec::with_capacity(fetchers);
+        let mut ok = true;
+        for xfer in self.dispatch_chunk_io(jobs)? {
+            let valid = match &xfer.res {
+                Ok((Some(bytes), dev_s)) => match Chunk::unpack(bytes) {
+                    Ok(chunk)
+                        if chunk.header.index == xfer.index
+                            && chunk.header.object_hash == meta.sha3
+                            && chunk.header.chunk_len == chunk_len =>
+                    {
+                        let net_s = self.wan.transfer_s(
+                            xfer.site,
+                            self.gateway_site,
+                            bytes.len() as u64,
+                            fetchers as u32,
+                        );
+                        times.push(net_s + *dev_s);
+                        payloads.push(chunk.payload().to_vec());
+                        Some(net_s + *dev_s)
+                    }
+                    _ => None,
+                },
+                _ => None,
+            };
+            ok &= valid.is_some();
+            chunk_io.push(ChunkIoReport {
+                index: xfer.index,
+                container: xfer.cid,
+                transport: xfer.transport,
+                ok: valid.is_some(),
+                sim_s: valid.unwrap_or(0.0),
+                wall_s: xfer.wall_s,
+            });
+        }
+        if !ok {
+            return Ok((None, chunk_io));
+        }
+        // Assemble the slice: chunk j holds global bytes
+        // [j*chunk_len, (j+1)*chunk_len); cut each chunk's overlap
+        // with [start, end] in index order.
+        let mut data = Vec::with_capacity((end - start + 1) as usize);
+        for (j, payload) in (j0..=j1).zip(&payloads) {
+            let base = j as u64 * chunk_len;
+            let lo = start.max(base) - base;
+            let hi = end.min(base + chunk_len - 1) - base;
+            data.extend_from_slice(&payload[lo as usize..=hi as usize]);
+        }
+        let collect_s = cost::par(&times);
+        let egress_s = self.wan.transfer_s(
+            self.gateway_site,
+            opts.ctx.client_site,
+            end - start + 1,
+            opts.ctx.flows,
+        );
+        self.metrics.range_pulls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics
+            .bytes_out
+            .fetch_add(end - start + 1, std::sync::atomic::Ordering::Relaxed);
+        Ok((
+            Some(RangeReport {
+                data,
+                meta: meta.clone(),
+                start,
+                end,
+                chunks_fetched: fetchers,
+                partial: true,
+                sim_s: cost::seq(&[collect_s, egress_s]),
+                chunk_io,
+            }),
+            Vec::new(),
+        ))
+    }
+
     /// Does the latest version of `(collection, name)` exist (and is it
     /// visible to the caller)?
     pub fn exists(&self, token: &str, collection: &str, name: &str) -> Result<bool> {
@@ -699,7 +976,7 @@ impl DynoStore {
         })?;
         let metas = match outcome {
             CommandOutcome::Evicted(m) => m,
-            CommandOutcome::Failed(e) => return Err(Error::Invalid(e)),
+            CommandOutcome::Failed(e) => return Err(Error::from_failed(e)),
             other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
         };
         let mut deleted = 0;
@@ -1330,5 +1607,79 @@ mod tests {
         assert_eq!(snap["pulls"], 1);
         assert_eq!(snap["bytes_in"], 1_000);
         assert_eq!(snap["bytes_out"], 1_000);
+    }
+
+    #[test]
+    fn pull_range_fast_path_fetches_only_covering_chunks() {
+        let (ds, token) = deployment(12);
+        let object = data(70_000, 31); // (10,7): chunk_len = 10048
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        // Inside chunk 0.
+        let r = ds.pull_range(&token, "/UserA", "obj", 100, 199, PullOpts::default()).unwrap();
+        assert_eq!(r.data, &object[100..=199]);
+        assert!(r.partial);
+        assert_eq!(r.chunks_fetched, 1);
+        assert_eq!(ds.metrics.snapshot()["range_pulls"], 1);
+        // Straddling the chunk 0 / chunk 1 boundary.
+        let r = ds
+            .pull_range(&token, "/UserA", "obj", 10_000, 10_100, PullOpts::default())
+            .unwrap();
+        assert_eq!(r.data, &object[10_000..=10_100]);
+        assert_eq!(r.chunks_fetched, 2);
+        // End clamps to the object size.
+        let r = ds
+            .pull_range(&token, "/UserA", "obj", 69_990, 1 << 30, PullOpts::default())
+            .unwrap();
+        assert_eq!(r.end, 69_999);
+        assert_eq!(r.data, &object[69_990..]);
+        // Degenerate ranges error.
+        assert!(ds.pull_range(&token, "/UserA", "obj", 5, 4, PullOpts::default()).is_err());
+        assert!(ds
+            .pull_range(&token, "/UserA", "obj", 70_000, 70_001, PullOpts::default())
+            .is_err());
+    }
+
+    #[test]
+    fn pull_range_respects_version_pin() {
+        let (ds, token) = deployment(12);
+        let v0 = data(30_000, 32);
+        let v1 = data(20_000, 33);
+        ds.push(&token, "/UserA", "obj", &v0, PushOpts::default()).unwrap();
+        ds.push(&token, "/UserA", "obj", &v1, PushOpts::default()).unwrap();
+        let pinned = PullOpts { version: Some(0), ..Default::default() };
+        let r = ds.pull_range(&token, "/UserA", "obj", 25_000, 25_999, pinned).unwrap();
+        assert_eq!(r.data, &v0[25_000..=25_999], "range reads the pinned version");
+        let r = ds
+            .pull_range(&token, "/UserA", "obj", 0, 99, PullOpts::default())
+            .unwrap();
+        assert_eq!(r.data, &v1[0..=99], "default range reads latest");
+    }
+
+    #[test]
+    fn stat_list_page_and_grants_via_coordinator() {
+        let (ds, token) = deployment(12);
+        for name in ["pag-a", "pag-b", "pag-c", "other"] {
+            ds.push(&token, "/UserA", name, &data(500, 40), PushOpts::default()).unwrap();
+        }
+        let info = ds.stat(&token, "/UserA", "pag-a", None).unwrap();
+        assert_eq!(info.size, 500);
+        let page = ds.list_page(&token, "/UserA", "pag-", None, 2).unwrap();
+        assert_eq!(page.objects.len(), 2);
+        assert!(page.truncated);
+        let page = ds.list_page(&token, "/UserA", "pag-", Some("pag-b"), 2).unwrap();
+        assert_eq!(page.objects.len(), 1);
+        assert!(!page.truncated);
+        // Grants through the coordinator surface.
+        let token_b = ds.register_user("UserB").unwrap();
+        assert!(ds.stat(&token_b, "/UserA", "pag-a", None).is_err());
+        ds.grant(&token, "/UserA", "UserB", crate::metadata::Permission::Read).unwrap();
+        assert!(ds.stat(&token_b, "/UserA", "pag-a", None).is_ok());
+        ds.revoke(&token, "/UserA", "UserB", crate::metadata::Permission::Read).unwrap();
+        assert!(ds.stat(&token_b, "/UserA", "pag-a", None).is_err());
+        // Non-owners cannot grant (403 at the gateway).
+        assert!(matches!(
+            ds.grant(&token_b, "/UserA", "UserB", crate::metadata::Permission::Write),
+            Err(Error::PermissionDenied(_))
+        ));
     }
 }

@@ -76,6 +76,27 @@ pub struct PullReport {
     pub chunk_io: Vec<ChunkIoReport>,
 }
 
+/// Result of a range pull (`pull_range`): the byte slice plus how it
+/// was served.
+#[derive(Debug, Clone)]
+pub struct RangeReport {
+    /// Exactly `object[start..=end]`.
+    pub data: Vec<u8>,
+    pub meta: ObjectMeta,
+    /// Inclusive byte range served (end clamped to `meta.size - 1`).
+    pub start: u64,
+    pub end: u64,
+    /// Chunks fetched: the covering systematic chunks on the partial
+    /// fast path, k on the full-pull fallback, 1 for Regular objects.
+    pub chunks_fetched: usize,
+    /// True when only the systematic chunks covering the range were
+    /// read (the wide-area fast path — no decode, no full transfer).
+    pub partial: bool,
+    pub sim_s: f64,
+    /// Per-chunk dispatch detail (failed fast-path attempts included).
+    pub chunk_io: Vec<ChunkIoReport>,
+}
+
 /// Result of a health-repair pass (§III-B failover re-allocation).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RepairReport {

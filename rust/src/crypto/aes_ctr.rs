@@ -2,13 +2,141 @@
 //! confidentiality (§IV-E2: "DynoStore's client implements an AES-256
 //! encryption to safeguard sensitive objects during transport").
 //!
-//! The vendored `aes` crate supplies the block cipher; CTR mode (the
-//! `ctr` crate is absent) is implemented here: big-endian 128-bit counter
-//! starting from the nonce, encrypt-counter-and-XOR. CTR is symmetric, so
-//! `apply` both encrypts and decrypts.
+//! Both halves are implemented in-crate (the crate builds with zero
+//! external dependencies): the AES-256 block cipher below is a direct
+//! FIPS-197 transcription (S-box substitution, 14 rounds, 8-word key
+//! schedule), verified against the FIPS-197 C.3 block vector and the
+//! NIST SP 800-38A F.5.5 CTR stream vector. CTR mode is a big-endian
+//! 128-bit counter starting from the nonce, encrypt-counter-and-XOR;
+//! CTR is symmetric, so `apply` both encrypts and decrypts, and the
+//! keystream is seekable (`apply_at`) so range reads can decrypt a
+//! middle slice without the prefix.
 
-use aes::cipher::{BlockEncrypt, KeyInit};
-use aes::Aes256;
+/// The AES S-box (FIPS-197 Fig. 7).
+#[rustfmt::skip]
+const SBOX: [u8; 256] = [
+    0x63, 0x7c, 0x77, 0x7b, 0xf2, 0x6b, 0x6f, 0xc5, 0x30, 0x01, 0x67, 0x2b, 0xfe, 0xd7, 0xab, 0x76,
+    0xca, 0x82, 0xc9, 0x7d, 0xfa, 0x59, 0x47, 0xf0, 0xad, 0xd4, 0xa2, 0xaf, 0x9c, 0xa4, 0x72, 0xc0,
+    0xb7, 0xfd, 0x93, 0x26, 0x36, 0x3f, 0xf7, 0xcc, 0x34, 0xa5, 0xe5, 0xf1, 0x71, 0xd8, 0x31, 0x15,
+    0x04, 0xc7, 0x23, 0xc3, 0x18, 0x96, 0x05, 0x9a, 0x07, 0x12, 0x80, 0xe2, 0xeb, 0x27, 0xb2, 0x75,
+    0x09, 0x83, 0x2c, 0x1a, 0x1b, 0x6e, 0x5a, 0xa0, 0x52, 0x3b, 0xd6, 0xb3, 0x29, 0xe3, 0x2f, 0x84,
+    0x53, 0xd1, 0x00, 0xed, 0x20, 0xfc, 0xb1, 0x5b, 0x6a, 0xcb, 0xbe, 0x39, 0x4a, 0x4c, 0x58, 0xcf,
+    0xd0, 0xef, 0xaa, 0xfb, 0x43, 0x4d, 0x33, 0x85, 0x45, 0xf9, 0x02, 0x7f, 0x50, 0x3c, 0x9f, 0xa8,
+    0x51, 0xa3, 0x40, 0x8f, 0x92, 0x9d, 0x38, 0xf5, 0xbc, 0xb6, 0xda, 0x21, 0x10, 0xff, 0xf3, 0xd2,
+    0xcd, 0x0c, 0x13, 0xec, 0x5f, 0x97, 0x44, 0x17, 0xc4, 0xa7, 0x7e, 0x3d, 0x64, 0x5d, 0x19, 0x73,
+    0x60, 0x81, 0x4f, 0xdc, 0x22, 0x2a, 0x90, 0x88, 0x46, 0xee, 0xb8, 0x14, 0xde, 0x5e, 0x0b, 0xdb,
+    0xe0, 0x32, 0x3a, 0x0a, 0x49, 0x06, 0x24, 0x5c, 0xc2, 0xd3, 0xac, 0x62, 0x91, 0x95, 0xe4, 0x79,
+    0xe7, 0xc8, 0x37, 0x6d, 0x8d, 0xd5, 0x4e, 0xa9, 0x6c, 0x56, 0xf4, 0xea, 0x65, 0x7a, 0xae, 0x08,
+    0xba, 0x78, 0x25, 0x2e, 0x1c, 0xa6, 0xb4, 0xc6, 0xe8, 0xdd, 0x74, 0x1f, 0x4b, 0xbd, 0x8b, 0x8a,
+    0x70, 0x3e, 0xb5, 0x66, 0x48, 0x03, 0xf6, 0x0e, 0x61, 0x35, 0x57, 0xb9, 0x86, 0xc1, 0x1d, 0x9e,
+    0xe1, 0xf8, 0x98, 0x11, 0x69, 0xd9, 0x8e, 0x94, 0x9b, 0x1e, 0x87, 0xe9, 0xce, 0x55, 0x28, 0xdf,
+    0x8c, 0xa1, 0x89, 0x0d, 0xbf, 0xe6, 0x42, 0x68, 0x41, 0x99, 0x2d, 0x0f, 0xb0, 0x54, 0xbb, 0x16,
+];
+
+/// Round constants for the key schedule (`rcon[i] = x^(i-1)` in GF(2^8);
+/// AES-256 consumes indices 1..=7).
+const RCON: [u8; 8] = [0x00, 0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40];
+
+/// Multiply by x (i.e. {02}) in GF(2^8) mod x^8 + x^4 + x^3 + x + 1.
+#[inline]
+fn xtime(b: u8) -> u8 {
+    (b << 1) ^ (((b >> 7) & 1) * 0x1b)
+}
+
+/// AES-256 block cipher, encrypt-only (CTR never needs the inverse
+/// cipher). State layout follows FIPS-197: `block[4c + r] = s[r][c]`.
+struct Aes256 {
+    /// 15 round keys of 16 bytes each (Nr = 14).
+    round_keys: [[u8; 16]; 15],
+}
+
+impl Aes256 {
+    fn new(key: &[u8; 32]) -> Self {
+        // Key expansion (FIPS-197 §5.2, Nk = 8, Nb = 4, Nr = 14).
+        let mut w = [[0u8; 4]; 60];
+        for (i, word) in w.iter_mut().take(8).enumerate() {
+            word.copy_from_slice(&key[4 * i..4 * i + 4]);
+        }
+        for i in 8..60 {
+            let mut temp = w[i - 1];
+            if i % 8 == 0 {
+                // RotWord then SubWord then Rcon.
+                temp = [
+                    SBOX[temp[1] as usize],
+                    SBOX[temp[2] as usize],
+                    SBOX[temp[3] as usize],
+                    SBOX[temp[0] as usize],
+                ];
+                temp[0] ^= RCON[i / 8];
+            } else if i % 8 == 4 {
+                // AES-256 extra SubWord at Nk/2.
+                for b in temp.iter_mut() {
+                    *b = SBOX[*b as usize];
+                }
+            }
+            for b in 0..4 {
+                w[i][b] = w[i - 8][b] ^ temp[b];
+            }
+        }
+        let mut round_keys = [[0u8; 16]; 15];
+        for (r, rk) in round_keys.iter_mut().enumerate() {
+            for c in 0..4 {
+                rk[4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+            }
+        }
+        Aes256 { round_keys }
+    }
+
+    fn encrypt_block(&self, block: &mut [u8; 16]) {
+        add_round_key(block, &self.round_keys[0]);
+        for round in 1..14 {
+            sub_bytes(block);
+            shift_rows(block);
+            mix_columns(block);
+            add_round_key(block, &self.round_keys[round]);
+        }
+        sub_bytes(block);
+        shift_rows(block);
+        add_round_key(block, &self.round_keys[14]);
+    }
+}
+
+#[inline]
+fn add_round_key(state: &mut [u8; 16], rk: &[u8; 16]) {
+    for i in 0..16 {
+        state[i] ^= rk[i];
+    }
+}
+
+#[inline]
+fn sub_bytes(state: &mut [u8; 16]) {
+    for b in state.iter_mut() {
+        *b = SBOX[*b as usize];
+    }
+}
+
+/// Row r of the state rotates left by r: `s'[r][c] = s[r][(c + r) % 4]`.
+#[inline]
+fn shift_rows(state: &mut [u8; 16]) {
+    let old = *state;
+    for r in 1..4 {
+        for c in 0..4 {
+            state[4 * c + r] = old[4 * ((c + r) % 4) + r];
+        }
+    }
+}
+
+/// Per-column multiply by the fixed polynomial {03}x^3+{01}x^2+{01}x+{02}.
+#[inline]
+fn mix_columns(state: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [state[4 * c], state[4 * c + 1], state[4 * c + 2], state[4 * c + 3]];
+        let all = col[0] ^ col[1] ^ col[2] ^ col[3];
+        for r in 0..4 {
+            state[4 * c + r] = col[r] ^ all ^ xtime(col[r] ^ col[(r + 1) % 4]);
+        }
+    }
+}
 
 /// AES-256-CTR stream cipher.
 pub struct AesCtr {
@@ -18,10 +146,10 @@ pub struct AesCtr {
 
 impl AesCtr {
     /// `key` is the 32-byte AES-256 key, `nonce` the 16-byte initial
-    /// counter block (callers derive it per object; never reuse a
-    /// (key, nonce) pair across distinct plaintexts).
+    /// counter block (callers derive it per object *version*; never
+    /// reuse a (key, nonce) pair across distinct plaintexts).
     pub fn new(key: &[u8; 32], nonce: &[u8; 16]) -> Self {
-        AesCtr { cipher: Aes256::new(key.into()), nonce: *nonce }
+        AesCtr { cipher: Aes256::new(key), nonce: *nonce }
     }
 
     /// Encrypt or decrypt `data` in place starting at stream offset 0.
@@ -30,14 +158,15 @@ impl AesCtr {
     }
 
     /// Encrypt or decrypt starting at byte offset `offset` in the stream
-    /// (supports chunked/parallel processing of one logical object).
+    /// (supports chunked/parallel processing of one logical object, and
+    /// decryption of HTTP range reads without fetching the prefix).
     pub fn apply_at(&self, data: &mut [u8], offset: u64) {
         let mut block_index = offset / 16;
         let mut skip = (offset % 16) as usize;
         let mut pos = 0usize;
         while pos < data.len() {
             let mut ctr_block = counter_block(&self.nonce, block_index);
-            self.cipher.encrypt_block((&mut ctr_block).into());
+            self.cipher.encrypt_block(&mut ctr_block);
             let take = (16 - skip).min(data.len() - pos);
             for i in 0..take {
                 data[pos + i] ^= ctr_block[skip + i];
@@ -68,6 +197,21 @@ fn counter_block(nonce: &[u8; 16], index: u64) -> [u8; 16] {
 mod tests {
     use super::*;
     use crate::util::{from_hex, to_hex};
+
+    /// FIPS-197 Appendix C.3: AES-256 single-block known answer.
+    #[test]
+    fn fips197_c3_block_vector() {
+        let key: [u8; 32] = from_hex(
+            "000102030405060708090a0b0c0d0e0f101112131415161718191a1b1c1d1e1f",
+        )
+        .unwrap()
+        .try_into()
+        .unwrap();
+        let mut block: [u8; 16] =
+            from_hex("00112233445566778899aabbccddeeff").unwrap().try_into().unwrap();
+        Aes256::new(&key).encrypt_block(&mut block);
+        assert_eq!(to_hex(&block), "8ea2b7ca516745bfeafc49904b496089");
+    }
 
     /// NIST SP 800-38A F.5.5 CTR-AES256.Encrypt test vector.
     #[test]
@@ -126,6 +270,23 @@ mod tests {
             c.apply_at(a, 0);
             c.apply_at(b, split as u64);
             assert_eq!(pieces, whole, "split at {split}");
+        }
+    }
+
+    /// Range-read decryption: a middle slice of ciphertext decrypts with
+    /// `apply_at(start)` to exactly the plaintext slice.
+    #[test]
+    fn middle_slice_decrypts_with_offset() {
+        let key = [0x42u8; 32];
+        let nonce = [0x17u8; 16];
+        let c = AesCtr::new(&key, &nonce);
+        let plain: Vec<u8> = (0..5000u32).map(|i| (i * 13 % 256) as u8).collect();
+        let mut cipher = plain.clone();
+        c.apply(&mut cipher);
+        for (start, end) in [(0usize, 4999usize), (100, 100), (7, 40), (4090, 4200)] {
+            let mut slice = cipher[start..=end].to_vec();
+            c.apply_at(&mut slice, start as u64);
+            assert_eq!(slice, &plain[start..=end], "range {start}..={end}");
         }
     }
 

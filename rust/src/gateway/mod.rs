@@ -3,11 +3,16 @@
 //!
 //! Routes:
 //! * `POST /auth/register`  body `{"user": ...}` → `{"token": ...}`
+//!   (409 when the user already exists)
 //! * `POST /auth/login`     body `{"user": ...}` → `{"token": ...}`
-//! * `PUT  /objects/<collection...>/<name>` body = object bytes
-//! * `GET  /objects/<collection...>/<name>` → object bytes
-//! * `HEAD /objects/<collection...>/<name>` → 200/404
-//! * `DELETE /objects/<collection...>/<name>` → evict
+//! * the versioned **`/v1` object surface** — see [`v1`] for the route
+//!   table: `GET/PUT/HEAD/DELETE /v1/objects/...` with `?version=`
+//!   pinning, `If-None-Match`/`Range` support and metadata headers,
+//!   `GET /v1/collections/...` pagination, `PUT/DELETE /v1/grants/...`
+//! * `/objects/<collection...>/<name>` — deprecated alias for
+//!   `/v1/objects/...`, same handlers, raw (undecoded) path segments
+//!   with no query parsing (legal names may contain `?`), responses
+//!   tagged `x-dyno-deprecated`
 //! * `GET  /metrics` → counters JSON
 //! * `POST /admin/repair`, `POST /admin/gc`
 //! * `POST /admin/rebalance` body `{"threshold": .., "max_moves": ..}`
@@ -20,9 +25,11 @@
 //! `admin` scope (401 without/with a bad token, 403 without the scope;
 //! operator tokens come from [`DynoStore::issue_admin_token`]).
 
+mod v1;
+
 use std::sync::Arc;
 
-use crate::coordinator::{DynoStore, PullOpts, PushOpts, RebalanceOpts};
+use crate::coordinator::{DynoStore, RebalanceOpts};
 use crate::json::{obj, parse, Value};
 use crate::net::{HttpRequest, HttpResponse, HttpServer};
 use crate::util::unix_secs;
@@ -54,7 +61,17 @@ pub fn serve_with_limit(
 }
 
 fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
-    let result = match (req.method.as_str(), req.path.as_str()) {
+    // Query strings ride on the request target; strip them before
+    // matching so `/v1/...?version=2` routes like `/v1/...`. Only `/v1`
+    // targets are split: pre-v1 routes never defined query parameters
+    // and legal object names may contain `?` — the deprecated alias
+    // must keep matching the raw bytes old clients send.
+    let (path, query) = if req.path.starts_with("/v1/") {
+        v1::split_query(&req.path)
+    } else {
+        (req.path.as_str(), Vec::new())
+    };
+    let result = match (req.method.as_str(), path) {
         ("POST", "/auth/register") => auth_register(store, &req),
         ("POST", "/auth/login") => auth_login(store, &req),
         ("GET", "/metrics") => Ok(metrics(store)),
@@ -66,7 +83,20 @@ fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
             admin_decommission(store, &req)
         }
         ("POST", path) if path.starts_with("/admin/undrain/") => admin_undrain(store, &req),
-        (method, path) if path.starts_with("/objects/") => object_route(store, method, &req),
+        (method, path) if path.starts_with("/v1/objects/") => {
+            v1::object_route(store, method, &req, path, &query, false)
+        }
+        (method, path) if path.starts_with("/v1/collections/") => {
+            v1::collection_route(store, method, &req, path, &query)
+        }
+        (method, path) if path.starts_with("/v1/grants/") => {
+            v1::grant_route(store, method, &req, path)
+        }
+        // Deprecated alias: the pre-/v1 object routes, served by the
+        // same handlers (raw path segments, `x-dyno-deprecated` tag).
+        (method, path) if path.starts_with("/objects/") => {
+            v1::object_route(store, method, &req, path, &query, true)
+        }
         _ => Err(Error::NotFound(format!("{} {}", req.method, req.path))),
     };
     match result {
@@ -80,6 +110,7 @@ fn error_response(e: Error) -> HttpResponse {
         Error::Auth(_) => 401,
         Error::PermissionDenied(_) => 403,
         Error::NotFound(_) => 404,
+        Error::Conflict(_) => 409,
         Error::Invalid(_) | Error::Json(_) | Error::Config(_) => 400,
         Error::Unavailable(_) | Error::Consensus(_) => 503,
         _ => 500,
@@ -271,58 +302,6 @@ fn admin_gc(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
     };
     let collected = store.gc(unix_secs(), retention)?;
     Ok(HttpResponse::json(200, &obj(vec![("collected", collected.into())])))
-}
-
-/// Split `/objects/<collection...>/<name>` into (collection, name).
-fn split_object_path(path: &str) -> Result<(String, String)> {
-    let rest = path.strip_prefix("/objects").ok_or_else(|| Error::Invalid("path".into()))?;
-    let idx = rest.rfind('/').ok_or_else(|| Error::Invalid("missing object name".into()))?;
-    let (collection, name) = rest.split_at(idx);
-    let name = &name[1..];
-    if collection.is_empty() || name.is_empty() {
-        return Err(Error::Invalid(format!("bad object path '{path}'")));
-    }
-    Ok((collection.to_string(), name.to_string()))
-}
-
-fn object_route(store: &Arc<DynoStore>, method: &str, req: &HttpRequest) -> Result<HttpResponse> {
-    let token = req
-        .bearer_token()
-        .ok_or_else(|| Error::Auth("missing bearer token".into()))?
-        .to_string();
-    let (collection, name) = split_object_path(&req.path)?;
-    match method {
-        "PUT" => {
-            let report =
-                store.push(&token, &collection, &name, &req.body, PushOpts::default())?;
-            Ok(HttpResponse::json(
-                201,
-                &obj(vec![
-                    ("uuid", report.meta.uuid.as_str().into()),
-                    ("version", report.meta.version.into()),
-                    ("size", report.meta.size.into()),
-                    ("sim_s", report.sim_s.into()),
-                    ("backend", report.backend.into()),
-                ]),
-            ))
-        }
-        "GET" => {
-            let report = store.pull(&token, &collection, &name, PullOpts::default())?;
-            Ok(HttpResponse::bytes(200, report.data))
-        }
-        "HEAD" => {
-            if store.exists(&token, &collection, &name)? {
-                Ok(HttpResponse::new(200))
-            } else {
-                Ok(HttpResponse::new(404))
-            }
-        }
-        "DELETE" => {
-            let deleted = store.evict(&token, &collection, &name)?;
-            Ok(HttpResponse::json(200, &obj(vec![("deleted_chunks", deleted.into())])))
-        }
-        other => Err(Error::Invalid(format!("method {other} not supported on objects"))),
-    }
 }
 
 #[cfg(test)]
@@ -571,19 +550,26 @@ mod tests {
 
     #[test]
     fn duplicate_registration_conflicts() {
+        // Satellite bugfix: a duplicate registration is 409 Conflict
+        // (it used to surface as a generic 400).
         let (_server, client, _admin) = gateway();
         register(&client, "UserA");
         let resp = client.post("/auth/register", &[], b"{\"user\": \"UserA\"}").unwrap();
-        assert_eq!(resp.status, 400);
+        assert_eq!(resp.status, 409);
     }
 
     #[test]
-    fn split_object_path_cases() {
-        assert_eq!(
-            split_object_path("/objects/UserA/Col/Sub/name.bin").unwrap(),
-            ("/UserA/Col/Sub".to_string(), "name.bin".to_string())
-        );
-        assert!(split_object_path("/objects/onlyname").is_err());
-        assert!(split_object_path("/objects/UserA/").is_err());
+    fn deprecated_alias_still_serves_and_is_tagged() {
+        let (_server, client, _admin) = gateway();
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        let put = client.put("/objects/UserA/o", &[("authorization", &auth)], b"x").unwrap();
+        assert_eq!(put.status, 201);
+        assert_eq!(put.headers.get("x-dyno-deprecated").unwrap(), "use /v1/objects");
+        // The same object is visible through /v1.
+        let got = client.get("/v1/objects/UserA/o", &[("authorization", &auth)]).unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, b"x");
+        assert!(got.headers.get("x-dyno-deprecated").is_none());
     }
 }

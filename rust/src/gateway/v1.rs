@@ -1,0 +1,506 @@
+//! The versioned `/v1` REST surface (and the deprecated `/objects/`
+//! alias, routed through the same handlers).
+//!
+//! Routes:
+//! * `PUT    /v1/objects/<col...>/<name>` body = bytes, optional
+//!   `x-dyno-policy: k,n | regular` → 201 + metadata headers
+//! * `GET    /v1/objects/<col...>/<name>[?version=N]` → bytes; honors
+//!   `If-None-Match` (→ 304) and single `Range: bytes=` (→ 206 served
+//!   by the coordinator's partial-read fast path)
+//! * `HEAD   /v1/objects/<col...>/<name>[?version=N]` → metadata
+//!   headers, `Content-Length` = object size, no body
+//! * `DELETE /v1/objects/<col...>/<name>` → `{"deleted_chunks": n}`
+//! * `GET    /v1/collections/<col...>?prefix=&limit=&after=` →
+//!   paginated listing (keyset cursor via `next_after`)
+//! * `PUT    /v1/grants/<col...>` body `{"user","perm"}` → grant
+//! * `DELETE /v1/grants/<col...>` body `{"user","perm"}` → revoke
+//!
+//! Every object response carries `ETag` (quoted hex SHA3-256 of the
+//! content), `x-dyno-version`, `x-dyno-size`, `x-dyno-uuid`,
+//! `x-dyno-created`. Path segments are percent-decoded on `/v1` (the
+//! alias keeps raw paths for wire compatibility); alias responses add
+//! `x-dyno-deprecated` pointing at the replacement.
+
+use std::sync::Arc;
+
+use crate::api::{parse_policy, DEFAULT_LIST_LIMIT, MAX_LIST_LIMIT};
+use crate::container::decode_key;
+use crate::coordinator::{DynoStore, PullOpts, PushOpts};
+use crate::json::{obj, parse, Value};
+use crate::metadata::{ObjectMeta, Permission};
+use crate::net::{HttpRequest, HttpResponse};
+use crate::util::to_hex;
+use crate::{Error, Result};
+
+/// Split a request target into its path and decoded query pairs.
+/// Malformed percent escapes in a key/value fall back to the raw text.
+pub(super) fn split_query(target: &str) -> (&str, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (target, Vec::new()),
+        Some((path, q)) => {
+            let pairs = q
+                .split('&')
+                .filter(|s| !s.is_empty())
+                .map(|kv| {
+                    let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+                    (
+                        decode_key(k).unwrap_or_else(|_| k.to_string()),
+                        decode_key(v).unwrap_or_else(|_| v.to_string()),
+                    )
+                })
+                .collect();
+            (path, pairs)
+        }
+    }
+}
+
+fn query_get<'a>(query: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// `?version=N` (None when absent; 400 on garbage).
+fn version_pin(query: &[(String, String)]) -> Result<Option<u64>> {
+    match query_get(query, "version") {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| Error::Invalid(format!("bad version '{v}'"))),
+    }
+}
+
+/// Split `<prefix>/<collection...>/<name>` into (collection, name),
+/// percent-decoding each segment when `decode` (the `/v1` routes; the
+/// deprecated alias keeps raw segments for wire compatibility).
+fn object_target(path: &str, prefix: &str, decode: bool) -> Result<(String, String)> {
+    let rest = path
+        .strip_prefix(prefix)
+        .ok_or_else(|| Error::Invalid(format!("bad object path '{path}'")))?;
+    let mut segs: Vec<String> = Vec::new();
+    for seg in rest.split('/').filter(|s| !s.is_empty()) {
+        segs.push(if decode { decode_key(seg)? } else { seg.to_string() });
+    }
+    if segs.len() < 2 {
+        return Err(Error::Invalid(format!(
+            "bad object path '{path}' (want /<collection...>/<name>)"
+        )));
+    }
+    let name = segs.pop().expect("len >= 2");
+    Ok((format!("/{}", segs.join("/")), name))
+}
+
+/// Decode `<prefix>/<collection...>` into a collection path.
+fn collection_target(path: &str, prefix: &str) -> Result<String> {
+    let rest = path
+        .strip_prefix(prefix)
+        .ok_or_else(|| Error::Invalid(format!("bad collection path '{path}'")))?;
+    let mut segs: Vec<String> = Vec::new();
+    for seg in rest.split('/').filter(|s| !s.is_empty()) {
+        segs.push(decode_key(seg)?);
+    }
+    if segs.is_empty() {
+        return Err(Error::Invalid(format!("bad collection path '{path}'")));
+    }
+    Ok(format!("/{}", segs.join("/")))
+}
+
+fn bearer(req: &HttpRequest) -> Result<String> {
+    Ok(req
+        .bearer_token()
+        .ok_or_else(|| Error::Auth("missing bearer token".into()))?
+        .to_string())
+}
+
+/// The metadata headers every object response carries.
+fn object_headers(resp: &mut HttpResponse, meta: &ObjectMeta) {
+    resp.headers.insert("etag".into(), format!("\"{}\"", to_hex(&meta.sha3)));
+    resp.headers.insert("x-dyno-version".into(), meta.version.to_string());
+    resp.headers.insert("x-dyno-size".into(), meta.size.to_string());
+    resp.headers.insert("x-dyno-uuid".into(), meta.uuid.clone());
+    resp.headers.insert("x-dyno-created".into(), meta.created_at.to_string());
+}
+
+fn mark_deprecated(resp: &mut HttpResponse, alias: bool) {
+    if alias {
+        resp.headers
+            .insert("x-dyno-deprecated".into(), "use /v1/objects".into());
+    }
+}
+
+/// Does an `If-None-Match` header value match this ETag? Accepts `*`,
+/// quoted/unquoted tags, comma-separated lists, and weak prefixes.
+fn etag_matches(header: &str, etag_hex: &str) -> bool {
+    if header.trim() == "*" {
+        return true;
+    }
+    header.split(',').any(|candidate| {
+        candidate
+            .trim()
+            .trim_start_matches("W/")
+            .trim_matches('"')
+            .eq_ignore_ascii_case(etag_hex)
+    })
+}
+
+/// Outcome of parsing a `Range` header against an object of `size`.
+enum RangeSpec {
+    /// No (or unusable) header: serve the full object. RFC 9110 says
+    /// a server MAY ignore an invalid Range header, and multi-range
+    /// responses are not supported — both serve the whole object.
+    Whole,
+    /// Serve `[start, end]` (satisfiable; end already clamped).
+    Slice(u64, u64),
+    /// `416 Range Not Satisfiable`.
+    Unsatisfiable,
+}
+
+fn parse_range(header: Option<&str>, size: u64) -> RangeSpec {
+    let Some(spec) = header.and_then(|h| h.trim().strip_prefix("bytes=")) else {
+        return RangeSpec::Whole;
+    };
+    if spec.contains(',') {
+        return RangeSpec::Whole; // multi-range unsupported: full object
+    }
+    let Some((a, b)) = spec.split_once('-') else { return RangeSpec::Whole };
+    let (a, b) = (a.trim(), b.trim());
+    if a.is_empty() {
+        // Suffix form: last N bytes.
+        let Ok(n) = b.parse::<u64>() else { return RangeSpec::Whole };
+        if n == 0 || size == 0 {
+            return RangeSpec::Unsatisfiable;
+        }
+        return RangeSpec::Slice(size.saturating_sub(n), size - 1);
+    }
+    let Ok(start) = a.parse::<u64>() else { return RangeSpec::Whole };
+    if start >= size {
+        return RangeSpec::Unsatisfiable;
+    }
+    let end = if b.is_empty() {
+        size - 1
+    } else {
+        match b.parse::<u64>() {
+            Ok(end) if end >= start => end.min(size - 1),
+            _ => return RangeSpec::Whole,
+        }
+    };
+    RangeSpec::Slice(start, end)
+}
+
+/// `GET/PUT/HEAD/DELETE /v1/objects/...` (and the `/objects/` alias).
+pub(super) fn object_route(
+    store: &Arc<DynoStore>,
+    method: &str,
+    req: &HttpRequest,
+    path: &str,
+    query: &[(String, String)],
+    alias: bool,
+) -> Result<HttpResponse> {
+    let token = bearer(req)?;
+    let prefix = if alias { "/objects" } else { "/v1/objects" };
+    let (collection, name) = object_target(path, prefix, !alias)?;
+    let version = version_pin(query)?;
+    // Only reads honor a version pin. Rejecting it elsewhere beats
+    // silently ignoring it: DELETE evicts EVERY version, and a client
+    // that sent `?version=0` expecting to prune one would lose all of
+    // them with a 200.
+    if version.is_some() && method != "GET" && method != "HEAD" {
+        return Err(Error::Invalid(format!(
+            "?version= is only supported on GET/HEAD ({method} affects all versions)"
+        )));
+    }
+    let mut resp = match method {
+        "PUT" => {
+            let policy = match req.header("x-dyno-policy") {
+                Some(p) => Some(parse_policy(p)?),
+                None => None,
+            };
+            let report = store.push(
+                &token,
+                &collection,
+                &name,
+                &req.body,
+                PushOpts { policy, ..Default::default() },
+            )?;
+            let mut resp = HttpResponse::json(
+                201,
+                &obj(vec![
+                    ("uuid", report.meta.uuid.as_str().into()),
+                    ("version", report.meta.version.into()),
+                    ("size", report.meta.size.into()),
+                    ("etag", to_hex(&report.meta.sha3).into()),
+                    ("created_at", report.meta.created_at.into()),
+                    ("sim_s", report.sim_s.into()),
+                    ("backend", report.backend.into()),
+                ]),
+            );
+            object_headers(&mut resp, &report.meta);
+            resp
+        }
+        "GET" => {
+            // Metadata first: conditional GETs and unsatisfiable ranges
+            // are answered without touching the data plane. The data
+            // path below pins the version this stat saw, so the ETag /
+            // Content-Range decisions always describe the bytes served
+            // even when a re-push races the request.
+            let meta = store.stat(&token, &collection, &name, version)?;
+            let version = Some(meta.version);
+            let etag_hex = to_hex(&meta.sha3);
+            if req
+                .header("if-none-match")
+                .is_some_and(|inm| etag_matches(inm, &etag_hex))
+            {
+                let mut resp = HttpResponse::new(304);
+                object_headers(&mut resp, &meta);
+                mark_deprecated(&mut resp, alias);
+                return Ok(resp);
+            }
+            match parse_range(req.header("range"), meta.size) {
+                RangeSpec::Unsatisfiable => {
+                    let mut resp = HttpResponse::text(416, "range not satisfiable");
+                    resp.headers
+                        .insert("content-range".into(), format!("bytes */{}", meta.size));
+                    mark_deprecated(&mut resp, alias);
+                    return Ok(resp);
+                }
+                RangeSpec::Slice(start, end) => {
+                    let report = store.pull_range(
+                        &token,
+                        &collection,
+                        &name,
+                        start,
+                        end,
+                        PullOpts { version, ..Default::default() },
+                    )?;
+                    let mut resp = HttpResponse::bytes(206, report.data);
+                    resp.headers.insert(
+                        "content-range".into(),
+                        format!("bytes {}-{}/{}", report.start, report.end, meta.size),
+                    );
+                    resp.headers.insert(
+                        "x-dyno-chunks-fetched".into(),
+                        report.chunks_fetched.to_string(),
+                    );
+                    resp.headers
+                        .insert("x-dyno-partial".into(), report.partial.to_string());
+                    object_headers(&mut resp, &report.meta);
+                    resp
+                }
+                RangeSpec::Whole => {
+                    let report = store.pull(
+                        &token,
+                        &collection,
+                        &name,
+                        PullOpts { version, ..Default::default() },
+                    )?;
+                    let mut resp = HttpResponse::bytes(200, report.data);
+                    object_headers(&mut resp, &report.meta);
+                    resp
+                }
+            }
+        }
+        "HEAD" => {
+            // On `/v1`, size is advertised via content-length with no
+            // body (the response writer honors a handler-set
+            // content-length, and v1 clients know HEAD is bodiless).
+            // The alias keeps the legacy `content-length: 0` framing:
+            // pre-v1 client binaries read_exact(content-length) on HEAD
+            // and would hang/fail on an advertised size.
+            match store.stat(&token, &collection, &name, version) {
+                Ok(meta) => {
+                    let mut resp = HttpResponse::new(200);
+                    resp.headers
+                        .insert("content-type".into(), "application/octet-stream".into());
+                    if !alias {
+                        resp.headers.insert("content-length".into(), meta.size.to_string());
+                    }
+                    object_headers(&mut resp, &meta);
+                    resp
+                }
+                Err(Error::NotFound(_)) => HttpResponse::new(404),
+                Err(e) => return Err(e),
+            }
+        }
+        "DELETE" => {
+            let deleted = store.evict(&token, &collection, &name)?;
+            HttpResponse::json(200, &obj(vec![("deleted_chunks", deleted.into())]))
+        }
+        other => {
+            return Err(Error::Invalid(format!("method {other} not supported on objects")))
+        }
+    };
+    mark_deprecated(&mut resp, alias);
+    Ok(resp)
+}
+
+/// `GET /v1/collections/<col...>?prefix=&limit=&after=`.
+pub(super) fn collection_route(
+    store: &Arc<DynoStore>,
+    method: &str,
+    req: &HttpRequest,
+    path: &str,
+    query: &[(String, String)],
+) -> Result<HttpResponse> {
+    if method != "GET" {
+        return Err(Error::Invalid(format!(
+            "method {method} not supported on collections"
+        )));
+    }
+    let token = bearer(req)?;
+    let collection = collection_target(path, "/v1/collections")?;
+    let prefix = query_get(query, "prefix").unwrap_or("");
+    let after = query_get(query, "after");
+    let limit = match query_get(query, "limit") {
+        None => DEFAULT_LIST_LIMIT,
+        Some(l) => l
+            .parse::<usize>()
+            .ok()
+            .filter(|&l| l >= 1)
+            .ok_or_else(|| Error::Invalid(format!("bad limit '{l}'")))?
+            .min(MAX_LIST_LIMIT),
+    };
+    let page = store.list_page(&token, &collection, prefix, after, limit)?;
+    let objects: Vec<Value> = page
+        .objects
+        .iter()
+        .map(|m| {
+            obj(vec![
+                ("name", m.name.as_str().into()),
+                ("uuid", m.uuid.as_str().into()),
+                ("version", m.version.into()),
+                ("size", m.size.into()),
+                ("etag", to_hex(&m.sha3).into()),
+                ("created_at", m.created_at.into()),
+            ])
+        })
+        .collect();
+    let next_after = if page.truncated {
+        page.objects.last().map(|m| Value::from(m.name.as_str())).unwrap_or(Value::Null)
+    } else {
+        Value::Null
+    };
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![
+            ("collection", collection.as_str().into()),
+            ("objects", Value::Arr(objects)),
+            ("truncated", page.truncated.into()),
+            ("next_after", next_after),
+        ]),
+    ))
+}
+
+/// `PUT/DELETE /v1/grants/<col...>` body `{"user": .., "perm": ..}`.
+pub(super) fn grant_route(
+    store: &Arc<DynoStore>,
+    method: &str,
+    req: &HttpRequest,
+    path: &str,
+) -> Result<HttpResponse> {
+    let token = bearer(req)?;
+    let collection = collection_target(path, "/v1/grants")?;
+    let body = std::str::from_utf8(&req.body)
+        .map_err(|_| Error::Invalid("body not utf-8".into()))?;
+    let v = parse(body)?;
+    let user = v.req_str("user")?.to_string();
+    let perm = Permission::parse(v.req_str("perm")?)?;
+    let action = match method {
+        "PUT" => {
+            store.grant(&token, &collection, &user, perm)?;
+            "granted"
+        }
+        "DELETE" => {
+            store.revoke(&token, &collection, &user, perm)?;
+            "revoked"
+        }
+        other => {
+            return Err(Error::Invalid(format!("method {other} not supported on grants")))
+        }
+    };
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![
+            (action, true.into()),
+            ("collection", collection.as_str().into()),
+            ("user", user.as_str().into()),
+            ("perm", perm.as_str().into()),
+        ]),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_query_cases() {
+        let (p, q) = split_query("/v1/objects/UserA/x");
+        assert_eq!(p, "/v1/objects/UserA/x");
+        assert!(q.is_empty());
+        let (p, q) = split_query("/v1/collections/UserA?prefix=ap&limit=2&after=apple");
+        assert_eq!(p, "/v1/collections/UserA");
+        assert_eq!(
+            q,
+            vec![
+                ("prefix".to_string(), "ap".to_string()),
+                ("limit".to_string(), "2".to_string()),
+                ("after".to_string(), "apple".to_string()),
+            ]
+        );
+        // Percent-decoded values, flag-style pairs, empty segments.
+        let (_, q) = split_query("/x?a=with%20space&flag&&b=");
+        assert_eq!(q[0], ("a".to_string(), "with space".to_string()));
+        assert_eq!(q[1], ("flag".to_string(), String::new()));
+        assert_eq!(q[2], ("b".to_string(), String::new()));
+    }
+
+    #[test]
+    fn object_target_decoding() {
+        assert_eq!(
+            object_target("/v1/objects/UserA/Col/name.bin", "/v1/objects", true).unwrap(),
+            ("/UserA/Col".to_string(), "name.bin".to_string())
+        );
+        assert_eq!(
+            object_target("/v1/objects/UserA/with%20space", "/v1/objects", true).unwrap(),
+            ("/UserA".to_string(), "with space".to_string())
+        );
+        // Alias keeps raw bytes.
+        assert_eq!(
+            object_target("/objects/UserA/a%20b", "/objects", false).unwrap(),
+            ("/UserA".to_string(), "a%20b".to_string())
+        );
+        assert!(object_target("/v1/objects/onlyname", "/v1/objects", true).is_err());
+        assert!(object_target("/v1/objects/UserA/", "/v1/objects", true).is_err());
+    }
+
+    #[test]
+    fn range_parsing() {
+        let slice = |h: &str, size| match parse_range(Some(h), size) {
+            RangeSpec::Slice(a, b) => Some((a, b)),
+            _ => None,
+        };
+        assert_eq!(slice("bytes=0-99", 1000), Some((0, 99)));
+        assert_eq!(slice("bytes=10-", 1000), Some((10, 999)));
+        assert_eq!(slice("bytes=-100", 1000), Some((900, 999)));
+        assert_eq!(slice("bytes=-2000", 1000), Some((0, 999)), "oversize suffix clamps");
+        assert_eq!(slice("bytes=500-9999", 1000), Some((500, 999)), "end clamps");
+        assert!(matches!(parse_range(Some("bytes=1000-"), 1000), RangeSpec::Unsatisfiable));
+        assert!(matches!(parse_range(Some("bytes=-0"), 1000), RangeSpec::Unsatisfiable));
+        assert!(matches!(parse_range(Some("bytes=0-"), 0), RangeSpec::Unsatisfiable));
+        // Ignored forms serve the whole object.
+        assert!(matches!(parse_range(None, 1000), RangeSpec::Whole));
+        assert!(matches!(parse_range(Some("bytes=5-2"), 1000), RangeSpec::Whole));
+        assert!(matches!(parse_range(Some("bytes=0-1,5-9"), 1000), RangeSpec::Whole));
+        assert!(matches!(parse_range(Some("items=0-1"), 1000), RangeSpec::Whole));
+        assert!(matches!(parse_range(Some("bytes=x-y"), 1000), RangeSpec::Whole));
+    }
+
+    #[test]
+    fn etag_matching() {
+        assert!(etag_matches("\"abc\"", "abc"));
+        assert!(etag_matches("abc", "abc"));
+        assert!(etag_matches("*", "anything"));
+        assert!(etag_matches("\"zzz\", \"abc\"", "abc"));
+        assert!(etag_matches("W/\"abc\"", "abc"));
+        assert!(!etag_matches("\"zzz\"", "abc"));
+    }
+}

@@ -24,9 +24,11 @@
 //!   [`registry`], [`health`], [`placement`] (utilization-factor load
 //!   balancing, Eq. 1-2), [`gateway`], [`policy`].
 //! * **System assembly** — [`coordinator`] (the DynoStore server),
-//!   [`client`] (push/pull/exists/evict with parallel channels and
-//!   client-side encryption), [`faas`] (Globus-Compute/ProxyStore-style
-//!   case-study substrate).
+//!   [`api`] (the transport-agnostic `ObjectStore` trait: in-process
+//!   `LocalStore` and `/v1`-REST `RemoteStore`, byte-identical by
+//!   contract), [`client`] (push/pull/exists/evict with parallel
+//!   channels and client-side encryption over either backend), [`faas`]
+//!   (Globus-Compute/ProxyStore-style case-study substrate).
 //! * **Evaluation** — [`baselines`] (HDFS / Redis-like / IPFS-like /
 //!   S3-like comparators), [`bench`] (criterion-less harness used by
 //!   `rust/benches/`).
@@ -48,6 +50,7 @@
 //! `DESIGN.md` for the paper → module map, and `EXPERIMENTS.md` §Perf
 //! for measured numbers (`cargo bench` → `BENCH_hotpath.json`).
 
+pub mod api;
 pub mod baselines;
 pub mod bench;
 pub mod client;
@@ -73,6 +76,7 @@ pub mod sim;
 pub mod testkit;
 pub mod util;
 
+pub use api::{LocalStore, ObjectStore, RemoteStore};
 pub use client::Client;
 pub use config::Config;
 pub use coordinator::DynoStore;
@@ -100,6 +104,9 @@ pub enum Error {
     Json(String),
     Unavailable(String),
     Invalid(String),
+    /// The request conflicts with existing state (duplicate namespace /
+    /// collection registration) — HTTP `409 Conflict` at the gateway.
+    Conflict(String),
     /// A worker-pool job panicked or was lost before completing.
     Pool(String),
 }
@@ -122,6 +129,7 @@ impl std::fmt::Display for Error {
             Error::Json(m) => write!(f, "json: {m}"),
             Error::Unavailable(m) => write!(f, "unavailable: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::Conflict(m) => write!(f, "conflict: {m}"),
             Error::Pool(m) => write!(f, "pool: {m}"),
         }
     }
@@ -146,5 +154,23 @@ impl Error {
     /// True when retrying against a different replica/container may help.
     pub fn is_retryable(&self) -> bool {
         matches!(self, Error::Unavailable(_) | Error::Net(_) | Error::Io(_))
+    }
+
+    /// Recover the error class from a replicated-command failure.
+    ///
+    /// Paxos replicas flatten command errors to `Failed(String)` (the
+    /// `Display` form) so every replica records the identical outcome;
+    /// this re-derives the variant from the Display prefix so the
+    /// gateway maps a failed command to the right HTTP status (409 for
+    /// duplicate registration, 404/403 for missing/foreign collections)
+    /// instead of a blanket 400.
+    pub fn from_failed(msg: String) -> Error {
+        match msg.split_once(": ") {
+            Some(("conflict", m)) => Error::Conflict(m.to_string()),
+            Some(("not found", m)) => Error::NotFound(m.to_string()),
+            Some(("permission denied", m)) => Error::PermissionDenied(m.to_string()),
+            Some(("invalid", m)) => Error::Invalid(m.to_string()),
+            _ => Error::Invalid(msg),
+        }
     }
 }

@@ -5,22 +5,34 @@
 //! ```text
 //! dynostore serve  --config cluster.json --addr 127.0.0.1:8080 --data-dir /var/lib/dynostore
 //! dynostore agent  --config agent.json   --addr 127.0.0.1:9100
-//! dynostore register --addr HOST:PORT --user UserA
-//! dynostore push   --addr HOST:PORT --token T /UserA/col/name ./file
-//! dynostore pull   --addr HOST:PORT --token T /UserA/col/name ./out
-//! dynostore exists --addr HOST:PORT --token T /UserA/col/name
-//! dynostore evict  --addr HOST:PORT --token T /UserA/col/name
-//! dynostore admin  --addr HOST:PORT [--token T] repair|gc|metrics|health
-//! dynostore decommission --addr HOST:PORT --token T ID
-//! dynostore rebalance    --addr HOST:PORT --token T [--threshold F] [--max-moves N]
+//! dynostore register --url http://HOST:PORT --user UserA
+//! dynostore push   --url http://HOST:PORT --token T [--policy k,n] /UserA/col/name ./file
+//! dynostore pull   --url http://HOST:PORT --token T [--version N] [--range A-B] /UserA/col/name [./out]
+//! dynostore stat   --url http://HOST:PORT --token T /UserA/col/name
+//! dynostore exists --url http://HOST:PORT --token T /UserA/col/name
+//! dynostore evict  --url http://HOST:PORT --token T /UserA/col/name
+//! dynostore list   --url http://HOST:PORT --token T /UserA/col [--prefix P] [--limit N] [--after NAME]
+//! dynostore grant  --url http://HOST:PORT --token T /UserA/col USER read|write
+//! dynostore revoke --url http://HOST:PORT --token T /UserA/col USER read|write
+//! dynostore admin  --url http://HOST:PORT [--token T] repair|gc|metrics|health
+//! dynostore decommission --url http://HOST:PORT --token T ID
+//! dynostore rebalance    --url http://HOST:PORT --token T [--threshold F] [--max-moves N]
 //! ```
+//!
+//! `--addr HOST:PORT` is accepted everywhere `--url` is (legacy
+//! spelling). Object commands ride the versioned `/v1` REST surface
+//! through [`dynostore::RemoteStore`] — the same code path library
+//! clients use — and accept `--key-hex <64 hex chars>` for client-side
+//! AES-256-CTR encryption.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use dynostore::api::{parse_policy, ListOptions};
 use dynostore::json::parse;
+use dynostore::metadata::Permission;
 use dynostore::net::HttpClient;
-use dynostore::{gateway, Config};
+use dynostore::{gateway, Client, Config};
 
 fn main() {
     dynostore::util::logger::init();
@@ -67,7 +79,9 @@ fn run(args: &[String]) -> Result<(), String> {
         "serve" => serve(&flags),
         "agent" => agent(&flags),
         "register" => register(&flags),
-        "push" | "pull" | "exists" | "evict" => object_op(cmd, &flags, &pos),
+        "push" | "pull" | "stat" | "exists" | "evict" => object_op(cmd, &flags, &pos),
+        "list" => list(&flags, &pos),
+        "grant" | "revoke" => grant_op(cmd, &flags, &pos),
         "admin" => admin(&flags, &pos),
         "decommission" => decommission(&flags, &pos),
         "undrain" => undrain(&flags, &pos),
@@ -93,22 +107,31 @@ fn print_usage() {
          \x20 agent    --config FILE [--addr 127.0.0.1:9100] [--workers 4]\n\
          \x20          (container agent: serves one data container over HTTP;\n\
          \x20           gateways attach it via an \"endpoint\" container entry)\n\
-         \x20 register --addr HOST:PORT --user NAME\n\
-         \x20 push     --addr HOST:PORT --token T PATH FILE\n\
-         \x20 pull     --addr HOST:PORT --token T PATH [OUT]\n\
-         \x20 exists   --addr HOST:PORT --token T PATH\n\
-         \x20 evict    --addr HOST:PORT --token T PATH\n\
-         \x20 admin    --addr HOST:PORT [--token T] repair|gc|metrics|health\n\
+         \x20 register --url http://HOST:PORT --user NAME\n\
+         \x20 push     --url http://HOST:PORT --token T [--policy k,n|regular]\n\
+         \x20          [--key-hex HEX64] PATH FILE\n\
+         \x20 pull     --url http://HOST:PORT --token T [--version N] [--range A-B]\n\
+         \x20          [--key-hex HEX64] PATH [OUT]\n\
+         \x20 stat     --url http://HOST:PORT --token T PATH\n\
+         \x20 exists   --url http://HOST:PORT --token T PATH\n\
+         \x20 evict    --url http://HOST:PORT --token T PATH\n\
+         \x20 list     --url http://HOST:PORT --token T COLLECTION\n\
+         \x20          [--prefix P] [--limit N] [--after NAME]\n\
+         \x20 grant    --url http://HOST:PORT --token T COLLECTION USER read|write\n\
+         \x20 revoke   --url http://HOST:PORT --token T COLLECTION USER read|write\n\
+         \x20 admin    --url http://HOST:PORT [--token T] repair|gc|metrics|health\n\
          \x20          (repair/gc need the admin token `serve` prints at startup)\n\
-         \x20 decommission --addr HOST:PORT --token T ID\n\
+         \x20 decommission --url http://HOST:PORT --token T ID\n\
          \x20          (drain container ID: migrate every chunk off, then remove it)\n\
-         \x20 undrain  --addr HOST:PORT --token T ID\n\
+         \x20 undrain  --url http://HOST:PORT --token T ID\n\
          \x20          (cancel a stopped drain: container rejoins placement)\n\
-         \x20 rebalance    --addr HOST:PORT --token T [--threshold F] [--max-moves N]\n\
+         \x20 rebalance    --url http://HOST:PORT --token T [--threshold F] [--max-moves N]\n\
          \x20          (move chunks hot\u{2192}cold until utilization spread \u{2264} threshold)\n\
          \n\
-         PATH is /User/Collection.../name. See README.md for the config\n\
-         file format and examples/ for library usage."
+         PATH is /User/Collection.../name; --addr HOST:PORT is accepted\n\
+         wherever --url is. Object commands speak the versioned /v1 REST\n\
+         surface. See README.md \u{a7}API for the route table and examples/\n\
+         for library usage."
     );
 }
 
@@ -218,12 +241,59 @@ fn need<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str, St
     flags.get(key).map(|s| s.as_str()).ok_or_else(|| format!("missing --{key}"))
 }
 
+/// `--url http://HOST:PORT` (preferred) or the legacy `--addr HOST:PORT`.
+fn endpoint(flags: &HashMap<String, String>) -> Result<&str, String> {
+    flags
+        .get("url")
+        .or_else(|| flags.get("addr"))
+        .map(|s| s.as_str())
+        .ok_or_else(|| "missing --url (or --addr)".to_string())
+}
+
+/// [`endpoint`] normalized to a bare `HOST:PORT` for raw
+/// [`HttpClient`] use (RemoteStore does its own normalization).
+fn host(flags: &HashMap<String, String>) -> Result<&str, String> {
+    Ok(endpoint(flags)?.trim().trim_start_matches("http://").trim_end_matches('/'))
+}
+
+/// A [`Client`] over the gateway's `/v1` surface, honoring `--key-hex`
+/// (client-side AES-256-CTR) and `--policy` (per-push resilience).
+fn remote_client(flags: &HashMap<String, String>) -> Result<Client, String> {
+    let url = endpoint(flags)?;
+    let token = need(flags, "token")?;
+    let mut client = Client::remote(url, token);
+    if let Some(hex) = flags.get("key-hex") {
+        let bytes = dynostore::util::from_hex(hex)
+            .ok_or_else(|| "--key-hex must be hex".to_string())?;
+        let key: [u8; 32] = bytes
+            .try_into()
+            .map_err(|_| "--key-hex must be 64 hex chars (32 bytes)".to_string())?;
+        client = client.with_encryption(key);
+    }
+    if let Some(policy) = flags.get("policy") {
+        client = client.with_policy(parse_policy(policy).map_err(|e| e.to_string())?);
+    }
+    Ok(client)
+}
+
+/// Split `/User/Collection.../name` into (collection, name).
+fn split_path(path: &str) -> Result<(&str, &str), String> {
+    let idx = path.rfind('/').ok_or_else(|| format!("bad PATH '{path}'"))?;
+    let (collection, name) = (&path[..idx], &path[idx + 1..]);
+    if collection.is_empty() || name.is_empty() {
+        return Err(format!("bad PATH '{path}' (want /User/Collection.../name)"));
+    }
+    Ok((collection, name))
+}
+
 fn register(flags: &HashMap<String, String>) -> Result<(), String> {
-    let addr = need(flags, "addr")?;
+    let addr = host(flags)?;
     let user = need(flags, "user")?;
     let client = HttpClient::new(addr);
+    let body =
+        dynostore::json::to_string(&dynostore::json::obj(vec![("user", user.into())]));
     let resp = client
-        .post("/auth/register", &[], format!("{{\"user\": \"{user}\"}}").as_bytes())
+        .post("/auth/register", &[], body.as_bytes())
         .map_err(|e| e.to_string())?;
     let body = String::from_utf8_lossy(&resp.body).to_string();
     if resp.status != 201 {
@@ -243,69 +313,123 @@ fn object_op(
     flags: &HashMap<String, String>,
     pos: &[String],
 ) -> Result<(), String> {
-    let addr = need(flags, "addr")?;
-    let token = need(flags, "token")?;
+    let client = remote_client(flags)?;
     let path = pos.first().ok_or("missing object PATH")?;
-    let auth = format!("Bearer {token}");
-    let client = HttpClient::new(addr);
-    let url = format!("/objects{path}");
+    let (collection, name) = split_path(path)?;
     match cmd {
         "push" => {
             let file = pos.get(1).ok_or("missing FILE to push")?;
             let data = std::fs::read(file).map_err(|e| e.to_string())?;
-            let resp = client
-                .put(&url, &[("authorization", &auth)], &data)
-                .map_err(|e| e.to_string())?;
-            println!("{}", String::from_utf8_lossy(&resp.body));
-            if resp.status == 201 {
-                Ok(())
-            } else {
-                Err(format!("push failed: {}", resp.status))
-            }
+            let (info, seconds) =
+                client.push_info(collection, name, &data).map_err(|e| e.to_string())?;
+            println!(
+                "pushed {path}: version {} uuid {} etag {} ({} bytes, {seconds:.3}s)",
+                info.version,
+                info.uuid,
+                info.etag,
+                data.len()
+            );
+            Ok(())
         }
         "pull" => {
-            let resp = client
-                .get(&url, &[("authorization", &auth)])
-                .map_err(|e| e.to_string())?;
-            if resp.status != 200 {
-                return Err(format!(
-                    "pull failed ({}): {}",
-                    resp.status,
-                    String::from_utf8_lossy(&resp.body)
-                ));
-            }
+            let version: Option<u64> = match flags.get("version") {
+                Some(v) => {
+                    Some(v.parse().map_err(|_| "--version must be a number".to_string())?)
+                }
+                None => None,
+            };
+            let data = match (flags.get("range"), version) {
+                (Some(range), _) => {
+                    let (a, b) = range
+                        .split_once('-')
+                        .ok_or_else(|| "--range must be A-B (bytes, inclusive)".to_string())?;
+                    let a: u64 = a.parse().map_err(|_| "bad range start".to_string())?;
+                    let b: u64 = b.parse().map_err(|_| "bad range end".to_string())?;
+                    if version.is_some() {
+                        return Err("--range with --version is not supported yet".into());
+                    }
+                    client.pull_range(collection, name, a, b).map_err(|e| e.to_string())?.0
+                }
+                (None, Some(v)) => {
+                    client.pull_version(collection, name, v).map_err(|e| e.to_string())?.0
+                }
+                (None, None) => client.pull(collection, name).map_err(|e| e.to_string())?.0,
+            };
             match pos.get(1) {
                 Some(out) => {
-                    std::fs::write(out, &resp.body).map_err(|e| e.to_string())?;
-                    println!("wrote {} bytes to {out}", resp.body.len());
+                    std::fs::write(out, &data).map_err(|e| e.to_string())?;
+                    println!("wrote {} bytes to {out}", data.len());
                 }
                 None => {
                     use std::io::Write;
-                    std::io::stdout().write_all(&resp.body).map_err(|e| e.to_string())?;
+                    std::io::stdout().write_all(&data).map_err(|e| e.to_string())?;
                 }
             }
             Ok(())
         }
+        "stat" => {
+            let info = client.stat(collection, name).map_err(|e| e.to_string())?;
+            println!(
+                "{path}: version {} size {} etag {} uuid {} created {}",
+                info.version, info.size, info.etag, info.uuid, info.created_at
+            );
+            Ok(())
+        }
         "exists" => {
-            let resp = client
-                .request("HEAD", &url, &[("authorization", &auth)], &[])
-                .map_err(|e| e.to_string())?;
-            println!("{}", if resp.status == 200 { "true" } else { "false" });
+            let exists = client.exists(collection, name).map_err(|e| e.to_string())?;
+            println!("{}", if exists { "true" } else { "false" });
             Ok(())
         }
         "evict" => {
-            let resp = client
-                .delete(&url, &[("authorization", &auth)])
-                .map_err(|e| e.to_string())?;
-            println!("{}", String::from_utf8_lossy(&resp.body));
-            if resp.status == 200 {
-                Ok(())
-            } else {
-                Err(format!("evict failed: {}", resp.status))
-            }
+            let deleted = client.evict(collection, name).map_err(|e| e.to_string())?;
+            println!("evicted {path} ({deleted} chunks deleted)");
+            Ok(())
         }
         _ => unreachable!(),
     }
+}
+
+/// Paginated collection listing over `/v1/collections`.
+fn list(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
+    let client = remote_client(flags)?;
+    let collection = pos.first().ok_or("missing COLLECTION path")?;
+    let opts = ListOptions {
+        prefix: flags.get("prefix").cloned().unwrap_or_default(),
+        after: flags.get("after").cloned(),
+        limit: match flags.get("limit") {
+            Some(l) => l.parse().map_err(|_| "--limit must be a number".to_string())?,
+            None => 0,
+        },
+    };
+    let page = client.list(collection, &opts).map_err(|e| e.to_string())?;
+    for o in &page.objects {
+        println!("{}\tv{}\t{} bytes\t{}", o.name, o.version, o.size, o.etag);
+    }
+    if let Some(after) = page.next_after {
+        println!("# truncated; continue with --after {after}");
+    }
+    Ok(())
+}
+
+/// Grant / revoke a permission on a collection.
+fn grant_op(
+    cmd: &str,
+    flags: &HashMap<String, String>,
+    pos: &[String],
+) -> Result<(), String> {
+    let client = remote_client(flags)?;
+    let collection = pos.first().ok_or("missing COLLECTION path")?;
+    let user = pos.get(1).ok_or("missing USER")?;
+    let perm = Permission::parse(pos.get(2).ok_or("missing PERM (read|write)")?.as_str())
+        .map_err(|e| e.to_string())?;
+    if cmd == "grant" {
+        client.grant(collection, user, perm).map_err(|e| e.to_string())?;
+        println!("granted {} on {collection} to {user}", perm.as_str());
+    } else {
+        client.revoke(collection, user, perm).map_err(|e| e.to_string())?;
+        println!("revoked {} on {collection} from {user}", perm.as_str());
+    }
+    Ok(())
 }
 
 /// `Authorization` header for admin-gated endpoints (`--token`).
@@ -315,7 +439,7 @@ fn admin_headers(flags: &HashMap<String, String>) -> Result<Vec<(String, String)
 }
 
 fn admin(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
-    let addr = need(flags, "addr")?;
+    let addr = host(flags)?;
     let action = pos.first().map(|s| s.as_str()).unwrap_or("metrics");
     let client = HttpClient::new(addr);
     let resp = match action {
@@ -337,7 +461,7 @@ fn admin(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> 
 
 /// Drain a container out of the storage network and remove it.
 fn decommission(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
-    let addr = need(flags, "addr")?;
+    let addr = host(flags)?;
     let id: u32 = pos
         .first()
         .ok_or("missing container ID to decommission")?
@@ -360,7 +484,7 @@ fn decommission(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), S
 
 /// Cancel a stopped drain: the container rejoins the placement pool.
 fn undrain(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> {
-    let addr = need(flags, "addr")?;
+    let addr = host(flags)?;
     let id: u32 = pos
         .first()
         .ok_or("missing container ID to undrain")?
@@ -383,7 +507,7 @@ fn undrain(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String
 
 /// Rebalance utilization across the storage network.
 fn rebalance(flags: &HashMap<String, String>) -> Result<(), String> {
-    let addr = need(flags, "addr")?;
+    let addr = host(flags)?;
     let headers = admin_headers(flags)?;
     let hdrs: Vec<(&str, &str)> =
         headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();

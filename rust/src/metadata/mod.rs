@@ -13,5 +13,6 @@ mod store;
 
 pub use namespace::{normalize_path, parent_path, validate_name};
 pub use store::{
-    MetadataStore, ObjectMeta, ObjectPlacement, Permission, DEFAULT_RETENTION_SECS,
+    MetadataStore, ObjectMeta, ObjectPage, ObjectPlacement, Permission,
+    DEFAULT_RETENTION_SECS,
 };

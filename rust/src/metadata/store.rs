@@ -181,6 +181,15 @@ impl ObjectMeta {
     }
 }
 
+/// One page of a collection listing ([`MetadataStore::list_page`]).
+#[derive(Debug, Clone)]
+pub struct ObjectPage {
+    /// Latest versions, name-sorted.
+    pub objects: Vec<ObjectMeta>,
+    /// True when more names matched beyond `limit`.
+    pub truncated: bool,
+}
+
 #[derive(Debug, Default)]
 struct Collection {
     owner: String,
@@ -232,7 +241,7 @@ impl MetadataStore {
         let path = format!("/{user}");
         let mut inner = self.inner.lock().unwrap();
         if inner.collections.contains_key(&path) {
-            return Err(Error::Invalid(format!("namespace {path} exists")));
+            return Err(Error::Conflict(format!("namespace {path} exists")));
         }
         inner.collections.insert(
             path.clone(),
@@ -252,7 +261,7 @@ impl MetadataStore {
             return Err(Error::NotFound(format!("parent collection {parent}")));
         }
         if inner.collections.contains_key(&path) {
-            return Err(Error::Invalid(format!("collection {path} exists")));
+            return Err(Error::Conflict(format!("collection {path} exists")));
         }
         check_perm(&inner, caller, &parent, Permission::Write)?;
         inner.collections.insert(
@@ -339,7 +348,17 @@ impl MetadataStore {
 
         let uuid = next_uuid(&mut inner);
         let chain_key = (collection.clone(), name.to_string());
-        let version = inner.chains.get(&chain_key).map_or(0, |c| c.len() as u64);
+        // Version numbers are monotonic per chain: latest.version + 1,
+        // NOT chain length — GC prunes superseded entries from the
+        // chain, and a length-based counter would re-issue a version
+        // number that still exists (breaking version pinning and the
+        // client's version-salted encryption nonces).
+        let version = inner
+            .chains
+            .get(&chain_key)
+            .and_then(|c| c.last())
+            .and_then(|u| inner.objects.get(u))
+            .map_or(0, |m| m.version + 1);
         // Supersede the previous latest version (starts its GC clock).
         if let Some(chain) = inner.chains.get(&chain_key) {
             if let Some(prev) = chain.last().cloned() {
@@ -416,17 +435,48 @@ impl MetadataStore {
 
     /// Names (latest versions) in a collection; caller needs Read.
     pub fn list(&self, caller: &str, collection: &str) -> Result<Vec<ObjectMeta>> {
+        Ok(self.list_page(caller, collection, "", None, usize::MAX)?.objects)
+    }
+
+    /// Paginated listing (the `/v1/collections` surface): latest
+    /// versions of names in `collection` that start with `prefix` and
+    /// sort strictly after `after`, in name order, at most `limit`
+    /// entries. `truncated` reports whether more matches remain — the
+    /// caller resumes with `after = objects.last().name`. Keyset
+    /// pagination is stable across interleaved writes: a name inserted
+    /// before the cursor never shifts later pages.
+    pub fn list_page(
+        &self,
+        caller: &str,
+        collection: &str,
+        prefix: &str,
+        after: Option<&str>,
+        limit: usize,
+    ) -> Result<ObjectPage> {
         let collection = normalize_path(collection)?;
         let inner = self.inner.lock().unwrap();
         check_perm(&inner, caller, &collection, Permission::Read)?;
-        let mut out: Vec<ObjectMeta> = inner
+        // Match and sort by reference; clone only the `limit` winners —
+        // a page request over a huge collection must not clone every
+        // matching record while holding the store lock.
+        let mut matched: Vec<(&String, &String)> = inner
             .chains
             .iter()
-            .filter(|((col, _), chain)| col == &collection && !chain.is_empty())
-            .map(|(_, chain)| inner.objects[chain.last().unwrap()].clone())
+            .filter(|((col, name), chain)| {
+                col == &collection
+                    && !chain.is_empty()
+                    && name.starts_with(prefix)
+                    && after.map_or(true, |a| name.as_str() > a)
+            })
+            .map(|((_, name), chain)| (name, chain.last().unwrap()))
             .collect();
-        out.sort_by(|a, b| a.name.cmp(&b.name));
-        Ok(out)
+        matched.sort_by(|a, b| a.0.cmp(b.0));
+        let truncated = matched.len() > limit;
+        matched.truncate(limit);
+        Ok(ObjectPage {
+            objects: matched.into_iter().map(|(_, uuid)| inner.objects[uuid].clone()).collect(),
+            truncated,
+        })
     }
 
     /// Remove an object and ALL its versions (client `evict`); returns
@@ -942,6 +992,64 @@ mod tests {
         assert_eq!(ObjectMeta::from_json(&m.to_json()).unwrap(), m);
         let single = ObjectMeta { superseded_at: None, placement: place(4), ..m };
         assert_eq!(ObjectMeta::from_json(&single.to_json()).unwrap(), single);
+    }
+
+    #[test]
+    fn versions_stay_monotonic_after_gc() {
+        // GC prunes chain entries; version numbers must NOT be reused
+        // (version pinning and version-salted nonces depend on it).
+        let s = store();
+        s.put_object("UserA", "/UserA", "obj", 1, [0; 32], place(1), 1000).unwrap();
+        s.put_object("UserA", "/UserA", "obj", 2, [1; 32], place(1), 2000).unwrap();
+        let collected = s.gc(2000 + DEFAULT_RETENTION_SECS, DEFAULT_RETENTION_SECS);
+        assert_eq!(collected.len(), 1, "v0 collected");
+        let m = s.put_object("UserA", "/UserA", "obj", 3, [2; 32], place(1), 3000).unwrap();
+        assert_eq!(m.version, 2, "next version continues past the pruned chain");
+        assert_eq!(s.get_version("UserA", "/UserA", "obj", 1).unwrap().size, 2);
+    }
+
+    #[test]
+    fn list_page_prefix_after_limit() {
+        let s = store();
+        for name in ["apple", "apricot", "banana", "cherry", "aardvark"] {
+            s.put_object("UserA", "/UserA", name, 1, [0; 32], place(1), 1).unwrap();
+        }
+        // Prefix filter.
+        let page = s.list_page("UserA", "/UserA", "ap", None, 10).unwrap();
+        assert_eq!(
+            page.objects.iter().map(|m| m.name.as_str()).collect::<Vec<_>>(),
+            vec!["apple", "apricot"]
+        );
+        assert!(!page.truncated);
+        // Limit + truncation flag + keyset resume.
+        let page = s.list_page("UserA", "/UserA", "", None, 2).unwrap();
+        assert_eq!(
+            page.objects.iter().map(|m| m.name.as_str()).collect::<Vec<_>>(),
+            vec!["aardvark", "apple"]
+        );
+        assert!(page.truncated);
+        let page = s.list_page("UserA", "/UserA", "", Some("apple"), 2).unwrap();
+        assert_eq!(
+            page.objects.iter().map(|m| m.name.as_str()).collect::<Vec<_>>(),
+            vec!["apricot", "banana"]
+        );
+        assert!(page.truncated);
+        let page = s.list_page("UserA", "/UserA", "", Some("banana"), 2).unwrap();
+        assert_eq!(page.objects.len(), 1);
+        assert!(!page.truncated);
+        // Pagination needs Read permission like list().
+        assert!(s.list_page("UserB", "/UserA", "", None, 1).is_err());
+    }
+
+    #[test]
+    fn duplicate_registrations_conflict() {
+        let s = store();
+        assert!(matches!(s.create_namespace("UserA"), Err(Error::Conflict(_))));
+        s.create_collection("UserA", "/UserA/Col").unwrap();
+        assert!(matches!(
+            s.create_collection("UserA", "/UserA/Col"),
+            Err(Error::Conflict(_))
+        ));
     }
 
     #[test]

@@ -81,12 +81,15 @@ impl HttpResponse {
             200 => "OK",
             201 => "Created",
             204 => "No Content",
+            206 => "Partial Content",
+            304 => "Not Modified",
             400 => "Bad Request",
             401 => "Unauthorized",
             403 => "Forbidden",
             404 => "Not Found",
             409 => "Conflict",
             413 => "Payload Too Large",
+            416 => "Range Not Satisfiable",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             507 => "Insufficient Storage",
@@ -97,9 +100,20 @@ impl HttpResponse {
     fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
         let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, self.reason());
         for (k, v) in &self.headers {
+            if k == "content-length" {
+                continue; // emitted once below (possibly overridden)
+            }
             head.push_str(&format!("{k}: {v}\r\n"));
         }
-        head.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", self.body.len()));
+        // A handler-set `content-length` wins over the body length: HEAD
+        // responses advertise the full object size while carrying no
+        // body (RFC 9110 §9.3.2). Everything else frames on the body.
+        let declared = self
+            .headers
+            .get("content-length")
+            .cloned()
+            .unwrap_or_else(|| self.body.len().to_string());
+        head.push_str(&format!("content-length: {declared}\r\nconnection: close\r\n\r\n"));
         stream.write_all(head.as_bytes())?;
         stream.write_all(&self.body)?;
         stream.flush()
@@ -365,10 +379,15 @@ impl HttpClient {
                 headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
             }
         }
-        let len: usize = headers
-            .get("content-length")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(0);
+        // HEAD responses and 204/304 have no body by definition — their
+        // content-length (HEAD advertises the object size) must not be
+        // read off the wire.
+        let bodiless = method.eq_ignore_ascii_case("HEAD") || status == 204 || status == 304;
+        let len: usize = if bodiless {
+            0
+        } else {
+            headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0)
+        };
         let mut body = vec![0u8; len];
         if len > 0 {
             reader.read_exact(&mut body)?;
@@ -502,6 +521,35 @@ mod tests {
         assert_eq!(with_auth("Basic dXNlcg==").bearer_token(), None);
         assert_eq!(with_auth("Bearer ").bearer_token(), None);
         assert_eq!(with_auth("Bearer").bearer_token(), None);
+    }
+
+    #[test]
+    fn head_advertises_length_without_body() {
+        // A handler-set content-length overrides body framing, and the
+        // client must not try to read a HEAD body off the wire.
+        let server = HttpServer::serve(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: HttpRequest| {
+                if req.method == "HEAD" {
+                    let mut r = HttpResponse::new(200);
+                    r.headers.insert("content-length".into(), "12345".into());
+                    r.headers.insert("etag".into(), "\"abc\"".into());
+                    r
+                } else {
+                    HttpResponse::text(200, "body")
+                }
+            }),
+        )
+        .unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        let head = client.request("HEAD", "/o", &[], &[]).unwrap();
+        assert_eq!(head.status, 200);
+        assert_eq!(head.headers.get("content-length").unwrap(), "12345");
+        assert!(head.body.is_empty(), "HEAD carries no body");
+        // The connection still works for normal GETs.
+        let got = client.get("/o", &[]).unwrap();
+        assert_eq!(got.body, b"body");
     }
 
     #[test]

@@ -1,0 +1,625 @@
+//! Integration tests for the PR-5 API redesign: the transport-agnostic
+//! [`ObjectStore`] trait (local-vs-remote parity against a live
+//! gateway) and the versioned `/v1` REST conformance matrix
+//! (pagination, conditional GET, Range reads, version pinning, grants,
+//! deprecated-alias parity), plus a range-read property sweep against
+//! full-pull slicing.
+
+use std::sync::Arc;
+
+use dynostore::api::{
+    ListOptions, LocalStore, ObjectInfo, ObjectStore, PullOptions, PushOptions, RemoteStore,
+};
+use dynostore::bench::testbed::{chameleon_deployment, paper_resilience};
+use dynostore::coordinator::{GfEngine, PullOpts};
+use dynostore::json::parse;
+use dynostore::metadata::Permission;
+use dynostore::net::{HttpClient, HttpServer};
+use dynostore::sim::Site;
+use dynostore::util::Rng;
+use dynostore::{Client, DynoStore, Error};
+
+fn deployment() -> Arc<DynoStore> {
+    chameleon_deployment(12, paper_resilience(), GfEngine::PureRust)
+}
+
+/// A deployment with a live gateway in front of it.
+fn gateway() -> (Arc<DynoStore>, HttpServer, String) {
+    let ds = deployment();
+    let server = dynostore::gateway::serve(Arc::clone(&ds), "127.0.0.1:0", 4).unwrap();
+    let addr = server.addr().to_string();
+    (ds, server, addr)
+}
+
+/// Identity fields of an [`ObjectInfo`] (everything except
+/// `created_at`, which is wall-clock and may differ by a second
+/// between two deployments driven back to back).
+fn identity(info: &ObjectInfo) -> (String, String, String, u64, u64, String) {
+    (
+        info.uuid.clone(),
+        info.name.clone(),
+        info.collection.clone(),
+        info.version,
+        info.size,
+        info.etag.clone(),
+    )
+}
+
+/// Drive the same operation script through an [`ObjectStore`] backend
+/// and return everything observable. Deployments are deterministic
+/// (fixed UUID seed), so two identical deployments driven by this
+/// script must produce byte-identical observations — whichever
+/// transport carries the requests.
+fn run_script(store: &dyn ObjectStore) -> Vec<String> {
+    let mut log = Vec::new();
+    let data_a = Rng::new(11).bytes(100_000);
+    let data_b = Rng::new(22).bytes(40_000);
+    let data_c = Rng::new(33).bytes(256);
+
+    for (name, data) in [("alpha", &data_a), ("beta", &data_b), ("aardvark", &data_c)] {
+        let out = store.push("/UserA", name, data, &PushOptions::default()).unwrap();
+        log.push(format!("push {name}: {:?}", identity(&out.info)));
+    }
+    // Re-push creates version 1.
+    let out = store.push("/UserA", "alpha", &data_b, &PushOptions::default()).unwrap();
+    log.push(format!("repush alpha: {:?}", identity(&out.info)));
+
+    // Pulls: latest and pinned.
+    let out = store.pull("/UserA", "alpha", &PullOptions::default()).unwrap();
+    log.push(format!("pull alpha v{} {} bytes ok={}", out.info.version, out.data.len(),
+        out.data == data_b));
+    let out = store
+        .pull("/UserA", "alpha", &PullOptions { version: Some(0), flows: 1 })
+        .unwrap();
+    log.push(format!("pull alpha@0 ok={}", out.data == data_a));
+
+    // Range read (sub-chunk).
+    let out = store.pull_range("/UserA", "beta", 1000, 1999, &PullOptions::default()).unwrap();
+    log.push(format!(
+        "range beta ok={} partial={} chunks={}",
+        out.data[..] == data_b[1000..=1999],
+        out.partial,
+        out.chunks_fetched
+    ));
+
+    // Stat + exists.
+    let info = store.stat("/UserA", "beta", None).unwrap();
+    log.push(format!("stat beta: {:?}", identity(&info)));
+    log.push(format!("exists ghost: {}", store.exists("/UserA", "ghost").unwrap()));
+
+    // Listing: two pages of 2.
+    let page = store
+        .list("/UserA", &ListOptions { limit: 2, ..Default::default() })
+        .unwrap();
+    log.push(format!(
+        "list p1: {:?} truncated={} next={:?}",
+        page.objects.iter().map(identity).collect::<Vec<_>>(),
+        page.truncated,
+        page.next_after
+    ));
+    let page = store
+        .list("/UserA", &ListOptions { limit: 2, after: page.next_after, ..Default::default() })
+        .unwrap();
+    log.push(format!(
+        "list p2: {:?} truncated={}",
+        page.objects.iter().map(identity).collect::<Vec<_>>(),
+        page.truncated
+    ));
+    let page = store
+        .list("/UserA", &ListOptions { prefix: "a".into(), ..Default::default() })
+        .unwrap();
+    log.push(format!(
+        "list prefix-a: {:?}",
+        page.objects.iter().map(|o| o.name.clone()).collect::<Vec<_>>()
+    ));
+
+    // Grants: UserB gains then loses read.
+    store.grant("/UserA", "UserB", Permission::Read).unwrap();
+    log.push("granted".into());
+    store.revoke("/UserA", "UserB", Permission::Read).unwrap();
+    log.push("revoked".into());
+
+    // Delete.
+    let deleted = store.delete("/UserA", "aardvark").unwrap();
+    log.push(format!("deleted aardvark: {deleted} chunks"));
+    log.push(format!("exists aardvark: {}", store.exists("/UserA", "aardvark").unwrap()));
+    log
+}
+
+#[test]
+fn local_and_remote_backends_are_byte_identical() {
+    // Two identical deterministic deployments: one driven in-process,
+    // one over HTTP through a live gateway. Every observation —
+    // UUIDs, versions, ETags, listings, payload bytes, delete counts —
+    // must match exactly.
+    let local_ds = deployment();
+    let token = local_ds.register_user("UserA").unwrap();
+    local_ds.register_user("UserB").unwrap();
+    let local = LocalStore::new(Arc::clone(&local_ds), token, Site::ChameleonUc);
+
+    let (remote_ds, _server, addr) = gateway();
+    let token = remote_ds.register_user("UserA").unwrap();
+    remote_ds.register_user("UserB").unwrap();
+    let remote = RemoteStore::connect(&addr, &token);
+
+    assert_eq!(local.transport(), "local");
+    assert_eq!(remote.transport(), "http");
+    let local_log = run_script(&local);
+    let remote_log = run_script(&remote);
+    assert_eq!(local_log, remote_log, "parity broken between transports");
+}
+
+#[test]
+fn cross_transport_visibility_on_one_deployment() {
+    // One deployment, both backends: bytes pushed through HTTP are
+    // pulled in-process byte-identically, and vice versa.
+    let (ds, _server, addr) = gateway();
+    let token = ds.register_user("UserA").unwrap();
+    let local = LocalStore::new(Arc::clone(&ds), token.clone(), Site::ChameleonUc);
+    let remote = RemoteStore::connect(&addr, &token);
+
+    let data = Rng::new(7).bytes(80_000);
+    remote.push("/UserA", "via-http", &data, &PushOptions::default()).unwrap();
+    let got = local.pull("/UserA", "via-http", &PullOptions::default()).unwrap();
+    assert_eq!(got.data, data);
+
+    let data2 = Rng::new(8).bytes(30_000);
+    local.push("/UserA", "via-local", &data2, &PushOptions::default()).unwrap();
+    let got = remote.pull("/UserA", "via-local", &PullOptions::default()).unwrap();
+    assert_eq!(got.data, data2);
+    assert_eq!(got.info.etag, local.stat("/UserA", "via-local", None).unwrap().etag);
+}
+
+#[test]
+fn client_encryption_and_batches_work_over_both_transports() {
+    let (ds, _server, addr) = gateway();
+    let key = [0x2Au8; 32];
+    let token = ds.register_user("UserA").unwrap();
+    let local_client =
+        Client::new(Arc::clone(&ds), token.clone(), Site::ChameleonUc).with_encryption(key);
+    let remote_client = Client::remote(&addr, &token).with_encryption(key);
+
+    // Encrypted push over HTTP, decrypted pull in-process (same key).
+    let secret = Rng::new(99).bytes(50_000);
+    remote_client.push("/UserA", "scan", &secret).unwrap();
+    let (got, _) = local_client.pull("/UserA", "scan").unwrap();
+    assert_eq!(got, secret, "ciphertext travels, plaintext agrees");
+    // A keyless client sees ciphertext at rest.
+    let plain = Client::remote(&addr, &ds.login("UserA"));
+    let (raw, _) = plain.pull("/UserA", "scan").unwrap();
+    assert_ne!(raw, secret);
+
+    // Re-push via local, version-pinned decrypt via remote (versioned
+    // nonce salt agrees across transports).
+    let secret2 = Rng::new(100).bytes(50_000);
+    local_client.push("/UserA", "scan", &secret2).unwrap();
+    let (v0, _) = remote_client.pull_version("/UserA", "scan", 0).unwrap();
+    assert_eq!(v0, secret);
+    let (v1, _) = remote_client.pull_version("/UserA", "scan", 1).unwrap();
+    assert_eq!(v1, secret2);
+
+    // Encrypted range read over HTTP (CTR keystream seek).
+    let (slice, _) = remote_client.pull_range("/UserA", "scan", 500, 1499).unwrap();
+    assert_eq!(slice, &secret2[500..=1499]);
+
+    // Batches through both transports.
+    let items: Vec<(String, String, Vec<u8>)> = (0..8u64)
+        .map(|i| ("/UserA".to_string(), format!("b{i}"), Rng::new(i).bytes(10_000)))
+        .collect();
+    let report = remote_client.push_batch(&items, 4).unwrap();
+    assert_eq!(report.objects, 8);
+    let pull_items: Vec<(String, String)> =
+        items.iter().map(|(c, n, _)| (c.clone(), n.clone())).collect();
+    for client in [&local_client, &remote_client] {
+        let report = client.pull_batch(&pull_items, 4).unwrap();
+        assert_eq!(report.objects, 8);
+        assert_eq!(report.bytes, 8 * 10_000);
+    }
+    // Byte identity item by item across transports.
+    for (col, name, data) in &items {
+        let (a, _) = local_client.pull(col, name).unwrap();
+        let (b, _) = remote_client.pull(col, name).unwrap();
+        assert_eq!(&a, data);
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn v1_conformance_matrix() {
+    let (_ds, _server, addr) = gateway();
+    let http = HttpClient::new(&addr);
+    let register = |user: &str| -> String {
+        let resp = http
+            .post("/auth/register", &[], format!("{{\"user\": \"{user}\"}}").as_bytes())
+            .unwrap();
+        assert_eq!(resp.status, 201);
+        parse(std::str::from_utf8(&resp.body).unwrap())
+            .unwrap()
+            .req_str("token")
+            .unwrap()
+            .to_string()
+    };
+    let token_a = register("UserA");
+    let token_b = register("UserB");
+    let auth_a = format!("Bearer {token_a}");
+    let auth_b = format!("Bearer {token_b}");
+
+    // --- PUT: metadata headers + body fields.
+    let payload = Rng::new(5).bytes(20_000);
+    let put = http
+        .put("/v1/objects/UserA/obj", &[("authorization", &auth_a)], &payload)
+        .unwrap();
+    assert_eq!(put.status, 201);
+    let etag = put.headers.get("etag").unwrap().clone();
+    assert!(etag.starts_with('"') && etag.ends_with('"'), "strong quoted etag: {etag}");
+    assert_eq!(put.headers.get("x-dyno-version").unwrap(), "0");
+    assert_eq!(put.headers.get("x-dyno-size").unwrap(), "20000");
+    let body = parse(std::str::from_utf8(&put.body).unwrap()).unwrap();
+    assert_eq!(body.req_str("etag").unwrap(), etag.trim_matches('"'));
+    assert!(body.req_u64("created_at").unwrap() > 0);
+
+    // --- GET: bytes + content-type + metadata headers.
+    let got = http.get("/v1/objects/UserA/obj", &[("authorization", &auth_a)]).unwrap();
+    assert_eq!(got.status, 200);
+    assert_eq!(got.body, payload);
+    assert_eq!(got.headers.get("content-type").unwrap(), "application/octet-stream");
+    assert_eq!(got.headers.get("etag").unwrap(), &etag);
+
+    // --- Conditional GET: matching If-None-Match → 304, no body.
+    let cond = http
+        .get(
+            "/v1/objects/UserA/obj",
+            &[("authorization", &auth_a), ("if-none-match", &etag)],
+        )
+        .unwrap();
+    assert_eq!(cond.status, 304);
+    assert!(cond.body.is_empty());
+    assert_eq!(cond.headers.get("etag").unwrap(), &etag);
+    let cond = http
+        .get(
+            "/v1/objects/UserA/obj",
+            &[("authorization", &auth_a), ("if-none-match", "\"stale\"")],
+        )
+        .unwrap();
+    assert_eq!(cond.status, 200, "mismatched etag serves the body");
+
+    // --- HEAD: size advertised, no body.
+    let head = http
+        .request("HEAD", "/v1/objects/UserA/obj", &[("authorization", &auth_a)], &[])
+        .unwrap();
+    assert_eq!(head.status, 200);
+    assert_eq!(head.headers.get("content-length").unwrap(), "20000");
+    assert_eq!(head.headers.get("etag").unwrap(), &etag);
+    assert!(head.body.is_empty());
+    let head = http
+        .request("HEAD", "/v1/objects/UserA/ghost", &[("authorization", &auth_a)], &[])
+        .unwrap();
+    assert_eq!(head.status, 404);
+
+    // --- Range: 206 + content-range + exact slice.
+    let part = http
+        .get(
+            "/v1/objects/UserA/obj",
+            &[("authorization", &auth_a), ("range", "bytes=100-299")],
+        )
+        .unwrap();
+    assert_eq!(part.status, 206);
+    assert_eq!(part.body, &payload[100..=299]);
+    assert_eq!(part.headers.get("content-range").unwrap(), "bytes 100-299/20000");
+    assert_eq!(part.headers.get("x-dyno-partial").unwrap(), "true");
+    // Suffix and open-ended forms.
+    let tail = http
+        .get(
+            "/v1/objects/UserA/obj",
+            &[("authorization", &auth_a), ("range", "bytes=-100")],
+        )
+        .unwrap();
+    assert_eq!(tail.status, 206);
+    assert_eq!(tail.body, &payload[19_900..]);
+    let open = http
+        .get(
+            "/v1/objects/UserA/obj",
+            &[("authorization", &auth_a), ("range", "bytes=19990-")],
+        )
+        .unwrap();
+    assert_eq!(open.body, &payload[19_990..]);
+    // Unsatisfiable start → 416 with the size.
+    let over = http
+        .get(
+            "/v1/objects/UserA/obj",
+            &[("authorization", &auth_a), ("range", "bytes=20000-")],
+        )
+        .unwrap();
+    assert_eq!(over.status, 416);
+    assert_eq!(over.headers.get("content-range").unwrap(), "bytes */20000");
+
+    // --- Version pinning.
+    let payload2 = Rng::new(6).bytes(25_000);
+    http.put("/v1/objects/UserA/obj", &[("authorization", &auth_a)], &payload2).unwrap();
+    let old = http
+        .get("/v1/objects/UserA/obj?version=0", &[("authorization", &auth_a)])
+        .unwrap();
+    assert_eq!(old.status, 200);
+    assert_eq!(old.body, payload);
+    assert_eq!(old.headers.get("x-dyno-version").unwrap(), "0");
+    let latest = http.get("/v1/objects/UserA/obj", &[("authorization", &auth_a)]).unwrap();
+    assert_eq!(latest.body, payload2);
+    assert_eq!(latest.headers.get("x-dyno-version").unwrap(), "1");
+    let bad = http
+        .get("/v1/objects/UserA/obj?version=banana", &[("authorization", &auth_a)])
+        .unwrap();
+    assert_eq!(bad.status, 400);
+    let missing = http
+        .get("/v1/objects/UserA/obj?version=9", &[("authorization", &auth_a)])
+        .unwrap();
+    assert_eq!(missing.status, 404);
+
+    // --- Pagination.
+    for name in ["pag-a", "pag-b", "pag-c", "pag-d", "pag-e"] {
+        http.put(
+            &format!("/v1/objects/UserA/{name}"),
+            &[("authorization", &auth_a)],
+            b"x",
+        )
+        .unwrap();
+    }
+    let page = http
+        .get(
+            "/v1/collections/UserA?prefix=pag-&limit=2",
+            &[("authorization", &auth_a)],
+        )
+        .unwrap();
+    assert_eq!(page.status, 200);
+    let v = parse(std::str::from_utf8(&page.body).unwrap()).unwrap();
+    let names: Vec<&str> =
+        v.get("objects").as_arr().unwrap().iter().map(|o| o.req_str("name").unwrap()).collect();
+    assert_eq!(names, vec!["pag-a", "pag-b"]);
+    assert_eq!(v.get("truncated").as_bool(), Some(true));
+    assert_eq!(v.req_str("next_after").unwrap(), "pag-b");
+    let page = http
+        .get(
+            "/v1/collections/UserA?prefix=pag-&limit=2&after=pag-b",
+            &[("authorization", &auth_a)],
+        )
+        .unwrap();
+    let v = parse(std::str::from_utf8(&page.body).unwrap()).unwrap();
+    let names: Vec<&str> =
+        v.get("objects").as_arr().unwrap().iter().map(|o| o.req_str("name").unwrap()).collect();
+    assert_eq!(names, vec!["pag-c", "pag-d"]);
+    let bad = http
+        .get("/v1/collections/UserA?limit=zero", &[("authorization", &auth_a)])
+        .unwrap();
+    assert_eq!(bad.status, 400);
+
+    // --- Per-request policy override, observable through delete's
+    // chunk count: IDA(3,2) stores 3 chunks, regular exactly 1.
+    let put = http
+        .put(
+            "/v1/objects/UserA/small-policy",
+            &[("authorization", &auth_a), ("x-dyno-policy", "2,3")],
+            b"policy bytes",
+        )
+        .unwrap();
+    assert_eq!(put.status, 201);
+    let del =
+        http.delete("/v1/objects/UserA/small-policy", &[("authorization", &auth_a)]).unwrap();
+    let v = parse(std::str::from_utf8(&del.body).unwrap()).unwrap();
+    assert_eq!(v.req_u64("deleted_chunks").unwrap(), 3);
+    let put = http
+        .put(
+            "/v1/objects/UserA/reg-policy",
+            &[("authorization", &auth_a), ("x-dyno-policy", "regular")],
+            b"one copy",
+        )
+        .unwrap();
+    assert_eq!(put.status, 201);
+    let del =
+        http.delete("/v1/objects/UserA/reg-policy", &[("authorization", &auth_a)]).unwrap();
+    let v = parse(std::str::from_utf8(&del.body).unwrap()).unwrap();
+    assert_eq!(v.req_u64("deleted_chunks").unwrap(), 1);
+    let bad = http
+        .put(
+            "/v1/objects/UserA/bad-policy",
+            &[("authorization", &auth_a), ("x-dyno-policy", "10,7")],
+            b"x",
+        )
+        .unwrap();
+    assert_eq!(bad.status, 400, "k > n policy rejected");
+
+    // --- Grants lifecycle over REST.
+    let denied = http.get("/v1/objects/UserA/obj", &[("authorization", &auth_b)]).unwrap();
+    assert_eq!(denied.status, 403);
+    let grant = http
+        .put(
+            "/v1/grants/UserA",
+            &[("authorization", &auth_a)],
+            b"{\"user\": \"UserB\", \"perm\": \"read\"}",
+        )
+        .unwrap();
+    assert_eq!(grant.status, 200, "{}", String::from_utf8_lossy(&grant.body));
+    let allowed = http.get("/v1/objects/UserA/obj", &[("authorization", &auth_b)]).unwrap();
+    assert_eq!(allowed.status, 200);
+    // Non-owners cannot grant.
+    let foreign = http
+        .put(
+            "/v1/grants/UserA",
+            &[("authorization", &auth_b)],
+            b"{\"user\": \"UserB\", \"perm\": \"write\"}",
+        )
+        .unwrap();
+    assert_eq!(foreign.status, 403);
+    // Revoke closes the door again.
+    let revoke = http
+        .request(
+            "DELETE",
+            "/v1/grants/UserA",
+            &[("authorization", &auth_a)],
+            b"{\"user\": \"UserB\", \"perm\": \"read\"}",
+        )
+        .unwrap();
+    assert_eq!(revoke.status, 200);
+    let denied = http.get("/v1/objects/UserA/obj", &[("authorization", &auth_b)]).unwrap();
+    assert_eq!(denied.status, 403);
+    // Garbage grant bodies are 400.
+    let bad = http
+        .put("/v1/grants/UserA", &[("authorization", &auth_a)], b"{\"user\": \"X\"}")
+        .unwrap();
+    assert_eq!(bad.status, 400);
+
+    // --- Deprecated alias parity: same handlers, same bytes, tagged.
+    let via_alias = http.get("/objects/UserA/obj", &[("authorization", &auth_a)]).unwrap();
+    assert_eq!(via_alias.status, 200);
+    assert_eq!(via_alias.body, payload2);
+    assert_eq!(via_alias.headers.get("x-dyno-deprecated").unwrap(), "use /v1/objects");
+    assert_eq!(via_alias.headers.get("etag"), latest.headers.get("etag"));
+    // Alias supports the new features too (same handlers).
+    let alias_range = http
+        .get(
+            "/objects/UserA/obj",
+            &[("authorization", &auth_a), ("range", "bytes=0-99")],
+        )
+        .unwrap();
+    assert_eq!(alias_range.status, 206);
+    assert_eq!(alias_range.body, &payload2[..100]);
+    // /v1 percent-decodes path segments.
+    let put = http
+        .put(
+            "/v1/objects/UserA/with%20space",
+            &[("authorization", &auth_a)],
+            b"spaced",
+        )
+        .unwrap();
+    assert_eq!(put.status, 201);
+    let remote = RemoteStore::connect(&addr, &token_a);
+    assert_eq!(remote.stat("/UserA", "with space", None).unwrap().size, 6);
+}
+
+#[test]
+fn remote_errors_map_to_crate_variants() {
+    let (ds, _server, addr) = gateway();
+    let token = ds.register_user("UserA").unwrap();
+    ds.register_user("UserB").unwrap();
+    let remote = RemoteStore::connect(&addr, &token);
+    assert!(matches!(
+        remote.pull("/UserA", "ghost", &PullOptions::default()),
+        Err(Error::NotFound(_))
+    ));
+    assert!(matches!(
+        remote.stat("/UserB", "x", None),
+        Err(Error::PermissionDenied(_))
+    ));
+    let anon = RemoteStore::connect(&addr, "junk-token");
+    assert!(matches!(
+        anon.pull("/UserA", "x", &PullOptions::default()),
+        Err(Error::Auth(_))
+    ));
+    assert!(matches!(
+        remote.grant("/UserB", "UserA", Permission::Read),
+        Err(Error::PermissionDenied(_))
+    ));
+}
+
+#[test]
+fn range_read_property_vs_full_pull_slicing() {
+    // Property sweep: for random objects and random inclusive ranges,
+    // pull_range == full_pull[start..=end], and sub-chunk ranges fetch
+    // fewer chunks than the k a full pull needs.
+    let ds = deployment();
+    let token = ds.register_user("UserA").unwrap();
+    let mut rng = Rng::new(0xA9);
+    for trial in 0..24u64 {
+        let len = 1 + rng.below(60_000) as usize;
+        let data = Rng::new(1000 + trial).bytes(len);
+        let name = format!("obj{trial}");
+        ds.push(&token, "/UserA", &name, &data, Default::default()).unwrap();
+        let full = ds.pull(&token, "/UserA", &name, PullOpts::default()).unwrap();
+        assert_eq!(full.data, data);
+        for _ in 0..6 {
+            let start = rng.below(len as u64);
+            // End may exceed the object: the API clamps.
+            let end = start + rng.below(len as u64 + 100);
+            let report = ds
+                .pull_range(&token, "/UserA", &name, start, end, PullOpts::default())
+                .unwrap();
+            let clamped_end = end.min(len as u64 - 1);
+            assert_eq!(report.end, clamped_end);
+            assert_eq!(
+                report.data,
+                &data[start as usize..=clamped_end as usize],
+                "len={len} range={start}-{end}"
+            );
+            assert!(report.partial, "healthy fleet serves every range partially");
+            assert!(report.chunks_fetched <= 7);
+        }
+        // A range inside one chunk fetches exactly one chunk — the
+        // acceptance criterion's "fewer chunks than a full pull".
+        let report = ds
+            .pull_range(&token, "/UserA", &name, 0, 0, PullOpts::default())
+            .unwrap();
+        assert_eq!(report.chunks_fetched, 1);
+        assert!(report.chunks_fetched < full.chunks_fetched);
+        assert_eq!(report.data, &data[0..=0]);
+    }
+
+    // Range start beyond the object is an error (HTTP 416 at the
+    // gateway).
+    assert!(ds
+        .pull_range(&token, "/UserA", "obj0", 1 << 40, 1 << 41, PullOpts::default())
+        .is_err());
+}
+
+#[test]
+fn range_read_falls_back_when_covering_chunk_is_lost() {
+    let ds = deployment();
+    let token = ds.register_user("UserA").unwrap();
+    let data = Rng::new(55).bytes(70_000);
+    ds.push(&token, "/UserA", "obj", &data, Default::default()).unwrap();
+    let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+    // Kill the holder of systematic chunk 0, then range-read inside
+    // chunk 0: the fast path is impossible, the fallback must decode
+    // from parity and still return the exact slice.
+    let holder = match &meta.placement {
+        dynostore::metadata::ObjectPlacement::Erasure { chunks, .. } => {
+            chunks.iter().find(|&&(i, _)| i == 0).unwrap().1
+        }
+        _ => unreachable!(),
+    };
+    ds.container_of(holder).unwrap().set_alive(false);
+    let report =
+        ds.pull_range(&token, "/UserA", "obj", 10, 500, PullOpts::default()).unwrap();
+    assert_eq!(report.data, &data[10..=500]);
+    assert!(!report.partial, "degraded range read fell back to a full pull");
+    assert_eq!(report.chunks_fetched, 7);
+}
+
+#[test]
+fn range_read_records_corrupt_fast_path_attempt() {
+    let ds = deployment();
+    let token = ds.register_user("UserA").unwrap();
+    let data = Rng::new(56).bytes(50_000);
+    ds.push(&token, "/UserA", "obj", &data, Default::default()).unwrap();
+    let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "obj")).unwrap();
+    // Overwrite systematic chunk 0's stored bytes: the fast path fetches
+    // it, rejects it, and the fallback must still serve the exact slice
+    // WITH the failed attempt recorded in the telemetry.
+    let (idx, cid) = match &meta.placement {
+        dynostore::metadata::ObjectPlacement::Erasure { chunks, .. } => {
+            *chunks.iter().find(|&&(i, _)| i == 0).unwrap()
+        }
+        _ => unreachable!(),
+    };
+    let key = format!(
+        "chk-{}-{}-{idx}",
+        &dynostore::util::to_hex(&meta.sha3)[..16],
+        meta.size
+    );
+    ds.container_of(cid).unwrap().put(&key, b"not a chunk").unwrap();
+    let report = ds.pull_range(&token, "/UserA", "obj", 0, 99, PullOpts::default()).unwrap();
+    assert_eq!(report.data, &data[0..=99]);
+    assert!(!report.partial);
+    assert!(
+        report.chunk_io.iter().any(|c| !c.ok && c.container == cid),
+        "failed fast-path attempt recorded: {:?}",
+        report.chunk_io
+    );
+}
