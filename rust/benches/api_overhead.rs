@@ -107,8 +107,9 @@ fn range_case(ds: &Arc<DynoStore>, token: &str, object_bytes: usize, range_bytes
     ds.push(token, "/Bench", &name, &data, Default::default()).unwrap();
     // Wire bytes per chunk (header + aligned payload), for the
     // bytes-moved accounting.
-    let chunk_wire =
-        Codec::new(ErasureConfig::new(N, K)).unwrap().chunk_len(object_bytes) as u64 + 56;
+    let chunk_wire = Codec::new(ErasureConfig::new(N, K)).unwrap().chunk_len(object_bytes)
+        as u64
+        + dynostore::erasure::CHUNK_HEADER_LEN as u64;
 
     let full = measure(1, iters, || {
         let report = ds.pull(token, "/Bench", &name, PullOpts::default()).unwrap();

@@ -1,0 +1,238 @@
+//! Fault recovery bench (EXPERIMENTS.md §Faults): read latency and
+//! success rate under an escalating scripted fault schedule, then the
+//! cost of scrubbing the damage back out.
+//!
+//! A 12-container chaos deployment (every channel behind a seeded
+//! [`FaultPlan`]) serves a fixed object working set while the plan
+//! walks through stages — healthy, injected errors, a holder outage up
+//! to the full n − k parity budget, wire corruption, a partition
+//! window — recording per-stage pull wallclock (mean/p50/p95), success
+//! rate, and how many reads needed parity reconstruction. A final
+//! stage closes the fault window, runs [`DynoStore::scrub_cycle`]
+//! until redundancy is restored, and re-measures the clean read.
+//!
+//! Writes `BENCH_faults.json` (one row per stage) for CI archiving.
+//! `--smoke` shrinks the workload.
+
+use std::sync::Arc;
+
+use dynostore::bench::Table;
+use dynostore::coordinator::{DynoStore, PullOpts, PushOpts};
+use dynostore::json::{obj, to_string_pretty, Value};
+use dynostore::metadata::ObjectPlacement;
+use dynostore::sim::{FaultPlan, FaultSpec};
+use dynostore::testkit::chaos_deployment;
+use dynostore::util::{now_ns, Rng};
+
+struct StageRow {
+    stage: &'static str,
+    pulls: usize,
+    ok: usize,
+    degraded: usize,
+    mean_ms: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+}
+
+/// Pull every object once per iteration, recording wallclock per pull.
+fn run_stage(
+    stage: &'static str,
+    ds: &Arc<DynoStore>,
+    token: &str,
+    names: &[String],
+    payloads: &[Vec<u8>],
+    iters: usize,
+) -> StageRow {
+    let mut samples: Vec<u64> = Vec::with_capacity(iters * names.len());
+    let (mut ok, mut degraded) = (0usize, 0usize);
+    for _ in 0..iters {
+        for (name, want) in names.iter().zip(payloads) {
+            let t0 = now_ns();
+            let res = ds.pull(token, "/UserA", name, PullOpts::default());
+            samples.push(now_ns() - t0);
+            match res {
+                Ok(pull) => {
+                    assert_eq!(&pull.data, want, "{stage}: bytes must stay exact");
+                    ok += 1;
+                    if pull.degraded {
+                        degraded += 1;
+                    }
+                }
+                Err(e) => {
+                    // Failures must be typed, never a panic or a stall.
+                    let _ = e;
+                }
+            }
+        }
+    }
+    samples.sort_unstable();
+    let sum: u128 = samples.iter().map(|&s| s as u128).sum();
+    let ms = |ns: u64| ns as f64 / 1e6;
+    StageRow {
+        stage,
+        pulls: samples.len(),
+        ok,
+        degraded,
+        mean_ms: sum as f64 / samples.len() as f64 / 1e6,
+        p50_ms: ms(samples[samples.len() / 2]),
+        p95_ms: ms(samples[(samples.len() * 95 / 100).min(samples.len() - 1)]),
+    }
+}
+
+/// Fault `count` containers total, picked from the first object's
+/// chunk holders. Capping the *fleet-wide* outage at count ≤ n − k
+/// keeps every object within its parity budget (no object can lose
+/// more chunks than there are faulted containers).
+fn fault_holders(
+    ds: &Arc<DynoStore>,
+    plan: &Arc<FaultPlan>,
+    name: &str,
+    count: usize,
+    spec: &FaultSpec,
+) -> Vec<u32> {
+    let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", name)).unwrap();
+    let mut faulted = Vec::new();
+    if let ObjectPlacement::Erasure { chunks, .. } = meta.placement {
+        for &(_, cid) in chunks.iter().take(count) {
+            plan.set(cid, spec.clone());
+            faulted.push(cid);
+        }
+    }
+    faulted
+}
+
+fn clear_all(plan: &Arc<FaultPlan>) {
+    for cid in 0..12 {
+        plan.clear(cid);
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let objects = if smoke { 6 } else { 24 };
+    let object_bytes = if smoke { 40_000 } else { 400_000 };
+    let iters = if smoke { 2 } else { 8 };
+
+    let (ds, plan, token) = chaos_deployment(12, 0xFA17);
+    let mut names = Vec::with_capacity(objects);
+    let mut payloads = Vec::with_capacity(objects);
+    for i in 0..objects {
+        let name = format!("o{i}");
+        let data = Rng::new(9_000 + i as u64).bytes(object_bytes);
+        ds.push(&token, "/UserA", &name, &data, PushOpts::default()).unwrap();
+        names.push(name);
+        payloads.push(data);
+    }
+    println!(
+        "fault_recovery: {objects} objects x {object_bytes} B over 12 chaos containers, \
+         IDA(10,7), {iters} iters/stage{}",
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let mut rows: Vec<StageRow> = Vec::new();
+
+    // Stage 1: healthy baseline.
+    rows.push(run_stage("healthy", &ds, &token, &names, &payloads, iters));
+
+    // Stage 2: flaky fleet — 10% injected errors everywhere. Reads
+    // hedge past the failures; success stays 100%.
+    for cid in 0..12 {
+        plan.set(cid, FaultSpec::default().error_rate(0.1));
+    }
+    rows.push(run_stage("error 10% all", &ds, &token, &names, &payloads, iters));
+    clear_all(&plan);
+
+    // Stage 3: one container down, then the full n − k budget of three.
+    fault_holders(&ds, &plan, &names[0], 1, &FaultSpec::down());
+    rows.push(run_stage("1 container down", &ds, &token, &names, &payloads, iters));
+    fault_holders(&ds, &plan, &names[0], 3, &FaultSpec::down());
+    rows.push(run_stage("3 containers down (n-k)", &ds, &token, &names, &payloads, iters));
+    clear_all(&plan);
+
+    // Stage 4: wire corruption on two containers — unpack rejects the
+    // damaged chunks, parity fills in.
+    fault_holders(&ds, &plan, &names[0], 2, &FaultSpec::default().corrupt_rate(1.0));
+    rows.push(run_stage("corrupt wire x2", &ds, &token, &names, &payloads, iters));
+    clear_all(&plan);
+
+    // Stage 5: a partition window cuts two containers; reads degrade
+    // but succeed from parity.
+    let cut =
+        fault_holders(&ds, &plan, &names[0], 2, &FaultSpec::default().partition(1, 1_000));
+    plan.set_epoch(1);
+    rows.push(run_stage("partition x2", &ds, &token, &names, &payloads, iters));
+
+    // Stage 6: recovery — scrub while the window is still open (the
+    // spare containers absorb the re-placed chunks), then close it.
+    let t0 = now_ns();
+    let mut healed = 0usize;
+    let mut cycles = 0usize;
+    loop {
+        let report = ds.scrub_cycle(0).unwrap();
+        healed += report.chunks_healed;
+        cycles += 1;
+        if report.unreachable == 0 && report.corrupt_found == 0 {
+            break;
+        }
+        if cycles >= 8 {
+            break;
+        }
+    }
+    let scrub_ms = (now_ns() - t0) as f64 / 1e6;
+    plan.set_epoch(1_000);
+    clear_all(&plan);
+    println!(
+        "scrub recovery: {healed} chunks healed in {cycles} cycles, {scrub_ms:.1} ms \
+         ({} containers were cut)",
+        cut.len()
+    );
+    rows.push(run_stage("after scrub", &ds, &token, &names, &payloads, iters));
+
+    let mut table = Table::new(
+        "Read latency and success under escalating faults",
+        &["stage", "pulls", "ok", "degraded", "mean ms", "p50 ms", "p95 ms"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.stage.to_string(),
+            r.pulls.to_string(),
+            format!("{}/{}", r.ok, r.pulls),
+            r.degraded.to_string(),
+            format!("{:.2}", r.mean_ms),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p95_ms),
+        ]);
+    }
+    table.print();
+
+    let json_rows: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("stage", r.stage.into()),
+                ("pulls", (r.pulls as u64).into()),
+                ("ok", (r.ok as u64).into()),
+                ("degraded", (r.degraded as u64).into()),
+                ("mean_ms", r.mean_ms.into()),
+                ("p50_ms", r.p50_ms.into()),
+                ("p95_ms", r.p95_ms.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "fault_recovery".into()),
+        ("smoke", smoke.into()),
+        ("objects", (objects as u64).into()),
+        ("object_bytes", (object_bytes as u64).into()),
+        ("iters", (iters as u64).into()),
+        ("scrub_cycles", (cycles as u64).into()),
+        ("scrub_chunks_healed", (healed as u64).into()),
+        ("scrub_ms", scrub_ms.into()),
+        ("rows", Value::Arr(json_rows)),
+    ]);
+    let path = "BENCH_faults.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("wrote {path} ({} stages)", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

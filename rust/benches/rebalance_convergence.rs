@@ -42,7 +42,7 @@ fn main() {
         .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
         .build();
     // Size the tight containers so they start ~20-25% occupied.
-    let chunk = object_bytes / 3 + 56;
+    let chunk = object_bytes / 3 + dynostore::erasure::CHUNK_HEADER_LEN;
     let tight = (objects * chunk * 4) as u64;
     for c in deploy_containers(&specs("tight", 5, tight, tight), 5, 0).containers {
         ds.add_container(c).unwrap();

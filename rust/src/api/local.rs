@@ -39,8 +39,8 @@ impl LocalStore {
         &self.token
     }
 
-    fn ctx(&self, flows: u32) -> OpContext {
-        OpContext::at(self.site).with_flows(flows.max(1))
+    fn ctx(&self, flows: u32, deadline: crate::resilience::Deadline) -> OpContext {
+        OpContext::at(self.site).with_flows(flows.max(1)).with_deadline(deadline)
     }
 }
 
@@ -61,7 +61,7 @@ impl ObjectStore for LocalStore {
             collection,
             name,
             data,
-            PushOpts { ctx: self.ctx(opts.flows), policy: opts.policy },
+            PushOpts { ctx: self.ctx(opts.flows, opts.deadline), policy: opts.policy },
         )?;
         Ok(PushOutcome { info: ObjectInfo::from_meta(&report.meta), seconds: report.sim_s })
     }
@@ -71,7 +71,7 @@ impl ObjectStore for LocalStore {
             &self.token,
             collection,
             name,
-            PullOpts { ctx: self.ctx(opts.flows), version: opts.version },
+            PullOpts { ctx: self.ctx(opts.flows, opts.deadline), version: opts.version },
         )?;
         Ok(PullOutcome {
             info: ObjectInfo::from_meta(&report.meta),
@@ -94,7 +94,7 @@ impl ObjectStore for LocalStore {
             name,
             start,
             end,
-            PullOpts { ctx: self.ctx(opts.flows), version: opts.version },
+            PullOpts { ctx: self.ctx(opts.flows, opts.deadline), version: opts.version },
         )?;
         Ok(RangeOutcome {
             info: ObjectInfo::from_meta(&report.meta),
@@ -108,6 +108,10 @@ impl ObjectStore for LocalStore {
     fn stat(&self, collection: &str, name: &str, version: Option<u64>) -> Result<ObjectInfo> {
         let meta = self.store.stat(&self.token, collection, name, version)?;
         Ok(ObjectInfo::from_meta(&meta))
+    }
+
+    fn nonce_epoch(&self, collection: &str, name: &str) -> Result<u64> {
+        self.store.nonce_epoch(&self.token, collection, name)
     }
 
     fn delete(&self, collection: &str, name: &str) -> Result<usize> {

@@ -23,6 +23,7 @@ pub use remote::RemoteStore;
 
 use crate::metadata::{ObjectMeta, Permission};
 use crate::policy::ResiliencePolicy;
+use crate::resilience::Deadline;
 use crate::{Error, Result};
 
 /// Default page size for [`ObjectStore::list`] when the caller doesn't
@@ -46,6 +47,10 @@ pub struct ObjectInfo {
     /// `ETag`, unquoted).
     pub etag: String,
     pub created_at: u64,
+    /// Eviction generation of the name (`x-dyno-nonce-epoch`): mixed
+    /// into the client's version-salted encryption nonce so an
+    /// evict-then-repush never reuses AES-CTR keystream.
+    pub nonce_epoch: u64,
 }
 
 impl ObjectInfo {
@@ -58,6 +63,7 @@ impl ObjectInfo {
             size: meta.size,
             etag: crate::util::to_hex(&meta.sha3),
             created_at: meta.created_at,
+            nonce_epoch: meta.nonce_epoch,
         }
     }
 }
@@ -73,6 +79,11 @@ pub struct PushOptions {
     /// meaningful for [`LocalStore`], ignored over HTTP where real
     /// sockets contend).
     pub flows: u32,
+    /// Per-request time budget. [`LocalStore`] threads it through the
+    /// coordinator's `OpContext`; [`RemoteStore`] sends the remaining
+    /// budget as `x-dyno-deadline-ms` so the gateway enforces the same
+    /// cutoff server-side. Default: unbounded.
+    pub deadline: Deadline,
 }
 
 /// Download options.
@@ -82,6 +93,8 @@ pub struct PullOptions {
     pub version: Option<u64>,
     /// See [`PushOptions::flows`].
     pub flows: u32,
+    /// See [`PushOptions::deadline`].
+    pub deadline: Deadline,
 }
 
 /// Listing options (`/v1/collections` query string).
@@ -166,6 +179,15 @@ pub trait ObjectStore: Send + Sync {
 
     /// Metadata only (no data-plane traffic).
     fn stat(&self, collection: &str, name: &str, version: Option<u64>) -> Result<ObjectInfo>;
+
+    /// Eviction generation of a name — the `nonce_epoch` the NEXT push
+    /// of `(collection, name)` will be stamped with. Unlike
+    /// [`ObjectStore::stat`] this succeeds (with the persisted epoch)
+    /// when the name has no live versions, which is exactly when an
+    /// encrypting client must consult it: after `delete`, a re-push
+    /// restarts at version 0 and only the bumped epoch keeps its
+    /// AES-CTR nonce distinct from the evicted generation's.
+    fn nonce_epoch(&self, collection: &str, name: &str) -> Result<u64>;
 
     /// Does the latest version exist (and is it visible to the caller)?
     fn exists(&self, collection: &str, name: &str) -> Result<bool> {

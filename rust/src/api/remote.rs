@@ -110,7 +110,21 @@ impl RemoteStore {
             size: num("x-dyno-size")?,
             etag: header("etag")?.trim_matches('"').to_string(),
             created_at: num("x-dyno-created")?,
+            // Optional for gateways predating the epoch header.
+            nonce_epoch: resp
+                .headers
+                .get("x-dyno-nonce-epoch")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0),
         })
+    }
+
+    /// Remaining request budget as the `x-dyno-deadline-ms` header value
+    /// (`None` when unbounded — the header is omitted). An expired
+    /// deadline still travels as `0` so the gateway answers with the
+    /// same 504 the in-process path raises.
+    fn deadline_header(opts_deadline: &crate::resilience::Deadline) -> Option<String> {
+        opts_deadline.remaining_ms().map(|ms| ms.to_string())
     }
 
     fn acl_request(
@@ -154,9 +168,13 @@ impl ObjectStore for RemoteStore {
     ) -> Result<PushOutcome> {
         let path = Self::object_path(collection, name);
         let policy = opts.policy.as_ref().and_then(policy_header);
+        let deadline = Self::deadline_header(&opts.deadline);
         let mut headers: Vec<(&str, &str)> = vec![("authorization", &self.auth)];
         if let Some(p) = &policy {
             headers.push(("x-dyno-policy", p));
+        }
+        if let Some(d) = &deadline {
+            headers.push(("x-dyno-deadline-ms", d));
         }
         let t0 = now_ns();
         let resp = self.http.put(&path, &headers, data)?;
@@ -172,8 +190,13 @@ impl ObjectStore for RemoteStore {
         if let Some(v) = opts.version {
             path.push_str(&format!("?version={v}"));
         }
+        let deadline = Self::deadline_header(&opts.deadline);
+        let mut headers: Vec<(&str, &str)> = vec![("authorization", &self.auth)];
+        if let Some(d) = &deadline {
+            headers.push(("x-dyno-deadline-ms", d));
+        }
         let t0 = now_ns();
-        let resp = self.http.get(&path, &[("authorization", &self.auth)])?;
+        let resp = self.http.get(&path, &headers)?;
         let seconds = (now_ns() - t0) as f64 / 1e9;
         if resp.status != 200 {
             return Err(Self::error_for(&resp));
@@ -202,10 +225,14 @@ impl ObjectStore for RemoteStore {
             path.push_str(&format!("?version={v}"));
         }
         let range = format!("bytes={start}-{end}");
+        let deadline = Self::deadline_header(&opts.deadline);
+        let mut headers: Vec<(&str, &str)> =
+            vec![("authorization", &self.auth), ("range", &range)];
+        if let Some(d) = &deadline {
+            headers.push(("x-dyno-deadline-ms", d));
+        }
         let t0 = now_ns();
-        let resp = self
-            .http
-            .get(&path, &[("authorization", &self.auth), ("range", &range)])?;
+        let resp = self.http.get(&path, &headers)?;
         let seconds = (now_ns() - t0) as f64 / 1e9;
         if resp.status == 416 {
             return Err(Error::Invalid(format!(
@@ -235,6 +262,22 @@ impl ObjectStore for RemoteStore {
         match resp.status {
             200 => Self::info_from_headers(&resp, collection, name),
             404 => Err(Error::NotFound(format!("{collection}/{name}"))),
+            _ => Err(Self::error_for(&resp)),
+        }
+    }
+
+    fn nonce_epoch(&self, collection: &str, name: &str) -> Result<u64> {
+        let path = Self::object_path(collection, name);
+        let resp = self.http.request("HEAD", &path, &[("authorization", &self.auth)], &[])?;
+        match resp.status {
+            // The gateway stamps the epoch header on 404s too — that's
+            // the evicted-name case this query exists for. Missing
+            // header (pre-epoch gateway) degrades to generation 0.
+            200 | 404 => Ok(resp
+                .headers
+                .get("x-dyno-nonce-epoch")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0)),
             _ => Err(Self::error_for(&resp)),
         }
     }
@@ -290,6 +333,7 @@ impl ObjectStore for RemoteStore {
                     size: o.req_u64("size")?,
                     etag: o.req_str("etag")?.into(),
                     created_at: o.req_u64("created_at")?,
+                    nonce_epoch: o.opt_u64("nonce_epoch", 0),
                 })
             })
             .collect::<Result<Vec<_>>>()?;

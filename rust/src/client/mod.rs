@@ -13,8 +13,15 @@
 //!   [`crate::sim::Wan`] models the contention for local backends).
 //! * **Point-to-point confidentiality** (§IV-E2): optional AES-256-CTR
 //!   encryption before upload; the nonce is derived from the object
-//!   path **and the version the upload will create**, so re-pushing a
-//!   name never reuses a (key, nonce) pair across distinct plaintexts.
+//!   path, **the version the upload will create**, and the name's
+//!   persisted eviction generation (nonce epoch), so re-pushing a name
+//!   never reuses a (key, nonce) pair across distinct plaintexts —
+//!   even after `evict` resets the version chain.
+//!
+//! The client also speaks the resilience plane: an optional per-request
+//! [`Deadline`] (propagated to the gateway as `x-dyno-deadline-ms`) and
+//! an optional [`RetryPolicy`] replaying transient failures with
+//! budget-capped backoff.
 
 use std::sync::Arc;
 
@@ -29,6 +36,7 @@ use crate::coordinator::{
 use crate::crypto::{sha3_256, AesCtr};
 use crate::metadata::Permission;
 use crate::policy::ResiliencePolicy;
+use crate::resilience::{Deadline, RetryPolicy};
 use crate::sim::Site;
 use crate::{Error, Result};
 
@@ -43,25 +51,36 @@ impl Encryption {
         Encryption { key }
     }
 
-    /// Derive a per-object-version nonce from the logical path and the
-    /// version salt. The salt is the object's version number (monotonic
-    /// per name, never reused across GC), so every re-push of a name
-    /// gets a fresh keystream (CTR nonce reuse across distinct
-    /// plaintexts leaks their XOR). Version 0 derives the same nonce as
-    /// the historical salt-free scheme, so objects encrypted before
-    /// versioned salting still decrypt (v0 compatibility).
+    /// Derive a per-object-version nonce from the logical path, the
+    /// version salt, and the name's eviction generation. The salt is
+    /// the object's version number (monotonic per name, never reused
+    /// across GC), so every re-push of a name gets a fresh keystream
+    /// (CTR nonce reuse across distinct plaintexts leaks their XOR).
     ///
-    /// Known residual: `evict` deletes a name's whole version chain, so
-    /// a later push of the *same name* restarts at version 0 and reuses
-    /// the version-0 nonce. Until the server persists a per-name nonce
-    /// epoch, don't re-push an evicted name under the same key — use a
-    /// fresh name or rotate the key.
-    fn nonce_for(&self, collection: &str, name: &str, version_salt: u64) -> [u8; 16] {
+    /// The epoch closes the last reuse window: `evict` deletes a name's
+    /// whole version chain, so a later push of the *same name* restarts
+    /// at version 0 — the server now persists a per-name nonce epoch
+    /// (bumped on every evict, surviving GC and snapshots) and stamps it
+    /// on each version, and mixing it here keeps the re-push's
+    /// keystream disjoint from the evicted generation's. Epoch 0 is
+    /// encoded as *absence* (no bytes appended), so every object
+    /// written before epochs existed — necessarily generation 0 —
+    /// still derives its historical nonce and decrypts unchanged.
+    fn nonce_for(
+        &self,
+        collection: &str,
+        name: &str,
+        version_salt: u64,
+        epoch: u64,
+    ) -> [u8; 16] {
         let mut buf = Vec::new();
         buf.extend_from_slice(collection.as_bytes());
         buf.push(0);
         buf.extend_from_slice(name.as_bytes());
         buf.extend_from_slice(&version_salt.to_le_bytes());
+        if epoch > 0 {
+            buf.extend_from_slice(&epoch.to_le_bytes());
+        }
         let h = sha3_256(&buf);
         h[..16].try_into().unwrap()
     }
@@ -94,6 +113,12 @@ pub struct Client {
     pub site: Site,
     encryption: Option<Encryption>,
     pub policy: Option<ResiliencePolicy>,
+    /// Transient-failure replay policy; [`RetryPolicy::none`] (a single
+    /// attempt) by default so historical behavior is unchanged.
+    retry: RetryPolicy,
+    /// Per-operation time budget in ms; `None` = unbounded. Each
+    /// operation starts a fresh [`Deadline`] from this budget.
+    deadline_ms: Option<u64>,
 }
 
 impl Client {
@@ -107,6 +132,8 @@ impl Client {
             site,
             encryption: None,
             policy: None,
+            retry: RetryPolicy::none(),
+            deadline_ms: None,
         }
     }
 
@@ -120,12 +147,22 @@ impl Client {
             site: Site::Madrid,
             encryption: None,
             policy: None,
+            retry: RetryPolicy::none(),
+            deadline_ms: None,
         }
     }
 
     /// A client over any [`ObjectStore`] backend.
     pub fn over(store: Arc<dyn ObjectStore>, site: Site) -> Self {
-        Client { store, local: None, site, encryption: None, policy: None }
+        Client {
+            store,
+            local: None,
+            site,
+            encryption: None,
+            policy: None,
+            retry: RetryPolicy::none(),
+            deadline_ms: None,
+        }
     }
 
     pub fn with_encryption(mut self, key: [u8; 32]) -> Self {
@@ -136,6 +173,32 @@ impl Client {
     pub fn with_policy(mut self, policy: ResiliencePolicy) -> Self {
         self.policy = Some(policy);
         self
+    }
+
+    /// Replay transient failures (`Unavailable` / `Net` / `Io`) under
+    /// `policy`'s attempt, sleep-budget, and deadline caps. Pushes are
+    /// re-prepared per attempt (the nonce salt is re-derived), so an
+    /// attempt that applied server-side before its response was lost
+    /// yields a correctly-encrypted duplicate version, never a
+    /// nonce-mismatched one.
+    pub fn with_retries(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
+    /// Give every operation a time budget of `ms` milliseconds. Local
+    /// backends thread it through the coordinator (which checks it at
+    /// every hop); remote backends send it as `x-dyno-deadline-ms` so
+    /// the gateway enforces the same cutoff. Expired budgets surface as
+    /// [`Error::Timeout`] (HTTP 504).
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// A fresh per-operation deadline from the configured budget.
+    fn op_deadline(&self) -> Deadline {
+        self.deadline_ms.map(Deadline::in_ms).unwrap_or_default()
     }
 
     /// Transport label of the backend (`"local"`, `"http"`).
@@ -161,14 +224,19 @@ impl Client {
         })
     }
 
-    /// The version the next push of `(collection, name)` will create —
-    /// the encryption nonce salt. Subject to the usual read-then-write
-    /// race under concurrent pushers of the *same encrypted name*;
-    /// uploads remain immutable versions either way.
-    fn next_version_salt(&self, collection: &str, name: &str) -> Result<u64> {
+    /// The `(version, nonce_epoch)` salt pair the next push of
+    /// `(collection, name)` will create — the encryption nonce inputs.
+    /// When the name has live versions, both ride on `stat`; when it
+    /// doesn't (first push, or a re-push after `evict`), the persisted
+    /// eviction generation is queried on its own. Subject to the usual
+    /// read-then-write race under concurrent pushers of the *same
+    /// encrypted name*; uploads remain immutable versions either way.
+    fn next_nonce_salt(&self, collection: &str, name: &str) -> Result<(u64, u64)> {
         match self.store.stat(collection, name, None) {
-            Ok(info) => Ok(info.version + 1),
-            Err(Error::NotFound(_)) => Ok(0),
+            Ok(info) => Ok((info.version + 1, info.nonce_epoch)),
+            Err(Error::NotFound(_)) => {
+                Ok((0, self.store.nonce_epoch(collection, name)?))
+            }
             Err(e) => Err(e),
         }
     }
@@ -179,9 +247,10 @@ impl Client {
         match &self.encryption {
             None => Ok(data.to_vec()),
             Some(enc) => {
-                let salt = self.next_version_salt(collection, name)?;
+                let (salt, epoch) = self.next_nonce_salt(collection, name)?;
                 let mut buf = data.to_vec();
-                AesCtr::new(&enc.key, &enc.nonce_for(collection, name, salt)).apply(&mut buf);
+                AesCtr::new(&enc.key, &enc.nonce_for(collection, name, salt, epoch))
+                    .apply(&mut buf);
                 Ok(buf)
             }
         }
@@ -194,13 +263,25 @@ impl Client {
         collection: &str,
         name: &str,
         version: u64,
+        epoch: u64,
         offset: u64,
         data: &mut [u8],
     ) {
         if let Some(enc) = &self.encryption {
-            AesCtr::new(&enc.key, &enc.nonce_for(collection, name, version))
+            AesCtr::new(&enc.key, &enc.nonce_for(collection, name, version, epoch))
                 .apply_at(data, offset);
         }
+    }
+
+    /// Deterministic per-object retry seed (decorrelated-jitter streams
+    /// differ across objects but replay exactly for a given name).
+    fn retry_seed(collection: &str, name: &str) -> u64 {
+        let mut buf = Vec::with_capacity(collection.len() + name.len() + 1);
+        buf.extend_from_slice(collection.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(name.as_bytes());
+        let h = sha3_256(&buf);
+        u64::from_le_bytes(h[..8].try_into().unwrap())
     }
 
     /// Upload one object. Returns the request seconds (simulated for
@@ -219,24 +300,32 @@ impl Client {
         name: &str,
         data: &[u8],
     ) -> Result<(ObjectInfo, f64)> {
-        let payload = self.outbound_payload(collection, name, data)?;
-        let out = self.store.push(
-            collection,
-            name,
-            &payload,
-            &PushOptions { policy: self.policy, flows: 1 },
-        )?;
+        let deadline = self.op_deadline();
+        let out = self.retry.run(Self::retry_seed(collection, name), deadline, |_| {
+            // Re-prepared per attempt: the nonce salt is re-derived, so
+            // a lost-response retry never encrypts under a stale salt.
+            let payload = self.outbound_payload(collection, name, data)?;
+            self.store.push(
+                collection,
+                name,
+                &payload,
+                &PushOptions { policy: self.policy, flows: 1, deadline },
+            )
+        })?;
         Ok((out.info, out.seconds))
     }
 
     fn push_flows(&self, collection: &str, name: &str, data: &[u8], flows: u32) -> Result<f64> {
-        let payload = self.outbound_payload(collection, name, data)?;
-        let out = self.store.push(
-            collection,
-            name,
-            &payload,
-            &PushOptions { policy: self.policy, flows },
-        )?;
+        let deadline = self.op_deadline();
+        let out = self.retry.run(Self::retry_seed(collection, name), deadline, |_| {
+            let payload = self.outbound_payload(collection, name, data)?;
+            self.store.push(
+                collection,
+                name,
+                &payload,
+                &PushOptions { policy: self.policy, flows, deadline },
+            )
+        })?;
         Ok(out.seconds)
     }
 
@@ -246,9 +335,18 @@ impl Client {
     }
 
     fn pull_flows(&self, collection: &str, name: &str, flows: u32) -> Result<(Vec<u8>, f64)> {
-        let mut out =
-            self.store.pull(collection, name, &PullOptions { version: None, flows })?;
-        self.decrypt_inbound(collection, name, out.info.version, 0, &mut out.data);
+        let deadline = self.op_deadline();
+        let mut out = self.retry.run(Self::retry_seed(collection, name), deadline, |_| {
+            self.store.pull(collection, name, &PullOptions { version: None, flows, deadline })
+        })?;
+        self.decrypt_inbound(
+            collection,
+            name,
+            out.info.version,
+            out.info.nonce_epoch,
+            0,
+            &mut out.data,
+        );
         Ok((out.data, out.seconds))
     }
 
@@ -260,10 +358,22 @@ impl Client {
         name: &str,
         version: u64,
     ) -> Result<(Vec<u8>, f64)> {
-        let mut out = self
-            .store
-            .pull(collection, name, &PullOptions { version: Some(version), flows: 1 })?;
-        self.decrypt_inbound(collection, name, out.info.version, 0, &mut out.data);
+        let deadline = self.op_deadline();
+        let mut out = self.retry.run(Self::retry_seed(collection, name), deadline, |_| {
+            self.store.pull(
+                collection,
+                name,
+                &PullOptions { version: Some(version), flows: 1, deadline },
+            )
+        })?;
+        self.decrypt_inbound(
+            collection,
+            name,
+            out.info.version,
+            out.info.nonce_epoch,
+            0,
+            &mut out.data,
+        );
         Ok((out.data, out.seconds))
     }
 
@@ -279,14 +389,24 @@ impl Client {
         start: u64,
         end: u64,
     ) -> Result<(Vec<u8>, f64)> {
-        let mut out = self.store.pull_range(
+        let deadline = self.op_deadline();
+        let mut out = self.retry.run(Self::retry_seed(collection, name), deadline, |_| {
+            self.store.pull_range(
+                collection,
+                name,
+                start,
+                end,
+                &PullOptions { version: None, flows: 1, deadline },
+            )
+        })?;
+        self.decrypt_inbound(
             collection,
             name,
+            out.info.version,
+            out.info.nonce_epoch,
             start,
-            end,
-            &PullOptions { version: None, flows: 1 },
-        )?;
-        self.decrypt_inbound(collection, name, out.info.version, start, &mut out.data);
+            &mut out.data,
+        );
         Ok((out.data, out.seconds))
     }
 
@@ -347,8 +467,8 @@ impl Client {
             name,
             PullOpts { ctx: crate::coordinator::OpContext::at(self.site), version: None },
         )?;
-        let version = report.meta.version;
-        self.decrypt_inbound(collection, name, version, 0, &mut report.data);
+        let (version, epoch) = (report.meta.version, report.meta.nonce_epoch);
+        self.decrypt_inbound(collection, name, version, epoch, 0, &mut report.data);
         Ok(report)
     }
 
@@ -370,8 +490,8 @@ impl Client {
             end,
             PullOpts { ctx: crate::coordinator::OpContext::at(self.site), version: None },
         )?;
-        let version = report.meta.version;
-        self.decrypt_inbound(collection, name, version, report.start, &mut report.data);
+        let (version, epoch) = (report.meta.version, report.meta.nonce_epoch);
+        self.decrypt_inbound(collection, name, version, epoch, report.start, &mut report.data);
         Ok(report)
     }
 
@@ -559,6 +679,51 @@ mod tests {
         assert_eq!(pinned, v0, "pinned pull decrypts with the version's own nonce");
         let (pinned1, _) = client.pull_version("/UserA", "obj", 1).unwrap();
         assert_eq!(pinned1, v1);
+    }
+
+    #[test]
+    fn evict_then_repush_gets_a_fresh_nonce_epoch() {
+        // Satellite bugfix (PR-5 residual): evicting a name deleted its
+        // whole version chain, so re-pushing it restarted at version 0
+        // and reused the version-0 nonce — identical plaintexts
+        // encrypted to identical ciphertext across the evict (and
+        // distinct plaintexts leaked their XOR). The metadata plane now
+        // persists a per-name eviction generation that the nonce mixes
+        // in.
+        let (ds, token) = deployment();
+        let key = [7u8; 32];
+        let client = Client::new(ds.clone(), token, Site::Madrid).with_encryption(key);
+        let secret = b"same plaintext, pushed twice across an evict".to_vec();
+        client.push("/UserA", "obj", &secret).unwrap();
+        let plain = Client::new(ds.clone(), ds.login("UserA"), Site::Madrid);
+        let (at_rest_gen0, _) = plain.pull("/UserA", "obj").unwrap();
+        client.evict("/UserA", "obj").unwrap();
+        client.push("/UserA", "obj", &secret).unwrap();
+        let info = client.stat("/UserA", "obj").unwrap();
+        assert_eq!((info.version, info.nonce_epoch), (0, 1), "fresh chain, bumped epoch");
+        let (at_rest_gen1, _) = plain.pull("/UserA", "obj").unwrap();
+        assert_ne!(
+            at_rest_gen0, at_rest_gen1,
+            "identical plaintext must not repeat its ciphertext across an evict"
+        );
+        // And the epoch-salted ciphertext still decrypts.
+        let (got, _) = client.pull("/UserA", "obj").unwrap();
+        assert_eq!(got, secret);
+        // Second evict → epoch 2 (monotonic, not flag-like).
+        client.evict("/UserA", "obj").unwrap();
+        client.push("/UserA", "obj", &secret).unwrap();
+        assert_eq!(client.stat("/UserA", "obj").unwrap().nonce_epoch, 2);
+        let (got, _) = client.pull("/UserA", "obj").unwrap();
+        assert_eq!(got, secret);
+    }
+
+    #[test]
+    fn client_deadline_short_circuits_with_timeout() {
+        let (ds, token) = deployment();
+        let client = Client::new(ds, token, Site::Madrid).with_deadline_ms(0);
+        assert!(matches!(client.push("/UserA", "o", b"x"), Err(Error::Timeout(_))));
+        assert!(matches!(client.pull("/UserA", "o"), Err(Error::Timeout(_))));
+        assert!(matches!(client.pull_range("/UserA", "o", 0, 9), Err(Error::Timeout(_))));
     }
 
     #[test]

@@ -13,22 +13,32 @@
 //!   "engine": "swar-parallel",
 //!   "containers": [
 //!     {"name": "dc0", "site": "chameleon-tacc", "device": "chameleon-local",
-//!      "mem_mb": 256, "fs_gb": 1024, "afr": 0.05}
-//!   ]
+//!      "mem_mb": 256, "fs_gb": 1024, "afr": 0.05,
+//!      "faults": {"error_rate": 0.1, "corrupt_rate": 0.05}}
+//!   ],
+//!   "chaos_seed": 7,
+//!   "scrub": {"interval_secs": 30, "sample": 64},
+//!   "conn_timeout_secs": 10
 //! }
 //! ```
+//!
+//! A container entry may carry a `faults` script (see
+//! [`crate::sim::FaultSpec`]): its channel is wrapped in the chaos
+//! plane's [`crate::sim::FaultChannel`], driven deterministically by
+//! `chaos_seed` — the fault-injection harness of EXPERIMENTS.md §Faults.
 
 use std::sync::Arc;
 
 use crate::container::{
-    deploy_containers, AgentSpec, Backend, DataContainer, FsBackend, RemoteChannel, SimBackend,
+    deploy_containers, AgentSpec, Backend, DataContainer, FsBackend, LocalChannel,
+    RemoteChannel, SimBackend,
 };
-use crate::coordinator::{DynoStore, GfEngine};
+use crate::coordinator::{DynoStore, GfEngine, DEFAULT_SCRUB_SAMPLE};
 use crate::erasure::ErasureConfig;
 use crate::json::{parse, Value};
 use crate::placement::Weights;
 use crate::policy::ResiliencePolicy;
-use crate::sim::{Device, Site};
+use crate::sim::{Device, FaultChannel, FaultPlan, FaultSpec, Site};
 use crate::{Error, Result};
 
 /// Parsed deployment configuration.
@@ -53,6 +63,21 @@ pub struct Config {
     /// Gateway request-body cap in MiB (bounds object size; a bogus
     /// `content-length` beyond it gets 413 instead of an allocation).
     pub max_body_mb: u64,
+    /// Per-container fault scripts, parallel to `containers` (None =
+    /// clean). Any Some wraps that container's channel in the chaos
+    /// plane at build time.
+    pub fault_specs: Vec<Option<FaultSpec>>,
+    /// Seed driving every chaos-plane draw (deterministic fault
+    /// schedules: same seed + same op sequence = same faults).
+    pub chaos_seed: u64,
+    /// Background scrubber cadence in seconds; 0 disables the thread
+    /// (`dynostore serve` starts it when non-zero).
+    pub scrub_interval_secs: u64,
+    /// Objects verified per scrub cycle (0 = the whole keyspace).
+    pub scrub_sample: usize,
+    /// Gateway socket read/write timeout in seconds (slowloris guard;
+    /// 408 when a client stalls mid-headers).
+    pub conn_timeout_secs: u64,
 }
 
 impl Default for Config {
@@ -69,6 +94,11 @@ impl Default for Config {
             data_dir: None,
             snapshot_every: crate::durability::DEFAULT_SNAPSHOT_EVERY,
             max_body_mb: (crate::gateway::DEFAULT_GATEWAY_MAX_BODY >> 20) as u64,
+            fault_specs: Vec::new(),
+            chaos_seed: 0xC4A05,
+            scrub_interval_secs: 0,
+            scrub_sample: DEFAULT_SCRUB_SAMPLE,
+            conn_timeout_secs: crate::net::DEFAULT_CONN_TIMEOUT.as_secs(),
         }
     }
 }
@@ -104,13 +134,34 @@ impl Config {
         }
         cfg.snapshot_every = v.opt_u64("snapshot_every", cfg.snapshot_every).max(1);
         cfg.max_body_mb = v.opt_u64("max_body_mb", cfg.max_body_mb).max(1);
+        cfg.chaos_seed = v.opt_u64("chaos_seed", cfg.chaos_seed);
+        let scrub = v.get("scrub");
+        cfg.scrub_interval_secs = scrub.opt_u64("interval_secs", cfg.scrub_interval_secs);
+        cfg.scrub_sample = scrub.opt_u64("sample", cfg.scrub_sample as u64) as usize;
+        cfg.conn_timeout_secs =
+            v.opt_u64("conn_timeout_secs", cfg.conn_timeout_secs).max(1);
         if let Some(arr) = v.get("containers").as_arr() {
             for c in arr {
                 // An entry with an `endpoint` is a remote agent; local
                 // entries are deployed in-process at build time.
                 match c.get("endpoint").as_str() {
-                    Some(ep) => cfg.remotes.push(ep.to_string()),
-                    None => cfg.containers.push(parse_container(c)?),
+                    Some(ep) => {
+                        if !matches!(c.get("faults"), &Value::Null) {
+                            return Err(Error::Config(
+                                "fault scripts only apply to local containers \
+                                 (wrap the remote agent's own config instead)"
+                                    .into(),
+                            ));
+                        }
+                        cfg.remotes.push(ep.to_string());
+                    }
+                    None => {
+                        cfg.containers.push(parse_container(c)?);
+                        cfg.fault_specs.push(match c.get("faults") {
+                            &Value::Null => None,
+                            f => Some(FaultSpec::from_json(f)?),
+                        });
+                    }
                 }
             }
         }
@@ -143,8 +194,19 @@ impl Config {
         let (ds, recovery) = builder.build_durable()?;
         let ds = Arc::new(ds);
         let hosts = self.containers.len().max(1);
+        // Chaos plane: containers with a fault script get their channel
+        // wrapped; clean ones register bare. Ids are assigned in spec
+        // order by deploy_containers, so fault_specs lines up by index.
+        let plan = FaultPlan::new(self.chaos_seed);
+        for (i, spec) in self.fault_specs.iter().enumerate() {
+            if let Some(spec) = spec {
+                plan.set(i as u32, spec.clone());
+            }
+        }
         for c in deploy_containers(&self.containers, hosts, 0).containers {
-            ds.add_container(c)?;
+            let channel: Arc<dyn crate::container::ContainerChannel> =
+                Arc::new(LocalChannel::new(c));
+            ds.add_channel(FaultChannel::wrap_if_scripted(channel, &plan))?;
         }
         // Remote agents must be reachable at build time: the channel
         // adopts the agent's self-reported identity (id, site, capacity).
@@ -444,6 +506,58 @@ mod tests {
         assert!(ds.recovery_report().unwrap().recovered());
         assert!(ds.meta.read(|s| Ok(s.collection_exists("/u"))).unwrap());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_scripts_wrap_scripted_containers_in_the_chaos_plane() {
+        let cfg = Config::from_json(
+            r#"{"chaos_seed": 42,
+                "containers": [
+                    {"name": "dc0", "faults": {"error_rate": 1.0}},
+                    {"name": "dc1"}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.chaos_seed, 42);
+        assert_eq!(cfg.fault_specs.len(), 2);
+        assert!(cfg.fault_specs[0].is_some());
+        assert!(cfg.fault_specs[1].is_none());
+
+        let ds = cfg.build().unwrap();
+        // Scripted container registers behind the chaos transport; the
+        // clean one keeps its bare local channel.
+        assert_eq!(ds.channel_of(0).unwrap().transport(), "chaos");
+        assert_eq!(ds.channel_of(1).unwrap().transport(), "local");
+        // error_rate 1.0: every op on dc0 fails, dc1 works.
+        assert!(ds.channel_of(0).unwrap().put("k", b"v").is_err());
+        assert!(ds.channel_of(1).unwrap().put("k", b"v").is_ok());
+
+        // Invalid scripts are config errors, not silent clamps.
+        assert!(Config::from_json(
+            r#"{"containers": [{"name": "x", "faults": {"error_rate": 1.5}}]}"#
+        )
+        .is_err());
+        // Remote entries cannot carry fault scripts.
+        assert!(Config::from_json(
+            r#"{"containers": [{"endpoint": "h:1", "faults": {"error_rate": 0.1}}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_parse_with_defaults() {
+        let cfg = Config::from_json("{}").unwrap();
+        assert_eq!(cfg.scrub_interval_secs, 0, "scrubber off by default");
+        assert_eq!(cfg.scrub_sample, DEFAULT_SCRUB_SAMPLE);
+        assert_eq!(cfg.conn_timeout_secs, crate::net::DEFAULT_CONN_TIMEOUT.as_secs());
+
+        let cfg = Config::from_json(
+            r#"{"scrub": {"interval_secs": 7, "sample": 16}, "conn_timeout_secs": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scrub_interval_secs, 7);
+        assert_eq!(cfg.scrub_sample, 16);
+        assert_eq!(cfg.conn_timeout_secs, 3);
     }
 
     #[test]

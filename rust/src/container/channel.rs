@@ -24,6 +24,7 @@ use crate::container::server::encode_key;
 use crate::container::{ContainerId, ContainerInfo, DataContainer, OpOutcome};
 use crate::json::{obj, parse, Value};
 use crate::net::{HttpClient, HttpResponse};
+use crate::resilience::{mono_ms, CircuitBreaker, Deadline};
 use crate::sim::Site;
 use crate::{Error, Result};
 
@@ -62,6 +63,22 @@ pub trait ContainerChannel: Send + Sync {
     /// Does `key` exist? Dead/unreachable containers answer `false`.
     fn exists(&self, key: &str) -> Result<bool>;
 
+    /// [`ContainerChannel::put`] under a request deadline: expired
+    /// budgets short-circuit with [`Error::Timeout`] before any work,
+    /// and transport implementations clamp their socket timeout to the
+    /// remaining budget (no hop waits longer than the request lives).
+    fn put_deadline(&self, key: &str, data: &[u8], deadline: Deadline) -> Result<OpOutcome> {
+        deadline.check("put")?;
+        self.put(key, data)
+    }
+
+    /// [`ContainerChannel::get`] under a request deadline (see
+    /// [`ContainerChannel::put_deadline`]).
+    fn get_deadline(&self, key: &str, deadline: Deadline) -> Result<OpOutcome> {
+        deadline.check("get")?;
+        self.get(key)
+    }
+
     /// Monitor snapshot feeding placement and the health service. Never
     /// fails: a remote channel falls back to its last observed snapshot
     /// flagged `alive = false` when the agent is unreachable.
@@ -74,6 +91,17 @@ pub trait ContainerChannel: Send + Sync {
     }
     /// Flip the container's liveness (failure injection, maintenance).
     fn set_alive(&self, alive: bool) -> Result<()>;
+
+    /// Circuit-breaker state label for `/health` ("closed" / "open" /
+    /// "half-open"). Transports without a breaker derive it from
+    /// liveness: alive == closed, dead == open.
+    fn breaker_state(&self) -> &'static str {
+        if self.is_alive() {
+            "closed"
+        } else {
+            "open"
+        }
+    }
 
     /// The wrapped in-process container when this channel is local
     /// (tests and FaaS workers reading near data); `None` for remote.
@@ -157,10 +185,14 @@ pub struct RemoteChannel {
     id: ContainerId,
     endpoint: String,
     client: HttpClient,
-    /// Last snapshot observed from the agent. `info.alive` doubles as
-    /// the transport-health flag: flipped false whenever the agent stops
-    /// answering, refreshed on every successful exchange.
+    /// Last snapshot observed from the agent (capacity/identity data
+    /// for placement and health; liveness is the breaker's call).
     cached: Mutex<CachedInfo>,
+    /// Per-container circuit breaker: transport failures count toward
+    /// tripping it open; while open every op is shed locally (no
+    /// connect, no timeout wait); after the cooldown exactly one op is
+    /// admitted as the probe whose outcome closes or re-opens it.
+    breaker: CircuitBreaker,
 }
 
 impl RemoteChannel {
@@ -185,6 +217,7 @@ impl RemoteChannel {
             endpoint: endpoint.to_string(),
             client,
             cached: Mutex::new(CachedInfo { info, at: Instant::now() }),
+            breaker: CircuitBreaker::default(),
         }))
     }
 
@@ -196,12 +229,48 @@ impl RemoteChannel {
         format!("/container/objects/{}", encode_key(key))
     }
 
+    /// Breaker admission for one op. Open (inside cooldown) or half-open
+    /// (probe already claimed) sheds locally: a typed `Unavailable`
+    /// without touching the network.
+    fn admit(&self, what: &str) -> Result<()> {
+        if self.breaker.admit(mono_ms()) {
+            Ok(())
+        } else {
+            Err(Error::Unavailable(format!(
+                "circuit breaker {} for container agent {} — {what} shed",
+                self.breaker.state().as_str(),
+                self.endpoint
+            )))
+        }
+    }
+
+    /// Record an exchange outcome: success closes the breaker (and
+    /// resets its failure streak); failure counts toward tripping it.
     fn mark(&self, alive: bool) {
-        let mut cached = self.cached.lock().unwrap();
-        cached.info.alive = alive;
-        // A completed exchange is a fresh liveness observation: restamp
-        // so a just-marked-dead agent isn't immediately re-probed.
-        cached.at = Instant::now();
+        {
+            let mut cached = self.cached.lock().unwrap();
+            cached.info.alive = alive;
+            // A completed exchange is a fresh observation: restamp so
+            // `info()` doesn't immediately re-fetch.
+            cached.at = Instant::now();
+        }
+        if alive {
+            self.breaker.record_success();
+        } else {
+            self.breaker.record_failure(mono_ms());
+        }
+    }
+
+    /// Record a *definitive* liveness verdict (an agent's 503, an
+    /// admin `set_alive`, an active probe): the breaker snaps to the
+    /// matching state instead of counting toward a threshold.
+    fn mark_definitive(&self, alive: bool) {
+        {
+            let mut cached = self.cached.lock().unwrap();
+            cached.info.alive = alive;
+            cached.at = Instant::now();
+        }
+        self.breaker.force(alive, mono_ms());
     }
 
     /// Fetch a fresh snapshot, or mark the cache dead when the agent is
@@ -241,8 +310,10 @@ impl RemoteChannel {
     /// Map an agent response to the channel result space.
     fn check(&self, resp: HttpResponse, what: &str) -> Result<HttpResponse> {
         if resp.status == 503 {
-            // The agent is reachable but its container is down.
-            self.mark(false);
+            // The agent is reachable but its container is down — a
+            // definitive verdict, not a transport blip: trip the
+            // breaker immediately.
+            self.mark_definitive(false);
             return Err(Error::Unavailable(format!(
                 "container behind agent {} is down",
                 self.endpoint
@@ -287,9 +358,23 @@ impl ContainerChannel for RemoteChannel {
     }
 
     fn put(&self, key: &str, data: &[u8]) -> Result<OpOutcome> {
+        self.put_deadline(key, data, Deadline::none())
+    }
+
+    fn put_deadline(&self, key: &str, data: &[u8], deadline: Deadline) -> Result<OpOutcome> {
+        deadline.check("remote put")?;
+        self.admit("put")?;
+        let timeout = deadline
+            .clamp_timeout(REMOTE_TIMEOUT)
+            .ok_or_else(|| Error::Timeout(format!("no budget left for put {key}")))?;
+        let ms = deadline.remaining_ms().map(|ms| ms.to_string());
+        let mut headers: Vec<(&str, &str)> = Vec::new();
+        if let Some(ms) = ms.as_deref() {
+            headers.push(("x-dyno-deadline-ms", ms));
+        }
         let resp = self
             .client
-            .put(&Self::object_path(key), &[], data)
+            .request_with_timeout("PUT", &Self::object_path(key), &headers, data, Some(timeout))
             .map_err(|e| self.transport_err(e))?;
         let resp = self.check(resp, key)?;
         let v = std::str::from_utf8(&resp.body)
@@ -304,9 +389,23 @@ impl ContainerChannel for RemoteChannel {
     }
 
     fn get(&self, key: &str) -> Result<OpOutcome> {
+        self.get_deadline(key, Deadline::none())
+    }
+
+    fn get_deadline(&self, key: &str, deadline: Deadline) -> Result<OpOutcome> {
+        deadline.check("remote get")?;
+        self.admit("get")?;
+        let timeout = deadline
+            .clamp_timeout(REMOTE_TIMEOUT)
+            .ok_or_else(|| Error::Timeout(format!("no budget left for get {key}")))?;
+        let ms = deadline.remaining_ms().map(|ms| ms.to_string());
+        let mut headers: Vec<(&str, &str)> = Vec::new();
+        if let Some(ms) = ms.as_deref() {
+            headers.push(("x-dyno-deadline-ms", ms));
+        }
         let resp = self
             .client
-            .get(&Self::object_path(key), &[])
+            .request_with_timeout("GET", &Self::object_path(key), &headers, &[], Some(timeout))
             .map_err(|e| self.transport_err(e))?;
         let resp = self.check(resp, key)?;
         let sim_s = resp
@@ -319,6 +418,7 @@ impl ContainerChannel for RemoteChannel {
     }
 
     fn delete(&self, key: &str) -> Result<OpOutcome> {
+        self.admit("delete")?;
         let resp = self
             .client
             .delete(&Self::object_path(key), &[])
@@ -332,6 +432,10 @@ impl ContainerChannel for RemoteChannel {
     }
 
     fn exists(&self, key: &str) -> Result<bool> {
+        if self.admit("exists").is_err() {
+            // Breaker open == dead container == nothing there.
+            return Ok(false);
+        }
         match self.client.request("HEAD", &Self::object_path(key), &[], &[]) {
             Ok(resp) if resp.status == 200 => {
                 self.mark(true);
@@ -342,7 +446,7 @@ impl ContainerChannel for RemoteChannel {
                 Ok(false)
             }
             Ok(resp) if resp.status == 503 => {
-                self.mark(false);
+                self.mark_definitive(false);
                 Ok(false)
             }
             Ok(resp) => Err(Error::Net(format!(
@@ -368,23 +472,20 @@ impl ContainerChannel for RemoteChannel {
     }
 
     fn is_alive(&self) -> bool {
-        {
-            let cached = self.cached.lock().unwrap();
-            if cached.info.alive || cached.at.elapsed() < INFO_TTL {
-                return cached.info.alive;
-            }
-        }
-        // Cached dead but the observation is stale: give the agent a
-        // chance to have recovered, at most once per TTL window (the
-        // refresh restamps the cache whichever way it goes), so a
-        // transient outage doesn't leave pulls degraded forever.
-        self.refresh_info().alive
+        // The breaker's read-only view, no network: closed → alive;
+        // open inside the cooldown → dead (shed); open past the
+        // cooldown → alive, so the next op is admitted as the recovery
+        // probe; half-open → dead to everyone but the in-flight probe.
+        self.breaker.looks_alive(mono_ms())
     }
 
     fn probe(&self) -> bool {
-        // An active probe bypasses the TTL: health sweeps are the
-        // designated way to refresh a remote container's liveness.
-        self.refresh_info().alive
+        // An active probe re-contacts the agent: health sweeps are the
+        // designated way to refresh a remote container's liveness. The
+        // verdict is definitive either way — the breaker snaps to it.
+        let alive = self.refresh_info().alive;
+        self.breaker.force(alive, mono_ms());
+        alive
     }
 
     fn set_alive(&self, alive: bool) -> Result<()> {
@@ -399,8 +500,12 @@ impl ContainerChannel for RemoteChannel {
                 self.endpoint, resp.status
             )));
         }
-        self.mark(alive);
+        self.mark_definitive(alive);
         Ok(())
+    }
+
+    fn breaker_state(&self) -> &'static str {
+        self.breaker.state().as_str()
     }
 }
 
@@ -478,6 +583,32 @@ mod tests {
         assert!(matches!(ch.get("k"), Err(Error::Unavailable(_))));
         ch.set_alive(true).unwrap();
         assert!(ch.probe());
+    }
+
+    #[test]
+    fn breaker_state_default_tracks_liveness() {
+        let ch = local();
+        assert_eq!(ch.breaker_state(), "closed");
+        ch.set_alive(false).unwrap();
+        assert_eq!(ch.breaker_state(), "open");
+    }
+
+    #[test]
+    fn deadline_default_methods_short_circuit() {
+        let ch = local();
+        ch.put("k", b"v").unwrap();
+        assert!(matches!(
+            ch.get_deadline("k", Deadline::in_ms(0)),
+            Err(Error::Timeout(_))
+        ));
+        assert!(matches!(
+            ch.put_deadline("k", b"v", Deadline::in_ms(0)),
+            Err(Error::Timeout(_))
+        ));
+        assert_eq!(
+            ch.get_deadline("k", Deadline::none()).unwrap().data.unwrap(),
+            b"v"
+        );
     }
 
     #[test]

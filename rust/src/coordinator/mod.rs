@@ -10,6 +10,7 @@ mod lifecycle;
 mod ops;
 mod recovery;
 mod reports;
+mod scrub;
 
 pub use lifecycle::RebalanceOpts;
 pub use ops::{OpContext, PullOpts, PushOpts};
@@ -18,6 +19,7 @@ pub use reports::{
     ChunkIoReport, DecommissionReport, PullReport, PushReport, RangeReport, RebalanceReport,
     RepairReport,
 };
+pub use scrub::{ScrubReport, ScrubberHandle, DEFAULT_SCRUB_INTERVAL, DEFAULT_SCRUB_SAMPLE};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -99,6 +101,24 @@ pub struct Metrics {
     pub decommissions: AtomicU64,
     /// Rebalance runs completed.
     pub rebalances: AtomicU64,
+    /// Internal hedge/retry waves beyond the first attempt (erasure
+    /// pulls falling back to parity count one per extra wave).
+    pub retries: AtomicU64,
+    /// Requests load-shed with 503 (circuit breaker open / no capacity).
+    pub sheds: AtomicU64,
+    /// Requests that ran out of deadline budget (504).
+    pub deadline_timeouts: AtomicU64,
+    /// Anti-entropy scrub cycles completed.
+    pub scrub_cycles: AtomicU64,
+    /// Chunks fetched and verified by the scrubber.
+    pub scrub_chunks_verified: AtomicU64,
+    /// Chunks the scrubber found damaged/missing and rewrote.
+    pub scrub_chunks_healed: AtomicU64,
+    /// Damaged/missing chunks the scrubber detected (healed or not).
+    pub scrub_corrupt_found: AtomicU64,
+    /// Objects the scrubber could not reconstruct (fewer than k valid
+    /// chunks reachable — data loss until containers return).
+    pub scrub_lost: AtomicU64,
 }
 
 impl Metrics {
@@ -115,6 +135,17 @@ impl Metrics {
         m.insert("chunks_migrated", self.chunks_migrated.load(Ordering::Relaxed));
         m.insert("decommissions", self.decommissions.load(Ordering::Relaxed));
         m.insert("rebalances", self.rebalances.load(Ordering::Relaxed));
+        m.insert("retries", self.retries.load(Ordering::Relaxed));
+        m.insert("sheds", self.sheds.load(Ordering::Relaxed));
+        m.insert("deadline_timeouts", self.deadline_timeouts.load(Ordering::Relaxed));
+        m.insert("scrub_cycles", self.scrub_cycles.load(Ordering::Relaxed));
+        m.insert(
+            "scrub_chunks_verified",
+            self.scrub_chunks_verified.load(Ordering::Relaxed),
+        );
+        m.insert("scrub_chunks_healed", self.scrub_chunks_healed.load(Ordering::Relaxed));
+        m.insert("scrub_corrupt_found", self.scrub_corrupt_found.load(Ordering::Relaxed));
+        m.insert("scrub_lost", self.scrub_lost.load(Ordering::Relaxed));
         m
     }
 }
@@ -138,6 +169,9 @@ pub struct DynoStore {
     pub(crate) io_pool: ThreadPool,
     /// What recovery found at build time (None = in-memory deployment).
     recovery: Option<RecoveryReport>,
+    /// Where the anti-entropy scrubber's paced sweep resumes: the UUID
+    /// of the last object verified (None = start of the keyspace).
+    pub(crate) scrub_cursor: Mutex<Option<String>>,
 }
 
 /// Builder for a DynoStore deployment.
@@ -293,6 +327,7 @@ impl Builder {
                 backend,
                 io_pool: ThreadPool::new(io_workers),
                 recovery,
+                scrub_cursor: Mutex::new(None),
             },
             report,
         ))

@@ -19,6 +19,7 @@ use crate::erasure::{Chunk, ErasureConfig};
 use crate::metadata::{ObjectMeta, ObjectPage, ObjectPlacement, Permission};
 use crate::paxos::{CommandOutcome, MetaCommand};
 use crate::policy::{select_dynamic, ResiliencePolicy};
+use crate::resilience::Deadline;
 use crate::sim::{cost, Site};
 use crate::util::{now_ns, to_hex, unix_secs};
 use crate::{Error, Result};
@@ -48,21 +49,31 @@ const GATEWAY_CODING_BW: f64 = 1.2e9;
 pub struct OpContext {
     pub client_site: Site,
     pub flows: u32,
+    /// Per-request time budget (`x-dyno-deadline-ms` at the gateway,
+    /// `--deadline-ms` at the CLI). Checked before every expensive
+    /// stage and clamped onto every transport wait; expired budgets
+    /// short-circuit with [`Error::Timeout`] (HTTP 504).
+    pub deadline: Deadline,
 }
 
 impl Default for OpContext {
     fn default() -> Self {
-        OpContext { client_site: Site::Madrid, flows: 1 }
+        OpContext { client_site: Site::Madrid, flows: 1, deadline: Deadline::none() }
     }
 }
 
 impl OpContext {
     pub fn at(site: Site) -> Self {
-        OpContext { client_site: site, flows: 1 }
+        OpContext { client_site: site, ..Default::default() }
     }
 
     pub fn with_flows(mut self, flows: u32) -> Self {
         self.flows = flows.max(1);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Deadline) -> Self {
+        self.deadline = deadline;
         self
     }
 }
@@ -124,7 +135,21 @@ impl DynoStore {
     /// channel op, and gather the outcomes in dispatch order. Individual
     /// transfer failures come back inside each [`ChunkXfer`]; only a
     /// pool-level fault (a panicked worker job) fails the whole batch.
+    /// Maintenance planes (repair, scrub, lifecycle) dispatch with no
+    /// deadline; request paths thread the caller's budget through.
     pub(super) fn dispatch_chunk_io(&self, jobs: Vec<ChunkJob>) -> Result<Vec<ChunkXfer>> {
+        self.dispatch_chunk_io_deadline(jobs, Deadline::none())
+    }
+
+    /// [`DynoStore::dispatch_chunk_io`] under a request deadline: an
+    /// expired budget fails the batch up front, and every channel op
+    /// clamps its transport wait to the remaining budget.
+    pub(super) fn dispatch_chunk_io_deadline(
+        &self,
+        jobs: Vec<ChunkJob>,
+        deadline: Deadline,
+    ) -> Result<Vec<ChunkXfer>> {
+        deadline.check("chunk dispatch")?;
         let labels: Vec<(u8, u32, &'static str, Site, usize)> = jobs
             .iter()
             .map(|j| {
@@ -143,8 +168,10 @@ impl DynoStore {
             let job = &jobs[i];
             let t0 = now_ns();
             let res = match &job.data {
-                Some(bytes) => job.channel.put(&job.key, bytes).map(|o| (None, o.sim_s)),
-                None => job.channel.get(&job.key).map(|o| (o.data, o.sim_s)),
+                Some(bytes) => {
+                    job.channel.put_deadline(&job.key, bytes, deadline).map(|o| (None, o.sim_s))
+                }
+                None => job.channel.get_deadline(&job.key, deadline).map(|o| (o.data, o.sim_s)),
             };
             ((now_ns() - t0) as f64 / 1e9, res)
         })?;
@@ -235,6 +262,7 @@ impl DynoStore {
         }
         let policy = opts.policy.unwrap_or(self.default_policy);
         let ctx = opts.ctx;
+        ctx.deadline.check("push")?;
         let hash = sha3_256(data);
         let len = data.len() as u64;
 
@@ -258,7 +286,7 @@ impl DynoStore {
                     let channel = self.registry.get(target.id)?;
                     let key = object_key(&hash, len);
                     let t0 = now_ns();
-                    let dev_s = channel.put(&key, data)?.sim_s;
+                    let dev_s = channel.put_deadline(&key, data, ctx.deadline)?.sim_s;
                     let wall_s = (now_ns() - t0) as f64 / 1e9;
                     let net_s =
                         self.wan.transfer_s(self.gateway_site, channel.site(), len, 1);
@@ -279,12 +307,14 @@ impl DynoStore {
                         chunk_io,
                     )
                 }
-                ResiliencePolicy::Fixed(cfg) => self.disperse(data, &hash, cfg, None)?,
+                ResiliencePolicy::Fixed(cfg) => {
+                    self.disperse(data, &hash, cfg, None, ctx.deadline)?
+                }
                 ResiliencePolicy::Dynamic { k, target_loss } => {
                     let chunk_size = (len / k as u64).max(1);
                     let infos = self.registry.placement_infos();
                     let choice = select_dynamic(&infos, chunk_size, k, target_loss)?;
-                    self.disperse(data, &hash, choice.config, Some(choice.containers))?
+                    self.disperse(data, &hash, choice.config, Some(choice.containers), ctx.deadline)?
                 }
             };
 
@@ -363,6 +393,7 @@ impl DynoStore {
         hash: &[u8; 32],
         cfg: ErasureConfig,
         pinned: Option<Vec<u32>>,
+        deadline: Deadline,
     ) -> Result<(ObjectPlacement, f64, f64, f64, u64, Vec<ChunkIoReport>)> {
         let len = data.len() as u64;
         let codec = self.codec(cfg)?;
@@ -414,7 +445,7 @@ impl DynoStore {
         let mut stored = 0u64;
         let mut placed = Vec::with_capacity(cfg.n);
         let mut chunk_io = Vec::with_capacity(cfg.n);
-        for xfer in self.dispatch_chunk_io(jobs)? {
+        for xfer in self.dispatch_chunk_io_deadline(jobs, deadline)? {
             let (_, dev_s) = xfer.res?;
             let net_s = self.wan.transfer_s(
                 self.gateway_site,
@@ -458,6 +489,7 @@ impl DynoStore {
             e
         })?;
         let ctx = opts.ctx;
+        ctx.deadline.check("pull")?;
         let meta = match opts.version {
             None => self
                 .meta
@@ -486,7 +518,7 @@ impl DynoStore {
                         let fetched = match self.registry.get(cid) {
                             Ok(channel) => {
                                 let t0 = now_ns();
-                                let res = channel.get(&key);
+                                let res = channel.get_deadline(&key, ctx.deadline);
                                 let wall_s = (now_ns() - t0) as f64 / 1e9;
                                 let got = match res {
                                     Ok(out) => {
@@ -559,7 +591,13 @@ impl DynoStore {
                     let mut collect_s = 0.0;
                     let mut degraded = false;
                     let mut cursor = 0usize;
+                    let mut waves = 0usize;
                     while collected.len() < *k {
+                        // A hedge wave only starts if there is budget
+                        // left to run it; an expired deadline surfaces
+                        // as Timeout, not as a stalled read.
+                        ctx.deadline.check("pull hedge wave")?;
+                        waves += 1;
                         // Next wave: as many untried chunks as still needed.
                         let mut jobs = Vec::new();
                         while jobs.len() < *k - collected.len() && cursor < ordered.len() {
@@ -604,7 +642,7 @@ impl DynoStore {
                             )));
                         }
                         let mut wave_times = Vec::with_capacity(jobs.len());
-                        for xfer in self.dispatch_chunk_io(jobs)? {
+                        for xfer in self.dispatch_chunk_io_deadline(jobs, ctx.deadline)? {
                             let fetched_s = match xfer.res {
                                 Ok((bytes, dev_s)) => {
                                     let bytes = bytes.unwrap_or_default();
@@ -646,6 +684,13 @@ impl DynoStore {
                         }
                         // Every hedge wave costs one more parallel round.
                         collect_s += cost::par(&wave_times);
+                    }
+                    // Waves past the first are internal retries against
+                    // parity; surface them so operators can see hedging.
+                    if waves > 1 {
+                        self.metrics
+                            .retries
+                            .fetch_add((waves - 1) as u64, std::sync::atomic::Ordering::Relaxed);
                     }
                     let t0 = now_ns();
                     let data = codec.decode(&collected)?; // verifies SHA3
@@ -697,6 +742,18 @@ impl DynoStore {
                 self.meta.read(|s| s.get_version(&claims.subject, collection, name, v))
             }
         }
+    }
+
+    /// Eviction generation of `(collection, name)` — the nonce-epoch
+    /// salt the next push of that name will carry. Valid (and 0) even
+    /// when the name has no live versions, which is exactly when an
+    /// encrypting client needs it (see `ObjectMeta::nonce_epoch`).
+    pub fn nonce_epoch(&self, token: &str, collection: &str, name: &str) -> Result<u64> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        self.meta.read(|s| s.nonce_epoch(&claims.subject, collection, name))
     }
 
     /// Paginated object listing of a collection (the `/v1/collections`
@@ -783,6 +840,7 @@ impl DynoStore {
         opts: PullOpts,
     ) -> Result<RangeReport> {
         let meta = self.stat(token, collection, name, opts.version)?;
+        opts.ctx.deadline.check("pull_range")?;
         if start > end {
             return Err(Error::Invalid(format!("bad range {start}-{end}")));
         }
@@ -883,7 +941,7 @@ impl DynoStore {
         let mut chunk_io = Vec::with_capacity(fetchers);
         let mut times = Vec::with_capacity(fetchers);
         let mut ok = true;
-        for xfer in self.dispatch_chunk_io(jobs)? {
+        for xfer in self.dispatch_chunk_io_deadline(jobs, opts.ctx.deadline)? {
             let valid = match &xfer.res {
                 Ok((Some(bytes), dev_s)) => match Chunk::unpack(bytes) {
                     Ok(chunk)

@@ -1,0 +1,558 @@
+//! Background anti-entropy scrubbing (§III-B health service, extended).
+//!
+//! [`DynoStore::repair`] reacts to *dead containers*: it early-exits any
+//! object whose holders are all live, so bytes silently rotting on a
+//! healthy container — at-rest corruption, a chunk file lost by the
+//! backend — stay invisible until a read trips over them. The scrubber
+//! closes that gap: a paced sweep that **fetches and verifies every
+//! placed chunk** (unpack with its sealed payload hash + header index
+//! + object-hash binding — a single flipped payload byte fails), heals
+//! damaged or vanished copies from parity, and re-places chunks whose
+//! holders are unreachable — restoring full n-chunk redundancy without
+//! operator intervention once a fault window closes.
+//!
+//! Pacing: each [`DynoStore::scrub_cycle`] verifies at most `sample`
+//! objects, resuming from a persistent cursor (last verified UUID), so
+//! a deployment with millions of objects amortizes the sweep instead of
+//! stalling its data path. [`ScrubberHandle`] runs cycles on a
+//! background thread at a fixed interval until stopped.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::erasure::{Chunk, ErasureConfig};
+use crate::metadata::{ObjectMeta, ObjectPlacement};
+use crate::paxos::{CommandOutcome, MetaCommand};
+use crate::crypto::sha3_256;
+use crate::Result;
+
+use super::ops::{chunk_key, object_key, ChunkJob};
+use super::DynoStore;
+
+/// Objects verified per scrub cycle when the operator doesn't say.
+pub const DEFAULT_SCRUB_SAMPLE: usize = 64;
+
+/// How long the background scrubber sleeps between cycles by default.
+pub const DEFAULT_SCRUB_INTERVAL: Duration = Duration::from_secs(30);
+
+/// Outcome of one [`DynoStore::scrub_cycle`].
+#[derive(Debug, Default, Clone)]
+pub struct ScrubReport {
+    /// Object versions examined this cycle.
+    pub scanned: usize,
+    /// Chunks (or single copies) fetched and verified intact.
+    pub chunks_verified: usize,
+    /// Placed copies found damaged or missing on a *live* holder —
+    /// silent corruption the read path would only meet by accident.
+    pub corrupt_found: usize,
+    /// Placed copies whose holder was dead or unregistered; the slot
+    /// needs re-placement to restore redundancy.
+    pub unreachable: usize,
+    /// Copies rewritten with correct bytes (healed in place on the
+    /// committed holder, or re-placed onto a healthy container).
+    pub chunks_healed: usize,
+    /// Objects with fewer than k valid chunks reachable: unrecoverable
+    /// until their containers return.
+    pub lost: usize,
+    /// The sweep reached the end of the keyspace and the cursor reset —
+    /// every object has been visited since the last wrap.
+    pub wrapped: bool,
+}
+
+impl DynoStore {
+    /// One paced anti-entropy sweep: verify up to `sample` objects
+    /// (0 = the whole keyspace), resuming after the cursor left by the
+    /// previous cycle. See the module docs for what "verify" means.
+    pub fn scrub_cycle(&self, sample: usize) -> Result<ScrubReport> {
+        let mut report = ScrubReport::default();
+        let objects = self.meta.read(|s| Ok(s.all_objects()))?;
+        if objects.is_empty() {
+            report.wrapped = true;
+            self.metrics.scrub_cycles.fetch_add(1, Ordering::Relaxed);
+            return Ok(report);
+        }
+        // all_objects() is UUID-sorted, so "after the cursor" is a
+        // stable resume point even as pushes interleave with cycles.
+        let cursor = self.scrub_cursor.lock().unwrap().clone();
+        let start = match &cursor {
+            Some(uuid) => objects.iter().position(|m| m.uuid > *uuid).unwrap_or(0),
+            None => 0,
+        };
+        let budget = if sample == 0 { objects.len() } else { sample.min(objects.len()) };
+        let picked: Vec<&ObjectMeta> =
+            objects.iter().cycle().skip(start).take(budget).collect();
+        report.wrapped = cursor.is_some() && start == 0 || start + budget >= objects.len();
+
+        for meta in &picked {
+            self.scrub_object(meta, &mut report)?;
+        }
+
+        *self.scrub_cursor.lock().unwrap() = if report.wrapped && budget == objects.len() {
+            None
+        } else {
+            picked.last().map(|m| m.uuid.clone())
+        };
+        self.metrics.scrub_cycles.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .scrub_chunks_verified
+            .fetch_add(report.chunks_verified as u64, Ordering::Relaxed);
+        self.metrics
+            .scrub_corrupt_found
+            .fetch_add(report.corrupt_found as u64, Ordering::Relaxed);
+        self.metrics
+            .scrub_chunks_healed
+            .fetch_add(report.chunks_healed as u64, Ordering::Relaxed);
+        self.metrics.scrub_lost.fetch_add(report.lost as u64, Ordering::Relaxed);
+        Ok(report)
+    }
+
+    fn scrub_object(&self, meta: &ObjectMeta, report: &mut ScrubReport) -> Result<()> {
+        report.scanned += 1;
+        let (n, k, chunks) = match &meta.placement {
+            ObjectPlacement::Single { container } => {
+                // One copy, no parity: verify when the holder is up;
+                // a damaged single copy is unrecoverable.
+                let Ok(channel) = self.registry.get(*container) else {
+                    report.unreachable += 1;
+                    return Ok(());
+                };
+                if !channel.is_alive() {
+                    report.unreachable += 1;
+                    return Ok(());
+                }
+                let key = object_key(&meta.sha3, meta.size);
+                match channel.get(&key) {
+                    Ok(out) if sha3_256(&out.data.unwrap_or_default()) == meta.sha3 => {
+                        report.chunks_verified += 1;
+                    }
+                    _ => {
+                        report.corrupt_found += 1;
+                        report.lost += 1;
+                    }
+                }
+                return Ok(());
+            }
+            ObjectPlacement::Erasure { n, k, chunks } => (*n, *k, chunks.clone()),
+        };
+
+        // Fetch every placed chunk from every live holder concurrently.
+        // Skips (dead/unregistered holders) need re-placement, exactly
+        // like repair treats them.
+        let mut jobs = Vec::with_capacity(chunks.len());
+        let mut unreachable: Vec<(u8, u32)> = Vec::new();
+        for &(idx, cid) in &chunks {
+            match self.registry.get(cid) {
+                Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
+                    index: idx,
+                    channel,
+                    key: chunk_key(&meta.sha3, meta.size, idx),
+                    data: None,
+                }),
+                _ => unreachable.push((idx, cid)),
+            }
+        }
+        let mut valid: Vec<(u8, u32)> = Vec::new();
+        let mut collected: Vec<Chunk> = Vec::new();
+        let mut damaged: Vec<(u8, u32)> = Vec::new();
+        for xfer in self.dispatch_chunk_io(jobs)? {
+            let good = match &xfer.res {
+                Ok((Some(bytes), _)) => match Chunk::unpack(bytes) {
+                    Ok(chunk)
+                        if chunk.header.index == xfer.index
+                            && chunk.header.object_hash == meta.sha3 =>
+                    {
+                        collected.push(chunk);
+                        true
+                    }
+                    _ => false,
+                },
+                _ => false,
+            };
+            if good {
+                valid.push((xfer.index, xfer.cid));
+            } else {
+                damaged.push((xfer.index, xfer.cid));
+            }
+        }
+        report.chunks_verified += valid.len();
+        report.corrupt_found += damaged.len();
+        report.unreachable += unreachable.len();
+
+        let placed_idx: HashSet<u8> = valid.iter().map(|&(i, _)| i).collect();
+        if damaged.is_empty() && unreachable.is_empty() && placed_idx.len() == n {
+            return Ok(()); // fully redundant and intact
+        }
+        if collected.len() < k {
+            report.lost += 1;
+            return Ok(());
+        }
+
+        // Rebuild the object once; heal every gap from the same encode.
+        let codec = self.codec(ErasureConfig::new(n, k))?;
+        collected.truncate(k);
+        let data = codec.decode(&collected)?;
+        let mut all_chunks = codec.encode(&data)?;
+        let mut new_placement = valid.clone();
+
+        // Heal damaged copies in place on their committed (live) holder.
+        let mut heal_jobs = Vec::with_capacity(damaged.len());
+        for &(idx, cid) in &damaged {
+            if let Ok(channel) = self.registry.get(cid) {
+                heal_jobs.push(ChunkJob {
+                    index: idx,
+                    channel,
+                    key: chunk_key(&meta.sha3, meta.size, idx),
+                    data: Some(std::mem::take(&mut all_chunks[idx as usize].packed)),
+                });
+            }
+        }
+        for xfer in self.dispatch_chunk_io(heal_jobs)? {
+            if xfer.res.is_ok() {
+                new_placement.push((xfer.index, xfer.cid));
+                report.chunks_healed += 1;
+            }
+            // A failed rewrite drops the slot: it re-places below.
+        }
+
+        // Re-place slots with no live valid copy (unreachable holders,
+        // failed in-place heals, slots absent from the placement).
+        let have: HashSet<u8> = new_placement.iter().map(|&(i, _)| i).collect();
+        let missing: Vec<u8> = (0..n as u8).filter(|i| !have.contains(i)).collect();
+        let mut newly_placed: Vec<(u8, u32)> = Vec::new();
+        if !missing.is_empty() {
+            let holders: HashSet<u32> = new_placement.iter().map(|&(_, c)| c).collect();
+            let infos: Vec<_> = self
+                .registry
+                .placement_infos()
+                .into_iter()
+                .filter(|i| i.alive && !holders.contains(&i.id))
+                .collect();
+            let chunk_size = codec.chunk_len(data.len()) as u64;
+            if let Ok(targets) = self.placer.select(&infos, chunk_size, missing.len()) {
+                let mut jobs = Vec::with_capacity(missing.len());
+                for (idx, target) in missing.iter().zip(&targets) {
+                    let channel = self.registry.get(target.id)?;
+                    // A damaged slot's bytes may already be consumed by
+                    // the in-place heal attempt; re-encode cheaply from
+                    // the still-held chunk if so.
+                    let packed = std::mem::take(&mut all_chunks[*idx as usize].packed);
+                    let packed = if packed.is_empty() {
+                        codec.encode(&data)?[*idx as usize].packed.clone()
+                    } else {
+                        packed
+                    };
+                    jobs.push(ChunkJob {
+                        index: *idx,
+                        channel,
+                        key: chunk_key(&meta.sha3, meta.size, *idx),
+                        data: Some(packed),
+                    });
+                }
+                for xfer in self.dispatch_chunk_io(jobs)? {
+                    if xfer.res.is_ok() {
+                        new_placement.push((xfer.index, xfer.cid));
+                        newly_placed.push((xfer.index, xfer.cid));
+                        report.chunks_healed += 1;
+                    }
+                }
+            }
+            // No capacity for replacements: commit what was healed in
+            // place anyway — partial redundancy beats none.
+        }
+
+        new_placement.sort_by_key(|&(idx, _)| idx);
+        let old_sorted = {
+            let mut c = chunks.clone();
+            c.sort_by_key(|&(idx, _)| idx);
+            c
+        };
+        if new_placement == old_sorted {
+            return Ok(()); // healed entirely in place; placement stands
+        }
+        // CAS against the placement this sweep read — a concurrent
+        // migration/repair commit wins and this object is re-verified
+        // on a later cycle (same protocol as repair).
+        let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+            uuid: meta.uuid.clone(),
+            placement: ObjectPlacement::Erasure { n, k, chunks: new_placement },
+            expect: Some(meta.placement.clone()),
+        })?;
+        if let CommandOutcome::Failed(_) = outcome {
+            let committed =
+                self.meta.read(|s| s.get_by_uuid(&meta.uuid)).map(|m| m.placement).ok();
+            for &(idx, cid) in &newly_placed {
+                let referenced = matches!(
+                    &committed,
+                    Some(ObjectPlacement::Erasure { chunks, .. })
+                        if chunks.contains(&(idx, cid))
+                );
+                if !referenced {
+                    if let Ok(c) = self.registry.get(cid) {
+                        let _ = c.delete(&chunk_key(&meta.sha3, meta.size, idx));
+                    }
+                }
+            }
+            report.chunks_healed -= newly_placed.len();
+        }
+        Ok(())
+    }
+}
+
+/// A background scrubber: runs [`DynoStore::scrub_cycle`] every
+/// `interval` until stopped (or dropped). The thread holds an `Arc` to
+/// the deployment, so the handle can outlive the scope that started it.
+pub struct ScrubberHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ScrubberHandle {
+    pub fn start(ds: Arc<DynoStore>, interval: Duration, sample: usize) -> ScrubberHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("dyno-scrubber".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    // Scrub errors are transient (metadata contention,
+                    // transports down); the next cycle retries.
+                    let _ = ds.scrub_cycle(sample);
+                    // Sleep in short slices so stop() returns promptly.
+                    let mut slept = Duration::ZERO;
+                    while slept < interval && !flag.load(Ordering::Relaxed) {
+                        let step = Duration::from_millis(25).min(interval - slept);
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                }
+            })
+            .expect("spawn scrubber thread");
+        ScrubberHandle { stop, thread: Some(thread) }
+    }
+
+    /// Signal the thread and wait for the in-flight cycle to finish.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ScrubberHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PullOpts, PushOpts};
+    use super::*;
+    use crate::container::{deploy_containers, AgentSpec};
+    use crate::sim::{DeviceKind, Site};
+
+    fn deployment(n_containers: usize) -> (Arc<DynoStore>, String) {
+        let ds = DynoStore::builder().build();
+        let sites = [Site::ChameleonTacc, Site::ChameleonUc, Site::AwsVirginia];
+        let specs: Vec<AgentSpec> = (0..n_containers)
+            .map(|i| {
+                AgentSpec::new(
+                    format!("dc{i}"),
+                    sites[i % sites.len()],
+                    DeviceKind::ChameleonLocal,
+                )
+                .mem(64 << 20)
+                .fs(1 << 32)
+            })
+            .collect();
+        for c in deploy_containers(&specs, n_containers, 0).containers {
+            ds.add_container(c).unwrap();
+        }
+        let token = ds.register_user("UserA").unwrap();
+        (Arc::new(ds), token)
+    }
+
+    fn data(len: usize, seed: u64) -> Vec<u8> {
+        crate::util::Rng::new(seed).bytes(len)
+    }
+
+    fn chunk_locations(ds: &DynoStore, name: &str) -> (ObjectMeta, Vec<(u8, u32)>) {
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", name)).unwrap();
+        let chunks = match &meta.placement {
+            ObjectPlacement::Erasure { chunks, .. } => chunks.clone(),
+            _ => unreachable!(),
+        };
+        (meta, chunks)
+    }
+
+    #[test]
+    fn clean_deployment_scrubs_clean() {
+        let (ds, token) = deployment(12);
+        ds.push(&token, "/UserA", "a", &data(50_000, 1), PushOpts::default()).unwrap();
+        ds.push(&token, "/UserA", "b", &data(50_000, 2), PushOpts::default()).unwrap();
+        let report = ds.scrub_cycle(0).unwrap();
+        assert_eq!(report.scanned, 2);
+        assert_eq!(report.chunks_verified, 20);
+        assert_eq!(report.corrupt_found, 0);
+        assert_eq!(report.chunks_healed, 0);
+        assert_eq!(report.lost, 0);
+        assert!(report.wrapped);
+        assert_eq!(ds.metrics.snapshot()["scrub_cycles"], 1);
+        assert_eq!(ds.metrics.snapshot()["scrub_chunks_verified"], 20);
+    }
+
+    #[test]
+    fn scrub_heals_silent_at_rest_corruption_repair_misses() {
+        let (ds, token) = deployment(12);
+        let object = data(80_000, 3);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let (meta, chunks) = chunk_locations(&ds, "obj");
+        // Rot two chunks in place. Every holder stays alive, so a
+        // repair pass early-exits without noticing.
+        for &(idx, cid) in chunks.iter().take(2) {
+            ds.container_of(cid)
+                .unwrap()
+                .put(&chunk_key(&meta.sha3, meta.size, idx), b"bitrot")
+                .unwrap();
+        }
+        let repair = ds.repair().unwrap();
+        assert_eq!(repair.repaired, 0, "repair is blind to at-rest rot on live holders");
+
+        let report = ds.scrub_cycle(0).unwrap();
+        assert_eq!(report.corrupt_found, 2);
+        assert_eq!(report.chunks_healed, 2);
+        assert_eq!(report.lost, 0);
+
+        // Healed in place: same placement, clean un-degraded read.
+        let (meta2, chunks2) = chunk_locations(&ds, "obj");
+        assert_eq!(meta2.placement, meta.placement);
+        let mut sorted = chunks2;
+        sorted.sort_by_key(|&(i, _)| i);
+        assert_eq!(sorted.len(), 10);
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+        assert!(!pull.degraded);
+
+        // And the next sweep finds nothing to do.
+        let again = ds.scrub_cycle(0).unwrap();
+        assert_eq!(again.corrupt_found, 0);
+        assert_eq!(again.chunks_healed, 0);
+    }
+
+    #[test]
+    fn scrub_replaces_chunks_on_dead_holders() {
+        let (ds, token) = deployment(13);
+        let object = data(60_000, 4);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let (_, chunks) = chunk_locations(&ds, "obj");
+        // Kill two holders; their chunks must move to fresh containers.
+        let dead: Vec<u32> = chunks.iter().take(2).map(|&(_, c)| c).collect();
+        for &cid in &dead {
+            ds.container_of(cid).unwrap().set_alive(false);
+        }
+        let report = ds.scrub_cycle(0).unwrap();
+        assert_eq!(report.unreachable, 2);
+        assert_eq!(report.chunks_healed, 2);
+        let (_, after) = chunk_locations(&ds, "obj");
+        assert_eq!(after.len(), 10, "full redundancy restored");
+        assert!(after.iter().all(|&(_, c)| !dead.contains(&c)));
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+    }
+
+    #[test]
+    fn scrub_reports_unrecoverable_objects_lost() {
+        let (ds, token) = deployment(12);
+        ds.push(&token, "/UserA", "obj", &data(30_000, 5), PushOpts::default()).unwrap();
+        let (meta, chunks) = chunk_locations(&ds, "obj");
+        // Corrupt 4 of 10 chunks: 6 < k=7 valid remain.
+        for &(idx, cid) in chunks.iter().take(4) {
+            ds.container_of(cid)
+                .unwrap()
+                .put(&chunk_key(&meta.sha3, meta.size, idx), b"gone")
+                .unwrap();
+        }
+        let report = ds.scrub_cycle(0).unwrap();
+        assert_eq!(report.lost, 1);
+        assert_eq!(report.chunks_healed, 0);
+        assert_eq!(ds.metrics.snapshot()["scrub_lost"], 1);
+    }
+
+    #[test]
+    fn paced_cycles_cover_the_keyspace_and_wrap() {
+        let (ds, token) = deployment(12);
+        for i in 0..5 {
+            ds.push(&token, "/UserA", &format!("o{i}"), &data(9_000, i), PushOpts::default())
+                .unwrap();
+        }
+        let mut scanned = 0;
+        let mut wrapped = false;
+        for _ in 0..3 {
+            let r = ds.scrub_cycle(2).unwrap();
+            scanned += r.scanned;
+            wrapped |= r.wrapped;
+        }
+        assert_eq!(scanned, 6, "three cycles of two objects each");
+        assert!(wrapped, "five objects in cycles of two wraps within three cycles");
+        assert_eq!(ds.metrics.snapshot()["scrub_cycles"], 3);
+    }
+
+    #[test]
+    fn background_scrubber_heals_without_intervention() {
+        let (ds, token) = deployment(12);
+        let object = data(40_000, 6);
+        ds.push(&token, "/UserA", "obj", &object, PushOpts::default()).unwrap();
+        let (meta, chunks) = chunk_locations(&ds, "obj");
+        let (idx, cid) = chunks[0];
+        ds.container_of(cid)
+            .unwrap()
+            .put(&chunk_key(&meta.sha3, meta.size, idx), b"rot")
+            .unwrap();
+
+        let handle =
+            ScrubberHandle::start(ds.clone(), Duration::from_millis(5), 0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while ds.metrics.snapshot()["scrub_chunks_healed"] == 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        handle.stop();
+        assert!(ds.metrics.snapshot()["scrub_chunks_healed"] >= 1);
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, object);
+        assert!(!pull.degraded);
+    }
+
+    #[test]
+    fn single_placement_corruption_is_detected() {
+        let (ds, token) = deployment(3);
+        let object = data(10_000, 7);
+        ds.push(
+            &token,
+            "/UserA",
+            "single",
+            &object,
+            PushOpts { policy: Some(crate::policy::ResiliencePolicy::Regular), ..Default::default() },
+        )
+        .unwrap();
+        let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", "single")).unwrap();
+        let cid = match &meta.placement {
+            ObjectPlacement::Single { container } => *container,
+            _ => unreachable!(),
+        };
+        ds.container_of(cid)
+            .unwrap()
+            .put(&object_key(&meta.sha3, meta.size), b"smashed")
+            .unwrap();
+        let report = ds.scrub_cycle(0).unwrap();
+        assert_eq!(report.corrupt_found, 1);
+        assert_eq!(report.lost, 1, "a single copy has no parity to heal from");
+    }
+}

@@ -1,14 +1,19 @@
 //! Chunk packaging: Algorithm 1 line 9, `p = PACK(h_o, C[i])` — every
 //! chunk carries the SHA3-256 hash of the *original object* so decode can
-//! verify integrity end to end (Algorithm 2 lines 6-9).
+//! verify integrity end to end (Algorithm 2 lines 6-9), plus a
+//! per-chunk payload hash so a single rotten chunk is rejected at
+//! [`Chunk::unpack`] — the read path hedges to parity and the scrubber
+//! heals the damaged copy, instead of the corruption surviving all the
+//! way to decode and failing the whole reconstruction.
 
+use crate::crypto::sha3_256;
 use crate::{Error, Result};
 
 /// Fixed binary header prepended to every chunk payload.
 ///
-/// Layout (little-endian, 56 bytes):
+/// Layout (little-endian, 88 bytes):
 /// `magic[4] "DYNC" | version u8 | n u8 | k u8 | index u8 |
-///  object_len u64 | chunk_len u64 | object_hash [32]`
+///  object_len u64 | chunk_len u64 | object_hash [32] | chunk_hash [32]`
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ChunkHeader {
     pub n: u8,
@@ -21,11 +26,15 @@ pub struct ChunkHeader {
     pub chunk_len: u64,
     /// SHA3-256 of the original object.
     pub object_hash: [u8; 32],
+    /// SHA3-256 of *this chunk's* coded payload, written by
+    /// [`Chunk::seal`] once the payload is final. Verified on unpack:
+    /// localizes bitrot to the one damaged chunk.
+    pub chunk_hash: [u8; 32],
 }
 
-pub const CHUNK_HEADER_LEN: usize = 56;
+pub const CHUNK_HEADER_LEN: usize = 88;
 const MAGIC: &[u8; 4] = b"DYNC";
-const VERSION: u8 = 1;
+const VERSION: u8 = 2;
 
 impl ChunkHeader {
     pub fn encode(&self) -> [u8; CHUNK_HEADER_LEN] {
@@ -38,6 +47,7 @@ impl ChunkHeader {
         out[8..16].copy_from_slice(&self.object_len.to_le_bytes());
         out[16..24].copy_from_slice(&self.chunk_len.to_le_bytes());
         out[24..56].copy_from_slice(&self.object_hash);
+        out[56..88].copy_from_slice(&self.chunk_hash);
         out
     }
 
@@ -53,6 +63,8 @@ impl ChunkHeader {
         }
         let mut hash = [0u8; 32];
         hash.copy_from_slice(&buf[24..56]);
+        let mut chunk_hash = [0u8; 32];
+        chunk_hash.copy_from_slice(&buf[56..88]);
         Ok(ChunkHeader {
             n: buf[5],
             k: buf[6],
@@ -60,6 +72,7 @@ impl ChunkHeader {
             object_len: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
             chunk_len: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
             object_hash: hash,
+            chunk_hash,
         })
     }
 }
@@ -78,6 +91,7 @@ impl Chunk {
         debug_assert_eq!(header.chunk_len as usize, payload.len());
         let mut chunk = Chunk::new_zeroed(header);
         chunk.payload_mut().copy_from_slice(payload);
+        chunk.seal();
         chunk
     }
 
@@ -92,8 +106,17 @@ impl Chunk {
         Chunk { header, packed }
     }
 
+    /// Stamp the payload hash into the header (struct and wire bytes).
+    /// Must run after the payload is final — the encoder writes coded
+    /// bytes in place, so sealing is a separate last step.
+    pub fn seal(&mut self) {
+        self.header.chunk_hash = sha3_256(self.payload());
+        self.packed[..CHUNK_HEADER_LEN].copy_from_slice(&self.header.encode());
+    }
+
     /// Parse wire bytes back into a chunk; validates header/payload
-    /// length consistency.
+    /// length consistency and the sealed payload hash, so at-rest or
+    /// on-the-wire bitrot is caught here — per chunk, not at decode.
     pub fn unpack(bytes: &[u8]) -> Result<Chunk> {
         let header = ChunkHeader::decode(bytes)?;
         let expect = CHUNK_HEADER_LEN + header.chunk_len as usize;
@@ -102,6 +125,12 @@ impl Chunk {
                 "chunk length mismatch: wire {} expect {}",
                 bytes.len(),
                 expect
+            )));
+        }
+        if sha3_256(&bytes[CHUNK_HEADER_LEN..]) != header.chunk_hash {
+            return Err(Error::Integrity(format!(
+                "chunk {} payload hash mismatch (bitrot)",
+                header.index
             )));
         }
         Ok(Chunk { header, packed: bytes.to_vec() })
@@ -135,6 +164,7 @@ mod tests {
             object_len: 123456,
             chunk_len: 4,
             object_hash: [0xAB; 32],
+            chunk_hash: [0; 32],
         }
     }
 
@@ -146,12 +176,13 @@ mod tests {
     }
 
     #[test]
-    fn new_zeroed_then_fill_equals_pack() {
+    fn new_zeroed_then_fill_and_seal_equals_pack() {
         let mut h = header();
         h.chunk_len = 4;
         let mut z = Chunk::new_zeroed(h.clone());
         assert_eq!(z.payload(), &[0, 0, 0, 0]);
         z.payload_mut().copy_from_slice(&[1, 2, 3, 4]);
+        z.seal();
         assert_eq!(z, Chunk::pack(h, &[1, 2, 3, 4]));
     }
 
@@ -176,6 +207,20 @@ mod tests {
         let mut enc = header().encode().to_vec();
         enc[4] = 99;
         assert!(ChunkHeader::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_payload_bitrot() {
+        let c = Chunk::pack(header(), &[1, 2, 3, 4]);
+        let mut rotten = c.packed.clone();
+        let last = rotten.len() - 1;
+        rotten[last] ^= 0xA5;
+        match Chunk::unpack(&rotten) {
+            Err(Error::Integrity(_)) => {}
+            other => panic!("expected Integrity error, got {other:?}"),
+        }
+        // The pristine bytes still unpack.
+        assert_eq!(Chunk::unpack(&c.packed).unwrap(), c);
     }
 
     #[test]

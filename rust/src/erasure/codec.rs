@@ -152,6 +152,7 @@ impl<B: GfBackend> Codec<B> {
                     object_len: object.len() as u64,
                     chunk_len: chunk_len as u64,
                     object_hash: hash,
+                    chunk_hash: [0; 32],
                 })
             })
             .collect();
@@ -174,6 +175,11 @@ impl<B: GfBackend> Codec<B> {
             let mut outs: Vec<&mut [u8]> =
                 par.iter_mut().map(|c| c.payload_mut()).collect();
             self.backend.matmul(&self.parity, &rows, &mut outs)?;
+        }
+        // Payloads are final: stamp each chunk's payload hash so
+        // unpack can localize bitrot to the one damaged chunk.
+        for chunk in &mut chunks {
+            chunk.seal();
         }
         Ok(chunks)
     }

@@ -18,8 +18,14 @@
 //! * `POST /admin/rebalance` body `{"threshold": .., "max_moves": ..}`
 //! * `POST /admin/decommission/<id>` → drain + remove a container
 //! * `POST /admin/undrain/<id>` → cancel a stopped drain
+//! * `POST /admin/scrub` body `{"sample": n}` → one anti-entropy sweep
 //! * `GET  /health` → liveness + container census + imbalance gauge +
+//!   per-container circuit-breaker states + retry/shed counters +
 //!   durability state (`wal_len`, `last_snapshot`, `recovered`)
+//!
+//! Resilience semantics: requests may carry `x-dyno-deadline-ms`; an
+//! exhausted budget answers `504` and an open circuit breaker / missing
+//! capacity answers `503`, both with `Retry-After`.
 //!
 //! Every `/admin/*` route requires a valid bearer token with the
 //! `admin` scope (401 without/with a bad token, 403 without the scope;
@@ -56,8 +62,25 @@ pub fn serve_with_limit(
     workers: usize,
     max_body: usize,
 ) -> Result<HttpServer> {
+    serve_with_limits(
+        store,
+        addr,
+        workers,
+        crate::net::ServerLimits { max_body, ..Default::default() },
+    )
+}
+
+/// [`serve`] with full transport limits: the request-body cap plus the
+/// per-connection socket timeout that shields the worker pool from
+/// slow/hung clients (`Config::conn_timeout_secs`).
+pub fn serve_with_limits(
+    store: Arc<DynoStore>,
+    addr: &str,
+    workers: usize,
+    limits: crate::net::ServerLimits,
+) -> Result<HttpServer> {
     let handler = move |req: HttpRequest| route(&store, req);
-    HttpServer::serve_with_limit(addr, workers, Arc::new(handler), max_body)
+    HttpServer::serve_with_limits(addr, workers, Arc::new(handler), limits)
 }
 
 fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
@@ -83,6 +106,7 @@ fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
             admin_decommission(store, &req)
         }
         ("POST", path) if path.starts_with("/admin/undrain/") => admin_undrain(store, &req),
+        ("POST", "/admin/scrub") => admin_scrub(store, &req),
         (method, path) if path.starts_with("/v1/objects/") => {
             v1::object_route(store, method, &req, path, &query, false)
         }
@@ -101,21 +125,41 @@ fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
     };
     match result {
         Ok(resp) => resp,
-        Err(e) => error_response(e),
+        Err(e) => error_response(store, e),
     }
 }
 
-fn error_response(e: Error) -> HttpResponse {
+fn error_response(store: &Arc<DynoStore>, e: Error) -> HttpResponse {
     let status = match &e {
         Error::Auth(_) => 401,
         Error::PermissionDenied(_) => 403,
         Error::NotFound(_) => 404,
         Error::Conflict(_) => 409,
         Error::Invalid(_) | Error::Json(_) | Error::Config(_) => 400,
+        Error::Timeout(_) => 504,
         Error::Unavailable(_) | Error::Consensus(_) => 503,
         _ => 500,
     };
-    HttpResponse::json(status, &obj(vec![("error", e.to_string().as_str().into())]))
+    let mut resp =
+        HttpResponse::json(status, &obj(vec![("error", e.to_string().as_str().into())]));
+    // Load-shed (breaker open, no capacity) and deadline exhaustion are
+    // both retryable conditions: tell the client when, count them so
+    // operators see shedding in /metrics and /health.
+    match status {
+        503 => {
+            store.metrics.sheds.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            resp.headers.insert("retry-after".into(), "1".into());
+        }
+        504 => {
+            store
+                .metrics
+                .deadline_timeouts
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            resp.headers.insert("retry-after".into(), "1".into());
+        }
+        _ => {}
+    }
+    resp
 }
 
 fn parse_user(req: &HttpRequest) -> Result<String> {
@@ -171,6 +215,28 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
     } else {
         obj(vec![("enabled", false.into())])
     };
+    // Per-container circuit-breaker view: which agents the gateway is
+    // currently shedding traffic from, and why /metrics shows sheds.
+    let mut channels = store.registry.all();
+    channels.sort_by_key(|c| c.id());
+    let breakers: Vec<Value> = channels
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("id", u64::from(c.id()).into()),
+                ("name", c.name().into()),
+                ("state", c.breaker_state().into()),
+            ])
+        })
+        .collect();
+    let snap = store.metrics.snapshot();
+    let resilience = obj(vec![
+        ("retries", snap["retries"].into()),
+        ("sheds", snap["sheds"].into()),
+        ("deadline_timeouts", snap["deadline_timeouts"].into()),
+        ("scrub_cycles", snap["scrub_cycles"].into()),
+        ("scrub_chunks_healed", snap["scrub_chunks_healed"].into()),
+    ]);
     HttpResponse::json(
         200,
         &obj(vec![
@@ -182,6 +248,8 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
             ("engine", store.engine().as_str().into()),
             ("backend", store.backend_name().into()),
             ("transports", obj(census)),
+            ("breakers", Value::Arr(breakers)),
+            ("resilience", resilience),
             ("durability", durability),
         ]),
     )
@@ -288,6 +356,31 @@ fn admin_undrain(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpRespon
     Ok(HttpResponse::json(
         200,
         &obj(vec![("container", u64::from(id).into()), ("draining", Value::Bool(false))]),
+    ))
+}
+
+fn admin_scrub(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    admin_auth(store, req)?;
+    let sample = if req.body.is_empty() {
+        crate::coordinator::DEFAULT_SCRUB_SAMPLE
+    } else {
+        let body = std::str::from_utf8(&req.body)
+            .map_err(|_| Error::Invalid("body not utf-8".into()))?;
+        parse(body)?.opt_u64("sample", crate::coordinator::DEFAULT_SCRUB_SAMPLE as u64)
+            as usize
+    };
+    let r = store.scrub_cycle(sample)?;
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![
+            ("scanned", r.scanned.into()),
+            ("chunks_verified", r.chunks_verified.into()),
+            ("corrupt_found", r.corrupt_found.into()),
+            ("unreachable", r.unreachable.into()),
+            ("chunks_healed", r.chunks_healed.into()),
+            ("lost", r.lost.into()),
+            ("wrapped", Value::Bool(r.wrapped)),
+        ]),
     ))
 }
 
@@ -440,6 +533,7 @@ mod tests {
             ("/admin/rebalance", &b""[..]),
             ("/admin/decommission/0", &b""[..]),
             ("/admin/undrain/0", &b""[..]),
+            ("/admin/scrub", &b""[..]),
         ] {
             let resp = client.post(path, &[], body).unwrap();
             assert_eq!(resp.status, 401, "unauthenticated {path}");
@@ -456,9 +550,13 @@ mod tests {
         let (_server, client, _admin) = gateway();
         let user_token = register(&client, "Ordinary");
         let auth = format!("Bearer {user_token}");
-        for path in
-            ["/admin/repair", "/admin/gc", "/admin/rebalance", "/admin/decommission/0"]
-        {
+        for path in [
+            "/admin/repair",
+            "/admin/gc",
+            "/admin/rebalance",
+            "/admin/decommission/0",
+            "/admin/scrub",
+        ] {
             let resp = client.post(path, &[("authorization", &auth)], &[]).unwrap();
             assert_eq!(resp.status, 403, "user token must not admin {path}");
         }
@@ -546,6 +644,70 @@ mod tests {
         let h = client.get("/health", &[]).unwrap();
         let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
         assert_eq!(v.req_str("engine").unwrap(), "swar-parallel");
+    }
+
+    #[test]
+    fn scrub_endpoint_and_health_resilience_view() {
+        let (_server, client, admin) = gateway();
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        let payload: Vec<u8> = (0..30_000u32).map(|i| (i % 253) as u8).collect();
+        client.put("/objects/UserA/o", &[("authorization", &auth)], &payload).unwrap();
+
+        let resp = client.post("/admin/scrub", &[("authorization", &admin)], &[]).unwrap();
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let v = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.req_u64("scanned").unwrap(), 1);
+        assert_eq!(v.req_u64("chunks_verified").unwrap(), 10);
+        assert_eq!(v.req_u64("corrupt_found").unwrap(), 0);
+
+        let h = client.get("/health", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+        let breakers = v.get("breakers").as_arr().unwrap();
+        assert_eq!(breakers.len(), 12);
+        assert!(breakers.iter().all(|b| b.req_str("state").unwrap() == "closed"));
+        assert_eq!(v.get("resilience").req_u64("scrub_cycles").unwrap(), 1);
+        assert_eq!(v.get("resilience").req_u64("sheds").unwrap(), 0);
+    }
+
+    #[test]
+    fn exhausted_deadline_is_504_with_retry_after() {
+        let (_server, client, _admin) = gateway();
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        client.put("/objects/UserA/o", &[("authorization", &auth)], b"bytes").unwrap();
+
+        // A zero budget expires before the pull starts: 504, never a hang.
+        let resp = client
+            .get(
+                "/objects/UserA/o",
+                &[("authorization", &auth), ("x-dyno-deadline-ms", "0")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
+        assert_eq!(resp.headers.get("retry-after").map(String::as_str), Some("1"));
+
+        // A generous budget serves normally.
+        let resp = client
+            .get(
+                "/objects/UserA/o",
+                &[("authorization", &auth), ("x-dyno-deadline-ms", "60000")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"bytes");
+
+        // Garbage header is a client error, and the timeout was counted.
+        let resp = client
+            .get(
+                "/objects/UserA/o",
+                &[("authorization", &auth), ("x-dyno-deadline-ms", "soon")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 400);
+        let m = client.get("/metrics", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(v.req_u64("deadline_timeouts").unwrap(), 1);
     }
 
     #[test]

@@ -25,10 +25,11 @@ use std::sync::Arc;
 
 use crate::api::{parse_policy, DEFAULT_LIST_LIMIT, MAX_LIST_LIMIT};
 use crate::container::decode_key;
-use crate::coordinator::{DynoStore, PullOpts, PushOpts};
+use crate::coordinator::{DynoStore, OpContext, PullOpts, PushOpts};
 use crate::json::{obj, parse, Value};
 use crate::metadata::{ObjectMeta, Permission};
 use crate::net::{HttpRequest, HttpResponse};
+use crate::resilience::Deadline;
 use crate::util::to_hex;
 use crate::{Error, Result};
 
@@ -104,6 +105,23 @@ fn collection_target(path: &str, prefix: &str) -> Result<String> {
     Ok(format!("/{}", segs.join("/")))
 }
 
+/// Per-request time budget: `x-dyno-deadline-ms: 2500` starts a 2.5 s
+/// deadline the moment the gateway parses it; the remaining budget is
+/// checked before every expensive coordinator stage and clamped onto
+/// every container transport wait. Absent header = no deadline.
+fn request_deadline(req: &HttpRequest) -> Result<Deadline> {
+    match req.header("x-dyno-deadline-ms") {
+        None => Ok(Deadline::none()),
+        Some(ms) => {
+            let ms: u64 = ms
+                .trim()
+                .parse()
+                .map_err(|_| Error::Invalid(format!("bad x-dyno-deadline-ms '{ms}'")))?;
+            Ok(Deadline::in_ms(ms))
+        }
+    }
+}
+
 fn bearer(req: &HttpRequest) -> Result<String> {
     Ok(req
         .bearer_token()
@@ -118,6 +136,7 @@ fn object_headers(resp: &mut HttpResponse, meta: &ObjectMeta) {
     resp.headers.insert("x-dyno-size".into(), meta.size.to_string());
     resp.headers.insert("x-dyno-uuid".into(), meta.uuid.clone());
     resp.headers.insert("x-dyno-created".into(), meta.created_at.to_string());
+    resp.headers.insert("x-dyno-nonce-epoch".into(), meta.nonce_epoch.to_string());
 }
 
 fn mark_deprecated(resp: &mut HttpResponse, alias: bool) {
@@ -199,6 +218,7 @@ pub(super) fn object_route(
     let prefix = if alias { "/objects" } else { "/v1/objects" };
     let (collection, name) = object_target(path, prefix, !alias)?;
     let version = version_pin(query)?;
+    let ctx = OpContext::default().with_deadline(request_deadline(req)?);
     // Only reads honor a version pin. Rejecting it elsewhere beats
     // silently ignoring it: DELETE evicts EVERY version, and a client
     // that sent `?version=0` expecting to prune one would lose all of
@@ -214,13 +234,8 @@ pub(super) fn object_route(
                 Some(p) => Some(parse_policy(p)?),
                 None => None,
             };
-            let report = store.push(
-                &token,
-                &collection,
-                &name,
-                &req.body,
-                PushOpts { policy, ..Default::default() },
-            )?;
+            let report =
+                store.push(&token, &collection, &name, &req.body, PushOpts { policy, ctx })?;
             let mut resp = HttpResponse::json(
                 201,
                 &obj(vec![
@@ -269,7 +284,7 @@ pub(super) fn object_route(
                         &name,
                         start,
                         end,
-                        PullOpts { version, ..Default::default() },
+                        PullOpts { version, ctx },
                     )?;
                     let mut resp = HttpResponse::bytes(206, report.data);
                     resp.headers.insert(
@@ -286,12 +301,8 @@ pub(super) fn object_route(
                     resp
                 }
                 RangeSpec::Whole => {
-                    let report = store.pull(
-                        &token,
-                        &collection,
-                        &name,
-                        PullOpts { version, ..Default::default() },
-                    )?;
+                    let report =
+                        store.pull(&token, &collection, &name, PullOpts { version, ctx })?;
                     let mut resp = HttpResponse::bytes(200, report.data);
                     object_headers(&mut resp, &report.meta);
                     resp
@@ -316,7 +327,20 @@ pub(super) fn object_route(
                     object_headers(&mut resp, &meta);
                     resp
                 }
-                Err(Error::NotFound(_)) => HttpResponse::new(404),
+                Err(Error::NotFound(_)) => {
+                    // Stamp the persisted eviction generation on the 404
+                    // too: an encrypting client re-pushing an evicted
+                    // name has nothing to stat, and this header is the
+                    // only way it learns the nonce epoch the push will
+                    // carry. Best-effort — permission failures keep the
+                    // plain 404 (no epoch oracle for unreadable paths).
+                    let mut resp = HttpResponse::new(404);
+                    if let Ok(epoch) = store.nonce_epoch(&token, &collection, &name) {
+                        resp.headers
+                            .insert("x-dyno-nonce-epoch".into(), epoch.to_string());
+                    }
+                    resp
+                }
                 Err(e) => return Err(e),
             }
         }
@@ -370,6 +394,7 @@ pub(super) fn collection_route(
                 ("size", m.size.into()),
                 ("etag", to_hex(&m.sha3).into()),
                 ("created_at", m.created_at.into()),
+                ("nonce_epoch", m.nonce_epoch.into()),
             ])
         })
         .collect();

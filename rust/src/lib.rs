@@ -22,7 +22,10 @@
 //!   [`durability`] (WAL + snapshot crash consistency for the metadata
 //!   plane: no acknowledged mutation is lost across a restart),
 //!   [`registry`], [`health`], [`placement`] (utilization-factor load
-//!   balancing, Eq. 1-2), [`gateway`], [`policy`].
+//!   balancing, Eq. 1-2), [`gateway`], [`policy`], [`resilience`]
+//!   (retry budgets, request deadlines, per-container circuit
+//!   breakers — the unified failure-handling layer threaded through
+//!   every I/O hop).
 //! * **System assembly** — [`coordinator`] (the DynoStore server),
 //!   [`api`] (the transport-agnostic `ObjectStore` trait: in-process
 //!   `LocalStore` and `/v1`-REST `RemoteStore`, byte-identical by
@@ -71,6 +74,7 @@ pub mod paxos;
 pub mod placement;
 pub mod policy;
 pub mod registry;
+pub mod resilience;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;
@@ -109,6 +113,11 @@ pub enum Error {
     Conflict(String),
     /// A worker-pool job panicked or was lost before completing.
     Pool(String),
+    /// The caller's deadline budget expired before the operation
+    /// completed — HTTP `504 Gateway Timeout` at the gateway. Not
+    /// retryable: the budget is gone, retrying doomed work only adds
+    /// load (the resilience layer short-circuits instead).
+    Timeout(String),
 }
 
 impl std::fmt::Display for Error {
@@ -131,6 +140,7 @@ impl std::fmt::Display for Error {
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Conflict(m) => write!(f, "conflict: {m}"),
             Error::Pool(m) => write!(f, "pool: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
         }
     }
 }
@@ -170,6 +180,8 @@ impl Error {
             Some(("not found", m)) => Error::NotFound(m.to_string()),
             Some(("permission denied", m)) => Error::PermissionDenied(m.to_string()),
             Some(("invalid", m)) => Error::Invalid(m.to_string()),
+            Some(("timeout", m)) => Error::Timeout(m.to_string()),
+            Some(("unavailable", m)) => Error::Unavailable(m.to_string()),
             _ => Error::Invalid(msg),
         }
     }

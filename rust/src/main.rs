@@ -15,6 +15,7 @@
 //! dynostore grant  --url http://HOST:PORT --token T /UserA/col USER read|write
 //! dynostore revoke --url http://HOST:PORT --token T /UserA/col USER read|write
 //! dynostore admin  --url http://HOST:PORT [--token T] repair|gc|metrics|health
+//! dynostore scrub  --url http://HOST:PORT --token T [--sample N]
 //! dynostore decommission --url http://HOST:PORT --token T ID
 //! dynostore rebalance    --url http://HOST:PORT --token T [--threshold F] [--max-moves N]
 //! ```
@@ -83,6 +84,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "list" => list(&flags, &pos),
         "grant" | "revoke" => grant_op(cmd, &flags, &pos),
         "admin" => admin(&flags, &pos),
+        "scrub" => scrub(&flags),
         "decommission" => decommission(&flags, &pos),
         "undrain" => undrain(&flags, &pos),
         "rebalance" => rebalance(&flags),
@@ -121,6 +123,9 @@ fn print_usage() {
          \x20 revoke   --url http://HOST:PORT --token T COLLECTION USER read|write\n\
          \x20 admin    --url http://HOST:PORT [--token T] repair|gc|metrics|health\n\
          \x20          (repair/gc need the admin token `serve` prints at startup)\n\
+         \x20 scrub    --url http://HOST:PORT --token T [--sample N]\n\
+         \x20          (one anti-entropy cycle: verify placed chunks, heal rot;\n\
+         \x20           needs the admin token)\n\
          \x20 decommission --url http://HOST:PORT --token T ID\n\
          \x20          (drain container ID: migrate every chunk off, then remove it)\n\
          \x20 undrain  --url http://HOST:PORT --token T ID\n\
@@ -130,8 +135,10 @@ fn print_usage() {
          \n\
          PATH is /User/Collection.../name; --addr HOST:PORT is accepted\n\
          wherever --url is. Object commands speak the versioned /v1 REST\n\
-         surface. See README.md \u{a7}API for the route table and examples/\n\
-         for library usage."
+         surface and accept [--deadline-ms MS] (request time budget, 504\n\
+         past it) and [--retries N] (replay transient failures with\n\
+         backoff). See README.md \u{a7}API for the route table and\n\
+         examples/ for library usage."
     );
 }
 
@@ -193,8 +200,28 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
     let admin_token = store.issue_admin_token(30 * 24 * 3600);
     let max_body = usize::try_from(config.max_body_mb.saturating_mul(1 << 20))
         .unwrap_or(usize::MAX);
-    let server = gateway::serve_with_limit(Arc::clone(&store), &addr, workers, max_body)
+    let limits = dynostore::net::ServerLimits {
+        max_body,
+        conn_timeout: std::time::Duration::from_secs(config.conn_timeout_secs),
+    };
+    let server = gateway::serve_with_limits(Arc::clone(&store), &addr, workers, limits)
         .map_err(|e| e.to_string())?;
+    // Background anti-entropy: a paced scrubber sweeps placements and
+    // heals silent corruption when the config enables it.
+    let _scrubber = if config.scrub_interval_secs > 0 {
+        dynostore::log_info!(
+            "scrubber on: every {}s, {} objects per cycle",
+            config.scrub_interval_secs,
+            config.scrub_sample
+        );
+        Some(dynostore::coordinator::ScrubberHandle::start(
+            Arc::clone(&store),
+            std::time::Duration::from_secs(config.scrub_interval_secs),
+            config.scrub_sample,
+        ))
+    } else {
+        None
+    };
     dynostore::log_info!(
         "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?}, engine {})",
         server.addr(),
@@ -272,6 +299,19 @@ fn remote_client(flags: &HashMap<String, String>) -> Result<Client, String> {
     }
     if let Some(policy) = flags.get("policy") {
         client = client.with_policy(parse_policy(policy).map_err(|e| e.to_string())?);
+    }
+    if let Some(ms) = flags.get("deadline-ms") {
+        client = client.with_deadline_ms(
+            ms.parse().map_err(|_| "--deadline-ms must be a number".to_string())?,
+        );
+    }
+    if let Some(n) = flags.get("retries") {
+        let attempts: u32 =
+            n.parse().map_err(|_| "--retries must be a number (total attempts)".to_string())?;
+        client = client.with_retries(dynostore::resilience::RetryPolicy {
+            max_attempts: attempts.max(1),
+            ..dynostore::resilience::RetryPolicy::standard()
+        });
     }
     Ok(client)
 }
@@ -457,6 +497,33 @@ fn admin(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String> 
     .map_err(|e| e.to_string())?;
     println!("{}", String::from_utf8_lossy(&resp.body));
     Ok(())
+}
+
+/// Run one scrub cycle on the deployment: sample placements, verify
+/// every placed chunk end-to-end, heal what rotted (`POST /admin/scrub`,
+/// admin token required).
+fn scrub(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = host(flags)?;
+    let headers = admin_headers(flags)?;
+    let hdrs: Vec<(&str, &str)> =
+        headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let body = match flags.get("sample") {
+        Some(n) => {
+            let n: u64 = n.parse().map_err(|_| "--sample must be a number".to_string())?;
+            format!("{{\"sample\": {n}}}")
+        }
+        None => String::from("{}"),
+    };
+    let client = HttpClient::new(addr);
+    let resp = client
+        .post("/admin/scrub", &hdrs, body.as_bytes())
+        .map_err(|e| e.to_string())?;
+    println!("{}", String::from_utf8_lossy(&resp.body));
+    if resp.status == 200 {
+        Ok(())
+    } else {
+        Err(format!("scrub failed: {}", resp.status))
+    }
 }
 
 /// Drain a container out of the storage network and remove it.

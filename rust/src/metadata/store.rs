@@ -130,6 +130,13 @@ pub struct ObjectMeta {
     pub created_at: u64,
     /// Set when a newer version replaced this one (GC clock starts).
     pub superseded_at: Option<u64>,
+    /// Per-(collection, name) eviction generation. Evicting a name
+    /// removes its whole version chain, so the next push restarts at
+    /// version 0 — without this counter the client would derive the
+    /// same version-salted AES-CTR nonce for the re-pushed bytes and
+    /// leak keystream reuse. The epoch survives eviction and GC, so
+    /// (epoch, version) pairs are never re-issued for a name.
+    pub nonce_epoch: u64,
     pub placement: ObjectPlacement,
 }
 
@@ -152,6 +159,7 @@ impl ObjectMeta {
                     None => Value::Null,
                 },
             ),
+            ("nonce_epoch", self.nonce_epoch.into()),
             ("placement", self.placement.to_json()),
         ])
     }
@@ -176,6 +184,9 @@ impl ObjectMeta {
                     other.as_u64().ok_or_else(|| Error::Json("superseded_at".into()))?,
                 ),
             },
+            // Absent in pre-epoch snapshots: those names were never
+            // evicted under the new scheme, so generation 0 is correct.
+            nonce_epoch: v.opt_u64("nonce_epoch", 0),
             placement: ObjectPlacement::from_json(v.get("placement"))?,
         })
     }
@@ -205,7 +216,11 @@ struct Inner {
     objects: HashMap<String, ObjectMeta>,
     /// (collection, name) → version chain, oldest → newest uuid.
     chains: HashMap<(String, String), Vec<String>>,
-    /// Monotonic version counter per (collection, name).
+    /// (collection, name) → eviction generation. Bumped by [`evict`],
+    /// NEVER removed — it must outlive the chain it protects (see
+    /// [`ObjectMeta::nonce_epoch`]). Names that were never evicted have
+    /// no entry (epoch 0), keeping the map tiny.
+    nonce_epochs: HashMap<(String, String), u64>,
     rng: Option<Rng>,
     uuid_counter: u64,
 }
@@ -377,6 +392,7 @@ impl MetadataStore {
             version,
             created_at: now,
             superseded_at: None,
+            nonce_epoch: inner.nonce_epochs.get(&chain_key).copied().unwrap_or(0),
             placement,
         };
         inner.objects.insert(uuid.clone(), meta.clone());
@@ -485,11 +501,32 @@ impl MetadataStore {
         let collection = normalize_path(collection)?;
         let mut inner = self.inner.lock().unwrap();
         check_perm(&inner, caller, &collection, Permission::Write)?;
+        let chain_key = (collection.clone(), name.to_string());
         let chain = inner
             .chains
-            .remove(&(collection.clone(), name.to_string()))
+            .remove(&chain_key)
             .ok_or_else(|| Error::NotFound(format!("{collection}/{name}")))?;
+        // Retire this name's (epoch, version) space: a future re-push
+        // restarts at version 0, and only the bumped epoch keeps its
+        // encryption nonces disjoint from the evicted versions'.
+        *inner.nonce_epochs.entry(chain_key).or_insert(0) += 1;
         Ok(chain.iter().filter_map(|u| inner.objects.remove(u)).collect())
+    }
+
+    /// Current eviction generation of `(collection, name)` — what the
+    /// next push of that name will be stamped with. Defined (and 0) for
+    /// names that never existed, so an encrypting client can derive the
+    /// nonce for a first-ever push and an evicted re-push through the
+    /// same query. Caller needs Read on the collection.
+    pub fn nonce_epoch(&self, caller: &str, collection: &str, name: &str) -> Result<u64> {
+        let collection = normalize_path(collection)?;
+        let inner = self.inner.lock().unwrap();
+        check_perm(&inner, caller, &collection, Permission::Read)?;
+        Ok(inner
+            .nonce_epochs
+            .get(&(collection, name.to_string()))
+            .copied()
+            .unwrap_or(0))
     }
 
     /// Garbage-collect superseded versions older than `retention_secs`
@@ -624,6 +661,18 @@ impl MetadataStore {
                 ])
             })
             .collect();
+        let mut epoch_keys: Vec<&(String, String)> = inner.nonce_epochs.keys().collect();
+        epoch_keys.sort();
+        let nonce_epochs: Vec<Value> = epoch_keys
+            .into_iter()
+            .map(|key| {
+                obj(vec![
+                    ("collection", key.0.as_str().into()),
+                    ("name", key.1.as_str().into()),
+                    ("epoch", inner.nonce_epochs[key].into()),
+                ])
+            })
+            .collect();
         obj(vec![
             // xoshiro state words exceed 2^53: hex strings, not numbers.
             (
@@ -636,6 +685,7 @@ impl MetadataStore {
             ("collections", Value::Arr(collections)),
             ("objects", Value::Arr(objects)),
             ("chains", Value::Arr(chains)),
+            ("nonce_epochs", Value::Arr(nonce_epochs)),
         ])
     }
 
@@ -697,11 +747,20 @@ impl MetadataStore {
                 uuids,
             );
         }
+        let mut nonce_epochs = HashMap::new();
+        // Absent in pre-epoch snapshots (every name at epoch 0).
+        for e in v.get("nonce_epochs").as_arr().unwrap_or(&[]) {
+            nonce_epochs.insert(
+                (e.req_str("collection")?.to_string(), e.req_str("name")?.to_string()),
+                e.req_u64("epoch")?,
+            );
+        }
         Ok(MetadataStore {
             inner: Mutex::new(Inner {
                 collections,
                 objects,
                 chains,
+                nonce_epochs,
                 rng: Some(Rng::from_state(state)),
                 uuid_counter: v.req_u64("uuid_counter")?,
             }),
@@ -983,6 +1042,7 @@ mod tests {
             version: 3,
             created_at: 100,
             superseded_at: Some(200),
+            nonce_epoch: 2,
             placement: ObjectPlacement::Erasure {
                 n: 3,
                 k: 2,
@@ -992,6 +1052,33 @@ mod tests {
         assert_eq!(ObjectMeta::from_json(&m.to_json()).unwrap(), m);
         let single = ObjectMeta { superseded_at: None, placement: place(4), ..m };
         assert_eq!(ObjectMeta::from_json(&single.to_json()).unwrap(), single);
+        // Pre-epoch snapshots lack the field: defaults to generation 0.
+        let mut legacy = single.to_json();
+        if let Value::Obj(pairs) = &mut legacy {
+            pairs.retain(|(k, _)| k != "nonce_epoch");
+        }
+        assert_eq!(ObjectMeta::from_json(&legacy).unwrap().nonce_epoch, 0);
+    }
+
+    #[test]
+    fn evict_bumps_nonce_epoch_and_it_survives_snapshots() {
+        let s = store();
+        let m0 = s.put_object("UserA", "/UserA", "obj", 1, [0; 32], place(1), 10).unwrap();
+        assert_eq!(m0.nonce_epoch, 0);
+        s.evict("UserA", "/UserA", "obj").unwrap();
+        // Re-push restarts versions at 0 but in a fresh epoch — the
+        // (epoch, version) nonce salt never repeats.
+        let m1 = s.put_object("UserA", "/UserA", "obj", 1, [0; 32], place(1), 20).unwrap();
+        assert_eq!((m1.version, m1.nonce_epoch), (0, 1));
+        s.evict("UserA", "/UserA", "obj").unwrap();
+        // The epoch counter persists across snapshot/restore even while
+        // no live versions reference it.
+        let r = MetadataStore::restore(&s.snapshot_value()).unwrap();
+        let m2 = r.put_object("UserA", "/UserA", "obj", 1, [0; 32], place(1), 30).unwrap();
+        assert_eq!((m2.version, m2.nonce_epoch), (0, 2));
+        // Other names are unaffected.
+        let other = r.put_object("UserA", "/UserA", "other", 1, [0; 32], place(1), 30).unwrap();
+        assert_eq!(other.nonce_epoch, 0);
     }
 
     #[test]

@@ -87,11 +87,14 @@ impl HttpResponse {
             401 => "Unauthorized",
             403 => "Forbidden",
             404 => "Not Found",
+            408 => "Request Timeout",
             409 => "Conflict",
             413 => "Payload Too Large",
             416 => "Range Not Satisfiable",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             507 => "Insufficient Storage",
             _ => "Status",
         }
@@ -128,6 +131,28 @@ type Handler = dyn Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static;
 /// deployments pick their own cap via [`HttpServer::serve_with_limit`].
 pub const DEFAULT_MAX_BODY: usize = 64 << 20;
 
+/// Default per-connection socket read/write timeout: the slowloris
+/// guard. A client that trickles (or stops sending) its request holds a
+/// handler thread at most this long before the server answers `408
+/// Request Timeout` and reclaims the thread; a client that stops
+/// reading its response is cut off by the matching write timeout.
+pub const DEFAULT_CONN_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Per-connection resource limits for [`HttpServer::serve_with_limits`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServerLimits {
+    /// Largest accepted request body (413 beyond).
+    pub max_body: usize,
+    /// Socket read/write timeout (408 on header-read expiry).
+    pub conn_timeout: std::time::Duration,
+}
+
+impl Default for ServerLimits {
+    fn default() -> Self {
+        ServerLimits { max_body: DEFAULT_MAX_BODY, conn_timeout: DEFAULT_CONN_TIMEOUT }
+    }
+}
+
 /// Threaded HTTP server.
 pub struct HttpServer {
     addr: std::net::SocketAddr,
@@ -143,7 +168,7 @@ impl HttpServer {
         workers: usize,
         handler: Arc<Handler>,
     ) -> Result<HttpServer> {
-        Self::serve_with_limit(addr, workers, handler, DEFAULT_MAX_BODY)
+        Self::serve_with_limits(addr, workers, handler, ServerLimits::default())
     }
 
     /// [`HttpServer::serve`] with an explicit request-body cap: any
@@ -154,6 +179,22 @@ impl HttpServer {
         workers: usize,
         handler: Arc<Handler>,
         max_body: usize,
+    ) -> Result<HttpServer> {
+        Self::serve_with_limits(
+            addr,
+            workers,
+            handler,
+            ServerLimits { max_body, ..Default::default() },
+        )
+    }
+
+    /// [`HttpServer::serve`] with explicit per-connection limits (body
+    /// cap + slowloris socket timeout).
+    pub fn serve_with_limits(
+        addr: &str,
+        workers: usize,
+        handler: Arc<Handler>,
+        limits: ServerLimits,
     ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -171,7 +212,7 @@ impl HttpServer {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let handler = Arc::clone(&handler);
-                            pool.execute(move || handle_conn(stream, handler, max_body));
+                            pool.execute(move || handle_conn(stream, handler, limits));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(2));
@@ -207,7 +248,19 @@ enum ParseFailure {
     /// Declared `content-length` exceeds the server's cap — answered
     /// 413 without allocating for the body.
     TooLarge { declared: u64, cap: usize },
+    /// The socket read timed out before a complete request arrived —
+    /// the slowloris case, answered 408 so the thread is reclaimed.
+    SlowClient,
     Malformed(Error),
+}
+
+/// Classify an I/O failure: a socket-timeout expiry is a slow client
+/// (408), anything else is a malformed/broken request (400).
+fn read_failure(e: std::io::Error) -> ParseFailure {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ParseFailure::SlowClient,
+        _ => ParseFailure::Malformed(Error::Io(e)),
+    }
 }
 
 impl From<Error> for ParseFailure {
@@ -218,14 +271,17 @@ impl From<Error> for ParseFailure {
 
 impl From<std::io::Error> for ParseFailure {
     fn from(e: std::io::Error) -> Self {
-        ParseFailure::Malformed(Error::Io(e))
+        read_failure(e)
     }
 }
 
-fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>, max_body: usize) {
+fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>, limits: ServerLimits) {
+    // The write half gets the same timeout: a client that stops reading
+    // its response must not pin a handler thread either.
+    let _ = stream.set_write_timeout(Some(limits.conn_timeout));
     let peer = stream.try_clone();
     let request = match peer {
-        Ok(read_half) => parse_request(read_half, max_body),
+        Ok(read_half) => parse_request(read_half, limits),
         Err(e) => Err(ParseFailure::Malformed(Error::Io(e))),
     };
     let (response, unread_body) = match request {
@@ -236,6 +292,16 @@ fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>, max_body: usize) {
                 &format!("declared body of {declared} bytes exceeds the {cap}-byte limit"),
             ),
             declared,
+        ),
+        Err(ParseFailure::SlowClient) => (
+            HttpResponse::text(
+                408,
+                &format!(
+                    "request not received within {:?} — connection closed",
+                    limits.conn_timeout
+                ),
+            ),
+            0,
         ),
         Err(ParseFailure::Malformed(e)) => {
             (HttpResponse::text(400, &format!("bad request: {e}")), 0)
@@ -260,9 +326,10 @@ fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>, max_body: usize) {
 
 fn parse_request(
     stream: TcpStream,
-    max_body: usize,
+    limits: ServerLimits,
 ) -> std::result::Result<HttpRequest, ParseFailure> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let max_body = limits.max_body;
+    stream.set_read_timeout(Some(limits.conn_timeout))?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -324,8 +391,8 @@ impl HttpClient {
         HttpClient { base: base.to_string(), timeout: Some(timeout) }
     }
 
-    fn connect(&self) -> Result<TcpStream> {
-        match self.timeout {
+    fn connect(&self, timeout: Option<std::time::Duration>) -> Result<TcpStream> {
+        match timeout {
             None => Ok(TcpStream::connect(&self.base)?),
             Some(t) => {
                 use std::net::ToSocketAddrs;
@@ -349,7 +416,21 @@ impl HttpClient {
         headers: &[(&str, &str)],
         body: &[u8],
     ) -> Result<HttpResponse> {
-        let mut stream = self.connect()?;
+        self.request_with_timeout(method, path, headers, body, self.timeout)
+    }
+
+    /// [`HttpClient::request`] with a per-request timeout override: the
+    /// deadline-propagation path clamps each hop's wait to the request's
+    /// remaining budget instead of the client's configured default.
+    pub fn request_with_timeout(
+        &self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+        timeout: Option<std::time::Duration>,
+    ) -> Result<HttpResponse> {
+        let mut stream = self.connect(timeout)?;
         let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.base);
         for (k, v) in headers {
             head.push_str(&format!("{k}: {v}\r\n"));
@@ -568,6 +649,56 @@ mod tests {
         // Over the cap: 413 with the right reason phrase, body unread.
         let resp = client.put("/o", &[], &[7u8; 5_000]).unwrap();
         assert_eq!(resp.status, 413);
+    }
+
+    #[test]
+    fn slow_client_gets_408_and_server_survives() {
+        let server = HttpServer::serve_with_limits(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|_req: HttpRequest| HttpResponse::text(200, "ok")),
+            ServerLimits {
+                max_body: DEFAULT_MAX_BODY,
+                conn_timeout: std::time::Duration::from_millis(100),
+            },
+        )
+        .unwrap();
+        // A slowloris connection: open, trickle half a request line, stall.
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"GET /stalled HTT").unwrap();
+        let mut reply = String::new();
+        let mut reader = BufReader::new(&mut stream);
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("408"), "{reply}");
+        assert!(reply.contains("Request Timeout"), "{reply}");
+        // A stalled *header* section (complete request line) times out too.
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"GET /h HTTP/1.1\r\nhost: t\r\nx-part").unwrap();
+        let mut reply = String::new();
+        let mut reader = BufReader::new(&mut stream);
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("408"), "{reply}");
+        // The handler thread was reclaimed: normal requests still work.
+        let client = HttpClient::new(&server.addr().to_string());
+        assert_eq!(client.get("/fine", &[]).unwrap().status, 200);
+    }
+
+    #[test]
+    fn per_request_timeout_override() {
+        let server = echo_server();
+        // Client default: no timeout. Per-request: tight but sufficient.
+        let client = HttpClient::new(&server.addr().to_string());
+        let resp = client
+            .request_with_timeout(
+                "GET",
+                "/hello",
+                &[],
+                &[],
+                Some(std::time::Duration::from_secs(5)),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"world");
     }
 
     #[test]

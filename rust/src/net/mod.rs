@@ -10,5 +10,8 @@
 mod http;
 mod pool;
 
-pub use http::{HttpClient, HttpRequest, HttpResponse, HttpServer, DEFAULT_MAX_BODY};
+pub use http::{
+    HttpClient, HttpRequest, HttpResponse, HttpServer, ServerLimits, DEFAULT_CONN_TIMEOUT,
+    DEFAULT_MAX_BODY,
+};
 pub use pool::ThreadPool;

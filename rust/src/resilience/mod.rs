@@ -1,0 +1,576 @@
+//! The unified resilience layer: retry budgets, request deadlines, and
+//! per-container circuit breakers.
+//!
+//! The paper's robustness claim (§VI-D) is that DynoStore "withstands
+//! more failures than traditional systems". Before this module the
+//! crate's failure handling was scattered ad-hoc mechanisms — hedged
+//! parity waves, a 500 ms liveness TTL in `RemoteChannel`, one
+//! fail-fast HTTP timeout. This module centralizes the three policies
+//! every hop now shares:
+//!
+//! * [`RetryPolicy`] — exponential backoff with *decorrelated jitter*
+//!   (each sleep is drawn uniformly from `[base, 3×previous]`, capped),
+//!   bounded both by an attempt count and a total sleep budget so a
+//!   retry storm can never exceed a known worst-case latency.
+//! * [`Deadline`] — a per-request time budget created at the edge
+//!   (client `--deadline-ms`, gateway `x-dyno-deadline-ms` header) and
+//!   propagated gateway → coordinator → channel → `HttpClient`. Expired
+//!   deadlines short-circuit with [`Error::Timeout`] (HTTP 504) instead
+//!   of queueing doomed work.
+//! * [`CircuitBreaker`] — per-container closed → open → half-open state
+//!   machine with single-probe admission, replacing `RemoteChannel`'s
+//!   dead-mark + info-TTL liveness. While open, every request is shed
+//!   locally (no connect, no timeout wait); after a cooldown exactly one
+//!   probe is admitted and its outcome decides between closing the
+//!   breaker and re-opening it.
+//!
+//! All three are deterministic given their inputs: the retry jitter is
+//! seeded, and the breaker takes an explicit `now_ms` so property tests
+//! (and the chaos suite) can drive it on a logical clock.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::{now_ns, Rng};
+use crate::{Error, Result};
+
+/// Monotonic milliseconds since an arbitrary process-local epoch
+/// (wraps `util::now_ns`; used by deadlines and breaker cooldowns).
+pub fn mono_ms() -> u64 {
+    now_ns() / 1_000_000
+}
+
+// ---------------------------------------------------------------------
+// Deadline
+// ---------------------------------------------------------------------
+
+/// A per-request time budget. `Deadline::none()` (the `Default`) never
+/// expires; `Deadline::in_ms(b)` expires `b` milliseconds after
+/// creation. Copyable so it rides inside `OpContext` through every
+/// coordinator hop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Deadline {
+    /// Monotonic ms at which the budget runs out (`None` = unbounded).
+    expires_at_ms: Option<u64>,
+}
+
+impl Deadline {
+    /// No deadline: every remaining-budget query reports unbounded.
+    pub fn none() -> Deadline {
+        Deadline { expires_at_ms: None }
+    }
+
+    /// Expires `budget_ms` from now (a budget of 0 is already expired —
+    /// the short-circuit path, exercised by gateway tests).
+    pub fn in_ms(budget_ms: u64) -> Deadline {
+        Deadline { expires_at_ms: Some(mono_ms().saturating_add(budget_ms)) }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.expires_at_ms.is_none()
+    }
+
+    /// Remaining budget in ms; `None` when unbounded, `Some(0)` when
+    /// expired.
+    pub fn remaining_ms(&self) -> Option<u64> {
+        self.expires_at_ms.map(|at| at.saturating_sub(mono_ms()))
+    }
+
+    pub fn expired(&self) -> bool {
+        self.remaining_ms() == Some(0)
+    }
+
+    /// `Err(Error::Timeout)` when the budget is gone — the uniform
+    /// short-circuit every hop calls before starting (more) work.
+    pub fn check(&self, what: &str) -> Result<()> {
+        if self.expired() {
+            Err(Error::Timeout(format!("deadline exceeded before {what}")))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Clamp a transport timeout to the remaining budget: a hop must
+    /// never wait longer than the request has left to live. `None` when
+    /// already expired (callers short-circuit via [`Deadline::check`]).
+    pub fn clamp_timeout(&self, timeout: Duration) -> Option<Duration> {
+        match self.remaining_ms() {
+            None => Some(timeout),
+            Some(0) => None,
+            Some(ms) => Some(timeout.min(Duration::from_millis(ms))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// RetryPolicy
+// ---------------------------------------------------------------------
+
+/// Budget-capped exponential backoff with decorrelated jitter
+/// (`sleep = min(cap, uniform(base, 3 × previous_sleep))`).
+///
+/// Two independent bounds stop a retry storm: `max_attempts` and
+/// `budget_ms` (total sleep across all backoffs). A [`Deadline`] passed
+/// to [`RetryPolicy::run`] adds a third: no backoff sleep may outlive
+/// the request budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total tries including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// First / minimum backoff sleep in ms.
+    pub base_ms: u64,
+    /// Per-sleep ceiling in ms.
+    pub cap_ms: u64,
+    /// Total sleep budget across every backoff in ms.
+    pub budget_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::standard()
+    }
+}
+
+impl RetryPolicy {
+    /// The deployment default: up to 4 tries, 25 ms base, 1 s cap,
+    /// 2 s total sleep budget.
+    pub fn standard() -> RetryPolicy {
+        RetryPolicy { max_attempts: 4, base_ms: 25, cap_ms: 1_000, budget_ms: 2_000 }
+    }
+
+    /// Single attempt, no sleeping — for callers that hedge elsewhere
+    /// (the coordinator's parity waves) or cannot tolerate replays.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, base_ms: 0, cap_ms: 0, budget_ms: 0 }
+    }
+
+    /// The next decorrelated-jitter sleep given the previous one
+    /// (0 = first backoff). Pure given the Rng state, so seeded runs
+    /// replay exactly.
+    pub fn backoff_ms(&self, rng: &mut Rng, prev_ms: u64) -> u64 {
+        let lo = self.base_ms;
+        let hi = (prev_ms.saturating_mul(3)).max(lo + 1);
+        rng.range(lo, hi).min(self.cap_ms)
+    }
+
+    /// Run `op` under this policy: retry on [`Error::is_retryable`]
+    /// failures until the attempt count, the sleep budget, or the
+    /// deadline is exhausted. Non-retryable errors surface immediately.
+    /// `attempts` receives the 0-based attempt index.
+    pub fn run<T>(
+        &self,
+        seed: u64,
+        deadline: Deadline,
+        mut op: impl FnMut(u32) -> Result<T>,
+    ) -> Result<T> {
+        let mut rng = Rng::new(seed);
+        let mut slept_ms = 0u64;
+        let mut prev_ms = 0u64;
+        let mut attempt = 0u32;
+        loop {
+            deadline.check("attempt")?;
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) if !e.is_retryable() => return Err(e),
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= self.max_attempts.max(1) {
+                        return Err(e);
+                    }
+                    let sleep = self.backoff_ms(&mut rng, prev_ms);
+                    if slept_ms.saturating_add(sleep) > self.budget_ms {
+                        return Err(e);
+                    }
+                    if let Some(left) = deadline.remaining_ms() {
+                        if sleep >= left {
+                            // Sleeping would outlive the request: the
+                            // retry is doomed, surface the last error.
+                            return Err(e);
+                        }
+                    }
+                    if sleep > 0 {
+                        std::thread::sleep(Duration::from_millis(sleep));
+                    }
+                    slept_ms += sleep;
+                    prev_ms = sleep;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CircuitBreaker
+// ---------------------------------------------------------------------
+
+/// Breaker states, surfaced by `/health` per container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal operation; consecutive failures are counted.
+    Closed,
+    /// Tripped: requests are shed locally until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed and one probe is in flight; everyone else is
+    /// still shed until the probe reports.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at_ms: u64,
+}
+
+/// Per-container circuit breaker: `threshold` consecutive failures trip
+/// it open; after `cooldown_ms` exactly one caller is admitted as a
+/// probe (half-open); the probe's outcome closes or re-opens it.
+///
+/// Time is an explicit `now_ms` parameter so the state machine is a
+/// pure function of its call sequence — the property tests drive it on
+/// a logical clock. Production callers pass [`mono_ms`].
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown_ms: u64,
+    inner: Mutex<BreakerInner>,
+}
+
+/// Consecutive transport failures before the breaker opens.
+pub const DEFAULT_BREAKER_THRESHOLD: u32 = 3;
+
+/// Cooldown before an open breaker admits its half-open probe. Matches
+/// the old liveness-TTL order of magnitude so pull waves re-try a
+/// recovered container promptly.
+pub const DEFAULT_BREAKER_COOLDOWN_MS: u64 = 500;
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        CircuitBreaker::new(DEFAULT_BREAKER_THRESHOLD, DEFAULT_BREAKER_COOLDOWN_MS)
+    }
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooldown_ms: u64) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown_ms,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at_ms: 0,
+            }),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// May a request proceed at `now_ms`?
+    ///
+    /// * Closed → yes.
+    /// * Open, cooldown not elapsed → no (shed locally).
+    /// * Open, cooldown elapsed → this caller becomes THE probe: the
+    ///   breaker transitions to half-open and returns true; every other
+    ///   caller sees half-open and is refused until the probe reports
+    ///   via [`CircuitBreaker::record_success`] / `record_failure`.
+    pub fn admit(&self, now_ms: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => false,
+            BreakerState::Open => {
+                if now_ms.saturating_sub(inner.opened_at_ms) >= self.cooldown_ms {
+                    inner.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Whether the container looks usable without claiming the probe
+    /// slot (read-only view for wave planning / health reporting).
+    pub fn looks_alive(&self, now_ms: u64) -> bool {
+        let inner = self.inner.lock().unwrap();
+        match inner.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => false,
+            BreakerState::Open => {
+                now_ms.saturating_sub(inner.opened_at_ms) >= self.cooldown_ms
+            }
+        }
+    }
+
+    /// A request (or the half-open probe) succeeded.
+    pub fn record_success(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.state = BreakerState::Closed;
+        inner.consecutive_failures = 0;
+    }
+
+    /// A request (or the half-open probe) failed at `now_ms`.
+    pub fn record_failure(&self, now_ms: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.state {
+            BreakerState::Closed => {
+                inner.consecutive_failures += 1;
+                if inner.consecutive_failures >= self.threshold {
+                    inner.state = BreakerState::Open;
+                    inner.opened_at_ms = now_ms;
+                }
+            }
+            // A failed probe re-opens and restarts the cooldown.
+            BreakerState::HalfOpen => {
+                inner.state = BreakerState::Open;
+                inner.opened_at_ms = now_ms;
+            }
+            // A straggler that was already in flight when the breaker
+            // tripped: its failure is old news, the cooldown stands.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Force a known liveness verdict (admin `set_alive`, tests):
+    /// `true` closes the breaker, `false` trips it open immediately.
+    pub fn force(&self, alive: bool, now_ms: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if alive {
+            inner.state = BreakerState::Closed;
+            inner.consecutive_failures = 0;
+        } else {
+            inner.state = BreakerState::Open;
+            inner.consecutive_failures = self.threshold;
+            inner.opened_at_ms = now_ms;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, prop_assert};
+
+    #[test]
+    fn deadline_none_never_expires() {
+        let d = Deadline::none();
+        assert!(d.is_none());
+        assert!(!d.expired());
+        assert_eq!(d.remaining_ms(), None);
+        assert!(d.check("x").is_ok());
+        assert_eq!(
+            d.clamp_timeout(Duration::from_secs(10)),
+            Some(Duration::from_secs(10))
+        );
+    }
+
+    #[test]
+    fn deadline_zero_budget_is_expired() {
+        let d = Deadline::in_ms(0);
+        assert!(d.expired());
+        assert!(matches!(d.check("push"), Err(Error::Timeout(_))));
+        assert_eq!(d.clamp_timeout(Duration::from_secs(10)), None);
+    }
+
+    #[test]
+    fn deadline_clamps_transport_timeouts() {
+        let d = Deadline::in_ms(50);
+        let clamped = d.clamp_timeout(Duration::from_secs(10)).unwrap();
+        assert!(clamped <= Duration::from_millis(50));
+        let unclamped = d.clamp_timeout(Duration::from_millis(1)).unwrap();
+        assert_eq!(unclamped, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn retry_surfaces_non_retryable_immediately() {
+        let mut calls = 0;
+        let res: Result<()> = RetryPolicy::standard().run(1, Deadline::none(), |_| {
+            calls += 1;
+            Err(Error::NotFound("gone".into()))
+        });
+        assert!(matches!(res, Err(Error::NotFound(_))));
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn retry_retries_until_success() {
+        let policy = RetryPolicy { max_attempts: 5, base_ms: 0, cap_ms: 0, budget_ms: 10 };
+        let mut calls = 0;
+        let res = policy.run(1, Deadline::none(), |attempt| {
+            calls += 1;
+            if attempt < 3 {
+                Err(Error::Unavailable("flaky".into()))
+            } else {
+                Ok(attempt)
+            }
+        });
+        assert_eq!(res.unwrap(), 3);
+        assert_eq!(calls, 4);
+    }
+
+    #[test]
+    fn retry_respects_attempt_cap() {
+        let policy = RetryPolicy { max_attempts: 3, base_ms: 0, cap_ms: 0, budget_ms: 10 };
+        let mut calls = 0;
+        let res: Result<()> = policy.run(1, Deadline::none(), |_| {
+            calls += 1;
+            Err(Error::Net("down".into()))
+        });
+        assert!(matches!(res, Err(Error::Net(_))));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_expired_deadline_short_circuits() {
+        let mut calls = 0;
+        let res: Result<()> = RetryPolicy::standard().run(1, Deadline::in_ms(0), |_| {
+            calls += 1;
+            Ok(())
+        });
+        assert!(matches!(res, Err(Error::Timeout(_))));
+        assert_eq!(calls, 0, "no attempt is even started on an expired budget");
+    }
+
+    #[test]
+    fn backoff_is_decorrelated_and_capped() {
+        let policy = RetryPolicy { max_attempts: 10, base_ms: 10, cap_ms: 100, budget_ms: 1000 };
+        forall(50, |g| {
+            let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+            let mut prev = 0;
+            for _ in 0..8 {
+                let s = policy.backoff_ms(&mut rng, prev);
+                prop_assert(s >= policy.base_ms.min(policy.cap_ms), "above base")?;
+                prop_assert(s <= policy.cap_ms, "below cap")?;
+                prev = s;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold() {
+        let b = CircuitBreaker::new(3, 100);
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure(0);
+        b.record_failure(1);
+        assert_eq!(b.state(), BreakerState::Closed, "below threshold");
+        b.record_failure(2);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(50), "sheds during cooldown");
+        assert!(b.admit(102), "cooldown elapsed: probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.admit(103), "half-open admits exactly one probe");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_cooldown() {
+        let b = CircuitBreaker::new(1, 100);
+        b.record_failure(0);
+        assert!(b.admit(100));
+        b.record_failure(100);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(150), "cooldown restarted at the probe failure");
+        assert!(b.admit(200));
+    }
+
+    #[test]
+    fn success_resets_consecutive_failures() {
+        let b = CircuitBreaker::new(3, 100);
+        b.record_failure(0);
+        b.record_failure(1);
+        b.record_success();
+        b.record_failure(2);
+        b.record_failure(3);
+        assert_eq!(b.state(), BreakerState::Closed, "streak was broken");
+    }
+
+    #[test]
+    fn force_overrides_state() {
+        let b = CircuitBreaker::default();
+        b.force(false, 10);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(10));
+        b.force(true, 20);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit(20));
+    }
+
+    /// Property: replaying a random sequence of breaker events against
+    /// a reference model, the breaker (a) never serves while open
+    /// inside the cooldown, (b) admits exactly one probe per half-open
+    /// episode, and (c) is closed exactly when the model says so.
+    #[test]
+    fn breaker_state_machine_property() {
+        forall(200, |g| {
+            let threshold = g.u64(1, 5) as u32;
+            let cooldown = g.u64(1, 50);
+            let b = CircuitBreaker::new(threshold, cooldown);
+            // Reference model.
+            let mut state = BreakerState::Closed;
+            let mut fails = 0u32;
+            let mut opened_at = 0u64;
+            let mut now = 0u64;
+            for _ in 0..g.usize(1, 60) {
+                now += g.u64(0, 20);
+                match g.usize(0, 2) {
+                    0 => {
+                        // admit
+                        let admitted = b.admit(now);
+                        let expect = match state {
+                            BreakerState::Closed => true,
+                            BreakerState::HalfOpen => false,
+                            BreakerState::Open => now - opened_at >= cooldown,
+                        };
+                        prop_assert(admitted == expect, "admit matches model")?;
+                        if admitted && state == BreakerState::Open {
+                            state = BreakerState::HalfOpen;
+                        }
+                        if state == BreakerState::Open && now - opened_at < cooldown {
+                            prop_assert(!admitted, "never serves from open")?;
+                        }
+                    }
+                    1 => {
+                        // success
+                        b.record_success();
+                        state = BreakerState::Closed;
+                        fails = 0;
+                    }
+                    _ => {
+                        // failure
+                        b.record_failure(now);
+                        match state {
+                            BreakerState::Closed => {
+                                fails += 1;
+                                if fails >= threshold {
+                                    state = BreakerState::Open;
+                                    opened_at = now;
+                                }
+                            }
+                            BreakerState::HalfOpen => {
+                                state = BreakerState::Open;
+                                opened_at = now;
+                            }
+                            BreakerState::Open => {}
+                        }
+                    }
+                }
+                prop_assert(b.state() == state, "state matches model")?;
+            }
+            Ok(())
+        });
+    }
+}

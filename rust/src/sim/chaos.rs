@@ -1,0 +1,580 @@
+//! Deterministic fault injection: the chaos plane.
+//!
+//! [`FailureModel`](super::FailureModel) answers *"how likely is this
+//! fleet to lose data in a year"* analytically; this module makes
+//! failures actually **happen** on the data path, reproducibly. A
+//! seeded [`FaultPlan`] scripts per-container fault behavior —
+//! injected errors, added latency, payload corruption, hangs,
+//! partition windows, flapping — and [`FaultChannel`] applies it as a
+//! decorator around any [`ContainerChannel`], so every existing test,
+//! bench, or deployment runs unmodified under a scripted failure
+//! schedule (`containers[].faults` in the JSON config, or
+//! `testkit`/direct wiring in tests).
+//!
+//! Determinism has two clocks:
+//!
+//! * **Per-op draws** (error / latency / corruption / hang rates) hash
+//!   `(plan seed, container id, that channel's op counter)` — the i-th
+//!   operation against a container behaves identically on every run of
+//!   the same plan, independent of thread interleaving across
+//!   containers.
+//! * **The plan epoch** (partition windows, flapping) is a logical
+//!   clock advanced explicitly ([`FaultPlan::set_epoch`] /
+//!   [`FaultPlan::advance_epoch`]) so a test can open a partition, run
+//!   a phase, close it, and watch the scrubber re-converge — with no
+//!   wall-clock in the loop.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::container::{ContainerChannel, ContainerId, ContainerInfo, OpOutcome};
+use crate::json::Value;
+use crate::sim::Site;
+use crate::{Error, Result};
+
+/// Scripted fault behavior for one container. All rates are per-op
+/// probabilities in `[0, 1]`; windows and periods are in plan epochs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Probability an op fails with `Error::Unavailable` outright.
+    pub error_rate: f64,
+    /// Probability a data payload is corrupted: flipped bytes on the
+    /// wire for gets, flipped bytes *at rest* for puts (the silent
+    /// corruption the scrubber exists to catch).
+    pub corrupt_rate: f64,
+    /// Probability an op is delayed by [`FaultSpec::delay_ms`].
+    pub delay_rate: f64,
+    pub delay_ms: u64,
+    /// Probability an op hangs for [`FaultSpec::hang_ms`] and then
+    /// fails — the slow-failure mode deadlines exist to bound.
+    pub hang_rate: f64,
+    pub hang_ms: u64,
+    /// Epoch windows `[start, end)` during which the container is
+    /// fully partitioned (every op fails, liveness reads false).
+    pub partitions: Vec<(u64, u64)>,
+    /// When > 0 the container flaps: dead during every odd
+    /// `epoch / flap_period` interval, alive during even ones.
+    pub flap_period: u64,
+}
+
+impl FaultSpec {
+    /// A container that always fails — scripted total outage.
+    pub fn down() -> FaultSpec {
+        FaultSpec { error_rate: 1.0, ..Default::default() }
+    }
+
+    pub fn error_rate(mut self, p: f64) -> Self {
+        self.error_rate = p;
+        self
+    }
+
+    pub fn corrupt_rate(mut self, p: f64) -> Self {
+        self.corrupt_rate = p;
+        self
+    }
+
+    pub fn delay(mut self, p: f64, ms: u64) -> Self {
+        self.delay_rate = p;
+        self.delay_ms = ms;
+        self
+    }
+
+    pub fn hang(mut self, p: f64, ms: u64) -> Self {
+        self.hang_rate = p;
+        self.hang_ms = ms;
+        self
+    }
+
+    pub fn partition(mut self, from_epoch: u64, until_epoch: u64) -> Self {
+        self.partitions.push((from_epoch, until_epoch));
+        self
+    }
+
+    pub fn flap(mut self, period: u64) -> Self {
+        self.flap_period = period;
+        self
+    }
+
+    /// Is the container scripted dead (partitioned or in a flap-off
+    /// interval) at `epoch`?
+    pub fn scripted_dead(&self, epoch: u64) -> bool {
+        if self.partitions.iter().any(|&(s, e)| epoch >= s && epoch < e) {
+            return true;
+        }
+        self.flap_period > 0 && (epoch / self.flap_period) % 2 == 1
+    }
+
+    /// Parse the `containers[].faults` config object. Unknown fields
+    /// are rejected nowhere (config stays forward-compatible); missing
+    /// fields default to "no fault".
+    pub fn from_json(v: &Value) -> Result<FaultSpec> {
+        let rate = |key: &str| -> Result<f64> {
+            let p = v.get(key).as_f64().unwrap_or(0.0);
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!("faults.{key} must be in [0,1], got {p}")));
+            }
+            Ok(p)
+        };
+        let mut partitions = Vec::new();
+        if let Some(arr) = v.get("partitions").as_arr() {
+            for w in arr {
+                let pair = w
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| Error::Config("faults.partitions wants [[start,end],…]".into()))?;
+                let (s, e) = (
+                    pair[0].as_u64().ok_or_else(|| Error::Config("partition start".into()))?,
+                    pair[1].as_u64().ok_or_else(|| Error::Config("partition end".into()))?,
+                );
+                if e <= s {
+                    return Err(Error::Config(format!("empty partition window [{s},{e})")));
+                }
+                partitions.push((s, e));
+            }
+        }
+        Ok(FaultSpec {
+            error_rate: rate("error_rate")?,
+            corrupt_rate: rate("corrupt_rate")?,
+            delay_rate: rate("delay_rate")?,
+            delay_ms: v.opt_u64("delay_ms", 0),
+            hang_rate: rate("hang_rate")?,
+            hang_ms: v.opt_u64("hang_ms", 0),
+            partitions,
+            flap_period: v.opt_u64("flap_period", 0),
+        })
+    }
+}
+
+/// A seeded, shared failure schedule for a whole deployment: one
+/// [`FaultSpec`] per container plus the logical epoch clock.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    epoch: AtomicU64,
+    specs: RwLock<HashMap<ContainerId, FaultSpec>>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            seed,
+            epoch: AtomicU64::new(0),
+            specs: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// Install (or replace) the fault script for one container. Plans
+    /// are mutable mid-run: a test opens faults, drives traffic, then
+    /// clears them and watches recovery.
+    pub fn set(&self, cid: ContainerId, spec: FaultSpec) {
+        self.specs.write().unwrap().insert(cid, spec);
+    }
+
+    /// Remove every scripted fault for `cid` (the container heals).
+    pub fn clear(&self, cid: ContainerId) {
+        self.specs.write().unwrap().remove(&cid);
+    }
+
+    pub fn spec(&self, cid: ContainerId) -> Option<FaultSpec> {
+        self.specs.read().unwrap().get(&cid).cloned()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Jump the logical clock (partition windows / flapping schedule).
+    pub fn set_epoch(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::SeqCst);
+    }
+
+    pub fn advance_epoch(&self) -> u64 {
+        self.epoch.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// SplitMix64: one 64-bit hash step, the standard seeding finalizer.
+/// Used (not `util::Rng`) because fault draws must be a pure function
+/// of `(seed, container, op index, salt)` with no shared mutable
+/// stream — concurrent dispatch must not perturb the schedule.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fault-type salts: independent draw streams per behavior.
+const SALT_ERROR: u64 = 1;
+const SALT_CORRUPT: u64 = 2;
+const SALT_DELAY: u64 = 3;
+const SALT_HANG: u64 = 4;
+
+/// Injected-fault counters, for test assertions and bench reporting.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub errors: AtomicU64,
+    pub corruptions: AtomicU64,
+    pub delays: AtomicU64,
+    pub hangs: AtomicU64,
+    pub partitioned_ops: AtomicU64,
+}
+
+/// The decorator: any [`ContainerChannel`] wrapped in a scripted fault
+/// layer. Faults fire *in front of* the inner transport — an injected
+/// error never reaches the container, a partition makes the channel
+/// look dead to liveness checks, a put-corruption writes garbled bytes
+/// through the real transport (silent at-rest damage).
+pub struct FaultChannel {
+    inner: Arc<dyn ContainerChannel>,
+    plan: Arc<FaultPlan>,
+    /// This channel's own op counter — the per-op draw clock.
+    ops: AtomicU64,
+    pub counters: FaultCounters,
+}
+
+impl FaultChannel {
+    pub fn new(inner: Arc<dyn ContainerChannel>, plan: Arc<FaultPlan>) -> Arc<FaultChannel> {
+        Arc::new(FaultChannel { inner, plan, ops: AtomicU64::new(0), counters: FaultCounters::default() })
+    }
+
+    /// Wrap `inner` only when the plan scripts faults for it (config
+    /// wiring: unscripted containers keep their bare channel).
+    pub fn wrap_if_scripted(
+        inner: Arc<dyn ContainerChannel>,
+        plan: &Arc<FaultPlan>,
+    ) -> Arc<dyn ContainerChannel> {
+        if plan.spec(inner.id()).is_some() {
+            FaultChannel::new(inner, Arc::clone(plan))
+        } else {
+            inner
+        }
+    }
+
+    pub fn inner(&self) -> &Arc<dyn ContainerChannel> {
+        &self.inner
+    }
+
+    fn draw(&self, op_idx: u64, salt: u64) -> f64 {
+        let h = splitmix(
+            self.plan
+                .seed
+                .wrapping_add(splitmix((self.inner.id() as u64) << 32 | salt))
+                .wrapping_add(splitmix(op_idx)),
+        );
+        // 53 high bits → uniform f64 in [0, 1).
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Run the scripted gauntlet for one op. `Ok(corrupt)` lets the op
+    /// proceed (possibly corrupting its payload); `Err` is the
+    /// injected failure.
+    fn gate(&self, what: &str) -> Result<bool> {
+        let Some(spec) = self.plan.spec(self.inner.id()) else { return Ok(false) };
+        let op_idx = self.ops.fetch_add(1, Ordering::Relaxed);
+        if spec.scripted_dead(self.plan.epoch()) {
+            self.counters.partitioned_ops.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Unavailable(format!(
+                "chaos: container {} partitioned ({what})",
+                self.inner.id()
+            )));
+        }
+        if spec.hang_rate > 0.0 && self.draw(op_idx, SALT_HANG) < spec.hang_rate {
+            self.counters.hangs.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(spec.hang_ms));
+            return Err(Error::Unavailable(format!(
+                "chaos: container {} hung {}ms then dropped ({what})",
+                self.inner.id(),
+                spec.hang_ms
+            )));
+        }
+        if spec.error_rate > 0.0 && self.draw(op_idx, SALT_ERROR) < spec.error_rate {
+            self.counters.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Unavailable(format!(
+                "chaos: container {} injected error ({what})",
+                self.inner.id()
+            )));
+        }
+        if spec.delay_rate > 0.0 && self.draw(op_idx, SALT_DELAY) < spec.delay_rate {
+            self.counters.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(spec.delay_ms));
+        }
+        let corrupt = spec.corrupt_rate > 0.0 && self.draw(op_idx, SALT_CORRUPT) < spec.corrupt_rate;
+        if corrupt {
+            self.counters.corruptions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(corrupt)
+    }
+
+    /// Deterministic payload damage: flip one byte mid-payload (enough
+    /// to fail the chunk's sealed payload-hash check, cheap at any size).
+    fn corrupt(mut data: Vec<u8>) -> Vec<u8> {
+        if !data.is_empty() {
+            let mid = data.len() / 2;
+            data[mid] ^= 0xA5;
+        }
+        data
+    }
+}
+
+impl ContainerChannel for FaultChannel {
+    fn id(&self) -> ContainerId {
+        self.inner.id()
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn site(&self) -> Site {
+        self.inner.site()
+    }
+
+    fn transport(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn put(&self, key: &str, data: &[u8]) -> Result<OpOutcome> {
+        if self.gate("put")? {
+            // Silent at-rest corruption: the damaged bytes are really
+            // stored; only a later integrity check (pull validation,
+            // the scrubber) can notice.
+            return self.inner.put(key, &Self::corrupt(data.to_vec()));
+        }
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Result<OpOutcome> {
+        let corrupt = self.gate("get")?;
+        let mut out = self.inner.get(key)?;
+        if corrupt {
+            out.data = out.data.map(Self::corrupt);
+        }
+        Ok(out)
+    }
+
+    fn delete(&self, key: &str) -> Result<OpOutcome> {
+        self.gate("delete")?;
+        self.inner.delete(key)
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        // Matching RemoteChannel: an unreachable container answers
+        // "nothing there", not an error.
+        match self.gate("exists") {
+            Ok(_) => self.inner.exists(key),
+            Err(_) => Ok(false),
+        }
+    }
+
+    fn info(&self) -> ContainerInfo {
+        let mut info = self.inner.info();
+        if self
+            .plan
+            .spec(self.inner.id())
+            .is_some_and(|s| s.scripted_dead(self.plan.epoch()))
+        {
+            info.alive = false;
+        }
+        info
+    }
+
+    fn is_alive(&self) -> bool {
+        if self
+            .plan
+            .spec(self.inner.id())
+            .is_some_and(|s| s.scripted_dead(self.plan.epoch()))
+        {
+            return false;
+        }
+        self.inner.is_alive()
+    }
+
+    fn probe(&self) -> bool {
+        if self
+            .plan
+            .spec(self.inner.id())
+            .is_some_and(|s| s.scripted_dead(self.plan.epoch()))
+        {
+            return false;
+        }
+        self.inner.probe()
+    }
+
+    fn set_alive(&self, alive: bool) -> Result<()> {
+        self.inner.set_alive(alive)
+    }
+
+    fn breaker_state(&self) -> &'static str {
+        if self.is_alive() {
+            self.inner.breaker_state()
+        } else {
+            "open"
+        }
+    }
+
+    fn as_local(&self) -> Option<Arc<crate::container::DataContainer>> {
+        // Deliberately expose the wrapped container: tests reach
+        // through the fault layer to inspect real stored bytes.
+        self.inner.as_local()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{DataContainer, LocalChannel, MemBackend};
+    use crate::json::parse;
+
+    fn chan(plan: &Arc<FaultPlan>) -> Arc<FaultChannel> {
+        let dc = DataContainer::new(
+            1,
+            "dc-chaos",
+            Site::ChameleonTacc,
+            1 << 16,
+            Box::new(MemBackend::new(1 << 20)),
+        );
+        FaultChannel::new(Arc::new(LocalChannel::new(dc)), Arc::clone(plan))
+    }
+
+    #[test]
+    fn no_spec_is_a_clean_passthrough() {
+        let plan = FaultPlan::new(7);
+        let ch = chan(&plan);
+        ch.put("k", b"v").unwrap();
+        assert_eq!(ch.get("k").unwrap().data.unwrap(), b"v");
+        assert!(ch.is_alive());
+        assert_eq!(ch.transport(), "chaos");
+        assert_eq!(ch.counters.errors.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn error_rate_one_fails_every_op() {
+        let plan = FaultPlan::new(7);
+        plan.set(1, FaultSpec::down());
+        let ch = chan(&plan);
+        assert!(matches!(ch.put("k", b"v"), Err(Error::Unavailable(_))));
+        assert!(matches!(ch.get("k"), Err(Error::Unavailable(_))));
+        assert!(!ch.exists("k").unwrap(), "unreachable answers false, not error");
+        assert!(ch.counters.errors.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed_and_op() {
+        let run = |seed| {
+            let plan = FaultPlan::new(seed);
+            plan.set(1, FaultSpec::default().error_rate(0.5));
+            let ch = chan(&plan);
+            (0..64).map(|i| ch.put(&format!("k{i}"), b"v").is_ok()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed, same schedule");
+        assert_ne!(run(7), run(8), "different seed, different schedule");
+        let oks = run(7).iter().filter(|&&ok| ok).count();
+        assert!((16..=48).contains(&oks), "rate 0.5 roughly half: {oks}/64");
+    }
+
+    #[test]
+    fn partition_window_follows_the_epoch_clock() {
+        let plan = FaultPlan::new(7);
+        plan.set(1, FaultSpec::default().partition(2, 4));
+        let ch = chan(&plan);
+        assert!(ch.is_alive());
+        ch.put("k", b"v").unwrap();
+        plan.set_epoch(2);
+        assert!(!ch.is_alive());
+        assert!(!ch.probe());
+        assert!(!ch.info().alive);
+        assert!(matches!(ch.get("k"), Err(Error::Unavailable(_))));
+        assert_eq!(ch.breaker_state(), "open");
+        plan.set_epoch(4);
+        assert!(ch.is_alive());
+        assert_eq!(ch.get("k").unwrap().data.unwrap(), b"v");
+        assert!(ch.counters.partitioned_ops.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn flapping_alternates_with_epoch() {
+        let plan = FaultPlan::new(7);
+        plan.set(1, FaultSpec::default().flap(2));
+        let ch = chan(&plan);
+        let mut alive = Vec::new();
+        for e in 0..8 {
+            plan.set_epoch(e);
+            alive.push(ch.is_alive());
+        }
+        assert_eq!(alive, vec![true, true, false, false, true, true, false, false]);
+    }
+
+    #[test]
+    fn get_corruption_damages_wire_not_rest() {
+        let plan = FaultPlan::new(7);
+        let ch = chan(&plan);
+        ch.put("k", b"payload-bytes").unwrap();
+        plan.set(1, FaultSpec::default().corrupt_rate(1.0));
+        let got = ch.get("k").unwrap().data.unwrap();
+        assert_ne!(got, b"payload-bytes");
+        plan.clear(1);
+        assert_eq!(ch.get("k").unwrap().data.unwrap(), b"payload-bytes", "at rest intact");
+    }
+
+    #[test]
+    fn put_corruption_damages_at_rest() {
+        let plan = FaultPlan::new(7);
+        plan.set(1, FaultSpec::default().corrupt_rate(1.0));
+        let ch = chan(&plan);
+        ch.put("k", b"payload-bytes").unwrap();
+        plan.clear(1);
+        assert_ne!(
+            ch.get("k").unwrap().data.unwrap(),
+            b"payload-bytes",
+            "corruption persisted to the backend"
+        );
+    }
+
+    #[test]
+    fn delay_applies_without_failing() {
+        let plan = FaultPlan::new(7);
+        plan.set(1, FaultSpec::default().delay(1.0, 5));
+        let ch = chan(&plan);
+        let t0 = std::time::Instant::now();
+        ch.put("k", b"v").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert_eq!(ch.counters.delays.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn hang_sleeps_then_fails() {
+        let plan = FaultPlan::new(7);
+        plan.set(1, FaultSpec::default().hang(1.0, 5));
+        let ch = chan(&plan);
+        let t0 = std::time::Instant::now();
+        assert!(matches!(ch.put("k", b"v"), Err(Error::Unavailable(_))));
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn spec_json_parsing() {
+        let v = parse(
+            r#"{"error_rate":0.25,"corrupt_rate":0.1,"delay_rate":1.0,"delay_ms":3,
+                "hang_rate":0.05,"hang_ms":50,"partitions":[[1,3],[7,9]],"flap_period":4}"#,
+        )
+        .unwrap();
+        let spec = FaultSpec::from_json(&v).unwrap();
+        assert_eq!(spec.error_rate, 0.25);
+        assert_eq!(spec.partitions, vec![(1, 3), (7, 9)]);
+        assert_eq!(spec.flap_period, 4);
+        assert!(spec.scripted_dead(1) && !spec.scripted_dead(3));
+        // Bad rates / windows rejected.
+        assert!(FaultSpec::from_json(&parse(r#"{"error_rate":1.5}"#).unwrap()).is_err());
+        assert!(FaultSpec::from_json(&parse(r#"{"partitions":[[3,3]]}"#).unwrap()).is_err());
+        // Empty object = no faults.
+        let none = FaultSpec::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(none, FaultSpec::default());
+    }
+}

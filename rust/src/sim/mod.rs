@@ -14,16 +14,22 @@
 //!   striped Lustre, S3 request overhead, RAM).
 //! * [`FailureModel`]: per-container annual failure rates (1–25 %) for
 //!   the §VI-D dynamic-resilience experiment (Table II).
+//! * [`FaultPlan`] / [`FaultChannel`]: the chaos plane — seeded,
+//!   scripted fault injection (errors, latency, corruption, partition
+//!   windows, flapping) applied to the *real* data path, so robustness
+//!   claims are testable rather than analytic.
 //!
 //! Costs are *simulated seconds* returned to callers; the data plane
 //! itself is real (bytes really move, hashes really verify). Benchmarks
 //! report simulated time so the figure shapes are reproducible on any
 //! machine; EXPERIMENTS.md §Perf reports real wallclock for the hot path.
 
+mod chaos;
 mod device;
 mod failure;
 mod wan;
 
+pub use chaos::{FaultChannel, FaultCounters, FaultPlan, FaultSpec};
 pub use device::{Device, DeviceKind};
 pub use failure::FailureModel;
 pub use wan::{Site, Wan};

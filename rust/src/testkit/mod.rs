@@ -24,8 +24,11 @@ pub mod agents;
 
 pub use agents::{spawn_agent, SpawnedAgent};
 
-use crate::container::AgentSpec;
-use crate::sim::{DeviceKind, Site};
+use std::sync::Arc;
+
+use crate::container::{deploy_containers, AgentSpec, ContainerChannel, LocalChannel};
+use crate::coordinator::DynoStore;
+use crate::sim::{DeviceKind, FaultChannel, FaultPlan, Site};
 use crate::util::Rng;
 
 /// Uniform container fleet for tests and benches: `count` containers
@@ -43,6 +46,29 @@ pub fn uniform_specs(prefix: &str, count: usize, mem: u64, fs: u64) -> Vec<Agent
             .fs(fs)
         })
         .collect()
+}
+
+/// A deployment with EVERY container wrapped in a [`FaultChannel`]
+/// under one shared, seeded [`FaultPlan`] — the chaos-plane test
+/// harness. Channels consult the plan on every operation, so tests
+/// script faults mid-run (`plan.set(cid, spec)`), heal them
+/// (`plan.clear(cid)`), and open/close partition windows
+/// (`plan.advance_epoch()`) without rebuilding anything. With nothing
+/// scripted the fleet behaves exactly like a healthy local deployment.
+/// Returns `(deployment, plan, UserA's token)`.
+pub fn chaos_deployment(
+    count: usize,
+    seed: u64,
+) -> (Arc<DynoStore>, Arc<FaultPlan>, String) {
+    let ds = Arc::new(DynoStore::builder().build());
+    let plan = FaultPlan::new(seed);
+    let specs = uniform_specs("chaos", count, 64 << 20, 1 << 32);
+    for c in deploy_containers(&specs, count, 0).containers {
+        let inner: Arc<dyn ContainerChannel> = Arc::new(LocalChannel::new(c));
+        ds.add_channel(FaultChannel::new(inner, Arc::clone(&plan))).unwrap();
+    }
+    let token = ds.register_user("UserA").unwrap();
+    (ds, plan, token)
 }
 
 /// Outcome of a single property case.
@@ -162,6 +188,17 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn chaos_deployment_roundtrips_when_unscripted() {
+        let (ds, plan, token) = chaos_deployment(12, 1);
+        assert_eq!(plan.epoch(), 0);
+        let data = Rng::new(2).bytes(50_000);
+        ds.push(&token, "/UserA", "o", &data, Default::default()).unwrap();
+        let pull = ds.pull(&token, "/UserA", "o", Default::default()).unwrap();
+        assert_eq!(pull.data, data);
+        assert!(!pull.degraded, "nothing scripted: clean read");
+    }
 
     #[test]
     fn forall_passes_trivial_property() {

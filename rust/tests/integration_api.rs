@@ -69,7 +69,7 @@ fn run_script(store: &dyn ObjectStore) -> Vec<String> {
     log.push(format!("pull alpha v{} {} bytes ok={}", out.info.version, out.data.len(),
         out.data == data_b));
     let out = store
-        .pull("/UserA", "alpha", &PullOptions { version: Some(0), flows: 1 })
+        .pull("/UserA", "alpha", &PullOptions { version: Some(0), ..Default::default() })
         .unwrap();
     log.push(format!("pull alpha@0 ok={}", out.data == data_a));
 

@@ -1,0 +1,394 @@
+//! Chaos-plane integration suite: the fault matrix
+//! {push, pull, pull_range, repair, rebalance} ×
+//! {error, latency, corruption, partition, flap}, driven end-to-end
+//! through scripted [`FaultPlan`]s on a real deployment.
+//!
+//! The invariants under test are the resilience contract:
+//!
+//! * reads stay **byte-identical** while at most n − k chunk holders
+//!   are faulted (default policy IDA(10, 7) → a budget of 3);
+//! * beyond the budget every operation fails with a **typed** error
+//!   (`Unavailable` / `Timeout`) in bounded time — never a hang, never
+//!   a panic, never silently wrong bytes;
+//! * once a fault window closes (or even while it is still open, when
+//!   spare containers exist) the scrubber and repair restore full
+//!   redundancy without operator intervention.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dynostore::container::{deploy_containers, ContainerChannel, LocalChannel};
+use dynostore::coordinator::{
+    DynoStore, OpContext, PullOpts, PushOpts, RebalanceOpts,
+};
+use dynostore::metadata::ObjectPlacement;
+use dynostore::policy::ResiliencePolicy;
+use dynostore::resilience::Deadline;
+use dynostore::sim::{FaultChannel, FaultPlan, FaultSpec};
+use dynostore::testkit::{chaos_deployment, uniform_specs};
+use dynostore::util::Rng;
+use dynostore::{ErasureConfig, Error};
+
+/// Default-policy parity budget: IDA(10, 7) tolerates n − k = 3 faults.
+const BUDGET: usize = 3;
+
+fn payload(len: usize, seed: u64) -> Vec<u8> {
+    Rng::new(seed).bytes(len)
+}
+
+/// Chunk holders `(index, container)` of the latest version of `name`.
+fn holders(ds: &DynoStore, name: &str) -> Vec<(u8, u32)> {
+    let meta = ds.meta.read(|s| s.get_latest("UserA", "/UserA", name)).unwrap();
+    match meta.placement {
+        ObjectPlacement::Erasure { chunks, .. } => chunks,
+        ObjectPlacement::Single { container } => vec![(0, container)],
+    }
+}
+
+#[test]
+fn pull_is_byte_identical_with_up_to_budget_holders_erroring() {
+    let (ds, plan, token) = chaos_deployment(12, 0xC0FFEE);
+    let data = payload(120_000, 1);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+
+    // Fault the holders one at a time up to the full parity budget:
+    // every read along the way must come back byte-identical.
+    let locs = holders(&ds, "obj");
+    for faulted in 1..=BUDGET {
+        for &(_, cid) in locs.iter().take(faulted) {
+            plan.set(cid, FaultSpec::down());
+        }
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, data, "byte-identical with {faulted} holders down");
+        assert_eq!(pull.chunks_fetched, 7, "decode still needs exactly k chunks");
+    }
+
+    // Healed: the next read is clean again.
+    for &(_, cid) in &locs {
+        plan.clear(cid);
+    }
+    let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, data);
+    assert!(!pull.degraded, "no faults scripted: clean read");
+}
+
+#[test]
+fn reads_fail_typed_beyond_the_parity_budget() {
+    let (ds, plan, token) = chaos_deployment(12, 7);
+    let data = payload(90_000, 2);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+
+    // One past the budget: 4 of 10 holders down leaves 6 < k = 7.
+    let locs = holders(&ds, "obj");
+    for &(_, cid) in locs.iter().take(BUDGET + 1) {
+        plan.set(cid, FaultSpec::down());
+    }
+    let t0 = Instant::now();
+    match ds.pull(&token, "/UserA", "obj", PullOpts::default()) {
+        Err(Error::Unavailable(_)) => {}
+        other => panic!("expected typed Unavailable, got {other:?}"),
+    }
+    match ds.pull_range(&token, "/UserA", "obj", 10_000, 40_000, PullOpts::default()) {
+        Err(Error::Unavailable(_) | Error::Timeout(_)) => {}
+        other => panic!("expected typed error from pull_range, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "typed failure, not a stall");
+
+    // Healing a single holder brings the read back under budget.
+    plan.clear(locs[0].1);
+    let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, data);
+}
+
+#[test]
+fn push_fails_typed_when_the_fleet_errors_and_recovers_after_heal() {
+    let (ds, plan, token) = chaos_deployment(12, 11);
+    for cid in 0..12 {
+        plan.set(cid, FaultSpec::down());
+    }
+    let data = payload(60_000, 3);
+    match ds.push(&token, "/UserA", "obj", &data, PushOpts::default()) {
+        Err(Error::Unavailable(_)) => {}
+        other => panic!("expected typed Unavailable from push, got {other:?}"),
+    }
+    // Nothing was committed: the name does not exist.
+    assert!(!ds.exists(&token, "/UserA", "obj").unwrap());
+
+    // The fleet heals; the same push succeeds and roundtrips.
+    for cid in 0..12 {
+        plan.clear(cid);
+    }
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+    let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, data);
+    assert!(!pull.degraded);
+}
+
+#[test]
+fn latency_injection_slows_ops_but_never_corrupts_them() {
+    let (ds, plan, token) = chaos_deployment(12, 13);
+    for cid in 0..12 {
+        plan.set(cid, FaultSpec::default().delay(1.0, 2));
+    }
+    for i in 0..3u64 {
+        let name = format!("slow{i}");
+        let data = payload(40_000, 100 + i);
+        ds.push(&token, "/UserA", &name, &data, PushOpts::default()).unwrap();
+        let pull = ds.pull(&token, "/UserA", &name, PullOpts::default()).unwrap();
+        assert_eq!(pull.data, data, "latency is not corruption");
+        assert!(!pull.degraded, "delayed chunks still count as healthy");
+    }
+}
+
+#[test]
+fn wire_corruption_is_hedged_past_and_never_reaches_the_caller() {
+    let (ds, plan, token) = chaos_deployment(12, 17);
+    let data = payload(150_000, 4);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+
+    // Corrupt every get from BUDGET holders: the chunk-header hash
+    // check rejects the damaged bytes and the pull hedges to parity.
+    let locs = holders(&ds, "obj");
+    for &(_, cid) in locs.iter().take(BUDGET) {
+        plan.set(cid, FaultSpec::default().corrupt_rate(1.0));
+    }
+    let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, data, "corrupt chunks skipped, bytes exact");
+    assert!(pull.degraded, "parity reconstruction was needed");
+
+    // Wire corruption left the at-rest copies intact: a scrub finds
+    // nothing to heal once the fault script is lifted.
+    for &(_, cid) in &locs {
+        plan.clear(cid);
+    }
+    let report = ds.scrub_cycle(0).unwrap();
+    assert_eq!(report.corrupt_found, 0, "damage was wire-only");
+    assert_eq!(report.chunks_healed, 0);
+}
+
+#[test]
+fn at_rest_corruption_on_every_chunk_fails_typed_and_scrub_reports_lost() {
+    let (ds, plan, token) = chaos_deployment(12, 19);
+    // Every chunk of this push is silently damaged at rest.
+    for cid in 0..12 {
+        plan.set(cid, FaultSpec::default().corrupt_rate(1.0));
+    }
+    let data = payload(50_000, 5);
+    ds.push(&token, "/UserA", "rotten", &data, PushOpts::default()).unwrap();
+    for cid in 0..12 {
+        plan.clear(cid);
+    }
+
+    // Never wrong bytes: with zero valid chunks the read fails typed.
+    match ds.pull(&token, "/UserA", "rotten", PullOpts::default()) {
+        Err(Error::Unavailable(_)) => {}
+        other => panic!("expected typed Unavailable, got {other:?}"),
+    }
+    // And the scrubber surfaces the object as unrecoverable instead of
+    // pretending the sweep was clean.
+    let report = ds.scrub_cycle(0).unwrap();
+    assert_eq!(report.lost, 1);
+    assert_eq!(report.chunks_healed, 0);
+}
+
+#[test]
+fn pull_range_stays_exact_across_a_partition_window() {
+    let (ds, plan, token) = chaos_deployment(12, 23);
+    let data = payload(200_000, 6);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+    let (start, end) = (30_000u64, 90_000u64);
+    let want = &data[start as usize..=end as usize];
+
+    // Epoch 0: clean fast path.
+    let r = ds.pull_range(&token, "/UserA", "obj", start, end, PullOpts::default()).unwrap();
+    assert_eq!(r.data, want);
+
+    // Partition two holders for epochs [1, 3) and add latency to the
+    // rest: inside the window the range read must still be exact.
+    let locs = holders(&ds, "obj");
+    for &(_, cid) in locs.iter().take(2) {
+        plan.set(cid, FaultSpec::default().partition(1, 3));
+    }
+    for &(_, cid) in locs.iter().skip(2) {
+        plan.set(cid, FaultSpec::default().delay(1.0, 2));
+    }
+    plan.set_epoch(1);
+    let r = ds.pull_range(&token, "/UserA", "obj", start, end, PullOpts::default()).unwrap();
+    assert_eq!(r.data, want, "exact bytes through the partition window");
+
+    // The window closes on the epoch clock; reads are clean again.
+    plan.set_epoch(3);
+    let r = ds.pull_range(&token, "/UserA", "obj", start, end, PullOpts::default()).unwrap();
+    assert_eq!(r.data, want);
+}
+
+#[test]
+fn hang_injection_is_bounded_by_the_request_deadline() {
+    let (ds, plan, token) = chaos_deployment(12, 29);
+    let data = payload(80_000, 7);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+
+    // Every container now hangs 100 ms and drops each op — the
+    // slow-failure mode a deadline exists to bound.
+    for cid in 0..12 {
+        plan.set(cid, FaultSpec::default().hang(1.0, 100));
+    }
+    let opts = PullOpts {
+        ctx: OpContext::default().with_deadline(Deadline::in_ms(60)),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    match ds.pull(&token, "/UserA", "obj", opts) {
+        Err(Error::Timeout(_) | Error::Unavailable(_)) => {}
+        other => panic!("expected typed Timeout/Unavailable, got {other:?}"),
+    }
+    // One hedge wave of parallel 100 ms hangs, then the expired budget
+    // short-circuits — nowhere near the 1.2 s a serial stall would take.
+    assert!(t0.elapsed() < Duration::from_secs(5), "deadline bounded the stall");
+
+    let push_opts = PushOpts {
+        ctx: OpContext::default().with_deadline(Deadline::in_ms(60)),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    match ds.push(&token, "/UserA", "obj2", &data, push_opts) {
+        Err(Error::Timeout(_) | Error::Unavailable(_)) => {}
+        other => panic!("expected typed Timeout/Unavailable from push, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5));
+}
+
+#[test]
+fn repair_moves_chunks_off_flapping_containers() {
+    let (ds, plan, token) = chaos_deployment(12, 31);
+    let data = payload(100_000, 8);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+
+    // Two holders flap with period 1: dead at every odd epoch.
+    let locs = holders(&ds, "obj");
+    let flappers: Vec<u32> = locs.iter().take(2).map(|&(_, c)| c).collect();
+    for &cid in &flappers {
+        plan.set(cid, FaultSpec::default().flap(1));
+    }
+    plan.set_epoch(1);
+    let report = ds.repair().unwrap();
+    assert!(report.repaired >= 1, "repair saw the flappers down");
+    assert_eq!(report.lost, 0);
+
+    // Placement no longer references the flappers, so reads are clean
+    // whether the flappers are in a dead (odd) or alive (even) epoch.
+    let after = holders(&ds, "obj");
+    assert!(after.iter().all(|&(_, c)| !flappers.contains(&c)));
+    for epoch in [1, 2] {
+        plan.set_epoch(epoch);
+        let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+        assert_eq!(pull.data, data);
+        assert!(!pull.degraded, "epoch {epoch}: full budget restored");
+    }
+}
+
+#[test]
+fn scrubber_restores_redundancy_lost_to_a_partition() {
+    let (ds, plan, token) = chaos_deployment(12, 37);
+    let data = payload(110_000, 9);
+    ds.push(&token, "/UserA", "obj", &data, PushOpts::default()).unwrap();
+
+    // Partition two holders for a long window. With 12 containers and
+    // 10 holders there are exactly two spares to re-place onto.
+    let locs = holders(&ds, "obj");
+    let cut: Vec<u32> = locs.iter().take(2).map(|&(_, c)| c).collect();
+    for &cid in &cut {
+        plan.set(cid, FaultSpec::default().partition(1, 1_000));
+    }
+    plan.set_epoch(1);
+    let degraded = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(degraded.data, data);
+
+    let report = ds.scrub_cycle(0).unwrap();
+    assert_eq!(report.unreachable, 2, "both partitioned holders detected");
+    assert_eq!(report.chunks_healed, 2, "slots re-placed onto the spares");
+    assert_eq!(report.lost, 0);
+
+    // Still inside the window: redundancy is already back — the new
+    // placement references only live containers.
+    let after = holders(&ds, "obj");
+    assert_eq!(after.len(), 10, "full n-chunk redundancy restored");
+    assert!(after.iter().all(|&(_, c)| !cut.contains(&c)));
+    let pull = ds.pull(&token, "/UserA", "obj", PullOpts::default()).unwrap();
+    assert_eq!(pull.data, data);
+    assert!(!pull.degraded);
+
+    // After the window closes a follow-up sweep has nothing to do.
+    plan.set_epoch(1_000);
+    let again = ds.scrub_cycle(0).unwrap();
+    assert_eq!(again.unreachable, 0);
+    assert_eq!(again.chunks_healed, 0);
+}
+
+#[test]
+fn rebalance_survives_injected_errors_without_losing_data() {
+    // Skewed fleet built by hand: five tight containers absorb every
+    // upload, then four roomy ones join — one of them error-prone.
+    let ds = Arc::new(
+        DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(5, 3)))
+            .build(),
+    );
+    let plan = FaultPlan::new(41);
+    let objects = 16usize;
+    let object_bytes = 30_000usize;
+    let tight = (objects * object_bytes * 2) as u64;
+    let add = |specs: &[dynostore::container::AgentSpec], offset: usize| {
+        for c in deploy_containers(specs, specs.len(), offset as u32).containers {
+            let inner: Arc<dyn ContainerChannel> = Arc::new(LocalChannel::new(c));
+            ds.add_channel(FaultChannel::new(inner, Arc::clone(&plan))).unwrap();
+        }
+    };
+    add(&uniform_specs("tight", 5, tight, tight), 0);
+    let token = ds.register_user("UserA").unwrap();
+    let mut payloads = Vec::with_capacity(objects);
+    for i in 0..objects {
+        let data = payload(object_bytes, 500 + i as u64);
+        ds.push(&token, "/UserA", &format!("o{i}"), &data, PushOpts::default()).unwrap();
+        payloads.push(data);
+    }
+    add(&uniform_specs("roomy", 4, tight * 64, tight * 64), 5);
+    // The first roomy container flips a coin on every op.
+    plan.set(5, FaultSpec::default().error_rate(0.5));
+
+    let report = ds
+        .rebalance(RebalanceOpts { threshold: 0.05, max_moves: 128, batch_moves: 16 })
+        .unwrap();
+    assert!(report.chunks_moved >= 1, "the skew forced real migrations");
+
+    // Failed moves kept their old placement; no object lost a byte.
+    plan.clear(5);
+    for (i, data) in payloads.iter().enumerate() {
+        let pull = ds.pull(&token, "/UserA", &format!("o{i}"), PullOpts::default()).unwrap();
+        assert_eq!(&pull.data, data, "object o{i} intact after faulted rebalance");
+    }
+}
+
+#[test]
+fn fault_schedule_replays_identically_for_the_same_seed() {
+    // The whole point of a seeded plan: two deployments with the same
+    // seed and the same op sequence observe the same fault schedule.
+    let run = |seed: u64| {
+        let (ds, plan, token) = chaos_deployment(12, seed);
+        for cid in 0..12 {
+            plan.set(cid, FaultSpec::default().error_rate(0.4));
+        }
+        // Single-container ops (Regular policy) keep the per-channel op
+        // counters deterministic regardless of thread interleaving.
+        let opts = PushOpts { policy: Some(ResiliencePolicy::Regular), ..Default::default() };
+        (0..32u64)
+            .map(|i| {
+                ds.push(&token, "/UserA", &format!("d{i}"), &payload(2_000, i), opts).is_ok()
+            })
+            .collect::<Vec<bool>>()
+    };
+    let a = run(0xABCD);
+    assert_eq!(a, run(0xABCD), "same seed, same outcome schedule");
+    assert_ne!(a, run(0xABCE), "different seed, different schedule");
+    assert!(a.iter().any(|&ok| ok) && a.iter().any(|&ok| !ok), "rate 0.4 mixes outcomes");
+}
