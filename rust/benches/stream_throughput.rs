@@ -1,0 +1,242 @@
+//! Streaming data-plane bench (EXPERIMENTS.md §Stream): what does the
+//! stripe-pipelined wire path buy, and what does multipart cost?
+//!
+//! Three measurements against one deployment:
+//!
+//! * **Pipelined ingest** — in-process buffered `push` vs `push_stream`
+//!   (part-at-a-time, pipeline depth 2). The streamed path bounds peak
+//!   gateway memory at ~2 parts regardless of object size; this bench
+//!   reports what that bound costs (or saves) in wall time.
+//! * **Wire path** — streamed PUT/GET through a live localhost gateway
+//!   (the only wire path there is now: every body streams).
+//! * **Multipart** — S3-style part-by-part upload at two part sizes,
+//!   the path objects larger than the request-body cap must take.
+//!
+//! Emits `BENCH_stream.json` for CI. `--smoke` shrinks the workload.
+
+use std::sync::Arc;
+
+use dynostore::bench::{fmt_mb_s, fmt_s, measure, Table};
+use dynostore::coordinator::{GfEngine, PushOpts};
+use dynostore::erasure::ErasureConfig;
+use dynostore::json::{obj, to_string_pretty, Value};
+use dynostore::net::ServerLimits;
+use dynostore::policy::ResiliencePolicy;
+use dynostore::testkit::uniform_specs;
+use dynostore::util::Rng;
+use dynostore::{Client, DynoStore};
+
+const N: usize = 10;
+const K: usize = 7;
+/// Streaming part size used for both the in-process pipeline and the
+/// gateway (smaller than the 8 MiB production default so bench objects
+/// stripe into several parts).
+const PART: usize = 1 << 20;
+
+fn deployment() -> Arc<DynoStore> {
+    let ds = Arc::new(
+        DynoStore::builder()
+            .policy(ResiliencePolicy::Fixed(ErasureConfig::new(N, K)))
+            .engine(GfEngine::Swar)
+            .build(),
+    );
+    for c in
+        dynostore::container::deploy_containers(&uniform_specs("dc", 12, 256 << 20, 1 << 40), 12, 0)
+            .containers
+    {
+        ds.add_container(c).unwrap();
+    }
+    ds
+}
+
+struct StreamRow {
+    size: usize,
+    parts: usize,
+    buffered_s: f64,
+    streamed_s: f64,
+    remote_put_s: f64,
+    remote_get_s: f64,
+}
+
+struct MultipartRow {
+    size: usize,
+    part_size: usize,
+    parts: usize,
+    multipart_s: f64,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (sizes, iters): (&[usize], usize) = if smoke {
+        (&[1 << 20, 4 << 20], 3)
+    } else {
+        (&[1 << 20, 8 << 20, 32 << 20], 8)
+    };
+
+    let ds = deployment();
+    let token = ds.register_user("Bench").unwrap();
+    let server = dynostore::gateway::serve_with_options(
+        Arc::clone(&ds),
+        "127.0.0.1:0",
+        4,
+        ServerLimits::default(),
+        PART,
+    )
+    .unwrap();
+    let client = Client::remote(&server.addr().to_string(), &token);
+
+    println!(
+        "stream_throughput: buffered vs pipelined ingest + streamed wire path \
+         (part {} MiB, {} iters/case{})",
+        PART >> 20,
+        iters,
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let data = Rng::new(size as u64).bytes(size);
+        let mut i = 0u64;
+        let buffered = measure(1, iters, || {
+            ds.push(&token, "/Bench", &format!("buf-{size}-{i}"), &data, PushOpts::default())
+                .unwrap();
+            i += 1;
+        });
+        let mut i = 0u64;
+        let streamed = measure(1, iters, || {
+            ds.push_stream(
+                &token,
+                "/Bench",
+                &format!("str-{size}-{i}"),
+                &mut std::io::Cursor::new(&data),
+                PART,
+                PushOpts::default(),
+            )
+            .unwrap();
+            i += 1;
+        });
+        let mut i = 0u64;
+        let remote_put = measure(1, iters, || {
+            client.push("/Bench", &format!("wire-{size}-{i}"), &data).unwrap();
+            i += 1;
+        });
+        let remote_get = measure(1, iters, || {
+            let (out, _) = client.pull("/Bench", &format!("wire-{size}-0")).unwrap();
+            assert_eq!(out.len(), size);
+        });
+        rows.push(StreamRow {
+            size,
+            parts: size.div_ceil(PART),
+            buffered_s: buffered.mean_s(),
+            streamed_s: streamed.mean_s(),
+            remote_put_s: remote_put.mean_s(),
+            remote_get_s: remote_get.mean_s(),
+        });
+    }
+
+    let mut table = Table::new(
+        "Buffered vs stripe-pipelined push (in-process) + streamed wire path",
+        &["object", "parts", "buffered", "streamed", "ratio", "wire PUT", "PUT tput", "wire GET"],
+    );
+    for r in &rows {
+        table.row(vec![
+            format!("{} MiB", r.size >> 20),
+            r.parts.to_string(),
+            fmt_s(r.buffered_s),
+            fmt_s(r.streamed_s),
+            format!("{:.2}x", r.streamed_s / r.buffered_s.max(1e-12)),
+            fmt_s(r.remote_put_s),
+            fmt_mb_s(r.size as f64 / r.remote_put_s.max(1e-12)),
+            fmt_s(r.remote_get_s),
+        ]);
+    }
+    table.print();
+
+    // Multipart: the body-cap workaround, costed per part size.
+    let mp_size = *sizes.last().unwrap();
+    let mp_data = Rng::new(0x4D50).bytes(mp_size);
+    let mp_parts: &[usize] = if smoke { &[512 << 10] } else { &[512 << 10, 2 << 20] };
+    let mut mp_rows = Vec::new();
+    for (case, &part_size) in mp_parts.iter().enumerate() {
+        let mut i = 0u64;
+        let mp = measure(1, iters.min(4), || {
+            client
+                .push_multipart(
+                    "/Bench",
+                    &format!("mp-{case}-{i}"),
+                    &mp_data,
+                    part_size,
+                )
+                .unwrap();
+            i += 1;
+        });
+        mp_rows.push(MultipartRow {
+            size: mp_size,
+            part_size,
+            parts: mp_size.div_ceil(part_size),
+            multipart_s: mp.mean_s(),
+        });
+    }
+    let mut table = Table::new(
+        "Multipart upload (init + per-part PUT + complete)",
+        &["object", "part size", "parts", "wall", "tput"],
+    );
+    for r in &mp_rows {
+        table.row(vec![
+            format!("{} MiB", r.size >> 20),
+            format!("{} KiB", r.part_size >> 10),
+            r.parts.to_string(),
+            fmt_s(r.multipart_s),
+            fmt_mb_s(r.size as f64 / r.multipart_s.max(1e-12)),
+        ]);
+    }
+    table.print();
+    if let Some(last) = rows.last() {
+        println!(
+            "HEADLINE {} MiB: streamed push {:.2}x buffered wall time at O(2 x {} MiB) peak memory",
+            last.size >> 20,
+            last.streamed_s / last.buffered_s.max(1e-12),
+            PART >> 20
+        );
+    }
+
+    let stream_json: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("size", r.size.into()),
+                ("parts", r.parts.into()),
+                ("buffered_push_s", r.buffered_s.into()),
+                ("streamed_push_s", r.streamed_s.into()),
+                ("streamed_over_buffered_x", (r.streamed_s / r.buffered_s.max(1e-12)).into()),
+                ("remote_put_s", r.remote_put_s.into()),
+                ("remote_get_s", r.remote_get_s.into()),
+            ])
+        })
+        .collect();
+    let mp_json: Vec<Value> = mp_rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("size", r.size.into()),
+                ("part_size", r.part_size.into()),
+                ("parts", r.parts.into()),
+                ("multipart_s", r.multipart_s.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "stream_throughput".into()),
+        ("smoke", smoke.into()),
+        ("policy", format!("{K},{N}").into()),
+        ("stream_part_bytes", PART.into()),
+        ("stream_rows", Value::Arr(stream_json)),
+        ("multipart_rows", Value::Arr(mp_json)),
+    ]);
+    let path = "BENCH_stream.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    drop(server);
+}

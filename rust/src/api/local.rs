@@ -12,8 +12,8 @@ use crate::sim::Site;
 use crate::Result;
 
 use super::{
-    ListOptions, ObjectInfo, ObjectListing, ObjectStore, PullOptions, PullOutcome, PushOptions,
-    PushOutcome, RangeOutcome, DEFAULT_LIST_LIMIT, MAX_LIST_LIMIT,
+    ListOptions, ObjectInfo, ObjectListing, ObjectStore, PartInfo, PullOptions, PullOutcome,
+    PushOptions, PushOutcome, RangeOutcome, UploadInfo, DEFAULT_LIST_LIMIT, MAX_LIST_LIMIT,
 };
 
 /// In-process `ObjectStore` over a [`DynoStore`] deployment.
@@ -148,5 +148,69 @@ impl ObjectStore for LocalStore {
 
     fn revoke(&self, collection: &str, user: &str, perm: Permission) -> Result<()> {
         self.store.revoke(&self.token, collection, user, perm)
+    }
+
+    fn multipart_init(&self, collection: &str, name: &str) -> Result<String> {
+        self.store.multipart_init(&self.token, collection, name)
+    }
+
+    fn multipart_put(
+        &self,
+        _collection: &str,
+        _name: &str,
+        upload_id: &str,
+        part_number: u32,
+        data: &[u8],
+        opts: &PushOptions,
+    ) -> Result<PartInfo> {
+        // The replicated upload state already pins collection/name; the
+        // path arguments only matter for the HTTP backend's routing.
+        let part = self.store.multipart_put_part(
+            &self.token,
+            upload_id,
+            part_number,
+            data,
+            PushOpts { ctx: self.ctx(opts.flows, opts.deadline), policy: opts.policy },
+        )?;
+        Ok(PartInfo { number: part.number, size: part.size, etag: part.etag() })
+    }
+
+    fn multipart_parts(
+        &self,
+        _collection: &str,
+        _name: &str,
+        upload_id: &str,
+    ) -> Result<UploadInfo> {
+        let state = self.store.multipart_parts(&self.token, upload_id)?;
+        Ok(UploadInfo {
+            upload_id: upload_id.to_string(),
+            collection: state.collection,
+            name: state.name,
+            created_at: state.created_at,
+            parts: state
+                .parts
+                .values()
+                .map(|p| PartInfo { number: p.number, size: p.size, etag: p.etag() })
+                .collect(),
+        })
+    }
+
+    fn multipart_complete(
+        &self,
+        _collection: &str,
+        _name: &str,
+        upload_id: &str,
+    ) -> Result<ObjectInfo> {
+        let meta = self.store.multipart_complete(&self.token, upload_id)?;
+        Ok(ObjectInfo::from_meta(&meta))
+    }
+
+    fn multipart_abort(
+        &self,
+        _collection: &str,
+        _name: &str,
+        upload_id: &str,
+    ) -> Result<usize> {
+        self.store.multipart_abort(&self.token, upload_id)
     }
 }

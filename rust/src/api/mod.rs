@@ -141,6 +141,30 @@ pub struct RangeOutcome {
     pub partial: bool,
 }
 
+/// One recorded part of an in-progress multipart upload (the `/v1`
+/// multipart surface's part JSON).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartInfo {
+    /// 1-based part number (S3 convention; order of assembly).
+    pub number: u32,
+    pub size: u64,
+    /// Hex SHA3-256 of the part bytes (the per-part `ETag`, unquoted).
+    pub etag: String,
+}
+
+/// State of an in-progress multipart upload — what `multipart_parts`
+/// returns so an interrupted client can resume (skip parts whose etags
+/// already match) instead of re-uploading everything.
+#[derive(Debug, Clone)]
+pub struct UploadInfo {
+    pub upload_id: String,
+    pub collection: String,
+    pub name: String,
+    pub created_at: u64,
+    /// Recorded parts in part-number order.
+    pub parts: Vec<PartInfo>,
+}
+
 /// One page of a listing.
 #[derive(Debug, Clone)]
 pub struct ObjectListing {
@@ -210,6 +234,57 @@ pub trait ObjectStore: Send + Sync {
 
     /// Revoke a direct grant.
     fn revoke(&self, collection: &str, user: &str, perm: Permission) -> Result<()>;
+
+    // --- S3-style multipart uploads --------------------------------
+    //
+    // Each part is independently striped and placed when its PUT lands;
+    // `multipart_complete` assembles the recorded parts into one object
+    // atomically. Part manifests are replicated metadata, so an
+    // interrupted upload survives coordinator restarts and is resumable
+    // from `multipart_parts`. Until complete, nothing is visible under
+    // the object name; `multipart_abort` garbage-collects orphan parts.
+
+    /// Start a multipart upload of `(collection, name)`; returns the
+    /// upload id every other multipart call is keyed by.
+    fn multipart_init(&self, collection: &str, name: &str) -> Result<String>;
+
+    /// Upload (or idempotently replace) one part. Parts may arrive in
+    /// any order and any size > 0; numbers are 1-based.
+    fn multipart_put(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+        part_number: u32,
+        data: &[u8],
+        opts: &PushOptions,
+    ) -> Result<PartInfo>;
+
+    /// The upload's recorded parts (resume support).
+    fn multipart_parts(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+    ) -> Result<UploadInfo>;
+
+    /// Atomically assemble the recorded parts (in part-number order)
+    /// into one immutable object version.
+    fn multipart_complete(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+    ) -> Result<ObjectInfo>;
+
+    /// Drop the upload and garbage-collect its parts' chunks; returns
+    /// the number of parts collected.
+    fn multipart_abort(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+    ) -> Result<usize>;
 }
 
 /// Parse the `x-dyno-policy` spelling of a resilience policy:

@@ -12,8 +12,8 @@ use crate::util::now_ns;
 use crate::{Error, Result};
 
 use super::{
-    policy_header, ListOptions, ObjectInfo, ObjectListing, ObjectStore, PullOptions,
-    PullOutcome, PushOptions, PushOutcome, RangeOutcome,
+    policy_header, ListOptions, ObjectInfo, ObjectListing, ObjectStore, PartInfo, PullOptions,
+    PullOutcome, PushOptions, PushOutcome, RangeOutcome, UploadInfo,
 };
 
 /// HTTP `ObjectStore` against a gateway's `/v1` surface.
@@ -350,6 +350,134 @@ impl ObjectStore for RemoteStore {
 
     fn revoke(&self, collection: &str, user: &str, perm: Permission) -> Result<()> {
         self.acl_request("DELETE", collection, user, perm)
+    }
+
+    fn multipart_init(&self, collection: &str, name: &str) -> Result<String> {
+        let path = format!("{}?uploads", Self::object_path(collection, name));
+        let resp =
+            self.http.request("POST", &path, &[("authorization", &self.auth)], &[])?;
+        if resp.status != 200 {
+            return Err(Self::error_for(&resp));
+        }
+        let body = std::str::from_utf8(&resp.body)
+            .map_err(|_| Error::Net("multipart init response not utf-8".into()))?;
+        Ok(parse(body)?.req_str("upload_id")?.into())
+    }
+
+    fn multipart_put(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+        part_number: u32,
+        data: &[u8],
+        opts: &PushOptions,
+    ) -> Result<PartInfo> {
+        let path = format!(
+            "{}?uploadId={}&partNumber={part_number}",
+            Self::object_path(collection, name),
+            encode_key(upload_id)
+        );
+        let policy = opts.policy.as_ref().and_then(policy_header);
+        let deadline = Self::deadline_header(&opts.deadline);
+        let mut headers: Vec<(&str, &str)> = vec![("authorization", &self.auth)];
+        if let Some(p) = &policy {
+            headers.push(("x-dyno-policy", p));
+        }
+        if let Some(d) = &deadline {
+            headers.push(("x-dyno-deadline-ms", d));
+        }
+        let resp = self.http.put(&path, &headers, data)?;
+        if resp.status != 200 {
+            return Err(Self::error_for(&resp));
+        }
+        let body = std::str::from_utf8(&resp.body)
+            .map_err(|_| Error::Net("multipart part response not utf-8".into()))?;
+        let v = parse(body)?;
+        Ok(PartInfo {
+            number: v.req_u64("number")? as u32,
+            size: v.req_u64("size")?,
+            etag: v.req_str("etag")?.into(),
+        })
+    }
+
+    fn multipart_parts(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+    ) -> Result<UploadInfo> {
+        let path = format!(
+            "{}?uploadId={}",
+            Self::object_path(collection, name),
+            encode_key(upload_id)
+        );
+        let resp = self.http.get(&path, &[("authorization", &self.auth)])?;
+        if resp.status != 200 {
+            return Err(Self::error_for(&resp));
+        }
+        let body = std::str::from_utf8(&resp.body)
+            .map_err(|_| Error::Net("multipart listing not utf-8".into()))?;
+        let v = parse(body)?;
+        let parts = v
+            .get("parts")
+            .as_arr()
+            .ok_or_else(|| Error::Net("multipart listing missing parts".into()))?
+            .iter()
+            .map(|p| {
+                Ok(PartInfo {
+                    number: p.req_u64("number")? as u32,
+                    size: p.req_u64("size")?,
+                    etag: p.req_str("etag")?.into(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(UploadInfo {
+            upload_id: v.req_str("upload_id")?.into(),
+            collection: v.req_str("collection")?.into(),
+            name: v.req_str("name")?.into(),
+            created_at: v.req_u64("created_at")?,
+            parts,
+        })
+    }
+
+    fn multipart_complete(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+    ) -> Result<ObjectInfo> {
+        let path = format!(
+            "{}?uploadId={}",
+            Self::object_path(collection, name),
+            encode_key(upload_id)
+        );
+        let resp =
+            self.http.request("POST", &path, &[("authorization", &self.auth)], &[])?;
+        if resp.status != 201 {
+            return Err(Self::error_for(&resp));
+        }
+        Self::info_from_headers(&resp, collection, name)
+    }
+
+    fn multipart_abort(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+    ) -> Result<usize> {
+        let path = format!(
+            "{}?uploadId={}",
+            Self::object_path(collection, name),
+            encode_key(upload_id)
+        );
+        let resp = self.http.delete(&path, &[("authorization", &self.auth)])?;
+        if resp.status != 200 {
+            return Err(Self::error_for(&resp));
+        }
+        let body = std::str::from_utf8(&resp.body)
+            .map_err(|_| Error::Net("multipart abort response not utf-8".into()))?;
+        Ok(parse(body)?.req_u64("aborted_parts")? as usize)
     }
 }
 

@@ -86,6 +86,21 @@ impl Encryption {
     }
 }
 
+/// Result of a multipart upload driven by the client.
+#[derive(Debug, Clone)]
+pub struct MultipartReport {
+    /// Metadata of the committed object version.
+    pub info: ObjectInfo,
+    pub upload_id: String,
+    /// Total parts the object was assembled from.
+    pub parts: usize,
+    /// Parts an earlier interrupted attempt had already recorded with a
+    /// matching etag — skipped instead of re-uploaded (resume).
+    pub parts_skipped: usize,
+    /// Wallclock seconds for the whole upload (parts + complete).
+    pub seconds: f64,
+}
+
 /// Aggregate result of a multi-object client workload.
 #[derive(Debug, Clone, Default)]
 pub struct BatchReport {
@@ -408,6 +423,136 @@ impl Client {
             &mut out.data,
         );
         Ok((out.data, out.seconds))
+    }
+
+    /// Upload one object through an S3-style multipart upload: the
+    /// payload is split into `part_size`-byte parts, each independently
+    /// striped and placed (and independently retried under the client's
+    /// [`RetryPolicy`]), then assembled atomically. This is the path
+    /// for objects larger than the gateway's request-body cap — each
+    /// part is its own request, so only `part_size` must fit under it.
+    ///
+    /// Encryption (when configured) is applied to the whole payload
+    /// once, exactly as a single-shot push would; parts are contiguous
+    /// slices of that ciphertext, so pulls decrypt identically.
+    pub fn push_multipart(
+        &self,
+        collection: &str,
+        name: &str,
+        data: &[u8],
+        part_size: usize,
+    ) -> Result<MultipartReport> {
+        let deadline = self.op_deadline();
+        let payload = self.prepare_multipart(collection, name, data, part_size, deadline)?;
+        let upload_id = self
+            .retry
+            .run(Self::retry_seed(collection, name), deadline, |_| {
+                self.store.multipart_init(collection, name)
+            })?;
+        self.multipart_send(collection, name, &upload_id, &payload, part_size, deadline)
+    }
+
+    /// Resume an interrupted multipart upload: parts the server already
+    /// recorded with a matching etag are skipped; missing or mismatched
+    /// parts are (re-)uploaded; then the upload completes. `data` and
+    /// `part_size` must be the ones the upload was started with.
+    pub fn resume_multipart(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+        data: &[u8],
+        part_size: usize,
+    ) -> Result<MultipartReport> {
+        let deadline = self.op_deadline();
+        let payload = self.prepare_multipart(collection, name, data, part_size, deadline)?;
+        self.multipart_send(collection, name, upload_id, &payload, part_size, deadline)
+    }
+
+    /// Abort an in-progress multipart upload, garbage-collecting the
+    /// chunks of every recorded part; returns how many parts were
+    /// collected.
+    pub fn abort_multipart(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+    ) -> Result<usize> {
+        self.store.multipart_abort(collection, name, upload_id)
+    }
+
+    fn prepare_multipart(
+        &self,
+        collection: &str,
+        name: &str,
+        data: &[u8],
+        part_size: usize,
+        deadline: Deadline,
+    ) -> Result<Vec<u8>> {
+        deadline.check("multipart push")?;
+        if part_size == 0 {
+            return Err(Error::Invalid("part size must be positive".into()));
+        }
+        if data.is_empty() {
+            return Err(Error::Invalid(
+                "multipart upload needs a non-empty payload (use push for empty objects)"
+                    .into(),
+            ));
+        }
+        self.outbound_payload(collection, name, data)
+    }
+
+    fn multipart_send(
+        &self,
+        collection: &str,
+        name: &str,
+        upload_id: &str,
+        payload: &[u8],
+        part_size: usize,
+        deadline: Deadline,
+    ) -> Result<MultipartReport> {
+        let t0 = crate::util::now_ns();
+        // What the server already holds, for resume: matching etags are
+        // skipped, mismatches are replaced.
+        let recorded = self.store.multipart_parts(collection, name, upload_id)?;
+        let mut have: std::collections::HashMap<u32, String> =
+            recorded.parts.iter().map(|p| (p.number, p.etag.clone())).collect();
+        let mut skipped = 0usize;
+        let mut number = 0u32;
+        for part in payload.chunks(part_size) {
+            number += 1;
+            let etag = crate::util::to_hex(&sha3_256(part));
+            if have.remove(&number).is_some_and(|recorded| recorded == etag) {
+                skipped += 1;
+                continue;
+            }
+            let opts = PushOptions { policy: self.policy, flows: 1, deadline };
+            self.retry.run(
+                Self::retry_seed(collection, name) ^ u64::from(number),
+                deadline,
+                |_| self.store.multipart_put(collection, name, upload_id, number, part, &opts),
+            )?;
+        }
+        // Stale parts past this payload's count would be assembled into
+        // the object by complete; refuse rather than commit corruption
+        // (a changed part size between attempts gets here).
+        if !have.is_empty() {
+            return Err(Error::Invalid(format!(
+                "upload {upload_id} holds {} recorded part(s) beyond this payload \
+                 (different part size?); abort it and push again",
+                have.len()
+            )));
+        }
+        let info = self.retry.run(Self::retry_seed(collection, name), deadline, |_| {
+            self.store.multipart_complete(collection, name, upload_id)
+        })?;
+        Ok(MultipartReport {
+            info,
+            upload_id: upload_id.to_string(),
+            parts: number as usize,
+            parts_skipped: skipped,
+            seconds: (crate::util::now_ns() - t0) as f64 / 1e9,
+        })
     }
 
     /// Object metadata without data-plane traffic (size, version, ETag).

@@ -78,6 +78,11 @@ pub struct Config {
     /// Gateway socket read/write timeout in seconds (slowloris guard;
     /// 408 when a client stalls mid-headers).
     pub conn_timeout_secs: u64,
+    /// Streaming-ingest part size in MiB: object PUT bodies are
+    /// erasure-coded and placed one part at a time as bytes arrive, so
+    /// gateway memory per upload is ~2 parts, not the object size. Also
+    /// the natural part size for client multipart uploads.
+    pub part_size_mb: u64,
 }
 
 impl Default for Config {
@@ -99,6 +104,7 @@ impl Default for Config {
             scrub_interval_secs: 0,
             scrub_sample: DEFAULT_SCRUB_SAMPLE,
             conn_timeout_secs: crate::net::DEFAULT_CONN_TIMEOUT.as_secs(),
+            part_size_mb: (crate::gateway::DEFAULT_STREAM_PART_SIZE >> 20) as u64,
         }
     }
 }
@@ -140,6 +146,7 @@ impl Config {
         cfg.scrub_sample = scrub.opt_u64("sample", cfg.scrub_sample as u64) as usize;
         cfg.conn_timeout_secs =
             v.opt_u64("conn_timeout_secs", cfg.conn_timeout_secs).max(1);
+        cfg.part_size_mb = v.opt_u64("part_size_mb", cfg.part_size_mb).max(1);
         if let Some(arr) = v.get("containers").as_arr() {
             for c in arr {
                 // An entry with an `endpoint` is a remote agent; local
@@ -558,6 +565,18 @@ mod tests {
         assert_eq!(cfg.scrub_interval_secs, 7);
         assert_eq!(cfg.scrub_sample, 16);
         assert_eq!(cfg.conn_timeout_secs, 3);
+    }
+
+    #[test]
+    fn part_size_parses_with_default() {
+        let cfg = Config::from_json("{}").unwrap();
+        assert_eq!(cfg.part_size_mb, 8, "default streaming part is 8 MiB");
+        assert_eq!(Config::from_json("{\"part_size_mb\": 2}").unwrap().part_size_mb, 2);
+        assert_eq!(
+            Config::from_json("{\"part_size_mb\": 0}").unwrap().part_size_mb,
+            1,
+            "part size clamps to at least 1 MiB"
+        );
     }
 
     #[test]

@@ -26,7 +26,7 @@
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 use crate::erasure::{Chunk, ErasureConfig, CHUNK_HEADER_LEN};
-use crate::metadata::{ObjectMeta, ObjectPlacement};
+use crate::metadata::{ObjectMeta, ObjectPlacement, PartManifest};
 use crate::paxos::{CommandOutcome, MetaCommand};
 use crate::placement::rebalance::{plan_moves, spread, ObjectChunks, PlannedMove};
 use crate::util::now_ns;
@@ -204,6 +204,9 @@ impl DynoStore {
                             }
                         }
                     }
+                    ObjectPlacement::Striped { parts } => {
+                        self.migrate_striped(&meta, parts, id)?
+                    }
                 };
                 progressed |= outcome.moved > 0;
                 report.chunks_moved += outcome.moved;
@@ -371,7 +374,9 @@ impl DynoStore {
         let missing: Vec<u8> =
             moves.iter().map(|m| m.index).filter(|i| !payload.contains_key(i)).collect();
         if !missing.is_empty() {
-            if let Some(rebuilt) = self.rebuild_chunks(meta, n, k, current, &missing)? {
+            if let Some(rebuilt) =
+                self.rebuild_chunks(&meta.sha3, meta.size, n, k, current, &missing)?
+            {
                 out.reconstructed += rebuilt.len();
                 payload.extend(rebuilt);
             }
@@ -444,6 +449,13 @@ impl DynoStore {
                         chunks.iter().any(|&(i, c)| i == idx && c == to)
                     }
                     ObjectPlacement::Single { container } => container == to,
+                    // A same-keyed copy could only be referenced by a
+                    // part carrying this object's own hash and size.
+                    ObjectPlacement::Striped { parts } => parts.iter().any(|p| {
+                        p.sha3 == meta.sha3
+                            && p.size == meta.size
+                            && p.chunks.contains(&(idx, to))
+                    }),
                 })
                 .unwrap_or(false);
             if referenced {
@@ -530,13 +542,15 @@ impl DynoStore {
         Ok(out)
     }
 
-    /// Rebuild the wanted chunk indices from any k of the object's other
-    /// chunks (shared wave collector, as repair uses). `None` when fewer
-    /// than k clean chunks are reachable.
+    /// Rebuild the wanted chunk indices of one erasure unit (object or
+    /// Striped part — `sha3`/`size` are the unit's own) from any k of
+    /// its other chunks (shared wave collector, as repair uses). `None`
+    /// when fewer than k clean chunks are reachable.
     #[allow(clippy::type_complexity)]
     fn rebuild_chunks(
         &self,
-        meta: &ObjectMeta,
+        sha3: &[u8; 32],
+        size: u64,
         n: usize,
         k: usize,
         current: &[(u8, u32)],
@@ -545,7 +559,7 @@ impl DynoStore {
         let codec = self.codec(ErasureConfig::new(n, k))?;
         let sources: Vec<(u8, u32)> =
             current.iter().filter(|&&(i, _)| !want.contains(&i)).copied().collect();
-        let (collected, _) = self.collect_chunks(meta, k, &sources)?;
+        let (collected, _) = self.collect_chunks(sha3, size, k, &sources)?;
         if collected.len() < k {
             return Ok(None);
         }
@@ -554,6 +568,231 @@ impl DynoStore {
         Ok(Some(
             want.iter().map(|&i| (i, std::mem::take(&mut all[i as usize].packed))).collect(),
         ))
+    }
+
+    /// Drain every chunk a Striped object holds on `from`. Each part is
+    /// migrated as its own erasure unit (read-or-rebuild → write →
+    /// verify, keys bound to the PART's hash/size), then ALL part
+    /// updates commit through one placement CAS — a reader racing the
+    /// drain sees either the old placement or the new one, never a
+    /// half-moved mixture, and per-part moves stay within each part's
+    /// parity budget.
+    fn migrate_striped(
+        &self,
+        meta: &ObjectMeta,
+        parts: &[PartManifest],
+        from: u32,
+    ) -> Result<MigrateOutcome> {
+        let mut out = MigrateOutcome::default();
+        let mut new_parts: Vec<PartManifest> = Vec::with_capacity(parts.len());
+        // Per part: the (index, from, to) moves that landed and verified.
+        let mut moved: Vec<(PartManifest, Vec<(u8, u32, u32)>)> = Vec::new();
+        for part in parts {
+            let idxs: Vec<u8> = part
+                .chunks
+                .iter()
+                .filter(|&&(_, c)| c == from)
+                .map(|&(i, _)| i)
+                .collect();
+            if idxs.is_empty() {
+                new_parts.push(part.clone());
+                continue;
+            }
+            let holders: HashSet<u32> = part.chunks.iter().map(|&(_, c)| c).collect();
+            let chunk_bytes = self.packed_chunk_len(part.n, part.k, part.size)?;
+            let infos: Vec<_> = self
+                .registry
+                .placement_infos()
+                .into_iter()
+                .filter(|i| i.alive && !holders.contains(&i.id))
+                .collect();
+            let targets = match self.placer.select(&infos, chunk_bytes, idxs.len()) {
+                Ok(t) => t,
+                Err(_) => {
+                    out.failed += idxs.len();
+                    new_parts.push(part.clone());
+                    continue;
+                }
+            };
+
+            // Read the moving chunks off the source (skip a dead source
+            // and fall through to parity rebuild).
+            let mut payload: HashMap<u8, Vec<u8>> = HashMap::new();
+            let mut jobs = Vec::new();
+            for &idx in &idxs {
+                if let Ok(ch) = self.registry.get(from) {
+                    if ch.is_alive() {
+                        jobs.push(ChunkJob {
+                            index: idx,
+                            channel: ch,
+                            key: chunk_key(&part.sha3, part.size, idx),
+                            data: None,
+                        });
+                    }
+                }
+            }
+            for xfer in self.dispatch_chunk_io(jobs)? {
+                let ChunkXfer { index, cid, transport, site, wall_s, res, .. } = xfer;
+                let (ok, sim_s) = match res {
+                    Ok((Some(bytes), dev_s)) => match Chunk::unpack(&bytes) {
+                        Ok(c)
+                            if c.header.index == index
+                                && c.header.object_hash == part.sha3 =>
+                        {
+                            let net_s = self.wan.transfer_s(
+                                site,
+                                self.gateway_site,
+                                bytes.len() as u64,
+                                1,
+                            );
+                            payload.insert(index, bytes);
+                            (true, net_s + dev_s)
+                        }
+                        _ => (false, 0.0),
+                    },
+                    _ => (false, 0.0),
+                };
+                out.chunk_io.push(ChunkIoReport {
+                    index,
+                    container: cid,
+                    transport,
+                    ok,
+                    sim_s,
+                    wall_s,
+                });
+            }
+            let missing: Vec<u8> =
+                idxs.iter().copied().filter(|i| !payload.contains_key(i)).collect();
+            if !missing.is_empty() {
+                if let Some(rebuilt) = self.rebuild_chunks(
+                    &part.sha3,
+                    part.size,
+                    part.n,
+                    part.k,
+                    &part.chunks,
+                    &missing,
+                )? {
+                    out.reconstructed += rebuilt.len();
+                    payload.extend(rebuilt);
+                }
+            }
+
+            // Write to the selected targets, verify before commit.
+            let mut jobs = Vec::new();
+            for (&idx, target) in idxs.iter().zip(&targets) {
+                match payload.remove(&idx) {
+                    Some(bytes) => match self.registry.get(target.id) {
+                        Ok(ch) => jobs.push(ChunkJob {
+                            index: idx,
+                            channel: ch,
+                            key: chunk_key(&part.sha3, part.size, idx),
+                            data: Some(bytes),
+                        }),
+                        Err(_) => out.failed += 1,
+                    },
+                    None => out.failed += 1, // unreadable and unrecoverable
+                }
+            }
+            let mut new_chunks = part.chunks.clone();
+            let mut part_moves: Vec<(u8, u32, u32)> = Vec::new();
+            for xfer in self.dispatch_chunk_io(jobs)? {
+                let ChunkXfer { index, cid, transport, site, wire_len, wall_s, res } = xfer;
+                let verified = res.is_ok()
+                    && self
+                        .registry
+                        .get(cid)
+                        .ok()
+                        .map(|ch| {
+                            ch.exists(&chunk_key(&part.sha3, part.size, index))
+                                .unwrap_or(false)
+                        })
+                        .unwrap_or(false);
+                let sim_s = match (&res, verified) {
+                    (Ok((_, dev_s)), true) => {
+                        self.wan.transfer_s(self.gateway_site, site, wire_len as u64, 1)
+                            + dev_s
+                    }
+                    _ => 0.0,
+                };
+                if verified {
+                    if let Some(slot) =
+                        new_chunks.iter_mut().find(|c| c.0 == index && c.1 == from)
+                    {
+                        slot.1 = cid;
+                        part_moves.push((index, from, cid));
+                    }
+                } else {
+                    out.failed += 1;
+                }
+                out.chunk_io.push(ChunkIoReport {
+                    index,
+                    container: cid,
+                    transport,
+                    ok: verified,
+                    sim_s,
+                    wall_s,
+                });
+            }
+            new_chunks.sort_by_key(|&(i, _)| i);
+            let mut updated = part.clone();
+            updated.chunks = new_chunks;
+            if !part_moves.is_empty() {
+                moved.push((part.clone(), part_moves));
+            }
+            new_parts.push(updated);
+        }
+        if moved.is_empty() {
+            return Ok(out);
+        }
+
+        // One CAS for all parts, against the placement this pass read.
+        let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+            uuid: meta.uuid.clone(),
+            placement: ObjectPlacement::Striped { parts: new_parts },
+            expect: Some(meta.placement.clone()),
+        })?;
+        if let CommandOutcome::Failed(_) = outcome {
+            // Roll back the target copies — unless the committed
+            // placement references them through a matching part (chunk
+            // keys carry no container component, so an unconditional
+            // delete could destroy a concurrent migration's copy).
+            let committed =
+                self.meta.read(|s| s.get_by_uuid(&meta.uuid)).map(|m| m.placement).ok();
+            for (part, mvs) in &moved {
+                for &(idx, _, to) in mvs {
+                    let referenced = matches!(
+                        &committed,
+                        Some(ObjectPlacement::Striped { parts })
+                            if parts.iter().any(|p| {
+                                p.sha3 == part.sha3
+                                    && p.size == part.size
+                                    && p.chunks.contains(&(idx, to))
+                            })
+                    );
+                    if !referenced {
+                        if let Ok(ch) = self.registry.get(to) {
+                            let _ = ch.delete(&chunk_key(&part.sha3, part.size, idx));
+                        }
+                    }
+                    out.failed += 1;
+                }
+            }
+            return Ok(out);
+        }
+
+        // Commit visible: drop the drained source copies (best effort).
+        for (part, mvs) in &moved {
+            for &(idx, from_id, _) in mvs {
+                if let Ok(ch) = self.registry.get(from_id) {
+                    let _ = ch.delete(&chunk_key(&part.sha3, part.size, idx));
+                }
+                out.moved += 1;
+            }
+        }
+        self.metrics
+            .chunks_migrated
+            .fetch_add(out.moved as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
     }
 
     /// Migrate a Regular-policy (whole-object) placement off `from`:

@@ -13,7 +13,7 @@ mod reports;
 mod scrub;
 
 pub use lifecycle::RebalanceOpts;
-pub use ops::{OpContext, PullOpts, PushOpts};
+pub use ops::{ObjectByteStream, OpContext, PullOpts, PushOpts};
 pub use recovery::RecoveryVerifyReport;
 pub use reports::{
     ChunkIoReport, DecommissionReport, PullReport, PushReport, RangeReport, RebalanceReport,
@@ -119,6 +119,16 @@ pub struct Metrics {
     /// Objects the scrubber could not reconstruct (fewer than k valid
     /// chunks reachable — data loss until containers return).
     pub scrub_lost: AtomicU64,
+    /// Streamed transfers (push or pull) currently in flight — the
+    /// gauge that makes streaming memory-boundedness observable: peak
+    /// gateway memory ≈ streams_active × stripe × pipeline depth.
+    pub streams_active: AtomicU64,
+    /// Multipart uploads opened / completed / aborted (counters; the
+    /// `multipart_open` gauge in `/metrics` is read live from the
+    /// metadata plane so it survives restarts).
+    pub multipart_inits: AtomicU64,
+    pub multipart_completes: AtomicU64,
+    pub multipart_aborts: AtomicU64,
 }
 
 impl Metrics {
@@ -146,7 +156,30 @@ impl Metrics {
         m.insert("scrub_chunks_healed", self.scrub_chunks_healed.load(Ordering::Relaxed));
         m.insert("scrub_corrupt_found", self.scrub_corrupt_found.load(Ordering::Relaxed));
         m.insert("scrub_lost", self.scrub_lost.load(Ordering::Relaxed));
+        m.insert("streams_active", self.streams_active.load(Ordering::Relaxed));
+        m.insert("multipart_inits", self.multipart_inits.load(Ordering::Relaxed));
+        m.insert("multipart_completes", self.multipart_completes.load(Ordering::Relaxed));
+        m.insert("multipart_aborts", self.multipart_aborts.load(Ordering::Relaxed));
         m
+    }
+
+    /// RAII handle for the `streams_active` gauge: created at stream
+    /// start, released on drop — success, error, and abandoned-stream
+    /// paths all decrement exactly once.
+    pub fn begin_stream(&self) -> StreamGuard<'_> {
+        self.streams_active.fetch_add(1, Ordering::Relaxed);
+        StreamGuard { metrics: self }
+    }
+}
+
+/// See [`Metrics::begin_stream`].
+pub struct StreamGuard<'a> {
+    metrics: &'a Metrics,
+}
+
+impl Drop for StreamGuard<'_> {
+    fn drop(&mut self) {
+        self.metrics.streams_active.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -380,6 +413,12 @@ impl DynoStore {
     /// Parallelism of the chunk-I/O dispatch pool.
     pub fn io_parallelism(&self) -> usize {
         self.io_pool.size()
+    }
+
+    /// Open (uncommitted) multipart uploads, read live from the
+    /// metadata plane — the `multipart_open` gauge.
+    pub fn open_upload_count(&self) -> u64 {
+        self.meta.read(|s| Ok(s.open_upload_count() as u64)).unwrap_or(0)
     }
 
     /// Create a user namespace and issue the user's OAuth-style token.

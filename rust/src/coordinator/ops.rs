@@ -16,7 +16,10 @@ use std::sync::Arc;
 use crate::container::{ContainerChannel, DataContainer};
 use crate::crypto::sha3_256;
 use crate::erasure::{Chunk, ErasureConfig};
-use crate::metadata::{ObjectMeta, ObjectPage, ObjectPlacement, Permission};
+use crate::metadata::{
+    composite_sha3, ObjectMeta, ObjectPage, ObjectPlacement, PartManifest, Permission,
+    UploadState,
+};
 use crate::paxos::{CommandOutcome, MetaCommand};
 use crate::policy::{select_dynamic, ResiliencePolicy};
 use crate::resilience::Deadline;
@@ -104,6 +107,39 @@ pub(super) fn chunk_key(sha3: &[u8; 32], len: u64, index: u8) -> String {
     format!("chk-{}-{len}-{index}", &to_hex(sha3)[..16])
 }
 
+/// Read up to `cap` bytes from `reader` (short only at end of stream).
+/// The returned buffer is the unit of streaming memory: the pipeline
+/// never holds more than two of these at once.
+fn read_part(reader: &mut dyn std::io::Read, cap: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; cap];
+    let mut filled = 0usize;
+    while filled < cap {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Net(format!("stream read: {e}"))),
+        }
+    }
+    buf.truncate(filled);
+    Ok(buf)
+}
+
+/// Result of repairing one erasure unit (a whole Erasure object or one
+/// part of a Striped one). The metadata commit stays with the caller:
+/// an Erasure object commits its unit directly, a Striped object folds
+/// every part's outcome into a single placement CAS.
+enum UnitOutcome {
+    /// All n chunk slots placed and live — nothing to do.
+    Healthy,
+    /// Fewer than k chunks reachable; the unit cannot be reconstructed.
+    Lost,
+    /// Reconstructed and re-placed. `chunks` is the updated slot list
+    /// to commit; `newly_placed` the subset written this pass (rollback
+    /// set if the CAS loses); `moved` counts heals + re-placements.
+    Repaired { chunks: Vec<(u8, u32)>, moved: usize, newly_placed: Vec<(u8, u32)> },
+}
+
 /// One unit of chunk I/O for the concurrent dispatcher: an upload when
 /// `data` is present, a download otherwise.
 pub(super) struct ChunkJob {
@@ -128,6 +164,75 @@ pub(super) struct ChunkXfer {
     pub(super) wall_s: f64,
     /// (payload for downloads, simulated device seconds).
     pub(super) res: Result<(Option<Vec<u8>>, f64)>,
+}
+
+/// A lazily-materialized object read, produced by
+/// [`DynoStore::pull_stream`]. Each [`next_block`](Self::next_block)
+/// call reconstructs one erasure part (for `Striped` objects), so the
+/// gateway can write a part to the wire while the next one is still on
+/// the containers — peak memory O(part) instead of O(object). Dropping
+/// the stream (finished or abandoned mid-read) releases the
+/// `streams_active` gauge.
+pub struct ObjectByteStream {
+    store: Arc<DynoStore>,
+    meta: ObjectMeta,
+    parts: Vec<PartManifest>,
+    next: usize,
+    deadline: Deadline,
+    buffered: Option<Vec<u8>>,
+}
+
+impl ObjectByteStream {
+    /// Metadata of the object being streamed.
+    pub fn meta(&self) -> &ObjectMeta {
+        &self.meta
+    }
+
+    /// Total object length — the Content-Length the gateway frames the
+    /// response with before any part is fetched.
+    pub fn total_len(&self) -> u64 {
+        self.meta.size
+    }
+
+    /// The next block of object bytes in order, or `None` at the end.
+    /// Errors mid-stream (a part lost past its parity budget, an
+    /// expired deadline) surface here; the gateway has already sent
+    /// headers by then, so it aborts the connection rather than
+    /// serving a truncated body as success.
+    pub fn next_block(&mut self) -> Result<Option<Vec<u8>>> {
+        if let Some(data) = self.buffered.take() {
+            return Ok(Some(data));
+        }
+        if self.next >= self.parts.len() {
+            return Ok(None);
+        }
+        let part = self.parts[self.next].clone();
+        self.next += 1;
+        let label = format!("{}#part{}", self.meta.uuid, part.number);
+        let (bytes, _, _, _, _, _, _) = self.store.pull_erasure_unit(
+            &part.sha3,
+            part.size,
+            &label,
+            part.n,
+            part.k,
+            &part.chunks,
+            self.deadline,
+        )?;
+        self.store
+            .metrics
+            .bytes_out
+            .fetch_add(bytes.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(Some(bytes))
+    }
+}
+
+impl Drop for ObjectByteStream {
+    fn drop(&mut self) {
+        self.store
+            .metrics
+            .streams_active
+            .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+    }
 }
 
 impl DynoStore {
@@ -190,15 +295,19 @@ impl DynoStore {
             .collect())
     }
 
-    /// Collect up to `k` valid chunks of `meta` from `sources` —
-    /// `(index, container)` pairs tried in order, fetched in concurrent
-    /// waves, skipping known-dead channels so a dead endpoint never
-    /// stalls a wave for its transport timeout. Returns the collected
-    /// chunks plus the sources that were skipped, failed, or served
-    /// invalid bytes (repair heals those; reconstruction ignores them).
+    /// Collect up to `k` valid chunks of one erasure-coded unit (a
+    /// whole Erasure object, or one part of a Striped one — `sha3` and
+    /// `size` are the *unit's*, which is what its chunk keys and
+    /// headers bind to) from `sources` — `(index, container)` pairs
+    /// tried in order, fetched in concurrent waves, skipping known-dead
+    /// channels so a dead endpoint never stalls a wave for its
+    /// transport timeout. Returns the collected chunks plus the sources
+    /// that were skipped, failed, or served invalid bytes (repair heals
+    /// those; reconstruction ignores them).
     pub(super) fn collect_chunks(
         &self,
-        meta: &ObjectMeta,
+        sha3: &[u8; 32],
+        size: u64,
         k: usize,
         sources: &[(u8, u32)],
     ) -> Result<(Vec<Chunk>, Vec<(u8, u32)>)> {
@@ -214,7 +323,7 @@ impl DynoStore {
                     Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
                         index: idx,
                         channel,
-                        key: chunk_key(&meta.sha3, meta.size, idx),
+                        key: chunk_key(sha3, size, idx),
                         data: None,
                     }),
                     _ => bad.push((idx, cid)),
@@ -228,7 +337,7 @@ impl DynoStore {
                 if let Ok((Some(bytes), _)) = &xfer.res {
                     if let Ok(chunk) = Chunk::unpack(bytes) {
                         if chunk.header.index == xfer.index
-                            && chunk.header.object_hash == meta.sha3
+                            && chunk.header.object_hash == *sha3
                         {
                             collected.push(chunk);
                             valid = true;
@@ -381,6 +490,436 @@ impl DynoStore {
             backend: self.backend_name(),
             chunk_io,
         })
+    }
+
+    /// Streaming upload: erasure-encode and disperse the body one
+    /// part at a time as bytes arrive, instead of buffering the whole
+    /// object. Part p's chunk uploads overlap the read of part p+1
+    /// (pipeline depth 2), so peak gateway memory is bounded by
+    /// 2 × `part_size` regardless of object size. Objects that fit in
+    /// a single part delegate to the buffered [`push`] and produce
+    /// byte-identical metadata (same SHA3/ETag, same `Erasure`
+    /// placement); larger objects commit a `Striped` placement whose
+    /// object hash is the composite of per-part hashes.
+    pub fn push_stream(
+        &self,
+        token: &str,
+        collection: &str,
+        name: &str,
+        reader: &mut dyn std::io::Read,
+        part_size: usize,
+        opts: PushOpts,
+    ) -> Result<PushReport> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        if !claims.has_scope("write") {
+            return Err(Error::PermissionDenied("token lacks write scope".into()));
+        }
+        if part_size == 0 {
+            return Err(Error::Invalid("part size must be positive".into()));
+        }
+        let policy = opts.policy.unwrap_or(self.default_policy);
+        let ctx = opts.ctx;
+        ctx.deadline.check("push stream")?;
+        let _stream = self.metrics.begin_stream();
+
+        if matches!(policy, ResiliencePolicy::Regular) {
+            // Regular placement is a single whole-object copy — there
+            // is no stripe to pipeline, so drain the body and take the
+            // buffered path.
+            let mut data = Vec::new();
+            loop {
+                let buf = read_part(reader, part_size)?;
+                if buf.is_empty() {
+                    break;
+                }
+                data.extend_from_slice(&buf);
+            }
+            return self.push(token, collection, name, &data, PushOpts {
+                ctx,
+                policy: Some(policy),
+            });
+        }
+
+        let first = read_part(reader, part_size)?;
+        if first.len() < part_size {
+            // ≤ one part: buffered push, byte-identical result.
+            return self.push(token, collection, name, &first, PushOpts {
+                ctx,
+                policy: Some(policy),
+            });
+        }
+        let second = read_part(reader, part_size)?;
+        if second.is_empty() {
+            return self.push(token, collection, name, &first, PushOpts {
+                ctx,
+                policy: Some(policy),
+            });
+        }
+
+        // ≥ 2 parts: pipeline. One dispersal runs on a scoped worker
+        // while this thread reads the next part from the wire; the
+        // worker is joined before the next dispatch, so at most two
+        // part buffers are alive at once. A failed read or dispersal
+        // aborts with no metadata commit — already-written chunks are
+        // left behind under content-derived keys (harmless, same
+        // rationale as an aborted buffered push).
+        let mut parts: Vec<PartManifest> = Vec::new();
+        let mut encode_s = 0.0;
+        let mut encode_wall_s = 0.0;
+        let mut disperse_s = 0.0;
+        let mut stored_bytes = 0u64;
+        let mut chunk_io: Vec<ChunkIoReport> = Vec::new();
+        let mut total_len = 0u64;
+        std::thread::scope(|scope| -> Result<()> {
+            type PartOut = Result<(PartManifest, f64, f64, f64, u64, Vec<ChunkIoReport>)>;
+            let mut pending: Option<std::thread::ScopedJoinHandle<'_, PartOut>> = None;
+            let mut number: u32 = 0;
+            let mut queued = Some(first);
+            let mut lookahead = Some(second);
+            loop {
+                let buf = match queued.take() {
+                    Some(b) => b,
+                    None => unreachable!("queued refilled each iteration"),
+                };
+                if buf.is_empty() {
+                    break;
+                }
+                number += 1;
+                if let Some(handle) = pending.take() {
+                    let (part, e_s, ew_s, d_s, stored, io) = handle
+                        .join()
+                        .map_err(|_| Error::Pool("part dispersal worker panicked".into()))??;
+                    encode_s += e_s;
+                    encode_wall_s += ew_s;
+                    disperse_s += d_s;
+                    stored_bytes += stored;
+                    chunk_io.extend(io);
+                    parts.push(part);
+                }
+                total_len += buf.len() as u64;
+                let num = number;
+                let deadline = ctx.deadline;
+                pending = Some(scope.spawn(move || {
+                    self.disperse_part(&buf, num, policy, deadline)
+                }));
+                queued = Some(match lookahead.take() {
+                    Some(b) => b,
+                    None => read_part(reader, part_size)?,
+                });
+            }
+            if let Some(handle) = pending.take() {
+                let (part, e_s, ew_s, d_s, stored, io) = handle
+                    .join()
+                    .map_err(|_| Error::Pool("part dispersal worker panicked".into()))??;
+                encode_s += e_s;
+                encode_wall_s += ew_s;
+                disperse_s += d_s;
+                stored_bytes += stored;
+                chunk_io.extend(io);
+                parts.push(part);
+            }
+            Ok(())
+        })?;
+
+        let hash = composite_sha3(&parts);
+        let ingress_s =
+            self.wan.transfer_s(ctx.client_site, self.gateway_site, total_len, ctx.flows);
+        let placement = ObjectPlacement::Striped { parts };
+        let placed_ids = placement.containers();
+        let t0 = now_ns();
+        // Same commit-time drain guard as the buffered push: every
+        // container the striped placement names must still be
+        // registered and not draining when the Paxos commit lands.
+        let submitted = self.meta.submit_guarded(
+            MetaCommand::PutObject {
+                caller: claims.subject.clone(),
+                collection: collection.into(),
+                name: name.into(),
+                size: total_len,
+                sha3: hash,
+                placement,
+                now: unix_secs(),
+            },
+            || {
+                if placed_ids.iter().any(|&cid| {
+                    self.registry.is_draining(cid) || self.registry.get(cid).is_err()
+                }) {
+                    return Err(Error::Unavailable(
+                        "a placement target began draining during upload; retry the push"
+                            .into(),
+                    ));
+                }
+                Ok(())
+            },
+        );
+        let meta = match submitted? {
+            CommandOutcome::Meta(meta) => *meta,
+            CommandOutcome::Failed(e) => return Err(Error::from_failed(e)),
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        let meta_s = META_COMMIT_BASE_S + (now_ns() - t0) as f64 / 1e9;
+
+        self.metrics.pushes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.bytes_in.fetch_add(total_len, std::sync::atomic::Ordering::Relaxed);
+
+        Ok(PushReport {
+            meta,
+            sim_s: cost::seq(&[ingress_s, encode_s, disperse_s, meta_s]),
+            ingress_s,
+            encode_s,
+            encode_wall_s,
+            disperse_s,
+            meta_s,
+            stored_bytes,
+            backend: self.backend_name(),
+            chunk_io,
+        })
+    }
+
+    /// Erasure-encode and place one part (a streaming stripe or a
+    /// multipart part) as an independent unit: its own SHA3, its own
+    /// chunk keys, its own container selection. Regular policy is
+    /// rejected — parts exist to bound memory under striping.
+    #[allow(clippy::type_complexity)]
+    fn disperse_part(
+        &self,
+        data: &[u8],
+        number: u32,
+        policy: ResiliencePolicy,
+        deadline: Deadline,
+    ) -> Result<(PartManifest, f64, f64, f64, u64, Vec<ChunkIoReport>)> {
+        let (cfg, pinned) = match policy {
+            ResiliencePolicy::Regular => {
+                return Err(Error::Invalid(
+                    "streaming/multipart parts require an erasure policy".into(),
+                ))
+            }
+            ResiliencePolicy::Fixed(cfg) => (cfg, None),
+            ResiliencePolicy::Dynamic { k, target_loss } => {
+                let chunk_size = (data.len() as u64 / k as u64).max(1);
+                let infos = self.registry.placement_infos();
+                let choice = select_dynamic(&infos, chunk_size, k, target_loss)?;
+                (choice.config, Some(choice.containers))
+            }
+        };
+        let hash = sha3_256(data);
+        let (placement, encode_s, encode_wall_s, disperse_s, stored, chunk_io) =
+            self.disperse(data, &hash, cfg, pinned, deadline)?;
+        let (n, k, chunks) = match placement {
+            ObjectPlacement::Erasure { n, k, chunks } => (n, k, chunks),
+            other => {
+                return Err(Error::Placement(format!(
+                    "disperse produced non-erasure placement {other:?}"
+                )))
+            }
+        };
+        Ok((
+            PartManifest { number, size: data.len() as u64, sha3: hash, n, k, chunks },
+            encode_s,
+            encode_wall_s,
+            disperse_s,
+            stored,
+            chunk_io,
+        ))
+    }
+
+    /// Start a multipart upload: mint a replicated upload id under
+    /// which parts accumulate until complete/abort. The id is minted
+    /// through Paxos so an interrupted upload is resumable after a
+    /// coordinator restart.
+    pub fn multipart_init(
+        &self,
+        token: &str,
+        collection: &str,
+        name: &str,
+    ) -> Result<String> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        if !claims.has_scope("write") {
+            return Err(Error::PermissionDenied("token lacks write scope".into()));
+        }
+        let outcome = self.meta.submit(MetaCommand::MultipartInit {
+            caller: claims.subject.clone(),
+            collection: collection.into(),
+            name: name.into(),
+            now: unix_secs(),
+        })?;
+        let upload_id = match outcome {
+            CommandOutcome::UploadId(id) => id,
+            CommandOutcome::Failed(e) => return Err(Error::from_failed(e)),
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        self.metrics.multipart_inits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(upload_id)
+    }
+
+    /// Upload one part of a multipart upload: stripe and place it as
+    /// an independent erasure unit, then record its manifest in the
+    /// replicated upload state. Re-uploading a part number replaces
+    /// the manifest and garbage-collects the displaced part's chunks
+    /// (unless the replacement is byte-identical, in which case the
+    /// content-derived keys are shared). Returns the part manifest;
+    /// its `etag()` is the per-part ETag the client checks on resume.
+    pub fn multipart_put_part(
+        &self,
+        token: &str,
+        upload_id: &str,
+        part_number: u32,
+        data: &[u8],
+        opts: PushOpts,
+    ) -> Result<PartManifest> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        if !claims.has_scope("write") {
+            return Err(Error::PermissionDenied("token lacks write scope".into()));
+        }
+        let policy = opts.policy.unwrap_or(self.default_policy);
+        let ctx = opts.ctx;
+        ctx.deadline.check("multipart put")?;
+        // Pre-flight existence/permission check so an unknown upload id
+        // fails before any chunk I/O is spent.
+        let caller = claims.subject.clone();
+        self.meta.read({
+            let caller = caller.clone();
+            let upload_id = upload_id.to_string();
+            move |s| s.multipart_parts(&caller, &upload_id).map(|_| ())
+        })?;
+        let (part, _, _, _, _, _) = self.disperse_part(data, part_number, policy, ctx.deadline)?;
+        let outcome = self.meta.submit(MetaCommand::MultipartPut {
+            caller,
+            upload_id: upload_id.into(),
+            part: part.clone(),
+        })?;
+        let displaced = match outcome {
+            CommandOutcome::PartReplaced(displaced) => displaced,
+            CommandOutcome::Failed(e) => return Err(Error::from_failed(e)),
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        if let Some(old) = displaced {
+            // GC the replaced part's chunks now rather than leaking
+            // them until abort — unless the re-upload carried identical
+            // bytes, whose chunk keys the new manifest shares.
+            if old.sha3 != part.sha3 || old.size != part.size {
+                self.delete_part_chunks(&old);
+            }
+        }
+        self.metrics
+            .bytes_in
+            .fetch_add(data.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(part)
+    }
+
+    /// List the parts recorded so far for an upload — the resume
+    /// surface: a client that lost its connection asks what landed,
+    /// compares ETags, and re-sends only what is missing.
+    pub fn multipart_parts(&self, token: &str, upload_id: &str) -> Result<UploadState> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        let caller = claims.subject.clone();
+        let upload_id = upload_id.to_string();
+        self.meta.read(move |s| s.multipart_parts(&caller, &upload_id))
+    }
+
+    /// Complete a multipart upload: atomically (one Paxos command)
+    /// assemble the recorded parts in part-number order into a
+    /// `Striped` object placement and drop the upload state. The same
+    /// commit-time drain guard as `push` applies across every part's
+    /// containers.
+    pub fn multipart_complete(&self, token: &str, upload_id: &str) -> Result<ObjectMeta> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        if !claims.has_scope("write") {
+            return Err(Error::PermissionDenied("token lacks write scope".into()));
+        }
+        let caller = claims.subject.clone();
+        // Read the recorded parts first so the drain precheck can
+        // validate every container the final placement will name.
+        let state = self.meta.read({
+            let caller = caller.clone();
+            let upload_id = upload_id.to_string();
+            move |s| s.multipart_parts(&caller, &upload_id)
+        })?;
+        let placed_ids: Vec<u32> = state
+            .parts
+            .values()
+            .flat_map(|p| p.chunks.iter().map(|&(_, cid)| cid))
+            .collect();
+        let submitted = self.meta.submit_guarded(
+            MetaCommand::MultipartComplete {
+                caller,
+                upload_id: upload_id.into(),
+                now: unix_secs(),
+            },
+            || {
+                if placed_ids.iter().any(|&cid| {
+                    self.registry.is_draining(cid) || self.registry.get(cid).is_err()
+                }) {
+                    return Err(Error::Unavailable(
+                        "a part's container began draining; retry the completion".into(),
+                    ));
+                }
+                Ok(())
+            },
+        );
+        let meta = match submitted? {
+            CommandOutcome::Meta(meta) => *meta,
+            CommandOutcome::Failed(e) => return Err(Error::from_failed(e)),
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        self.metrics.multipart_completes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.pushes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(meta)
+    }
+
+    /// Abort a multipart upload: drop the replicated upload state and
+    /// garbage-collect every orphan part's chunks so an abandoned
+    /// upload leaves no stored bytes behind.
+    pub fn multipart_abort(&self, token: &str, upload_id: &str) -> Result<usize> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        if !claims.has_scope("write") {
+            return Err(Error::PermissionDenied("token lacks write scope".into()));
+        }
+        let outcome = self.meta.submit(MetaCommand::MultipartAbort {
+            caller: claims.subject.clone(),
+            upload_id: upload_id.into(),
+        })?;
+        let orphans = match outcome {
+            CommandOutcome::Aborted(parts) => parts,
+            CommandOutcome::Failed(e) => return Err(Error::from_failed(e)),
+            other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
+        };
+        let count = orphans.len();
+        for part in &orphans {
+            self.delete_part_chunks(part);
+        }
+        self.metrics.multipart_aborts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(count)
+    }
+
+    /// Best-effort deletion of one part's stored chunks (abort GC and
+    /// replaced-part GC). Failures are ignored: the keys are
+    /// content-derived, so a missed delete is an unreferenced leak,
+    /// never a correctness hazard.
+    fn delete_part_chunks(&self, part: &PartManifest) {
+        for &(idx, cid) in &part.chunks {
+            if let Ok(channel) = self.registry.get(cid) {
+                let _ = channel.delete(&chunk_key(&part.sha3, part.size, idx));
+            }
+        }
     }
 
     /// Erasure-encode and upload chunks (Algorithm 1 lines 2-10).
@@ -576,127 +1115,55 @@ impl DynoStore {
                         }
                     }
                 }
-                ObjectPlacement::Erasure { n, k, chunks } => {
-                    let cfg = ErasureConfig::new(*n, *k);
-                    let codec = self.codec(cfg)?;
-                    // Prefer the k systematic data chunks (lowest
-                    // indices), fetched concurrently; hedge to parity in
-                    // follow-up waves when a container is dead, a
-                    // transfer fails, or a chunk comes back corrupt
-                    // (Algorithm 2: any k distinct chunks reconstruct).
-                    let mut ordered: Vec<(u8, u32)> = chunks.clone();
-                    ordered.sort_by_key(|&(idx, _)| idx);
-                    let mut collected: Vec<Chunk> = Vec::with_capacity(*k);
-                    let mut chunk_io: Vec<ChunkIoReport> = Vec::with_capacity(*k);
+                ObjectPlacement::Erasure { n, k, chunks } => self.pull_erasure_unit(
+                    &meta.sha3,
+                    meta.size,
+                    &meta.uuid,
+                    *n,
+                    *k,
+                    chunks,
+                    ctx.deadline,
+                )?,
+                ObjectPlacement::Striped { parts } => {
+                    // Streamed / multipart layout: each part is an
+                    // independent erasure unit, assembled in part-number
+                    // order. Hedging and the deadline budget apply per
+                    // part; decode verifies each part's own SHA3, and
+                    // the object-level hash (composite of part hashes)
+                    // is re-derived from the manifest below.
+                    let mut data = Vec::with_capacity(meta.size as usize);
                     let mut collect_s = 0.0;
+                    let mut decode_s = 0.0;
+                    let mut decode_wall_s = 0.0;
+                    let mut fetched = 0usize;
                     let mut degraded = false;
-                    let mut cursor = 0usize;
-                    let mut waves = 0usize;
-                    while collected.len() < *k {
-                        // A hedge wave only starts if there is budget
-                        // left to run it; an expired deadline surfaces
-                        // as Timeout, not as a stalled read.
-                        ctx.deadline.check("pull hedge wave")?;
-                        waves += 1;
-                        // Next wave: as many untried chunks as still needed.
-                        let mut jobs = Vec::new();
-                        while jobs.len() < *k - collected.len() && cursor < ordered.len() {
-                            let (idx, cid) = ordered[cursor];
-                            cursor += 1;
-                            match self.registry.get(cid) {
-                                // Dispatch only to containers believed
-                                // alive (cached liveness for remote
-                                // channels): a known-dead endpoint would
-                                // stall the whole wave for its transport
-                                // timeout instead of hedging straight to
-                                // parity.
-                                Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
-                                    index: idx,
-                                    channel,
-                                    key: chunk_key(&meta.sha3, meta.size, idx),
-                                    data: None,
-                                }),
-                                skipped => {
-                                    degraded = degraded || (idx as usize) < *k;
-                                    // Skips count as failed attempts in
-                                    // the report, so the operator sees
-                                    // which container degraded the read.
-                                    chunk_io.push(ChunkIoReport {
-                                        index: idx,
-                                        container: cid,
-                                        transport: skipped
-                                            .map(|c| c.transport())
-                                            .unwrap_or("unregistered"),
-                                        ok: false,
-                                        sim_s: 0.0,
-                                        wall_s: 0.0,
-                                    });
-                                }
-                            }
-                        }
-                        if jobs.is_empty() {
-                            return Err(Error::Unavailable(format!(
-                                "object {}: only {} of {k} required chunks reachable",
-                                meta.uuid,
-                                collected.len()
-                            )));
-                        }
-                        let mut wave_times = Vec::with_capacity(jobs.len());
-                        for xfer in self.dispatch_chunk_io_deadline(jobs, ctx.deadline)? {
-                            let fetched_s = match xfer.res {
-                                Ok((bytes, dev_s)) => {
-                                    let bytes = bytes.unwrap_or_default();
-                                    // A corrupt or foreign chunk is
-                                    // treated exactly like a dead
-                                    // container: skip it and keep
-                                    // collecting toward k.
-                                    match Chunk::unpack(&bytes) {
-                                        Ok(chunk)
-                                            if chunk.header.index == xfer.index
-                                                && chunk.header.object_hash == meta.sha3 =>
-                                        {
-                                            let net_s = self.wan.transfer_s(
-                                                xfer.site,
-                                                self.gateway_site,
-                                                bytes.len() as u64,
-                                                *k as u32,
-                                            );
-                                            wave_times.push(net_s + dev_s);
-                                            collected.push(chunk);
-                                            Some(net_s + dev_s)
-                                        }
-                                        _ => None,
-                                    }
-                                }
-                                Err(_) => None,
-                            };
-                            if fetched_s.is_none() {
-                                degraded = degraded || (xfer.index as usize) < *k;
-                            }
-                            chunk_io.push(ChunkIoReport {
-                                index: xfer.index,
-                                container: xfer.cid,
-                                transport: xfer.transport,
-                                ok: fetched_s.is_some(),
-                                sim_s: fetched_s.unwrap_or(0.0),
-                                wall_s: xfer.wall_s,
-                            });
-                        }
-                        // Every hedge wave costs one more parallel round.
-                        collect_s += cost::par(&wave_times);
+                    let mut chunk_io = Vec::new();
+                    for part in parts {
+                        let label = format!("{}#part{}", meta.uuid, part.number);
+                        let (bytes, c_s, d_s, dw_s, got, deg, io) = self.pull_erasure_unit(
+                            &part.sha3,
+                            part.size,
+                            &label,
+                            part.n,
+                            part.k,
+                            &part.chunks,
+                            ctx.deadline,
+                        )?;
+                        data.extend_from_slice(&bytes);
+                        collect_s += c_s;
+                        decode_s += d_s;
+                        decode_wall_s += dw_s;
+                        fetched += got;
+                        degraded = degraded || deg;
+                        chunk_io.extend(io);
                     }
-                    // Waves past the first are internal retries against
-                    // parity; surface them so operators can see hedging.
-                    if waves > 1 {
-                        self.metrics
-                            .retries
-                            .fetch_add((waves - 1) as u64, std::sync::atomic::Ordering::Relaxed);
+                    if composite_sha3(parts) != meta.sha3 {
+                        return Err(Error::Integrity(format!(
+                            "object {}: part manifest does not match composite hash",
+                            meta.uuid
+                        )));
                     }
-                    let t0 = now_ns();
-                    let data = codec.decode(&collected)?; // verifies SHA3
-                    let decode_wall_s = (now_ns() - t0) as f64 / 1e9;
-                    let decode_s = data.len() as f64 / GATEWAY_CODING_BW;
-                    (data, collect_s, decode_s, decode_wall_s, collected.len(), degraded, chunk_io)
+                    (data, collect_s, decode_s, decode_wall_s, fetched, degraded, chunk_io)
                 }
             };
 
@@ -720,6 +1187,204 @@ impl DynoStore {
             backend: self.backend_name(),
             chunk_io,
         })
+    }
+
+    /// Fetch-and-decode one erasure unit — a whole Erasure object or a
+    /// single part of a Striped one (`sha3`/`size` are the unit's own,
+    /// which its chunk keys and headers bind to; `label` names it in
+    /// errors). Prefers the k systematic data chunks (lowest indices),
+    /// fetched concurrently, and hedges to parity in follow-up waves
+    /// when a container is dead, a transfer fails, or a chunk comes
+    /// back corrupt (Algorithm 2: any k distinct chunks reconstruct).
+    /// Returns `(data, collect_s, decode_s, decode_wall_s,
+    /// chunks_fetched, degraded, chunk_io)`.
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    fn pull_erasure_unit(
+        &self,
+        sha3: &[u8; 32],
+        size: u64,
+        label: &str,
+        n: usize,
+        k: usize,
+        chunks: &[(u8, u32)],
+        deadline: Deadline,
+    ) -> Result<(Vec<u8>, f64, f64, f64, usize, bool, Vec<ChunkIoReport>)> {
+        let cfg = ErasureConfig::new(n, k);
+        let codec = self.codec(cfg)?;
+        let mut ordered: Vec<(u8, u32)> = chunks.to_vec();
+        ordered.sort_by_key(|&(idx, _)| idx);
+        let mut collected: Vec<Chunk> = Vec::with_capacity(k);
+        let mut chunk_io: Vec<ChunkIoReport> = Vec::with_capacity(k);
+        let mut collect_s = 0.0;
+        let mut degraded = false;
+        let mut cursor = 0usize;
+        let mut waves = 0usize;
+        while collected.len() < k {
+            // A hedge wave only starts if there is budget left to run
+            // it; an expired deadline surfaces as Timeout, not as a
+            // stalled read.
+            deadline.check("pull hedge wave")?;
+            waves += 1;
+            // Next wave: as many untried chunks as still needed.
+            let mut jobs = Vec::new();
+            while jobs.len() < k - collected.len() && cursor < ordered.len() {
+                let (idx, cid) = ordered[cursor];
+                cursor += 1;
+                match self.registry.get(cid) {
+                    // Dispatch only to containers believed alive
+                    // (cached liveness for remote channels): a
+                    // known-dead endpoint would stall the whole wave
+                    // for its transport timeout instead of hedging
+                    // straight to parity.
+                    Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
+                        index: idx,
+                        channel,
+                        key: chunk_key(sha3, size, idx),
+                        data: None,
+                    }),
+                    skipped => {
+                        degraded = degraded || (idx as usize) < k;
+                        // Skips count as failed attempts in the report,
+                        // so the operator sees which container degraded
+                        // the read.
+                        chunk_io.push(ChunkIoReport {
+                            index: idx,
+                            container: cid,
+                            transport: skipped
+                                .map(|c| c.transport())
+                                .unwrap_or("unregistered"),
+                            ok: false,
+                            sim_s: 0.0,
+                            wall_s: 0.0,
+                        });
+                    }
+                }
+            }
+            if jobs.is_empty() {
+                return Err(Error::Unavailable(format!(
+                    "object {label}: only {} of {k} required chunks reachable",
+                    collected.len()
+                )));
+            }
+            let mut wave_times = Vec::with_capacity(jobs.len());
+            for xfer in self.dispatch_chunk_io_deadline(jobs, deadline)? {
+                let fetched_s = match xfer.res {
+                    Ok((bytes, dev_s)) => {
+                        let bytes = bytes.unwrap_or_default();
+                        // A corrupt or foreign chunk is treated exactly
+                        // like a dead container: skip it and keep
+                        // collecting toward k.
+                        match Chunk::unpack(&bytes) {
+                            Ok(chunk)
+                                if chunk.header.index == xfer.index
+                                    && chunk.header.object_hash == *sha3 =>
+                            {
+                                let net_s = self.wan.transfer_s(
+                                    xfer.site,
+                                    self.gateway_site,
+                                    bytes.len() as u64,
+                                    k as u32,
+                                );
+                                wave_times.push(net_s + dev_s);
+                                collected.push(chunk);
+                                Some(net_s + dev_s)
+                            }
+                            _ => None,
+                        }
+                    }
+                    Err(_) => None,
+                };
+                if fetched_s.is_none() {
+                    degraded = degraded || (xfer.index as usize) < k;
+                }
+                chunk_io.push(ChunkIoReport {
+                    index: xfer.index,
+                    container: xfer.cid,
+                    transport: xfer.transport,
+                    ok: fetched_s.is_some(),
+                    sim_s: fetched_s.unwrap_or(0.0),
+                    wall_s: xfer.wall_s,
+                });
+            }
+            // Every hedge wave costs one more parallel round.
+            collect_s += cost::par(&wave_times);
+        }
+        // Waves past the first are internal retries against parity;
+        // surface them so operators can see hedging.
+        if waves > 1 {
+            self.metrics
+                .retries
+                .fetch_add((waves - 1) as u64, std::sync::atomic::Ordering::Relaxed);
+        }
+        let t0 = now_ns();
+        let data = codec.decode(&collected)?; // verifies the unit SHA3
+        let decode_wall_s = (now_ns() - t0) as f64 / 1e9;
+        let decode_s = data.len() as f64 / GATEWAY_CODING_BW;
+        Ok((data, collect_s, decode_s, decode_wall_s, collected.len(), degraded, chunk_io))
+    }
+
+    /// Streaming download: resolve the object, then hand back a
+    /// [`ObjectByteStream`] that materializes one block at a time —
+    /// one erasure part per block for `Striped` objects (peak memory
+    /// O(part), with the full per-part parity hedging of
+    /// [`pull`]), or a single pre-pulled block for `Single`/`Erasure`
+    /// placements (whose chunk layout requires all k chunks at once
+    /// anyway). The `streams_active` gauge tracks the stream's
+    /// lifetime; it drops when the stream is dropped.
+    pub fn pull_stream(
+        self: Arc<Self>,
+        token: &str,
+        collection: &str,
+        name: &str,
+        opts: PullOpts,
+    ) -> Result<ObjectByteStream> {
+        let claims = self.tokens.validate(token).map_err(|e| {
+            self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            e
+        })?;
+        let ctx = opts.ctx;
+        ctx.deadline.check("pull stream")?;
+        let meta = match opts.version {
+            None => self
+                .meta
+                .read(|s| s.get_latest(&claims.subject, collection, name))?,
+            Some(v) => self
+                .meta
+                .read(|s| s.get_version(&claims.subject, collection, name, v))?,
+        };
+        match &meta.placement {
+            ObjectPlacement::Striped { parts } => {
+                let parts = parts.clone();
+                self.metrics.pulls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics
+                    .streams_active
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(ObjectByteStream {
+                    store: self,
+                    meta,
+                    parts,
+                    next: 0,
+                    deadline: ctx.deadline,
+                    buffered: None,
+                })
+            }
+            _ => {
+                // Buffered fallback, same accounting as a plain pull.
+                let report =
+                    self.pull(token, collection, name, PullOpts { ctx, version: opts.version })?;
+                self.metrics
+                    .streams_active
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(ObjectByteStream {
+                    store: self,
+                    meta: report.meta,
+                    parts: Vec::new(),
+                    next: 0,
+                    deadline: ctx.deadline,
+                    buffered: Some(report.data),
+                })
+            }
+        }
     }
 
     /// Metadata of `(collection, name)` at `version` (`None` = latest)
@@ -1092,6 +1757,19 @@ impl DynoStore {
                     }
                 }
             }
+            ObjectPlacement::Striped { parts } => {
+                // Each part's chunks are keyed by the PART's hash and
+                // size, not the object's composite hash.
+                for part in parts {
+                    for &(idx, cid) in &part.chunks {
+                        if let Ok(c) = self.registry.get(cid) {
+                            if c.delete(&chunk_key(&part.sha3, part.size, idx)).is_ok() {
+                                deleted += 1;
+                            }
+                        }
+                    }
+                }
+            }
         }
         deleted
     }
@@ -1111,151 +1789,274 @@ impl DynoStore {
         let is_live = |cid: u32| alive_by_id.get(&cid).copied().unwrap_or(false);
         for meta in objects {
             report.scanned += 1;
-            let (n, k, chunks) = match &meta.placement {
-                ObjectPlacement::Erasure { n, k, chunks } => (*n, *k, chunks.clone()),
+            match &meta.placement {
                 ObjectPlacement::Single { container } => {
                     // Regular objects on a dead container are simply lost
                     // (the paper's motivation for the resilience policy).
-                    if is_live(*container) {
-                        continue;
-                    }
-                    report.lost += 1;
-                    continue;
-                }
-            };
-            let live: Vec<(u8, u32)> =
-                chunks.iter().filter(|&&(_, cid)| is_live(cid)).copied().collect();
-            // Fully healthy means all n chunk slots are placed AND live —
-            // a previously committed partial placement (a re-placement
-            // write failed mid-repair) must be topped back up to n.
-            if live.len() == chunks.len() && chunks.len() == n {
-                continue;
-            }
-            if live.len() < k {
-                report.lost += 1;
-                continue;
-            }
-            // Reconstruct from any k live chunks, fetched concurrently;
-            // hedge past sources that fail or return corrupt bytes —
-            // and remember those, so the corruption gets healed below
-            // instead of lingering in the committed placement.
-            let cfg = ErasureConfig::new(n, k);
-            let codec = self.codec(cfg)?;
-            let (collected, bad_live) = self.collect_chunks(&meta, k, &live)?;
-            if collected.len() < k {
-                report.lost += 1;
-                continue;
-            }
-            let data = codec.decode(&collected)?;
-            let mut all_chunks = codec.encode(&data)?;
-            let mut new_placement = live.clone();
-
-            // Heal corrupt-but-live chunks in place: rewrite the correct
-            // bytes onto the container that served garbage. (An object
-            // whose containers are ALL live is skipped by the early-exit
-            // above — corruption is healed when a repair pass touches
-            // the object, not by a full scrub.)
-            if !bad_live.is_empty() {
-                let mut jobs = Vec::with_capacity(bad_live.len());
-                for &(idx, cid) in &bad_live {
-                    if let Ok(channel) = self.registry.get(cid) {
-                        jobs.push(ChunkJob {
-                            index: idx,
-                            channel,
-                            key: chunk_key(&meta.sha3, meta.size, idx),
-                            data: Some(std::mem::take(&mut all_chunks[idx as usize].packed)),
-                        });
+                    if !is_live(*container) {
+                        report.lost += 1;
                     }
                 }
-                for xfer in self.dispatch_chunk_io(jobs)? {
-                    match xfer.res {
-                        Ok(_) => report.chunks_moved += 1,
-                        // Rewrite failed: drop the stale entry so the
-                        // next pass treats the chunk as missing.
-                        Err(_) => new_placement
-                            .retain(|&(i, c)| !(i == xfer.index && c == xfer.cid)),
-                    }
-                }
-            }
-
-            let live_ids: HashSet<u32> = live.iter().map(|&(_, c)| c).collect();
-            // Every chunk index not live right now needs (re-)placement:
-            // chunks whose container died AND slots missing from the
-            // committed placement entirely.
-            let placed_idx: HashSet<u8> = live.iter().map(|&(i, _)| i).collect();
-            let missing: Vec<u8> =
-                (0..n as u8).filter(|i| !placed_idx.contains(i)).collect();
-
-            // Healthy, non-draining containers not already holding a
-            // chunk of this object, ranked by the load balancer.
-            let infos: Vec<_> = self
-                .registry
-                .placement_infos()
-                .into_iter()
-                .filter(|i| i.alive && !live_ids.contains(&i.id))
-                .collect();
-            let chunk_size = codec.chunk_len(data.len()) as u64;
-            let replacements = self.placer.select(&infos, chunk_size, missing.len())?;
-
-            let mut jobs = Vec::with_capacity(missing.len());
-            for (idx, target) in missing.iter().zip(&replacements) {
-                let channel = self.registry.get(target.id)?;
-                let packed = std::mem::take(&mut all_chunks[*idx as usize].packed);
-                jobs.push(ChunkJob {
-                    index: *idx,
-                    channel,
-                    key: chunk_key(&meta.sha3, meta.size, *idx),
-                    data: Some(packed),
-                });
-            }
-            let mut newly_placed: Vec<(u8, u32)> = Vec::new();
-            for xfer in self.dispatch_chunk_io(jobs)? {
-                // A failed re-placement write must not abort the whole
-                // pass (transport failure is an expected event on this
-                // plane): commit only the chunks that landed; the next
-                // pass retries the rest as still-missing.
-                if xfer.res.is_ok() {
-                    new_placement.push((xfer.index, xfer.cid));
-                    newly_placed.push((xfer.index, xfer.cid));
-                    report.chunks_moved += 1;
-                }
-            }
-            new_placement.sort_by_key(|&(idx, _)| idx);
-            // CAS against the placement this pass read: a concurrent
-            // lifecycle migration must not be silently overwritten (its
-            // committed placement names chunks repair's stale snapshot
-            // doesn't know about).
-            let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
-                uuid: meta.uuid.clone(),
-                placement: ObjectPlacement::Erasure { n, k, chunks: new_placement },
-                expect: Some(meta.placement.clone()),
-            })?;
-            if let CommandOutcome::Failed(_) = outcome {
-                // Placement changed (migration committed) or the object
-                // vanished: drop the copies we just wrote — unless the
-                // committed placement references them — and let the
-                // next pass re-assess from fresh state.
-                let committed =
-                    self.meta.read(|s| s.get_by_uuid(&meta.uuid)).map(|m| m.placement).ok();
-                for &(idx, cid) in &newly_placed {
-                    let referenced = matches!(
-                        &committed,
-                        Some(ObjectPlacement::Erasure { chunks, .. })
-                            if chunks.contains(&(idx, cid))
-                    );
-                    if !referenced {
-                        if let Ok(c) = self.registry.get(cid) {
-                            let _ = c.delete(&chunk_key(&meta.sha3, meta.size, idx));
+                ObjectPlacement::Erasure { n, k, chunks } => {
+                    match self.repair_unit(&meta.sha3, meta.size, *n, *k, chunks, &is_live)? {
+                        UnitOutcome::Healthy => {}
+                        UnitOutcome::Lost => report.lost += 1,
+                        UnitOutcome::Repaired { chunks: new_chunks, moved, newly_placed } => {
+                            // CAS against the placement this pass read: a
+                            // concurrent lifecycle migration must not be
+                            // silently overwritten (its committed
+                            // placement names chunks repair's stale
+                            // snapshot doesn't know about).
+                            let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+                                uuid: meta.uuid.clone(),
+                                placement: ObjectPlacement::Erasure {
+                                    n: *n,
+                                    k: *k,
+                                    chunks: new_chunks,
+                                },
+                                expect: Some(meta.placement.clone()),
+                            })?;
+                            if let CommandOutcome::Failed(_) = outcome {
+                                // Placement changed (migration committed)
+                                // or the object vanished: drop the copies
+                                // we just wrote — unless the committed
+                                // placement references them — and let the
+                                // next pass re-assess from fresh state.
+                                let committed = self
+                                    .meta
+                                    .read(|s| s.get_by_uuid(&meta.uuid))
+                                    .map(|m| m.placement)
+                                    .ok();
+                                for &(idx, cid) in &newly_placed {
+                                    let referenced = matches!(
+                                        &committed,
+                                        Some(ObjectPlacement::Erasure { chunks, .. })
+                                            if chunks.contains(&(idx, cid))
+                                    );
+                                    if !referenced {
+                                        if let Ok(c) = self.registry.get(cid) {
+                                            let _ = c.delete(&chunk_key(
+                                                &meta.sha3, meta.size, idx,
+                                            ));
+                                        }
+                                    }
+                                }
+                                report.chunks_moved += moved - newly_placed.len();
+                                continue;
+                            }
+                            report.chunks_moved += moved;
+                            report.repaired += 1;
+                            self.metrics
+                                .repairs
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
                     }
                 }
-                report.chunks_moved -= newly_placed.len();
-                continue;
+                ObjectPlacement::Striped { parts } => {
+                    // Each part is an independent erasure unit; repair
+                    // them unit by unit and commit ONE updated Striped
+                    // placement via CAS. A lost part marks the object
+                    // lost (it cannot be served whole), but parts that
+                    // did repair are still committed so their healing
+                    // is not thrown away.
+                    let mut any_lost = false;
+                    let mut any_repaired = false;
+                    let mut moved_total = 0usize;
+                    let mut new_parts: Vec<PartManifest> = Vec::with_capacity(parts.len());
+                    let mut placed_by_part: Vec<(PartManifest, Vec<(u8, u32)>)> = Vec::new();
+                    for part in parts {
+                        match self.repair_unit(
+                            &part.sha3,
+                            part.size,
+                            part.n,
+                            part.k,
+                            &part.chunks,
+                            &is_live,
+                        )? {
+                            UnitOutcome::Healthy => new_parts.push(part.clone()),
+                            UnitOutcome::Lost => {
+                                any_lost = true;
+                                new_parts.push(part.clone());
+                            }
+                            UnitOutcome::Repaired { chunks, moved, newly_placed } => {
+                                any_repaired = true;
+                                moved_total += moved;
+                                let mut healed = part.clone();
+                                healed.chunks = chunks;
+                                if !newly_placed.is_empty() {
+                                    placed_by_part.push((part.clone(), newly_placed));
+                                }
+                                new_parts.push(healed);
+                            }
+                        }
+                    }
+                    if any_lost {
+                        report.lost += 1;
+                    }
+                    if !any_repaired {
+                        continue;
+                    }
+                    let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+                        uuid: meta.uuid.clone(),
+                        placement: ObjectPlacement::Striped { parts: new_parts },
+                        expect: Some(meta.placement.clone()),
+                    })?;
+                    if let CommandOutcome::Failed(_) = outcome {
+                        // Same rollback rule as Erasure, applied per
+                        // part: chunk keys bind to the PART's hash/size,
+                        // and a committed placement only protects a copy
+                        // if a matching part still references it.
+                        let committed = self
+                            .meta
+                            .read(|s| s.get_by_uuid(&meta.uuid))
+                            .map(|m| m.placement)
+                            .ok();
+                        let mut rolled_back = 0usize;
+                        for (part, newly_placed) in &placed_by_part {
+                            for &(idx, cid) in newly_placed {
+                                let referenced = matches!(
+                                    &committed,
+                                    Some(ObjectPlacement::Striped { parts })
+                                        if parts.iter().any(|p| {
+                                            p.sha3 == part.sha3
+                                                && p.size == part.size
+                                                && p.chunks.contains(&(idx, cid))
+                                        })
+                                );
+                                if !referenced {
+                                    if let Ok(c) = self.registry.get(cid) {
+                                        let _ = c.delete(&chunk_key(
+                                            &part.sha3, part.size, idx,
+                                        ));
+                                    }
+                                }
+                                rolled_back += 1;
+                            }
+                        }
+                        report.chunks_moved += moved_total - rolled_back;
+                        continue;
+                    }
+                    report.chunks_moved += moved_total;
+                    report.repaired += 1;
+                    self.metrics.repairs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
             }
-            report.repaired += 1;
-            self.metrics.repairs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
         Ok(report)
+    }
+
+    /// Repair one erasure unit (a whole Erasure object or one part of
+    /// a Striped one): reconstruct from any k live chunks, heal
+    /// corrupt-but-live copies in place, and re-place missing chunk
+    /// slots on healthy containers. Returns the updated chunk list for
+    /// the caller to commit (the metadata CAS stays with the caller,
+    /// since a Striped object commits all its parts in one command).
+    fn repair_unit(
+        &self,
+        sha3: &[u8; 32],
+        size: u64,
+        n: usize,
+        k: usize,
+        chunks: &[(u8, u32)],
+        is_live: &impl Fn(u32) -> bool,
+    ) -> Result<UnitOutcome> {
+        let live: Vec<(u8, u32)> =
+            chunks.iter().filter(|&&(_, cid)| is_live(cid)).copied().collect();
+        // Fully healthy means all n chunk slots are placed AND live —
+        // a previously committed partial placement (a re-placement
+        // write failed mid-repair) must be topped back up to n.
+        if live.len() == chunks.len() && chunks.len() == n {
+            return Ok(UnitOutcome::Healthy);
+        }
+        if live.len() < k {
+            return Ok(UnitOutcome::Lost);
+        }
+        // Reconstruct from any k live chunks, fetched concurrently;
+        // hedge past sources that fail or return corrupt bytes — and
+        // remember those, so the corruption gets healed below instead
+        // of lingering in the committed placement.
+        let cfg = ErasureConfig::new(n, k);
+        let codec = self.codec(cfg)?;
+        let (collected, bad_live) = self.collect_chunks(sha3, size, k, &live)?;
+        if collected.len() < k {
+            return Ok(UnitOutcome::Lost);
+        }
+        let data = codec.decode(&collected)?;
+        let mut all_chunks = codec.encode(&data)?;
+        let mut new_placement = live.clone();
+        let mut moved = 0usize;
+
+        // Heal corrupt-but-live chunks in place: rewrite the correct
+        // bytes onto the container that served garbage. (A unit whose
+        // containers are ALL live is skipped by the early-exit above —
+        // corruption is healed when a repair pass touches the unit,
+        // not by a full scrub.)
+        if !bad_live.is_empty() {
+            let mut jobs = Vec::with_capacity(bad_live.len());
+            for &(idx, cid) in &bad_live {
+                if let Ok(channel) = self.registry.get(cid) {
+                    jobs.push(ChunkJob {
+                        index: idx,
+                        channel,
+                        key: chunk_key(sha3, size, idx),
+                        data: Some(std::mem::take(&mut all_chunks[idx as usize].packed)),
+                    });
+                }
+            }
+            for xfer in self.dispatch_chunk_io(jobs)? {
+                match xfer.res {
+                    Ok(_) => moved += 1,
+                    // Rewrite failed: drop the stale entry so the next
+                    // pass treats the chunk as missing.
+                    Err(_) => new_placement
+                        .retain(|&(i, c)| !(i == xfer.index && c == xfer.cid)),
+                }
+            }
+        }
+
+        let live_ids: HashSet<u32> = live.iter().map(|&(_, c)| c).collect();
+        // Every chunk index not live right now needs (re-)placement:
+        // chunks whose container died AND slots missing from the
+        // committed placement entirely.
+        let placed_idx: HashSet<u8> = live.iter().map(|&(i, _)| i).collect();
+        let missing: Vec<u8> = (0..n as u8).filter(|i| !placed_idx.contains(i)).collect();
+
+        // Healthy, non-draining containers not already holding a chunk
+        // of this unit, ranked by the load balancer.
+        let infos: Vec<_> = self
+            .registry
+            .placement_infos()
+            .into_iter()
+            .filter(|i| i.alive && !live_ids.contains(&i.id))
+            .collect();
+        let chunk_size = codec.chunk_len(data.len()) as u64;
+        let replacements = self.placer.select(&infos, chunk_size, missing.len())?;
+
+        let mut jobs = Vec::with_capacity(missing.len());
+        for (idx, target) in missing.iter().zip(&replacements) {
+            let channel = self.registry.get(target.id)?;
+            let packed = std::mem::take(&mut all_chunks[*idx as usize].packed);
+            jobs.push(ChunkJob {
+                index: *idx,
+                channel,
+                key: chunk_key(sha3, size, *idx),
+                data: Some(packed),
+            });
+        }
+        let mut newly_placed: Vec<(u8, u32)> = Vec::new();
+        for xfer in self.dispatch_chunk_io(jobs)? {
+            // A failed re-placement write must not abort the whole pass
+            // (transport failure is an expected event on this plane):
+            // commit only the chunks that landed; the next pass retries
+            // the rest as still-missing.
+            if xfer.res.is_ok() {
+                new_placement.push((xfer.index, xfer.cid));
+                newly_placed.push((xfer.index, xfer.cid));
+                moved += 1;
+            }
+        }
+        new_placement.sort_by_key(|&(idx, _)| idx);
+        Ok(UnitOutcome::Repaired { chunks: new_placement, moved, newly_placed })
     }
 
     /// Direct in-process container access for a chunk (tests, FaaS
@@ -1739,5 +2540,139 @@ mod tests {
             ds.grant(&token_b, "/UserA", "UserB", crate::metadata::Permission::Write),
             Err(Error::PermissionDenied(_))
         ));
+    }
+
+    #[test]
+    fn streamed_push_matches_buffered_across_part_boundaries() {
+        let (ds, token) = deployment(12);
+        let part = 4096usize;
+        // 1 B, part−1, part, part+1, and a many-part size: the first
+        // three take the buffered fallback (≤ one part), the rest
+        // commit a Striped placement — all must pull byte-identical.
+        for (i, len) in [1, part - 1, part, part + 1, 4 * part + 123].into_iter().enumerate()
+        {
+            let object = data(len, 100 + i as u64);
+            let name = format!("s{i}");
+            let report = ds
+                .push_stream(
+                    &token,
+                    "/UserA",
+                    &name,
+                    &mut std::io::Cursor::new(&object),
+                    part,
+                    PushOpts::default(),
+                )
+                .unwrap();
+            assert_eq!(report.meta.size, len as u64, "len {len}");
+            let striped =
+                matches!(report.meta.placement, ObjectPlacement::Striped { .. });
+            assert_eq!(striped, len > part, "len {len}: striped iff > one part");
+            if !striped {
+                // Single-part streams delegate to the buffered push:
+                // same SHA3 (and hence same ETag) as a buffered push
+                // of the same bytes.
+                assert_eq!(report.meta.sha3, crate::crypto::sha3_256(&object));
+            }
+            let pull = ds.pull(&token, "/UserA", &name, PullOpts::default()).unwrap();
+            assert_eq!(pull.data, object, "len {len}");
+        }
+    }
+
+    #[test]
+    fn streamed_pull_yields_identical_bytes() {
+        let (ds, token) = deployment(12);
+        let ds = std::sync::Arc::new(ds);
+        let part = 8192usize;
+        let object = data(3 * part + 17, 7);
+        ds.push_stream(
+            &token,
+            "/UserA",
+            "obj",
+            &mut std::io::Cursor::new(&object),
+            part,
+            PushOpts::default(),
+        )
+        .unwrap();
+        let mut stream = std::sync::Arc::clone(&ds)
+            .pull_stream(&token, "/UserA", "obj", PullOpts::default())
+            .unwrap();
+        assert_eq!(stream.total_len(), object.len() as u64);
+        let mut out = Vec::new();
+        while let Some(block) = stream.next_block().unwrap() {
+            out.extend_from_slice(&block);
+        }
+        assert_eq!(out, object, "streamed pull of a striped object");
+        // Non-striped objects stream through the buffered fallback arm.
+        let small = data(500, 8);
+        ds.push(&token, "/UserA", "small", &small, PushOpts::default()).unwrap();
+        let mut stream = std::sync::Arc::clone(&ds)
+            .pull_stream(&token, "/UserA", "small", PullOpts::default())
+            .unwrap();
+        let mut out = Vec::new();
+        while let Some(block) = stream.next_block().unwrap() {
+            out.extend_from_slice(&block);
+        }
+        assert_eq!(out, small, "streamed pull of an erasure object");
+    }
+
+    #[test]
+    fn multipart_out_of_order_replace_and_complete() {
+        let (ds, token) = deployment(12);
+        let p1 = data(10_000, 50);
+        let p2 = data(6_000, 51);
+        let id = ds.multipart_init(&token, "/UserA", "mp").unwrap();
+        assert_eq!(ds.open_upload_count(), 1);
+        // Parts land out of order; part 1 is replaced before completion.
+        ds.multipart_put_part(&token, &id, 2, &p2, PushOpts::default()).unwrap();
+        ds.multipart_put_part(&token, &id, 1, &data(9_999, 52), PushOpts::default())
+            .unwrap();
+        let replaced =
+            ds.multipart_put_part(&token, &id, 1, &p1, PushOpts::default()).unwrap();
+        assert_eq!(replaced.size, p1.len() as u64);
+        let state = ds.multipart_parts(&token, &id).unwrap();
+        assert_eq!(
+            state.parts.keys().copied().collect::<Vec<_>>(),
+            vec![1, 2],
+            "parts listed in number order regardless of upload order"
+        );
+        // The object is invisible until complete.
+        assert!(matches!(
+            ds.pull(&token, "/UserA", "mp", PullOpts::default()),
+            Err(Error::NotFound(_))
+        ));
+        let meta = ds.multipart_complete(&token, &id).unwrap();
+        assert_eq!(meta.size, (p1.len() + p2.len()) as u64);
+        assert!(matches!(meta.placement, ObjectPlacement::Striped { .. }));
+        assert_eq!(ds.open_upload_count(), 0);
+        assert!(ds.multipart_parts(&token, &id).is_err(), "upload state dropped");
+        let pull = ds.pull(&token, "/UserA", "mp", PullOpts::default()).unwrap();
+        let mut want = p1.clone();
+        want.extend_from_slice(&p2);
+        assert_eq!(pull.data, want, "parts assemble in number order");
+    }
+
+    #[test]
+    fn multipart_abort_collects_orphan_parts() {
+        let (ds, token) = deployment(12);
+        let id = ds.multipart_init(&token, "/UserA", "gone").unwrap();
+        ds.multipart_put_part(&token, &id, 1, &data(5_000, 60), PushOpts::default())
+            .unwrap();
+        ds.multipart_put_part(&token, &id, 2, &data(5_000, 61), PushOpts::default())
+            .unwrap();
+        assert_eq!(ds.multipart_abort(&token, &id).unwrap(), 2);
+        assert_eq!(ds.open_upload_count(), 0);
+        assert!(ds.multipart_parts(&token, &id).is_err());
+        assert!(matches!(
+            ds.pull(&token, "/UserA", "gone", PullOpts::default()),
+            Err(Error::NotFound(_))
+        ));
+        // Unknown upload ids fail fast on every surface.
+        assert!(ds
+            .multipart_put_part(&token, &id, 3, &data(100, 62), PushOpts::default())
+            .is_err());
+        assert!(ds.multipart_complete(&token, &id).is_err());
+        let snap = ds.metrics.snapshot();
+        assert_eq!(snap["multipart_inits"], 1);
+        assert_eq!(snap["multipart_aborts"], 1);
     }
 }

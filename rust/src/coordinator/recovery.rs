@@ -81,81 +81,36 @@ impl DynoStore {
                     }
                 }
                 ObjectPlacement::Erasure { n, k, chunks } => {
-                    report.chunks_expected += chunks.len();
-                    // Partition the committed slots: present, missing on
-                    // a live registered container (rewrite in place),
-                    // missing because the container is gone (repair).
-                    // The per-chunk existence probes fan out over the
-                    // io_pool — a remote probe is an HTTP round trip,
-                    // and paying n of them serially per object would
-                    // make durable startup O(objects × n) round trips.
-                    type Probe = (u8, u32, Option<Arc<dyn ContainerChannel>>, String);
-                    let probes: Arc<Vec<Probe>> = Arc::new(
-                        chunks
-                            .iter()
-                            .map(|&(idx, cid)| {
-                                let ch =
-                                    self.registry.get(cid).ok().filter(|c| c.is_alive());
-                                (idx, cid, ch, chunk_key(&meta.sha3, meta.size, idx))
-                            })
-                            .collect(),
-                    );
-                    let lookup = Arc::clone(&probes);
-                    let found = self.io_pool.scatter_gather(probes.len(), move |i| {
-                        let (_, _, ch, key) = &lookup[i];
-                        ch.as_ref().is_some_and(|c| c.exists(key).unwrap_or(false))
-                    })?;
-                    let mut present: Vec<(u8, u32)> = Vec::with_capacity(chunks.len());
-                    let mut rewrite: Vec<(u8, u32)> = Vec::new();
-                    for ((idx, cid, ch, _), here) in probes.iter().zip(&found) {
-                        match ch {
-                            Some(_) if *here => present.push((*idx, *cid)),
-                            Some(_) => rewrite.push((*idx, *cid)),
-                            None => {
-                                report.chunks_missing += 1;
-                                needs_repair = true;
-                            }
-                        }
-                    }
-                    report.chunks_missing += rewrite.len();
-                    if present.len() < *k {
+                    if self.verify_erasure_unit(
+                        &meta.sha3,
+                        meta.size,
+                        *n,
+                        *k,
+                        chunks,
+                        &mut report,
+                        &mut needs_repair,
+                    )? {
                         report.objects_lost += 1;
-                        continue;
                     }
-                    if rewrite.is_empty() {
-                        continue;
+                }
+                ObjectPlacement::Striped { parts } => {
+                    // Each part is an independent erasure unit keyed by
+                    // its own hash/size; the object is lost if ANY part
+                    // is (it cannot be served whole).
+                    let mut lost = false;
+                    for part in parts {
+                        lost |= self.verify_erasure_unit(
+                            &part.sha3,
+                            part.size,
+                            part.n,
+                            part.k,
+                            &part.chunks,
+                            &mut report,
+                            &mut needs_repair,
+                        )?;
                     }
-                    // Rebuild from any k surviving chunks and heal the
-                    // absent ones onto their committed containers.
-                    let codec = self.codec(ErasureConfig::new(*n, *k))?;
-                    let (collected, _) = self.collect_chunks(&meta, *k, &present)?;
-                    if collected.len() < *k {
+                    if lost {
                         report.objects_lost += 1;
-                        continue;
-                    }
-                    let data = codec.decode(&collected)?;
-                    let mut all_chunks = codec.encode(&data)?;
-                    let mut jobs = Vec::with_capacity(rewrite.len());
-                    for &(idx, cid) in &rewrite {
-                        if let Ok(channel) = self.registry.get(cid) {
-                            jobs.push(ChunkJob {
-                                index: idx,
-                                channel,
-                                key: chunk_key(&meta.sha3, meta.size, idx),
-                                data: Some(std::mem::take(
-                                    &mut all_chunks[idx as usize].packed,
-                                )),
-                            });
-                        }
-                    }
-                    for xfer in self.dispatch_chunk_io(jobs)? {
-                        if xfer.res.is_ok() {
-                            report.chunks_rewritten += 1;
-                        } else {
-                            // Leave it: the slot stays committed and a
-                            // later repair/verify pass retries.
-                            needs_repair = true;
-                        }
                     }
                 }
             }
@@ -165,6 +120,94 @@ impl DynoStore {
             report.repair = self.repair()?;
         }
         Ok(report)
+    }
+
+    /// Verify one erasure unit (a whole Erasure object or one Striped
+    /// part) against registry reality, healing chunks missing on live
+    /// containers in place. Returns `true` when the unit is lost
+    /// (fewer than k recoverable chunks).
+    #[allow(clippy::too_many_arguments)]
+    fn verify_erasure_unit(
+        &self,
+        sha3: &[u8; 32],
+        size: u64,
+        n: usize,
+        k: usize,
+        chunks: &[(u8, u32)],
+        report: &mut RecoveryVerifyReport,
+        needs_repair: &mut bool,
+    ) -> Result<bool> {
+        report.chunks_expected += chunks.len();
+        // Partition the committed slots: present, missing on a live
+        // registered container (rewrite in place), missing because the
+        // container is gone (repair). The per-chunk existence probes
+        // fan out over the io_pool — a remote probe is an HTTP round
+        // trip, and paying n of them serially per object would make
+        // durable startup O(objects × n) round trips.
+        type Probe = (u8, u32, Option<Arc<dyn ContainerChannel>>, String);
+        let probes: Arc<Vec<Probe>> = Arc::new(
+            chunks
+                .iter()
+                .map(|&(idx, cid)| {
+                    let ch = self.registry.get(cid).ok().filter(|c| c.is_alive());
+                    (idx, cid, ch, chunk_key(sha3, size, idx))
+                })
+                .collect(),
+        );
+        let lookup = Arc::clone(&probes);
+        let found = self.io_pool.scatter_gather(probes.len(), move |i| {
+            let (_, _, ch, key) = &lookup[i];
+            ch.as_ref().is_some_and(|c| c.exists(key).unwrap_or(false))
+        })?;
+        let mut present: Vec<(u8, u32)> = Vec::with_capacity(chunks.len());
+        let mut rewrite: Vec<(u8, u32)> = Vec::new();
+        for ((idx, cid, ch, _), here) in probes.iter().zip(&found) {
+            match ch {
+                Some(_) if *here => present.push((*idx, *cid)),
+                Some(_) => rewrite.push((*idx, *cid)),
+                None => {
+                    report.chunks_missing += 1;
+                    *needs_repair = true;
+                }
+            }
+        }
+        report.chunks_missing += rewrite.len();
+        if present.len() < k {
+            return Ok(true);
+        }
+        if rewrite.is_empty() {
+            return Ok(false);
+        }
+        // Rebuild from any k surviving chunks and heal the absent ones
+        // onto their committed containers.
+        let codec = self.codec(ErasureConfig::new(n, k))?;
+        let (collected, _) = self.collect_chunks(sha3, size, k, &present)?;
+        if collected.len() < k {
+            return Ok(true);
+        }
+        let data = codec.decode(&collected)?;
+        let mut all_chunks = codec.encode(&data)?;
+        let mut jobs = Vec::with_capacity(rewrite.len());
+        for &(idx, cid) in &rewrite {
+            if let Ok(channel) = self.registry.get(cid) {
+                jobs.push(ChunkJob {
+                    index: idx,
+                    channel,
+                    key: chunk_key(sha3, size, idx),
+                    data: Some(std::mem::take(&mut all_chunks[idx as usize].packed)),
+                });
+            }
+        }
+        for xfer in self.dispatch_chunk_io(jobs)? {
+            if xfer.res.is_ok() {
+                report.chunks_rewritten += 1;
+            } else {
+                // Leave it: the slot stays committed and a later
+                // repair/verify pass retries.
+                *needs_repair = true;
+            }
+        }
+        Ok(false)
     }
 }
 

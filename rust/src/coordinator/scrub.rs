@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::erasure::{Chunk, ErasureConfig};
-use crate::metadata::{ObjectMeta, ObjectPlacement};
+use crate::metadata::{ObjectMeta, ObjectPlacement, PartManifest};
 use crate::paxos::{CommandOutcome, MetaCommand};
 use crate::crypto::sha3_256;
 use crate::Result;
@@ -110,7 +110,7 @@ impl DynoStore {
 
     fn scrub_object(&self, meta: &ObjectMeta, report: &mut ScrubReport) -> Result<()> {
         report.scanned += 1;
-        let (n, k, chunks) = match &meta.placement {
+        match &meta.placement {
             ObjectPlacement::Single { container } => {
                 // One copy, no parity: verify when the holder is up;
                 // a damaged single copy is unrecoverable.
@@ -132,22 +132,153 @@ impl DynoStore {
                         report.lost += 1;
                     }
                 }
-                return Ok(());
+                Ok(())
             }
-            ObjectPlacement::Erasure { n, k, chunks } => (*n, *k, chunks.clone()),
-        };
+            ObjectPlacement::Erasure { n, k, chunks } => {
+                match self.scrub_unit(&meta.sha3, meta.size, *n, *k, chunks, report)? {
+                    ScrubUnit::Intact => {}
+                    ScrubUnit::Lost => report.lost += 1,
+                    ScrubUnit::Replaced { chunks: new_chunks, newly_placed } => {
+                        // CAS against the placement this sweep read — a
+                        // concurrent migration/repair commit wins and
+                        // this object is re-verified on a later cycle
+                        // (same protocol as repair).
+                        let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+                            uuid: meta.uuid.clone(),
+                            placement: ObjectPlacement::Erasure {
+                                n: *n,
+                                k: *k,
+                                chunks: new_chunks,
+                            },
+                            expect: Some(meta.placement.clone()),
+                        })?;
+                        if let CommandOutcome::Failed(_) = outcome {
+                            let committed = self
+                                .meta
+                                .read(|s| s.get_by_uuid(&meta.uuid))
+                                .map(|m| m.placement)
+                                .ok();
+                            for &(idx, cid) in &newly_placed {
+                                let referenced = matches!(
+                                    &committed,
+                                    Some(ObjectPlacement::Erasure { chunks, .. })
+                                        if chunks.contains(&(idx, cid))
+                                );
+                                if !referenced {
+                                    if let Ok(c) = self.registry.get(cid) {
+                                        let _ =
+                                            c.delete(&chunk_key(&meta.sha3, meta.size, idx));
+                                    }
+                                }
+                            }
+                            report.chunks_healed -= newly_placed.len();
+                        }
+                    }
+                }
+                Ok(())
+            }
+            ObjectPlacement::Striped { parts } => {
+                // Scrub each part as its own erasure unit; fold every
+                // changed part into ONE placement CAS so readers never
+                // see a half-updated manifest.
+                let mut lost = false;
+                let mut changed = false;
+                let mut new_parts: Vec<PartManifest> = Vec::with_capacity(parts.len());
+                let mut placed_by_part: Vec<(PartManifest, Vec<(u8, u32)>)> = Vec::new();
+                for part in parts {
+                    match self.scrub_unit(
+                        &part.sha3,
+                        part.size,
+                        part.n,
+                        part.k,
+                        &part.chunks,
+                        report,
+                    )? {
+                        ScrubUnit::Intact => new_parts.push(part.clone()),
+                        ScrubUnit::Lost => {
+                            lost = true;
+                            new_parts.push(part.clone());
+                        }
+                        ScrubUnit::Replaced { chunks, newly_placed } => {
+                            changed = true;
+                            let mut updated = part.clone();
+                            updated.chunks = chunks;
+                            if !newly_placed.is_empty() {
+                                placed_by_part.push((part.clone(), newly_placed));
+                            }
+                            new_parts.push(updated);
+                        }
+                    }
+                }
+                if lost {
+                    report.lost += 1;
+                }
+                if !changed {
+                    return Ok(());
+                }
+                let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
+                    uuid: meta.uuid.clone(),
+                    placement: ObjectPlacement::Striped { parts: new_parts },
+                    expect: Some(meta.placement.clone()),
+                })?;
+                if let CommandOutcome::Failed(_) = outcome {
+                    let committed = self
+                        .meta
+                        .read(|s| s.get_by_uuid(&meta.uuid))
+                        .map(|m| m.placement)
+                        .ok();
+                    for (part, newly_placed) in &placed_by_part {
+                        for &(idx, cid) in newly_placed {
+                            let referenced = matches!(
+                                &committed,
+                                Some(ObjectPlacement::Striped { parts })
+                                    if parts.iter().any(|p| {
+                                        p.sha3 == part.sha3
+                                            && p.size == part.size
+                                            && p.chunks.contains(&(idx, cid))
+                                    })
+                            );
+                            if !referenced {
+                                if let Ok(c) = self.registry.get(cid) {
+                                    let _ =
+                                        c.delete(&chunk_key(&part.sha3, part.size, idx));
+                                }
+                            }
+                            report.chunks_healed -= 1;
+                        }
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
 
+    /// Verify-and-heal one erasure unit (a whole Erasure object or one
+    /// Striped part; `sha3`/`size` are the unit's own, which its chunk
+    /// keys and headers bind to). Heals damaged copies in place and
+    /// writes replacements for unreachable slots, but leaves the
+    /// metadata commit to the caller — a Striped object commits all of
+    /// its parts in a single CAS.
+    fn scrub_unit(
+        &self,
+        sha3: &[u8; 32],
+        size: u64,
+        n: usize,
+        k: usize,
+        chunks: &[(u8, u32)],
+        report: &mut ScrubReport,
+    ) -> Result<ScrubUnit> {
         // Fetch every placed chunk from every live holder concurrently.
         // Skips (dead/unregistered holders) need re-placement, exactly
         // like repair treats them.
         let mut jobs = Vec::with_capacity(chunks.len());
         let mut unreachable: Vec<(u8, u32)> = Vec::new();
-        for &(idx, cid) in &chunks {
+        for &(idx, cid) in chunks {
             match self.registry.get(cid) {
                 Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
                     index: idx,
                     channel,
-                    key: chunk_key(&meta.sha3, meta.size, idx),
+                    key: chunk_key(sha3, size, idx),
                     data: None,
                 }),
                 _ => unreachable.push((idx, cid)),
@@ -161,7 +292,7 @@ impl DynoStore {
                 Ok((Some(bytes), _)) => match Chunk::unpack(bytes) {
                     Ok(chunk)
                         if chunk.header.index == xfer.index
-                            && chunk.header.object_hash == meta.sha3 =>
+                            && chunk.header.object_hash == *sha3 =>
                     {
                         collected.push(chunk);
                         true
@@ -182,14 +313,13 @@ impl DynoStore {
 
         let placed_idx: HashSet<u8> = valid.iter().map(|&(i, _)| i).collect();
         if damaged.is_empty() && unreachable.is_empty() && placed_idx.len() == n {
-            return Ok(()); // fully redundant and intact
+            return Ok(ScrubUnit::Intact); // fully redundant and intact
         }
         if collected.len() < k {
-            report.lost += 1;
-            return Ok(());
+            return Ok(ScrubUnit::Lost);
         }
 
-        // Rebuild the object once; heal every gap from the same encode.
+        // Rebuild the unit once; heal every gap from the same encode.
         let codec = self.codec(ErasureConfig::new(n, k))?;
         collected.truncate(k);
         let data = codec.decode(&collected)?;
@@ -203,7 +333,7 @@ impl DynoStore {
                 heal_jobs.push(ChunkJob {
                     index: idx,
                     channel,
-                    key: chunk_key(&meta.sha3, meta.size, idx),
+                    key: chunk_key(sha3, size, idx),
                     data: Some(std::mem::take(&mut all_chunks[idx as usize].packed)),
                 });
             }
@@ -246,7 +376,7 @@ impl DynoStore {
                     jobs.push(ChunkJob {
                         index: *idx,
                         channel,
-                        key: chunk_key(&meta.sha3, meta.size, *idx),
+                        key: chunk_key(sha3, size, *idx),
                         data: Some(packed),
                     });
                 }
@@ -264,40 +394,29 @@ impl DynoStore {
 
         new_placement.sort_by_key(|&(idx, _)| idx);
         let old_sorted = {
-            let mut c = chunks.clone();
+            let mut c = chunks.to_vec();
             c.sort_by_key(|&(idx, _)| idx);
             c
         };
         if new_placement == old_sorted {
-            return Ok(()); // healed entirely in place; placement stands
+            return Ok(ScrubUnit::Intact); // healed entirely in place; placement stands
         }
-        // CAS against the placement this sweep read — a concurrent
-        // migration/repair commit wins and this object is re-verified
-        // on a later cycle (same protocol as repair).
-        let outcome = self.meta.submit(MetaCommand::UpdatePlacement {
-            uuid: meta.uuid.clone(),
-            placement: ObjectPlacement::Erasure { n, k, chunks: new_placement },
-            expect: Some(meta.placement.clone()),
-        })?;
-        if let CommandOutcome::Failed(_) = outcome {
-            let committed =
-                self.meta.read(|s| s.get_by_uuid(&meta.uuid)).map(|m| m.placement).ok();
-            for &(idx, cid) in &newly_placed {
-                let referenced = matches!(
-                    &committed,
-                    Some(ObjectPlacement::Erasure { chunks, .. })
-                        if chunks.contains(&(idx, cid))
-                );
-                if !referenced {
-                    if let Ok(c) = self.registry.get(cid) {
-                        let _ = c.delete(&chunk_key(&meta.sha3, meta.size, idx));
-                    }
-                }
-            }
-            report.chunks_healed -= newly_placed.len();
-        }
-        Ok(())
+        Ok(ScrubUnit::Replaced { chunks: new_placement, newly_placed })
     }
+}
+
+/// What [`DynoStore::scrub_unit`] found for one erasure unit. The
+/// metadata commit stays with the caller, so a Striped object can fold
+/// every part's outcome into a single placement CAS.
+enum ScrubUnit {
+    /// Fully redundant and intact, or healed entirely in place — the
+    /// committed placement still stands.
+    Intact,
+    /// Fewer than k valid chunks reachable; unrecoverable for now.
+    Lost,
+    /// Redundancy restored onto new containers: `chunks` is the slot
+    /// list to commit, `newly_placed` the rollback set if the CAS loses.
+    Replaced { chunks: Vec<(u8, u32)>, newly_placed: Vec<(u8, u32)> },
 }
 
 /// A background scrubber: runs [`DynoStore::scrub_cycle`] every

@@ -21,7 +21,9 @@
 //! * `POST /admin/scrub` body `{"sample": n}` → one anti-entropy sweep
 //! * `GET  /health` → liveness + container census + imbalance gauge +
 //!   per-container circuit-breaker states + retry/shed counters +
-//!   durability state (`wal_len`, `last_snapshot`, `recovered`)
+//!   streaming gauges (`bytes_in`/`bytes_out`/`streams_active`/
+//!   `multipart_open`) + durability state (`wal_len`, `last_snapshot`,
+//!   `recovered`)
 //!
 //! Resilience semantics: requests may carry `x-dyno-deadline-ms`; an
 //! exhausted budget answers `504` and an open circuit breaker / missing
@@ -37,7 +39,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{DynoStore, RebalanceOpts};
 use crate::json::{obj, parse, Value};
-use crate::net::{HttpRequest, HttpResponse, HttpServer};
+use crate::net::{BodyReader, HttpRequest, HttpResponse, HttpServer};
 use crate::util::unix_secs;
 use crate::{Error, Result};
 
@@ -70,6 +72,12 @@ pub fn serve_with_limit(
     )
 }
 
+/// Streaming-ingest part size when the deployment doesn't configure
+/// one: 8 MiB. Each part is independently erasure-coded and placed as
+/// its bytes arrive, so gateway memory per upload stays around
+/// `part_size × pipeline depth (2)` regardless of object size.
+pub const DEFAULT_STREAM_PART_SIZE: usize = 8 << 20;
+
 /// [`serve`] with full transport limits: the request-body cap plus the
 /// per-connection socket timeout that shields the worker pool from
 /// slow/hung clients (`Config::conn_timeout_secs`).
@@ -79,8 +87,57 @@ pub fn serve_with_limits(
     workers: usize,
     limits: crate::net::ServerLimits,
 ) -> Result<HttpServer> {
-    let handler = move |req: HttpRequest| route(&store, req);
-    HttpServer::serve_with_limits(addr, workers, Arc::new(handler), limits)
+    serve_with_options(store, addr, workers, limits, DEFAULT_STREAM_PART_SIZE)
+}
+
+/// [`serve_with_limits`] with an explicit streaming part size
+/// (`Config::part_size_mb` / `dynostore serve --part-size-mb`). The
+/// gateway runs in the transport's streaming mode: object PUT bodies
+/// are erasure-encoded per part as they arrive and striped GETs are
+/// written to the socket one part at a time, so peak memory is bounded
+/// by the part size, not object size. The body cap still applies to
+/// every single request — multipart uploads are how objects larger
+/// than the cap get in.
+pub fn serve_with_options(
+    store: Arc<DynoStore>,
+    addr: &str,
+    workers: usize,
+    limits: crate::net::ServerLimits,
+    part_size: usize,
+) -> Result<HttpServer> {
+    let max_body = limits.max_body;
+    let handler = move |req: HttpRequest, body: &mut BodyReader| {
+        stream_route(&store, req, body, max_body, part_size)
+    };
+    HttpServer::serve_stream_with_limits(addr, workers, Arc::new(handler), limits)
+}
+
+/// Streaming-mode entry: plain object PUTs hand the incremental body
+/// reader straight to the coordinator's pipelined push; every other
+/// route buffers its body under the cap and runs the buffered router
+/// unchanged (multipart part PUTs included — one part is one erasure
+/// unit and must be whole before it can be encoded).
+fn stream_route(
+    store: &Arc<DynoStore>,
+    req: HttpRequest,
+    body: &mut BodyReader,
+    max_body: usize,
+    part_size: usize,
+) -> HttpResponse {
+    if v1::is_streaming_put(&req) {
+        return match v1::object_put_stream(store, &req, body, part_size) {
+            Ok(resp) => resp,
+            Err(e) => error_response(store, e),
+        };
+    }
+    match body.read_to_end_cap(max_body) {
+        Ok(bytes) => {
+            let mut req = req;
+            req.body = bytes;
+            route(store, req)
+        }
+        Err(e) => error_response(store, e),
+    }
 }
 
 fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
@@ -130,15 +187,22 @@ fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
 }
 
 fn error_response(store: &Arc<DynoStore>, e: Error) -> HttpResponse {
-    let status = match &e {
-        Error::Auth(_) => 401,
-        Error::PermissionDenied(_) => 403,
-        Error::NotFound(_) => 404,
-        Error::Conflict(_) => 409,
-        Error::Invalid(_) | Error::Json(_) | Error::Config(_) => 400,
-        Error::Timeout(_) => 504,
-        Error::Unavailable(_) | Error::Consensus(_) => 503,
-        _ => 500,
+    // An over-cap body is 413 whichever layer noticed it: the buffered
+    // read, or the streaming push mid-body on a chunked upload (sized
+    // over-cap bodies are refused by the transport before any handler).
+    let status = if crate::net::is_over_cap(&e) {
+        413
+    } else {
+        match &e {
+            Error::Auth(_) => 401,
+            Error::PermissionDenied(_) => 403,
+            Error::NotFound(_) => 404,
+            Error::Conflict(_) => 409,
+            Error::Invalid(_) | Error::Json(_) | Error::Config(_) => 400,
+            Error::Timeout(_) => 504,
+            Error::Unavailable(_) | Error::Consensus(_) => 503,
+            _ => 500,
+        }
     };
     let mut resp =
         HttpResponse::json(status, &obj(vec![("error", e.to_string().as_str().into())]));
@@ -184,8 +248,11 @@ fn auth_login(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse>
 
 fn metrics(store: &Arc<DynoStore>) -> HttpResponse {
     let snap = store.metrics.snapshot();
-    let fields: Vec<(&str, Value)> =
+    let mut fields: Vec<(&str, Value)> =
         snap.iter().map(|(k, v)| (*k, Value::from(*v))).collect();
+    // Live gauge rather than a counter: open uploads are replicated
+    // metadata, so the value is correct across restarts too.
+    fields.push(("multipart_open", store.open_upload_count().into()));
     HttpResponse::json(200, &obj(fields))
 }
 
@@ -237,6 +304,14 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
         ("scrub_cycles", snap["scrub_cycles"].into()),
         ("scrub_chunks_healed", snap["scrub_chunks_healed"].into()),
     ]);
+    // Data-plane streaming view: wire traffic, in-flight streams, and
+    // uploads opened but not yet completed/aborted.
+    let streaming = obj(vec![
+        ("bytes_in", snap["bytes_in"].into()),
+        ("bytes_out", snap["bytes_out"].into()),
+        ("streams_active", snap["streams_active"].into()),
+        ("multipart_open", store.open_upload_count().into()),
+    ]);
     HttpResponse::json(
         200,
         &obj(vec![
@@ -250,6 +325,7 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
             ("transports", obj(census)),
             ("breakers", Value::Arr(breakers)),
             ("resilience", resilience),
+            ("streaming", streaming),
             ("durability", durability),
         ]),
     )

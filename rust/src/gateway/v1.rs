@@ -3,7 +3,16 @@
 //!
 //! Routes:
 //! * `PUT    /v1/objects/<col...>/<name>` body = bytes, optional
-//!   `x-dyno-policy: k,n | regular` → 201 + metadata headers
+//!   `x-dyno-policy: k,n | regular` → 201 + metadata headers. Served
+//!   off the streaming ingest path: the body is erasure-encoded one
+//!   part at a time as it arrives (bounded gateway memory; bodies at
+//!   most one part long take the historical buffered path bit-for-bit)
+//! * S3-style multipart, keyed by query string (only on `/v1`):
+//!   `POST ?uploads` → `{"upload_id"}`; `PUT ?uploadId=&partNumber=N`
+//!   body = part bytes → part JSON + per-part `ETag`;
+//!   `GET ?uploadId=` → recorded parts (resume); `POST ?uploadId=` →
+//!   complete (201 + metadata headers); `DELETE ?uploadId=` → abort
+//!   (chunks of orphan parts garbage-collected)
 //! * `GET    /v1/objects/<col...>/<name>[?version=N]` → bytes; honors
 //!   `If-None-Match` (→ 304) and single `Range: bytes=` (→ 206 served
 //!   by the coordinator's partial-read fast path)
@@ -28,7 +37,7 @@ use crate::container::decode_key;
 use crate::coordinator::{DynoStore, OpContext, PullOpts, PushOpts};
 use crate::json::{obj, parse, Value};
 use crate::metadata::{ObjectMeta, Permission};
-use crate::net::{HttpRequest, HttpResponse};
+use crate::net::{BodyReader, HttpRequest, HttpResponse};
 use crate::resilience::Deadline;
 use crate::util::to_hex;
 use crate::{Error, Result};
@@ -228,6 +237,22 @@ pub(super) fn object_route(
             "?version= is only supported on GET/HEAD ({method} affects all versions)"
         )));
     }
+    // S3-style multipart rides on query parameters (only reachable via
+    // `/v1` — the deprecated alias parses no query string).
+    if method == "POST" && query_get(query, "uploads").is_some() {
+        let upload_id = store.multipart_init(&token, &collection, &name)?;
+        return Ok(HttpResponse::json(
+            200,
+            &obj(vec![
+                ("upload_id", upload_id.as_str().into()),
+                ("collection", collection.as_str().into()),
+                ("name", name.as_str().into()),
+            ]),
+        ));
+    }
+    if let Some(upload_id) = query_get(query, "uploadId") {
+        return multipart_route(store, method, req, &token, upload_id, query, ctx);
+    }
     let mut resp = match method {
         "PUT" => {
             let policy = match req.header("x-dyno-policy") {
@@ -301,10 +326,25 @@ pub(super) fn object_route(
                     resp
                 }
                 RangeSpec::Whole => {
-                    let report =
-                        store.pull(&token, &collection, &name, PullOpts { version, ctx })?;
-                    let mut resp = HttpResponse::bytes(200, report.data);
-                    object_headers(&mut resp, &report.meta);
+                    // Striped objects stream to the socket one erasure
+                    // part at a time (total length is known from
+                    // metadata, so framing stays content-length); other
+                    // placements arrive as one pre-pulled block through
+                    // the same path.
+                    let mut stream = Arc::clone(store).pull_stream(
+                        &token,
+                        &collection,
+                        &name,
+                        PullOpts { version, ctx },
+                    )?;
+                    let total = stream.total_len();
+                    let info = stream.meta().clone();
+                    let mut resp = HttpResponse::stream(
+                        200,
+                        Some(total),
+                        Box::new(move || stream.next_block()),
+                    );
+                    object_headers(&mut resp, &info);
                     resp
                 }
             }
@@ -352,6 +392,169 @@ pub(super) fn object_route(
             return Err(Error::Invalid(format!("method {other} not supported on objects")))
         }
     };
+    mark_deprecated(&mut resp, alias);
+    Ok(resp)
+}
+
+/// Multipart sub-routes of `/v1/objects/...`, keyed by `?uploadId=`:
+/// `PUT &partNumber=N` records one part, `GET` lists recorded parts
+/// (resume support), `POST` completes, `DELETE` aborts.
+fn multipart_route(
+    store: &Arc<DynoStore>,
+    method: &str,
+    req: &HttpRequest,
+    token: &str,
+    upload_id: &str,
+    query: &[(String, String)],
+    ctx: OpContext,
+) -> Result<HttpResponse> {
+    match method {
+        "PUT" => {
+            let number: u32 = query_get(query, "partNumber")
+                .ok_or_else(|| {
+                    Error::Invalid("part upload requires ?partNumber=".into())
+                })?
+                .parse()
+                .map_err(|_| Error::Invalid("bad partNumber".into()))?;
+            let policy = match req.header("x-dyno-policy") {
+                Some(p) => Some(parse_policy(p)?),
+                None => None,
+            };
+            let part = store.multipart_put_part(
+                token,
+                upload_id,
+                number,
+                &req.body,
+                PushOpts { policy, ctx },
+            )?;
+            let mut resp = HttpResponse::json(
+                200,
+                &obj(vec![
+                    ("number", (part.number as u64).into()),
+                    ("size", part.size.into()),
+                    ("etag", part.etag().into()),
+                ]),
+            );
+            resp.headers.insert("etag".into(), format!("\"{}\"", part.etag()));
+            Ok(resp)
+        }
+        "GET" => {
+            let state = store.multipart_parts(token, upload_id)?;
+            let parts: Vec<Value> = state
+                .parts
+                .values()
+                .map(|p| {
+                    obj(vec![
+                        ("number", (p.number as u64).into()),
+                        ("size", p.size.into()),
+                        ("etag", p.etag().into()),
+                    ])
+                })
+                .collect();
+            Ok(HttpResponse::json(
+                200,
+                &obj(vec![
+                    ("upload_id", upload_id.into()),
+                    ("collection", state.collection.as_str().into()),
+                    ("name", state.name.as_str().into()),
+                    ("created_at", state.created_at.into()),
+                    ("parts", Value::Arr(parts)),
+                ]),
+            ))
+        }
+        "POST" => {
+            let meta = store.multipart_complete(token, upload_id)?;
+            let mut resp = HttpResponse::json(
+                201,
+                &obj(vec![
+                    ("uuid", meta.uuid.as_str().into()),
+                    ("version", meta.version.into()),
+                    ("size", meta.size.into()),
+                    ("etag", to_hex(&meta.sha3).into()),
+                    ("created_at", meta.created_at.into()),
+                ]),
+            );
+            object_headers(&mut resp, &meta);
+            Ok(resp)
+        }
+        "DELETE" => {
+            let aborted = store.multipart_abort(token, upload_id)?;
+            Ok(HttpResponse::json(200, &obj(vec![("aborted_parts", aborted.into())])))
+        }
+        other => Err(Error::Invalid(format!(
+            "method {other} not supported on multipart uploads"
+        ))),
+    }
+}
+
+/// Should this request take the streamed-ingest path? Plain object PUTs
+/// stream; multipart part PUTs (`?uploadId=`) buffer — a part is one
+/// erasure unit and must be whole before it can be encoded.
+pub(super) fn is_streaming_put(req: &HttpRequest) -> bool {
+    if req.method != "PUT" {
+        return false;
+    }
+    if req.path.starts_with("/v1/objects/") {
+        let (_, query) = split_query(&req.path);
+        return !query.iter().any(|(k, _)| k == "uploadId");
+    }
+    // The deprecated alias defines no query parameters, so every alias
+    // PUT is a plain object upload.
+    req.path.starts_with("/objects/")
+}
+
+/// Streamed `PUT /v1/objects/...` (and the `/objects/` alias): the
+/// request body is erasure-encoded per part as bytes arrive off the
+/// socket, dispatching each part's chunks while the client uploads the
+/// next — gateway memory stays O(part × pipeline depth) regardless of
+/// body size. Bodies at most one part long take the exact buffered-push
+/// path (byte-identical metadata); longer bodies commit as `Striped`.
+pub(super) fn object_put_stream(
+    store: &Arc<DynoStore>,
+    req: &HttpRequest,
+    body: &mut BodyReader,
+    part_size: usize,
+) -> Result<HttpResponse> {
+    let alias = !req.path.starts_with("/v1/");
+    let (path, query) = if alias {
+        (req.path.as_str(), Vec::new())
+    } else {
+        split_query(&req.path)
+    };
+    if version_pin(&query)?.is_some() {
+        return Err(Error::Invalid(
+            "?version= is only supported on GET/HEAD (PUT affects all versions)".into(),
+        ));
+    }
+    let token = bearer(req)?;
+    let prefix = if alias { "/objects" } else { "/v1/objects" };
+    let (collection, name) = object_target(path, prefix, !alias)?;
+    let ctx = OpContext::default().with_deadline(request_deadline(req)?);
+    let policy = match req.header("x-dyno-policy") {
+        Some(p) => Some(parse_policy(p)?),
+        None => None,
+    };
+    let report = store.push_stream(
+        &token,
+        &collection,
+        &name,
+        body,
+        part_size,
+        PushOpts { policy, ctx },
+    )?;
+    let mut resp = HttpResponse::json(
+        201,
+        &obj(vec![
+            ("uuid", report.meta.uuid.as_str().into()),
+            ("version", report.meta.version.into()),
+            ("size", report.meta.size.into()),
+            ("etag", to_hex(&report.meta.sha3).into()),
+            ("created_at", report.meta.created_at.into()),
+            ("sim_s", report.sim_s.into()),
+            ("backend", report.backend.into()),
+        ]),
+    );
+    object_headers(&mut resp, &report.meta);
     mark_deprecated(&mut resp, alias);
     Ok(resp)
 }

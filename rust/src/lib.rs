@@ -81,7 +81,7 @@ pub mod testkit;
 pub mod util;
 
 pub use api::{LocalStore, ObjectStore, RemoteStore};
-pub use client::Client;
+pub use client::{Client, MultipartReport};
 pub use config::Config;
 pub use coordinator::DynoStore;
 pub use erasure::ErasureConfig;

@@ -6,7 +6,7 @@
 //! dynostore serve  --config cluster.json --addr 127.0.0.1:8080 --data-dir /var/lib/dynostore
 //! dynostore agent  --config agent.json   --addr 127.0.0.1:9100
 //! dynostore register --url http://HOST:PORT --user UserA
-//! dynostore push   --url http://HOST:PORT --token T [--policy k,n] /UserA/col/name ./file
+//! dynostore push   --url http://HOST:PORT --token T [--policy k,n] [--multipart] /UserA/col/name ./file
 //! dynostore pull   --url http://HOST:PORT --token T [--version N] [--range A-B] /UserA/col/name [./out]
 //! dynostore stat   --url http://HOST:PORT --token T /UserA/col/name
 //! dynostore exists --url http://HOST:PORT --token T /UserA/col/name
@@ -104,6 +104,7 @@ fn print_usage() {
          \x20 serve    --config FILE [--addr 127.0.0.1:8080] [--workers 8]\n\
          \x20          [--engine pure-rust|swar|swar-parallel|pjrt]\n\
          \x20          [--data-dir DIR] [--snapshot-every N] [--max-body-mb MB]\n\
+         \x20          [--part-size-mb MB]\n\
          \x20          (--data-dir persists the metadata plane: WAL + snapshots;\n\
          \x20           a restarted serve recovers every acknowledged object)\n\
          \x20 agent    --config FILE [--addr 127.0.0.1:9100] [--workers 4]\n\
@@ -111,7 +112,10 @@ fn print_usage() {
          \x20           gateways attach it via an \"endpoint\" container entry)\n\
          \x20 register --url http://HOST:PORT --user NAME\n\
          \x20 push     --url http://HOST:PORT --token T [--policy k,n|regular]\n\
-         \x20          [--key-hex HEX64] PATH FILE\n\
+         \x20          [--key-hex HEX64] [--multipart] [--part-size-mb MB]\n\
+         \x20          [--resume UPLOAD_ID] PATH FILE\n\
+         \x20          (--multipart splits FILE into independently striped\n\
+         \x20           parts — pushes objects larger than the gateway body cap)\n\
          \x20 pull     --url http://HOST:PORT --token T [--version N] [--range A-B]\n\
          \x20          [--key-hex HEX64] PATH [OUT]\n\
          \x20 stat     --url http://HOST:PORT --token T PATH\n\
@@ -174,6 +178,12 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
             .map_err(|_| "--max-body-mb must be a number".to_string())?
             .max(1);
     }
+    if let Some(part) = flags.get("part-size-mb") {
+        config.part_size_mb = part
+            .parse::<u64>()
+            .map_err(|_| "--part-size-mb must be a number".to_string())?
+            .max(1);
+    }
     if config.data_dir.is_none() {
         dynostore::log_warn!(
             "no data_dir configured: metadata is in-memory and will NOT survive a restart \
@@ -204,8 +214,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
         max_body,
         conn_timeout: std::time::Duration::from_secs(config.conn_timeout_secs),
     };
-    let server = gateway::serve_with_limits(Arc::clone(&store), &addr, workers, limits)
-        .map_err(|e| e.to_string())?;
+    let part_size = usize::try_from(config.part_size_mb.saturating_mul(1 << 20))
+        .unwrap_or(gateway::DEFAULT_STREAM_PART_SIZE);
+    let server =
+        gateway::serve_with_options(Arc::clone(&store), &addr, workers, limits, part_size)
+            .map_err(|e| e.to_string())?;
     // Background anti-entropy: a paced scrubber sweeps placements and
     // heals silent corruption when the config enables it.
     let _scrubber = if config.scrub_interval_secs > 0 {
@@ -360,6 +373,40 @@ fn object_op(
         "push" => {
             let file = pos.get(1).ok_or("missing FILE to push")?;
             let data = std::fs::read(file).map_err(|e| e.to_string())?;
+            // `--multipart` splits the payload into independently striped
+            // parts (S3-style), so objects larger than the gateway's
+            // request-body cap still go through; `--resume UPLOAD_ID`
+            // continues an interrupted one, skipping recorded parts.
+            if flags.contains_key("multipart") || flags.contains_key("resume") {
+                let part_mb: u64 = match flags.get("part-size-mb") {
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| "--part-size-mb must be a number".to_string())?,
+                    None => (gateway::DEFAULT_STREAM_PART_SIZE >> 20) as u64,
+                };
+                let part_size = usize::try_from(part_mb.max(1).saturating_mul(1 << 20))
+                    .unwrap_or(gateway::DEFAULT_STREAM_PART_SIZE);
+                let report = match flags.get("resume") {
+                    Some(id) => client
+                        .resume_multipart(collection, name, id, &data, part_size)
+                        .map_err(|e| e.to_string())?,
+                    None => client
+                        .push_multipart(collection, name, &data, part_size)
+                        .map_err(|e| e.to_string())?,
+                };
+                println!(
+                    "pushed {path}: version {} uuid {} etag {} ({} bytes, {} parts, \
+                     {} skipped, {:.3}s)",
+                    report.info.version,
+                    report.info.uuid,
+                    report.info.etag,
+                    data.len(),
+                    report.parts,
+                    report.parts_skipped,
+                    report.seconds
+                );
+                return Ok(());
+            }
             let (info, seconds) =
                 client.push_info(collection, name, &data).map_err(|e| e.to_string())?;
             println!(

@@ -13,6 +13,6 @@ mod store;
 
 pub use namespace::{normalize_path, parent_path, validate_name};
 pub use store::{
-    MetadataStore, ObjectMeta, ObjectPage, ObjectPlacement, Permission,
-    DEFAULT_RETENTION_SECS,
+    composite_sha3, MetadataStore, ObjectMeta, ObjectPage, ObjectPlacement, PartManifest,
+    Permission, UploadState, DEFAULT_RETENTION_SECS,
 };

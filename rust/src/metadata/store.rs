@@ -36,6 +36,98 @@ impl Permission {
     }
 }
 
+/// One independently erasure-coded part of a striped object — the unit
+/// of the streaming data plane and of S3-style multipart uploads. Each
+/// part is coded and placed like a standalone erasure object whose
+/// chunk keys derive from the *part's* hash and size, so a part can be
+/// pushed (and repaired, scrubbed, migrated) before the whole object's
+/// bytes — or even its total size — are known.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartManifest {
+    /// 1-based part number (S3 convention); ascending numbers define
+    /// assembly order. Numbers need not be contiguous.
+    pub number: u32,
+    /// Part payload length in bytes.
+    pub size: u64,
+    /// SHA3-256 of the part's bytes — the per-part etag, and the hash
+    /// chunk keys and chunk headers are bound to.
+    pub sha3: [u8; 32],
+    pub n: usize,
+    pub k: usize,
+    /// Chunk index → container id, exactly like an Erasure placement.
+    pub chunks: Vec<(u8, u32)>,
+}
+
+impl PartManifest {
+    /// The part's etag as served over HTTP.
+    pub fn etag(&self) -> String {
+        to_hex(&self.sha3)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("number", (self.number as u64).into()),
+            ("size", self.size.into()),
+            ("sha3", to_hex(&self.sha3).into()),
+            ("n", self.n.into()),
+            ("k", self.k.into()),
+            (
+                "chunks",
+                Value::Arr(
+                    self.chunks
+                        .iter()
+                        .map(|&(i, c)| Value::Arr(vec![(i as u64).into(), (c as u64).into()]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<PartManifest> {
+        let sha3_vec =
+            from_hex(v.req_str("sha3")?).ok_or_else(|| Error::Json("bad part sha3".into()))?;
+        let sha3: [u8; 32] =
+            sha3_vec.try_into().map_err(|_| Error::Json("part sha3 length".into()))?;
+        Ok(PartManifest {
+            number: v.req_u64("number")? as u32,
+            size: v.req_u64("size")?,
+            sha3,
+            n: v.req_u64("n")? as usize,
+            k: v.req_u64("k")? as usize,
+            chunks: chunk_pairs_from_json(v.get("chunks"))?,
+        })
+    }
+}
+
+/// Whole-object etag of a striped object: SHA3-256 over the
+/// concatenated part hashes in assembly order — an S3-style "hash of
+/// hashes", because the ordered object bytes are never materialized in
+/// one buffer on the streaming path.
+pub fn composite_sha3(parts: &[PartManifest]) -> [u8; 32] {
+    let mut h = crate::crypto::Sha3_256::new();
+    for p in parts {
+        h.update(&p.sha3);
+    }
+    h.finalize()
+}
+
+fn chunk_pairs_from_json(v: &Value) -> Result<Vec<(u8, u32)>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Json("chunks".into()))?
+        .iter()
+        .map(|pair| {
+            let a = pair.as_arr().ok_or_else(|| Error::Json("chunk pair".into()))?;
+            if a.len() != 2 {
+                return Err(Error::Json("chunk pair arity".into()));
+            }
+            Ok((
+                a[0].as_u64().ok_or_else(|| Error::Json("idx".into()))? as u8,
+                a[1].as_u64().ok_or_else(|| Error::Json("cid".into()))? as u32,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()
+}
+
 /// Where the bytes of one object version live.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ObjectPlacement {
@@ -43,6 +135,10 @@ pub enum ObjectPlacement {
     Single { container: u32 },
     /// Resilience policy: chunk index → container id (paper §IV-D).
     Erasure { n: usize, k: usize, chunks: Vec<(u8, u32)> },
+    /// Streaming/multipart: a sequence of independently erasure-coded
+    /// parts in ascending part-number order. Byte offsets are prefix
+    /// sums of part sizes.
+    Striped { parts: Vec<PartManifest> },
 }
 
 impl ObjectPlacement {
@@ -53,6 +149,10 @@ impl ObjectPlacement {
             ObjectPlacement::Erasure { chunks, .. } => {
                 chunks.iter().map(|&(_, c)| c).collect()
             }
+            ObjectPlacement::Striped { parts } => parts
+                .iter()
+                .flat_map(|p| p.chunks.iter().map(|&(_, c)| c))
+                .collect(),
         }
     }
 
@@ -80,6 +180,10 @@ impl ObjectPlacement {
                     ),
                 ),
             ]),
+            ObjectPlacement::Striped { parts } => obj(vec![
+                ("type", "striped".into()),
+                ("parts", Value::Arr(parts.iter().map(|p| p.to_json()).collect())),
+            ]),
         }
     }
 
@@ -88,29 +192,20 @@ impl ObjectPlacement {
             "single" => {
                 Ok(ObjectPlacement::Single { container: v.req_u64("container")? as u32 })
             }
-            "erasure" => {
-                let chunks = v
-                    .get("chunks")
+            "erasure" => Ok(ObjectPlacement::Erasure {
+                n: v.req_u64("n")? as usize,
+                k: v.req_u64("k")? as usize,
+                chunks: chunk_pairs_from_json(v.get("chunks"))?,
+            }),
+            "striped" => {
+                let parts = v
+                    .get("parts")
                     .as_arr()
-                    .ok_or_else(|| Error::Json("chunks".into()))?
+                    .ok_or_else(|| Error::Json("parts".into()))?
                     .iter()
-                    .map(|pair| {
-                        let a =
-                            pair.as_arr().ok_or_else(|| Error::Json("chunk pair".into()))?;
-                        if a.len() != 2 {
-                            return Err(Error::Json("chunk pair arity".into()));
-                        }
-                        Ok((
-                            a[0].as_u64().ok_or_else(|| Error::Json("idx".into()))? as u8,
-                            a[1].as_u64().ok_or_else(|| Error::Json("cid".into()))? as u32,
-                        ))
-                    })
+                    .map(PartManifest::from_json)
                     .collect::<Result<Vec<_>>>()?;
-                Ok(ObjectPlacement::Erasure {
-                    n: v.req_u64("n")? as usize,
-                    k: v.req_u64("k")? as usize,
-                    chunks,
-                })
+                Ok(ObjectPlacement::Striped { parts })
             }
             other => Err(Error::Json(format!("bad placement type '{other}'"))),
         }
@@ -221,8 +316,24 @@ struct Inner {
     /// [`ObjectMeta::nonce_epoch`]). Names that were never evicted have
     /// no entry (epoch 0), keeping the map tiny.
     nonce_epochs: HashMap<(String, String), u64>,
+    /// upload id → in-flight multipart upload. Replicated through the
+    /// Paxos command log like every other mutation, so an interrupted
+    /// upload is resumable after a gateway restart.
+    uploads: HashMap<String, UploadState>,
     rng: Option<Rng>,
     uuid_counter: u64,
+}
+
+/// An in-flight S3-style multipart upload: parts arrive (possibly out
+/// of order, possibly re-uploaded) until complete assembles them into a
+/// [`ObjectPlacement::Striped`] object version, or abort discards them.
+#[derive(Debug, Clone)]
+pub struct UploadState {
+    pub collection: String,
+    pub name: String,
+    pub created_at: u64,
+    /// part number → manifest; the BTreeMap keeps assembly order.
+    pub parts: BTreeMap<u32, PartManifest>,
 }
 
 /// Single-replica metadata service. All operations take `now` (unix
@@ -353,6 +464,21 @@ impl MetadataStore {
         placement: ObjectPlacement,
         now: u64,
     ) -> Result<ObjectMeta> {
+        let collection = normalize_path(collection)?;
+        let mut inner = self.inner.lock().unwrap();
+        put_object_inner(&mut inner, caller, &collection, name, size, sha3, placement, now)
+    }
+
+    /// Open a multipart upload for `(collection, name)`; returns the
+    /// upload id. Caller needs Write on the collection. No object
+    /// version exists until [`multipart_complete`](Self::multipart_complete).
+    pub fn multipart_init(
+        &self,
+        caller: &str,
+        collection: &str,
+        name: &str,
+        now: u64,
+    ) -> Result<String> {
         validate_name(name)?;
         let collection = normalize_path(collection)?;
         let mut inner = self.inner.lock().unwrap();
@@ -360,44 +486,111 @@ impl MetadataStore {
             return Err(Error::NotFound(format!("collection {collection}")));
         }
         check_perm(&inner, caller, &collection, Permission::Write)?;
+        let upload_id = next_uuid(&mut inner);
+        inner.uploads.insert(
+            upload_id.clone(),
+            UploadState {
+                collection,
+                name: name.to_string(),
+                created_at: now,
+                parts: BTreeMap::new(),
+            },
+        );
+        Ok(upload_id)
+    }
 
-        let uuid = next_uuid(&mut inner);
-        let chain_key = (collection.clone(), name.to_string());
-        // Version numbers are monotonic per chain: latest.version + 1,
-        // NOT chain length — GC prunes superseded entries from the
-        // chain, and a length-based counter would re-issue a version
-        // number that still exists (breaking version pinning and the
-        // client's version-salted encryption nonces).
-        let version = inner
-            .chains
-            .get(&chain_key)
-            .and_then(|c| c.last())
-            .and_then(|u| inner.objects.get(u))
-            .map_or(0, |m| m.version + 1);
-        // Supersede the previous latest version (starts its GC clock).
-        if let Some(chain) = inner.chains.get(&chain_key) {
-            if let Some(prev) = chain.last().cloned() {
-                if let Some(meta) = inner.objects.get_mut(&prev) {
-                    meta.superseded_at = Some(now);
-                }
+    /// Record one uploaded part's manifest. Re-uploading a part number
+    /// replaces it; the displaced manifest is returned so the caller
+    /// can GC its now-orphaned chunks.
+    pub fn multipart_put(
+        &self,
+        caller: &str,
+        upload_id: &str,
+        part: PartManifest,
+    ) -> Result<Option<PartManifest>> {
+        if part.number == 0 {
+            return Err(Error::Invalid("part numbers start at 1".into()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let collection = inner
+            .uploads
+            .get(upload_id)
+            .ok_or_else(|| Error::NotFound(format!("upload {upload_id}")))?
+            .collection
+            .clone();
+        check_perm(&inner, caller, &collection, Permission::Write)?;
+        let up = inner.uploads.get_mut(upload_id).expect("checked above");
+        Ok(up.parts.insert(part.number, part))
+    }
+
+    /// Snapshot of an open upload (for resume: which parts are already
+    /// durable). Caller needs Read on the target collection.
+    pub fn multipart_parts(&self, caller: &str, upload_id: &str) -> Result<UploadState> {
+        let inner = self.inner.lock().unwrap();
+        let up = inner
+            .uploads
+            .get(upload_id)
+            .ok_or_else(|| Error::NotFound(format!("upload {upload_id}")))?;
+        check_perm(&inner, caller, &up.collection, Permission::Read)?;
+        Ok(up.clone())
+    }
+
+    /// Assemble the uploaded parts (ascending part number) into a new
+    /// [`ObjectPlacement::Striped`] object version and close the
+    /// upload. The object's size is the sum of part sizes and its etag
+    /// is [`composite_sha3`] over the part hashes.
+    pub fn multipart_complete(
+        &self,
+        caller: &str,
+        upload_id: &str,
+        now: u64,
+    ) -> Result<ObjectMeta> {
+        let mut inner = self.inner.lock().unwrap();
+        {
+            let up = inner
+                .uploads
+                .get(upload_id)
+                .ok_or_else(|| Error::NotFound(format!("upload {upload_id}")))?;
+            check_perm(&inner, caller, &up.collection, Permission::Write)?;
+            if up.parts.is_empty() {
+                return Err(Error::Invalid(format!("upload {upload_id} has no parts")));
             }
         }
-        let meta = ObjectMeta {
-            uuid: uuid.clone(),
-            name: name.to_string(),
-            collection: collection.clone(),
-            owner: namespace_owner(&collection).to_string(),
+        let up = inner.uploads.remove(upload_id).expect("checked above");
+        let parts: Vec<PartManifest> = up.parts.into_values().collect();
+        let size = parts.iter().map(|p| p.size).sum();
+        let sha3 = composite_sha3(&parts);
+        put_object_inner(
+            &mut inner,
+            caller,
+            &up.collection,
+            &up.name,
             size,
             sha3,
-            version,
-            created_at: now,
-            superseded_at: None,
-            nonce_epoch: inner.nonce_epochs.get(&chain_key).copied().unwrap_or(0),
-            placement,
-        };
-        inner.objects.insert(uuid.clone(), meta.clone());
-        inner.chains.entry(chain_key).or_default().push(uuid);
-        Ok(meta)
+            ObjectPlacement::Striped { parts },
+            now,
+        )
+    }
+
+    /// Abandon an upload; returns the discarded part manifests so the
+    /// caller can GC their chunks from the containers.
+    pub fn multipart_abort(&self, caller: &str, upload_id: &str) -> Result<Vec<PartManifest>> {
+        let mut inner = self.inner.lock().unwrap();
+        {
+            let up = inner
+                .uploads
+                .get(upload_id)
+                .ok_or_else(|| Error::NotFound(format!("upload {upload_id}")))?;
+            check_perm(&inner, caller, &up.collection, Permission::Write)?;
+        }
+        let up = inner.uploads.remove(upload_id).expect("checked above");
+        Ok(up.parts.into_values().collect())
+    }
+
+    /// Number of open (not yet completed/aborted) multipart uploads —
+    /// the `multipart_open` gauge in `/metrics`.
+    pub fn open_upload_count(&self) -> usize {
+        self.inner.lock().unwrap().uploads.len()
     }
 
     /// Latest version of `(collection, name)`; caller needs Read.
@@ -673,6 +866,24 @@ impl MetadataStore {
                 ])
             })
             .collect();
+        let mut upload_ids: Vec<&String> = inner.uploads.keys().collect();
+        upload_ids.sort();
+        let uploads: Vec<Value> = upload_ids
+            .into_iter()
+            .map(|id| {
+                let u = &inner.uploads[id];
+                obj(vec![
+                    ("id", id.as_str().into()),
+                    ("collection", u.collection.as_str().into()),
+                    ("name", u.name.as_str().into()),
+                    ("created_at", u.created_at.into()),
+                    (
+                        "parts",
+                        Value::Arr(u.parts.values().map(|p| p.to_json()).collect()),
+                    ),
+                ])
+            })
+            .collect();
         obj(vec![
             // xoshiro state words exceed 2^53: hex strings, not numbers.
             (
@@ -686,6 +897,7 @@ impl MetadataStore {
             ("objects", Value::Arr(objects)),
             ("chains", Value::Arr(chains)),
             ("nonce_epochs", Value::Arr(nonce_epochs)),
+            ("uploads", Value::Arr(uploads)),
         ])
     }
 
@@ -755,17 +967,96 @@ impl MetadataStore {
                 e.req_u64("epoch")?,
             );
         }
+        let mut uploads = HashMap::new();
+        // Absent in pre-multipart snapshots (no open uploads).
+        for u in v.get("uploads").as_arr().unwrap_or(&[]) {
+            let mut parts = BTreeMap::new();
+            for p in u.get("parts").as_arr().unwrap_or(&[]) {
+                let part = PartManifest::from_json(p)?;
+                parts.insert(part.number, part);
+            }
+            uploads.insert(
+                u.req_str("id")?.to_string(),
+                UploadState {
+                    collection: u.req_str("collection")?.to_string(),
+                    name: u.req_str("name")?.to_string(),
+                    created_at: u.req_u64("created_at")?,
+                    parts,
+                },
+            );
+        }
         Ok(MetadataStore {
             inner: Mutex::new(Inner {
                 collections,
                 objects,
                 chains,
                 nonce_epochs,
+                uploads,
                 rng: Some(Rng::from_state(state)),
                 uuid_counter: v.req_u64("uuid_counter")?,
             }),
         })
     }
+}
+
+/// Record a new object version under an already-held lock — shared by
+/// [`MetadataStore::put_object`] and
+/// [`MetadataStore::multipart_complete`] (which must remove the upload
+/// and commit the striped version atomically).
+#[allow(clippy::too_many_arguments)]
+fn put_object_inner(
+    inner: &mut Inner,
+    caller: &str,
+    collection: &str,
+    name: &str,
+    size: u64,
+    sha3: [u8; 32],
+    placement: ObjectPlacement,
+    now: u64,
+) -> Result<ObjectMeta> {
+    validate_name(name)?;
+    if !inner.collections.contains_key(collection) {
+        return Err(Error::NotFound(format!("collection {collection}")));
+    }
+    check_perm(inner, caller, collection, Permission::Write)?;
+
+    let uuid = next_uuid(inner);
+    let chain_key = (collection.to_string(), name.to_string());
+    // Version numbers are monotonic per chain: latest.version + 1,
+    // NOT chain length — GC prunes superseded entries from the
+    // chain, and a length-based counter would re-issue a version
+    // number that still exists (breaking version pinning and the
+    // client's version-salted encryption nonces).
+    let version = inner
+        .chains
+        .get(&chain_key)
+        .and_then(|c| c.last())
+        .and_then(|u| inner.objects.get(u))
+        .map_or(0, |m| m.version + 1);
+    // Supersede the previous latest version (starts its GC clock).
+    if let Some(chain) = inner.chains.get(&chain_key) {
+        if let Some(prev) = chain.last().cloned() {
+            if let Some(meta) = inner.objects.get_mut(&prev) {
+                meta.superseded_at = Some(now);
+            }
+        }
+    }
+    let meta = ObjectMeta {
+        uuid: uuid.clone(),
+        name: name.to_string(),
+        collection: collection.to_string(),
+        owner: namespace_owner(collection).to_string(),
+        size,
+        sha3,
+        version,
+        created_at: now,
+        superseded_at: None,
+        nonce_epoch: inner.nonce_epochs.get(&chain_key).copied().unwrap_or(0),
+        placement,
+    };
+    inner.objects.insert(uuid.clone(), meta.clone());
+    inner.chains.entry(chain_key).or_default().push(uuid);
+    Ok(meta)
 }
 
 /// UUID v4-style identifier from the store's deterministic RNG.
@@ -1150,5 +1441,117 @@ mod tests {
         assert_eq!(listed[0].name, "a");
         assert_eq!(listed[0].version, 1);
         assert_eq!(listed[1].name, "b");
+    }
+
+    fn part(number: u32, size: u64, fill: u8) -> PartManifest {
+        PartManifest {
+            number,
+            size,
+            sha3: [fill; 32],
+            n: 5,
+            k: 3,
+            chunks: (0..5u8).map(|i| (i, (i as u32) + 1)).collect(),
+        }
+    }
+
+    #[test]
+    fn striped_placement_json_roundtrip() {
+        let p = ObjectPlacement::Striped { parts: vec![part(1, 100, 7), part(2, 50, 9)] };
+        let back = ObjectPlacement::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // containers() unions all parts' chunk targets.
+        assert_eq!(p.containers().len(), 10);
+        // Part manifests roundtrip standalone too (used by the Paxos
+        // command codec).
+        let m = part(3, 42, 1);
+        assert_eq!(PartManifest::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn multipart_lifecycle_out_of_order_parts() {
+        let s = store();
+        let id = s.multipart_init("UserA", "/UserA", "big", 100).unwrap();
+        // Parts land out of order; re-upload of part 2 displaces the
+        // first attempt and hands back its manifest for chunk GC.
+        assert!(s.multipart_put("UserA", &id, part(2, 50, 2)).unwrap().is_none());
+        assert!(s.multipart_put("UserA", &id, part(1, 70, 1)).unwrap().is_none());
+        let displaced = s.multipart_put("UserA", &id, part(2, 60, 3)).unwrap().unwrap();
+        assert_eq!(displaced.sha3, [2; 32]);
+        assert_eq!(s.open_upload_count(), 1);
+
+        // Resume view: both parts durable, ascending order.
+        let up = s.multipart_parts("UserA", &id).unwrap();
+        assert_eq!(up.parts.keys().copied().collect::<Vec<_>>(), vec![1, 2]);
+
+        let meta = s.multipart_complete("UserA", &id, 200).unwrap();
+        assert_eq!(meta.size, 130);
+        assert_eq!(s.open_upload_count(), 0);
+        match &meta.placement {
+            ObjectPlacement::Striped { parts } => {
+                assert_eq!(parts[0].number, 1);
+                assert_eq!(parts[1].number, 2);
+                assert_eq!(meta.sha3, composite_sha3(parts));
+            }
+            other => panic!("expected striped placement, got {other:?}"),
+        }
+        // The upload is gone: double-complete is NotFound.
+        assert!(matches!(s.multipart_complete("UserA", &id, 201), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn multipart_abort_returns_orphan_parts() {
+        let s = store();
+        let id = s.multipart_init("UserA", "/UserA", "gone", 1).unwrap();
+        s.multipart_put("UserA", &id, part(1, 10, 4)).unwrap();
+        let orphans = s.multipart_abort("UserA", &id).unwrap();
+        assert_eq!(orphans.len(), 1);
+        assert_eq!(s.open_upload_count(), 0);
+        assert!(s.get_latest("UserA", "/UserA", "gone").is_err());
+    }
+
+    #[test]
+    fn multipart_enforces_permissions_and_validity() {
+        let s = store();
+        // Write needed to open.
+        assert!(matches!(
+            s.multipart_init("UserB", "/UserA", "x", 1),
+            Err(Error::PermissionDenied(_))
+        ));
+        let id = s.multipart_init("UserA", "/UserA", "x", 1).unwrap();
+        // Part numbers are 1-based.
+        assert!(matches!(
+            s.multipart_put("UserA", &id, part(0, 1, 1)),
+            Err(Error::Invalid(_))
+        ));
+        // UserB can neither upload parts nor complete/abort.
+        assert!(s.multipart_put("UserB", &id, part(1, 1, 1)).is_err());
+        assert!(s.multipart_abort("UserB", &id).is_err());
+        // Zero-part complete is invalid, not an empty object.
+        assert!(matches!(
+            s.multipart_complete("UserA", &id, 2),
+            Err(Error::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_open_uploads() {
+        let s = store();
+        let id = s.multipart_init("UserA", "/UserA", "resumable", 5).unwrap();
+        s.multipart_put("UserA", &id, part(1, 10, 1)).unwrap();
+        s.multipart_put("UserA", &id, part(3, 30, 3)).unwrap();
+        let snap = s.snapshot_value();
+        let restored = MetadataStore::restore(&snap).unwrap();
+        assert_eq!(restored.open_upload_count(), 1);
+        let up = restored.multipart_parts("UserA", &id).unwrap();
+        assert_eq!(up.name, "resumable");
+        assert_eq!(up.parts.keys().copied().collect::<Vec<_>>(), vec![1, 3]);
+        // Deterministic: re-snapshot matches byte for byte.
+        assert_eq!(
+            crate::json::to_string(&restored.snapshot_value()),
+            crate::json::to_string(&snap)
+        );
+        // The restored store can finish the upload.
+        let meta = restored.multipart_complete("UserA", &id, 9).unwrap();
+        assert_eq!(meta.size, 40);
     }
 }

@@ -1,4 +1,19 @@
 //! HTTP/1.1 subset: server (request routing via a handler fn) + client.
+//!
+//! Two service modes share one connection loop:
+//!
+//! - **Buffered** ([`HttpServer::serve`]): the classic path — the body is
+//!   read fully (bounded by the body cap) before the handler runs.
+//! - **Streaming** ([`HttpServer::serve_stream_with_limits`]): the
+//!   handler receives the parsed head plus a [`BodyReader`] and pulls
+//!   body bytes incrementally — both `content-length`-framed and
+//!   `Transfer-Encoding: chunked` bodies — so a gateway can
+//!   erasure-encode per stripe while the client is still uploading.
+//!
+//! Responses are symmetric: [`HttpResponse`] carries either a buffered
+//! body or a [`BodyStream`] whose blocks are written as they are
+//! produced (`content-length` framing when the total is known, chunked
+//! transfer-encoding otherwise — exactly one of the two, never both).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -42,17 +57,42 @@ impl HttpRequest {
     }
 }
 
+/// A streamed response body: successive blocks pulled from `next` and
+/// written to the socket as they arrive, so the server never holds the
+/// full payload. `len: Some(n)` frames with `content-length: n` (the
+/// writer enforces the total); `len: None` frames with
+/// `transfer-encoding: chunked`.
+pub struct BodyStream {
+    pub len: Option<u64>,
+    /// Yields the next body block, `Ok(None)` at end of stream. An `Err`
+    /// aborts the connection mid-body so the client observes a short
+    /// (or unterminated) body rather than silently truncated data.
+    pub next: Box<dyn FnMut() -> Result<Option<Vec<u8>>> + Send>,
+}
+
 /// An HTTP response under construction.
-#[derive(Debug, Clone)]
 pub struct HttpResponse {
     pub status: u16,
     pub headers: BTreeMap<String, String>,
     pub body: Vec<u8>,
+    /// When set, `body` is ignored and blocks are streamed instead.
+    pub stream: Option<BodyStream>,
+}
+
+impl std::fmt::Debug for HttpResponse {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HttpResponse")
+            .field("status", &self.status)
+            .field("headers", &self.headers)
+            .field("body_len", &self.body.len())
+            .field("streamed", &self.stream.is_some())
+            .finish()
+    }
 }
 
 impl HttpResponse {
     pub fn new(status: u16) -> Self {
-        HttpResponse { status, headers: BTreeMap::new(), body: Vec::new() }
+        HttpResponse { status, headers: BTreeMap::new(), body: Vec::new(), stream: None }
     }
 
     pub fn json(status: u16, body: &crate::json::Value) -> Self {
@@ -73,6 +113,21 @@ impl HttpResponse {
         let mut r = HttpResponse::new(status);
         r.headers.insert("content-type".into(), "text/plain".into());
         r.body = body.as_bytes().to_vec();
+        r
+    }
+
+    /// A streamed-body response: blocks from `next` go on the wire as
+    /// they are produced. `len: Some(n)` promises exactly `n` body
+    /// bytes (content-length framing); `len: None` uses chunked
+    /// transfer-encoding.
+    pub fn stream(
+        status: u16,
+        len: Option<u64>,
+        next: Box<dyn FnMut() -> Result<Option<Vec<u8>>> + Send>,
+    ) -> Self {
+        let mut r = HttpResponse::new(status);
+        r.headers.insert("content-type".into(), "application/octet-stream".into());
+        r.stream = Some(BodyStream { len, next });
         r
     }
 
@@ -100,30 +155,100 @@ impl HttpResponse {
         }
     }
 
-    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+    /// Serialize onto the socket. Framing is exactly one of
+    /// `content-length` XOR `transfer-encoding: chunked`, decided here —
+    /// handler-supplied copies of either header are dropped from the
+    /// iteration and re-emitted once, so the two can never both appear.
+    fn write_to(&mut self, stream: &mut TcpStream) -> std::io::Result<()> {
         let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, self.reason());
         for (k, v) in &self.headers {
-            if k == "content-length" {
-                continue; // emitted once below (possibly overridden)
+            if k == "content-length" || k == "transfer-encoding" {
+                continue; // framing emitted once below
             }
             head.push_str(&format!("{k}: {v}\r\n"));
         }
-        // A handler-set `content-length` wins over the body length: HEAD
-        // responses advertise the full object size while carrying no
-        // body (RFC 9110 §9.3.2). Everything else frames on the body.
-        let declared = self
-            .headers
-            .get("content-length")
-            .cloned()
-            .unwrap_or_else(|| self.body.len().to_string());
-        head.push_str(&format!("content-length: {declared}\r\nconnection: close\r\n\r\n"));
-        stream.write_all(head.as_bytes())?;
-        stream.write_all(&self.body)?;
+        let body_stream = self.stream.take();
+        match body_stream {
+            None => {
+                // A handler-set `content-length` wins over the body
+                // length: HEAD responses advertise the full object size
+                // while carrying no body (RFC 9110 §9.3.2). Everything
+                // else frames on the body.
+                let declared = self
+                    .headers
+                    .get("content-length")
+                    .cloned()
+                    .unwrap_or_else(|| self.body.len().to_string());
+                head.push_str(&format!(
+                    "content-length: {declared}\r\nconnection: close\r\n\r\n"
+                ));
+                stream.write_all(head.as_bytes())?;
+                stream.write_all(&self.body)?;
+            }
+            Some(mut bs) => {
+                match bs.len {
+                    Some(total) => head.push_str(&format!(
+                        "content-length: {total}\r\nconnection: close\r\n\r\n"
+                    )),
+                    None => {
+                        head.push_str("transfer-encoding: chunked\r\nconnection: close\r\n\r\n")
+                    }
+                }
+                stream.write_all(head.as_bytes())?;
+                let mut written = 0u64;
+                loop {
+                    let block = (bs.next)().map_err(stream_abort)?;
+                    match block {
+                        None => break,
+                        Some(b) if b.is_empty() => continue,
+                        Some(b) => match bs.len {
+                            Some(total) => {
+                                written += b.len() as u64;
+                                if written > total {
+                                    return Err(stream_abort(Error::Net(format!(
+                                        "body stream produced more than the declared {total} bytes"
+                                    ))));
+                                }
+                                stream.write_all(&b)?;
+                            }
+                            None => {
+                                stream.write_all(format!("{:x}\r\n", b.len()).as_bytes())?;
+                                stream.write_all(&b)?;
+                                stream.write_all(b"\r\n")?;
+                            }
+                        },
+                    }
+                }
+                match bs.len {
+                    Some(total) if written != total => {
+                        // Short stream: abort the connection so the
+                        // client's content-length read fails loudly.
+                        return Err(stream_abort(Error::Net(format!(
+                            "body stream ended at {written} of {total} bytes"
+                        ))));
+                    }
+                    Some(_) => {}
+                    None => stream.write_all(b"0\r\n\r\n")?,
+                }
+            }
+        }
         stream.flush()
     }
 }
 
+/// Mid-stream failures become an I/O error so the connection is torn
+/// down — the only honest signal once the status line is on the wire.
+fn stream_abort(e: Error) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::Other, format!("body stream failed: {e}"))
+}
+
 type Handler = dyn Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static;
+
+/// A streaming request handler: gets the parsed head (empty `body`
+/// field) plus an incremental [`BodyReader`] positioned at the first
+/// body byte.
+pub type StreamHandler =
+    dyn Fn(HttpRequest, &mut BodyReader) -> HttpResponse + Send + Sync + 'static;
 
 /// Largest request body [`HttpServer::serve`] accepts: 64 MiB. A
 /// client-supplied `content-length` drives a buffer allocation, so an
@@ -138,6 +263,14 @@ pub const DEFAULT_MAX_BODY: usize = 64 << 20;
 /// reading its response is cut off by the matching write timeout.
 pub const DEFAULT_CONN_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
 
+/// Most unread request-body bytes the server will consume after a
+/// response before simply closing the connection. Draining lets the
+/// response reach a well-behaved client (closing with unread inbound
+/// data can RST the socket and discard the response in the client's
+/// receive buffer), but a hostile `content-length` must not pin a
+/// server thread — past this budget the connection is cut.
+pub const DRAIN_BUDGET: u64 = 64 * 1024;
+
 /// Per-connection resource limits for [`HttpServer::serve_with_limits`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServerLimits {
@@ -150,6 +283,20 @@ pub struct ServerLimits {
 impl Default for ServerLimits {
     fn default() -> Self {
         ServerLimits { max_body: DEFAULT_MAX_BODY, conn_timeout: DEFAULT_CONN_TIMEOUT }
+    }
+}
+
+enum AnyHandler {
+    Buffered(Arc<Handler>),
+    Stream(Arc<StreamHandler>),
+}
+
+impl Clone for AnyHandler {
+    fn clone(&self) -> Self {
+        match self {
+            AnyHandler::Buffered(h) => AnyHandler::Buffered(Arc::clone(h)),
+            AnyHandler::Stream(h) => AnyHandler::Stream(Arc::clone(h)),
+        }
     }
 }
 
@@ -196,6 +343,31 @@ impl HttpServer {
         handler: Arc<Handler>,
         limits: ServerLimits,
     ) -> Result<HttpServer> {
+        Self::serve_inner(addr, workers, AnyHandler::Buffered(handler), limits)
+    }
+
+    /// Streaming-mode server: the handler pulls request-body bytes
+    /// incrementally through a [`BodyReader`] instead of receiving a
+    /// pre-buffered body. The body cap still applies — a declared
+    /// `content-length` over `limits.max_body` is refused 413 before
+    /// the handler runs, and chunked bodies are capped cumulatively as
+    /// they are read — but peak memory is bounded by how much the
+    /// handler chooses to hold, not by object size.
+    pub fn serve_stream_with_limits(
+        addr: &str,
+        workers: usize,
+        handler: Arc<StreamHandler>,
+        limits: ServerLimits,
+    ) -> Result<HttpServer> {
+        Self::serve_inner(addr, workers, AnyHandler::Stream(handler), limits)
+    }
+
+    fn serve_inner(
+        addr: &str,
+        workers: usize,
+        handler: AnyHandler,
+        limits: ServerLimits,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -211,7 +383,7 @@ impl HttpServer {
                     }
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let handler = Arc::clone(&handler);
+                            let handler = handler.clone();
                             pool.execute(move || handle_conn(stream, handler, limits));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -275,59 +447,311 @@ impl From<std::io::Error> for ParseFailure {
     }
 }
 
-fn handle_conn(mut stream: TcpStream, handler: Arc<Handler>, limits: ServerLimits) {
-    // The write half gets the same timeout: a client that stops reading
-    // its response must not pin a handler thread either.
-    let _ = stream.set_write_timeout(Some(limits.conn_timeout));
-    let peer = stream.try_clone();
-    let request = match peer {
-        Ok(read_half) => parse_request(read_half, limits),
-        Err(e) => Err(ParseFailure::Malformed(Error::Io(e))),
-    };
-    let (response, unread_body) = match request {
-        Ok(req) => (handler(req), 0u64),
-        Err(ParseFailure::TooLarge { declared, cap }) => (
-            HttpResponse::text(
-                413,
-                &format!("declared body of {declared} bytes exceeds the {cap}-byte limit"),
-            ),
-            declared,
-        ),
-        Err(ParseFailure::SlowClient) => (
-            HttpResponse::text(
-                408,
-                &format!(
-                    "request not received within {:?} — connection closed",
-                    limits.conn_timeout
-                ),
-            ),
-            0,
-        ),
-        Err(ParseFailure::Malformed(e)) => {
-            (HttpResponse::text(400, &format!("bad request: {e}")), 0)
+/// The error a body read returns when the cumulative body size passes
+/// the server's cap; HTTP-facing callers answer it with 413.
+fn over_cap_error(cap: u64) -> Error {
+    Error::Invalid(format!("request body exceeds the {cap}-byte limit"))
+}
+
+/// Whether `e` is the body-over-cap error from a [`BodyReader`] — the
+/// HTTP-facing caller answers 413 instead of 400. The error may arrive
+/// wrapped as `Net` when the reader was driven through `std::io::Read`
+/// (the streaming ingest path), so both variants are recognized.
+pub fn is_over_cap(e: &Error) -> bool {
+    matches!(e, Error::Invalid(m) | Error::Net(m) if m.contains("body exceeds the"))
+}
+
+enum BodyState {
+    Done,
+    Sized { remaining: u64 },
+    /// Mid-chunked-stream; `in_chunk` bytes left of the current chunk.
+    Chunked { in_chunk: u64 },
+}
+
+/// Incremental request-body reader over the connection's buffered read
+/// half. Handles both framings: `content-length` (exact byte count) and
+/// `Transfer-Encoding: chunked` (RFC 9112 §7.1, trailers skipped).
+pub struct BodyReader {
+    reader: BufReader<TcpStream>,
+    state: BodyState,
+    declared: Option<u64>,
+    /// Cumulative cap for chunked bodies (sized bodies are checked
+    /// against the cap before the reader is built).
+    cap: u64,
+    total: u64,
+}
+
+impl BodyReader {
+    fn sized(reader: BufReader<TcpStream>, len: u64) -> BodyReader {
+        let state = if len == 0 { BodyState::Done } else { BodyState::Sized { remaining: len } };
+        BodyReader { reader, state, declared: Some(len), cap: u64::MAX, total: 0 }
+    }
+
+    fn chunked(reader: BufReader<TcpStream>, cap: u64) -> BodyReader {
+        BodyReader {
+            reader,
+            state: BodyState::Chunked { in_chunk: 0 },
+            declared: None,
+            cap,
+            total: 0,
         }
-    };
-    let _ = response.write_to(&mut stream);
-    if unread_body > 0 {
-        // Drain (bounded) what the client already sent before closing:
-        // closing with unread data can RST the connection and discard
-        // the 413 sitting in the client's receive buffer.
-        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+    }
+
+    /// The request's `content-length`, when framed that way (`None` for
+    /// chunked bodies, whose total is unknown until fully read).
+    pub fn declared_len(&self) -> Option<u64> {
+        self.declared
+    }
+
+    /// Total body bytes consumed so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.total
+    }
+
+    /// Read up to `buf.len()` body bytes; `Ok(0)` means end of body.
+    /// A socket EOF before the framing completes is an error, not EOF —
+    /// a truncated upload must never look like a clean end of body.
+    pub fn read_some(&mut self, buf: &mut [u8]) -> Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        match &mut self.state {
+            BodyState::Done => Ok(0),
+            BodyState::Sized { remaining } => {
+                let want = buf.len().min((*remaining).min(usize::MAX as u64) as usize);
+                let got = self.reader.read(&mut buf[..want])?;
+                if got == 0 {
+                    return Err(Error::Net(format!(
+                        "unexpected eof with {remaining} body bytes outstanding"
+                    )));
+                }
+                *remaining -= got as u64;
+                if *remaining == 0 {
+                    self.state = BodyState::Done;
+                }
+                self.total += got as u64;
+                Ok(got)
+            }
+            BodyState::Chunked { in_chunk } => {
+                if *in_chunk == 0 {
+                    let mut line = String::new();
+                    self.reader.read_line(&mut line)?;
+                    if line.is_empty() {
+                        return Err(Error::Net("unexpected eof before chunk size".into()));
+                    }
+                    if line.len() > 1024 {
+                        return Err(Error::Net("chunk-size line too long".into()));
+                    }
+                    let size = parse_chunk_size(&line)?;
+                    if size == 0 {
+                        // Trailer section: skip lines until the blank
+                        // terminator (bounded — trailers are metadata,
+                        // not a second body).
+                        for _ in 0..32 {
+                            let mut t = String::new();
+                            self.reader.read_line(&mut t)?;
+                            if t.is_empty() || t == "\r\n" || t == "\n" {
+                                self.state = BodyState::Done;
+                                return Ok(0);
+                            }
+                        }
+                        return Err(Error::Net("too many chunked trailer lines".into()));
+                    }
+                    if self.total.saturating_add(size) > self.cap {
+                        return Err(over_cap_error(self.cap));
+                    }
+                    *in_chunk = size;
+                }
+                let want = buf.len().min((*in_chunk).min(usize::MAX as u64) as usize);
+                let got = self.reader.read(&mut buf[..want])?;
+                if got == 0 {
+                    return Err(Error::Net("unexpected eof inside chunk".into()));
+                }
+                *in_chunk -= got as u64;
+                self.total += got as u64;
+                if *in_chunk == 0 {
+                    // The CRLF that closes every chunk's data section.
+                    let mut crlf = [0u8; 2];
+                    self.reader.read_exact(&mut crlf)?;
+                    if &crlf != b"\r\n" {
+                        return Err(Error::Net("missing CRLF after chunk data".into()));
+                    }
+                }
+                Ok(got)
+            }
+        }
+    }
+
+    /// Read exactly `buf.len()` body bytes, erroring on a short body.
+    pub fn read_full(&mut self, buf: &mut [u8]) -> Result<()> {
+        let mut off = 0;
+        while off < buf.len() {
+            match self.read_some(&mut buf[off..])? {
+                0 => {
+                    return Err(Error::Net(format!(
+                        "body ended at {off} of {} expected bytes",
+                        buf.len()
+                    )))
+                }
+                n => off += n,
+            }
+        }
+        Ok(())
+    }
+
+    /// Buffer the remaining body, refusing (without the allocation,
+    /// when the length is declared) to exceed `cap`.
+    pub fn read_to_end_cap(&mut self, cap: usize) -> Result<Vec<u8>> {
+        if let BodyState::Sized { remaining } = self.state {
+            if remaining > cap as u64 {
+                return Err(over_cap_error(cap as u64));
+            }
+            let mut body = vec![0u8; remaining as usize];
+            self.read_full(&mut body)?;
+            return Ok(body);
+        }
+        let mut out = Vec::new();
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            match self.read_some(&mut buf)? {
+                0 => return Ok(out),
+                n => {
+                    if out.len() + n > cap {
+                        return Err(over_cap_error(cap as u64));
+                    }
+                    out.extend_from_slice(&buf[..n]);
+                }
+            }
+        }
+    }
+
+    /// Consume the unread remainder, up to `budget` bytes. Returns
+    /// `true` when the body was fully drained (safe to close politely);
+    /// `false` means the budget ran out or the read failed — the caller
+    /// just closes the connection.
+    fn drain(&mut self, budget: u64) -> bool {
+        // The drain is bounded by its own budget; the chunked
+        // cumulative cap must not re-fire while discarding.
+        self.cap = u64::MAX;
         let mut sink = [0u8; 8192];
-        let mut remaining = unread_body.min(1 << 20);
-        while remaining > 0 {
-            match stream.read(&mut sink) {
-                Ok(0) | Err(_) => break,
-                Ok(n) => remaining = remaining.saturating_sub(n as u64),
+        let mut used = 0u64;
+        loop {
+            if matches!(self.state, BodyState::Done) {
+                return true;
+            }
+            if used >= budget {
+                return false;
+            }
+            let want = sink.len().min((budget - used) as usize);
+            match self.read_some(&mut sink[..want]) {
+                Ok(0) => return true,
+                Ok(n) => used += n as u64,
+                Err(_) => return false,
             }
         }
     }
 }
 
-fn parse_request(
+/// `std::io::Read` adapter so streaming consumers (the coordinator's
+/// stripe pipeline) can drive the body through a plain reader trait.
+/// Framing/cap errors are wrapped as `io::Error` with the message
+/// preserved, so [`is_over_cap`] still recognizes the cap error after a
+/// round trip through `io` (it arrives back as `Error::Net`).
+impl std::io::Read for BodyReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.read_some(buf)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))
+    }
+}
+
+/// `1a3f` or `1a3f;ext=v` → 0x1a3f (chunk extensions are ignored).
+fn parse_chunk_size(line: &str) -> Result<u64> {
+    let token = line.trim().split(';').next().unwrap_or("").trim();
+    if token.is_empty() || token.len() > 16 {
+        return Err(Error::Net(format!("bad chunk size line '{}'", line.trim())));
+    }
+    u64::from_str_radix(token, 16).map_err(|_| Error::Net(format!("bad chunk size '{token}'")))
+}
+
+fn failure_response(failure: &ParseFailure, limits: &ServerLimits) -> HttpResponse {
+    match failure {
+        ParseFailure::TooLarge { declared, cap } => HttpResponse::text(
+            413,
+            &format!("declared body of {declared} bytes exceeds the {cap}-byte limit"),
+        ),
+        ParseFailure::SlowClient => HttpResponse::text(
+            408,
+            &format!("request not received within {:?} — connection closed", limits.conn_timeout),
+        ),
+        ParseFailure::Malformed(e) => HttpResponse::text(400, &format!("bad request: {e}")),
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, handler: AnyHandler, limits: ServerLimits) {
+    // The write half gets the same timeout: a client that stops reading
+    // its response must not pin a handler thread either.
+    let _ = stream.set_write_timeout(Some(limits.conn_timeout));
+    let parsed = match stream.try_clone() {
+        Ok(read_half) => parse_head(read_half, limits),
+        Err(e) => Err(ParseFailure::Malformed(Error::Io(e))),
+    };
+    match parsed {
+        Ok((req, mut body)) => {
+            let mut response = match &handler {
+                AnyHandler::Buffered(h) => match body.read_to_end_cap(limits.max_body) {
+                    Ok(bytes) => {
+                        let mut req = req;
+                        req.body = bytes;
+                        h(req)
+                    }
+                    Err(e) if is_over_cap(&e) => HttpResponse::text(
+                        413,
+                        &format!("request body exceeds the {}-byte limit", limits.max_body),
+                    ),
+                    Err(Error::Io(e)) => failure_response(&read_failure(e), &limits),
+                    Err(e) => failure_response(&ParseFailure::Malformed(e), &limits),
+                },
+                AnyHandler::Stream(h) => h(req, &mut body),
+            };
+            let _ = response.write_to(&mut stream);
+            // Bounded courtesy drain of whatever the client already
+            // sent: closing with unread inbound data can RST the
+            // connection and discard the response sitting in the
+            // client's receive buffer. Past the budget, just close.
+            let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+            let _ = body.drain(DRAIN_BUDGET);
+        }
+        Err(failure) => {
+            let mut response = failure_response(&failure, &limits);
+            let _ = response.write_to(&mut stream);
+            if let ParseFailure::TooLarge { declared, .. } = failure {
+                // Same courtesy drain, same bound: a hostile
+                // content-length past the budget is cut off instead of
+                // pinning this thread while the client pushes bytes.
+                if declared <= DRAIN_BUDGET {
+                    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+                    let mut sink = [0u8; 8192];
+                    let mut remaining = declared;
+                    while remaining > 0 {
+                        match stream.read(&mut sink) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => remaining = remaining.saturating_sub(n as u64),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parse the request line + headers and hand back the head plus a
+/// [`BodyReader`] positioned at the first body byte. A declared
+/// `content-length` beyond the cap is refused here — before any
+/// allocation, in both service modes.
+fn parse_head(
     stream: TcpStream,
     limits: ServerLimits,
-) -> std::result::Result<HttpRequest, ParseFailure> {
+) -> std::result::Result<(HttpRequest, BodyReader), ParseFailure> {
     let max_body = limits.max_body;
     stream.set_read_timeout(Some(limits.conn_timeout))?;
     let mut reader = BufReader::new(stream);
@@ -349,25 +773,31 @@ fn parse_request(
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
+    let request = HttpRequest { method, path, headers, body: Vec::new() };
+    // RFC 9112 §6.3: when both are present, transfer-encoding wins and
+    // content-length is ignored.
+    let chunked = request
+        .headers
+        .get("transfer-encoding")
+        .map(|v| v.to_ascii_lowercase().contains("chunked"))
+        .unwrap_or(false);
+    if chunked {
+        return Ok((request, BodyReader::chunked(reader, max_body as u64)));
+    }
     // Never trust the client's content-length with an allocation: cap
     // it BEFORE `vec![0u8; len]` — one bogus header must not OOM the
     // gateway. Parse as u64 so a length beyond usize (32-bit hosts)
     // can't wrap; a malformed value is a malformed request.
-    let len: u64 = match headers.get("content-length") {
+    let len: u64 = match request.headers.get("content-length") {
         None => 0,
-        Some(v) => v
-            .trim()
-            .parse()
-            .map_err(|_| Error::Net(format!("bad content-length '{v}'")))?,
+        Some(v) => {
+            v.trim().parse().map_err(|_| Error::Net(format!("bad content-length '{v}'")))?
+        }
     };
     if len > max_body as u64 {
         return Err(ParseFailure::TooLarge { declared: len, cap: max_body });
     }
-    let mut body = vec![0u8; len as usize];
-    if len > 0 {
-        reader.read_exact(&mut body)?;
-    }
-    Ok(HttpRequest { method, path, headers, body })
+    Ok((request, BodyReader::sized(reader, len)))
 }
 
 /// Blocking HTTP client for the CLI, tests, and remote container
@@ -439,41 +869,49 @@ impl HttpClient {
         stream.write_all(head.as_bytes())?;
         stream.write_all(body)?;
         stream.flush()?;
+        read_response(stream, method)
+    }
 
-        let mut reader = BufReader::new(stream);
-        let mut status_line = String::new();
-        reader.read_line(&mut status_line)?;
-        let status: u16 = status_line
-            .split_whitespace()
-            .nth(1)
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| Error::Net(format!("bad status line '{status_line}'")))?;
-        let mut headers = BTreeMap::new();
+    /// Send a request whose body is streamed from `body` with chunked
+    /// transfer-encoding — the wire-level dual of the server's
+    /// [`BodyReader`]; the total size need not be known up front.
+    pub fn request_stream(
+        &self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &mut dyn Read,
+    ) -> Result<HttpResponse> {
+        let mut stream = self.connect(self.timeout)?;
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.base);
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("transfer-encoding: chunked\r\nconnection: close\r\n\r\n");
+        stream.write_all(head.as_bytes())?;
+        let mut buf = vec![0u8; 64 * 1024];
         loop {
-            let mut h = String::new();
-            reader.read_line(&mut h)?;
-            let h = h.trim_end();
-            if h.is_empty() {
+            let n = body.read(&mut buf)?;
+            if n == 0 {
                 break;
             }
-            if let Some((k, v)) = h.split_once(':') {
-                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
-            }
+            stream.write_all(format!("{n:x}\r\n").as_bytes())?;
+            stream.write_all(&buf[..n])?;
+            stream.write_all(b"\r\n")?;
         }
-        // HEAD responses and 204/304 have no body by definition — their
-        // content-length (HEAD advertises the object size) must not be
-        // read off the wire.
-        let bodiless = method.eq_ignore_ascii_case("HEAD") || status == 204 || status == 304;
-        let len: usize = if bodiless {
-            0
-        } else {
-            headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0)
-        };
-        let mut body = vec![0u8; len];
-        if len > 0 {
-            reader.read_exact(&mut body)?;
-        }
-        Ok(HttpResponse { status, headers, body })
+        stream.write_all(b"0\r\n\r\n")?;
+        stream.flush()?;
+        read_response(stream, method)
+    }
+
+    /// [`HttpClient::request_stream`] for PUT uploads.
+    pub fn put_stream(
+        &self,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &mut dyn Read,
+    ) -> Result<HttpResponse> {
+        self.request_stream("PUT", path, headers, body)
     }
 
     pub fn get(&self, path: &str, headers: &[(&str, &str)]) -> Result<HttpResponse> {
@@ -491,6 +929,53 @@ impl HttpClient {
     pub fn delete(&self, path: &str, headers: &[(&str, &str)]) -> Result<HttpResponse> {
         self.request("DELETE", path, headers, &[])
     }
+}
+
+/// Read a full response off `stream`: status line, headers, then the
+/// body under whichever framing the server chose (`content-length` or
+/// chunked transfer-encoding).
+fn read_response(stream: TcpStream, method: &str) -> Result<HttpResponse> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Net(format!("bad status line '{status_line}'")))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    // HEAD responses and 204/304 have no body by definition — their
+    // content-length (HEAD advertises the object size) must not be
+    // read off the wire.
+    let bodiless = method.eq_ignore_ascii_case("HEAD") || status == 204 || status == 304;
+    let chunked = headers
+        .get("transfer-encoding")
+        .map(|v| v.to_ascii_lowercase().contains("chunked"))
+        .unwrap_or(false);
+    let body = if bodiless {
+        Vec::new()
+    } else if chunked {
+        BodyReader::chunked(reader, u64::MAX).read_to_end_cap(usize::MAX)?
+    } else {
+        let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            reader.read_exact(&mut body)?;
+        }
+        body
+    };
+    Ok(HttpResponse { status, headers, body, stream: None })
 }
 
 #[cfg(test)]
@@ -652,6 +1137,38 @@ mod tests {
     }
 
     #[test]
+    fn oversized_body_past_drain_budget_closes_connection() {
+        // A hostile content-length far past the drain budget must get
+        // its 413 and a prompt close — no thread pinned consuming the
+        // body. The client sends only headers, so the response is
+        // readable before the server cuts the connection.
+        let server = HttpServer::serve_with_limit(
+            "127.0.0.1:0",
+            1,
+            Arc::new(|req: HttpRequest| HttpResponse::bytes(201, req.body)),
+            1_000,
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .write_all(b"PUT /o HTTP/1.1\r\nhost: t\r\ncontent-length: 104857600\r\n\r\n")
+            .unwrap();
+        let mut reply = String::new();
+        let mut reader = BufReader::new(&mut stream);
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("413"), "{reply}");
+        // Server must not sit in a 100 MiB drain loop: the connection
+        // reaches EOF (close) quickly.
+        let mut rest = Vec::new();
+        let _ = reader.read_to_end(&mut rest);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "drain was not bounded");
+        // The worker thread is free again.
+        let client = HttpClient::new(&server.addr().to_string());
+        assert_eq!(client.put("/o", &[], &[1u8; 10]).unwrap().status, 201);
+    }
+
+    #[test]
     fn slow_client_gets_408_and_server_survives() {
         let server = HttpServer::serve_with_limits(
             "127.0.0.1:0",
@@ -731,5 +1248,172 @@ mod tests {
         let mut reader = BufReader::new(&mut stream);
         reader.read_line(&mut reply).unwrap();
         assert!(reply.contains("400"), "{reply}");
+    }
+
+    #[test]
+    fn chunked_request_body_reaches_buffered_handler() {
+        // A chunked upload (no content-length anywhere) is reassembled
+        // for buffered handlers exactly as a sized body would be.
+        let server = echo_server();
+        let client = HttpClient::new(&server.addr().to_string());
+        let payload: Vec<u8> = (0..=255u8).cycle().take(200_000).collect();
+        let mut reader = std::io::Cursor::new(payload.clone());
+        let resp = client.put_stream("/obj", &[], &mut reader).unwrap();
+        assert_eq!(resp.status, 201);
+        assert_eq!(resp.body, payload, "chunked body reassembled intact");
+    }
+
+    #[test]
+    fn chunked_request_over_cap_gets_413() {
+        let server = HttpServer::serve_with_limit(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: HttpRequest| HttpResponse::bytes(201, req.body)),
+            1_000,
+        )
+        .unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        let mut reader = std::io::Cursor::new(vec![9u8; 5_000]);
+        let resp = client.put_stream("/o", &[], &mut reader).unwrap();
+        assert_eq!(resp.status, 413, "cumulative chunked cap enforced");
+    }
+
+    #[test]
+    fn streaming_handler_reads_body_incrementally() {
+        // The streaming server hands the handler a BodyReader; the
+        // handler consumes the body in small reads and echoes a digest.
+        let server = HttpServer::serve_stream_with_limits(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: HttpRequest, body: &mut BodyReader| {
+                assert!(req.body.is_empty(), "streaming mode leaves head.body empty");
+                let mut total = 0u64;
+                let mut sum = 0u64;
+                let mut buf = [0u8; 777]; // deliberately odd block size
+                loop {
+                    match body.read_some(&mut buf) {
+                        Ok(0) => break,
+                        Ok(n) => {
+                            total += n as u64;
+                            sum += buf[..n].iter().map(|&b| b as u64).sum::<u64>();
+                        }
+                        Err(e) => return HttpResponse::text(400, &format!("{e}")),
+                    }
+                }
+                HttpResponse::text(200, &format!("{total}:{sum}"))
+            }),
+            ServerLimits::default(),
+        )
+        .unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        let payload = vec![3u8; 100_000];
+        // Sized framing.
+        let resp = client.put("/o", &[], &payload).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, format!("{}:{}", 100_000, 300_000).as_bytes());
+        // Chunked framing through the same handler.
+        let mut reader = std::io::Cursor::new(payload);
+        let resp = client.put_stream("/o", &[], &mut reader).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, format!("{}:{}", 100_000, 300_000).as_bytes());
+    }
+
+    #[test]
+    fn streamed_response_known_length_frames_with_content_length() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(70_000).collect();
+        let expect = payload.clone();
+        let server = HttpServer::serve(
+            "127.0.0.1:0",
+            2,
+            Arc::new(move |_req: HttpRequest| {
+                let blocks: Vec<Vec<u8>> = payload.chunks(1000).map(|c| c.to_vec()).collect();
+                let mut iter = blocks.into_iter();
+                HttpResponse::stream(200, Some(70_000), Box::new(move || Ok(iter.next())))
+            }),
+        )
+        .unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        let resp = client.get("/o", &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.headers.get("content-length").unwrap(), "70000");
+        assert!(
+            !resp.headers.contains_key("transfer-encoding"),
+            "content-length XOR transfer-encoding"
+        );
+        assert_eq!(resp.body, expect);
+    }
+
+    #[test]
+    fn streamed_response_unknown_length_uses_chunked_te() {
+        let server = HttpServer::serve(
+            "127.0.0.1:0",
+            2,
+            Arc::new(move |_req: HttpRequest| {
+                let mut n = 0;
+                let mut r = HttpResponse::stream(
+                    200,
+                    None,
+                    Box::new(move || {
+                        n += 1;
+                        if n <= 3 {
+                            Ok(Some(vec![n as u8; 10]))
+                        } else {
+                            Ok(None)
+                        }
+                    }),
+                );
+                // A handler-supplied content-length must NOT leak into
+                // a chunked response (satellite: never both framings).
+                r.headers.insert("content-length".into(), "999".into());
+                r
+            }),
+        )
+        .unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        let resp = client.get("/o", &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.headers.get("transfer-encoding").unwrap(), "chunked");
+        assert!(
+            !resp.headers.contains_key("content-length"),
+            "content-length XOR transfer-encoding"
+        );
+        let mut expect = Vec::new();
+        for n in 1..=3u8 {
+            expect.extend(std::iter::repeat(n).take(10));
+        }
+        assert_eq!(resp.body, expect);
+    }
+
+    #[test]
+    fn streamed_response_short_stream_aborts_connection() {
+        // A stream that dies before delivering its declared length must
+        // not look like a complete body to the client.
+        let server = HttpServer::serve(
+            "127.0.0.1:0",
+            2,
+            Arc::new(move |_req: HttpRequest| {
+                let mut sent = false;
+                HttpResponse::stream(
+                    200,
+                    Some(1000),
+                    Box::new(move || {
+                        if sent {
+                            Err(Error::Unavailable("container died mid-stream".into()))
+                        } else {
+                            sent = true;
+                            Ok(Some(vec![7u8; 100]))
+                        }
+                    }),
+                )
+            }),
+        )
+        .unwrap();
+        let client = HttpClient::new(&server.addr().to_string());
+        match client.get("/o", &[]) {
+            Err(_) => {}
+            Ok(resp) => {
+                assert_ne!(resp.body.len(), 1000, "short stream must not yield a full body")
+            }
+        }
     }
 }

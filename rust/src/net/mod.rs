@@ -11,7 +11,7 @@ mod http;
 mod pool;
 
 pub use http::{
-    HttpClient, HttpRequest, HttpResponse, HttpServer, ServerLimits, DEFAULT_CONN_TIMEOUT,
-    DEFAULT_MAX_BODY,
+    is_over_cap, BodyReader, BodyStream, HttpClient, HttpRequest, HttpResponse, HttpServer,
+    ServerLimits, StreamHandler, DEFAULT_CONN_TIMEOUT, DEFAULT_MAX_BODY, DRAIN_BUDGET,
 };
-pub use pool::ThreadPool;
+pub use pool::{JobHandle, ThreadPool};

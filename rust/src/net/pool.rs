@@ -67,6 +67,24 @@ impl ThreadPool {
             .expect("workers alive");
     }
 
+    /// Submit one job and get a [`JobHandle`] for its result — the
+    /// pipelining primitive of the streaming data plane: dispatch
+    /// stripe `p`'s chunk uploads while the caller reads stripe `p+1`
+    /// off the socket, then `join()` before dispatching the next. A
+    /// panicked job surfaces as [`Error::Pool`] at `join`, not a hang:
+    /// the result sender is dropped by the unwind and the receiver sees
+    /// a closed channel.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> JobHandle<T> {
+        let (tx, rx) = channel::<T>();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        JobHandle { rx }
+    }
+
     /// Map `f` over `0..n` with the pool's parallelism; returns results
     /// in index order. A panicking job no longer poisons the gather with
     /// an unrelated unwrap — it yields `Error::Pool` naming how many
@@ -151,6 +169,18 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Handle to a single pooled job submitted via [`ThreadPool::submit`].
+pub struct JobHandle<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job completes and take its result.
+    pub fn join(self) -> Result<T> {
+        self.rx.recv().map_err(|_| Error::Pool("submitted job panicked".into()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +255,23 @@ mod tests {
         for (i, &b) in buf.iter().enumerate() {
             assert_eq!(b as usize, i / 16 + 1);
         }
+    }
+
+    #[test]
+    fn submit_returns_result_and_reports_panics() {
+        let pool = ThreadPool::new(2);
+        let h = pool.submit(|| 6 * 7);
+        assert_eq!(h.join().unwrap(), 42);
+        // Overlap: two in-flight jobs complete independently.
+        let a = pool.submit(|| "a".to_string());
+        let b = pool.submit(|| "b".to_string());
+        assert_eq!(b.join().unwrap(), "b");
+        assert_eq!(a.join().unwrap(), "a");
+        // A panicking job yields Error::Pool at join, not a hang.
+        let boom = pool.submit(|| -> usize { panic!("submitted boom") });
+        assert!(matches!(boom.join(), Err(Error::Pool(_))));
+        // The pool survives.
+        assert_eq!(pool.submit(|| 1).join().unwrap(), 1);
     }
 
     #[test]

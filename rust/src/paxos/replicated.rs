@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::durability::{snapshot, DurabilityOpts, RecoveryReport, Wal, WAL_FILE};
 use crate::json::{obj, parse, to_string, Value};
-use crate::metadata::{MetadataStore, ObjectMeta, ObjectPlacement, Permission};
+use crate::metadata::{MetadataStore, ObjectMeta, ObjectPlacement, PartManifest, Permission};
 use crate::paxos::PaxosGroup;
 use crate::util::{from_hex, to_hex, unix_secs};
 use crate::{Error, Result};
@@ -58,6 +58,15 @@ pub enum MetaCommand {
         placement: ObjectPlacement,
         expect: Option<ObjectPlacement>,
     },
+    /// Open a multipart upload (S3-style). The upload id is minted by
+    /// the store's deterministic RNG, so every replica agrees on it.
+    MultipartInit { caller: String, collection: String, name: String, now: u64 },
+    /// Record one uploaded part's manifest on an open upload.
+    MultipartPut { caller: String, upload_id: String, part: PartManifest },
+    /// Assemble the parts into a Striped object version.
+    MultipartComplete { caller: String, upload_id: String, now: u64 },
+    /// Discard an open upload; outcome carries the orphaned manifests.
+    MultipartAbort { caller: String, upload_id: String },
 }
 
 impl MetaCommand {
@@ -119,6 +128,30 @@ impl MetaCommand {
                 }
                 obj(fields)
             }
+            MetaCommand::MultipartInit { caller, collection, name, now } => obj(vec![
+                ("op", "mp_init".into()),
+                ("caller", caller.as_str().into()),
+                ("collection", collection.as_str().into()),
+                ("name", name.as_str().into()),
+                ("now", (*now).into()),
+            ]),
+            MetaCommand::MultipartPut { caller, upload_id, part } => obj(vec![
+                ("op", "mp_put".into()),
+                ("caller", caller.as_str().into()),
+                ("upload_id", upload_id.as_str().into()),
+                ("part", part.to_json()),
+            ]),
+            MetaCommand::MultipartComplete { caller, upload_id, now } => obj(vec![
+                ("op", "mp_complete".into()),
+                ("caller", caller.as_str().into()),
+                ("upload_id", upload_id.as_str().into()),
+                ("now", (*now).into()),
+            ]),
+            MetaCommand::MultipartAbort { caller, upload_id } => obj(vec![
+                ("op", "mp_abort".into()),
+                ("caller", caller.as_str().into()),
+                ("upload_id", upload_id.as_str().into()),
+            ]),
         };
         to_string(&v)
     }
@@ -176,6 +209,26 @@ impl MetaCommand {
                     Value::Null => None,
                     other => Some(ObjectPlacement::from_json(other)?),
                 },
+            },
+            "mp_init" => MetaCommand::MultipartInit {
+                caller: v.req_str("caller")?.into(),
+                collection: v.req_str("collection")?.into(),
+                name: v.req_str("name")?.into(),
+                now: v.req_u64("now")?,
+            },
+            "mp_put" => MetaCommand::MultipartPut {
+                caller: v.req_str("caller")?.into(),
+                upload_id: v.req_str("upload_id")?.into(),
+                part: PartManifest::from_json(v.get("part"))?,
+            },
+            "mp_complete" => MetaCommand::MultipartComplete {
+                caller: v.req_str("caller")?.into(),
+                upload_id: v.req_str("upload_id")?.into(),
+                now: v.req_u64("now")?,
+            },
+            "mp_abort" => MetaCommand::MultipartAbort {
+                caller: v.req_str("caller")?.into(),
+                upload_id: v.req_str("upload_id")?.into(),
             },
             other => return Err(Error::Json(format!("unknown op '{other}'"))),
         })
@@ -523,6 +576,13 @@ pub enum CommandOutcome {
     Meta(Box<ObjectMeta>),
     Evicted(Vec<ObjectMeta>),
     Collected(Vec<ObjectMeta>),
+    /// MultipartInit: the replica-agreed upload id.
+    UploadId(String),
+    /// MultipartPut: the displaced manifest when a part was re-uploaded
+    /// (its chunks are now orphans the caller may GC).
+    PartReplaced(Option<Box<PartManifest>>),
+    /// MultipartAbort: the orphaned manifests to GC.
+    Aborted(Vec<PartManifest>),
     Failed(String),
 }
 
@@ -562,6 +622,30 @@ fn apply(store: &MetadataStore, cmd: &MetaCommand) -> CommandOutcome {
         }
         MetaCommand::UpdatePlacement { uuid, placement, expect } => {
             as_outcome(store.update_placement(uuid, placement.clone(), expect.as_ref()))
+        }
+        MetaCommand::MultipartInit { caller, collection, name, now } => {
+            match store.multipart_init(caller, collection, name, *now) {
+                Ok(id) => CommandOutcome::UploadId(id),
+                Err(e) => CommandOutcome::Failed(e.to_string()),
+            }
+        }
+        MetaCommand::MultipartPut { caller, upload_id, part } => {
+            match store.multipart_put(caller, upload_id, part.clone()) {
+                Ok(displaced) => CommandOutcome::PartReplaced(displaced.map(Box::new)),
+                Err(e) => CommandOutcome::Failed(e.to_string()),
+            }
+        }
+        MetaCommand::MultipartComplete { caller, upload_id, now } => {
+            match store.multipart_complete(caller, upload_id, *now) {
+                Ok(meta) => CommandOutcome::Meta(Box::new(meta)),
+                Err(e) => CommandOutcome::Failed(e.to_string()),
+            }
+        }
+        MetaCommand::MultipartAbort { caller, upload_id } => {
+            match store.multipart_abort(caller, upload_id) {
+                Ok(parts) => CommandOutcome::Aborted(parts),
+                Err(e) => CommandOutcome::Failed(e.to_string()),
+            }
         }
     }
 }
@@ -630,6 +714,30 @@ mod tests {
                     chunks: vec![(0, 1), (1, 2), (2, 9)],
                 }),
             },
+            MetaCommand::MultipartInit {
+                caller: "u".into(),
+                collection: "/u".into(),
+                name: "big".into(),
+                now: 7,
+            },
+            MetaCommand::MultipartPut {
+                caller: "u".into(),
+                upload_id: "up-1".into(),
+                part: PartManifest {
+                    number: 2,
+                    size: 1024,
+                    sha3: [3; 32],
+                    n: 3,
+                    k: 2,
+                    chunks: vec![(0, 1), (1, 2), (2, 3)],
+                },
+            },
+            MetaCommand::MultipartComplete {
+                caller: "u".into(),
+                upload_id: "up-1".into(),
+                now: 9,
+            },
+            MetaCommand::MultipartAbort { caller: "u".into(), upload_id: "up-1".into() },
         ];
         for cmd in cmds {
             let json = cmd.to_json();
@@ -857,6 +965,67 @@ mod tests {
         assert_eq!(m.wal_len(), 0);
         assert_eq!(m.last_snapshot_unix(), 0);
         assert_eq!(m.committed_seq(), 0);
+    }
+
+    #[test]
+    fn multipart_replicates_and_survives_restart() {
+        let dir = durable_dir("multipart");
+        let upload_id;
+        {
+            let (m, _) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+            m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+            upload_id = match m
+                .submit(MetaCommand::MultipartInit {
+                    caller: "UserA".into(),
+                    collection: "/UserA".into(),
+                    name: "big".into(),
+                    now: 1,
+                })
+                .unwrap()
+            {
+                CommandOutcome::UploadId(id) => id,
+                other => panic!("unexpected outcome {other:?}"),
+            };
+            // All replicas minted the same id from the shared RNG seed.
+            for r in 0..3 {
+                assert_eq!(m.replica_store(r).open_upload_count(), 1);
+            }
+            m.submit(MetaCommand::MultipartPut {
+                caller: "UserA".into(),
+                upload_id: upload_id.clone(),
+                part: PartManifest {
+                    number: 1,
+                    size: 10,
+                    sha3: [1; 32],
+                    n: 3,
+                    k: 2,
+                    chunks: vec![(0, 1), (1, 2), (2, 3)],
+                },
+            })
+            .unwrap();
+            // Hard drop mid-upload: resumability is the point.
+        }
+        let (m, rec) = ReplicatedMeta::durable(3, 99, durable_opts(&dir, 1000)).unwrap();
+        assert!(rec.recovered());
+        let up = m.read(|s| s.multipart_parts("UserA", &upload_id)).unwrap();
+        assert_eq!(up.parts.keys().copied().collect::<Vec<_>>(), vec![1]);
+        let out = m
+            .submit(MetaCommand::MultipartComplete {
+                caller: "UserA".into(),
+                upload_id: upload_id.clone(),
+                now: 2,
+            })
+            .unwrap();
+        let meta = match out {
+            CommandOutcome::Meta(meta) => meta,
+            other => panic!("unexpected outcome {other:?}"),
+        };
+        assert_eq!(meta.size, 10);
+        assert!(matches!(meta.placement, ObjectPlacement::Striped { .. }));
+        for r in 0..3 {
+            assert_eq!(m.replica_store(r).open_upload_count(), 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

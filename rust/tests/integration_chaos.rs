@@ -42,6 +42,9 @@ fn holders(ds: &DynoStore, name: &str) -> Vec<(u8, u32)> {
     match meta.placement {
         ObjectPlacement::Erasure { chunks, .. } => chunks,
         ObjectPlacement::Single { container } => vec![(0, container)],
+        ObjectPlacement::Striped { parts } => {
+            parts.iter().flat_map(|p| p.chunks.iter().copied()).collect()
+        }
     }
 }
 
