@@ -1,0 +1,174 @@
+//! Network-core concurrency bench (EXPERIMENTS.md §Concurrency): what
+//! does the connection core cost per request, and what does keep-alive
+//! pooling buy over connect-per-request?
+//!
+//! Four cells per engine (epoll reactor and the threaded fallback),
+//! against a trivial 1 KiB echo handler so the measurement isolates the
+//! connection core rather than the erasure data plane:
+//!
+//! * **Sequential RTT** — one client, back-to-back GETs, pooled
+//!   (keep-alive reuse) vs fresh (connect + close per request). The gap
+//!   is the TCP handshake + teardown a pooled connection amortizes.
+//! * **Concurrent throughput** — many client threads hammering the
+//!   server, pooled vs fresh, in requests/s.
+//!
+//! Emits `BENCH_net.json` for CI. `--smoke` shrinks the workload.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dynostore::bench::{measure, Table};
+use dynostore::json::{obj, to_string_pretty, Value};
+use dynostore::net::{
+    HttpClient, HttpResponse, HttpServer, ServerEngine, ServerLimits, ServerOptions,
+};
+
+/// One measured cell: a (engine, pooled?) combination.
+struct Row {
+    engine: &'static str,
+    pooled: bool,
+    seq_rtt_s: f64,
+    conc_reqs_per_s: f64,
+}
+
+fn serve(engine: ServerEngine, workers: usize) -> HttpServer {
+    let body: Arc<Vec<u8>> = Arc::new(vec![0x42u8; 1 << 10]);
+    HttpServer::serve_with_options(
+        "127.0.0.1:0",
+        workers,
+        Arc::new(move |_req| HttpResponse::bytes(200, body.as_ref().clone())),
+        ServerLimits::default(),
+        ServerOptions { engine, ..ServerOptions::default() },
+    )
+    .unwrap()
+}
+
+fn client(addr: &str, pooled: bool) -> HttpClient {
+    let c = HttpClient::new(addr);
+    if pooled {
+        c
+    } else {
+        c.without_pool()
+    }
+}
+
+fn bench_engine(
+    engine: ServerEngine,
+    pooled: bool,
+    seq_iters: usize,
+    threads: usize,
+    per_thread: usize,
+) -> Row {
+    let server = serve(engine, 8);
+    let addr = server.addr().to_string();
+
+    let c = client(&addr, pooled);
+    let seq = measure(10, seq_iters, || {
+        let resp = c.get("/ping", &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body.len(), 1 << 10);
+    });
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let c = client(&addr, pooled);
+                for _ in 0..per_thread {
+                    assert_eq!(c.get("/ping", &[]).unwrap().status, 200);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let conc_s = t0.elapsed().as_secs_f64();
+
+    Row {
+        engine: server.engine().as_str(),
+        pooled,
+        seq_rtt_s: seq.mean_s(),
+        conc_reqs_per_s: (threads * per_thread) as f64 / conc_s.max(1e-12),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (seq_iters, threads, per_thread) =
+        if smoke { (200, 4, 50) } else { (2000, 16, 400) };
+
+    // The reactor resolves to the threaded engine off Linux; bench only
+    // the engines this host can actually run.
+    let engines: &[ServerEngine] = if cfg!(target_os = "linux") {
+        &[ServerEngine::Reactor, ServerEngine::Threaded]
+    } else {
+        &[ServerEngine::Threaded]
+    };
+
+    println!(
+        "net_concurrency: 1 KiB echo over localhost, {seq_iters} sequential GETs and \
+         {threads}x{per_thread} concurrent GETs per cell{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+    for &engine in engines {
+        for pooled in [false, true] {
+            rows.push(bench_engine(engine, pooled, seq_iters, threads, per_thread));
+        }
+    }
+
+    let mut table = Table::new(
+        "Connection core: sequential RTT and concurrent throughput",
+        &["engine", "connections", "seq RTT", "concurrent req/s"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.engine.to_string(),
+            if r.pooled { "pooled keep-alive" } else { "fresh per request" }.to_string(),
+            format!("{:.1} us", r.seq_rtt_s * 1e6),
+            format!("{:.0}", r.conc_reqs_per_s),
+        ]);
+    }
+    table.print();
+
+    // Headline: what pooling buys on the default engine.
+    let fresh = rows.iter().find(|r| r.engine == engines[0].as_str() && !r.pooled);
+    let pooled = rows.iter().find(|r| r.engine == engines[0].as_str() && r.pooled);
+    if let (Some(f), Some(p)) = (fresh, pooled) {
+        println!(
+            "HEADLINE {}: pooled keep-alive {:.2}x faster sequential RTT, {:.2}x concurrent \
+             throughput vs connect-per-request",
+            f.engine,
+            f.seq_rtt_s / p.seq_rtt_s.max(1e-12),
+            p.conc_reqs_per_s / f.conc_reqs_per_s.max(1e-12),
+        );
+    }
+
+    let rows_json: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("engine", r.engine.into()),
+                ("pooled", r.pooled.into()),
+                ("seq_rtt_s", r.seq_rtt_s.into()),
+                ("conc_reqs_per_s", r.conc_reqs_per_s.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "net_concurrency".into()),
+        ("smoke", smoke.into()),
+        ("seq_iters", seq_iters.into()),
+        ("threads", threads.into()),
+        ("per_thread", per_thread.into()),
+        ("rows", Value::Arr(rows_json)),
+    ]);
+    let path = "BENCH_net.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -36,6 +36,15 @@ impl RemoteStore {
         RemoteStore { http: HttpClient::new(&base), auth: format!("Bearer {token}") }
     }
 
+    /// Opt this store out of keep-alive connection pooling: every
+    /// request dials a fresh connection and sends `connection: close`.
+    /// The pre-pool behavior, kept as the differential/benchmark
+    /// baseline (`benches/net_concurrency.rs` measures the gap).
+    pub fn without_pool(mut self) -> Self {
+        self.http = self.http.without_pool();
+        self
+    }
+
     /// Percent-encode `/col/lection` + `name` into a `/v1/...` path.
     fn object_path(collection: &str, name: &str) -> String {
         let mut path = String::from("/v1/objects");
@@ -78,7 +87,10 @@ impl RemoteStore {
             403 => Error::PermissionDenied(msg),
             404 => Error::NotFound(msg),
             409 => Error::Conflict(msg),
-            503 => Error::Unavailable(msg),
+            // 429 is the admission shed: the gateway is alive but over
+            // its in-flight cap. Unavailable is retryable under
+            // RetryPolicy, which is exactly what Retry-After asks for.
+            429 | 503 => Error::Unavailable(msg),
             507 => Error::Container(msg),
             _ => Error::Invalid(msg),
         }

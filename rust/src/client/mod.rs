@@ -167,6 +167,16 @@ impl Client {
         }
     }
 
+    /// [`Client::remote`] with keep-alive connection pooling disabled:
+    /// every request dials a fresh connection. The connect-per-request
+    /// baseline for differential tests and `benches/net_concurrency.rs`.
+    pub fn remote_unpooled(url: &str, token: &str) -> Self {
+        Client {
+            store: Arc::new(RemoteStore::connect(url, token).without_pool()),
+            ..Self::remote(url, token)
+        }
+    }
+
     /// A client over any [`ObjectStore`] backend.
     pub fn over(store: Arc<dyn ObjectStore>, site: Site) -> Self {
         Client {

@@ -18,7 +18,9 @@
 //!   ],
 //!   "chaos_seed": 7,
 //!   "scrub": {"interval_secs": 30, "sample": 64},
-//!   "conn_timeout_secs": 10
+//!   "conn_timeout_secs": 10,
+//!   "net": {"reactor": true, "max_connections": 4096, "max_inflight": 1024,
+//!           "keepalive_idle_secs": 60, "client_pool_per_host": 8}
 //! }
 //! ```
 //!
@@ -83,6 +85,55 @@ pub struct Config {
     /// gateway memory per upload is ~2 parts, not the object size. Also
     /// the natural part size for client multipart uploads.
     pub part_size_mb: u64,
+    /// Connection-core knobs: server engine, admission caps, keep-alive
+    /// windows, client pooling (`"net": {...}`).
+    pub net: NetConfig,
+}
+
+/// Connection-core configuration (`"net"` object): which server engine
+/// handles sockets, the admission-control caps, the keep-alive idle
+/// window, and the outbound per-host connection-pool size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Socket engine: epoll reactor (default; falls back to threaded
+    /// off Linux) or the thread-per-request loop. JSON spells it either
+    /// `"engine": "reactor"|"threaded"` or `"reactor": true|false`.
+    pub engine: crate::net::ServerEngine,
+    /// Open-connection cap; accepts beyond it shed `503 + Retry-After`.
+    pub max_connections: usize,
+    /// In-flight request cap (reactor); requests beyond it shed
+    /// `429 + Retry-After`.
+    pub max_inflight: usize,
+    /// Seconds an idle keep-alive connection may stay parked.
+    pub keepalive_idle_secs: u64,
+    /// Outbound keep-alive connections pooled per host; 0 disables
+    /// client pooling (every request reconnects, `connection: close`).
+    pub client_pool_per_host: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            engine: crate::net::ServerEngine::default(),
+            max_connections: crate::net::DEFAULT_MAX_CONNECTIONS,
+            max_inflight: crate::net::DEFAULT_MAX_INFLIGHT,
+            keepalive_idle_secs: crate::net::DEFAULT_KEEPALIVE_IDLE.as_secs(),
+            client_pool_per_host: crate::net::DEFAULT_POOL_PER_HOST,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The server-side options this configuration describes.
+    pub fn server_options(&self) -> crate::net::ServerOptions {
+        crate::net::ServerOptions {
+            engine: self.engine,
+            max_connections: self.max_connections,
+            max_inflight: self.max_inflight,
+            keepalive_idle: std::time::Duration::from_secs(self.keepalive_idle_secs),
+            stats: None,
+        }
+    }
 }
 
 impl Default for Config {
@@ -105,6 +156,7 @@ impl Default for Config {
             scrub_sample: DEFAULT_SCRUB_SAMPLE,
             conn_timeout_secs: crate::net::DEFAULT_CONN_TIMEOUT.as_secs(),
             part_size_mb: (crate::gateway::DEFAULT_STREAM_PART_SIZE >> 20) as u64,
+            net: NetConfig::default(),
         }
     }
 }
@@ -147,6 +199,29 @@ impl Config {
         cfg.conn_timeout_secs =
             v.opt_u64("conn_timeout_secs", cfg.conn_timeout_secs).max(1);
         cfg.part_size_mb = v.opt_u64("part_size_mb", cfg.part_size_mb).max(1);
+        let net = v.get("net");
+        if let Some(engine) = net.get("engine").as_str() {
+            cfg.net.engine = crate::net::ServerEngine::parse(engine).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown net engine '{engine}' (expected reactor | threaded)"
+                ))
+            })?;
+        } else if let Some(reactor) = net.get("reactor").as_bool() {
+            cfg.net.engine = if reactor {
+                crate::net::ServerEngine::Reactor
+            } else {
+                crate::net::ServerEngine::Threaded
+            };
+        }
+        cfg.net.max_connections =
+            net.opt_u64("max_connections", cfg.net.max_connections as u64).max(1) as usize;
+        cfg.net.max_inflight =
+            net.opt_u64("max_inflight", cfg.net.max_inflight as u64).max(1) as usize;
+        cfg.net.keepalive_idle_secs =
+            net.opt_u64("keepalive_idle_secs", cfg.net.keepalive_idle_secs).max(1);
+        // 0 is legal here: it disables client pooling entirely.
+        cfg.net.client_pool_per_host =
+            net.opt_u64("client_pool_per_host", cfg.net.client_pool_per_host as u64) as usize;
         if let Some(arr) = v.get("containers").as_arr() {
             for c in arr {
                 // An entry with an `endpoint` is a remote agent; local
@@ -187,6 +262,9 @@ impl Config {
     /// recovered — re-verify the recovered placements against what the
     /// containers actually hold and schedule repair for the gaps.
     pub fn build(&self) -> Result<Arc<DynoStore>> {
+        // Process-wide side effect: the outbound keep-alive pool all
+        // HttpClients share is sized by the deployment config.
+        crate::net::client_pool().configure(self.net.client_pool_per_host);
         let mut builder = DynoStore::builder()
             .gateway_site(self.gateway_site)
             .replicas(self.metadata_replicas)
@@ -565,6 +643,61 @@ mod tests {
         assert_eq!(cfg.scrub_interval_secs, 7);
         assert_eq!(cfg.scrub_sample, 16);
         assert_eq!(cfg.conn_timeout_secs, 3);
+    }
+
+    #[test]
+    fn net_knobs_parse_with_defaults() {
+        let cfg = Config::from_json("{}").unwrap();
+        assert_eq!(cfg.net, NetConfig::default());
+        assert_eq!(cfg.net.engine, crate::net::ServerEngine::default());
+        assert_eq!(cfg.net.max_connections, crate::net::DEFAULT_MAX_CONNECTIONS);
+        assert_eq!(cfg.net.max_inflight, crate::net::DEFAULT_MAX_INFLIGHT);
+        assert_eq!(
+            cfg.net.keepalive_idle_secs,
+            crate::net::DEFAULT_KEEPALIVE_IDLE.as_secs()
+        );
+        assert_eq!(cfg.net.client_pool_per_host, crate::net::DEFAULT_POOL_PER_HOST);
+
+        let cfg = Config::from_json(
+            r#"{"net": {"engine": "threaded", "max_connections": 64, "max_inflight": 8,
+                        "keepalive_idle_secs": 5, "client_pool_per_host": 0}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.net.engine, crate::net::ServerEngine::Threaded);
+        assert_eq!(cfg.net.max_connections, 64);
+        assert_eq!(cfg.net.max_inflight, 8);
+        assert_eq!(cfg.net.keepalive_idle_secs, 5);
+        assert_eq!(cfg.net.client_pool_per_host, 0, "0 disables client pooling");
+
+        // Boolean spelling of the engine knob, per the paper-repro config
+        // shape: {"net": {"reactor": false}}.
+        let cfg = Config::from_json(r#"{"net": {"reactor": false}}"#).unwrap();
+        assert_eq!(cfg.net.engine, crate::net::ServerEngine::Threaded);
+        let cfg = Config::from_json(r#"{"net": {"reactor": true}}"#).unwrap();
+        assert_eq!(cfg.net.engine, crate::net::ServerEngine::Reactor);
+        // "engine" wins over "reactor" when both are present.
+        let cfg =
+            Config::from_json(r#"{"net": {"engine": "threaded", "reactor": true}}"#).unwrap();
+        assert_eq!(cfg.net.engine, crate::net::ServerEngine::Threaded);
+
+        // Unknown engines are config errors, and caps clamp to >= 1.
+        assert!(Config::from_json(r#"{"net": {"engine": "iocp"}}"#).is_err());
+        let cfg = Config::from_json(r#"{"net": {"max_connections": 0, "max_inflight": 0}}"#)
+            .unwrap();
+        assert_eq!(cfg.net.max_connections, 1);
+        assert_eq!(cfg.net.max_inflight, 1);
+
+        // server_options carries the knobs through to the server layer.
+        let cfg = Config::from_json(
+            r#"{"net": {"engine": "threaded", "max_connections": 9, "max_inflight": 3,
+                        "keepalive_idle_secs": 4}}"#,
+        )
+        .unwrap();
+        let opts = cfg.net.server_options();
+        assert_eq!(opts.engine, crate::net::ServerEngine::Threaded);
+        assert_eq!(opts.max_connections, 9);
+        assert_eq!(opts.max_inflight, 3);
+        assert_eq!(opts.keepalive_idle, std::time::Duration::from_secs(4));
     }
 
     #[test]

@@ -301,9 +301,12 @@ impl RemoteChannel {
     }
 
     /// A transport-level failure (refused/timed-out connection): the
-    /// coordinator treats this exactly like a dead container.
+    /// coordinator treats this exactly like a dead container. Any
+    /// pooled keep-alive connections to the agent are suspect too —
+    /// drop them so recovery probes dial fresh.
     fn transport_err(&self, e: Error) -> Error {
         self.mark(false);
+        self.client.invalidate_pooled();
         Error::Unavailable(format!("container agent {}: {e}", self.endpoint))
     }
 

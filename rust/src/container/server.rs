@@ -22,7 +22,7 @@ use std::sync::Arc;
 use crate::container::channel::info_to_json;
 use crate::container::DataContainer;
 use crate::json::{obj, parse, Value};
-use crate::net::{HttpRequest, HttpResponse, HttpServer};
+use crate::net::{HttpRequest, HttpResponse, HttpServer, ServerOptions};
 use crate::{Error, Result};
 
 /// Path prefix of the object routes.
@@ -82,13 +82,35 @@ impl ContainerServer {
         addr: &str,
         workers: usize,
     ) -> Result<ContainerServer> {
+        Self::serve_with_options(container, addr, workers, ServerOptions::default())
+    }
+
+    /// [`ContainerServer::serve`] with explicit connection-core options
+    /// (engine choice, admission caps, keep-alive window) — the agent
+    /// CLI and differential tests pick engines through this.
+    pub fn serve_with_options(
+        container: Arc<DataContainer>,
+        addr: &str,
+        workers: usize,
+        options: ServerOptions,
+    ) -> Result<ContainerServer> {
         let c = Arc::clone(&container);
-        let server = HttpServer::serve(addr, workers, Arc::new(move |req| route(&c, req)))?;
+        let server = HttpServer::serve_with_options(
+            addr,
+            workers,
+            Arc::new(move |req| route(&c, req)),
+            options,
+        )?;
         Ok(ContainerServer { server, container })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.server.addr()
+    }
+
+    /// The connection core actually serving this agent.
+    pub fn engine(&self) -> crate::net::ServerEngine {
+        self.server.engine()
     }
 
     /// The fronted container (tests inject failures directly).

@@ -39,7 +39,10 @@ use std::sync::Arc;
 
 use crate::coordinator::{DynoStore, RebalanceOpts};
 use crate::json::{obj, parse, Value};
-use crate::net::{BodyReader, HttpRequest, HttpResponse, HttpServer};
+use crate::net::{
+    client_pool, BodyReader, HttpRequest, HttpResponse, HttpServer, NetStats, ServerEngine,
+    ServerOptions,
+};
 use crate::util::unix_secs;
 use crate::{Error, Result};
 
@@ -105,11 +108,41 @@ pub fn serve_with_options(
     limits: crate::net::ServerLimits,
     part_size: usize,
 ) -> Result<HttpServer> {
+    serve_with_net(store, addr, workers, limits, part_size, ServerOptions::default())
+}
+
+/// Connection-plane view threaded into the request handlers so
+/// `/metrics` and `/health` can report the engine's counters.
+#[derive(Clone)]
+struct NetView {
+    stats: Arc<NetStats>,
+    engine: ServerEngine,
+}
+
+/// [`serve_with_options`] plus the connection-core knobs
+/// (`Config::net` / `dynostore serve --net-engine …`): which engine
+/// serves the sockets, the connection/in-flight admission caps, and the
+/// keep-alive idle window. The gateway shares the engine's [`NetStats`]
+/// so `/metrics` and `/health` expose `conns_open`, `conns_accepted`,
+/// `keepalive_reuses`, `admission_shed`, and the reactor lag gauge.
+pub fn serve_with_net(
+    store: Arc<DynoStore>,
+    addr: &str,
+    workers: usize,
+    limits: crate::net::ServerLimits,
+    part_size: usize,
+    mut net: ServerOptions,
+) -> Result<HttpServer> {
+    let stats = net
+        .stats
+        .get_or_insert_with(|| Arc::new(NetStats::default()))
+        .clone();
+    let view = NetView { stats, engine: net.engine.resolved() };
     let max_body = limits.max_body;
     let handler = move |req: HttpRequest, body: &mut BodyReader| {
-        stream_route(&store, req, body, max_body, part_size)
+        stream_route(&store, req, body, max_body, part_size, &view)
     };
-    HttpServer::serve_stream_with_limits(addr, workers, Arc::new(handler), limits)
+    HttpServer::serve_stream_with_options(addr, workers, Arc::new(handler), limits, net)
 }
 
 /// Streaming-mode entry: plain object PUTs hand the incremental body
@@ -123,6 +156,7 @@ fn stream_route(
     body: &mut BodyReader,
     max_body: usize,
     part_size: usize,
+    net: &NetView,
 ) -> HttpResponse {
     if v1::is_streaming_put(&req) {
         return match v1::object_put_stream(store, &req, body, part_size) {
@@ -134,13 +168,13 @@ fn stream_route(
         Ok(bytes) => {
             let mut req = req;
             req.body = bytes;
-            route(store, req)
+            route(store, req, net)
         }
         Err(e) => error_response(store, e),
     }
 }
 
-fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
+fn route(store: &Arc<DynoStore>, req: HttpRequest, net: &NetView) -> HttpResponse {
     // Query strings ride on the request target; strip them before
     // matching so `/v1/...?version=2` routes like `/v1/...`. Only `/v1`
     // targets are split: pre-v1 routes never defined query parameters
@@ -154,8 +188,8 @@ fn route(store: &Arc<DynoStore>, req: HttpRequest) -> HttpResponse {
     let result = match (req.method.as_str(), path) {
         ("POST", "/auth/register") => auth_register(store, &req),
         ("POST", "/auth/login") => auth_login(store, &req),
-        ("GET", "/metrics") => Ok(metrics(store)),
-        ("GET", "/health") => Ok(health(store)),
+        ("GET", "/metrics") => Ok(metrics(store, net)),
+        ("GET", "/health") => Ok(health(store, net)),
         ("POST", "/admin/repair") => admin_repair(store, &req),
         ("POST", "/admin/gc") => admin_gc(store, &req),
         ("POST", "/admin/rebalance") => admin_rebalance(store, &req),
@@ -246,17 +280,23 @@ fn auth_login(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse>
     ))
 }
 
-fn metrics(store: &Arc<DynoStore>) -> HttpResponse {
+fn metrics(store: &Arc<DynoStore>, net: &NetView) -> HttpResponse {
     let snap = store.metrics.snapshot();
     let mut fields: Vec<(&str, Value)> =
         snap.iter().map(|(k, v)| (*k, Value::from(*v))).collect();
     // Live gauge rather than a counter: open uploads are replicated
     // metadata, so the value is correct across restarts too.
     fields.push(("multipart_open", store.open_upload_count().into()));
+    // Connection-plane counters from the serving engine (flat keys:
+    // conns_open, conns_accepted, keepalive_reuses, admission_shed,
+    // reactor_lag_us — gauges and counters per NetStats docs).
+    for (k, v) in net.stats.snapshot() {
+        fields.push((k, v.into()));
+    }
     HttpResponse::json(200, &obj(fields))
 }
 
-fn health(store: &Arc<DynoStore>) -> HttpResponse {
+fn health(store: &Arc<DynoStore>, net: &NetView) -> HttpResponse {
     let infos = store.registry.infos();
     let live = infos.iter().filter(|i| i.alive).count();
     let census: Vec<(&str, Value)> = store
@@ -312,6 +352,20 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
         ("streams_active", snap["streams_active"].into()),
         ("multipart_open", store.open_upload_count().into()),
     ]);
+    // Connection-plane view: which engine serves the sockets, how many
+    // connections are open/reused/shed, and the reactor lag gauge.
+    let mut net_fields: Vec<(&str, Value)> =
+        vec![("engine", net.engine.as_str().into())];
+    for (k, v) in net.stats.snapshot() {
+        net_fields.push((k, v.into()));
+    }
+    // Outbound keep-alive pool (coordinator→agent fan-out reuse).
+    let pool = client_pool();
+    let mut pool_fields: Vec<(&str, Value)> =
+        vec![("idle", (pool.idle_count() as u64).into())];
+    for (k, v) in pool.stats.snapshot() {
+        pool_fields.push((k, v.into()));
+    }
     HttpResponse::json(
         200,
         &obj(vec![
@@ -326,6 +380,8 @@ fn health(store: &Arc<DynoStore>) -> HttpResponse {
             ("breakers", Value::Arr(breakers)),
             ("resilience", resilience),
             ("streaming", streaming),
+            ("net", obj(net_fields)),
+            ("client_pool", obj(pool_fields)),
             ("durability", durability),
         ]),
     )
@@ -597,6 +653,29 @@ mod tests {
             .post("/admin/gc", &[("authorization", &admin)], b"{\"retention_secs\": 0}")
             .unwrap();
         assert_eq!(g.status, 200);
+    }
+
+    #[test]
+    fn net_telemetry_in_metrics_and_health() {
+        let (server, client, _admin) = gateway();
+        // At least this very request was accepted by the engine.
+        let m = client.get("/metrics", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert!(v.req_u64("conns_accepted").unwrap() >= 1);
+        assert!(v.get("conns_open").as_u64().is_some());
+        assert!(v.get("keepalive_reuses").as_u64().is_some());
+        assert!(v.get("admission_shed").as_u64().is_some());
+        assert!(v.get("reactor_lag_us").as_u64().is_some());
+
+        let h = client.get("/health", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+        let net = v.get("net");
+        assert_eq!(net.req_str("engine").unwrap(), server.engine().as_str());
+        assert!(net.req_u64("conns_accepted").unwrap() >= 1);
+        let pool = v.get("client_pool");
+        assert!(pool.get("idle").as_u64().is_some());
+        assert!(pool.get("reuses").as_u64().is_some());
+        assert!(pool.get("stale_retries").as_u64().is_some());
     }
 
     #[test]

@@ -103,8 +103,11 @@ fn print_usage() {
          commands:\n\
          \x20 serve    --config FILE [--addr 127.0.0.1:8080] [--workers 8]\n\
          \x20          [--engine pure-rust|swar|swar-parallel|pjrt]\n\
+         \x20          [--net-engine reactor|threaded]\n\
          \x20          [--data-dir DIR] [--snapshot-every N] [--max-body-mb MB]\n\
          \x20          [--part-size-mb MB]\n\
+         \x20          (--net-engine picks the connection core: epoll reactor\n\
+         \x20           with keep-alive, or the portable threaded loop)\n\
          \x20          (--data-dir persists the metadata plane: WAL + snapshots;\n\
          \x20           a restarted serve recovers every acknowledged object)\n\
          \x20 agent    --config FILE [--addr 127.0.0.1:9100] [--workers 4]\n\
@@ -184,6 +187,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
             .map_err(|_| "--part-size-mb must be a number".to_string())?
             .max(1);
     }
+    // CLI override of the connection core (epoll reactor vs threaded).
+    if let Some(engine) = flags.get("net-engine") {
+        config.net.engine = dynostore::net::ServerEngine::parse(engine)
+            .ok_or_else(|| format!("unknown --net-engine '{engine}' (reactor | threaded)"))?;
+    }
     if config.data_dir.is_none() {
         dynostore::log_warn!(
             "no data_dir configured: metadata is in-memory and will NOT survive a restart \
@@ -216,9 +224,15 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
     };
     let part_size = usize::try_from(config.part_size_mb.saturating_mul(1 << 20))
         .unwrap_or(gateway::DEFAULT_STREAM_PART_SIZE);
-    let server =
-        gateway::serve_with_options(Arc::clone(&store), &addr, workers, limits, part_size)
-            .map_err(|e| e.to_string())?;
+    let server = gateway::serve_with_net(
+        Arc::clone(&store),
+        &addr,
+        workers,
+        limits,
+        part_size,
+        config.net.server_options(),
+    )
+    .map_err(|e| e.to_string())?;
     // Background anti-entropy: a paced scrubber sweeps placements and
     // heals silent corruption when the config enables it.
     let _scrubber = if config.scrub_interval_secs > 0 {
@@ -236,12 +250,14 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
         None
     };
     dynostore::log_info!(
-        "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?}, engine {})",
+        "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?}, \
+         engine {}, net {})",
         server.addr(),
         store.registry.len(),
         store.meta.replica_count(),
         store.default_policy,
-        store.backend_name()
+        store.backend_name(),
+        server.engine().as_str()
     );
     println!("listening on {}", server.addr());
     println!("admin token (30d, for admin/decommission/undrain/rebalance): {admin_token}");

@@ -1,0 +1,283 @@
+//! Global keep-alive connection pool for [`crate::net::HttpClient`].
+//!
+//! One process-wide pool, keyed by host string (`"host:port"` as the
+//! client addresses it), holding bounded per-host stacks of idle
+//! keep-alive connections. The coordinator's chunk fan-out builds many
+//! short-lived `HttpClient`s for the same agent endpoints; a global
+//! pool (rather than per-client state) is what lets those reuse each
+//! other's connections.
+//!
+//! Staleness is handled twice, because a pooled connection can die at
+//! any moment (server restart, keep-alive idle eviction on the far
+//! side):
+//!
+//! 1. **Checkout probe**: a non-blocking 1-byte peek. A healthy idle
+//!    keep-alive connection has nothing to read — `WouldBlock`. An EOF
+//!    or stray byte (a late error response, protocol garbage) means the
+//!    connection is dead or desynchronized; it is dropped and the next
+//!    candidate tried.
+//! 2. **Retry-once** in the client: if a *reused* connection then still
+//!    fails before yielding a single response byte, the request is
+//!    retried on a fresh connection (RFC 7230 §6.3.1).
+//!
+//! Idle connections also age out: ones parked longer than the idle TTL
+//! are dropped at checkout time. The TTL (30 s) deliberately undercuts
+//! the server's default keep-alive idle window (60 s) so the client
+//! rarely picks up a connection the server is about to reap.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::net::http::ConnReader;
+
+/// Default cap on idle pooled connections kept per host.
+pub const DEFAULT_POOL_PER_HOST: usize = 8;
+
+const DEFAULT_IDLE_TTL: Duration = Duration::from_secs(30);
+
+/// Client-side pool counters, exported through the gateway's `/health`.
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    /// Requests served on a reused pooled connection.
+    pub reuses: AtomicU64,
+    /// Fresh TCP connects (pool misses + unpooled requests).
+    pub connects: AtomicU64,
+    /// Requests retried on a fresh connection after a reused one proved
+    /// stale (died before yielding a response byte).
+    pub stale_retries: AtomicU64,
+    /// Pooled connections dropped by TTL expiry or the checkout probe.
+    pub evicted: AtomicU64,
+}
+
+impl PoolStats {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("reuses", self.reuses.load(Ordering::Relaxed)),
+            ("connects", self.connects.load(Ordering::Relaxed)),
+            ("stale_retries", self.stale_retries.load(Ordering::Relaxed)),
+            ("evicted", self.evicted.load(Ordering::Relaxed)),
+        ]
+    }
+}
+
+struct Pooled {
+    conn: ConnReader,
+    since: Instant,
+}
+
+/// Bounded per-host pool of idle keep-alive connections.
+pub struct ClientPool {
+    conns: Mutex<HashMap<String, VecDeque<Pooled>>>,
+    per_host: AtomicUsize,
+    idle_ttl_ms: AtomicU64,
+    pub stats: PoolStats,
+}
+
+impl ClientPool {
+    fn new() -> ClientPool {
+        ClientPool {
+            conns: Mutex::new(HashMap::new()),
+            per_host: AtomicUsize::new(DEFAULT_POOL_PER_HOST),
+            idle_ttl_ms: AtomicU64::new(DEFAULT_IDLE_TTL.as_millis() as u64),
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// Set the per-host idle-connection cap; `0` disables pooling
+    /// entirely (every request connects fresh with `connection:
+    /// close`). Applies process-wide.
+    pub fn configure(&self, per_host: usize) {
+        self.per_host.store(per_host, Ordering::Relaxed);
+        if per_host == 0 {
+            self.conns.lock().unwrap().clear();
+        }
+    }
+
+    /// Whether pooling is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.per_host.load(Ordering::Relaxed) > 0
+    }
+
+    /// An idle connection for `host`, health-probed, or `None` (pool
+    /// empty / everything stale).
+    pub fn checkout(&self, host: &str) -> Option<ConnReader> {
+        let ttl = Duration::from_millis(self.idle_ttl_ms.load(Ordering::Relaxed));
+        let mut map = self.conns.lock().unwrap();
+        let queue = map.get_mut(host)?;
+        while let Some(p) = queue.pop_back() {
+            if p.since.elapsed() > ttl {
+                self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if probe_healthy(&p.conn) {
+                if queue.is_empty() {
+                    map.remove(host);
+                }
+                return Some(p.conn);
+            }
+            self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        map.remove(host);
+        None
+    }
+
+    /// Park a reusable connection for `host`; dropped when the host's
+    /// stack is at capacity (the TCP close tells the server).
+    pub fn checkin(&self, host: &str, conn: ConnReader) {
+        let cap = self.per_host.load(Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        let mut map = self.conns.lock().unwrap();
+        let queue = map.entry(host.to_string()).or_default();
+        if queue.len() >= cap {
+            self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        queue.push_back(Pooled { conn, since: Instant::now() });
+    }
+
+    /// Drop every pooled connection to `host` — the peer is known dead
+    /// (circuit breaker opened, agent decommissioned), so parked
+    /// connections to it are guaranteed garbage.
+    pub fn invalidate(&self, host: &str) {
+        self.conns.lock().unwrap().remove(host);
+    }
+
+    /// Currently parked idle connections across all hosts.
+    pub fn idle_count(&self) -> usize {
+        self.conns.lock().unwrap().values().map(|q| q.len()).sum()
+    }
+}
+
+/// Non-blocking 1-byte peek: a healthy idle keep-alive connection has
+/// nothing to send us, so `WouldBlock` is the healthy answer. `Ok(0)`
+/// is EOF (server closed), `Ok(1)` is protocol garbage (an unsolicited
+/// byte) — both mean the connection must not carry another request.
+fn probe_healthy(conn: &ConnReader) -> bool {
+    let stream = conn.stream();
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut byte = [0u8; 1];
+    let healthy = matches!(
+        stream.peek(&mut byte),
+        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock
+    );
+    healthy && stream.set_nonblocking(false).is_ok()
+}
+
+/// The process-wide pool.
+pub fn global() -> &'static ClientPool {
+    static POOL: OnceLock<ClientPool> = OnceLock::new();
+    POOL.get_or_init(ClientPool::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    fn pair() -> (ConnReader, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        (ConnReader::new(client), server_side)
+    }
+
+    #[test]
+    fn checkout_returns_healthy_checkin() {
+        let pool = ClientPool::new();
+        let (conn, _server) = pair();
+        pool.checkin("h:1", conn);
+        assert_eq!(pool.idle_count(), 1);
+        assert!(pool.checkout("h:1").is_some());
+        assert_eq!(pool.idle_count(), 0);
+        assert!(pool.checkout("h:1").is_none(), "pool is empty after checkout");
+    }
+
+    #[test]
+    fn probe_rejects_closed_and_garbage_connections() {
+        let pool = ClientPool::new();
+        // Server closed while parked: probe sees EOF.
+        let (conn, server) = pair();
+        pool.checkin("h:1", conn);
+        drop(server);
+        // Give the FIN a moment to land.
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(pool.checkout("h:1").is_none(), "closed connection must not check out");
+        assert!(pool.stats.evicted.load(Ordering::Relaxed) >= 1);
+
+        // Unsolicited bytes while parked: desynchronized, rejected.
+        let (conn, mut server) = pair();
+        pool.checkin("h:2", conn);
+        server.write_all(b"X").unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(pool.checkout("h:2").is_none(), "garbage connection must not check out");
+    }
+
+    #[test]
+    fn per_host_cap_bounds_parked_connections() {
+        let pool = ClientPool::new();
+        pool.configure(2);
+        let mut keep = Vec::new();
+        for _ in 0..4 {
+            let (conn, server) = pair();
+            keep.push(server);
+            pool.checkin("h:1", conn);
+        }
+        assert_eq!(pool.idle_count(), 2, "per-host cap enforced");
+        // The two overflow connections were closed client-side: the
+        // server halves read EOF.
+        let mut eofs = 0;
+        for s in &mut keep {
+            s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            let mut b = [0u8; 1];
+            if matches!(s.read(&mut b), Ok(0)) {
+                eofs += 1;
+            }
+        }
+        assert_eq!(eofs, 2, "overflow connections are actually closed");
+    }
+
+    #[test]
+    fn ttl_evicts_aged_connections() {
+        let pool = ClientPool::new();
+        pool.idle_ttl_ms.store(10, Ordering::Relaxed);
+        let (conn, _server) = pair();
+        pool.checkin("h:1", conn);
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(pool.checkout("h:1").is_none(), "aged connection evicted");
+        assert!(pool.stats.evicted.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn invalidate_clears_host() {
+        let pool = ClientPool::new();
+        let (conn, _s1) = pair();
+        let (conn2, _s2) = pair();
+        pool.checkin("h:1", conn);
+        pool.checkin("h:2", conn2);
+        pool.invalidate("h:1");
+        assert!(pool.checkout("h:1").is_none());
+        assert!(pool.checkout("h:2").is_some(), "other hosts untouched");
+    }
+
+    #[test]
+    fn configure_zero_disables_and_clears() {
+        let pool = ClientPool::new();
+        let (conn, _server) = pair();
+        pool.checkin("h:1", conn);
+        pool.configure(0);
+        assert!(!pool.enabled());
+        assert_eq!(pool.idle_count(), 0, "disabling drops parked connections");
+        let (conn, _server) = pair();
+        pool.checkin("h:1", conn);
+        assert_eq!(pool.idle_count(), 0, "checkin is a no-op while disabled");
+    }
+}

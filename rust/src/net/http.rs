@@ -1,6 +1,7 @@
-//! HTTP/1.1 subset: server (request routing via a handler fn) + client.
+//! HTTP/1.1 subset: server (request routing via a handler fn) + client,
+//! with keep-alive connections on both sides.
 //!
-//! Two service modes share one connection loop:
+//! Two service modes share one request loop:
 //!
 //! - **Buffered** ([`HttpServer::serve`]): the classic path — the body is
 //!   read fully (bounded by the body cap) before the handler runs.
@@ -14,14 +15,35 @@
 //! body or a [`BodyStream`] whose blocks are written as they are
 //! produced (`content-length` framing when the total is known, chunked
 //! transfer-encoding otherwise — exactly one of the two, never both).
+//!
+//! Two server **engines** sit under the same handler API
+//! ([`ServerEngine`]):
+//!
+//! - **Reactor** (default on Linux): a readiness-based epoll event loop
+//!   owns every socket, buffers request heads off non-blocking reads,
+//!   and hands complete requests to the worker pool. Idle keep-alive
+//!   connections cost a file descriptor, not a thread, so thread count
+//!   stays O(workers) under any connection count. Admission control
+//!   sheds with `503` (connection cap) and `429` (in-flight cap), both
+//!   with `Retry-After`.
+//! - **Threaded** (fallback, and the default off Linux): the original
+//!   thread-per-request loop, kept behind a knob for differential
+//!   testing. It serves one request per connection (`connection:
+//!   close`) so an idle client can never pin a pooled worker.
+//!
+//! [`HttpClient`] keeps a bounded per-host pool of keep-alive
+//! connections (see [`crate::net::cpool`]) so repeated requests to the
+//! same host — the coordinator→agent chunk fan-out — stop paying a TCP
+//! handshake per call.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::net::ThreadPool;
+use crate::net::{cpool, ThreadPool};
 use crate::{Error, Result};
 
 /// A parsed HTTP request.
@@ -147,6 +169,7 @@ impl HttpResponse {
             413 => "Payload Too Large",
             416 => "Range Not Satisfiable",
             429 => "Too Many Requests",
+            431 => "Request Header Fields Too Large",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             504 => "Gateway Timeout",
@@ -159,11 +182,20 @@ impl HttpResponse {
     /// `content-length` XOR `transfer-encoding: chunked`, decided here —
     /// handler-supplied copies of either header are dropped from the
     /// iteration and re-emitted once, so the two can never both appear.
-    fn write_to(&mut self, stream: &mut TcpStream) -> std::io::Result<()> {
+    /// The `connection` header is likewise owned by the server loop:
+    /// `keep_alive` reflects the negotiated outcome, not handler intent
+    /// (a handler can still force closure by setting `connection:
+    /// close`, which the loop honors before calling this).
+    pub(crate) fn write_to(
+        &mut self,
+        stream: &mut TcpStream,
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
         let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, self.reason());
         for (k, v) in &self.headers {
-            if k == "content-length" || k == "transfer-encoding" {
-                continue; // framing emitted once below
+            if k == "content-length" || k == "transfer-encoding" || k == "connection" {
+                continue; // framing + connection policy emitted once below
             }
             head.push_str(&format!("{k}: {v}\r\n"));
         }
@@ -180,7 +212,7 @@ impl HttpResponse {
                     .cloned()
                     .unwrap_or_else(|| self.body.len().to_string());
                 head.push_str(&format!(
-                    "content-length: {declared}\r\nconnection: close\r\n\r\n"
+                    "content-length: {declared}\r\nconnection: {conn}\r\n\r\n"
                 ));
                 stream.write_all(head.as_bytes())?;
                 stream.write_all(&self.body)?;
@@ -188,11 +220,11 @@ impl HttpResponse {
             Some(mut bs) => {
                 match bs.len {
                     Some(total) => head.push_str(&format!(
-                        "content-length: {total}\r\nconnection: close\r\n\r\n"
+                        "content-length: {total}\r\nconnection: {conn}\r\n\r\n"
                     )),
-                    None => {
-                        head.push_str("transfer-encoding: chunked\r\nconnection: close\r\n\r\n")
-                    }
+                    None => head.push_str(&format!(
+                        "transfer-encoding: chunked\r\nconnection: {conn}\r\n\r\n"
+                    )),
                 }
                 stream.write_all(head.as_bytes())?;
                 let mut written = 0u64;
@@ -239,7 +271,7 @@ impl HttpResponse {
 /// Mid-stream failures become an I/O error so the connection is torn
 /// down — the only honest signal once the status line is on the wire.
 fn stream_abort(e: Error) -> std::io::Error {
-    std::io::Error::new(std::io::ErrorKind::Other, format!("body stream failed: {e}"))
+    std::io::Error::other(format!("body stream failed: {e}"))
 }
 
 type Handler = dyn Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static;
@@ -248,7 +280,7 @@ type Handler = dyn Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static;
 /// field) plus an incremental [`BodyReader`] positioned at the first
 /// body byte.
 pub type StreamHandler =
-    dyn Fn(HttpRequest, &mut BodyReader) -> HttpResponse + Send + Sync + 'static;
+    dyn Fn(HttpRequest, &mut BodyReader<'_>) -> HttpResponse + Send + Sync + 'static;
 
 /// Largest request body [`HttpServer::serve`] accepts: 64 MiB. A
 /// client-supplied `content-length` drives a buffer allocation, so an
@@ -261,15 +293,30 @@ pub const DEFAULT_MAX_BODY: usize = 64 << 20;
 /// handler thread at most this long before the server answers `408
 /// Request Timeout` and reclaims the thread; a client that stops
 /// reading its response is cut off by the matching write timeout.
-pub const DEFAULT_CONN_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+pub const DEFAULT_CONN_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Most unread request-body bytes the server will consume after a
 /// response before simply closing the connection. Draining lets the
 /// response reach a well-behaved client (closing with unread inbound
 /// data can RST the socket and discard the response in the client's
 /// receive buffer), but a hostile `content-length` must not pin a
-/// server thread — past this budget the connection is cut.
+/// server thread — past this budget the connection is cut. An
+/// incompletely drained connection is never kept alive.
 pub const DRAIN_BUDGET: u64 = 64 * 1024;
+
+/// Default cap on concurrently open server connections (reactor: parked
+/// + in-flight; threaded: queued + in-flight). Beyond it, accepts are
+/// answered `503 + Retry-After` and closed.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 4096;
+
+/// Default cap on requests concurrently dispatched to the worker pool
+/// (reactor engine). Beyond it, complete requests are shed `429 +
+/// Retry-After` instead of queueing without bound.
+pub const DEFAULT_MAX_INFLIGHT: usize = 1024;
+
+/// Default time an idle keep-alive connection may sit parked in the
+/// reactor between requests before it is silently closed.
+pub const DEFAULT_KEEPALIVE_IDLE: Duration = Duration::from_secs(60);
 
 /// Per-connection resource limits for [`HttpServer::serve_with_limits`].
 #[derive(Debug, Clone, Copy)]
@@ -277,7 +324,7 @@ pub struct ServerLimits {
     /// Largest accepted request body (413 beyond).
     pub max_body: usize,
     /// Socket read/write timeout (408 on header-read expiry).
-    pub conn_timeout: std::time::Duration,
+    pub conn_timeout: Duration,
 }
 
 impl Default for ServerLimits {
@@ -286,7 +333,108 @@ impl Default for ServerLimits {
     }
 }
 
-enum AnyHandler {
+/// Which connection-handling core serves the sockets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServerEngine {
+    /// Readiness-based epoll event loop (Linux): keep-alive on, idle
+    /// connections cost a file descriptor, thread count O(workers).
+    #[default]
+    Reactor,
+    /// The original thread-per-request loop: one request per connection
+    /// (`connection: close`), kept for differential testing and as the
+    /// portable fallback.
+    Threaded,
+}
+
+impl ServerEngine {
+    /// The engine that will actually run on this platform: the reactor
+    /// needs epoll, so off Linux it falls back to the threaded loop.
+    pub fn resolved(self) -> ServerEngine {
+        if cfg!(target_os = "linux") {
+            self
+        } else {
+            ServerEngine::Threaded
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServerEngine::Reactor => "reactor",
+            ServerEngine::Threaded => "threaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ServerEngine> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reactor" | "epoll" => Some(ServerEngine::Reactor),
+            "threaded" | "threads" | "thread" => Some(ServerEngine::Threaded),
+            _ => None,
+        }
+    }
+}
+
+/// Connection-plane counters exported through `/metrics` and `/health`.
+/// Gauges (`conns_open`, `reactor_lag_us`) hold the current value;
+/// everything else is a monotonic counter.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Currently open server connections (accepted, not yet closed).
+    pub conns_open: AtomicU64,
+    /// Connections accepted since start (including shed ones).
+    pub conns_accepted: AtomicU64,
+    /// Requests served on a reused keep-alive connection.
+    pub keepalive_reuses: AtomicU64,
+    /// Connections/requests refused by admission control (503/429).
+    pub admission_shed: AtomicU64,
+    /// Last reactor loop iteration's processing time, microseconds — a
+    /// lag gauge: how long ready sockets waited on the event loop.
+    pub reactor_lag_us: AtomicU64,
+}
+
+impl NetStats {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("conns_open", self.conns_open.load(Ordering::Relaxed)),
+            ("conns_accepted", self.conns_accepted.load(Ordering::Relaxed)),
+            ("keepalive_reuses", self.keepalive_reuses.load(Ordering::Relaxed)),
+            ("admission_shed", self.admission_shed.load(Ordering::Relaxed)),
+            ("reactor_lag_us", self.reactor_lag_us.load(Ordering::Relaxed)),
+        ]
+    }
+}
+
+/// Engine + admission-control knobs for [`HttpServer::serve_with_options`].
+#[derive(Clone)]
+pub struct ServerOptions {
+    pub engine: ServerEngine,
+    /// Open-connection cap; accepts beyond it get `503 + Retry-After`.
+    pub max_connections: usize,
+    /// In-flight request cap (reactor); complete requests beyond it get
+    /// `429 + Retry-After` and the connection is closed (request-body
+    /// bytes may already trail the head, so a kept-alive shed would
+    /// desynchronize framing).
+    pub max_inflight: usize,
+    /// Idle keep-alive parking time before a silent close (reactor).
+    pub keepalive_idle: Duration,
+    /// Share a stats block with the server (the gateway threads one
+    /// into `/metrics` + `/health`); `None` lets the server allocate
+    /// its own, readable via [`HttpServer::stats`].
+    pub stats: Option<Arc<NetStats>>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            engine: ServerEngine::default(),
+            max_connections: DEFAULT_MAX_CONNECTIONS,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
+            keepalive_idle: DEFAULT_KEEPALIVE_IDLE,
+            stats: None,
+        }
+    }
+}
+
+pub(crate) enum AnyHandler {
     Buffered(Arc<Handler>),
     Stream(Arc<StreamHandler>),
 }
@@ -300,11 +448,18 @@ impl Clone for AnyHandler {
     }
 }
 
-/// Threaded HTTP server.
+/// HTTP server handle: one engine thread (reactor event loop or
+/// threaded accept loop) plus its worker pool.
 pub struct HttpServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<NetStats>,
+    engine: ServerEngine,
+    /// Unblocks the engine thread so `shutdown` can join it: the
+    /// reactor's event-fd poke, or a wake connect for the threaded
+    /// loop's blocking `accept`.
+    waker: Option<Box<dyn Fn() + Send + Sync>>,
 }
 
 impl HttpServer {
@@ -343,7 +498,24 @@ impl HttpServer {
         handler: Arc<Handler>,
         limits: ServerLimits,
     ) -> Result<HttpServer> {
-        Self::serve_inner(addr, workers, AnyHandler::Buffered(handler), limits)
+        Self::serve_inner(
+            addr,
+            workers,
+            AnyHandler::Buffered(handler),
+            limits,
+            ServerOptions::default(),
+        )
+    }
+
+    /// [`HttpServer::serve_with_limits`] plus engine/admission knobs.
+    pub fn serve_with_options(
+        addr: &str,
+        workers: usize,
+        handler: Arc<Handler>,
+        limits: ServerLimits,
+        opts: ServerOptions,
+    ) -> Result<HttpServer> {
+        Self::serve_inner(addr, workers, AnyHandler::Buffered(handler), limits, opts)
     }
 
     /// Streaming-mode server: the handler pulls request-body bytes
@@ -359,7 +531,25 @@ impl HttpServer {
         handler: Arc<StreamHandler>,
         limits: ServerLimits,
     ) -> Result<HttpServer> {
-        Self::serve_inner(addr, workers, AnyHandler::Stream(handler), limits)
+        Self::serve_inner(
+            addr,
+            workers,
+            AnyHandler::Stream(handler),
+            limits,
+            ServerOptions::default(),
+        )
+    }
+
+    /// [`HttpServer::serve_stream_with_limits`] plus engine/admission
+    /// knobs.
+    pub fn serve_stream_with_options(
+        addr: &str,
+        workers: usize,
+        handler: Arc<StreamHandler>,
+        limits: ServerLimits,
+        opts: ServerOptions,
+    ) -> Result<HttpServer> {
+        Self::serve_inner(addr, workers, AnyHandler::Stream(handler), limits, opts)
     }
 
     fn serve_inner(
@@ -367,43 +557,78 @@ impl HttpServer {
         workers: usize,
         handler: AnyHandler,
         limits: ServerLimits,
+        opts: ServerOptions,
     ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let accept_thread = std::thread::Builder::new()
-            .name("http-accept".into())
-            .spawn(move || {
-                let pool = ThreadPool::new(workers);
-                loop {
-                    if stop2.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let handler = handler.clone();
-                            pool.execute(move || handle_conn(stream, handler, limits));
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn accept thread");
-        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+        let stats =
+            opts.stats.clone().unwrap_or_else(|| Arc::new(NetStats::default()));
+        let engine = opts.engine.resolved();
+        let (thread, waker) = match engine {
+            #[cfg(target_os = "linux")]
+            ServerEngine::Reactor => crate::net::reactor::spawn(
+                listener,
+                workers,
+                handler,
+                limits,
+                &opts,
+                Arc::clone(&stats),
+                Arc::clone(&stop),
+            )?,
+            _ => {
+                let thread = serve_threaded(
+                    listener,
+                    workers,
+                    handler,
+                    limits,
+                    opts.max_connections,
+                    Arc::clone(&stats),
+                    Arc::clone(&stop),
+                )?;
+                let wake_addr = wake_addr_for(local);
+                let waker: Box<dyn Fn() + Send + Sync> = Box::new(move || {
+                    let _ = TcpStream::connect_timeout(
+                        &wake_addr,
+                        Duration::from_millis(250),
+                    );
+                });
+                (thread, waker)
+            }
+        };
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            thread: Some(thread),
+            stats,
+            engine,
+            waker: Some(waker),
+        })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// The engine actually serving (after platform fallback).
+    pub fn engine(&self) -> ServerEngine {
+        self.engine
+    }
+
+    /// The server's connection-plane counters.
+    pub fn stats(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
+    }
+
     pub fn shutdown(&mut self) {
+        if self.thread.is_none() {
+            return;
+        }
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.accept_thread.take() {
+        if let Some(wake) = &self.waker {
+            wake();
+        }
+        if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
     }
@@ -415,14 +640,96 @@ impl Drop for HttpServer {
     }
 }
 
+/// Where a wake connect can reach the listener: the bound address, with
+/// an unspecified IP (0.0.0.0 / ::) replaced by the loopback of the
+/// same family.
+fn wake_addr_for(local: std::net::SocketAddr) -> std::net::SocketAddr {
+    let mut addr = local;
+    if addr.ip().is_unspecified() {
+        match addr {
+            std::net::SocketAddr::V4(_) => {
+                addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
+            }
+            std::net::SocketAddr::V6(_) => {
+                addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
+            }
+        }
+    }
+    addr
+}
+
+/// The fallback threaded engine: a blocking accept loop dispatching one
+/// worker job per connection. No busy-poll — the thread sleeps in
+/// `accept(2)` until a connection (or the shutdown wake connect)
+/// arrives.
+fn serve_threaded(
+    listener: TcpListener,
+    workers: usize,
+    handler: AnyHandler,
+    limits: ServerLimits,
+    max_connections: usize,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+) -> Result<std::thread::JoinHandle<()>> {
+    let thread = std::thread::Builder::new()
+        .name("http-accept".into())
+        .spawn(move || {
+            let pool = ThreadPool::new(workers);
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                        if stats.conns_open.load(Ordering::Relaxed) >= max_connections as u64 {
+                            stats.admission_shed.fetch_add(1, Ordering::Relaxed);
+                            shed_connection(stream, 503, "server at connection capacity");
+                            continue;
+                        }
+                        stats.conns_open.fetch_add(1, Ordering::Relaxed);
+                        let handler = handler.clone();
+                        let stats = Arc::clone(&stats);
+                        pool.execute(move || handle_conn(stream, handler, limits, stats));
+                    }
+                    Err(_) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // Transient accept errors (EMFILE under fd
+                        // pressure): back off instead of spinning hot.
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+        })
+        .map_err(|e| Error::Net(format!("spawn accept thread: {e}")))?;
+    Ok(thread)
+}
+
+/// Best-effort admission-shed response (`503`/`429` + `Retry-After`),
+/// then close. Used before a connection enters normal service, so the
+/// socket's send buffer is empty and the small write cannot block long.
+pub(crate) fn shed_connection(mut stream: TcpStream, status: u16, msg: &str) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let mut resp = HttpResponse::text(status, msg);
+    resp.headers.insert("retry-after".into(), "1".into());
+    let _ = resp.write_to(&mut stream, false);
+}
+
 /// Why a request could not be parsed into an [`HttpRequest`].
-enum ParseFailure {
+pub(crate) enum ParseFailure {
     /// Declared `content-length` exceeds the server's cap — answered
     /// 413 without allocating for the body.
     TooLarge { declared: u64, cap: usize },
     /// The socket read timed out before a complete request arrived —
     /// the slowloris case, answered 408 so the thread is reclaimed.
     SlowClient,
+    /// Clean EOF before the first request byte: the peer closed an idle
+    /// connection. Not an error — closed silently (no one is listening
+    /// for a response).
+    Eof,
     Malformed(Error),
 }
 
@@ -461,6 +768,81 @@ pub fn is_over_cap(e: &Error) -> bool {
     matches!(e, Error::Invalid(m) | Error::Net(m) if m.contains("body exceeds the"))
 }
 
+/// Buffered reader over one TCP connection that can be handed *back*
+/// after a request completes, carrying any read-ahead bytes with it —
+/// the primitive keep-alive is built on.
+///
+/// `prefix` holds bytes that arrived before this reader owned the
+/// socket (the reactor's non-blocking head buffer, or the leftover of a
+/// previous request on the same connection); reads serve the prefix
+/// first, then the socket through an internal `BufReader`. `consumed`
+/// counts every byte served, which is how callers distinguish "peer
+/// closed an idle connection" (zero bytes) from a mid-request failure.
+pub(crate) struct ConnReader {
+    prefix: Vec<u8>,
+    pos: usize,
+    inner: BufReader<TcpStream>,
+    consumed: u64,
+}
+
+impl ConnReader {
+    pub(crate) fn new(stream: TcpStream) -> ConnReader {
+        ConnReader::with_prefix(stream, Vec::new())
+    }
+
+    pub(crate) fn with_prefix(stream: TcpStream, prefix: Vec<u8>) -> ConnReader {
+        ConnReader { prefix, pos: 0, inner: BufReader::new(stream), consumed: 0 }
+    }
+
+    /// The underlying socket (shared fd — timeouts set here apply to
+    /// reads through the reader too).
+    pub(crate) fn stream(&self) -> &TcpStream {
+        self.inner.get_ref()
+    }
+
+    /// Total bytes served through this reader.
+    pub(crate) fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// Tear down the reader, returning every byte it read off the
+    /// socket but never served — the next request's head when the
+    /// client pipelined. Feed these back as the next reader's prefix.
+    pub(crate) fn into_leftover(self) -> Vec<u8> {
+        let mut left = self.prefix[self.pos..].to_vec();
+        left.extend_from_slice(self.inner.buffer());
+        left
+    }
+}
+
+impl Read for ConnReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let available = self.fill_buf()?;
+        let n = available.len().min(buf.len());
+        buf[..n].copy_from_slice(&available[..n]);
+        self.consume(n);
+        Ok(n)
+    }
+}
+
+impl BufRead for ConnReader {
+    fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+        if self.pos < self.prefix.len() {
+            return Ok(&self.prefix[self.pos..]);
+        }
+        self.inner.fill_buf()
+    }
+
+    fn consume(&mut self, amt: usize) {
+        self.consumed += amt as u64;
+        let from_prefix = amt.min(self.prefix.len().saturating_sub(self.pos));
+        self.pos += from_prefix;
+        if amt > from_prefix {
+            self.inner.consume(amt - from_prefix);
+        }
+    }
+}
+
 enum BodyState {
     Done,
     Sized { remaining: u64 },
@@ -468,11 +850,14 @@ enum BodyState {
     Chunked { in_chunk: u64 },
 }
 
-/// Incremental request-body reader over the connection's buffered read
-/// half. Handles both framings: `content-length` (exact byte count) and
+/// Incremental request-body reader borrowed from the connection's
+/// [`ConnReader`] for the duration of one request. Handles both
+/// framings: `content-length` (exact byte count) and
 /// `Transfer-Encoding: chunked` (RFC 9112 §7.1, trailers skipped).
-pub struct BodyReader {
-    reader: BufReader<TcpStream>,
+/// Borrowing (rather than owning) the connection is what lets the
+/// server reclaim it afterwards for the next keep-alive request.
+pub struct BodyReader<'a> {
+    reader: &'a mut ConnReader,
     state: BodyState,
     declared: Option<u64>,
     /// Cumulative cap for chunked bodies (sized bodies are checked
@@ -481,13 +866,13 @@ pub struct BodyReader {
     total: u64,
 }
 
-impl BodyReader {
-    fn sized(reader: BufReader<TcpStream>, len: u64) -> BodyReader {
+impl<'a> BodyReader<'a> {
+    fn sized(reader: &'a mut ConnReader, len: u64) -> BodyReader<'a> {
         let state = if len == 0 { BodyState::Done } else { BodyState::Sized { remaining: len } };
         BodyReader { reader, state, declared: Some(len), cap: u64::MAX, total: 0 }
     }
 
-    fn chunked(reader: BufReader<TcpStream>, cap: u64) -> BodyReader {
+    fn chunked(reader: &'a mut ConnReader, cap: u64) -> BodyReader<'a> {
         BodyReader {
             reader,
             state: BodyState::Chunked { in_chunk: 0 },
@@ -626,9 +1011,10 @@ impl BodyReader {
     }
 
     /// Consume the unread remainder, up to `budget` bytes. Returns
-    /// `true` when the body was fully drained (safe to close politely);
-    /// `false` means the budget ran out or the read failed — the caller
-    /// just closes the connection.
+    /// `true` when the body was fully drained (safe to close politely —
+    /// or to keep the connection for the next request); `false` means
+    /// the budget ran out or the read failed — the caller just closes
+    /// the connection.
     fn drain(&mut self, budget: u64) -> bool {
         // The drain is bounded by its own budget; the chunked
         // cumulative cap must not re-fire while discarding.
@@ -657,10 +1043,9 @@ impl BodyReader {
 /// Framing/cap errors are wrapped as `io::Error` with the message
 /// preserved, so [`is_over_cap`] still recognizes the cap error after a
 /// round trip through `io` (it arrives back as `Error::Net`).
-impl std::io::Read for BodyReader {
+impl std::io::Read for BodyReader<'_> {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
-        self.read_some(buf)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))
+        self.read_some(buf).map_err(|e| std::io::Error::other(e.to_string()))
     }
 }
 
@@ -673,7 +1058,7 @@ fn parse_chunk_size(line: &str) -> Result<u64> {
     u64::from_str_radix(token, 16).map_err(|_| Error::Net(format!("bad chunk size '{token}'")))
 }
 
-fn failure_response(failure: &ParseFailure, limits: &ServerLimits) -> HttpResponse {
+pub(crate) fn failure_response(failure: &ParseFailure, limits: &ServerLimits) -> HttpResponse {
     match failure {
         ParseFailure::TooLarge { declared, cap } => HttpResponse::text(
             413,
@@ -683,21 +1068,64 @@ fn failure_response(failure: &ParseFailure, limits: &ServerLimits) -> HttpRespon
             408,
             &format!("request not received within {:?} — connection closed", limits.conn_timeout),
         ),
+        ParseFailure::Eof => HttpResponse::text(400, "connection closed before a request"),
         ParseFailure::Malformed(e) => HttpResponse::text(400, &format!("bad request: {e}")),
     }
 }
 
-fn handle_conn(mut stream: TcpStream, handler: AnyHandler, limits: ServerLimits) {
+/// The threaded engine's per-connection job: serve exactly one request.
+/// Keep-alive stays off here by design — with a fixed worker pool, a
+/// parked-but-idle keep-alive client would pin a worker for the whole
+/// idle window; parking without threads is the reactor's job.
+fn handle_conn(
+    mut stream: TcpStream,
+    handler: AnyHandler,
+    limits: ServerLimits,
+    stats: Arc<NetStats>,
+) {
     // The write half gets the same timeout: a client that stops reading
     // its response must not pin a handler thread either.
     let _ = stream.set_write_timeout(Some(limits.conn_timeout));
-    let parsed = match stream.try_clone() {
-        Ok(read_half) => parse_head(read_half, limits),
-        Err(e) => Err(ParseFailure::Malformed(Error::Io(e))),
-    };
-    match parsed {
-        Ok((req, mut body)) => {
-            let mut response = match &handler {
+    let _ = stream.set_read_timeout(Some(limits.conn_timeout));
+    if let Ok(read_half) = stream.try_clone() {
+        let mut reader = ConnReader::new(read_half);
+        let _ = serve_one(&mut stream, &mut reader, &handler, &limits, false);
+    }
+    stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// One request serviced on an established connection: parse the head
+/// off `reader`, run the handler, write the response, drain the unread
+/// body remainder. The return value is the keep-alive verdict — a
+/// connection is only kept when the client asked for it, the engine
+/// allows it, the handler didn't force `connection: close`, the
+/// response write succeeded, AND the request body was fully consumed
+/// (anything else leaves the stream unframed for the next request).
+pub(crate) enum Served {
+    Close,
+    KeepAlive,
+}
+
+pub(crate) fn serve_one(
+    stream: &mut TcpStream,
+    reader: &mut ConnReader,
+    handler: &AnyHandler,
+    limits: &ServerLimits,
+    allow_keep_alive: bool,
+) -> Served {
+    match parse_head_from(reader, limits) {
+        Ok((req, framing)) => {
+            let client_keep = req
+                .headers
+                .get("connection")
+                .map(|v| !v.to_ascii_lowercase().split(',').any(|t| t.trim() == "close"))
+                .unwrap_or(true);
+            let want_keep = allow_keep_alive && client_keep;
+            let mut body = match framing {
+                Framing::Chunked => BodyReader::chunked(reader, limits.max_body as u64),
+                Framing::Sized(len) => BodyReader::sized(reader, len),
+            };
+            let mut response = match handler {
                 AnyHandler::Buffered(h) => match body.read_to_end_cap(limits.max_body) {
                     Ok(bytes) => {
                         let mut req = req;
@@ -708,58 +1136,87 @@ fn handle_conn(mut stream: TcpStream, handler: AnyHandler, limits: ServerLimits)
                         413,
                         &format!("request body exceeds the {}-byte limit", limits.max_body),
                     ),
-                    Err(Error::Io(e)) => failure_response(&read_failure(e), &limits),
-                    Err(e) => failure_response(&ParseFailure::Malformed(e), &limits),
+                    Err(Error::Io(e)) => failure_response(&read_failure(e), limits),
+                    Err(e) => failure_response(&ParseFailure::Malformed(e), limits),
                 },
                 AnyHandler::Stream(h) => h(req, &mut body),
             };
-            let _ = response.write_to(&mut stream);
+            // A handler that sets `connection: close` forces closure
+            // (e.g. a response whose correctness depends on EOF).
+            let handler_close = response
+                .headers
+                .get("connection")
+                .map(|v| v.to_ascii_lowercase().contains("close"))
+                .unwrap_or(false);
+            let keep = want_keep && !handler_close;
+            let write_ok = response.write_to(stream, keep).is_ok();
             // Bounded courtesy drain of whatever the client already
             // sent: closing with unread inbound data can RST the
             // connection and discard the response sitting in the
             // client's receive buffer. Past the budget, just close.
-            let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
-            let _ = body.drain(DRAIN_BUDGET);
+            let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+            let drained = body.drain(DRAIN_BUDGET);
+            if write_ok && keep && drained {
+                let _ = stream.set_read_timeout(Some(limits.conn_timeout));
+                Served::KeepAlive
+            } else {
+                Served::Close
+            }
         }
+        // The peer closed an idle connection cleanly — nothing to
+        // answer, nobody listening.
+        Err(ParseFailure::Eof) => Served::Close,
         Err(failure) => {
-            let mut response = failure_response(&failure, &limits);
-            let _ = response.write_to(&mut stream);
+            let mut response = failure_response(&failure, limits);
+            let _ = response.write_to(stream, false);
             if let ParseFailure::TooLarge { declared, .. } = failure {
                 // Same courtesy drain, same bound: a hostile
                 // content-length past the budget is cut off instead of
                 // pinning this thread while the client pushes bytes.
                 if declared <= DRAIN_BUDGET {
-                    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
                     let mut sink = [0u8; 8192];
                     let mut remaining = declared;
                     while remaining > 0 {
-                        match stream.read(&mut sink) {
+                        match reader.read(&mut sink) {
                             Ok(0) | Err(_) => break,
                             Ok(n) => remaining = remaining.saturating_sub(n as u64),
                         }
                     }
                 }
             }
+            Served::Close
         }
     }
 }
 
-/// Parse the request line + headers and hand back the head plus a
-/// [`BodyReader`] positioned at the first body byte. A declared
-/// `content-length` beyond the cap is refused here — before any
-/// allocation, in both service modes.
-fn parse_head(
-    stream: TcpStream,
-    limits: ServerLimits,
-) -> std::result::Result<(HttpRequest, BodyReader), ParseFailure> {
+/// How the request body is framed on the wire.
+pub(crate) enum Framing {
+    Sized(u64),
+    Chunked,
+}
+
+/// Parse the request line + headers off `reader` and hand back the head
+/// plus the body framing. A declared `content-length` beyond the cap is
+/// refused here — before any allocation, in both service modes.
+///
+/// HTTP/1.0 requests without an explicit `connection: keep-alive` are
+/// normalized to carry `connection: close`, so every downstream
+/// keep-alive decision can read the header alone.
+fn parse_head_from(
+    reader: &mut ConnReader,
+    limits: &ServerLimits,
+) -> std::result::Result<(HttpRequest, Framing), ParseFailure> {
     let max_body = limits.max_body;
-    stream.set_read_timeout(Some(limits.conn_timeout))?;
-    let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
+    if line.is_empty() {
+        return Err(ParseFailure::Eof);
+    }
     let mut parts = line.trim_end().split_whitespace();
     let method = parts.next().ok_or_else(|| Error::Net("missing method".into()))?.to_string();
     let path = parts.next().ok_or_else(|| Error::Net("missing path".into()))?.to_string();
+    let http10 = parts.next().map(|v| v.eq_ignore_ascii_case("HTTP/1.0")).unwrap_or(false);
 
     let mut headers = BTreeMap::new();
     loop {
@@ -773,6 +1230,17 @@ fn parse_head(
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
+    if http10 {
+        // RFC 7230 appendix A.1.2: 1.0 defaults to close unless the
+        // client opted in.
+        let keep = headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("keep-alive"))
+            .unwrap_or(false);
+        if !keep {
+            headers.insert("connection".into(), "close".into());
+        }
+    }
     let request = HttpRequest { method, path, headers, body: Vec::new() };
     // RFC 9112 §6.3: when both are present, transfer-encoding wins and
     // content-length is ignored.
@@ -782,7 +1250,7 @@ fn parse_head(
         .map(|v| v.to_ascii_lowercase().contains("chunked"))
         .unwrap_or(false);
     if chunked {
-        return Ok((request, BodyReader::chunked(reader, max_body as u64)));
+        return Ok((request, Framing::Chunked));
     }
     // Never trust the client's content-length with an allocation: cap
     // it BEFORE `vec![0u8; len]` — one bogus header must not OOM the
@@ -797,31 +1265,49 @@ fn parse_head(
     if len > max_body as u64 {
         return Err(ParseFailure::TooLarge { declared: len, cap: max_body });
     }
-    Ok((request, BodyReader::sized(reader, len)))
+    Ok((request, Framing::Sized(len)))
 }
 
 /// Blocking HTTP client for the CLI, tests, and remote container
-/// channels.
+/// channels, with keep-alive connection reuse through the global
+/// per-host pool ([`crate::net::cpool`]).
 pub struct HttpClient {
     base: String,
     /// Connect/read/write timeout; `None` blocks indefinitely (CLI use).
-    timeout: Option<std::time::Duration>,
+    timeout: Option<Duration>,
+    /// Whether this client participates in the keep-alive pool.
+    pooled: bool,
 }
 
 impl HttpClient {
     /// `base` like `127.0.0.1:8080`.
     pub fn new(base: &str) -> Self {
-        HttpClient { base: base.to_string(), timeout: None }
+        HttpClient { base: base.to_string(), timeout: None, pooled: true }
     }
 
     /// A client whose connects, reads, and writes all fail after
     /// `timeout` — so a dead endpoint surfaces as an error instead of a
     /// hung dispatch thread.
-    pub fn with_timeout(base: &str, timeout: std::time::Duration) -> Self {
-        HttpClient { base: base.to_string(), timeout: Some(timeout) }
+    pub fn with_timeout(base: &str, timeout: Duration) -> Self {
+        HttpClient { base: base.to_string(), timeout: Some(timeout), pooled: true }
     }
 
-    fn connect(&self, timeout: Option<std::time::Duration>) -> Result<TcpStream> {
+    /// Opt this client out of keep-alive pooling: every request opens a
+    /// fresh connection and sends `connection: close` — the pre-pool
+    /// behavior, kept for differential tests and benches.
+    pub fn without_pool(mut self) -> Self {
+        self.pooled = false;
+        self
+    }
+
+    /// Drop every pooled connection to this client's host — called when
+    /// the peer is known dead (circuit breaker tripped, agent kill) so
+    /// later requests don't burn their stale-retry on a corpse.
+    pub fn invalidate_pooled(&self) {
+        cpool::global().invalidate(&self.base);
+    }
+
+    fn connect(&self, timeout: Option<Duration>) -> Result<TcpStream> {
         match timeout {
             None => Ok(TcpStream::connect(&self.base)?),
             Some(t) => {
@@ -839,6 +1325,59 @@ impl HttpClient {
         }
     }
 
+    /// A connection ready for one exchange: a pooled keep-alive one
+    /// when allowed and available (flagged `true`), else a fresh
+    /// connect. Timeouts are (re)applied either way — a pooled
+    /// connection may have been checked in under different ones.
+    fn obtain(
+        &self,
+        timeout: Option<Duration>,
+        allow_pool: bool,
+    ) -> Result<(ConnReader, bool)> {
+        if allow_pool {
+            if let Some(conn) = cpool::global().checkout(&self.base) {
+                let _ = conn.stream().set_read_timeout(timeout);
+                let _ = conn.stream().set_write_timeout(timeout);
+                return Ok((conn, true));
+            }
+        }
+        let stream = self.connect(timeout)?;
+        cpool::global().stats.connects.fetch_add(1, Ordering::Relaxed);
+        Ok((ConnReader::new(stream), false))
+    }
+
+    /// Write one request and read its response off `conn`. The second
+    /// return flag says the connection is reusable afterwards (response
+    /// fully framed and the server didn't announce `close`).
+    fn exchange(
+        &self,
+        conn: &mut ConnReader,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+        keep_alive: bool,
+    ) -> Result<(HttpResponse, bool)> {
+        // RFC 7230 §5.4 + §6.1: Host on every request, and an explicit
+        // Connection header stating this client's reuse intent.
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\nconnection: {}\r\n",
+            self.base,
+            if keep_alive { "keep-alive" } else { "close" }
+        );
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
+        {
+            let mut w = conn.stream();
+            w.write_all(head.as_bytes())?;
+            w.write_all(body)?;
+            w.flush()?;
+        }
+        read_response(conn, method)
+    }
+
     pub fn request(
         &self,
         method: &str,
@@ -852,29 +1391,55 @@ impl HttpClient {
     /// [`HttpClient::request`] with a per-request timeout override: the
     /// deadline-propagation path clamps each hop's wait to the request's
     /// remaining budget instead of the client's configured default.
+    ///
+    /// When a **reused** pooled connection dies before yielding a single
+    /// response byte, the request is retried exactly once on a fresh
+    /// connection (RFC 7230 §6.3.1 — the server closed an idle
+    /// keep-alive connection in a race with this request; zero response
+    /// bytes proves the server never started processing the retry-able
+    /// way a mid-response failure would not).
     pub fn request_with_timeout(
         &self,
         method: &str,
         path: &str,
         headers: &[(&str, &str)],
         body: &[u8],
-        timeout: Option<std::time::Duration>,
+        timeout: Option<Duration>,
     ) -> Result<HttpResponse> {
-        let mut stream = self.connect(timeout)?;
-        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.base);
-        for (k, v) in headers {
-            head.push_str(&format!("{k}: {v}\r\n"));
+        let use_pool = self.pooled && cpool::global().enabled();
+        for attempt in 0..2u8 {
+            let (mut conn, reused) = self.obtain(timeout, use_pool && attempt == 0)?;
+            let before = conn.consumed();
+            match self.exchange(&mut conn, method, path, headers, body, use_pool) {
+                Ok((resp, reusable)) => {
+                    if reused {
+                        cpool::global().stats.reuses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if use_pool && reusable {
+                        cpool::global().checkin(&self.base, conn);
+                    }
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    if !(reused && conn.consumed() == before) {
+                        return Err(e);
+                    }
+                    cpool::global().stats.stale_retries.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
-        head.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", body.len()));
-        stream.write_all(head.as_bytes())?;
-        stream.write_all(body)?;
-        stream.flush()?;
-        read_response(stream, method)
+        Err(Error::Net(format!(
+            "{method} {path}: pooled connection was stale and the fresh retry failed"
+        )))
     }
 
     /// Send a request whose body is streamed from `body` with chunked
     /// transfer-encoding — the wire-level dual of the server's
     /// [`BodyReader`]; the total size need not be known up front.
+    ///
+    /// Always a fresh connection: a streamed body cannot be replayed,
+    /// so there is no stale-retry to arm. The connection still joins
+    /// the pool afterwards when the response leaves it reusable.
     pub fn request_stream(
         &self,
         method: &str,
@@ -882,26 +1447,40 @@ impl HttpClient {
         headers: &[(&str, &str)],
         body: &mut dyn Read,
     ) -> Result<HttpResponse> {
-        let mut stream = self.connect(self.timeout)?;
-        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.base);
+        let use_pool = self.pooled && cpool::global().enabled();
+        let stream = self.connect(self.timeout)?;
+        cpool::global().stats.connects.fetch_add(1, Ordering::Relaxed);
+        let mut conn = ConnReader::new(stream);
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\nconnection: {}\r\n",
+            self.base,
+            if use_pool { "keep-alive" } else { "close" }
+        );
         for (k, v) in headers {
             head.push_str(&format!("{k}: {v}\r\n"));
         }
-        head.push_str("transfer-encoding: chunked\r\nconnection: close\r\n\r\n");
-        stream.write_all(head.as_bytes())?;
-        let mut buf = vec![0u8; 64 * 1024];
-        loop {
-            let n = body.read(&mut buf)?;
-            if n == 0 {
-                break;
+        head.push_str("transfer-encoding: chunked\r\n\r\n");
+        {
+            let mut w = conn.stream();
+            w.write_all(head.as_bytes())?;
+            let mut buf = vec![0u8; 64 * 1024];
+            loop {
+                let n = body.read(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                w.write_all(format!("{n:x}\r\n").as_bytes())?;
+                w.write_all(&buf[..n])?;
+                w.write_all(b"\r\n")?;
             }
-            stream.write_all(format!("{n:x}\r\n").as_bytes())?;
-            stream.write_all(&buf[..n])?;
-            stream.write_all(b"\r\n")?;
+            w.write_all(b"0\r\n\r\n")?;
+            w.flush()?;
         }
-        stream.write_all(b"0\r\n\r\n")?;
-        stream.flush()?;
-        read_response(stream, method)
+        let (resp, reusable) = read_response(&mut conn, method)?;
+        if use_pool && reusable {
+            cpool::global().checkin(&self.base, conn);
+        }
+        Ok(resp)
     }
 
     /// [`HttpClient::request_stream`] for PUT uploads.
@@ -931,13 +1510,17 @@ impl HttpClient {
     }
 }
 
-/// Read a full response off `stream`: status line, headers, then the
-/// body under whichever framing the server chose (`content-length` or
-/// chunked transfer-encoding).
-fn read_response(stream: TcpStream, method: &str) -> Result<HttpResponse> {
-    let mut reader = BufReader::new(stream);
+/// Read a full response off `conn`: status line, headers, then the body
+/// under whichever framing the server chose. Returns the response plus
+/// whether the connection is reusable for another request: the body was
+/// self-delimiting (content-length / chunked / bodiless — NOT
+/// read-to-EOF) and the server didn't send `connection: close`.
+fn read_response(conn: &mut ConnReader, method: &str) -> Result<(HttpResponse, bool)> {
     let mut status_line = String::new();
-    reader.read_line(&mut status_line)?;
+    conn.read_line(&mut status_line)?;
+    if status_line.is_empty() {
+        return Err(Error::Net("connection closed before the response status line".into()));
+    }
     let status: u16 = status_line
         .split_whitespace()
         .nth(1)
@@ -946,7 +1529,7 @@ fn read_response(stream: TcpStream, method: &str) -> Result<HttpResponse> {
     let mut headers = BTreeMap::new();
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        conn.read_line(&mut h)?;
         let h = h.trim_end();
         if h.is_empty() {
             break;
@@ -963,19 +1546,33 @@ fn read_response(stream: TcpStream, method: &str) -> Result<HttpResponse> {
         .get("transfer-encoding")
         .map(|v| v.to_ascii_lowercase().contains("chunked"))
         .unwrap_or(false);
+    let mut self_delimited = true;
     let body = if bodiless {
         Vec::new()
     } else if chunked {
-        BodyReader::chunked(reader, u64::MAX).read_to_end_cap(usize::MAX)?
-    } else {
-        let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+        BodyReader::chunked(conn, u64::MAX).read_to_end_cap(usize::MAX)?
+    } else if let Some(len) =
+        headers.get("content-length").and_then(|v| v.trim().parse::<usize>().ok())
+    {
         let mut body = vec![0u8; len];
         if len > 0 {
-            reader.read_exact(&mut body)?;
+            conn.read_exact(&mut body)?;
         }
         body
+    } else {
+        // RFC 7230 §3.3.3 case 7: no framing headers at all — the body
+        // runs until the server closes the connection (error paths of
+        // minimal servers). Such a connection is spent.
+        self_delimited = false;
+        let mut body = Vec::new();
+        conn.read_to_end(&mut body)?;
+        body
     };
-    Ok(HttpResponse { status, headers, body, stream: None })
+    let close = headers
+        .get("connection")
+        .map(|v| v.to_ascii_lowercase().contains("close"))
+        .unwrap_or(false);
+    Ok((HttpResponse { status, headers, body, stream: None }, self_delimited && !close))
 }
 
 #[cfg(test)]
@@ -1379,7 +1976,7 @@ mod tests {
         );
         let mut expect = Vec::new();
         for n in 1..=3u8 {
-            expect.extend(std::iter::repeat(n).take(10));
+            expect.extend_from_slice(&[n; 10]);
         }
         assert_eq!(resp.body, expect);
     }
@@ -1415,5 +2012,127 @@ mod tests {
                 assert_ne!(resp.body.len(), 1000, "short stream must not yield a full body")
             }
         }
+    }
+
+    #[test]
+    fn threaded_engine_roundtrips_and_closes_per_request() {
+        // The fallback engine serves the same requests but never keeps
+        // connections alive (one request per connection, by design).
+        let mut server = HttpServer::serve_with_options(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: HttpRequest| HttpResponse::bytes(200, req.body)),
+            ServerLimits::default(),
+            ServerOptions { engine: ServerEngine::Threaded, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(server.engine(), ServerEngine::Threaded);
+        let client = HttpClient::new(&server.addr().to_string());
+        let resp = client.put("/o", &[], b"abc").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"abc");
+        assert_eq!(
+            resp.headers.get("connection").map(|s| s.as_str()),
+            Some("close"),
+            "threaded engine closes after every request"
+        );
+        // Shutdown must return promptly: the blocking accept loop is
+        // unblocked by the wake connect, not by a poll timeout.
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(2), "shutdown stalled");
+    }
+
+    #[test]
+    fn engine_parse_and_platform_resolution() {
+        assert_eq!(ServerEngine::parse("reactor"), Some(ServerEngine::Reactor));
+        assert_eq!(ServerEngine::parse("EPOLL"), Some(ServerEngine::Reactor));
+        assert_eq!(ServerEngine::parse("threaded"), Some(ServerEngine::Threaded));
+        assert_eq!(ServerEngine::parse("bogus"), None);
+        if cfg!(target_os = "linux") {
+            assert_eq!(ServerEngine::Reactor.resolved(), ServerEngine::Reactor);
+        } else {
+            assert_eq!(ServerEngine::Reactor.resolved(), ServerEngine::Threaded);
+        }
+    }
+
+    #[test]
+    fn client_sends_host_and_connection_headers() {
+        // RFC 7230 §5.4/§6.1: every request carries Host and an
+        // explicit Connection header. Captured by a hand-rolled
+        // one-shot server so the exact wire bytes are visible.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let capture = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut head = Vec::new();
+            let mut byte = [0u8; 1];
+            while !head.ends_with(b"\r\n\r\n") {
+                if s.read(&mut byte).unwrap() == 0 {
+                    break;
+                }
+                head.push(byte[0]);
+            }
+            s.write_all(b"HTTP/1.1 200 OK\r\ncontent-length: 0\r\nconnection: close\r\n\r\n")
+                .unwrap();
+            String::from_utf8_lossy(&head).to_string()
+        });
+        let client = HttpClient::new(&addr.to_string());
+        let resp = client.get("/probe", &[]).unwrap();
+        assert_eq!(resp.status, 200);
+        let head = capture.join().unwrap();
+        assert!(head.contains(&format!("host: {addr}")), "missing Host header: {head}");
+        assert!(head.contains("connection: "), "missing Connection header: {head}");
+    }
+
+    #[test]
+    fn close_delimited_error_response_tolerated() {
+        // RFC 7230 §3.3.3 case 7: a server that answers with neither
+        // content-length nor chunked framing delimits the body by
+        // closing the connection. Minimal/error-path servers do this;
+        // the client must return the body, not an error.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let serve = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut sink = [0u8; 4096];
+            let _ = s.read(&mut sink).unwrap();
+            s.write_all(b"HTTP/1.1 500 Internal Server Error\r\n\r\noops").unwrap();
+            // Drop closes the socket — that close IS the framing.
+        });
+        let client = HttpClient::new(&addr.to_string());
+        let resp = client.get("/x", &[]).unwrap();
+        serve.join().unwrap();
+        assert_eq!(resp.status, 500);
+        assert_eq!(resp.body, b"oops");
+    }
+
+    #[test]
+    fn http10_request_gets_connection_close() {
+        // An HTTP/1.0 request without keep-alive opt-in must be
+        // answered connection: close and actually closed.
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"GET /hello HTTP/1.0\r\nhost: t\r\n\r\n").unwrap();
+        let mut reply = Vec::new();
+        stream.read_to_end(&mut reply).unwrap(); // EOF = server closed
+        let text = String::from_utf8_lossy(&reply);
+        assert!(text.contains("200"), "{text}");
+        assert!(text.contains("connection: close"), "{text}");
+        assert!(text.ends_with("world"), "{text}");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn keepalive_reuse_is_counted_by_reactor() {
+        let server = echo_server();
+        assert_eq!(server.engine(), ServerEngine::Reactor);
+        let client = HttpClient::new(&server.addr().to_string());
+        for _ in 0..4 {
+            assert_eq!(client.get("/hello", &[]).unwrap().status, 200);
+        }
+        let reuses = server.stats().keepalive_reuses.load(Ordering::Relaxed);
+        assert!(reuses >= 2, "expected keep-alive reuse on sequential requests, saw {reuses}");
+        assert!(server.stats().conns_accepted.load(Ordering::Relaxed) >= 1);
     }
 }

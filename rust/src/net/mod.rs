@@ -1,17 +1,34 @@
-//! Minimal HTTP/1.1 substrate (server + client) over `std::net`.
+//! HTTP/1.1 substrate (server + client) over `std::net`, with an
+//! event-driven connection core.
 //!
 //! The paper's DynoStore exposes REST APIs over HTTP "as it is widely
 //! allowed across firewalls and NATs" (§V). The vendored crate set has
 //! no tokio/hyper, so this module implements the needed HTTP/1.1 subset
-//! from scratch: request line + headers + Content-Length bodies, keep-
-//! alive off, a fixed worker pool on the server side. It backs the
-//! [`crate::gateway`] REST service and the CLI client.
+//! from scratch: request line + headers, `Content-Length` and chunked
+//! bodies, streamed request/response bodies, and HTTP/1.1 keep-alive.
+//!
+//! Connection handling is pluggable ([`ServerEngine`]): the default
+//! Linux engine is an epoll readiness reactor ([`reactor`]) — one event
+//! loop owns every socket, complete requests are dispatched to a fixed
+//! worker pool, and idle keep-alive connections cost a file descriptor
+//! rather than a thread — with the original thread-per-request loop
+//! kept as the portable fallback. The client side pools keep-alive
+//! connections per host ([`cpool`]). Admission control (connection and
+//! in-flight caps shedding `503`/`429` + `Retry-After`) bounds both.
+//! It backs the [`crate::gateway`] REST service, the container agents,
+//! and the CLI client.
 
+mod cpool;
 mod http;
 mod pool;
+#[cfg(target_os = "linux")]
+mod reactor;
 
+pub use cpool::{global as client_pool, ClientPool, PoolStats, DEFAULT_POOL_PER_HOST};
 pub use http::{
     is_over_cap, BodyReader, BodyStream, HttpClient, HttpRequest, HttpResponse, HttpServer,
-    ServerLimits, StreamHandler, DEFAULT_CONN_TIMEOUT, DEFAULT_MAX_BODY, DRAIN_BUDGET,
+    NetStats, ServerEngine, ServerLimits, ServerOptions, StreamHandler, DEFAULT_CONN_TIMEOUT,
+    DEFAULT_KEEPALIVE_IDLE, DEFAULT_MAX_BODY, DEFAULT_MAX_CONNECTIONS, DEFAULT_MAX_INFLIGHT,
+    DRAIN_BUDGET,
 };
 pub use pool::{JobHandle, ThreadPool};

@@ -8,6 +8,7 @@
 //! of poisoning the caller with a misleading unwrap.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -25,6 +26,9 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     tx: Option<Mutex<Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
+    /// Jobs enqueued but not yet picked up by a worker — the queue-depth
+    /// gauge admission control and `/health` read.
+    pending: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -32,9 +36,11 @@ impl ThreadPool {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
         let rx: Arc<Mutex<Receiver<Job>>> = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
         let workers = (0..size)
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
                 std::thread::Builder::new()
                     .name(format!("pool-{i}"))
                     .spawn(move || loop {
@@ -45,6 +51,7 @@ impl ThreadPool {
                             // APIs detect the missing result and surface
                             // Error::Pool to the submitter.
                             Ok(job) => {
+                                pending.fetch_sub(1, Ordering::Relaxed);
                                 let _ = catch_unwind(AssertUnwindSafe(move || job()));
                             }
                             Err(_) => break,
@@ -53,11 +60,12 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(Mutex::new(tx)), workers }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers, pending }
     }
 
     /// Enqueue a job; never blocks.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.pending.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
             .expect("pool is live")
@@ -65,6 +73,12 @@ impl ThreadPool {
             .unwrap()
             .send(Box::new(job))
             .expect("workers alive");
+    }
+
+    /// Jobs waiting in the queue (submitted, not yet dequeued by a
+    /// worker). A sustained non-zero value means the pool is saturated.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
     }
 
     /// Submit one job and get a [`JobHandle`] for its result — the
@@ -205,6 +219,31 @@ mod tests {
         let pool = ThreadPool::new(8);
         let out = pool.scatter_gather(50, |i| i * i).unwrap();
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pending_gauge_tracks_queue_depth() {
+        let pool = ThreadPool::new(1);
+        let gate = Arc::new(Mutex::new(()));
+        let guard = gate.lock().unwrap();
+        // First job occupies the single worker (blocked on the gate)…
+        let g = Arc::clone(&gate);
+        pool.execute(move || {
+            drop(g.lock().unwrap());
+        });
+        // …wait until the worker has dequeued it.
+        let t0 = std::time::Instant::now();
+        while pool.pending() != 0 {
+            assert!(t0.elapsed() < std::time::Duration::from_secs(5), "worker never dequeued");
+            std::thread::yield_now();
+        }
+        // Three more jobs can only queue.
+        for _ in 0..3 {
+            pool.execute(|| {});
+        }
+        assert_eq!(pool.pending(), 3, "queued jobs visible in the gauge");
+        drop(guard); // release the worker
+        drop(pool); // join: everything ran
     }
 
     #[test]

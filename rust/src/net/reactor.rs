@@ -1,0 +1,564 @@
+//! Readiness-based epoll reactor: the default server engine on Linux.
+//!
+//! One event-loop thread owns every socket. Connections are accepted
+//! non-blocking, parked, and their request heads buffered incrementally
+//! off readiness events; only when a complete head (`\r\n\r\n`) has
+//! arrived is the connection handed — head bytes included — to the
+//! worker pool, which runs the exact same blocking `serve_one` path the
+//! threaded engine uses (with the socket switched back to blocking mode
+//! and the slowloris timeouts armed). After a keep-alive response the
+//! worker hands the connection *back* to the reactor through a channel
+//! + waker pipe, and it parks again waiting for the next request.
+//!
+//! The economics this buys: an idle keep-alive connection costs one
+//! file descriptor and a small parked buffer — not a thread. Thread
+//! count stays O(workers) no matter how many clients stay connected.
+//!
+//! Admission control happens at the two points where load enters:
+//!
+//! - **accept**: beyond `max_connections` open connections, the new
+//!   socket is answered `503 + Retry-After` and closed.
+//! - **dispatch**: beyond `max_inflight` requests already in the worker
+//!   pool, a complete request is answered `429 + Retry-After` and the
+//!   connection closed (request-body bytes may already be in flight
+//!   behind the head, so shedding on a kept-alive connection would
+//!   desynchronize framing).
+//!
+//! epoll is reached through raw FFI (`epoll_create1`/`epoll_ctl`/
+//! `epoll_wait`) to keep the zero-dependency build — no `libc` crate.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::net::http::{
+    failure_response, serve_one, shed_connection, AnyHandler, ConnReader, HttpResponse, NetStats,
+    ParseFailure, Served, ServerLimits, ServerOptions,
+};
+use crate::net::ThreadPool;
+use crate::{Error, Result};
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLLIN: u32 = 0x001;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+
+/// The kernel's `struct epoll_event`. Packed on x86-64 (the kernel ABI
+/// packs it there); natural layout elsewhere.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    /// Written by the kernel on `epoll_wait`; this reactor re-polls the
+    /// socket with `read()` instead of inspecting readiness flags, so
+    /// the field is only ever written on our side.
+    #[allow(dead_code)]
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn close(fd: i32) -> i32;
+}
+
+/// Thin RAII wrapper over an epoll instance.
+struct Epoll {
+    fd: i32,
+}
+
+impl Epoll {
+    fn create() -> Result<Epoll> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(Error::Net(format!("epoll_create1: {}", io::Error::last_os_error())));
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn add(&self, fd: RawFd, token: u64) -> io::Result<()> {
+        let mut ev =
+            EpollEvent { events: EPOLLIN | EPOLLRDHUP | EPOLLERR | EPOLLHUP, data: token };
+        let rc = unsafe { epoll_ctl(self.fd, EPOLL_CTL_ADD, fd, &mut ev) };
+        if rc < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    fn del(&self, fd: RawFd) {
+        let mut ev = EpollEvent { events: 0, data: 0 };
+        let _ = unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) };
+    }
+
+    /// Wait for events; EINTR retries, any other failure degrades to an
+    /// empty tick (with a small sleep so a persistent error cannot spin
+    /// the loop hot).
+    fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> usize {
+        loop {
+            let rc = unsafe {
+                epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+            };
+            if rc >= 0 {
+                return rc as usize;
+            }
+            if io::Error::last_os_error().kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            return 0;
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Largest request head (request line + headers) the reactor buffers
+/// before answering `431` — a head is metadata, not a body.
+const MAX_HEAD: usize = 64 * 1024;
+
+/// Event-loop tick while connections are parked: bounds how late the
+/// idle/timeout sweep can run after a deadline passes.
+const TICK_MS: i32 = 25;
+/// Relaxed tick while no connection is open.
+const IDLE_TICK_MS: i32 = 250;
+
+/// A connection parked in the reactor between (or before) requests.
+struct Parked {
+    stream: TcpStream,
+    /// Bytes read so far toward the next request head (may already
+    /// contain body bytes past the head; they ride along as the
+    /// dispatch prefix).
+    buf: Vec<u8>,
+    /// Last progress: accept/return time, refreshed on every readable
+    /// chunk — so timeouts measure stall, matching the per-read socket
+    /// timeouts of the threaded engine.
+    since: Instant,
+    /// Whether this connection already served at least one request.
+    reused: bool,
+}
+
+/// A keep-alive connection a worker is handing back, with any
+/// read-ahead (pipelined) bytes it pulled past the request it served.
+struct Returned {
+    stream: TcpStream,
+    leftover: Vec<u8>,
+}
+
+/// What a readiness event on a parked connection amounts to.
+enum Action {
+    Wait,
+    Dispatch,
+    Close,
+    TooBig,
+}
+
+/// Decrements the in-flight gauge when the worker job ends, however it
+/// ends — a panicking handler must not leak admission budget.
+struct InflightGuard(Arc<AtomicU64>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Decrements `conns_open` on drop unless disarmed — disarmed exactly
+/// when the connection was handed back to the reactor, which then owns
+/// the count.
+struct OpenGuard {
+    stats: Arc<NetStats>,
+    armed: bool,
+}
+
+impl Drop for OpenGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Spawn the reactor thread. Returns the join handle plus a waker the
+/// server handle uses to unblock `epoll_wait` for shutdown.
+pub(crate) fn spawn(
+    listener: TcpListener,
+    workers: usize,
+    handler: AnyHandler,
+    limits: ServerLimits,
+    opts: &ServerOptions,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+) -> Result<(JoinHandle<()>, Box<dyn Fn() + Send + Sync>)> {
+    listener.set_nonblocking(true)?;
+    let epoll = Epoll::create()?;
+    let (waker_tx, waker_rx) = UnixStream::pair()?;
+    waker_tx.set_nonblocking(true)?;
+    waker_rx.set_nonblocking(true)?;
+    epoll.add(listener.as_raw_fd(), TOKEN_LISTENER)?;
+    epoll.add(waker_rx.as_raw_fd(), TOKEN_WAKER)?;
+    let waker_tx = Arc::new(waker_tx);
+    let (return_tx, return_rx) = channel();
+    let mut reactor = Reactor {
+        epoll,
+        listener,
+        waker_rx,
+        waker_tx: Arc::clone(&waker_tx),
+        conns: HashMap::new(),
+        next_token: FIRST_CONN_TOKEN,
+        pool: Some(ThreadPool::new(workers)),
+        handler,
+        limits,
+        max_connections: opts.max_connections,
+        max_inflight: opts.max_inflight,
+        keepalive_idle: opts.keepalive_idle,
+        inflight: Arc::new(AtomicU64::new(0)),
+        stats,
+        stop,
+        return_tx,
+        return_rx,
+    };
+    let thread = std::thread::Builder::new()
+        .name("http-reactor".into())
+        .spawn(move || reactor.run())
+        .map_err(|e| Error::Net(format!("spawn reactor thread: {e}")))?;
+    let wake: Box<dyn Fn() + Send + Sync> = Box::new(move || {
+        let _ = (&*waker_tx).write_all(&[1]);
+    });
+    Ok((thread, wake))
+}
+
+struct Reactor {
+    epoll: Epoll,
+    listener: TcpListener,
+    waker_rx: UnixStream,
+    waker_tx: Arc<UnixStream>,
+    conns: HashMap<u64, Parked>,
+    next_token: u64,
+    pool: Option<ThreadPool>,
+    handler: AnyHandler,
+    limits: ServerLimits,
+    max_connections: usize,
+    max_inflight: usize,
+    keepalive_idle: Duration,
+    inflight: Arc<AtomicU64>,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    return_tx: Sender<Returned>,
+    return_rx: Receiver<Returned>,
+}
+
+impl Reactor {
+    fn run(&mut self) {
+        let mut events = [EpollEvent { events: 0, data: 0 }; 64];
+        loop {
+            let timeout = if self.conns.is_empty() { IDLE_TICK_MS } else { TICK_MS };
+            let n = self.epoll.wait(&mut events, timeout);
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let t0 = Instant::now();
+            for ev in events.iter().take(n) {
+                let token = ev.data;
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    token => self.conn_ready(token),
+                }
+            }
+            self.collect_returned();
+            self.sweep();
+            // Lag gauge: how long this iteration spent processing — the
+            // time a freshly-ready socket would have waited on the loop.
+            self.stats.reactor_lag_us.store(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        }
+        self.shutdown();
+    }
+
+    /// Accept every pending connection (level-triggered listener).
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    self.stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                    if self.stats.conns_open.load(Ordering::Relaxed)
+                        >= self.max_connections as u64
+                    {
+                        self.stats.admission_shed.fetch_add(1, Ordering::Relaxed);
+                        shed_connection(stream, 503, "server at connection capacity");
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    self.stats.conns_open.fetch_add(1, Ordering::Relaxed);
+                    self.park(stream, Vec::new(), false);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Register a connection with the event loop. On registration
+    /// failure the connection is dropped (and the open gauge released).
+    fn park(&mut self, stream: TcpStream, buf: Vec<u8>, reused: bool) {
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.epoll.add(stream.as_raw_fd(), token).is_err() {
+            self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        self.conns.insert(token, Parked { stream, buf, since: Instant::now(), reused });
+        // A pipelined client may have sent the next request's head
+        // along with the previous body: dispatch immediately, don't
+        // wait for more bytes that may never come.
+        if head_complete(&self.conns[&token].buf) {
+            self.dispatch(token);
+        }
+    }
+
+    /// A parked connection became readable: pull bytes until the head
+    /// completes or the socket runs dry.
+    fn conn_ready(&mut self, token: u64) {
+        let Some(parked) = self.conns.get_mut(&token) else {
+            // A stale event for a token already dispatched or closed.
+            return;
+        };
+        let mut chunk = [0u8; 8192];
+        let action = loop {
+            match parked.stream.read(&mut chunk) {
+                Ok(0) => break Action::Close,
+                Ok(n) => {
+                    parked.buf.extend_from_slice(&chunk[..n]);
+                    parked.since = Instant::now();
+                    if head_complete(&parked.buf) {
+                        break Action::Dispatch;
+                    }
+                    if parked.buf.len() > MAX_HEAD {
+                        break Action::TooBig;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break Action::Wait,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break Action::Close,
+            }
+        };
+        match action {
+            Action::Wait => {}
+            Action::Dispatch => self.dispatch(token),
+            Action::Close => self.close(token),
+            Action::TooBig => {
+                if let Some(parked) = self.unpark(token) {
+                    self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+                    let mut stream = parked.stream;
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                    let mut resp = HttpResponse::text(
+                        431,
+                        &format!("request head exceeds {MAX_HEAD} bytes"),
+                    );
+                    let _ = resp.write_to(&mut stream, false);
+                }
+            }
+        }
+    }
+
+    /// Deregister and take a parked connection.
+    fn unpark(&mut self, token: u64) -> Option<Parked> {
+        let parked = self.conns.remove(&token)?;
+        self.epoll.del(parked.stream.as_raw_fd());
+        Some(parked)
+    }
+
+    /// Silently close a parked connection (EOF, broken socket, idle
+    /// keep-alive expiry).
+    fn close(&mut self, token: u64) {
+        if self.unpark(token).is_some() {
+            self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A complete request head is buffered: admission-check, then hand
+    /// the connection (blocking mode, slowloris timeouts armed) plus
+    /// the buffered bytes to the worker pool.
+    fn dispatch(&mut self, token: u64) {
+        let Some(parked) = self.unpark(token) else { return };
+        if self.inflight.load(Ordering::Relaxed) >= self.max_inflight as u64 {
+            self.stats.admission_shed.fetch_add(1, Ordering::Relaxed);
+            self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+            // Shed always closes: body bytes may trail the head, so a
+            // kept-alive shed would leave the stream unframed.
+            shed_connection(parked.stream, 429, "server at in-flight request capacity");
+            return;
+        }
+        let mut stream = parked.stream;
+        if stream.set_nonblocking(false).is_err() {
+            self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let _ = stream.set_read_timeout(Some(self.limits.conn_timeout));
+        let _ = stream.set_write_timeout(Some(self.limits.conn_timeout));
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let job = Job {
+            stream,
+            prefix: parked.buf,
+            reused: parked.reused,
+            handler: self.handler.clone(),
+            limits: self.limits,
+            stats: Arc::clone(&self.stats),
+            inflight: Arc::clone(&self.inflight),
+            return_tx: self.return_tx.clone(),
+            wake: Arc::clone(&self.waker_tx),
+        };
+        match &self.pool {
+            Some(pool) => pool.execute(move || job.run()),
+            // Unreachable outside shutdown, but never leak the gauges.
+            None => {
+                self.inflight.fetch_sub(1, Ordering::Relaxed);
+                self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Re-park keep-alive connections the workers handed back.
+    fn collect_returned(&mut self) {
+        while let Ok(ret) = self.return_rx.try_recv() {
+            if self.stop.load(Ordering::SeqCst) || ret.stream.set_nonblocking(true).is_err() {
+                self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            self.park(ret.stream, ret.leftover, true);
+        }
+    }
+
+    /// Periodic reaping: idle keep-alive connections close silently
+    /// after `keepalive_idle`; connections mid-head (or fresh ones that
+    /// never sent a byte) get the threaded engine's `408` after
+    /// `conn_timeout` of stall.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let mut idle = Vec::new();
+        let mut slow = Vec::new();
+        for (&token, parked) in &self.conns {
+            let stalled = now.duration_since(parked.since);
+            if parked.reused && parked.buf.is_empty() {
+                if stalled >= self.keepalive_idle {
+                    idle.push(token);
+                }
+            } else if stalled >= self.limits.conn_timeout {
+                slow.push(token);
+            }
+        }
+        for token in idle {
+            self.close(token);
+        }
+        for token in slow {
+            if let Some(parked) = self.unpark(token) {
+                self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+                let mut stream = parked.stream;
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                let mut resp = failure_response(&ParseFailure::SlowClient, &self.limits);
+                let _ = resp.write_to(&mut stream, false);
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut sink = [0u8; 256];
+        loop {
+            match (&self.waker_rx).read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Orderly teardown: finish in-flight requests, then account for
+    /// every connection still owned here.
+    fn shutdown(&mut self) {
+        // Joining the pool first lets in-flight responses complete;
+        // their keep-alive returns then land in the channel below.
+        drop(self.pool.take());
+        while let Ok(_ret) = self.return_rx.try_recv() {
+            self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            self.close(token);
+        }
+    }
+}
+
+/// `\r\n\r\n` (or bare-LF `\n\n`) present — a complete request head.
+fn head_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+/// One dispatched request: runs on a worker thread, serves via the
+/// shared blocking path, and either hands the connection back to the
+/// reactor (keep-alive) or lets it drop (close).
+struct Job {
+    stream: TcpStream,
+    prefix: Vec<u8>,
+    reused: bool,
+    handler: AnyHandler,
+    limits: ServerLimits,
+    stats: Arc<NetStats>,
+    inflight: Arc<AtomicU64>,
+    return_tx: Sender<Returned>,
+    wake: Arc<UnixStream>,
+}
+
+impl Job {
+    fn run(self) {
+        let _inflight = InflightGuard(Arc::clone(&self.inflight));
+        let mut open = OpenGuard { stats: Arc::clone(&self.stats), armed: true };
+        if self.reused {
+            self.stats.keepalive_reuses.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut stream = self.stream;
+        let Ok(read_half) = stream.try_clone() else {
+            return;
+        };
+        let mut reader = ConnReader::with_prefix(read_half, self.prefix);
+        match serve_one(&mut stream, &mut reader, &self.handler, &self.limits, true) {
+            Served::KeepAlive => {
+                let leftover = reader.into_leftover();
+                if self.return_tx.send(Returned { stream, leftover }).is_ok() {
+                    // The reactor owns the open count from here on.
+                    open.armed = false;
+                    let _ = (&*self.wake).write_all(&[1]);
+                }
+            }
+            Served::Close => {}
+        }
+    }
+}
