@@ -15,19 +15,32 @@
 //! The gap between those two columns is what the snapshot cadence
 //! (`snapshot_every`) buys. Emits `BENCH_recovery.json` for CI.
 //!
+//! Two sharded-metadata-plane arms ride along:
+//!
+//! * **Sharded replay** — the same history split across N per-shard WAL
+//!   lineages, recovered serially vs scatter/gathered on a thread pool
+//!   (the boot path `open_durable_meta` takes). The ratio is the
+//!   restart-time win `meta_shards` buys.
+//! * **Snapshot pause** — worst single-commit latency with a snapshot
+//!   cadence on the path: the monolithic full-JSON snapshot serializes
+//!   the whole store inside the commit lock (pause grows with history),
+//!   the keyed segment store appends only the dirty delta (bounded).
+//!
 //! `--smoke` shrinks the workload for CI.
 
 use std::path::PathBuf;
 
 use dynostore::bench::{fmt_s, Table};
-use dynostore::durability::DurabilityOpts;
+use dynostore::durability::{shard_dir, DurabilityOpts};
 use dynostore::json::{obj, to_string_pretty, Value};
 use dynostore::metadata::ObjectPlacement;
-use dynostore::paxos::{MetaCommand, ReplicatedMeta};
+use dynostore::net::ThreadPool;
+use dynostore::paxos::{shard_seed, MetaCommand, ReplicatedMeta};
 use dynostore::util::now_ns;
 
 const REPLICAS: usize = 3;
 const SEED: u64 = 0xD1_5705;
+const SHARDS: usize = 4;
 
 fn bench_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir()
@@ -37,9 +50,13 @@ fn bench_dir(tag: &str) -> PathBuf {
 }
 
 fn put_cmd(i: u64) -> MetaCommand {
+    put_cmd_in("Bench", i)
+}
+
+fn put_cmd_in(user: &str, i: u64) -> MetaCommand {
     MetaCommand::PutObject {
-        caller: "Bench".into(),
-        collection: "/Bench".into(),
+        caller: user.into(),
+        collection: format!("/{user}"),
         name: format!("object-{i}"),
         size: 1 << 20,
         sha3: [(i % 251) as u8; 32],
@@ -111,6 +128,99 @@ fn run_case(log_len: usize) -> Row {
     }
 }
 
+struct ShardRow {
+    log_len: usize,
+    serial_s: f64,
+    parallel_s: f64,
+}
+
+/// The same history split across `SHARDS` per-shard WAL lineages
+/// (keyed segment stores, no snapshot cadence), recovered two ways:
+/// shard-by-shard, and scatter/gathered on the io pool — the boot path
+/// `open_durable_meta` takes.
+fn run_sharded_case(log_len: usize) -> ShardRow {
+    let dir = bench_dir(&format!("sharded-{log_len}"));
+    let per = (log_len / SHARDS).max(1);
+    let opts = |dir: &std::path::Path, i: usize| {
+        DurabilityOpts::new(shard_dir(dir, i)).snapshot_every(u64::MAX)
+    };
+    for i in 0..SHARDS {
+        let (meta, _) =
+            ReplicatedMeta::durable_keyed(REPLICAS, shard_seed(SEED, i), opts(&dir, i)).unwrap();
+        let user = format!("Bench{i}");
+        meta.submit(MetaCommand::CreateNamespace { user: user.clone() }).unwrap();
+        for j in 0..per as u64 {
+            meta.submit(put_cmd_in(&user, j)).unwrap();
+        }
+    }
+
+    // Serial replay: one shard at a time, summed wall clock.
+    let t0 = now_ns();
+    for i in 0..SHARDS {
+        let (meta, rec) =
+            ReplicatedMeta::durable_keyed(REPLICAS, shard_seed(SEED, i), opts(&dir, i)).unwrap();
+        assert_eq!(rec.wal_replayed, per as u64 + 1);
+        drop(meta);
+    }
+    let serial_s = (now_ns() - t0) as f64 / 1e9;
+
+    // Parallel replay: all shards scatter/gathered at once.
+    let pool = ThreadPool::new(SHARDS);
+    let par_dir = dir.clone();
+    let t0 = now_ns();
+    let recovered = pool
+        .scatter_gather(SHARDS, move |i| {
+            ReplicatedMeta::durable_keyed(
+                REPLICAS,
+                shard_seed(SEED, i),
+                DurabilityOpts::new(shard_dir(&par_dir, i)).snapshot_every(u64::MAX),
+            )
+        })
+        .unwrap();
+    let parallel_s = (now_ns() - t0) as f64 / 1e9;
+    for r in recovered {
+        let (_, rec) = r.unwrap();
+        assert_eq!(rec.wal_replayed, per as u64 + 1);
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    ShardRow { log_len: per * SHARDS, serial_s, parallel_s }
+}
+
+struct PauseRow {
+    mode: &'static str,
+    commits: usize,
+    total_s: f64,
+    max_commit_s: f64,
+}
+
+/// Worst single-commit latency with snapshots on the commit path.
+/// `keyed = false` is the monolithic full-JSON snapshot (pause grows
+/// with store size); `keyed = true` is the incremental segment store
+/// (pause bounded by the dirty set, here one object per commit).
+fn run_pause_case(keyed: bool, commits: usize, every: u64) -> PauseRow {
+    let mode = if keyed { "keyed-incremental" } else { "full-json" };
+    let dir = bench_dir(&format!("pause-{mode}-{commits}"));
+    let opts = DurabilityOpts::new(&dir).snapshot_every(every);
+    let (meta, _) = if keyed {
+        ReplicatedMeta::durable_keyed(REPLICAS, SEED, opts).unwrap()
+    } else {
+        ReplicatedMeta::durable(REPLICAS, SEED, opts).unwrap()
+    };
+    meta.submit(MetaCommand::CreateNamespace { user: "Bench".into() }).unwrap();
+    let mut max_commit_s = 0f64;
+    let t0 = now_ns();
+    for i in 0..commits as u64 {
+        let c0 = now_ns();
+        meta.submit(put_cmd(i)).unwrap();
+        max_commit_s = max_commit_s.max((now_ns() - c0) as f64 / 1e9);
+    }
+    let total_s = (now_ns() - t0) as f64 / 1e9;
+    drop(meta);
+    std::fs::remove_dir_all(&dir).ok();
+    PauseRow { mode, commits, total_s, max_commit_s }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let cases: &[usize] = if smoke { &[50, 200] } else { &[100, 500, 2000, 5000] };
@@ -147,6 +257,43 @@ fn main() {
         );
     }
 
+    // Sharded parallel-replay arm.
+    let shard_cases: &[usize] = if smoke { &[200] } else { &[2000, 8000] };
+    let shard_rows: Vec<ShardRow> = shard_cases.iter().map(|&n| run_sharded_case(n)).collect();
+    let mut table = Table::new(
+        &format!("Sharded replay: {SHARDS} shard WALs, serial vs scatter/gather"),
+        &["log len", "serial", "parallel", "speedup"],
+    );
+    for r in &shard_rows {
+        table.row(vec![
+            r.log_len.to_string(),
+            fmt_s(r.serial_s),
+            fmt_s(r.parallel_s),
+            format!("{:.2}x", r.serial_s / r.parallel_s.max(1e-9)),
+        ]);
+    }
+    table.print();
+
+    // Snapshot-pause arm: full-JSON vs keyed-incremental.
+    let pause_commits = if smoke { 300 } else { 3000 };
+    let pause_rows: Vec<PauseRow> = [false, true]
+        .iter()
+        .map(|&keyed| run_pause_case(keyed, pause_commits, 64))
+        .collect();
+    let mut table = Table::new(
+        "Snapshot pause: worst single-commit latency, snapshot_every=64",
+        &["sink", "commits", "total", "max commit (pause)"],
+    );
+    for r in &pause_rows {
+        table.row(vec![
+            r.mode.to_string(),
+            r.commits.to_string(),
+            fmt_s(r.total_s),
+            fmt_s(r.max_commit_s),
+        ]);
+    }
+    table.print();
+
     let json_rows: Vec<Value> = rows
         .iter()
         .map(|r| {
@@ -161,11 +308,37 @@ fn main() {
             ])
         })
         .collect();
+    let shard_json: Vec<Value> = shard_rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("log_len", r.log_len.into()),
+                ("shards", SHARDS.into()),
+                ("serial_replay_s", r.serial_s.into()),
+                ("parallel_replay_s", r.parallel_s.into()),
+                ("speedup", (r.serial_s / r.parallel_s.max(1e-9)).into()),
+            ])
+        })
+        .collect();
+    let pause_json: Vec<Value> = pause_rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("sink", r.mode.into()),
+                ("commits", r.commits.into()),
+                ("snapshot_every", 64u64.into()),
+                ("total_s", r.total_s.into()),
+                ("max_commit_s", r.max_commit_s.into()),
+            ])
+        })
+        .collect();
     let doc = obj(vec![
         ("bench", "recovery_replay".into()),
         ("smoke", smoke.into()),
         ("replicas", REPLICAS.into()),
         ("rows", Value::Arr(json_rows)),
+        ("sharded_replay", Value::Arr(shard_json)),
+        ("snapshot_pause", Value::Arr(pause_json)),
     ]);
     let path = "BENCH_recovery.json";
     match std::fs::write(path, to_string_pretty(&doc)) {

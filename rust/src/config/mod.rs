@@ -8,6 +8,7 @@
 //! {
 //!   "gateway_site": "chameleon-uc",
 //!   "metadata_replicas": 3,
+//!   "meta_shards": 1,
 //!   "policy": {"type": "erasure", "n": 10, "k": 7},
 //!   "weights": {"w1_mem": 0.5, "w2_fs": 0.5},
 //!   "engine": "swar-parallel",
@@ -62,6 +63,11 @@ pub struct Config {
     pub data_dir: Option<String>,
     /// Compact the WAL into a snapshot every N commits.
     pub snapshot_every: u64,
+    /// Independent metadata Paxos shards (1 = the legacy single-group
+    /// plane and on-disk layout, byte-identical; >1 partitions the
+    /// namespace keyspace with one WAL + keyed snapshot lineage per
+    /// shard under `data_dir/shard-<i>/`).
+    pub meta_shards: usize,
     /// Gateway request-body cap in MiB (bounds object size; a bogus
     /// `content-length` beyond it gets 413 instead of an allocation).
     pub max_body_mb: u64,
@@ -149,6 +155,7 @@ impl Default for Config {
             seed: 0xD1_5705,
             data_dir: None,
             snapshot_every: crate::durability::DEFAULT_SNAPSHOT_EVERY,
+            meta_shards: 1,
             max_body_mb: (crate::gateway::DEFAULT_GATEWAY_MAX_BODY >> 20) as u64,
             fault_specs: Vec::new(),
             chaos_seed: 0xC4A05,
@@ -191,6 +198,7 @@ impl Config {
             cfg.data_dir = Some(dir.to_string());
         }
         cfg.snapshot_every = v.opt_u64("snapshot_every", cfg.snapshot_every).max(1);
+        cfg.meta_shards = v.opt_u64("meta_shards", cfg.meta_shards as u64).max(1) as usize;
         cfg.max_body_mb = v.opt_u64("max_body_mb", cfg.max_body_mb).max(1);
         cfg.chaos_seed = v.opt_u64("chaos_seed", cfg.chaos_seed);
         let scrub = v.get("scrub");
@@ -272,7 +280,8 @@ impl Config {
             .weights(self.weights)
             .engine(self.engine)
             .seed(self.seed)
-            .snapshot_every(self.snapshot_every);
+            .snapshot_every(self.snapshot_every)
+            .meta_shards(self.meta_shards);
         if let Some(dir) = &self.data_dir {
             builder = builder.data_dir(dir);
         }
@@ -590,6 +599,41 @@ mod tests {
         let ds = cfg.build().unwrap();
         assert!(ds.recovery_report().unwrap().recovered());
         assert!(ds.meta.read(|s| Ok(s.collection_exists("/u"))).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_shards_parse_and_build_sharded() {
+        assert_eq!(Config::from_json("{}").unwrap().meta_shards, 1);
+        assert_eq!(Config::from_json("{\"meta_shards\": 0}").unwrap().meta_shards, 1);
+        assert_eq!(Config::from_json("{\"meta_shards\": 4}").unwrap().meta_shards, 4);
+
+        let dir = std::env::temp_dir()
+            .join(format!("dynostore-cfg-sharded-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = Config::from_json(&format!(
+            r#"{{"data_dir": "{}", "meta_shards": 4, "snapshot_every": 4,
+                "containers": [{{"name": "dc0"}}, {{"name": "dc1"}}]}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        let ds = cfg.build().unwrap();
+        assert!(ds.meta.is_durable());
+        assert_eq!(ds.meta.shard_count(), 4);
+        assert_eq!(ds.recovery_shard_reports().map(|r| r.len()), Some(4));
+        ds.register_user("u").unwrap();
+        drop(ds);
+        // Restart recovers the sharded plane; the layout marker pins
+        // the shard count against mismatched reopens.
+        let ds = cfg.build().unwrap();
+        assert!(ds.meta.read_at("/u", |s| Ok(s.collection_exists("/u"))).unwrap());
+        drop(ds);
+        let one = Config::from_json(&format!(
+            r#"{{"data_dir": "{}", "containers": [{{"name": "dc0"}}]}}"#,
+            dir.display()
+        ))
+        .unwrap();
+        assert!(one.build().is_err(), "reopening 4 shards as 1 must refuse");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -106,7 +106,7 @@ impl DynoStore {
             // the container registered + draining for a later retry.
             let stranded: usize = self
                 .meta
-                .read(|s| Ok(s.all_objects()))?
+                .all_objects()?
                 .iter()
                 .map(|m| m.placement.containers().iter().filter(|&&c| c == id).count())
                 .sum();
@@ -117,7 +117,7 @@ impl DynoStore {
             let channel = self.registry.remove(id)?;
             let late = self
                 .meta
-                .read(|s| Ok(s.all_objects()))?
+                .all_objects()?
                 .iter()
                 .any(|m| m.placement.containers().contains(&id));
             if !late {
@@ -153,7 +153,7 @@ impl DynoStore {
         loop {
             let holding: Vec<ObjectMeta> = self
                 .meta
-                .read(|s| Ok(s.all_objects()))?
+                .all_objects()?
                 .into_iter()
                 .filter(|m| m.placement.containers().contains(&id))
                 .collect();
@@ -244,7 +244,7 @@ impl DynoStore {
             last_spread = cur;
             // Snapshot the committed erasure placements for the planner.
             let mut objects: Vec<ObjectChunks> = Vec::new();
-            for m in self.meta.read(|s| Ok(s.all_objects()))? {
+            for m in self.meta.all_objects()? {
                 if let ObjectPlacement::Erasure { n, k, chunks } = &m.placement {
                     objects.push(ObjectChunks {
                         uuid: m.uuid.clone(),
@@ -268,7 +268,7 @@ impl DynoStore {
             }
             for (uuid, group) in by_uuid {
                 // Re-read the object: the plan was made on a snapshot.
-                let meta = match self.meta.read(|s| s.get_by_uuid(&uuid)) {
+                let meta = match self.meta.read_uuid(&uuid, |s| s.get_by_uuid(&uuid)) {
                     Ok(m) => m,
                     Err(_) => continue, // evicted since planning
                 };
@@ -465,7 +465,7 @@ impl DynoStore {
                 let _ = ch.delete(&chunk_key(&meta.sha3, meta.size, idx));
             }
         };
-        let fresh = match self.meta.read(|s| s.get_by_uuid(&meta.uuid)) {
+        let fresh = match self.meta.read_uuid(&meta.uuid, |s| s.get_by_uuid(&meta.uuid)) {
             Ok(m) => m,
             Err(_) => {
                 for m in moves.iter().filter(|m| landed.contains(&m.index)) {
@@ -756,8 +756,11 @@ impl DynoStore {
             // placement references them through a matching part (chunk
             // keys carry no container component, so an unconditional
             // delete could destroy a concurrent migration's copy).
-            let committed =
-                self.meta.read(|s| s.get_by_uuid(&meta.uuid)).map(|m| m.placement).ok();
+            let committed = self
+                .meta
+                .read_uuid(&meta.uuid, |s| s.get_by_uuid(&meta.uuid))
+                .map(|m| m.placement)
+                .ok();
             for (part, mvs) in &moved {
                 for &(idx, _, to) in mvs {
                     let referenced = matches!(
@@ -888,7 +891,7 @@ impl DynoStore {
             // Drop our copy unless the committed placement now
             // references the target (a concurrent actor landed there).
             let referenced = matches!(
-                self.meta.read(|s| s.get_by_uuid(&meta.uuid)),
+                self.meta.read_uuid(&meta.uuid, |s| s.get_by_uuid(&meta.uuid)),
                 Ok(ObjectMeta { placement: ObjectPlacement::Single { container }, .. })
                     if container == target.id
             );

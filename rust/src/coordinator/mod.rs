@@ -27,12 +27,16 @@ use std::sync::{Arc, Mutex};
 
 use crate::container::{ContainerChannel, DataContainer};
 use crate::crypto::TokenService;
-use crate::durability::{DurabilityOpts, RecoveryReport, DEFAULT_SNAPSHOT_EVERY};
+use crate::durability::{
+    self, DurabilityOpts, RecoveryReport, DEFAULT_SNAPSHOT_EVERY, SNAPSHOT_FILE, WAL_FILE,
+};
 use crate::net::ThreadPool;
 use crate::erasure::{
     Codec, ErasureConfig, GfBackend, ParallelBackend, PureRustBackend, SwarBackend,
 };
-use crate::paxos::{MetaCommand, ReplicatedMeta};
+use crate::json::Value;
+use crate::metadata::{namespace_owner, Ring};
+use crate::paxos::{shard_seed, MetaCommand, ReplicatedMeta, ShardedMeta};
 use crate::placement::{Placer, Weights};
 use crate::policy::ResiliencePolicy;
 use crate::registry::Registry;
@@ -186,7 +190,7 @@ impl Drop for StreamGuard<'_> {
 /// The assembled DynoStore deployment.
 pub struct DynoStore {
     pub registry: Registry,
-    pub meta: Arc<ReplicatedMeta>,
+    pub meta: Arc<ShardedMeta>,
     pub tokens: TokenService,
     pub placer: Placer,
     pub wan: Wan,
@@ -201,7 +205,11 @@ pub struct DynoStore {
     /// (disperse / erasure pull / repair fan out over the channels).
     pub(crate) io_pool: ThreadPool,
     /// What recovery found at build time (None = in-memory deployment).
+    /// The aggregate over all metadata shards; per-shard reports are in
+    /// `recovery_shards`.
     recovery: Option<RecoveryReport>,
+    /// Per-shard recovery reports, index == shard id (None = in-memory).
+    recovery_shards: Option<Vec<RecoveryReport>>,
     /// Where the anti-entropy scrubber's paced sweep resumes: the UUID
     /// of the last object verified (None = start of the keyspace).
     pub(crate) scrub_cursor: Mutex<Option<String>>,
@@ -220,6 +228,7 @@ pub struct Builder {
     io_workers: usize,
     data_dir: Option<std::path::PathBuf>,
     snapshot_every: u64,
+    meta_shards: usize,
 }
 
 impl Default for Builder {
@@ -236,6 +245,7 @@ impl Default for Builder {
             io_workers: 0, // auto-size to the host
             data_dir: None,
             snapshot_every: DEFAULT_SNAPSHOT_EVERY,
+            meta_shards: 1,
         }
     }
 }
@@ -303,6 +313,18 @@ impl Builder {
         self
     }
 
+    /// Number of independent metadata Paxos shards. The default (1)
+    /// keeps the legacy single-group plane and the legacy on-disk
+    /// layout byte-identical. With `n > 1` the namespace keyspace is
+    /// consistent-hash partitioned over `n` groups, each with its own
+    /// WAL + keyed snapshot lineage under `data_dir/shard-<i>/`; a
+    /// legacy single-shard data dir migrates forward automatically on
+    /// first sharded boot.
+    pub fn meta_shards(mut self, n: usize) -> Self {
+        self.meta_shards = n.max(1);
+        self
+    }
+
     /// Build an in-memory deployment. Panics if [`Builder::data_dir`]
     /// was set — durable builds can fail on I/O and must go through
     /// [`Builder::build_durable`].
@@ -335,15 +357,30 @@ impl Builder {
         } else {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16)
         };
-        let (meta, recovery) = match &self.data_dir {
+        // The pool exists before the metadata plane so sharded recovery
+        // can replay shard WALs on it in parallel.
+        let io_pool = ThreadPool::new(io_workers);
+        let (meta, recovery_shards) = match &self.data_dir {
             Some(dir) => {
-                let opts =
-                    DurabilityOpts::new(dir.clone()).snapshot_every(self.snapshot_every);
-                let (meta, report) = ReplicatedMeta::durable(self.replicas, self.seed, opts)?;
-                (meta, Some(report))
+                let (meta, reports) = open_durable_meta(
+                    dir,
+                    self.meta_shards,
+                    self.replicas,
+                    self.seed,
+                    self.snapshot_every,
+                    &io_pool,
+                )?;
+                (meta, Some(reports))
             }
-            None => (ReplicatedMeta::new(self.replicas, self.seed), None),
+            None => (ShardedMeta::memory(self.meta_shards, self.replicas, self.seed), None),
         };
+        let recovery = recovery_shards.as_ref().map(|reports| {
+            let mut agg = RecoveryReport::default();
+            for r in reports {
+                agg.absorb(r);
+            }
+            agg
+        });
         let report = recovery.clone().unwrap_or_default();
         Ok((
             DynoStore {
@@ -358,12 +395,161 @@ impl Builder {
                 engine: self.engine,
                 codecs: Mutex::new(HashMap::new()),
                 backend,
-                io_pool: ThreadPool::new(io_workers),
+                io_pool,
                 recovery,
+                recovery_shards,
                 scrub_cursor: Mutex::new(None),
             },
             report,
         ))
+    }
+}
+
+/// Open the durable metadata plane under `dir`.
+///
+/// `meta_shards == 1` keeps the legacy layout (one WAL + full-JSON
+/// snapshots at the dir root) byte-for-byte. With more shards, each
+/// shard's keyed lineage lives under `shard-<i>/` and recovery replays
+/// all shards in parallel on the I/O pool; a legacy layout migrates
+/// forward first when present. The `meta.layout` marker pins the shard
+/// count — reopening at any other count is refused (resharding in place
+/// is not supported).
+fn open_durable_meta(
+    dir: &std::path::Path,
+    meta_shards: usize,
+    replicas: usize,
+    seed: u64,
+    snapshot_every: u64,
+    io_pool: &ThreadPool,
+) -> Result<(Arc<ShardedMeta>, Vec<RecoveryReport>)> {
+    let layout = durability::read_layout(dir)?;
+    if meta_shards <= 1 {
+        if let Some(n) = layout {
+            if n > 1 {
+                return Err(Error::Config(format!(
+                    "data dir '{}' holds {n} metadata shards; set meta_shards = {n} \
+                     (resharding is not supported)",
+                    dir.display()
+                )));
+            }
+        }
+        let opts = DurabilityOpts::new(dir.to_path_buf()).snapshot_every(snapshot_every);
+        let (group, report) = ReplicatedMeta::durable(replicas, seed, opts)?;
+        return Ok((ShardedMeta::single(group), vec![report]));
+    }
+    match layout {
+        Some(n) if n != meta_shards => {
+            return Err(Error::Config(format!(
+                "data dir '{}' holds {n} metadata shards but meta_shards = {meta_shards} \
+                 (resharding is not supported)",
+                dir.display()
+            )));
+        }
+        Some(_) => {}
+        None => migrate_single_to_sharded(dir, meta_shards, seed, snapshot_every)?,
+    }
+    let results = {
+        let dir = dir.to_path_buf();
+        io_pool.scatter_gather(meta_shards, move |i| {
+            let opts = DurabilityOpts::new(durability::shard_dir(&dir, i))
+                .snapshot_every(snapshot_every);
+            ReplicatedMeta::durable_keyed(replicas, shard_seed(seed, i), opts)
+        })?
+    };
+    let mut groups = Vec::with_capacity(meta_shards);
+    let mut reports = Vec::with_capacity(meta_shards);
+    for res in results {
+        let (group, report) = res?;
+        groups.push(group);
+        reports.push(report);
+    }
+    Ok((ShardedMeta::from_groups(groups), reports))
+}
+
+/// One-time forward migration of a legacy single-group layout into
+/// `meta_shards` keyed per-shard stores: recover the legacy state
+/// (snapshot + full WAL replay), partition its keyed dump over the
+/// ring, and write one base file per shard. Ordering is crash-safe:
+/// shard bases land first (each atomically), the layout marker commits
+/// the migration, and only then are the legacy files archived as
+/// `*.pre-shard` — a crash before the marker leaves the legacy layout
+/// authoritative and the migration simply reruns.
+fn migrate_single_to_sharded(
+    dir: &std::path::Path,
+    meta_shards: usize,
+    seed: u64,
+    snapshot_every: u64,
+) -> Result<()> {
+    let has_legacy = dir.join(WAL_FILE).exists() || dir.join(SNAPSHOT_FILE).exists();
+    let ring = Ring::new(meta_shards);
+    let mut per_shard: Vec<Vec<(String, Value)>> = vec![Vec::new(); meta_shards];
+    if has_legacy {
+        // One replica is enough: the durable state is the log, not the
+        // in-memory copies.
+        let opts = DurabilityOpts::new(dir.to_path_buf()).snapshot_every(snapshot_every);
+        let (legacy, _report) = ReplicatedMeta::durable(1, seed, opts)?;
+        let dump = legacy.replica_store(0).kv_dump();
+        drop(legacy);
+        for (key, value) in dump {
+            let shard = shard_for_kv(&ring, &key, &value)?;
+            per_shard[shard].push((key, value));
+        }
+    }
+    let now = crate::util::unix_secs();
+    for (i, mut entries) in per_shard.into_iter().enumerate() {
+        // Shard 0 inherits the legacy RNG/counter so its UUID stream
+        // continues; fresh shards seed their own disjoint streams (when
+        // there is no legacy state, shard 0 seeds fresh too).
+        if i > 0 || !has_legacy {
+            let rng = crate::util::Rng::new(shard_seed(seed, i));
+            entries.push((
+                "sys:rng".to_string(),
+                Value::Arr(rng.state().iter().map(|w| format!("{w:016x}").into()).collect()),
+            ));
+            entries.push(("sys:uuid_counter".to_string(), 0u64.into()));
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        durability::kvstore::write_base(&durability::shard_dir(dir, i), 0, now, &entries)?;
+    }
+    durability::write_layout(dir, meta_shards)?;
+    if has_legacy {
+        for name in [WAL_FILE, SNAPSHOT_FILE] {
+            let from = dir.join(name);
+            if from.exists() {
+                if let Err(e) = std::fs::rename(&from, dir.join(format!("{name}.pre-shard"))) {
+                    crate::log_warn!(
+                        "shard migration: could not archive legacy '{}': {e}",
+                        from.display()
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Which shard a legacy keyed-dump entry belongs to — by the namespace
+/// owner of the collection the key (or its value) references.
+fn shard_for_kv(ring: &Ring, key: &str, value: &Value) -> Result<usize> {
+    if let Some(path) = key.strip_prefix("col:") {
+        Ok(ring.route(namespace_owner(path)))
+    } else if key.starts_with("obj:") || key.starts_with("up:") {
+        let col = value.get("collection").as_str().ok_or_else(|| {
+            Error::Json(format!("kv entry '{key}' lacks a collection during shard migration"))
+        })?;
+        Ok(ring.route(namespace_owner(col)))
+    } else if let Some(rest) =
+        key.strip_prefix("chain:").or_else(|| key.strip_prefix("epoch:"))
+    {
+        let i = rest
+            .rfind('/')
+            .ok_or_else(|| Error::Json(format!("bad kv key '{key}' during shard migration")))?;
+        Ok(ring.route(namespace_owner(&rest[..i])))
+    } else if key.starts_with("sys:") {
+        // The legacy RNG/counter stay with shard 0.
+        Ok(0)
+    } else {
+        Err(Error::Json(format!("unknown kv key '{key}' during shard migration")))
     }
 }
 
@@ -379,8 +565,17 @@ impl DynoStore {
 
     /// What recovery found at build time (None for in-memory
     /// deployments). `/health` surfaces this as the `recovered` flag.
+    /// With a sharded metadata plane this is the aggregate over shards;
+    /// see [`DynoStore::recovery_shard_reports`] for the breakdown.
     pub fn recovery_report(&self) -> Option<&RecoveryReport> {
         self.recovery.as_ref()
+    }
+
+    /// Per-shard recovery reports, index == shard id (None for
+    /// in-memory deployments). `/health` surfaces these in the
+    /// `durability.shards` array.
+    pub fn recovery_shard_reports(&self) -> Option<&[RecoveryReport]> {
+        self.recovery_shards.as_deref()
     }
 
     /// Name of the live GF(2^8) backend driving this deployment's
@@ -416,9 +611,10 @@ impl DynoStore {
     }
 
     /// Open (uncommitted) multipart uploads, read live from the
-    /// metadata plane — the `multipart_open` gauge.
+    /// metadata plane (summed across shards) — the `multipart_open`
+    /// gauge.
     pub fn open_upload_count(&self) -> u64 {
-        self.meta.read(|s| Ok(s.open_upload_count() as u64)).unwrap_or(0)
+        self.meta.open_upload_count() as u64
     }
 
     /// Create a user namespace and issue the user's OAuth-style token.

@@ -786,7 +786,7 @@ impl DynoStore {
         // Pre-flight existence/permission check so an unknown upload id
         // fails before any chunk I/O is spent.
         let caller = claims.subject.clone();
-        self.meta.read({
+        self.meta.read_upload(upload_id, {
             let caller = caller.clone();
             let upload_id = upload_id.to_string();
             move |s| s.multipart_parts(&caller, &upload_id).map(|_| ())
@@ -825,8 +825,8 @@ impl DynoStore {
             e
         })?;
         let caller = claims.subject.clone();
-        let upload_id = upload_id.to_string();
-        self.meta.read(move |s| s.multipart_parts(&caller, &upload_id))
+        let id = upload_id.to_string();
+        self.meta.read_upload(upload_id, move |s| s.multipart_parts(&caller, &id))
     }
 
     /// Complete a multipart upload: atomically (one Paxos command)
@@ -845,7 +845,7 @@ impl DynoStore {
         let caller = claims.subject.clone();
         // Read the recorded parts first so the drain precheck can
         // validate every container the final placement will name.
-        let state = self.meta.read({
+        let state = self.meta.read_upload(upload_id, {
             let caller = caller.clone();
             let upload_id = upload_id.to_string();
             move |s| s.multipart_parts(&caller, &upload_id)
@@ -1107,7 +1107,7 @@ impl DynoStore {
                             return Err(err);
                         }
                         retried = true;
-                        match self.meta.read(|s| s.get_by_uuid(&meta.uuid))?.placement {
+                        match self.meta.read_uuid(&meta.uuid, |s| s.get_by_uuid(&meta.uuid))?.placement {
                             ObjectPlacement::Single { container } if container != cid => {
                                 cid = container;
                             }
@@ -1402,10 +1402,12 @@ impl DynoStore {
             e
         })?;
         match version {
-            None => self.meta.read(|s| s.get_latest(&claims.subject, collection, name)),
-            Some(v) => {
-                self.meta.read(|s| s.get_version(&claims.subject, collection, name, v))
+            None => {
+                self.meta.read_at(collection, |s| s.get_latest(&claims.subject, collection, name))
             }
+            Some(v) => self
+                .meta
+                .read_at(collection, |s| s.get_version(&claims.subject, collection, name, v)),
         }
     }
 
@@ -1418,7 +1420,7 @@ impl DynoStore {
             self.metrics.auth_failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             e
         })?;
-        self.meta.read(|s| s.nonce_epoch(&claims.subject, collection, name))
+        self.meta.read_at(collection, |s| s.nonce_epoch(&claims.subject, collection, name))
     }
 
     /// Paginated object listing of a collection (the `/v1/collections`
@@ -1437,7 +1439,7 @@ impl DynoStore {
             e
         })?;
         self.meta
-            .read(|s| s.list_page(&claims.subject, collection, prefix, after, limit))
+            .read_at(collection, |s| s.list_page(&claims.subject, collection, prefix, after, limit))
     }
 
     /// Grant `perm` on collection `path` to `user` (the `/v1/grants`
@@ -1681,7 +1683,7 @@ impl DynoStore {
     /// visible to the caller)?
     pub fn exists(&self, token: &str, collection: &str, name: &str) -> Result<bool> {
         let claims = self.tokens.validate(token)?;
-        match self.meta.read(|s| s.get_latest(&claims.subject, collection, name)) {
+        match self.meta.read_at(collection, |s| s.get_latest(&claims.subject, collection, name)) {
             Ok(_) => Ok(true),
             Err(Error::NotFound(_)) => Ok(false),
             Err(e) => Err(e),
@@ -1781,7 +1783,7 @@ impl DynoStore {
     /// writes both fan out concurrently over the container channels.
     pub fn repair(&self) -> Result<RepairReport> {
         let mut report = RepairReport::default();
-        let objects = self.meta.read(|s| Ok(s.all_objects()))?;
+        let objects = self.meta.all_objects()?;
         // One active probe per container per pass (a remote probe is an
         // HTTP round trip — never pay it per object, let alone per chunk).
         let alive_by_id: HashMap<u32, bool> =

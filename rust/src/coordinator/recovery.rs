@@ -60,8 +60,30 @@ impl DynoStore {
     /// that recovered state.
     pub fn verify_recovered_placements(&self) -> Result<RecoveryVerifyReport> {
         let mut report = RecoveryVerifyReport::default();
-        let objects = self.meta.read(|s| Ok(s.all_objects()))?;
         let mut needs_repair = false;
+        // Shard by shard so a metadata shard whose recovery degraded
+        // (torn tail, poisoned WAL) only blocks verification of its own
+        // namespaces. The per-object loop stays serial: chunk probes
+        // and rebuilds inside `verify_erasure_unit` already fan out on
+        // the io_pool, and the pool's scatter/gather must not nest.
+        for shard in 0..self.meta.shard_count() {
+            let objects = self.meta.shard(shard).read(|s| Ok(s.all_objects()))?;
+            self.verify_object_set(objects, &mut report, &mut needs_repair)?;
+        }
+        if needs_repair {
+            report.repair_scheduled = true;
+            report.repair = self.repair()?;
+        }
+        Ok(report)
+    }
+
+    /// Verify one shard's recovered placements into the shared report.
+    fn verify_object_set(
+        &self,
+        objects: Vec<crate::metadata::ObjectMeta>,
+        report: &mut RecoveryVerifyReport,
+        needs_repair: &mut bool,
+    ) -> Result<()> {
         for meta in objects {
             report.objects += 1;
             match &meta.placement {
@@ -87,8 +109,8 @@ impl DynoStore {
                         *n,
                         *k,
                         chunks,
-                        &mut report,
-                        &mut needs_repair,
+                        report,
+                        needs_repair,
                     )? {
                         report.objects_lost += 1;
                     }
@@ -105,8 +127,8 @@ impl DynoStore {
                             part.n,
                             part.k,
                             &part.chunks,
-                            &mut report,
-                            &mut needs_repair,
+                            report,
+                            needs_repair,
                         )?;
                     }
                     if lost {
@@ -115,11 +137,7 @@ impl DynoStore {
                 }
             }
         }
-        if needs_repair {
-            report.repair_scheduled = true;
-            report.repair = self.repair()?;
-        }
-        Ok(report)
+        Ok(())
     }
 
     /// Verify one erasure unit (a whole Erasure object or one Striped

@@ -67,7 +67,7 @@ impl DynoStore {
     /// previous cycle. See the module docs for what "verify" means.
     pub fn scrub_cycle(&self, sample: usize) -> Result<ScrubReport> {
         let mut report = ScrubReport::default();
-        let objects = self.meta.read(|s| Ok(s.all_objects()))?;
+        let objects = self.meta.all_objects()?;
         if objects.is_empty() {
             report.wrapped = true;
             self.metrics.scrub_cycles.fetch_add(1, Ordering::Relaxed);

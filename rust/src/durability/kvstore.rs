@@ -1,0 +1,442 @@
+//! Keyed, incrementally-compacting local store for metadata snapshots.
+//!
+//! The legacy snapshot path serializes the *entire*
+//! [`crate::metadata::MetadataStore`] to one JSON document every
+//! `snapshot_every` commits — O(catalog) work on the commit path, which
+//! walls at the ROADMAP's millions-of-objects target. This store keeps
+//! the snapshot *keyed* (one entry per collection / object / chain /
+//! upload, see `MetadataStore::kv_dump`) and makes snapshotting
+//! incremental: each snapshot appends only the keys dirtied since the
+//! last one, as a CRC-framed *segment*, and a background thread folds
+//! accumulated segments into the base table.
+//!
+//! On-disk layout inside one shard directory:
+//!
+//! ```text
+//! kv.base        JSON {version, seq, taken_at, entries: [[k, v], ...]}
+//! kv.segments    CRC-framed segment log (reuses the WAL frame format);
+//!                each record: seq watermark + JSON [[k, v|null], ...]
+//! kv.segments.1  rotated segment log being folded into kv.base by the
+//!                background compactor (absent in steady state)
+//! ```
+//!
+//! Recovery folds `kv.base`, then `kv.segments.1` (if a compaction was
+//! interrupted), then `kv.segments`, newest value per key winning; a
+//! `null` value is a tombstone. Every segment record carries the commit
+//! sequence it covers, so the folded watermark tells WAL replay where
+//! to resume — exactly the crash-window discipline of the legacy
+//! full-JSON snapshot, per key instead of per catalog.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
+
+use crate::json::{obj, parse, to_string, Value};
+use crate::{Error, Result};
+
+use super::sweep_tmp;
+use super::wal::Wal;
+
+/// Base table file name inside a shard dir.
+pub const KV_BASE_FILE: &str = "kv.base";
+/// Active segment log file name.
+pub const KV_SEGMENTS_FILE: &str = "kv.segments";
+/// Rotated segment log awaiting background compaction.
+pub const KV_ROTATED_FILE: &str = "kv.segments.1";
+
+/// Fold segments into the base once this many have accumulated.
+const COMPACT_AFTER_SEGMENTS: u64 = 8;
+
+/// What [`KvStore::open`] found on disk.
+#[derive(Debug, Default)]
+pub struct KvRecovery {
+    /// Folded entries (base + rotated + active segments), key-sorted,
+    /// tombstones already dropped.
+    pub entries: Vec<(String, Value)>,
+    /// Commit watermark the folded state covers: WAL records with
+    /// `seq < watermark` are already folded in.
+    pub watermark: u64,
+    /// Any keyed state existed on disk (base or segments).
+    pub loaded: bool,
+    /// A torn segment tail was truncated during open.
+    pub truncated: bool,
+}
+
+/// The open keyed store, positioned to append delta segments.
+pub struct KvStore {
+    dir: PathBuf,
+    segments: Wal,
+    compactor: Option<JoinHandle<()>>,
+}
+
+impl KvStore {
+    /// Open (creating if absent) the keyed store in `dir`: sweep stale
+    /// `*.tmp` leftovers, fold base + rotated + active segments, and
+    /// position the segment log for appending.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<(KvStore, KvRecovery)> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        sweep_tmp(&dir)?;
+
+        let mut folded: BTreeMap<String, Value> = BTreeMap::new();
+        let mut watermark = 0u64;
+        let mut loaded = false;
+        let mut truncated = false;
+
+        if let Some((seq, entries)) = load_base(&dir)? {
+            watermark = seq;
+            loaded = true;
+            for (k, v) in entries {
+                folded.insert(k, v);
+            }
+        }
+        // A rotated log left behind means the compactor died mid-fold:
+        // its records still overlay the (old) base correctly, and the
+        // next compaction pass retires it.
+        let rotated = dir.join(KV_ROTATED_FILE);
+        if rotated.exists() {
+            let (_, rec) = Wal::open(&rotated)?;
+            truncated |= rec.truncated;
+            loaded |= !rec.records.is_empty();
+            for r in &rec.records {
+                apply_segment(&mut folded, &r.payload)?;
+                watermark = watermark.max(r.seq);
+            }
+        }
+        let seg_path = dir.join(KV_SEGMENTS_FILE);
+        loaded |= seg_path.exists();
+        let (segments, rec) = Wal::open(seg_path)?;
+        truncated |= rec.truncated;
+        for r in &rec.records {
+            apply_segment(&mut folded, &r.payload)?;
+            watermark = watermark.max(r.seq);
+        }
+
+        let store = KvStore { dir, segments, compactor: None };
+        let recovery = KvRecovery {
+            entries: folded.into_iter().collect(),
+            watermark,
+            loaded,
+            truncated,
+        };
+        Ok((store, recovery))
+    }
+
+    /// Append one delta segment covering commits up to `seq` and fsync
+    /// it. `None` values are tombstones. An *empty* delta is still a
+    /// valid (and necessary) segment: it advances the watermark so WAL
+    /// replay after the accompanying `wal.reset()` starts at the right
+    /// commit.
+    pub fn append_delta(&mut self, seq: u64, delta: &[(String, Option<Value>)]) -> Result<()> {
+        let entries: Vec<Value> = delta
+            .iter()
+            .map(|(k, v)| {
+                Value::Arr(vec![k.as_str().into(), v.clone().unwrap_or(Value::Null)])
+            })
+            .collect();
+        self.segments.append(seq, &to_string(&Value::Arr(entries)))
+    }
+
+    /// Fold accumulated segments into the base on a background thread
+    /// once enough have piled up. Rotation is the only foreground work:
+    /// the active segment log is renamed aside and a fresh one opened,
+    /// so commits never wait on the fold itself.
+    pub fn maybe_compact(&mut self) -> Result<()> {
+        if let Some(h) = &self.compactor {
+            if !h.is_finished() {
+                return Ok(()); // previous fold still running
+            }
+            let _ = self.compactor.take().unwrap().join();
+        }
+        if self.segments.len() < COMPACT_AFTER_SEGMENTS {
+            return Ok(());
+        }
+        let rotated = self.dir.join(KV_ROTATED_FILE);
+        if !rotated.exists() {
+            std::fs::rename(self.segments.path(), &rotated)?;
+            let (fresh, _) = Wal::open(self.dir.join(KV_SEGMENTS_FILE))?;
+            self.segments = fresh;
+        }
+        let dir = self.dir.clone();
+        self.compactor = Some(std::thread::spawn(move || {
+            if let Err(e) = compact_once(&dir) {
+                crate::log_warn!("kv compaction in {} failed: {e}", dir.display());
+            }
+        }));
+        Ok(())
+    }
+
+    /// Block until any in-flight background fold finishes (tests, and
+    /// orderly shutdown via `Drop`).
+    pub fn sync_compactor(&mut self) {
+        if let Some(h) = self.compactor.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Segments appended since the last rotation.
+    pub fn segment_count(&self) -> u64 {
+        self.segments.len()
+    }
+
+    /// True after a failed segment append: like the WAL, the store
+    /// refuses further appends until the process restarts.
+    pub fn is_poisoned(&self) -> bool {
+        self.segments.is_poisoned()
+    }
+}
+
+impl Drop for KvStore {
+    fn drop(&mut self) {
+        self.sync_compactor();
+    }
+}
+
+/// Write a full base table atomically (temp + fsync + rename + dir
+/// fsync — the same discipline as the legacy snapshot). Used by the
+/// compactor and by single-shard → sharded migration, which seeds each
+/// shard's base directly.
+pub fn write_base(
+    dir: &Path,
+    seq: u64,
+    taken_at: u64,
+    entries: &[(String, Value)],
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let rows: Vec<Value> = entries
+        .iter()
+        .map(|(k, v)| Value::Arr(vec![k.as_str().into(), v.clone()]))
+        .collect();
+    let doc = obj(vec![
+        ("version", 1u64.into()),
+        ("seq", seq.into()),
+        ("taken_at", taken_at.into()),
+        ("entries", Value::Arr(rows)),
+    ]);
+    let tmp = dir.join(format!("{KV_BASE_FILE}.tmp"));
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(to_string(&doc).as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, dir.join(KV_BASE_FILE))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Load the base table: `Ok(None)` when none exists yet; a garbled file
+/// is a hard error (atomic writes mean that only happens on real disk
+/// damage).
+fn load_base(dir: &Path) -> Result<Option<(u64, Vec<(String, Value)>)>> {
+    let path = dir.join(KV_BASE_FILE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let v = parse(&text)
+        .map_err(|e| Error::Json(format!("kv base {} unreadable: {e}", path.display())))?;
+    let seq = v.req_u64("seq")?;
+    let mut entries = Vec::new();
+    for row in v.get("entries").as_arr().unwrap_or(&[]) {
+        let pair = row.as_arr().ok_or_else(|| Error::Json("kv base row".into()))?;
+        if pair.len() != 2 {
+            return Err(Error::Json("kv base row arity".into()));
+        }
+        let key = pair[0].as_str().ok_or_else(|| Error::Json("kv base key".into()))?;
+        entries.push((key.to_string(), pair[1].clone()));
+    }
+    Ok(Some((seq, entries)))
+}
+
+/// Overlay one segment payload onto the folded map (tombstones remove).
+fn apply_segment(folded: &mut BTreeMap<String, Value>, payload: &str) -> Result<()> {
+    let v = parse(payload).map_err(|e| Error::Json(format!("kv segment unreadable: {e}")))?;
+    for row in v.as_arr().ok_or_else(|| Error::Json("kv segment shape".into()))? {
+        let pair = row.as_arr().ok_or_else(|| Error::Json("kv segment row".into()))?;
+        if pair.len() != 2 {
+            return Err(Error::Json("kv segment row arity".into()));
+        }
+        let key = pair[0].as_str().ok_or_else(|| Error::Json("kv segment key".into()))?;
+        match &pair[1] {
+            Value::Null => {
+                folded.remove(key);
+            }
+            v => {
+                folded.insert(key.to_string(), v.clone());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One background fold: base + rotated segments → new base, then retire
+/// the rotated log. Crash-safe at every step — recovery folds whatever
+/// combination of files survives, in the same order.
+fn compact_once(dir: &Path) -> Result<()> {
+    let rotated = dir.join(KV_ROTATED_FILE);
+    if !rotated.exists() {
+        return Ok(());
+    }
+    let mut folded: BTreeMap<String, Value> = BTreeMap::new();
+    let mut seq = 0u64;
+    if let Some((base_seq, entries)) = load_base(dir)? {
+        seq = base_seq;
+        for (k, v) in entries {
+            folded.insert(k, v);
+        }
+    }
+    let (_, rec) = Wal::open(&rotated)?;
+    for r in &rec.records {
+        apply_segment(&mut folded, &r.payload)?;
+        seq = seq.max(r.seq);
+    }
+    let entries: Vec<(String, Value)> = folded.into_iter().collect();
+    write_base(dir, seq, crate::util::unix_secs(), &entries)?;
+    std::fs::remove_file(&rotated)?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dynostore-kv-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn sv(s: &str) -> Value {
+        Value::Str(s.into())
+    }
+
+    #[test]
+    fn delta_segments_fold_on_reopen() {
+        let dir = tmpdir("fold");
+        {
+            let (mut kv, rec) = KvStore::open(&dir).unwrap();
+            assert!(!rec.loaded);
+            assert_eq!(rec.watermark, 0);
+            kv.append_delta(2, &[("a".into(), Some(sv("1"))), ("b".into(), Some(sv("2")))])
+                .unwrap();
+            kv.append_delta(5, &[("a".into(), Some(sv("3"))), ("b".into(), None)])
+                .unwrap();
+        }
+        let (_, rec) = KvStore::open(&dir).unwrap();
+        assert!(rec.loaded);
+        assert_eq!(rec.watermark, 5);
+        // Newest value wins; the tombstone removed "b".
+        assert_eq!(rec.entries, vec![("a".to_string(), sv("3"))]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_delta_still_advances_the_watermark() {
+        let dir = tmpdir("watermark");
+        {
+            let (mut kv, _) = KvStore::open(&dir).unwrap();
+            kv.append_delta(7, &[]).unwrap();
+        }
+        let (_, rec) = KvStore::open(&dir).unwrap();
+        assert_eq!(rec.watermark, 7);
+        assert!(rec.entries.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_segment_tail_is_truncated() {
+        let dir = tmpdir("torn");
+        {
+            let (mut kv, _) = KvStore::open(&dir).unwrap();
+            kv.append_delta(1, &[("a".into(), Some(sv("1")))]).unwrap();
+            kv.append_delta(2, &[("a".into(), Some(sv("2")))]).unwrap();
+        }
+        let path = dir.join(KV_SEGMENTS_FILE);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        let (_, rec) = KvStore::open(&dir).unwrap();
+        assert!(rec.truncated);
+        assert_eq!(rec.watermark, 1, "torn second segment dropped");
+        assert_eq!(rec.entries, vec![("a".to_string(), sv("1"))]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_folds_into_base_and_retires_rotated_log() {
+        let dir = tmpdir("compact");
+        {
+            let (mut kv, _) = KvStore::open(&dir).unwrap();
+            for i in 0..COMPACT_AFTER_SEGMENTS {
+                kv.append_delta(i + 1, &[(format!("k{i}"), Some(sv("v")))]).unwrap();
+            }
+            kv.maybe_compact().unwrap();
+            kv.sync_compactor();
+            assert_eq!(kv.segment_count(), 0, "active log rotated away");
+            assert!(!dir.join(KV_ROTATED_FILE).exists(), "rotated log retired");
+            // New deltas land in the fresh log and overlay the base.
+            kv.append_delta(9, &[("k0".into(), None)]).unwrap();
+        }
+        let (seq, base) = load_base(&dir).unwrap().unwrap();
+        assert_eq!(seq, COMPACT_AFTER_SEGMENTS);
+        assert_eq!(base.len(), COMPACT_AFTER_SEGMENTS as usize);
+        let (_, rec) = KvStore::open(&dir).unwrap();
+        assert_eq!(rec.watermark, 9);
+        assert_eq!(
+            rec.entries.len(),
+            COMPACT_AFTER_SEGMENTS as usize - 1,
+            "post-compaction tombstone applies over the folded base"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn interrupted_compaction_recovers_from_rotated_log() {
+        let dir = tmpdir("interrupted");
+        {
+            let (mut kv, _) = KvStore::open(&dir).unwrap();
+            kv.append_delta(1, &[("a".into(), Some(sv("old")))]).unwrap();
+            kv.append_delta(2, &[("a".into(), Some(sv("new")))]).unwrap();
+        }
+        // Simulate a crash right after rotation, before the fold ran.
+        std::fs::rename(dir.join(KV_SEGMENTS_FILE), dir.join(KV_ROTATED_FILE)).unwrap();
+        let (kv, rec) = KvStore::open(&dir).unwrap();
+        assert_eq!(rec.watermark, 2);
+        assert_eq!(rec.entries, vec![("a".to_string(), sv("new"))]);
+        drop(kv);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_tmp_files_are_swept_at_open() {
+        let dir = tmpdir("sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(format!("{KV_BASE_FILE}.tmp")), b"torn").unwrap();
+        std::fs::write(dir.join("meta.snapshot.tmp"), b"torn").unwrap();
+        std::fs::write(dir.join("keepme.json"), b"{}").unwrap();
+        let (_, _) = KvStore::open(&dir).unwrap();
+        assert!(!dir.join(format!("{KV_BASE_FILE}.tmp")).exists());
+        assert!(!dir.join("meta.snapshot.tmp").exists());
+        assert!(dir.join("keepme.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn garbled_base_is_a_hard_error() {
+        let dir = tmpdir("garbled");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(KV_BASE_FILE), b"not json").unwrap();
+        assert!(KvStore::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

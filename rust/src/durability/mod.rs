@@ -24,21 +24,105 @@
 //! snapshot already covers (commands are not idempotent — a replayed
 //! `PutObject` would mint a new version).
 //!
-//! Data-dir layout:
+//! The sharded metadata plane (ISSUE 9) adds a third piece:
+//!
+//! * [`kvstore::KvStore`] — a keyed, incrementally-compacting snapshot
+//!   store. Instead of serializing the whole catalog per snapshot, each
+//!   snapshot appends only the keys dirtied since the last one, and a
+//!   background thread folds segments into the base table.
+//!
+//! Data-dir layouts:
 //!
 //! ```text
-//! <data_dir>/
+//! <data_dir>/                      meta_shards = 1 (legacy, unchanged)
 //!   wal.log        length+CRC-framed command log since the last snapshot
 //!   meta.snapshot  JSON: {version, commits, taken_at, store: {...}}
+//!
+//! <data_dir>/                      meta_shards = N > 1
+//!   meta.layout    JSON: {version, shards: N} — shard count pin
+//!   shard-<i>/     one durability lineage per Paxos group
+//!     wal.log          that shard's command log
+//!     kv.base          keyed base table
+//!     kv.segments      incremental delta segments since the base
 //! ```
 
+pub mod kvstore;
 pub mod snapshot;
 pub mod wal;
 
+pub use kvstore::{KvRecovery, KvStore, KV_BASE_FILE, KV_SEGMENTS_FILE};
 pub use snapshot::{SnapshotInfo, SNAPSHOT_FILE};
 pub use wal::{Wal, WalRecord, WalRecovery, WAL_FILE};
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Shard-count pin written at the data-dir root for sharded layouts.
+pub const LAYOUT_FILE: &str = "meta.layout";
+
+/// The durability directory of metadata shard `i` under `data_dir`.
+pub fn shard_dir(data_dir: &Path, shard: usize) -> PathBuf {
+    data_dir.join(format!("shard-{shard}"))
+}
+
+/// Remove stale `*.tmp` files left by a crash between temp-write and
+/// rename. Called per directory at open — the legacy layout and every
+/// shard directory alike — so an interrupted snapshot or base write
+/// can't accumulate dead bytes forever. Returns how many were swept.
+pub fn sweep_tmp(dir: &Path) -> Result<usize> {
+    let mut swept = 0;
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(e.into()),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        if name.to_string_lossy().ends_with(".tmp") && entry.file_type()?.is_file() {
+            std::fs::remove_file(entry.path())?;
+            swept += 1;
+        }
+    }
+    Ok(swept)
+}
+
+/// Read the shard-count pin, if one exists.
+pub fn read_layout(data_dir: &Path) -> Result<Option<usize>> {
+    let path = data_dir.join(LAYOUT_FILE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let v = crate::json::parse(&text)
+        .map_err(|e| Error::Json(format!("layout {} unreadable: {e}", path.display())))?;
+    Ok(Some(v.req_u64("shards")? as usize))
+}
+
+/// Pin the shard count (atomic write). Once written, opening the same
+/// data dir with a different `meta_shards` is a hard error — resharding
+/// in place is not supported.
+pub fn write_layout(data_dir: &Path, shards: usize) -> Result<()> {
+    std::fs::create_dir_all(data_dir)?;
+    let doc = crate::json::obj(vec![
+        ("version", 1u64.into()),
+        ("shards", (shards as u64).into()),
+    ]);
+    let tmp = data_dir.join(format!("{LAYOUT_FILE}.tmp"));
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(crate::json::to_string(&doc).as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, data_dir.join(LAYOUT_FILE))?;
+    if let Ok(d) = std::fs::File::open(data_dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
 
 /// Snapshot cadence when the deployment doesn't configure one: compact
 /// the WAL every 64 committed commands.
@@ -87,5 +171,79 @@ impl RecoveryReport {
     /// `recovered` flag).
     pub fn recovered(&self) -> bool {
         self.snapshot_loaded || self.wal_records > 0
+    }
+
+    /// Fold another shard's report into this one (the aggregate the
+    /// legacy single-report surfaces keep exposing).
+    pub fn absorb(&mut self, other: &RecoveryReport) {
+        self.snapshot_loaded |= other.snapshot_loaded;
+        self.snapshot_commits += other.snapshot_commits;
+        self.wal_records += other.wal_records;
+        self.wal_replayed += other.wal_replayed;
+        self.wal_truncated |= other.wal_truncated;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dynostore-dur-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn sweep_tmp_removes_only_stale_temp_files() {
+        let dir = tmpdir("sweep");
+        assert_eq!(sweep_tmp(&dir).unwrap(), 0, "missing dir sweeps nothing");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.snapshot.tmp"), b"torn half-write").unwrap();
+        std::fs::write(dir.join("kv.base.tmp"), b"torn half-write").unwrap();
+        std::fs::write(dir.join("meta.snapshot"), b"{}").unwrap();
+        std::fs::write(dir.join("wal.log"), b"").unwrap();
+        assert_eq!(sweep_tmp(&dir).unwrap(), 2);
+        assert!(dir.join("meta.snapshot").exists());
+        assert!(dir.join("wal.log").exists());
+        assert!(!dir.join("meta.snapshot.tmp").exists());
+        assert!(!dir.join("kv.base.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn layout_pin_roundtrip() {
+        let dir = tmpdir("layout");
+        assert_eq!(read_layout(&dir).unwrap(), None);
+        write_layout(&dir, 4).unwrap();
+        assert_eq!(read_layout(&dir).unwrap(), Some(4));
+        assert!(!dir.join(format!("{LAYOUT_FILE}.tmp")).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_dirs_are_stable_names() {
+        let root = PathBuf::from("/data");
+        assert_eq!(shard_dir(&root, 0), PathBuf::from("/data/shard-0"));
+        assert_eq!(shard_dir(&root, 3), PathBuf::from("/data/shard-3"));
+    }
+
+    #[test]
+    fn recovery_report_aggregates_across_shards() {
+        let mut agg = RecoveryReport::default();
+        assert!(!agg.recovered());
+        agg.absorb(&RecoveryReport {
+            snapshot_loaded: true,
+            snapshot_commits: 5,
+            wal_records: 2,
+            wal_replayed: 2,
+            wal_truncated: false,
+        });
+        agg.absorb(&RecoveryReport { wal_truncated: true, ..Default::default() });
+        assert!(agg.recovered());
+        assert_eq!(agg.snapshot_commits, 5);
+        assert_eq!(agg.wal_records, 2);
+        assert!(agg.wal_truncated);
     }
 }

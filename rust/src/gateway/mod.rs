@@ -287,6 +287,15 @@ fn metrics(store: &Arc<DynoStore>, net: &NetView) -> HttpResponse {
     // Live gauge rather than a counter: open uploads are replicated
     // metadata, so the value is correct across restarts too.
     fields.push(("multipart_open", store.open_upload_count().into()));
+    // Metadata-plane sharding: how many Paxos groups, and how many
+    // commands each sequenced since this process started (the skew
+    // across shards is the ring-balance signal).
+    fields.push(("meta_shards", (store.meta.shard_count() as u64).into()));
+    let shard_keys: Vec<String> =
+        (0..store.meta.shard_count()).map(|i| format!("meta_commits_shard{i}")).collect();
+    for (i, key) in shard_keys.iter().enumerate() {
+        fields.push((key.as_str(), store.meta.shard_commits(i).into()));
+    }
     // Connection-plane counters from the serving engine (flat keys:
     // conns_open, conns_accepted, keepalive_reuses, admission_shed,
     // reactor_lag_us — gauges and counters per NetStats docs).
@@ -306,6 +315,26 @@ fn health(store: &Arc<DynoStore>, net: &NetView) -> HttpResponse {
         .map(|(t, n)| (t, Value::from(n)))
         .collect();
     let durability = if store.meta.is_durable() {
+        // Backward-compatible aggregates (wal_len summed, last_snapshot
+        // the oldest shard, recovered OR-ed) plus the per-shard
+        // breakdown: one entry per metadata Paxos group, index == shard
+        // id, so an operator can see which shard degraded.
+        let shard_reports = store.recovery_shard_reports().unwrap_or(&[]);
+        let shards: Vec<Value> = (0..store.meta.shard_count())
+            .map(|i| {
+                obj(vec![
+                    ("shard", (i as u64).into()),
+                    ("wal_len", store.meta.shard(i).wal_len().into()),
+                    ("last_snapshot", store.meta.shard(i).last_snapshot_unix().into()),
+                    ("committed_seq", store.meta.shard(i).committed_seq().into()),
+                    ("commits", store.meta.shard_commits(i).into()),
+                    (
+                        "recovered",
+                        shard_reports.get(i).map(|r| r.recovered()).unwrap_or(false).into(),
+                    ),
+                ])
+            })
+            .collect();
         obj(vec![
             ("enabled", true.into()),
             ("wal_len", store.meta.wal_len().into()),
@@ -318,6 +347,8 @@ fn health(store: &Arc<DynoStore>, net: &NetView) -> HttpResponse {
                     .unwrap_or(false)
                     .into(),
             ),
+            ("meta_shards", (store.meta.shard_count() as u64).into()),
+            ("shards", Value::Arr(shards)),
         ])
     } else {
         obj(vec![("enabled", false.into())])
@@ -633,6 +664,10 @@ mod tests {
         assert_eq!(m.status, 200);
         let v = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
         assert_eq!(v.req_u64("pushes").unwrap(), 1);
+        // Metadata-plane sharding counters: one group by default, and
+        // its commit counter saw the register + push commands.
+        assert_eq!(v.req_u64("meta_shards").unwrap(), 1);
+        assert!(v.req_u64("meta_commits_shard0").unwrap() >= 2);
 
         let h = client.get("/health", &[]).unwrap();
         let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();

@@ -104,12 +104,15 @@ fn print_usage() {
          \x20 serve    --config FILE [--addr 127.0.0.1:8080] [--workers 8]\n\
          \x20          [--engine pure-rust|swar|swar-parallel|pjrt]\n\
          \x20          [--net-engine reactor|threaded]\n\
-         \x20          [--data-dir DIR] [--snapshot-every N] [--max-body-mb MB]\n\
+         \x20          [--data-dir DIR] [--snapshot-every N] [--meta-shards N]\n\
+         \x20          [--max-body-mb MB]\n\
          \x20          [--part-size-mb MB]\n\
          \x20          (--net-engine picks the connection core: epoll reactor\n\
          \x20           with keep-alive, or the portable threaded loop)\n\
          \x20          (--data-dir persists the metadata plane: WAL + snapshots;\n\
          \x20           a restarted serve recovers every acknowledged object)\n\
+         \x20          (--meta-shards runs N independent metadata Paxos groups\n\
+         \x20           partitioned by namespace; 1 = legacy single group)\n\
          \x20 agent    --config FILE [--addr 127.0.0.1:9100] [--workers 4]\n\
          \x20          (container agent: serves one data container over HTTP;\n\
          \x20           gateways attach it via an \"endpoint\" container entry)\n\
@@ -173,6 +176,12 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
         config.snapshot_every = every
             .parse::<u64>()
             .map_err(|_| "--snapshot-every must be a number".to_string())?
+            .max(1);
+    }
+    if let Some(shards) = flags.get("meta-shards") {
+        config.meta_shards = shards
+            .parse::<usize>()
+            .map_err(|_| "--meta-shards must be a number".to_string())?
             .max(1);
     }
     if let Some(cap) = flags.get("max-body-mb") {
@@ -250,10 +259,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
         None
     };
     dynostore::log_info!(
-        "dynostore gateway on {} ({} containers, {} metadata replicas, policy {:?}, \
-         engine {}, net {})",
+        "dynostore gateway on {} ({} containers, {} metadata shards x {} replicas, \
+         policy {:?}, engine {}, net {})",
         server.addr(),
         store.registry.len(),
+        store.meta.shard_count(),
         store.meta.replica_count(),
         store.default_policy,
         store.backend_name(),

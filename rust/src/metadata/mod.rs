@@ -9,9 +9,11 @@
 //! strong read-after-write guarantee of §IV-B.
 
 mod namespace;
+mod ring;
 mod store;
 
-pub use namespace::{normalize_path, parent_path, validate_name};
+pub use namespace::{namespace_owner, normalize_path, parent_path, validate_name};
+pub use ring::Ring;
 pub use store::{
     composite_sha3, MetadataStore, ObjectMeta, ObjectPage, ObjectPlacement, PartManifest,
     Permission, UploadState, DEFAULT_RETENTION_SECS,

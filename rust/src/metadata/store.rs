@@ -1,6 +1,6 @@
 //! The metadata store: object records, version chains, ACLs, GC.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Mutex;
 
 use crate::json::{obj, Value};
@@ -322,6 +322,12 @@ struct Inner {
     uploads: HashMap<String, UploadState>,
     rng: Option<Rng>,
     uuid_counter: u64,
+    /// Keys touched since the last [`MetadataStore::kv_delta`] drain —
+    /// what an incremental snapshot must persist. Never serialized.
+    /// Tracking is a superset by design: marking a key whose value is
+    /// unchanged just rewrites the same bytes, so over-marking is
+    /// harmless while under-marking would lose data.
+    dirty: BTreeSet<String>,
 }
 
 /// An in-flight S3-style multipart upload: parts arrive (possibly out
@@ -354,6 +360,13 @@ impl MetadataStore {
         MetadataStore {
             inner: Mutex::new(Inner {
                 rng: Some(Rng::new(seed)),
+                // Pre-mark the sys keys: the very first keyed delta a
+                // fresh store emits must carry the RNG state and UUID
+                // counter, or a recovery from segments alone could not
+                // rebuild the deterministic UUID sequence.
+                dirty: [KSYS_RNG.to_string(), KSYS_COUNTER.to_string()]
+                    .into_iter()
+                    .collect(),
                 ..Default::default()
             }),
         }
@@ -373,6 +386,7 @@ impl MetadataStore {
             path.clone(),
             Collection { owner: user.to_string(), acl: HashMap::new() },
         );
+        inner.dirty.insert(kcol(&path));
         Ok(path)
     }
 
@@ -394,6 +408,7 @@ impl MetadataStore {
             path.clone(),
             Collection { owner: namespace_owner(&path).to_string(), acl: HashMap::new() },
         );
+        inner.dirty.insert(kcol(&path));
         Ok(path)
     }
 
@@ -422,6 +437,7 @@ impl MetadataStore {
         if !perms.contains(&perm) {
             perms.push(perm);
         }
+        inner.dirty.insert(kcol(&path));
         Ok(())
     }
 
@@ -441,6 +457,7 @@ impl MetadataStore {
         if let Some(perms) = col.acl.get_mut(user) {
             perms.retain(|&p| p != perm);
         }
+        inner.dirty.insert(kcol(&path));
         Ok(())
     }
 
@@ -496,6 +513,7 @@ impl MetadataStore {
                 parts: BTreeMap::new(),
             },
         );
+        inner.dirty.insert(kup(&upload_id));
         Ok(upload_id)
     }
 
@@ -520,7 +538,9 @@ impl MetadataStore {
             .clone();
         check_perm(&inner, caller, &collection, Permission::Write)?;
         let up = inner.uploads.get_mut(upload_id).expect("checked above");
-        Ok(up.parts.insert(part.number, part))
+        let displaced = up.parts.insert(part.number, part);
+        inner.dirty.insert(kup(upload_id));
+        Ok(displaced)
     }
 
     /// Snapshot of an open upload (for resume: which parts are already
@@ -557,6 +577,7 @@ impl MetadataStore {
             }
         }
         let up = inner.uploads.remove(upload_id).expect("checked above");
+        inner.dirty.insert(kup(upload_id));
         let parts: Vec<PartManifest> = up.parts.into_values().collect();
         let size = parts.iter().map(|p| p.size).sum();
         let sha3 = composite_sha3(&parts);
@@ -584,6 +605,7 @@ impl MetadataStore {
             check_perm(&inner, caller, &up.collection, Permission::Write)?;
         }
         let up = inner.uploads.remove(upload_id).expect("checked above");
+        inner.dirty.insert(kup(upload_id));
         Ok(up.parts.into_values().collect())
     }
 
@@ -702,7 +724,12 @@ impl MetadataStore {
         // Retire this name's (epoch, version) space: a future re-push
         // restarts at version 0, and only the bumped epoch keeps its
         // encryption nonces disjoint from the evicted versions'.
+        inner.dirty.insert(kchain(&chain_key.0, &chain_key.1));
+        inner.dirty.insert(kepoch(&chain_key.0, &chain_key.1));
         *inner.nonce_epochs.entry(chain_key).or_insert(0) += 1;
+        for u in &chain {
+            inner.dirty.insert(kobj(u));
+        }
         Ok(chain.iter().filter_map(|u| inner.objects.remove(u)).collect())
     }
 
@@ -744,6 +771,8 @@ impl MetadataStore {
                 if let Some(chain) = inner.chains.get_mut(&key) {
                     chain.retain(|u| u != &uuid);
                 }
+                inner.dirty.insert(kobj(&uuid));
+                inner.dirty.insert(kchain(&key.0, &key.1));
                 out.push(meta);
             }
         }
@@ -791,6 +820,7 @@ impl MetadataStore {
             }
         }
         meta.placement = placement;
+        inner.dirty.insert(kobj(uuid));
         Ok(())
     }
 
@@ -994,8 +1024,280 @@ impl MetadataStore {
                 uploads,
                 rng: Some(Rng::from_state(state)),
                 uuid_counter: v.req_u64("uuid_counter")?,
+                dirty: BTreeSet::new(),
             }),
         })
+    }
+
+    /// Drain the dirty-key set into a keyed delta: for each key touched
+    /// since the last drain, its current value (`Some`) or a tombstone
+    /// (`None`) when the record no longer exists. One delta is one
+    /// incremental snapshot segment — the durability plane persists it
+    /// via [`crate::durability::KvStore::append_delta`]. If persisting
+    /// fails, re-arm the keys with [`Self::kv_mark_dirty`] so the next
+    /// snapshot attempt retries them.
+    pub fn kv_delta(&self) -> Vec<(String, Option<Value>)> {
+        let mut inner = self.inner.lock().unwrap();
+        let keys = std::mem::take(&mut inner.dirty);
+        keys.into_iter()
+            .map(|k| {
+                let v = kv_current(&inner, &k);
+                (k, v)
+            })
+            .collect()
+    }
+
+    /// Re-arm keys whose delta segment failed to persist: they stay
+    /// dirty and ride the next [`Self::kv_delta`] drain.
+    pub fn kv_mark_dirty(&self, keys: impl IntoIterator<Item = String>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.dirty.extend(keys);
+    }
+
+    /// Forget dirty-key tracking. Legacy full-JSON snapshots persist the
+    /// whole store, so once one lands the marks are moot — clearing them
+    /// keeps the set from growing unboundedly on deployments that never
+    /// drain a delta.
+    pub fn kv_clear_dirty(&self) {
+        self.inner.lock().unwrap().dirty.clear();
+    }
+
+    /// Full keyed dump of the store — the base table written by shard
+    /// migration and kvstore compaction. Key-sorted, deterministic.
+    pub fn kv_dump(&self) -> Vec<(String, Value)> {
+        let inner = self.inner.lock().unwrap();
+        let mut keys: BTreeSet<String> = BTreeSet::new();
+        keys.insert(KSYS_RNG.to_string());
+        keys.insert(KSYS_COUNTER.to_string());
+        keys.extend(inner.collections.keys().map(|p| kcol(p)));
+        keys.extend(inner.objects.keys().map(|u| kobj(u)));
+        keys.extend(inner.chains.keys().map(|k| kchain(&k.0, &k.1)));
+        keys.extend(inner.nonce_epochs.keys().map(|k| kepoch(&k.0, &k.1)));
+        keys.extend(inner.uploads.keys().map(|id| kup(id)));
+        keys.into_iter()
+            .map(|k| {
+                let v = kv_current(&inner, &k).expect("enumerated keys are live");
+                (k, v)
+            })
+            .collect()
+    }
+
+    /// Rebuild a store from keyed entries ([`Self::kv_dump`], or a
+    /// folded base + segment recovery). The `sys:` keys are mandatory:
+    /// without the RNG state and UUID counter a restored store could
+    /// not continue the deterministic UUID sequence replicated replay
+    /// depends on.
+    pub fn restore_from_kv(entries: &[(String, Value)]) -> Result<MetadataStore> {
+        let mut inner = Inner::default();
+        let mut rng_state: Option<[u64; 4]> = None;
+        let mut counter: Option<u64> = None;
+        for (key, v) in entries {
+            if let Some(path) = key.strip_prefix("col:") {
+                let mut acl = HashMap::new();
+                for entry in v.get("acl").as_arr().unwrap_or(&[]) {
+                    let perms = entry
+                        .get("perms")
+                        .as_arr()
+                        .ok_or_else(|| Error::Json("acl perms".into()))?
+                        .iter()
+                        .map(|p| {
+                            Permission::parse(
+                                p.as_str().ok_or_else(|| Error::Json("perm".into()))?,
+                            )
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    acl.insert(entry.req_str("user")?.to_string(), perms);
+                }
+                inner.collections.insert(
+                    path.to_string(),
+                    Collection { owner: v.req_str("owner")?.to_string(), acl },
+                );
+            } else if key.strip_prefix("obj:").is_some() {
+                let meta = ObjectMeta::from_json(v)?;
+                inner.objects.insert(meta.uuid.clone(), meta);
+            } else if let Some(rest) = key.strip_prefix("chain:") {
+                let (col, name) = split_col_name(rest)?;
+                let uuids = v
+                    .as_arr()
+                    .ok_or_else(|| Error::Json("chain uuids".into()))?
+                    .iter()
+                    .map(|u| {
+                        Ok(u.as_str()
+                            .ok_or_else(|| Error::Json("chain uuid".into()))?
+                            .to_string())
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                inner.chains.insert((col, name), uuids);
+            } else if let Some(rest) = key.strip_prefix("epoch:") {
+                let (col, name) = split_col_name(rest)?;
+                inner.nonce_epochs.insert(
+                    (col, name),
+                    v.as_u64().ok_or_else(|| Error::Json("epoch".into()))?,
+                );
+            } else if let Some(id) = key.strip_prefix("up:") {
+                let mut parts = BTreeMap::new();
+                for p in v.get("parts").as_arr().unwrap_or(&[]) {
+                    let part = PartManifest::from_json(p)?;
+                    parts.insert(part.number, part);
+                }
+                inner.uploads.insert(
+                    id.to_string(),
+                    UploadState {
+                        collection: v.req_str("collection")?.to_string(),
+                        name: v.req_str("name")?.to_string(),
+                        created_at: v.req_u64("created_at")?,
+                        parts,
+                    },
+                );
+            } else if key == KSYS_RNG {
+                let words = v.as_arr().ok_or_else(|| Error::Json("rng state".into()))?;
+                if words.len() != 4 {
+                    return Err(Error::Json("rng state must be 4 words".into()));
+                }
+                let mut state = [0u64; 4];
+                for (i, w) in words.iter().enumerate() {
+                    let hex = w.as_str().ok_or_else(|| Error::Json("rng word".into()))?;
+                    state[i] = u64::from_str_radix(hex, 16)
+                        .map_err(|_| Error::Json(format!("bad rng word '{hex}'")))?;
+                }
+                rng_state = Some(state);
+            } else if key == KSYS_COUNTER {
+                counter =
+                    Some(v.as_u64().ok_or_else(|| Error::Json("uuid_counter".into()))?);
+            } else {
+                return Err(Error::Json(format!("unknown kv key '{key}'")));
+            }
+        }
+        inner.rng = Some(Rng::from_state(
+            rng_state.ok_or_else(|| Error::Json("kv store missing sys:rng".into()))?,
+        ));
+        inner.uuid_counter = counter
+            .ok_or_else(|| Error::Json("kv store missing sys:uuid_counter".into()))?;
+        Ok(MetadataStore { inner: Mutex::new(inner) })
+    }
+
+    /// Whether this store holds the given object version — shard
+    /// routing for uuid-addressed commands.
+    pub fn has_uuid(&self, uuid: &str) -> bool {
+        self.inner.lock().unwrap().objects.contains_key(uuid)
+    }
+
+    /// Whether this store holds the given open multipart upload — shard
+    /// routing for upload-addressed commands.
+    pub fn has_upload(&self, id: &str) -> bool {
+        self.inner.lock().unwrap().uploads.contains_key(id)
+    }
+
+    /// UUID-keyset page over every live version this store holds:
+    /// records whose uuid sorts strictly after `after`, uuid-ascending,
+    /// at most `limit`. The per-shard half of the merged global listing
+    /// — uuid order is stable within a shard, so a global cursor
+    /// resumes exactly where it left off.
+    pub fn objects_after(&self, after: Option<&str>, limit: usize) -> Vec<ObjectMeta> {
+        let inner = self.inner.lock().unwrap();
+        let mut uuids: Vec<&String> = inner
+            .objects
+            .keys()
+            .filter(|u| after.map_or(true, |a| u.as_str() > a))
+            .collect();
+        uuids.sort();
+        uuids.truncate(limit);
+        uuids.into_iter().map(|u| inner.objects[u].clone()).collect()
+    }
+}
+
+/// Keyed-snapshot key of a collection record.
+fn kcol(path: &str) -> String {
+    format!("col:{path}")
+}
+
+/// Keyed-snapshot key of one object version record.
+fn kobj(uuid: &str) -> String {
+    format!("obj:{uuid}")
+}
+
+/// Keyed-snapshot key of a (collection, name) version chain. Names
+/// cannot contain '/' ([`validate_name`]), so the LAST '/' of the key
+/// remainder splits the two components unambiguously.
+fn kchain(collection: &str, name: &str) -> String {
+    format!("chain:{collection}/{name}")
+}
+
+/// Keyed-snapshot key of a (collection, name) eviction generation.
+fn kepoch(collection: &str, name: &str) -> String {
+    format!("epoch:{collection}/{name}")
+}
+
+/// Keyed-snapshot key of an open multipart upload.
+fn kup(id: &str) -> String {
+    format!("up:{id}")
+}
+
+/// The deterministic-UUID machinery lives under fixed `sys:` keys.
+const KSYS_RNG: &str = "sys:rng";
+const KSYS_COUNTER: &str = "sys:uuid_counter";
+
+/// Split a `chain:`/`epoch:` key remainder back into (collection,
+/// name) at the last '/'.
+fn split_col_name(rest: &str) -> Result<(String, String)> {
+    let i = rest
+        .rfind('/')
+        .ok_or_else(|| Error::Json(format!("bad chain/epoch key '{rest}'")))?;
+    Ok((rest[..i].to_string(), rest[i + 1..].to_string()))
+}
+
+/// The live value under a keyed-snapshot key, or `None` when the
+/// record no longer exists (a delta encodes that as a tombstone).
+fn kv_current(inner: &Inner, key: &str) -> Option<Value> {
+    if let Some(path) = key.strip_prefix("col:") {
+        let col = inner.collections.get(path)?;
+        let mut users: Vec<&String> = col.acl.keys().collect();
+        users.sort();
+        let acl: Vec<Value> = users
+            .into_iter()
+            .map(|user| {
+                obj(vec![
+                    ("user", user.as_str().into()),
+                    (
+                        "perms",
+                        Value::Arr(
+                            col.acl[user].iter().map(|p| p.as_str().into()).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Some(obj(vec![("owner", col.owner.as_str().into()), ("acl", Value::Arr(acl))]))
+    } else if let Some(uuid) = key.strip_prefix("obj:") {
+        inner.objects.get(uuid).map(|m| m.to_json())
+    } else if let Some(rest) = key.strip_prefix("chain:") {
+        let (col, name) = split_col_name(rest).ok()?;
+        inner
+            .chains
+            .get(&(col, name))
+            .map(|uuids| Value::Arr(uuids.iter().map(|u| u.as_str().into()).collect()))
+    } else if let Some(rest) = key.strip_prefix("epoch:") {
+        let (col, name) = split_col_name(rest).ok()?;
+        inner.nonce_epochs.get(&(col, name)).map(|&e| e.into())
+    } else if let Some(id) = key.strip_prefix("up:") {
+        inner.uploads.get(id).map(|u| {
+            obj(vec![
+                ("collection", u.collection.as_str().into()),
+                ("name", u.name.as_str().into()),
+                ("created_at", u.created_at.into()),
+                (
+                    "parts",
+                    Value::Arr(u.parts.values().map(|p| p.to_json()).collect()),
+                ),
+            ])
+        })
+    } else if key == KSYS_RNG {
+        let state = inner.rng.as_ref().expect("rng present").state();
+        Some(Value::Arr(state.iter().map(|w| format!("{w:016x}").into()).collect()))
+    } else if key == KSYS_COUNTER {
+        Some(inner.uuid_counter.into())
+    } else {
+        None
     }
 }
 
@@ -1039,6 +1341,7 @@ fn put_object_inner(
             if let Some(meta) = inner.objects.get_mut(&prev) {
                 meta.superseded_at = Some(now);
             }
+            inner.dirty.insert(kobj(&prev));
         }
     }
     let meta = ObjectMeta {
@@ -1054,6 +1357,8 @@ fn put_object_inner(
         nonce_epoch: inner.nonce_epochs.get(&chain_key).copied().unwrap_or(0),
         placement,
     };
+    inner.dirty.insert(kobj(&uuid));
+    inner.dirty.insert(kchain(&chain_key.0, &chain_key.1));
     inner.objects.insert(uuid.clone(), meta.clone());
     inner.chains.entry(chain_key).or_default().push(uuid);
     Ok(meta)
@@ -1061,6 +1366,8 @@ fn put_object_inner(
 
 /// UUID v4-style identifier from the store's deterministic RNG.
 fn next_uuid(inner: &mut Inner) -> String {
+    inner.dirty.insert(KSYS_RNG.to_string());
+    inner.dirty.insert(KSYS_COUNTER.to_string());
     inner.uuid_counter += 1;
     let rng = inner.rng.as_mut().expect("rng present");
     let mut bytes = [0u8; 16];
@@ -1531,6 +1838,124 @@ mod tests {
             s.multipart_complete("UserA", &id, 2),
             Err(Error::Invalid(_))
         ));
+    }
+
+    #[test]
+    fn kv_dump_restore_roundtrip() {
+        let s = store();
+        s.create_collection("UserA", "/UserA/Col").unwrap();
+        s.grant("UserA", "/UserA/Col", "UserB", Permission::Read).unwrap();
+        s.put_object("UserA", "/UserA/Col", "o", 9, [3; 32], place(1), 100).unwrap();
+        s.put_object("UserA", "/UserA/Col", "o", 11, [4; 32], place(2), 200).unwrap();
+        s.evict("UserA", "/UserA/Col", "o").unwrap();
+        s.put_object("UserA", "/UserA/Col", "o", 5, [5; 32], place(3), 300).unwrap();
+        let id = s.multipart_init("UserA", "/UserA", "up", 5).unwrap();
+        s.multipart_put("UserA", &id, part(1, 10, 1)).unwrap();
+
+        let r = MetadataStore::restore_from_kv(&s.kv_dump()).unwrap();
+        // The keyed dump and the legacy snapshot describe the same
+        // state, byte for byte.
+        assert_eq!(
+            crate::json::to_string(&r.snapshot_value()),
+            crate::json::to_string(&s.snapshot_value())
+        );
+        // The deterministic UUID sequence continues identically.
+        let ma = s.put_object("UserA", "/UserA", "next", 1, [0; 32], place(1), 9).unwrap();
+        let mb = r.put_object("UserA", "/UserA", "next", 1, [0; 32], place(1), 9).unwrap();
+        assert_eq!(ma.uuid, mb.uuid);
+    }
+
+    #[test]
+    fn restore_from_kv_requires_sys_keys() {
+        assert!(MetadataStore::restore_from_kv(&[]).is_err());
+        let dump = store().kv_dump();
+        let no_rng: Vec<_> =
+            dump.iter().filter(|(k, _)| k != KSYS_RNG).cloned().collect();
+        assert!(MetadataStore::restore_from_kv(&no_rng).is_err());
+        let no_counter: Vec<_> =
+            dump.iter().filter(|(k, _)| k != KSYS_COUNTER).cloned().collect();
+        assert!(MetadataStore::restore_from_kv(&no_counter).is_err());
+        // Unknown key prefixes are corruption, not silently dropped.
+        let mut bad = dump.clone();
+        bad.push(("bogus:key".to_string(), Value::Null));
+        assert!(MetadataStore::restore_from_kv(&bad).is_err());
+    }
+
+    #[test]
+    fn kv_delta_tracks_mutations_and_tombstones() {
+        let s = store();
+        // Namespace creation marked the two roots.
+        let delta = s.kv_delta();
+        assert!(delta.iter().any(|(k, v)| k.as_str() == "col:/UserA" && v.is_some()));
+        // Drained: a second delta is empty.
+        assert!(s.kv_delta().is_empty());
+        // A put touches the object, its chain, and the sys keys.
+        let m = s.put_object("UserA", "/UserA", "o", 1, [0; 32], place(1), 1).unwrap();
+        let keys: Vec<String> = s.kv_delta().into_iter().map(|(k, _)| k).collect();
+        assert!(keys.contains(&format!("obj:{}", m.uuid)));
+        assert!(keys.contains(&"chain:/UserA/o".to_string()));
+        assert!(keys.contains(&KSYS_RNG.to_string()));
+        assert!(keys.contains(&KSYS_COUNTER.to_string()));
+        // Evict yields tombstones for the object and chain plus a live
+        // epoch bump, and folding the delta over the pre-evict dump
+        // reproduces the post-evict store exactly.
+        let dump = s.kv_dump();
+        s.evict("UserA", "/UserA", "o").unwrap();
+        let delta = s.kv_delta();
+        let obj_key = format!("obj:{}", m.uuid);
+        assert!(
+            delta.iter().any(|(k, v)| k == &obj_key && v.is_none()),
+            "evicted object must tombstone"
+        );
+        assert!(delta.iter().any(|(k, v)| k.as_str() == "epoch:/UserA/o"
+            && v.as_ref().and_then(|x| x.as_u64()) == Some(1)));
+        let mut folded: BTreeMap<String, Value> = dump.into_iter().collect();
+        for (k, v) in delta {
+            match v {
+                Some(v) => {
+                    folded.insert(k, v);
+                }
+                None => {
+                    folded.remove(&k);
+                }
+            }
+        }
+        let entries: Vec<(String, Value)> = folded.into_iter().collect();
+        let r = MetadataStore::restore_from_kv(&entries).unwrap();
+        assert_eq!(
+            crate::json::to_string(&r.snapshot_value()),
+            crate::json::to_string(&s.snapshot_value())
+        );
+    }
+
+    #[test]
+    fn kv_mark_dirty_rearms_failed_deltas() {
+        let s = store();
+        let delta = s.kv_delta();
+        assert!(!delta.is_empty());
+        assert!(s.kv_delta().is_empty());
+        // A failed segment append re-arms its keys; the retry drains
+        // the same set.
+        s.kv_mark_dirty(delta.iter().map(|(k, _)| k.clone()));
+        let retry = s.kv_delta();
+        assert_eq!(retry.len(), delta.len());
+    }
+
+    #[test]
+    fn objects_after_pages_in_uuid_order() {
+        let s = store();
+        for i in 0..5 {
+            s.put_object("UserA", "/UserA", &format!("o{i}"), 1, [0; 32], place(1), 1)
+                .unwrap();
+        }
+        let all = s.all_objects();
+        let first = s.objects_after(None, 2);
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].uuid, all[0].uuid);
+        let rest = s.objects_after(Some(&first[1].uuid), 10);
+        assert_eq!(rest.len(), 3);
+        assert_eq!(rest[0].uuid, all[2].uuid);
+        assert!(s.objects_after(Some(&all[4].uuid), 10).is_empty());
     }
 
     #[test]

@@ -15,8 +15,16 @@
 //! in slot order. Replica state machines are deterministic (seeded UUID
 //! generation), so all replicas converge to identical stores.
 
+//! The sharded plane ([`ShardedMeta`]) scales this out: N independent
+//! Paxos groups, each owning a consistent-hash arc of the namespace
+//! keyspace ([`crate::metadata::Ring`]), so distinct namespaces commit
+//! through distinct groups concurrently while every shard keeps the
+//! single-group guarantees above.
+
 mod group;
 mod replicated;
+mod sharded;
 
 pub use group::{Acceptor, PaxosGroup};
 pub use replicated::{CommandOutcome, MetaCommand, ReplicatedMeta};
+pub use sharded::{shard_seed, ShardedMeta};

@@ -23,7 +23,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::durability::{snapshot, DurabilityOpts, RecoveryReport, Wal, WAL_FILE};
+use crate::durability::{snapshot, DurabilityOpts, KvStore, RecoveryReport, Wal, WAL_FILE};
 use crate::json::{obj, parse, to_string, Value};
 use crate::metadata::{MetadataStore, ObjectMeta, ObjectPlacement, PartManifest, Permission};
 use crate::paxos::PaxosGroup;
@@ -255,6 +255,19 @@ struct DurabilityState {
     next_seq: u64,
     commits_since_snapshot: u64,
     last_snapshot_unix: u64,
+    sink: SnapshotSink,
+}
+
+/// How a compacting snapshot is persisted.
+enum SnapshotSink {
+    /// Legacy single-shard layout: the full store serialized to one
+    /// JSON document in `meta.snapshot`.
+    FullJson,
+    /// Sharded layout ([`ReplicatedMeta::durable_keyed`]): only the
+    /// keys dirtied since the last snapshot, appended as a CRC-framed
+    /// segment to the keyed store — O(delta) on the commit path instead
+    /// of O(catalog).
+    Keyed(KvStore),
 }
 
 /// The replicated metadata service.
@@ -302,6 +315,9 @@ impl ReplicatedMeta {
         seed: u64,
         opts: DurabilityOpts,
     ) -> Result<(Arc<Self>, RecoveryReport)> {
+        // A crash between snapshot temp-write and rename strands a
+        // `*.tmp` file; reclaim it before loading.
+        crate::durability::sweep_tmp(&opts.dir)?;
         let snap = snapshot::load(&opts.dir)?;
         let (wal, walrec) = Wal::open(opts.dir.join(WAL_FILE))?;
         let (base_commits, last_snapshot_unix, snapshot_loaded, stores) = match &snap {
@@ -336,6 +352,7 @@ impl ReplicatedMeta {
                 next_seq: base_commits,
                 commits_since_snapshot: 0,
                 last_snapshot_unix,
+                sink: SnapshotSink::FullJson,
             })),
         });
         // Replay the WAL tail: records with seq < base_commits are
@@ -363,6 +380,88 @@ impl ReplicatedMeta {
             wal_records: walrec.records.len() as u64,
             wal_replayed: replayed,
             wal_truncated: walrec.truncated,
+        };
+        Ok((meta, report))
+    }
+
+    /// Open (or create) a durable deployment whose snapshots go through
+    /// the keyed incremental store ([`crate::durability::KvStore`])
+    /// instead of full-state JSON — one metadata shard of the sharded
+    /// plane. Recovery folds `kv.base` + delta segments into the
+    /// starting state (torn segment tails truncated like the WAL's),
+    /// then replays the WAL tail above the folded watermark, exactly
+    /// like [`ReplicatedMeta::durable`]. The no-acked-mutation-lost
+    /// invariant is unchanged: commands still hit the fsync'd WAL
+    /// before acknowledgement, and the WAL is only reset after the
+    /// covering segment is fsync'd.
+    pub fn durable_keyed(
+        replica_count: usize,
+        seed: u64,
+        opts: DurabilityOpts,
+    ) -> Result<(Arc<Self>, RecoveryReport)> {
+        let (kv, kvrec) = KvStore::open(&opts.dir)?;
+        let (wal, walrec) = Wal::open(opts.dir.join(WAL_FILE))?;
+        let base_commits = kvrec.watermark;
+        let stores = if kvrec.loaded {
+            (0..replica_count)
+                .map(|_| MetadataStore::restore_from_kv(&kvrec.entries))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            (0..replica_count).map(|_| MetadataStore::new(seed)).collect()
+        };
+        let meta = Arc::new(ReplicatedMeta {
+            group: PaxosGroup::new(replica_count),
+            replicas: stores
+                .into_iter()
+                .map(|store| Replica {
+                    store,
+                    applied: AtomicU64::new(0),
+                    alive: AtomicBool::new(true),
+                })
+                .collect(),
+            rw: RwLock::new(()),
+            durability: Some(Mutex::new(DurabilityState {
+                wal,
+                dir: opts.dir.clone(),
+                snapshot_every: opts.snapshot_every.max(1),
+                next_seq: base_commits,
+                commits_since_snapshot: 0,
+                // Segment watermarks don't carry wall-clock; the gauge
+                // restarts at 0 and updates on the next snapshot.
+                last_snapshot_unix: 0,
+                sink: SnapshotSink::Keyed(kv),
+            })),
+        });
+        // Same watermark discipline as the legacy path: records below
+        // the folded segment watermark are already covered and must be
+        // skipped (commands are not idempotent).
+        let mut replayed = 0u64;
+        {
+            let _w = meta.rw.write().unwrap();
+            for rec in &walrec.records {
+                if rec.seq < base_commits {
+                    continue;
+                }
+                meta.group.propose_owned(0, rec.payload.clone())?;
+                replayed += 1;
+            }
+            meta.apply_backlog()?;
+            let mut d = meta.durability.as_ref().unwrap().lock().unwrap();
+            d.next_seq = base_commits + replayed;
+            d.commits_since_snapshot = replayed;
+        }
+        // A base holding nothing but `sys:` seeds (the shape shard
+        // migration writes for a fresh shard) is a seed, not recovered
+        // state — a fresh sharded boot must report `recovered() ==
+        // false` exactly like a fresh single-shard boot.
+        let base_has_state =
+            base_commits > 0 || kvrec.entries.iter().any(|(k, _)| !k.starts_with("sys:"));
+        let report = RecoveryReport {
+            snapshot_loaded: kvrec.loaded && base_has_state,
+            snapshot_commits: base_commits,
+            wal_records: walrec.records.len() as u64,
+            wal_replayed: replayed,
+            wal_truncated: walrec.truncated || kvrec.truncated,
         };
         Ok((meta, report))
     }
@@ -506,8 +605,42 @@ impl ReplicatedMeta {
             return; // no fully-applied live replica to serialize
         };
         let now = unix_secs();
-        match snapshot::save(&d.dir, d.next_seq, now, r.store.snapshot_value()) {
+        let d = &mut *d;
+        let result = match &mut d.sink {
+            SnapshotSink::FullJson => {
+                snapshot::save(&d.dir, d.next_seq, now, r.store.snapshot_value())
+            }
+            SnapshotSink::Keyed(kv) => {
+                // Incremental: persist only the keys dirtied since the
+                // last drain. The segment is appended even when the
+                // delta is empty — its seq is the watermark that makes
+                // the WAL reset below safe.
+                let delta = r.store.kv_delta();
+                match kv.append_delta(d.next_seq, &delta) {
+                    Ok(()) => {
+                        if let Err(e) = kv.maybe_compact() {
+                            crate::log_warn!("kv segment rotation failed: {e}");
+                        }
+                        Ok(())
+                    }
+                    Err(e) => {
+                        // Re-arm so the next cadence retries these keys.
+                        r.store.kv_mark_dirty(delta.into_iter().map(|(k, _)| k));
+                        Err(e)
+                    }
+                }
+            }
+        };
+        match result {
             Ok(()) => {
+                if matches!(d.sink, SnapshotSink::FullJson) {
+                    // The full snapshot covered everything; drop the
+                    // (unused) dirty tracking so it can't grow without
+                    // bound on legacy deployments.
+                    for rep in &self.replicas {
+                        rep.store.kv_clear_dirty();
+                    }
+                }
                 if let Err(e) = d.wal.reset() {
                     // Stale records are harmless: their seq numbers are
                     // below the snapshot's commit watermark.
@@ -955,6 +1088,97 @@ mod tests {
         assert_eq!(rec.wal_replayed, 3, "namespace + first two puts survive");
         assert_eq!(m.read(|s| Ok(s.object_count())).unwrap(), 2);
         assert!(m.read(|s| s.get_latest("UserA", "/UserA", "o2")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn keyed_durability_snapshots_incrementally_and_recovers() {
+        let dir = durable_dir("keyed");
+        let uuid_before;
+        {
+            let (m, rec) =
+                ReplicatedMeta::durable_keyed(3, 99, durable_opts(&dir, 4)).unwrap();
+            assert!(!rec.recovered());
+            m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+            for i in 0..9 {
+                m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+            }
+            // Same cadence arithmetic as the full-JSON path: snapshots
+            // at commits 4 and 8 reset the WAL; 2 commits remain.
+            assert_eq!(m.wal_len(), 2);
+            assert_eq!(m.committed_seq(), 10);
+            assert!(m.last_snapshot_unix() > 0);
+            uuid_before =
+                m.read(|s| s.get_latest("UserA", "/UserA", "o8")).unwrap().uuid;
+        }
+        let (m, rec) = ReplicatedMeta::durable_keyed(3, 99, durable_opts(&dir, 4)).unwrap();
+        assert!(rec.snapshot_loaded);
+        assert_eq!(rec.snapshot_commits, 8);
+        assert_eq!(rec.wal_replayed, 2);
+        assert_eq!(m.committed_seq(), 10);
+        let after = m.read(|s| s.get_latest("UserA", "/UserA", "o8")).unwrap();
+        assert_eq!(after.uuid, uuid_before, "uuid sequence survives keyed recovery");
+        // The recovered deployment keeps committing and snapshotting.
+        for i in 9..15 {
+            m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+        }
+        assert_eq!(m.read(|s| Ok(s.object_count())).unwrap(), 15);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn keyed_and_full_json_recover_identical_state() {
+        let a_dir = durable_dir("keyed-eq-a");
+        let b_dir = durable_dir("keyed-eq-b");
+        {
+            let (a, _) = ReplicatedMeta::durable(1, 99, durable_opts(&a_dir, 3)).unwrap();
+            let (b, _) =
+                ReplicatedMeta::durable_keyed(1, 99, durable_opts(&b_dir, 3)).unwrap();
+            for m in [&a, &b] {
+                m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+                for i in 0..7 {
+                    m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+                }
+                m.submit(MetaCommand::Evict {
+                    caller: "UserA".into(),
+                    collection: "/UserA".into(),
+                    name: "o3".into(),
+                })
+                .unwrap();
+            }
+        }
+        let (a, _) = ReplicatedMeta::durable(1, 99, durable_opts(&a_dir, 3)).unwrap();
+        let (b, _) = ReplicatedMeta::durable_keyed(1, 99, durable_opts(&b_dir, 3)).unwrap();
+        // Both durability formats recover byte-identical metadata —
+        // including tombstoned records and the RNG state.
+        assert_eq!(
+            to_string(&a.replica_store(0).snapshot_value()),
+            to_string(&b.replica_store(0).snapshot_value())
+        );
+        std::fs::remove_dir_all(&a_dir).ok();
+        std::fs::remove_dir_all(&b_dir).ok();
+    }
+
+    #[test]
+    fn keyed_torn_wal_tail_recovers_the_intact_prefix() {
+        let dir = durable_dir("keyed-torn");
+        {
+            let (m, _) =
+                ReplicatedMeta::durable_keyed(3, 99, durable_opts(&dir, 1000)).unwrap();
+            m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+            for i in 0..3 {
+                m.submit(put_cmd(&format!("o{i}"), i)).unwrap();
+            }
+        }
+        let wal_path = dir.join(WAL_FILE);
+        let len = std::fs::metadata(&wal_path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&wal_path).unwrap();
+        f.set_len(len - 2).unwrap();
+        drop(f);
+        let (m, rec) = ReplicatedMeta::durable_keyed(3, 99, durable_opts(&dir, 1000)).unwrap();
+        assert!(rec.wal_truncated);
+        assert_eq!(rec.wal_replayed, 3);
+        assert_eq!(m.read(|s| Ok(s.object_count())).unwrap(), 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,628 @@
+//! The sharded metadata plane: N independent Paxos groups behind one
+//! router.
+//!
+//! One [`ReplicatedMeta`] serializes every mutation in the deployment
+//! through a single Paxos log — O(deployment) coordination that walls
+//! well before the ROADMAP's millions-of-objects target. [`ShardedMeta`]
+//! splits the catalog by *namespace*: a consistent-hash ring
+//! ([`crate::metadata::Ring`]) maps the namespace owner (the first path
+//! segment of a collection path) to one of N shards, and that shard's
+//! Paxos group alone sequences, logs, and snapshots everything under
+//! the namespace. Distinct namespaces on distinct shards commit
+//! concurrently, recover in parallel, and fail independently: a torn
+//! WAL tail or poisoned log on one shard degrades only that shard's
+//! namespaces.
+//!
+//! Routing by namespace (not full collection path) is load-bearing:
+//! permission checks walk the ancestor collection chain and
+//! `create_collection` requires its parent, so a namespace must be
+//! wholly shard-local for every single-group invariant — including
+//! `submit_guarded`'s precheck-inside-the-commit-lock — to carry over
+//! unchanged per shard.
+//!
+//! # Cross-shard contract (weaker, documented)
+//!
+//! Anything confined to one namespace keeps the full §IV-B guarantees
+//! (strong read-after-write, linearizable commits). Operations that
+//! span shards are **per-shard snapshot-consistent, globally
+//! best-effort**:
+//!
+//! * [`ShardedMeta::read`] answers from the first shard that returns
+//!   `Ok` — use [`ShardedMeta::read_at`] (or `read_upload` /
+//!   `read_uuid`) when the closure targets a specific namespace,
+//!   upload, or object.
+//! * [`ShardedMeta::all_objects`] and [`ShardedMeta::global_page`]
+//!   merge per-shard views taken at different instants; each shard's
+//!   slice is consistent, the union is not a single cut.
+//! * `Gc` broadcasts to every shard and merges the collected records;
+//!   shards that fail are skipped (their retention clock just keeps
+//!   ticking until a later pass).
+//!
+//! With one shard (`meta_shards = 1`, the default) every method
+//! delegates straight to the single group and behavior is
+//! byte-identical to the unsharded plane.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::metadata::{namespace_owner, normalize_path, MetadataStore, ObjectMeta, ObjectPage, Ring};
+use crate::paxos::{CommandOutcome, MetaCommand, ReplicatedMeta};
+use crate::{Error, Result};
+
+/// Per-shard seed derivation: shard 0 keeps the deployment seed (so a
+/// single-shard `ShardedMeta` is byte-identical to the legacy plane),
+/// higher shards offset by the 64-bit golden ratio so their UUID
+/// streams are disjoint.
+pub fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed.wrapping_add((shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Where a command must commit.
+enum Route {
+    Shard(usize),
+    /// `Gc` touches every shard's catalog.
+    Broadcast,
+}
+
+/// Router over N independent [`ReplicatedMeta`] Paxos groups.
+pub struct ShardedMeta {
+    shards: Vec<Arc<ReplicatedMeta>>,
+    ring: Ring,
+    /// Commands committed through each shard's group since this process
+    /// started (the `/metrics` per-shard commit counters — and the test
+    /// hook proving distinct namespaces use distinct groups).
+    commits: Vec<AtomicU64>,
+}
+
+impl ShardedMeta {
+    /// In-memory sharded plane: `shard_count` groups of `replica_count`
+    /// replicas each (tests, benches, simulators).
+    pub fn memory(shard_count: usize, replica_count: usize, seed: u64) -> Arc<Self> {
+        let shard_count = shard_count.max(1);
+        Self::from_groups(
+            (0..shard_count)
+                .map(|i| ReplicatedMeta::new(replica_count, shard_seed(seed, i)))
+                .collect(),
+        )
+    }
+
+    /// Wrap one existing group as a single-shard plane — the legacy
+    /// durable layout stays byte-identical because every call delegates
+    /// straight to it.
+    pub fn single(group: Arc<ReplicatedMeta>) -> Arc<Self> {
+        Self::from_groups(vec![group])
+    }
+
+    /// Assemble the router from already-opened groups (the coordinator
+    /// builds durable shards with [`ReplicatedMeta::durable_keyed`] and
+    /// hands them over here). All groups must have the same replica
+    /// count.
+    pub fn from_groups(shards: Vec<Arc<ReplicatedMeta>>) -> Arc<Self> {
+        assert!(!shards.is_empty(), "at least one metadata shard");
+        assert!(
+            shards.iter().all(|s| s.replica_count() == shards[0].replica_count()),
+            "uniform replica count across shards"
+        );
+        let ring = Ring::new(shards.len());
+        let commits = (0..shards.len()).map(|_| AtomicU64::new(0)).collect();
+        Arc::new(ShardedMeta { shards, ring, commits })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning a collection path (by its namespace owner).
+    /// Unparseable paths route to shard 0, where the command fails with
+    /// the same validation error the unsharded plane would produce.
+    pub fn shard_of(&self, collection: &str) -> usize {
+        match normalize_path(collection) {
+            Ok(p) => self.ring.route(namespace_owner(&p)),
+            Err(_) => 0,
+        }
+    }
+
+    /// One shard's group (health/metrics surfaces, tests).
+    pub fn shard(&self, i: usize) -> &Arc<ReplicatedMeta> {
+        &self.shards[i]
+    }
+
+    /// Commands committed through shard `i` since process start.
+    pub fn shard_commits(&self, i: usize) -> u64 {
+        self.commits[i].load(Ordering::Relaxed)
+    }
+
+    /// Which shard holds an open upload. Upload ids are minted by the
+    /// owning shard's RNG, so the owner is found by scanning — a miss
+    /// (completed/aborted meanwhile, or never existed) falls back to
+    /// shard 0, where the command fails with the legacy NotFound.
+    fn shard_with_upload(&self, id: &str) -> usize {
+        if self.shards.len() > 1 {
+            for (i, s) in self.shards.iter().enumerate() {
+                if s.read(|st| Ok(st.has_upload(id))).unwrap_or(false) {
+                    return i;
+                }
+            }
+        }
+        0
+    }
+
+    /// Which shard holds an object version, by UUID (same contract as
+    /// [`Self::shard_with_upload`]).
+    fn shard_with_uuid(&self, uuid: &str) -> usize {
+        if self.shards.len() > 1 {
+            for (i, s) in self.shards.iter().enumerate() {
+                if s.read(|st| Ok(st.has_uuid(uuid))).unwrap_or(false) {
+                    return i;
+                }
+            }
+        }
+        0
+    }
+
+    fn route(&self, cmd: &MetaCommand) -> Route {
+        match cmd {
+            MetaCommand::CreateNamespace { user } => Route::Shard(self.ring.route(user)),
+            MetaCommand::CreateCollection { path, .. }
+            | MetaCommand::Grant { path, .. }
+            | MetaCommand::Revoke { path, .. } => Route::Shard(self.shard_of(path)),
+            MetaCommand::PutObject { collection, .. }
+            | MetaCommand::Evict { collection, .. }
+            | MetaCommand::MultipartInit { collection, .. } => {
+                Route::Shard(self.shard_of(collection))
+            }
+            MetaCommand::Gc { .. } => Route::Broadcast,
+            MetaCommand::UpdatePlacement { uuid, .. } => {
+                Route::Shard(self.shard_with_uuid(uuid))
+            }
+            MetaCommand::MultipartPut { upload_id, .. }
+            | MetaCommand::MultipartComplete { upload_id, .. }
+            | MetaCommand::MultipartAbort { upload_id, .. } => {
+                Route::Shard(self.shard_with_upload(upload_id))
+            }
+        }
+    }
+
+    /// Propose a command through its owning shard's Paxos group.
+    pub fn submit(&self, cmd: MetaCommand) -> Result<CommandOutcome> {
+        self.submit_guarded(cmd, || Ok(()))
+    }
+
+    /// Like [`Self::submit`], but run `precheck` under the owning
+    /// shard's exclusive commit lock first — the single-group
+    /// precheck-inside-the-lock semantics, preserved per shard.
+    pub fn submit_guarded(
+        &self,
+        cmd: MetaCommand,
+        precheck: impl FnOnce() -> Result<()>,
+    ) -> Result<CommandOutcome> {
+        match self.route(&cmd) {
+            Route::Shard(i) => {
+                let out = self.shards[i].submit_guarded(cmd, precheck)?;
+                self.commits[i].fetch_add(1, Ordering::Relaxed);
+                Ok(out)
+            }
+            Route::Broadcast => {
+                precheck()?;
+                let mut collected: Vec<ObjectMeta> = Vec::new();
+                let mut first_err: Option<Error> = None;
+                let mut any_ok = false;
+                for (i, s) in self.shards.iter().enumerate() {
+                    match s.submit(cmd.clone()) {
+                        Ok(out) => {
+                            any_ok = true;
+                            self.commits[i].fetch_add(1, Ordering::Relaxed);
+                            if let CommandOutcome::Collected(mut v) = out {
+                                collected.append(&mut v);
+                            }
+                        }
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                match (any_ok, first_err) {
+                    // Every shard refused (with one shard this is the
+                    // legacy error, verbatim).
+                    (false, Some(e)) => Err(e),
+                    _ => Ok(CommandOutcome::Collected(collected)),
+                }
+            }
+        }
+    }
+
+    /// Best-effort unrouted read: the first shard that answers `Ok`
+    /// wins. Correct for shard-agnostic closures; anything keyed to a
+    /// namespace, upload, or UUID should use [`Self::read_at`],
+    /// [`Self::read_upload`], or [`Self::read_uuid`]. When every shard
+    /// errors, `Unavailable` (a shard that *might* hold the answer is
+    /// down) outranks `NotFound`, which outranks the rest.
+    pub fn read<T>(&self, f: impl Fn(&MetadataStore) -> Result<T>) -> Result<T> {
+        if self.shards.len() == 1 {
+            return self.shards[0].read(f);
+        }
+        let mut unavailable: Option<Error> = None;
+        let mut not_found: Option<Error> = None;
+        let mut other: Option<Error> = None;
+        for s in &self.shards {
+            match s.read(&f) {
+                Ok(v) => return Ok(v),
+                Err(e) => match e {
+                    Error::Unavailable(_) if unavailable.is_none() => unavailable = Some(e),
+                    Error::NotFound(_) if not_found.is_none() => not_found = Some(e),
+                    _ if other.is_none() => other = Some(e),
+                    _ => {}
+                },
+            }
+        }
+        Err(unavailable
+            .or(not_found)
+            .or(other)
+            .expect("at least one shard produced an error"))
+    }
+
+    /// Read against the shard owning `collection` — full single-group
+    /// read semantics for namespace-local queries.
+    pub fn read_at<T>(
+        &self,
+        collection: &str,
+        f: impl Fn(&MetadataStore) -> Result<T>,
+    ) -> Result<T> {
+        self.shards[self.shard_of(collection)].read(f)
+    }
+
+    /// Read against the shard owning upload `id`.
+    pub fn read_upload<T>(
+        &self,
+        id: &str,
+        f: impl Fn(&MetadataStore) -> Result<T>,
+    ) -> Result<T> {
+        self.shards[self.shard_with_upload(id)].read(f)
+    }
+
+    /// Read against the shard holding object version `uuid`.
+    pub fn read_uuid<T>(
+        &self,
+        uuid: &str,
+        f: impl Fn(&MetadataStore) -> Result<T>,
+    ) -> Result<T> {
+        self.shards[self.shard_with_uuid(uuid)].read(f)
+    }
+
+    /// Every live object version across all shards, uuid-sorted. Fails
+    /// if any shard can't answer — repair/scrub sweeps need the full
+    /// census or none. Cross-shard contract: each shard's slice is a
+    /// consistent cut, the union is not.
+    pub fn all_objects(&self) -> Result<Vec<ObjectMeta>> {
+        let mut out: Vec<ObjectMeta> = Vec::new();
+        for s in &self.shards {
+            out.extend(s.read(|st| Ok(st.all_objects()))?);
+        }
+        out.sort_by(|a, b| a.uuid.cmp(&b.uuid));
+        Ok(out)
+    }
+
+    /// Open multipart uploads across all shards (the `multipart_open`
+    /// gauge); shards that can't answer contribute 0.
+    pub fn open_upload_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read(|st| Ok(st.open_upload_count())).unwrap_or(0))
+            .sum()
+    }
+
+    /// Merged global listing page: uuid-keyset pagination across every
+    /// shard. Each shard contributes its records after the cursor; the
+    /// merge re-sorts by uuid, so `after = objects.last().uuid` resumes
+    /// stably — uuid order never changes under interleaved writes.
+    /// Cross-shard contract: per-shard snapshot-consistent, globally
+    /// best-effort.
+    pub fn global_page(&self, after: Option<&str>, limit: usize) -> Result<ObjectPage> {
+        let fetch = limit.saturating_add(1);
+        let mut merged: Vec<ObjectMeta> = Vec::new();
+        for s in &self.shards {
+            merged.extend(s.read(|st| Ok(st.objects_after(after, fetch)))?);
+        }
+        merged.sort_by(|a, b| a.uuid.cmp(&b.uuid));
+        let truncated = merged.len() > limit;
+        merged.truncate(limit);
+        Ok(ObjectPage { objects: merged, truncated })
+    }
+
+    /// Crash/revive replica `id` in EVERY shard's group (chaos hooks
+    /// model machine-level failure: one machine hosts replica `id` of
+    /// every shard).
+    pub fn set_replica_alive(&self, id: usize, alive: bool) {
+        for s in &self.shards {
+            s.set_replica_alive(id, alive);
+        }
+    }
+
+    /// Replicas per shard group (uniform across shards).
+    pub fn replica_count(&self) -> usize {
+        self.shards[0].replica_count()
+    }
+
+    /// Direct store access on shard 0 (tests; with one shard this is
+    /// the whole catalog, the legacy contract).
+    pub fn replica_store(&self, id: usize) -> &MetadataStore {
+        self.shards[0].replica_store(id)
+    }
+
+    /// Shard 0's applied cursor (tests, legacy contract).
+    pub fn applied_cursor(&self, id: usize) -> u64 {
+        self.shards[0].applied_cursor(id)
+    }
+
+    pub fn is_durable(&self) -> bool {
+        self.shards[0].is_durable()
+    }
+
+    /// Total WAL records across shards (the `/health` aggregate).
+    pub fn wal_len(&self) -> u64 {
+        self.shards.iter().map(|s| s.wal_len()).sum()
+    }
+
+    /// Oldest per-shard snapshot time (0 if any shard never snapshot) —
+    /// the conservative aggregate for the legacy `/health` field.
+    pub fn last_snapshot_unix(&self) -> u64 {
+        self.shards.iter().map(|s| s.last_snapshot_unix()).min().unwrap_or(0)
+    }
+
+    /// Total commands ever committed across shards and restarts.
+    pub fn committed_seq(&self) -> u64 {
+        self.shards.iter().map(|s| s.committed_seq()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::ObjectPlacement;
+
+    fn put_cmd(col: &str, name: &str, t: u64) -> MetaCommand {
+        MetaCommand::PutObject {
+            caller: namespace_owner(col).to_string(),
+            collection: col.into(),
+            name: name.into(),
+            size: 42,
+            sha3: [7; 32],
+            placement: ObjectPlacement::Single { container: 1 },
+            now: t,
+        }
+    }
+
+    /// Find `n` users the ring spreads over distinct shards.
+    fn users_on_distinct_shards(m: &ShardedMeta, n: usize) -> Vec<String> {
+        let mut by_shard: Vec<Option<String>> = vec![None; m.shard_count()];
+        for i in 0.. {
+            let user = format!("User{i}");
+            let shard = m.shard_of(&format!("/{user}"));
+            if by_shard[shard].is_none() {
+                by_shard[shard] = Some(user);
+            }
+            if by_shard.iter().filter(|u| u.is_some()).count() >= n {
+                break;
+            }
+        }
+        by_shard.into_iter().flatten().take(n).collect()
+    }
+
+    #[test]
+    fn single_shard_is_byte_identical_to_replicated_meta() {
+        let sharded = ShardedMeta::memory(1, 3, 99);
+        let legacy = ReplicatedMeta::new(3, 99);
+        let cmds = [
+            MetaCommand::CreateNamespace { user: "UserA".into() },
+            put_cmd("/UserA", "o1", 1),
+            put_cmd("/UserA", "o2", 2),
+            MetaCommand::Evict {
+                caller: "UserA".into(),
+                collection: "/UserA".into(),
+                name: "o1".into(),
+            },
+        ];
+        for cmd in &cmds {
+            sharded.submit(cmd.clone()).unwrap();
+            legacy.submit(cmd.clone()).unwrap();
+        }
+        assert_eq!(
+            crate::json::to_string(&sharded.replica_store(0).snapshot_value()),
+            crate::json::to_string(&legacy.replica_store(0).snapshot_value()),
+        );
+    }
+
+    #[test]
+    fn distinct_namespaces_commit_through_distinct_groups() {
+        let m = ShardedMeta::memory(4, 3, 7);
+        let users = users_on_distinct_shards(&m, 3);
+        assert!(users.len() >= 2, "ring spreads namespaces");
+        for u in &users {
+            m.submit(MetaCommand::CreateNamespace { user: u.clone() }).unwrap();
+            m.submit(put_cmd(&format!("/{u}"), "obj", 1)).unwrap();
+        }
+        // Each user's commits landed on their own shard — and ONLY
+        // there: per-shard commit counters match, untouched shards are
+        // zero.
+        let mut touched = 0;
+        for i in 0..m.shard_count() {
+            let expected =
+                users.iter().filter(|u| m.shard_of(&format!("/{u}")) == i).count() as u64;
+            assert_eq!(m.shard_commits(i), expected * 2, "shard {i}");
+            if expected > 0 {
+                touched += 1;
+            }
+        }
+        assert!(touched >= 2);
+        // Routed reads see each namespace with full strength.
+        for u in &users {
+            let meta = m
+                .read_at(&format!("/{u}"), |s| s.get_latest(u, &format!("/{u}"), "obj"))
+                .unwrap();
+            assert_eq!(meta.size, 42);
+        }
+    }
+
+    #[test]
+    fn whole_namespace_routes_to_one_shard() {
+        let m = ShardedMeta::memory(4, 3, 7);
+        let shard = m.shard_of("/UserA");
+        assert_eq!(m.shard_of("/UserA/Col"), shard);
+        assert_eq!(m.shard_of("/UserA/Col/Deep/Nested"), shard);
+        // Nested collections (parent lookups, inherited ACLs) therefore
+        // work exactly as unsharded.
+        m.submit(MetaCommand::CreateNamespace { user: "UserA".into() }).unwrap();
+        m.submit(MetaCommand::CreateCollection {
+            caller: "UserA".into(),
+            path: "/UserA/Col".into(),
+        })
+        .unwrap();
+        m.submit(put_cmd("/UserA/Col", "o", 1)).unwrap();
+        let meta = m.read_at("/UserA/Col", |s| s.get_latest("UserA", "/UserA/Col", "o"));
+        assert!(meta.is_ok());
+    }
+
+    #[test]
+    fn upload_and_uuid_commands_route_by_scan() {
+        let m = ShardedMeta::memory(4, 3, 7);
+        let users = users_on_distinct_shards(&m, 2);
+        for u in &users {
+            m.submit(MetaCommand::CreateNamespace { user: u.clone() }).unwrap();
+        }
+        let (ua, ub) = (&users[0], &users[1]);
+        // Open an upload in ua's namespace, then address it purely by
+        // upload id — the router must find the owning shard.
+        let id = match m
+            .submit(MetaCommand::MultipartInit {
+                caller: ua.clone(),
+                collection: format!("/{ua}"),
+                name: "big".into(),
+                now: 1,
+            })
+            .unwrap()
+        {
+            CommandOutcome::UploadId(id) => id,
+            other => panic!("unexpected outcome {other:?}"),
+        };
+        let up = m.read_upload(&id, |s| s.multipart_parts(ua, &id)).unwrap();
+        assert_eq!(up.name, "big");
+        match m
+            .submit(MetaCommand::MultipartAbort { caller: ua.clone(), upload_id: id.clone() })
+            .unwrap()
+        {
+            CommandOutcome::Aborted(_) => {}
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        // UUID-addressed placement update on ub's shard.
+        let meta = match m.submit(put_cmd(&format!("/{ub}"), "obj", 1)).unwrap() {
+            CommandOutcome::Meta(meta) => meta,
+            other => panic!("unexpected outcome {other:?}"),
+        };
+        let out = m
+            .submit(MetaCommand::UpdatePlacement {
+                uuid: meta.uuid.clone(),
+                placement: ObjectPlacement::Single { container: 9 },
+                expect: Some(meta.placement.clone()),
+            })
+            .unwrap();
+        assert!(matches!(out, CommandOutcome::Ok));
+        let read = m.read_uuid(&meta.uuid, |s| s.get_by_uuid(&meta.uuid)).unwrap();
+        assert_eq!(read.placement, ObjectPlacement::Single { container: 9 });
+        // A bogus upload id falls back to shard 0 and fails like the
+        // unsharded plane.
+        let err = m
+            .submit(MetaCommand::MultipartAbort {
+                caller: ua.clone(),
+                upload_id: "no-such-upload".into(),
+            })
+            .unwrap();
+        assert!(matches!(err, CommandOutcome::Failed(_)));
+    }
+
+    #[test]
+    fn gc_broadcasts_and_merges_collected_records() {
+        let m = ShardedMeta::memory(4, 3, 7);
+        let users = users_on_distinct_shards(&m, 2);
+        for u in &users {
+            m.submit(MetaCommand::CreateNamespace { user: u.clone() }).unwrap();
+            // Two versions: v0 superseded at t=10, collectible.
+            m.submit(put_cmd(&format!("/{u}"), "obj", 5)).unwrap();
+            m.submit(put_cmd(&format!("/{u}"), "obj", 10)).unwrap();
+        }
+        let out = m.submit(MetaCommand::Gc { now: 100, retention_secs: 50 }).unwrap();
+        match out {
+            CommandOutcome::Collected(recs) => {
+                assert_eq!(recs.len(), users.len(), "one superseded version per namespace");
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+
+    #[test]
+    fn global_page_merges_shards_with_stable_cursors() {
+        let m = ShardedMeta::memory(4, 3, 7);
+        let users = users_on_distinct_shards(&m, 3);
+        let mut expected = 0;
+        for u in &users {
+            m.submit(MetaCommand::CreateNamespace { user: u.clone() }).unwrap();
+            for i in 0..4 {
+                m.submit(put_cmd(&format!("/{u}"), &format!("o{i}"), i)).unwrap();
+                expected += 1;
+            }
+        }
+        // Walk the merged listing with a page size that straddles shard
+        // boundaries; the union must be exact and uuid-sorted.
+        let mut seen: Vec<String> = Vec::new();
+        let mut after: Option<String> = None;
+        loop {
+            let page = m.global_page(after.as_deref(), 5).unwrap();
+            for o in &page.objects {
+                seen.push(o.uuid.clone());
+            }
+            if !page.truncated {
+                break;
+            }
+            after = Some(seen.last().unwrap().clone());
+        }
+        assert_eq!(seen.len(), expected);
+        let mut sorted = seen.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(seen, sorted, "uuid-sorted, duplicate-free walk");
+        // Matches the unpaged census.
+        let all = m.all_objects().unwrap();
+        assert_eq!(all.len(), expected);
+        assert_eq!(all.iter().map(|o| o.uuid.clone()).collect::<Vec<_>>(), seen);
+    }
+
+    #[test]
+    fn replica_failure_spans_every_shard() {
+        let m = ShardedMeta::memory(2, 3, 7);
+        let users = users_on_distinct_shards(&m, 2);
+        // Kill a minority replica on every shard: all namespaces still
+        // commit.
+        m.set_replica_alive(2, false);
+        for u in &users {
+            m.submit(MetaCommand::CreateNamespace { user: u.clone() }).unwrap();
+        }
+        // Kill a majority: every shard refuses.
+        m.set_replica_alive(1, false);
+        let err = m.submit(MetaCommand::CreateNamespace { user: "Late".into() });
+        assert!(matches!(err, Err(Error::Consensus(_))));
+        m.set_replica_alive(1, true);
+        m.set_replica_alive(2, true);
+    }
+
+    #[test]
+    fn aggregates_sum_over_shards() {
+        let m = ShardedMeta::memory(3, 3, 7);
+        assert!(!m.is_durable());
+        assert_eq!(m.wal_len(), 0);
+        assert_eq!(m.committed_seq(), 0);
+        assert_eq!(m.last_snapshot_unix(), 0);
+        assert_eq!(m.replica_count(), 3);
+        assert_eq!(m.open_upload_count(), 0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Sharded-metadata-plane integration suite: N independent Paxos
+//! groups, each with its own WAL + keyed snapshot lineage under
+//! `data_dir/shard-<i>/`, behind the consistent-hash router.
+//!
+//! Covers the acceptance gates: kill-and-restart byte-identity at
+//! `meta_shards` 1 and 4, a torn WAL tail on ONE shard degrading only
+//! that shard's namespaces, automatic forward migration of a legacy
+//! single-shard layout on first sharded boot, and stable keyset
+//! pagination of the merged global object listing.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use dynostore::container::{DataContainer, FsBackend};
+use dynostore::coordinator::{PullOpts, PushOpts};
+use dynostore::durability::{RecoveryReport, LAYOUT_FILE, WAL_FILE};
+use dynostore::sim::Site;
+use dynostore::util::Rng;
+use dynostore::DynoStore;
+
+const CONTAINERS: usize = 12;
+
+fn test_root(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("dynostore-shard-{}-{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn fleet(root: &Path) -> Vec<Arc<DataContainer>> {
+    (0..CONTAINERS)
+        .map(|i| {
+            DataContainer::new(
+                i as u32,
+                format!("dc{i}"),
+                Site::ChameleonTacc,
+                8 << 20,
+                Box::new(FsBackend::new(root.join(format!("dc{i}")), 1 << 32).unwrap()),
+            )
+        })
+        .collect()
+}
+
+/// One coordinator incarnation over the durable state under `root`, at
+/// a given shard count.
+fn incarnate(
+    root: &Path,
+    meta_shards: usize,
+    snapshot_every: u64,
+) -> (Arc<DynoStore>, RecoveryReport) {
+    let (ds, rec) = DynoStore::builder()
+        .data_dir(root.join("meta"))
+        .meta_shards(meta_shards)
+        .snapshot_every(snapshot_every)
+        .build_durable()
+        .unwrap();
+    let ds = Arc::new(ds);
+    for c in fleet(root) {
+        ds.add_container(c).unwrap();
+    }
+    (ds, rec)
+}
+
+fn object_bytes(i: usize) -> Vec<u8> {
+    Rng::new(17_000 + i as u64).bytes(9_000 + i * 11_113)
+}
+
+/// Users whose namespaces the ring places on pairwise-distinct shards.
+fn users_on_distinct_shards(ds: &DynoStore, want: usize) -> Vec<String> {
+    let mut by_shard: Vec<Option<String>> = vec![None; ds.meta.shard_count()];
+    for i in 0.. {
+        let user = format!("User{i}");
+        let shard = ds.meta.shard_of(&format!("/{user}"));
+        if by_shard[shard].is_none() {
+            by_shard[shard] = Some(user);
+        }
+        if by_shard.iter().filter(|u| u.is_some()).count() >= want {
+            break;
+        }
+    }
+    by_shard.into_iter().flatten().take(want).collect()
+}
+
+/// Kill-and-restart byte-identity, parameterized over the shard count —
+/// the contract must be IDENTICAL at 1 (legacy layout) and 4 (per-shard
+/// keyed lineages).
+fn restart_roundtrip_at(meta_shards: usize) {
+    let root = test_root(&format!("roundtrip{meta_shards}"));
+    let objects_per_user = 4usize;
+    let users;
+    let tokens: Vec<String>;
+    {
+        let (ds, rec) = incarnate(&root, meta_shards, 3);
+        assert!(!rec.recovered());
+        assert_eq!(ds.meta.shard_count(), meta_shards);
+        users = users_on_distinct_shards(&ds, meta_shards.min(3).max(1));
+        tokens = users.iter().map(|u| ds.register_user(u).unwrap()).collect();
+        for (u, token) in users.iter().zip(&tokens) {
+            for i in 0..objects_per_user {
+                ds.push(
+                    token,
+                    &format!("/{u}"),
+                    &format!("o{i}"),
+                    &object_bytes(i),
+                    PushOpts::default(),
+                )
+                .unwrap();
+            }
+        }
+        if meta_shards > 1 {
+            // Distinct namespaces really committed through distinct
+            // Paxos groups: each user's shard counted their commands,
+            // and at least two groups were exercised.
+            let active = (0..meta_shards).filter(|&i| ds.meta.shard_commits(i) > 0).count();
+            assert!(active >= 2, "expected >=2 active shards, got {active}");
+            for u in &users {
+                let shard = ds.meta.shard_of(&format!("/{u}"));
+                assert!(ds.meta.shard(shard).committed_seq() > 0);
+            }
+        }
+        // Hard drop: only fsync'd per-shard state survives.
+    }
+
+    let (ds, rec) = incarnate(&root, meta_shards, 3);
+    assert!(rec.recovered());
+    let verify = ds.verify_recovered_placements().unwrap();
+    assert_eq!(verify.objects, users.len() * objects_per_user);
+    assert_eq!(verify.objects_lost, 0);
+    for (u, token) in users.iter().zip(&tokens) {
+        for i in 0..objects_per_user {
+            let pull =
+                ds.pull(token, &format!("/{u}"), &format!("o{i}"), PullOpts::default()).unwrap();
+            assert_eq!(pull.data, object_bytes(i), "/{u}/o{i} byte-identical after restart");
+            assert!(!pull.degraded);
+        }
+    }
+    // The recovered plane keeps serving writes on every shard.
+    for (u, token) in users.iter().zip(&tokens) {
+        ds.push(token, &format!("/{u}"), "post", b"fresh", PushOpts::default()).unwrap();
+        assert_eq!(
+            ds.pull(token, &format!("/{u}"), "post", PullOpts::default()).unwrap().data,
+            b"fresh"
+        );
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn kill_and_restart_byte_identity_single_shard() {
+    restart_roundtrip_at(1);
+}
+
+#[test]
+fn kill_and_restart_byte_identity_four_shards() {
+    restart_roundtrip_at(4);
+}
+
+#[test]
+fn torn_wal_tail_on_one_shard_leaves_other_shards_intact() {
+    let root = test_root("torn");
+    let objects = 4usize;
+    let users;
+    let tokens: Vec<String>;
+    let victim_shard;
+    {
+        let (ds, _) = incarnate(&root, 4, 1_000); // no snapshots: pure WAL
+        users = users_on_distinct_shards(&ds, 2);
+        assert_eq!(users.len(), 2);
+        tokens = users.iter().map(|u| ds.register_user(u).unwrap()).collect();
+        for (u, token) in users.iter().zip(&tokens) {
+            for i in 0..objects {
+                ds.push(
+                    token,
+                    &format!("/{u}"),
+                    &format!("o{i}"),
+                    &object_bytes(i),
+                    PushOpts::default(),
+                )
+                .unwrap();
+            }
+        }
+        victim_shard = ds.meta.shard_of(&format!("/{}", users[0]));
+        assert_ne!(victim_shard, ds.meta.shard_of(&format!("/{}", users[1])));
+    }
+    // Corrupt the LAST record of the victim shard's WAL only.
+    let wal = root.join("meta").join(format!("shard-{victim_shard}")).join(WAL_FILE);
+    let mut bytes = std::fs::read(&wal).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xA5;
+    std::fs::write(&wal, &bytes).unwrap();
+
+    let (ds, rec) = incarnate(&root, 4, 1_000);
+    assert!(rec.wal_truncated, "aggregate report surfaces the one torn shard");
+    // The victim shard lost exactly its final acked command: o3 of
+    // users[0] is gone from the catalog (treated as never acked)…
+    let torn_name = format!("o{}", objects - 1);
+    assert!(ds
+        .pull(&tokens[0], &format!("/{}", users[0]), &torn_name, PullOpts::default())
+        .is_err());
+    // …its earlier objects replay intact…
+    for i in 0..objects - 1 {
+        let pull = ds
+            .pull(&tokens[0], &format!("/{}", users[0]), &format!("o{i}"), PullOpts::default())
+            .unwrap();
+        assert_eq!(pull.data, object_bytes(i));
+    }
+    // …and the OTHER shard's namespace is completely untouched.
+    for i in 0..objects {
+        let pull = ds
+            .pull(&tokens[1], &format!("/{}", users[1]), &format!("o{i}"), PullOpts::default())
+            .unwrap();
+        assert_eq!(pull.data, object_bytes(i), "intact shard unaffected by the torn one");
+    }
+    // Per-shard recovery reports pin the damage to the victim shard.
+    let reports = ds.recovery_shard_reports().unwrap();
+    assert!(reports[victim_shard].wal_truncated);
+    for (i, r) in reports.iter().enumerate() {
+        if i != victim_shard {
+            assert!(!r.wal_truncated, "shard {i} reported a torn tail it never had");
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn legacy_single_shard_layout_migrates_forward_on_first_sharded_boot() {
+    let root = test_root("migrate");
+    let objects = 5usize;
+    let users;
+    let tokens: Vec<String>;
+    let pre_uuid;
+    {
+        // Seed a LEGACY deployment: meta_shards = 1, monolithic layout.
+        let (ds, _) = incarnate(&root, 1, 4);
+        users = vec!["UserA".to_string(), "UserB".to_string(), "UserC".to_string()];
+        tokens = users.iter().map(|u| ds.register_user(u).unwrap()).collect();
+        for (u, token) in users.iter().zip(&tokens) {
+            for i in 0..objects {
+                ds.push(
+                    token,
+                    &format!("/{u}"),
+                    &format!("o{i}"),
+                    &object_bytes(i),
+                    PushOpts::default(),
+                )
+                .unwrap();
+            }
+        }
+        pre_uuid = ds
+            .meta
+            .read(|s| s.get_latest("UserA", "/UserA", "o0"))
+            .unwrap()
+            .uuid;
+        assert!(root.join("meta").join(WAL_FILE).exists(), "legacy layout on disk");
+        assert!(!root.join("meta").join(LAYOUT_FILE).exists());
+    }
+
+    // First boot at meta_shards = 4: the layout migrates forward
+    // automatically.
+    let (ds, rec) = incarnate(&root, 4, 4);
+    assert!(rec.recovered(), "migrated bases count as recovered state");
+    assert!(root.join("meta").join(LAYOUT_FILE).exists(), "layout marker written");
+    assert!(
+        !root.join("meta").join(WAL_FILE).exists(),
+        "legacy WAL archived out of the data-dir root"
+    );
+    assert!(root.join("meta").join(format!("{WAL_FILE}.pre-shard")).exists());
+    for shard in 0..4 {
+        assert!(
+            root.join("meta").join(format!("shard-{shard}")).exists(),
+            "shard-{shard} lineage created"
+        );
+    }
+    // Every pre-migration object reads byte-identically with its old
+    // token, and identity survived the re-partition.
+    for (u, token) in users.iter().zip(&tokens) {
+        for i in 0..objects {
+            let pull =
+                ds.pull(token, &format!("/{u}"), &format!("o{i}"), PullOpts::default()).unwrap();
+            assert_eq!(pull.data, object_bytes(i), "/{u}/o{i} after migration");
+        }
+    }
+    assert_eq!(
+        ds.meta
+            .read_at("/UserA", |s| s.get_latest("UserA", "/UserA", "o0"))
+            .unwrap()
+            .uuid,
+        pre_uuid,
+        "object identity (uuid) preserved across the migration"
+    );
+    // The migrated plane accepts new writes, restarts, and serves them.
+    ds.push(&tokens[0], "/UserA", "post", b"post-migration", PushOpts::default()).unwrap();
+    drop(ds);
+    let (ds, rec) = incarnate(&root, 4, 4);
+    assert!(rec.recovered());
+    assert_eq!(
+        ds.pull(&tokens[0], "/UserA", "post", PullOpts::default()).unwrap().data,
+        b"post-migration"
+    );
+    drop(ds);
+    // Once sharded, a legacy (meta_shards = 1) reopen is refused rather
+    // than silently serving one shard's slice of the catalog.
+    assert!(
+        DynoStore::builder().data_dir(root.join("meta")).build_durable().is_err(),
+        "reopening a 4-shard dir at meta_shards=1 must refuse"
+    );
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn merged_global_listing_pages_with_stable_cursors_across_shards() {
+    let root = test_root("page");
+    let mut expected = 0usize;
+    let users;
+    {
+        let (ds, _) = incarnate(&root, 4, 5);
+        users = users_on_distinct_shards(&ds, 3);
+        for u in &users {
+            let token = ds.register_user(u).unwrap();
+            for i in 0..4 {
+                ds.push(
+                    &token,
+                    &format!("/{u}"),
+                    &format!("o{i}"),
+                    &object_bytes(i),
+                    PushOpts::default(),
+                )
+                .unwrap();
+                expected += 1;
+            }
+        }
+        // Walk the merged listing with a page size that straddles shard
+        // boundaries.
+        let mut seen: Vec<String> = Vec::new();
+        let mut after: Option<String> = None;
+        loop {
+            let page = ds.meta.global_page(after.as_deref(), 5).unwrap();
+            assert!(page.objects.len() <= 5);
+            for o in &page.objects {
+                seen.push(o.uuid.clone());
+            }
+            if !page.truncated {
+                break;
+            }
+            after = Some(seen.last().unwrap().clone());
+        }
+        assert_eq!(seen.len(), expected, "every object listed exactly once");
+        let mut sorted = seen.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(seen, sorted, "uuid-ordered, duplicate-free walk");
+        // A cursor taken mid-walk stays valid across a restart: uuid
+        // order is stable, so resuming after the 6th uuid returns
+        // exactly the remainder.
+        let cursor = seen[5].clone();
+        drop(ds);
+        let (ds, _) = incarnate(&root, 4, 5);
+        let mut resumed: Vec<String> = Vec::new();
+        let mut after = Some(cursor);
+        loop {
+            let page = ds.meta.global_page(after.as_deref(), 4).unwrap();
+            for o in &page.objects {
+                resumed.push(o.uuid.clone());
+            }
+            if !page.truncated {
+                break;
+            }
+            after = Some(resumed.last().unwrap().clone());
+        }
+        assert_eq!(resumed, seen[6..].to_vec(), "cursor resumes stably after restart");
+        // And the unpaged census agrees.
+        let all = ds.meta.all_objects().unwrap();
+        assert_eq!(all.len(), expected);
+        assert_eq!(all.iter().map(|o| o.uuid.clone()).collect::<Vec<_>>(), seen);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
