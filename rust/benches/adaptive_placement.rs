@@ -1,0 +1,286 @@
+//! Adaptive-placement bench (EXPERIMENTS.md §Tiering): what does the
+//! D-Rex-style (k, n) solver buy over the static policies on
+//! heterogeneous fleets, and what does it cost?
+//!
+//! Three measurements:
+//!
+//! * **Overhead at target** — for each durability target, the storage
+//!   overhead (n/k) of the adaptive choice vs the §VI-D dynamic
+//!   algorithm (fixed k, parity growth) on the paper's 1–25 % AFR
+//!   fleet. Both meet the target; adaptive searches the whole (k, n)
+//!   plane, so its overhead is never higher.
+//! * **Selection latency** — wall time of one `select_adaptive` call
+//!   (the full DP sweep) vs one `select_dynamic` call.
+//! * **Observed-failure adaptation** — on a fleet whose declared AFRs
+//!   are uniform, a container with a failing observed history is
+//!   priced out of the placement by its scorecard alone.
+//!
+//! Plus a small end-to-end tier cycle: hot objects promoted into a
+//! mem-tier cache, with the whole-cycle wall time and chunk moves.
+//!
+//! Emits `BENCH_tiering.json` for CI. `--smoke` shrinks the workload.
+
+use std::sync::Arc;
+
+use dynostore::bench::{fmt_s, measure, Table};
+use dynostore::container::{ContainerInfo, DataContainer, MemBackend};
+use dynostore::coordinator::{PullOpts, PushOpts};
+use dynostore::json::{obj, to_string_pretty, Value};
+use dynostore::sim::{FailureModel, Site};
+use dynostore::tiering::{
+    nines_to_loss, select_adaptive, ScoreBoard, StorageTier, TierCycleOpts,
+};
+use dynostore::policy::select_dynamic;
+use dynostore::util::Rng;
+use dynostore::DynoStore;
+
+fn infos(model: &FailureModel) -> Vec<ContainerInfo> {
+    model
+        .afr
+        .iter()
+        .enumerate()
+        .map(|(i, &afr)| ContainerInfo {
+            id: i as u32,
+            name: format!("dc{i}"),
+            site: Site::ChameleonTacc,
+            alive: true,
+            mem_total: 1 << 30,
+            mem_avail: 1 << 29,
+            fs_total: 1 << 40,
+            fs_avail: 1 << 39,
+            annual_failure_rate: afr,
+        })
+        .collect()
+}
+
+struct SolverRow {
+    fleet: usize,
+    nines: f64,
+    adaptive_n: usize,
+    adaptive_k: usize,
+    adaptive_loss: f64,
+    met_target: bool,
+    dynamic_n: usize,
+    dynamic_k: usize,
+    adaptive_select_s: f64,
+    dynamic_select_s: f64,
+}
+
+fn solver_case(fleet: usize, nines: f64, iters: usize) -> SolverRow {
+    let model = FailureModel::paper_scenario(fleet, 42);
+    let infos = infos(&model);
+    let board = ScoreBoard::memory();
+    let target = nines_to_loss(nines);
+
+    let choice = select_adaptive(&infos, &board, 1 << 20, target).unwrap();
+    let dynamic = select_dynamic(&infos, 1 << 20, 4, target).unwrap();
+    let a = measure(1, iters, || {
+        select_adaptive(&infos, &board, 1 << 20, target).unwrap();
+    });
+    let d = measure(1, iters, || {
+        select_dynamic(&infos, 1 << 20, 4, target).unwrap();
+    });
+
+    SolverRow {
+        fleet,
+        nines,
+        adaptive_n: choice.config.n,
+        adaptive_k: choice.config.k,
+        adaptive_loss: choice.loss_probability,
+        met_target: choice.met_target,
+        dynamic_n: dynamic.config.n,
+        dynamic_k: dynamic.config.k,
+        adaptive_select_s: a.mean_s(),
+        dynamic_select_s: d.mean_s(),
+    }
+}
+
+/// Uniform declared AFRs, but container 3 fails every observed op: the
+/// scorecard alone must push it out of the placement.
+fn observed_adaptation() -> (bool, bool) {
+    let model = FailureModel { afr: vec![0.02; 10] };
+    let infos = infos(&model);
+    let fresh = ScoreBoard::memory();
+    let target = nines_to_loss(3.0);
+    let blind = select_adaptive(&infos, &fresh, 1 << 20, target).unwrap();
+    let includes_before = blind.containers.contains(&3);
+
+    let scored = ScoreBoard::memory();
+    for _ in 0..500 {
+        scored.observe_io(3, false, 0, 0.01);
+    }
+    let seen = select_adaptive(&infos, &scored, 1 << 20, target).unwrap();
+    let includes_after = seen.containers.contains(&3);
+    (includes_before, includes_after)
+}
+
+struct TierCycleRow {
+    objects: usize,
+    hot_objects: usize,
+    promoted: usize,
+    chunks_moved: usize,
+    cycle_s: f64,
+}
+
+/// End-to-end: a 12+2 fleet where the two extra containers declare the
+/// mem tier, a skewed workload heats a quarter of the objects, one
+/// cycle promotes them.
+fn tier_cycle_case(objects: usize) -> TierCycleRow {
+    let ds = Arc::new(DynoStore::builder().build());
+    for i in 0..12u32 {
+        ds.add_container(DataContainer::new(
+            i,
+            format!("dc{i}"),
+            Site::ChameleonTacc,
+            8 << 20,
+            Box::new(MemBackend::new(1 << 32)),
+        ))
+        .unwrap();
+    }
+    let token = ds.register_user("Bench").unwrap();
+    let data = Rng::new(99).bytes(64 << 10);
+    for i in 0..objects {
+        ds.push(&token, "/Bench", &format!("o{i}"), &data, PushOpts::default()).unwrap();
+    }
+    for i in 12..14u32 {
+        ds.add_container(DataContainer::new(
+            i,
+            format!("cache{i}"),
+            Site::ChameleonUc,
+            8 << 20,
+            Box::new(MemBackend::new(1 << 32)),
+        ))
+        .unwrap();
+        ds.set_container_tier(i, StorageTier::Mem).unwrap();
+    }
+    // Zipf-ish skew: the first quarter of the objects takes the heat.
+    let hot_objects = (objects / 4).max(1);
+    for i in 0..hot_objects {
+        for _ in 0..4 {
+            ds.pull(&token, "/Bench", &format!("o{i}"), PullOpts::default()).unwrap();
+        }
+    }
+    let opts = TierCycleOpts { max_objects: objects, max_moves: objects * 2, ..TierCycleOpts::default() };
+    let t0 = std::time::Instant::now();
+    let report = ds.tier_cycle(opts).unwrap();
+    let cycle_s = t0.elapsed().as_secs_f64();
+    // Promoted objects still read back exactly.
+    let check = ds.pull(&token, "/Bench", "o0", PullOpts::default()).unwrap();
+    assert_eq!(check.data, data);
+    TierCycleRow {
+        objects,
+        hot_objects,
+        promoted: report.promoted,
+        chunks_moved: report.chunks_moved,
+        cycle_s,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 5 } else { 50 };
+    let cycle_objects = if smoke { 16 } else { 64 };
+
+    println!(
+        "adaptive_placement: D-Rex (k, n) solver vs static/dynamic policies \
+         ({iters} iters/case{})",
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let cases: &[(usize, f64)] =
+        &[(10, 2.0), (10, 3.0), (16, 2.0), (16, 3.0), (16, 4.0)];
+    let rows: Vec<SolverRow> =
+        cases.iter().map(|&(fleet, nines)| solver_case(fleet, nines, iters)).collect();
+
+    let mut table = Table::new(
+        "Adaptive vs dynamic at equal durability target (paper AFR fleet)",
+        &["fleet", "nines", "adaptive (n,k)", "overhead", "loss", "dynamic (n,k)", "overhead", "adaptive select", "dynamic select"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.fleet.to_string(),
+            format!("{:.0}", r.nines),
+            format!("({},{})", r.adaptive_n, r.adaptive_k),
+            format!("{:.3}x", r.adaptive_n as f64 / r.adaptive_k as f64),
+            format!("{:.2e}", r.adaptive_loss),
+            format!("({},{})", r.dynamic_n, r.dynamic_k),
+            format!("{:.3}x", r.dynamic_n as f64 / r.dynamic_k as f64),
+            fmt_s(r.adaptive_select_s),
+            fmt_s(r.dynamic_select_s),
+        ]);
+    }
+    table.print();
+
+    // Shape assertions: both meet the target where feasible, and the
+    // full-plane search never pays more storage than fixed-k growth.
+    for r in &rows {
+        assert!(r.met_target, "fleet {} nines {} infeasible", r.fleet, r.nines);
+        assert!(r.adaptive_loss <= nines_to_loss(r.nines) * (1.0 + 1e-12));
+        assert!(
+            r.adaptive_n * r.dynamic_k <= r.dynamic_n * r.adaptive_k,
+            "adaptive overhead above dynamic at fleet {} nines {}",
+            r.fleet,
+            r.nines
+        );
+    }
+
+    let (includes_before, includes_after) = observed_adaptation();
+    println!(
+        "observed-failure adaptation: flaky container placed with a fresh scorecard: {includes_before}, \
+         after 500 observed failures: {includes_after}"
+    );
+    assert!(includes_before, "uniform declared AFRs should start by including dc3");
+    assert!(!includes_after, "scorecard history must price the flaky container out");
+
+    let cycle = tier_cycle_case(cycle_objects);
+    println!(
+        "tier cycle: {} objects ({} hot), promoted {} with {} chunk moves in {}",
+        cycle.objects,
+        cycle.hot_objects,
+        cycle.promoted,
+        cycle.chunks_moved,
+        fmt_s(cycle.cycle_s)
+    );
+    assert_eq!(cycle.promoted, cycle.hot_objects, "every hot object promoted");
+    assert!(cycle.chunks_moved > 0);
+
+    let solver_json: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("fleet", r.fleet.into()),
+                ("nines", r.nines.into()),
+                ("adaptive_n", r.adaptive_n.into()),
+                ("adaptive_k", r.adaptive_k.into()),
+                ("adaptive_overhead_x", (r.adaptive_n as f64 / r.adaptive_k as f64).into()),
+                ("adaptive_loss", r.adaptive_loss.into()),
+                ("dynamic_n", r.dynamic_n.into()),
+                ("dynamic_k", r.dynamic_k.into()),
+                ("dynamic_overhead_x", (r.dynamic_n as f64 / r.dynamic_k as f64).into()),
+                ("adaptive_select_s", r.adaptive_select_s.into()),
+                ("dynamic_select_s", r.dynamic_select_s.into()),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", "adaptive_placement".into()),
+        ("smoke", smoke.into()),
+        ("solver_rows", Value::Arr(solver_json)),
+        ("observed_adaptation_prices_out_flaky", (!includes_after).into()),
+        (
+            "tier_cycle",
+            obj(vec![
+                ("objects", cycle.objects.into()),
+                ("hot_objects", cycle.hot_objects.into()),
+                ("promoted", cycle.promoted.into()),
+                ("chunks_moved", cycle.chunks_moved.into()),
+                ("cycle_s", cycle.cycle_s.into()),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_tiering.json";
+    match std::fs::write(path, to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -288,13 +288,37 @@ pub trait ObjectStore: Send + Sync {
 }
 
 /// Parse the `x-dyno-policy` spelling of a resilience policy:
-/// `"k,n"` (erasure IDA(n,k), e.g. `7,10`) or `"regular"` (single
-/// whole-object copy). Shared by the gateway (header → `PushOpts`), the
-/// remote client (policy → header), and the CLI (`--policy`).
+/// `"k,n"` (erasure IDA(n,k), e.g. `7,10`), `"regular"` (single
+/// whole-object copy), or `"adaptive"` / `"adaptive:<nines>"`
+/// (scorecard-driven per-object (k,n), `crate::tiering`; the optional
+/// suffix is the durability target in nines, default 3 = 99.9%).
+/// Shared by the gateway (header → `PushOpts`), the remote client
+/// (policy → header), and the CLI (`--policy`).
 pub fn parse_policy(s: &str) -> Result<ResiliencePolicy> {
     let s = s.trim();
     if s.eq_ignore_ascii_case("regular") {
         return Ok(ResiliencePolicy::Regular);
+    }
+    if s.eq_ignore_ascii_case("adaptive") {
+        return Ok(ResiliencePolicy::Adaptive {
+            nines: crate::tiering::DEFAULT_DURABILITY_NINES,
+        });
+    }
+    if let Some(rest) = s
+        .strip_prefix("adaptive:")
+        .or_else(|| s.strip_prefix("ADAPTIVE:"))
+        .or_else(|| s.strip_prefix("Adaptive:"))
+    {
+        let nines: f64 = rest
+            .trim()
+            .parse()
+            .map_err(|_| Error::Invalid(format!("bad durability nines in '{s}'")))?;
+        if !nines.is_finite() || nines <= 0.0 || nines > 12.0 {
+            return Err(Error::Invalid(format!(
+                "durability nines must be in (0, 12], got '{s}'"
+            )));
+        }
+        return Ok(ResiliencePolicy::Adaptive { nines });
     }
     let (k, n) = s
         .split_once(',')
@@ -319,6 +343,7 @@ pub fn policy_header(policy: &ResiliencePolicy) -> Option<String> {
         ResiliencePolicy::Regular => Some("regular".into()),
         ResiliencePolicy::Fixed(cfg) => Some(format!("{},{}", cfg.k, cfg.n)),
         ResiliencePolicy::Dynamic { .. } => None,
+        ResiliencePolicy::Adaptive { nines } => Some(format!("adaptive:{nines}")),
     }
 }
 
@@ -344,5 +369,28 @@ mod tests {
         assert!(
             policy_header(&ResiliencePolicy::Dynamic { k: 4, target_loss: 0.01 }).is_none()
         );
+    }
+
+    #[test]
+    fn adaptive_policy_spelling() {
+        assert_eq!(
+            parse_policy("adaptive").unwrap(),
+            ResiliencePolicy::Adaptive { nines: 3.0 }
+        );
+        assert_eq!(
+            parse_policy("ADAPTIVE").unwrap(),
+            ResiliencePolicy::Adaptive { nines: 3.0 }
+        );
+        assert_eq!(
+            parse_policy("adaptive:4.5").unwrap(),
+            ResiliencePolicy::Adaptive { nines: 4.5 }
+        );
+        // Round-trips through its header spelling.
+        let p = ResiliencePolicy::Adaptive { nines: 2.0 };
+        assert_eq!(parse_policy(&policy_header(&p).unwrap()).unwrap(), p);
+        assert!(parse_policy("adaptive:0").is_err(), "zero nines rejected");
+        assert!(parse_policy("adaptive:-1").is_err());
+        assert!(parse_policy("adaptive:forty").is_err());
+        assert!(parse_policy("adaptive:99").is_err(), "absurd target rejected");
     }
 }

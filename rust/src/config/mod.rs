@@ -42,6 +42,7 @@ use crate::json::{parse, Value};
 use crate::placement::Weights;
 use crate::policy::ResiliencePolicy;
 use crate::sim::{Device, FaultChannel, FaultPlan, FaultSpec, Site};
+use crate::tiering::{StorageTier, TierCycleOpts, DEFAULT_DURABILITY_NINES};
 use crate::{Error, Result};
 
 /// Parsed deployment configuration.
@@ -94,6 +95,18 @@ pub struct Config {
     /// Connection-core knobs: server engine, admission caps, keep-alive
     /// windows, client pooling (`"net": {...}`).
     pub net: NetConfig,
+    /// Durability target in nines for the adaptive policy (`"policy":
+    /// {"type": "adaptive"}`); also the default when a per-push
+    /// `x-dyno-policy: adaptive` header omits its own target.
+    pub durability_nines: f64,
+    /// Per-local-container storage tiers, parallel to `containers`
+    /// (None = the default `fs` tier; entries spell `"tier": "mem" |
+    /// "ssd" | "fs" | "cold"`). Declaring any cache tier (mem/ssd)
+    /// arms the promotion/demotion cycle.
+    pub container_tiers: Vec<Option<StorageTier>>,
+    /// Promotion/demotion knobs (`"tiering": {"hot_rate": …,
+    /// "cold_after_secs": …, "max_objects": …, "max_moves": …}`).
+    pub tier_cycle: TierCycleOpts,
 }
 
 /// Connection-core configuration (`"net"` object): which server engine
@@ -164,6 +177,9 @@ impl Default for Config {
             conn_timeout_secs: crate::net::DEFAULT_CONN_TIMEOUT.as_secs(),
             part_size_mb: (crate::gateway::DEFAULT_STREAM_PART_SIZE >> 20) as u64,
             net: NetConfig::default(),
+            durability_nines: DEFAULT_DURABILITY_NINES,
+            container_tiers: Vec::new(),
+            tier_cycle: TierCycleOpts::default(),
         }
     }
 }
@@ -182,7 +198,17 @@ impl Config {
             return Err(Error::Config("metadata_replicas must be odd".into()));
         }
         cfg.seed = v.opt_u64("seed", cfg.seed);
-        cfg.policy = parse_policy(v.get("policy"))?;
+        cfg.durability_nines = v.opt_f64("durability_nines", cfg.durability_nines);
+        if !cfg.durability_nines.is_finite()
+            || cfg.durability_nines <= 0.0
+            || cfg.durability_nines > 12.0
+        {
+            return Err(Error::Config(format!(
+                "durability_nines must be in (0, 12], got {}",
+                cfg.durability_nines
+            )));
+        }
+        cfg.policy = parse_policy(v.get("policy"), cfg.durability_nines)?;
         let w = v.get("weights");
         cfg.weights = Weights {
             w1_mem: w.opt_f64("w1_mem", 0.5),
@@ -230,6 +256,14 @@ impl Config {
         // 0 is legal here: it disables client pooling entirely.
         cfg.net.client_pool_per_host =
             net.opt_u64("client_pool_per_host", cfg.net.client_pool_per_host as u64) as usize;
+        let tiering = v.get("tiering");
+        cfg.tier_cycle.hot_rate = tiering.opt_f64("hot_rate", cfg.tier_cycle.hot_rate);
+        cfg.tier_cycle.cold_after_secs =
+            tiering.opt_u64("cold_after_secs", cfg.tier_cycle.cold_after_secs);
+        cfg.tier_cycle.max_objects =
+            tiering.opt_u64("max_objects", cfg.tier_cycle.max_objects as u64) as usize;
+        cfg.tier_cycle.max_moves =
+            tiering.opt_u64("max_moves", cfg.tier_cycle.max_moves as u64) as usize;
         if let Some(arr) = v.get("containers").as_arr() {
             for c in arr {
                 // An entry with an `endpoint` is a remote agent; local
@@ -243,6 +277,13 @@ impl Config {
                                     .into(),
                             ));
                         }
+                        if c.get("tier").as_str().is_some() {
+                            return Err(Error::Config(
+                                "storage tiers only apply to local containers \
+                                 (a remote agent's id is unknown until connect)"
+                                    .into(),
+                            ));
+                        }
                         cfg.remotes.push(ep.to_string());
                     }
                     None => {
@@ -250,6 +291,10 @@ impl Config {
                         cfg.fault_specs.push(match c.get("faults") {
                             &Value::Null => None,
                             f => Some(FaultSpec::from_json(f)?),
+                        });
+                        cfg.container_tiers.push(match c.get("tier").as_str() {
+                            Some(t) => Some(StorageTier::parse(t)?),
+                            None => None,
                         });
                     }
                 }
@@ -302,6 +347,13 @@ impl Config {
                 Arc::new(LocalChannel::new(c));
             ds.add_channel(FaultChannel::wrap_if_scripted(channel, &plan))?;
         }
+        // Storage tiers line up with local container ids the same way
+        // fault_specs do: deploy_containers assigns ids in spec order.
+        for (i, tier) in self.container_tiers.iter().enumerate() {
+            if let Some(t) = tier {
+                ds.set_container_tier(i as u32, *t)?;
+            }
+        }
         // Remote agents must be reachable at build time: the channel
         // adopts the agent's self-reported identity (id, site, capacity).
         for endpoint in &self.remotes {
@@ -339,7 +391,7 @@ impl Config {
     }
 }
 
-fn parse_policy(v: &Value) -> Result<ResiliencePolicy> {
+fn parse_policy(v: &Value, default_nines: f64) -> Result<ResiliencePolicy> {
     match v.opt_str("type", "erasure") {
         "regular" => Ok(ResiliencePolicy::Regular),
         "erasure" => {
@@ -352,6 +404,11 @@ fn parse_policy(v: &Value) -> Result<ResiliencePolicy> {
         "dynamic" => Ok(ResiliencePolicy::Dynamic {
             k: v.opt_u64("k", 4) as usize,
             target_loss: v.opt_f64("target_loss", crate::policy::PAPER_TARGET_LOSS),
+        }),
+        // Scorecard-driven per-object (k, n): the policy block may pin
+        // its own target, else the deployment's `durability_nines`.
+        "adaptive" => Ok(ResiliencePolicy::Adaptive {
+            nines: v.opt_f64("nines", default_nines),
         }),
         other => Err(Error::Config(format!("unknown policy '{other}'"))),
     }
@@ -770,5 +827,68 @@ mod tests {
         let cfg = Config::from_json("{}").unwrap();
         assert_eq!(cfg.policy, ResiliencePolicy::Fixed(ErasureConfig::new(10, 7)));
         assert_eq!(cfg.metadata_replicas, 3);
+        assert_eq!(cfg.durability_nines, 3.0);
+        assert!(cfg.container_tiers.is_empty());
+    }
+
+    #[test]
+    fn adaptive_policy_and_nines_config() {
+        let cfg = Config::from_json(r#"{"policy": {"type": "adaptive"}}"#).unwrap();
+        assert_eq!(cfg.policy, ResiliencePolicy::Adaptive { nines: 3.0 });
+        // The deployment-wide target feeds the policy default...
+        let cfg = Config::from_json(
+            r#"{"durability_nines": 4.0, "policy": {"type": "adaptive"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.policy, ResiliencePolicy::Adaptive { nines: 4.0 });
+        // ...and the policy block may pin its own.
+        let cfg = Config::from_json(
+            r#"{"durability_nines": 4.0, "policy": {"type": "adaptive", "nines": 2.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.policy, ResiliencePolicy::Adaptive { nines: 2.5 });
+        assert_eq!(cfg.durability_nines, 4.0);
+        assert!(Config::from_json(r#"{"durability_nines": 0}"#).is_err());
+        assert!(Config::from_json(r#"{"durability_nines": 99}"#).is_err());
+    }
+
+    #[test]
+    fn container_tiers_parse_and_apply() {
+        let cfg = Config::from_json(
+            r#"{"containers": [
+                {"name": "hot0", "tier": "mem"},
+                {"name": "warm0", "tier": "ssd"},
+                {"name": "dc0"},
+                {"name": "cold0", "tier": "cold"}
+            ],
+            "tiering": {"hot_rate": 5.0, "cold_after_secs": 120, "max_moves": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.container_tiers,
+            vec![
+                Some(StorageTier::Mem),
+                Some(StorageTier::Ssd),
+                None,
+                Some(StorageTier::Cold)
+            ]
+        );
+        assert_eq!(cfg.tier_cycle.hot_rate, 5.0);
+        assert_eq!(cfg.tier_cycle.cold_after_secs, 120);
+        assert_eq!(cfg.tier_cycle.max_moves, 8);
+        let ds = cfg.build().unwrap();
+        assert_eq!(ds.container_tier(0), StorageTier::Mem);
+        assert_eq!(ds.container_tier(1), StorageTier::Ssd);
+        assert_eq!(ds.container_tier(2), StorageTier::Fs, "untagged = default fs");
+        assert_eq!(ds.container_tier(3), StorageTier::Cold);
+        // Unknown tier names and tiers on remote entries are rejected.
+        assert!(Config::from_json(
+            r#"{"containers": [{"name": "x", "tier": "tape"}]}"#
+        )
+        .is_err());
+        assert!(Config::from_json(
+            r#"{"containers": [{"endpoint": "h:1", "tier": "mem"}]}"#
+        )
+        .is_err());
     }
 }

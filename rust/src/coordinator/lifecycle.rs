@@ -54,20 +54,22 @@ impl Default for RebalanceOpts {
     }
 }
 
-/// One chunk migration the engine should attempt.
-struct ChunkMove {
-    index: u8,
-    from: u32,
-    to: u32,
+/// One chunk migration the engine should attempt. `pub(crate)` so the
+/// tiering plane (`crate::tiering::tiers`) can plan cross-tier moves
+/// through the same engine.
+pub(crate) struct ChunkMove {
+    pub(crate) index: u8,
+    pub(crate) from: u32,
+    pub(crate) to: u32,
 }
 
 /// What one `migrate_erasure_chunks` / `migrate_single` call achieved.
 #[derive(Default)]
-struct MigrateOutcome {
-    moved: usize,
-    reconstructed: usize,
-    failed: usize,
-    chunk_io: Vec<ChunkIoReport>,
+pub(crate) struct MigrateOutcome {
+    pub(crate) moved: usize,
+    pub(crate) reconstructed: usize,
+    pub(crate) failed: usize,
+    pub(crate) chunk_io: Vec<ChunkIoReport>,
 }
 
 impl DynoStore {
@@ -301,7 +303,7 @@ impl DynoStore {
 
     /// Wire/disk bytes of one packed chunk of a `size`-byte object under
     /// an (n, k) config — what migration planning debits per move.
-    fn packed_chunk_len(&self, n: usize, k: usize, size: u64) -> Result<u64> {
+    pub(crate) fn packed_chunk_len(&self, n: usize, k: usize, size: u64) -> Result<u64> {
         let codec = self.codec(ErasureConfig::new(n, k))?;
         Ok((codec.chunk_len(size as usize) + CHUNK_HEADER_LEN) as u64)
     }
@@ -311,7 +313,7 @@ impl DynoStore {
     /// write → verify → Paxos commit → delete source. Failed moves are
     /// dropped from the commit and leave the old placement entries
     /// intact; the object keeps decoding throughout.
-    fn migrate_erasure_chunks(
+    pub(crate) fn migrate_erasure_chunks(
         &self,
         meta: &ObjectMeta,
         n: usize,
@@ -831,6 +833,7 @@ impl DynoStore {
             sim_s: if read_ok { read_sim_s } else { 0.0 },
             wall_s: read_wall_s,
         });
+        self.tiering.scores.observe_io(from, read_ok, meta.size, read_wall_s);
         if !read_ok {
             // A Regular object has no parity to rebuild from: the copy
             // stays where it is and the drain reports the failure.
@@ -875,6 +878,7 @@ impl DynoStore {
             sim_s: write_sim_s,
             wall_s: write_wall_s,
         });
+        self.tiering.scores.observe_io(target.id, verified, meta.size, write_wall_s);
         if !verified {
             out.failed += 1;
             return Ok(out);

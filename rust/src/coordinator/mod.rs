@@ -6,7 +6,7 @@
 //! simulated wide-area time of the operation (see `crate::sim` on why
 //! time is simulated while the data plane is real).
 
-mod lifecycle;
+pub(crate) mod lifecycle;
 mod ops;
 mod recovery;
 mod reports;
@@ -42,6 +42,7 @@ use crate::policy::ResiliencePolicy;
 use crate::registry::Registry;
 use crate::runtime::PjrtGfBackend;
 use crate::sim::{Site, Wan};
+use crate::tiering::{ScorePenalty, TieringPlane};
 use crate::{Error, Result};
 
 /// Which GF(2^8) engine drives the erasure hot path.
@@ -133,6 +134,12 @@ pub struct Metrics {
     pub multipart_inits: AtomicU64,
     pub multipart_completes: AtomicU64,
     pub multipart_aborts: AtomicU64,
+    /// Adaptive (k, n) selections performed (`policy: "adaptive"`).
+    pub adaptive_selections: AtomicU64,
+    /// Objects that had chunks promoted into / demoted out of a cache
+    /// tier by `tier_cycle`.
+    pub tier_promotions: AtomicU64,
+    pub tier_demotions: AtomicU64,
 }
 
 impl Metrics {
@@ -164,6 +171,9 @@ impl Metrics {
         m.insert("multipart_inits", self.multipart_inits.load(Ordering::Relaxed));
         m.insert("multipart_completes", self.multipart_completes.load(Ordering::Relaxed));
         m.insert("multipart_aborts", self.multipart_aborts.load(Ordering::Relaxed));
+        m.insert("adaptive_selections", self.adaptive_selections.load(Ordering::Relaxed));
+        m.insert("tier_promotions", self.tier_promotions.load(Ordering::Relaxed));
+        m.insert("tier_demotions", self.tier_demotions.load(Ordering::Relaxed));
         m
     }
 
@@ -198,6 +208,9 @@ pub struct DynoStore {
     pub gateway_site: Site,
     pub default_policy: ResiliencePolicy,
     pub metrics: Metrics,
+    /// The D-Rex plane: container scorecards, tier declarations, and
+    /// per-object access heat (shared with the scrubber and gateway).
+    pub tiering: Arc<TieringPlane>,
     engine: GfEngine,
     codecs: Mutex<HashMap<ErasureConfig, Arc<Codec<Arc<dyn GfBackend>>>>>,
     backend: Arc<dyn GfBackend>,
@@ -229,6 +242,7 @@ pub struct Builder {
     data_dir: Option<std::path::PathBuf>,
     snapshot_every: u64,
     meta_shards: usize,
+    score_placement: Option<bool>,
 }
 
 impl Default for Builder {
@@ -246,6 +260,7 @@ impl Default for Builder {
             data_dir: None,
             snapshot_every: DEFAULT_SNAPSHOT_EVERY,
             meta_shards: 1,
+            score_placement: None,
         }
     }
 }
@@ -325,6 +340,15 @@ impl Builder {
         self
     }
 
+    /// Force the scorecard placement penalty on or off. By default it
+    /// follows the policy: installed for `policy: "adaptive"`, absent
+    /// otherwise — so static deployments keep the PR 9 placer
+    /// byte-identical.
+    pub fn score_placement(mut self, on: bool) -> Self {
+        self.score_placement = Some(on);
+        self
+    }
+
     /// Build an in-memory deployment. Panics if [`Builder::data_dir`]
     /// was set — durable builds can fail on I/O and must go through
     /// [`Builder::build_durable`].
@@ -382,16 +406,28 @@ impl Builder {
             agg
         });
         let report = recovery.clone().unwrap_or_default();
+        let tiering = Arc::new(match &self.data_dir {
+            Some(dir) => TieringPlane::durable(dir.join("tiering"))?,
+            None => TieringPlane::memory(),
+        });
+        let score_placement = self
+            .score_placement
+            .unwrap_or(matches!(self.policy, ResiliencePolicy::Adaptive { .. }));
+        let mut placer = Placer::new(self.weights);
+        if score_placement {
+            placer = placer.with_metric(Box::new(ScorePenalty::new(tiering.clone())));
+        }
         Ok((
             DynoStore {
                 registry: Registry::new(),
                 meta,
                 tokens: TokenService::new(&self.secret),
-                placer: Placer::new(self.weights),
+                placer,
                 wan: self.wan,
                 gateway_site: self.gateway_site,
                 default_policy: self.policy,
                 metrics: Metrics::default(),
+                tiering,
                 engine: self.engine,
                 codecs: Mutex::new(HashMap::new()),
                 backend,

@@ -24,6 +24,7 @@ use crate::paxos::{CommandOutcome, MetaCommand};
 use crate::policy::{select_dynamic, ResiliencePolicy};
 use crate::resilience::Deadline;
 use crate::sim::{cost, Site};
+use crate::tiering::{nines_to_loss, select_adaptive};
 use crate::util::{now_ns, to_hex, unix_secs};
 use crate::{Error, Result};
 
@@ -280,7 +281,7 @@ impl DynoStore {
             };
             ((now_ns() - t0) as f64 / 1e9, res)
         })?;
-        Ok(outs
+        let xfers: Vec<ChunkXfer> = outs
             .into_iter()
             .zip(labels)
             .map(|((wall_s, res), (index, cid, transport, site, wire_len))| ChunkXfer {
@@ -292,7 +293,18 @@ impl DynoStore {
                 wall_s,
                 res,
             })
-            .collect())
+            .collect();
+        // Every chunk transfer the coordinator performs flows through
+        // here — feed the D-Rex scorecards (error EWMA, latency,
+        // bandwidth) before handing the batch back.
+        for x in &xfers {
+            let bytes = match &x.res {
+                Ok((Some(data), _)) if x.wire_len == 0 => data.len() as u64,
+                _ => x.wire_len as u64,
+            };
+            self.tiering.scores.observe_io(x.cid, x.res.is_ok(), bytes, x.wall_s);
+        }
+        Ok(xfers)
     }
 
     /// Collect up to `k` valid chunks of one erasure-coded unit (a
@@ -395,8 +407,12 @@ impl DynoStore {
                     let channel = self.registry.get(target.id)?;
                     let key = object_key(&hash, len);
                     let t0 = now_ns();
-                    let dev_s = channel.put_deadline(&key, data, ctx.deadline)?.sim_s;
+                    let put_res = channel.put_deadline(&key, data, ctx.deadline);
                     let wall_s = (now_ns() - t0) as f64 / 1e9;
+                    // The Regular path bypasses dispatch_chunk_io, so
+                    // it feeds the scorecards directly.
+                    self.tiering.scores.observe_io(target.id, put_res.is_ok(), len, wall_s);
+                    let dev_s = put_res?.sim_s;
                     let net_s =
                         self.wan.transfer_s(self.gateway_site, channel.site(), len, 1);
                     let chunk_io = vec![ChunkIoReport {
@@ -423,6 +439,26 @@ impl DynoStore {
                     let chunk_size = (len / k as u64).max(1);
                     let infos = self.registry.placement_infos();
                     let choice = select_dynamic(&infos, chunk_size, k, target_loss)?;
+                    self.disperse(data, &hash, choice.config, Some(choice.containers), ctx.deadline)?
+                }
+                ResiliencePolicy::Adaptive { nines } => {
+                    let infos = self.registry.placement_infos();
+                    let choice = select_adaptive(
+                        &infos,
+                        &self.tiering.scores,
+                        len,
+                        nines_to_loss(nines),
+                    )?;
+                    if !choice.met_target {
+                        crate::log_warn!(
+                            "adaptive placement best-effort: loss {:.2e} misses target {:.2e}",
+                            choice.loss_probability,
+                            choice.target_loss
+                        );
+                    }
+                    self.metrics
+                        .adaptive_selections
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     self.disperse(data, &hash, choice.config, Some(choice.containers), ctx.deadline)?
                 }
             };
@@ -702,6 +738,19 @@ impl DynoStore {
                 let chunk_size = (data.len() as u64 / k as u64).max(1);
                 let infos = self.registry.placement_infos();
                 let choice = select_dynamic(&infos, chunk_size, k, target_loss)?;
+                (choice.config, Some(choice.containers))
+            }
+            ResiliencePolicy::Adaptive { nines } => {
+                let infos = self.registry.placement_infos();
+                let choice = select_adaptive(
+                    &infos,
+                    &self.tiering.scores,
+                    data.len() as u64,
+                    nines_to_loss(nines),
+                )?;
+                self.metrics
+                    .adaptive_selections
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 (choice.config, Some(choice.containers))
             }
         };
@@ -1037,6 +1086,7 @@ impl DynoStore {
                 .meta
                 .read(|s| s.get_version(&claims.subject, collection, name, v))?,
         };
+        self.tiering.record_access(&meta.uuid);
 
         let (data, collect_s, decode_s, decode_wall_s, fetched, degraded, chunk_io) =
             match &meta.placement {
@@ -1092,6 +1142,14 @@ impl DynoStore {
                                     sim_s: got.as_ref().map_or(0.0, |&(_, s)| s),
                                     wall_s,
                                 });
+                                // Single-copy reads bypass
+                                // dispatch_chunk_io; score them here.
+                                self.tiering.scores.observe_io(
+                                    cid,
+                                    got.is_some(),
+                                    meta.size,
+                                    wall_s,
+                                );
                                 got
                             }
                             Err(e) => {
@@ -1354,6 +1412,7 @@ impl DynoStore {
         };
         match &meta.placement {
             ObjectPlacement::Striped { parts } => {
+                self.tiering.record_access(&meta.uuid);
                 let parts = parts.clone();
                 self.metrics.pulls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 self.metrics
@@ -1531,6 +1590,9 @@ impl DynoStore {
             let (fast, attempts) =
                 self.range_fast_path(&meta, chunk_len, j0, j1, start, end, chunks, &opts)?;
             if let Some(report) = fast {
+                // The buffered fallback below records through pull();
+                // the fast path records its own access.
+                self.tiering.record_access(&meta.uuid);
                 return Ok(report);
             }
             // The failed attempts stay in the final report, so the
@@ -1706,6 +1768,7 @@ impl DynoStore {
         };
         let mut deleted = 0;
         for meta in &metas {
+            self.tiering.forget_access(&meta.uuid);
             deleted += self.delete_stored(meta);
         }
         Ok(deleted)
@@ -1721,6 +1784,7 @@ impl DynoStore {
             other => return Err(Error::Consensus(format!("unexpected outcome {other:?}"))),
         };
         for meta in &metas {
+            self.tiering.forget_access(&meta.uuid);
             self.delete_stored(meta);
         }
         self.metrics

@@ -105,6 +105,11 @@ impl DynoStore {
             .scrub_chunks_healed
             .fetch_add(report.chunks_healed as u64, Ordering::Relaxed);
         self.metrics.scrub_lost.fetch_add(report.lost as u64, Ordering::Relaxed);
+        // A scrub cycle is a natural durability point for the D-Rex
+        // scorecards fed during the sweep.
+        if let Err(e) = self.tiering.scores.flush() {
+            crate::log_warn!("scorecard flush after scrub failed: {e}");
+        }
         Ok(report)
     }
 
@@ -119,15 +124,19 @@ impl DynoStore {
                     return Ok(());
                 };
                 if !channel.is_alive() {
+                    self.tiering.scores.observe_probe(*container, false);
                     report.unreachable += 1;
                     return Ok(());
                 }
+                self.tiering.scores.observe_probe(*container, true);
                 let key = object_key(&meta.sha3, meta.size);
                 match channel.get(&key) {
                     Ok(out) if sha3_256(&out.data.unwrap_or_default()) == meta.sha3 => {
+                        self.tiering.scores.observe_scrub(*container, true);
                         report.chunks_verified += 1;
                     }
                     _ => {
+                        self.tiering.scores.observe_scrub(*container, false);
                         report.corrupt_found += 1;
                         report.lost += 1;
                     }
@@ -275,13 +284,20 @@ impl DynoStore {
         let mut unreachable: Vec<(u8, u32)> = Vec::new();
         for &(idx, cid) in chunks {
             match self.registry.get(cid) {
-                Ok(channel) if channel.is_alive() => jobs.push(ChunkJob {
-                    index: idx,
-                    channel,
-                    key: chunk_key(sha3, size, idx),
-                    data: None,
-                }),
-                _ => unreachable.push((idx, cid)),
+                Ok(channel) if channel.is_alive() => {
+                    self.tiering.scores.observe_probe(cid, true);
+                    jobs.push(ChunkJob {
+                        index: idx,
+                        channel,
+                        key: chunk_key(sha3, size, idx),
+                        data: None,
+                    });
+                }
+                Ok(_) => {
+                    self.tiering.scores.observe_probe(cid, false);
+                    unreachable.push((idx, cid));
+                }
+                Err(_) => unreachable.push((idx, cid)),
             }
         }
         let mut valid: Vec<(u8, u32)> = Vec::new();
@@ -301,6 +317,7 @@ impl DynoStore {
                 },
                 _ => false,
             };
+            self.tiering.scores.observe_scrub(xfer.cid, good);
             if good {
                 valid.push((xfer.index, xfer.cid));
             } else {
@@ -438,6 +455,11 @@ impl ScrubberHandle {
                     // Scrub errors are transient (metadata contention,
                     // transports down); the next cycle retries.
                     let _ = ds.scrub_cycle(sample);
+                    // Piggyback a tiering pass on the anti-entropy
+                    // cadence when any container declares a cache tier.
+                    if ds.tiering.has_tiers() {
+                        let _ = ds.tier_cycle(crate::tiering::TierCycleOpts::default());
+                    }
                     // Sleep in short slices so stop() returns promptly.
                     let mut slept = Duration::ZERO;
                     while slept < interval && !flag.load(Ordering::Relaxed) {

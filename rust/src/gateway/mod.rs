@@ -198,6 +198,7 @@ fn route(store: &Arc<DynoStore>, req: HttpRequest, net: &NetView) -> HttpRespons
         }
         ("POST", path) if path.starts_with("/admin/undrain/") => admin_undrain(store, &req),
         ("POST", "/admin/scrub") => admin_scrub(store, &req),
+        ("POST", "/admin/tier-cycle") => admin_tier_cycle(store, &req),
         (method, path) if path.starts_with("/v1/objects/") => {
             v1::object_route(store, method, &req, path, &query, false)
         }
@@ -295,6 +296,24 @@ fn metrics(store: &Arc<DynoStore>, net: &NetView) -> HttpResponse {
         (0..store.meta.shard_count()).map(|i| format!("meta_commits_shard{i}")).collect();
     for (i, key) in shard_keys.iter().enumerate() {
         fields.push((key.as_str(), store.meta.shard_commits(i).into()));
+    }
+    // Upload-/uuid-keyed command routing: O(1) index hits vs per-shard
+    // scan fallbacks (misses), and how many keys the index tracks.
+    let (ri_hits, ri_misses, ri_len) = store.meta.route_index_stats();
+    fields.push(("route_index_hits", ri_hits.into()));
+    fields.push(("route_index_misses", ri_misses.into()));
+    fields.push(("route_index_keys", (ri_len as u64).into()));
+    // Storage-tier census: containers per declared tier (gauges; the
+    // promotion/demotion counters are in the snapshot above).
+    let infos = store.registry.infos();
+    let tier_keys: Vec<(String, u64)> = store
+        .tiering
+        .tier_counts(&infos)
+        .into_iter()
+        .map(|(t, n)| (format!("tier_{}_containers", t.as_str()), n as u64))
+        .collect();
+    for (key, n) in &tier_keys {
+        fields.push((key.as_str(), (*n).into()));
     }
     // Connection-plane counters from the serving engine (flat keys:
     // conns_open, conns_accepted, keepalive_reuses, admission_shed,
@@ -414,6 +433,11 @@ fn health(store: &Arc<DynoStore>, net: &NetView) -> HttpResponse {
             ("net", obj(net_fields)),
             ("client_pool", obj(pool_fields)),
             ("durability", durability),
+            // The D-Rex view: per-container scorecards (observed error/
+            // latency/bandwidth/availability EWMAs) and the declared
+            // storage tier of every container.
+            ("scorecards", store.tiering.scores.to_json()),
+            ("tiers", store.tiering.tiers_json(&infos)),
         ]),
     )
 }
@@ -543,6 +567,36 @@ fn admin_scrub(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse
             ("chunks_healed", r.chunks_healed.into()),
             ("lost", r.lost.into()),
             ("wrapped", Value::Bool(r.wrapped)),
+        ]),
+    ))
+}
+
+fn admin_tier_cycle(store: &Arc<DynoStore>, req: &HttpRequest) -> Result<HttpResponse> {
+    admin_auth(store, req)?;
+    let defaults = crate::tiering::TierCycleOpts::default();
+    let opts = if req.body.is_empty() {
+        defaults
+    } else {
+        let body = std::str::from_utf8(&req.body)
+            .map_err(|_| Error::Invalid("body not utf-8".into()))?;
+        let v = parse(body)?;
+        crate::tiering::TierCycleOpts {
+            hot_rate: v.opt_f64("hot_rate", defaults.hot_rate),
+            cold_after_secs: v.opt_u64("cold_after_secs", defaults.cold_after_secs),
+            max_objects: v.opt_u64("max_objects", defaults.max_objects as u64) as usize,
+            max_moves: v.opt_u64("max_moves", defaults.max_moves as u64) as usize,
+        }
+    };
+    let r = store.tier_cycle(opts)?;
+    Ok(HttpResponse::json(
+        200,
+        &obj(vec![
+            ("examined", r.examined.into()),
+            ("promoted", r.promoted.into()),
+            ("demoted", r.demoted.into()),
+            ("chunks_moved", r.chunks_moved.into()),
+            ("failed", r.failed.into()),
+            ("skipped", r.skipped.into()),
         ]),
     ))
 }
@@ -691,6 +745,44 @@ mod tests {
     }
 
     #[test]
+    fn tiering_surfaces_on_gateway() {
+        let (_server, client, admin) = gateway();
+        let token = register(&client, "UserA");
+        let auth = format!("Bearer {token}");
+        client.put("/objects/UserA/hot", &[("authorization", &auth)], b"abc").unwrap();
+        client.get("/objects/UserA/hot", &[("authorization", &auth)]).unwrap();
+
+        // /metrics carries the route-index counters (single shard: bypassed,
+        // so all zero) and per-tier container gauges (all default Fs here).
+        let m = client.get("/metrics", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(v.req_u64("route_index_hits").unwrap(), 0);
+        assert_eq!(v.req_u64("route_index_misses").unwrap(), 0);
+        assert_eq!(v.req_u64("route_index_keys").unwrap(), 0);
+        assert_eq!(v.req_u64("tier_fs_containers").unwrap(), 12);
+
+        // /health exposes the scorecards (fed by the push/pull chunk I/O
+        // above) and the per-container tier map.
+        let h = client.get("/health", &[]).unwrap();
+        let v = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+        let cards = v.get("scorecards").as_arr().expect("scorecards array");
+        assert!(!cards.is_empty(), "chunk I/O fed scorecards");
+        assert!(cards.iter().all(|c| c.req_u64("ops").unwrap() >= 1));
+        let tiers = v.get("tiers").as_arr().expect("tiers array");
+        assert_eq!(tiers.len(), 12);
+        assert!(tiers.iter().all(|t| t.req_str("tier").unwrap() == "fs"));
+
+        // Admin tier-cycle runs (and reports a skip: no cache tiers declared).
+        let r = client
+            .post("/admin/tier-cycle", &[("authorization", &admin)], &[])
+            .unwrap();
+        assert_eq!(r.status, 200, "{:?}", String::from_utf8_lossy(&r.body));
+        let v = parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(v.req_u64("promoted").unwrap(), 0);
+        assert_eq!(v.req_u64("chunks_moved").unwrap(), 0);
+    }
+
+    #[test]
     fn net_telemetry_in_metrics_and_health() {
         let (server, client, _admin) = gateway();
         // At least this very request was accepted by the engine.
@@ -724,6 +816,7 @@ mod tests {
             ("/admin/decommission/0", &b""[..]),
             ("/admin/undrain/0", &b""[..]),
             ("/admin/scrub", &b""[..]),
+            ("/admin/tier-cycle", &b""[..]),
         ] {
             let resp = client.post(path, &[], body).unwrap();
             assert_eq!(resp.status, 401, "unauthenticated {path}");
@@ -746,6 +839,7 @@ mod tests {
             "/admin/rebalance",
             "/admin/decommission/0",
             "/admin/scrub",
+            "/admin/tier-cycle",
         ] {
             let resp = client.post(path, &[("authorization", &auth)], &[]).unwrap();
             assert_eq!(resp.status, 403, "user token must not admin {path}");

@@ -78,6 +78,7 @@ pub mod resilience;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;
+pub mod tiering;
 pub mod util;
 
 pub use api::{LocalStore, ObjectStore, RemoteStore};

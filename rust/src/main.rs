@@ -88,6 +88,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "decommission" => decommission(&flags, &pos),
         "undrain" => undrain(&flags, &pos),
         "rebalance" => rebalance(&flags),
+        "tier-cycle" => tier_cycle(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -107,6 +108,7 @@ fn print_usage() {
          \x20          [--data-dir DIR] [--snapshot-every N] [--meta-shards N]\n\
          \x20          [--max-body-mb MB]\n\
          \x20          [--part-size-mb MB]\n\
+         \x20          [--policy k,n|regular|adaptive[:NINES]] [--durability-nines N]\n\
          \x20          (--net-engine picks the connection core: epoll reactor\n\
          \x20           with keep-alive, or the portable threaded loop)\n\
          \x20          (--data-dir persists the metadata plane: WAL + snapshots;\n\
@@ -117,7 +119,8 @@ fn print_usage() {
          \x20          (container agent: serves one data container over HTTP;\n\
          \x20           gateways attach it via an \"endpoint\" container entry)\n\
          \x20 register --url http://HOST:PORT --user NAME\n\
-         \x20 push     --url http://HOST:PORT --token T [--policy k,n|regular]\n\
+         \x20 push     --url http://HOST:PORT --token T\n\
+         \x20          [--policy k,n|regular|adaptive[:NINES]]\n\
          \x20          [--key-hex HEX64] [--multipart] [--part-size-mb MB]\n\
          \x20          [--resume UPLOAD_ID] PATH FILE\n\
          \x20          (--multipart splits FILE into independently striped\n\
@@ -142,6 +145,10 @@ fn print_usage() {
          \x20          (cancel a stopped drain: container rejoins placement)\n\
          \x20 rebalance    --url http://HOST:PORT --token T [--threshold F] [--max-moves N]\n\
          \x20          (move chunks hot\u{2192}cold until utilization spread \u{2264} threshold)\n\
+         \x20 tier-cycle   --url http://HOST:PORT --token T [--hot-rate F]\n\
+         \x20          [--cold-after-secs N] [--max-moves N]\n\
+         \x20          (one promotion/demotion pass: hot objects into cache-tier\n\
+         \x20           containers, cold ones out; needs the admin token)\n\
          \n\
          PATH is /User/Collection.../name; --addr HOST:PORT is accepted\n\
          wherever --url is. Object commands speak the versioned /v1 REST\n\
@@ -200,6 +207,30 @@ fn serve(flags: &HashMap<String, String>) -> Result<(), String> {
     if let Some(engine) = flags.get("net-engine") {
         config.net.engine = dynostore::net::ServerEngine::parse(engine)
             .ok_or_else(|| format!("unknown --net-engine '{engine}' (reactor | threaded)"))?;
+    }
+    // CLI override of the deployment durability target and the default
+    // resilience policy (same spellings as the x-dyno-policy header).
+    if let Some(nines) = flags.get("durability-nines") {
+        let nines: f64 = nines
+            .parse()
+            .map_err(|_| "--durability-nines must be a number".to_string())?;
+        if !nines.is_finite() || nines <= 0.0 || nines > 12.0 {
+            return Err("--durability-nines must be in (0, 12]".to_string());
+        }
+        config.durability_nines = nines;
+        if let dynostore::policy::ResiliencePolicy::Adaptive { nines: n } = &mut config.policy
+        {
+            *n = nines;
+        }
+    }
+    if let Some(policy) = flags.get("policy") {
+        config.policy = parse_policy(policy).map_err(|e| e.to_string())?;
+        if let dynostore::policy::ResiliencePolicy::Adaptive { nines } = &mut config.policy {
+            if !flags.contains_key("durability-nines") && policy.eq_ignore_ascii_case("adaptive")
+            {
+                *nines = config.durability_nines;
+            }
+        }
     }
     if config.data_dir.is_none() {
         dynostore::log_warn!(
@@ -642,6 +673,41 @@ fn undrain(flags: &HashMap<String, String>, pos: &[String]) -> Result<(), String
         Ok(())
     } else {
         Err(format!("undrain failed: {}", resp.status))
+    }
+}
+
+/// One storage-tiering pass: promote hot objects into cache-tier
+/// containers, demote cold ones out (`POST /admin/tier-cycle`, admin
+/// token required).
+fn tier_cycle(flags: &HashMap<String, String>) -> Result<(), String> {
+    let addr = host(flags)?;
+    let headers = admin_headers(flags)?;
+    let hdrs: Vec<(&str, &str)> =
+        headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let mut body_fields = Vec::new();
+    if let Some(r) = flags.get("hot-rate") {
+        let r: f64 = r.parse().map_err(|_| "--hot-rate must be a number".to_string())?;
+        body_fields.push(format!("\"hot_rate\": {r}"));
+    }
+    if let Some(s) = flags.get("cold-after-secs") {
+        let s: u64 =
+            s.parse().map_err(|_| "--cold-after-secs must be a number".to_string())?;
+        body_fields.push(format!("\"cold_after_secs\": {s}"));
+    }
+    if let Some(m) = flags.get("max-moves") {
+        let m: u64 = m.parse().map_err(|_| "--max-moves must be a number".to_string())?;
+        body_fields.push(format!("\"max_moves\": {m}"));
+    }
+    let body = format!("{{{}}}", body_fields.join(", "));
+    let client = HttpClient::new(addr);
+    let resp = client
+        .post("/admin/tier-cycle", &hdrs, body.as_bytes())
+        .map_err(|e| e.to_string())?;
+    println!("{}", String::from_utf8_lossy(&resp.body));
+    if resp.status == 200 {
+        Ok(())
+    } else {
+        Err(format!("tier-cycle failed: {}", resp.status))
     }
 }
 

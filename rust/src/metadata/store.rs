@@ -784,6 +784,17 @@ impl MetadataStore {
         self.inner.lock().unwrap().objects.len()
     }
 
+    /// Object-version UUIDs and open multipart upload ids this store
+    /// holds — the sharded metadata router seeds its key→shard index
+    /// from these at boot instead of scanning every shard per request.
+    pub fn routing_keys(&self) -> (Vec<String>, Vec<String>) {
+        let inner = self.inner.lock().unwrap();
+        (
+            inner.objects.keys().cloned().collect(),
+            inner.uploads.keys().cloned().collect(),
+        )
+    }
+
     /// Every live object version (health repair sweeps, Table II census).
     pub fn all_objects(&self) -> Vec<ObjectMeta> {
         let inner = self.inner.lock().unwrap();

@@ -42,8 +42,9 @@
 //! delegates straight to the single group and behavior is
 //! byte-identical to the unsharded plane.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use crate::metadata::{namespace_owner, normalize_path, MetadataStore, ObjectMeta, ObjectPage, Ring};
 use crate::paxos::{CommandOutcome, MetaCommand, ReplicatedMeta};
@@ -64,6 +65,49 @@ enum Route {
     Broadcast,
 }
 
+/// Key→shard routing index for commands addressed by upload id or
+/// object UUID — neither carries a collection path, so without an index
+/// every such command pays an O(shards) scan of the replicated stores.
+///
+/// The index is *derived state*, not a second source of truth: it is
+/// seeded from each shard's committed catalog at assembly
+/// ([`MetadataStore::routing_keys`]), updated from committed submit
+/// outcomes (`PutObject`/`MultipartInit` insert, `Complete`/`Abort`/
+/// `Evict`/`Gc` retire), and any miss falls back to the legacy scan,
+/// caching what the scan finds. A stale entry is harmless: the command
+/// fails on the indexed shard exactly as it would have failed on shard
+/// 0 after a scan miss (the key is gone from every shard).
+struct RouteIndex {
+    /// `uuid → shard` for object versions, `upload id → shard` for
+    /// open multipart uploads (ids come from disjoint RNG streams and
+    /// never collide; one map keeps the lock footprint minimal).
+    keys: RwLock<HashMap<String, usize>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl RouteIndex {
+    fn new() -> RouteIndex {
+        RouteIndex {
+            keys: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<usize> {
+        self.keys.read().unwrap().get(key).copied()
+    }
+
+    fn insert(&self, key: &str, shard: usize) {
+        self.keys.write().unwrap().insert(key.to_string(), shard);
+    }
+
+    fn remove(&self, key: &str) {
+        self.keys.write().unwrap().remove(key);
+    }
+}
+
 /// Router over N independent [`ReplicatedMeta`] Paxos groups.
 pub struct ShardedMeta {
     shards: Vec<Arc<ReplicatedMeta>>,
@@ -72,6 +116,9 @@ pub struct ShardedMeta {
     /// started (the `/metrics` per-shard commit counters — and the test
     /// hook proving distinct namespaces use distinct groups).
     commits: Vec<AtomicU64>,
+    /// uuid/upload-id → shard routing (empty and unused for a single
+    /// shard, where routing is trivial and behavior stays legacy).
+    routes: RouteIndex,
 }
 
 impl ShardedMeta {
@@ -105,7 +152,24 @@ impl ShardedMeta {
         );
         let ring = Ring::new(shards.len());
         let commits = (0..shards.len()).map(|_| AtomicU64::new(0)).collect();
-        Arc::new(ShardedMeta { shards, ring, commits })
+        let routes = RouteIndex::new();
+        if shards.len() > 1 {
+            // Seed from each shard's committed catalog (durable restarts
+            // arrive with populated stores); a shard that can't answer
+            // just leaves its keys to the scan-and-cache fallback.
+            for (i, s) in shards.iter().enumerate() {
+                if let Ok((uuids, uploads)) = s.read(|st| Ok(st.routing_keys())) {
+                    let mut map = routes.keys.write().unwrap();
+                    for u in uuids {
+                        map.insert(u, i);
+                    }
+                    for u in uploads {
+                        map.insert(u, i);
+                    }
+                }
+            }
+        }
+        Arc::new(ShardedMeta { shards, ring, commits, routes })
     }
 
     pub fn shard_count(&self) -> usize {
@@ -132,32 +196,81 @@ impl ShardedMeta {
         self.commits[i].load(Ordering::Relaxed)
     }
 
-    /// Which shard holds an open upload. Upload ids are minted by the
-    /// owning shard's RNG, so the owner is found by scanning — a miss
-    /// (completed/aborted meanwhile, or never existed) falls back to
-    /// shard 0, where the command fails with the legacy NotFound.
+    /// Which shard holds an open upload: the route index answers in
+    /// O(1); a miss (index evicted, seeded before this key existed)
+    /// falls back to the legacy scan and caches what it finds. A key on
+    /// no shard (completed/aborted meanwhile, or never existed) routes
+    /// to shard 0, where the command fails with the legacy NotFound.
     fn shard_with_upload(&self, id: &str) -> usize {
-        if self.shards.len() > 1 {
-            for (i, s) in self.shards.iter().enumerate() {
-                if s.read(|st| Ok(st.has_upload(id))).unwrap_or(false) {
-                    return i;
-                }
-            }
-        }
-        0
+        self.shard_with_key(id, |st, key| st.has_upload(key))
     }
 
     /// Which shard holds an object version, by UUID (same contract as
     /// [`Self::shard_with_upload`]).
     fn shard_with_uuid(&self, uuid: &str) -> usize {
-        if self.shards.len() > 1 {
-            for (i, s) in self.shards.iter().enumerate() {
-                if s.read(|st| Ok(st.has_uuid(uuid))).unwrap_or(false) {
-                    return i;
-                }
+        self.shard_with_key(uuid, |st, key| st.has_uuid(key))
+    }
+
+    fn shard_with_key(
+        &self,
+        key: &str,
+        has: impl Fn(&MetadataStore, &str) -> bool,
+    ) -> usize {
+        if self.shards.len() <= 1 {
+            return 0;
+        }
+        if let Some(i) = self.routes.get(key) {
+            self.routes.hits.fetch_add(1, Ordering::Relaxed);
+            return i;
+        }
+        self.routes.misses.fetch_add(1, Ordering::Relaxed);
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.read(|st| Ok(has(st, key))).unwrap_or(false) {
+                self.routes.insert(key, i);
+                return i;
             }
         }
         0
+    }
+
+    /// Route-index hit/miss counters since process start (`/metrics`).
+    pub fn route_index_stats(&self) -> (u64, u64, usize) {
+        (
+            self.routes.hits.load(Ordering::Relaxed),
+            self.routes.misses.load(Ordering::Relaxed),
+            self.routes.keys.read().unwrap().len(),
+        )
+    }
+
+    /// Fold a committed outcome into the route index: keys are born on
+    /// `PutObject`/`MultipartInit`, move from upload to uuid on
+    /// `MultipartComplete`, and die on `Abort`/`Evict` (`Gc` retires
+    /// its keys in the broadcast arm).
+    fn index_outcome(&self, cmd: &MetaCommand, out: &CommandOutcome, shard: usize) {
+        if self.shards.len() <= 1 {
+            return;
+        }
+        match (cmd, out) {
+            (MetaCommand::PutObject { .. }, CommandOutcome::Meta(m)) => {
+                self.routes.insert(&m.uuid, shard);
+            }
+            (MetaCommand::MultipartInit { .. }, CommandOutcome::UploadId(id)) => {
+                self.routes.insert(id, shard);
+            }
+            (MetaCommand::MultipartComplete { upload_id, .. }, CommandOutcome::Meta(m)) => {
+                self.routes.remove(upload_id);
+                self.routes.insert(&m.uuid, shard);
+            }
+            (MetaCommand::MultipartAbort { upload_id, .. }, CommandOutcome::Aborted(_)) => {
+                self.routes.remove(upload_id);
+            }
+            (MetaCommand::Evict { .. }, CommandOutcome::Evicted(metas)) => {
+                for m in metas {
+                    self.routes.remove(&m.uuid);
+                }
+            }
+            _ => {}
+        }
     }
 
     fn route(&self, cmd: &MetaCommand) -> Route {
@@ -198,8 +311,9 @@ impl ShardedMeta {
     ) -> Result<CommandOutcome> {
         match self.route(&cmd) {
             Route::Shard(i) => {
-                let out = self.shards[i].submit_guarded(cmd, precheck)?;
+                let out = self.shards[i].submit_guarded(cmd.clone(), precheck)?;
                 self.commits[i].fetch_add(1, Ordering::Relaxed);
+                self.index_outcome(&cmd, &out, i);
                 Ok(out)
             }
             Route::Broadcast => {
@@ -221,6 +335,11 @@ impl ShardedMeta {
                                 first_err = Some(e);
                             }
                         }
+                    }
+                }
+                if self.shards.len() > 1 {
+                    for m in &collected {
+                        self.routes.remove(&m.uuid);
                     }
                 }
                 match (any_ok, first_err) {
@@ -485,7 +604,7 @@ mod tests {
     }
 
     #[test]
-    fn upload_and_uuid_commands_route_by_scan() {
+    fn upload_and_uuid_commands_route_by_index() {
         let m = ShardedMeta::memory(4, 3, 7);
         let users = users_on_distinct_shards(&m, 2);
         for u in &users {
@@ -530,8 +649,15 @@ mod tests {
         assert!(matches!(out, CommandOutcome::Ok));
         let read = m.read_uuid(&meta.uuid, |s| s.get_by_uuid(&meta.uuid)).unwrap();
         assert_eq!(read.placement, ObjectPlacement::Single { container: 9 });
-        // A bogus upload id falls back to shard 0 and fails like the
-        // unsharded plane.
+        // Every routed lookup above was answered by the index, not a
+        // per-shard scan: the only misses allowed are for keys that
+        // exist on no shard.
+        let (hits, misses, len) = m.route_index_stats();
+        assert!(hits >= 4, "read_upload/abort/update/read_uuid all hit: {hits}");
+        assert_eq!(misses, 0);
+        assert_eq!(len, 1, "upload retired on abort, uuid still live");
+        // A bogus upload id misses the index, falls back to the scan,
+        // and lands on shard 0 failing like the unsharded plane.
         let err = m
             .submit(MetaCommand::MultipartAbort {
                 caller: ua.clone(),
@@ -539,6 +665,47 @@ mod tests {
             })
             .unwrap();
         assert!(matches!(err, CommandOutcome::Failed(_)));
+        let (_, misses, _) = m.route_index_stats();
+        assert_eq!(misses, 1);
+    }
+
+    #[test]
+    fn route_index_reseeds_from_committed_catalogs() {
+        // Simulate a restart: commit through one router, then assemble
+        // a fresh router over the same groups. The new index must be
+        // seeded from the shard stores — uuid lookups hit immediately.
+        let m = ShardedMeta::memory(4, 3, 7);
+        let users = users_on_distinct_shards(&m, 2);
+        let mut uuids = Vec::new();
+        for u in &users {
+            m.submit(MetaCommand::CreateNamespace { user: u.clone() }).unwrap();
+            match m.submit(put_cmd(&format!("/{u}"), "obj", 1)).unwrap() {
+                CommandOutcome::Meta(meta) => uuids.push(meta.uuid.clone()),
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        let reborn =
+            ShardedMeta::from_groups((0..m.shard_count()).map(|i| m.shard(i).clone()).collect());
+        let (_, _, len) = reborn.route_index_stats();
+        assert_eq!(len, uuids.len(), "seeded from committed catalogs");
+        for uuid in &uuids {
+            let read = reborn.read_uuid(uuid, |s| s.get_by_uuid(uuid)).unwrap();
+            assert_eq!(read.size, 42);
+        }
+        let (hits, misses, _) = reborn.route_index_stats();
+        assert_eq!(hits, uuids.len() as u64);
+        assert_eq!(misses, 0);
+        // Eviction retires the key on the reborn router too.
+        let u0 = &users[0];
+        reborn
+            .submit(MetaCommand::Evict {
+                caller: u0.clone(),
+                collection: format!("/{u0}"),
+                name: "obj".into(),
+            })
+            .unwrap();
+        let (_, _, len) = reborn.route_index_stats();
+        assert_eq!(len, uuids.len() - 1);
     }
 
     #[test]

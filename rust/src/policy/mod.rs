@@ -20,6 +20,12 @@ pub enum ResiliencePolicy {
     /// Dynamic per-object (n, k) + placement (paper §VI-D / Table II):
     /// grow parity until the loss probability meets `target_loss`.
     Dynamic { k: usize, target_loss: f64 },
+    /// Adaptive per-object (k, n) + placement over the scored fleet
+    /// (D-Rex direction, `crate::tiering`): search the whole (k, n)
+    /// plane for the cheapest configuration meeting a durability
+    /// target of `nines` nines, rating containers by their effective
+    /// (observed-blended) failure rates.
+    Adaptive { nines: f64 },
 }
 
 /// The paper's §VI-D reliability target: 0.1 % per item-year.

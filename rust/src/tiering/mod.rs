@@ -1,0 +1,238 @@
+//! Heterogeneity-aware adaptive reliability & storage tiering (the
+//! D-Rex plane, PAPERS.md arXiv:2506.02026 + ROADMAP item 3).
+//!
+//! Three cooperating pieces, threaded through the whole stack:
+//!
+//! * [`ScoreBoard`] (`score.rs`) — per-container EWMA scorecards fed
+//!   by every chunk I/O, probe, and scrub event the coordinator
+//!   performs; durably snapshotted through the keyed kv store and the
+//!   only telemetry surface `/metrics` + `/health` export.
+//! * [`select_adaptive`] (`policy.rs`) — the `policy: "adaptive"`
+//!   engine: per-object (k, n) + placement meeting a configured
+//!   durability target (`durability_nines`) at minimum storage
+//!   overhead over the *effective* (observed-blended) failure rates.
+//! * [`StorageTier`] + [`DynoStore::tier_cycle`] (`tiers.rs`) —
+//!   mem/ssd/fs/cold container tiers with access-driven promotion and
+//!   demotion over the chunk-migration plane.
+//!
+//! [`DynoStore::tier_cycle`]: crate::coordinator::DynoStore::tier_cycle
+
+pub mod policy;
+pub mod score;
+pub mod tiers;
+
+pub use policy::{
+    nines_to_loss, select_adaptive, AdaptiveChoice, DEFAULT_DURABILITY_NINES,
+};
+pub use score::{ContainerScore, ScoreBoard, EWMA_ALPHA, PERSIST_EVERY_OBSERVATIONS};
+pub use tiers::{AccessStats, StorageTier, TierCycleOpts, TieringReport};
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+
+use crate::container::{ContainerId, ContainerInfo};
+use crate::json::{obj, Value};
+use crate::placement::PlacementMetric;
+use crate::util::unix_secs;
+use crate::Result;
+
+/// The per-store tiering state the coordinator owns: scorecards, tier
+/// declarations, and per-object access heat. Shared behind an `Arc`
+/// with the scrubber and the gateway.
+pub struct TieringPlane {
+    /// Fleet scorecards (durable when the store has a data dir).
+    pub scores: ScoreBoard,
+    tiers: RwLock<BTreeMap<ContainerId, StorageTier>>,
+    access: RwLock<HashMap<String, AccessStats>>,
+}
+
+impl TieringPlane {
+    /// In-memory plane: scores and heat vanish on restart.
+    pub fn memory() -> TieringPlane {
+        TieringPlane {
+            scores: ScoreBoard::memory(),
+            tiers: RwLock::new(BTreeMap::new()),
+            access: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Durable plane rooted at `dir` (conventionally
+    /// `data_dir/tiering/`): scorecards recover from the keyed kv
+    /// store; tier declarations come from config each boot and access
+    /// heat is deliberately volatile.
+    pub fn durable(dir: impl Into<PathBuf>) -> Result<TieringPlane> {
+        Ok(TieringPlane {
+            scores: ScoreBoard::durable(dir)?,
+            tiers: RwLock::new(BTreeMap::new()),
+            access: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// Declare a container's tier.
+    pub fn set_tier(&self, id: ContainerId, tier: StorageTier) {
+        let mut map = self.tiers.write().unwrap();
+        if tier == StorageTier::default() {
+            map.remove(&id);
+        } else {
+            map.insert(id, tier);
+        }
+    }
+
+    /// A container's declared tier ([`StorageTier::Fs`] by default).
+    pub fn tier_of(&self, id: ContainerId) -> StorageTier {
+        self.tiers.read().unwrap().get(&id).copied().unwrap_or_default()
+    }
+
+    /// True when any container declares a non-default tier.
+    pub fn has_tiers(&self) -> bool {
+        !self.tiers.read().unwrap().is_empty()
+    }
+
+    /// Record one read access against an object (pull paths).
+    pub fn record_access(&self, uuid: &str) {
+        let now = unix_secs();
+        let mut map = self.access.write().unwrap();
+        map.entry(uuid.to_string()).or_default().touch(now);
+    }
+
+    /// The object's current heat (zeroed stats when never accessed).
+    pub fn access_stats(&self, uuid: &str) -> AccessStats {
+        self.access.read().unwrap().get(uuid).copied().unwrap_or_default()
+    }
+
+    /// Drop heat for an evicted object.
+    pub fn forget_access(&self, uuid: &str) {
+        self.access.write().unwrap().remove(uuid);
+    }
+
+    /// Number of objects with recorded heat.
+    pub fn tracked_objects(&self) -> usize {
+        self.access.read().unwrap().len()
+    }
+
+    /// Per-tier container counts over `infos` — the `/metrics` tier
+    /// gauges.
+    pub fn tier_counts(&self, infos: &[ContainerInfo]) -> BTreeMap<StorageTier, usize> {
+        let mut counts: BTreeMap<StorageTier, usize> = BTreeMap::new();
+        for c in infos {
+            *counts.entry(self.tier_of(c.id)).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// JSON rendering of the tier declarations for `/health`.
+    pub fn tiers_json(&self, infos: &[ContainerInfo]) -> Value {
+        let entries: Vec<Value> = infos
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("id", Value::Num(c.id as f64)),
+                    ("tier", Value::Str(self.tier_of(c.id).as_str().to_string())),
+                ])
+            })
+            .collect();
+        Value::Arr(entries)
+    }
+}
+
+impl std::fmt::Debug for TieringPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TieringPlane")
+            .field("scores", &self.scores)
+            .field("tiers", &self.tiers.read().unwrap().len())
+            .field("tracked_objects", &self.tracked_objects())
+            .finish()
+    }
+}
+
+/// Placement penalty derived from the scorecards: a container's
+/// effective AFR (catalog blended with observed errors and observed
+/// unavailability) is added straight onto its Eq. 1 occupancy score,
+/// so capacity ties break toward reliable containers. Only installed
+/// when the adaptive plane is enabled — the default placer stays
+/// byte-identical to the static behavior.
+pub struct ScorePenalty {
+    plane: Arc<TieringPlane>,
+}
+
+impl ScorePenalty {
+    pub fn new(plane: Arc<TieringPlane>) -> ScorePenalty {
+        ScorePenalty { plane }
+    }
+}
+
+impl PlacementMetric for ScorePenalty {
+    fn penalty(&self, info: &ContainerInfo) -> f64 {
+        self.plane.scores.effective_afr(info.id, info.annual_failure_rate)
+    }
+
+    fn name(&self) -> &'static str {
+        "scorecard"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Site;
+
+    fn info(id: u32) -> ContainerInfo {
+        ContainerInfo {
+            id,
+            name: format!("dc{id}"),
+            site: Site::ChameleonTacc,
+            alive: true,
+            mem_total: 1 << 30,
+            mem_avail: 1 << 29,
+            fs_total: 1 << 40,
+            fs_avail: 1 << 39,
+            annual_failure_rate: 0.05,
+        }
+    }
+
+    #[test]
+    fn tiers_default_to_fs_and_track_declarations() {
+        let p = TieringPlane::memory();
+        assert_eq!(p.tier_of(1), StorageTier::Fs);
+        assert!(!p.has_tiers());
+        p.set_tier(1, StorageTier::Mem);
+        p.set_tier(2, StorageTier::Cold);
+        assert!(p.has_tiers());
+        assert_eq!(p.tier_of(1), StorageTier::Mem);
+        let counts = p.tier_counts(&[info(1), info(2), info(3)]);
+        assert_eq!(counts.get(&StorageTier::Mem), Some(&1));
+        assert_eq!(counts.get(&StorageTier::Cold), Some(&1));
+        assert_eq!(counts.get(&StorageTier::Fs), Some(&1));
+        // Re-declaring the default drops the entry.
+        p.set_tier(1, StorageTier::Fs);
+        p.set_tier(2, StorageTier::Fs);
+        assert!(!p.has_tiers());
+    }
+
+    #[test]
+    fn access_heat_tracks_pulls() {
+        let p = TieringPlane::memory();
+        assert_eq!(p.access_stats("u1").hits, 0);
+        p.record_access("u1");
+        p.record_access("u1");
+        let s = p.access_stats("u1");
+        assert_eq!(s.hits, 2);
+        assert!(s.rate >= 1.0);
+        p.forget_access("u1");
+        assert_eq!(p.access_stats("u1").hits, 0);
+        assert_eq!(p.tracked_objects(), 0);
+    }
+
+    #[test]
+    fn score_penalty_prices_observed_failures() {
+        let plane = Arc::new(TieringPlane::memory());
+        for _ in 0..500 {
+            plane.scores.observe_io(1, false, 0, 0.01);
+            plane.scores.observe_io(2, true, 1024, 0.01);
+        }
+        let m = ScorePenalty::new(plane);
+        assert!(m.penalty(&info(1)) > m.penalty(&info(2)) + 0.5);
+        assert_eq!(m.name(), "scorecard");
+    }
+}

@@ -1,0 +1,314 @@
+//! Adaptive per-object redundancy (D-Rex direction, PAPERS.md
+//! arXiv:2506.02026): given a target durability expressed in nines,
+//! solve for the (k, n) erasure configuration *and* placement over the
+//! scored fleet that meets the target at minimum storage overhead —
+//! wide stripes across reliable containers, extra parity when the
+//! fleet forces flaky ones into the stripe.
+//!
+//! Contrast with [`crate::policy::select_dynamic`] (paper §VI-D),
+//! which fixes k and only grows parity: the adaptive engine searches
+//! the whole (k, n) plane and rates containers by their *effective*
+//! AFR — catalog rate blended with observed error history from the
+//! [`crate::tiering::ScoreBoard`] — so a container that looked fine in
+//! the catalog but fails chunks in practice is priced accordingly.
+
+use crate::container::ContainerInfo;
+use crate::erasure::ErasureConfig;
+use crate::sim::FailureModel;
+use crate::tiering::ScoreBoard;
+use crate::{Error, Result};
+
+/// Default durability target: three nines = 99.9% per item-year, the
+/// paper's §VI-D reliability target (max 0.1% loss probability).
+pub const DEFAULT_DURABILITY_NINES: f64 = 3.0;
+
+/// Largest stripe width the erasure kernels support (n ≤ 16).
+const MAX_STRIPE: usize = 16;
+
+/// Convert a durability target in nines to a loss-probability bound:
+/// 3.0 nines → 1e-3, 4.5 nines → ~3.16e-5.
+pub fn nines_to_loss(nines: f64) -> f64 {
+    10f64.powf(-nines.max(0.0))
+}
+
+/// Result of the adaptive selection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveChoice {
+    pub config: ErasureConfig,
+    /// Container ids, one per chunk, most reliable first.
+    pub containers: Vec<u32>,
+    /// Predicted one-year loss probability of this exact placement.
+    pub loss_probability: f64,
+    /// The loss bound the solver aimed for.
+    pub target_loss: f64,
+    /// False when no feasible (k, n) met the target and this is the
+    /// lowest-risk placement available (best effort).
+    pub met_target: bool,
+}
+
+impl AdaptiveChoice {
+    /// Total bytes stored per logical byte (n/k); 1.0 = no redundancy.
+    pub fn stored_ratio(&self) -> f64 {
+        self.config.n as f64 / self.config.k as f64
+    }
+}
+
+#[derive(Clone)]
+struct Candidate {
+    n: usize,
+    k: usize,
+    loss: f64,
+    containers: Vec<u32>,
+}
+
+impl Candidate {
+    /// Ordering among target-meeting candidates: least storage
+    /// overhead first (n/k, compared exactly in integers), then most
+    /// failures tolerated, then the narrower stripe.
+    fn preferred_over(&self, other: &Candidate) -> bool {
+        let (a, b) = (self.n * other.k, other.n * self.k);
+        if a != b {
+            return a < b;
+        }
+        let (ta, tb) = (self.n - self.k, other.n - other.k);
+        if ta != tb {
+            return ta > tb;
+        }
+        self.n < other.n
+    }
+
+    /// Ordering among best-effort candidates: lowest risk, then least
+    /// storage overhead.
+    fn lower_risk_than(&self, other: &Candidate) -> bool {
+        if self.loss != other.loss {
+            return self.loss < other.loss;
+        }
+        self.n * other.k < other.n * self.k
+    }
+}
+
+/// Solve for the cheapest (k, n) + placement meeting `target_loss`
+/// over the alive, capacity-feasible fleet, rating each container by
+/// its effective AFR (catalog blended with scorecard history). Falls
+/// back to the lowest-risk feasible placement (flagged via
+/// `met_target`) when the target is unreachable — mirroring
+/// `select_dynamic`'s best-effort contract.
+pub fn select_adaptive(
+    infos: &[ContainerInfo],
+    scores: &ScoreBoard,
+    object_size: u64,
+    target_loss: f64,
+) -> Result<AdaptiveChoice> {
+    // Rate and sort the alive fleet once: effective AFR ascending,
+    // ties by id (same determinism contract as select_dynamic).
+    let mut rated: Vec<(&ContainerInfo, f64)> = infos
+        .iter()
+        .filter(|c| c.alive)
+        .map(|c| (c, scores.effective_afr(c.id, c.annual_failure_rate)))
+        .collect();
+    rated.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.id.cmp(&b.0.id))
+    });
+    if rated.len() < 2 {
+        return Err(Error::Placement(format!(
+            "adaptive selection: need at least 2 alive containers, have {}",
+            rated.len()
+        )));
+    }
+
+    let mut met: Option<Candidate> = None;
+    let mut fallback: Option<Candidate> = None;
+    for k in 1..MAX_STRIPE {
+        // Same per-chunk sizing the dynamic policy uses for
+        // feasibility (ops.rs computes the exact packed length later;
+        // the placer re-checks capacity at write time either way).
+        let chunk = (object_size / k as u64).max(1);
+        let pool: Vec<&(&ContainerInfo, f64)> =
+            rated.iter().filter(|(c, _)| c.fs_avail >= chunk).collect();
+        let max_n = pool.len().min(MAX_STRIPE);
+        if max_n < k + 1 {
+            continue;
+        }
+        let model = FailureModel { afr: pool.iter().map(|(_, afr)| *afr).collect() };
+        for n in (k + 1)..=max_n {
+            let placement: Vec<usize> = (0..n).collect();
+            let loss = model.loss_probability(&placement, n - k);
+            let cand = Candidate {
+                n,
+                k,
+                loss,
+                containers: pool[..n].iter().map(|(c, _)| c.id).collect(),
+            };
+            if loss <= target_loss {
+                // For fixed k the first qualifying n is the cheapest;
+                // wider only adds overhead. Move on to the next k.
+                if met.as_ref().map_or(true, |b| cand.preferred_over(b)) {
+                    met = Some(cand);
+                }
+                break;
+            }
+            if fallback.as_ref().map_or(true, |b| cand.lower_risk_than(b)) {
+                fallback = Some(cand);
+            }
+        }
+    }
+
+    let (cand, met_target) = match (met, fallback) {
+        (Some(c), _) => (c, true),
+        (None, Some(c)) => (c, false),
+        (None, None) => {
+            return Err(Error::Placement(
+                "adaptive selection found no feasible placement".into(),
+            ))
+        }
+    };
+    Ok(AdaptiveChoice {
+        config: ErasureConfig::new(cand.n, cand.k),
+        containers: cand.containers,
+        loss_probability: cand.loss,
+        target_loss,
+        met_target,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::select_dynamic;
+    use crate::sim::Site;
+
+    fn info(id: u32, afr: f64) -> ContainerInfo {
+        ContainerInfo {
+            id,
+            name: format!("dc{id}"),
+            site: Site::ChameleonTacc,
+            alive: true,
+            mem_total: 1 << 30,
+            mem_avail: 1 << 29,
+            fs_total: 1 << 40,
+            fs_avail: 1 << 39,
+            annual_failure_rate: afr,
+        }
+    }
+
+    /// Sixteen heterogeneous containers, AFR 1%..25% evenly spread —
+    /// the paper's §VI-D scenario widened to a 16-slot fleet.
+    fn paper16() -> Vec<ContainerInfo> {
+        (0..16)
+            .map(|i| info(i, 0.01 + 0.24 * i as f64 / 15.0))
+            .collect()
+    }
+
+    #[test]
+    fn nines_conversion() {
+        assert!((nines_to_loss(3.0) - 1e-3).abs() < 1e-15);
+        assert!((nines_to_loss(0.0) - 1.0).abs() < 1e-15);
+        assert!(nines_to_loss(-1.0) <= 1.0);
+    }
+
+    #[test]
+    fn meets_target_on_paper_fleet_with_wide_stripe() {
+        // Model-verified: the cheapest (k, n) meeting 1e-3 over AFRs
+        // 1..25% is (k=5, n=8) — overhead 1.6, loss ≈ 8.3e-4.
+        let board = ScoreBoard::memory();
+        let c = select_adaptive(&paper16(), &board, 1 << 20, 1e-3).unwrap();
+        assert!(c.met_target);
+        assert!(c.loss_probability <= 1e-3, "loss {}", c.loss_probability);
+        assert_eq!(c.config, ErasureConfig::new(8, 5));
+        // Ids equal the reliability order in this fleet.
+        assert_eq!(c.containers, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn strictly_cheaper_than_fixed_k_static_at_same_target() {
+        // The deployed static family fixes k and grows parity
+        // (select_dynamic). With the paper's default k=7 the cheapest
+        // qualifying config on this fleet is (12,7) — stored ratio
+        // 12/7 ≈ 1.714. Adaptive finds 8/5 = 1.6: strictly lower
+        // total storage at the same durability target.
+        let fleet = paper16();
+        let board = ScoreBoard::memory();
+        let adaptive = select_adaptive(&fleet, &board, 1 << 20, 1e-3).unwrap();
+        let chunk = (1u64 << 20) / 7;
+        let dynamic = select_dynamic(&fleet, chunk, 7, 1e-3).unwrap();
+        assert!(dynamic.loss_probability <= 1e-3);
+        assert_eq!(dynamic.config, ErasureConfig::new(12, 7));
+        // Exact integer cross-compare of n/k ratios.
+        let a = adaptive.config;
+        let d = dynamic.config;
+        assert!(
+            a.n * d.k < d.n * a.k,
+            "adaptive {a} not cheaper than static {d}"
+        );
+    }
+
+    #[test]
+    fn wide_stripes_on_reliable_fleet() {
+        // Sixteen 1%-AFR containers: the solver stretches to the full
+        // stripe width with just two parity chunks — (16,14), stored
+        // ratio ≈ 1.14 (model-verified loss ≈ 5.1e-4).
+        let fleet: Vec<ContainerInfo> = (0..16).map(|i| info(i, 0.01)).collect();
+        let c = select_adaptive(&fleet, &ScoreBoard::memory(), 1 << 20, 1e-3).unwrap();
+        assert!(c.met_target);
+        assert_eq!(c.config, ErasureConfig::new(16, 14));
+    }
+
+    #[test]
+    fn extra_parity_on_flaky_fleet() {
+        // Ten 25%-AFR containers: seven parity chunks needed — (10,3),
+        // model-verified loss ≈ 4.2e-4.
+        let fleet: Vec<ContainerInfo> = (0..10).map(|i| info(i, 0.25)).collect();
+        let c = select_adaptive(&fleet, &ScoreBoard::memory(), 1 << 20, 1e-3).unwrap();
+        assert!(c.met_target);
+        assert_eq!(c.config, ErasureConfig::new(10, 3));
+        assert_eq!(c.config.failures_tolerated(), 7);
+    }
+
+    #[test]
+    fn best_effort_when_target_unreachable() {
+        let fleet = vec![info(0, 0.25), info(1, 0.25)];
+        let c = select_adaptive(&fleet, &ScoreBoard::memory(), 1024, 1e-9).unwrap();
+        assert!(!c.met_target);
+        assert_eq!(c.config, ErasureConfig::new(2, 1));
+        assert!(c.loss_probability > 1e-9);
+    }
+
+    #[test]
+    fn observed_failures_evict_catalog_favorite() {
+        // Container 0 has the best *catalog* AFR but fails every chunk
+        // op in practice; the scorecard prices it out of the stripe.
+        let fleet = paper16();
+        let board = ScoreBoard::memory();
+        for _ in 0..1000 {
+            board.observe_io(0, false, 0, 0.050);
+        }
+        let c = select_adaptive(&fleet, &board, 1 << 20, 1e-3).unwrap();
+        assert!(c.met_target);
+        assert!(!c.containers.contains(&0), "flaky container kept: {:?}", c.containers);
+    }
+
+    #[test]
+    fn capacity_infeasible_containers_skipped() {
+        // Model-verified: on the 8 remaining feasible containers the
+        // cheapest qualifying config is (5,4) — loss ≈ 9.8e-4.
+        let mut fleet: Vec<ContainerInfo> = (0..16).map(|i| info(i, 0.01)).collect();
+        for c in fleet.iter_mut().take(8) {
+            c.fs_avail = 1024; // too small for any chunk of a 1 MiB object
+        }
+        let c = select_adaptive(&fleet, &ScoreBoard::memory(), 1 << 20, 1e-3).unwrap();
+        assert!(c.met_target);
+        assert!(c.containers.iter().all(|id| *id >= 8), "{:?}", c.containers);
+        assert_eq!(c.config, ErasureConfig::new(5, 4));
+    }
+
+    #[test]
+    fn dead_fleet_is_an_error() {
+        let mut fleet = paper16();
+        for c in fleet.iter_mut() {
+            c.alive = false;
+        }
+        assert!(select_adaptive(&fleet, &ScoreBoard::memory(), 1024, 1e-3).is_err());
+    }
+}

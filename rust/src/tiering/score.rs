@@ -1,0 +1,508 @@
+//! Container scorecards (D-Rex direction, PAPERS.md arXiv:2506.02026):
+//! fold per-chunk I/O outcomes, liveness probes, and scrub events into
+//! per-container EWMA statistics — error rate, latency, bandwidth,
+//! observed availability — and blend them with the cataloged annual
+//! failure rate into an *effective* AFR the adaptive policy engine
+//! ([`crate::tiering::select_adaptive`]) solves against.
+//!
+//! The board is fed from the coordinator's single chunk-I/O choke point
+//! (`dispatch_chunk_io_deadline`), the two direct-I/O paths (Regular
+//! push, single-copy migration), repair probes, and the scrubber, so
+//! every byte the system moves leaves a trace here. Scores persist
+//! through the same keyed kv store the sharded metadata plane uses
+//! ([`crate::durability::KvStore`]) under `data_dir/tiering/`, one
+//! `score:<id>` key per container, flushed every
+//! [`PERSIST_EVERY_OBSERVATIONS`] observations and on demand.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use crate::container::ContainerId;
+use crate::durability::KvStore;
+use crate::json::{obj, Value};
+use crate::util::unix_secs;
+use crate::Result;
+
+/// EWMA smoothing factor: one observation moves the estimate 15% of the
+/// way to the sample, so ~15 observations dominate the history — quick
+/// enough to notice a container going bad mid-benchmark, smooth enough
+/// that one hedged timeout does not blacklist a healthy node.
+pub const EWMA_ALPHA: f64 = 0.15;
+
+/// Flush dirty scores to the kv store after this many observations.
+pub const PERSIST_EVERY_OBSERVATIONS: u64 = 256;
+
+/// Observed-history weight saturates as `ops / (ops + OPS_HALFWAY)`:
+/// after 64 chunk ops the observed error rate carries half the weight
+/// of the cataloged AFR, after ~600 it carries ~90%.
+pub const OPS_HALFWAY: f64 = 64.0;
+
+/// Effective AFR never drops below this fraction of the cataloged rate:
+/// a clean observation window is evidence, not proof, of reliability.
+pub const AFR_FLOOR_FRACTION: f64 = 0.25;
+
+/// Ceiling for any effective AFR (a container can always limp).
+pub const AFR_CEILING: f64 = 0.95;
+
+/// One container's rolling statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerScore {
+    /// Chunk operations observed (success or failure).
+    pub ops: u64,
+    /// Failed chunk operations.
+    pub errors: u64,
+    /// Payload bytes successfully moved to/from this container.
+    pub bytes_moved: u64,
+    /// EWMA of the per-op failure indicator (0 = healthy, 1 = failing).
+    pub err_ewma: f64,
+    /// EWMA of per-op wall latency, seconds.
+    pub lat_ewma_s: f64,
+    /// EWMA of observed bandwidth, bytes/second (successful ops only).
+    pub bw_ewma: f64,
+    /// EWMA of liveness-probe outcomes (1 = alive when probed).
+    pub avail_ewma: f64,
+    /// Liveness probes observed.
+    pub probes: u64,
+    /// Scrub verifications that found a corrupt or missing chunk here.
+    pub scrub_corrupt: u64,
+    /// Unix seconds of the last observation.
+    pub last_unix: u64,
+}
+
+impl ContainerScore {
+    fn new() -> ContainerScore {
+        ContainerScore {
+            ops: 0,
+            errors: 0,
+            bytes_moved: 0,
+            err_ewma: 0.0,
+            lat_ewma_s: 0.0,
+            bw_ewma: 0.0,
+            avail_ewma: 1.0,
+            probes: 0,
+            scrub_corrupt: 0,
+            last_unix: 0,
+        }
+    }
+
+    /// Observed per-op error rate over the whole window (not smoothed).
+    pub fn error_rate(&self) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            self.errors as f64 / self.ops as f64
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("ops", Value::Num(self.ops as f64)),
+            ("errors", Value::Num(self.errors as f64)),
+            ("bytes_moved", Value::Num(self.bytes_moved as f64)),
+            ("err_ewma", Value::Num(self.err_ewma)),
+            ("lat_ewma_s", Value::Num(self.lat_ewma_s)),
+            ("bw_ewma", Value::Num(self.bw_ewma)),
+            ("avail_ewma", Value::Num(self.avail_ewma)),
+            ("probes", Value::Num(self.probes as f64)),
+            ("scrub_corrupt", Value::Num(self.scrub_corrupt as f64)),
+            ("last_unix", Value::Num(self.last_unix as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> ContainerScore {
+        ContainerScore {
+            ops: v.opt_u64("ops", 0),
+            errors: v.opt_u64("errors", 0),
+            bytes_moved: v.opt_u64("bytes_moved", 0),
+            err_ewma: v.opt_f64("err_ewma", 0.0),
+            lat_ewma_s: v.opt_f64("lat_ewma_s", 0.0),
+            bw_ewma: v.opt_f64("bw_ewma", 0.0),
+            avail_ewma: v.opt_f64("avail_ewma", 1.0),
+            probes: v.opt_u64("probes", 0),
+            scrub_corrupt: v.opt_u64("scrub_corrupt", 0),
+            last_unix: v.opt_u64("last_unix", 0),
+        }
+    }
+}
+
+fn score_key(id: ContainerId) -> String {
+    format!("score:{id}")
+}
+
+/// The fleet-wide scorecard: one [`ContainerScore`] per container,
+/// optionally persisted through a keyed kv store. All methods take
+/// `&self`; the board is shared behind an `Arc` by the coordinator, the
+/// scrubber, and the gateway.
+pub struct ScoreBoard {
+    scores: RwLock<BTreeMap<ContainerId, ContainerScore>>,
+    /// Observations since the last flush.
+    dirty: AtomicU64,
+    /// Monotonic flush sequence (the kv segment watermark).
+    flush_seq: AtomicU64,
+    kv: Option<Mutex<KvStore>>,
+}
+
+impl ScoreBoard {
+    /// In-memory board (no `data_dir`): scores vanish on restart.
+    pub fn memory() -> ScoreBoard {
+        ScoreBoard {
+            scores: RwLock::new(BTreeMap::new()),
+            dirty: AtomicU64::new(0),
+            flush_seq: AtomicU64::new(0),
+            kv: None,
+        }
+    }
+
+    /// Durable board rooted at `dir` (conventionally
+    /// `data_dir/tiering/`): recovers any persisted scores, then
+    /// appends dirty-score delta segments as observations accumulate.
+    pub fn durable(dir: impl Into<PathBuf>) -> Result<ScoreBoard> {
+        let (kv, recovery) = KvStore::open(dir)?;
+        let mut scores = BTreeMap::new();
+        for (key, value) in &recovery.entries {
+            if let Some(id) = key.strip_prefix("score:") {
+                if let Ok(id) = id.parse::<ContainerId>() {
+                    scores.insert(id, ContainerScore::from_json(value));
+                }
+            }
+        }
+        Ok(ScoreBoard {
+            scores: RwLock::new(scores),
+            dirty: AtomicU64::new(0),
+            flush_seq: AtomicU64::new(recovery.watermark),
+            kv: Some(Mutex::new(kv)),
+        })
+    }
+
+    /// Record one chunk operation against `id`: outcome, payload bytes
+    /// moved, and wall seconds spent.
+    pub fn observe_io(&self, id: ContainerId, ok: bool, bytes: u64, wall_s: f64) {
+        {
+            let mut map = self.scores.write().unwrap();
+            let s = map.entry(id).or_insert_with(ContainerScore::new);
+            let sample = if ok { 0.0 } else { 1.0 };
+            s.err_ewma += EWMA_ALPHA * (sample - s.err_ewma);
+            if wall_s.is_finite() && wall_s >= 0.0 {
+                if s.ops == 0 {
+                    s.lat_ewma_s = wall_s;
+                } else {
+                    s.lat_ewma_s += EWMA_ALPHA * (wall_s - s.lat_ewma_s);
+                }
+                if ok && bytes > 0 && wall_s > 0.0 {
+                    let inst = bytes as f64 / wall_s;
+                    if s.bw_ewma == 0.0 {
+                        s.bw_ewma = inst;
+                    } else {
+                        s.bw_ewma += EWMA_ALPHA * (inst - s.bw_ewma);
+                    }
+                }
+            }
+            s.ops += 1;
+            if ok {
+                s.bytes_moved += bytes;
+            } else {
+                s.errors += 1;
+            }
+            s.last_unix = unix_secs();
+        }
+        self.bump_dirty();
+    }
+
+    /// Record a liveness-probe outcome for `id`.
+    pub fn observe_probe(&self, id: ContainerId, alive: bool) {
+        {
+            let mut map = self.scores.write().unwrap();
+            let s = map.entry(id).or_insert_with(ContainerScore::new);
+            let sample = if alive { 1.0 } else { 0.0 };
+            s.avail_ewma += EWMA_ALPHA * (sample - s.avail_ewma);
+            s.probes += 1;
+            s.last_unix = unix_secs();
+        }
+        self.bump_dirty();
+    }
+
+    /// Record a scrub verification of a chunk held by `id`.
+    pub fn observe_scrub(&self, id: ContainerId, healthy: bool) {
+        {
+            let mut map = self.scores.write().unwrap();
+            let s = map.entry(id).or_insert_with(ContainerScore::new);
+            // A scrub hit counts as an error observation too: silent
+            // corruption is a failure of the stored copy even though
+            // the transport op "succeeded".
+            let sample = if healthy { 0.0 } else { 1.0 };
+            s.err_ewma += EWMA_ALPHA * (sample - s.err_ewma);
+            if !healthy {
+                s.scrub_corrupt += 1;
+            }
+            s.last_unix = unix_secs();
+        }
+        self.bump_dirty();
+    }
+
+    /// Snapshot of one container's score.
+    pub fn get(&self, id: ContainerId) -> Option<ContainerScore> {
+        self.scores.read().unwrap().get(&id).cloned()
+    }
+
+    /// Snapshot of every score, id-sorted.
+    pub fn all(&self) -> Vec<(ContainerId, ContainerScore)> {
+        self.scores
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(id, s)| (*id, s.clone()))
+            .collect()
+    }
+
+    /// Number of containers with any recorded history.
+    pub fn len(&self) -> usize {
+        self.scores.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Effective annual failure rate for placement decisions: the
+    /// cataloged `declared` AFR blended with the observed error EWMA,
+    /// the observed side weighted by how much history we actually have
+    /// (`ops / (ops + OPS_HALFWAY)`). Unavailability seen by probes is
+    /// folded in as additional risk. Clamped to
+    /// `[declared * AFR_FLOOR_FRACTION, AFR_CEILING]` so a lucky quiet
+    /// window cannot claim a flaky container is perfect, and monotone
+    /// in the observed error rate.
+    pub fn effective_afr(&self, id: ContainerId, declared: f64) -> f64 {
+        let declared = declared.clamp(0.0, AFR_CEILING);
+        let map = self.scores.read().unwrap();
+        let s = match map.get(&id) {
+            Some(s) => s,
+            None => return declared,
+        };
+        let w = s.ops as f64 / (s.ops as f64 + OPS_HALFWAY);
+        let unavail = if s.probes > 0 { 1.0 - s.avail_ewma } else { 0.0 };
+        let observed = (s.err_ewma + unavail).clamp(0.0, 1.0);
+        let blended = declared * (1.0 - w) + observed * w;
+        blended.clamp(declared * AFR_FLOOR_FRACTION, AFR_CEILING)
+    }
+
+    /// Observations accumulated since the last flush.
+    pub fn dirty(&self) -> u64 {
+        self.dirty.load(Ordering::Relaxed)
+    }
+
+    /// Persist every score as one delta segment (no-op for in-memory
+    /// boards). Rotating/folding old segments happens on a background
+    /// thread inside the kv store.
+    pub fn flush(&self) -> Result<()> {
+        let kv = match &self.kv {
+            Some(kv) => kv,
+            None => {
+                self.dirty.store(0, Ordering::Relaxed);
+                return Ok(());
+            }
+        };
+        let delta: Vec<(String, Option<Value>)> = self
+            .all()
+            .into_iter()
+            .map(|(id, s)| (score_key(id), Some(s.to_json())))
+            .collect();
+        let seq = self.flush_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut kv = kv.lock().unwrap();
+        kv.append_delta(seq, &delta)?;
+        kv.maybe_compact()?;
+        self.dirty.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Block until any in-flight background compaction finishes.
+    pub fn sync(&self) {
+        if let Some(kv) = &self.kv {
+            kv.lock().unwrap().sync_compactor();
+        }
+    }
+
+    fn bump_dirty(&self) {
+        let n = self.dirty.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= PERSIST_EVERY_OBSERVATIONS && n % PERSIST_EVERY_OBSERVATIONS == 0 {
+            if let Err(e) = self.flush() {
+                crate::log_warn!("scorecard flush failed: {e}");
+            }
+        }
+    }
+
+    /// JSON rendering for `/health` and `/metrics`: one object per
+    /// container with the aggregated I/O statistics (satellite: the
+    /// only telemetry surface for per-chunk outcomes).
+    pub fn to_json(&self) -> Value {
+        let cards: Vec<Value> = self
+            .all()
+            .into_iter()
+            .map(|(id, s)| {
+                obj(vec![
+                    ("id", Value::Num(id as f64)),
+                    ("ops", Value::Num(s.ops as f64)),
+                    ("errors", Value::Num(s.errors as f64)),
+                    ("error_rate", Value::Num(s.error_rate())),
+                    ("err_ewma", Value::Num(s.err_ewma)),
+                    ("lat_ewma_ms", Value::Num(s.lat_ewma_s * 1e3)),
+                    ("bw_ewma_bps", Value::Num(s.bw_ewma)),
+                    ("avail_ewma", Value::Num(s.avail_ewma)),
+                    ("bytes_moved", Value::Num(s.bytes_moved as f64)),
+                    ("probes", Value::Num(s.probes as f64)),
+                    ("scrub_corrupt", Value::Num(s.scrub_corrupt as f64)),
+                    ("last_unix", Value::Num(s.last_unix as f64)),
+                ])
+            })
+            .collect();
+        Value::Arr(cards)
+    }
+}
+
+impl std::fmt::Debug for ScoreBoard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScoreBoard")
+            .field("containers", &self.len())
+            .field("dirty", &self.dirty())
+            .field("durable", &self.kv.is_some())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_toward_error_rate() {
+        let b = ScoreBoard::memory();
+        for _ in 0..200 {
+            b.observe_io(1, false, 0, 0.010);
+        }
+        let s = b.get(1).unwrap();
+        assert!(s.err_ewma > 0.99, "err_ewma {}", s.err_ewma);
+        assert_eq!(s.ops, 200);
+        assert_eq!(s.errors, 200);
+        for _ in 0..200 {
+            b.observe_io(1, true, 1024, 0.010);
+        }
+        let s = b.get(1).unwrap();
+        assert!(s.err_ewma < 0.01, "err_ewma {}", s.err_ewma);
+        assert_eq!(s.bytes_moved, 200 * 1024);
+    }
+
+    #[test]
+    fn bandwidth_and_latency_track_samples() {
+        let b = ScoreBoard::memory();
+        // 1 MiB in 10 ms = ~104.8 MB/s.
+        for _ in 0..50 {
+            b.observe_io(7, true, 1 << 20, 0.010);
+        }
+        let s = b.get(7).unwrap();
+        assert!((s.lat_ewma_s - 0.010).abs() < 1e-9, "lat {}", s.lat_ewma_s);
+        let expect = (1u64 << 20) as f64 / 0.010;
+        assert!((s.bw_ewma - expect).abs() / expect < 1e-9, "bw {}", s.bw_ewma);
+    }
+
+    #[test]
+    fn effective_afr_blends_with_history() {
+        let b = ScoreBoard::memory();
+        // No history: declared rate passes through.
+        assert_eq!(b.effective_afr(3, 0.10), 0.10);
+        // A long clean history pulls the estimate down, floored at a
+        // quarter of the declared rate.
+        for _ in 0..10_000 {
+            b.observe_io(3, true, 100, 0.001);
+        }
+        let eff = b.effective_afr(3, 0.10);
+        assert!(eff < 0.10 && eff >= 0.025, "eff {eff}");
+        // A failing container is pushed far above its catalog rate.
+        for _ in 0..10_000 {
+            b.observe_io(4, false, 100, 0.001);
+        }
+        let bad = b.effective_afr(4, 0.02);
+        assert!(bad > 0.9, "eff {bad}");
+    }
+
+    #[test]
+    fn effective_afr_monotone_in_observed_errors() {
+        let clean = ScoreBoard::memory();
+        let dirty = ScoreBoard::memory();
+        for i in 0..500 {
+            clean.observe_io(1, true, 10, 0.001);
+            dirty.observe_io(1, i % 4 != 0, 10, 0.001); // 25% failures
+        }
+        assert!(dirty.effective_afr(1, 0.05) > clean.effective_afr(1, 0.05));
+    }
+
+    #[test]
+    fn probes_fold_into_availability_and_afr() {
+        let b = ScoreBoard::memory();
+        for _ in 0..100 {
+            b.observe_probe(9, false);
+        }
+        let s = b.get(9).unwrap();
+        assert!(s.avail_ewma < 0.01, "avail {}", s.avail_ewma);
+        assert!(b.effective_afr(9, 0.01) > 0.3);
+    }
+
+    #[test]
+    fn scrub_corruption_counts_as_error_evidence() {
+        let b = ScoreBoard::memory();
+        for _ in 0..50 {
+            b.observe_scrub(2, false);
+        }
+        let s = b.get(2).unwrap();
+        assert_eq!(s.scrub_corrupt, 50);
+        assert!(s.err_ewma > 0.9);
+    }
+
+    #[test]
+    fn scores_round_trip_through_kv_store() {
+        let dir = std::env::temp_dir().join(format!("dyno-score-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let b = ScoreBoard::durable(&dir).unwrap();
+            for i in 0..10 {
+                b.observe_io(1, i % 3 != 0, 4096, 0.002);
+                b.observe_probe(2, true);
+            }
+            b.flush().unwrap();
+            b.sync();
+        }
+        let b2 = ScoreBoard::durable(&dir).unwrap();
+        let s = b2.get(1).unwrap();
+        assert_eq!(s.ops, 10);
+        assert_eq!(s.errors, 4);
+        assert!(s.bytes_moved > 0);
+        let p = b2.get(2).unwrap();
+        assert_eq!(p.probes, 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memory_board_flush_is_noop() {
+        let b = ScoreBoard::memory();
+        b.observe_io(1, true, 1, 0.001);
+        assert!(b.dirty() > 0);
+        b.flush().unwrap();
+        assert_eq!(b.dirty(), 0);
+    }
+
+    #[test]
+    fn json_surface_has_aggregated_fields() {
+        let b = ScoreBoard::memory();
+        b.observe_io(5, true, 2048, 0.004);
+        b.observe_io(5, false, 0, 0.050);
+        let v = b.to_json();
+        let cards = v.as_arr().unwrap();
+        assert_eq!(cards.len(), 1);
+        let c = &cards[0];
+        assert_eq!(c.req_u64("id").unwrap(), 5);
+        assert_eq!(c.req_u64("ops").unwrap(), 2);
+        assert_eq!(c.req_u64("errors").unwrap(), 1);
+        assert!(c.opt_f64("error_rate", 0.0) > 0.49);
+        assert!(c.opt_f64("lat_ewma_ms", 0.0) > 0.0);
+    }
+}

@@ -1,0 +1,303 @@
+//! Storage tiers: containers declare a tier (mem/ssd/fs/cold), pulls
+//! feed per-object access statistics, and [`DynoStore::tier_cycle`]
+//! promotes hot objects' chunks into cache-tier containers / demotes
+//! cold ones back out — executed through the PR 3 chunk-migration
+//! plane (`migrate_erasure_chunks`), so every cross-tier move keeps
+//! the read-during-migration and CAS-commit guarantees the rebalancer
+//! already has, and caps per-object moves at n − k per cycle (the
+//! stale-reader parity budget).
+
+use std::collections::HashSet;
+
+use crate::coordinator::DynoStore;
+use crate::coordinator::lifecycle::ChunkMove;
+use crate::metadata::ObjectPlacement;
+use crate::util::unix_secs;
+use crate::{Error, Result};
+
+/// A container's declared storage tier, hottest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StorageTier {
+    /// RAM-backed cache container.
+    Mem,
+    /// Fast local flash.
+    Ssd,
+    /// General filesystem capacity (the default for every container).
+    Fs,
+    /// Archival/cold capacity: demotion target, last resort otherwise.
+    Cold,
+}
+
+impl StorageTier {
+    pub fn parse(s: &str) -> Result<StorageTier> {
+        match s {
+            "mem" => Ok(StorageTier::Mem),
+            "ssd" => Ok(StorageTier::Ssd),
+            "fs" => Ok(StorageTier::Fs),
+            "cold" => Ok(StorageTier::Cold),
+            other => Err(Error::Config(format!(
+                "unknown tier '{other}' (expected mem|ssd|fs|cold)"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StorageTier::Mem => "mem",
+            StorageTier::Ssd => "ssd",
+            StorageTier::Fs => "fs",
+            StorageTier::Cold => "cold",
+        }
+    }
+
+    /// Cache tiers hold promoted hot objects.
+    pub fn is_cache(&self) -> bool {
+        matches!(self, StorageTier::Mem | StorageTier::Ssd)
+    }
+}
+
+impl Default for StorageTier {
+    fn default() -> Self {
+        StorageTier::Fs
+    }
+}
+
+impl std::fmt::Display for StorageTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-object access history: a time-decayed access rate plus the last
+/// touch, fed by `record_access` on every pull.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AccessStats {
+    /// Total accesses observed.
+    pub hits: u64,
+    /// Exponentially decayed access weight (τ = [`ACCESS_DECAY_TAU_S`]):
+    /// each access adds 1, prior weight decays with elapsed time.
+    pub rate: f64,
+    /// Unix seconds of the last access.
+    pub last_unix: u64,
+}
+
+/// Decay constant for the access-rate estimate: an object idle for ten
+/// minutes has lost ~63% of its accumulated heat.
+pub const ACCESS_DECAY_TAU_S: f64 = 600.0;
+
+impl AccessStats {
+    pub(crate) fn touch(&mut self, now: u64) {
+        let dt = now.saturating_sub(self.last_unix) as f64;
+        if self.last_unix > 0 {
+            self.rate *= (-dt / ACCESS_DECAY_TAU_S).exp();
+        }
+        self.rate += 1.0;
+        self.hits += 1;
+        self.last_unix = now;
+    }
+}
+
+/// Knobs for one promotion/demotion cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct TierCycleOpts {
+    /// Decayed access rate at or above which an object is hot.
+    pub hot_rate: f64,
+    /// Seconds without any access after which an object is cold.
+    pub cold_after_secs: u64,
+    /// Objects examined per cycle (catalog scans stay bounded).
+    pub max_objects: usize,
+    /// Chunk-move budget across the whole cycle.
+    pub max_moves: usize,
+}
+
+impl Default for TierCycleOpts {
+    fn default() -> Self {
+        TierCycleOpts {
+            hot_rate: 3.0,
+            cold_after_secs: 3600,
+            max_objects: 256,
+            max_moves: 64,
+        }
+    }
+}
+
+/// What one tier cycle achieved.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TieringReport {
+    /// Erasure objects examined.
+    pub examined: usize,
+    /// Objects that had at least one chunk promoted into a cache tier.
+    pub promoted: usize,
+    /// Objects that had at least one chunk demoted out of a cache tier.
+    pub demoted: usize,
+    /// Chunk moves committed.
+    pub chunks_moved: usize,
+    /// Moves that failed (left on their old tier; retried next cycle).
+    pub failed: usize,
+    /// Objects skipped: non-erasure placement, no feasible target, or
+    /// the move budget ran out.
+    pub skipped: usize,
+}
+
+impl DynoStore {
+    /// Declare `id`'s storage tier (config/CLI and tests).
+    pub fn set_container_tier(&self, id: u32, tier: StorageTier) -> Result<()> {
+        self.registry.get(id)?;
+        self.tiering.set_tier(id, tier);
+        Ok(())
+    }
+
+    /// The declared tier of `id` (default [`StorageTier::Fs`]).
+    pub fn container_tier(&self, id: u32) -> StorageTier {
+        self.tiering.tier_of(id)
+    }
+
+    /// One promotion/demotion pass over the catalog, driven by the
+    /// per-object access stats: hot erasure objects move chunks onto
+    /// cache-tier containers, cold ones move chunks off them. A no-op
+    /// (and cheap) when no container declares a cache tier — the
+    /// default fleet never migrates for temperature.
+    pub fn tier_cycle(&self, opts: TierCycleOpts) -> Result<TieringReport> {
+        let mut report = TieringReport::default();
+        let infos = self.registry.placement_infos();
+        let cache_ids: Vec<u32> = infos
+            .iter()
+            .filter(|c| self.tiering.tier_of(c.id).is_cache())
+            .map(|c| c.id)
+            .collect();
+        if cache_ids.is_empty() {
+            return Ok(report);
+        }
+        let now = unix_secs();
+        let mut moves_left = opts.max_moves;
+
+        for meta in self.meta.all_objects()? {
+            if report.examined >= opts.max_objects || moves_left == 0 {
+                break;
+            }
+            let (n, k, chunks) = match &meta.placement {
+                ObjectPlacement::Erasure { n, k, chunks } => (*n, *k, chunks.clone()),
+                _ => continue,
+            };
+            report.examined += 1;
+            let stats = self.tiering.access_stats(&meta.uuid);
+            let idle = now.saturating_sub(stats.last_unix);
+            let hot = stats.last_unix > 0
+                && stats.rate >= opts.hot_rate
+                && idle < opts.cold_after_secs;
+            let cold = stats.last_unix == 0 || idle >= opts.cold_after_secs;
+
+            // Which chunks sit on the wrong side of the cache boundary?
+            let misplaced: Vec<(u8, u32)> = chunks
+                .iter()
+                .filter(|(_, c)| {
+                    let cached = self.tiering.tier_of(*c).is_cache();
+                    (hot && !cached) || (cold && cached)
+                })
+                .cloned()
+                .collect();
+            if misplaced.is_empty() || (!hot && !cold) {
+                continue;
+            }
+
+            // Candidate targets on the desired side, most reliable
+            // first, excluding containers already holding a chunk of
+            // this object (placement distinctness).
+            let holders: HashSet<u32> = chunks.iter().map(|&(_, c)| c).collect();
+            let chunk_bytes = self.packed_chunk_len(n, k, meta.size)?;
+            let mut targets: Vec<&crate::container::ContainerInfo> = infos
+                .iter()
+                .filter(|c| {
+                    let tier = self.tiering.tier_of(c.id);
+                    let right_side = if hot { tier.is_cache() } else { !tier.is_cache() };
+                    right_side
+                        && !holders.contains(&c.id)
+                        && c.fs_avail.max(c.mem_avail) >= chunk_bytes
+                })
+                .collect();
+            targets.sort_by(|a, b| {
+                let (ta, tb) = (self.tiering.tier_of(a.id), self.tiering.tier_of(b.id));
+                // Promotions prefer the hottest tier, demotions the
+                // coldest; ties by effective AFR then id.
+                let rank = if hot { ta.cmp(&tb) } else { tb.cmp(&ta) };
+                rank.then(
+                    self.tiering
+                        .scores
+                        .effective_afr(a.id, a.annual_failure_rate)
+                        .partial_cmp(
+                            &self.tiering.scores.effective_afr(b.id, b.annual_failure_rate),
+                        )
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+                .then(a.id.cmp(&b.id))
+            });
+            if targets.is_empty() {
+                report.skipped += 1;
+                continue;
+            }
+
+            // Stale-reader parity budget: at most n − k moves per
+            // object per cycle, like the rebalancer's batches.
+            let budget = misplaced.len().min(n - k).min(moves_left);
+            let planned: Vec<ChunkMove> = misplaced
+                .iter()
+                .take(budget)
+                .zip(targets.iter())
+                .map(|(&(index, from), t)| ChunkMove { index, from, to: t.id })
+                .collect();
+            if planned.is_empty() {
+                report.skipped += 1;
+                continue;
+            }
+            let out = self.migrate_erasure_chunks(&meta, n, k, &chunks, &planned)?;
+            moves_left = moves_left.saturating_sub(planned.len());
+            report.chunks_moved += out.moved;
+            report.failed += out.failed;
+            if out.moved > 0 {
+                if hot {
+                    report.promoted += 1;
+                    self.metrics
+                        .tier_promotions
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                } else {
+                    report.demoted += 1;
+                    self.metrics
+                        .tier_demotions
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_parse_round_trip() {
+        for t in [StorageTier::Mem, StorageTier::Ssd, StorageTier::Fs, StorageTier::Cold] {
+            assert_eq!(StorageTier::parse(t.as_str()).unwrap(), t);
+        }
+        assert!(StorageTier::parse("tape").is_err());
+        assert_eq!(StorageTier::default(), StorageTier::Fs);
+        assert!(StorageTier::Mem.is_cache() && StorageTier::Ssd.is_cache());
+        assert!(!StorageTier::Fs.is_cache() && !StorageTier::Cold.is_cache());
+    }
+
+    #[test]
+    fn access_stats_accumulate_and_decay() {
+        let mut s = AccessStats::default();
+        let t0 = 1_000_000;
+        for _ in 0..5 {
+            s.touch(t0);
+        }
+        assert_eq!(s.hits, 5);
+        assert!((s.rate - 5.0).abs() < 1e-9);
+        // Ten minutes later most of the heat is gone.
+        s.touch(t0 + 600);
+        assert!(s.rate < 5.0 * 0.37 + 1.0 + 1e-9, "rate {}", s.rate);
+        assert_eq!(s.last_unix, t0 + 600);
+    }
+}
